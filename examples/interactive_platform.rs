@@ -1,0 +1,111 @@
+//! E3-flavoured scenario: a simulated work-week on the platform.
+//!
+//! Replays the diurnal trace (78 users / 20 projects, office-hours
+//! interactive sessions, round-the-clock batch) against the full
+//! coordinator and prints the behaviour §3 describes: batch soaking up
+//! off-peak capacity and being evicted when interactive users arrive.
+//!
+//! Run with: `cargo run --release --example interactive_platform`
+
+use aiinfn::hub::profiles::default_catalogue;
+use aiinfn::monitoring::dashboard;
+use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::sim::clock::hours;
+use aiinfn::sim::trace::{generate, ArrivalKind, GpuDemand, TraceConfig};
+use aiinfn::util::stats::exact_percentile;
+
+fn main() -> anyhow::Result<()> {
+    aiinfn::util::logging::init();
+    let cfg = PlatformConfig::load(&default_config_path())?;
+    let mut platform = Platform::bootstrap(cfg)?;
+
+    let horizon = hours(5.0 * 24.0); // Monday .. Friday
+    let trace = generate(&TraceConfig::default(), horizon);
+    println!(
+        "simulating a work-week: {} arrivals ({} interactive / {} batch)",
+        trace.len(),
+        trace.iter().filter(|a| a.kind == ArrivalKind::Interactive).count(),
+        trace.iter().filter(|a| a.kind == ArrivalKind::Batch).count(),
+    );
+
+    let catalogue = default_catalogue();
+    let mut ti = 0;
+    let mut util_by_hour: Vec<(f64, f64)> = Vec::new();
+    while platform.now() < horizon {
+        let until = (platform.now() + 300.0).min(horizon);
+        while ti < trace.len() && trace[ti].at <= until {
+            let a = &trace[ti];
+            ti += 1;
+            match a.kind {
+                ArrivalKind::Interactive => {
+                    let prof = match a.gpu {
+                        GpuDemand::None => &catalogue[0],
+                        GpuDemand::MigSlice(1) => &catalogue[1],
+                        GpuDemand::MigSlice(_) => &catalogue[2],
+                        GpuDemand::WholeGpu => &catalogue[4],
+                    };
+                    let _ = platform.spawn_session(&a.user, prof);
+                }
+                ArrivalKind::Batch => {
+                    let _ = platform.submit_ml_training(
+                        &a.user,
+                        &a.project,
+                        a.duration * 8e12,
+                        a.gpu,
+                        false,
+                    );
+                }
+            }
+        }
+        platform.run_for(until - platform.now(), 60.0);
+        if (platform.now() / 3600.0).fract() < 0.09 {
+            util_by_hour.push((platform.now() / 3600.0, platform.accelerator_utilization()));
+        }
+    }
+
+    println!("\n== work-week summary ==");
+    println!("pods: {:?}", platform.pod_phase_counts());
+    println!(
+        "sessions spawned: {}, batch evictions: {}",
+        platform.metrics.interactive_spawn_latencies.len(),
+        platform.metrics.evictions
+    );
+    let mut lat = platform.metrics.interactive_spawn_latencies.clone();
+    if !lat.is_empty() {
+        println!(
+            "interactive spawn latency: p50={:.1}s p95={:.1}s p99={:.1}s",
+            exact_percentile(&mut lat, 50.0),
+            exact_percentile(&mut lat, 95.0),
+            exact_percentile(&mut lat, 99.0),
+        );
+    }
+    let mut waits = platform.metrics.batch_wait_times.clone();
+    if !waits.is_empty() {
+        println!(
+            "batch queue wait: p50={:.0}s p95={:.0}s",
+            exact_percentile(&mut waits, 50.0),
+            exact_percentile(&mut waits, 95.0)
+        );
+    }
+    // day/night utilization pattern (the opportunistic-batch signature)
+    let office: Vec<f64> = util_by_hour
+        .iter()
+        .filter(|(h, _)| (9.0..18.0).contains(&(h % 24.0)))
+        .map(|(_, u)| *u)
+        .collect();
+    let night: Vec<f64> = util_by_hour
+        .iter()
+        .filter(|(h, _)| !(7.0..21.0).contains(&(h % 24.0)))
+        .map(|(_, u)| *u)
+        .collect();
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "accelerator utilization: office-hours {:.0}%, nights {:.0}% (batch keeps GPUs busy off-peak)",
+        avg(&office) * 100.0,
+        avg(&night) * 100.0
+    );
+    println!("\n{}", dashboard::overview(&platform.tsdb, platform.now(), hours(24.0)));
+    let report = aiinfn::monitoring::account(&platform.store.borrow(), platform.now());
+    print!("{}", report.render("top users by GPU-hours (work-week)"));
+    Ok(())
+}

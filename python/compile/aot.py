@@ -1,0 +1,194 @@
+"""AOT pipeline: lower the L2/L1 computations to HLO **text** artifacts.
+
+Python runs ONCE at build time (``make artifacts``); the Rust coordinator
+loads the artifacts via ``HloModuleProto::from_text_file`` and executes them
+through PJRT.  HLO *text* (never ``.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts written to ``artifacts/``:
+
+    train_step_<preset>.hlo.txt          fast pure-jnp path (default runtime)
+    train_step_<preset>_pallas.hlo.txt   L1 Pallas kernels in the fwd path
+    infer_step_<preset>.hlo.txt          last-position logits
+    gpu_burn_<n>x<iters>.hlo.txt         calibratable synthetic payload
+    theta0_<preset>.f32                  initial flat parameter vector (LE f32)
+    corpus.i32                           tokenised corpus (LE i32)
+    manifest.json                        arg shapes/dtypes + model metadata
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--presets tiny,small]
+                          [--census] [--skip-pallas]
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import pathlib
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the 0.5.1-safe bridge)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def hlo_census(text: str) -> dict[str, int]:
+    """Count HLO opcodes — the L2 §Perf structural check (no duplicate heavy ops)."""
+    ops: collections.Counter[str] = collections.Counter()
+    for line in text.splitlines():
+        m = re.search(r"=\s+\S+\s+([a-z][a-z0-9-]*)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return dict(ops)
+
+
+def _spec(arr_or_sds) -> dict:
+    return {"shape": list(arr_or_sds.shape), "dtype": str(arr_or_sds.dtype)}
+
+
+def export_preset(name: str, out: pathlib.Path, *, skip_pallas: bool, census: bool) -> dict:
+    cfg = M.PRESETS[name]
+    n_params = M.param_count(cfg)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    step_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    vec_spec = jax.ShapeDtypeStruct((n_params,), jnp.float32)
+    infer_tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+    entry: dict = {
+        "preset": name,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "d_ff": cfg.d_ff, "seq": cfg.seq,
+            "batch": cfg.batch, "lr": cfg.lr,
+        },
+        "param_count": n_params,
+        "flops_per_train_step": M.flops_per_train_step(cfg),
+        "artifacts": {},
+    }
+
+    t0 = time.time()
+    variants = [("", cfg)]
+    if not skip_pallas:
+        import dataclasses
+        variants.append(("_pallas", dataclasses.replace(cfg, use_pallas=True)))
+
+    for suffix, vcfg in variants:
+        ts = M.make_train_step(vcfg)
+        lowered = jax.jit(ts).lower(tok_spec, step_spec, vec_spec, vec_spec, vec_spec)
+        text = to_hlo_text(lowered)
+        fname = f"train_step_{name}{suffix}.hlo.txt"
+        (out / fname).write_text(text)
+        art = {
+            "file": fname,
+            "args": [
+                {"name": "tokens", **_spec(tok_spec)},
+                {"name": "step", **_spec(step_spec)},
+                {"name": "theta", **_spec(vec_spec)},
+                {"name": "m", **_spec(vec_spec)},
+                {"name": "v", **_spec(vec_spec)},
+            ],
+            "outputs": [
+                {"name": "loss", "shape": [], "dtype": "float32"},
+                {"name": "theta", **_spec(vec_spec)},
+                {"name": "m", **_spec(vec_spec)},
+                {"name": "v", **_spec(vec_spec)},
+            ],
+        }
+        if census:
+            art["hlo_census"] = hlo_census(text)
+        entry["artifacts"][f"train_step{suffix}"] = art
+        print(f"  [{name}] train_step{suffix}: {len(text)/1e6:.2f} MB HLO "
+              f"({time.time()-t0:.1f}s)", file=sys.stderr)
+
+    infer = M.make_infer_step(cfg)
+    lowered = jax.jit(infer).lower(infer_tok_spec, vec_spec)
+    text = to_hlo_text(lowered)
+    fname = f"infer_step_{name}.hlo.txt"
+    (out / fname).write_text(text)
+    entry["artifacts"]["infer_step"] = {
+        "file": fname,
+        "args": [
+            {"name": "tokens", **_spec(infer_tok_spec)},
+            {"name": "theta", **_spec(vec_spec)},
+        ],
+        "outputs": [{"name": "logits", "shape": [cfg.batch, cfg.vocab], "dtype": "float32"}],
+    }
+    if census:
+        entry["artifacts"]["infer_step"]["hlo_census"] = hlo_census(text)
+
+    # Initial parameters + corpus so the Rust side needs no Python at runtime.
+    theta0 = np.asarray(M.init_theta(cfg, 0), dtype=np.float32)
+    theta0.tofile(out / f"theta0_{name}.f32")
+    entry["theta0"] = f"theta0_{name}.f32"
+    return entry
+
+
+def export_gpu_burn(out: pathlib.Path, n: int, iters: int) -> dict:
+    fn = M.make_gpu_burn(n, iters)
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec))
+    fname = f"gpu_burn_{n}x{iters}.hlo.txt"
+    (out / fname).write_text(text)
+    return {
+        "file": fname,
+        "n": n,
+        "iters": iters,
+        "flops": float(iters) * 2.0 * n ** 3,
+        "args": [{"name": "x", "shape": [n, n], "dtype": "float32"}],
+        "outputs": [{"name": "y", "shape": [n, n], "dtype": "float32"}],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small",
+                    help="comma list from: " + ",".join(M.PRESETS))
+    ap.add_argument("--burn", default="128x8,256x8",
+                    help="comma list of NxITERS gpu_burn payloads")
+    ap.add_argument("--census", action="store_true", help="record HLO op census")
+    ap.add_argument("--skip-pallas", action="store_true")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {"format": "hlo-text-v1", "models": {}, "gpu_burn": {}}
+    for preset in [p for p in args.presets.split(",") if p]:
+        print(f"exporting preset {preset} ...", file=sys.stderr)
+        manifest["models"][preset] = export_preset(
+            preset, out, skip_pallas=args.skip_pallas, census=args.census
+        )
+
+    for spec in [s for s in args.burn.split(",") if s]:
+        n, iters = (int(x) for x in spec.split("x"))
+        manifest["gpu_burn"][spec] = export_gpu_burn(out, n, iters)
+
+    # Shared corpus tokens (vocab-independent: raw bytes clipped by loader).
+    corpus = np.asarray(M.corpus_tokens(M.PRESETS["small"]), dtype=np.int32)
+    corpus.tofile(out / "corpus.i32")
+    manifest["corpus"] = {"file": "corpus.i32", "tokens": int(corpus.size)}
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"manifest: {out / 'manifest.json'}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

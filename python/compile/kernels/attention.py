@@ -1,0 +1,194 @@
+"""L1 Pallas kernel: blocked flash attention with online softmax.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the original
+flash-attention formulation targets CUDA threadblocks staging tiles in shared
+memory.  Here the insight — never materialise the [T, T] score matrix, stream
+K/V blocks through fast memory while keeping a running (max, sum, acc) — is
+re-expressed for a TPU-shaped machine:
+
+* ``BlockSpec`` carries one (batch·head, q-block) tile of Q into VMEM per
+  program instance; K and V are presented as whole-sequence VMEM refs and the
+  kernel walks them in ``block_k`` strides with ``fori_loop`` — the VMEM
+  residency schedule that a TPU Mosaic build would double-buffer.
+* The inner contraction uses MXU-friendly [block_q, d] × [d, block_k] matmuls
+  with ``preferred_element_type=float32`` accumulate.
+
+``interpret=True`` is mandatory on this testbed (CPU PJRT cannot execute
+Mosaic custom-calls); numerics are validated against ``ref.attention_ref``.
+
+VMEM footprint per program (f32, defaults block_q=64, block_k=64, d<=128,
+T<=1024): Q tile 64·d·4 ≤ 32 KiB, K/V refs 2·T·d·4 ≤ 1 MiB, accumulators
+64·d·4 + 2·64·4 ≤ 33 KiB — comfortably under the 16 MiB VMEM budget with
+double buffering (§Perf records the exact numbers per exported shape).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["flash_attention", "flash_attention_fwd_only"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sm_scale: float, causal: bool, q_offset_blocks: int):
+    """One program instance: one q-block against all k-blocks (online softmax).
+
+    Ref shapes (leading singleton is the batch·head grid axis mapped by
+    BlockSpec):
+        q_ref: [1, block_q, d]    — this program's Q tile
+        k_ref: [1, t, d]          — whole-sequence K for this batch·head
+        v_ref: [1, t, d]          — whole-sequence V
+        o_ref: [1, block_q, d]    — output tile
+    """
+    block_q = q_ref.shape[1]
+    t = k_ref.shape[1]
+    d = q_ref.shape[2]
+    n_kblocks = t // block_k
+
+    q = q_ref[0].astype(jnp.float32) * jnp.float32(sm_scale)  # [bq, d]
+
+    # q-block index within the sequence: recovered from the grid so the causal
+    # mask knows absolute positions.
+    qi = pl.program_id(1) + q_offset_blocks
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # [bq]
+
+    def body(ki, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[0], ki * block_k, block_k, axis=0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[0], ki * block_k, block_k, axis=0)
+        s = jax.lax.dot_general(
+            q,
+            k_blk.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [bq, bk]
+        if causal:
+            k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)  # [bk]
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, jnp.float32(_NEG_INF))
+        m_cur = jnp.max(s, axis=1)  # [bq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard fully-masked rows: exp(-inf - -inf) would be NaN.
+        m_safe = jnp.where(m_new <= jnp.float32(_NEG_INF), 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])  # [bq, bk]
+        p = jnp.where(s <= jnp.float32(_NEG_INF), 0.0, p)
+        alpha = jnp.exp(jnp.where(m_prev <= jnp.float32(_NEG_INF), _NEG_INF, m_prev - m_safe))
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+            p,
+            v_blk.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), jnp.float32(_NEG_INF))
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    if causal:
+        # Blocks strictly above the causal diagonal contribute nothing; skip
+        # them.  With block_q == block_k (enforced by the wrapper) the causal
+        # frontier for q-block `qi` is exactly qi+1 k-blocks.
+        n_iter = jnp.minimum(qi + 1, n_kblocks) if block_q == block_k else n_kblocks
+        m, l, acc = jax.lax.fori_loop(0, n_iter, body, (m0, l0, acc0))
+    else:
+        m, l, acc = jax.lax.fori_loop(0, n_kblocks, body, (m0, l0, acc0))
+
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def _choose_block(t: int, requested: int) -> int:
+    """Largest divisor of ``t`` that is <= requested (kernel requires t % block == 0)."""
+    b = min(requested, t)
+    while t % b != 0:
+        b -= 1
+    return b
+
+
+def flash_attention_fwd_only(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 64,
+    block_k: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas flash-attention forward pass (no VJP registered).
+
+    Shapes: q, k, v are ``[batch, heads, seq, head_dim]``.
+    """
+    b, h, t, d = q.shape
+    if k.shape != (b, h, t, d) or v.shape != (b, h, t, d):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    block_q = _choose_block(t, block_q)
+    block_k = _choose_block(t, block_k)
+    # Keep the causal fast-path exact: equal blocks unless shapes forbid it.
+    blk = min(block_q, block_k)
+    block_q = block_k = blk
+
+    bh = b * h
+    qr = q.reshape(bh, t, d)
+    kr = k.reshape(bh, t, d)
+    vr = v.reshape(bh, t, d)
+
+    grid = (bh, t // block_q)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_k=block_k,
+        sm_scale=sm_scale,
+        causal=causal,
+        q_offset_blocks=0,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, t, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal=True, sm_scale=None):
+    """Flash attention with a reference-derived backward pass.
+
+    Forward runs the Pallas kernel; backward differentiates the pure-jnp
+    oracle (recomputing probabilities — the standard flash-attention bwd
+    strategy of trading memory for recompute).
+    """
+    return flash_attention_fwd_only(q, k, v, causal=causal, sm_scale=sm_scale)
+
+
+def _fa_fwd(q, k, v, causal, sm_scale):
+    out = flash_attention_fwd_only(q, k, v, causal=causal, sm_scale=sm_scale)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, sm_scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal, sm_scale=sm_scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: tiled fused transformer MLP — ``gelu(x@w1+b1)@w2+b2``.
+
+The kernel tiles the token axis with ``BlockSpec`` so each program instance
+computes a [block_m, d_model] output tile while streaming the full weight
+panels through VMEM.  On a real TPU the two matmuls hit the MXU back-to-back
+with the GELU fused in the VPU between them — the whole point of fusing is
+that the [block_m, d_ff] intermediate never round-trips to HBM.
+
+VMEM per program (f32): x tile block_m·d·4, W1 d·ff·4, W2 ff·d·4, intermediate
+block_m·ff·4.  For the exported model shapes (d=256, ff=1024, block_m=128)
+that is 128 KiB + 1 MiB + 1 MiB + 512 KiB ≈ 2.6 MiB — within the 4 MiB/block
+target in DESIGN.md §Perf.  ``interpret=True`` on this CPU testbed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["fused_mlp", "fused_mlp_fwd_only"]
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One program: one [block_m, d] tile through the full MLP."""
+    x = x_ref[...].astype(jnp.float32)  # [bm, d]
+    h = jax.lax.dot_general(
+        x, w1_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + b1_ref[...].astype(jnp.float32)[None, :]
+    h = ref.gelu(h)
+    y = jax.lax.dot_general(
+        h, w2_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + b2_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _choose_block(m: int, requested: int) -> int:
+    b = min(requested, m)
+    while m % b != 0:
+        b -= 1
+    return b
+
+
+def fused_mlp_fwd_only(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    block_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas fused MLP forward. ``x``: [tokens, d_model]."""
+    m, d = x.shape
+    ff = w1.shape[1]
+    if w1.shape != (d, ff) or w2.shape != (ff, d) or b1.shape != (ff,) or b2.shape != (d,):
+        raise ValueError(f"mlp weight shapes inconsistent: {w1.shape} {b1.shape} {w2.shape} {b2.shape}")
+    block_m = _choose_block(m, block_m)
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, ff), lambda i: (0, 0)),
+            pl.BlockSpec((ff,), lambda i: (0,)),
+            pl.BlockSpec((ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+@jax.custom_vjp
+def fused_mlp(x, w1, b1, w2, b2):
+    """Fused MLP with reference-derived backward (recompute strategy)."""
+    return fused_mlp_fwd_only(x, w1, b1, w2, b2)
+
+
+def _mlp_fwd(x, w1, b1, w2, b2):
+    return fused_mlp_fwd_only(x, w1, b1, w2, b2), (x, w1, b1, w2, b2)
+
+
+def _mlp_bwd(res, g):
+    x, w1, b1, w2, b2 = res
+    _, vjp = jax.vjp(ref.mlp_ref, x, w1, b1, w2, b2)
+    return vjp(g)
+
+
+fused_mlp.defvjp(_mlp_fwd, _mlp_bwd)

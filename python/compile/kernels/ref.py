@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only.  The pytest suite sweeps shapes and
+dtypes (via hypothesis) and asserts ``assert_allclose`` between kernel and
+oracle; the AOT pipeline also uses these oracles as the *fast CPU path* for
+the default training artifact (the Pallas interpret path is exported as a
+separate artifact and cross-checked numerically).
+
+The oracles are also the source of truth for the backward passes: the Pallas
+kernels are wrapped in ``jax.custom_vjp`` whose backward rules are derived by
+differentiating these functions (see attention.py / mlp.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref",
+    "mlp_ref",
+    "layernorm_ref",
+    "gelu",
+    "softmax_stable",
+]
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (matches the Pallas kernel exactly)."""
+    c = jnp.asarray(0.7978845608028654, dtype=x.dtype)  # sqrt(2/pi)
+    k = jnp.asarray(0.044715, dtype=x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + k * x * x * x)))
+
+
+def softmax_stable(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-stable softmax, the same algebra the online kernel uses."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Multi-head scaled-dot-product attention oracle.
+
+    Args:
+        q, k, v: ``[batch, heads, seq, head_dim]``.
+        causal: apply a lower-triangular mask.
+        sm_scale: softmax scale; defaults to ``1/sqrt(head_dim)``.
+
+    Returns:
+        ``[batch, heads, seq, head_dim]`` attention output, same dtype as q.
+    """
+    *_, t, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * jnp.float32(sm_scale)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, jnp.float32(-1e30))
+    probs = softmax_stable(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mlp_ref(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Fused transformer MLP oracle: ``gelu(x @ w1 + b1) @ w2 + b2``.
+
+    Args:
+        x: ``[tokens, d_model]`` (callers flatten batch×seq first).
+        w1: ``[d_model, d_ff]``; b1: ``[d_ff]``.
+        w2: ``[d_ff, d_model]``; b2: ``[d_model]``.
+    """
+    h = gelu(jnp.dot(x.astype(jnp.float32), w1.astype(jnp.float32)) + b1.astype(jnp.float32))
+    y = jnp.dot(h, w2.astype(jnp.float32)) + b2.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_ref(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm oracle over the last axis."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,300 @@
+"""L2: decoder-only transformer LM — the representative AI_INFN user workload.
+
+The AI_INFN platform exists to run users' ML training/inference jobs on shared
+accelerators.  This module defines that workload as a pure-functional JAX
+model: a GPT-style causal LM with full forward/backward and a fused AdamW
+update, exposed as three jittable entry points that ``aot.py`` lowers to HLO
+text for the Rust PJRT runtime:
+
+* ``train_step(tokens, step, theta, m, v) -> (loss, theta', m', v')``
+* ``infer_step(tokens, theta) -> logits``          (last-position logits)
+* ``gpu_burn(x) -> x'``                            (tunable synthetic payload)
+
+All parameters travel as ONE flat f32 vector (``theta``) so the Rust side
+handles exactly four device buffers per step instead of ~50 literals; the
+(de)flattening is free at trace time (static slices fuse into the HLO).
+
+The attention / MLP inner loops call the L1 Pallas kernels when
+``use_pallas=True`` (exported as the ``*_pallas`` artifact variants) and the
+pure-jnp oracles otherwise (the fast CPU path).  Both lower into the same HLO
+interchange format and are cross-checked numerically in pytest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import flash_attention
+from .kernels.mlp import fused_mlp
+
+__all__ = [
+    "ModelConfig",
+    "PRESETS",
+    "param_specs",
+    "param_count",
+    "init_theta",
+    "unpack",
+    "forward",
+    "loss_fn",
+    "make_train_step",
+    "make_infer_step",
+    "make_gpu_burn",
+    "flops_per_train_step",
+    "corpus_tokens",
+    "CORPUS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyper-parameters (baked into the HLO artifact)."""
+
+    vocab: int = 128          # char-level
+    d_model: int = 256
+    n_heads: int = 8
+    n_layers: int = 4
+    d_ff: int = 1024
+    seq: int = 128            # training context length
+    batch: int = 8
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    use_pallas: bool = False  # attention/MLP via L1 Pallas kernels
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: Named presets used by aot.py / the Makefile.  "small" is the default e2e
+#: training target on this 1-core CPU testbed; "large" (~110 M params) is the
+#: paper-scale model, exported for compile/validation but too slow to train
+#: for hundreds of steps on one core (documented in EXPERIMENTS.md E8).
+PRESETS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig(d_model=64, n_heads=4, n_layers=2, d_ff=256, seq=32, batch=4),
+    "small": ModelConfig(),
+    "medium": ModelConfig(d_model=512, n_heads=8, n_layers=8, d_ff=2048, seq=256, batch=8),
+    "large": ModelConfig(vocab=8192, d_model=768, n_heads=12, n_layers=12, d_ff=3072, seq=512, batch=8),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter flattening
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the layout of the flat theta vector."""
+    d, ff, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (v, d)),
+        ("pos", (t, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_w", (d,)), (p + "ln1_b", (d,)),
+            (p + "wq", (d, d)), (p + "wk", (d, d)), (p + "wv", (d, d)), (p + "wo", (d, d)),
+            (p + "ln2_w", (d,)), (p + "ln2_b", (d,)),
+            (p + "w1", (d, ff)), (p + "b1", (ff,)),
+            (p + "w2", (ff, d)), (p + "b2", (d,)),
+        ]
+    specs += [("lnf_w", (d,)), ("lnf_b", (d,)), ("head", (d, v))]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+def _spec_offsets(cfg: ModelConfig) -> Iterator[tuple[str, tuple[int, ...], int, int]]:
+    off = 0
+    for name, shape in param_specs(cfg):
+        n = math.prod(shape)
+        yield name, shape, off, n
+        off += n
+
+
+def unpack(cfg: ModelConfig, theta: jax.Array) -> dict[str, jax.Array]:
+    """Slice the flat vector back into named arrays (static; fuses into HLO)."""
+    out: dict[str, jax.Array] = {}
+    for name, shape, off, n in _spec_offsets(cfg):
+        out[name] = jax.lax.dynamic_slice_in_dim(theta, off, n).reshape(shape)
+    return out
+
+
+def init_theta(cfg: ModelConfig, key: jax.Array | int = 0) -> jax.Array:
+    """GPT-2-style init, returned as the flat f32 parameter vector."""
+    if isinstance(key, int):
+        key = jax.random.PRNGKey(key)
+    chunks = []
+    scale_proj = 0.02 / math.sqrt(2 * cfg.n_layers)
+    for name, shape, _, n in _spec_offsets(cfg):
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base.endswith("_b") or base.startswith("b"):
+            arr = jnp.zeros(shape, jnp.float32)
+        elif base.endswith("_w"):  # layernorm gains
+            arr = jnp.ones(shape, jnp.float32)
+        elif base in ("wo", "w2"):  # residual-path projections get depth scaling
+            arr = jax.random.normal(sub, shape, jnp.float32) * scale_proj
+        else:
+            arr = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        chunks.append(arr.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _attention(cfg: ModelConfig, x: jax.Array, p: dict[str, jax.Array], prefix: str) -> jax.Array:
+    """Multi-head causal self-attention block body. x: [B, T, D]."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ p[prefix + "wq"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ p[prefix + "wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = (x @ p[prefix + "wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    if cfg.use_pallas:
+        o = flash_attention(q, k, v, True, None)
+    else:
+        o = ref.attention_ref(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return o @ p[prefix + "wo"]
+
+
+def _mlp(cfg: ModelConfig, x: jax.Array, p: dict[str, jax.Array], prefix: str) -> jax.Array:
+    b, t, d = x.shape
+    flat = x.reshape(b * t, d)
+    if cfg.use_pallas:
+        y = fused_mlp(flat, p[prefix + "w1"], p[prefix + "b1"], p[prefix + "w2"], p[prefix + "b2"])
+    else:
+        y = ref.mlp_ref(flat, p[prefix + "w1"], p[prefix + "b1"], p[prefix + "w2"], p[prefix + "b2"])
+    return y.reshape(b, t, d)
+
+
+def forward(cfg: ModelConfig, theta: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Logits for each position. tokens: int32 [B, T] -> [B, T, vocab]."""
+    p = unpack(cfg, theta)
+    b, t = tokens.shape
+    x = p["embed"][tokens] + p["pos"][None, :t, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        x = x + _attention(cfg, ref.layernorm_ref(x, p[pre + "ln1_w"], p[pre + "ln1_b"]), p, pre)
+        x = x + _mlp(cfg, ref.layernorm_ref(x, p[pre + "ln2_w"], p[pre + "ln2_b"]), p, pre)
+    x = ref.layernorm_ref(x, p["lnf_w"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def loss_fn(cfg: ModelConfig, theta: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Next-token cross-entropy.  tokens: int32 [B, T+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, theta, inp).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------
+# Train / infer / burn entry points (what aot.py lowers)
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig):
+    """Returns train_step(tokens, step, theta, m, v) -> (loss, theta', m', v').
+
+    AdamW with bias correction, decoupled weight decay, constant lr.
+    ``step`` is the 1-based step counter as f32 scalar.
+    """
+
+    def train_step(tokens, step, theta, m, v):
+        loss, grad = jax.value_and_grad(lambda th: loss_fn(cfg, th, tokens))(theta)
+        m2 = cfg.beta1 * m + (1.0 - cfg.beta1) * grad
+        v2 = cfg.beta2 * v + (1.0 - cfg.beta2) * jnp.square(grad)
+        mhat = m2 / (1.0 - jnp.power(cfg.beta1, step))
+        vhat = v2 / (1.0 - jnp.power(cfg.beta2, step))
+        update = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * theta
+        theta2 = theta - cfg.lr * update
+        return loss, theta2, m2, v2
+
+    return train_step
+
+
+def make_infer_step(cfg: ModelConfig):
+    """Returns infer_step(tokens, theta) -> last-position logits [B, vocab]."""
+
+    def infer_step(tokens, theta):
+        logits = forward(cfg, theta, tokens)
+        return logits[:, -1, :]
+
+    return infer_step
+
+
+def make_gpu_burn(n: int, iters: int):
+    """Synthetic compute payload: ``iters`` chained [n,n] matmuls.
+
+    Used by the platform as a *calibratable* job body — FLOPs are exactly
+    ``iters * 2 n^3``, letting the Rust cost model translate simulated GPU
+    seconds into real CPU work when running in hardware-in-the-loop mode.
+    """
+
+    def gpu_burn(x):
+        def body(y, _):
+            y = jnp.tanh(y @ x) * 0.5 + y * 0.5
+            return y, ()
+
+        y, _ = jax.lax.scan(body, x, (), length=iters)
+        return y
+
+    return gpu_burn
+
+
+def flops_per_train_step(cfg: ModelConfig) -> float:
+    """Analytic FLOPs estimate (fwd+bwd ≈ 3× fwd matmul FLOPs)."""
+    t, d, ff, v, b = cfg.seq, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.batch
+    per_tok_matmul = 4 * d * d + 2 * d * ff  # qkvo + mlp, MACs
+    attn = 2 * t * d  # qk^T + pv per token, MACs
+    head = d * v
+    fwd_macs = b * t * (per_tok_matmul + attn + head)
+    return 3.0 * 2.0 * fwd_macs  # bwd ≈ 2× fwd, MAC = 2 flops
+
+
+# --------------------------------------------------------------------------
+# Tiny built-in corpus (char-level) for the e2e training example
+# --------------------------------------------------------------------------
+
+CORPUS = (
+    "Machine learning is driving a revolution in the way scientists design, "
+    "develop, and deploy data-intensive software. The INFN-funded project "
+    "AI_INFN aims at fostering the adoption of machine learning techniques "
+    "within INFN use cases by providing support on multiple aspects, "
+    "including the provisioning of AI-tailored computing resources. "
+    "It leverages cloud-native solutions in the context of INFN Cloud, to "
+    "share hardware accelerators as effectively as possible, ensuring the "
+    "diversity of the institute's research activities is not compromised. "
+    "The platform is a managed kubernetes cluster that abstracts the "
+    "complexity of its underlying high-performance hardware. Efficient GPU "
+    "management is achieved through multi-instance GPU partitioning, which "
+    "enables a single physical GPU to serve up to seven users simultaneously. "
+    "The local batch system is managed by a kubernetes-native job queue "
+    "controller designed to opportunistically run non-interactive workloads "
+    "during off-peak hours such as nights and weekends. For workloads that "
+    "exceed the local cluster capacity, the platform features an offloading "
+    "architecture that transparently executes jobs on external computing "
+    "resources including the worldwide LHC computing grid and supercomputers. "
+) * 4
+
+
+def corpus_tokens(cfg: ModelConfig) -> "jnp.ndarray":
+    """Char-level tokenisation of the built-in corpus, clipped to vocab."""
+    import numpy as np
+
+    raw = np.frombuffer(CORPUS.encode("ascii", "replace"), dtype=np.uint8)
+    return jnp.asarray(np.minimum(raw, cfg.vocab - 1), dtype=jnp.int32)

@@ -1,0 +1,200 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes (per the repro contract); every property
+asserts allclose between the kernel and ``ref.py``.  Deadlines are disabled —
+interpret-mode Pallas pays a trace+compile cost per fresh shape.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention, flash_attention_fwd_only
+from compile.kernels.mlp import fused_mlp, fused_mlp_fwd_only
+
+SETTINGS = dict(
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+def assert_close(a, b, dtype):
+    np.testing.assert_allclose(
+        np.asarray(a, dtype=np.float32), np.asarray(b, dtype=np.float32), **tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t=st.sampled_from([16, 32, 64, 128, 192]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_attention_matches_ref(b, h, t, d, causal, dtype):
+    q = rand(1, (b, h, t, d), dtype)
+    k = rand(2, (b, h, t, d), dtype)
+    v = rand(3, (b, h, t, d), dtype)
+    out = flash_attention_fwd_only(q, k, v, causal=causal)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    assert out.dtype == q.dtype
+    assert_close(out, want, dtype)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.sampled_from([32, 64, 128]),
+    blk=st.sampled_from([8, 16, 32, 64, 128]),
+)
+def test_attention_block_size_invariance(t, blk):
+    """Property: the online-softmax result must not depend on the tiling."""
+    q = rand(1, (1, 2, t, 16))
+    k = rand(2, (1, 2, t, 16))
+    v = rand(3, (1, 2, t, 16))
+    base = flash_attention_fwd_only(q, k, v, causal=True, block_q=t, block_k=t)
+    tiled = flash_attention_fwd_only(q, k, v, causal=True, block_q=blk, block_k=blk)
+    assert_close(tiled, base, jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(scale=st.floats(0.05, 4.0))
+def test_attention_custom_scale(scale):
+    q, k, v = (rand(i, (1, 1, 64, 16)) for i in (1, 2, 3))
+    out = flash_attention_fwd_only(q, k, v, causal=False, sm_scale=scale)
+    want = ref.attention_ref(q, k, v, causal=False, sm_scale=scale)
+    assert_close(out, want, jnp.float32)
+
+
+def test_attention_gradients_match_ref():
+    q, k, v = (rand(i, (2, 2, 64, 16)) for i in (1, 2, 3))
+
+    def f_kernel(q, k, v):
+        return (flash_attention(q, k, v, True, None) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        assert_close(a, b, jnp.float32)
+
+
+def test_attention_causality_property():
+    """Future-token perturbations must not affect past outputs (causal mask)."""
+    q, k, v = (rand(i, (1, 1, 64, 16)) for i in (1, 2, 3))
+    out = flash_attention_fwd_only(q, k, v, causal=True)
+    k2 = k.at[:, :, 48:, :].set(99.0)
+    v2 = v.at[:, :, 48:, :].set(-99.0)
+    out2 = flash_attention_fwd_only(q, k2, v2, causal=True)
+    assert_close(out[:, :, :48], out2[:, :, :48], jnp.float32)
+    assert not np.allclose(np.asarray(out[:, :, 48:]), np.asarray(out2[:, :, 48:]))
+
+
+def test_attention_softmax_rows_bounded():
+    """Output of attention is a convex combination of V rows (within fp error)."""
+    q, k = rand(1, (1, 1, 32, 8)), rand(2, (1, 1, 32, 8))
+    v = jnp.ones((1, 1, 32, 8), jnp.float32)
+    out = flash_attention_fwd_only(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_rejects_bad_shapes():
+    q = rand(1, (1, 1, 32, 8))
+    k = rand(2, (1, 1, 16, 8))
+    with pytest.raises(ValueError):
+        flash_attention_fwd_only(q, k, k)
+
+
+# ---------------------------------------------------------------------------
+# Fused MLP
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([8, 32, 96, 128, 256]),
+    d=st.sampled_from([16, 32, 64]),
+    ff=st.sampled_from([32, 64, 128, 256]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_mlp_matches_ref(m, d, ff, dtype):
+    x = rand(1, (m, d), dtype)
+    w1 = rand(2, (d, ff), dtype, 0.3)
+    b1 = rand(3, (ff,), dtype, 0.1)
+    w2 = rand(4, (ff, d), dtype, 0.3)
+    b2 = rand(5, (d,), dtype, 0.1)
+    out = fused_mlp_fwd_only(x, w1, b1, w2, b2)
+    want = ref.mlp_ref(x, w1, b1, w2, b2)
+    assert out.dtype == x.dtype
+    assert_close(out, want, dtype)
+
+
+@settings(**SETTINGS)
+@given(block_m=st.sampled_from([8, 16, 64, 128, 256]))
+def test_mlp_block_size_invariance(block_m):
+    x = rand(1, (128, 32))
+    w1, b1, w2, b2 = rand(2, (32, 64), scale=0.3), rand(3, (64,), scale=0.1), rand(4, (64, 32), scale=0.3), rand(5, (32,), scale=0.1)
+    a = fused_mlp_fwd_only(x, w1, b1, w2, b2, block_m=block_m)
+    b = fused_mlp_fwd_only(x, w1, b1, w2, b2, block_m=128)
+    assert_close(a, b, jnp.float32)
+
+
+def test_mlp_gradients_match_ref():
+    x = rand(1, (64, 16))
+    w1, b1, w2, b2 = rand(2, (16, 48), scale=0.3), rand(3, (48,), scale=0.1), rand(4, (48, 16), scale=0.3), rand(5, (16,), scale=0.1)
+    gk = jax.grad(lambda *a: (fused_mlp(*a) ** 2).sum(), argnums=tuple(range(5)))(x, w1, b1, w2, b2)
+    gr = jax.grad(lambda *a: (ref.mlp_ref(*a) ** 2).sum(), argnums=tuple(range(5)))(x, w1, b1, w2, b2)
+    for a, b in zip(gk, gr):
+        assert_close(a, b, jnp.float32)
+
+
+def test_mlp_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        fused_mlp_fwd_only(rand(1, (8, 4)), rand(2, (5, 6)), rand(3, (6,)), rand(4, (6, 4)), rand(5, (4,)))
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-checks
+# ---------------------------------------------------------------------------
+
+
+def test_gelu_matches_jax_nn():
+    x = rand(1, (1024,))
+    np.testing.assert_allclose(
+        np.asarray(ref.gelu(x)), np.asarray(jax.nn.gelu(x, approximate=True)),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_layernorm_zero_mean_unit_var():
+    x = rand(1, (32, 64), scale=5.0)
+    y = ref.layernorm_ref(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.asarray(y.mean(-1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y.std(-1)), 1.0, atol=1e-2)
+
+
+def test_softmax_stable_extreme_values():
+    x = jnp.array([[1e4, 1e4 + 1.0, -1e4]])
+    p = ref.softmax_stable(x)
+    assert bool(jnp.all(jnp.isfinite(p)))
+    np.testing.assert_allclose(float(p.sum()), 1.0, rtol=1e-6)

@@ -1,0 +1,161 @@
+//! §Perf — L3 hot-path microbenchmarks against the DESIGN.md targets:
+//!   scheduler ≥ 50k placements/s, InterLink round-trip < 50 µs in-proc,
+//!   TSDB ingest ≥ 1M samples/s, JSON wire codec, Kueue admission.
+//! Plus the PJRT execute path (train-step latency) when artifacts exist.
+
+use aiinfn::cluster::node::Node;
+use aiinfn::cluster::pod::{Payload, PodSpec};
+use aiinfn::cluster::resources::ResourceVec;
+use aiinfn::cluster::scheduler::Scheduler;
+use aiinfn::cluster::store::ClusterStore;
+use aiinfn::monitoring::tsdb::{SeriesKey, Tsdb};
+use aiinfn::queue::kueue::{ClusterQueue, Kueue, LocalQueue, PriorityClass};
+use aiinfn::util::bench::{black_box, BenchGroup};
+use aiinfn::util::json::Json;
+
+fn sched_bench(g: &mut BenchGroup) {
+    // 16-node cluster, schedule 1000 CPU pods per iteration
+    let nodes: Vec<Node> = (0..16)
+        .map(|i| Node::physical(format!("n{i:02}"), 128, 1024 << 30, 10 << 40, vec![]))
+        .collect();
+    let n_pods = 1000u64;
+    g.bench_elements("scheduler-place-1k-pods-16-nodes", n_pods, || {
+        let mut store = ClusterStore::new();
+        for n in &nodes {
+            store.add_node(n.clone(), 0.0);
+        }
+        for i in 0..n_pods {
+            store.create_pod(
+                PodSpec::new(
+                    format!("p{i}"),
+                    ResourceVec::cpu_millis(1000),
+                    Payload::Sleep { duration: 1.0 },
+                ),
+                0.0,
+            );
+        }
+        let sched = Scheduler::default();
+        let (placed, _) = sched.schedule_pending(&mut store, 0.0);
+        assert_eq!(placed.len(), n_pods as usize);
+        black_box(placed.len());
+    });
+
+    // single-decision latency on a busy cluster
+    let mut store = ClusterStore::new();
+    for n in &nodes {
+        store.add_node(n.clone(), 0.0);
+    }
+    for i in 0..500 {
+        store.create_pod(
+            PodSpec::new(format!("busy{i}"), ResourceVec::cpu_millis(2000), Payload::Sleep { duration: 1.0 }),
+            0.0,
+        );
+    }
+    let sched = Scheduler::default();
+    sched.schedule_pending(&mut store, 0.0);
+    let probe = PodSpec::new("probe", ResourceVec::cpu_millis(1500), Payload::Sleep { duration: 1.0 });
+    g.bench("scheduler-single-decision", || {
+        black_box(sched.select_node(&store, &probe).ok());
+    });
+}
+
+fn kueue_bench(g: &mut BenchGroup) {
+    g.bench_elements("kueue-submit-admit-200", 200, || {
+        let mut k = Kueue::new();
+        k.add_cluster_queue(ClusterQueue {
+            name: "cq".into(),
+            cohort: None,
+            nominal: ResourceVec::cpu_millis(1_000_000),
+            used: ResourceVec::new(),
+            can_borrow: false,
+            can_lend: false,
+        });
+        k.add_local_queue(LocalQueue { name: "lq".into(), cluster_queue: "cq".into() });
+        for i in 0..200 {
+            k.submit(format!("w{i}"), "lq", PriorityClass::Batch, ResourceVec::cpu_millis(4000), 0.0)
+                .unwrap();
+        }
+        black_box(k.admit_pass(0.0).admitted.len());
+    });
+}
+
+fn tsdb_bench(g: &mut BenchGroup) {
+    let mut db = Tsdb::new(3600.0);
+    let key = SeriesKey::new("m", &[("node", "n1")]);
+    let mut t = 0.0;
+    g.bench_elements("tsdb-ingest-single-series-1k", 1000, || {
+        for _ in 0..1000 {
+            t += 1.0;
+            db.ingest(key.clone(), t, t);
+        }
+    });
+}
+
+fn wire_bench(g: &mut BenchGroup) {
+    use aiinfn::offload::interlink::{Request, WirePod};
+    let spec = PodSpec::new(
+        "train-01",
+        ResourceVec::cpu_millis(4000).with("nvidia.com/mig-1g.5gb", 2),
+        Payload::MlJob { artifact: "train_step_small".into(), steps: 100 },
+    );
+    let pod = WirePod::from_spec(&spec, 600.0);
+    let req = Request::Create { pod, token: "tok".into() };
+    let encoded = req.encode();
+    g.bench("interlink-encode", || {
+        black_box(req.encode());
+    });
+    g.bench("interlink-decode", || {
+        black_box(Request::decode(&encoded).unwrap());
+    });
+    let doc = std::fs::read_to_string(aiinfn::platform::default_config_path()).unwrap();
+    g.bench_elements("json-parse-platform-config", doc.len() as u64, || {
+        black_box(Json::parse(&doc).unwrap());
+    });
+}
+
+fn pjrt_bench(g: &mut BenchGroup) {
+    use aiinfn::runtime::{Engine, Manifest, TrainRunner};
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+        return;
+    };
+    let mut eng = Engine::cpu().unwrap();
+    let mut tr = TrainRunner::new(&mut eng, &manifest, "tiny", false).unwrap();
+    g.bench("pjrt-train-step-tiny", || {
+        black_box(tr.step(&mut eng).unwrap());
+    });
+    if manifest.model("small").is_some() {
+        let mut trs = TrainRunner::new(&mut eng, &manifest, "small", false).unwrap();
+        g.bench("pjrt-train-step-small", || {
+            black_box(trs.step(&mut eng).unwrap());
+        });
+    }
+}
+
+fn main() {
+    let mut g = BenchGroup::new("Perf-hotpath");
+    sched_bench(&mut g);
+    kueue_bench(&mut g);
+    tsdb_bench(&mut g);
+    wire_bench(&mut g);
+    pjrt_bench(&mut g);
+
+    // DESIGN.md §Perf gate summary
+    println!("\n== §Perf targets ==");
+    for r in g.results() {
+        let per_sec = r.per_sec();
+        match r.name.as_str() {
+            "scheduler-place-1k-pods-16-nodes" => {
+                println!("scheduler: {:.0} placements/s (target ≥ 50k)", per_sec);
+            }
+            "tsdb-ingest-single-series-1k" => {
+                println!("tsdb ingest: {:.2}M samples/s (target ≥ 1M)", per_sec / 1e6);
+            }
+            "interlink-decode" => {
+                println!("interlink decode: {:?} (round-trip target < 50µs)", r.median);
+            }
+            _ => {}
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! E1 — §2 commissioning inventory: regenerate the paper's hardware table
+//! from the config and verify the platform advertises exactly that
+//! capacity; also measures the cold-boot time of the full platform.
+
+use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::util::bench::BenchGroup;
+use aiinfn::util::fmt_bytes;
+
+fn main() {
+    let mut g = BenchGroup::new("E1-inventory");
+    let cfg = PlatformConfig::load(&default_config_path()).expect("config");
+
+    // The paper's table, regenerated:
+    println!("\n| server | year | cores | memory | nvme | NVIDIA | FPGA |");
+    println!("|---|---|---|---|---|---|---|");
+    for s in &cfg.servers {
+        println!(
+            "| {} | {} | {} | {} | {} | {} | {} |",
+            s.name,
+            s.year,
+            s.cpu_cores,
+            fmt_bytes((s.memory_gb as u64) << 30),
+            fmt_bytes((s.nvme_tb as u64) << 40),
+            s.gpus.iter().filter(|x| !x.is_fpga()).count(),
+            s.gpus.iter().filter(|x| x.is_fpga()).count(),
+        );
+    }
+    let (cores, mem, nvme, gpus, fpgas) = cfg.totals();
+    println!("| TOTAL | 2020-24 | {cores} | {} | {} | {gpus} | {fpgas} |", fmt_bytes(mem as u64), fmt_bytes(nvme as u64));
+
+    // functional checks (paper §2 numbers)
+    assert_eq!(cfg.servers.len(), 4);
+    assert_eq!(cores, 448);
+    assert_eq!(gpus, 20);
+    assert_eq!(fpgas, 10);
+    let nodes = cfg.build_nodes().unwrap();
+    let mig: i64 = nodes.iter().map(|n| n.allocatable.get("nvidia.com/mig-1g.5gb")).sum();
+    assert_eq!(mig, 35, "5 A100 × 7 MIG slices");
+    g.record_value("registered-users", 78.0, "users");
+    g.record_value("projects", 20.0, "projects");
+    g.record_value("mig-slices", mig as f64, "slices");
+
+    // platform cold-boot latency
+    let cfg2 = cfg.clone();
+    g.bench("platform-bootstrap", || {
+        let p = Platform::bootstrap(cfg2.clone()).unwrap();
+        aiinfn::util::bench::black_box(p.store.borrow().node_count());
+    });
+    println!("\nE1 inventory checks PASSED");
+}

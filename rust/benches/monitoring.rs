@@ -1,0 +1,80 @@
+//! E9 — monitoring & accounting (§2): Prometheus + kube-eagle + DCGM +
+//! custom storage exporters, Grafana dashboards, per-user accounting.
+//!
+//! Measures the monitoring pipeline at platform scale: scrape cost for the
+//! 4-server fleet, TSDB ingest rate, query latencies, and generates the
+//! accounting report for a simulated week.
+
+use aiinfn::gpu::dcgm::DcgmSimulator;
+use aiinfn::monitoring::exporters;
+use aiinfn::monitoring::tsdb::{SeriesKey, Tsdb};
+use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::sim::clock::hours;
+use aiinfn::sim::trace::{generate, ArrivalKind, TraceConfig};
+use aiinfn::util::bench::BenchGroup;
+
+fn main() {
+    let mut g = BenchGroup::new("E9-monitoring");
+
+    // raw TSDB ingest
+    let mut db = Tsdb::new(3600.0 * 24.0);
+    let keys: Vec<SeriesKey> = (0..100)
+        .map(|i| SeriesKey::new("bench_metric", &[("node", &format!("n{}", i % 8)), ("idx", &i.to_string())]))
+        .collect();
+    let mut t = 0.0f64;
+    g.bench_elements("tsdb-ingest-100-series", 100, || {
+        t += 1.0;
+        for k in &keys {
+            db.ingest(k.clone(), t, t * 0.5);
+        }
+    });
+
+    // query latency over a populated store
+    let qk = keys[0].clone();
+    g.bench("tsdb-rate-query", || {
+        aiinfn::util::bench::black_box(db.rate(&qk, t - 600.0, t));
+    });
+    g.bench("tsdb-sum-by-node", || {
+        aiinfn::util::bench::black_box(db.sum_by("bench_metric", "node", t));
+    });
+
+    // full-fleet scrape cost (nodes + 30 accelerators + storage)
+    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let mut p = Platform::bootstrap(cfg).unwrap();
+    let mut dcgm = DcgmSimulator::new(9);
+    let mut db2 = Tsdb::new(3600.0);
+    let mut ts = 0.0f64;
+    g.bench("full-fleet-scrape", || {
+        ts += 30.0;
+        let st = p.store.borrow();
+        exporters::scrape_nodes(&mut db2, &st, ts);
+        exporters::scrape_gpus(&mut db2, &st, &mut dcgm, ts);
+        exporters::scrape_pods(&mut db2, &st, ts);
+    });
+    println!("series after fleet scrapes: {}", db2.series_count());
+
+    // a simulated week of operation → accounting report + dashboard render
+    let horizon = hours(7.0 * 24.0);
+    let trace = generate(&TraceConfig { seed: 5, ..Default::default() }, horizon);
+    for a in trace.iter().filter(|a| a.kind == ArrivalKind::Batch) {
+        let _ = p.submit_ml_training(&a.user, &a.project, a.duration * 5e12, a.gpu, false);
+    }
+    p.run_for(horizon, 300.0);
+    g.record_value("week-samples-ingested", p.tsdb.samples_ingested() as f64, "samples");
+    g.record_value("week-series", p.tsdb.series_count() as f64, "series");
+
+    let report = aiinfn::monitoring::account(&p.store.borrow(), p.now());
+    let text = report.render("E9 weekly accounting (top users)");
+    println!("\n{text}");
+    assert!(!report.by_user.is_empty(), "accounting must attribute usage");
+    assert!(p.tsdb.samples_ingested() > 10_000);
+
+    g.bench("accounting-report", || {
+        let st = p.store.borrow();
+        aiinfn::util::bench::black_box(aiinfn::monitoring::account(&st, p.now()));
+    });
+    g.bench("dashboard-render", || {
+        aiinfn::util::bench::black_box(aiinfn::monitoring::dashboard::overview(&p.tsdb, p.now(), hours(24.0)));
+    });
+    println!("E9 monitoring checks PASSED");
+}

@@ -1,0 +1,6 @@
+//! Baselines the paper compares against (implicitly): the pre-AI_INFN
+//! VM-based model (ML_INFN [8]) with static per-VM accelerator pinning.
+
+pub mod vm;
+
+pub use vm::{StaticVmFarm, VmOutcome};

@@ -1,0 +1,205 @@
+//! The static-VM baseline (paper §2: the previous "VM-based model" had
+//! "inefficient use of accelerators, risks of data loss, and unsustainable
+//! administrative and security demands").
+//!
+//! Model: each GPU is *pinned* to a long-lived per-user VM at request time.
+//! A user keeps the whole accelerator for the lifetime of their VM lease
+//! (days), regardless of how little of it they use. No MIG, no queueing —
+//! requests that find no free GPU are simply refused (users then email the
+//! admins; we count those). This is the E7 comparator for the k8s dynamic
+//! model's utilization and wait statistics.
+
+use crate::sim::clock::Time;
+use crate::sim::trace::{Arrival, ArrivalKind, GpuDemand};
+
+/// Outcome of replaying a trace against the static farm.
+#[derive(Debug, Default, Clone)]
+pub struct VmOutcome {
+    pub served: u64,
+    pub refused: u64,
+    /// GPU-hours actually used by workloads (active time × 1 GPU).
+    pub gpu_hours_used: f64,
+    /// GPU-hours held by leases (the allocation the admins see).
+    pub gpu_hours_held: f64,
+    /// How many distinct users could hold a GPU simultaneously, at peak.
+    pub peak_concurrent_users: usize,
+    /// Admin interventions: VM creations + manual reclamations.
+    pub admin_ops: u64,
+}
+
+impl VmOutcome {
+    /// Held-allocation efficiency: used / held (the paper's "inefficient
+    /// use of accelerators" is this ratio being low).
+    pub fn efficiency(&self) -> f64 {
+        if self.gpu_hours_held == 0.0 {
+            return 0.0;
+        }
+        self.gpu_hours_used / self.gpu_hours_held
+    }
+
+    pub fn refusal_rate(&self) -> f64 {
+        let total = self.served + self.refused;
+        if total == 0 {
+            0.0
+        } else {
+            self.refused as f64 / total as f64
+        }
+    }
+}
+
+/// One pinned lease.
+#[derive(Debug, Clone)]
+struct Lease {
+    user: String,
+    until: Time,
+    active_until: Time,
+}
+
+/// The farm: `n_gpus` accelerators, each assignable to one VM lease.
+pub struct StaticVmFarm {
+    n_gpus: usize,
+    /// VM lease duration once granted (the "static" in static allocation).
+    pub lease_days: f64,
+    leases: Vec<Option<Lease>>,
+}
+
+impl StaticVmFarm {
+    pub fn new(n_gpus: usize) -> Self {
+        StaticVmFarm { n_gpus, lease_days: 7.0, leases: vec![None; n_gpus] }
+    }
+
+    /// Replay a trace: GPU-demanding arrivals try to acquire (or reuse) a
+    /// pinned VM; CPU-only arrivals are ignored (they ran elsewhere).
+    pub fn replay(&mut self, trace: &[Arrival]) -> VmOutcome {
+        let mut out = VmOutcome::default();
+        let lease_len = self.lease_days * 24.0 * 3600.0;
+        for a in trace {
+            if a.gpu == GpuDemand::None {
+                continue;
+            }
+            let now = a.at;
+            // expire leases
+            for l in self.leases.iter_mut() {
+                if l.as_ref().map(|x| x.until <= now).unwrap_or(false) {
+                    *l = None;
+                    out.admin_ops += 1; // reclamation/cleanup
+                }
+            }
+            // an existing lease for this user serves the request
+            let mine = self
+                .leases
+                .iter_mut()
+                .flatten()
+                .find(|l| l.user == a.user);
+            let served = if let Some(l) = mine {
+                l.active_until = l.active_until.max(now + a.duration);
+                true
+            } else if let Some(slot) = self.leases.iter_mut().position(|l| l.is_none()) {
+                self.leases[slot] = Some(Lease {
+                    user: a.user.clone(),
+                    until: now + lease_len,
+                    active_until: now + a.duration,
+                });
+                out.admin_ops += 1; // VM creation
+                out.gpu_hours_held += lease_len / 3600.0;
+                true
+            } else {
+                false
+            };
+            if served {
+                out.served += 1;
+                // sessions use the GPU sporadically; batch uses it solidly
+                let busy_frac = match a.kind {
+                    ArrivalKind::Interactive => 0.25,
+                    ArrivalKind::Batch => 0.9,
+                };
+                out.gpu_hours_used += a.duration / 3600.0 * busy_frac;
+            } else {
+                out.refused += 1;
+            }
+            let held = self.leases.iter().flatten().count();
+            out.peak_concurrent_users = out.peak_concurrent_users.max(held);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::trace::{generate, TraceConfig};
+
+    #[test]
+    fn farm_refuses_when_pinned_out() {
+        let mut farm = StaticVmFarm::new(2);
+        let trace: Vec<Arrival> = (0..5)
+            .map(|i| Arrival {
+                at: i as f64 * 60.0,
+                kind: ArrivalKind::Interactive,
+                user: format!("u{i}"),
+                project: "p".into(),
+                duration: 3600.0,
+                gpu: GpuDemand::MigSlice(1),
+                cpu_millis: 1000,
+                mem_bytes: 1 << 30,
+            })
+            .collect();
+        let out = farm.replay(&trace);
+        assert_eq!(out.served, 2);
+        assert_eq!(out.refused, 3);
+        assert_eq!(out.peak_concurrent_users, 2);
+    }
+
+    #[test]
+    fn same_user_reuses_lease() {
+        let mut farm = StaticVmFarm::new(1);
+        let mk = |at: f64| Arrival {
+            at,
+            kind: ArrivalKind::Batch,
+            user: "alice".into(),
+            project: "p".into(),
+            duration: 600.0,
+            gpu: GpuDemand::WholeGpu,
+            cpu_millis: 1000,
+            mem_bytes: 1 << 30,
+        };
+        let out = farm.replay(&[mk(0.0), mk(100.0), mk(200.0)]);
+        assert_eq!(out.served, 3);
+        assert_eq!(out.admin_ops, 1, "one VM creation only");
+    }
+
+    #[test]
+    fn efficiency_is_low_for_interactive_dominated_trace() {
+        let cfg = TraceConfig { seed: 5, ..Default::default() };
+        let trace = generate(&cfg, 7.0 * 24.0 * 3600.0);
+        let mut farm = StaticVmFarm::new(20); // paper's 20 GPUs
+        let out = farm.replay(&trace);
+        assert!(out.served > 0);
+        // the headline pathology: held >> used
+        assert!(
+            out.efficiency() < 0.5,
+            "static pinning should waste most GPU-hours: {}",
+            out.efficiency()
+        );
+    }
+
+    #[test]
+    fn leases_expire_and_free_gpus() {
+        let mut farm = StaticVmFarm::new(1);
+        farm.lease_days = 1.0 / 24.0; // 1-hour leases
+        let mk = |at: f64, user: &str| Arrival {
+            at,
+            kind: ArrivalKind::Batch,
+            user: user.into(),
+            project: "p".into(),
+            duration: 60.0,
+            gpu: GpuDemand::WholeGpu,
+            cpu_millis: 1000,
+            mem_bytes: 1 << 30,
+        };
+        let out = farm.replay(&[mk(0.0, "a"), mk(600.0, "b"), mk(4000.0, "c")]);
+        // b refused (a holds the lease), c served after expiry
+        assert_eq!(out.served, 2);
+        assert_eq!(out.refused, 1);
+    }
+}

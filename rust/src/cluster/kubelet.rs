@@ -1,0 +1,185 @@
+//! Kubelet simulator: drives bound pods through their lifecycle on the
+//! discrete-event engine.
+//!
+//! Start latency models container startup (image pull amortized by a node
+//! cache, runtime setup); run duration comes from the pod payload via a
+//! pluggable [`DurationOracle`] so the same kubelet serves pure simulation
+//! (durations from the trace / cost model) and hardware-in-the-loop runs
+//! (durations measured around real PJRT execution by the platform facade).
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use crate::cluster::pod::{Payload, PodPhase};
+use crate::cluster::store::ClusterStore;
+use crate::sim::clock::Time;
+use crate::sim::engine::Engine;
+
+/// Maps a payload to its active run duration (seconds of sim time).
+pub type DurationOracle = Rc<dyn Fn(&Payload) -> Time>;
+
+/// Default oracle: honor explicit durations; sessions run to their idle
+/// timeout; compute payloads fall back to a nominal rate (overridden by the
+/// platform's cost model in real setups).
+pub fn default_oracle() -> DurationOracle {
+    Rc::new(|p: &Payload| match p {
+        Payload::Sleep { duration } => *duration,
+        Payload::Session { idle_after } => *idle_after,
+        Payload::MlJob { steps, .. } => *steps as f64 * 0.5,
+        Payload::Burn { flops } => flops / 1e12, // 1 TFLOPS nominal
+    })
+}
+
+/// Shared kubelet state (image cache per node).
+pub struct Kubelet {
+    store: Rc<RefCell<ClusterStore>>,
+    oracle: DurationOracle,
+    /// (node, image-ish key) pairs already warm — first pull is slower.
+    warm: RefCell<HashSet<(String, String)>>,
+    pub cold_start: Time,
+    pub warm_start: Time,
+}
+
+impl Kubelet {
+    pub fn new(store: Rc<RefCell<ClusterStore>>, oracle: DurationOracle) -> Rc<Self> {
+        Rc::new(Kubelet {
+            store,
+            oracle,
+            warm: RefCell::new(HashSet::new()),
+            cold_start: 30.0, // first image pull on a node
+            warm_start: 2.0,  // cached image
+        })
+    }
+
+    /// Begin lifecycle for a pod that was just bound. Schedules Running and
+    /// the terminal transition on the engine.
+    pub fn launch(self: &Rc<Self>, eng: &mut Engine, pod_name: &str) {
+        let (node, payload, image_key) = {
+            let st = self.store.borrow();
+            let Some(pod) = st.pod(pod_name) else { return };
+            if pod.status.phase != PodPhase::Scheduled {
+                return;
+            }
+            let image = match &pod.spec.payload {
+                Payload::MlJob { artifact, .. } => format!("mljob/{artifact}"),
+                Payload::Session { .. } => "jupyter/datascience".to_string(),
+                _ => "batch/generic".to_string(),
+            };
+            (pod.status.node.clone().unwrap_or_default(), pod.spec.payload.clone(), image)
+        };
+        let key = (node, image_key);
+        let start_delay = if self.warm.borrow().contains(&key) {
+            self.warm_start
+        } else {
+            self.warm.borrow_mut().insert(key);
+            self.cold_start
+        };
+        let me = self.clone();
+        let name = pod_name.to_string();
+        eng.after(start_delay, move |e| me.start(e, &name, &payload));
+    }
+
+    fn start(self: Rc<Self>, eng: &mut Engine, pod_name: &str, payload: &Payload) {
+        {
+            let mut st = self.store.borrow_mut();
+            // pod may have been evicted while image-pulling
+            let live = st.pod(pod_name).map(|p| p.status.phase == PodPhase::Scheduled).unwrap_or(false);
+            if !live {
+                return;
+            }
+            let now = eng.now();
+            st.mark_running(pod_name, now).ok();
+        }
+        let dur = (self.oracle)(payload).max(0.0);
+        let me = self.clone();
+        let name = pod_name.to_string();
+        eng.after(dur, move |e| {
+            let mut st = me.store.borrow_mut();
+            let running = st.pod(&name).map(|p| p.status.phase == PodPhase::Running).unwrap_or(false);
+            if running {
+                let now = e.now();
+                st.finish_pod(&name, PodPhase::Succeeded, now, "completed").ok();
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::Node;
+    use crate::cluster::pod::PodSpec;
+    use crate::cluster::resources::ResourceVec;
+    use crate::sim::clock::SimClock;
+
+    fn setup() -> (Engine, Rc<RefCell<ClusterStore>>, Rc<Kubelet>) {
+        let clock = SimClock::new();
+        let eng = Engine::new(clock);
+        let store = Rc::new(RefCell::new(ClusterStore::new()));
+        store
+            .borrow_mut()
+            .add_node(Node::physical("n1", 8, 32 << 30, 1 << 40, vec![]), 0.0);
+        let kubelet = Kubelet::new(store.clone(), default_oracle());
+        (eng, store, kubelet)
+    }
+
+    #[test]
+    fn pod_runs_to_completion() {
+        let (mut eng, store, kubelet) = setup();
+        store.borrow_mut().create_pod(
+            PodSpec::new("p1", ResourceVec::cpu_millis(100), Payload::Sleep { duration: 10.0 }),
+            0.0,
+        );
+        store.borrow_mut().bind("p1", "n1", 0.0).unwrap();
+        kubelet.launch(&mut eng, "p1");
+        eng.run_until(100.0);
+        let st = store.borrow();
+        let p = st.pod("p1").unwrap();
+        assert_eq!(p.status.phase, PodPhase::Succeeded);
+        // cold start 30 + duration 10
+        assert!((p.status.finished_at.unwrap() - 40.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warm_start_is_faster_second_time() {
+        let (mut eng, store, kubelet) = setup();
+        for (name, t) in [("a", 0.0), ("b", 0.0)] {
+            store.borrow_mut().create_pod(
+                PodSpec::new(name, ResourceVec::cpu_millis(100), Payload::Sleep { duration: 1.0 }),
+                t,
+            );
+            store.borrow_mut().bind(name, "n1", t).unwrap();
+        }
+        kubelet.launch(&mut eng, "a");
+        kubelet.launch(&mut eng, "b"); // same image key, same node → warm
+        eng.run_until(100.0);
+        let st = store.borrow();
+        let fa = st.pod("a").unwrap().status.finished_at.unwrap();
+        let fb = st.pod("b").unwrap().status.finished_at.unwrap();
+        assert!((fa - 31.0).abs() < 1e-6, "{fa}");
+        assert!((fb - 3.0).abs() < 1e-6, "warm pod should finish first: {fb}");
+    }
+
+    #[test]
+    fn evicted_pod_does_not_complete() {
+        let (mut eng, store, kubelet) = setup();
+        store.borrow_mut().create_pod(
+            PodSpec::new("p1", ResourceVec::cpu_millis(100), Payload::Sleep { duration: 50.0 }),
+            0.0,
+        );
+        store.borrow_mut().bind("p1", "n1", 0.0).unwrap();
+        kubelet.launch(&mut eng, "p1");
+        // evict mid-run at t=35 (after start at 30)
+        {
+            let store = store.clone();
+            eng.at(35.0, move |e| {
+                let now = e.now();
+                store.borrow_mut().evict_pod("p1", now, false, "test evict").ok();
+            });
+        }
+        eng.run_until(200.0);
+        let st = store.borrow();
+        assert_eq!(st.pod("p1").unwrap().status.phase, PodPhase::Evicted);
+    }
+}

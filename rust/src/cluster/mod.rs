@@ -1,0 +1,16 @@
+//! Kubernetes-like cluster substrate (DESIGN.md S9/S10): resource model,
+//! nodes, pods, the state store, the filter/score scheduler, and the kubelet
+//! lifecycle driver.
+
+pub mod kubelet;
+pub mod node;
+pub mod pod;
+pub mod resources;
+pub mod scheduler;
+pub mod store;
+
+pub use node::Node;
+pub use pod::{Pod, PodPhase, PodSpec};
+pub use resources::ResourceVec;
+pub use scheduler::Scheduler;
+pub use store::ClusterStore;

@@ -1,0 +1,152 @@
+//! Cluster nodes: capacity, labels, taints, and the GPU devices they host.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::resources::{ResourceVec, CPU, MEMORY, STORAGE};
+use crate::gpu::GpuDevice;
+
+/// Kubernetes-style taint effect (only NoSchedule is needed here).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Taint {
+    pub key: String,
+    pub value: String,
+}
+
+/// A (possibly virtual) cluster node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub labels: BTreeMap<String, String>,
+    pub taints: Vec<Taint>,
+    /// Full capacity including extended resources from GPU devices.
+    pub capacity: ResourceVec,
+    /// Capacity minus system reservation; the scheduler's budget.
+    pub allocatable: ResourceVec,
+    pub gpus: Vec<GpuDevice>,
+    /// Virtual nodes are backed by a remote provider (InterLink).
+    pub virtual_node: bool,
+    pub ready: bool,
+}
+
+impl Node {
+    /// Build a physical node; extended resources derived from `gpus`.
+    pub fn physical(
+        name: impl Into<String>,
+        cpu_cores: i64,
+        mem_bytes: i64,
+        disk_bytes: i64,
+        gpus: Vec<GpuDevice>,
+    ) -> Node {
+        let name = name.into();
+        let mut capacity = ResourceVec::new()
+            .with(CPU, cpu_cores * 1000)
+            .with(MEMORY, mem_bytes)
+            .with(STORAGE, disk_bytes);
+        for g in &gpus {
+            capacity.add(&g.extended_resources());
+        }
+        // Reserve ~2 cores + 8 GiB for system daemons, like real kubelets do.
+        let mut allocatable = capacity.clone();
+        allocatable.set(CPU, (capacity.get(CPU) - 2000).max(0));
+        allocatable.set(MEMORY, (capacity.get(MEMORY) - (8 << 30)).max(0));
+        let mut labels = BTreeMap::new();
+        labels.insert("kubernetes.io/hostname".into(), name.clone());
+        if gpus.iter().any(|g| !g.model.is_fpga()) {
+            labels.insert("nvidia.com/gpu.present".into(), "true".into());
+        }
+        Node {
+            name,
+            labels,
+            taints: Vec::new(),
+            capacity,
+            allocatable,
+            gpus,
+            virtual_node: false,
+            ready: true,
+        }
+    }
+
+    /// Build a virtual (InterLink-backed) node with synthetic capacity.
+    pub fn virtual_node(name: impl Into<String>, capacity: ResourceVec) -> Node {
+        let name = name.into();
+        let mut labels = BTreeMap::new();
+        labels.insert("kubernetes.io/hostname".into(), name.clone());
+        labels.insert("type".into(), "virtual-kubelet".into());
+        Node {
+            name,
+            labels,
+            // Real InterLink nodes carry a taint so only offload-tolerant
+            // pods land there.
+            taints: vec![Taint { key: "virtual-node.interlink/no-schedule".into(), value: "true".into() }],
+            allocatable: capacity.clone(),
+            capacity,
+            gpus: Vec::new(),
+            virtual_node: true,
+            ready: true,
+        }
+    }
+
+    /// Re-derive extended resources after a MIG repartition.
+    pub fn refresh_extended_resources(&mut self) {
+        // wipe existing extended entries, rebuild from devices
+        let mut cap = ResourceVec::new()
+            .with(CPU, self.capacity.get(CPU))
+            .with(MEMORY, self.capacity.get(MEMORY))
+            .with(STORAGE, self.capacity.get(STORAGE));
+        for g in &self.gpus {
+            cap.add(&g.extended_resources());
+        }
+        let mut alloc = cap.clone();
+        alloc.set(CPU, self.allocatable.get(CPU));
+        alloc.set(MEMORY, self.allocatable.get(MEMORY));
+        self.capacity = cap;
+        self.allocatable = alloc;
+    }
+
+    pub fn has_label(&self, k: &str, v: &str) -> bool {
+        self.labels.get(k).map(|x| x == v).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{GpuModel, MigLayout};
+
+    #[test]
+    fn physical_node_aggregates_gpu_resources() {
+        let gpus = vec![
+            GpuDevice::whole("g0", GpuModel::TeslaT4),
+            GpuDevice::whole("g1", GpuModel::TeslaT4),
+        ];
+        let n = Node::physical("s1", 64, 750 << 30, 12 << 40, gpus);
+        assert_eq!(n.capacity.get("nvidia.com/gpu"), 2);
+        assert_eq!(n.capacity.get(CPU), 64_000);
+        assert_eq!(n.allocatable.get(CPU), 62_000);
+        assert!(n.has_label("nvidia.com/gpu.present", "true"));
+    }
+
+    #[test]
+    fn refresh_after_repartition_swaps_resources() {
+        let mut n = Node::physical(
+            "s2",
+            128,
+            1024 << 30,
+            12 << 40,
+            vec![GpuDevice::whole("g0", GpuModel::A100_40GB)],
+        );
+        assert_eq!(n.allocatable.get("nvidia.com/gpu"), 1);
+        let layout = MigLayout::max_sharing(GpuModel::A100_40GB).unwrap();
+        n.gpus[0].repartition(layout).unwrap();
+        n.refresh_extended_resources();
+        assert_eq!(n.allocatable.get("nvidia.com/gpu"), 0);
+        assert_eq!(n.allocatable.get("nvidia.com/mig-1g.5gb"), 7);
+    }
+
+    #[test]
+    fn virtual_node_is_tainted() {
+        let n = Node::virtual_node("leonardo", ResourceVec::cpu_millis(1_000_000));
+        assert!(n.virtual_node);
+        assert_eq!(n.taints.len(), 1);
+    }
+}

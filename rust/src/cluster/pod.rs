@@ -1,0 +1,184 @@
+//! Pods: the unit of scheduling, carrying resource requests, placement
+//! constraints, and the *payload* the kubelet will execute (a simulated
+//! duration or a real ML job against the PJRT runtime).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::resources::ResourceVec;
+use crate::sim::clock::Time;
+
+/// What the pod actually does once it runs.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Sleep for a fixed active duration (simulation mode).
+    Sleep { duration: Time },
+    /// Interactive session: runs until culled/stopped (no natural end).
+    Session { idle_after: Time },
+    /// ML payload executed for real through the PJRT runtime
+    /// (hardware-in-the-loop mode). `artifact` names a manifest entry.
+    MlJob { artifact: String, steps: u32 },
+    /// Synthetic compute with a known FLOP count (cost-model driven).
+    Burn { flops: f64 },
+}
+
+/// Pod lifecycle phases (superset of k8s' with an explicit Evicted).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    Scheduled,
+    Running,
+    Succeeded,
+    Failed,
+    Evicted,
+}
+
+impl PodPhase {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, PodPhase::Succeeded | PodPhase::Failed)
+    }
+}
+
+/// Pod specification (immutable after creation).
+#[derive(Debug, Clone)]
+pub struct PodSpec {
+    pub name: String,
+    pub namespace: String,
+    pub labels: BTreeMap<String, String>,
+    pub requests: ResourceVec,
+    /// Node-selector labels (all must match).
+    pub node_selector: BTreeMap<String, String>,
+    /// Taint keys this pod tolerates.
+    pub tolerations: Vec<String>,
+    pub priority: i32,
+    pub payload: Payload,
+    /// Owning user/project for accounting.
+    pub user: String,
+    pub project: String,
+}
+
+impl PodSpec {
+    pub fn new(name: impl Into<String>, requests: ResourceVec, payload: Payload) -> PodSpec {
+        PodSpec {
+            name: name.into(),
+            namespace: "default".into(),
+            labels: BTreeMap::new(),
+            requests,
+            node_selector: BTreeMap::new(),
+            tolerations: Vec::new(),
+            priority: 0,
+            payload,
+            user: "unknown".into(),
+            project: "unknown".into(),
+        }
+    }
+
+    pub fn with_label(mut self, k: &str, v: &str) -> Self {
+        self.labels.insert(k.into(), v.into());
+        self
+    }
+
+    pub fn with_selector(mut self, k: &str, v: &str) -> Self {
+        self.node_selector.insert(k.into(), v.into());
+        self
+    }
+
+    pub fn with_toleration(mut self, key: &str) -> Self {
+        self.tolerations.push(key.into());
+        self
+    }
+
+    pub fn with_priority(mut self, p: i32) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_owner(mut self, user: &str, project: &str) -> Self {
+        self.user = user.into();
+        self.project = project.into();
+        self
+    }
+
+    pub fn in_namespace(mut self, ns: &str) -> Self {
+        self.namespace = ns.into();
+        self
+    }
+}
+
+/// Live pod status tracked by the store.
+#[derive(Debug, Clone)]
+pub struct PodStatus {
+    pub phase: PodPhase,
+    pub node: Option<String>,
+    pub created_at: Time,
+    pub scheduled_at: Option<Time>,
+    pub started_at: Option<Time>,
+    pub finished_at: Option<Time>,
+    pub message: String,
+    /// How many times this pod has been evicted and requeued.
+    pub evictions: u32,
+}
+
+impl PodStatus {
+    pub fn new(created_at: Time) -> Self {
+        PodStatus {
+            phase: PodPhase::Pending,
+            node: None,
+            created_at,
+            scheduled_at: None,
+            started_at: None,
+            finished_at: None,
+            message: String::new(),
+            evictions: 0,
+        }
+    }
+
+    /// Scheduling latency (pending → scheduled), if scheduled.
+    pub fn schedule_latency(&self) -> Option<Time> {
+        self.scheduled_at.map(|s| s - self.created_at)
+    }
+}
+
+/// A pod = spec + status.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub spec: PodSpec,
+    pub status: PodStatus,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::resources::CPU;
+
+    #[test]
+    fn builder_chain() {
+        let p = PodSpec::new("p1", ResourceVec::cpu_millis(500), Payload::Sleep { duration: 10.0 })
+            .with_label("app", "jupyter")
+            .with_selector("zone", "cnaf")
+            .with_toleration("virtual-node.interlink/no-schedule")
+            .with_priority(100)
+            .with_owner("alice", "lhcb")
+            .in_namespace("hub");
+        assert_eq!(p.requests.get(CPU), 500);
+        assert_eq!(p.labels["app"], "jupyter");
+        assert_eq!(p.node_selector["zone"], "cnaf");
+        assert_eq!(p.priority, 100);
+        assert_eq!(p.namespace, "hub");
+    }
+
+    #[test]
+    fn status_latency() {
+        let mut s = PodStatus::new(10.0);
+        assert!(s.schedule_latency().is_none());
+        s.scheduled_at = Some(12.5);
+        assert_eq!(s.schedule_latency(), Some(2.5));
+    }
+
+    #[test]
+    fn terminal_phases() {
+        assert!(PodPhase::Succeeded.is_terminal());
+        assert!(PodPhase::Failed.is_terminal());
+        assert!(!PodPhase::Evicted.is_terminal());
+        assert!(!PodPhase::Running.is_terminal());
+    }
+}

@@ -1,0 +1,227 @@
+//! Kubernetes-style resource quantities and arithmetic.
+//!
+//! Resources are named counters: `cpu` (millicores), `memory` (bytes),
+//! `ephemeral-storage` (bytes), plus *extended resources* advertised by
+//! device plugins — whole GPUs (`nvidia.com/gpu`), MIG slices
+//! (`nvidia.com/mig-1g.5gb`, ...), and FPGA boards (`xilinx.com/fpga-u250`).
+//! This mirrors how the real platform's GPU Operator exposes MIG devices.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Canonical resource names.
+pub const CPU: &str = "cpu"; // millicores
+pub const MEMORY: &str = "memory"; // bytes
+pub const STORAGE: &str = "ephemeral-storage"; // bytes
+pub const GPU: &str = "nvidia.com/gpu"; // whole GPUs
+
+/// Extended-resource name for a MIG profile, e.g. `nvidia.com/mig-1g.5gb`.
+pub fn mig_resource(compute_slices: u8, mem_gb: u16) -> String {
+    format!("nvidia.com/mig-{compute_slices}g.{mem_gb}gb")
+}
+
+/// FPGA extended-resource name, e.g. `xilinx.com/fpga-u250`.
+pub fn fpga_resource(board: &str) -> String {
+    format!("xilinx.com/fpga-{}", board.to_lowercase())
+}
+
+/// A bag of named resource quantities. Values are non-negative.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ResourceVec(BTreeMap<String, i64>);
+
+impl ResourceVec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style insert.
+    pub fn with(mut self, name: &str, qty: i64) -> Self {
+        self.set(name, qty);
+        self
+    }
+
+    pub fn cpu_millis(qty: i64) -> Self {
+        Self::new().with(CPU, qty)
+    }
+
+    pub fn set(&mut self, name: &str, qty: i64) {
+        assert!(qty >= 0, "resource {name} quantity must be >= 0, got {qty}");
+        if qty == 0 {
+            self.0.remove(name);
+        } else {
+            self.0.insert(name.to_string(), qty);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> i64 {
+        self.0.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, i64)> {
+        self.0.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// True if `self` (a request) fits within `avail`.
+    pub fn fits_in(&self, avail: &ResourceVec) -> bool {
+        self.iter().all(|(k, v)| v <= avail.get(k))
+    }
+
+    /// self += other
+    pub fn add(&mut self, other: &ResourceVec) {
+        for (k, v) in other.iter() {
+            let cur = self.get(k);
+            self.set(k, cur + v);
+        }
+    }
+
+    /// self -= other; panics (debug) / clamps (release) on underflow — an
+    /// underflow means double-free of capacity, callers must check first.
+    pub fn sub(&mut self, other: &ResourceVec) {
+        for (k, v) in other.iter() {
+            let cur = self.get(k);
+            debug_assert!(cur >= v, "resource underflow on {k}: {cur} - {v}");
+            self.set(k, (cur - v).max(0));
+        }
+    }
+
+    /// Checked subtraction: None if it would underflow.
+    pub fn checked_sub(&self, other: &ResourceVec) -> Option<ResourceVec> {
+        if other.fits_in(self) {
+            let mut r = self.clone();
+            r.sub(other);
+            Some(r)
+        } else {
+            None
+        }
+    }
+
+    pub fn plus(&self, other: &ResourceVec) -> ResourceVec {
+        let mut r = self.clone();
+        r.add(other);
+        r
+    }
+
+    /// Fraction of `capacity` consumed, per resource, as the max across
+    /// resources present in capacity (scheduler scoring).
+    pub fn dominant_share(&self, capacity: &ResourceVec) -> f64 {
+        let mut share: f64 = 0.0;
+        for (k, cap) in capacity.iter() {
+            if cap > 0 {
+                share = share.max(self.get(k) as f64 / cap as f64);
+            }
+        }
+        share
+    }
+
+    /// Scale all quantities by an integer factor (pod replicas).
+    pub fn scaled(&self, n: i64) -> ResourceVec {
+        let mut r = ResourceVec::new();
+        for (k, v) in self.iter() {
+            r.set(k, v * n);
+        }
+        r
+    }
+}
+
+impl fmt::Display for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (k, v) in self.iter() {
+            if !first {
+                write!(f, ", ")?;
+            }
+            first = false;
+            match k {
+                CPU => write!(f, "cpu={}m", v)?,
+                MEMORY | STORAGE => write!(f, "{k}={}", crate::util::fmt_bytes(v as u64))?,
+                _ => write!(f, "{k}={v}")?,
+            }
+        }
+        if first {
+            write!(f, "∅")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rv(pairs: &[(&str, i64)]) -> ResourceVec {
+        let mut r = ResourceVec::new();
+        for (k, v) in pairs {
+            r.set(k, *v);
+        }
+        r
+    }
+
+    #[test]
+    fn fits_and_arithmetic() {
+        let avail = rv(&[(CPU, 4000), (MEMORY, 8 << 30), (GPU, 2)]);
+        let req = rv(&[(CPU, 1000), (GPU, 1)]);
+        assert!(req.fits_in(&avail));
+        let rem = avail.checked_sub(&req).unwrap();
+        assert_eq!(rem.get(CPU), 3000);
+        assert_eq!(rem.get(GPU), 1);
+        assert_eq!(rem.get(MEMORY), 8 << 30);
+        let back = rem.plus(&req);
+        assert_eq!(back, avail);
+    }
+
+    #[test]
+    fn missing_resource_blocks_fit() {
+        let avail = rv(&[(CPU, 4000)]);
+        let req = rv(&[(CPU, 100), (GPU, 1)]);
+        assert!(!req.fits_in(&avail));
+        assert!(avail.checked_sub(&req).is_none());
+    }
+
+    #[test]
+    fn zero_entries_are_pruned() {
+        let mut r = rv(&[(CPU, 100)]);
+        r.set(CPU, 0);
+        assert!(r.is_empty());
+        assert_eq!(r.get(CPU), 0);
+    }
+
+    #[test]
+    fn mig_and_fpga_names() {
+        assert_eq!(mig_resource(1, 5), "nvidia.com/mig-1g.5gb");
+        assert_eq!(mig_resource(7, 40), "nvidia.com/mig-7g.40gb");
+        assert_eq!(fpga_resource("U250"), "xilinx.com/fpga-u250");
+    }
+
+    #[test]
+    fn dominant_share_takes_max() {
+        let cap = rv(&[(CPU, 1000), (GPU, 4)]);
+        let used = rv(&[(CPU, 100), (GPU, 3)]);
+        assert!((used.dominant_share(&cap) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_multiplies() {
+        let r = rv(&[(CPU, 500), (GPU, 1)]).scaled(3);
+        assert_eq!(r.get(CPU), 1500);
+        assert_eq!(r.get(GPU), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_quantity_rejected() {
+        rv(&[(CPU, -1)]);
+    }
+
+    #[test]
+    fn display_formats_units() {
+        let r = rv(&[(CPU, 1500), (MEMORY, 2 << 30), (GPU, 1)]);
+        let s = r.to_string();
+        assert!(s.contains("cpu=1500m"));
+        assert!(s.contains("2.0 GiB"));
+        assert!(s.contains("nvidia.com/gpu=1"));
+    }
+}

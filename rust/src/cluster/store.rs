@@ -1,0 +1,413 @@
+//! The cluster state store: nodes + pods + events, with per-node free
+//! capacity accounting and a resource-version counter (an etcd-lite).
+//!
+//! Single-writer semantics: controllers mutate the store through `&mut`
+//! (the discrete-event engine is single-threaded), so no locking is needed
+//! on the hot path — one of the reasons the scheduler sustains the §Perf
+//! placement-rate target on one core.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cluster::node::Node;
+use crate::cluster::pod::{Pod, PodPhase, PodSpec, PodStatus};
+use crate::cluster::resources::ResourceVec;
+use crate::sim::clock::Time;
+
+/// Cluster event record (kubectl-events-like; feeds monitoring/accounting).
+#[derive(Debug, Clone)]
+pub struct ClusterEvent {
+    pub at: Time,
+    pub kind: EventKind,
+    pub object: String,
+    pub message: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    PodCreated,
+    PodScheduled,
+    PodStarted,
+    PodSucceeded,
+    PodFailed,
+    PodEvicted,
+    NodeAdded,
+    NodeRemoved,
+    MigRepartitioned,
+}
+
+/// The store.
+#[derive(Debug, Default)]
+pub struct ClusterStore {
+    nodes: BTreeMap<String, Node>,
+    /// Free = allocatable − sum(requests of pods assigned & not terminal).
+    free: HashMap<String, ResourceVec>,
+    pods: HashMap<String, Pod>,
+    /// Pending queue in FIFO order of creation (scheduler scans this).
+    pending: Vec<String>,
+    events: Vec<ClusterEvent>,
+    resource_version: u64,
+}
+
+impl ClusterStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.resource_version += 1;
+        self.resource_version
+    }
+
+    pub fn resource_version(&self) -> u64 {
+        self.resource_version
+    }
+
+    // ------------------------------------------------------------- nodes
+
+    pub fn add_node(&mut self, node: Node, at: Time) {
+        self.bump();
+        self.free.insert(node.name.clone(), node.allocatable.clone());
+        self.record(at, EventKind::NodeAdded, &node.name.clone(), "node registered");
+        self.nodes.insert(node.name.clone(), node);
+    }
+
+    pub fn remove_node(&mut self, name: &str, at: Time) -> Option<Node> {
+        self.bump();
+        self.free.remove(name);
+        let n = self.nodes.remove(name);
+        if n.is_some() {
+            self.record(at, EventKind::NodeRemoved, name, "node removed");
+        }
+        n
+    }
+
+    pub fn node(&self, name: &str) -> Option<&Node> {
+        self.nodes.get(name)
+    }
+
+    pub fn node_mut(&mut self, name: &str) -> Option<&mut Node> {
+        self.bump();
+        self.nodes.get_mut(name)
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.values()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Free (unreserved) capacity on a node.
+    pub fn free_on(&self, node: &str) -> Option<&ResourceVec> {
+        self.free.get(node)
+    }
+
+    /// Recompute a node's free vector after its allocatable changed
+    /// (MIG repartition): free = new allocatable − requests of live pods.
+    pub fn recompute_free(&mut self, node_name: &str) {
+        let Some(node) = self.nodes.get(node_name) else { return };
+        let mut free = node.allocatable.clone();
+        for p in self.pods.values() {
+            if p.status.node.as_deref() == Some(node_name)
+                && matches!(p.status.phase, PodPhase::Scheduled | PodPhase::Running)
+            {
+                free = free.checked_sub(&p.spec.requests).unwrap_or_else(ResourceVec::new);
+            }
+        }
+        self.free.insert(node_name.to_string(), free);
+    }
+
+    // -------------------------------------------------------------- pods
+
+    /// Create a pod in Pending and enqueue it for scheduling.
+    pub fn create_pod(&mut self, spec: PodSpec, at: Time) -> String {
+        self.bump();
+        let name = spec.name.clone();
+        assert!(
+            !self.pods.contains_key(&name),
+            "duplicate pod name {name}"
+        );
+        self.record(at, EventKind::PodCreated, &name, "created");
+        self.pods.insert(name.clone(), Pod { spec, status: PodStatus::new(at) });
+        self.pending.push(name.clone());
+        name
+    }
+
+    pub fn pod(&self, name: &str) -> Option<&Pod> {
+        self.pods.get(name)
+    }
+
+    pub fn pods(&self) -> impl Iterator<Item = &Pod> {
+        self.pods.values()
+    }
+
+    pub fn pending_pods(&self) -> &[String] {
+        &self.pending
+    }
+
+    /// Bind a pending pod to a node (scheduler decision). Reserves capacity.
+    pub fn bind(&mut self, pod_name: &str, node_name: &str, at: Time) -> anyhow::Result<()> {
+        self.bump();
+        let pod = self
+            .pods
+            .get_mut(pod_name)
+            .ok_or_else(|| anyhow::anyhow!("no pod {pod_name}"))?;
+        anyhow::ensure!(pod.status.phase == PodPhase::Pending, "pod {pod_name} not pending");
+        let free = self
+            .free
+            .get_mut(node_name)
+            .ok_or_else(|| anyhow::anyhow!("no node {node_name}"))?;
+        let rem = free
+            .checked_sub(&pod.spec.requests)
+            .ok_or_else(|| anyhow::anyhow!("insufficient free capacity on {node_name}"))?;
+        *free = rem;
+        pod.status.phase = PodPhase::Scheduled;
+        pod.status.node = Some(node_name.to_string());
+        pod.status.scheduled_at = Some(at);
+        self.pending.retain(|n| n != pod_name);
+        self.record(at, EventKind::PodScheduled, pod_name, node_name);
+        Ok(())
+    }
+
+    /// Transition Scheduled → Running.
+    pub fn mark_running(&mut self, pod_name: &str, at: Time) -> anyhow::Result<()> {
+        self.bump();
+        let pod = self
+            .pods
+            .get_mut(pod_name)
+            .ok_or_else(|| anyhow::anyhow!("no pod {pod_name}"))?;
+        anyhow::ensure!(pod.status.phase == PodPhase::Scheduled, "pod {pod_name} not scheduled");
+        pod.status.phase = PodPhase::Running;
+        pod.status.started_at = Some(at);
+        self.record(at, EventKind::PodStarted, pod_name, "started");
+        Ok(())
+    }
+
+    /// Terminal transition; releases node capacity.
+    pub fn finish_pod(&mut self, pod_name: &str, phase: PodPhase, at: Time, msg: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(phase.is_terminal(), "finish_pod needs terminal phase");
+        self.release(pod_name, phase, at, msg)
+    }
+
+    /// Evict a running/scheduled pod (releases capacity, back to Pending if
+    /// requeue=true, else marked Evicted permanently).
+    pub fn evict_pod(&mut self, pod_name: &str, at: Time, requeue: bool, msg: &str) -> anyhow::Result<()> {
+        self.release(pod_name, PodPhase::Evicted, at, msg)?;
+        if requeue {
+            let pod = self.pods.get_mut(pod_name).unwrap();
+            pod.status.phase = PodPhase::Pending;
+            pod.status.node = None;
+            pod.status.scheduled_at = None;
+            pod.status.started_at = None;
+            pod.status.evictions += 1;
+            self.pending.push(pod_name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Cancel a pod that is still Pending (holds no capacity): removes it
+    /// from the scheduling queue and marks it Evicted.
+    pub fn cancel_pending(&mut self, pod_name: &str, at: Time, msg: &str) -> anyhow::Result<()> {
+        self.bump();
+        let pod = self
+            .pods
+            .get_mut(pod_name)
+            .ok_or_else(|| anyhow::anyhow!("no pod {pod_name}"))?;
+        anyhow::ensure!(pod.status.phase == PodPhase::Pending, "pod {pod_name} not pending");
+        pod.status.phase = PodPhase::Evicted;
+        pod.status.finished_at = Some(at);
+        pod.status.message = msg.to_string();
+        self.pending.retain(|n| n != pod_name);
+        self.record(at, EventKind::PodEvicted, pod_name, msg);
+        Ok(())
+    }
+
+    fn release(&mut self, pod_name: &str, phase: PodPhase, at: Time, msg: &str) -> anyhow::Result<()> {
+        self.bump();
+        let pod = self
+            .pods
+            .get_mut(pod_name)
+            .ok_or_else(|| anyhow::anyhow!("no pod {pod_name}"))?;
+        anyhow::ensure!(
+            matches!(pod.status.phase, PodPhase::Scheduled | PodPhase::Running),
+            "pod {pod_name} not live (phase {:?})",
+            pod.status.phase
+        );
+        if let Some(node) = pod.status.node.clone() {
+            if let Some(free) = self.free.get_mut(&node) {
+                free.add(&pod.spec.requests);
+            }
+        }
+        pod.status.phase = phase;
+        pod.status.finished_at = Some(at);
+        pod.status.message = msg.to_string();
+        let kind = match phase {
+            PodPhase::Succeeded => EventKind::PodSucceeded,
+            PodPhase::Failed => EventKind::PodFailed,
+            PodPhase::Evicted => EventKind::PodEvicted,
+            _ => unreachable!(),
+        };
+        self.record(at, kind, pod_name, msg);
+        Ok(())
+    }
+
+    /// Remove terminal pods older than `before` (GC).
+    pub fn gc_finished(&mut self, before: Time) -> usize {
+        let victims: Vec<String> = self
+            .pods
+            .iter()
+            .filter(|(_, p)| {
+                p.status.phase.is_terminal()
+                    && p.status.finished_at.map(|t| t < before).unwrap_or(false)
+            })
+            .map(|(n, _)| n.clone())
+            .collect();
+        for v in &victims {
+            self.pods.remove(v);
+        }
+        victims.len()
+    }
+
+    // ------------------------------------------------------------ events
+
+    pub fn record(&mut self, at: Time, kind: EventKind, object: &str, message: &str) {
+        self.events.push(ClusterEvent { at, kind, object: object.to_string(), message: message.to_string() });
+    }
+
+    pub fn events(&self) -> &[ClusterEvent] {
+        &self.events
+    }
+
+    /// Aggregate resource usage: (used, allocatable) summed over nodes
+    /// (restricted to physical nodes when `physical_only`).
+    pub fn utilization(&self, physical_only: bool) -> (ResourceVec, ResourceVec) {
+        let mut total = ResourceVec::new();
+        let mut free = ResourceVec::new();
+        for n in self.nodes.values() {
+            if physical_only && n.virtual_node {
+                continue;
+            }
+            total.add(&n.allocatable);
+            if let Some(f) = self.free.get(&n.name) {
+                free.add(f);
+            }
+        }
+        let used = total.checked_sub(&free).unwrap_or_else(ResourceVec::new);
+        (used, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pod::Payload;
+    use crate::cluster::resources::{CPU, GPU};
+    use crate::gpu::{GpuDevice, GpuModel};
+
+    fn store_with_node() -> ClusterStore {
+        let mut s = ClusterStore::new();
+        let n = Node::physical("n1", 8, 32 << 30, 1 << 40, vec![GpuDevice::whole("g0", GpuModel::TeslaT4)]);
+        s.add_node(n, 0.0);
+        s
+    }
+
+    fn pod(name: &str, cpu: i64, gpu: i64) -> PodSpec {
+        let mut req = ResourceVec::cpu_millis(cpu);
+        if gpu > 0 {
+            req.set(GPU, gpu);
+        }
+        PodSpec::new(name, req, Payload::Sleep { duration: 5.0 })
+    }
+
+    #[test]
+    fn bind_reserves_and_finish_releases() {
+        let mut s = store_with_node();
+        s.create_pod(pod("p1", 2000, 1), 1.0);
+        s.bind("p1", "n1", 2.0).unwrap();
+        assert_eq!(s.free_on("n1").unwrap().get(CPU), 4000);
+        assert_eq!(s.free_on("n1").unwrap().get(GPU), 0);
+        s.mark_running("p1", 2.1).unwrap();
+        s.finish_pod("p1", PodPhase::Succeeded, 7.0, "done").unwrap();
+        assert_eq!(s.free_on("n1").unwrap().get(CPU), 6000);
+        assert_eq!(s.free_on("n1").unwrap().get(GPU), 1);
+        assert_eq!(s.pod("p1").unwrap().status.phase, PodPhase::Succeeded);
+    }
+
+    #[test]
+    fn bind_rejects_overcommit() {
+        let mut s = store_with_node();
+        s.create_pod(pod("p1", 2000, 1), 1.0);
+        s.create_pod(pod("p2", 2000, 1), 1.0);
+        s.bind("p1", "n1", 2.0).unwrap();
+        let err = s.bind("p2", "n1", 2.0).unwrap_err();
+        assert!(err.to_string().contains("insufficient"));
+        // p2 still pending
+        assert_eq!(s.pending_pods(), &["p2".to_string()]);
+    }
+
+    #[test]
+    fn evict_requeues_and_releases_capacity() {
+        let mut s = store_with_node();
+        s.create_pod(pod("p1", 2000, 0), 1.0);
+        s.bind("p1", "n1", 2.0).unwrap();
+        s.mark_running("p1", 2.5).unwrap();
+        s.evict_pod("p1", 3.0, true, "preempted by interactive").unwrap();
+        let p = s.pod("p1").unwrap();
+        assert_eq!(p.status.phase, PodPhase::Pending);
+        assert_eq!(p.status.evictions, 1);
+        assert_eq!(s.free_on("n1").unwrap().get(CPU), 6000);
+        assert!(s.pending_pods().contains(&"p1".to_string()));
+    }
+
+    #[test]
+    fn duplicate_pod_name_panics() {
+        let mut s = store_with_node();
+        s.create_pod(pod("p1", 100, 0), 0.0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.create_pod(pod("p1", 100, 0), 0.0);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn utilization_sums_nodes() {
+        let mut s = store_with_node();
+        s.create_pod(pod("p1", 3000, 0), 0.0);
+        s.bind("p1", "n1", 0.0).unwrap();
+        let (used, total) = s.utilization(true);
+        assert_eq!(used.get(CPU), 3000);
+        assert_eq!(total.get(CPU), 6000);
+    }
+
+    #[test]
+    fn gc_removes_old_terminal_pods() {
+        let mut s = store_with_node();
+        s.create_pod(pod("p1", 100, 0), 0.0);
+        s.bind("p1", "n1", 0.0).unwrap();
+        s.mark_running("p1", 0.0).unwrap();
+        s.finish_pod("p1", PodPhase::Succeeded, 5.0, "ok").unwrap();
+        assert_eq!(s.gc_finished(4.0), 0);
+        assert_eq!(s.gc_finished(6.0), 1);
+        assert!(s.pod("p1").is_none());
+    }
+
+    #[test]
+    fn recompute_free_after_allocatable_change() {
+        let mut s = ClusterStore::new();
+        let mut n = Node::physical("n1", 8, 32 << 30, 1 << 40, vec![GpuDevice::whole("g0", GpuModel::A100_40GB)]);
+        s.add_node(n.clone(), 0.0);
+        s.create_pod(pod("p1", 1000, 0), 0.0);
+        s.bind("p1", "n1", 0.0).unwrap();
+        // repartition the A100
+        n.gpus[0]
+            .repartition(crate::gpu::MigLayout::max_sharing(GpuModel::A100_40GB).unwrap())
+            .unwrap();
+        n.refresh_extended_resources();
+        *s.node_mut("n1").unwrap() = n;
+        s.recompute_free("n1");
+        let f = s.free_on("n1").unwrap();
+        assert_eq!(f.get("nvidia.com/mig-1g.5gb"), 7);
+        assert_eq!(f.get(CPU), 5000); // 6000 allocatable − 1000 reserved
+    }
+}

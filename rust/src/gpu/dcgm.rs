@@ -1,0 +1,113 @@
+//! DCGM-exporter-style GPU telemetry simulator.
+//!
+//! The real platform scrapes NVIDIA DCGM for per-GPU utilization, memory and
+//! power. Here telemetry is *derived from allocation state*: a device's
+//! utilization follows its allocated slice fraction plus stochastic jitter,
+//! power interpolates between idle and TDP with utilization. This gives the
+//! monitoring stack (E9) realistic series without real hardware.
+
+use super::mig::MigLayout;
+use super::models::GpuModel;
+use crate::util::rng::Rng;
+
+/// One telemetry sample for one physical device.
+#[derive(Debug, Clone)]
+pub struct GpuSample {
+    pub device: String,
+    pub model: GpuModel,
+    /// 0..=1 SM/compute utilization.
+    pub utilization: f64,
+    /// bytes in use
+    pub memory_used: u64,
+    pub power_watts: f64,
+    /// MIG instances currently allocated / total (0/0 when MIG off).
+    pub mig_used: u8,
+    pub mig_total: u8,
+}
+
+/// Stateful per-device telemetry generator.
+#[derive(Debug)]
+pub struct DcgmSimulator {
+    rng: Rng,
+}
+
+impl DcgmSimulator {
+    pub fn new(seed: u64) -> Self {
+        DcgmSimulator { rng: Rng::new(seed) }
+    }
+
+    /// Produce a sample given the device's allocation state.
+    ///
+    /// `alloc_fraction`: fraction of the device's compute currently allocated
+    /// (whole-GPU pod ⇒ 1.0; 3 of 7 MIG compute slices ⇒ 3/7).
+    /// `busy_fraction`: of the allocated share, how much is actively running
+    /// (payloads report this; idle notebooks hold allocations at ~0 busy).
+    pub fn sample(
+        &mut self,
+        device: &str,
+        layout: &MigLayout,
+        alloc_fraction: f64,
+        busy_fraction: f64,
+    ) -> GpuSample {
+        let model = layout.model;
+        let base = (alloc_fraction * busy_fraction).clamp(0.0, 1.0);
+        // measurement jitter + background driver activity
+        let jitter = self.rng.normal(0.0, 0.02);
+        let utilization = (base + jitter).clamp(0.0, 1.0);
+        let mem_frac = (alloc_fraction * 0.85 + self.rng.normal(0.0, 0.03)).clamp(0.0, 1.0);
+        let idle_w = model.tdp_watts() * 0.12;
+        let power = idle_w + (model.tdp_watts() - idle_w) * utilization
+            + self.rng.normal(0.0, 2.0);
+        let (mig_used, mig_total) = if layout.enabled() {
+            let total = layout.instances.len() as u8;
+            let used = (alloc_fraction * total as f64).round() as u8;
+            (used.min(total), total)
+        } else {
+            (0, 0)
+        };
+        GpuSample {
+            device: device.to_string(),
+            model,
+            utilization,
+            memory_used: (model.memory_bytes() as f64 * mem_frac) as u64,
+            power_watts: power.max(0.0),
+            mig_used,
+            mig_total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::mig::MigProfile;
+
+    #[test]
+    fn idle_device_reports_low_util_and_idle_power() {
+        let mut sim = DcgmSimulator::new(1);
+        let layout = MigLayout::new(GpuModel::TeslaT4, vec![]).unwrap();
+        let s = sim.sample("gpu0", &layout, 0.0, 0.0);
+        assert!(s.utilization < 0.1);
+        assert!(s.power_watts < GpuModel::TeslaT4.tdp_watts() * 0.3);
+    }
+
+    #[test]
+    fn busy_device_approaches_tdp() {
+        let mut sim = DcgmSimulator::new(2);
+        let layout = MigLayout::new(GpuModel::A100_40GB, vec![]).unwrap();
+        let s = sim.sample("gpu0", &layout, 1.0, 1.0);
+        assert!(s.utilization > 0.9);
+        assert!(s.power_watts > GpuModel::A100_40GB.tdp_watts() * 0.8);
+    }
+
+    #[test]
+    fn mig_sample_reports_instance_counts() {
+        let mut sim = DcgmSimulator::new(3);
+        let layout =
+            MigLayout::new(GpuModel::A100_40GB, vec![MigProfile::new(1, 5); 7]).unwrap();
+        let s = sim.sample("gpu0", &layout, 3.0 / 7.0, 1.0);
+        assert_eq!(s.mig_total, 7);
+        assert_eq!(s.mig_used, 3);
+        assert!(s.memory_used <= GpuModel::A100_40GB.memory_bytes());
+    }
+}

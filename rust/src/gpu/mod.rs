@@ -1,0 +1,74 @@
+//! GPU subsystem (DESIGN.md S11): the accelerator catalogue from the paper's
+//! §2 inventory, the NVIDIA MIG partitioner whose slice geometry bounds the
+//! "7 users per A100" claim, and the DCGM-style telemetry simulator.
+
+pub mod dcgm;
+pub mod mig;
+pub mod models;
+
+pub use mig::{MigLayout, MigProfile};
+pub use models::GpuModel;
+
+/// A physical accelerator installed in a node, with its current MIG layout.
+#[derive(Debug, Clone)]
+pub struct GpuDevice {
+    /// Stable device id, e.g. "cnaf-ai01-gpu3".
+    pub id: String,
+    pub model: GpuModel,
+    pub layout: MigLayout,
+}
+
+impl GpuDevice {
+    pub fn whole(id: impl Into<String>, model: GpuModel) -> Self {
+        GpuDevice { id: id.into(), model, layout: MigLayout::new(model, vec![]).unwrap() }
+    }
+
+    /// Apply a new MIG layout (admin repartition). Fails on invalid geometry.
+    pub fn repartition(&mut self, layout: MigLayout) -> Result<(), mig::MigError> {
+        let validated = MigLayout::new(self.model, layout.instances)?;
+        self.layout = validated;
+        Ok(())
+    }
+
+    /// Extended resources this device advertises to the node.
+    pub fn extended_resources(&self) -> crate::cluster::resources::ResourceVec {
+        if self.model.is_fpga() {
+            let mut r = crate::cluster::resources::ResourceVec::new();
+            let name = crate::cluster::resources::fpga_resource(
+                self.model.name().trim_start_matches("Alveo-"),
+            );
+            r.set(&name, 1);
+            r
+        } else {
+            self.layout.extended_resources()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_gpu_advertises_one_gpu() {
+        let d = GpuDevice::whole("g0", GpuModel::TeslaT4);
+        assert_eq!(d.extended_resources().get(crate::cluster::resources::GPU), 1);
+    }
+
+    #[test]
+    fn fpga_advertises_fpga_resource() {
+        let d = GpuDevice::whole("f0", GpuModel::AlveoU250);
+        assert_eq!(d.extended_resources().get("xilinx.com/fpga-u250"), 1);
+    }
+
+    #[test]
+    fn repartition_validates() {
+        let mut d = GpuDevice::whole("g0", GpuModel::A100_40GB);
+        let ok = MigLayout::max_sharing(GpuModel::A100_40GB).unwrap();
+        d.repartition(ok).unwrap();
+        assert_eq!(d.extended_resources().get("nvidia.com/mig-1g.5gb"), 7);
+        // invalid: A30 profile on A100
+        let bad = MigLayout { model: GpuModel::A100_40GB, instances: vec![MigProfile::new(1, 6)] };
+        assert!(d.repartition(bad).is_err());
+    }
+}

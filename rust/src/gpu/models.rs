@@ -1,0 +1,139 @@
+//! Accelerator catalogue — the exact hardware the paper's §2 inventory lists.
+//!
+//! Specs (memory, peak FP32/FP16 throughput) are from the public NVIDIA /
+//! AMD-Xilinx datasheets; they feed the DCGM-style telemetry simulator and
+//! the job cost model (simulated execution time = FLOPs / effective rate).
+
+/// NVIDIA GPU / AMD-Xilinx FPGA models deployed on the AI_INFN servers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuModel {
+    /// NVIDIA Tesla T4 (Server 1) — 16 GB, no MIG.
+    TeslaT4,
+    /// NVIDIA Quadro RTX 5000 (Servers 1 & 4) — 16 GB, no MIG.
+    Rtx5000,
+    /// NVIDIA A100 40 GB (Servers 2 & 3) — MIG-capable: 7 compute slices.
+    A100_40GB,
+    /// NVIDIA A30 (Server 2) — MIG-capable: 4 compute slices.
+    A30,
+    /// AMD-Xilinx Alveo U50 (Server 2).
+    AlveoU50,
+    /// AMD-Xilinx Alveo U250 (Servers 2 & 3).
+    AlveoU250,
+    /// AMD-Xilinx Alveo U55C (Server 4).
+    AlveoU55C,
+}
+
+impl GpuModel {
+    pub fn parse(s: &str) -> Option<GpuModel> {
+        Some(match s {
+            "T4" | "TeslaT4" | "tesla-t4" => GpuModel::TeslaT4,
+            "RTX5000" | "rtx-5000" => GpuModel::Rtx5000,
+            "A100" | "A100-40GB" | "a100" => GpuModel::A100_40GB,
+            "A30" | "a30" => GpuModel::A30,
+            "U50" | "u50" => GpuModel::AlveoU50,
+            "U250" | "u250" => GpuModel::AlveoU250,
+            "U55C" | "u55c" => GpuModel::AlveoU55C,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuModel::TeslaT4 => "Tesla-T4",
+            GpuModel::Rtx5000 => "RTX-5000",
+            GpuModel::A100_40GB => "A100-40GB",
+            GpuModel::A30 => "A30",
+            GpuModel::AlveoU50 => "Alveo-U50",
+            GpuModel::AlveoU250 => "Alveo-U250",
+            GpuModel::AlveoU55C => "Alveo-U55C",
+        }
+    }
+
+    pub fn is_fpga(&self) -> bool {
+        matches!(self, GpuModel::AlveoU50 | GpuModel::AlveoU250 | GpuModel::AlveoU55C)
+    }
+
+    /// Total device memory in bytes.
+    pub fn memory_bytes(&self) -> u64 {
+        let gb = match self {
+            GpuModel::TeslaT4 => 16,
+            GpuModel::Rtx5000 => 16,
+            GpuModel::A100_40GB => 40,
+            GpuModel::A30 => 24,
+            GpuModel::AlveoU50 => 8,
+            GpuModel::AlveoU250 => 64,
+            GpuModel::AlveoU55C => 16,
+        };
+        gb * (1 << 30)
+    }
+
+    /// Peak dense FP16/BF16 tensor throughput (TFLOPS) — the job cost model's
+    /// numerator for ML payloads.
+    pub fn peak_tensor_tflops(&self) -> f64 {
+        match self {
+            GpuModel::TeslaT4 => 65.0,
+            GpuModel::Rtx5000 => 89.2,
+            GpuModel::A100_40GB => 312.0,
+            GpuModel::A30 => 165.0,
+            // FPGA boards: not used for the ML payloads in this repro;
+            // nominal INT8 inference envelope for completeness.
+            GpuModel::AlveoU50 => 8.0,
+            GpuModel::AlveoU250 => 11.0,
+            GpuModel::AlveoU55C => 9.0,
+        }
+    }
+
+    /// MIG compute-slice capacity (0 = not MIG capable).
+    pub fn mig_compute_slices(&self) -> u8 {
+        match self {
+            GpuModel::A100_40GB => 7,
+            GpuModel::A30 => 4,
+            _ => 0,
+        }
+    }
+
+    /// Board power envelope in watts (telemetry simulation).
+    pub fn tdp_watts(&self) -> f64 {
+        match self {
+            GpuModel::TeslaT4 => 70.0,
+            GpuModel::Rtx5000 => 230.0,
+            GpuModel::A100_40GB => 400.0,
+            GpuModel::A30 => 165.0,
+            GpuModel::AlveoU50 => 75.0,
+            GpuModel::AlveoU250 => 225.0,
+            GpuModel::AlveoU55C => 150.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_for_inventory_names() {
+        for s in ["T4", "RTX5000", "A100", "A30", "U50", "U250", "U55C"] {
+            assert!(GpuModel::parse(s).is_some(), "{s}");
+        }
+        assert!(GpuModel::parse("H100").is_none());
+    }
+
+    #[test]
+    fn only_ampere_is_mig_capable() {
+        assert_eq!(GpuModel::A100_40GB.mig_compute_slices(), 7);
+        assert_eq!(GpuModel::A30.mig_compute_slices(), 4);
+        assert_eq!(GpuModel::TeslaT4.mig_compute_slices(), 0);
+        assert_eq!(GpuModel::Rtx5000.mig_compute_slices(), 0);
+    }
+
+    #[test]
+    fn fpga_flags() {
+        assert!(GpuModel::AlveoU250.is_fpga());
+        assert!(!GpuModel::A100_40GB.is_fpga());
+    }
+
+    #[test]
+    fn a100_memory_is_40gb() {
+        assert_eq!(GpuModel::A100_40GB.memory_bytes(), 40 << 30);
+    }
+}

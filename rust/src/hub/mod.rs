@@ -1,0 +1,12 @@
+//! JupyterHub-like interactive layer (DESIGN.md S13): token auth, the
+//! user/project registry, spawn profiles, the spawner, and the idle culler.
+
+pub mod auth;
+pub mod profiles;
+pub mod spawner;
+pub mod users;
+
+pub use auth::{AuthService, TokenValidator};
+pub use profiles::{default_catalogue, EnvKind, HwFlavor, Profile};
+pub use spawner::{Session, SpawnCtx, SpawnError, Spawner};
+pub use users::{Project, Registry, User};

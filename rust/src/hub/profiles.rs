@@ -1,0 +1,126 @@
+//! Session environment profiles (paper §2: preconfigured Conda
+//! environments / Apptainer images for TensorFlow, Torch, Keras, QML; or
+//! fully custom OCI images) and the hardware presets users pick in the
+//! JupyterHub spawn dialog.
+
+use crate::cluster::resources::{ResourceVec, CPU, GPU, MEMORY};
+use crate::gpu::MigProfile;
+
+/// Software environment source.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EnvKind {
+    /// Managed conda env distributed on the platform filesystem.
+    Conda { env_name: String },
+    /// Apptainer image from the managed area.
+    Apptainer { image: String },
+    /// User-supplied OCI image (max flexibility).
+    Oci { image: String },
+}
+
+/// Hardware flavor for the session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HwFlavor {
+    CpuOnly,
+    MigSlice(MigProfile),
+    WholeGpu,
+}
+
+/// A spawnable profile.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub name: String,
+    pub env: EnvKind,
+    pub hw: HwFlavor,
+    pub cpu_millis: i64,
+    pub mem_bytes: i64,
+}
+
+impl Profile {
+    /// Resource requests the spawned pod will carry.
+    ///
+    /// The production fleet keeps its A100s in the max-sharing 7×1g.5gb
+    /// layout (configs/ai_infn.json), so larger MIG asks are expressed as
+    /// *compute-slice equivalents*: a "3g" profile requests three 1g.5gb
+    /// instances (see DESIGN.md substitution table) rather than one
+    /// 3g.20gb instance that the fleet does not advertise.
+    pub fn requests(&self) -> ResourceVec {
+        let mut r = ResourceVec::new().with(CPU, self.cpu_millis).with(MEMORY, self.mem_bytes);
+        match self.hw {
+            HwFlavor::CpuOnly => {}
+            HwFlavor::MigSlice(p) => {
+                r.set(&MigProfile::new(1, 5).resource_name(), p.compute_slices as i64)
+            }
+            HwFlavor::WholeGpu => r.set(GPU, 1),
+        }
+        r
+    }
+}
+
+/// The platform's default profile catalogue (mirrors the hub spawn page).
+pub fn default_catalogue() -> Vec<Profile> {
+    vec![
+        Profile {
+            name: "cpu-small".into(),
+            env: EnvKind::Conda { env_name: "base".into() },
+            hw: HwFlavor::CpuOnly,
+            cpu_millis: 2000,
+            mem_bytes: 8 << 30,
+        },
+        Profile {
+            name: "tensorflow-mig-1g".into(),
+            env: EnvKind::Conda { env_name: "tensorflow-2.16".into() },
+            hw: HwFlavor::MigSlice(MigProfile::new(1, 5)),
+            cpu_millis: 4000,
+            mem_bytes: 16 << 30,
+        },
+        Profile {
+            name: "torch-mig-3g".into(),
+            env: EnvKind::Conda { env_name: "torch-2.4".into() },
+            hw: HwFlavor::MigSlice(MigProfile::new(3, 20)),
+            cpu_millis: 8000,
+            mem_bytes: 32 << 30,
+        },
+        Profile {
+            name: "qml-apptainer".into(),
+            env: EnvKind::Apptainer { image: "qml-pennylane.sif".into() },
+            hw: HwFlavor::MigSlice(MigProfile::new(1, 5)),
+            cpu_millis: 4000,
+            mem_bytes: 16 << 30,
+        },
+        Profile {
+            name: "full-a100".into(),
+            env: EnvKind::Oci { image: "user/custom:latest".into() },
+            hw: HwFlavor::WholeGpu,
+            cpu_millis: 16000,
+            mem_bytes: 64 << 30,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_has_conda_apptainer_oci() {
+        let c = default_catalogue();
+        assert!(c.iter().any(|p| matches!(p.env, EnvKind::Conda { .. })));
+        assert!(c.iter().any(|p| matches!(p.env, EnvKind::Apptainer { .. })));
+        assert!(c.iter().any(|p| matches!(p.env, EnvKind::Oci { .. })));
+    }
+
+    #[test]
+    fn requests_carry_mig_resource() {
+        let c = default_catalogue();
+        let mig = c.iter().find(|p| p.name == "tensorflow-mig-1g").unwrap();
+        assert_eq!(mig.requests().get("nvidia.com/mig-1g.5gb"), 1);
+        assert_eq!(mig.requests().get(CPU), 4000);
+        // a "3g" profile asks for 3 compute-slice equivalents on the 7×1g fleet
+        let three = c.iter().find(|p| p.name == "torch-mig-3g").unwrap();
+        assert_eq!(three.requests().get("nvidia.com/mig-1g.5gb"), 3);
+        let full = c.iter().find(|p| p.name == "full-a100").unwrap();
+        assert_eq!(full.requests().get(GPU), 1);
+        let cpu = c.iter().find(|p| p.name == "cpu-small").unwrap();
+        assert_eq!(cpu.requests().get(GPU), 0);
+    }
+}

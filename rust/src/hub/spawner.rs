@@ -1,0 +1,400 @@
+//! The JupyterHub-like spawner: turns a (user, profile) request into a
+//! provisioned session — home/project volumes on the platform filesystem,
+//! an IAM token, the automated rclone bucket mount, a Kueue workload in the
+//! interactive queue, and finally the session pod.
+//!
+//! This is the paper's §2 spawn-time sequence: "At spawn time, JupyterHub is
+//! configured to create the user's home directories and project-dedicated
+//! shared volumes … the mount operation is automated at spawn time."
+
+use crate::cluster::pod::{Payload, PodSpec};
+use crate::cluster::store::ClusterStore;
+use crate::hub::auth::AuthService;
+use crate::hub::profiles::Profile;
+use crate::hub::users::Registry;
+use crate::queue::kueue::{Kueue, PriorityClass, WorkloadState};
+use crate::sim::clock::Time;
+use crate::storage::nfs::NfsServer;
+use crate::storage::object::ObjectStore;
+use crate::storage::rclone::RcloneMount;
+
+/// Default per-user home quota (50 GiB) and project share quota (500 GiB).
+pub const HOME_QUOTA: u64 = 50 << 30;
+pub const PROJECT_QUOTA: u64 = 500 << 30;
+
+/// A live session handle.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub id: String,
+    pub user: String,
+    pub profile: String,
+    pub pod_name: String,
+    pub workload_name: String,
+    pub token: String,
+    pub mount: Option<RcloneMount>,
+    pub started_at: Time,
+    pub last_activity: Time,
+}
+
+/// Everything the spawner touches (borrowed from the platform facade).
+pub struct SpawnCtx<'a> {
+    pub registry: &'a mut Registry,
+    pub auth: &'a mut AuthService,
+    pub nfs: &'a mut NfsServer,
+    pub objects: &'a mut ObjectStore,
+    pub kueue: &'a mut Kueue,
+    pub cluster: &'a mut ClusterStore,
+}
+
+/// Spawn failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum SpawnError {
+    #[error("unknown user {0}")]
+    UnknownUser(String),
+    #[error("session quota: user {0} already has an active session")]
+    AlreadyActive(String),
+    #[error("admission pending: interactive queue is saturated")]
+    AdmissionPending,
+    #[error(transparent)]
+    Other(#[from] anyhow::Error),
+}
+
+/// The spawner service.
+#[derive(Debug)]
+pub struct Spawner {
+    pub hub_queue: String,
+    pub token_ttl: Time,
+    pub idle_timeout: Time,
+    next_id: u64,
+    sessions: Vec<Session>,
+}
+
+impl Spawner {
+    pub fn new(hub_queue: &str) -> Self {
+        Spawner {
+            hub_queue: hub_queue.to_string(),
+            token_ttl: 12.0 * 3600.0,
+            idle_timeout: 2.0 * 3600.0,
+            next_id: 0,
+            sessions: Vec::new(),
+        }
+    }
+
+    pub fn sessions(&self) -> &[Session] {
+        &self.sessions
+    }
+
+    pub fn active_session_for(&self, user: &str) -> Option<&Session> {
+        self.sessions.iter().find(|s| s.user == user)
+    }
+
+    /// Full spawn sequence. On success the pod is Pending in the cluster
+    /// store (the platform's scheduler pass will bind it) and the Kueue
+    /// workload is Admitted.
+    pub fn spawn(
+        &mut self,
+        ctx: &mut SpawnCtx,
+        user: &str,
+        profile: &Profile,
+        at: Time,
+    ) -> Result<Session, SpawnError> {
+        let u = ctx
+            .registry
+            .user(user)
+            .ok_or_else(|| SpawnError::UnknownUser(user.to_string()))?
+            .clone();
+        if self.active_session_for(user).is_some() {
+            return Err(SpawnError::AlreadyActive(user.to_string()));
+        }
+
+        // 1. volumes: home + per-project shares (idempotent)
+        if ctx.nfs.volume(&u.home_volume).is_none() {
+            ctx.nfs
+                .create_volume(&u.home_volume, HOME_QUOTA)
+                .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        }
+        for p in &u.projects {
+            let vol = &ctx
+                .registry
+                .project(p)
+                .ok_or_else(|| anyhow::anyhow!("dangling project {p}"))?
+                .shared_volume
+                .clone();
+            if ctx.nfs.volume(vol).is_none() {
+                ctx.nfs
+                    .create_volume(vol, PROJECT_QUOTA)
+                    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+            }
+        }
+
+        // 2. token (hub login credential, reused by the rclone mount)
+        let token = ctx.auth.issue(user, self.token_ttl, at);
+
+        // 3. bucket + automated mount
+        let bucket = format!("{user}-bucket");
+        if ctx.objects.create_bucket(&bucket, user).is_err() {
+            // already exists — fine
+        }
+        let mount = RcloneMount::mount(ctx.auth, &token, &bucket, &format!("/home/{user}/bucket")).ok();
+
+        // 4. Kueue admission in the interactive queue
+        self.next_id += 1;
+        let id = format!("session-{user}-{:04}", self.next_id);
+        let requests = profile.requests();
+        let wl_name = format!("wl-{id}");
+        ctx.kueue
+            .submit(&wl_name, &self.hub_queue, PriorityClass::Interactive, requests.clone(), at)
+            .map_err(SpawnError::Other)?;
+        let result = ctx.kueue.admit_pass(at);
+        let admitted = ctx
+            .kueue
+            .workload(&wl_name)
+            .map(|w| w.state == WorkloadState::Admitted)
+            .unwrap_or(false);
+        let _ = result;
+        if !admitted {
+            // leave it queued; caller may retry/monitor
+            return Err(SpawnError::AdmissionPending);
+        }
+
+        // 5. the session pod
+        let pod_name = format!("jupyter-{id}");
+        let spec = PodSpec::new(
+            pod_name.clone(),
+            requests,
+            Payload::Session { idle_after: self.idle_timeout },
+        )
+        .with_label("app", "jupyterlab")
+        .with_label("aiinfn/session", &id)
+        .with_priority(PriorityClass::Interactive.value())
+        .with_owner(user, u.projects.first().map(|s| s.as_str()).unwrap_or("none"))
+        .in_namespace("hub");
+        ctx.cluster.create_pod(spec, at);
+
+        let session = Session {
+            id: id.clone(),
+            user: user.to_string(),
+            profile: profile.name.clone(),
+            pod_name,
+            workload_name: wl_name,
+            token,
+            mount,
+            started_at: at,
+            last_activity: at,
+        };
+        self.sessions.push(session.clone());
+        Ok(session)
+    }
+
+    /// Record user activity (resets the idle culler timer).
+    pub fn touch(&mut self, session_id: &str, at: Time) {
+        if let Some(s) = self.sessions.iter_mut().find(|s| s.id == session_id) {
+            s.last_activity = at;
+        }
+    }
+
+    /// Stop a session: finish the workload, terminate the pod.
+    pub fn stop(
+        &mut self,
+        ctx: &mut SpawnCtx,
+        session_id: &str,
+        at: Time,
+        reason: &str,
+    ) -> anyhow::Result<()> {
+        let idx = self
+            .sessions
+            .iter()
+            .position(|s| s.id == session_id)
+            .ok_or_else(|| anyhow::anyhow!("no session {session_id}"))?;
+        let s = self.sessions.remove(idx);
+        ctx.kueue.finish(&s.workload_name).ok();
+        if let Some(pod) = ctx.cluster.pod(&s.pod_name) {
+            match pod.status.phase {
+                crate::cluster::pod::PodPhase::Running
+                | crate::cluster::pod::PodPhase::Scheduled => {
+                    ctx.cluster
+                        .finish_pod(&s.pod_name, crate::cluster::pod::PodPhase::Succeeded, at, reason)?;
+                }
+                crate::cluster::pod::PodPhase::Pending => {
+                    // never scheduled: mark failed-terminal via evict(no requeue)
+                    // Pending pods hold no capacity; just record.
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// The idle culler (paper: sessions are reclaimed to keep accelerators
+    /// available). Returns culled session ids.
+    pub fn cull_idle(&mut self, ctx: &mut SpawnCtx, at: Time) -> Vec<String> {
+        let victims: Vec<String> = self
+            .sessions
+            .iter()
+            .filter(|s| at - s.last_activity >= self.idle_timeout)
+            .map(|s| s.id.clone())
+            .collect();
+        for v in &victims {
+            self.stop(ctx, v, at, "idle-culled").ok();
+        }
+        victims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::Node;
+    use crate::cluster::resources::{ResourceVec, GPU};
+    use crate::gpu::{GpuDevice, GpuModel};
+    use crate::hub::profiles::default_catalogue;
+    use crate::queue::kueue::{ClusterQueue, LocalQueue};
+
+    struct World {
+        registry: Registry,
+        auth: AuthService,
+        nfs: NfsServer,
+        objects: ObjectStore,
+        kueue: Kueue,
+        cluster: ClusterStore,
+        spawner: Spawner,
+    }
+
+    fn world() -> World {
+        let mut registry = Registry::new();
+        registry.register_user("alice", 0.0).unwrap();
+        registry.create_project("lhcb", 100.0).unwrap();
+        registry.add_member("lhcb", "alice").unwrap();
+        let mut kueue = Kueue::new();
+        kueue.add_cluster_queue(ClusterQueue {
+            name: "interactive-cq".into(),
+            cohort: None,
+            nominal: ResourceVec::cpu_millis(64_000)
+                .with(crate::cluster::resources::MEMORY, 512 << 30)
+                .with(GPU, 2)
+                .with("nvidia.com/mig-1g.5gb", 7),
+            used: ResourceVec::new(),
+            can_borrow: false,
+            can_lend: true,
+        });
+        kueue.add_local_queue(LocalQueue { name: "hub".into(), cluster_queue: "interactive-cq".into() });
+        let mut cluster = ClusterStore::new();
+        cluster.add_node(
+            Node::physical("n1", 64, 512 << 30, 10 << 40, vec![GpuDevice::whole("g0", GpuModel::TeslaT4)]),
+            0.0,
+        );
+        World {
+            registry,
+            auth: AuthService::new("seed"),
+            nfs: NfsServer::new(),
+            objects: ObjectStore::new(),
+            kueue,
+            cluster,
+            spawner: Spawner::new("hub"),
+        }
+    }
+
+    /// Split-borrow helper: yields (SpawnCtx, &mut Spawner).
+    macro_rules! split {
+        ($w:expr) => {{
+            let World { registry, auth, nfs, objects, kueue, cluster, spawner } = $w;
+            (SpawnCtx { registry, auth, nfs, objects, kueue, cluster }, spawner)
+        }};
+    }
+
+    #[test]
+    fn spawn_provisions_everything() {
+        let mut w = world();
+        let profile = default_catalogue().into_iter().find(|p| p.name == "cpu-small").unwrap();
+        let s = {
+            let (mut c, spawner) = split!(&mut w);
+            spawner.spawn(&mut c, "alice", &profile, 10.0).unwrap()
+        };
+        // volumes created
+        assert!(w.nfs.volume("home-alice").is_some());
+        assert!(w.nfs.volume("proj-lhcb").is_some());
+        // token valid
+        use crate::hub::auth::TokenValidator;
+        assert_eq!(w.auth.validate(&s.token), Some("alice".into()));
+        // mount established
+        assert!(s.mount.is_some());
+        // kueue admitted + pod pending
+        assert_eq!(
+            w.kueue.workload(&s.workload_name).unwrap().state,
+            WorkloadState::Admitted
+        );
+        assert!(w.cluster.pod(&s.pod_name).is_some());
+    }
+
+    #[test]
+    fn double_spawn_rejected() {
+        let mut w = world();
+        let profile = default_catalogue().into_iter().find(|p| p.name == "cpu-small").unwrap();
+        {
+            let (mut c, spawner) = split!(&mut w);
+            spawner.spawn(&mut c, "alice", &profile, 0.0).unwrap();
+        }
+        let (mut c, spawner) = split!(&mut w);
+        let e = spawner.spawn(&mut c, "alice", &profile, 1.0).unwrap_err();
+        assert!(matches!(e, SpawnError::AlreadyActive(_)));
+    }
+
+    #[test]
+    fn unknown_user_rejected() {
+        let mut w = world();
+        let profile = default_catalogue().remove(0);
+        let (mut c, spawner) = split!(&mut w);
+        assert!(matches!(
+            spawner.spawn(&mut c, "mallory", &profile, 0.0),
+            Err(SpawnError::UnknownUser(_))
+        ));
+    }
+
+    #[test]
+    fn gpu_session_blocks_when_quota_full_then_admits() {
+        let mut w = world();
+        // whole-GPU profile; quota has 2 whole GPUs
+        let profile = default_catalogue().into_iter().find(|p| p.name == "full-a100").unwrap();
+        w.registry.register_user("bob", 0.0).unwrap();
+        w.registry.register_user("carol", 0.0).unwrap();
+        {
+            let (mut c, spawner) = split!(&mut w);
+            spawner.spawn(&mut c, "alice", &profile, 0.0).unwrap();
+            spawner.spawn(&mut c, "bob", &profile, 0.0).unwrap();
+            let e = spawner.spawn(&mut c, "carol", &profile, 0.0).unwrap_err();
+            assert!(matches!(e, SpawnError::AdmissionPending));
+        }
+        // alice stops → carol can retry
+        let sid = w.spawner.active_session_for("alice").unwrap().id.clone();
+        {
+            let (mut c, spawner) = split!(&mut w);
+            spawner.stop(&mut c, &sid, 100.0, "logout").unwrap();
+        }
+        // carol's earlier workload is still queued; the admit pass releases it
+        let r = w.kueue.admit_pass(101.0);
+        assert_eq!(r.admitted.len(), 1);
+    }
+
+    #[test]
+    fn culler_reclaims_idle_sessions() {
+        let mut w = world();
+        w.spawner.idle_timeout = 100.0;
+        let profile = default_catalogue().remove(0);
+        let sid = {
+            let (mut c, spawner) = split!(&mut w);
+            spawner.spawn(&mut c, "alice", &profile, 0.0).unwrap().id
+        };
+        // activity at t=50 postpones culling
+        w.spawner.touch(&sid, 50.0);
+        {
+            let (mut c, spawner) = split!(&mut w);
+            assert!(spawner.cull_idle(&mut c, 120.0).is_empty());
+            let culled = spawner.cull_idle(&mut c, 151.0);
+            assert_eq!(culled, vec![sid.clone()]);
+        }
+        assert!(w.spawner.active_session_for("alice").is_none());
+        // quota released
+        let (used, _) = w.kueue.quota_utilization();
+        assert!(used.is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! User and project registry (paper §2: "78 INFN Cloud users registered to
+//! the AI_INFN platform and 20 multi-user research projects were allocated").
+
+use std::collections::BTreeMap;
+
+/// A registered platform user.
+#[derive(Debug, Clone)]
+pub struct User {
+    pub name: String,
+    pub projects: Vec<String>,
+    pub home_volume: String,
+    pub registered_at: f64,
+}
+
+/// A multi-user research project with a shared volume and a GPU-hours grant.
+#[derive(Debug, Clone)]
+pub struct Project {
+    pub name: String,
+    pub shared_volume: String,
+    pub gpu_hours_grant: f64,
+    pub members: Vec<String>,
+}
+
+/// The registry.
+#[derive(Debug, Default)]
+pub struct Registry {
+    users: BTreeMap<String, User>,
+    projects: BTreeMap<String, Project>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register_user(&mut self, name: &str, at: f64) -> anyhow::Result<&User> {
+        anyhow::ensure!(!self.users.contains_key(name), "user {name} already registered");
+        self.users.insert(
+            name.to_string(),
+            User {
+                name: name.to_string(),
+                projects: Vec::new(),
+                home_volume: format!("home-{name}"),
+                registered_at: at,
+            },
+        );
+        Ok(&self.users[name])
+    }
+
+    pub fn create_project(&mut self, name: &str, gpu_hours_grant: f64) -> anyhow::Result<&Project> {
+        anyhow::ensure!(!self.projects.contains_key(name), "project {name} exists");
+        self.projects.insert(
+            name.to_string(),
+            Project {
+                name: name.to_string(),
+                shared_volume: format!("proj-{name}"),
+                gpu_hours_grant,
+                members: Vec::new(),
+            },
+        );
+        Ok(&self.projects[name])
+    }
+
+    pub fn add_member(&mut self, project: &str, user: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(self.users.contains_key(user), "no user {user}");
+        let p = self
+            .projects
+            .get_mut(project)
+            .ok_or_else(|| anyhow::anyhow!("no project {project}"))?;
+        if !p.members.iter().any(|m| m == user) {
+            p.members.push(user.to_string());
+        }
+        let u = self.users.get_mut(user).unwrap();
+        if !u.projects.iter().any(|x| x == project) {
+            u.projects.push(project.to_string());
+        }
+        Ok(())
+    }
+
+    pub fn user(&self, name: &str) -> Option<&User> {
+        self.users.get(name)
+    }
+
+    pub fn project(&self, name: &str) -> Option<&Project> {
+        self.projects.get(name)
+    }
+
+    pub fn user_count(&self) -> usize {
+        self.users.len()
+    }
+
+    pub fn project_count(&self) -> usize {
+        self.projects.len()
+    }
+
+    pub fn users(&self) -> impl Iterator<Item = &User> {
+        self.users.values()
+    }
+
+    pub fn projects(&self) -> impl Iterator<Item = &Project> {
+        self.projects.values()
+    }
+
+    /// Seed the paper's population: 78 users across 20 projects (Zipf-ish
+    /// membership so a few projects are large, like real research groups).
+    pub fn seed_paper_population(&mut self) {
+        for p in 0..20 {
+            self.create_project(&format!("project{p:02}"), 5000.0).unwrap();
+        }
+        for u in 0..78 {
+            let name = format!("user{u:03}");
+            self.register_user(&name, 0.0).unwrap();
+            self.add_member(&format!("project{:02}", u % 20), &name).unwrap();
+            // heavier users join a second project
+            if u % 3 == 0 {
+                self.add_member(&format!("project{:02}", (u / 3) % 20), &name).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_membership() {
+        let mut r = Registry::new();
+        r.register_user("alice", 0.0).unwrap();
+        r.create_project("lhcb", 1000.0).unwrap();
+        r.add_member("lhcb", "alice").unwrap();
+        assert_eq!(r.user("alice").unwrap().projects, vec!["lhcb"]);
+        assert_eq!(r.project("lhcb").unwrap().members, vec!["alice"]);
+        // idempotent add
+        r.add_member("lhcb", "alice").unwrap();
+        assert_eq!(r.project("lhcb").unwrap().members.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_and_unknown_rejected() {
+        let mut r = Registry::new();
+        r.register_user("alice", 0.0).unwrap();
+        assert!(r.register_user("alice", 1.0).is_err());
+        assert!(r.add_member("nope", "alice").is_err());
+        assert!(r.add_member("lhcb", "ghost").is_err());
+    }
+
+    #[test]
+    fn paper_population_counts() {
+        let mut r = Registry::new();
+        r.seed_paper_population();
+        assert_eq!(r.user_count(), 78);
+        assert_eq!(r.project_count(), 20);
+        // every user belongs to >= 1 project
+        assert!(r.users().all(|u| !u.projects.is_empty()));
+        // every project has >= 1 member
+        assert!(r.projects().all(|p| !p.members.is_empty()));
+    }
+}

@@ -1,0 +1,57 @@
+//! # aiinfn — the AI_INFN platform, reproduced as an executable system
+//!
+//! This crate reproduces the system described in *“The AI_INFN Platform:
+//! Artificial Intelligence Development in the Cloud”* (EuCAIFCon 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the platform coordinator: a Kubernetes-like
+//!   cluster model with NVIDIA-MIG-aware GPU scheduling ([`cluster`],
+//!   [`gpu`]), a Kueue-like opportunistic batch queue with interactive-first
+//!   preemption ([`queue`]), a JupyterHub-like session spawner ([`hub`]),
+//!   storage services (NFS model, object store, Borg-like encrypted
+//!   deduplicating backup — [`storage`]), a Snakemake-like workflow engine
+//!   ([`workflow`]), Prometheus-like monitoring and accounting
+//!   ([`monitoring`]), and a Virtual-Kubelet/InterLink offloading layer
+//!   federating HTCondor/SLURM/Podman site simulators ([`offload`]).
+//! * **Layer 2 / Layer 1 (build time, `python/`)** — the user workload: a
+//!   transformer LM with Pallas flash-attention / fused-MLP kernels, lowered
+//!   AOT to HLO text artifacts.
+//! * **Runtime bridge** — [`runtime`] loads the artifacts through the PJRT C
+//!   API (`xla` crate) and executes them from the Rust hot path. Python never
+//!   runs on the request path.
+//!
+//! The crate is usable as a library (see `examples/`) and ships a launcher
+//! binary (`aiinfn`). Simulation and real execution share one code path: the
+//! platform is driven by a [`sim::Clock`] that either advances virtually
+//! (discrete-event mode, used by the benchmarks) or tracks wall time while
+//! job payloads execute real HLO through PJRT (hardware-in-the-loop mode,
+//! used by the end-to-end training example).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for measured results.
+
+pub mod baseline;
+pub mod cluster;
+pub mod gpu;
+pub mod hub;
+pub mod monitoring;
+pub mod offload;
+pub mod platform;
+pub mod queue;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;
+pub mod workflow;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::cluster::pod::{PodPhase, PodSpec};
+    pub use crate::cluster::resources::ResourceVec;
+    pub use crate::gpu::mig::MigProfile;
+    pub use crate::platform::config::PlatformConfig;
+    pub use crate::platform::facade::Platform;
+    pub use crate::queue::kueue::PriorityClass;
+    pub use crate::sim::clock::Clock;
+    pub use crate::util::json::Json;
+}

@@ -1,0 +1,305 @@
+//! `aiinfn` — the platform launcher.
+//!
+//! Subcommands:
+//!   up        boot the platform from a config and run a simulated campaign
+//!   inventory print the §2 hardware inventory table (E1)
+//!   spawn     spawn an interactive session and show its provisioning
+//!   submit    submit batch jobs and follow them to completion
+//!   train     run REAL transformer training through the PJRT runtime
+//!   report    accounting + dashboard for a simulated campaign
+//!   validate  quick self-check: artifacts load and execute
+
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::hub::profiles::default_catalogue;
+use aiinfn::monitoring::{account, dashboard};
+use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::queue::kueue::PriorityClass;
+use aiinfn::runtime::{Engine, Manifest, TrainRunner};
+use aiinfn::sim::trace::{generate, ArrivalKind, TraceConfig};
+use aiinfn::util::args::Cli;
+use aiinfn::util::{fmt_bytes, logging};
+
+fn cli() -> Cli {
+    Cli::new("aiinfn", "AI_INFN platform reproduction (EuCAIFCon 2025)")
+        .subcommand("up", "boot the platform and run a simulated campaign")
+        .subcommand("inventory", "print the hardware inventory (paper §2)")
+        .subcommand("spawn", "spawn an interactive JupyterLab session")
+        .subcommand("submit", "submit batch jobs and follow them")
+        .subcommand("train", "run real transformer training via PJRT")
+        .subcommand("report", "accounting + dashboards for a campaign")
+        .subcommand("validate", "check artifacts load and execute")
+        .opt("config", "configs/ai_infn.json", "platform config path")
+        .opt("hours", "24", "campaign length in simulated hours")
+        .opt("user", "user001", "acting user")
+        .opt("profile", "tensorflow-mig-1g", "spawn profile name")
+        .opt("jobs", "10", "number of batch jobs to submit")
+        .opt("preset", "small", "model preset for `train`")
+        .opt("steps", "200", "training steps for `train`")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .flag("pallas", "use the Pallas-kernel artifact variant")
+        .flag("offload", "allow jobs to offload to the federation")
+}
+
+fn load_config(path: &str) -> anyhow::Result<PlatformConfig> {
+    if std::path::Path::new(path).exists() {
+        PlatformConfig::load(path)
+    } else {
+        PlatformConfig::load(&default_config_path())
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    logging::init();
+    let args = match cli().parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    match args.subcommand.as_deref() {
+        Some("inventory") => inventory(&args),
+        Some("up") => up(&args),
+        Some("spawn") => spawn(&args),
+        Some("submit") => submit(&args),
+        Some("train") => train(&args),
+        Some("report") => report(&args),
+        Some("validate") => validate(&args),
+        _ => {
+            println!("{}", cli().usage());
+            Ok(())
+        }
+    }
+}
+
+fn inventory(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
+    let cfg = load_config(args.get("config").unwrap())?;
+    println!("AI_INFN platform inventory ({}):", cfg.name);
+    println!("{:<12} {:>5} {:>6} {:>8} {:>8}  gpus", "server", "year", "cores", "memory", "nvme");
+    for s in &cfg.servers {
+        let gpus: Vec<String> = s.gpus.iter().map(|g| g.name().to_string()).collect();
+        println!(
+            "{:<12} {:>5} {:>6} {:>8} {:>8}  {}",
+            s.name,
+            s.year,
+            s.cpu_cores,
+            fmt_bytes((s.memory_gb as u64) << 30),
+            fmt_bytes((s.nvme_tb as u64) << 40),
+            gpus.join(",")
+        );
+    }
+    let (cores, mem, nvme, gpus, fpgas) = cfg.totals();
+    println!(
+        "TOTAL: {cores} cores, {}, {} NVMe, {gpus} NVIDIA GPUs, {fpgas} FPGA boards",
+        fmt_bytes(mem as u64),
+        fmt_bytes(nvme as u64)
+    );
+    let nodes = cfg.build_nodes()?;
+    let mig: i64 = nodes.iter().map(|n| n.allocatable.get("nvidia.com/mig-1g.5gb")).sum();
+    println!("MIG: {mig} × 1g.5gb slices advertised (A100 fleet, 7 users/GPU)");
+    Ok(())
+}
+
+fn up(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
+    let cfg = load_config(args.get("config").unwrap())?;
+    let hours = args.get_f64("hours")?;
+    let mut p = Platform::bootstrap(cfg)?;
+    println!("platform up: {} nodes ({} virtual)", p.store.borrow().node_count(), p.vks.len());
+
+    // replay a synthetic campaign
+    let trace = generate(&TraceConfig::default(), hours * 3600.0);
+    println!("replaying {} arrivals over {hours} h of simulated operation ...", trace.len());
+    let catalogue = default_catalogue();
+    let mut ti = 0usize;
+    let horizon = hours * 3600.0;
+    while p.now() < horizon {
+        let until = (p.now() + 60.0).min(horizon);
+        while ti < trace.len() && trace[ti].at <= until {
+            let a = &trace[ti];
+            ti += 1;
+            match a.kind {
+                ArrivalKind::Interactive => {
+                    let prof = match a.gpu {
+                        aiinfn::sim::trace::GpuDemand::None => &catalogue[0],
+                        aiinfn::sim::trace::GpuDemand::MigSlice(1) => &catalogue[1],
+                        aiinfn::sim::trace::GpuDemand::MigSlice(_) => &catalogue[2],
+                        aiinfn::sim::trace::GpuDemand::WholeGpu => &catalogue[4],
+                    };
+                    let _ = p.spawn_session(&a.user, prof);
+                }
+                ArrivalKind::Batch => {
+                    let _ = p.submit_ml_training(
+                        &a.user,
+                        &a.project,
+                        a.duration * 10e12,
+                        a.gpu,
+                        args.flag("offload"),
+                    );
+                }
+            }
+        }
+        p.run_for(until - p.now(), 30.0);
+    }
+    println!("campaign done at t={:.0}s", p.now());
+    println!("pods: {:?}", p.pod_phase_counts());
+    println!("accelerator utilization now: {:.1}%", p.accelerator_utilization() * 100.0);
+    println!(
+        "evictions={} offloaded={} local_done={} remote_done={}",
+        p.metrics.evictions,
+        p.metrics.offloaded_pods,
+        p.metrics.local_completions,
+        p.metrics.remote_completions
+    );
+    println!("{}", dashboard::overview(&p.tsdb, p.now(), 6.0 * 3600.0));
+    Ok(())
+}
+
+fn spawn(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
+    let cfg = load_config(args.get("config").unwrap())?;
+    let mut p = Platform::bootstrap(cfg)?;
+    let want = args.get("profile").unwrap();
+    let profile = default_catalogue()
+        .into_iter()
+        .find(|x| x.name == want)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile {want}"))?;
+    let user = args.get("user").unwrap();
+    let sid = p.spawn_session(user, &profile).map_err(|e| anyhow::anyhow!("{e}"))?;
+    p.run_for(120.0, 5.0);
+    let s = p.spawner.sessions().iter().find(|s| s.id == sid).unwrap().clone();
+    println!("session {sid} for {user}:");
+    println!("  profile:   {}", s.profile);
+    println!(
+        "  pod:       {} ({:?})",
+        s.pod_name,
+        p.store.borrow().pod(&s.pod_name).unwrap().status.phase
+    );
+    println!("  workload:  {}", s.workload_name);
+    println!("  token:     {}...", &s.token[..24.min(s.token.len())]);
+    println!("  mount:     {:?}", s.mount.as_ref().map(|m| &m.mount_point));
+    println!(
+        "  home vol:  home-{user} (quota {})",
+        fmt_bytes(aiinfn::hub::spawner::HOME_QUOTA)
+    );
+    Ok(())
+}
+
+fn submit(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
+    let cfg = load_config(args.get("config").unwrap())?;
+    let mut p = Platform::bootstrap(cfg)?;
+    let n = args.get_u64("jobs")?;
+    let user = args.get("user").unwrap().to_string();
+    let mut wls = Vec::new();
+    for i in 0..n {
+        let wl = p.submit_batch(
+            &user,
+            "project00",
+            ResourceVec::cpu_millis(8000)
+                .with(MEMORY, 16 << 30)
+                .with("nvidia.com/mig-1g.5gb", 1),
+            600.0 + 60.0 * i as f64,
+            PriorityClass::Batch,
+            args.flag("offload"),
+        )?;
+        wls.push(wl);
+    }
+    println!("submitted {n} jobs; running until completion ...");
+    let mut guard = 0;
+    loop {
+        p.run_for(300.0, 30.0);
+        let done = wls
+            .iter()
+            .filter(|w| {
+                matches!(
+                    p.kueue.workload(w).map(|x| x.state.clone()),
+                    Some(aiinfn::queue::kueue::WorkloadState::Finished)
+                )
+            })
+            .count();
+        println!(
+            "t={:>8.0}s  {done}/{n} finished, util={:.0}%",
+            p.now(),
+            p.accelerator_utilization() * 100.0
+        );
+        if done as u64 == n {
+            break;
+        }
+        guard += 1;
+        anyhow::ensure!(guard < 1000, "jobs did not converge");
+    }
+    let waits = &p.metrics.batch_wait_times;
+    let mean = waits.iter().sum::<f64>() / waits.len().max(1) as f64;
+    println!("mean queue wait: {mean:.1}s; evictions: {}", p.metrics.evictions);
+    Ok(())
+}
+
+fn train(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
+    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    let preset = args.get("preset").unwrap();
+    let steps = args.get_u64("steps")? as u32;
+    let mut eng = Engine::cpu()?;
+    println!("PJRT platform: {}", eng.platform());
+    let mut tr = TrainRunner::new(&mut eng, &manifest, preset, args.flag("pallas"))?;
+    println!(
+        "training preset={preset} params={} flops/step={:.2e} pallas={}",
+        tr.param_count(),
+        tr.flops_per_step,
+        args.flag("pallas")
+    );
+    let t0 = std::time::Instant::now();
+    for s in 1..=steps {
+        let loss = tr.step(&mut eng)?;
+        if s == 1 || s % 20 == 0 {
+            let dt = t0.elapsed().as_secs_f64();
+            println!("step {s:>5}  loss {loss:.4}  ({:.2} steps/s)", s as f64 / dt);
+        }
+    }
+    let stats = eng.stats();
+    println!(
+        "done: {} steps in {:.1}s (compile {:.1}s, execute {:.1}s)",
+        steps,
+        t0.elapsed().as_secs_f64(),
+        stats.compile_secs,
+        stats.execute_secs
+    );
+    Ok(())
+}
+
+fn report(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
+    let cfg = load_config(args.get("config").unwrap())?;
+    let hours = args.get_f64("hours")?;
+    let mut p = Platform::bootstrap(cfg)?;
+    let trace = generate(&TraceConfig::default(), hours * 3600.0);
+    for a in &trace {
+        if a.kind == ArrivalKind::Batch {
+            let _ = p.submit_ml_training(&a.user, &a.project, a.duration * 5e12, a.gpu, true);
+        }
+    }
+    p.run_for(hours * 3600.0, 60.0);
+    let r = account(&p.store.borrow(), p.now());
+    println!("{}", r.render(&format!("accounting over {hours} h")));
+    println!("{}", dashboard::overview(&p.tsdb, p.now(), hours * 3600.0));
+    Ok(())
+}
+
+fn validate(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
+    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    println!(
+        "manifest: {} model presets, {} burn payloads",
+        manifest.models.len(),
+        manifest.burns.len()
+    );
+    let mut eng = Engine::cpu()?;
+    for m in &manifest.models {
+        for art in &m.artifacts {
+            eng.load_artifact(art)?;
+            println!("  compiled {} ({} args)", art.name, art.args.len());
+        }
+    }
+    let preset = manifest.models.first().map(|m| m.preset.clone()).unwrap();
+    let mut tr = TrainRunner::new(&mut eng, &manifest, &preset, false)?;
+    let (first, last) = tr.run(&mut eng, 5)?;
+    println!("5-step smoke: loss {first:.3} → {last:.3}");
+    anyhow::ensure!(last < first, "loss must fall");
+    println!("validate OK");
+    Ok(())
+}

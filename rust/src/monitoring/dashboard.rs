@@ -1,0 +1,111 @@
+//! Grafana-like ASCII dashboards: sparkline panels over TSDB series and the
+//! cluster overview the platform CLI prints (`aiinfn report`).
+
+use crate::monitoring::tsdb::{SeriesKey, Tsdb};
+use crate::sim::clock::Time;
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Render a sparkline of `width` buckets for one series over `[from, to]`.
+pub fn sparkline(db: &Tsdb, key: &SeriesKey, from: Time, to: Time, width: usize) -> String {
+    let pts = db.points(key, from, to);
+    if pts.is_empty() || width == 0 {
+        return "∅".into();
+    }
+    let (lo, hi) = pts
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), (_, v)| (l.min(*v), h.max(*v)));
+    let span = (to - from).max(1e-9);
+    let mut buckets: Vec<Vec<f64>> = vec![Vec::new(); width];
+    for (t, v) in pts {
+        let i = (((t - from) / span) * width as f64).floor() as usize;
+        buckets[i.min(width - 1)].push(v);
+    }
+    let mut out = String::new();
+    let range = (hi - lo).max(1e-12);
+    let mut last = lo;
+    for b in buckets {
+        let v = if b.is_empty() { last } else { b.iter().sum::<f64>() / b.len() as f64 };
+        last = v;
+        let idx = (((v - lo) / range) * (SPARK.len() - 1) as f64).round() as usize;
+        out.push(SPARK[idx.min(SPARK.len() - 1)]);
+    }
+    out
+}
+
+/// One dashboard panel: title + sparkline + min/avg/max annotations.
+pub fn panel(db: &Tsdb, title: &str, key: &SeriesKey, from: Time, to: Time) -> String {
+    let line = sparkline(db, key, from, to, 48);
+    let avg = db.avg_over(key, from, to).unwrap_or(f64::NAN);
+    let max = db.max_over(key, from, to).unwrap_or(f64::NAN);
+    format!("{title:<32} {line}  avg={avg:.2} max={max:.2}")
+}
+
+/// The cluster-overview dashboard (text): GPU utilization per node, pod
+/// counts, storage usage.
+pub fn overview(db: &Tsdb, at: Time, window: Time) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let from = (at - window).max(0.0);
+    let _ = writeln!(s, "── AI_INFN platform dashboard (t={at:.0}s, window={window:.0}s) ──");
+    for key in db.keys_for("dcgm_gpu_utilization") {
+        let label = format!(
+            "gpu util {}/{}",
+            key.label("node").unwrap_or("?"),
+            key.label("gpu").unwrap_or("?")
+        );
+        let _ = writeln!(s, "{}", panel(db, &label, &key, from, at));
+    }
+    for name in ["pods_running", "pods_pending"] {
+        for key in db.keys_for(name) {
+            let _ = writeln!(s, "{}", panel(db, name, &key, from, at));
+        }
+    }
+    let by_vol = db.sum_by("nfs_volume_used_bytes", "volume", at);
+    if !by_vol.is_empty() {
+        let total: f64 = by_vol.values().sum();
+        let _ = writeln!(s, "nfs volumes: {} totalling {}", by_vol.len(), crate::util::fmt_bytes(total as u64));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_shows_shape() {
+        let mut db = Tsdb::new(1e9);
+        let k = SeriesKey::new("m", &[]);
+        for t in 0..100 {
+            db.ingest(k.clone(), t as f64, (t as f64 / 100.0 * std::f64::consts::PI).sin());
+        }
+        let line = sparkline(&db, &k, 0.0, 100.0, 20);
+        assert_eq!(line.chars().count(), 20);
+        // rises then falls: first char lower than middle
+        let chars: Vec<char> = line.chars().collect();
+        let rank = |c: char| SPARK.iter().position(|&s| s == c).unwrap();
+        assert!(rank(chars[0]) < rank(chars[10]));
+        assert!(rank(chars[19]) < rank(chars[10]));
+    }
+
+    #[test]
+    fn empty_series_renders_placeholder() {
+        let db = Tsdb::new(1e9);
+        assert_eq!(sparkline(&db, &SeriesKey::new("none", &[]), 0.0, 1.0, 8), "∅");
+    }
+
+    #[test]
+    fn overview_mentions_gpus_and_pods() {
+        let mut db = Tsdb::new(1e9);
+        db.ingest(
+            SeriesKey::new("dcgm_gpu_utilization", &[("node", "n1"), ("gpu", "g0")]),
+            1.0,
+            0.7,
+        );
+        db.ingest(SeriesKey::new("pods_running", &[]), 1.0, 3.0);
+        let text = overview(&db, 2.0, 10.0);
+        assert!(text.contains("gpu util n1/g0"));
+        assert!(text.contains("pods_running"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Monitoring & accounting (DESIGN.md S18–S20): Prometheus-like TSDB,
+//! the exporters the paper deploys (kube-eagle, DCGM, custom storage),
+//! per-user/project accounting, and Grafana-like ASCII dashboards.
+
+pub mod accounting;
+pub mod dashboard;
+pub mod exporters;
+pub mod tsdb;
+
+pub use accounting::{account, Report, Usage};
+pub use tsdb::{SeriesKey, Tsdb};

@@ -1,0 +1,200 @@
+//! A miniature Prometheus: labeled time series in ring buffers with
+//! retention, plus the query functions the dashboards and benches need
+//! (instant value, range average, rate, group-by-label sum).
+
+use std::collections::BTreeMap;
+
+use crate::sim::clock::Time;
+
+/// Series identity: metric name + sorted label pairs.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SeriesKey {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl SeriesKey {
+    pub fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        let mut l: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        l.sort();
+        SeriesKey { name: name.to_string(), labels: l }
+    }
+
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+#[derive(Debug, Default)]
+struct Series {
+    points: std::collections::VecDeque<(Time, f64)>,
+}
+
+/// The TSDB.
+#[derive(Debug)]
+pub struct Tsdb {
+    series: BTreeMap<SeriesKey, Series>,
+    retention: Time,
+    samples_ingested: u64,
+}
+
+impl Tsdb {
+    pub fn new(retention: Time) -> Self {
+        Tsdb { series: BTreeMap::new(), retention, samples_ingested: 0 }
+    }
+
+    /// Append a sample (monotonic time per series assumed; late samples are
+    /// accepted but retention trims by newest timestamp).
+    pub fn ingest(&mut self, key: SeriesKey, at: Time, value: f64) {
+        let s = self.series.entry(key).or_default();
+        s.points.push_back((at, value));
+        self.samples_ingested += 1;
+        let horizon = at - self.retention;
+        while let Some(&(t, _)) = s.points.front() {
+            if t < horizon {
+                s.points.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn series_count(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn samples_ingested(&self) -> u64 {
+        self.samples_ingested
+    }
+
+    /// Latest value at or before `at`.
+    pub fn instant(&self, key: &SeriesKey, at: Time) -> Option<f64> {
+        let s = self.series.get(key)?;
+        s.points.iter().rev().find(|(t, _)| *t <= at).map(|(_, v)| *v)
+    }
+
+    /// Average over `[from, to]`.
+    pub fn avg_over(&self, key: &SeriesKey, from: Time, to: Time) -> Option<f64> {
+        let s = self.series.get(key)?;
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (t, v) in &s.points {
+            if *t >= from && *t <= to {
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(sum / n as f64)
+        }
+    }
+
+    /// Max over `[from, to]`.
+    pub fn max_over(&self, key: &SeriesKey, from: Time, to: Time) -> Option<f64> {
+        let s = self.series.get(key)?;
+        s.points
+            .iter()
+            .filter(|(t, _)| *t >= from && *t <= to)
+            .map(|(_, v)| *v)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Per-second rate of a monotonically increasing counter over `[from, to]`.
+    pub fn rate(&self, key: &SeriesKey, from: Time, to: Time) -> Option<f64> {
+        let s = self.series.get(key)?;
+        let window: Vec<&(Time, f64)> =
+            s.points.iter().filter(|(t, _)| *t >= from && *t <= to).collect();
+        let (first, last) = (window.first()?, window.last()?);
+        if last.0 <= first.0 {
+            return None;
+        }
+        Some((last.1 - first.1).max(0.0) / (last.0 - first.0))
+    }
+
+    /// Sum the latest values of all series with `name`, grouped by `label`.
+    pub fn sum_by(&self, name: &str, label: &str, at: Time) -> BTreeMap<String, f64> {
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        for (key, _) in self.series.iter().filter(|(k, _)| k.name == name) {
+            if let (Some(group), Some(v)) = (key.label(label), self.instant(key, at)) {
+                *out.entry(group.to_string()).or_insert(0.0) += v;
+            }
+        }
+        out
+    }
+
+    /// All keys for a metric name.
+    pub fn keys_for(&self, name: &str) -> Vec<SeriesKey> {
+        self.series.keys().filter(|k| k.name == name).cloned().collect()
+    }
+
+    /// Raw points (for dashboard sparkline rendering).
+    pub fn points(&self, key: &SeriesKey, from: Time, to: Time) -> Vec<(Time, f64)> {
+        self.series
+            .get(key)
+            .map(|s| s.points.iter().copied().filter(|(t, _)| *t >= from && *t <= to).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(node: &str) -> SeriesKey {
+        SeriesKey::new("gpu_util", &[("node", node), ("model", "A100")])
+    }
+
+    #[test]
+    fn ingest_instant_and_retention() {
+        let mut db = Tsdb::new(100.0);
+        for t in 0..200 {
+            db.ingest(key("n1"), t as f64, t as f64);
+        }
+        // points older than 199-100 are trimmed
+        assert_eq!(db.instant(&key("n1"), 199.0), Some(199.0));
+        assert!(db.points(&key("n1"), 0.0, 98.0).is_empty());
+        assert_eq!(db.samples_ingested(), 200);
+    }
+
+    #[test]
+    fn instant_is_last_at_or_before() {
+        let mut db = Tsdb::new(1e9);
+        db.ingest(key("n1"), 10.0, 1.0);
+        db.ingest(key("n1"), 20.0, 2.0);
+        assert_eq!(db.instant(&key("n1"), 15.0), Some(1.0));
+        assert_eq!(db.instant(&key("n1"), 25.0), Some(2.0));
+        assert_eq!(db.instant(&key("n1"), 5.0), None);
+    }
+
+    #[test]
+    fn avg_max_rate() {
+        let mut db = Tsdb::new(1e9);
+        for (t, v) in [(0.0, 0.0), (10.0, 10.0), (20.0, 40.0)] {
+            db.ingest(key("n1"), t, v);
+        }
+        assert_eq!(db.avg_over(&key("n1"), 0.0, 20.0), Some(50.0 / 3.0));
+        assert_eq!(db.max_over(&key("n1"), 0.0, 20.0), Some(40.0));
+        assert_eq!(db.rate(&key("n1"), 0.0, 20.0), Some(2.0));
+    }
+
+    #[test]
+    fn sum_by_groups_labels() {
+        let mut db = Tsdb::new(1e9);
+        db.ingest(SeriesKey::new("gpu_util", &[("node", "a"), ("gpu", "0")]), 1.0, 0.5);
+        db.ingest(SeriesKey::new("gpu_util", &[("node", "a"), ("gpu", "1")]), 1.0, 0.25);
+        db.ingest(SeriesKey::new("gpu_util", &[("node", "b"), ("gpu", "0")]), 1.0, 1.0);
+        let by_node = db.sum_by("gpu_util", "node", 2.0);
+        assert_eq!(by_node["a"], 0.75);
+        assert_eq!(by_node["b"], 1.0);
+    }
+
+    #[test]
+    fn series_key_order_insensitive() {
+        let a = SeriesKey::new("m", &[("x", "1"), ("y", "2")]);
+        let b = SeriesKey::new("m", &[("y", "2"), ("x", "1")]);
+        assert_eq!(a, b);
+    }
+}

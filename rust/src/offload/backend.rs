@@ -1,0 +1,71 @@
+//! The site-backend abstraction behind the InterLink sidecar.
+//!
+//! A backend is a batch system (HTCondor at INFN-T1/ReCaS, SLURM at CINECA
+//! Leonardo) or a container runtime (Podman on standalone hosts). All are
+//! discrete-time simulators advanced by `advance_to(now)`: jobs submitted
+//! earlier start/finish as the site's own scheduling policy dictates.
+
+use crate::cluster::resources::ResourceVec;
+use crate::offload::interlink::{JobId, RemoteState, WirePod};
+use crate::sim::clock::Time;
+
+/// A remote execution backend.
+pub trait SiteBackend {
+    fn kind(&self) -> &'static str;
+
+    /// Submit a job; returns the site-assigned id.
+    fn submit(&mut self, pod: &WirePod, user: &str, at: Time) -> JobId;
+
+    /// Advance internal scheduling to `now` (starts/finishes jobs).
+    fn advance_to(&mut self, now: Time);
+
+    /// Current state of a job.
+    fn state(&self, id: &JobId) -> Option<RemoteState>;
+
+    /// Cancel a queued/running job.
+    fn cancel(&mut self, id: &JobId, at: Time);
+
+    /// Total site capacity (advertised through the virtual node).
+    fn capacity(&self) -> ResourceVec;
+
+    /// Jobs completed in [since, now) — for throughput accounting.
+    fn completions_since(&self, since: Time) -> usize;
+
+    /// Synthetic job log (InterLink /getLogs).
+    fn logs(&self, id: &JobId) -> String {
+        format!("[{}] job {id}: no logs captured", self.kind())
+    }
+}
+
+/// Common bookkeeping shared by the backend implementations.
+#[derive(Debug, Clone)]
+pub struct RemoteJob {
+    pub id: JobId,
+    pub pod: WirePod,
+    pub user: String,
+    pub submitted_at: Time,
+    pub started_at: Option<Time>,
+    pub finished_at: Option<Time>,
+    pub state: RemoteState,
+    /// Node (by index) the job occupies while running.
+    pub node: Option<usize>,
+}
+
+impl RemoteJob {
+    pub fn new(id: JobId, pod: WirePod, user: &str, at: Time) -> Self {
+        RemoteJob {
+            id,
+            pod,
+            user: user.to_string(),
+            submitted_at: at,
+            started_at: None,
+            finished_at: None,
+            state: RemoteState::Queued,
+            node: None,
+        }
+    }
+
+    pub fn wait_time(&self) -> Option<Time> {
+        self.started_at.map(|s| s - self.submitted_at)
+    }
+}

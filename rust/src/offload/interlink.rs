@@ -1,0 +1,333 @@
+//! The InterLink wire protocol.
+//!
+//! InterLink (paper §3, [30]) is a REST API between a Virtual-Kubelet
+//! provider and a remote site's "sidecar" that translates pod specs into the
+//! site batch system's job language. We reproduce the wire layer faithfully:
+//! requests/responses are JSON documents (our own `util::json`), and every
+//! pod crossing the boundary is round-tripped through encode → decode, so
+//! the serialization path is exercised exactly as in production (and fuzzed
+//! by property tests).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::pod::{Payload, PodSpec};
+use crate::cluster::resources::ResourceVec;
+use crate::util::json::Json;
+
+/// Remote job identifier assigned by the site.
+pub type JobId = String;
+
+/// Job states reported by sites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemoteState {
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    Cancelled,
+}
+
+impl RemoteState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RemoteState::Queued => "QUEUED",
+            RemoteState::Running => "RUNNING",
+            RemoteState::Completed => "COMPLETED",
+            RemoteState::Failed => "FAILED",
+            RemoteState::Cancelled => "CANCELLED",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RemoteState> {
+        Some(match s {
+            "QUEUED" => RemoteState::Queued,
+            "RUNNING" => RemoteState::Running,
+            "COMPLETED" => RemoteState::Completed,
+            "FAILED" => RemoteState::Failed,
+            "CANCELLED" => RemoteState::Cancelled,
+            _ => return None,
+        })
+    }
+}
+
+/// API requests (the InterLink sidecar endpoints: /create /status /delete /getLogs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Create { pod: WirePod, token: String },
+    Status { job: JobId, token: String },
+    Delete { job: JobId, token: String },
+    Logs { job: JobId, token: String },
+}
+
+/// API responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Created { job: JobId },
+    Status { job: JobId, state: RemoteState },
+    Deleted { job: JobId },
+    Logs { job: JobId, text: String },
+    Error { code: u32, message: String },
+}
+
+/// The pod projection that crosses the wire (what the sidecar needs to build
+/// an HTCondor submit file / SLURM sbatch script / podman run).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WirePod {
+    pub name: String,
+    pub namespace: String,
+    pub requests: Vec<(String, i64)>,
+    pub duration_hint: f64,
+    pub image: String,
+    pub labels: BTreeMap<String, String>,
+}
+
+impl WirePod {
+    pub fn from_spec(spec: &PodSpec, duration_hint: f64) -> WirePod {
+        let image = match &spec.payload {
+            Payload::MlJob { artifact, .. } => format!("mljob/{artifact}"),
+            Payload::Session { .. } => "jupyter/datascience".into(),
+            _ => "batch/generic".into(),
+        };
+        WirePod {
+            name: spec.name.clone(),
+            namespace: spec.namespace.clone(),
+            requests: spec.requests.iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            duration_hint,
+            image,
+            labels: spec.labels.clone(),
+        }
+    }
+
+    pub fn resource_vec(&self) -> ResourceVec {
+        let mut r = ResourceVec::new();
+        for (k, v) in &self.requests {
+            r.set(k, *v);
+        }
+        r
+    }
+}
+
+// ---------------------------------------------------------------- encoding
+
+fn wirepod_to_json(p: &WirePod) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&p.name)),
+        ("namespace", Json::str(&p.namespace)),
+        (
+            "requests",
+            Json::Obj(p.requests.iter().map(|(k, v)| (k.clone(), Json::num(*v as f64))).collect()),
+        ),
+        ("durationHint", Json::num(p.duration_hint)),
+        ("image", Json::str(&p.image)),
+        (
+            "labels",
+            Json::Obj(p.labels.iter().map(|(k, v)| (k.clone(), Json::str(v))).collect()),
+        ),
+    ])
+}
+
+fn wirepod_from_json(j: &Json) -> anyhow::Result<WirePod> {
+    let requests = j
+        .get("requests")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("missing requests"))?
+        .iter()
+        .map(|(k, v)| (k.clone(), v.as_i64().unwrap_or(0)))
+        .collect();
+    let labels = j
+        .get("labels")
+        .and_then(Json::as_obj)
+        .map(|o| {
+            o.iter()
+                .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(WirePod {
+        name: j.str_field("name")?.to_string(),
+        namespace: j.str_field("namespace")?.to_string(),
+        requests,
+        duration_hint: j.f64_or("durationHint", 0.0),
+        image: j.str_or("image", "batch/generic").to_string(),
+        labels,
+    })
+}
+
+impl Request {
+    pub fn encode(&self) -> String {
+        let j = match self {
+            Request::Create { pod, token } => Json::obj(vec![
+                ("endpoint", Json::str("/create")),
+                ("token", Json::str(token)),
+                ("pod", wirepod_to_json(pod)),
+            ]),
+            Request::Status { job, token } => Json::obj(vec![
+                ("endpoint", Json::str("/status")),
+                ("token", Json::str(token)),
+                ("job", Json::str(job)),
+            ]),
+            Request::Delete { job, token } => Json::obj(vec![
+                ("endpoint", Json::str("/delete")),
+                ("token", Json::str(token)),
+                ("job", Json::str(job)),
+            ]),
+            Request::Logs { job, token } => Json::obj(vec![
+                ("endpoint", Json::str("/getLogs")),
+                ("token", Json::str(token)),
+                ("job", Json::str(job)),
+            ]),
+        };
+        j.to_string()
+    }
+
+    pub fn decode(s: &str) -> anyhow::Result<Request> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+        let token = j.str_field("token")?.to_string();
+        match j.str_field("endpoint")? {
+            "/create" => Ok(Request::Create {
+                pod: wirepod_from_json(j.get("pod").ok_or_else(|| anyhow::anyhow!("missing pod"))?)?,
+                token,
+            }),
+            "/status" => Ok(Request::Status { job: j.str_field("job")?.to_string(), token }),
+            "/delete" => Ok(Request::Delete { job: j.str_field("job")?.to_string(), token }),
+            "/getLogs" => Ok(Request::Logs { job: j.str_field("job")?.to_string(), token }),
+            e => anyhow::bail!("unknown endpoint {e}"),
+        }
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> String {
+        let j = match self {
+            Response::Created { job } => {
+                Json::obj(vec![("kind", Json::str("created")), ("job", Json::str(job))])
+            }
+            Response::Status { job, state } => Json::obj(vec![
+                ("kind", Json::str("status")),
+                ("job", Json::str(job)),
+                ("state", Json::str(state.as_str())),
+            ]),
+            Response::Deleted { job } => {
+                Json::obj(vec![("kind", Json::str("deleted")), ("job", Json::str(job))])
+            }
+            Response::Logs { job, text } => Json::obj(vec![
+                ("kind", Json::str("logs")),
+                ("job", Json::str(job)),
+                ("text", Json::str(text)),
+            ]),
+            Response::Error { code, message } => Json::obj(vec![
+                ("kind", Json::str("error")),
+                ("code", Json::num(*code as f64)),
+                ("message", Json::str(message)),
+            ]),
+        };
+        j.to_string()
+    }
+
+    pub fn decode(s: &str) -> anyhow::Result<Response> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("bad response json: {e}"))?;
+        match j.str_field("kind")? {
+            "created" => Ok(Response::Created { job: j.str_field("job")?.to_string() }),
+            "status" => Ok(Response::Status {
+                job: j.str_field("job")?.to_string(),
+                state: RemoteState::parse(j.str_field("state")?)
+                    .ok_or_else(|| anyhow::anyhow!("bad state"))?,
+            }),
+            "deleted" => Ok(Response::Deleted { job: j.str_field("job")?.to_string() }),
+            "logs" => Ok(Response::Logs {
+                job: j.str_field("job")?.to_string(),
+                text: j.str_or("text", "").to_string(),
+            }),
+            "error" => Ok(Response::Error {
+                code: j.i64_or("code", 500) as u32,
+                message: j.str_or("message", "").to_string(),
+            }),
+            k => anyhow::bail!("unknown response kind {k}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::resources::{CPU, GPU};
+    use crate::util::prop::{forall, gens};
+
+    fn wirepod() -> WirePod {
+        let spec = PodSpec::new(
+            "train-01",
+            ResourceVec::cpu_millis(4000).with(GPU, 2),
+            Payload::MlJob { artifact: "train_step_small".into(), steps: 100 },
+        )
+        .with_label("aiinfn/project", "lhcb");
+        WirePod::from_spec(&spec, 1800.0)
+    }
+
+    #[test]
+    fn create_roundtrip() {
+        let req = Request::Create { pod: wirepod(), token: "tok123".into() };
+        let decoded = Request::decode(&req.encode()).unwrap();
+        assert_eq!(decoded, req);
+        if let Request::Create { pod, .. } = decoded {
+            assert_eq!(pod.resource_vec().get(CPU), 4000);
+            assert_eq!(pod.resource_vec().get(GPU), 2);
+            assert_eq!(pod.image, "mljob/train_step_small");
+        }
+    }
+
+    #[test]
+    fn all_request_kinds_roundtrip() {
+        for req in [
+            Request::Status { job: "j1".into(), token: "t".into() },
+            Request::Delete { job: "j2".into(), token: "t".into() },
+            Request::Logs { job: "j3".into(), token: "t".into() },
+        ] {
+            assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn all_response_kinds_roundtrip() {
+        for resp in [
+            Response::Created { job: "htc-1".into() },
+            Response::Status { job: "htc-1".into(), state: RemoteState::Running },
+            Response::Deleted { job: "htc-1".into() },
+            Response::Logs { job: "htc-1".into(), text: "step 1 loss 4.2\n".into() },
+            Response::Error { code: 404, message: "no such job".into() },
+        ] {
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Request::decode("{}").is_err());
+        assert!(Request::decode("not json").is_err());
+        assert!(Response::decode(r#"{"kind":"martian"}"#).is_err());
+    }
+
+    #[test]
+    fn prop_wirepod_roundtrips_any_labels_and_requests() {
+        forall(
+            "wirepod-roundtrip",
+            48,
+            |rng, b| {
+                let mut pod = wirepod();
+                pod.name = gens::ident(rng, "pod");
+                for _ in 0..b.size {
+                    pod.labels.insert(gens::ident(rng, "k"), gens::ident(rng, "v—☃"));
+                    pod.requests.push((gens::ident(rng, "res"), rng.below(1 << 40) as i64));
+                }
+                pod
+            },
+            |pod| {
+                let req = Request::Create { pod: pod.clone(), token: "t".into() };
+                match Request::decode(&req.encode()) {
+                    Ok(Request::Create { pod: back, .. }) if back == *pod => Ok(()),
+                    Ok(other) => Err(format!("mismatch: {other:?}")),
+                    Err(e) => Err(e.to_string()),
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Workload offloading (DESIGN.md S21–S25): Virtual Kubelet providers speak
+//! the InterLink JSON wire protocol to site "sidecars" that drive batch-
+//! system simulators — HTCondor (INFN-T1, ReCaS), SLURM (CINECA Leonardo)
+//! and a Podman container host — reproducing the paper's §3 federation.
+
+pub mod backend;
+pub mod htcondor;
+pub mod interlink;
+pub mod podman;
+pub mod sites;
+pub mod slurm;
+pub mod vk;
+
+pub use backend::SiteBackend;
+pub use htcondor::HtcondorPool;
+pub use interlink::{RemoteState, Request, Response, WirePod};
+pub use podman::PodmanHost;
+pub use sites::paper_federation;
+pub use slurm::SlurmCluster;
+pub use vk::{Sidecar, VirtualKubelet};

@@ -1,0 +1,231 @@
+//! Podman container backend (paper §3 lists Podman among the heterogeneous
+//! *backends* validated behind InterLink): a single host running containers
+//! directly — no batch queue, just image-pull latency, a concurrency cap,
+//! and FIFO overflow queueing.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::cluster::resources::{ResourceVec, CPU, MEMORY};
+use crate::offload::backend::{RemoteJob, SiteBackend};
+use crate::offload::interlink::{JobId, RemoteState, WirePod};
+use crate::sim::clock::Time;
+
+pub struct PodmanHost {
+    pub name: String,
+    cores: i64,
+    mem: i64,
+    free: ResourceVec,
+    jobs: HashMap<JobId, RemoteJob>,
+    fifo: VecDeque<JobId>,
+    pulled: HashSet<String>,
+    pull_latency: Time,
+    next_id: u64,
+    completions: Vec<Time>,
+    /// (job, ready_at) for containers still pulling their image
+    pulling: Vec<(JobId, Time)>,
+}
+
+impl PodmanHost {
+    pub fn new(name: &str, cores: i64, mem: i64) -> Self {
+        PodmanHost {
+            name: name.to_string(),
+            cores,
+            mem,
+            free: ResourceVec::new().with(CPU, cores * 1000).with(MEMORY, mem),
+            jobs: HashMap::new(),
+            fifo: VecDeque::new(),
+            pulled: HashSet::new(),
+            pull_latency: 45.0,
+            next_id: 0,
+            completions: Vec::new(),
+            pulling: Vec::new(),
+        }
+    }
+
+    fn try_start_fifo(&mut self, now: Time) {
+        while let Some(id) = self.fifo.front().cloned() {
+            let req = self.jobs[&id].pod.resource_vec();
+            if !req.fits_in(&self.free) {
+                break; // strict FIFO: no skipping
+            }
+            self.fifo.pop_front();
+            self.free.sub(&req);
+            let image = self.jobs[&id].pod.image.clone();
+            if self.pulled.contains(&image) {
+                let j = self.jobs.get_mut(&id).unwrap();
+                j.state = RemoteState::Running;
+                j.started_at = Some(now);
+            } else {
+                self.pulled.insert(image);
+                self.pulling.push((id, now + self.pull_latency));
+            }
+        }
+    }
+
+    fn settle(&mut self, now: Time) {
+        // images that finished pulling → running
+        let ready: Vec<(JobId, Time)> =
+            self.pulling.iter().filter(|(_, t)| *t <= now).cloned().collect();
+        self.pulling.retain(|(_, t)| *t > now);
+        for (id, t) in ready {
+            let j = self.jobs.get_mut(&id).unwrap();
+            j.state = RemoteState::Running;
+            j.started_at = Some(t);
+        }
+        // completions
+        let due: Vec<JobId> = self
+            .jobs
+            .values()
+            .filter(|j| {
+                j.state == RemoteState::Running
+                    && j.started_at.map(|s| s + j.pod.duration_hint <= now).unwrap_or(false)
+            })
+            .map(|j| j.id.clone())
+            .collect();
+        for id in due {
+            let j = self.jobs.get_mut(&id).unwrap();
+            let fin = j.started_at.unwrap() + j.pod.duration_hint;
+            j.state = RemoteState::Completed;
+            j.finished_at = Some(fin);
+            let req = j.pod.resource_vec();
+            self.free.add(&req);
+            self.completions.push(fin);
+        }
+    }
+}
+
+impl SiteBackend for PodmanHost {
+    fn kind(&self) -> &'static str {
+        "podman"
+    }
+
+    fn submit(&mut self, pod: &WirePod, user: &str, at: Time) -> JobId {
+        self.next_id += 1;
+        let id = format!("{}-ctr-{}", self.name, self.next_id);
+        self.jobs.insert(id.clone(), RemoteJob::new(id.clone(), pod.clone(), user, at));
+        self.fifo.push_back(id.clone());
+        // podman has no scheduler tick: containers launch as soon as
+        // capacity allows, starting at submission time.
+        self.settle(at);
+        self.try_start_fifo(at);
+        id
+    }
+
+    fn advance_to(&mut self, now: Time) {
+        // Event-accurate stepping: process pull-completions and container
+        // exits at their exact times so follow-on FIFO starts are not
+        // delayed to the polling instant.
+        loop {
+            let next_pull = self
+                .pulling
+                .iter()
+                .map(|(_, t)| *t)
+                .fold(f64::INFINITY, f64::min);
+            let next_exit = self
+                .jobs
+                .values()
+                .filter(|j| j.state == RemoteState::Running)
+                .filter_map(|j| j.started_at.map(|s| s + j.pod.duration_hint))
+                .fold(f64::INFINITY, f64::min);
+            let t = next_pull.min(next_exit);
+            if t > now {
+                break;
+            }
+            self.settle(t);
+            self.try_start_fifo(t);
+        }
+        self.settle(now);
+        self.try_start_fifo(now);
+        self.settle(now);
+    }
+
+    fn state(&self, id: &JobId) -> Option<RemoteState> {
+        self.jobs.get(id).map(|j| {
+            if j.state == RemoteState::Queued && self.pulling.iter().any(|(p, _)| p == id) {
+                RemoteState::Running // container created, pulling
+            } else {
+                j.state
+            }
+        })
+    }
+
+    fn cancel(&mut self, id: &JobId, _at: Time) {
+        self.fifo.retain(|x| x != id);
+        let was_pulling = self.pulling.iter().any(|(p, _)| p == id);
+        self.pulling.retain(|(p, _)| p != id);
+        if let Some(j) = self.jobs.get_mut(id) {
+            if matches!(j.state, RemoteState::Queued | RemoteState::Running) {
+                if j.state == RemoteState::Running || was_pulling {
+                    let req = j.pod.resource_vec();
+                    self.free.add(&req);
+                }
+                j.state = RemoteState::Cancelled;
+            }
+        }
+    }
+
+    fn capacity(&self) -> ResourceVec {
+        ResourceVec::new().with(CPU, self.cores * 1000).with(MEMORY, self.mem)
+    }
+
+    fn completions_since(&self, since: Time) -> usize {
+        self.completions.iter().filter(|&&t| t >= since).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pod(name: &str, cores: i64, dur: f64, image: &str) -> WirePod {
+        WirePod {
+            name: name.into(),
+            namespace: "default".into(),
+            requests: vec![(CPU.into(), cores * 1000), (MEMORY.into(), 1 << 30)],
+            duration_hint: dur,
+            image: image.into(),
+            labels: Default::default(),
+        }
+    }
+
+    #[test]
+    fn cold_pull_then_warm_start() {
+        let mut h = PodmanHost::new("recas-podman", 16, 64 << 30);
+        let a = h.submit(&pod("a", 2, 10.0, "img:1"), "u", 0.0);
+        h.advance_to(1.0);
+        h.advance_to(56.0); // pull 45 + run 10
+        assert_eq!(h.state(&a), Some(RemoteState::Completed));
+        // warm: same image starts immediately
+        let b = h.submit(&pod("b", 2, 10.0, "img:1"), "u", 60.0);
+        h.advance_to(71.0);
+        assert_eq!(h.state(&b), Some(RemoteState::Completed));
+    }
+
+    #[test]
+    fn fifo_blocks_on_capacity() {
+        let mut h = PodmanHost::new("p", 4, 64 << 30);
+        let a = h.submit(&pod("a", 4, 100.0, "i"), "u", 0.0);
+        let b = h.submit(&pod("b", 4, 10.0, "i"), "u", 0.0);
+        h.advance_to(50.0);
+        assert_eq!(h.state(&a), Some(RemoteState::Running));
+        assert_eq!(h.state(&b), Some(RemoteState::Queued));
+        h.advance_to(200.0);
+        assert_eq!(h.state(&b), Some(RemoteState::Completed));
+    }
+
+    #[test]
+    fn cancel_from_queue_and_running() {
+        let mut h = PodmanHost::new("p", 4, 64 << 30);
+        let a = h.submit(&pod("a", 4, 1000.0, "i"), "u", 0.0);
+        let b = h.submit(&pod("b", 4, 10.0, "i"), "u", 0.0);
+        h.advance_to(50.0);
+        h.cancel(&a, 55.0);
+        h.cancel(&b, 55.0);
+        assert_eq!(h.state(&a), Some(RemoteState::Cancelled));
+        assert_eq!(h.state(&b), Some(RemoteState::Cancelled));
+        // capacity restored
+        let c = h.submit(&pod("c", 4, 5.0, "i"), "u", 60.0);
+        h.advance_to(100.0);
+        assert_eq!(h.state(&c), Some(RemoteState::Completed));
+    }
+}

@@ -1,0 +1,117 @@
+//! The federation sites from the paper's scalability test (§3): *"These
+//! tests integrated resources from the INFN-Tier1 at CNAF, ReCaS Bari and
+//! the CINECA Leonardo supercomputer"* behind heterogeneous schedulers
+//! (HTCondor, SLURM) and backends (Podman).
+//!
+//! Node shapes and WAN latencies are realistic but synthetic (DESIGN.md
+//! substitution table): what the experiment exercises is the federation
+//! *mechanics*, which depend on scheduler heterogeneity and latency, not on
+//! the sites' exact sizes.
+
+use crate::offload::htcondor::HtcondorPool;
+use crate::offload::podman::PodmanHost;
+use crate::offload::slurm::SlurmCluster;
+use crate::offload::vk::VirtualKubelet;
+
+/// Site descriptor.
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    pub name: String,
+    pub scheduler: SchedulerKind,
+    /// one-way WAN latency from CNAF (seconds)
+    pub wan_latency: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Htcondor,
+    Slurm,
+    Podman,
+}
+
+impl SchedulerKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedulerKind::Htcondor => "HTCondor",
+            SchedulerKind::Slurm => "SLURM",
+            SchedulerKind::Podman => "Podman",
+        }
+    }
+}
+
+/// Build the paper's four-site federation as Virtual-Kubelet providers.
+/// `scale` multiplies node counts (1 = the default used in E4).
+pub fn paper_federation(scale: usize) -> Vec<VirtualKubelet> {
+    let s = scale.max(1);
+    vec![
+        // INFN-Tier1 @ CNAF: HTCondor, big CPU farm + some GPU nodes
+        VirtualKubelet::new(
+            "vk-infn-t1",
+            "INFN-T1",
+            Box::new(HtcondorPool::new(
+                "infn-t1",
+                &[(8 * s, 32, 192 << 30, 0), (2 * s, 32, 192 << 30, 4)],
+            )),
+            "token-infn-t1",
+            0.004, // CNAF-internal
+        ),
+        // ReCaS Bari: HTCondor, mid-size
+        VirtualKubelet::new(
+            "vk-recas-bari",
+            "ReCaS-Bari",
+            Box::new(HtcondorPool::new(
+                "recas",
+                &[(4 * s, 24, 128 << 30, 0), (s, 24, 128 << 30, 2)],
+            )),
+            "token-recas",
+            0.012,
+        ),
+        // CINECA Leonardo: SLURM booster nodes (32 cores, 4 A100-class each)
+        VirtualKubelet::new(
+            "vk-leonardo",
+            "CINECA-Leonardo",
+            Box::new(SlurmCluster::leonardo("leonardo", 4 * s)),
+            "token-leonardo",
+            0.009,
+        ),
+        // Standalone Podman host (the backend-heterogeneity data point)
+        VirtualKubelet::new(
+            "vk-podman-host",
+            "Podman-Edge",
+            Box::new(PodmanHost::new("podman-edge", 64, 256 << 30)),
+            "token-podman",
+            0.020,
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::resources::{CPU, GPU};
+
+    #[test]
+    fn federation_has_four_heterogeneous_sites() {
+        let sites = paper_federation(1);
+        assert_eq!(sites.len(), 4);
+        let names: Vec<_> = sites.iter().map(|s| s.site.clone()).collect();
+        assert!(names.contains(&"INFN-T1".to_string()));
+        assert!(names.contains(&"CINECA-Leonardo".to_string()));
+    }
+
+    #[test]
+    fn capacities_are_positive_and_gpu_where_expected() {
+        for vk in paper_federation(1) {
+            assert!(vk.capacity().get(CPU) > 0, "{}", vk.site);
+        }
+        let leo = &mut paper_federation(1).remove(2);
+        assert_eq!(leo.capacity().get(GPU), 16);
+    }
+
+    #[test]
+    fn scale_multiplies_capacity() {
+        let c1 = paper_federation(1)[0].capacity().get(CPU);
+        let c3 = paper_federation(3)[0].capacity().get(CPU);
+        assert_eq!(c3, 3 * c1);
+    }
+}

@@ -1,0 +1,357 @@
+//! SLURM site simulator (CINECA Leonardo).
+//!
+//! Models the Leonardo booster partition: whole-ish nodes with 32 cores and
+//! 4 A100-class GPUs, a multifactor priority (age + fair-share + job size)
+//! and **conservative backfill**: the head-of-line job gets a start-time
+//! reservation on the earliest-freeing nodes; lower-priority jobs may jump
+//! ahead only if they finish before that reservation — the behaviour that
+//! dominates wait-time statistics on real HPC machines.
+
+use std::collections::HashMap;
+
+use crate::cluster::resources::{ResourceVec, CPU, GPU, MEMORY};
+use crate::offload::backend::{RemoteJob, SiteBackend};
+use crate::offload::interlink::{JobId, RemoteState, WirePod};
+use crate::sim::clock::Time;
+
+#[derive(Debug, Clone)]
+struct SlurmNode {
+    total: ResourceVec,
+    free: ResourceVec,
+    /// Times at which running jobs on this node end (for backfill lookahead).
+    releases: Vec<(Time, ResourceVec)>,
+}
+
+/// One SLURM partition.
+pub struct SlurmCluster {
+    pub name: String,
+    nodes: Vec<SlurmNode>,
+    jobs: HashMap<JobId, RemoteJob>,
+    queue: Vec<JobId>,
+    usage: HashMap<String, f64>, // fair-share usage
+    sched_interval: Time,
+    next_sched: Time,
+    next_id: u64,
+    completions: Vec<Time>,
+    /// priority weights (age, fairshare, size) — slurm.conf-ish
+    w_age: f64,
+    w_fair: f64,
+    w_size: f64,
+}
+
+impl SlurmCluster {
+    /// Leonardo-booster-like: `n_nodes` × (32 cores, 512 GB, 4 GPUs).
+    pub fn leonardo(name: &str, n_nodes: usize) -> Self {
+        Self::new(name, n_nodes, 32, 512 << 30, 4)
+    }
+
+    pub fn new(name: &str, n_nodes: usize, cores: i64, mem: i64, gpus: i64) -> Self {
+        let mut nodes = Vec::new();
+        for _ in 0..n_nodes {
+            let mut r = ResourceVec::new().with(CPU, cores * 1000).with(MEMORY, mem);
+            if gpus > 0 {
+                r.set(GPU, gpus);
+            }
+            nodes.push(SlurmNode { total: r.clone(), free: r, releases: Vec::new() });
+        }
+        SlurmCluster {
+            name: name.to_string(),
+            nodes,
+            jobs: HashMap::new(),
+            queue: Vec::new(),
+            usage: HashMap::new(),
+            sched_interval: 30.0,
+            next_sched: 0.0,
+            next_id: 0,
+            completions: Vec::new(),
+            w_age: 1.0 / 3600.0, // 1 point per queued hour
+            w_fair: 2.0,
+            w_size: 0.5,
+        }
+    }
+
+    fn priority(&self, job: &RemoteJob, now: Time) -> f64 {
+        let age = (now - job.submitted_at).max(0.0) * self.w_age;
+        let usage = self.usage.get(&job.user).copied().unwrap_or(0.0);
+        let fair = self.w_fair / (1.0 + usage / 3600.0);
+        let size = self.w_size * (job.pod.resource_vec().get(CPU) as f64 / 32_000.0);
+        age + fair + size
+    }
+
+    fn try_start(&mut self, id: &JobId, now: Time) -> bool {
+        let req = self.jobs[id].pod.resource_vec();
+        if let Some(ni) = self.nodes.iter().position(|n| req.fits_in(&n.free)) {
+            let dur = self.jobs[id].pod.duration_hint;
+            self.nodes[ni].free.sub(&req);
+            self.nodes[ni].releases.push((now + dur, req));
+            let j = self.jobs.get_mut(id).unwrap();
+            j.state = RemoteState::Running;
+            j.started_at = Some(now);
+            j.node = Some(ni);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Earliest time the head job could start on any node, given current
+    /// running-job release times (single-node jobs only — matches our pods).
+    fn earliest_start(&self, req: &ResourceVec, now: Time) -> Time {
+        let mut best = f64::INFINITY;
+        for n in &self.nodes {
+            if !req.fits_in(&n.total) {
+                continue;
+            }
+            // free resources grow as releases fire; walk them in time order
+            let mut free = n.free.clone();
+            if req.fits_in(&free) {
+                return now;
+            }
+            let mut rel: Vec<&(Time, ResourceVec)> = n.releases.iter().collect();
+            rel.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for (t, r) in rel {
+                free.add(r);
+                if req.fits_in(&free) {
+                    best = best.min(*t);
+                    break;
+                }
+            }
+        }
+        best
+    }
+
+    fn schedule_cycle(&mut self, now: Time) {
+        // order queue by priority desc
+        let mut q: Vec<(f64, JobId)> = self
+            .queue
+            .iter()
+            .filter(|id| self.jobs[*id].state == RemoteState::Queued)
+            .map(|id| (self.priority(&self.jobs[id], now), id.clone()))
+            .collect();
+        q.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        let mut reservation: Option<Time> = None;
+        for (_, id) in q {
+            if self.try_start(&id, now) {
+                continue;
+            }
+            match reservation {
+                None => {
+                    // head job blocks: reserve its earliest start
+                    let req = self.jobs[&id].pod.resource_vec();
+                    reservation = Some(self.earliest_start(&req, now));
+                }
+                Some(res_t) => {
+                    // backfill: only if this job would finish before the
+                    // reservation (conservative)
+                    let dur = self.jobs[&id].pod.duration_hint;
+                    if now + dur <= res_t {
+                        self.try_start(&id, now);
+                    }
+                }
+            }
+        }
+    }
+
+    fn finish_due(&mut self, now: Time) {
+        let due: Vec<JobId> = self
+            .jobs
+            .values()
+            .filter(|j| {
+                j.state == RemoteState::Running
+                    && j.started_at.map(|s| s + j.pod.duration_hint <= now).unwrap_or(false)
+            })
+            .map(|j| j.id.clone())
+            .collect();
+        for id in due {
+            let j = self.jobs.get_mut(&id).unwrap();
+            let fin = j.started_at.unwrap() + j.pod.duration_hint;
+            j.state = RemoteState::Completed;
+            j.finished_at = Some(fin);
+            let req = j.pod.resource_vec();
+            let user = j.user.clone();
+            let cores = req.get(CPU) as f64 / 1000.0;
+            if let Some(ni) = j.node.take() {
+                self.nodes[ni].free.add(&req);
+                self.nodes[ni].releases.retain(|(t, _)| (*t - fin).abs() > 1e-9);
+            }
+            *self.usage.entry(user).or_insert(0.0) += j.pod.duration_hint * cores.max(1.0);
+            self.completions.push(fin);
+        }
+    }
+
+    pub fn queued_count(&self) -> usize {
+        self.jobs.values().filter(|j| j.state == RemoteState::Queued).count()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.jobs.values().filter(|j| j.state == RemoteState::Running).count()
+    }
+}
+
+impl SiteBackend for SlurmCluster {
+    fn kind(&self) -> &'static str {
+        "slurm"
+    }
+
+    fn submit(&mut self, pod: &WirePod, user: &str, at: Time) -> JobId {
+        self.next_id += 1;
+        let id = format!("{}.{}", self.name, self.next_id);
+        self.jobs.insert(id.clone(), RemoteJob::new(id.clone(), pod.clone(), user, at));
+        self.queue.push(id.clone());
+        id
+    }
+
+    fn advance_to(&mut self, now: Time) {
+        while self.next_sched <= now {
+            let t = self.next_sched;
+            self.finish_due(t);
+            self.schedule_cycle(t);
+            self.next_sched = t + self.sched_interval;
+        }
+        self.finish_due(now);
+    }
+
+    fn state(&self, id: &JobId) -> Option<RemoteState> {
+        self.jobs.get(id).map(|j| j.state)
+    }
+
+    fn cancel(&mut self, id: &JobId, _at: Time) {
+        if let Some(j) = self.jobs.get_mut(id) {
+            if matches!(j.state, RemoteState::Queued | RemoteState::Running) {
+                if let Some(ni) = j.node.take() {
+                    let req = j.pod.resource_vec();
+                    self.nodes[ni].free.add(&req);
+                    if let Some(start) = j.started_at {
+                        let fin = start + j.pod.duration_hint;
+                        self.nodes[ni].releases.retain(|(t, _)| (*t - fin).abs() > 1e-9);
+                    }
+                }
+                j.state = RemoteState::Cancelled;
+            }
+        }
+    }
+
+    fn capacity(&self) -> ResourceVec {
+        let mut r = ResourceVec::new();
+        for n in &self.nodes {
+            r.add(&n.total);
+        }
+        r
+    }
+
+    fn completions_since(&self, since: Time) -> usize {
+        self.completions.iter().filter(|&&t| t >= since).count()
+    }
+
+    fn logs(&self, id: &JobId) -> String {
+        match self.jobs.get(id) {
+            Some(j) => format!(
+                "[slurm {}] jobid={id} user={} state={} start={:?}",
+                self.name, j.user, j.state.as_str(), j.started_at
+            ),
+            None => format!("[slurm {}] unknown job {id}", self.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pod(name: &str, cores: i64, gpus: i64, dur: f64) -> WirePod {
+        let mut requests = vec![(CPU.into(), cores * 1000), (MEMORY.into(), 8 << 30)];
+        if gpus > 0 {
+            requests.push((GPU.into(), gpus));
+        }
+        WirePod {
+            name: name.into(),
+            namespace: "default".into(),
+            requests,
+            duration_hint: dur,
+            image: "batch/generic".into(),
+            labels: Default::default(),
+        }
+    }
+
+    #[test]
+    fn leonardo_node_shape() {
+        let s = SlurmCluster::leonardo("leo", 4);
+        assert_eq!(s.capacity().get(CPU), 4 * 32_000);
+        assert_eq!(s.capacity().get(GPU), 16);
+    }
+
+    #[test]
+    fn jobs_run_and_complete() {
+        let mut s = SlurmCluster::leonardo("leo", 1);
+        let id = s.submit(&pod("j", 32, 4, 100.0), "alice", 0.0);
+        s.advance_to(31.0);
+        assert_eq!(s.state(&id), Some(RemoteState::Running));
+        s.advance_to(200.0);
+        assert_eq!(s.state(&id), Some(RemoteState::Completed));
+    }
+
+    #[test]
+    fn backfill_lets_short_jobs_jump_safely() {
+        let mut s = SlurmCluster::leonardo("leo", 1);
+        // fill the node until t≈1000
+        let a = s.submit(&pod("a", 32, 0, 1000.0), "alice", 0.0);
+        s.advance_to(31.0);
+        assert_eq!(s.state(&a), Some(RemoteState::Running));
+        // head-of-line big job must wait for the whole node
+        let b = s.submit(&pod("b", 32, 0, 500.0), "bob", 40.0);
+        // short small job CAN backfill (fits in free GPUs? node cpu is full).
+        // Use a half-node job after `a` ends? cpu full -> backfill impossible.
+        // Instead: two-node cluster exercises reservation + backfill:
+        let mut s2 = SlurmCluster::leonardo("leo2", 2);
+        let a1 = s2.submit(&pod("a1", 32, 0, 1000.0), "alice", 0.0);
+        let a2 = s2.submit(&pod("a2", 16, 0, 1000.0), "alice", 0.0);
+        s2.advance_to(31.0);
+        assert_eq!(s2.state(&a1), Some(RemoteState::Running));
+        assert_eq!(s2.state(&a2), Some(RemoteState::Running));
+        // head job: needs full node → reservation at t≈1031 (when a1 ends)
+        let big = s2.submit(&pod("big", 32, 0, 400.0), "bob", 50.0);
+        // short filler fits beside a2 and ends before the reservation
+        let fill = s2.submit(&pod("fill", 16, 0, 200.0), "carol", 60.0);
+        s2.advance_to(91.0);
+        assert_eq!(s2.state(&big), Some(RemoteState::Queued));
+        assert_eq!(s2.state(&fill), Some(RemoteState::Running), "backfill should start fill");
+        // and the long filler that would delay the reservation must NOT start
+        let bad_fill = s2.submit(&pod("badfill", 16, 0, 5000.0), "dave", 100.0);
+        s2.advance_to(151.0);
+        assert_eq!(s2.state(&bad_fill), Some(RemoteState::Queued));
+        let _ = (b, s);
+    }
+
+    #[test]
+    fn age_priority_eventually_wins() {
+        let mut s = SlurmCluster::new("x", 1, 8, 64 << 30, 0);
+        // saturate
+        let _a = s.submit(&pod("a", 8, 0, 100.0), "heavy", 0.0);
+        // heavy user gets lots of usage
+        s.advance_to(150.0);
+        // two candidates: heavy's new job submitted earlier, light's later
+        let h = s.submit(&pod("h", 8, 0, 50.0), "heavy", 151.0);
+        let l = s.submit(&pod("l", 8, 0, 50.0), "light", 152.0);
+        s.advance_to(240.0);
+        // fair-share puts light first despite FIFO
+        assert_eq!(s.state(&l), Some(RemoteState::Completed).or(s.state(&l)));
+        let l_started = s.jobs[&l].started_at.unwrap();
+        let h_started_or_queued = s.jobs[&h].started_at;
+        match h_started_or_queued {
+            Some(hs) => assert!(l_started <= hs, "light must start no later than heavy"),
+            None => {} // heavy still queued — fine
+        }
+    }
+
+    #[test]
+    fn cancel_running_frees_node() {
+        let mut s = SlurmCluster::leonardo("leo", 1);
+        let a = s.submit(&pod("a", 32, 4, 1e6), "alice", 0.0);
+        s.advance_to(31.0);
+        s.cancel(&a, 40.0);
+        let b = s.submit(&pod("b", 32, 4, 10.0), "bob", 41.0);
+        s.advance_to(120.0);
+        assert_eq!(s.state(&b), Some(RemoteState::Completed));
+    }
+}

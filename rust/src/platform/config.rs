@@ -1,0 +1,213 @@
+//! Platform configuration: parses `configs/ai_infn.json` (the paper's §2
+//! hardware inventory plus queue/hub/federation settings) into typed config,
+//! and builds the cluster nodes it describes.
+
+use crate::cluster::node::Node;
+use crate::gpu::mig::{MigLayout, MigProfile};
+use crate::gpu::models::GpuModel;
+use crate::gpu::GpuDevice;
+use crate::util::json::Json;
+
+/// One physical server.
+#[derive(Debug, Clone)]
+pub struct ServerSpec {
+    pub name: String,
+    pub year: i64,
+    pub cpu_cores: i64,
+    pub memory_gb: i64,
+    pub nvme_tb: i64,
+    pub gpus: Vec<GpuModel>,
+}
+
+/// Parsed platform configuration.
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    pub name: String,
+    pub servers: Vec<ServerSpec>,
+    pub a100_layout: Vec<MigProfile>,
+    pub a30_layout: Vec<MigProfile>,
+    pub interactive_share: f64,
+    pub backoff_base: f64,
+    pub idle_timeout: f64,
+    pub token_ttl: f64,
+    pub users: usize,
+    pub projects: usize,
+    pub federation_enabled: bool,
+    pub federation_scale: usize,
+    pub scrape_interval: f64,
+    pub retention: f64,
+}
+
+impl PlatformConfig {
+    /// The paper's inventory, loaded from the bundled config file.
+    pub fn load(path: &str) -> anyhow::Result<PlatformConfig> {
+        let raw = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::parse(&raw)
+    }
+
+    pub fn parse(raw: &str) -> anyhow::Result<PlatformConfig> {
+        let j = Json::parse(raw).map_err(|e| anyhow::anyhow!("config json: {e}"))?;
+        let mut servers = Vec::new();
+        for sj in j
+            .get("servers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing servers"))?
+        {
+            let gpus = sj
+                .get("gpus")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(|s| {
+                            GpuModel::parse(s).ok_or_else(|| anyhow::anyhow!("unknown GPU {s}"))
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()
+                })
+                .transpose()?
+                .unwrap_or_default();
+            servers.push(ServerSpec {
+                name: sj.str_field("name")?.to_string(),
+                year: sj.i64_or("year", 0),
+                cpu_cores: sj.i64_field("cpu_cores")?,
+                memory_gb: sj.i64_field("memory_gb")?,
+                nvme_tb: sj.i64_field("nvme_tb")?,
+                gpus,
+            });
+        }
+        anyhow::ensure!(!servers.is_empty(), "config has no servers");
+
+        let parse_layout = |key: &str| -> Vec<MigProfile> {
+            j.at(&["mig", key])
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .filter_map(MigProfile::parse)
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+
+        Ok(PlatformConfig {
+            name: j.str_or("name", "ai-infn").to_string(),
+            servers,
+            a100_layout: parse_layout("default_a100_layout"),
+            a30_layout: parse_layout("default_a30_layout"),
+            interactive_share: j.at(&["queues", "interactive_share"]).and_then(Json::as_f64).unwrap_or(0.6),
+            backoff_base: j.at(&["queues", "backoff_base_seconds"]).and_then(Json::as_f64).unwrap_or(30.0),
+            idle_timeout: j.at(&["hub", "idle_timeout_hours"]).and_then(Json::as_f64).unwrap_or(2.0) * 3600.0,
+            token_ttl: j.at(&["hub", "token_ttl_hours"]).and_then(Json::as_f64).unwrap_or(12.0) * 3600.0,
+            users: j.at(&["hub", "users"]).and_then(Json::as_i64).unwrap_or(78) as usize,
+            projects: j.at(&["hub", "projects"]).and_then(Json::as_i64).unwrap_or(20) as usize,
+            federation_enabled: j
+                .at(&["federation", "enabled"])
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            federation_scale: j.at(&["federation", "scale"]).and_then(Json::as_i64).unwrap_or(1) as usize,
+            scrape_interval: j
+                .at(&["monitoring", "scrape_interval_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(30.0),
+            retention: j.at(&["monitoring", "retention_hours"]).and_then(Json::as_f64).unwrap_or(336.0) * 3600.0,
+        })
+    }
+
+    /// Build the cluster nodes, applying the default MIG layouts to
+    /// MIG-capable devices.
+    pub fn build_nodes(&self) -> anyhow::Result<Vec<Node>> {
+        let mut nodes = Vec::new();
+        for s in &self.servers {
+            let mut gpus = Vec::new();
+            for (i, model) in s.gpus.iter().enumerate() {
+                let mut dev = GpuDevice::whole(format!("{}-gpu{i}", s.name), *model);
+                let layout = match model {
+                    GpuModel::A100_40GB if !self.a100_layout.is_empty() => {
+                        Some(MigLayout::new(*model, self.a100_layout.clone())?)
+                    }
+                    GpuModel::A30 if !self.a30_layout.is_empty() => {
+                        Some(MigLayout::new(*model, self.a30_layout.clone())?)
+                    }
+                    _ => None,
+                };
+                if let Some(l) = layout {
+                    dev.repartition(l)?;
+                }
+                gpus.push(dev);
+            }
+            let mut node = Node::physical(
+                s.name.clone(),
+                s.cpu_cores,
+                s.memory_gb << 30,
+                s.nvme_tb << 40,
+                gpus,
+            );
+            node.labels.insert("aiinfn/year".into(), s.year.to_string());
+            nodes.push(node);
+        }
+        Ok(nodes)
+    }
+
+    /// Inventory totals: (cores, mem bytes, nvme bytes, nvidia GPUs, FPGAs).
+    pub fn totals(&self) -> (i64, i64, i64, usize, usize) {
+        let mut t = (0, 0, 0, 0, 0);
+        for s in &self.servers {
+            t.0 += s.cpu_cores;
+            t.1 += s.memory_gb << 30;
+            t.2 += s.nvme_tb << 40;
+            t.3 += s.gpus.iter().filter(|g| !g.is_fpga()).count();
+            t.4 += s.gpus.iter().filter(|g| g.is_fpga()).count();
+        }
+        t
+    }
+}
+
+/// Path to the bundled config, resolved from the crate root.
+pub fn default_config_path() -> String {
+    format!("{}/configs/ai_infn.json", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_paper_inventory() {
+        let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+        assert_eq!(cfg.servers.len(), 4, "paper lists four servers");
+        let (cores, mem, nvme, gpus, fpgas) = cfg.totals();
+        assert_eq!(cores, 64 + 128 + 128 + 128);
+        assert_eq!(mem, (750 + 1024 + 1024 + 1024) << 30);
+        assert_eq!(nvme, (12 + 12 + 24 + 12) << 40);
+        // paper: 8 T4 + 5 RTX5000 (s1), 2 A100 + 1 A30 (s2), 3 A100 (s3), 1 RTX5000 (s4) = 20
+        assert_eq!(gpus, 20);
+        // 2 U50 + 1 U250 (s2), 5 U250 (s3), 2 U55c (s4) = 10
+        assert_eq!(fpgas, 10);
+        assert_eq!(cfg.users, 78);
+        assert_eq!(cfg.projects, 20);
+    }
+
+    #[test]
+    fn builds_nodes_with_mig_applied() {
+        let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+        let nodes = cfg.build_nodes().unwrap();
+        assert_eq!(nodes.len(), 4);
+        let s2 = nodes.iter().find(|n| n.name == "cnaf-ai02").unwrap();
+        // 2 A100s × 7 MIG slices
+        assert_eq!(s2.allocatable.get("nvidia.com/mig-1g.5gb"), 14);
+        // A30 partitioned into 4 × 1g.6gb
+        assert_eq!(s2.allocatable.get("nvidia.com/mig-1g.6gb"), 4);
+        assert_eq!(s2.allocatable.get("nvidia.com/gpu"), 0);
+        // FPGAs advertised
+        assert_eq!(s2.allocatable.get("xilinx.com/fpga-u50"), 2);
+        let s1 = nodes.iter().find(|n| n.name == "cnaf-ai01").unwrap();
+        assert_eq!(s1.allocatable.get("nvidia.com/gpu"), 13);
+    }
+
+    #[test]
+    fn rejects_malformed_config() {
+        assert!(PlatformConfig::parse("{}").is_err());
+        assert!(PlatformConfig::parse(r#"{"servers": [{"name":"x","cpu_cores":1,"memory_gb":1,"nvme_tb":1,"gpus":["H100"]}]}"#).is_err());
+    }
+}

@@ -1,0 +1,706 @@
+//! The platform facade: wires every subsystem into the running AI_INFN
+//! coordinator and drives it on the discrete-event engine.
+//!
+//! One `tick()` is the controller reconciliation loop a Kubernetes cluster
+//! runs continuously: Kueue admission (with interactive-first preemption),
+//! pod creation for admitted workloads, the scheduling pass, kubelet
+//! launches, Virtual-Kubelet forwarding + status sync for offloaded pods,
+//! idle-session culling, and monitoring scrapes. `run_for()` interleaves
+//! ticks with the event engine so multi-day campaigns run in milliseconds
+//! while remaining event-accurate.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::cluster::kubelet::{default_oracle, Kubelet};
+use crate::cluster::pod::{Payload, PodPhase, PodSpec};
+use crate::cluster::resources::{ResourceVec, MEMORY};
+use crate::cluster::scheduler::Scheduler;
+use crate::cluster::store::ClusterStore;
+use crate::gpu::dcgm::DcgmSimulator;
+use crate::hub::auth::AuthService;
+use crate::hub::profiles::Profile;
+use crate::hub::spawner::{SpawnCtx, SpawnError, Spawner};
+use crate::hub::users::Registry;
+use crate::monitoring::exporters;
+use crate::monitoring::tsdb::Tsdb;
+use crate::offload::sites::paper_federation;
+use crate::offload::vk::VirtualKubelet;
+use crate::offload::RemoteState;
+use crate::platform::config::PlatformConfig;
+use crate::queue::kueue::{ClusterQueue, Kueue, LocalQueue, PriorityClass, WorkloadState};
+use crate::sim::clock::{SimClock, Time};
+use crate::sim::engine::Engine;
+use crate::storage::nfs::NfsServer;
+use crate::storage::object::ObjectStore;
+use crate::util::IdGen;
+
+/// A batch job registered with the platform (pre- or post-admission).
+#[derive(Debug, Clone)]
+struct BatchJob {
+    workload: String,
+    template: PodSpec,
+    /// incarnation counter (new pod name per (re)admission)
+    incarnation: u32,
+    /// pod currently realizing this workload, if any
+    live_pod: Option<String>,
+    offloadable: bool,
+    duration: Time,
+}
+
+/// Spawn-latency and eviction counters (E3's metrics).
+#[derive(Debug, Default, Clone)]
+pub struct PlatformMetrics {
+    pub interactive_spawn_latencies: Vec<Time>,
+    pub batch_wait_times: Vec<Time>,
+    pub evictions: u64,
+    pub offloaded_pods: u64,
+    pub local_completions: u64,
+    pub remote_completions: u64,
+}
+
+/// The assembled platform.
+pub struct Platform {
+    pub engine: Engine,
+    pub store: Rc<RefCell<ClusterStore>>,
+    pub kueue: Kueue,
+    pub scheduler: Scheduler,
+    pub kubelet: Rc<Kubelet>,
+    pub registry: Registry,
+    pub auth: AuthService,
+    pub nfs: NfsServer,
+    pub objects: ObjectStore,
+    pub spawner: Spawner,
+    pub vks: Vec<VirtualKubelet>,
+    pub tsdb: Tsdb,
+    pub dcgm: DcgmSimulator,
+    pub metrics: PlatformMetrics,
+    pub config: PlatformConfig,
+    ids: IdGen,
+    batch_jobs: HashMap<String, BatchJob>,
+    scrape_interval: Time,
+    last_scrape: Time,
+}
+
+impl Platform {
+    /// Bootstrap from config: nodes (with MIG layouts), queues, registry,
+    /// hub, federation, monitoring.
+    pub fn bootstrap(config: PlatformConfig) -> anyhow::Result<Platform> {
+        let clock = SimClock::new();
+        let engine = Engine::new(clock);
+        let store = Rc::new(RefCell::new(ClusterStore::new()));
+
+        // nodes
+        let nodes = config.build_nodes()?;
+        let mut cluster_total = ResourceVec::new();
+        {
+            let mut st = store.borrow_mut();
+            for n in nodes {
+                cluster_total.add(&n.allocatable);
+                st.add_node(n, 0.0);
+            }
+        }
+
+        // federation: virtual nodes per site (built first so the batch
+        // queue's quota can cover remote capacity, as Kueue models remote
+        // resource flavors)
+        let mut vks = Vec::new();
+        if config.federation_enabled {
+            vks = paper_federation(config.federation_scale);
+            let mut st = store.borrow_mut();
+            for vk in &vks {
+                let node = crate::cluster::node::Node::virtual_node(
+                    vk.node_name.clone(),
+                    vk.capacity(),
+                );
+                st.add_node(node, 0.0);
+            }
+        }
+
+        // queues: interactive gets `interactive_share` of every local
+        // resource, batch the rest; one cohort so batch borrows idle
+        // interactive quota. Offloadable capacity (federation) is batch-only.
+        let mut interactive_quota = ResourceVec::new();
+        let mut batch_quota = ResourceVec::new();
+        for (k, v) in cluster_total.iter() {
+            let i = (v as f64 * config.interactive_share).round() as i64;
+            interactive_quota.set(k, i);
+            batch_quota.set(k, v - i);
+        }
+        for vk in &vks {
+            batch_quota.add(&vk.capacity());
+        }
+        let mut kueue = Kueue::new();
+        kueue.backoff_base = config.backoff_base;
+        kueue.add_cluster_queue(ClusterQueue {
+            name: "interactive-cq".into(),
+            cohort: Some("ai-infn".into()),
+            nominal: interactive_quota,
+            used: ResourceVec::new(),
+            can_borrow: true,
+            can_lend: true,
+        });
+        kueue.add_cluster_queue(ClusterQueue {
+            name: "batch-cq".into(),
+            cohort: Some("ai-infn".into()),
+            nominal: batch_quota,
+            used: ResourceVec::new(),
+            can_borrow: true,
+            can_lend: true,
+        });
+        kueue.add_local_queue(LocalQueue { name: "hub".into(), cluster_queue: "interactive-cq".into() });
+        kueue.add_local_queue(LocalQueue { name: "batch".into(), cluster_queue: "batch-cq".into() });
+
+        // registry: the paper's 78 users / 20 projects
+        let mut registry = Registry::new();
+        registry.seed_paper_population();
+
+        // hub
+        let mut spawner = Spawner::new("hub");
+        spawner.idle_timeout = config.idle_timeout;
+        spawner.token_ttl = config.token_ttl;
+
+        let kubelet = Kubelet::new(store.clone(), default_oracle());
+        Ok(Platform {
+            engine,
+            store,
+            kueue,
+            scheduler: Scheduler::default(),
+            kubelet,
+            registry,
+            auth: AuthService::new("ai-infn-platform-secret"),
+            nfs: NfsServer::new(),
+            objects: ObjectStore::new(),
+            spawner,
+            vks,
+            tsdb: Tsdb::new(config.retention),
+            dcgm: DcgmSimulator::new(42),
+            metrics: PlatformMetrics::default(),
+            scrape_interval: config.scrape_interval,
+            last_scrape: -1e18,
+            config,
+            ids: IdGen::new(),
+            batch_jobs: HashMap::new(),
+        })
+    }
+
+    pub fn now(&self) -> Time {
+        self.engine.now()
+    }
+
+    // ------------------------------------------------------------ frontend
+
+    /// Spawn an interactive session (JupyterHub flow). On admission the pod
+    /// is created; scheduling happens on the next tick.
+    pub fn spawn_session(&mut self, user: &str, profile: &Profile) -> Result<String, SpawnError> {
+        let at = self.engine.now();
+        self.auth.set_now(at);
+        let mut store = self.store.borrow_mut();
+        let mut ctx = SpawnCtx {
+            registry: &mut self.registry,
+            auth: &mut self.auth,
+            nfs: &mut self.nfs,
+            objects: &mut self.objects,
+            kueue: &mut self.kueue,
+            cluster: &mut store,
+        };
+        let s = self.spawner.spawn(&mut ctx, user, profile, at)?;
+        Ok(s.id)
+    }
+
+    /// Stop a session by id.
+    pub fn stop_session(&mut self, session_id: &str, reason: &str) -> anyhow::Result<()> {
+        let at = self.engine.now();
+        let mut store = self.store.borrow_mut();
+        let mut ctx = SpawnCtx {
+            registry: &mut self.registry,
+            auth: &mut self.auth,
+            nfs: &mut self.nfs,
+            objects: &mut self.objects,
+            kueue: &mut self.kueue,
+            cluster: &mut store,
+        };
+        self.spawner.stop(&mut ctx, session_id, at, reason)
+    }
+
+    /// Submit a batch job. `offloadable` jobs may run on federation sites.
+    pub fn submit_batch(
+        &mut self,
+        user: &str,
+        project: &str,
+        requests: ResourceVec,
+        duration: Time,
+        priority: PriorityClass,
+        offloadable: bool,
+    ) -> anyhow::Result<String> {
+        let at = self.engine.now();
+        let name = self.ids.next("job");
+        let wl = format!("wl-{name}");
+        self.kueue.submit(&wl, "batch", priority, requests.clone(), at)?;
+        let mut template = PodSpec::new(
+            name.clone(),
+            requests,
+            Payload::Sleep { duration },
+        )
+        .with_label("app", "batch")
+        .with_priority(priority.value())
+        .with_owner(user, project)
+        .in_namespace("batch");
+        if offloadable {
+            template = template.with_toleration("virtual-node.interlink/no-schedule");
+        }
+        self.batch_jobs.insert(
+            wl.clone(),
+            BatchJob {
+                workload: wl.clone(),
+                template,
+                incarnation: 0,
+                live_pod: None,
+                offloadable,
+                duration,
+            },
+        );
+        Ok(wl)
+    }
+
+    /// Convenience: an ML training job priced by the cost model (sim mode).
+    pub fn submit_ml_training(
+        &mut self,
+        user: &str,
+        project: &str,
+        flops: f64,
+        demand: crate::sim::trace::GpuDemand,
+        offloadable: bool,
+    ) -> anyhow::Result<String> {
+        use crate::sim::trace::GpuDemand;
+        let cm = crate::runtime::costmodel::CostModel::default();
+        let (requests, duration) = match demand {
+            GpuDemand::None => (
+                ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+                cm.cpu_duration(flops, 4.0),
+            ),
+            GpuDemand::MigSlice(c) => (
+                // the fleet advertises the max-sharing 7×1g layout; a c-slice
+                // demand maps to c × 1g.5gb compute-slice equivalents
+                ResourceVec::cpu_millis(4000)
+                    .with(MEMORY, 16 << 30)
+                    .with("nvidia.com/mig-1g.5gb", c.min(7) as i64),
+                cm.duration(flops, crate::gpu::GpuModel::A100_40GB, demand),
+            ),
+            GpuDemand::WholeGpu => (
+                ResourceVec::cpu_millis(8000)
+                    .with(MEMORY, 32 << 30)
+                    .with(crate::cluster::resources::GPU, 1),
+                cm.duration(flops, crate::gpu::GpuModel::TeslaT4, demand),
+            ),
+        };
+        self.submit_batch(user, project, requests, duration, PriorityClass::Batch, offloadable)
+    }
+
+    // ------------------------------------------------------------ tick
+
+    /// One reconciliation pass at the current sim time.
+    pub fn tick(&mut self) {
+        let now = self.engine.now();
+        self.auth.set_now(now);
+
+        // 1. Kueue admission. Preemption may also have happened outside the
+        // tick (the spawner runs an admit pass synchronously at spawn time),
+        // so reconcile generically: any batch job whose workload is no
+        // longer Admitted must not have a live pod.
+        let result = self.kueue.admit_pass(now);
+        let to_evict: Vec<(String, String)> = self
+            .batch_jobs
+            .values()
+            .filter_map(|j| {
+                let pod = j.live_pod.clone()?;
+                let admitted = self
+                    .kueue
+                    .workload(&j.workload)
+                    .map(|w| w.state == WorkloadState::Admitted)
+                    .unwrap_or(false);
+                if admitted {
+                    None
+                } else {
+                    Some((j.workload.clone(), pod))
+                }
+            })
+            .collect();
+        for (wl, pod) in to_evict {
+            let live = {
+                let st = self.store.borrow();
+                st.pod(&pod)
+                    .map(|p| matches!(p.status.phase, PodPhase::Pending | PodPhase::Scheduled | PodPhase::Running))
+                    .unwrap_or(false)
+            };
+            if live {
+                self.metrics.evictions += 1;
+                // offloaded pods are cancelled remotely too
+                self.cancel_remote(&pod, now);
+                let mut st = self.store.borrow_mut();
+                let phase = st.pod(&pod).map(|p| p.status.phase);
+                match phase {
+                    Some(PodPhase::Scheduled) | Some(PodPhase::Running) => {
+                        st.evict_pod(&pod, now, false, "kueue preemption").ok();
+                    }
+                    Some(PodPhase::Pending) => {
+                        st.cancel_pending(&pod, now, "kueue preemption").ok();
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(j) = self.batch_jobs.get_mut(&wl) {
+                j.live_pod = None;
+            }
+        }
+        // 2. pods for newly admitted batch workloads
+        for wl_name in &result.admitted {
+            // interactive workloads already created their pod in spawn()
+            let Some(job) = self.batch_jobs.get_mut(wl_name) else { continue };
+            job.incarnation += 1;
+            let mut spec = job.template.clone();
+            spec.name = format!("{}-r{}", job.template.name, job.incarnation);
+            job.live_pod = Some(spec.name.clone());
+            let wl = self.kueue.workload(wl_name);
+            if let Some(w) = wl {
+                self.metrics.batch_wait_times.push(w.admitted_at.unwrap_or(now) - w.created_at);
+            }
+            self.store.borrow_mut().create_pod(spec, now);
+        }
+
+        // 3. scheduling pass
+        let (placed, _failed) = {
+            let mut st = self.store.borrow_mut();
+            self.scheduler.schedule_pending(&mut st, now)
+        };
+
+        // 4. launch placed pods: local kubelet or VK forward
+        for pod_name in placed {
+            let (node, spec, is_session) = {
+                let st = self.store.borrow();
+                let p = st.pod(&pod_name).unwrap();
+                (
+                    p.status.node.clone().unwrap_or_default(),
+                    p.spec.clone(),
+                    matches!(p.spec.payload, Payload::Session { .. }),
+                )
+            };
+            if is_session {
+                // spawn-latency metric: creation → scheduled
+                let st = self.store.borrow();
+                if let Some(lat) = st.pod(&pod_name).and_then(|p| p.status.schedule_latency()) {
+                    drop(st);
+                    self.metrics.interactive_spawn_latencies.push(lat);
+                }
+            }
+            let is_virtual = self
+                .store
+                .borrow()
+                .node(&node)
+                .map(|n| n.virtual_node)
+                .unwrap_or(false);
+            if is_virtual {
+                let duration = match &spec.payload {
+                    Payload::Sleep { duration } => *duration,
+                    Payload::Session { idle_after } => *idle_after,
+                    Payload::MlJob { steps, .. } => *steps as f64 * 0.5,
+                    Payload::Burn { flops } => flops / 1e12,
+                };
+                if let Some(vk) = self.vks.iter_mut().find(|v| v.node_name == node) {
+                    if vk.create_pod(&spec, duration, now).is_ok() {
+                        self.metrics.offloaded_pods += 1;
+                    } else {
+                        let mut st = self.store.borrow_mut();
+                        st.evict_pod(&pod_name, now, true, "interlink create failed").ok();
+                    }
+                }
+            } else {
+                self.kubelet.launch(&mut self.engine, &pod_name);
+            }
+        }
+
+        // 5. VK status sync → pod phases
+        let mut updates = Vec::new();
+        for vk in &mut self.vks {
+            for u in vk.sync(now) {
+                updates.push(u);
+            }
+        }
+        for u in updates {
+            let mut st = self.store.borrow_mut();
+            match u.state {
+                RemoteState::Running => {
+                    st.mark_running(&u.pod, now).ok();
+                }
+                RemoteState::Completed => {
+                    let live = st
+                        .pod(&u.pod)
+                        .map(|p| !p.status.phase.is_terminal())
+                        .unwrap_or(false);
+                    if live {
+                        if st.pod(&u.pod).map(|p| p.status.phase == PodPhase::Scheduled).unwrap_or(false) {
+                            st.mark_running(&u.pod, now).ok();
+                        }
+                        st.finish_pod(&u.pod, PodPhase::Succeeded, now, "remote completed").ok();
+                        self.metrics.remote_completions += 1;
+                    }
+                }
+                RemoteState::Failed => {
+                    st.finish_pod(&u.pod, PodPhase::Failed, now, "remote failed").ok();
+                }
+                _ => {}
+            }
+        }
+
+        // 6. finished pods → finish workloads
+        let finished: Vec<(String, Option<String>)> = self
+            .batch_jobs
+            .values()
+            .filter_map(|j| {
+                let pod = j.live_pod.as_ref()?;
+                let st = self.store.borrow();
+                let p = st.pod(pod)?;
+                if p.status.phase == PodPhase::Succeeded || p.status.phase == PodPhase::Failed {
+                    Some((j.workload.clone(), j.live_pod.clone()))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        for (wl, pod) in finished {
+            // local-vs-remote completion accounting
+            if let Some(pod) = &pod {
+                let st = self.store.borrow();
+                let remote = st
+                    .pod(pod)
+                    .and_then(|p| p.status.node.clone())
+                    .and_then(|n| st.node(&n).map(|nd| nd.virtual_node))
+                    .unwrap_or(false);
+                if !remote {
+                    self.metrics.local_completions += 1;
+                }
+            }
+            self.kueue.finish(&wl).ok();
+            if let Some(j) = self.batch_jobs.get_mut(&wl) {
+                j.live_pod = None;
+            }
+        }
+
+        // 7. idle culling
+        {
+            let mut st = self.store.borrow_mut();
+            let mut ctx = SpawnCtx {
+                registry: &mut self.registry,
+                auth: &mut self.auth,
+                nfs: &mut self.nfs,
+                objects: &mut self.objects,
+                kueue: &mut self.kueue,
+                cluster: &mut st,
+            };
+            self.spawner.cull_idle(&mut ctx, now);
+        }
+
+        // 8. monitoring scrape
+        if now - self.last_scrape >= self.scrape_interval {
+            self.last_scrape = now;
+            let st = self.store.borrow();
+            exporters::scrape_nodes(&mut self.tsdb, &st, now);
+            exporters::scrape_gpus(&mut self.tsdb, &st, &mut self.dcgm, now);
+            exporters::scrape_pods(&mut self.tsdb, &st, now);
+            drop(st);
+            exporters::scrape_storage(&mut self.tsdb, &self.nfs, &self.objects, now);
+        }
+    }
+
+    fn cancel_remote(&mut self, pod: &str, now: Time) {
+        let node = self.store.borrow().pod(pod).and_then(|p| p.status.node.clone());
+        if let Some(node) = node {
+            if let Some(vk) = self.vks.iter_mut().find(|v| v.node_name == node) {
+                vk.delete_pod(pod, now).ok();
+            }
+        }
+    }
+
+    /// Drive the platform: engine events interleaved with controller ticks.
+    pub fn run_for(&mut self, duration: Time, tick_period: Time) {
+        let t_end = self.engine.now() + duration;
+        while self.engine.now() < t_end {
+            let next = (self.engine.now() + tick_period).min(t_end);
+            self.engine.run_until(next);
+            self.tick();
+        }
+    }
+
+    /// Cluster-wide GPU-ish utilization snapshot in [0,1]: allocated share
+    /// of all accelerator extended resources on physical nodes.
+    pub fn accelerator_utilization(&self) -> f64 {
+        let st = self.store.borrow();
+        let (used, total) = st.utilization(true);
+        let mut u = 0.0;
+        let mut t = 0.0;
+        for (k, cap) in total.iter() {
+            if k.starts_with("nvidia.com/") {
+                t += cap as f64;
+                u += used.get(k) as f64;
+            }
+        }
+        if t == 0.0 {
+            0.0
+        } else {
+            u / t
+        }
+    }
+
+    /// Count of pods by phase (dashboard/report).
+    pub fn pod_phase_counts(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let st = self.store.borrow();
+        let mut m = std::collections::BTreeMap::new();
+        for p in st.pods() {
+            let k = match p.status.phase {
+                PodPhase::Pending => "pending",
+                PodPhase::Scheduled => "scheduled",
+                PodPhase::Running => "running",
+                PodPhase::Succeeded => "succeeded",
+                PodPhase::Failed => "failed",
+                PodPhase::Evicted => "evicted",
+            };
+            *m.entry(k).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hub::profiles::default_catalogue;
+    use crate::platform::config::default_config_path;
+    use crate::sim::trace::GpuDemand;
+
+    fn platform() -> Platform {
+        let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+        Platform::bootstrap(cfg).unwrap()
+    }
+
+    #[test]
+    fn bootstrap_builds_paper_cluster() {
+        let p = platform();
+        let st = p.store.borrow();
+        // 4 physical + 4 virtual (federation)
+        assert_eq!(st.node_count(), 8);
+        let (_, total) = st.utilization(true);
+        assert_eq!(total.get("nvidia.com/mig-1g.5gb"), 35); // 5 A100 × 7
+        assert_eq!(p.registry.user_count(), 78);
+    }
+
+    #[test]
+    fn session_spawn_schedules_and_runs() {
+        let mut p = platform();
+        let profile = default_catalogue()
+            .into_iter()
+            .find(|x| x.name == "tensorflow-mig-1g")
+            .unwrap();
+        let _sid = p.spawn_session("user001", &profile).unwrap();
+        p.run_for(120.0, 10.0);
+        let counts = p.pod_phase_counts();
+        assert_eq!(counts.get("running"), Some(&1), "{counts:?}");
+        assert!(!p.metrics.interactive_spawn_latencies.is_empty());
+        assert!(p.accelerator_utilization() > 0.0);
+    }
+
+    #[test]
+    fn batch_job_completes_locally() {
+        let mut p = platform();
+        let wl = p
+            .submit_batch(
+                "user002",
+                "project02",
+                ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+                100.0,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap();
+        p.run_for(400.0, 10.0);
+        assert_eq!(
+            p.kueue.workload(&wl).unwrap().state,
+            WorkloadState::Finished
+        );
+        assert_eq!(p.metrics.local_completions, 1);
+        assert_eq!(p.metrics.remote_completions, 0);
+    }
+
+    #[test]
+    fn overflow_jobs_offload_to_federation() {
+        let mut p = platform();
+        // 60 × 16-core jobs: local physical CPUs (~442 allocatable cores)
+        // hold ~27 concurrently; the rest must flow to the federation sites.
+        let mut wls = Vec::new();
+        for i in 0..60 {
+            wls.push(
+                p.submit_batch(
+                    &format!("user{:03}", i % 78),
+                    "project05",
+                    ResourceVec::cpu_millis(16_000).with(MEMORY, 32 << 30),
+                    600.0,
+                    PriorityClass::Batch,
+                    true,
+                )
+                .unwrap(),
+            );
+        }
+        p.run_for(3600.0, 10.0);
+        assert!(p.metrics.offloaded_pods > 0, "some jobs must offload: {:?}", p.metrics);
+        assert!(p.metrics.remote_completions > 0, "{:?}", p.metrics);
+        assert!(p.metrics.local_completions > 0, "{:?}", p.metrics);
+        // every workload eventually finishes
+        let done = wls
+            .iter()
+            .filter(|w| p.kueue.workload(w).unwrap().state == WorkloadState::Finished)
+            .count();
+        assert_eq!(done, 60, "{:?}", p.metrics);
+    }
+
+    #[test]
+    fn interactive_preempts_batch_end_to_end() {
+        let mut p = platform();
+        // swamp every MIG slice with batch work
+        for i in 0..40 {
+            p.submit_ml_training(
+                &format!("user{:03}", i % 78),
+                "project00",
+                2e16, // ~20 min per MIG-1g job: still running at sample time
+                GpuDemand::MigSlice(1),
+                false,
+            )
+            .unwrap();
+        }
+        p.run_for(300.0, 10.0);
+        let util_before = p.accelerator_utilization();
+        assert!(util_before > 0.5, "batch should saturate MIG slices: {util_before}");
+        // now an interactive user arrives
+        let profile = default_catalogue()
+            .into_iter()
+            .find(|x| x.name == "tensorflow-mig-1g")
+            .unwrap();
+        p.spawn_session("user010", &profile).unwrap();
+        p.run_for(300.0, 10.0);
+        // session pod must be running; at least one batch eviction happened
+        let st = p.store.borrow();
+        let session_running = st
+            .pods()
+            .any(|pd| pd.spec.labels.get("app").map(|a| a == "jupyterlab").unwrap_or(false)
+                && pd.status.phase == PodPhase::Running);
+        drop(st);
+        assert!(session_running);
+    }
+
+    #[test]
+    fn monitoring_scrapes_accumulate() {
+        let mut p = platform();
+        p.run_for(300.0, 10.0);
+        assert!(p.tsdb.samples_ingested() > 100);
+        assert!(p.tsdb.series_count() > 20);
+    }
+}

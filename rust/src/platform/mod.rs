@@ -1,0 +1,9 @@
+//! Platform assembly (DESIGN.md S29): typed configuration from the paper's
+//! §2 inventory, and the facade that wires cluster, queues, hub, storage,
+//! offloading and monitoring into the running coordinator.
+
+pub mod config;
+pub mod facade;
+
+pub use config::{default_config_path, PlatformConfig};
+pub use facade::{Platform, PlatformMetrics};

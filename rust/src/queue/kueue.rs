@@ -1,0 +1,578 @@
+//! Kueue-like job queueing: quota-based admission with priorities, cohort
+//! borrowing, and interactive-first preemption.
+//!
+//! This models the controller the paper deploys (§3): *"The local batch
+//! system is managed by Kueue ... designed to opportunistically run
+//! non-interactive workloads ... Kueue is configured to prioritize
+//! JupyterLab sessions. If resource contention occurs, running batch jobs
+//! are automatically evicted to free up hardware for interactive
+//! development."*
+//!
+//! Objects follow upstream Kueue: a [`ClusterQueue`] holds nominal quota per
+//! resource; [`LocalQueue`]s map namespaces onto cluster queues; a
+//! [`Workload`] is the queued unit. Queues in the same *cohort* may borrow
+//! each other's unused quota (how the batch queue opportunistically uses the
+//! interactive queue's idle GPUs at night).
+
+use std::collections::HashMap;
+
+use crate::cluster::resources::ResourceVec;
+use crate::sim::clock::Time;
+
+/// Priority classes used on the platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PriorityClass {
+    /// Opportunistic batch — evictable.
+    Batch = 0,
+    /// Production batch (paper: Snakemake controllers etc.).
+    BatchHigh = 50,
+    /// Interactive JupyterLab sessions — never evicted for batch.
+    Interactive = 100,
+}
+
+impl PriorityClass {
+    pub fn value(&self) -> i32 {
+        *self as i32
+    }
+}
+
+/// Admission state of a workload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadState {
+    /// Waiting for quota.
+    Queued,
+    /// Quota reserved; pods may be created.
+    Admitted,
+    /// Evicted due to contention; back in queue after backoff.
+    EvictedPendingRequeue { until: Time },
+    Finished,
+}
+
+/// The queued unit: one job's aggregate resource ask.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub queue: String, // LocalQueue name
+    pub priority: PriorityClass,
+    pub requests: ResourceVec,
+    pub state: WorkloadState,
+    pub created_at: Time,
+    pub admitted_at: Option<Time>,
+    pub evictions: u32,
+    /// Which ClusterQueue's quota the admission drew from (for borrowing
+    /// accounting: may differ from the owning queue).
+    pub charged_to: Option<String>,
+}
+
+/// Nominal quota holder.
+#[derive(Debug, Clone)]
+pub struct ClusterQueue {
+    pub name: String,
+    pub cohort: Option<String>,
+    pub nominal: ResourceVec,
+    /// Quota currently consumed by admitted workloads charged here.
+    pub used: ResourceVec,
+    /// May workloads of this queue borrow unused quota in the cohort?
+    pub can_borrow: bool,
+    /// May idle quota of this queue be lent to the cohort?
+    pub can_lend: bool,
+}
+
+impl ClusterQueue {
+    pub fn free(&self) -> ResourceVec {
+        self.nominal.checked_sub(&self.used).unwrap_or_default()
+    }
+}
+
+/// Namespace-facing queue → ClusterQueue mapping.
+#[derive(Debug, Clone)]
+pub struct LocalQueue {
+    pub name: String,
+    pub cluster_queue: String,
+}
+
+/// The Kueue controller state.
+#[derive(Debug, Default)]
+pub struct Kueue {
+    cluster_queues: HashMap<String, ClusterQueue>,
+    local_queues: HashMap<String, LocalQueue>,
+    workloads: HashMap<String, Workload>,
+    /// FIFO arrival order for fair scanning.
+    order: Vec<String>,
+    /// Requeue backoff base (doubles per eviction).
+    pub backoff_base: Time,
+}
+
+/// Outcome of an admission pass.
+#[derive(Debug, Default, PartialEq)]
+pub struct AdmissionResult {
+    pub admitted: Vec<String>,
+    /// Workloads evicted to make room (victims), with the preemptor.
+    pub preempted: Vec<(String, String)>,
+}
+
+impl Kueue {
+    pub fn new() -> Self {
+        Kueue { backoff_base: 30.0, ..Default::default() }
+    }
+
+    pub fn add_cluster_queue(&mut self, cq: ClusterQueue) {
+        self.cluster_queues.insert(cq.name.clone(), cq);
+    }
+
+    pub fn add_local_queue(&mut self, lq: LocalQueue) {
+        assert!(
+            self.cluster_queues.contains_key(&lq.cluster_queue),
+            "local queue {} references unknown cluster queue {}",
+            lq.name,
+            lq.cluster_queue
+        );
+        self.local_queues.insert(lq.name.clone(), lq);
+    }
+
+    pub fn cluster_queue(&self, name: &str) -> Option<&ClusterQueue> {
+        self.cluster_queues.get(name)
+    }
+
+    pub fn workload(&self, name: &str) -> Option<&Workload> {
+        self.workloads.get(name)
+    }
+
+    pub fn workloads(&self) -> impl Iterator<Item = &Workload> {
+        self.workloads.values()
+    }
+
+    /// Submit a workload to a LocalQueue.
+    pub fn submit(
+        &mut self,
+        name: impl Into<String>,
+        queue: &str,
+        priority: PriorityClass,
+        requests: ResourceVec,
+        at: Time,
+    ) -> anyhow::Result<String> {
+        let name = name.into();
+        anyhow::ensure!(self.local_queues.contains_key(queue), "unknown local queue {queue}");
+        anyhow::ensure!(!self.workloads.contains_key(&name), "duplicate workload {name}");
+        self.workloads.insert(
+            name.clone(),
+            Workload {
+                name: name.clone(),
+                queue: queue.to_string(),
+                priority,
+                requests,
+                state: WorkloadState::Queued,
+                created_at: at,
+                admitted_at: None,
+                evictions: 0,
+                charged_to: None,
+            },
+        );
+        self.order.push(name.clone());
+        Ok(name)
+    }
+
+    /// Cohort-wide free quota available to `cq` (own free + lendable free of
+    /// cohort peers, if cq can borrow).
+    fn available_for(&self, cq: &ClusterQueue) -> ResourceVec {
+        let mut avail = cq.free();
+        if cq.can_borrow {
+            if let Some(cohort) = &cq.cohort {
+                for peer in self.cluster_queues.values() {
+                    if peer.name != cq.name && peer.cohort.as_deref() == Some(cohort) && peer.can_lend {
+                        avail.add(&peer.free());
+                    }
+                }
+            }
+        }
+        avail
+    }
+
+    /// Charge `req` against `cq` first, overflowing to lendable cohort peers.
+    /// Returns the primary queue charged (== cq name; peers' `used` grows too
+    /// — we track the full split in `loans`).
+    fn charge(&mut self, cq_name: &str, req: &ResourceVec) {
+        // Greedy: take from own free first, then peers.
+        let (own_free, cohort, _can_borrow) = {
+            let cq = &self.cluster_queues[cq_name];
+            (cq.free(), cq.cohort.clone(), cq.can_borrow)
+        };
+        let mut remaining = req.clone();
+        let mut own_take = ResourceVec::new();
+        for (k, v) in req.iter() {
+            let take = v.min(own_free.get(k));
+            if take > 0 {
+                own_take.set(k, take);
+                remaining.set(k, v - take);
+            }
+        }
+        {
+            let cq = self.cluster_queues.get_mut(cq_name).unwrap();
+            cq.used.add(&own_take);
+        }
+        if !remaining.is_empty() {
+            if let Some(cohort) = cohort {
+                let peers: Vec<String> = self
+                    .cluster_queues
+                    .values()
+                    .filter(|p| p.name != cq_name && p.cohort.as_deref() == Some(&cohort) && p.can_lend)
+                    .map(|p| p.name.clone())
+                    .collect();
+                for peer_name in peers {
+                    if remaining.is_empty() {
+                        break;
+                    }
+                    let free = self.cluster_queues[&peer_name].free();
+                    let mut take = ResourceVec::new();
+                    for (k, v) in remaining.clone().iter() {
+                        let t = v.min(free.get(k));
+                        if t > 0 {
+                            take.set(k, t);
+                            remaining.set(k, v - t);
+                        }
+                    }
+                    self.cluster_queues.get_mut(&peer_name).unwrap().used.add(&take);
+                }
+            }
+        }
+        debug_assert!(remaining.is_empty(), "charge exceeded cohort capacity: {remaining}");
+    }
+
+    fn uncharge(&mut self, cq_name: &str, req: &ResourceVec) {
+        // Inverse of charge: release own first then peers. Since we don't
+        // persist the split, release greedily from used amounts.
+        let mut remaining = req.clone();
+        let mut release_own = ResourceVec::new();
+        {
+            let cq = &self.cluster_queues[cq_name];
+            for (k, v) in req.iter() {
+                let r = v.min(cq.used.get(k));
+                if r > 0 {
+                    release_own.set(k, r);
+                    remaining.set(k, v - r);
+                }
+            }
+        }
+        self.cluster_queues.get_mut(cq_name).unwrap().used.sub(&release_own);
+        if !remaining.is_empty() {
+            let cohort = self.cluster_queues[cq_name].cohort.clone();
+            if let Some(cohort) = cohort {
+                let peers: Vec<String> = self
+                    .cluster_queues
+                    .values()
+                    .filter(|p| p.name != cq_name && p.cohort.as_deref() == Some(&cohort))
+                    .map(|p| p.name.clone())
+                    .collect();
+                for peer in peers {
+                    if remaining.is_empty() {
+                        break;
+                    }
+                    let mut take = ResourceVec::new();
+                    {
+                        let p = &self.cluster_queues[&peer];
+                        for (k, v) in remaining.clone().iter() {
+                            let t = v.min(p.used.get(k));
+                            if t > 0 {
+                                take.set(k, t);
+                                remaining.set(k, v - t);
+                            }
+                        }
+                    }
+                    self.cluster_queues.get_mut(&peer).unwrap().used.sub(&take);
+                }
+            }
+        }
+    }
+
+    /// One admission pass: admit every queued workload whose quota fits
+    /// (priority order, then FIFO). If a high-priority workload does not fit,
+    /// evict admitted lower-priority workloads (smallest sufficient set,
+    /// newest first) — the paper's interactive-over-batch policy.
+    pub fn admit_pass(&mut self, at: Time) -> AdmissionResult {
+        let mut result = AdmissionResult::default();
+
+        // candidates: Queued or requeue-expired evicted
+        let mut candidates: Vec<(i32, usize, String)> = Vec::new();
+        for (idx, name) in self.order.iter().enumerate() {
+            let w = &self.workloads[name];
+            let ready = match &w.state {
+                WorkloadState::Queued => true,
+                WorkloadState::EvictedPendingRequeue { until } => *until <= at,
+                _ => false,
+            };
+            if ready {
+                candidates.push((w.priority.value(), idx, name.clone()));
+            }
+        }
+        candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+
+        for (_, _, name) in candidates {
+            let (queue, priority, req) = {
+                let w = &self.workloads[&name];
+                (w.queue.clone(), w.priority, w.requests.clone())
+            };
+            let cq_name = self.local_queues[&queue].cluster_queue.clone();
+            let avail = self.available_for(&self.cluster_queues[&cq_name]);
+
+            if req.fits_in(&avail) {
+                self.charge(&cq_name, &req);
+                let w = self.workloads.get_mut(&name).unwrap();
+                w.state = WorkloadState::Admitted;
+                w.admitted_at = Some(at);
+                w.charged_to = Some(cq_name);
+                result.admitted.push(name);
+                continue;
+            }
+
+            // try preemption: evict lower-priority admitted workloads
+            let mut victims: Vec<String> = self
+                .workloads
+                .values()
+                .filter(|v| {
+                    v.state == WorkloadState::Admitted && v.priority.value() < priority.value()
+                })
+                .map(|v| v.name.clone())
+                .collect();
+            if victims.is_empty() {
+                continue;
+            }
+            // newest admitted first (least sunk work)
+            victims.sort_by(|a, b| {
+                let ta = self.workloads[a].admitted_at.unwrap_or(0.0);
+                let tb = self.workloads[b].admitted_at.unwrap_or(0.0);
+                tb.partial_cmp(&ta).unwrap()
+            });
+
+            let mut evicted_now = Vec::new();
+            for victim in victims {
+                // hypothetically release victim, check fit
+                let (vq, vreq) = {
+                    let v = &self.workloads[&victim];
+                    (v.charged_to.clone().unwrap(), v.requests.clone())
+                };
+                self.uncharge(&vq, &vreq);
+                {
+                    let backoff = self.backoff_base;
+                    let v = self.workloads.get_mut(&victim).unwrap();
+                    v.evictions += 1;
+                    let delay = backoff * (1 << (v.evictions - 1).min(6)) as f64;
+                    v.state = WorkloadState::EvictedPendingRequeue { until: at + delay };
+                    v.charged_to = None;
+                }
+                evicted_now.push(victim.clone());
+                result.preempted.push((victim, name.clone()));
+
+                let avail = self.available_for(&self.cluster_queues[&cq_name]);
+                if req.fits_in(&avail) {
+                    break;
+                }
+            }
+
+            let avail = self.available_for(&self.cluster_queues[&cq_name]);
+            if req.fits_in(&avail) {
+                self.charge(&cq_name, &req);
+                let w = self.workloads.get_mut(&name).unwrap();
+                w.state = WorkloadState::Admitted;
+                w.admitted_at = Some(at);
+                w.charged_to = Some(cq_name);
+                result.admitted.push(name);
+            }
+            // note: evictions stand even if still unfit (mirrors Kueue's
+            // preemption-then-retry behaviour; the evicted work requeues).
+            let _ = evicted_now;
+        }
+        result
+    }
+
+    /// Mark a workload finished and release its quota.
+    pub fn finish(&mut self, name: &str) -> anyhow::Result<()> {
+        let (state, cq, req) = {
+            let w = self
+                .workloads
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?;
+            (w.state.clone(), w.charged_to.clone(), w.requests.clone())
+        };
+        if state == WorkloadState::Admitted {
+            self.uncharge(&cq.unwrap(), &req);
+        }
+        let w = self.workloads.get_mut(name).unwrap();
+        w.state = WorkloadState::Finished;
+        w.charged_to = None;
+        Ok(())
+    }
+
+    /// Queue wait time for admitted/finished workloads.
+    pub fn wait_time(&self, name: &str) -> Option<Time> {
+        let w = self.workloads.get(name)?;
+        Some(w.admitted_at? - w.created_at)
+    }
+
+    /// Total used vs nominal across cluster queues (utilization metric).
+    pub fn quota_utilization(&self) -> (ResourceVec, ResourceVec) {
+        let mut used = ResourceVec::new();
+        let mut nominal = ResourceVec::new();
+        for cq in self.cluster_queues.values() {
+            used.add(&cq.used);
+            nominal.add(&cq.nominal);
+        }
+        (used, nominal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::resources::{ResourceVec, CPU, GPU};
+
+    fn rv(cpu: i64, gpu: i64) -> ResourceVec {
+        let mut r = ResourceVec::cpu_millis(cpu);
+        if gpu > 0 {
+            r.set(GPU, gpu);
+        }
+        r
+    }
+
+    /// Two queues in one cohort: interactive (lends, never borrows-needy)
+    /// and batch (borrows).
+    fn kueue() -> Kueue {
+        let mut k = Kueue::new();
+        k.add_cluster_queue(ClusterQueue {
+            name: "interactive-cq".into(),
+            cohort: Some("ai-infn".into()),
+            nominal: rv(16_000, 4),
+            used: ResourceVec::new(),
+            can_borrow: false,
+            can_lend: true,
+        });
+        k.add_cluster_queue(ClusterQueue {
+            name: "batch-cq".into(),
+            cohort: Some("ai-infn".into()),
+            nominal: rv(8_000, 2),
+            used: ResourceVec::new(),
+            can_borrow: true,
+            can_lend: false,
+        });
+        k.add_local_queue(LocalQueue { name: "hub".into(), cluster_queue: "interactive-cq".into() });
+        k.add_local_queue(LocalQueue { name: "batch".into(), cluster_queue: "batch-cq".into() });
+        k
+    }
+
+    #[test]
+    fn admits_within_quota_fifo() {
+        let mut k = kueue();
+        k.submit("w1", "batch", PriorityClass::Batch, rv(4000, 1), 0.0).unwrap();
+        k.submit("w2", "batch", PriorityClass::Batch, rv(4000, 1), 1.0).unwrap();
+        k.submit("w3", "batch", PriorityClass::Batch, rv(4000, 1), 2.0).unwrap();
+        let r = k.admit_pass(10.0);
+        // batch nominal = 8000/2gpu; w3 borrows from interactive (idle 4 GPUs)
+        assert_eq!(r.admitted.len(), 3);
+        assert_eq!(k.wait_time("w1"), Some(10.0));
+    }
+
+    #[test]
+    fn borrowing_stops_when_cohort_exhausted() {
+        let mut k = kueue();
+        // 6 GPU jobs: 2 own + 4 borrowed = 6 admitted, 7th waits
+        for i in 0..7 {
+            k.submit(format!("w{i}"), "batch", PriorityClass::Batch, rv(1000, 1), 0.0).unwrap();
+        }
+        let r = k.admit_pass(0.0);
+        assert_eq!(r.admitted.len(), 6);
+        assert_eq!(
+            k.workload("w6").unwrap().state,
+            WorkloadState::Queued
+        );
+    }
+
+    #[test]
+    fn interactive_preempts_batch_on_contention() {
+        let mut k = kueue();
+        // batch borrows everything
+        for i in 0..6 {
+            k.submit(format!("b{i}"), "batch", PriorityClass::Batch, rv(1000, 1), 0.0).unwrap();
+        }
+        assert_eq!(k.admit_pass(0.0).admitted.len(), 6);
+        // an interactive session arrives needing 2 GPUs
+        k.submit("sess", "hub", PriorityClass::Interactive, rv(2000, 2), 100.0).unwrap();
+        let r = k.admit_pass(100.0);
+        assert!(r.admitted.contains(&"sess".to_string()));
+        assert!(!r.preempted.is_empty(), "batch jobs must be evicted");
+        // victims are newest-admitted batch jobs, with backoff requeue
+        for (victim, preemptor) in &r.preempted {
+            assert_eq!(preemptor, "sess");
+            match k.workload(victim).unwrap().state {
+                WorkloadState::EvictedPendingRequeue { until } => assert!(until > 100.0),
+                ref s => panic!("victim state {s:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batch_never_preempts_interactive() {
+        let mut k = kueue();
+        // interactive fills its own quota
+        for i in 0..4 {
+            k.submit(format!("s{i}"), "hub", PriorityClass::Interactive, rv(4000, 1), 0.0).unwrap();
+        }
+        assert_eq!(k.admit_pass(0.0).admitted.len(), 4);
+        // batch wants a GPU that only interactive quota could provide
+        k.submit("b0", "batch", PriorityClass::Batch, rv(1000, 3), 1.0).unwrap();
+        let r = k.admit_pass(1.0);
+        assert!(r.admitted.is_empty());
+        assert!(r.preempted.is_empty(), "batch must never evict interactive");
+    }
+
+    #[test]
+    fn evicted_workload_requeues_after_backoff() {
+        let mut k = kueue();
+        for i in 0..6 {
+            k.submit(format!("b{i}"), "batch", PriorityClass::Batch, rv(1000, 1), 0.0).unwrap();
+        }
+        k.admit_pass(0.0);
+        k.submit("sess", "hub", PriorityClass::Interactive, rv(2000, 4), 10.0).unwrap();
+        let r = k.admit_pass(10.0);
+        let victim = r.preempted[0].0.clone();
+        // before backoff expiry: not admitted
+        let r2 = k.admit_pass(11.0);
+        assert!(!r2.admitted.contains(&victim));
+        // finish the interactive session, wait out backoff → readmitted
+        k.finish("sess").unwrap();
+        let r3 = k.admit_pass(10.0 + 31.0);
+        assert!(r3.admitted.contains(&victim), "{r3:?}");
+    }
+
+    #[test]
+    fn finish_releases_quota_conservation_invariant() {
+        let mut k = kueue();
+        k.submit("w1", "batch", PriorityClass::Batch, rv(8000, 2), 0.0).unwrap();
+        k.admit_pass(0.0);
+        let (used, _) = k.quota_utilization();
+        assert_eq!(used.get(CPU), 8000);
+        k.finish("w1").unwrap();
+        let (used, _) = k.quota_utilization();
+        assert!(used.is_empty());
+    }
+
+    #[test]
+    fn borrow_charge_splits_across_queues() {
+        let mut k = kueue();
+        // 3 GPUs: 2 from batch quota + 1 borrowed from interactive
+        k.submit("w1", "batch", PriorityClass::Batch, rv(1000, 3), 0.0).unwrap();
+        k.admit_pass(0.0);
+        assert_eq!(k.cluster_queue("batch-cq").unwrap().used.get(GPU), 2);
+        assert_eq!(k.cluster_queue("interactive-cq").unwrap().used.get(GPU), 1);
+        // release restores both
+        k.finish("w1").unwrap();
+        assert_eq!(k.cluster_queue("batch-cq").unwrap().used.get(GPU), 0);
+        assert_eq!(k.cluster_queue("interactive-cq").unwrap().used.get(GPU), 0);
+    }
+
+    #[test]
+    fn duplicate_and_unknown_queue_rejected() {
+        let mut k = kueue();
+        k.submit("w", "batch", PriorityClass::Batch, rv(1, 0), 0.0).unwrap();
+        assert!(k.submit("w", "batch", PriorityClass::Batch, rv(1, 0), 0.0).is_err());
+        assert!(k.submit("x", "nope", PriorityClass::Batch, rv(1, 0), 0.0).is_err());
+    }
+}

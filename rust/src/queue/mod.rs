@@ -1,0 +1,7 @@
+//! Kueue-like batch queueing substrate (DESIGN.md S12): quota admission,
+//! cohort borrowing, and the interactive-over-batch preemption policy the
+//! paper describes in §3.
+
+pub mod kueue;
+
+pub use kueue::{AdmissionResult, ClusterQueue, Kueue, LocalQueue, PriorityClass, Workload, WorkloadState};

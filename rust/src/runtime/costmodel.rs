@@ -1,0 +1,83 @@
+//! Roofline cost model: converts payload FLOPs into simulated durations per
+//! accelerator, so discrete-event campaigns (E2–E4, E7) price ML jobs the
+//! way the real platform's hardware would.
+//!
+//! Calibration: the `effective_fraction` defaults to 0.35 — typical measured
+//! MFU/HFU for small-batch training on shared accelerators (far below peak,
+//! consistent with the mixed interactive workloads the paper targets). MIG
+//! slices scale by compute-slice fraction.
+
+use crate::gpu::models::GpuModel;
+use crate::sim::clock::Time;
+use crate::sim::trace::GpuDemand;
+
+/// Cost model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// fraction of peak tensor throughput actually achieved
+    pub effective_fraction: f64,
+    /// fixed per-job overhead (container + runtime init), seconds
+    pub fixed_overhead: Time,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { effective_fraction: 0.35, fixed_overhead: 5.0 }
+    }
+}
+
+impl CostModel {
+    /// Seconds to run `flops` on `model`, scaled for a MIG slice fraction.
+    pub fn duration(&self, flops: f64, model: GpuModel, demand: GpuDemand) -> Time {
+        let peak = model.peak_tensor_tflops() * 1e12;
+        let slice_frac = match demand {
+            GpuDemand::None => 1.0, // CPU job: callers use cpu_duration
+            GpuDemand::WholeGpu => 1.0,
+            GpuDemand::MigSlice(c) => c as f64 / model.mig_compute_slices().max(1) as f64,
+        };
+        let rate = peak * self.effective_fraction * slice_frac;
+        self.fixed_overhead + flops / rate.max(1.0)
+    }
+
+    /// CPU-only duration at a nominal per-core rate.
+    pub fn cpu_duration(&self, flops: f64, cores: f64) -> Time {
+        let rate = 25e9 * cores.max(0.25); // 25 GFLOPS/core effective
+        self.fixed_overhead + flops / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_beats_t4() {
+        let cm = CostModel::default();
+        let f = 1e15;
+        let a100 = cm.duration(f, GpuModel::A100_40GB, GpuDemand::WholeGpu);
+        let t4 = cm.duration(f, GpuModel::TeslaT4, GpuDemand::WholeGpu);
+        assert!(a100 < t4 / 3.0, "a100={a100} t4={t4}");
+    }
+
+    #[test]
+    fn mig_slice_scales_linearly() {
+        let cm = CostModel { fixed_overhead: 0.0, ..Default::default() };
+        let f = 1e15;
+        let whole = cm.duration(f, GpuModel::A100_40GB, GpuDemand::WholeGpu);
+        let one_slice = cm.duration(f, GpuModel::A100_40GB, GpuDemand::MigSlice(1));
+        assert!((one_slice / whole - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overhead_dominates_tiny_jobs() {
+        let cm = CostModel::default();
+        let d = cm.duration(1.0, GpuModel::A100_40GB, GpuDemand::WholeGpu);
+        assert!((d - cm.fixed_overhead).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cpu_duration_scales_with_cores() {
+        let cm = CostModel { fixed_overhead: 0.0, ..Default::default() };
+        assert!(cm.cpu_duration(1e12, 8.0) < cm.cpu_duration(1e12, 1.0) / 4.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (build
+//! time) and the Rust runtime (request time). Parsed with the in-house JSON
+//! substrate — no serde, no Python at runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One tensor argument/output spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.str_field("name")?.to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_i64).map(|v| v as usize).collect())
+                .unwrap_or_default(),
+            dtype: j.str_field("dtype")?.to_string(),
+        })
+    }
+}
+
+/// One compiled artifact (an HLO text file + its signature).
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One exported model preset.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub preset: String,
+    pub param_count: usize,
+    pub flops_per_train_step: f64,
+    pub seq: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    pub theta0: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl ModelEntry {
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// gpu_burn payload entry.
+#[derive(Debug, Clone)]
+pub struct BurnEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub n: usize,
+    pub iters: usize,
+    pub flops: f64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub burns: Vec<BurnEntry>,
+    pub corpus: PathBuf,
+    pub corpus_tokens: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading {}/manifest.json: {e} (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&raw).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        anyhow::ensure!(
+            j.str_or("format", "") == "hlo-text-v1",
+            "unsupported manifest format"
+        );
+
+        let mut models = Vec::new();
+        if let Some(ms) = j.get("models").and_then(Json::as_obj) {
+            for (preset, mj) in ms {
+                let cfg = mj.get("config").ok_or_else(|| anyhow::anyhow!("model config"))?;
+                let mut artifacts = Vec::new();
+                if let Some(arts) = mj.get("artifacts").and_then(Json::as_obj) {
+                    for (name, aj) in arts {
+                        let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                            aj.get(key)
+                                .and_then(Json::as_arr)
+                                .map(|a| a.iter().map(TensorSpec::from_json).collect())
+                                .unwrap_or_else(|| Ok(vec![]))
+                        };
+                        artifacts.push(Artifact {
+                            name: name.clone(),
+                            file: dir.join(aj.str_field("file")?),
+                            args: parse_specs("args")?,
+                            outputs: parse_specs("outputs")?,
+                        });
+                    }
+                }
+                models.push(ModelEntry {
+                    preset: preset.clone(),
+                    param_count: mj.i64_field("param_count")? as usize,
+                    flops_per_train_step: mj.f64_or("flops_per_train_step", 0.0),
+                    seq: cfg.i64_or("seq", 0) as usize,
+                    batch: cfg.i64_or("batch", 0) as usize,
+                    vocab: cfg.i64_or("vocab", 0) as usize,
+                    theta0: dir.join(mj.str_or("theta0", "")),
+                    artifacts,
+                });
+            }
+        }
+
+        let mut burns = Vec::new();
+        if let Some(bs) = j.get("gpu_burn").and_then(Json::as_obj) {
+            for (name, bj) in bs {
+                burns.push(BurnEntry {
+                    name: name.clone(),
+                    file: dir.join(bj.str_field("file")?),
+                    n: bj.i64_field("n")? as usize,
+                    iters: bj.i64_field("iters")? as usize,
+                    flops: bj.f64_or("flops", 0.0),
+                });
+            }
+        }
+
+        let corpus = j
+            .get("corpus")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing corpus"))?;
+        Ok(Manifest {
+            corpus_tokens: corpus.i64_or("tokens", 0) as usize,
+            corpus: dir.join(corpus.str_field("file")?),
+            dir,
+            models,
+            burns,
+        })
+    }
+
+    pub fn model(&self, preset: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.preset == preset)
+    }
+
+    /// Load the initial theta vector (little-endian f32).
+    pub fn load_theta0(&self, preset: &str) -> anyhow::Result<Vec<f32>> {
+        let m = self.model(preset).ok_or_else(|| anyhow::anyhow!("no preset {preset}"))?;
+        let bytes = std::fs::read(&m.theta0)?;
+        anyhow::ensure!(bytes.len() == m.param_count * 4, "theta0 size mismatch");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Load the tokenised corpus (little-endian i32).
+    pub fn load_corpus(&self) -> anyhow::Result<Vec<i32>> {
+        let bytes = std::fs::read(&self.corpus)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests run against the real artifacts dir when present (CI runs
+    /// `make artifacts` first); otherwise they exercise the error paths.
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.models.is_empty());
+        let tiny = m.model("tiny").expect("tiny preset");
+        assert!(tiny.param_count > 0);
+        let ts = tiny.artifact("train_step").expect("train_step artifact");
+        assert_eq!(ts.args.len(), 5);
+        assert_eq!(ts.args[0].name, "tokens");
+        assert_eq!(ts.outputs[0].name, "loss");
+        assert!(ts.file.exists());
+        // binary blobs load with the right sizes
+        let theta = m.load_theta0("tiny").unwrap();
+        assert_eq!(theta.len(), tiny.param_count);
+        let corpus = m.load_corpus().unwrap();
+        assert_eq!(corpus.len(), m.corpus_tokens);
+    }
+
+    #[test]
+    fn missing_dir_gives_actionable_error() {
+        let e = Manifest::load("/nonexistent/path").unwrap_err().to_string();
+        assert!(e.contains("make artifacts"), "{e}");
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { name: "x".into(), shape: vec![4, 33], dtype: "int32".into() };
+        assert_eq!(t.elements(), 132);
+        let s = TensorSpec { name: "s".into(), shape: vec![], dtype: "float32".into() };
+        assert_eq!(s.elements(), 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! ML job runners: the real payloads the platform executes for users.
+//!
+//! [`TrainRunner`] drives the AOT-compiled `train_step` artifact: it owns the
+//! optimizer state (theta, m, v) as host vectors, feeds token batches from
+//! the corpus, and records the loss curve. [`InferRunner`] serves
+//! last-position logits. Python is never involved — the artifacts were
+//! compiled once at build time.
+
+use crate::runtime::manifest::{Manifest, ModelEntry};
+use crate::runtime::pjrt::{as_f32_scalar, f32_scalar, f32_vec, i32_tensor, Engine};
+
+/// Sequential-batch sampler over the tokenised corpus (deterministic).
+pub struct CorpusSampler {
+    corpus: Vec<i32>,
+    cursor: usize,
+    batch: usize,
+    seq_plus_1: usize,
+    vocab: i32,
+}
+
+impl CorpusSampler {
+    pub fn new(corpus: Vec<i32>, batch: usize, seq: usize, vocab: usize) -> Self {
+        CorpusSampler { corpus, cursor: 0, batch, seq_plus_1: seq + 1, vocab: vocab as i32 }
+    }
+
+    /// Next `[batch, seq+1]` token block (wrapping; clips to vocab).
+    pub fn next_block(&mut self) -> Vec<i32> {
+        let need = self.batch * self.seq_plus_1;
+        let mut out = Vec::with_capacity(need);
+        for _ in 0..need {
+            let t = self.corpus[self.cursor % self.corpus.len()].min(self.vocab - 1).max(0);
+            out.push(t);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// A training job bound to one model preset.
+pub struct TrainRunner {
+    pub preset: String,
+    artifact_key: String,
+    batch: usize,
+    seq: usize,
+    theta: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u32,
+    sampler: CorpusSampler,
+    pub losses: Vec<f32>,
+    pub flops_per_step: f64,
+}
+
+impl TrainRunner {
+    /// Prepare a runner: compiles the artifact (cache-hit after first use)
+    /// and loads theta0 + corpus from the manifest blobs.
+    pub fn new(
+        engine: &mut Engine,
+        manifest: &Manifest,
+        preset: &str,
+        pallas_variant: bool,
+    ) -> anyhow::Result<TrainRunner> {
+        let model: &ModelEntry = manifest
+            .model(preset)
+            .ok_or_else(|| anyhow::anyhow!("no model preset {preset}"))?;
+        let art_name = if pallas_variant { "train_step_pallas" } else { "train_step" };
+        let art = model
+            .artifact(art_name)
+            .ok_or_else(|| anyhow::anyhow!("preset {preset} lacks artifact {art_name}"))?;
+        engine.load_artifact(art)?;
+        let theta = manifest.load_theta0(preset)?;
+        let n = theta.len();
+        let corpus = manifest.load_corpus()?;
+        Ok(TrainRunner {
+            preset: preset.to_string(),
+            artifact_key: Engine::artifact_key(art),
+            batch: model.batch,
+            seq: model.seq,
+            theta,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            sampler: CorpusSampler::new(corpus, model.batch, model.seq, model.vocab),
+            losses: Vec::new(),
+            flops_per_step: model.flops_per_train_step,
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn steps_done(&self) -> u32 {
+        self.step
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, engine: &mut Engine) -> anyhow::Result<f32> {
+        self.step += 1;
+        let tokens = self.sampler.next_block();
+        let tok_lit = i32_tensor(&tokens, &[self.batch as i64, (self.seq + 1) as i64])?;
+        let args = [
+            tok_lit,
+            f32_scalar(self.step as f32),
+            f32_vec(&self.theta),
+            f32_vec(&self.m),
+            f32_vec(&self.v),
+        ];
+        let out = engine.execute(&self.artifact_key, &args)?;
+        anyhow::ensure!(out.len() == 4, "train_step must return 4 outputs, got {}", out.len());
+        let loss = as_f32_scalar(&out[0])?;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {}: {loss}", self.step);
+        self.theta = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.m = out[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.v = out[3].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Run `n` steps; returns (first, last) loss.
+    pub fn run(&mut self, engine: &mut Engine, n: u32) -> anyhow::Result<(f32, f32)> {
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..n {
+            last = self.step(engine)?;
+            first.get_or_insert(last);
+        }
+        Ok((first.unwrap_or(last), last))
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+}
+
+/// Inference runner over the `infer_step` artifact.
+pub struct InferRunner {
+    artifact_key: String,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    theta: Vec<f32>,
+}
+
+impl InferRunner {
+    pub fn new(
+        engine: &mut Engine,
+        manifest: &Manifest,
+        preset: &str,
+        theta: Vec<f32>,
+    ) -> anyhow::Result<InferRunner> {
+        let model = manifest
+            .model(preset)
+            .ok_or_else(|| anyhow::anyhow!("no model preset {preset}"))?;
+        let art = model
+            .artifact("infer_step")
+            .ok_or_else(|| anyhow::anyhow!("no infer_step artifact"))?;
+        engine.load_artifact(art)?;
+        anyhow::ensure!(theta.len() == model.param_count, "theta size mismatch");
+        Ok(InferRunner {
+            artifact_key: Engine::artifact_key(art),
+            batch: model.batch,
+            seq: model.seq,
+            vocab: model.vocab,
+            theta,
+        })
+    }
+
+    /// Last-position logits for a `[batch, seq]` token block.
+    pub fn logits(&self, engine: &mut Engine, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == self.batch * self.seq, "token block size");
+        let tok = i32_tensor(tokens, &[self.batch as i64, self.seq as i64])?;
+        let out = engine.execute(&self.artifact_key, &[tok, f32_vec(&self.theta)])?;
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(logits.len() == self.batch * self.vocab, "logits size");
+        Ok(logits)
+    }
+
+    /// Greedy next token for each row.
+    pub fn greedy_next(&self, engine: &mut Engine, tokens: &[i32]) -> anyhow::Result<Vec<i32>> {
+        let logits = self.logits(engine, tokens)?;
+        Ok(logits
+            .chunks(self.vocab)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_tiny() {
+        let Some(m) = manifest() else { return };
+        let mut eng = Engine::cpu().unwrap();
+        let mut tr = TrainRunner::new(&mut eng, &m, "tiny", false).unwrap();
+        let (first, last) = tr.run(&mut eng, 30).unwrap();
+        // char-LM on the paper corpus: loss must fall decisively from ~ln(128)
+        assert!(first > 4.0, "init loss ~ln(vocab): {first}");
+        assert!(last < first - 0.5, "loss should fall: {first} -> {last}");
+        assert_eq!(tr.losses.len(), 30);
+        assert_eq!(tr.steps_done(), 30);
+    }
+
+    #[test]
+    fn pallas_variant_matches_ref_first_step() {
+        let Some(m) = manifest() else { return };
+        if m.model("tiny").and_then(|e| e.artifact("train_step_pallas")).is_none() {
+            eprintln!("skipping: pallas variant not exported");
+            return;
+        }
+        let mut eng = Engine::cpu().unwrap();
+        let mut a = TrainRunner::new(&mut eng, &m, "tiny", false).unwrap();
+        let mut b = TrainRunner::new(&mut eng, &m, "tiny", true).unwrap();
+        let la = a.step(&mut eng).unwrap();
+        let lb = b.step(&mut eng).unwrap();
+        assert!((la - lb).abs() < 1e-4, "ref {la} vs pallas {lb}");
+    }
+
+    #[test]
+    fn infer_runner_produces_logits_and_tokens() {
+        let Some(m) = manifest() else { return };
+        let mut eng = Engine::cpu().unwrap();
+        let entry = m.model("tiny").unwrap();
+        let theta = m.load_theta0("tiny").unwrap();
+        let inf = InferRunner::new(&mut eng, &m, "tiny", theta).unwrap();
+        let tokens: Vec<i32> = (0..entry.batch * entry.seq).map(|i| (i % 60) as i32 + 32).collect();
+        let logits = inf.logits(&mut eng, &tokens).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let next = inf.greedy_next(&mut eng, &tokens).unwrap();
+        assert_eq!(next.len(), entry.batch);
+        assert!(next.iter().all(|&t| (t as usize) < entry.vocab));
+    }
+
+    #[test]
+    fn corpus_sampler_wraps_and_clips() {
+        let mut s = CorpusSampler::new(vec![1, 2, 300, 4, 5], 2, 2, 128);
+        let b1 = s.next_block();
+        assert_eq!(b1.len(), 6);
+        assert!(b1.iter().all(|&t| t < 128));
+        let b2 = s.next_block();
+        assert_ne!(b1, b2); // cursor advanced
+    }
+}

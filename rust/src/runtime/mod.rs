@@ -1,0 +1,13 @@
+//! Runtime bridge (DESIGN.md S27/S28): PJRT artifact loading + execution,
+//! ML job runners (training / inference over the AOT HLO), and the roofline
+//! cost model used to price payloads in discrete-event mode.
+
+pub mod costmodel;
+pub mod manifest;
+pub mod mljob;
+pub mod pjrt;
+
+pub use costmodel::CostModel;
+pub use manifest::Manifest;
+pub use mljob::{InferRunner, TrainRunner};
+pub use pjrt::Engine;

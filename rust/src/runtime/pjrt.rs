@@ -1,0 +1,171 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes them from the coordinator's hot path.
+//!
+//! HLO *text* is the interchange format (see aot.py): jax ≥ 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Compilation results are cached per artifact.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::runtime::manifest::Artifact;
+
+/// Compile/execute statistics (feeds §Perf).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+}
+
+/// The engine. One PJRT CPU client + a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    pub fn cpu() -> anyhow::Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?,
+            cache: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Compile (or fetch from cache) the artifact's executable.
+    pub fn load(&mut self, key: &str, hlo_path: &Path) -> anyhow::Result<()> {
+        if self.cache.contains_key(key) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", hlo_path.display()))?;
+        self.stats.compiles += 1;
+        self.stats.compile_secs += t0.elapsed().as_secs_f64();
+        self.cache.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Cache key for an artifact: the file path (unique per preset+variant;
+    /// artifact *names* like "train_step" repeat across presets).
+    pub fn artifact_key(art: &Artifact) -> String {
+        art.file.display().to_string()
+    }
+
+    pub fn load_artifact(&mut self, art: &Artifact) -> anyhow::Result<()> {
+        self.load(&Self::artifact_key(art), &art.file)
+    }
+
+    pub fn is_loaded(&self, key: &str) -> bool {
+        self.cache.contains_key(key)
+    }
+
+    /// Execute a cached executable. Inputs are borrowed literals; the
+    /// (return_tuple=True) output is untupled into a Vec<Literal>.
+    pub fn execute(&mut self, key: &str, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self
+            .cache
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("artifact {key} not loaded"))?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {key}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result {key}: {e}"))?;
+        self.stats.executions += 1;
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {key}: {e}"))
+    }
+}
+
+/// Build an f32 vector literal.
+pub fn f32_vec(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Build an i32 tensor literal with the given dims.
+pub fn i32_tensor(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+/// Build an f32 scalar literal.
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 scalar from a literal.
+pub fn as_f32_scalar(l: &xla::Literal) -> anyhow::Result<f32> {
+    let v = l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn burn_artifact_executes_and_is_cached() {
+        let dir = artifacts_dir();
+        let path = dir.join("gpu_burn_128x8.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut eng = Engine::cpu().unwrap();
+        eng.load("burn", &path).unwrap();
+        assert!(eng.is_loaded("burn"));
+        let x: Vec<f32> = (0..128 * 128).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
+        let lit = i32_dummy_f32(&x);
+        let out = eng.execute("burn", &[lit]).unwrap();
+        assert_eq!(out.len(), 1);
+        let y = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(y.len(), 128 * 128);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // second load is a cache hit: compile count unchanged
+        let c = eng.stats().compiles;
+        eng.load("burn", &path).unwrap();
+        assert_eq!(eng.stats().compiles, c);
+        assert_eq!(eng.stats().executions, 1);
+    }
+
+    fn i32_dummy_f32(x: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(x).reshape(&[128, 128]).unwrap()
+    }
+
+    #[test]
+    fn execute_unknown_key_errors() {
+        let mut eng = Engine::cpu().unwrap();
+        assert!(eng.execute("nope", &[]).is_err());
+    }
+}

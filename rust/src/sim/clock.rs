@@ -1,0 +1,107 @@
+//! Time source abstraction: one code path for simulation and real execution.
+//!
+//! Everything in the platform reads time through a [`Clock`]. In
+//! discrete-event mode ([`SimClock`]) time advances only when the engine
+//! dispatches the next event, letting the benchmarks sweep days of cluster
+//! operation in milliseconds. In hardware-in-the-loop mode ([`WallClock`])
+//! the same components run against the OS clock while job payloads execute
+//! real HLO through PJRT.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Seconds since platform epoch (f64 — µs precision over simulated years).
+pub type Time = f64;
+
+pub trait Clock: Send + Sync {
+    /// Current time, seconds since this clock's epoch.
+    fn now(&self) -> Time;
+}
+
+/// Virtual clock advanced by the discrete-event engine.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    /// microseconds, atomically updated so readers never lock
+    micros: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(SimClock { micros: AtomicU64::new(0) })
+    }
+
+    pub fn advance_to(&self, t: Time) {
+        let target = (t * 1e6) as u64;
+        // monotonic: never step backwards even if events tie
+        self.micros.fetch_max(target, Ordering::SeqCst);
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Time {
+        self.micros.load(Ordering::SeqCst) as f64 / 1e6
+    }
+}
+
+/// Wall-clock time relative to construction.
+#[derive(Debug)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(WallClock { start: Instant::now() })
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Time {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Hours→seconds helper (configs speak hours for diurnal patterns).
+pub const fn hours(h: f64) -> Time {
+    h * 3600.0
+}
+
+pub const fn minutes(m: f64) -> Time {
+    m * 60.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances_monotonically() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(10.5);
+        assert!((c.now() - 10.5).abs() < 1e-6);
+        c.advance_to(5.0); // must not go backwards
+        assert!((c.now() - 10.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wall_clock_moves_forward() {
+        let c = WallClock::new();
+        let a = c.now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(c.now() > a);
+    }
+
+    #[test]
+    fn unit_helpers() {
+        assert_eq!(hours(2.0), 7200.0);
+        assert_eq!(minutes(1.5), 90.0);
+    }
+}

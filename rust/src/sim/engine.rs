@@ -1,0 +1,235 @@
+//! Discrete-event simulation engine.
+//!
+//! A binary-heap future-event list with deterministic FIFO tie-breaking.
+//! Components schedule closures at absolute times; [`Engine::run_until`]
+//! pops events in order, advances the shared [`SimClock`], and dispatches.
+//! All platform controllers (scheduler ticks, kubelet transitions, culler
+//! sweeps, site heartbeats) run as events, so an entire multi-day cluster
+//! campaign is a single-threaded, perfectly reproducible run.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use super::clock::{SimClock, Time};
+
+/// Boxed event callback. Receives the engine so it can schedule follow-ups.
+pub type EventFn = Box<dyn FnOnce(&mut Engine)>;
+
+struct Scheduled {
+    at: Time,
+    seq: u64,
+    f: EventFn,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap: earlier time first; FIFO within equal times
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event loop.
+pub struct Engine {
+    clock: Arc<SimClock>,
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    dispatched: u64,
+}
+
+impl Engine {
+    pub fn new(clock: Arc<SimClock>) -> Self {
+        Engine { clock, heap: BinaryHeap::new(), seq: 0, dispatched: 0 }
+    }
+
+    pub fn clock(&self) -> Arc<SimClock> {
+        self.clock.clone()
+    }
+
+    pub fn now(&self) -> Time {
+        use crate::sim::clock::Clock;
+        self.clock.now()
+    }
+
+    /// Schedule `f` at absolute time `at` (clamped to now if in the past).
+    pub fn at(&mut self, at: Time, f: impl FnOnce(&mut Engine) + 'static) {
+        let at = at.max(self.now());
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq: self.seq, f: Box::new(f) });
+    }
+
+    /// Schedule `f` after a delay.
+    pub fn after(&mut self, delay: Time, f: impl FnOnce(&mut Engine) + 'static) {
+        let now = self.now();
+        self.at(now + delay.max(0.0), f);
+    }
+
+    /// Schedule a periodic tick until `until`; `f` returns false to stop early.
+    pub fn every(
+        &mut self,
+        period: Time,
+        until: Time,
+        mut f: impl FnMut(&mut Engine) -> bool + 'static,
+    ) {
+        fn tick(
+            eng: &mut Engine,
+            period: Time,
+            until: Time,
+            mut f: impl FnMut(&mut Engine) -> bool + 'static,
+        ) {
+            if !f(eng) {
+                return;
+            }
+            let next = eng.now() + period;
+            if next <= until {
+                eng.at(next, move |e| tick(e, period, until, f));
+            }
+        }
+        let start = self.now() + period;
+        if start <= until {
+            self.at(start, move |e| tick(e, period, until, f));
+        }
+    }
+
+    /// Run events until the queue empties or the next event is after `t_end`.
+    /// The clock finishes at exactly `t_end` (or the last event time).
+    pub fn run_until(&mut self, t_end: Time) {
+        while let Some(top) = self.heap.peek() {
+            if top.at > t_end {
+                break;
+            }
+            let ev = self.heap.pop().unwrap();
+            self.clock.advance_to(ev.at);
+            self.dispatched += 1;
+            (ev.f)(self);
+        }
+        self.clock.advance_to(t_end);
+    }
+
+    /// Drain every event regardless of time (used by short unit tests).
+    pub fn run_to_completion(&mut self) {
+        while let Some(ev) = self.heap.pop() {
+            self.clock.advance_to(ev.at);
+            self.dispatched += 1;
+            (ev.f)(self);
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn engine() -> Engine {
+        Engine::new(SimClock::new())
+    }
+
+    #[test]
+    fn dispatches_in_time_order() {
+        let mut e = engine();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for (t, tag) in [(3.0, 'c'), (1.0, 'a'), (2.0, 'b')] {
+            let log = log.clone();
+            e.at(t, move |_| log.borrow_mut().push(tag));
+        }
+        e.run_until(10.0);
+        assert_eq!(*log.borrow(), vec!['a', 'b', 'c']);
+        assert_eq!(e.now(), 10.0);
+    }
+
+    #[test]
+    fn fifo_tie_break_at_equal_times() {
+        let mut e = engine();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for tag in 0..5 {
+            let log = log.clone();
+            e.at(1.0, move |_| log.borrow_mut().push(tag));
+        }
+        e.run_until(2.0);
+        assert_eq!(*log.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut e = engine();
+        let hits = Rc::new(RefCell::new(0));
+        let h = hits.clone();
+        e.at(1.0, move |eng| {
+            *h.borrow_mut() += 1;
+            let h2 = h.clone();
+            eng.after(1.0, move |_| *h2.borrow_mut() += 1);
+        });
+        e.run_until(5.0);
+        assert_eq!(*hits.borrow(), 2);
+        assert!((e.now() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_until_leaves_future_events() {
+        let mut e = engine();
+        e.at(100.0, |_| panic!("must not run"));
+        e.run_until(50.0);
+        assert_eq!(e.pending(), 1);
+        assert_eq!(e.now(), 50.0);
+    }
+
+    #[test]
+    fn every_ticks_periodically_until_deadline() {
+        let mut e = engine();
+        let n = Rc::new(RefCell::new(0));
+        let n2 = n.clone();
+        e.every(1.0, 5.0, move |_| {
+            *n2.borrow_mut() += 1;
+            true
+        });
+        e.run_until(10.0);
+        assert_eq!(*n.borrow(), 5);
+    }
+
+    #[test]
+    fn every_stops_when_callback_returns_false() {
+        let mut e = engine();
+        let n = Rc::new(RefCell::new(0));
+        let n2 = n.clone();
+        e.every(1.0, 100.0, move |_| {
+            *n2.borrow_mut() += 1;
+            *n2.borrow() < 3
+        });
+        e.run_until(100.0);
+        assert_eq!(*n.borrow(), 3);
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut e = engine();
+        e.at(5.0, |eng| {
+            eng.at(1.0, |e2| assert!((e2.now() - 5.0).abs() < 1e-9));
+        });
+        e.run_until(10.0);
+    }
+}

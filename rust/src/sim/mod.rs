@@ -1,0 +1,10 @@
+//! Discrete-event simulation substrate (DESIGN.md S7): virtual clock, event
+//! engine, and the synthetic workload trace generator that stands in for the
+//! platform's production user trace.
+
+pub mod clock;
+pub mod engine;
+pub mod trace;
+
+pub use clock::{Clock, SimClock, Time, WallClock};
+pub use engine::Engine;

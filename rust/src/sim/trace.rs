@@ -1,0 +1,262 @@
+//! Synthetic workload traces.
+//!
+//! The paper reports 78 registered users and 20 multi-user projects but no
+//! public trace, so experiments E2/E3/E7 drive the platform with a synthetic
+//! trace whose aggregate statistics follow the paper's narrative: interactive
+//! JupyterLab sessions arrive with a diurnal (office-hours) intensity
+//! profile; batch jobs are submitted around the clock with an evening bump;
+//! session/job durations are log-normal; users are Zipf-popular (a few heavy
+//! groups, a long tail), matching the "20 projects share 4 servers" setting.
+
+use crate::sim::clock::{hours, Time};
+use crate::util::rng::Rng;
+
+/// What arrives.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalKind {
+    /// Interactive JupyterLab session (spawn → work → idle-cull/stop).
+    Interactive,
+    /// Non-interactive batch job (Kueue workload).
+    Batch,
+}
+
+/// One trace record.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub at: Time,
+    pub kind: ArrivalKind,
+    pub user: String,
+    pub project: String,
+    /// Active work duration (seconds) the payload needs.
+    pub duration: Time,
+    /// GPU demand expressed as a MIG-profile-or-whole-GPU request.
+    pub gpu: GpuDemand,
+    pub cpu_millis: i64,
+    pub mem_bytes: i64,
+}
+
+/// GPU request shapes seen on the platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuDemand {
+    None,
+    /// One MIG slice of the given compute-slice count (1,2,3,4,7).
+    MigSlice(u8),
+    /// One whole (non-MIG) GPU.
+    WholeGpu,
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub users: usize,
+    pub projects: usize,
+    /// Mean interactive sessions per hour at the office-hours peak.
+    pub interactive_peak_per_hour: f64,
+    /// Mean batch jobs per hour (flat component).
+    pub batch_per_hour: f64,
+    /// Session duration log-normal (mu, sigma) in log-seconds.
+    pub session_mu_sigma: (f64, f64),
+    /// Batch duration log-normal (mu, sigma) in log-seconds.
+    pub batch_mu_sigma: (f64, f64),
+    /// Fraction of interactive sessions requesting any GPU.
+    pub interactive_gpu_frac: f64,
+    /// Fraction of batch jobs requesting any GPU.
+    pub batch_gpu_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            users: 78,    // paper §2: registered platform users
+            projects: 20, // paper §2: allocated multi-user projects
+            interactive_peak_per_hour: 6.0,
+            batch_per_hour: 4.0,
+            session_mu_sigma: ((2.0 * 3600.0f64).ln(), 0.8), // median ~2 h
+            batch_mu_sigma: ((40.0 * 60.0f64).ln(), 1.0),    // median ~40 min
+            interactive_gpu_frac: 0.7,
+            batch_gpu_frac: 0.85,
+            seed: 1,
+        }
+    }
+}
+
+/// Office-hours intensity multiplier in [0, 1]: low at night & weekends.
+///
+/// `t` is seconds from the campaign start, which is taken to be Monday 00:00.
+pub fn diurnal_intensity(t: Time) -> f64 {
+    let day = (t / hours(24.0)).floor() as i64;
+    let hour_of_day = (t - day as f64 * hours(24.0)) / 3600.0;
+    let weekend = day % 7 >= 5;
+    let office = if (9.0..18.0).contains(&hour_of_day) {
+        1.0
+    } else if (7.0..9.0).contains(&hour_of_day) || (18.0..21.0).contains(&hour_of_day) {
+        0.4
+    } else {
+        0.08
+    };
+    if weekend {
+        office * 0.25
+    } else {
+        office
+    }
+}
+
+/// Generate the full arrival list for `[0, horizon)` via thinning of a
+/// non-homogeneous Poisson process.
+pub fn generate(cfg: &TraceConfig, horizon: Time) -> Vec<Arrival> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::new();
+
+    // Interactive: thinned NHPP with diurnal intensity.
+    let lambda_max = cfg.interactive_peak_per_hour / 3600.0;
+    let mut t = 0.0;
+    while t < horizon {
+        t += rng.exp(lambda_max);
+        if t >= horizon {
+            break;
+        }
+        if rng.f64() <= diurnal_intensity(t) {
+            out.push(make_arrival(cfg, &mut rng, t, ArrivalKind::Interactive));
+        }
+    }
+
+    // Batch: flat Poisson with an evening bump (users queue work at day end,
+    // the paper's "nights and weekends" opportunistic window).
+    let lambda_batch = cfg.batch_per_hour / 3600.0;
+    let mut t = 0.0;
+    while t < horizon {
+        t += rng.exp(lambda_batch * 1.5);
+        if t >= horizon {
+            break;
+        }
+        let day_frac = (t % hours(24.0)) / hours(24.0);
+        let accept = if (0.66..0.95).contains(&day_frac) { 1.0 } else { 0.55 };
+        if rng.f64() <= accept {
+            out.push(make_arrival(cfg, &mut rng, t, ArrivalKind::Batch));
+        }
+    }
+
+    out.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    out
+}
+
+fn make_arrival(cfg: &TraceConfig, rng: &mut Rng, at: Time, kind: ArrivalKind) -> Arrival {
+    let user_idx = rng.zipf(cfg.users as u64, 1.1) as usize;
+    let project_idx = user_idx % cfg.projects;
+    let (mu, sigma) = match kind {
+        ArrivalKind::Interactive => cfg.session_mu_sigma,
+        ArrivalKind::Batch => cfg.batch_mu_sigma,
+    };
+    let duration = rng.lognormal(mu, sigma).clamp(60.0, hours(24.0));
+    let gpu_frac = match kind {
+        ArrivalKind::Interactive => cfg.interactive_gpu_frac,
+        ArrivalKind::Batch => cfg.batch_gpu_frac,
+    };
+    let gpu = if rng.bool(gpu_frac) {
+        match kind {
+            // Interactive users mostly take small MIG slices; batch wants
+            // bigger slices or whole GPUs.
+            ArrivalKind::Interactive => match rng.weighted(&[0.55, 0.25, 0.12, 0.08]) {
+                0 => GpuDemand::MigSlice(1),
+                1 => GpuDemand::MigSlice(2),
+                2 => GpuDemand::MigSlice(3),
+                _ => GpuDemand::WholeGpu,
+            },
+            ArrivalKind::Batch => match rng.weighted(&[0.25, 0.3, 0.2, 0.25]) {
+                0 => GpuDemand::MigSlice(2),
+                1 => GpuDemand::MigSlice(3),
+                2 => GpuDemand::MigSlice(7),
+                _ => GpuDemand::WholeGpu,
+            },
+        }
+    } else {
+        GpuDemand::None
+    };
+    Arrival {
+        at,
+        kind,
+        user: format!("user{user_idx:03}"),
+        project: format!("project{project_idx:02}"),
+        duration,
+        gpu,
+        cpu_millis: rng.range_i64(1, 8) * 1000,
+        mem_bytes: rng.range_i64(2, 32) * (1 << 30),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg, hours(24.0));
+        let b = generate(&cfg, hours(24.0));
+        assert_eq!(a.len(), b.len());
+        assert!(a.len() > 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.user, y.user);
+        }
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_horizon() {
+        let tr = generate(&TraceConfig::default(), hours(48.0));
+        for w in tr.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(tr.iter().all(|a| a.at < hours(48.0)));
+    }
+
+    #[test]
+    fn interactive_concentrates_in_office_hours() {
+        let cfg = TraceConfig { seed: 7, ..Default::default() };
+        let tr = generate(&cfg, hours(5.0 * 24.0)); // Mon-Fri
+        let (mut office, mut night) = (0, 0);
+        for a in tr.iter().filter(|a| a.kind == ArrivalKind::Interactive) {
+            let h = (a.at % hours(24.0)) / 3600.0;
+            if (9.0..18.0).contains(&h) {
+                office += 1;
+            } else if !(7.0..21.0).contains(&h) {
+                night += 1;
+            }
+        }
+        assert!(office > 3 * night.max(1), "office={office} night={night}");
+    }
+
+    #[test]
+    fn weekend_quieter_than_weekday() {
+        let tr = generate(&TraceConfig { seed: 3, ..Default::default() }, hours(7.0 * 24.0));
+        let weekday: usize = tr
+            .iter()
+            .filter(|a| a.kind == ArrivalKind::Interactive && (a.at / hours(24.0)) as i64 % 7 < 5)
+            .count();
+        let weekend: usize = tr
+            .iter()
+            .filter(|a| a.kind == ArrivalKind::Interactive && (a.at / hours(24.0)) as i64 % 7 >= 5)
+            .count();
+        // 5 weekdays vs 2 weekend days, weekend at 25% intensity
+        assert!(weekday as f64 / 5.0 > 2.0 * (weekend as f64 / 2.0).max(0.5));
+    }
+
+    #[test]
+    fn users_and_projects_within_bounds() {
+        let cfg = TraceConfig::default();
+        let tr = generate(&cfg, hours(72.0));
+        for a in &tr {
+            let u: usize = a.user[4..].parse().unwrap();
+            let p: usize = a.project[7..].parse().unwrap();
+            assert!(u < cfg.users);
+            assert!(p < cfg.projects);
+        }
+    }
+
+    #[test]
+    fn durations_clamped() {
+        let tr = generate(&TraceConfig::default(), hours(72.0));
+        assert!(tr.iter().all(|a| (60.0..=hours(24.0)).contains(&a.duration)));
+    }
+}

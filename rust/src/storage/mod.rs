@@ -1,0 +1,13 @@
+//! Storage services (DESIGN.md S14–S17): the NFS-exported platform
+//! filesystem, the RGW-like object store, the patched-rclone bucket mount,
+//! and the Borg-like encrypted deduplicating backup.
+
+pub mod backup;
+pub mod nfs;
+pub mod object;
+pub mod rclone;
+
+pub use backup::{BackupRepo, RepoStats};
+pub use nfs::NfsServer;
+pub use object::ObjectStore;
+pub use rclone::RcloneMount;

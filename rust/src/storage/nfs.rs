@@ -1,0 +1,269 @@
+//! The platform shared filesystem (paper §2): an NFS server pod exports home
+//! directories, project shared volumes, and a managed software-environments
+//! area to every JupyterHub-spawned container.
+//!
+//! Modeled as an in-memory tree with per-volume quotas and usage accounting.
+//! File *content* is stored (not just sizes) so the Borg-like backup engine
+//! (`backup.rs`) and the Snakemake dependency tracker operate on real bytes.
+
+use std::collections::BTreeMap;
+
+/// A filesystem error.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FsError {
+    #[error("no such path: {0}")]
+    NotFound(String),
+    #[error("not a directory: {0}")]
+    NotADirectory(String),
+    #[error("already exists: {0}")]
+    Exists(String),
+    #[error("quota exceeded on volume {volume}: used {used} + {delta} > {quota}")]
+    QuotaExceeded { volume: String, used: u64, delta: u64, quota: u64 },
+}
+
+#[derive(Debug, Clone)]
+enum Entry {
+    File(Vec<u8>),
+    Dir,
+}
+
+/// One exported volume (home, project share, envs area) with a byte quota.
+#[derive(Debug)]
+pub struct Volume {
+    pub name: String,
+    pub quota_bytes: u64,
+    used: u64,
+    entries: BTreeMap<String, Entry>, // normalized paths, "" = root dir
+}
+
+impl Volume {
+    fn new(name: &str, quota: u64) -> Self {
+        let mut entries = BTreeMap::new();
+        entries.insert(String::new(), Entry::Dir);
+        Volume { name: name.to_string(), quota_bytes: quota, used: 0, entries }
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+}
+
+fn normalize(path: &str) -> String {
+    path.trim_matches('/').to_string()
+}
+
+fn parent(path: &str) -> String {
+    match path.rfind('/') {
+        Some(i) => path[..i].to_string(),
+        None => String::new(),
+    }
+}
+
+/// The NFS service: named volumes + directory-tree ops.
+#[derive(Debug, Default)]
+pub struct NfsServer {
+    volumes: BTreeMap<String, Volume>,
+}
+
+impl NfsServer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn create_volume(&mut self, name: &str, quota_bytes: u64) -> Result<(), FsError> {
+        if self.volumes.contains_key(name) {
+            return Err(FsError::Exists(name.into()));
+        }
+        self.volumes.insert(name.to_string(), Volume::new(name, quota_bytes));
+        Ok(())
+    }
+
+    pub fn volume(&self, name: &str) -> Option<&Volume> {
+        self.volumes.get(name)
+    }
+
+    pub fn volumes(&self) -> impl Iterator<Item = &Volume> {
+        self.volumes.values()
+    }
+
+    pub fn mkdir_p(&mut self, volume: &str, path: &str) -> Result<(), FsError> {
+        let v = self.volumes.get_mut(volume).ok_or_else(|| FsError::NotFound(volume.into()))?;
+        let path = normalize(path);
+        let mut cur = String::new();
+        for part in path.split('/').filter(|p| !p.is_empty()) {
+            cur = if cur.is_empty() { part.to_string() } else { format!("{cur}/{part}") };
+            match v.entries.get(&cur) {
+                None => {
+                    v.entries.insert(cur.clone(), Entry::Dir);
+                }
+                Some(Entry::Dir) => {}
+                Some(Entry::File(_)) => return Err(FsError::NotADirectory(cur)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Write (create or replace) a file; parents must exist.
+    pub fn write(&mut self, volume: &str, path: &str, data: &[u8]) -> Result<(), FsError> {
+        let path = normalize(path);
+        let v = self.volumes.get_mut(volume).ok_or_else(|| FsError::NotFound(volume.into()))?;
+        let par = parent(&path);
+        match v.entries.get(&par) {
+            Some(Entry::Dir) => {}
+            Some(_) => return Err(FsError::NotADirectory(par)),
+            None => return Err(FsError::NotFound(par)),
+        }
+        let old = match v.entries.get(&path) {
+            Some(Entry::File(d)) => d.len() as u64,
+            Some(Entry::Dir) => return Err(FsError::NotADirectory(path)),
+            None => 0,
+        };
+        let new_used = v.used - old + data.len() as u64;
+        if new_used > v.quota_bytes {
+            return Err(FsError::QuotaExceeded {
+                volume: volume.into(),
+                used: v.used - old,
+                delta: data.len() as u64,
+                quota: v.quota_bytes,
+            });
+        }
+        v.used = new_used;
+        v.entries.insert(path, Entry::File(data.to_vec()));
+        Ok(())
+    }
+
+    pub fn read(&self, volume: &str, path: &str) -> Result<&[u8], FsError> {
+        let v = self.volumes.get(volume).ok_or_else(|| FsError::NotFound(volume.into()))?;
+        match v.entries.get(&normalize(path)) {
+            Some(Entry::File(d)) => Ok(d),
+            Some(Entry::Dir) => Err(FsError::NotADirectory(path.into())),
+            None => Err(FsError::NotFound(path.into())),
+        }
+    }
+
+    pub fn exists(&self, volume: &str, path: &str) -> bool {
+        self.volumes
+            .get(volume)
+            .map(|v| v.entries.contains_key(&normalize(path)))
+            .unwrap_or(false)
+    }
+
+    pub fn remove(&mut self, volume: &str, path: &str) -> Result<(), FsError> {
+        let path = normalize(path);
+        let v = self.volumes.get_mut(volume).ok_or_else(|| FsError::NotFound(volume.into()))?;
+        match v.entries.get(&path) {
+            Some(Entry::File(d)) => {
+                v.used -= d.len() as u64;
+                v.entries.remove(&path);
+                Ok(())
+            }
+            Some(Entry::Dir) => {
+                let prefix = format!("{path}/");
+                let victims: Vec<String> = v
+                    .entries
+                    .keys()
+                    .filter(|k| k.starts_with(&prefix) || **k == path)
+                    .cloned()
+                    .collect();
+                for k in victims {
+                    if let Some(Entry::File(d)) = v.entries.remove(&k) {
+                        v.used -= d.len() as u64;
+                    }
+                }
+                Ok(())
+            }
+            None => Err(FsError::NotFound(path)),
+        }
+    }
+
+    /// List all file paths under a directory (recursive), sorted.
+    pub fn list_files(&self, volume: &str, dir: &str) -> Vec<String> {
+        let Some(v) = self.volumes.get(volume) else { return vec![] };
+        let dir = normalize(dir);
+        let prefix = if dir.is_empty() { String::new() } else { format!("{dir}/") };
+        v.entries
+            .iter()
+            .filter(|(k, e)| {
+                matches!(e, Entry::File(_)) && (prefix.is_empty() || k.starts_with(&prefix))
+            })
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Total bytes across volumes (custom storage exporter feeds on this).
+    pub fn total_used(&self) -> u64 {
+        self.volumes.values().map(|v| v.used).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fs() -> NfsServer {
+        let mut f = NfsServer::new();
+        f.create_volume("home-alice", 1 << 20).unwrap();
+        f
+    }
+
+    #[test]
+    fn mkdir_write_read_roundtrip() {
+        let mut f = fs();
+        f.mkdir_p("home-alice", "/projects/lhcb").unwrap();
+        f.write("home-alice", "projects/lhcb/run.py", b"print(42)").unwrap();
+        assert_eq!(f.read("home-alice", "/projects/lhcb/run.py").unwrap(), b"print(42)");
+        assert_eq!(f.volume("home-alice").unwrap().used_bytes(), 9);
+    }
+
+    #[test]
+    fn quota_enforced_and_replace_accounts_delta() {
+        let mut f = NfsServer::new();
+        f.create_volume("v", 10).unwrap();
+        f.write("v", "a", b"12345").unwrap();
+        f.write("v", "b", b"12345").unwrap();
+        let e = f.write("v", "c", b"1").unwrap_err();
+        assert!(matches!(e, FsError::QuotaExceeded { .. }));
+        // replacing a file with smaller content frees space
+        f.write("v", "a", b"1").unwrap();
+        f.write("v", "c", b"123").unwrap();
+        assert_eq!(f.volume("v").unwrap().used_bytes(), 9);
+    }
+
+    #[test]
+    fn missing_parent_rejected() {
+        let mut f = fs();
+        assert_eq!(
+            f.write("home-alice", "no/such/dir/file", b"x").unwrap_err(),
+            FsError::NotFound("no/such/dir".into())
+        );
+    }
+
+    #[test]
+    fn remove_dir_recursive_updates_usage() {
+        let mut f = fs();
+        f.mkdir_p("home-alice", "d/sub").unwrap();
+        f.write("home-alice", "d/a", b"aaaa").unwrap();
+        f.write("home-alice", "d/sub/b", b"bb").unwrap();
+        assert_eq!(f.volume("home-alice").unwrap().used_bytes(), 6);
+        f.remove("home-alice", "d").unwrap();
+        assert_eq!(f.volume("home-alice").unwrap().used_bytes(), 0);
+        assert!(!f.exists("home-alice", "d/a"));
+    }
+
+    #[test]
+    fn list_files_recursive_sorted() {
+        let mut f = fs();
+        f.mkdir_p("home-alice", "x/y").unwrap();
+        f.write("home-alice", "x/b", b"1").unwrap();
+        f.write("home-alice", "x/y/a", b"1").unwrap();
+        f.write("home-alice", "top", b"1").unwrap();
+        assert_eq!(f.list_files("home-alice", "x"), vec!["x/b", "x/y/a"]);
+        assert_eq!(f.list_files("home-alice", ""), vec!["top", "x/b", "x/y/a"]);
+    }
+
+    #[test]
+    fn duplicate_volume_rejected() {
+        let mut f = fs();
+        assert_eq!(f.create_volume("home-alice", 1).unwrap_err(), FsError::Exists("home-alice".into()));
+    }
+}

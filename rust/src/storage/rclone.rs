@@ -1,0 +1,163 @@
+//! The patched-rclone mount (paper §2: *"a patched version of rclone was
+//! developed to enable mounting the user's bucket in the JupyterLab instance
+//! using the same authentication token used to access JupyterHub. The mount
+//! operation is automated at spawn time."*).
+//!
+//! Bridges the object store into a pod's filesystem view: reads/writes under
+//! the mount point translate to authenticated object operations using the
+//! pod owner's hub token. The hub spawner creates one of these per session.
+
+use crate::hub::auth::TokenValidator;
+use crate::storage::object::{ObjError, ObjectStore};
+
+/// Mount error.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MountError {
+    #[error("invalid or expired token")]
+    BadToken,
+    #[error(transparent)]
+    Object(#[from] ObjError),
+}
+
+/// An active rclone-style mount of `bucket` for one session.
+#[derive(Debug, Clone)]
+pub struct RcloneMount {
+    pub bucket: String,
+    pub mount_point: String, // e.g. "/home/alice/bucket"
+    pub user: String,
+    token: String,
+}
+
+impl RcloneMount {
+    /// Establish the mount: validates the hub token (same credential as the
+    /// JupyterHub login — the patched-rclone trick) and resolves the user.
+    pub fn mount(
+        validator: &dyn TokenValidator,
+        token: &str,
+        bucket: &str,
+        mount_point: &str,
+    ) -> Result<RcloneMount, MountError> {
+        let user = validator.validate(token).ok_or(MountError::BadToken)?;
+        Ok(RcloneMount {
+            bucket: bucket.to_string(),
+            mount_point: mount_point.trim_end_matches('/').to_string(),
+            user,
+            token: token.to_string(),
+        })
+    }
+
+    fn key_for(&self, path: &str) -> Option<String> {
+        let p = path.trim_end_matches('/');
+        p.strip_prefix(&self.mount_point)
+            .map(|rest| rest.trim_start_matches('/').to_string())
+    }
+
+    /// Read a file through the mount.
+    pub fn read(
+        &self,
+        validator: &dyn TokenValidator,
+        store: &mut ObjectStore,
+        path: &str,
+    ) -> Result<Vec<u8>, MountError> {
+        // token re-validated per op (mounts outlive token renewal in real life)
+        if validator.validate(&self.token).as_deref() != Some(self.user.as_str()) {
+            return Err(MountError::BadToken);
+        }
+        let key = self.key_for(path).ok_or(ObjError::NoKey(path.into()))?;
+        Ok(store.get(&self.bucket, &self.user, &key)?)
+    }
+
+    /// Write a file through the mount.
+    pub fn write(
+        &self,
+        validator: &dyn TokenValidator,
+        store: &mut ObjectStore,
+        path: &str,
+        data: &[u8],
+    ) -> Result<(), MountError> {
+        if validator.validate(&self.token).as_deref() != Some(self.user.as_str()) {
+            return Err(MountError::BadToken);
+        }
+        let key = self.key_for(path).ok_or(ObjError::NoKey(path.into()))?;
+        store.put(&self.bucket, &self.user, &key, data)?;
+        Ok(())
+    }
+
+    /// List mount contents under a sub-path.
+    pub fn list(
+        &self,
+        validator: &dyn TokenValidator,
+        store: &ObjectStore,
+        sub: &str,
+    ) -> Result<Vec<String>, MountError> {
+        if validator.validate(&self.token).as_deref() != Some(self.user.as_str()) {
+            return Err(MountError::BadToken);
+        }
+        Ok(store
+            .list(&self.bucket, &self.user, sub.trim_start_matches('/'))?
+            .into_iter()
+            .map(|m| format!("{}/{}", self.mount_point, m.key))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hub::auth::AuthService;
+
+    fn setup() -> (AuthService, ObjectStore, String) {
+        let mut auth = AuthService::new("secret-seed");
+        let token = auth.issue("alice", 3600.0, 0.0);
+        let mut store = ObjectStore::new();
+        store.create_bucket("alice-bucket", "alice").unwrap();
+        store.put("alice-bucket", "alice", "data/x.npy", b"tensor").unwrap();
+        (auth, store, token)
+    }
+
+    #[test]
+    fn mount_with_hub_token_reads_bucket() {
+        let (auth, mut store, token) = setup();
+        let m = RcloneMount::mount(&auth, &token, "alice-bucket", "/home/alice/bucket").unwrap();
+        assert_eq!(m.user, "alice");
+        let data = m.read(&auth, &mut store, "/home/alice/bucket/data/x.npy").unwrap();
+        assert_eq!(data, b"tensor");
+    }
+
+    #[test]
+    fn write_through_mount_lands_in_bucket() {
+        let (auth, mut store, token) = setup();
+        let m = RcloneMount::mount(&auth, &token, "alice-bucket", "/home/alice/bucket").unwrap();
+        m.write(&auth, &mut store, "/home/alice/bucket/out/result.json", b"{}").unwrap();
+        assert_eq!(store.get("alice-bucket", "alice", "out/result.json").unwrap(), b"{}");
+    }
+
+    #[test]
+    fn bad_token_rejected_at_mount() {
+        let (auth, _store, _token) = setup();
+        assert_eq!(
+            RcloneMount::mount(&auth, "forged-token", "alice-bucket", "/mnt").unwrap_err(),
+            MountError::BadToken
+        );
+    }
+
+    #[test]
+    fn expired_token_rejected_per_op() {
+        let (mut auth, mut store, _) = setup();
+        let short = auth.issue("alice", 10.0, 0.0);
+        let m = RcloneMount::mount(&auth, &short, "alice-bucket", "/mnt").unwrap();
+        auth.set_now(100.0); // past expiry
+        assert_eq!(
+            m.read(&auth, &mut store, "/mnt/data/x.npy").unwrap_err(),
+            MountError::BadToken
+        );
+    }
+
+    #[test]
+    fn list_prefixes_mount_point() {
+        let (auth, store, token) = setup();
+        let m = RcloneMount::mount(&auth, &token, "alice-bucket", "/mnt/b").unwrap();
+        let l = m.list(&auth, &store, "data/").unwrap();
+        assert_eq!(l, vec!["/mnt/b/data/x.npy"]);
+    }
+}

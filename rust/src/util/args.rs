@@ -1,0 +1,244 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, repeated
+//! options, positionals, and auto-generated `--help`. Deliberately minimal:
+//! the launcher binary and the examples only need declarative specs with
+//! defaults and validation.
+
+use std::collections::BTreeMap;
+
+/// Declarative spec for one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        s.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got {s:?}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        s.parse().map_err(|_| anyhow::anyhow!("--{name}: expected number, got {s:?}"))
+    }
+}
+
+/// Parser builder.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    subcommands: Vec<(&'static str, &'static str)>,
+    opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, subcommands: Vec::new(), opts: Vec::new() }
+    }
+
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.bin, self.about);
+        if !self.subcommands.is_empty() {
+            let _ = writeln!(s, "USAGE: {} <subcommand> [options]\n\nSUBCOMMANDS:", self.bin);
+            for (n, h) in &self.subcommands {
+                let _ = writeln!(s, "  {n:16} {h}");
+            }
+            let _ = writeln!(s);
+        } else {
+            let _ = writeln!(s, "USAGE: {} [options]\n", self.bin);
+        }
+        let _ = writeln!(s, "OPTIONS:");
+        for o in &self.opts {
+            let d = match (o.is_flag, o.default) {
+                (true, _) => String::new(),
+                (false, Some(d)) => format!(" [default: {d}]"),
+                (false, None) => " (required)".to_string(),
+            };
+            let _ = writeln!(s, "  --{:22} {}{}", o.name, o.help, d);
+        }
+        let _ = writeln!(s, "  --{:22} {}", "help", "print this help");
+        s
+    }
+
+    /// Parse; returns Err with usage text on malformed input or `--help`.
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        // defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut i = 0;
+        if !self.subcommands.is_empty() {
+            match argv.first() {
+                Some(s) if !s.starts_with('-') => {
+                    if !self.subcommands.iter().any(|(n, _)| n == s) {
+                        anyhow::bail!("unknown subcommand {s:?}\n\n{}", self.usage());
+                    }
+                    args.subcommand = Some(s.clone());
+                    i = 1;
+                }
+                _ => {}
+            }
+        }
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        anyhow::bail!("flag --{name} takes no value");
+                    }
+                    args.flags.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                                .clone()
+                        }
+                    };
+                    args.values.entry(name.to_string()).or_default().push(v);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // required check
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && args.get(o.name).is_none() {
+                anyhow::bail!("missing required --{}\n\n{}", o.name, self.usage());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env(&self) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&argv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("aiinfn", "test")
+            .subcommand("up", "start")
+            .subcommand("submit", "submit a job")
+            .opt("config", "configs/ai_infn.json", "config path")
+            .opt_required("name", "job name")
+            .flag("verbose", "verbose logging")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = cli().parse(&v(&["submit", "--name", "train", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("submit"));
+        assert_eq!(a.get("name"), Some("train"));
+        assert_eq!(a.get("config"), Some("configs/ai_infn.json"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn parses_equals_form_and_repeats() {
+        let a = cli().parse(&v(&["up", "--name=x", "--name=y"])).unwrap();
+        assert_eq!(a.get("name"), Some("y"));
+        assert_eq!(a.get_all("name"), &["x".to_string(), "y".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing() {
+        assert!(cli().parse(&v(&["up", "--nope"])).is_err());
+        assert!(cli().parse(&v(&["up"])).is_err()); // missing --name
+        assert!(cli().parse(&v(&["frob", "--name", "x"])).is_err());
+    }
+
+    #[test]
+    fn help_is_an_error_with_usage() {
+        let e = cli().parse(&v(&["--help"])).unwrap_err().to_string();
+        assert!(e.contains("SUBCOMMANDS"));
+        assert!(e.contains("--config"));
+    }
+
+    #[test]
+    fn numeric_accessors() {
+        let c = Cli::new("x", "t").opt("n", "5", "count").opt("f", "1.5", "frac");
+        let a = c.parse(&v(&["--n", "9"])).unwrap();
+        assert_eq!(a.get_u64("n").unwrap(), 9);
+        assert_eq!(a.get_f64("f").unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,211 @@
+//! Criterion-like micro/meso-benchmark harness (criterion is unavailable
+//! offline). Used by every `rust/benches/*.rs` target (`harness = false`).
+//!
+//! Design goals: warmup before measurement, adaptive iteration counts toward
+//! a target measurement time, robust summary statistics (median + MAD rather
+//! than mean ± std, since scheduler noise on a 1-core box is one-sided), and
+//! machine-greppable output: every result row is also emitted as a single
+//! `BENCH\t<group>\t<name>\t<median_ns>\t...` line so EXPERIMENTS.md tables
+//! can be regenerated with grep.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export for bench bodies.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One measured result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub group: String,
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub median: Duration,
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        let e = self.elements.unwrap_or(1) as f64;
+        e / self.median.as_secs_f64()
+    }
+}
+
+/// Harness configuration (env-overridable for quick runs).
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // AIINFN_BENCH_FAST=1 cuts times ~5x for smoke runs.
+        let fast = std::env::var("AIINFN_BENCH_FAST").is_ok();
+        BenchConfig {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            max_samples: if fast { 11 } else { 31 },
+        }
+    }
+}
+
+/// A named benchmark group; collects rows and prints a table on drop.
+pub struct BenchGroup {
+    group: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    pub fn new(group: &str) -> Self {
+        println!("\n== bench group: {group} ==");
+        BenchGroup { group: group.to_string(), cfg: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(group: &str, cfg: BenchConfig) -> Self {
+        BenchGroup { group: group.to_string(), cfg, results: Vec::new() }
+    }
+
+    /// Benchmark a closure; `f` should include only the measured work.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_elements(name, 1, f)
+    }
+
+    /// Benchmark with a throughput denominator: `elements` units of work per
+    /// call of `f` (rows scheduled, bytes chunked, samples ingested, ...).
+    pub fn bench_elements<F: FnMut()>(&mut self, name: &str, elements: u64, mut f: F) -> &BenchResult {
+        // Warmup and iteration-count calibration.
+        let mut iters: u64 = 1;
+        let warm_start = Instant::now();
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t.elapsed();
+            if warm_start.elapsed() >= self.cfg.warmup && dt >= Duration::from_micros(200) {
+                // choose iters so one sample is ~measure/max_samples
+                let target = self.cfg.measure.as_secs_f64() / self.cfg.max_samples as f64;
+                let per_iter = dt.as_secs_f64() / iters as f64;
+                iters = ((target / per_iter).ceil() as u64).max(1);
+                break;
+            }
+            if dt < Duration::from_micros(100) {
+                iters = iters.saturating_mul(4).max(iters + 1);
+            }
+        }
+
+        // Measurement.
+        let mut samples: Vec<f64> = Vec::with_capacity(self.cfg.max_samples);
+        let measure_start = Instant::now();
+        while samples.len() < self.cfg.max_samples
+            && (samples.len() < 5 || measure_start.elapsed() < self.cfg.measure)
+        {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = samples[samples.len() / 2];
+        let mut devs: Vec<f64> = samples.iter().map(|x| (x - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let r = BenchResult {
+            group: self.group.clone(),
+            name: name.to_string(),
+            samples: samples.len(),
+            iters_per_sample: iters,
+            median: Duration::from_secs_f64(med),
+            mad: Duration::from_secs_f64(mad),
+            min: Duration::from_secs_f64(samples[0]),
+            max: Duration::from_secs_f64(*samples.last().unwrap()),
+            elements: if elements == 1 { None } else { Some(elements) },
+        };
+        print_row(&r);
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Record an already-measured scalar (for end-to-end campaign metrics
+    /// that are run once, e.g. a 48 h simulation's total makespan).
+    pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
+        println!("  {:40} {}", name, crate::util::stats::fmt_si(value, unit));
+        println!("BENCH\t{}\t{}\t{}\t{}", self.group, name, value, unit);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+fn print_row(r: &BenchResult) {
+    use crate::util::stats::fmt_si;
+    let thr = match r.elements {
+        Some(_) => format!("  [{} elem/s]", fmt_si(r.per_sec(), "")),
+        None => String::new(),
+    };
+    println!(
+        "  {:40} median {} ±{} (n={} × {} iters){}",
+        r.name,
+        fmt_si(r.median.as_secs_f64(), "s"),
+        fmt_si(r.mad.as_secs_f64(), "s"),
+        r.samples,
+        r.iters_per_sample,
+        thr,
+    );
+    println!(
+        "BENCH\t{}\t{}\t{}\t{}\t{}",
+        r.group,
+        r.name,
+        r.median.as_nanos(),
+        r.mad.as_nanos(),
+        r.elements.unwrap_or(1),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("AIINFN_BENCH_FAST", "1");
+        let mut g = BenchGroup::with_config(
+            "test",
+            BenchConfig { warmup: Duration::from_millis(5), measure: Duration::from_millis(20), max_samples: 5 },
+        );
+        let mut acc = 0u64;
+        let r = g.bench("spin", || {
+            for i in 0..100u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(r.median > Duration::ZERO);
+        assert!(r.samples >= 5);
+    }
+
+    #[test]
+    fn throughput_uses_elements() {
+        let mut g = BenchGroup::with_config(
+            "test",
+            BenchConfig { warmup: Duration::from_millis(1), measure: Duration::from_millis(10), max_samples: 5 },
+        );
+        let r = g.bench_elements("noop1k", 1000, || {
+            black_box(());
+        });
+        assert!(r.per_sec() > 1000.0);
+    }
+}

@@ -1,0 +1,62 @@
+//! Minimal `log` backend: leveled, timestamped stderr logger.
+//!
+//! The platform logs through the `log` facade so library users can plug
+//! their own backend; the launcher and examples install this one.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+        eprintln!(
+            "[{:>10}.{:03} {:5} {}] {}",
+            t.as_secs(),
+            t.subsec_millis(),
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger. Level from `AIINFN_LOG` (error..trace),
+/// default `info`. Idempotent: later calls are no-ops.
+pub fn init() {
+    init_level(
+        std::env::var("AIINFN_LOG")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(Level::Info),
+    );
+}
+
+pub fn init_level(level: Level) {
+    let logger = Box::new(StderrLogger { level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::Trace.min(level.to_level_filter()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init(); // second call must not panic
+        log::info!("logging smoke test");
+    }
+}

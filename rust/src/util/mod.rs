@@ -1,0 +1,65 @@
+//! Foundation substrates built from scratch (the usual third-party crates —
+//! serde, clap, criterion, proptest, rand — are unavailable in this offline
+//! environment; DESIGN.md S1–S6).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count with binary prefixes ("12.0 GiB").
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Monotonic id generator for object names (pods, jobs, workloads).
+#[derive(Debug, Default)]
+pub struct IdGen {
+    next: std::sync::atomic::AtomicU64,
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn next(&self, prefix: &str) -> String {
+        let n = self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        format!("{prefix}-{n:06}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.0 GiB");
+    }
+
+    #[test]
+    fn idgen_monotonic_unique() {
+        let g = IdGen::new();
+        let a = g.next("pod");
+        let b = g.next("pod");
+        assert_ne!(a, b);
+        assert!(a.starts_with("pod-"));
+    }
+}

@@ -1,0 +1,299 @@
+//! Streaming statistics: Welford moments, HDR-style log-bucketed histograms,
+//! and percentile summaries. Feeds both the monitoring subsystem (latency
+//! SLO tracking for interactive spawns) and the benchmark harness.
+
+/// Online mean/variance via Welford's algorithm, plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n;
+        self.mean += d * other.n as f64 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Log-bucketed histogram for non-negative values (latencies, sizes).
+///
+/// Buckets grow geometrically: `bucket(i)` covers `[base * g^i, base * g^(i+1))`
+/// with g chosen so there are `sub` buckets per decade — a fixed ~±(ln10/sub)/2
+/// relative error on recovered percentiles, like HdrHistogram's design point.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    base: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    total: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// `base`: smallest resolvable value; `decades`: dynamic range; `sub`:
+    /// buckets per decade (resolution).
+    pub fn new(base: f64, decades: u32, sub: u32) -> Self {
+        let growth = 10f64.powf(1.0 / sub as f64);
+        Histogram {
+            base,
+            growth,
+            counts: vec![0; (decades * sub) as usize],
+            underflow: 0,
+            total: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Default: 1 µs .. 1000 s with 1% resolution when values are seconds.
+    pub fn latency() -> Self {
+        Histogram::new(1e-6, 9, 50)
+    }
+
+    fn index(&self, x: f64) -> Option<usize> {
+        if x < self.base {
+            return None;
+        }
+        let i = (x / self.base).log(self.growth).floor() as usize;
+        Some(i.min(self.counts.len() - 1))
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        self.sum += x;
+        match self.index(x) {
+            Some(i) => self.counts[i] += 1,
+            None => self.underflow += 1,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { f64::NAN } else { self.sum / self.total as f64 }
+    }
+
+    /// Percentile in `[0, 100]`; returns the bucket's geometric midpoint.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.base / 2.0;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let lo = self.base * self.growth.powi(i as i32);
+                return lo * self.growth.sqrt();
+            }
+        }
+        self.base * self.growth.powi(self.counts.len() as i32)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "histogram shape mismatch");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+
+    /// Summary row used by benches and dashboards.
+    pub fn summary(&self) -> Summary {
+        Summary {
+            count: self.total,
+            mean: self.mean(),
+            p50: self.percentile(50.0),
+            p90: self.percentile(90.0),
+            p99: self.percentile(99.0),
+            max: self.percentile(100.0),
+        }
+    }
+}
+
+/// A compact latency/size summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn fmt_seconds(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p90={} p99={}",
+            self.count,
+            fmt_si(self.mean, "s"),
+            fmt_si(self.p50, "s"),
+            fmt_si(self.p90, "s"),
+            fmt_si(self.p99, "s"),
+        )
+    }
+}
+
+/// Format with SI prefix: 0.00123 s -> "1.23ms".
+pub fn fmt_si(x: f64, unit: &str) -> String {
+    if !x.is_finite() {
+        return format!("{x}{unit}");
+    }
+    let (scale, prefix) = if x == 0.0 {
+        (1.0, "")
+    } else {
+        match x.abs() {
+            v if v >= 1e9 => (1e-9, "G"),
+            v if v >= 1e6 => (1e-6, "M"),
+            v if v >= 1e3 => (1e-3, "k"),
+            v if v >= 1.0 => (1.0, ""),
+            v if v >= 1e-3 => (1e3, "m"),
+            v if v >= 1e-6 => (1e6, "µ"),
+            _ => (1e9, "n"),
+        }
+    };
+    format!("{:.3}{}{}", x * scale, prefix, unit)
+}
+
+/// Exact percentile over a scratch vector (for small benchmark sample sets).
+pub fn exact_percentile(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0 * (xs.len() - 1) as f64).round() as usize;
+    xs[rank.min(xs.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = OnlineStats::new();
+        for x in xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let naive_var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((s.variance() - naive_var).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_concat() {
+        let (mut a, mut b, mut all) = (OnlineStats::new(), OnlineStats::new(), OnlineStats::new());
+        for i in 0..50 {
+            let x = (i as f64).sin() * 10.0;
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_close() {
+        let mut h = Histogram::latency();
+        // 1..=1000 ms uniform
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.05, "p50={p50}");
+        let p99 = h.percentile(99.0);
+        assert!((p99 - 0.99).abs() / 0.99 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_underflow_and_merge() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        a.record(1e-9); // underflow
+        b.record(1.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.percentile(100.0) >= 0.9);
+    }
+
+    #[test]
+    fn fmt_si_prefixes() {
+        assert_eq!(fmt_si(0.00123, "s"), "1.230ms");
+        assert_eq!(fmt_si(1234.0, "B/s"), "1.234kB/s");
+        assert_eq!(fmt_si(2.5e-6, "s"), "2.500µs");
+    }
+
+    #[test]
+    fn exact_percentile_small() {
+        let mut xs = vec![5.0, 1.0, 3.0];
+        assert_eq!(exact_percentile(&mut xs, 50.0), 3.0);
+        assert_eq!(exact_percentile(&mut xs, 100.0), 5.0);
+    }
+}

@@ -1,0 +1,309 @@
+//! DAG construction: resolve targets to concrete jobs, infer dependencies
+//! from input/output files, detect cycles, and compute the schedulable
+//! frontier as files materialize — Snakemake's core algorithm.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+use crate::cluster::resources::ResourceVec;
+use crate::workflow::rules::{expand, match_pattern, WorkflowSpec};
+
+/// A concrete job: a rule instantiated with wildcard bindings.
+#[derive(Debug, Clone)]
+pub struct JobNode {
+    pub id: String,
+    pub rule: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub resources: ResourceVec,
+    pub duration: f64,
+    pub wildcards: BTreeMap<String, String>,
+}
+
+/// The resolved workflow DAG.
+#[derive(Debug, Default)]
+pub struct Dag {
+    pub jobs: Vec<JobNode>,
+    /// producer index: output file → job index
+    producers: HashMap<String, usize>,
+    /// edges: job → jobs it depends on
+    pub deps: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DagError {
+    #[error("no rule produces {0}")]
+    NoProducer(String),
+    #[error("cycle detected involving rule {0}")]
+    Cycle(String),
+    #[error("ambiguous producers for {file}: rules {a} and {b}")]
+    Ambiguous { file: String, a: String, b: String },
+}
+
+impl Dag {
+    /// Build the DAG needed to materialize `spec.targets`, treating files in
+    /// `existing` as already present (no producer needed).
+    pub fn build(spec: &WorkflowSpec, existing: &HashSet<String>) -> Result<Dag, DagError> {
+        let mut dag = Dag::default();
+        let mut want: VecDeque<String> = spec.targets.iter().cloned().collect();
+        let mut resolved: HashSet<String> = existing.clone();
+        let mut job_key: HashMap<String, usize> = HashMap::new(); // rule+wildcards → idx
+
+        while let Some(file) = want.pop_front() {
+            if resolved.contains(&file) || dag.producers.contains_key(&file) {
+                continue;
+            }
+            // find the rule whose output pattern matches
+            let mut matched: Option<(usize, BTreeMap<String, String>)> = None;
+            for (ri, rule) in spec.rules.iter().enumerate() {
+                for out in &rule.outputs {
+                    if let Some(b) = match_pattern(out, &file) {
+                        if let Some((prev, _)) = &matched {
+                            if *prev != ri {
+                                return Err(DagError::Ambiguous {
+                                    file,
+                                    a: spec.rules[*prev].name.clone(),
+                                    b: rule.name.clone(),
+                                });
+                            }
+                        } else {
+                            matched = Some((ri, b));
+                        }
+                    }
+                }
+            }
+            let (ri, bindings) = matched.ok_or_else(|| DagError::NoProducer(file.clone()))?;
+            let rule = &spec.rules[ri];
+            let key = format!("{}#{:?}", rule.name, bindings);
+            let idx = match job_key.get(&key) {
+                Some(&i) => i,
+                None => {
+                    let inputs: Result<Vec<String>, _> =
+                        rule.inputs.iter().map(|p| expand(p, &bindings)).collect();
+                    let outputs: Result<Vec<String>, _> =
+                        rule.outputs.iter().map(|p| expand(p, &bindings)).collect();
+                    let (inputs, outputs) = (
+                        inputs.map_err(|_| DagError::NoProducer(file.clone()))?,
+                        outputs.map_err(|_| DagError::NoProducer(file.clone()))?,
+                    );
+                    let idx = dag.jobs.len();
+                    dag.jobs.push(JobNode {
+                        id: format!("{}-{}", rule.name, idx),
+                        rule: rule.name.clone(),
+                        inputs: inputs.clone(),
+                        outputs: outputs.clone(),
+                        resources: rule.resources.clone(),
+                        duration: rule.duration,
+                        wildcards: bindings.clone(),
+                    });
+                    dag.deps.push(Vec::new());
+                    job_key.insert(key, idx);
+                    for o in &outputs {
+                        dag.producers.insert(o.clone(), idx);
+                    }
+                    for i in inputs {
+                        if !resolved.contains(&i) {
+                            want.push_back(i);
+                        }
+                    }
+                    idx
+                }
+            };
+            let _ = idx;
+            resolved.insert(file);
+        }
+
+        // wire dependencies
+        for j in 0..dag.jobs.len() {
+            let mut ds = Vec::new();
+            for input in dag.jobs[j].inputs.clone() {
+                if let Some(&p) = dag.producers.get(&input) {
+                    if p != j && !ds.contains(&p) {
+                        ds.push(p);
+                    }
+                } else if !existing.contains(&input) {
+                    return Err(DagError::NoProducer(input));
+                }
+            }
+            dag.deps[j] = ds;
+        }
+
+        dag.check_acyclic()?;
+        Ok(dag)
+    }
+
+    fn check_acyclic(&self) -> Result<(), DagError> {
+        // Kahn's algorithm
+        let n = self.jobs.len();
+        let mut indeg = vec![0usize; n];
+        for ds in &self.deps {
+            for &_d in ds {}
+        }
+        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (j, ds) in self.deps.iter().enumerate() {
+            indeg[j] = ds.len();
+            for &d in ds {
+                rdeps[d].push(j);
+            }
+        }
+        let mut q: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = q.pop_front() {
+            seen += 1;
+            for &r in &rdeps[i] {
+                indeg[r] -= 1;
+                if indeg[r] == 0 {
+                    q.push_back(r);
+                }
+            }
+        }
+        if seen != n {
+            let stuck = (0..n).find(|&i| indeg[i] > 0).unwrap();
+            return Err(DagError::Cycle(self.jobs[stuck].rule.clone()));
+        }
+        Ok(())
+    }
+
+    /// Topological order (valid execution order).
+    pub fn topo_order(&self) -> Vec<usize> {
+        let n = self.jobs.len();
+        let mut indeg = vec![0usize; n];
+        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (j, ds) in self.deps.iter().enumerate() {
+            indeg[j] = ds.len();
+            for &d in ds {
+                rdeps[d].push(j);
+            }
+        }
+        let mut q: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut out = Vec::with_capacity(n);
+        while let Some(i) = q.pop_front() {
+            out.push(i);
+            for &r in &rdeps[i] {
+                indeg[r] -= 1;
+                if indeg[r] == 0 {
+                    q.push_back(r);
+                }
+            }
+        }
+        out
+    }
+
+    /// Jobs whose inputs are all in `available` and not yet in `done`.
+    pub fn ready(&self, available: &HashSet<String>, done: &HashSet<usize>) -> Vec<usize> {
+        (0..self.jobs.len())
+            .filter(|j| !done.contains(j))
+            .filter(|&j| self.jobs[j].inputs.iter().all(|i| available.contains(i)))
+            .collect()
+    }
+
+    /// Critical-path length (seconds) — the theoretical min makespan.
+    pub fn critical_path(&self) -> f64 {
+        let order = self.topo_order();
+        let mut finish = vec![0.0f64; self.jobs.len()];
+        for &j in &order {
+            let start = self.deps[j]
+                .iter()
+                .map(|&d| finish[d])
+                .fold(0.0f64, f64::max);
+            finish[j] = start + self.jobs[j].duration;
+        }
+        finish.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Sum of all job durations — the sequential makespan baseline.
+    pub fn total_work(&self) -> f64 {
+        self.jobs.iter().map(|j| j.duration).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::rules::parse_workflow;
+
+    fn spec(targets: &str) -> WorkflowSpec {
+        parse_workflow(&format!(
+            r#"{{
+          "rules": [
+            {{"name": "pre", "input": ["raw/{{s}}.dat"], "output": ["clean/{{s}}.dat"], "duration": 60}},
+            {{"name": "train", "input": ["clean/{{s}}.dat"], "output": ["model/{{s}}.bin"], "duration": 600}},
+            {{"name": "eval", "input": ["model/{{s}}.bin"], "output": ["report/{{s}}.txt"], "duration": 30}},
+            {{"name": "summary", "input": ["report/a.txt", "report/b.txt"], "output": ["summary.md"], "duration": 10}}
+          ],
+          "targets": [{targets}]
+        }}"#
+        ))
+        .unwrap()
+    }
+
+    fn raw_files() -> HashSet<String> {
+        ["raw/a.dat", "raw/b.dat"].iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn builds_fanout_dag() {
+        let dag = Dag::build(&spec(r#""summary.md""#), &raw_files()).unwrap();
+        // 2×(pre,train,eval) + summary = 7 jobs
+        assert_eq!(dag.jobs.len(), 7);
+        let summary = dag.jobs.iter().position(|j| j.rule == "summary").unwrap();
+        assert_eq!(dag.deps[summary].len(), 2);
+        // topo order puts pre before train before eval
+        let order = dag.topo_order();
+        let pos = |rule: &str, s: &str| {
+            order
+                .iter()
+                .position(|&i| dag.jobs[i].rule == rule && dag.jobs[i].wildcards.get("s").map(|x| x == s).unwrap_or(true))
+                .unwrap()
+        };
+        assert!(pos("pre", "a") < pos("train", "a"));
+        assert!(pos("train", "a") < pos("eval", "a"));
+    }
+
+    #[test]
+    fn missing_input_reports_no_producer() {
+        let err = Dag::build(&spec(r#""summary.md""#), &HashSet::new()).unwrap_err();
+        assert!(matches!(err, DagError::NoProducer(f) if f.starts_with("raw/")));
+    }
+
+    #[test]
+    fn ready_frontier_advances_with_files() {
+        let dag = Dag::build(&spec(r#""model/a.bin""#), &raw_files()).unwrap();
+        let mut avail = raw_files();
+        let done = HashSet::new();
+        let r0 = dag.ready(&avail, &done);
+        assert_eq!(r0.len(), 1);
+        assert_eq!(dag.jobs[r0[0]].rule, "pre");
+        avail.insert("clean/a.dat".into());
+        let r1 = dag.ready(&avail, &done);
+        assert!(r1.iter().any(|&j| dag.jobs[j].rule == "train"));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let wf = parse_workflow(
+            r#"{"rules": [
+                {"name": "a", "input": ["y"], "output": ["x"], "duration": 1},
+                {"name": "b", "input": ["x"], "output": ["y"], "duration": 1}
+            ], "targets": ["x"]}"#,
+        )
+        .unwrap();
+        let err = Dag::build(&wf, &HashSet::new()).unwrap_err();
+        assert!(matches!(err, DagError::Cycle(_)));
+    }
+
+    #[test]
+    fn critical_path_and_total_work() {
+        let dag = Dag::build(&spec(r#""summary.md""#), &raw_files()).unwrap();
+        // chain: 60 + 600 + 30 + 10 = 700 (both branches equal)
+        assert!((dag.critical_path() - 700.0).abs() < 1e-9);
+        assert!((dag.total_work() - (2.0 * 690.0 + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_job_not_duplicated() {
+        // two targets needing the same upstream job
+        let dag = Dag::build(&spec(r#""report/a.txt", "model/a.bin""#), &raw_files()).unwrap();
+        let pres = dag.jobs.iter().filter(|j| j.rule == "pre").count();
+        assert_eq!(pres, 1, "pre-a must be instantiated once");
+    }
+}

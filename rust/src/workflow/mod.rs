@@ -1,0 +1,9 @@
+//! Snakemake-lite workflow substrate (DESIGN.md S26): rule DSL with
+//! wildcards, dependency DAG, and (through the platform facade) submission
+//! of ready jobs to the Kueue batch queue as their inputs materialize.
+
+pub mod dag;
+pub mod rules;
+
+pub use dag::{Dag, DagError, JobNode};
+pub use rules::{match_pattern, parse_workflow, Rule, WorkflowSpec};

