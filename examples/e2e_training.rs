@@ -16,9 +16,10 @@
 //! a few hundred steps. Pass `--preset large --steps 3` to watch the
 //! paper-scale model take real (slow) steps.
 
+use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector};
 use aiinfn::cluster::resources::{ResourceVec, MEMORY};
-use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
-use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::platform::{default_config_path, PlatformConfig};
+use aiinfn::queue::kueue::PriorityClass;
 use aiinfn::runtime::{Engine, Manifest, TrainRunner};
 use aiinfn::util::args::Cli;
 
@@ -35,8 +36,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- platform side: the job goes through the real control plane ------
     let cfg = PlatformConfig::load(&default_config_path())?;
-    let mut platform = Platform::bootstrap(cfg)?;
-    let wl = platform.submit_batch(
+    let mut api = ApiServer::bootstrap(cfg)?;
+    let token = api.login("user001")?;
+    let req = BatchJobResource::request(
         "user001",
         "project00",
         ResourceVec::cpu_millis(4000)
@@ -45,18 +47,22 @@ fn main() -> anyhow::Result<()> {
         steps as f64, // duration hint; real walltime measured below
         PriorityClass::BatchHigh,
         false,
-    )?;
-    platform.run_for(60.0, 5.0); // admission + scheduling + container start
-    let wl_state = platform.kueue.workload(&wl).unwrap().state.clone();
-    let pod = platform
-        .store
-        .borrow()
-        .pods()
-        .find(|p| p.spec.labels.get("app").map(|a| a == "batch").unwrap_or(false))
-        .map(|p| (p.spec.name.clone(), p.status.node.clone()))
+    );
+    let wl = api.create(&token, &ApiObject::BatchJob(req))?.name().to_string();
+    api.run_for(60.0, 5.0); // admission + scheduling + container start
+    let job = api.get(&token, ResourceKind::BatchJob, &wl)?;
+    let wl_state = job.as_batch_job().unwrap().state.clone();
+    let pod = api
+        .list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap())?
+        .into_iter()
+        .next()
+        .map(|o| {
+            let p = o.as_pod().unwrap();
+            (p.metadata.name.clone(), p.node.clone())
+        })
         .unwrap();
-    println!("platform: workload {wl} {:?}, pod {} on node {:?}", wl_state, pod.0, pod.1);
-    anyhow::ensure!(wl_state == WorkloadState::Admitted, "job must be admitted");
+    println!("platform: workload {wl} {wl_state}, pod {} on node {:?}", pod.0, pod.1);
+    anyhow::ensure!(wl_state == "Admitted", "job must be admitted");
 
     // --- payload side: REAL PJRT execution of the AOT artifact -----------
     let manifest = Manifest::load(args.get("artifacts").unwrap())?;
@@ -90,10 +96,15 @@ fn main() -> anyhow::Result<()> {
     let last = *runner.losses.last().unwrap();
 
     // --- reflect completion into the platform ----------------------------
-    platform.run_for(steps as f64 + 120.0, 10.0);
-    let final_state = platform.kueue.workload(&wl).unwrap().state.clone();
-    println!("\nplatform: workload {wl} final state {:?}", final_state);
-    let report = aiinfn::monitoring::account(&platform.store.borrow(), platform.now());
+    api.run_for(steps as f64 + 120.0, 10.0);
+    let final_state = api
+        .get(&token, ResourceKind::Workload, &wl)?
+        .as_workload()
+        .unwrap()
+        .state
+        .clone();
+    println!("\nplatform: workload {wl} final state {final_state}");
+    let report = api.platform().usage_report();
     print!("{}", report.render("e2e accounting"));
 
     // --- verdict ----------------------------------------------------------

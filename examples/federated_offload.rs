@@ -2,86 +2,94 @@
 //! across four different sites using heterogeneous schedulers (HTCondor and
 //! SLURM) and backends (Podman)".
 //!
-//! Submits a 200-job campaign that exceeds local capacity and shows it
-//! flowing through Virtual Kubelet + the InterLink wire protocol to the
-//! INFN-T1 / ReCaS (HTCondor), CINECA Leonardo (SLURM) and Podman sites.
+//! Submits a 200-job campaign that exceeds local capacity — every job a
+//! `create BatchJob` through the control-plane API — and shows it flowing
+//! through Virtual Kubelet + the InterLink wire protocol to the INFN-T1 /
+//! ReCaS (HTCondor), CINECA Leonardo (SLURM) and Podman sites, read back as
+//! `Site` resources.
 //!
 //! Run with: `cargo run --release --example federated_offload`
 
+use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector};
 use aiinfn::cluster::resources::{ResourceVec, MEMORY};
-use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
-use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::platform::{default_config_path, PlatformConfig};
+use aiinfn::queue::kueue::PriorityClass;
 
 fn main() -> anyhow::Result<()> {
     aiinfn::util::logging::init();
     let cfg = PlatformConfig::load(&default_config_path())?;
-    let mut platform = Platform::bootstrap(cfg)?;
+    let mut api = ApiServer::bootstrap(cfg)?;
+    let operator = api.login("user000")?;
     println!("federation sites:");
-    for vk in &platform.vks {
-        println!(
-            "  {:<18} node={:<16} capacity: {}",
-            vk.site,
-            vk.node_name,
-            vk.capacity()
-        );
+    for obj in api.list(&operator, ResourceKind::Site, &Selector::all())? {
+        let s = obj.as_site().unwrap();
+        println!("  {:<18} node={:<16} capacity: {}", s.site, s.node_name, s.capacity);
     }
 
     // a burst of 200 medium CPU jobs (the paper's test was a functional
     // scalability campaign; shapes chosen to fit every site's slot size)
     let n_jobs = 200;
-    let mut wls = Vec::new();
+    let mut names = Vec::new();
     for i in 0..n_jobs {
-        wls.push(platform.submit_batch(
-            &format!("user{:03}", i % 78),
+        let user = format!("user{:03}", i % 78);
+        let token = api.login(&user)?;
+        let req = BatchJobResource::request(
+            &user,
             &format!("project{:02}", i % 20),
             ResourceVec::cpu_millis(16_000).with(MEMORY, 24 << 30),
             600.0,
             PriorityClass::Batch,
             true, // offloadable
-        )?);
+        );
+        names.push(api.create(&token, &ApiObject::BatchJob(req))?.name().to_string());
     }
     println!("\nsubmitted {n_jobs} jobs; running the federation ...");
 
-    let t_start = platform.now();
+    let t_start = api.now();
     let mut last_done = 0;
     loop {
-        platform.run_for(600.0, 15.0);
-        let done = wls
-            .iter()
-            .filter(|w| platform.kueue.workload(w).unwrap().state == WorkloadState::Finished)
-            .count();
+        api.run_for(600.0, 15.0);
+        let token = api.login("user000")?; // re-login: campaign may outlive the ttl
+        let mut done = 0;
+        for w in &names {
+            let wl = api
+                .get(&token, ResourceKind::Workload, w)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            if wl.as_workload().unwrap().state == "Finished" {
+                done += 1;
+            }
+        }
         if done != last_done {
             println!(
                 "t={:>6.0}s  {done:>3}/{n_jobs} done  (offloaded so far: {})",
-                platform.now(),
-                platform.metrics.offloaded_pods
+                api.now(),
+                api.platform().metrics().offloaded_pods
             );
             last_done = done;
         }
-        if done == n_jobs || platform.now() > t_start + 48.0 * 3600.0 {
+        if done == n_jobs || api.now() > t_start + 48.0 * 3600.0 {
             break;
         }
     }
-    let makespan = platform.now() - t_start;
+    let makespan = api.now() - t_start;
 
     println!("\n== federation summary ==");
     println!("makespan: {:.0}s ({:.1}h)", makespan, makespan / 3600.0);
+    let remote_completions = api.platform().metrics().remote_completions;
     println!(
         "local completions: {}, remote completions: {}",
-        platform.metrics.local_completions, platform.metrics.remote_completions
+        api.platform().metrics().local_completions,
+        remote_completions
     );
-    for vk in &platform.vks {
+    let operator = api.login("user000")?;
+    for obj in api.list(&operator, ResourceKind::Site, &Selector::all())? {
+        let s = obj.as_site().unwrap();
         println!(
             "  {:<18} completed {} jobs ({} InterLink round-trips)",
-            vk.site,
-            vk.completions_since(0.0),
-            vk.round_trips
+            s.site, s.completions, s.round_trips
         );
     }
-    anyhow::ensure!(
-        platform.metrics.remote_completions > 0,
-        "federation must absorb overflow"
-    );
+    anyhow::ensure!(remote_completions > 0, "federation must absorb overflow");
     println!("federated offload OK: 4 heterogeneous sites behind one API");
     Ok(())
 }

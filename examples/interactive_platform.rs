@@ -2,22 +2,23 @@
 //!
 //! Replays the diurnal trace (78 users / 20 projects, office-hours
 //! interactive sessions, round-the-clock batch) against the full
-//! coordinator and prints the behaviour §3 describes: batch soaking up
+//! coordinator — every arrival through the control-plane API (login +
+//! `create`) — and prints the behaviour §3 describes: batch soaking up
 //! off-peak capacity and being evicted when interactive users arrive.
 //!
 //! Run with: `cargo run --release --example interactive_platform`
 
-use aiinfn::hub::profiles::default_catalogue;
+use aiinfn::api::{ApiObject, ApiServer, SessionResource};
+use aiinfn::platform::{default_config_path, PlatformConfig};
 use aiinfn::monitoring::dashboard;
-use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
 use aiinfn::sim::clock::hours;
-use aiinfn::sim::trace::{generate, ArrivalKind, GpuDemand, TraceConfig};
+use aiinfn::sim::trace::{generate, ArrivalKind, TraceConfig};
 use aiinfn::util::stats::exact_percentile;
 
 fn main() -> anyhow::Result<()> {
     aiinfn::util::logging::init();
     let cfg = PlatformConfig::load(&default_config_path())?;
-    let mut platform = Platform::bootstrap(cfg)?;
+    let mut api = ApiServer::bootstrap(cfg)?;
 
     let horizon = hours(5.0 * 24.0); // Monday .. Friday
     let trace = generate(&TraceConfig::default(), horizon);
@@ -28,27 +29,23 @@ fn main() -> anyhow::Result<()> {
         trace.iter().filter(|a| a.kind == ArrivalKind::Batch).count(),
     );
 
-    let catalogue = default_catalogue();
     let mut ti = 0;
     let mut util_by_hour: Vec<(f64, f64)> = Vec::new();
-    while platform.now() < horizon {
-        let until = (platform.now() + 300.0).min(horizon);
+    while api.now() < horizon {
+        let until = (api.now() + 300.0).min(horizon);
         while ti < trace.len() && trace[ti].at <= until {
             let a = &trace[ti];
             ti += 1;
+            let Ok(token) = api.login(&a.user) else { continue };
             match a.kind {
                 ArrivalKind::Interactive => {
-                    let prof = match a.gpu {
-                        GpuDemand::None => &catalogue[0],
-                        GpuDemand::MigSlice(1) => &catalogue[1],
-                        GpuDemand::MigSlice(_) => &catalogue[2],
-                        GpuDemand::WholeGpu => &catalogue[4],
-                    };
-                    let _ = platform.spawn_session(&a.user, prof);
+                    let profile = aiinfn::hub::profiles::profile_for_demand(a.gpu);
+                    let req = ApiObject::Session(SessionResource::request(&a.user, profile));
+                    let _ = api.create(&token, &req);
                 }
                 ArrivalKind::Batch => {
-                    let _ = platform.submit_ml_training(
-                        &a.user,
+                    let _ = api.submit_ml_training(
+                        &token,
                         &a.project,
                         a.duration * 8e12,
                         a.gpu,
@@ -57,20 +54,22 @@ fn main() -> anyhow::Result<()> {
                 }
             }
         }
-        platform.run_for(until - platform.now(), 60.0);
-        if (platform.now() / 3600.0).fract() < 0.09 {
-            util_by_hour.push((platform.now() / 3600.0, platform.accelerator_utilization()));
+        let dt = until - api.now();
+        api.run_for(dt, 60.0);
+        if (api.now() / 3600.0).fract() < 0.09 {
+            util_by_hour.push((api.now() / 3600.0, api.platform().accelerator_utilization()));
         }
     }
 
     println!("\n== work-week summary ==");
-    println!("pods: {:?}", platform.pod_phase_counts());
+    println!("pods: {:?}", api.platform().pod_phase_counts());
+    let metrics = api.platform().metrics();
     println!(
         "sessions spawned: {}, batch evictions: {}",
-        platform.metrics.interactive_spawn_latencies.len(),
-        platform.metrics.evictions
+        metrics.interactive_spawn_latencies.len(),
+        metrics.evictions
     );
-    let mut lat = platform.metrics.interactive_spawn_latencies.clone();
+    let mut lat = metrics.interactive_spawn_latencies.clone();
     if !lat.is_empty() {
         println!(
             "interactive spawn latency: p50={:.1}s p95={:.1}s p99={:.1}s",
@@ -79,7 +78,7 @@ fn main() -> anyhow::Result<()> {
             exact_percentile(&mut lat, 99.0),
         );
     }
-    let mut waits = platform.metrics.batch_wait_times.clone();
+    let mut waits = metrics.batch_wait_times.clone();
     if !waits.is_empty() {
         println!(
             "batch queue wait: p50={:.0}s p95={:.0}s",
@@ -104,8 +103,8 @@ fn main() -> anyhow::Result<()> {
         avg(&office) * 100.0,
         avg(&night) * 100.0
     );
-    println!("\n{}", dashboard::overview(&platform.tsdb, platform.now(), hours(24.0)));
-    let report = aiinfn::monitoring::account(&platform.store.borrow(), platform.now());
+    println!("\n{}", dashboard::overview(&api.platform().tsdb, api.now(), hours(24.0)));
+    let report = api.platform().usage_report();
     print!("{}", report.render("top users by GPU-hours (work-week)"));
     Ok(())
 }

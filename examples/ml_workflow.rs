@@ -10,8 +10,9 @@
 
 use std::collections::{HashMap, HashSet};
 
-use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
-use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind};
+use aiinfn::platform::{default_config_path, PlatformConfig};
+use aiinfn::queue::kueue::PriorityClass;
 use aiinfn::workflow::{parse_workflow, Dag};
 
 const WORKFLOW: &str = r#"{
@@ -35,17 +36,17 @@ const WORKFLOW: &str = r#"{
 fn main() -> anyhow::Result<()> {
     aiinfn::util::logging::init();
     let cfg = PlatformConfig::load(&default_config_path())?;
-    let mut platform = Platform::bootstrap(cfg)?;
+    let mut api = ApiServer::bootstrap(cfg)?;
 
-    // stage the raw inputs on the project volume
-    platform.nfs.create_volume("proj-workflow", 10 << 30).map_err(|e| anyhow::anyhow!("{e}"))?;
-    platform.nfs.mkdir_p("proj-workflow", "raw").map_err(|e| anyhow::anyhow!("{e}"))?;
+    // stage the raw inputs on the project volume (NFS is a leaf service,
+    // not a control-plane resource: reached via the platform handle)
+    let nfs = &mut api.platform_mut().nfs;
+    nfs.create_volume("proj-workflow", 10 << 30).map_err(|e| anyhow::anyhow!("{e}"))?;
+    nfs.mkdir_p("proj-workflow", "raw").map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut available: HashSet<String> = HashSet::new();
     for s in ["a", "b", "c", "d"] {
         let path = format!("raw/{s}.dat");
-        platform
-            .nfs
-            .write("proj-workflow", &path, format!("raw sample {s}").as_bytes())
+        nfs.write("proj-workflow", &path, format!("raw sample {s}").as_bytes())
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         available.insert(path);
     }
@@ -60,42 +61,52 @@ fn main() -> anyhow::Result<()> {
         dag.total_work()
     );
 
-    // the dependency controller: submit ready jobs, collect completions
+    // the dependency controller: submit ready jobs through the API,
+    // collect completions from the Workload views
     let mut done: HashSet<usize> = HashSet::new();
     let mut submitted: HashMap<usize, String> = HashMap::new();
-    let t0 = platform.now();
+    let t0 = api.now();
     while done.len() < dag.jobs.len() {
+        // fresh login each round: a stalled workflow could outlive the TTL
+        let token = api.login("user021")?;
         // submit newly-ready jobs
         for j in dag.ready(&available, &done) {
             if submitted.contains_key(&j) {
                 continue;
             }
             let job = &dag.jobs[j];
-            let wl = platform.submit_batch(
+            let req = BatchJobResource::request(
                 "user021",
                 "project07",
                 job.resources.clone(),
                 job.duration,
                 PriorityClass::BatchHigh,
                 false,
-            )?;
-            println!("t={:>6.0}s submit {:<14} ({})", platform.now(), job.id, wl);
+            );
+            let wl = api.create(&token, &ApiObject::BatchJob(req))?.name().to_string();
+            println!("t={:>6.0}s submit {:<14} ({})", api.now(), job.id, wl);
             submitted.insert(j, wl);
         }
-        platform.run_for(60.0, 15.0);
+        api.run_for(60.0, 15.0);
         // harvest completions → materialize outputs
         for (j, wl) in submitted.clone() {
             if done.contains(&j) {
                 continue;
             }
-            if platform.kueue.workload(&wl).unwrap().state == WorkloadState::Finished {
+            let state = api
+                .get(&token, ResourceKind::Workload, &wl)?
+                .as_workload()
+                .unwrap()
+                .state
+                .clone();
+            if state == "Finished" {
                 done.insert(j);
                 for out in &dag.jobs[j].outputs {
                     let dir = out.rsplit_once('/').map(|(d, _)| d).unwrap_or("");
                     if !dir.is_empty() {
-                        platform.nfs.mkdir_p("proj-workflow", dir).ok();
+                        api.platform_mut().nfs.mkdir_p("proj-workflow", dir).ok();
                     }
-                    platform
+                    api.platform_mut()
                         .nfs
                         .write("proj-workflow", out, format!("artifact {out}").as_bytes())
                         .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -103,15 +114,15 @@ fn main() -> anyhow::Result<()> {
                 }
                 println!(
                     "t={:>6.0}s done   {:<14} outputs {:?}",
-                    platform.now(),
+                    api.now(),
                     dag.jobs[j].id,
                     dag.jobs[j].outputs
                 );
             }
         }
-        anyhow::ensure!(platform.now() - t0 < 24.0 * 3600.0, "workflow stalled");
+        anyhow::ensure!(api.now() - t0 < 24.0 * 3600.0, "workflow stalled");
     }
-    let makespan = platform.now() - t0;
+    let makespan = api.now() - t0;
 
     println!("\n== workflow summary ==");
     println!(
@@ -121,7 +132,7 @@ fn main() -> anyhow::Result<()> {
         dag.total_work() / makespan,
         dag.critical_path()
     );
-    anyhow::ensure!(platform.nfs.exists("proj-workflow", "summary.md"));
+    anyhow::ensure!(api.platform().nfs.exists("proj-workflow", "summary.md"));
     println!("ml_workflow OK: dependencies honoured, outputs materialized");
     Ok(())
 }

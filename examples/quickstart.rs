@@ -1,81 +1,113 @@
 //! Quickstart: boot the AI_INFN platform from the paper's inventory config,
-//! spawn an interactive GPU session, submit a couple of batch jobs, and
-//! watch the Kueue/scheduler machinery place everything.
+//! then do everything through the control-plane API — login, spawn an
+//! interactive GPU session, submit batch jobs, watch the Kueue/scheduler
+//! machinery place everything, and read it all back as typed resources.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
+use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector, SessionResource};
 use aiinfn::cluster::resources::{ResourceVec, MEMORY};
-use aiinfn::hub::profiles::default_catalogue;
-use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::platform::{default_config_path, PlatformConfig};
 use aiinfn::queue::kueue::PriorityClass;
 
 fn main() -> anyhow::Result<()> {
     aiinfn::util::logging::init();
 
     // 1. Boot from the bundled §2 inventory (4 servers, 20 GPUs, 10 FPGAs,
-    //    A100s MIG-partitioned 7-way, 4 federation sites behind InterLink).
+    //    A100s MIG-partitioned 7-way, 4 federation sites behind InterLink)
+    //    and stand the API server in front of it.
     let cfg = PlatformConfig::load(&default_config_path())?;
-    let mut platform = Platform::bootstrap(cfg)?;
+    let mut api = ApiServer::bootstrap(cfg)?;
+    let operator = api.login("user001")?;
+    let nodes = api.list(&operator, ResourceKind::Node, &Selector::all())?;
+    let sites = api.list(&operator, ResourceKind::Site, &Selector::all())?;
     println!(
-        "booted '{}': {} nodes ({} virtual), {} registered users, {} projects",
-        platform.config.name,
-        platform.store.borrow().node_count(),
-        platform.vks.len(),
-        platform.registry.user_count(),
-        platform.registry.project_count(),
+        "booted '{}': {} nodes ({} federation sites), {} registered users, {} projects",
+        api.platform().config.name,
+        nodes.len(),
+        sites.len(),
+        api.platform().registry.user_count(),
+        api.platform().registry.project_count(),
     );
 
-    // 2. A researcher spawns a JupyterLab session with a MIG slice.
-    let profile = default_catalogue()
-        .into_iter()
-        .find(|p| p.name == "tensorflow-mig-1g")
-        .unwrap();
-    let sid = platform
-        .spawn_session("user007", &profile)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!("spawned session {sid} (profile {})", profile.name);
+    // 2. A researcher logs in and spawns a JupyterLab session with a MIG
+    //    slice — a `create` on the Session resource. Remember the watch
+    //    cursor first, so the pod's whole life is observable below.
+    let rv = api.last_rv();
+    let alice = api.login("user007")?;
+    let created = api.create(
+        &alice,
+        &ApiObject::Session(SessionResource::request("user007", "tensorflow-mig-1g")),
+    )?;
+    let sid = created.name().to_string();
+    println!("spawned session {sid} (profile tensorflow-mig-1g)");
 
     // 3. Two batch jobs: one local-only, one allowed to offload.
-    let wl_local = platform.submit_batch(
-        "user012",
-        "project03",
-        ResourceVec::cpu_millis(8000).with(MEMORY, 16 << 30).with("nvidia.com/mig-1g.5gb", 2),
-        900.0,
-        PriorityClass::Batch,
-        false,
-    )?;
-    let wl_offload = platform.submit_batch(
-        "user013",
-        "project03",
-        ResourceVec::cpu_millis(16_000).with(MEMORY, 32 << 30),
-        600.0,
-        PriorityClass::Batch,
-        true,
-    )?;
+    let u12 = api.login("user012")?;
+    let wl_local = api
+        .create(
+            &u12,
+            &ApiObject::BatchJob(BatchJobResource::request(
+                "user012",
+                "project03",
+                ResourceVec::cpu_millis(8000)
+                    .with(MEMORY, 16 << 30)
+                    .with("nvidia.com/mig-1g.5gb", 2),
+                900.0,
+                PriorityClass::Batch,
+                false,
+            )),
+        )?
+        .name()
+        .to_string();
+    let u13 = api.login("user013")?;
+    let wl_offload = api
+        .create(
+            &u13,
+            &ApiObject::BatchJob(BatchJobResource::request(
+                "user013",
+                "project03",
+                ResourceVec::cpu_millis(16_000).with(MEMORY, 32 << 30),
+                600.0,
+                PriorityClass::Batch,
+                true,
+            )),
+        )?
+        .name()
+        .to_string();
 
     // 4. Run half an hour of simulated operation.
-    platform.run_for(1800.0, 10.0);
+    api.run_for(1800.0, 10.0);
 
     println!("\nafter 30 simulated minutes:");
-    println!("  pod phases: {:?}", platform.pod_phase_counts());
+    println!("  pod phases: {:?}", api.platform().pod_phase_counts());
     println!(
         "  accelerator utilization: {:.1}%",
-        platform.accelerator_utilization() * 100.0
+        api.platform().accelerator_utilization() * 100.0
     );
     for wl in [&wl_local, &wl_offload] {
-        println!(
-            "  workload {wl}: {:?}",
-            platform.kueue.workload(wl).unwrap().state
-        );
+        let job = api.get(&u12, ResourceKind::BatchJob, wl)?;
+        println!("  batch job {wl}: {}", job.as_batch_job().unwrap().state);
     }
+    // the session pod's life so far, straight from the watch stream
+    let session_pod = api.get(&alice, ResourceKind::Session, &sid)?;
+    let pod_name = session_pod.as_session().unwrap().pod_name.clone();
+    let transitions: Vec<String> = api
+        .watch(&alice, ResourceKind::Pod, rv)?
+        .into_iter()
+        .filter(|e| e.name == pod_name)
+        .map(|e| format!("{}@{:.0}s", e.event.as_str(), e.at))
+        .collect();
+    println!("  session pod events: {}", transitions.join(" → "));
     println!(
         "  spawn latency p50 sample: {:?}s",
-        platform.metrics.interactive_spawn_latencies.first()
+        api.platform().metrics().interactive_spawn_latencies.first()
     );
 
-    // 5. The session is still running; stop it and show accounting.
-    platform.stop_session(&sid, "user logout")?;
-    let report = aiinfn::monitoring::account(&platform.store.borrow(), platform.now());
+    // 5. The session is still running; stop it (a `delete`) and show
+    //    accounting.
+    api.delete(&alice, ResourceKind::Session, &sid)?;
+    let report = api.platform().usage_report();
     print!("{}", report.render("quickstart usage"));
     Ok(())
 }

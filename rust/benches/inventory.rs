@@ -44,7 +44,7 @@ fn main() {
     let cfg2 = cfg.clone();
     g.bench("platform-bootstrap", || {
         let p = Platform::bootstrap(cfg2.clone()).unwrap();
-        aiinfn::util::bench::black_box(p.store.borrow().node_count());
+        aiinfn::util::bench::black_box(p.node_count());
     });
     println!("\nE1 inventory checks PASSED");
 }

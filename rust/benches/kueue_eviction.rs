@@ -68,15 +68,15 @@ fn campaign(with_batch: bool) -> Outcome {
             night_samples.push(u);
         }
     }
-    let mut lat = p.metrics.interactive_spawn_latencies.clone();
+    let mut lat = p.metrics().interactive_spawn_latencies.clone();
     let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
     Outcome {
         spawn_p50: exact_percentile(&mut lat.clone(), 50.0),
         spawn_p95: exact_percentile(&mut lat, 95.0),
-        evictions: p.metrics.evictions,
+        evictions: p.metrics().evictions,
         util_office: avg(&office_samples),
         util_night: avg(&night_samples),
-        batch_done: p.metrics.local_completions + p.metrics.remote_completions,
+        batch_done: p.metrics().local_completions + p.metrics().remote_completions,
     }
 }
 

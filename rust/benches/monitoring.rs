@@ -46,7 +46,7 @@ fn main() {
     let mut ts = 0.0f64;
     g.bench("full-fleet-scrape", || {
         ts += 30.0;
-        let st = p.store.borrow();
+        let st = p.cluster();
         exporters::scrape_nodes(&mut db2, &st, ts);
         exporters::scrape_gpus(&mut db2, &st, &mut dcgm, ts);
         exporters::scrape_pods(&mut db2, &st, ts);
@@ -63,15 +63,14 @@ fn main() {
     g.record_value("week-samples-ingested", p.tsdb.samples_ingested() as f64, "samples");
     g.record_value("week-series", p.tsdb.series_count() as f64, "series");
 
-    let report = aiinfn::monitoring::account(&p.store.borrow(), p.now());
+    let report = p.usage_report();
     let text = report.render("E9 weekly accounting (top users)");
     println!("\n{text}");
     assert!(!report.by_user.is_empty(), "accounting must attribute usage");
     assert!(p.tsdb.samples_ingested() > 10_000);
 
     g.bench("accounting-report", || {
-        let st = p.store.borrow();
-        aiinfn::util::bench::black_box(aiinfn::monitoring::account(&st, p.now()));
+        aiinfn::util::bench::black_box(p.usage_report());
     });
     g.bench("dashboard-render", || {
         aiinfn::util::bench::black_box(aiinfn::monitoring::dashboard::overview(&p.tsdb, p.now(), hours(24.0)));

@@ -22,10 +22,7 @@ fn campaign(n_sites: usize) -> (f64, u64, u64) {
     cfg.federation_enabled = n_sites > 0;
     let mut p = Platform::bootstrap(cfg).unwrap();
     // trim the federation to the first n sites
-    while p.vks.len() > n_sites {
-        let vk = p.vks.pop().unwrap();
-        p.store.borrow_mut().remove_node(&vk.node_name, 0.0);
-    }
+    p.truncate_federation(n_sites);
     let mut wls = Vec::new();
     for i in 0..N_JOBS {
         wls.push(
@@ -45,13 +42,13 @@ fn campaign(n_sites: usize) -> (f64, u64, u64) {
         p.run_for(300.0, 15.0);
         let done = wls
             .iter()
-            .filter(|w| p.kueue.workload(w).unwrap().state == WorkloadState::Finished)
+            .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
             .count();
         if done == N_JOBS || p.now() - t0 > 7.0 * 24.0 * 3600.0 {
             break;
         }
     }
-    (p.now() - t0, p.metrics.local_completions, p.metrics.remote_completions)
+    (p.now() - t0, p.metrics().local_completions, p.metrics().remote_completions)
 }
 
 fn main() {

@@ -62,7 +62,7 @@ fn main() {
         }
         p.run_for(until - p.now(), 120.0);
     }
-    let report = aiinfn::monitoring::account(&p.store.borrow(), p.now());
+    let report = p.usage_report();
     let k8s_used: f64 = report.by_user.values().map(|u| u.total_gpu_hours()).sum();
     // the platform never pins: hours *held* = hours actually allocated to
     // pods, i.e. its efficiency denominator equals its numerator up to the

@@ -61,7 +61,7 @@ fn run_on_platform(samples: usize) -> f64 {
         }
         p.run_for(30.0, 10.0);
         for (j, wl) in submitted.clone() {
-            if !done.contains(&j) && p.kueue.workload(&wl).unwrap().state == WorkloadState::Finished {
+            if !done.contains(&j) && p.workload_state(&wl) == Some(WorkloadState::Finished) {
                 done.insert(j);
                 for out in &dag.jobs[j].outputs {
                     available.insert(out.clone());

@@ -1,0 +1,103 @@
+//! # The control-plane API: typed resources, uniform verbs, watch streams
+//!
+//! A Kubernetes-apiserver-like front door over the platform. Every external
+//! interaction — spawning sessions, submitting jobs, inspecting pods/nodes/
+//! workloads/sites — flows through [`ApiServer`] as a *verb on a typed
+//! resource*, authenticated by a bearer token from the hub's
+//! [`AuthService`](crate::hub::auth::AuthService):
+//!
+//! | verb                           | semantics                                             |
+//! |--------------------------------|-------------------------------------------------------|
+//! | `create(token, obj)`           | Session / BatchJob: admit + provision; others refused |
+//! | `get(token, kind, name)`       | one object, current state                             |
+//! | `list(token, kind, selector)`  | all objects, filtered by label/field selectors        |
+//! | `delete(token, kind, name)`    | Session: stop; BatchJob: cancel (owner-checked)       |
+//! | `watch(token, kind, since_rv)` | `Added`/`Modified`/`Deleted` deltas after `since_rv`  |
+//!
+//! ## Resource model
+//!
+//! Six kinds ([`ResourceKind`]), each a typed struct carrying [`Metadata`]
+//! (name, namespace, labels, resourceVersion) and serializing to/from the
+//! in-house [`Json`](crate::util::json::Json) in the familiar
+//! `{apiVersion, kind, metadata, spec, status}` shape:
+//!
+//! * [`SessionResource`] — an interactive JupyterLab session (writable)
+//! * [`BatchJobResource`] — a queued/batch job (writable)
+//! * [`PodView`] — a pod's spec + status (read-only projection)
+//! * [`NodeView`] — node capacity/allocatable/free (read-only)
+//! * [`WorkloadView`] — Kueue admission state (read-only)
+//! * [`SiteView`] — a federation site behind InterLink (read-only)
+//!
+//! ## Watch streams
+//!
+//! [`ApiServer`] maintains a monotonically-versioned event log
+//! ([`WatchLog`]), fed by the cluster store's event records and the Kueue
+//! transition log — *deltas*, not store re-scans. Pod and Node events come
+//! straight from the store; Workload events from the Kueue transitions;
+//! Session and BatchJob streams mirror their pod/workload transitions as
+//! `Modified` events, with `Added`/`Deleted` emitted by the create/delete
+//! verbs (an idle-culled session surfaces on the Pod stream as its pod's
+//! terminal event). `watch(kind, since_rv)` returns everything after
+//! `since_rv`, so controllers and dashboards resume exactly where they
+//! left off:
+//!
+//! ```ignore
+//! let rv = api.last_rv();
+//! api.run_for(300.0, 10.0);
+//! for ev in api.watch(&token, ResourceKind::Pod, rv)? {
+//!     // Added(Pending) → Modified(Scheduled) → Modified(Running) → ...
+//! }
+//! ```
+//!
+//! ## Migrating off raw field access
+//!
+//! Before (field-poking, pre-API):
+//!
+//! ```ignore
+//! let mut p = Platform::bootstrap(cfg)?;
+//! let wl = p.submit_batch("user012", "project03", req, 900.0, PriorityClass::Batch, false)?;
+//! p.run_for(1800.0, 10.0);
+//! let state = p.kueue.workload(&wl).unwrap().state.clone();   // raw field
+//! let pods = p.store.borrow().pods().count();                 // raw field
+//! ```
+//!
+//! After (typed verbs, authenticated):
+//!
+//! ```ignore
+//! let mut api = ApiServer::bootstrap(cfg)?;
+//! let token = api.login("user012")?;
+//! let job = BatchJobResource::request("user012", "project03", req, 900.0, "batch", false);
+//! let created = api.create(&token, &ApiObject::BatchJob(job))?;
+//! api.run_for(1800.0, 10.0);
+//! let job = api.get(&token, ResourceKind::BatchJob, created.name())?; // typed view
+//! let pods = api.list(&token, ResourceKind::Pod, &Selector::all())?.len();
+//! ```
+
+pub mod resources;
+pub mod server;
+pub mod watch;
+
+pub use resources::{
+    ApiObject, BatchJobResource, Metadata, NodeView, PodView, ResourceKind, SessionResource,
+    SiteView, WorkloadView,
+};
+pub use server::{ApiServer, Selector};
+pub use watch::{EventType, WatchEvent, WatchLog};
+
+/// Typed API failure modes (the control plane's HTTP-ish status codes).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ApiError {
+    /// 404 — no such object.
+    #[error("not found: {0}")]
+    NotFound(String),
+    /// 409 — the request conflicts with current state (duplicate session,
+    /// admission pending, ...).
+    #[error("conflict: {0}")]
+    Conflict(String),
+    /// 403 — bad/expired bearer token, or acting on another user's objects.
+    #[error("forbidden: {0}")]
+    Forbidden(String),
+    /// 400/422 — malformed resource, unknown kind/field, unsupported verb.
+    #[error("invalid: {0}")]
+    Invalid(String),
+}

@@ -1,0 +1,880 @@
+//! Typed API resources: the objects the control plane serves.
+//!
+//! Each kind carries [`Metadata`] and round-trips through the in-house
+//! [`Json`] value model in the `{apiVersion, kind, metadata, spec, status}`
+//! shape. Writable kinds (`Session`, `BatchJob`) double as *requests*: a
+//! client fills the spec, the server fills metadata + status.
+
+use std::collections::BTreeMap;
+
+use crate::api::ApiError;
+use crate::cluster::node::Node;
+use crate::cluster::pod::{Pod, PodPhase};
+use crate::cluster::resources::ResourceVec;
+use crate::queue::kueue::{PriorityClass, Workload, WorkloadState};
+use crate::util::json::Json;
+
+/// API group/version stamped on every serialized object.
+pub const API_VERSION: &str = "aiinfn/v1";
+
+/// The resource kinds the control plane serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    Session,
+    BatchJob,
+    Pod,
+    Node,
+    Workload,
+    Site,
+}
+
+impl ResourceKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ResourceKind::Session => "Session",
+            ResourceKind::BatchJob => "BatchJob",
+            ResourceKind::Pod => "Pod",
+            ResourceKind::Node => "Node",
+            ResourceKind::Workload => "Workload",
+            ResourceKind::Site => "Site",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ResourceKind> {
+        Some(match s {
+            "Session" => ResourceKind::Session,
+            "BatchJob" => ResourceKind::BatchJob,
+            "Pod" => ResourceKind::Pod,
+            "Node" => ResourceKind::Node,
+            "Workload" => ResourceKind::Workload,
+            "Site" => ResourceKind::Site,
+            _ => return None,
+        })
+    }
+
+    /// Every kind, for enumeration in tests and tooling.
+    pub fn all() -> [ResourceKind; 6] {
+        [
+            ResourceKind::Session,
+            ResourceKind::BatchJob,
+            ResourceKind::Pod,
+            ResourceKind::Node,
+            ResourceKind::Workload,
+            ResourceKind::Site,
+        ]
+    }
+}
+
+/// Object metadata: identity, grouping, and the version stamp the watch
+/// machinery orders by.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metadata {
+    pub name: String,
+    pub namespace: String,
+    pub labels: BTreeMap<String, String>,
+    pub resource_version: u64,
+}
+
+impl Metadata {
+    pub fn named(name: impl Into<String>, namespace: impl Into<String>) -> Metadata {
+        Metadata { name: name.into(), namespace: namespace.into(), ..Default::default() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("namespace", Json::str(self.namespace.as_str())),
+            (
+                "labels",
+                Json::Obj(
+                    self.labels.iter().map(|(k, v)| (k.clone(), Json::str(v.clone()))).collect(),
+                ),
+            ),
+            ("resourceVersion", Json::num(self.resource_version as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Metadata, ApiError> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::Invalid("metadata.name missing".into()))?
+            .to_string();
+        let namespace = j.str_or("namespace", "default").to_string();
+        let mut labels = BTreeMap::new();
+        if let Some(obj) = j.get("labels").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                let v = v
+                    .as_str()
+                    .ok_or_else(|| ApiError::Invalid(format!("label {k} is not a string")))?;
+                labels.insert(k.clone(), v.to_string());
+            }
+        }
+        let resource_version = j.get("resourceVersion").and_then(Json::as_u64).unwrap_or(0);
+        Ok(Metadata { name, namespace, labels, resource_version })
+    }
+}
+
+// ------------------------------------------------------------ shared helpers
+
+/// `ResourceVec` as a JSON object of counts.
+pub fn resources_to_json(r: &ResourceVec) -> Json {
+    Json::Obj(r.iter().map(|(k, v)| (k.to_string(), Json::num(v as f64))).collect())
+}
+
+pub fn resources_from_json(j: &Json) -> Result<ResourceVec, ApiError> {
+    let obj = j.as_obj().ok_or_else(|| ApiError::Invalid("resources must be an object".into()))?;
+    let mut r = ResourceVec::new();
+    for (k, v) in obj {
+        let q = v
+            .as_i64()
+            .ok_or_else(|| ApiError::Invalid(format!("resource {k} is not a number")))?;
+        if q < 0 {
+            return Err(ApiError::Invalid(format!("resource {k} is negative ({q})")));
+        }
+        r.set(k, q);
+    }
+    Ok(r)
+}
+
+/// Pod phase as the API's status string.
+pub fn phase_str(p: PodPhase) -> &'static str {
+    match p {
+        PodPhase::Pending => "Pending",
+        PodPhase::Scheduled => "Scheduled",
+        PodPhase::Running => "Running",
+        PodPhase::Succeeded => "Succeeded",
+        PodPhase::Failed => "Failed",
+        PodPhase::Evicted => "Evicted",
+    }
+}
+
+/// Workload admission state as the API's status string.
+pub fn workload_state_str(s: &WorkloadState) -> &'static str {
+    match s {
+        WorkloadState::Queued => "Queued",
+        WorkloadState::Admitted => "Admitted",
+        WorkloadState::EvictedPendingRequeue { .. } => "EvictedPendingRequeue",
+        WorkloadState::Finished => "Finished",
+    }
+}
+
+/// Priority class as the API's spec string.
+pub fn priority_str(p: PriorityClass) -> &'static str {
+    match p {
+        PriorityClass::Batch => "batch",
+        PriorityClass::BatchHigh => "batch-high",
+        PriorityClass::Interactive => "interactive",
+    }
+}
+
+pub fn parse_priority(s: &str) -> Result<PriorityClass, ApiError> {
+    match s {
+        "batch" => Ok(PriorityClass::Batch),
+        "batch-high" => Ok(PriorityClass::BatchHigh),
+        "interactive" => Ok(PriorityClass::Interactive),
+        other => Err(ApiError::Invalid(format!("unknown priority class {other:?}"))),
+    }
+}
+
+fn opt_num(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(Json::as_f64)
+}
+
+fn opt_str(j: &Json, key: &str) -> Option<String> {
+    j.get(key).and_then(Json::as_str).map(str::to_string)
+}
+
+fn envelope(kind: ResourceKind, metadata: &Metadata, spec: Json, status: Json) -> Json {
+    Json::obj(vec![
+        ("apiVersion", Json::str(API_VERSION)),
+        ("kind", Json::str(kind.as_str())),
+        ("metadata", metadata.to_json()),
+        ("spec", spec),
+        ("status", status),
+    ])
+}
+
+fn check_kind(j: &Json, want: ResourceKind) -> Result<(Metadata, &Json, &Json), ApiError> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::Invalid("object has no kind".into()))?;
+    if kind != want.as_str() {
+        return Err(ApiError::Invalid(format!("expected kind {}, got {kind}", want.as_str())));
+    }
+    let metadata = Metadata::from_json(
+        j.get("metadata").ok_or_else(|| ApiError::Invalid("object has no metadata".into()))?,
+    )?;
+    static EMPTY: Json = Json::Null;
+    let spec = j.get("spec").unwrap_or(&EMPTY);
+    let status = j.get("status").unwrap_or(&EMPTY);
+    Ok((metadata, spec, status))
+}
+
+// ----------------------------------------------------------------- Session
+
+/// An interactive JupyterLab session (writable kind).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SessionResource {
+    pub metadata: Metadata,
+    /// Spec: who and with which hub profile.
+    pub user: String,
+    pub profile: String,
+    /// Status (server-filled).
+    pub pod_name: String,
+    pub workload_name: String,
+    pub phase: String,
+    pub bucket_mount: Option<String>,
+    pub started_at: f64,
+}
+
+impl SessionResource {
+    /// A creation request: spec only, server fills the rest.
+    pub fn request(user: &str, profile: &str) -> SessionResource {
+        SessionResource {
+            metadata: Metadata::named("", "hub"),
+            user: user.to_string(),
+            profile: profile.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::Session,
+            &self.metadata,
+            Json::obj(vec![
+                ("user", Json::str(self.user.as_str())),
+                ("profile", Json::str(self.profile.as_str())),
+            ]),
+            Json::obj({
+                let mut f = vec![
+                    ("podName", Json::str(self.pod_name.as_str())),
+                    ("workloadName", Json::str(self.workload_name.as_str())),
+                    ("phase", Json::str(self.phase.as_str())),
+                    ("startedAt", Json::num(self.started_at)),
+                ];
+                if let Some(m) = &self.bucket_mount {
+                    f.push(("bucketMount", Json::str(m.as_str())));
+                }
+                f
+            }),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionResource, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::Session)?;
+        Ok(SessionResource {
+            metadata,
+            user: opt_str(spec, "user").unwrap_or_default(),
+            profile: opt_str(spec, "profile").unwrap_or_default(),
+            pod_name: opt_str(status, "podName").unwrap_or_default(),
+            workload_name: opt_str(status, "workloadName").unwrap_or_default(),
+            phase: opt_str(status, "phase").unwrap_or_default(),
+            bucket_mount: opt_str(status, "bucketMount"),
+            started_at: opt_num(status, "startedAt").unwrap_or(0.0),
+        })
+    }
+}
+
+// ----------------------------------------------------------------- BatchJob
+
+/// A batch job (writable kind). `metadata.name` is the workload name.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchJobResource {
+    pub metadata: Metadata,
+    /// Spec.
+    pub user: String,
+    pub project: String,
+    pub requests: ResourceVec,
+    pub duration: f64,
+    pub priority: String,
+    pub offloadable: bool,
+    /// Status (server-filled).
+    pub state: String,
+    pub live_pod: Option<String>,
+}
+
+impl BatchJobResource {
+    /// A creation request: spec only, server fills the rest.
+    pub fn request(
+        user: &str,
+        project: &str,
+        requests: ResourceVec,
+        duration: f64,
+        priority: PriorityClass,
+        offloadable: bool,
+    ) -> BatchJobResource {
+        BatchJobResource {
+            metadata: Metadata::named("", "batch"),
+            user: user.to_string(),
+            project: project.to_string(),
+            requests,
+            duration,
+            priority: priority_str(priority).to_string(),
+            offloadable,
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::BatchJob,
+            &self.metadata,
+            Json::obj(vec![
+                ("user", Json::str(self.user.as_str())),
+                ("project", Json::str(self.project.as_str())),
+                ("requests", resources_to_json(&self.requests)),
+                ("duration", Json::num(self.duration)),
+                ("priority", Json::str(self.priority.as_str())),
+                ("offloadable", Json::Bool(self.offloadable)),
+            ]),
+            Json::obj({
+                let mut f = vec![("state", Json::str(self.state.as_str()))];
+                if let Some(p) = &self.live_pod {
+                    f.push(("livePod", Json::str(p.as_str())));
+                }
+                f
+            }),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<BatchJobResource, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::BatchJob)?;
+        Ok(BatchJobResource {
+            metadata,
+            user: opt_str(spec, "user").unwrap_or_default(),
+            project: opt_str(spec, "project").unwrap_or_default(),
+            requests: spec
+                .get("requests")
+                .map(resources_from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            duration: opt_num(spec, "duration").unwrap_or(0.0),
+            priority: opt_str(spec, "priority").unwrap_or_else(|| "batch".to_string()),
+            offloadable: spec.get("offloadable").and_then(Json::as_bool).unwrap_or(false),
+            state: opt_str(status, "state").unwrap_or_default(),
+            live_pod: opt_str(status, "livePod"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------- PodView
+
+/// Read-only projection of a pod.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PodView {
+    pub metadata: Metadata,
+    pub requests: ResourceVec,
+    pub user: String,
+    pub project: String,
+    pub node: Option<String>,
+    pub phase: String,
+    pub created_at: f64,
+    pub started_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    pub evictions: u32,
+    pub message: String,
+}
+
+impl PodView {
+    pub fn from_pod(pod: &Pod, resource_version: u64) -> PodView {
+        PodView {
+            metadata: Metadata {
+                name: pod.spec.name.clone(),
+                namespace: pod.spec.namespace.clone(),
+                labels: pod.spec.labels.clone(),
+                resource_version,
+            },
+            requests: pod.spec.requests.clone(),
+            user: pod.spec.user.clone(),
+            project: pod.spec.project.clone(),
+            node: pod.status.node.clone(),
+            phase: phase_str(pod.status.phase).to_string(),
+            created_at: pod.status.created_at,
+            started_at: pod.status.started_at,
+            finished_at: pod.status.finished_at,
+            evictions: pod.status.evictions,
+            message: pod.status.message.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::Pod,
+            &self.metadata,
+            Json::obj(vec![
+                ("requests", resources_to_json(&self.requests)),
+                ("user", Json::str(self.user.as_str())),
+                ("project", Json::str(self.project.as_str())),
+            ]),
+            Json::obj({
+                let mut f = vec![
+                    ("phase", Json::str(self.phase.as_str())),
+                    ("createdAt", Json::num(self.created_at)),
+                    ("evictions", Json::num(self.evictions as f64)),
+                    ("message", Json::str(self.message.as_str())),
+                ];
+                if let Some(n) = &self.node {
+                    f.push(("node", Json::str(n.as_str())));
+                }
+                if let Some(t) = self.started_at {
+                    f.push(("startedAt", Json::num(t)));
+                }
+                if let Some(t) = self.finished_at {
+                    f.push(("finishedAt", Json::num(t)));
+                }
+                f
+            }),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<PodView, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::Pod)?;
+        Ok(PodView {
+            metadata,
+            requests: spec
+                .get("requests")
+                .map(resources_from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            user: opt_str(spec, "user").unwrap_or_default(),
+            project: opt_str(spec, "project").unwrap_or_default(),
+            node: opt_str(status, "node"),
+            phase: opt_str(status, "phase").unwrap_or_default(),
+            created_at: opt_num(status, "createdAt").unwrap_or(0.0),
+            started_at: opt_num(status, "startedAt"),
+            finished_at: opt_num(status, "finishedAt"),
+            evictions: opt_num(status, "evictions").unwrap_or(0.0) as u32,
+            message: opt_str(status, "message").unwrap_or_default(),
+        })
+    }
+}
+
+// --------------------------------------------------------------- NodeView
+
+/// Read-only projection of a node (capacity / allocatable / free).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeView {
+    pub metadata: Metadata,
+    pub capacity: ResourceVec,
+    pub allocatable: ResourceVec,
+    pub free: ResourceVec,
+    pub virtual_node: bool,
+    pub ready: bool,
+}
+
+impl NodeView {
+    pub fn from_node(node: &Node, free: ResourceVec, resource_version: u64) -> NodeView {
+        NodeView {
+            metadata: Metadata {
+                name: node.name.clone(),
+                namespace: "cluster".to_string(),
+                labels: node.labels.clone(),
+                resource_version,
+            },
+            capacity: node.capacity.clone(),
+            allocatable: node.allocatable.clone(),
+            free,
+            virtual_node: node.virtual_node,
+            ready: node.ready,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::Node,
+            &self.metadata,
+            Json::obj(vec![
+                ("capacity", resources_to_json(&self.capacity)),
+                ("allocatable", resources_to_json(&self.allocatable)),
+                ("virtual", Json::Bool(self.virtual_node)),
+            ]),
+            Json::obj(vec![
+                ("free", resources_to_json(&self.free)),
+                ("ready", Json::Bool(self.ready)),
+            ]),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<NodeView, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::Node)?;
+        Ok(NodeView {
+            metadata,
+            capacity: spec
+                .get("capacity")
+                .map(resources_from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            allocatable: spec
+                .get("allocatable")
+                .map(resources_from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            free: status.get("free").map(resources_from_json).transpose()?.unwrap_or_default(),
+            virtual_node: spec.get("virtual").and_then(Json::as_bool).unwrap_or(false),
+            ready: status.get("ready").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+// ------------------------------------------------------------ WorkloadView
+
+/// Read-only projection of a Kueue workload.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkloadView {
+    pub metadata: Metadata,
+    pub queue: String,
+    pub priority: String,
+    pub requests: ResourceVec,
+    pub state: String,
+    pub created_at: f64,
+    pub admitted_at: Option<f64>,
+    pub evictions: u32,
+}
+
+impl WorkloadView {
+    pub fn from_workload(w: &Workload, resource_version: u64) -> WorkloadView {
+        WorkloadView {
+            metadata: Metadata {
+                name: w.name.clone(),
+                namespace: w.queue.clone(),
+                labels: BTreeMap::new(),
+                resource_version,
+            },
+            queue: w.queue.clone(),
+            priority: priority_str(w.priority).to_string(),
+            requests: w.requests.clone(),
+            state: workload_state_str(&w.state).to_string(),
+            created_at: w.created_at,
+            admitted_at: w.admitted_at,
+            evictions: w.evictions,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::Workload,
+            &self.metadata,
+            Json::obj(vec![
+                ("queue", Json::str(self.queue.as_str())),
+                ("priority", Json::str(self.priority.as_str())),
+                ("requests", resources_to_json(&self.requests)),
+            ]),
+            Json::obj({
+                let mut f = vec![
+                    ("state", Json::str(self.state.as_str())),
+                    ("createdAt", Json::num(self.created_at)),
+                    ("evictions", Json::num(self.evictions as f64)),
+                ];
+                if let Some(t) = self.admitted_at {
+                    f.push(("admittedAt", Json::num(t)));
+                }
+                f
+            }),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkloadView, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::Workload)?;
+        Ok(WorkloadView {
+            metadata,
+            queue: opt_str(spec, "queue").unwrap_or_default(),
+            priority: opt_str(spec, "priority").unwrap_or_else(|| "batch".to_string()),
+            requests: spec
+                .get("requests")
+                .map(resources_from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            state: opt_str(status, "state").unwrap_or_default(),
+            created_at: opt_num(status, "createdAt").unwrap_or(0.0),
+            admitted_at: opt_num(status, "admittedAt"),
+            evictions: opt_num(status, "evictions").unwrap_or(0.0) as u32,
+        })
+    }
+}
+
+// ---------------------------------------------------------------- SiteView
+
+/// Read-only projection of a federation site (Virtual Kubelet provider).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SiteView {
+    pub metadata: Metadata,
+    pub site: String,
+    pub node_name: String,
+    pub capacity: ResourceVec,
+    pub wan_latency: f64,
+    pub tracked_pods: u64,
+    pub round_trips: u64,
+    pub completions: u64,
+}
+
+impl SiteView {
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::Site,
+            &self.metadata,
+            Json::obj(vec![
+                ("site", Json::str(self.site.as_str())),
+                ("nodeName", Json::str(self.node_name.as_str())),
+                ("capacity", resources_to_json(&self.capacity)),
+                ("wanLatency", Json::num(self.wan_latency)),
+            ]),
+            Json::obj(vec![
+                ("trackedPods", Json::num(self.tracked_pods as f64)),
+                ("roundTrips", Json::num(self.round_trips as f64)),
+                ("completions", Json::num(self.completions as f64)),
+            ]),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<SiteView, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::Site)?;
+        Ok(SiteView {
+            metadata,
+            site: opt_str(spec, "site").unwrap_or_default(),
+            node_name: opt_str(spec, "nodeName").unwrap_or_default(),
+            capacity: spec
+                .get("capacity")
+                .map(resources_from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            wan_latency: opt_num(spec, "wanLatency").unwrap_or(0.0),
+            tracked_pods: opt_num(status, "trackedPods").unwrap_or(0.0) as u64,
+            round_trips: opt_num(status, "roundTrips").unwrap_or(0.0) as u64,
+            completions: opt_num(status, "completions").unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+// --------------------------------------------------------------- ApiObject
+
+/// A typed object of any kind — what the uniform verbs accept and return.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiObject {
+    Session(SessionResource),
+    BatchJob(BatchJobResource),
+    Pod(PodView),
+    Node(NodeView),
+    Workload(WorkloadView),
+    Site(SiteView),
+}
+
+impl ApiObject {
+    pub fn kind(&self) -> ResourceKind {
+        match self {
+            ApiObject::Session(_) => ResourceKind::Session,
+            ApiObject::BatchJob(_) => ResourceKind::BatchJob,
+            ApiObject::Pod(_) => ResourceKind::Pod,
+            ApiObject::Node(_) => ResourceKind::Node,
+            ApiObject::Workload(_) => ResourceKind::Workload,
+            ApiObject::Site(_) => ResourceKind::Site,
+        }
+    }
+
+    pub fn metadata(&self) -> &Metadata {
+        match self {
+            ApiObject::Session(x) => &x.metadata,
+            ApiObject::BatchJob(x) => &x.metadata,
+            ApiObject::Pod(x) => &x.metadata,
+            ApiObject::Node(x) => &x.metadata,
+            ApiObject::Workload(x) => &x.metadata,
+            ApiObject::Site(x) => &x.metadata,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.metadata().name
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ApiObject::Session(x) => x.to_json(),
+            ApiObject::BatchJob(x) => x.to_json(),
+            ApiObject::Pod(x) => x.to_json(),
+            ApiObject::Node(x) => x.to_json(),
+            ApiObject::Workload(x) => x.to_json(),
+            ApiObject::Site(x) => x.to_json(),
+        }
+    }
+
+    /// Parse any object by its embedded `kind` discriminator.
+    pub fn from_json(j: &Json) -> Result<ApiObject, ApiError> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::Invalid("object has no kind".into()))?;
+        let kind = ResourceKind::parse(kind)
+            .ok_or_else(|| ApiError::Invalid(format!("unknown kind {kind}")))?;
+        Ok(match kind {
+            ResourceKind::Session => ApiObject::Session(SessionResource::from_json(j)?),
+            ResourceKind::BatchJob => ApiObject::BatchJob(BatchJobResource::from_json(j)?),
+            ResourceKind::Pod => ApiObject::Pod(PodView::from_json(j)?),
+            ResourceKind::Node => ApiObject::Node(NodeView::from_json(j)?),
+            ResourceKind::Workload => ApiObject::Workload(WorkloadView::from_json(j)?),
+            ResourceKind::Site => ApiObject::Site(SiteView::from_json(j)?),
+        })
+    }
+
+    /// Typed accessors (ergonomic unwrapping at call sites).
+    pub fn as_session(&self) -> Option<&SessionResource> {
+        match self {
+            ApiObject::Session(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_batch_job(&self) -> Option<&BatchJobResource> {
+        match self {
+            ApiObject::BatchJob(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_pod(&self) -> Option<&PodView> {
+        match self {
+            ApiObject::Pod(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn as_node(&self) -> Option<&NodeView> {
+        match self {
+            ApiObject::Node(n) => Some(n),
+            _ => None,
+        }
+    }
+
+    pub fn as_workload(&self) -> Option<&WorkloadView> {
+        match self {
+            ApiObject::Workload(w) => Some(w),
+            _ => None,
+        }
+    }
+
+    pub fn as_site(&self) -> Option<&SiteView> {
+        match self {
+            ApiObject::Site(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::resources::MEMORY;
+
+    fn meta(name: &str, ns: &str, rv: u64) -> Metadata {
+        let mut m = Metadata::named(name, ns);
+        m.resource_version = rv;
+        m.labels.insert("app".into(), "test".into());
+        m
+    }
+
+    fn rv_sample() -> ResourceVec {
+        ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30).with("nvidia.com/mig-1g.5gb", 2)
+    }
+
+    /// Serialize → compact string → parse → deserialize must be identity,
+    /// for every resource kind.
+    #[test]
+    fn json_roundtrip_every_kind() {
+        let objects = vec![
+            ApiObject::Session(SessionResource {
+                metadata: meta("session-alice-0001", "hub", 7),
+                user: "alice".into(),
+                profile: "tensorflow-mig-1g".into(),
+                pod_name: "jupyter-session-alice-0001".into(),
+                workload_name: "wl-session-alice-0001".into(),
+                phase: "Running".into(),
+                bucket_mount: Some("/home/alice/bucket".into()),
+                started_at: 12.5,
+            }),
+            ApiObject::BatchJob(BatchJobResource {
+                metadata: meta("wl-job-000001", "batch", 9),
+                user: "bob".into(),
+                project: "project03".into(),
+                requests: rv_sample(),
+                duration: 600.0,
+                priority: "batch-high".into(),
+                offloadable: true,
+                state: "Admitted".into(),
+                live_pod: Some("job-000001-r1".into()),
+            }),
+            ApiObject::Pod(PodView {
+                metadata: meta("job-000001-r1", "batch", 11),
+                requests: rv_sample(),
+                user: "bob".into(),
+                project: "project03".into(),
+                node: Some("cnaf-ai02".into()),
+                phase: "Running".into(),
+                created_at: 1.0,
+                started_at: Some(2.5),
+                finished_at: None,
+                evictions: 1,
+                message: "started".into(),
+            }),
+            ApiObject::Node(NodeView {
+                metadata: meta("cnaf-ai02", "cluster", 3),
+                capacity: rv_sample(),
+                allocatable: rv_sample(),
+                free: ResourceVec::cpu_millis(1000),
+                virtual_node: false,
+                ready: true,
+            }),
+            ApiObject::Workload(WorkloadView {
+                metadata: meta("wl-job-000001", "batch", 13),
+                queue: "batch".into(),
+                priority: "batch".into(),
+                requests: rv_sample(),
+                state: "Queued".into(),
+                created_at: 0.5,
+                admitted_at: None,
+                evictions: 0,
+            }),
+            ApiObject::Site(SiteView {
+                metadata: meta("INFN-T1", "federation", 2),
+                site: "INFN-T1".into(),
+                node_name: "vk-infn-t1".into(),
+                capacity: rv_sample(),
+                wan_latency: 0.004,
+                tracked_pods: 4,
+                round_trips: 120,
+                completions: 9,
+            }),
+        ];
+        for obj in objects {
+            let wire = obj.to_json().to_string();
+            let parsed = Json::parse(&wire).unwrap();
+            let back = ApiObject::from_json(&parsed).unwrap();
+            assert_eq!(back, obj, "round-trip mismatch for kind {}", obj.kind().as_str());
+            assert_eq!(parsed.str_field("apiVersion").unwrap(), API_VERSION);
+        }
+    }
+
+    #[test]
+    fn kind_discriminator_is_checked() {
+        let s = SessionResource::request("alice", "cpu-small").to_json();
+        assert!(matches!(BatchJobResource::from_json(&s), Err(ApiError::Invalid(_))));
+        let no_kind = Json::obj(vec![("metadata", Json::obj(vec![("name", Json::str("x"))]))]);
+        assert!(ApiObject::from_json(&no_kind).is_err());
+    }
+
+    #[test]
+    fn priority_strings_roundtrip() {
+        for p in [PriorityClass::Batch, PriorityClass::BatchHigh, PriorityClass::Interactive] {
+            assert_eq!(parse_priority(priority_str(p)).unwrap(), p);
+        }
+        assert!(parse_priority("urgent").is_err());
+    }
+
+    #[test]
+    fn resource_kind_parse_roundtrip() {
+        for k in ResourceKind::all() {
+            assert_eq!(ResourceKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(ResourceKind::parse("Deployment"), None);
+    }
+}

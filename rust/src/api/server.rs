@@ -1,0 +1,895 @@
+//! The API server: uniform verbs over typed resources, bearer-token auth,
+//! and the pump that feeds store/kueue transitions into the watch log.
+//!
+//! [`ApiServer`] *owns* the [`Platform`]. Consumers authenticate with
+//! [`login`](ApiServer::login) (the hub IAM flow), then use
+//! `create`/`get`/`list`/`delete`/`watch`. Subsystems the control plane does
+//! not model (TSDB dashboards, the NFS filesystem, the user registry) stay
+//! reachable through [`platform`](ApiServer::platform) /
+//! [`platform_mut`](ApiServer::platform_mut).
+
+use std::collections::BTreeMap;
+
+use crate::api::resources::{
+    parse_priority, phase_str, workload_state_str, ApiObject, BatchJobResource, Metadata,
+    NodeView, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
+};
+use crate::api::watch::{EventType, WatchEvent, WatchLog};
+use crate::api::ApiError;
+use crate::cluster::pod::PodPhase;
+use crate::cluster::store::EventKind;
+use crate::hub::auth::TokenValidator;
+use crate::hub::profiles::default_catalogue;
+use crate::hub::spawner::{Session, SpawnError};
+use crate::offload::vk::VirtualKubelet;
+use crate::platform::config::PlatformConfig;
+use crate::platform::facade::{BatchJob, Platform};
+use crate::queue::kueue::WorkloadState;
+use crate::sim::clock::Time;
+use crate::util::json::Json;
+
+/// Label + field selectors for `list` (the `kubectl -l app=batch
+/// --field-selector status.phase=Running` idiom).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Selector {
+    labels: Vec<(String, String)>,
+    fields: Vec<(String, String)>,
+}
+
+impl Selector {
+    /// Match everything.
+    pub fn all() -> Selector {
+        Selector::default()
+    }
+
+    /// Parse a comma-separated label selector, e.g. `"app=batch,tier=gpu"`.
+    pub fn labels(expr: &str) -> Result<Selector, ApiError> {
+        Selector::parse(expr, "")
+    }
+
+    /// Parse a comma-separated field selector, e.g. `"status.phase=Running"`.
+    pub fn fields(expr: &str) -> Result<Selector, ApiError> {
+        Selector::parse("", expr)
+    }
+
+    /// Parse both expressions (either may be empty).
+    pub fn parse(label_expr: &str, field_expr: &str) -> Result<Selector, ApiError> {
+        fn split(expr: &str, what: &str) -> Result<Vec<(String, String)>, ApiError> {
+            let mut out = Vec::new();
+            for term in expr.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+                let (k, v) = term.split_once('=').ok_or_else(|| {
+                    ApiError::Invalid(format!("{what} selector term {term:?} is not key=value"))
+                })?;
+                if k.trim().is_empty() {
+                    return Err(ApiError::Invalid(format!("{what} selector has empty key")));
+                }
+                out.push((k.trim().to_string(), v.trim().to_string()));
+            }
+            Ok(out)
+        }
+        Ok(Selector { labels: split(label_expr, "label")?, fields: split(field_expr, "field")? })
+    }
+
+    pub fn with_label(mut self, k: &str, v: &str) -> Selector {
+        self.labels.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn with_field(mut self, path: &str, v: &str) -> Selector {
+        self.fields.push((path.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty() && self.fields.is_empty()
+    }
+
+    /// Match against a serialized object.
+    pub fn matches(&self, obj: &Json) -> bool {
+        for (k, v) in &self.labels {
+            let got = obj.at(&["metadata", "labels"]).and_then(|l| l.get(k)).and_then(Json::as_str);
+            if got != Some(v.as_str()) {
+                return false;
+            }
+        }
+        for (path, want) in &self.fields {
+            let parts: Vec<&str> = path.split('.').collect();
+            let got = obj.at(&parts);
+            let matches = match got {
+                Some(Json::Str(s)) => s == want,
+                Some(Json::Num(n)) => want.parse::<f64>().map(|w| w == *n).unwrap_or(false),
+                Some(Json::Bool(b)) => want.parse::<bool>().map(|w| w == *b).unwrap_or(false),
+                Some(Json::Null) => want == "null",
+                _ => false,
+            };
+            if !matches {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// The control-plane front door. See [`crate::api`] for the verb table.
+pub struct ApiServer {
+    platform: Platform,
+    log: WatchLog,
+    /// High-water marks into the store event list / kueue transition log.
+    store_seen: usize,
+    kueue_seen: usize,
+}
+
+impl ApiServer {
+    /// Wrap an already-bootstrapped platform. Node registrations recorded
+    /// during bootstrap are pumped into the watch log immediately.
+    pub fn new(platform: Platform) -> ApiServer {
+        let mut api =
+            ApiServer { platform, log: WatchLog::default(), store_seen: 0, kueue_seen: 0 };
+        api.pump();
+        api
+    }
+
+    /// Bootstrap a platform from config and wrap it.
+    pub fn bootstrap(config: PlatformConfig) -> anyhow::Result<ApiServer> {
+        Ok(ApiServer::new(Platform::bootstrap(config)?))
+    }
+
+    /// The wrapped platform (read-only: dashboards, registry, NFS, config).
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// Mutable escape hatch for subsystems outside the resource model
+    /// (NFS writes, TSDB retention). Control-plane state still changes only
+    /// through the verbs.
+    pub fn platform_mut(&mut self) -> &mut Platform {
+        &mut self.platform
+    }
+
+    pub fn into_platform(self) -> Platform {
+        self.platform
+    }
+
+    pub fn now(&self) -> Time {
+        self.platform.now()
+    }
+
+    /// Newest resourceVersion in the watch log — the point to watch from.
+    pub fn last_rv(&self) -> u64 {
+        self.log.last_rv()
+    }
+
+    // ------------------------------------------------------------- clock
+
+    /// One reconciliation tick, then pump new transitions into the log.
+    pub fn tick(&mut self) {
+        self.platform.tick();
+        self.pump();
+    }
+
+    /// Drive the platform, pumping the watch log after every tick so
+    /// watchers see per-tick granularity.
+    pub fn run_for(&mut self, duration: Time, tick_period: Time) {
+        let t_end = self.platform.now() + duration;
+        while self.platform.step_for(t_end, tick_period) {
+            self.pump();
+        }
+    }
+
+    // -------------------------------------------------------------- auth
+
+    /// Hub login: issue a bearer token for a registered user.
+    pub fn login(&mut self, user: &str) -> Result<String, ApiError> {
+        if self.platform.registry.user(user).is_none() {
+            return Err(ApiError::NotFound(format!("user {user}")));
+        }
+        let now = self.platform.engine.now();
+        let ttl = self.platform.config.token_ttl;
+        Ok(self.platform.auth.issue(user, ttl, now))
+    }
+
+    fn authenticate(&self, token: &str) -> Result<String, ApiError> {
+        self.platform
+            .auth
+            .validate(token)
+            .ok_or_else(|| ApiError::Forbidden("invalid or expired bearer token".into()))
+    }
+
+    // -------------------------------------------------------------- verbs
+
+    /// Create a writable resource (Session or BatchJob) owned by the caller.
+    pub fn create(&mut self, token: &str, obj: &ApiObject) -> Result<ApiObject, ApiError> {
+        let caller = self.authenticate(token)?;
+        match obj {
+            ApiObject::Session(req) => {
+                if req.user != caller {
+                    return Err(ApiError::Forbidden(format!(
+                        "token user {caller} cannot create a session for {}",
+                        req.user
+                    )));
+                }
+                let profile = default_catalogue()
+                    .into_iter()
+                    .find(|p| p.name == req.profile)
+                    .ok_or_else(|| {
+                        ApiError::Invalid(format!("unknown spawn profile {:?}", req.profile))
+                    })?;
+                let sid = self
+                    .platform
+                    .spawn_session(&caller, &profile)
+                    .map_err(map_spawn_error)?;
+                self.pump();
+                let session = self.platform.session(&sid).cloned().ok_or_else(|| {
+                    ApiError::Invalid(format!("session {sid} vanished after spawn"))
+                })?;
+                let rv = self.log.next_rv();
+                let view = self.session_view(&session, rv);
+                let now = self.platform.now();
+                self.log.append(
+                    ResourceKind::Session,
+                    EventType::Added,
+                    &sid,
+                    now,
+                    Some(view.to_json()),
+                );
+                Ok(ApiObject::Session(view))
+            }
+            ApiObject::BatchJob(req) => {
+                if req.user != caller {
+                    return Err(ApiError::Forbidden(format!(
+                        "token user {caller} cannot submit a job for {}",
+                        req.user
+                    )));
+                }
+                let priority = parse_priority(&req.priority)?;
+                if req.requests.is_empty() {
+                    return Err(ApiError::Invalid("batch job requests no resources".into()));
+                }
+                let wl = self
+                    .platform
+                    .submit_batch(
+                        &req.user,
+                        &req.project,
+                        req.requests.clone(),
+                        req.duration,
+                        priority,
+                        req.offloadable,
+                    )
+                    .map_err(|e| ApiError::Invalid(e.to_string()))?;
+                self.pump();
+                self.emit_batch_job(&wl, EventType::Added);
+                self.get_batch_job(&wl)
+            }
+            other => Err(ApiError::Invalid(format!(
+                "kind {} is read-only (server-projected)",
+                other.kind().as_str()
+            ))),
+        }
+    }
+
+    /// Convenience create: an ML training job priced by the cost model, in
+    /// the caller's name.
+    pub fn submit_ml_training(
+        &mut self,
+        token: &str,
+        project: &str,
+        flops: f64,
+        demand: crate::sim::trace::GpuDemand,
+        offloadable: bool,
+    ) -> Result<ApiObject, ApiError> {
+        let caller = self.authenticate(token)?;
+        let wl = self
+            .platform
+            .submit_ml_training(&caller, project, flops, demand, offloadable)
+            .map_err(|e| ApiError::Invalid(e.to_string()))?;
+        self.pump();
+        self.emit_batch_job(&wl, EventType::Added);
+        self.get_batch_job(&wl)
+    }
+
+    /// Fetch one object.
+    pub fn get(&self, token: &str, kind: ResourceKind, name: &str) -> Result<ApiObject, ApiError> {
+        self.authenticate(token)?;
+        let rv = self.log.last_rv();
+        match kind {
+            ResourceKind::Session => self
+                .platform
+                .session(name)
+                .map(|s| ApiObject::Session(self.session_view(s, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("Session/{name}"))),
+            ResourceKind::BatchJob => self.get_batch_job(name),
+            ResourceKind::Pod => {
+                let st = self.platform.cluster();
+                st.pod(name)
+                    .map(|p| ApiObject::Pod(PodView::from_pod(p, rv)))
+                    .ok_or_else(|| ApiError::NotFound(format!("Pod/{name}")))
+            }
+            ResourceKind::Node => {
+                let st = self.platform.cluster();
+                st.node(name)
+                    .map(|n| {
+                        let free = st.free_on(name).cloned().unwrap_or_default();
+                        ApiObject::Node(NodeView::from_node(n, free, rv))
+                    })
+                    .ok_or_else(|| ApiError::NotFound(format!("Node/{name}")))
+            }
+            ResourceKind::Workload => self
+                .platform
+                .kueue
+                .workload(name)
+                .map(|w| ApiObject::Workload(WorkloadView::from_workload(w, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("Workload/{name}"))),
+            ResourceKind::Site => self
+                .platform
+                .vks
+                .iter()
+                .find(|vk| vk.site == name || vk.node_name == name)
+                .map(|vk| ApiObject::Site(self.site_view(vk, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("Site/{name}"))),
+        }
+    }
+
+    /// List all objects of a kind, filtered by label/field selectors.
+    pub fn list(
+        &self,
+        token: &str,
+        kind: ResourceKind,
+        selector: &Selector,
+    ) -> Result<Vec<ApiObject>, ApiError> {
+        self.authenticate(token)?;
+        let rv = self.log.last_rv();
+        let mut out: Vec<ApiObject> = Vec::new();
+        match kind {
+            ResourceKind::Session => {
+                for s in self.platform.sessions() {
+                    out.push(ApiObject::Session(self.session_view(s, rv)));
+                }
+            }
+            ResourceKind::BatchJob => {
+                let mut jobs: Vec<&BatchJob> = self.platform.batch_jobs.values().collect();
+                jobs.sort_by(|a, b| a.workload.cmp(&b.workload));
+                for j in jobs {
+                    out.push(ApiObject::BatchJob(self.batch_job_view(j, rv)));
+                }
+            }
+            ResourceKind::Pod => {
+                let st = self.platform.cluster();
+                let mut pods: Vec<_> = st.pods().collect();
+                pods.sort_by(|a, b| a.spec.name.cmp(&b.spec.name));
+                for p in pods {
+                    out.push(ApiObject::Pod(PodView::from_pod(p, rv)));
+                }
+            }
+            ResourceKind::Node => {
+                let st = self.platform.cluster();
+                for n in st.nodes() {
+                    let free = st.free_on(&n.name).cloned().unwrap_or_default();
+                    out.push(ApiObject::Node(NodeView::from_node(n, free, rv)));
+                }
+            }
+            ResourceKind::Workload => {
+                let mut wls: Vec<_> = self.platform.kueue.workloads().collect();
+                wls.sort_by(|a, b| a.name.cmp(&b.name));
+                for w in wls {
+                    out.push(ApiObject::Workload(WorkloadView::from_workload(w, rv)));
+                }
+            }
+            ResourceKind::Site => {
+                for vk in &self.platform.vks {
+                    out.push(ApiObject::Site(self.site_view(vk, rv)));
+                }
+            }
+        }
+        if selector.is_empty() {
+            return Ok(out);
+        }
+        Ok(out.into_iter().filter(|o| selector.matches(&o.to_json())).collect())
+    }
+
+    /// Delete a writable resource owned by the caller: stop a session or
+    /// cancel a batch job.
+    pub fn delete(&mut self, token: &str, kind: ResourceKind, name: &str) -> Result<(), ApiError> {
+        let caller = self.authenticate(token)?;
+        match kind {
+            ResourceKind::Session => {
+                let session = self
+                    .platform
+                    .session(name)
+                    .cloned()
+                    .ok_or_else(|| ApiError::NotFound(format!("Session/{name}")))?;
+                if session.user != caller {
+                    return Err(ApiError::Forbidden(format!(
+                        "session {name} belongs to {}",
+                        session.user
+                    )));
+                }
+                let mut view = self.session_view(&session, 0);
+                self.platform
+                    .stop_session(name, "deleted via API")
+                    .map_err(|e| ApiError::Invalid(e.to_string()))?;
+                self.pump();
+                // stamp the snapshot with the rv the Deleted event receives
+                // (pump() above consumed versions in between)
+                view.metadata.resource_version = self.log.next_rv();
+                let now = self.platform.now();
+                self.log.append(
+                    ResourceKind::Session,
+                    EventType::Deleted,
+                    name,
+                    now,
+                    Some(view.to_json()),
+                );
+                Ok(())
+            }
+            ResourceKind::BatchJob => {
+                let owner = self
+                    .platform
+                    .batch_jobs
+                    .get(name)
+                    .map(|j| j.template.user.clone())
+                    .ok_or_else(|| ApiError::NotFound(format!("BatchJob/{name}")))?;
+                if owner != caller {
+                    return Err(ApiError::Forbidden(format!(
+                        "batch job {name} belongs to {owner}"
+                    )));
+                }
+                self.platform
+                    .cancel_batch(name, "deleted via API")
+                    .map_err(|e| ApiError::Invalid(e.to_string()))?;
+                self.pump();
+                self.emit_batch_job_tombstone(name);
+                Ok(())
+            }
+            other => Err(ApiError::Invalid(format!(
+                "kind {} cannot be deleted through the API",
+                other.as_str()
+            ))),
+        }
+    }
+
+    /// The watch stream: events of `kind` after `since_rv`, in version order.
+    pub fn watch(
+        &self,
+        token: &str,
+        kind: ResourceKind,
+        since_rv: u64,
+    ) -> Result<Vec<WatchEvent>, ApiError> {
+        self.authenticate(token)?;
+        self.log.since(kind, since_rv)
+    }
+
+    // ----------------------------------------------------------- the pump
+
+    /// Translate new cluster-store events and Kueue transitions into watch
+    /// entries. Deltas only — nothing is re-scanned.
+    fn pump(&mut self) {
+        {
+            let st = self.platform.store.borrow();
+            let events = st.events();
+            for ev in &events[self.store_seen..] {
+                let (kind, etype, phase_override) = match ev.kind {
+                    EventKind::PodCreated => {
+                        (ResourceKind::Pod, EventType::Added, Some(PodPhase::Pending))
+                    }
+                    EventKind::PodScheduled => {
+                        (ResourceKind::Pod, EventType::Modified, Some(PodPhase::Scheduled))
+                    }
+                    EventKind::PodStarted => {
+                        (ResourceKind::Pod, EventType::Modified, Some(PodPhase::Running))
+                    }
+                    EventKind::PodSucceeded => {
+                        (ResourceKind::Pod, EventType::Modified, Some(PodPhase::Succeeded))
+                    }
+                    EventKind::PodFailed => {
+                        (ResourceKind::Pod, EventType::Modified, Some(PodPhase::Failed))
+                    }
+                    EventKind::PodEvicted => {
+                        (ResourceKind::Pod, EventType::Modified, Some(PodPhase::Evicted))
+                    }
+                    EventKind::NodeAdded => (ResourceKind::Node, EventType::Added, None),
+                    EventKind::NodeRemoved => (ResourceKind::Node, EventType::Deleted, None),
+                    EventKind::MigRepartitioned => {
+                        (ResourceKind::Node, EventType::Modified, None)
+                    }
+                };
+                let rv = self.log.next_rv();
+                let object = match kind {
+                    ResourceKind::Pod => st.pod(&ev.object).map(|p| {
+                        let mut v = PodView::from_pod(p, rv);
+                        // phase as of *this* transition, not the present
+                        if let Some(ph) = phase_override {
+                            v.phase = phase_str(ph).to_string();
+                        }
+                        v.to_json()
+                    }),
+                    _ => st.node(&ev.object).map(|n| {
+                        let free = st.free_on(&n.name).cloned().unwrap_or_default();
+                        NodeView::from_node(n, free, rv).to_json()
+                    }),
+                };
+                self.log.append(kind, etype, &ev.object, ev.at, object);
+
+                // a session pod's transitions are also the Session's:
+                // surface them as Modified events on the Session kind
+                // (Added/Deleted come from the create/delete verbs).
+                if kind == ResourceKind::Pod && ev.kind != EventKind::PodCreated {
+                    let sid = st
+                        .pod(&ev.object)
+                        .and_then(|p| p.spec.labels.get("aiinfn/session"))
+                        .cloned();
+                    if let Some(sid) = sid {
+                        let session =
+                            self.platform.spawner.sessions().iter().find(|s| s.id == sid);
+                        if let Some(session) = session {
+                            let rv2 = self.log.next_rv();
+                            let mut v = self.session_view(session, rv2);
+                            if let Some(ph) = phase_override {
+                                v.phase = phase_str(ph).to_string();
+                            }
+                            let obj = v.to_json();
+                            self.log.append(
+                                ResourceKind::Session,
+                                EventType::Modified,
+                                &sid,
+                                ev.at,
+                                Some(obj),
+                            );
+                        }
+                    }
+                }
+            }
+            self.store_seen = events.len();
+        }
+
+        let fresh: Vec<crate::queue::kueue::WorkloadTransition> =
+            self.platform.kueue.transitions_since(self.kueue_seen).cloned().collect();
+        self.kueue_seen = self.platform.kueue.transition_cursor();
+        for t in fresh {
+            let rv = self.log.next_rv();
+            let object = self.platform.kueue.workload(&t.workload).map(|w| {
+                let mut v = WorkloadView::from_workload(w, rv);
+                v.state = workload_state_str(&t.state).to_string();
+                v.to_json()
+            });
+            let etype = match t.state {
+                WorkloadState::Queued => EventType::Added,
+                _ => EventType::Modified,
+            };
+            self.log.append(ResourceKind::Workload, etype, &t.workload, t.at, object);
+
+            // a batch job's workload transitions are also the BatchJob's:
+            // mirror them as Modified events (Added comes from the create
+            // verb, the Deleted tombstone from delete).
+            if !matches!(t.state, WorkloadState::Queued) {
+                if let Some(job) = self.platform.batch_jobs.get(&t.workload) {
+                    let rv2 = self.log.next_rv();
+                    let mut v = self.batch_job_view(job, rv2);
+                    v.state = workload_state_str(&t.state).to_string();
+                    let obj = v.to_json();
+                    self.log.append(
+                        ResourceKind::BatchJob,
+                        EventType::Modified,
+                        &t.workload,
+                        t.at,
+                        Some(obj),
+                    );
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- projections
+
+    fn session_view(&self, s: &Session, rv: u64) -> SessionResource {
+        let phase = self
+            .platform
+            .store
+            .borrow()
+            .pod(&s.pod_name)
+            .map(|p| phase_str(p.status.phase).to_string())
+            .unwrap_or_else(|| "Unknown".to_string());
+        let mut labels = BTreeMap::new();
+        labels.insert("app".to_string(), "jupyterlab".to_string());
+        labels.insert("aiinfn/user".to_string(), s.user.clone());
+        SessionResource {
+            metadata: Metadata {
+                name: s.id.clone(),
+                namespace: "hub".to_string(),
+                labels,
+                resource_version: rv,
+            },
+            user: s.user.clone(),
+            profile: s.profile.clone(),
+            pod_name: s.pod_name.clone(),
+            workload_name: s.workload_name.clone(),
+            phase,
+            bucket_mount: s.mount.as_ref().map(|m| m.mount_point.clone()),
+            started_at: s.started_at,
+        }
+    }
+
+    fn batch_job_view(&self, job: &BatchJob, rv: u64) -> BatchJobResource {
+        let (state, priority) = self
+            .platform
+            .kueue
+            .workload(&job.workload)
+            .map(|w| {
+                (
+                    workload_state_str(&w.state).to_string(),
+                    crate::api::resources::priority_str(w.priority).to_string(),
+                )
+            })
+            .unwrap_or_else(|| ("Unknown".to_string(), "batch".to_string()));
+        BatchJobResource {
+            metadata: Metadata {
+                name: job.workload.clone(),
+                namespace: job.template.namespace.clone(),
+                labels: job.template.labels.clone(),
+                resource_version: rv,
+            },
+            user: job.template.user.clone(),
+            project: job.template.project.clone(),
+            requests: job.template.requests.clone(),
+            duration: job.duration,
+            priority,
+            offloadable: job.offloadable,
+            state,
+            live_pod: job.live_pod.clone(),
+        }
+    }
+
+    fn site_view(&self, vk: &VirtualKubelet, rv: u64) -> SiteView {
+        SiteView {
+            metadata: Metadata {
+                name: vk.site.clone(),
+                namespace: "federation".to_string(),
+                labels: BTreeMap::new(),
+                resource_version: rv,
+            },
+            site: vk.site.clone(),
+            node_name: vk.node_name.clone(),
+            capacity: vk.capacity(),
+            wan_latency: vk.wan_latency,
+            tracked_pods: vk.tracked() as u64,
+            round_trips: vk.round_trips,
+            completions: vk.completions_since(0.0) as u64,
+        }
+    }
+
+    fn get_batch_job(&self, name: &str) -> Result<ApiObject, ApiError> {
+        let rv = self.log.last_rv();
+        self.platform
+            .batch_jobs
+            .get(name)
+            .map(|j| ApiObject::BatchJob(self.batch_job_view(j, rv)))
+            .ok_or_else(|| ApiError::NotFound(format!("BatchJob/{name}")))
+    }
+
+    fn emit_batch_job(&mut self, workload: &str, etype: EventType) {
+        let rv = self.log.next_rv();
+        let object =
+            self.platform.batch_jobs.get(workload).map(|j| self.batch_job_view(j, rv).to_json());
+        let now = self.platform.now();
+        self.log.append(ResourceKind::BatchJob, etype, workload, now, object);
+    }
+
+    fn emit_batch_job_tombstone(&mut self, workload: &str) {
+        let now = self.platform.now();
+        self.log.append(ResourceKind::BatchJob, EventType::Deleted, workload, now, None);
+    }
+}
+
+fn map_spawn_error(e: SpawnError) -> ApiError {
+    match e {
+        SpawnError::UnknownUser(u) => ApiError::NotFound(format!("user {u}")),
+        SpawnError::AlreadyActive(u) => {
+            ApiError::Conflict(format!("user {u} already has an active session"))
+        }
+        SpawnError::AdmissionPending => {
+            ApiError::Conflict("interactive queue saturated; admission pending".to_string())
+        }
+        SpawnError::Other(e) => ApiError::Invalid(e.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::resources::{ResourceVec, MEMORY};
+    use crate::platform::config::default_config_path;
+    use crate::queue::kueue::PriorityClass;
+
+    fn api() -> ApiServer {
+        let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+        ApiServer::bootstrap(cfg).unwrap()
+    }
+
+    #[test]
+    fn bad_bearer_token_is_403_on_every_verb() {
+        let mut a = api();
+        let forged = "user001:9999999.000:deadbeefdeadbeef";
+        assert!(matches!(
+            a.list(forged, ResourceKind::Node, &Selector::all()),
+            Err(ApiError::Forbidden(_))
+        ));
+        assert!(matches!(
+            a.get(forged, ResourceKind::Node, "cnaf-ai01"),
+            Err(ApiError::Forbidden(_))
+        ));
+        assert!(matches!(
+            a.watch(forged, ResourceKind::Pod, 0),
+            Err(ApiError::Forbidden(_))
+        ));
+        let req = ApiObject::Session(SessionResource::request("user001", "cpu-small"));
+        assert!(matches!(a.create(forged, &req), Err(ApiError::Forbidden(_))));
+        assert!(matches!(
+            a.delete(forged, ResourceKind::Session, "nope"),
+            Err(ApiError::Forbidden(_))
+        ));
+        // expired token: valid signature, but past its expiry after time moves
+        let token = a.login("user001").unwrap();
+        let ttl = a.platform().config.token_ttl;
+        a.run_for(ttl + 60.0, 3600.0);
+        assert!(matches!(
+            a.list(&token, ResourceKind::Node, &Selector::all()),
+            Err(ApiError::Forbidden(_))
+        ));
+    }
+
+    #[test]
+    fn login_requires_registered_user() {
+        let mut a = api();
+        assert!(matches!(a.login("mallory"), Err(ApiError::NotFound(_))));
+        assert!(a.login("user001").is_ok());
+    }
+
+    #[test]
+    fn session_lifecycle_through_verbs() {
+        let mut a = api();
+        let token = a.login("user007").unwrap();
+        let req = ApiObject::Session(SessionResource::request("user007", "tensorflow-mig-1g"));
+        let created = a.create(&token, &req).unwrap();
+        let sid = created.name().to_string();
+        a.run_for(120.0, 10.0);
+        let got = a.get(&token, ResourceKind::Session, &sid).unwrap();
+        let s = got.as_session().unwrap();
+        assert_eq!(s.phase, "Running");
+        assert!(s.bucket_mount.is_some());
+        // another user cannot delete it
+        let other = a.login("user008").unwrap();
+        assert!(matches!(
+            a.delete(&other, ResourceKind::Session, &sid),
+            Err(ApiError::Forbidden(_))
+        ));
+        a.delete(&token, ResourceKind::Session, &sid).unwrap();
+        assert!(matches!(
+            a.get(&token, ResourceKind::Session, &sid),
+            Err(ApiError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn batch_job_create_list_delete() {
+        let mut a = api();
+        let token = a.login("user002").unwrap();
+        let req = ApiObject::BatchJob(BatchJobResource::request(
+            "user002",
+            "project02",
+            ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+            100.0,
+            PriorityClass::Batch,
+            false,
+        ));
+        let created = a.create(&token, &req).unwrap();
+        let name = created.name().to_string();
+        a.run_for(60.0, 10.0);
+        let got = a.get(&token, ResourceKind::BatchJob, &name).unwrap();
+        assert_eq!(got.as_batch_job().unwrap().state, "Admitted");
+        // label selector finds the job's pod
+        let pods = a
+            .list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap())
+            .unwrap();
+        assert_eq!(pods.len(), 1);
+        // field selector on phase
+        let running = a
+            .list(&token, ResourceKind::Pod, &Selector::fields("status.phase=Running").unwrap())
+            .unwrap();
+        assert_eq!(running.len(), 1);
+        a.delete(&token, ResourceKind::BatchJob, &name).unwrap();
+        assert!(matches!(
+            a.get(&token, ResourceKind::BatchJob, &name),
+            Err(ApiError::NotFound(_))
+        ));
+        // the workload view records it as finished
+        let wl = a.get(&token, ResourceKind::Workload, &name).unwrap();
+        assert_eq!(wl.as_workload().unwrap().state, "Finished");
+    }
+
+    #[test]
+    fn create_enforces_ownership_and_validates_spec() {
+        let mut a = api();
+        let token = a.login("user003").unwrap();
+        // spoofed user in the spec
+        let spoof = ApiObject::Session(SessionResource::request("user004", "cpu-small"));
+        assert!(matches!(a.create(&token, &spoof), Err(ApiError::Forbidden(_))));
+        // unknown profile
+        let bad = ApiObject::Session(SessionResource::request("user003", "quantum-h100"));
+        assert!(matches!(a.create(&token, &bad), Err(ApiError::Invalid(_))));
+        // double spawn is a conflict
+        let ok = ApiObject::Session(SessionResource::request("user003", "cpu-small"));
+        a.create(&token, &ok).unwrap();
+        assert!(matches!(a.create(&token, &ok), Err(ApiError::Conflict(_))));
+        // read-only kinds cannot be created
+        let node = a
+            .list(&token, ResourceKind::Node, &Selector::all())
+            .unwrap()
+            .into_iter()
+            .next()
+            .unwrap();
+        assert!(matches!(a.create(&token, &node), Err(ApiError::Invalid(_))));
+    }
+
+    #[test]
+    fn list_nodes_matches_bootstrap_inventory() {
+        let mut a = api();
+        let token = a.login("user001").unwrap();
+        let nodes = a.list(&token, ResourceKind::Node, &Selector::all()).unwrap();
+        assert_eq!(nodes.len(), 8); // 4 physical + 4 federation
+        let virtuals = a
+            .list(&token, ResourceKind::Node, &Selector::fields("spec.virtual=true").unwrap())
+            .unwrap();
+        assert_eq!(virtuals.len(), 4);
+        let sites = a.list(&token, ResourceKind::Site, &Selector::all()).unwrap();
+        assert_eq!(sites.len(), 4);
+    }
+
+    #[test]
+    fn watch_stream_is_monotonic_and_delta_based() {
+        let mut a = api();
+        let token = a.login("user005").unwrap();
+        let rv0 = a.last_rv();
+        let req = ApiObject::BatchJob(BatchJobResource::request(
+            "user005",
+            "project01",
+            ResourceVec::cpu_millis(2000),
+            50.0,
+            PriorityClass::Batch,
+            false,
+        ));
+        a.create(&token, &req).unwrap();
+        a.run_for(200.0, 10.0);
+        let pods = a.watch(&token, ResourceKind::Pod, rv0).unwrap();
+        let wls = a.watch(&token, ResourceKind::Workload, rv0).unwrap();
+        assert!(!pods.is_empty() && !wls.is_empty());
+        let mut last = rv0;
+        for ev in pods.iter().chain(wls.iter()) {
+            assert!(ev.resource_version > rv0);
+            last = last.max(ev.resource_version);
+        }
+        // strictly increasing within each kind
+        for stream in [&pods, &wls] {
+            for w in stream.windows(2) {
+                assert!(w[1].resource_version > w[0].resource_version);
+            }
+        }
+        // workload lifecycle visible as deltas: Queued → Admitted → Finished
+        let states: Vec<String> = wls
+            .iter()
+            .filter_map(|e| e.object.as_ref())
+            .filter_map(|o| o.at(&["status", "state"]).and_then(Json::as_str).map(String::from))
+            .collect();
+        assert_eq!(states.first().map(String::as_str), Some("Queued"));
+        assert!(states.iter().any(|s| s == "Admitted"));
+        assert_eq!(states.last().map(String::as_str), Some("Finished"));
+        // re-watching from the tail yields nothing new
+        assert!(a.watch(&token, ResourceKind::Pod, last).unwrap().is_empty());
+    }
+
+    #[test]
+    fn selector_parse_rejects_garbage() {
+        assert!(Selector::labels("app=batch,tier=gpu").is_ok());
+        assert!(Selector::labels("appbatch").is_err());
+        assert!(Selector::fields("=x").is_err());
+        assert!(Selector::parse("", "").unwrap().is_empty());
+    }
+}

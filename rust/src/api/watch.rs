@@ -1,0 +1,191 @@
+//! The watch machinery: a monotonically-versioned event log.
+//!
+//! Every object mutation the control plane observes — cluster-store pod and
+//! node records, Kueue workload transitions, session create/delete — is
+//! appended here with a strictly increasing `resourceVersion`.
+//! `watch(kind, since_rv)` then serves *deltas*: everything after `since_rv`
+//! for that kind, in order. Controllers and dashboards consume transitions
+//! instead of re-scanning the store each tick — the pattern that lets a
+//! Kubernetes control plane fan out to thousands of clients.
+//!
+//! The log is bounded: once `capacity` is exceeded the oldest events are
+//! pruned and a watch from a pruned version fails (the client must re-list
+//! and restart from `last_rv()`, exactly like a Kubernetes "410 Gone").
+
+use std::collections::VecDeque;
+
+use crate::api::resources::ResourceKind;
+use crate::api::ApiError;
+use crate::sim::clock::Time;
+use crate::util::json::Json;
+
+/// What happened to the object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventType {
+    Added,
+    Modified,
+    Deleted,
+}
+
+impl EventType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventType::Added => "ADDED",
+            EventType::Modified => "MODIFIED",
+            EventType::Deleted => "DELETED",
+        }
+    }
+}
+
+/// One entry in the watch stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WatchEvent {
+    /// Strictly increasing across the whole log (all kinds).
+    pub resource_version: u64,
+    pub kind: ResourceKind,
+    pub event: EventType,
+    /// Object name (unique within the kind).
+    pub name: String,
+    /// Simulation time the transition happened.
+    pub at: Time,
+    /// Object snapshot at transition time (None when the object is already
+    /// gone, e.g. a deleted node).
+    pub object: Option<Json>,
+}
+
+/// The bounded, monotonically-versioned event log.
+#[derive(Debug)]
+pub struct WatchLog {
+    events: VecDeque<WatchEvent>,
+    next_rv: u64,
+    capacity: usize,
+}
+
+impl Default for WatchLog {
+    fn default() -> Self {
+        WatchLog::new(100_000)
+    }
+}
+
+impl WatchLog {
+    pub fn new(capacity: usize) -> WatchLog {
+        WatchLog { events: VecDeque::new(), next_rv: 1, capacity: capacity.max(1) }
+    }
+
+    /// Append an event; returns its assigned resourceVersion.
+    pub fn append(
+        &mut self,
+        kind: ResourceKind,
+        event: EventType,
+        name: &str,
+        at: Time,
+        object: Option<Json>,
+    ) -> u64 {
+        let rv = self.next_rv;
+        self.next_rv += 1;
+        self.events.push_back(WatchEvent {
+            resource_version: rv,
+            kind,
+            event,
+            name: name.to_string(),
+            at,
+            object,
+        });
+        while self.events.len() > self.capacity {
+            self.events.pop_front();
+        }
+        rv
+    }
+
+    /// The highest resourceVersion assigned so far (0 before any event).
+    pub fn last_rv(&self) -> u64 {
+        self.next_rv - 1
+    }
+
+    /// The resourceVersion the *next* append will receive — used to stamp
+    /// object snapshots before appending them.
+    pub fn next_rv(&self) -> u64 {
+        self.next_rv
+    }
+
+    /// Oldest resourceVersion still retained (watches from before this fail).
+    pub fn oldest_retained(&self) -> u64 {
+        self.events.front().map(|e| e.resource_version).unwrap_or(self.next_rv)
+    }
+
+    /// Events of `kind` with `resource_version > since_rv`, in order.
+    /// Errors when `since_rv` predates the retained window.
+    pub fn since(&self, kind: ResourceKind, since_rv: u64) -> Result<Vec<WatchEvent>, ApiError> {
+        if since_rv + 1 < self.oldest_retained() {
+            return Err(ApiError::Invalid(format!(
+                "resourceVersion {since_rv} too old: log retains {}..={} — re-list and watch \
+                 from last_rv",
+                self.oldest_retained(),
+                self.last_rv()
+            )));
+        }
+        Ok(self
+            .events
+            .iter()
+            .filter(|e| e.kind == kind && e.resource_version > since_rv)
+            .cloned()
+            .collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versions_are_strictly_monotonic() {
+        let mut log = WatchLog::new(100);
+        let mut last = 0;
+        for i in 0..20 {
+            let rv = log.append(ResourceKind::Pod, EventType::Modified, &format!("p{i}"), i as f64, None);
+            assert!(rv > last, "rv must strictly increase: {rv} after {last}");
+            last = rv;
+        }
+        assert_eq!(log.last_rv(), 20);
+        let evs = log.since(ResourceKind::Pod, 0).unwrap();
+        for w in evs.windows(2) {
+            assert!(w[1].resource_version > w[0].resource_version);
+        }
+    }
+
+    #[test]
+    fn since_filters_by_kind_and_version() {
+        let mut log = WatchLog::new(100);
+        log.append(ResourceKind::Pod, EventType::Added, "p1", 0.0, None);
+        let rv = log.append(ResourceKind::Node, EventType::Added, "n1", 0.0, None);
+        log.append(ResourceKind::Pod, EventType::Modified, "p1", 1.0, None);
+        let pods = log.since(ResourceKind::Pod, 0).unwrap();
+        assert_eq!(pods.len(), 2);
+        let after = log.since(ResourceKind::Pod, rv).unwrap();
+        assert_eq!(after.len(), 1);
+        assert_eq!(after[0].event, EventType::Modified);
+        assert!(log.since(ResourceKind::Workload, 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pruned_window_rejects_stale_watch() {
+        let mut log = WatchLog::new(4);
+        for i in 0..10 {
+            log.append(ResourceKind::Pod, EventType::Added, &format!("p{i}"), i as f64, None);
+        }
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.oldest_retained(), 7);
+        assert!(matches!(log.since(ResourceKind::Pod, 2), Err(ApiError::Invalid(_))));
+        // watching from exactly the edge works
+        assert_eq!(log.since(ResourceKind::Pod, 6).unwrap().len(), 4);
+        assert_eq!(log.since(ResourceKind::Pod, log.last_rv()).unwrap().len(), 0);
+    }
+}

@@ -56,6 +56,18 @@ impl Profile {
     }
 }
 
+/// The catalogue profile name matching a synthetic-trace GPU demand
+/// (shared by the CLI `up` replay and the trace-driven examples).
+pub fn profile_for_demand(demand: crate::sim::trace::GpuDemand) -> &'static str {
+    use crate::sim::trace::GpuDemand;
+    match demand {
+        GpuDemand::None => "cpu-small",
+        GpuDemand::MigSlice(1) => "tensorflow-mig-1g",
+        GpuDemand::MigSlice(_) => "torch-mig-3g",
+        GpuDemand::WholeGpu => "full-a100",
+    }
+}
+
 /// The platform's default profile catalogue (mirrors the hub spawn page).
 pub fn default_catalogue() -> Vec<Profile> {
     vec![

@@ -207,7 +207,7 @@ impl Spawner {
             .position(|s| s.id == session_id)
             .ok_or_else(|| anyhow::anyhow!("no session {session_id}"))?;
         let s = self.sessions.remove(idx);
-        ctx.kueue.finish(&s.workload_name).ok();
+        ctx.kueue.finish(&s.workload_name, at).ok();
         if let Some(pod) = ctx.cluster.pod(&s.pod_name) {
             match pod.status.phase {
                 crate::cluster::pod::PodPhase::Running

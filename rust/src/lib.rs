@@ -27,9 +27,27 @@
 //! job payloads execute real HLO through PJRT (hardware-in-the-loop mode,
 //! used by the end-to-end training example).
 //!
+//! ## The control-plane API
+//!
+//! External consumers do not poke platform internals: all reads and writes
+//! flow through [`api::ApiServer`] — a Kubernetes-apiserver-like front door
+//! with typed resources (`Session`, `BatchJob`, `Pod`, `Node`, `Workload`,
+//! `Site`), uniform verbs (`create` / `get` / `list` with label and field
+//! selectors / `delete`), bearer-token authentication via the hub's
+//! [`hub::auth::AuthService`], and `watch` streams serving
+//! `Added`/`Modified`/`Deleted` deltas ordered by a monotonic
+//! `resourceVersion`. See the [`api`] module docs for the verb table, the
+//! resource model, and a before/after migration snippet. [`Platform`]
+//! (`platform::facade::Platform`) keeps its subsystem state crate-private;
+//! the few remaining public fields are leaf services (registry, NFS, TSDB,
+//! config) with no control-plane semantics.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for measured results.
+//!
+//! [`Platform`]: platform::facade::Platform
 
+pub mod api;
 pub mod baseline;
 pub mod cluster;
 pub mod gpu;
@@ -46,6 +64,9 @@ pub mod workflow;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::api::{
+        ApiError, ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector, SessionResource,
+    };
     pub use crate::cluster::pod::{PodPhase, PodSpec};
     pub use crate::cluster::resources::ResourceVec;
     pub use crate::gpu::mig::MigProfile;

@@ -1,18 +1,22 @@
 //! `aiinfn` — the platform launcher.
 //!
 //! Subcommands:
-//!   up        boot the platform from a config and run a simulated campaign
+//!   up        boot the platform and run a simulated campaign
 //!   inventory print the §2 hardware inventory table (E1)
 //!   spawn     spawn an interactive session and show its provisioning
 //!   submit    submit batch jobs and follow them to completion
 //!   train     run REAL transformer training through the PJRT runtime
 //!   report    accounting + dashboard for a simulated campaign
 //!   validate  quick self-check: artifacts load and execute
+//!
+//! Every platform read/write goes through the control-plane API
+//! ([`aiinfn::api::ApiServer`]): bearer-token login, typed resources,
+//! uniform verbs. No subcommand touches store/queue internals.
 
+use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector, SessionResource};
 use aiinfn::cluster::resources::{ResourceVec, MEMORY};
-use aiinfn::hub::profiles::default_catalogue;
-use aiinfn::monitoring::{account, dashboard};
-use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::monitoring::dashboard;
+use aiinfn::platform::{default_config_path, PlatformConfig};
 use aiinfn::queue::kueue::PriorityClass;
 use aiinfn::runtime::{Engine, Manifest, TrainRunner};
 use aiinfn::sim::trace::{generate, ArrivalKind, TraceConfig};
@@ -103,33 +107,33 @@ fn inventory(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
 fn up(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
     let cfg = load_config(args.get("config").unwrap())?;
     let hours = args.get_f64("hours")?;
-    let mut p = Platform::bootstrap(cfg)?;
-    println!("platform up: {} nodes ({} virtual)", p.store.borrow().node_count(), p.vks.len());
+    let mut api = ApiServer::bootstrap(cfg)?;
+    let admin = api.login(args.get("user").unwrap())?;
+    let nodes = api.list(&admin, ResourceKind::Node, &Selector::all())?;
+    let virtuals = nodes.iter().filter(|n| n.as_node().map(|v| v.virtual_node).unwrap_or(false));
+    println!("platform up: {} nodes ({} virtual)", nodes.len(), virtuals.count());
 
     // replay a synthetic campaign
     let trace = generate(&TraceConfig::default(), hours * 3600.0);
     println!("replaying {} arrivals over {hours} h of simulated operation ...", trace.len());
-    let catalogue = default_catalogue();
     let mut ti = 0usize;
     let horizon = hours * 3600.0;
-    while p.now() < horizon {
-        let until = (p.now() + 60.0).min(horizon);
+    while api.now() < horizon {
+        let until = (api.now() + 60.0).min(horizon);
         while ti < trace.len() && trace[ti].at <= until {
             let a = &trace[ti];
             ti += 1;
+            // fresh per-arrival login: tokens expire over a long campaign
+            let Ok(token) = api.login(&a.user) else { continue };
             match a.kind {
                 ArrivalKind::Interactive => {
-                    let prof = match a.gpu {
-                        aiinfn::sim::trace::GpuDemand::None => &catalogue[0],
-                        aiinfn::sim::trace::GpuDemand::MigSlice(1) => &catalogue[1],
-                        aiinfn::sim::trace::GpuDemand::MigSlice(_) => &catalogue[2],
-                        aiinfn::sim::trace::GpuDemand::WholeGpu => &catalogue[4],
-                    };
-                    let _ = p.spawn_session(&a.user, prof);
+                    let profile = aiinfn::hub::profiles::profile_for_demand(a.gpu);
+                    let req = ApiObject::Session(SessionResource::request(&a.user, profile));
+                    let _ = api.create(&token, &req);
                 }
                 ArrivalKind::Batch => {
-                    let _ = p.submit_ml_training(
-                        &a.user,
+                    let _ = api.submit_ml_training(
+                        &token,
                         &a.project,
                         a.duration * 10e12,
                         a.gpu,
@@ -138,44 +142,44 @@ fn up(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
                 }
             }
         }
-        p.run_for(until - p.now(), 30.0);
+        let dt = until - api.now();
+        api.run_for(dt, 30.0);
     }
-    println!("campaign done at t={:.0}s", p.now());
-    println!("pods: {:?}", p.pod_phase_counts());
-    println!("accelerator utilization now: {:.1}%", p.accelerator_utilization() * 100.0);
+    println!("campaign done at t={:.0}s", api.now());
+    println!("pods: {:?}", api.platform().pod_phase_counts());
+    println!(
+        "accelerator utilization now: {:.1}%",
+        api.platform().accelerator_utilization() * 100.0
+    );
+    let m = api.platform().metrics();
     println!(
         "evictions={} offloaded={} local_done={} remote_done={}",
-        p.metrics.evictions,
-        p.metrics.offloaded_pods,
-        p.metrics.local_completions,
-        p.metrics.remote_completions
+        m.evictions, m.offloaded_pods, m.local_completions, m.remote_completions
     );
-    println!("{}", dashboard::overview(&p.tsdb, p.now(), 6.0 * 3600.0));
+    println!("{}", dashboard::overview(&api.platform().tsdb, api.now(), 6.0 * 3600.0));
     Ok(())
 }
 
 fn spawn(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
     let cfg = load_config(args.get("config").unwrap())?;
-    let mut p = Platform::bootstrap(cfg)?;
-    let want = args.get("profile").unwrap();
-    let profile = default_catalogue()
-        .into_iter()
-        .find(|x| x.name == want)
-        .ok_or_else(|| anyhow::anyhow!("unknown profile {want}"))?;
+    let mut api = ApiServer::bootstrap(cfg)?;
     let user = args.get("user").unwrap();
-    let sid = p.spawn_session(user, &profile).map_err(|e| anyhow::anyhow!("{e}"))?;
-    p.run_for(120.0, 5.0);
-    let s = p.spawner.sessions().iter().find(|s| s.id == sid).unwrap().clone();
+    let profile = args.get("profile").unwrap();
+    let token = api.login(user)?;
+    let created = api.create(
+        &token,
+        &ApiObject::Session(SessionResource::request(user, profile)),
+    )?;
+    let sid = created.name().to_string();
+    api.run_for(120.0, 5.0);
+    let got = api.get(&token, ResourceKind::Session, &sid)?;
+    let s = got.as_session().expect("Session kind");
     println!("session {sid} for {user}:");
     println!("  profile:   {}", s.profile);
-    println!(
-        "  pod:       {} ({:?})",
-        s.pod_name,
-        p.store.borrow().pod(&s.pod_name).unwrap().status.phase
-    );
+    println!("  pod:       {} ({})", s.pod_name, s.phase);
     println!("  workload:  {}", s.workload_name);
-    println!("  token:     {}...", &s.token[..24.min(s.token.len())]);
-    println!("  mount:     {:?}", s.mount.as_ref().map(|m| &m.mount_point));
+    println!("  token:     {}...", &token[..24.min(token.len())]);
+    println!("  mount:     {:?}", s.bucket_mount);
     println!(
         "  home vol:  home-{user} (quota {})",
         fmt_bytes(aiinfn::hub::spawner::HOME_QUOTA)
@@ -185,12 +189,13 @@ fn spawn(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
 
 fn submit(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
     let cfg = load_config(args.get("config").unwrap())?;
-    let mut p = Platform::bootstrap(cfg)?;
+    let mut api = ApiServer::bootstrap(cfg)?;
     let n = args.get_u64("jobs")?;
     let user = args.get("user").unwrap().to_string();
-    let mut wls = Vec::new();
+    let token = api.login(&user)?;
+    let mut names = Vec::new();
     for i in 0..n {
-        let wl = p.submit_batch(
+        let req = BatchJobResource::request(
             &user,
             "project00",
             ResourceVec::cpu_millis(8000)
@@ -199,26 +204,29 @@ fn submit(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
             600.0 + 60.0 * i as f64,
             PriorityClass::Batch,
             args.flag("offload"),
-        )?;
-        wls.push(wl);
+        );
+        let created = api.create(&token, &ApiObject::BatchJob(req))?;
+        names.push(created.name().to_string());
     }
     println!("submitted {n} jobs; running until completion ...");
     let mut guard = 0;
     loop {
-        p.run_for(300.0, 30.0);
-        let done = wls
+        api.run_for(300.0, 30.0);
+        // re-login each round: a long campaign outlives the token TTL
+        let token = api.login(&user)?;
+        let done = names
             .iter()
             .filter(|w| {
-                matches!(
-                    p.kueue.workload(w).map(|x| x.state.clone()),
-                    Some(aiinfn::queue::kueue::WorkloadState::Finished)
-                )
+                api.get(&token, ResourceKind::Workload, w)
+                    .ok()
+                    .and_then(|o| o.as_workload().map(|v| v.state == "Finished"))
+                    .unwrap_or(false)
             })
             .count();
         println!(
             "t={:>8.0}s  {done}/{n} finished, util={:.0}%",
-            p.now(),
-            p.accelerator_utilization() * 100.0
+            api.now(),
+            api.platform().accelerator_utilization() * 100.0
         );
         if done as u64 == n {
             break;
@@ -226,9 +234,10 @@ fn submit(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
         guard += 1;
         anyhow::ensure!(guard < 1000, "jobs did not converge");
     }
-    let waits = &p.metrics.batch_wait_times;
+    let m = api.platform().metrics();
+    let waits = &m.batch_wait_times;
     let mean = waits.iter().sum::<f64>() / waits.len().max(1) as f64;
-    println!("mean queue wait: {mean:.1}s; evictions: {}", p.metrics.evictions);
+    println!("mean queue wait: {mean:.1}s; evictions: {}", m.evictions);
     Ok(())
 }
 
@@ -267,17 +276,18 @@ fn train(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
 fn report(args: &aiinfn::util::args::Args) -> anyhow::Result<()> {
     let cfg = load_config(args.get("config").unwrap())?;
     let hours = args.get_f64("hours")?;
-    let mut p = Platform::bootstrap(cfg)?;
+    let mut api = ApiServer::bootstrap(cfg)?;
     let trace = generate(&TraceConfig::default(), hours * 3600.0);
     for a in &trace {
         if a.kind == ArrivalKind::Batch {
-            let _ = p.submit_ml_training(&a.user, &a.project, a.duration * 5e12, a.gpu, true);
+            let Ok(token) = api.login(&a.user) else { continue };
+            let _ = api.submit_ml_training(&token, &a.project, a.duration * 5e12, a.gpu, true);
         }
     }
-    p.run_for(hours * 3600.0, 60.0);
-    let r = account(&p.store.borrow(), p.now());
+    api.run_for(hours * 3600.0, 60.0);
+    let r = api.platform().usage_report();
     println!("{}", r.render(&format!("accounting over {hours} h")));
-    println!("{}", dashboard::overview(&p.tsdb, p.now(), hours * 3600.0));
+    println!("{}", dashboard::overview(&api.platform().tsdb, api.now(), hours * 3600.0));
     Ok(())
 }
 

@@ -37,16 +37,17 @@ use crate::storage::object::ObjectStore;
 use crate::util::IdGen;
 
 /// A batch job registered with the platform (pre- or post-admission).
+/// Crate-visible so the API server can project it as a `BatchJob` resource.
 #[derive(Debug, Clone)]
-struct BatchJob {
-    workload: String,
-    template: PodSpec,
+pub(crate) struct BatchJob {
+    pub(crate) workload: String,
+    pub(crate) template: PodSpec,
     /// incarnation counter (new pod name per (re)admission)
-    incarnation: u32,
+    pub(crate) incarnation: u32,
     /// pod currently realizing this workload, if any
-    live_pod: Option<String>,
-    offloadable: bool,
-    duration: Time,
+    pub(crate) live_pod: Option<String>,
+    pub(crate) offloadable: bool,
+    pub(crate) duration: Time,
 }
 
 /// Spawn-latency and eviction counters (E3's metrics).
@@ -61,26 +62,36 @@ pub struct PlatformMetrics {
 }
 
 /// The assembled platform.
+///
+/// Subsystem state is deliberately *not* public: external consumers (the
+/// CLI, examples, controllers) go through [`crate::api::ApiServer`] and its
+/// typed resources, or through the read-only accessor methods below. Only
+/// leaf services with no control-plane semantics (registry, NFS, TSDB,
+/// config) remain public fields.
 pub struct Platform {
-    pub engine: Engine,
-    pub store: Rc<RefCell<ClusterStore>>,
-    pub kueue: Kueue,
-    pub scheduler: Scheduler,
-    pub kubelet: Rc<Kubelet>,
+    pub(crate) engine: Engine,
+    pub(crate) store: Rc<RefCell<ClusterStore>>,
+    pub(crate) kueue: Kueue,
+    pub(crate) scheduler: Scheduler,
+    pub(crate) kubelet: Rc<Kubelet>,
     pub registry: Registry,
-    pub auth: AuthService,
+    pub(crate) auth: AuthService,
     pub nfs: NfsServer,
-    pub objects: ObjectStore,
-    pub spawner: Spawner,
-    pub vks: Vec<VirtualKubelet>,
+    pub(crate) objects: ObjectStore,
+    pub(crate) spawner: Spawner,
+    pub(crate) vks: Vec<VirtualKubelet>,
     pub tsdb: Tsdb,
-    pub dcgm: DcgmSimulator,
-    pub metrics: PlatformMetrics,
+    pub(crate) dcgm: DcgmSimulator,
+    pub(crate) metrics: PlatformMetrics,
     pub config: PlatformConfig,
     ids: IdGen,
-    batch_jobs: HashMap<String, BatchJob>,
+    pub(crate) batch_jobs: HashMap<String, BatchJob>,
+    /// node-name → index into `vks`, built at bootstrap (O(1) VK lookup on
+    /// the tick/cancel hot paths instead of a linear scan).
+    vk_index: HashMap<String, usize>,
     scrape_interval: Time,
-    last_scrape: Time,
+    /// Last monitoring scrape; `None` until the first scrape fires.
+    last_scrape: Option<Time>,
 }
 
 impl Platform {
@@ -162,6 +173,8 @@ impl Platform {
         spawner.token_ttl = config.token_ttl;
 
         let kubelet = Kubelet::new(store.clone(), default_oracle());
+        let vk_index: HashMap<String, usize> =
+            vks.iter().enumerate().map(|(i, vk)| (vk.node_name.clone(), i)).collect();
         Ok(Platform {
             engine,
             store,
@@ -178,10 +191,11 @@ impl Platform {
             dcgm: DcgmSimulator::new(42),
             metrics: PlatformMetrics::default(),
             scrape_interval: config.scrape_interval,
-            last_scrape: -1e18,
+            last_scrape: None,
             config,
             ids: IdGen::new(),
             batch_jobs: HashMap::new(),
+            vk_index,
         })
     }
 
@@ -407,7 +421,7 @@ impl Platform {
                     Payload::MlJob { steps, .. } => *steps as f64 * 0.5,
                     Payload::Burn { flops } => flops / 1e12,
                 };
-                if let Some(vk) = self.vks.iter_mut().find(|v| v.node_name == node) {
+                if let Some(vk) = self.vk_index.get(&node).map(|&i| &mut self.vks[i]) {
                     if vk.create_pod(&spec, duration, now).is_ok() {
                         self.metrics.offloaded_pods += 1;
                     } else {
@@ -481,7 +495,7 @@ impl Platform {
                     self.metrics.local_completions += 1;
                 }
             }
-            self.kueue.finish(&wl).ok();
+            self.kueue.finish(&wl, now).ok();
             if let Some(j) = self.batch_jobs.get_mut(&wl) {
                 j.live_pod = None;
             }
@@ -502,8 +516,8 @@ impl Platform {
         }
 
         // 8. monitoring scrape
-        if now - self.last_scrape >= self.scrape_interval {
-            self.last_scrape = now;
+        if self.last_scrape.map_or(true, |t| now - t >= self.scrape_interval) {
+            self.last_scrape = Some(now);
             let st = self.store.borrow();
             exporters::scrape_nodes(&mut self.tsdb, &st, now);
             exporters::scrape_gpus(&mut self.tsdb, &st, &mut self.dcgm, now);
@@ -516,20 +530,28 @@ impl Platform {
     fn cancel_remote(&mut self, pod: &str, now: Time) {
         let node = self.store.borrow().pod(pod).and_then(|p| p.status.node.clone());
         if let Some(node) = node {
-            if let Some(vk) = self.vks.iter_mut().find(|v| v.node_name == node) {
+            if let Some(vk) = self.vk_index.get(&node).map(|&i| &mut self.vks[i]) {
                 vk.delete_pod(pod, now).ok();
             }
         }
     }
 
+    /// One engine-advance + reconciliation step toward `t_end`.
+    /// Returns false once `t_end` has been reached (no step taken).
+    pub fn step_for(&mut self, t_end: Time, tick_period: Time) -> bool {
+        if self.engine.now() >= t_end {
+            return false;
+        }
+        let next = (self.engine.now() + tick_period).min(t_end);
+        self.engine.run_until(next);
+        self.tick();
+        true
+    }
+
     /// Drive the platform: engine events interleaved with controller ticks.
     pub fn run_for(&mut self, duration: Time, tick_period: Time) {
         let t_end = self.engine.now() + duration;
-        while self.engine.now() < t_end {
-            let next = (self.engine.now() + tick_period).min(t_end);
-            self.engine.run_until(next);
-            self.tick();
-        }
+        while self.step_for(t_end, tick_period) {}
     }
 
     /// Cluster-wide GPU-ish utilization snapshot in [0,1]: allocated share
@@ -569,6 +591,114 @@ impl Platform {
         }
         m
     }
+
+    /// Cancel a registered batch job: kills its live pod (locally or on the
+    /// remote site) and finishes the Kueue workload.
+    pub fn cancel_batch(&mut self, workload: &str, reason: &str) -> anyhow::Result<()> {
+        let now = self.engine.now();
+        let live_pod = self
+            .batch_jobs
+            .get(workload)
+            .ok_or_else(|| anyhow::anyhow!("unknown batch job {workload}"))?
+            .live_pod
+            .clone();
+        if let Some(pod) = live_pod {
+            self.cancel_remote(&pod, now);
+            let mut st = self.store.borrow_mut();
+            let phase = st.pod(&pod).map(|p| p.status.phase);
+            match phase {
+                Some(PodPhase::Scheduled) | Some(PodPhase::Running) => {
+                    st.finish_pod(&pod, PodPhase::Failed, now, reason).ok();
+                }
+                Some(PodPhase::Pending) => {
+                    st.cancel_pending(&pod, now, reason).ok();
+                }
+                _ => {}
+            }
+        }
+        self.kueue.finish(workload, now)?;
+        self.batch_jobs.remove(workload);
+        Ok(())
+    }
+
+    // -------------------------------------------------------- read accessors
+    //
+    // Narrow read-only views for consumers that have not (yet) moved to the
+    // typed API surface. Mutation goes through the verbs above or through
+    // `crate::api::ApiServer`.
+
+    /// Read-only view of the cluster state store.
+    pub fn cluster(&self) -> std::cell::Ref<'_, ClusterStore> {
+        self.store.borrow()
+    }
+
+    /// Spawn/eviction/offload counters.
+    pub fn metrics(&self) -> &PlatformMetrics {
+        &self.metrics
+    }
+
+    /// Number of registered (physical + virtual) nodes.
+    pub fn node_count(&self) -> usize {
+        self.store.borrow().node_count()
+    }
+
+    /// A Kueue workload by name.
+    pub fn workload(&self, name: &str) -> Option<crate::queue::kueue::Workload> {
+        self.kueue.workload(name).cloned()
+    }
+
+    /// A Kueue workload's current admission state.
+    pub fn workload_state(&self, name: &str) -> Option<WorkloadState> {
+        self.kueue.workload(name).map(|w| w.state.clone())
+    }
+
+    /// (used, nominal) quota across all cluster queues.
+    pub fn quota_utilization(&self) -> (ResourceVec, ResourceVec) {
+        self.kueue.quota_utilization()
+    }
+
+    /// (used, allocatable) resources summed over nodes.
+    pub fn utilization(&self, physical_only: bool) -> (ResourceVec, ResourceVec) {
+        self.store.borrow().utilization(physical_only)
+    }
+
+    /// Live interactive sessions.
+    pub fn sessions(&self) -> &[crate::hub::spawner::Session] {
+        self.spawner.sessions()
+    }
+
+    /// A live session by id.
+    pub fn session(&self, id: &str) -> Option<&crate::hub::spawner::Session> {
+        self.spawner.sessions().iter().find(|s| s.id == id)
+    }
+
+    /// Total InterLink request/response round-trips across federation sites.
+    pub fn interlink_round_trips(&self) -> u64 {
+        self.vks.iter().map(|v| v.round_trips).sum()
+    }
+
+    /// Trim the federation to the first `n_sites` sites (scalability
+    /// sweeps): removes the extra virtual nodes and rebuilds the VK index.
+    pub fn truncate_federation(&mut self, n_sites: usize) {
+        let now = self.engine.now();
+        while self.vks.len() > n_sites {
+            let vk = self.vks.pop().unwrap();
+            self.store.borrow_mut().remove_node(&vk.node_name, now);
+        }
+        self.vk_index =
+            self.vks.iter().enumerate().map(|(i, vk)| (vk.node_name.clone(), i)).collect();
+    }
+
+    /// Per-user/project usage report (accounting over the cluster store).
+    pub fn usage_report(&self) -> crate::monitoring::Report {
+        crate::monitoring::account(&self.store.borrow(), self.engine.now())
+    }
+
+    /// Split borrow for the storage flow: the token validator plus the
+    /// object store (the patched-rclone mount writes need both at once).
+    pub fn storage_mut(&mut self) -> (&AuthService, &mut ObjectStore) {
+        (&self.auth, &mut self.objects)
+    }
 }
 
 #[cfg(test)]
@@ -586,7 +716,7 @@ mod tests {
     #[test]
     fn bootstrap_builds_paper_cluster() {
         let p = platform();
-        let st = p.store.borrow();
+        let st = p.cluster();
         // 4 physical + 4 virtual (federation)
         assert_eq!(st.node_count(), 8);
         let (_, total) = st.utilization(true);
@@ -605,7 +735,7 @@ mod tests {
         p.run_for(120.0, 10.0);
         let counts = p.pod_phase_counts();
         assert_eq!(counts.get("running"), Some(&1), "{counts:?}");
-        assert!(!p.metrics.interactive_spawn_latencies.is_empty());
+        assert!(!p.metrics().interactive_spawn_latencies.is_empty());
         assert!(p.accelerator_utilization() > 0.0);
     }
 
@@ -623,12 +753,9 @@ mod tests {
             )
             .unwrap();
         p.run_for(400.0, 10.0);
-        assert_eq!(
-            p.kueue.workload(&wl).unwrap().state,
-            WorkloadState::Finished
-        );
-        assert_eq!(p.metrics.local_completions, 1);
-        assert_eq!(p.metrics.remote_completions, 0);
+        assert_eq!(p.workload_state(&wl), Some(WorkloadState::Finished));
+        assert_eq!(p.metrics().local_completions, 1);
+        assert_eq!(p.metrics().remote_completions, 0);
     }
 
     #[test]
@@ -651,15 +778,15 @@ mod tests {
             );
         }
         p.run_for(3600.0, 10.0);
-        assert!(p.metrics.offloaded_pods > 0, "some jobs must offload: {:?}", p.metrics);
-        assert!(p.metrics.remote_completions > 0, "{:?}", p.metrics);
-        assert!(p.metrics.local_completions > 0, "{:?}", p.metrics);
+        assert!(p.metrics().offloaded_pods > 0, "some jobs must offload: {:?}", p.metrics());
+        assert!(p.metrics().remote_completions > 0, "{:?}", p.metrics());
+        assert!(p.metrics().local_completions > 0, "{:?}", p.metrics());
         // every workload eventually finishes
         let done = wls
             .iter()
-            .filter(|w| p.kueue.workload(w).unwrap().state == WorkloadState::Finished)
+            .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
             .count();
-        assert_eq!(done, 60, "{:?}", p.metrics);
+        assert_eq!(done, 60, "{:?}", p.metrics());
     }
 
     #[test]
@@ -687,7 +814,7 @@ mod tests {
         p.spawn_session("user010", &profile).unwrap();
         p.run_for(300.0, 10.0);
         // session pod must be running; at least one batch eviction happened
-        let st = p.store.borrow();
+        let st = p.cluster();
         let session_running = st
             .pods()
             .any(|pd| pd.spec.labels.get("app").map(|a| a == "jupyterlab").unwrap_or(false)

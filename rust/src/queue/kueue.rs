@@ -91,6 +91,20 @@ pub struct LocalQueue {
     pub cluster_queue: String,
 }
 
+/// One workload state change, appended to the controller's transition log.
+/// The API server's watch stream consumes these as deltas instead of
+/// re-scanning every workload per tick.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadTransition {
+    pub at: Time,
+    pub workload: String,
+    pub state: WorkloadState,
+}
+
+/// Retained workload transitions (older entries are pruned; consumers use
+/// the cursor API and tolerate gaps like a Kubernetes watch restart).
+const MAX_TRANSITIONS: usize = 100_000;
+
 /// The Kueue controller state.
 #[derive(Debug, Default)]
 pub struct Kueue {
@@ -99,6 +113,11 @@ pub struct Kueue {
     workloads: HashMap<String, Workload>,
     /// FIFO arrival order for fair scanning.
     order: Vec<String>,
+    /// Bounded log of workload state changes (ring: oldest pruned).
+    transitions: std::collections::VecDeque<WorkloadTransition>,
+    /// How many transitions have been pruned off the front (absolute
+    /// cursor of `transitions[0]`).
+    transitions_base: usize,
     /// Requeue backoff base (doubles per eviction).
     pub backoff_base: Time,
 }
@@ -142,6 +161,34 @@ impl Kueue {
         self.workloads.values()
     }
 
+    /// Absolute cursor just past the newest transition; pass a previously
+    /// returned cursor to [`transitions_since`](Self::transitions_since).
+    pub fn transition_cursor(&self) -> usize {
+        self.transitions_base + self.transitions.len()
+    }
+
+    /// Transitions recorded at or after `cursor` (watch-stream feed).
+    /// Entries pruned before `cursor` are silently gone — consumers that
+    /// fall more than `MAX_TRANSITIONS` behind must re-list.
+    pub fn transitions_since(
+        &self,
+        cursor: usize,
+    ) -> impl Iterator<Item = &WorkloadTransition> {
+        self.transitions.iter().skip(cursor.saturating_sub(self.transitions_base))
+    }
+
+    fn log_transition(&mut self, at: Time, workload: &str, state: WorkloadState) {
+        self.transitions.push_back(WorkloadTransition {
+            at,
+            workload: workload.to_string(),
+            state,
+        });
+        while self.transitions.len() > MAX_TRANSITIONS {
+            self.transitions.pop_front();
+            self.transitions_base += 1;
+        }
+    }
+
     /// Submit a workload to a LocalQueue.
     pub fn submit(
         &mut self,
@@ -169,6 +216,7 @@ impl Kueue {
             },
         );
         self.order.push(name.clone());
+        self.log_transition(at, &name, WorkloadState::Queued);
         Ok(name)
     }
 
@@ -320,6 +368,7 @@ impl Kueue {
                 w.state = WorkloadState::Admitted;
                 w.admitted_at = Some(at);
                 w.charged_to = Some(cq_name);
+                self.log_transition(at, &name, WorkloadState::Admitted);
                 result.admitted.push(name);
                 continue;
             }
@@ -358,6 +407,8 @@ impl Kueue {
                     let delay = backoff * (1 << (v.evictions - 1).min(6)) as f64;
                     v.state = WorkloadState::EvictedPendingRequeue { until: at + delay };
                     v.charged_to = None;
+                    let state = v.state.clone();
+                    self.log_transition(at, &victim, state);
                 }
                 evicted_now.push(victim.clone());
                 result.preempted.push((victim, name.clone()));
@@ -375,6 +426,7 @@ impl Kueue {
                 w.state = WorkloadState::Admitted;
                 w.admitted_at = Some(at);
                 w.charged_to = Some(cq_name);
+                self.log_transition(at, &name, WorkloadState::Admitted);
                 result.admitted.push(name);
             }
             // note: evictions stand even if still unfit (mirrors Kueue's
@@ -385,7 +437,7 @@ impl Kueue {
     }
 
     /// Mark a workload finished and release its quota.
-    pub fn finish(&mut self, name: &str) -> anyhow::Result<()> {
+    pub fn finish(&mut self, name: &str, at: Time) -> anyhow::Result<()> {
         let (state, cq, req) = {
             let w = self
                 .workloads
@@ -393,12 +445,16 @@ impl Kueue {
                 .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?;
             (w.state.clone(), w.charged_to.clone(), w.requests.clone())
         };
+        if state == WorkloadState::Finished {
+            return Ok(()); // idempotent: no duplicate transition logged
+        }
         if state == WorkloadState::Admitted {
             self.uncharge(&cq.unwrap(), &req);
         }
         let w = self.workloads.get_mut(name).unwrap();
         w.state = WorkloadState::Finished;
         w.charged_to = None;
+        self.log_transition(at, name, WorkloadState::Finished);
         Ok(())
     }
 
@@ -537,7 +593,7 @@ mod tests {
         let r2 = k.admit_pass(11.0);
         assert!(!r2.admitted.contains(&victim));
         // finish the interactive session, wait out backoff → readmitted
-        k.finish("sess").unwrap();
+        k.finish("sess", 100.0).unwrap();
         let r3 = k.admit_pass(10.0 + 31.0);
         assert!(r3.admitted.contains(&victim), "{r3:?}");
     }
@@ -549,7 +605,7 @@ mod tests {
         k.admit_pass(0.0);
         let (used, _) = k.quota_utilization();
         assert_eq!(used.get(CPU), 8000);
-        k.finish("w1").unwrap();
+        k.finish("w1", 1.0).unwrap();
         let (used, _) = k.quota_utilization();
         assert!(used.is_empty());
     }
@@ -563,7 +619,7 @@ mod tests {
         assert_eq!(k.cluster_queue("batch-cq").unwrap().used.get(GPU), 2);
         assert_eq!(k.cluster_queue("interactive-cq").unwrap().used.get(GPU), 1);
         // release restores both
-        k.finish("w1").unwrap();
+        k.finish("w1", 1.0).unwrap();
         assert_eq!(k.cluster_queue("batch-cq").unwrap().used.get(GPU), 0);
         assert_eq!(k.cluster_queue("interactive-cq").unwrap().used.get(GPU), 0);
     }

@@ -5,6 +5,10 @@
 pub mod costmodel;
 pub mod manifest;
 pub mod mljob;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use costmodel::CostModel;

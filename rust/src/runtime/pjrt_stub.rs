@@ -1,0 +1,130 @@
+//! Stub PJRT engine, compiled when the `pjrt` feature (and thus the `xla`
+//! crate with its xla_extension C library) is absent.
+//!
+//! Mirrors the public surface of [`pjrt`](crate::runtime::pjrt) so the rest
+//! of the crate — [`crate::runtime::mljob`], the CLI `train`/`validate`
+//! subcommands, the e2e example — compiles unchanged. Every entry point
+//! fails gracefully at runtime with a clear message instead of at link time,
+//! which keeps the offline build green while real execution remains one
+//! `--features pjrt` away.
+
+use std::collections::HashSet;
+use std::fmt;
+use std::path::Path;
+
+use crate::runtime::manifest::Artifact;
+
+/// Compile/execute statistics (always zero in the stub).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+}
+
+/// Error carried by stub literals and engine calls.
+#[derive(Debug, Clone)]
+pub struct Unavailable;
+
+impl fmt::Display for Unavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "built without the `pjrt` feature; rebuild with `--features pjrt`")
+    }
+}
+
+impl std::error::Error for Unavailable {}
+
+/// Placeholder for `xla::Literal`. Constructible (so the helper builders
+/// keep their signatures) but never holds data.
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// The stub engine. `cpu()` refuses to construct it.
+pub struct Engine {
+    loaded: HashSet<String>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    pub fn cpu() -> anyhow::Result<Engine> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: this binary was built without the `pjrt` \
+             feature (the `xla` crate / xla_extension library is not linked). \
+             Rebuild with `cargo build --features pjrt` to run real HLO artifacts."
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    pub fn load(&mut self, _key: &str, _hlo_path: &Path) -> anyhow::Result<()> {
+        anyhow::bail!("{Unavailable}")
+    }
+
+    /// Cache key for an artifact (same derivation as the real engine).
+    pub fn artifact_key(art: &Artifact) -> String {
+        art.file.display().to_string()
+    }
+
+    pub fn load_artifact(&mut self, art: &Artifact) -> anyhow::Result<()> {
+        self.load(&Self::artifact_key(art), &art.file)
+    }
+
+    pub fn is_loaded(&self, key: &str) -> bool {
+        self.loaded.contains(key)
+    }
+
+    pub fn execute(&mut self, _key: &str, _args: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        anyhow::bail!("{Unavailable}")
+    }
+}
+
+/// Build an f32 vector literal (stub).
+pub fn f32_vec(_data: &[f32]) -> Literal {
+    Literal
+}
+
+/// Build an i32 tensor literal (stub).
+pub fn i32_tensor(_data: &[i32], _dims: &[i64]) -> anyhow::Result<Literal> {
+    Ok(Literal)
+}
+
+/// Build an f32 scalar literal (stub).
+pub fn f32_scalar(_v: f32) -> Literal {
+    Literal
+}
+
+/// Extract an f32 scalar from a literal (stub: always errors).
+pub fn as_f32_scalar(_l: &Literal) -> anyhow::Result<f32> {
+    anyhow::bail!("{Unavailable}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_refuses_with_clear_message() {
+        let err = Engine::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn literal_reads_error_gracefully() {
+        assert!(Literal.to_vec::<f32>().is_err());
+        assert!(as_f32_scalar(&Literal).is_err());
+        assert!(i32_tensor(&[1, 2], &[2]).is_ok());
+    }
+}

@@ -50,8 +50,8 @@ fn full_day_campaign_is_deterministic() {
         }
         (
             p.pod_phase_counts().get("succeeded").copied().unwrap_or(0),
-            p.metrics.evictions,
-            p.metrics.offloaded_pods,
+            p.metrics().evictions,
+            p.metrics().offloaded_pods,
             p.tsdb.samples_ingested(),
         )
     };
@@ -75,8 +75,7 @@ fn capacity_is_conserved_through_a_churny_campaign() {
     }
     p.run_for(hours(36.0), 30.0);
     // after everything drains, free == allocatable on every physical node
-    let st = p.store.borrow();
-    let (used, _) = st.utilization(true);
+    let (used, _) = p.utilization(true);
     // some sessions may still linger but no batch jobs do; assert no leaked
     // accelerator reservations
     for (k, v) in used.iter() {
@@ -84,7 +83,7 @@ fn capacity_is_conserved_through_a_churny_campaign() {
             assert_eq!(v, 0, "leaked accelerator reservation on {k}");
         }
     }
-    let (qused, _) = p.kueue.quota_utilization();
+    let (qused, _) = p.quota_utilization();
     assert!(qused.is_empty(), "leaked kueue quota: {qused}");
 }
 
@@ -94,13 +93,14 @@ fn hub_token_flows_through_object_store_mount() {
     let profile = default_catalogue().into_iter().find(|x| x.name == "cpu-small").unwrap();
     let sid = p.spawn_session("user042", &profile).unwrap();
     p.run_for(60.0, 10.0);
-    let session = p.spawner.sessions().iter().find(|s| s.id == sid).unwrap().clone();
+    let session = p.session(&sid).unwrap().clone();
     let mount = session.mount.expect("rclone mount established at spawn");
     // write through the mount, read back directly from the bucket
+    let (auth, objects) = p.storage_mut();
     mount
-        .write(&p.auth, &mut p.objects, "/home/user042/bucket/results/loss.json", b"{\"loss\":1.5}")
+        .write(auth, objects, "/home/user042/bucket/results/loss.json", b"{\"loss\":1.5}")
         .unwrap();
-    let direct = p.objects.get("user042-bucket", "user042", "results/loss.json").unwrap();
+    let direct = objects.get("user042-bucket", "user042", "results/loss.json").unwrap();
     assert_eq!(direct, b"{\"loss\":1.5}");
 }
 
@@ -127,13 +127,13 @@ fn evicted_batch_job_finishes_after_interactive_leaves() {
     let profile = default_catalogue().into_iter().find(|x| x.name == "tensorflow-mig-1g").unwrap();
     let sid = p.spawn_session("user050", &profile).unwrap();
     p.run_for(300.0, 10.0);
-    assert!(p.metrics.evictions >= 1, "a batch job must be evicted");
+    assert!(p.metrics().evictions >= 1, "a batch job must be evicted");
     // session leaves; evicted job must requeue, readmit, and finish
     p.stop_session(&sid, "done").unwrap();
     p.run_for(hours(4.0), 30.0);
     let finished = wls
         .iter()
-        .filter(|w| p.kueue.workload(w).unwrap().state == WorkloadState::Finished)
+        .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
         .count();
     assert_eq!(finished, 35, "every batch job must eventually finish");
 }
@@ -322,7 +322,7 @@ fn prop_kueue_quota_conserved_under_random_churn() {
                     }
                     _ => {
                         if let Some(name) = live.pop() {
-                            k.finish(&name).map_err(|e| e.to_string())?;
+                            k.finish(&name, t).map_err(|e| e.to_string())?;
                         }
                     }
                 }
@@ -343,6 +343,114 @@ fn prop_kueue_quota_conserved_under_random_churn() {
             Ok(())
         },
     );
+}
+
+// ------------------------------------------------------------- control plane
+
+/// The acceptance path for the API redesign: a session is created through
+/// the typed API and its pod's `Added → Modified(Running)` lifecycle is
+/// observed purely from the watch stream — no store polling.
+#[test]
+fn watch_observes_session_pod_lifecycle_without_polling() {
+    use aiinfn::api::{ApiObject, ApiServer, EventType, ResourceKind, SessionResource};
+    use aiinfn::util::json::Json;
+
+    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let mut api = ApiServer::bootstrap(cfg).unwrap();
+    let token = api.login("user011").unwrap();
+    let rv0 = api.last_rv();
+    let created = api
+        .create(
+            &token,
+            &ApiObject::Session(SessionResource::request("user011", "tensorflow-mig-1g")),
+        )
+        .unwrap();
+    let pod_name = created.as_session().unwrap().pod_name.clone();
+    api.run_for(120.0, 10.0);
+
+    let events: Vec<_> = api
+        .watch(&token, ResourceKind::Pod, rv0)
+        .unwrap()
+        .into_iter()
+        .filter(|e| e.name == pod_name)
+        .collect();
+    assert!(events.len() >= 2, "expected Added + Modified events: {events:?}");
+    // resourceVersions strictly increase along the stream
+    for w in events.windows(2) {
+        assert!(w[1].resource_version > w[0].resource_version);
+    }
+    let phases: Vec<(EventType, String)> = events
+        .iter()
+        .map(|e| {
+            let phase = e
+                .object
+                .as_ref()
+                .and_then(|o| o.at(&["status", "phase"]))
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string();
+            (e.event, phase)
+        })
+        .collect();
+    assert_eq!(phases[0], (EventType::Added, "Pending".to_string()), "{phases:?}");
+    assert!(
+        phases.iter().any(|(t, ph)| *t == EventType::Modified && ph == "Running"),
+        "must observe the Running transition: {phases:?}"
+    );
+    // the Session resource agrees with the stream
+    let s = api.get(&token, ResourceKind::Session, created.name()).unwrap();
+    assert_eq!(s.as_session().unwrap().phase, "Running");
+}
+
+/// End-to-end batch flow through the verbs, with workload deltas observed
+/// from the watch stream.
+#[test]
+fn api_batch_flow_with_workload_watch() {
+    use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector};
+    use aiinfn::util::json::Json;
+
+    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let mut api = ApiServer::bootstrap(cfg).unwrap();
+    let token = api.login("user030").unwrap();
+    let rv0 = api.last_rv();
+    let wl = api
+        .create(
+            &token,
+            &ApiObject::BatchJob(BatchJobResource::request(
+                "user030",
+                "project10",
+                ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+                120.0,
+                aiinfn::queue::kueue::PriorityClass::Batch,
+                false,
+            )),
+        )
+        .unwrap()
+        .name()
+        .to_string();
+    api.run_for(600.0, 10.0);
+    let states: Vec<String> = api
+        .watch(&token, ResourceKind::Workload, rv0)
+        .unwrap()
+        .into_iter()
+        .filter(|e| e.name == wl)
+        .filter_map(|e| {
+            e.object
+                .as_ref()
+                .and_then(|o| o.at(&["status", "state"]))
+                .and_then(Json::as_str)
+                .map(String::from)
+        })
+        .collect();
+    assert_eq!(states.first().map(String::as_str), Some("Queued"), "{states:?}");
+    assert!(states.iter().any(|s| s == "Admitted"), "{states:?}");
+    assert_eq!(states.last().map(String::as_str), Some("Finished"), "{states:?}");
+    // the pod is findable by label selector and succeeded
+    let pods = api
+        .list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap())
+        .unwrap();
+    assert_eq!(pods.len(), 1);
+    assert_eq!(pods[0].as_pod().unwrap().phase, "Succeeded");
 }
 
 // ---------------------------------------------------------------- PJRT e2e
@@ -387,18 +495,18 @@ fn submit_cpu_heavy_campaign_drains_via_federation() {
     p.run_for(hours(8.0), 20.0);
     let finished = wls
         .iter()
-        .filter(|w| p.kueue.workload(w).unwrap().state == WorkloadState::Finished)
+        .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
         .count();
     assert_eq!(finished, 80);
-    assert!(p.metrics.remote_completions > 0, "{:?}", p.metrics);
+    assert!(p.metrics().remote_completions > 0, "{:?}", p.metrics());
     // InterLink wire must have been exercised
-    let rt: u64 = p.vks.iter().map(|v| v.round_trips).sum();
+    let rt = p.interlink_round_trips();
     assert!(rt > 100, "expected many InterLink round-trips, got {rt}");
     // interactive demand arriving *after* the storm still gets placed fast
     let profile = default_catalogue().into_iter().find(|x| x.name == "tensorflow-mig-1g").unwrap();
     p.spawn_session("user077", &profile).unwrap();
     p.run_for(120.0, 5.0);
-    let lat = p.metrics.interactive_spawn_latencies.last().copied().unwrap();
+    let lat = p.metrics().interactive_spawn_latencies.last().copied().unwrap();
     assert!(lat < 60.0, "spawn latency {lat}");
 }
 
