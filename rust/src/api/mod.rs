@@ -22,11 +22,17 @@
 //! `{apiVersion, kind, metadata, spec, status}` shape:
 //!
 //! * [`SessionResource`] — an interactive JupyterLab session (writable)
-//! * [`BatchJobResource`] — a queued/batch job (writable)
+//! * [`BatchJobResource`] — a queued/batch job (writable; status carries
+//!   the restart policy and consumed retries)
 //! * [`PodView`] — a pod's spec + status (read-only projection)
 //! * [`NodeView`] — node capacity/allocatable/free (read-only)
 //! * [`WorkloadView`] — Kueue admission state (read-only)
-//! * [`SiteView`] — a federation site behind InterLink (read-only)
+//! * [`SiteView`] — a federation site behind InterLink (read-only; status
+//!   carries circuit-breaker health)
+//!
+//! Pods and Sites additionally expose typed [`Condition`]s
+//! (`PodScheduled`/`Ready`, `Healthy`) so watchers can follow transitions
+//! like `Degraded → Healthy` across `Modified` events without polling.
 //!
 //! ## Watch streams
 //!
@@ -37,7 +43,8 @@
 //! Session and BatchJob streams mirror their pod/workload transitions as
 //! `Modified` events, with `Added`/`Deleted` emitted by the create/delete
 //! verbs (an idle-culled session surfaces on the Pod stream as its pod's
-//! terminal event). `watch(kind, since_rv)` returns everything after
+//! terminal event); Site events come from the per-site health tracker's
+//! transition log, one `Modified` per breaker state change. `watch(kind, since_rv)` returns everything after
 //! `since_rv`, so controllers and dashboards resume exactly where they
 //! left off:
 //!
@@ -78,8 +85,8 @@ pub mod server;
 pub mod watch;
 
 pub use resources::{
-    ApiObject, BatchJobResource, Metadata, NodeView, PodView, ResourceKind, SessionResource,
-    SiteView, WorkloadView,
+    ApiObject, BatchJobResource, Condition, Metadata, NodeView, PodView, ResourceKind,
+    SessionResource, SiteView, WorkloadView,
 };
 pub use server::{ApiServer, Selector};
 pub use watch::{EventType, WatchEvent, WatchLog};

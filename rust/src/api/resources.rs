@@ -117,6 +117,69 @@ impl Metadata {
 
 // ------------------------------------------------------------ shared helpers
 
+/// A typed status condition (the Kubernetes `status.conditions` idiom):
+/// an observable boolean aspect of an object — `Ready`/`PodScheduled` on a
+/// Pod, `Healthy` on a Site — with the reason and the time it last flipped.
+/// Watchers diff conditions across `Modified` events to follow transitions
+/// like `Degraded → Healthy` without polling.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Condition {
+    pub ctype: String,
+    pub status: bool,
+    pub reason: String,
+    pub message: String,
+    pub last_transition: f64,
+}
+
+impl Condition {
+    pub fn new(
+        ctype: &str,
+        status: bool,
+        reason: &str,
+        message: &str,
+        last_transition: f64,
+    ) -> Condition {
+        Condition {
+            ctype: ctype.to_string(),
+            status,
+            reason: reason.to_string(),
+            message: message.to_string(),
+            last_transition,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::str(self.ctype.as_str())),
+            ("status", Json::Bool(self.status)),
+            ("reason", Json::str(self.reason.as_str())),
+            ("message", Json::str(self.message.as_str())),
+            ("lastTransition", Json::num(self.last_transition)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Condition, ApiError> {
+        Ok(Condition {
+            ctype: opt_str(j, "type").unwrap_or_default(),
+            status: j.get("status").and_then(Json::as_bool).unwrap_or(false),
+            reason: opt_str(j, "reason").unwrap_or_default(),
+            message: opt_str(j, "message").unwrap_or_default(),
+            last_transition: opt_num(j, "lastTransition").unwrap_or(0.0),
+        })
+    }
+}
+
+pub fn conditions_to_json(cs: &[Condition]) -> Json {
+    Json::Arr(cs.iter().map(Condition::to_json).collect())
+}
+
+pub fn conditions_from_json(j: Option<&Json>) -> Result<Vec<Condition>, ApiError> {
+    match j.and_then(Json::as_arr) {
+        None => Ok(Vec::new()),
+        Some(a) => a.iter().map(Condition::from_json).collect(),
+    }
+}
+
 /// `ResourceVec` as a JSON object of counts.
 pub fn resources_to_json(r: &ResourceVec) -> Json {
     Json::Obj(r.iter().map(|(k, v)| (k.to_string(), Json::num(v as f64))).collect())
@@ -294,6 +357,10 @@ pub struct BatchJobResource {
     /// Status (server-filled).
     pub state: String,
     pub live_pod: Option<String>,
+    /// Failure retries consumed against the restart budget.
+    pub retries: u32,
+    /// The effective restart policy, e.g. `"OnFailure(max=4)"` / `"Never"`.
+    pub restart_policy: String,
 }
 
 impl BatchJobResource {
@@ -335,6 +402,10 @@ impl BatchJobResource {
                 if let Some(p) = &self.live_pod {
                     f.push(("livePod", Json::str(p.as_str())));
                 }
+                f.push(("retries", Json::num(self.retries as f64)));
+                if !self.restart_policy.is_empty() {
+                    f.push(("restartPolicy", Json::str(self.restart_policy.as_str())));
+                }
                 f
             }),
         )
@@ -356,6 +427,8 @@ impl BatchJobResource {
             offloadable: spec.get("offloadable").and_then(Json::as_bool).unwrap_or(false),
             state: opt_str(status, "state").unwrap_or_default(),
             live_pod: opt_str(status, "livePod"),
+            retries: opt_num(status, "retries").unwrap_or(0.0) as u32,
+            restart_policy: opt_str(status, "restartPolicy").unwrap_or_default(),
         })
     }
 }
@@ -376,10 +449,32 @@ pub struct PodView {
     pub finished_at: Option<f64>,
     pub evictions: u32,
     pub message: String,
+    pub conditions: Vec<Condition>,
 }
 
 impl PodView {
     pub fn from_pod(pod: &Pod, resource_version: u64) -> PodView {
+        let scheduled = pod.status.node.is_some();
+        let running = pod.status.phase == PodPhase::Running;
+        let conditions = vec![
+            Condition::new(
+                "PodScheduled",
+                scheduled,
+                if scheduled { "Scheduled" } else { "Pending" },
+                pod.status.node.as_deref().unwrap_or(""),
+                pod.status.scheduled_at.unwrap_or(pod.status.created_at),
+            ),
+            Condition::new(
+                "Ready",
+                running,
+                phase_str(pod.status.phase),
+                &pod.status.message,
+                pod.status
+                    .started_at
+                    .or(pod.status.finished_at)
+                    .unwrap_or(pod.status.created_at),
+            ),
+        ];
         PodView {
             metadata: Metadata {
                 name: pod.spec.name.clone(),
@@ -397,6 +492,7 @@ impl PodView {
             finished_at: pod.status.finished_at,
             evictions: pod.status.evictions,
             message: pod.status.message.clone(),
+            conditions,
         }
     }
 
@@ -425,6 +521,7 @@ impl PodView {
                 if let Some(t) = self.finished_at {
                     f.push(("finishedAt", Json::num(t)));
                 }
+                f.push(("conditions", conditions_to_json(&self.conditions)));
                 f
             }),
         )
@@ -448,6 +545,7 @@ impl PodView {
             finished_at: opt_num(status, "finishedAt"),
             evictions: opt_num(status, "evictions").unwrap_or(0.0) as u32,
             message: opt_str(status, "message").unwrap_or_default(),
+            conditions: conditions_from_json(status.get("conditions"))?,
         })
     }
 }
@@ -597,7 +695,8 @@ impl WorkloadView {
 
 // ---------------------------------------------------------------- SiteView
 
-/// Read-only projection of a federation site (Virtual Kubelet provider).
+/// Read-only projection of a federation site (Virtual Kubelet provider),
+/// including its circuit-breaker health and conditions.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SiteView {
     pub metadata: Metadata,
@@ -608,6 +707,9 @@ pub struct SiteView {
     pub tracked_pods: u64,
     pub round_trips: u64,
     pub completions: u64,
+    /// `Healthy` / `Degraded` / `Probing` (the breaker state).
+    pub health: String,
+    pub conditions: Vec<Condition>,
 }
 
 impl SiteView {
@@ -625,6 +727,8 @@ impl SiteView {
                 ("trackedPods", Json::num(self.tracked_pods as f64)),
                 ("roundTrips", Json::num(self.round_trips as f64)),
                 ("completions", Json::num(self.completions as f64)),
+                ("health", Json::str(self.health.as_str())),
+                ("conditions", conditions_to_json(&self.conditions)),
             ]),
         )
     }
@@ -644,6 +748,8 @@ impl SiteView {
             tracked_pods: opt_num(status, "trackedPods").unwrap_or(0.0) as u64,
             round_trips: opt_num(status, "roundTrips").unwrap_or(0.0) as u64,
             completions: opt_num(status, "completions").unwrap_or(0.0) as u64,
+            health: opt_str(status, "health").unwrap_or_default(),
+            conditions: conditions_from_json(status.get("conditions"))?,
         })
     }
 }
@@ -802,6 +908,8 @@ mod tests {
                 offloadable: true,
                 state: "Admitted".into(),
                 live_pod: Some("job-000001-r1".into()),
+                retries: 2,
+                restart_policy: "OnFailure(max=4)".into(),
             }),
             ApiObject::Pod(PodView {
                 metadata: meta("job-000001-r1", "batch", 11),
@@ -815,6 +923,10 @@ mod tests {
                 finished_at: None,
                 evictions: 1,
                 message: "started".into(),
+                conditions: vec![
+                    Condition::new("PodScheduled", true, "Scheduled", "cnaf-ai02", 2.0),
+                    Condition::new("Ready", true, "Running", "started", 2.5),
+                ],
             }),
             ApiObject::Node(NodeView {
                 metadata: meta("cnaf-ai02", "cluster", 3),
@@ -843,6 +955,14 @@ mod tests {
                 tracked_pods: 4,
                 round_trips: 120,
                 completions: 9,
+                health: "Degraded".into(),
+                conditions: vec![Condition::new(
+                    "Healthy",
+                    false,
+                    "Degraded",
+                    "failure threshold crossed",
+                    77.5,
+                )],
             }),
         ];
         for obj in objects {
@@ -852,6 +972,14 @@ mod tests {
             assert_eq!(back, obj, "round-trip mismatch for kind {}", obj.kind().as_str());
             assert_eq!(parsed.str_field("apiVersion").unwrap(), API_VERSION);
         }
+    }
+
+    #[test]
+    fn condition_roundtrip_and_defaults() {
+        let c = Condition::new("Healthy", true, "OK", "all good", 12.25);
+        let back = Condition::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        assert!(conditions_from_json(None).unwrap().is_empty());
     }
 
     #[test]

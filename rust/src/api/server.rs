@@ -11,8 +11,8 @@
 use std::collections::BTreeMap;
 
 use crate::api::resources::{
-    parse_priority, phase_str, workload_state_str, ApiObject, BatchJobResource, Metadata,
-    NodeView, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
+    parse_priority, phase_str, workload_state_str, ApiObject, BatchJobResource, Condition,
+    Metadata, NodeView, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
 };
 use crate::api::watch::{EventType, WatchEvent, WatchLog};
 use crate::api::ApiError;
@@ -21,9 +21,10 @@ use crate::cluster::store::EventKind;
 use crate::hub::auth::TokenValidator;
 use crate::hub::profiles::default_catalogue;
 use crate::hub::spawner::{Session, SpawnError};
+use crate::offload::health::HealthStatus;
 use crate::offload::vk::VirtualKubelet;
 use crate::platform::config::PlatformConfig;
-use crate::platform::facade::{BatchJob, Platform};
+use crate::platform::facade::{BatchJob, Platform, RestartPolicy};
 use crate::queue::kueue::WorkloadState;
 use crate::sim::clock::Time;
 use crate::util::json::Json;
@@ -114,17 +115,24 @@ impl Selector {
 pub struct ApiServer {
     platform: Platform,
     log: WatchLog,
-    /// High-water marks into the store event list / kueue transition log.
+    /// High-water marks into the store event list / kueue transition log /
+    /// site-health transition log.
     store_seen: usize,
     kueue_seen: usize,
+    health_seen: usize,
 }
 
 impl ApiServer {
     /// Wrap an already-bootstrapped platform. Node registrations recorded
     /// during bootstrap are pumped into the watch log immediately.
     pub fn new(platform: Platform) -> ApiServer {
-        let mut api =
-            ApiServer { platform, log: WatchLog::default(), store_seen: 0, kueue_seen: 0 };
+        let mut api = ApiServer {
+            platform,
+            log: WatchLog::default(),
+            store_seen: 0,
+            kueue_seen: 0,
+            health_seen: 0,
+        };
         api.pump();
         api
     }
@@ -486,9 +494,12 @@ impl ApiServer {
                     EventKind::PodEvicted => {
                         (ResourceKind::Pod, EventType::Modified, Some(PodPhase::Evicted))
                     }
+                    EventKind::PodUnschedulable => {
+                        (ResourceKind::Pod, EventType::Modified, Some(PodPhase::Pending))
+                    }
                     EventKind::NodeAdded => (ResourceKind::Node, EventType::Added, None),
                     EventKind::NodeRemoved => (ResourceKind::Node, EventType::Deleted, None),
-                    EventKind::MigRepartitioned => {
+                    EventKind::NodeModified | EventKind::MigRepartitioned => {
                         (ResourceKind::Node, EventType::Modified, None)
                     }
                 };
@@ -576,6 +587,37 @@ impl ApiServer {
                 }
             }
         }
+
+        // site health transitions → Modified events on the Site kind, so
+        // watchers observe outage → quarantine → probe → recovery without
+        // polling the resource.
+        let fresh: Vec<crate::offload::health::HealthTransition> =
+            self.platform.health.transitions_since(self.health_seen).cloned().collect();
+        self.health_seen = self.platform.health.transition_cursor();
+        for t in fresh {
+            let rv = self.log.next_rv();
+            let object = self
+                .platform
+                .vks
+                .iter()
+                .find(|v| v.site == t.site)
+                .map(|vk| {
+                    let mut view = self.site_view(vk, rv);
+                    // health + condition as of *this* transition, not the
+                    // present — a batched pump must still let watchers diff
+                    // conditions across events
+                    view.health = t.status.as_str().to_string();
+                    view.conditions = vec![Condition::new(
+                        "Healthy",
+                        matches!(t.status, HealthStatus::Healthy),
+                        t.status.as_str(),
+                        &t.reason,
+                        t.at,
+                    )];
+                    view.to_json()
+                });
+            self.log.append(ResourceKind::Site, EventType::Modified, &t.site, t.at, object);
+        }
     }
 
     // ---------------------------------------------------------- projections
@@ -620,6 +662,10 @@ impl ApiServer {
                 )
             })
             .unwrap_or_else(|| ("Unknown".to_string(), "batch".to_string()));
+        let restart_policy = match job.restart_policy {
+            RestartPolicy::Never => "Never".to_string(),
+            RestartPolicy::OnFailure { max_retries } => format!("OnFailure(max={max_retries})"),
+        };
         BatchJobResource {
             metadata: Metadata {
                 name: job.workload.clone(),
@@ -635,10 +681,21 @@ impl ApiServer {
             offloadable: job.offloadable,
             state,
             live_pod: job.live_pod.clone(),
+            retries: job.retries,
+            restart_policy,
         }
     }
 
     fn site_view(&self, vk: &VirtualKubelet, rv: u64) -> SiteView {
+        let status = self.platform.health.status(&vk.site);
+        let last = self.platform.health.last_transition(&vk.site);
+        let conditions = vec![Condition::new(
+            "Healthy",
+            matches!(status, HealthStatus::Healthy),
+            status.as_str(),
+            last.map(|t| t.reason.as_str()).unwrap_or("no failures observed"),
+            last.map(|t| t.at).unwrap_or(0.0),
+        )];
         SiteView {
             metadata: Metadata {
                 name: vk.site.clone(),
@@ -653,6 +710,8 @@ impl ApiServer {
             tracked_pods: vk.tracked() as u64,
             round_trips: vk.round_trips,
             completions: vk.completions_since(0.0) as u64,
+            health: status.as_str().to_string(),
+            conditions,
         }
     }
 

@@ -30,8 +30,14 @@ pub enum EventKind {
     PodSucceeded,
     PodFailed,
     PodEvicted,
+    /// A pending pod could not be placed this pass (reason in the message);
+    /// recorded once per (pod, reason) by the facade, not every tick.
+    PodUnschedulable,
     NodeAdded,
     NodeRemoved,
+    /// Node state changed in place: cordoned/uncordoned, allocatable
+    /// degraded or restored (chaos GPU faults), readiness flips.
+    NodeModified,
     MigRepartitioned,
 }
 
@@ -88,6 +94,28 @@ impl ClusterStore {
     pub fn node_mut(&mut self, name: &str) -> Option<&mut Node> {
         self.bump();
         self.nodes.get_mut(name)
+    }
+
+    /// Flip a node's readiness (cordon/uncordon). Records a `NodeModified`
+    /// event when the state actually changes; returns false for unknown
+    /// nodes.
+    pub fn set_node_ready(&mut self, name: &str, ready: bool, at: Time, msg: &str) -> bool {
+        let changed = match self.nodes.get_mut(name) {
+            None => return false,
+            Some(n) => {
+                if n.ready == ready {
+                    false
+                } else {
+                    n.ready = ready;
+                    true
+                }
+            }
+        };
+        if changed {
+            self.bump();
+            self.record(at, EventKind::NodeModified, name, msg);
+        }
+        true
     }
 
     pub fn nodes(&self) -> impl Iterator<Item = &Node> {
@@ -390,6 +418,19 @@ mod tests {
         assert_eq!(s.gc_finished(4.0), 0);
         assert_eq!(s.gc_finished(6.0), 1);
         assert!(s.pod("p1").is_none());
+    }
+
+    #[test]
+    fn set_node_ready_records_only_real_changes() {
+        let mut s = store_with_node();
+        let before = s.events().len();
+        assert!(s.set_node_ready("n1", true, 1.0, "noop"));
+        assert_eq!(s.events().len(), before, "no event for a no-op flip");
+        assert!(s.set_node_ready("n1", false, 2.0, "cordoned"));
+        assert!(!s.node("n1").unwrap().ready);
+        assert_eq!(s.events().len(), before + 1);
+        assert_eq!(s.events().last().unwrap().kind, EventKind::NodeModified);
+        assert!(!s.set_node_ready("ghost", false, 3.0, "x"));
     }
 
     #[test]

@@ -12,7 +12,8 @@
 //!   deduplicating backup — [`storage`]), a Snakemake-like workflow engine
 //!   ([`workflow`]), Prometheus-like monitoring and accounting
 //!   ([`monitoring`]), and a Virtual-Kubelet/InterLink offloading layer
-//!   federating HTCondor/SLURM/Podman site simulators ([`offload`]).
+//!   federating HTCondor/SLURM/Podman site simulators ([`offload`]) with
+//!   per-site health tracking and a circuit breaker ([`offload::health`]).
 //! * **Layer 2 / Layer 1 (build time, `python/`)** — the user workload: a
 //!   transformer LM with Pallas flash-attention / fused-MLP kernels, lowered
 //!   AOT to HLO text artifacts.
@@ -41,6 +42,31 @@
 //! (`platform::facade::Platform`) keeps its subsystem state crate-private;
 //! the few remaining public fields are leaf services (registry, NFS, TSDB,
 //! config) with no control-plane semantics.
+//!
+//! ## Chaos + resilience
+//!
+//! Failure is the normal case for a federation spanning WLCG sites and an
+//! HPC center, so the platform ships a chaos subsystem and the controller
+//! that heals what it breaks:
+//!
+//! * [`sim::chaos`] — a fault-injection engine driven by the seeded sim
+//!   RNG: site outages/recoveries, InterLink wire errors (timeouts,
+//!   dropped responses), remote job crashes, local node flaps and GPU
+//!   ECC/MIG degradation, all applied at tick boundaries so a scenario is
+//!   bit-reproducible from its seed ([`sim::chaos::ChaosPlan`]).
+//! * [`offload::health`] — per-site rolling failure windows and a circuit
+//!   breaker (closed → open → half-open probe → closed) consulted by
+//!   offload placement.
+//! * The facade's retry/reschedule controller — quarantined or failed
+//!   remote workloads are requeued through Kueue (fresh pod incarnation on
+//!   a healthy site) under a per-workload
+//!   [`RestartPolicy`](platform::RestartPolicy) budget, and everything
+//!   surfaces as typed `Condition`s and `Modified` watch events on the
+//!   `Pod`/`Site` resources.
+//!
+//! `examples/chaos_federation.rs` walks a Leonardo outage end to end:
+//! breaker opens, workloads reroute to HTCondor sites, probes close the
+//! breaker, zero terminal failures.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for measured results.

@@ -1,0 +1,374 @@
+//! Per-site health tracking: rolling failure windows and a circuit breaker
+//! with half-open probes.
+//!
+//! Borg/Kubernetes-lineage systems treat remote failure as the normal case:
+//! a federation site that stops answering InterLink calls must be *detected*
+//! (consecutive wire failures cross a threshold), *quarantined* (the breaker
+//! opens and placement stops routing work there), *probed* (after a cooldown
+//! the breaker goes half-open and a single lightweight request tests the
+//! site) and *reintegrated* (a successful probe closes the breaker). The
+//! [`HealthTracker`] implements exactly that state machine per site; the
+//! platform facade consults [`allows`](HealthTracker::allows) on every
+//! offload placement and feeds wire outcomes back after every sync pass.
+//!
+//! Every state change is appended to a bounded transition log with a cursor
+//! API (same idiom as the Kueue transition log), which the API server pumps
+//! into the watch stream as `Modified` events on `Site` resources — watchers
+//! observe `Degraded → Probing → Healthy` without polling.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::sim::clock::Time;
+
+/// Externally visible site condition (projected onto the `Site` resource).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthStatus {
+    /// Breaker closed: the site accepts new work.
+    Healthy,
+    /// Breaker open: the site is quarantined, nothing is routed there.
+    Degraded,
+    /// Breaker half-open: a probe is testing whether the site recovered.
+    Probing,
+}
+
+impl HealthStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthStatus::Healthy => "Healthy",
+            HealthStatus::Degraded => "Degraded",
+            HealthStatus::Probing => "Probing",
+        }
+    }
+}
+
+/// One site health state change, appended to the transition log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthTransition {
+    pub at: Time,
+    pub site: String,
+    pub status: HealthStatus,
+    pub reason: String,
+}
+
+/// Circuit breaker state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Breaker {
+    Closed,
+    Open { until: Time },
+    HalfOpen,
+}
+
+#[derive(Debug)]
+struct SiteHealth {
+    breaker: Breaker,
+    consecutive_failures: u32,
+    /// (time, ok) wire-call samples within the rolling window.
+    window: VecDeque<(Time, bool)>,
+    /// Times the breaker has opened; escalates the cooldown.
+    trips: u32,
+}
+
+impl SiteHealth {
+    fn new() -> SiteHealth {
+        SiteHealth {
+            breaker: Breaker::Closed,
+            consecutive_failures: 0,
+            window: VecDeque::new(),
+            trips: 0,
+        }
+    }
+}
+
+/// Retained health transitions (older entries pruned; cursor consumers
+/// tolerate gaps like a Kubernetes watch restart).
+const MAX_TRANSITIONS: usize = 100_000;
+
+/// The per-site health tracker + circuit breaker.
+#[derive(Debug)]
+pub struct HealthTracker {
+    sites: HashMap<String, SiteHealth>,
+    /// Consecutive wire failures that open the breaker.
+    pub failure_threshold: u32,
+    /// Rolling sample window (seconds) for [`failure_rate`](Self::failure_rate).
+    pub window: Time,
+    /// Open→half-open cooldown; doubles per consecutive trip (capped 8×).
+    pub cooldown_base: Time,
+    transitions: VecDeque<HealthTransition>,
+    transitions_base: usize,
+}
+
+impl Default for HealthTracker {
+    fn default() -> Self {
+        HealthTracker::new()
+    }
+}
+
+impl HealthTracker {
+    pub fn new() -> HealthTracker {
+        HealthTracker {
+            sites: HashMap::new(),
+            failure_threshold: 3,
+            window: 600.0,
+            cooldown_base: 120.0,
+            transitions: VecDeque::new(),
+            transitions_base: 0,
+        }
+    }
+
+    /// Pre-register a site (so `status` answers before any sample arrives).
+    pub fn register(&mut self, site: &str) {
+        self.sites.entry(site.to_string()).or_insert_with(SiteHealth::new);
+    }
+
+    fn log(&mut self, at: Time, site: &str, status: HealthStatus, reason: &str) {
+        self.transitions.push_back(HealthTransition {
+            at,
+            site: site.to_string(),
+            status,
+            reason: reason.to_string(),
+        });
+        while self.transitions.len() > MAX_TRANSITIONS {
+            self.transitions.pop_front();
+            self.transitions_base += 1;
+        }
+    }
+
+    /// Record a successful wire call. Resets the consecutive-failure count;
+    /// a success while half-open closes the breaker (the site healed).
+    pub fn record_success(&mut self, site: &str, now: Time) {
+        let window = self.window;
+        let closed = {
+            let s = self.sites.entry(site.to_string()).or_insert_with(SiteHealth::new);
+            s.window.push_back((now, true));
+            while s.window.front().map(|(t, _)| now - *t > window).unwrap_or(false) {
+                s.window.pop_front();
+            }
+            s.consecutive_failures = 0;
+            if matches!(s.breaker, Breaker::HalfOpen) {
+                s.breaker = Breaker::Closed;
+                s.trips = 0;
+                true
+            } else {
+                false
+            }
+        };
+        if closed {
+            self.log(now, site, HealthStatus::Healthy, "probe succeeded");
+        }
+    }
+
+    /// Record a failed wire call. Returns `true` when this failure opened
+    /// (or re-opened) the breaker — the caller's cue to quarantine the site.
+    pub fn record_failure(&mut self, site: &str, now: Time) -> bool {
+        let window = self.window;
+        let threshold = self.failure_threshold;
+        let cooldown_base = self.cooldown_base;
+        let opened = {
+            let s = self.sites.entry(site.to_string()).or_insert_with(SiteHealth::new);
+            s.window.push_back((now, false));
+            while s.window.front().map(|(t, _)| now - *t > window).unwrap_or(false) {
+                s.window.pop_front();
+            }
+            s.consecutive_failures += 1;
+            match s.breaker {
+                Breaker::Closed if s.consecutive_failures >= threshold => {
+                    let cooldown = cooldown_base * (1u32 << s.trips.min(3)) as f64;
+                    s.breaker = Breaker::Open { until: now + cooldown };
+                    s.trips += 1;
+                    Some("failure threshold crossed")
+                }
+                Breaker::HalfOpen => {
+                    let cooldown = cooldown_base * (1u32 << s.trips.min(3)) as f64;
+                    s.breaker = Breaker::Open { until: now + cooldown };
+                    s.trips += 1;
+                    Some("probe failed")
+                }
+                _ => None,
+            }
+        };
+        match opened {
+            Some(reason) => {
+                self.log(now, site, HealthStatus::Degraded, reason);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Placement gate: only closed-breaker sites accept new work. Unknown
+    /// sites are healthy by default.
+    pub fn allows(&self, site: &str) -> bool {
+        match self.sites.get(site) {
+            None => true,
+            Some(s) => matches!(s.breaker, Breaker::Closed),
+        }
+    }
+
+    /// Half-open transition: once an open site's cooldown elapses the
+    /// breaker moves to half-open and the caller should issue a probe.
+    /// Returns `true` while a probe is due (newly or still half-open).
+    pub fn due_probe(&mut self, site: &str, now: Time) -> bool {
+        let became = {
+            let Some(s) = self.sites.get_mut(site) else { return false };
+            match s.breaker {
+                Breaker::Open { until } if now >= until => {
+                    s.breaker = Breaker::HalfOpen;
+                    Some(true)
+                }
+                Breaker::HalfOpen => Some(false),
+                _ => None,
+            }
+        };
+        match became {
+            Some(true) => {
+                self.log(now, site, HealthStatus::Probing, "cooldown elapsed");
+                true
+            }
+            Some(false) => true,
+            None => false,
+        }
+    }
+
+    pub fn status(&self, site: &str) -> HealthStatus {
+        match self.sites.get(site).map(|s| s.breaker) {
+            None | Some(Breaker::Closed) => HealthStatus::Healthy,
+            Some(Breaker::Open { .. }) => HealthStatus::Degraded,
+            Some(Breaker::HalfOpen) => HealthStatus::Probing,
+        }
+    }
+
+    /// Failure share within the rolling window (0.0 with no samples).
+    pub fn failure_rate(&self, site: &str, now: Time) -> f64 {
+        let Some(s) = self.sites.get(site) else { return 0.0 };
+        let mut total = 0usize;
+        let mut bad = 0usize;
+        for (t, ok) in &s.window {
+            if now - *t <= self.window {
+                total += 1;
+                if !*ok {
+                    bad += 1;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            bad as f64 / total as f64
+        }
+    }
+
+    /// Absolute cursor just past the newest transition.
+    pub fn transition_cursor(&self) -> usize {
+        self.transitions_base + self.transitions.len()
+    }
+
+    /// Transitions recorded at or after `cursor` (watch-stream feed).
+    pub fn transitions_since(&self, cursor: usize) -> impl Iterator<Item = &HealthTransition> {
+        self.transitions.iter().skip(cursor.saturating_sub(self.transitions_base))
+    }
+
+    /// The site's most recent transition, if any (Condition timestamps).
+    pub fn last_transition(&self, site: &str) -> Option<&HealthTransition> {
+        self.transitions.iter().rev().find(|t| t.site == site)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_site_is_healthy_and_allowed() {
+        let h = HealthTracker::new();
+        assert!(h.allows("nowhere"));
+        assert_eq!(h.status("nowhere"), HealthStatus::Healthy);
+        assert_eq!(h.failure_rate("nowhere", 100.0), 0.0);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_consecutive_failures() {
+        let mut h = HealthTracker::new();
+        h.register("leo");
+        assert!(!h.record_failure("leo", 1.0));
+        assert!(!h.record_failure("leo", 2.0));
+        assert!(h.record_failure("leo", 3.0), "third consecutive failure trips");
+        assert_eq!(h.status("leo"), HealthStatus::Degraded);
+        assert!(!h.allows("leo"));
+        // further failures while open do not re-trip
+        assert!(!h.record_failure("leo", 4.0));
+    }
+
+    #[test]
+    fn success_resets_consecutive_count() {
+        let mut h = HealthTracker::new();
+        h.record_failure("t1", 1.0);
+        h.record_failure("t1", 2.0);
+        h.record_success("t1", 3.0);
+        assert!(!h.record_failure("t1", 4.0));
+        assert!(!h.record_failure("t1", 5.0));
+        assert!(h.record_failure("t1", 6.0));
+    }
+
+    #[test]
+    fn halfopen_probe_success_closes_breaker() {
+        let mut h = HealthTracker::new();
+        for t in 0..3 {
+            h.record_failure("leo", t as f64);
+        }
+        assert_eq!(h.status("leo"), HealthStatus::Degraded);
+        // before cooldown (120s) no probe is due
+        assert!(!h.due_probe("leo", 50.0));
+        // after cooldown: half-open, probe due
+        assert!(h.due_probe("leo", 130.0));
+        assert_eq!(h.status("leo"), HealthStatus::Probing);
+        h.record_success("leo", 131.0);
+        assert_eq!(h.status("leo"), HealthStatus::Healthy);
+        assert!(h.allows("leo"));
+    }
+
+    #[test]
+    fn probe_failure_reopens_with_escalated_cooldown() {
+        let mut h = HealthTracker::new();
+        for t in 0..3 {
+            h.record_failure("leo", t as f64);
+        }
+        assert!(h.due_probe("leo", 125.0));
+        // probe fails: re-open immediately (single failure, no threshold)
+        assert!(h.record_failure("leo", 126.0));
+        assert_eq!(h.status("leo"), HealthStatus::Degraded);
+        // second trip doubles the cooldown: not due at +130, due at +250
+        assert!(!h.due_probe("leo", 126.0 + 130.0));
+        assert!(h.due_probe("leo", 126.0 + 250.0));
+    }
+
+    #[test]
+    fn rolling_window_prunes_old_samples() {
+        let mut h = HealthTracker::new();
+        h.record_failure("s", 0.0);
+        h.record_success("s", 1.0);
+        assert!((h.failure_rate("s", 1.0) - 0.5).abs() < 1e-9);
+        // 700s later both samples are outside the 600s window
+        h.record_success("s", 700.0);
+        assert!((h.failure_rate("s", 700.0) - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transitions_log_with_cursor() {
+        let mut h = HealthTracker::new();
+        let c0 = h.transition_cursor();
+        for t in 0..3 {
+            h.record_failure("a", t as f64);
+        }
+        h.due_probe("a", 200.0);
+        h.record_success("a", 201.0);
+        let states: Vec<HealthStatus> =
+            h.transitions_since(c0).map(|t| t.status).collect();
+        assert_eq!(
+            states,
+            vec![HealthStatus::Degraded, HealthStatus::Probing, HealthStatus::Healthy]
+        );
+        let c1 = h.transition_cursor();
+        assert!(h.transitions_since(c1).next().is_none());
+        assert_eq!(h.last_transition("a").unwrap().status, HealthStatus::Healthy);
+    }
+}

@@ -4,6 +4,7 @@
 //! and a Podman container host — reproducing the paper's §3 federation.
 
 pub mod backend;
+pub mod health;
 pub mod htcondor;
 pub mod interlink;
 pub mod podman;
@@ -12,6 +13,7 @@ pub mod slurm;
 pub mod vk;
 
 pub use backend::SiteBackend;
+pub use health::{HealthStatus, HealthTracker};
 pub use htcondor::HtcondorPool;
 pub use interlink::{RemoteState, Request, Response, WirePod};
 pub use podman::PodmanHost;

@@ -98,6 +98,17 @@ pub struct VirtualKubelet {
     last_states: HashMap<String, RemoteState>,
     /// Round trips performed (for the InterLink overhead metric).
     pub round_trips: u64,
+    /// Chaos: site outage — every wire call fails while set.
+    offline: bool,
+    /// Chaos: the next N calls time out before reaching the site.
+    inject_timeouts: u32,
+    /// Chaos: the next N calls reach the site but the response is lost.
+    inject_drops: u32,
+    /// Chaos: fail N tracked remote jobs on the next sync (GPU ECC etc.).
+    inject_pod_failures: u32,
+    /// Wire outcome counters since the last `take_wire_stats` (health feed).
+    wire_successes: u32,
+    wire_failures: u32,
 }
 
 impl VirtualKubelet {
@@ -111,6 +122,12 @@ impl VirtualKubelet {
             pod_jobs: HashMap::new(),
             last_states: HashMap::new(),
             round_trips: 0,
+            offline: false,
+            inject_timeouts: 0,
+            inject_drops: 0,
+            inject_pod_failures: 0,
+            wire_successes: 0,
+            wire_failures: 0,
         }
     }
 
@@ -119,11 +136,81 @@ impl VirtualKubelet {
         self.sidecar.backend().capacity()
     }
 
+    // ------------------------------------------------------ fault injection
+
+    /// Site outage on/off: while offline every wire call fails.
+    pub fn set_offline(&mut self, offline: bool) {
+        self.offline = offline;
+    }
+
+    pub fn is_offline(&self) -> bool {
+        self.offline
+    }
+
+    /// Time out the next `n` wire calls before they reach the site.
+    pub fn inject_timeouts(&mut self, n: u32) {
+        self.inject_timeouts += n;
+    }
+
+    /// Drop the response of the next `n` wire calls (the site still acts).
+    pub fn inject_drops(&mut self, n: u32) {
+        self.inject_drops += n;
+    }
+
+    /// Fail `n` tracked remote jobs on the next sync pass.
+    pub fn inject_job_failures(&mut self, n: u32) {
+        self.inject_pod_failures += n;
+    }
+
+    /// (successes, failures) of wire calls since the last take — the
+    /// facade feeds these into the per-site health tracker each tick.
+    pub fn take_wire_stats(&mut self) -> (u32, u32) {
+        let s = (self.wire_successes, self.wire_failures);
+        self.wire_successes = 0;
+        self.wire_failures = 0;
+        s
+    }
+
+    /// Drop local tracking of a pod without a remote call (used when the
+    /// site is unreachable and the pod is being rerouted elsewhere).
+    pub fn forget_pod(&mut self, pod: &str) {
+        self.pod_jobs.remove(pod);
+        self.last_states.remove(pod);
+    }
+
+    /// Names of pods currently tracked on this virtual node.
+    pub fn tracked_pods(&self) -> Vec<String> {
+        self.pod_jobs.keys().cloned().collect()
+    }
+
+    /// Lightweight reachability probe (half-open circuit breaker): any
+    /// decoded response — even a 404 for the synthetic job id — proves the
+    /// site answers.
+    pub fn probe(&mut self, at: Time) -> bool {
+        self.call(Request::Status { job: "health-probe".into(), token: self.token.clone() }, at)
+            .is_ok()
+    }
+
     fn call(&mut self, req: Request, at: Time) -> anyhow::Result<Response> {
         self.round_trips += 1;
+        if self.offline {
+            self.wire_failures += 1;
+            anyhow::bail!("interlink timeout: site {} unreachable", self.site);
+        }
+        if self.inject_timeouts > 0 {
+            self.inject_timeouts -= 1;
+            self.wire_failures += 1;
+            anyhow::bail!("interlink timeout: request to {} timed out", self.site);
+        }
         // request arrives at the site after one-way latency
         let wire = req.encode();
         let raw = self.sidecar.handle(&wire, at + self.wan_latency);
+        if self.inject_drops > 0 {
+            self.inject_drops -= 1;
+            self.wire_failures += 1;
+            anyhow::bail!("interlink error: response from {} dropped", self.site);
+        }
+        self.wire_successes += 1;
         Response::decode(&raw)
     }
 
@@ -168,9 +255,23 @@ impl VirtualKubelet {
 
     /// Poll every tracked pod; returns state *transitions* since last sync.
     pub fn sync(&mut self, at: Time) -> Vec<PodUpdate> {
-        let pods: Vec<(String, JobId)> =
-            self.pod_jobs.iter().map(|(p, j)| (p.clone(), j.clone())).collect();
         let mut updates = Vec::new();
+        // chaos: injected remote job crashes (GPU ECC, site-side node
+        // failure) surface as Failed; the remote job is cancelled so the
+        // site frees its slot.
+        while self.inject_pod_failures > 0 {
+            let Some(pod) = self.pod_jobs.keys().min().cloned() else { break };
+            self.inject_pod_failures -= 1;
+            if let Some(job) = self.pod_jobs.remove(&pod) {
+                let _ = self.call(Request::Delete { job, token: self.token.clone() }, at);
+            }
+            self.last_states.remove(&pod);
+            updates.push(PodUpdate { pod, state: RemoteState::Failed });
+        }
+        // deterministic poll order (HashMap iteration order is per-process)
+        let mut pods: Vec<(String, JobId)> =
+            self.pod_jobs.iter().map(|(p, j)| (p.clone(), j.clone())).collect();
+        pods.sort_by(|a, b| a.0.cmp(&b.0));
         for (pod, job) in pods {
             let resp = self.call(Request::Status { job, token: self.token.clone() }, at);
             if let Ok(Response::Status { state, .. }) = resp {
@@ -261,5 +362,70 @@ mod tests {
     fn capacity_reflects_backend() {
         let v = vk();
         assert_eq!(v.capacity().get(CPU), 16_000);
+    }
+
+    #[test]
+    fn offline_fails_calls_and_probe_detects_recovery() {
+        let mut v = vk();
+        v.set_offline(true);
+        assert!(v.create_pod(&spec("p1"), 10.0, 0.0).is_err());
+        assert!(!v.probe(1.0));
+        let (ok, fail) = v.take_wire_stats();
+        assert_eq!((ok, fail), (0, 2));
+        v.set_offline(false);
+        assert!(v.probe(2.0));
+        let (ok, fail) = v.take_wire_stats();
+        assert_eq!((ok, fail), (1, 0));
+    }
+
+    #[test]
+    fn injected_timeouts_fail_then_clear() {
+        let mut v = vk();
+        v.inject_timeouts(1);
+        let err = v.create_pod(&spec("p1"), 10.0, 0.0).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert_eq!(v.tracked(), 0);
+        // next call goes through
+        v.create_pod(&spec("p1"), 10.0, 1.0).unwrap();
+        assert_eq!(v.tracked(), 1);
+    }
+
+    #[test]
+    fn dropped_response_loses_tracking_but_site_acted() {
+        let mut v = vk();
+        v.inject_drops(1);
+        assert!(v.create_pod(&spec("p1"), 1e6, 0.0).is_err());
+        assert_eq!(v.tracked(), 0, "VK must not track a job it never heard about");
+        // the orphan job occupies remote capacity, but the pool still has
+        // room for a second (tracked) submission
+        v.create_pod(&spec("p2"), 10.0, 1.0).unwrap();
+        let ups = v.sync(400.0);
+        assert!(ups.iter().any(|u| u.pod == "p2" && u.state == RemoteState::Completed));
+    }
+
+    #[test]
+    fn injected_job_failure_reports_failed_and_frees_slot() {
+        let mut v = vk();
+        v.create_pod(&spec("p1"), 1e6, 0.0).unwrap();
+        v.sync(120.0); // running
+        v.inject_job_failures(1);
+        let ups = v.sync(130.0);
+        assert_eq!(ups, vec![PodUpdate { pod: "p1".into(), state: RemoteState::Failed }]);
+        assert_eq!(v.tracked(), 0);
+        // slot freed: a fresh job runs to completion
+        v.create_pod(&spec("p2"), 10.0, 140.0).unwrap();
+        let ups = v.sync(400.0);
+        assert!(ups.iter().any(|u| u.pod == "p2" && u.state == RemoteState::Completed));
+    }
+
+    #[test]
+    fn forget_pod_drops_tracking_without_wire_calls() {
+        let mut v = vk();
+        v.create_pod(&spec("p1"), 100.0, 0.0).unwrap();
+        let before = v.round_trips;
+        v.forget_pod("p1");
+        assert_eq!(v.tracked(), 0);
+        assert_eq!(v.round_trips, before);
+        assert_eq!(v.tracked_pods(), Vec::<String>::new());
     }
 }

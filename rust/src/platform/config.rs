@@ -28,6 +28,9 @@ pub struct PlatformConfig {
     pub a30_layout: Vec<MigProfile>,
     pub interactive_share: f64,
     pub backoff_base: f64,
+    /// Default restart budget for batch jobs whose pods fail remotely
+    /// (`RestartPolicy::OnFailure { max_retries }`).
+    pub max_remote_retries: u32,
     pub idle_timeout: f64,
     pub token_ttl: f64,
     pub users: usize,
@@ -97,6 +100,10 @@ impl PlatformConfig {
             a30_layout: parse_layout("default_a30_layout"),
             interactive_share: j.at(&["queues", "interactive_share"]).and_then(Json::as_f64).unwrap_or(0.6),
             backoff_base: j.at(&["queues", "backoff_base_seconds"]).and_then(Json::as_f64).unwrap_or(30.0),
+            max_remote_retries: j
+                .at(&["queues", "max_remote_retries"])
+                .and_then(Json::as_i64)
+                .unwrap_or(4) as u32,
             idle_timeout: j.at(&["hub", "idle_timeout_hours"]).and_then(Json::as_f64).unwrap_or(2.0) * 3600.0,
             token_ttl: j.at(&["hub", "token_ttl_hours"]).and_then(Json::as_f64).unwrap_or(12.0) * 3600.0,
             users: j.at(&["hub", "users"]).and_then(Json::as_i64).unwrap_or(78) as usize,

@@ -8,6 +8,14 @@
 //! idle-session culling, and monitoring scrapes. `run_for()` interleaves
 //! ticks with the event engine so multi-day campaigns run in milliseconds
 //! while remaining event-accurate.
+//!
+//! The tick also hosts the **self-healing offload controller**: chaos
+//! faults due at the tick boundary are applied ([`crate::sim::chaos`]),
+//! wire outcomes feed the per-site circuit breaker
+//! ([`crate::offload::health`]), quarantined sites are cordoned and their
+//! workloads requeued through Kueue (fresh pod incarnation on a healthy
+//! site once readmitted), and remotely-failed workloads retry under their
+//! [`RestartPolicy`] budget instead of failing terminally.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -16,8 +24,8 @@ use std::rc::Rc;
 use crate::cluster::kubelet::{default_oracle, Kubelet};
 use crate::cluster::pod::{Payload, PodPhase, PodSpec};
 use crate::cluster::resources::{ResourceVec, MEMORY};
-use crate::cluster::scheduler::Scheduler;
-use crate::cluster::store::ClusterStore;
+use crate::cluster::scheduler::{Scheduler, Unschedulable};
+use crate::cluster::store::{ClusterStore, EventKind};
 use crate::gpu::dcgm::DcgmSimulator;
 use crate::hub::auth::AuthService;
 use crate::hub::profiles::Profile;
@@ -25,16 +33,31 @@ use crate::hub::spawner::{SpawnCtx, SpawnError, Spawner};
 use crate::hub::users::Registry;
 use crate::monitoring::exporters;
 use crate::monitoring::tsdb::Tsdb;
+use crate::offload::health::{HealthStatus, HealthTracker};
 use crate::offload::sites::paper_federation;
 use crate::offload::vk::VirtualKubelet;
 use crate::offload::RemoteState;
 use crate::platform::config::PlatformConfig;
 use crate::queue::kueue::{ClusterQueue, Kueue, LocalQueue, PriorityClass, WorkloadState};
+use crate::sim::chaos::{ChaosEngine, ChaosPlan, Fault};
 use crate::sim::clock::{SimClock, Time};
 use crate::sim::engine::Engine;
 use crate::storage::nfs::NfsServer;
 use crate::storage::object::ObjectStore;
 use crate::util::IdGen;
+
+/// What the reschedule controller does when a workload's pod *fails*
+/// (remote job crash, site-reported failure): give up, or requeue through
+/// Kueue with backoff up to a retry budget. Evictions that are not the
+/// job's fault (preemption, node failure, site quarantine) never consume
+/// the budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RestartPolicy {
+    /// A failed pod terminally fails the workload.
+    Never,
+    /// Requeue through Kueue with backoff, at most `max_retries` times.
+    OnFailure { max_retries: u32 },
+}
 
 /// A batch job registered with the platform (pre- or post-admission).
 /// Crate-visible so the API server can project it as a `BatchJob` resource.
@@ -48,9 +71,13 @@ pub(crate) struct BatchJob {
     pub(crate) live_pod: Option<String>,
     pub(crate) offloadable: bool,
     pub(crate) duration: Time,
+    pub(crate) restart_policy: RestartPolicy,
+    /// failure retries consumed against the restart budget
+    pub(crate) retries: u32,
 }
 
-/// Spawn-latency and eviction counters (E3's metrics).
+/// Spawn-latency and eviction counters (E3's metrics), plus the resilience
+/// controller's counters.
 #[derive(Debug, Default, Clone)]
 pub struct PlatformMetrics {
     pub interactive_spawn_latencies: Vec<Time>,
@@ -59,6 +86,18 @@ pub struct PlatformMetrics {
     pub offloaded_pods: u64,
     pub local_completions: u64,
     pub remote_completions: u64,
+    /// Scheduler placement failures recorded (deduped per pod+reason — the
+    /// `_failed` half of the placement result is no longer discarded).
+    pub failed_placements: u64,
+    /// Workloads bounced back into Kueue by a node failure, site
+    /// quarantine, or InterLink create failure (not budgeted).
+    pub failure_requeues: u64,
+    /// Workloads requeued after a remote pod *failure* (budgeted retries).
+    pub remote_retries: u64,
+    /// Times a site circuit breaker opened.
+    pub breaker_trips: u64,
+    /// Workloads that exhausted their restart budget and failed terminally.
+    pub terminal_failures: u64,
 }
 
 /// The assembled platform.
@@ -92,6 +131,16 @@ pub struct Platform {
     scrape_interval: Time,
     /// Last monitoring scrape; `None` until the first scrape fires.
     last_scrape: Option<Time>,
+    /// Per-site health + circuit breaker (crate-visible: the API server
+    /// projects it onto `Site` resources and pumps its transitions).
+    pub(crate) health: HealthTracker,
+    /// Installed fault schedule, if any; drained at each tick boundary.
+    pub(crate) chaos: Option<ChaosEngine>,
+    /// Last-reported unschedulable reason per pod (event-log dedup).
+    unschedulable_seen: HashMap<String, String>,
+    /// Accelerator units removed by GPU-degradation faults, keyed by
+    /// (node, resource) — recovery restores exactly what was taken.
+    degraded: HashMap<(String, String), i64>,
 }
 
 impl Platform {
@@ -175,6 +224,10 @@ impl Platform {
         let kubelet = Kubelet::new(store.clone(), default_oracle());
         let vk_index: HashMap<String, usize> =
             vks.iter().enumerate().map(|(i, vk)| (vk.node_name.clone(), i)).collect();
+        let mut health = HealthTracker::new();
+        for vk in &vks {
+            health.register(&vk.site);
+        }
         Ok(Platform {
             engine,
             store,
@@ -196,6 +249,10 @@ impl Platform {
             ids: IdGen::new(),
             batch_jobs: HashMap::new(),
             vk_index,
+            health,
+            chaos: None,
+            unschedulable_seen: HashMap::new(),
+            degraded: HashMap::new(),
         })
     }
 
@@ -239,6 +296,8 @@ impl Platform {
     }
 
     /// Submit a batch job. `offloadable` jobs may run on federation sites.
+    /// Uses the config's default restart policy
+    /// (`OnFailure { max_retries: queues.max_remote_retries }`).
     pub fn submit_batch(
         &mut self,
         user: &str,
@@ -247,6 +306,22 @@ impl Platform {
         duration: Time,
         priority: PriorityClass,
         offloadable: bool,
+    ) -> anyhow::Result<String> {
+        let policy = RestartPolicy::OnFailure { max_retries: self.config.max_remote_retries };
+        self.submit_batch_with_policy(user, project, requests, duration, priority, offloadable, policy)
+    }
+
+    /// Submit a batch job with an explicit [`RestartPolicy`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_batch_with_policy(
+        &mut self,
+        user: &str,
+        project: &str,
+        requests: ResourceVec,
+        duration: Time,
+        priority: PriorityClass,
+        offloadable: bool,
+        restart_policy: RestartPolicy,
     ) -> anyhow::Result<String> {
         let at = self.engine.now();
         let name = self.ids.next("job");
@@ -273,9 +348,66 @@ impl Platform {
                 live_pod: None,
                 offloadable,
                 duration,
+                restart_policy,
+                retries: 0,
             },
         );
         Ok(wl)
+    }
+
+    // ------------------------------------------------------------- chaos
+
+    /// Install a pre-built fault schedule; due faults are applied at every
+    /// tick boundary.
+    pub fn set_chaos(&mut self, engine: ChaosEngine) {
+        self.chaos = Some(engine);
+    }
+
+    /// Generate and install a chaos schedule from `plan`, targeting the
+    /// current federation sites, physical nodes, and their accelerators.
+    pub fn install_chaos(&mut self, plan: &ChaosPlan) {
+        let sites: Vec<String> = self.vks.iter().map(|v| v.site.clone()).collect();
+        let (nodes, gpus) = {
+            let st = self.store.borrow();
+            let mut nodes = Vec::new();
+            let mut gpus = Vec::new();
+            for n in st.nodes() {
+                if n.virtual_node {
+                    continue;
+                }
+                nodes.push(n.name.clone());
+                for (k, v) in n.allocatable.iter() {
+                    if k.starts_with("nvidia.com/") && v > 0 {
+                        gpus.push((n.name.clone(), k.to_string()));
+                    }
+                }
+            }
+            (nodes, gpus)
+        };
+        self.chaos = Some(plan.generate(&sites, &nodes, &gpus));
+    }
+
+    /// The installed chaos engine (its log is the scenario trace).
+    pub fn chaos(&self) -> Option<&ChaosEngine> {
+        self.chaos.as_ref()
+    }
+
+    /// Per-site health tracker (read-only).
+    pub fn health(&self) -> &HealthTracker {
+        &self.health
+    }
+
+    /// Current health condition of a federation site.
+    pub fn site_health(&self, site: &str) -> HealthStatus {
+        self.health.status(site)
+    }
+
+    /// Kueue workload transitions at or after `cursor` (trace assembly).
+    pub fn workload_transitions_since(
+        &self,
+        cursor: usize,
+    ) -> Vec<crate::queue::kueue::WorkloadTransition> {
+        self.kueue.transitions_since(cursor).cloned().collect()
     }
 
     /// Convenience: an ML training job priced by the cost model (sim mode).
@@ -319,12 +451,21 @@ impl Platform {
         let now = self.engine.now();
         self.auth.set_now(now);
 
+        // 0. chaos: apply scheduled faults that are now due
+        let due: Vec<Fault> = match self.chaos.as_mut() {
+            Some(c) => c.due(now),
+            None => Vec::new(),
+        };
+        for f in due {
+            self.apply_fault(f, now);
+        }
+
         // 1. Kueue admission. Preemption may also have happened outside the
         // tick (the spawner runs an admit pass synchronously at spawn time),
         // so reconcile generically: any batch job whose workload is no
         // longer Admitted must not have a live pod.
         let result = self.kueue.admit_pass(now);
-        let to_evict: Vec<(String, String)> = self
+        let mut to_evict: Vec<(String, String)> = self
             .batch_jobs
             .values()
             .filter_map(|j| {
@@ -341,6 +482,7 @@ impl Platform {
                 }
             })
             .collect();
+        to_evict.sort(); // HashMap iteration order is not deterministic
         for (wl, pod) in to_evict {
             let live = {
                 let st = self.store.borrow();
@@ -383,13 +525,34 @@ impl Platform {
             self.store.borrow_mut().create_pod(spec, now);
         }
 
-        // 3. scheduling pass
-        let (placed, _failed) = {
+        // 3. scheduling pass; failed placements are recorded (deduped per
+        // pod+reason) in the metrics and the cluster event log
+        let (placed, failed) = {
             let mut st = self.store.borrow_mut();
             self.scheduler.schedule_pending(&mut st, now)
         };
+        for (pod, why) in &failed {
+            let reason = match why {
+                Unschedulable::NoFeasibleNode => "NoFeasibleNode",
+                Unschedulable::InsufficientCapacity => "InsufficientCapacity",
+            };
+            if self.unschedulable_seen.get(pod.as_str()).map(String::as_str) != Some(reason) {
+                self.unschedulable_seen.insert(pod.clone(), reason.to_string());
+                self.metrics.failed_placements += 1;
+                self.store.borrow_mut().record(
+                    now,
+                    EventKind::PodUnschedulable,
+                    pod,
+                    &format!("unschedulable: {reason}"),
+                );
+            }
+        }
+        for pod in &placed {
+            self.unschedulable_seen.remove(pod);
+        }
 
-        // 4. launch placed pods: local kubelet or VK forward
+        // 4. launch placed pods: local kubelet or VK forward (gated on the
+        // site's circuit breaker)
         for pod_name in placed {
             let (node, spec, is_session) = {
                 let st = self.store.borrow();
@@ -415,19 +578,26 @@ impl Platform {
                 .map(|n| n.virtual_node)
                 .unwrap_or(false);
             if is_virtual {
+                let Some(vi) = self.vk_index.get(&node).copied() else { continue };
+                let site = self.vks[vi].site.clone();
+                if !self.health.allows(&site) {
+                    // placement raced the breaker opening: bounce the
+                    // workload back through Kueue instead of launching
+                    self.requeue_failed_remote(&pod_name, now, "site quarantined");
+                    continue;
+                }
                 let duration = match &spec.payload {
                     Payload::Sleep { duration } => *duration,
                     Payload::Session { idle_after } => *idle_after,
                     Payload::MlJob { steps, .. } => *steps as f64 * 0.5,
                     Payload::Burn { flops } => flops / 1e12,
                 };
-                if let Some(vk) = self.vk_index.get(&node).map(|&i| &mut self.vks[i]) {
-                    if vk.create_pod(&spec, duration, now).is_ok() {
-                        self.metrics.offloaded_pods += 1;
-                    } else {
-                        let mut st = self.store.borrow_mut();
-                        st.evict_pod(&pod_name, now, true, "interlink create failed").ok();
-                    }
+                if self.vks[vi].create_pod(&spec, duration, now).is_ok() {
+                    self.metrics.offloaded_pods += 1;
+                } else {
+                    // wire failure feeds the breaker via take_wire_stats;
+                    // the workload requeues for a healthy placement
+                    self.requeue_failed_remote(&pod_name, now, "interlink create failed");
                 }
             } else {
                 self.kubelet.launch(&mut self.engine, &pod_name);
@@ -461,14 +631,55 @@ impl Platform {
                     }
                 }
                 RemoteState::Failed => {
-                    st.finish_pod(&u.pod, PodPhase::Failed, now, "remote failed").ok();
+                    let live = st
+                        .pod(&u.pod)
+                        .map(|p| !p.status.phase.is_terminal())
+                        .unwrap_or(false);
+                    if live {
+                        st.finish_pod(&u.pod, PodPhase::Failed, now, "remote failed").ok();
+                    }
                 }
                 _ => {}
             }
         }
 
-        // 6. finished pods → finish workloads
-        let finished: Vec<(String, Option<String>)> = self
+        // 5b. site health: feed wire outcomes into the circuit breaker,
+        // quarantine sites whose breaker just opened, probe half-open ones
+        for i in 0..self.vks.len() {
+            let site = self.vks[i].site.clone();
+            let (ok, fail) = self.vks[i].take_wire_stats();
+            if ok > 0 {
+                self.health.record_success(&site, now);
+            }
+            for _ in 0..fail {
+                if self.health.record_failure(&site, now) {
+                    self.quarantine_site(i, now);
+                }
+            }
+            if self.health.due_probe(&site, now) {
+                let up = self.vks[i].probe(now);
+                let _ = self.vks[i].take_wire_stats(); // probe outcome recorded below
+                if up {
+                    self.health.record_success(&site, now);
+                    let node = self.vks[i].node_name.clone();
+                    self.store.borrow_mut().set_node_ready(
+                        &node,
+                        true,
+                        now,
+                        "site healthy: circuit breaker closed",
+                    );
+                } else if self.health.record_failure(&site, now) {
+                    // re-opened with an escalated cooldown; the virtual
+                    // node is already cordoned, but the trip still counts
+                    self.metrics.breaker_trips += 1;
+                }
+            }
+        }
+
+        // 6. finished pods → the retry/reschedule controller: succeeded
+        // workloads finish; failed ones retry under their RestartPolicy
+        // budget before failing terminally
+        let mut finished: Vec<(String, Option<String>)> = self
             .batch_jobs
             .values()
             .filter_map(|j| {
@@ -482,16 +693,50 @@ impl Platform {
                 }
             })
             .collect();
+        finished.sort(); // HashMap iteration order is not deterministic
         for (wl, pod) in finished {
-            // local-vs-remote completion accounting
+            let pod_failed = pod
+                .as_ref()
+                .map(|p| {
+                    self.store
+                        .borrow()
+                        .pod(p)
+                        .map(|pp| pp.status.phase == PodPhase::Failed)
+                        .unwrap_or(false)
+                })
+                .unwrap_or(false);
+            if pod_failed {
+                let allowed = match self.batch_jobs.get(&wl).map(|j| j.restart_policy) {
+                    Some(RestartPolicy::OnFailure { max_retries }) => {
+                        self.batch_jobs[&wl].retries < max_retries
+                    }
+                    _ => false,
+                };
+                if allowed {
+                    if let Some(j) = self.batch_jobs.get_mut(&wl) {
+                        j.retries += 1;
+                        j.live_pod = None;
+                    }
+                    self.metrics.remote_retries += 1;
+                    self.kueue.requeue(&wl, now).ok();
+                    continue;
+                }
+                self.metrics.terminal_failures += 1;
+            }
+            // local-vs-remote completion accounting (successes only;
+            // remote successes were counted at the sync transition)
             if let Some(pod) = &pod {
                 let st = self.store.borrow();
+                let succeeded = st
+                    .pod(pod)
+                    .map(|p| p.status.phase == PodPhase::Succeeded)
+                    .unwrap_or(false);
                 let remote = st
                     .pod(pod)
                     .and_then(|p| p.status.node.clone())
                     .and_then(|n| st.node(&n).map(|nd| nd.virtual_node))
                     .unwrap_or(false);
-                if !remote {
+                if succeeded && !remote {
                     self.metrics.local_completions += 1;
                 }
             }
@@ -534,6 +779,216 @@ impl Platform {
                 vk.delete_pod(pod, now).ok();
             }
         }
+    }
+
+    // ------------------------------------------------- fault application
+
+    /// The VK provider for a federation site (faults on unknown sites are
+    /// ignored — the schedule may outlive a truncated federation).
+    fn vk_by_site(&mut self, site: &str) -> Option<&mut VirtualKubelet> {
+        self.vks.iter_mut().find(|v| v.site == site)
+    }
+
+    fn apply_fault(&mut self, fault: Fault, now: Time) {
+        match fault {
+            Fault::SiteOutage { site } => {
+                if let Some(vk) = self.vk_by_site(&site) {
+                    vk.set_offline(true);
+                }
+            }
+            Fault::SiteRecovery { site } => {
+                if let Some(vk) = self.vk_by_site(&site) {
+                    vk.set_offline(false);
+                }
+            }
+            Fault::WireTimeouts { site, count } => {
+                if let Some(vk) = self.vk_by_site(&site) {
+                    vk.inject_timeouts(count);
+                }
+            }
+            Fault::WireDrops { site, count } => {
+                if let Some(vk) = self.vk_by_site(&site) {
+                    vk.inject_drops(count);
+                }
+            }
+            Fault::RemoteJobFailures { site, count } => {
+                if let Some(vk) = self.vk_by_site(&site) {
+                    vk.inject_job_failures(count);
+                }
+            }
+            Fault::NodeDown { node } => self.fail_node(&node, now),
+            Fault::NodeUp { node } => {
+                self.store.borrow_mut().set_node_ready(&node, true, now, "node recovered");
+            }
+            Fault::GpuDegrade { node, resource, count } => {
+                self.degrade_gpu(&node, &resource, count, now)
+            }
+            Fault::GpuRecover { node, resource, count } => {
+                self.recover_gpu(&node, &resource, count, now)
+            }
+        }
+    }
+
+    /// A physical node drops out: cordon it and clear its pods. Batch pods
+    /// requeue through Kueue as a fresh incarnation; sessions are torn
+    /// down (their in-memory JupyterLab state died with the node).
+    fn fail_node(&mut self, node: &str, now: Time) {
+        if !self.store.borrow_mut().set_node_ready(node, false, now, "node failure") {
+            return;
+        }
+        let mut victims: Vec<String> = {
+            let st = self.store.borrow();
+            st.pods()
+                .filter(|p| {
+                    p.status.node.as_deref() == Some(node)
+                        && matches!(p.status.phase, PodPhase::Scheduled | PodPhase::Running)
+                })
+                .map(|p| p.spec.name.clone())
+                .collect()
+        };
+        victims.sort();
+        for pod in victims {
+            if self.workload_of(&pod).is_some() {
+                self.requeue_failed_remote(&pod, now, "node failure");
+            } else {
+                let sid = self
+                    .store
+                    .borrow()
+                    .pod(&pod)
+                    .and_then(|p| p.spec.labels.get("aiinfn/session").cloned());
+                self.store.borrow_mut().evict_pod(&pod, now, false, "node failure").ok();
+                if let Some(sid) = sid {
+                    self.stop_session(&sid, "node failure").ok();
+                }
+            }
+        }
+    }
+
+    fn degrade_gpu(&mut self, node: &str, resource: &str, count: i64, now: Time) {
+        let taken = {
+            let mut st = self.store.borrow_mut();
+            // clamp to the node's *free* units: degrading capacity a
+            // running pod holds would drive recompute_free negative and
+            // (via its empty-vector fallback) zero out the node's CPU and
+            // memory too
+            let free_units = st.free_on(node).map(|f| f.get(resource)).unwrap_or(0);
+            let taken = match st.node_mut(node) {
+                None => 0,
+                Some(n) => {
+                    let avail = n.allocatable.get(resource).min(free_units);
+                    let take = count.min(avail).max(0);
+                    if take > 0 {
+                        let alloc = n.allocatable.get(resource);
+                        n.allocatable.set(resource, alloc - take);
+                    }
+                    take
+                }
+            };
+            if taken > 0 {
+                st.recompute_free(node);
+                st.record(
+                    now,
+                    EventKind::NodeModified,
+                    node,
+                    &format!("gpu degraded: -{taken} {resource}"),
+                );
+            }
+            taken
+        };
+        if taken > 0 {
+            *self.degraded.entry((node.to_string(), resource.to_string())).or_insert(0) += taken;
+        }
+    }
+
+    fn recover_gpu(&mut self, node: &str, resource: &str, count: i64, now: Time) {
+        let key = (node.to_string(), resource.to_string());
+        let give = {
+            let Some(owed) = self.degraded.get_mut(&key) else { return };
+            let give = count.min(*owed).max(0);
+            *owed -= give;
+            give
+        };
+        if self.degraded.get(&key) == Some(&0) {
+            self.degraded.remove(&key);
+        }
+        if give == 0 {
+            return;
+        }
+        let mut st = self.store.borrow_mut();
+        if let Some(n) = st.node_mut(node) {
+            let cur = n.allocatable.get(resource);
+            n.allocatable.set(resource, cur + give);
+        }
+        st.recompute_free(node);
+        st.record(
+            now,
+            EventKind::NodeModified,
+            node,
+            &format!("gpu recovered: +{give} {resource}"),
+        );
+    }
+
+    // --------------------------------------------------- the self-healer
+
+    /// Open-breaker response: cordon the site's virtual node and requeue
+    /// every workload it was running through Kueue — each comes back as a
+    /// fresh pod incarnation on a healthy placement once readmitted.
+    fn quarantine_site(&mut self, vk_idx: usize, now: Time) {
+        self.metrics.breaker_trips += 1;
+        let node = self.vks[vk_idx].node_name.clone();
+        self.store.borrow_mut().set_node_ready(
+            &node,
+            false,
+            now,
+            "site quarantined: circuit breaker open",
+        );
+        let mut pods = self.vks[vk_idx].tracked_pods();
+        pods.sort();
+        for pod in pods {
+            self.vks[vk_idx].forget_pod(&pod);
+            self.requeue_failed_remote(&pod, now, "site quarantined");
+        }
+    }
+
+    /// Bounce a pod whose remote placement failed (create error, node
+    /// failure, quarantine) back through Kueue. Not charged against the
+    /// restart budget — the failure is the infrastructure's fault. Pods
+    /// already terminal (e.g. completed just before the outage) are left
+    /// alone so their workload finishes normally.
+    fn requeue_failed_remote(&mut self, pod: &str, now: Time, reason: &str) {
+        let was_live = {
+            let mut st = self.store.borrow_mut();
+            let phase = st.pod(pod).map(|p| p.status.phase);
+            match phase {
+                Some(PodPhase::Scheduled) | Some(PodPhase::Running) => {
+                    st.evict_pod(pod, now, false, reason).ok();
+                    true
+                }
+                Some(PodPhase::Pending) => {
+                    st.cancel_pending(pod, now, reason).ok();
+                    true
+                }
+                _ => false,
+            }
+        };
+        if !was_live {
+            return;
+        }
+        if let Some(wl) = self.workload_of(pod) {
+            if let Some(j) = self.batch_jobs.get_mut(&wl) {
+                j.live_pod = None;
+            }
+            self.kueue.requeue(&wl, now).ok();
+            self.metrics.failure_requeues += 1;
+        }
+    }
+
+    /// The workload a live pod realizes, if it belongs to a batch job.
+    fn workload_of(&self, pod: &str) -> Option<String> {
+        self.batch_jobs
+            .values()
+            .find(|j| j.live_pod.as_deref() == Some(pod))
+            .map(|j| j.workload.clone())
     }
 
     /// One engine-advance + reconciliation step toward `t_end`.
@@ -829,5 +1284,109 @@ mod tests {
         p.run_for(300.0, 10.0);
         assert!(p.tsdb.samples_ingested() > 100);
         assert!(p.tsdb.series_count() > 20);
+    }
+
+    #[test]
+    fn site_outage_quarantines_reroutes_and_heals() {
+        let mut p = platform();
+        let mut chaos = ChaosEngine::new();
+        chaos.inject(150.0, Fault::SiteOutage { site: "INFN-T1".into() });
+        chaos.inject(700.0, Fault::SiteRecovery { site: "INFN-T1".into() });
+        p.set_chaos(chaos);
+        // the overflow pattern: more 16-core jobs than local capacity holds,
+        // so the federation (including INFN-T1) takes the spill
+        let mut wls = Vec::new();
+        for i in 0..60 {
+            wls.push(
+                p.submit_batch(
+                    &format!("user{:03}", i % 78),
+                    "project05",
+                    ResourceVec::cpu_millis(16_000).with(MEMORY, 32 << 30),
+                    600.0,
+                    PriorityClass::Batch,
+                    true,
+                )
+                .unwrap(),
+            );
+        }
+        p.run_for(4.0 * 3600.0, 20.0);
+        assert!(p.metrics().breaker_trips >= 1, "{:?}", p.metrics());
+        assert!(p.metrics().failure_requeues >= 1, "{:?}", p.metrics());
+        assert_eq!(p.metrics().terminal_failures, 0, "{:?}", p.metrics());
+        assert_eq!(p.site_health("INFN-T1"), HealthStatus::Healthy, "breaker must close");
+        let done = wls
+            .iter()
+            .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
+            .count();
+        assert_eq!(done, 60, "every workload heals: {:?}", p.metrics());
+        assert_eq!(p.pod_phase_counts().get("failed"), None, "no pod fails terminally");
+    }
+
+    #[test]
+    fn node_failure_requeues_batch_work() {
+        let mut p = platform();
+        let mut chaos = ChaosEngine::new();
+        chaos.inject(100.0, Fault::NodeDown { node: "cnaf-ai01".into() });
+        chaos.inject(400.0, Fault::NodeUp { node: "cnaf-ai01".into() });
+        p.set_chaos(chaos);
+        let mut wls = Vec::new();
+        for i in 0..8 {
+            wls.push(
+                p.submit_batch(
+                    &format!("user{:03}", i),
+                    "project01",
+                    ResourceVec::cpu_millis(8000).with(MEMORY, 8 << 30),
+                    300.0,
+                    PriorityClass::Batch,
+                    false,
+                )
+                .unwrap(),
+            );
+        }
+        p.run_for(3600.0, 10.0);
+        assert!(p.metrics().failure_requeues >= 1, "{:?}", p.metrics());
+        let done = wls
+            .iter()
+            .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
+            .count();
+        assert_eq!(done, 8, "{:?}", p.metrics());
+        assert!(p.cluster().node("cnaf-ai01").unwrap().ready, "node recovered");
+    }
+
+    #[test]
+    fn gpu_degrade_and_recover_round_trip_allocatable() {
+        let mut p = platform();
+        let resource = "nvidia.com/mig-1g.5gb";
+        let before = p.cluster().node("cnaf-ai02").unwrap().allocatable.get(resource);
+        assert!(before >= 3);
+        let mut chaos = ChaosEngine::new();
+        chaos.inject(
+            50.0,
+            Fault::GpuDegrade {
+                node: "cnaf-ai02".into(),
+                resource: resource.into(),
+                count: 3,
+            },
+        );
+        chaos.inject(
+            200.0,
+            Fault::GpuRecover {
+                node: "cnaf-ai02".into(),
+                resource: resource.into(),
+                count: 3,
+            },
+        );
+        p.set_chaos(chaos);
+        p.run_for(100.0, 10.0);
+        assert_eq!(
+            p.cluster().node("cnaf-ai02").unwrap().allocatable.get(resource),
+            before - 3
+        );
+        p.run_for(200.0, 10.0);
+        assert_eq!(
+            p.cluster().node("cnaf-ai02").unwrap().allocatable.get(resource),
+            before,
+            "recovery restores exactly what degradation took"
+        );
     }
 }

@@ -6,4 +6,4 @@ pub mod config;
 pub mod facade;
 
 pub use config::{default_config_path, PlatformConfig};
-pub use facade::{Platform, PlatformMetrics};
+pub use facade::{Platform, PlatformMetrics, RestartPolicy};

@@ -385,31 +385,18 @@ impl Kueue {
             if victims.is_empty() {
                 continue;
             }
-            // newest admitted first (least sunk work)
+            // newest admitted first (least sunk work); name tiebreak keeps
+            // victim choice deterministic across runs (HashMap order isn't)
             victims.sort_by(|a, b| {
                 let ta = self.workloads[a].admitted_at.unwrap_or(0.0);
                 let tb = self.workloads[b].admitted_at.unwrap_or(0.0);
-                tb.partial_cmp(&ta).unwrap()
+                tb.partial_cmp(&ta).unwrap().then_with(|| a.cmp(b))
             });
 
             let mut evicted_now = Vec::new();
             for victim in victims {
-                // hypothetically release victim, check fit
-                let (vq, vreq) = {
-                    let v = &self.workloads[&victim];
-                    (v.charged_to.clone().unwrap(), v.requests.clone())
-                };
-                self.uncharge(&vq, &vreq);
-                {
-                    let backoff = self.backoff_base;
-                    let v = self.workloads.get_mut(&victim).unwrap();
-                    v.evictions += 1;
-                    let delay = backoff * (1 << (v.evictions - 1).min(6)) as f64;
-                    v.state = WorkloadState::EvictedPendingRequeue { until: at + delay };
-                    v.charged_to = None;
-                    let state = v.state.clone();
-                    self.log_transition(at, &victim, state);
-                }
+                // release victim's quota, back to the queue with backoff
+                self.evict_to_backoff(&victim, at);
                 evicted_now.push(victim.clone());
                 result.preempted.push((victim, name.clone()));
 
@@ -434,6 +421,47 @@ impl Kueue {
             let _ = evicted_now;
         }
         result
+    }
+
+    /// Release an admitted workload's quota and put it back in the queue
+    /// with the exponential eviction backoff — the one eviction state
+    /// machine shared by preemption and self-heal requeues.
+    fn evict_to_backoff(&mut self, name: &str, at: Time) {
+        let (cq, req) = {
+            let w = &self.workloads[name];
+            (w.charged_to.clone(), w.requests.clone())
+        };
+        if let Some(cq) = cq {
+            self.uncharge(&cq, &req);
+        }
+        let backoff = self.backoff_base;
+        let w = self.workloads.get_mut(name).unwrap();
+        w.evictions += 1;
+        let delay = backoff * (1 << (w.evictions - 1).min(6)) as f64;
+        w.state = WorkloadState::EvictedPendingRequeue { until: at + delay };
+        w.charged_to = None;
+        let s = w.state.clone();
+        self.log_transition(at, name, s);
+    }
+
+    /// Requeue an admitted workload after a pod/remote failure: same
+    /// backoff machinery preemption uses. This is the self-healing
+    /// controller's path back through admission — the workload re-enters
+    /// the queue and, once its backoff expires, is readmitted and realized
+    /// as a fresh pod incarnation (typically on a different, healthy site).
+    pub fn requeue(&mut self, name: &str, at: Time) -> anyhow::Result<()> {
+        let state = self
+            .workloads
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?
+            .state
+            .clone();
+        anyhow::ensure!(
+            state == WorkloadState::Admitted,
+            "workload {name} not admitted (state {state:?})"
+        );
+        self.evict_to_backoff(name, at);
+        Ok(())
     }
 
     /// Mark a workload finished and release its quota.
@@ -622,6 +650,37 @@ mod tests {
         k.finish("w1", 1.0).unwrap();
         assert_eq!(k.cluster_queue("batch-cq").unwrap().used.get(GPU), 0);
         assert_eq!(k.cluster_queue("interactive-cq").unwrap().used.get(GPU), 0);
+    }
+
+    #[test]
+    fn requeue_releases_quota_and_backs_off() {
+        let mut k = kueue();
+        k.submit("w1", "batch", PriorityClass::Batch, rv(8000, 2), 0.0).unwrap();
+        k.admit_pass(0.0);
+        assert_eq!(k.workload("w1").unwrap().state, WorkloadState::Admitted);
+        k.requeue("w1", 10.0).unwrap();
+        // quota released immediately
+        let (used, _) = k.quota_utilization();
+        assert!(used.is_empty(), "{used}");
+        match k.workload("w1").unwrap().state {
+            WorkloadState::EvictedPendingRequeue { until } => {
+                assert!((until - 40.0).abs() < 1e-9, "30s base backoff: {until}")
+            }
+            ref s => panic!("state {s:?}"),
+        }
+        // not admitted before the backoff expires
+        assert!(!k.admit_pass(20.0).admitted.contains(&"w1".to_string()));
+        // readmitted after it, with a doubled backoff on the next requeue
+        assert!(k.admit_pass(41.0).admitted.contains(&"w1".to_string()));
+        k.requeue("w1", 50.0).unwrap();
+        match k.workload("w1").unwrap().state {
+            WorkloadState::EvictedPendingRequeue { until } => {
+                assert!((until - 110.0).abs() < 1e-9, "60s doubled backoff: {until}")
+            }
+            ref s => panic!("state {s:?}"),
+        }
+        // requeueing a non-admitted workload is an error
+        assert!(k.requeue("w1", 60.0).is_err());
     }
 
     #[test]

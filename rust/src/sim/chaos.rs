@@ -1,0 +1,321 @@
+//! Fault injection: deterministic chaos schedules for resilience scenarios.
+//!
+//! A [`ChaosEngine`] holds a time-ordered schedule of [`Fault`]s — site
+//! outages and recoveries, InterLink wire errors (timeouts, dropped
+//! responses), remote job crashes (GPU ECC at the site), local node flaps
+//! and GPU degradation. The platform facade drains due faults at every
+//! reconciliation tick and applies them to the live subsystems, so faults
+//! land at exactly the same virtual times run after run.
+//!
+//! Schedules come from two sources: tests inject specific faults by hand
+//! ([`ChaosEngine::inject`]), and [`ChaosPlan::generate`] samples a whole
+//! scenario from the seeded sim RNG — same seed, same targets ⇒ the
+//! byte-identical schedule, which is what makes golden-trace testing
+//! possible (run a scenario twice, diff the transition logs).
+
+use crate::sim::clock::Time;
+use crate::util::rng::Rng;
+
+/// One injectable fault.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// The site's InterLink endpoint becomes unreachable (every wire call
+    /// fails until recovery).
+    SiteOutage { site: String },
+    /// The endpoint answers again. The circuit breaker still gates
+    /// placement until a half-open probe succeeds.
+    SiteRecovery { site: String },
+    /// The next `count` wire calls to the site time out before reaching it.
+    WireTimeouts { site: String, count: u32 },
+    /// The next `count` wire calls reach the site (side effects happen)
+    /// but the response is lost on the way back.
+    WireDrops { site: String, count: u32 },
+    /// `count` remote jobs on the site crash (GPU ECC error, site-side
+    /// node failure) and report `Failed` on the next status sync.
+    RemoteJobFailures { site: String, count: u32 },
+    /// A local node drops out of the cluster (kubelet stops heartbeating).
+    NodeDown { node: String },
+    /// The node heartbeats again and is schedulable.
+    NodeUp { node: String },
+    /// `count` units of an accelerator resource disappear from the node's
+    /// allocatable (ECC page retirement, MIG slice loss).
+    GpuDegrade { node: String, resource: String, count: i64 },
+    /// The degraded accelerator units come back.
+    GpuRecover { node: String, resource: String, count: i64 },
+}
+
+impl Fault {
+    /// Stable one-line rendering (golden traces diff these).
+    pub fn describe(&self) -> String {
+        match self {
+            Fault::SiteOutage { site } => format!("site-outage {site}"),
+            Fault::SiteRecovery { site } => format!("site-recovery {site}"),
+            Fault::WireTimeouts { site, count } => format!("wire-timeouts {site} x{count}"),
+            Fault::WireDrops { site, count } => format!("wire-drops {site} x{count}"),
+            Fault::RemoteJobFailures { site, count } => {
+                format!("remote-job-failures {site} x{count}")
+            }
+            Fault::NodeDown { node } => format!("node-down {node}"),
+            Fault::NodeUp { node } => format!("node-up {node}"),
+            Fault::GpuDegrade { node, resource, count } => {
+                format!("gpu-degrade {node} -{count} {resource}")
+            }
+            Fault::GpuRecover { node, resource, count } => {
+                format!("gpu-recover {node} +{count} {resource}")
+            }
+        }
+    }
+}
+
+/// A fault bound to an absolute injection time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Injection {
+    pub at: Time,
+    pub fault: Fault,
+}
+
+/// The fault scheduler: a sorted schedule plus the applied-fault log.
+#[derive(Debug, Default)]
+pub struct ChaosEngine {
+    schedule: Vec<Injection>,
+    cursor: usize,
+    log: Vec<Injection>,
+}
+
+impl ChaosEngine {
+    pub fn new() -> ChaosEngine {
+        ChaosEngine::default()
+    }
+
+    /// Add a fault at an absolute time. The not-yet-applied tail of the
+    /// schedule stays time-ordered; equal times keep insertion order.
+    pub fn inject(&mut self, at: Time, fault: Fault) {
+        self.schedule.push(Injection { at, fault });
+        let cursor = self.cursor;
+        self.schedule[cursor..].sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    }
+
+    /// Drain every fault scheduled at or before `now`, in order. Applied
+    /// faults move to the scenario log.
+    pub fn due(&mut self, now: Time) -> Vec<Fault> {
+        let mut out = Vec::new();
+        while self.cursor < self.schedule.len() && self.schedule[self.cursor].at <= now {
+            let inj = self.schedule[self.cursor].clone();
+            self.cursor += 1;
+            out.push(inj.fault.clone());
+            self.log.push(inj);
+        }
+        out
+    }
+
+    /// Faults not yet applied.
+    pub fn pending(&self) -> usize {
+        self.schedule.len() - self.cursor
+    }
+
+    /// Applied faults, in application order.
+    pub fn log(&self) -> &[Injection] {
+        &self.log
+    }
+
+    /// The applied-fault log rendered one line per fault (golden traces).
+    pub fn trace(&self) -> String {
+        let mut s = String::new();
+        for inj in &self.log {
+            s.push_str(&format!("{:10.3} CHAOS {}\n", inj.at, inj.fault.describe()));
+        }
+        s
+    }
+}
+
+/// A randomized scenario family: expected fault counts per *hour* per
+/// target, with uniform duration ranges (seconds). Sampling draws from one
+/// RNG seeded by `seed`, so a (plan, targets) pair always yields the same
+/// schedule. Every outage/flap/degradation schedules its own recovery, so a
+/// long-enough run always heals.
+#[derive(Debug, Clone)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    /// Faults are injected in `[0, horizon)`; recoveries may land later.
+    pub horizon: Time,
+    pub site_outages_per_hour: f64,
+    pub outage_duration: (Time, Time),
+    pub wire_faults_per_hour: f64,
+    pub max_wire_burst: u32,
+    pub remote_job_failures_per_hour: f64,
+    pub node_flaps_per_hour: f64,
+    pub node_down_duration: (Time, Time),
+    pub gpu_degrades_per_hour: f64,
+    pub gpu_degrade_duration: (Time, Time),
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan {
+            seed: 42,
+            horizon: 3600.0,
+            site_outages_per_hour: 0.5,
+            outage_duration: (180.0, 900.0),
+            wire_faults_per_hour: 2.0,
+            max_wire_burst: 3,
+            remote_job_failures_per_hour: 1.0,
+            node_flaps_per_hour: 0.25,
+            node_down_duration: (120.0, 600.0),
+            gpu_degrades_per_hour: 0.25,
+            gpu_degrade_duration: (300.0, 1200.0),
+        }
+    }
+}
+
+impl ChaosPlan {
+    /// Generate a deterministic schedule against the given targets:
+    /// federation `sites`, physical `nodes`, and `(node, resource)` pairs
+    /// eligible for GPU degradation.
+    pub fn generate(
+        &self,
+        sites: &[String],
+        nodes: &[String],
+        gpu_resources: &[(String, String)],
+    ) -> ChaosEngine {
+        let mut rng = Rng::new(self.seed);
+        let mut eng = ChaosEngine::new();
+        let hours = self.horizon / 3600.0;
+        for site in sites {
+            for _ in 0..rng.poisson(self.site_outages_per_hour * hours) {
+                let at = rng.range_f64(0.0, self.horizon);
+                let dur = rng.range_f64(self.outage_duration.0, self.outage_duration.1);
+                eng.inject(at, Fault::SiteOutage { site: site.clone() });
+                eng.inject(at + dur, Fault::SiteRecovery { site: site.clone() });
+            }
+            for _ in 0..rng.poisson(self.wire_faults_per_hour * hours) {
+                let at = rng.range_f64(0.0, self.horizon);
+                let count = 1 + rng.below(self.max_wire_burst.max(1) as u64) as u32;
+                let fault = if rng.bool(0.5) {
+                    Fault::WireTimeouts { site: site.clone(), count }
+                } else {
+                    Fault::WireDrops { site: site.clone(), count }
+                };
+                eng.inject(at, fault);
+            }
+            for _ in 0..rng.poisson(self.remote_job_failures_per_hour * hours) {
+                let at = rng.range_f64(0.0, self.horizon);
+                eng.inject(at, Fault::RemoteJobFailures { site: site.clone(), count: 1 });
+            }
+        }
+        for node in nodes {
+            for _ in 0..rng.poisson(self.node_flaps_per_hour * hours) {
+                let at = rng.range_f64(0.0, self.horizon);
+                let dur = rng.range_f64(self.node_down_duration.0, self.node_down_duration.1);
+                eng.inject(at, Fault::NodeDown { node: node.clone() });
+                eng.inject(at + dur, Fault::NodeUp { node: node.clone() });
+            }
+        }
+        for (node, resource) in gpu_resources {
+            for _ in 0..rng.poisson(self.gpu_degrades_per_hour * hours) {
+                let at = rng.range_f64(0.0, self.horizon);
+                let dur =
+                    rng.range_f64(self.gpu_degrade_duration.0, self.gpu_degrade_duration.1);
+                let count = 1 + rng.below(2) as i64;
+                eng.inject(
+                    at,
+                    Fault::GpuDegrade {
+                        node: node.clone(),
+                        resource: resource.clone(),
+                        count,
+                    },
+                );
+                eng.inject(
+                    at + dur,
+                    Fault::GpuRecover {
+                        node: node.clone(),
+                        resource: resource.clone(),
+                        count,
+                    },
+                );
+            }
+        }
+        eng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn targets() -> (Vec<String>, Vec<String>, Vec<(String, String)>) {
+        (
+            vec!["INFN-T1".to_string(), "CINECA-Leonardo".to_string()],
+            vec!["cnaf-ai01".to_string(), "cnaf-ai02".to_string()],
+            vec![("cnaf-ai01".to_string(), "nvidia.com/gpu".to_string())],
+        )
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let (sites, nodes, gpus) = targets();
+        let plan = ChaosPlan { seed: 99, ..Default::default() };
+        let mut a = plan.generate(&sites, &nodes, &gpus);
+        let mut b = plan.generate(&sites, &nodes, &gpus);
+        assert_eq!(a.due(f64::INFINITY), b.due(f64::INFINITY));
+        assert_eq!(a.trace(), b.trace());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (sites, nodes, gpus) = targets();
+        let mut a = ChaosPlan { seed: 1, ..Default::default() }.generate(&sites, &nodes, &gpus);
+        let mut b = ChaosPlan { seed: 2, ..Default::default() }.generate(&sites, &nodes, &gpus);
+        assert_ne!(a.due(f64::INFINITY), b.due(f64::INFINITY));
+        let _ = b.trace();
+    }
+
+    #[test]
+    fn due_drains_in_time_order() {
+        let mut eng = ChaosEngine::new();
+        eng.inject(30.0, Fault::SiteOutage { site: "b".into() });
+        eng.inject(10.0, Fault::SiteOutage { site: "a".into() });
+        eng.inject(10.0, Fault::SiteRecovery { site: "a".into() });
+        assert_eq!(eng.pending(), 3);
+        let first = eng.due(10.0);
+        assert_eq!(
+            first,
+            vec![
+                Fault::SiteOutage { site: "a".into() },
+                Fault::SiteRecovery { site: "a".into() }
+            ]
+        );
+        assert_eq!(eng.pending(), 1);
+        assert!(eng.due(20.0).is_empty());
+        assert_eq!(eng.due(30.0), vec![Fault::SiteOutage { site: "b".into() }]);
+        assert_eq!(eng.log().len(), 3);
+    }
+
+    #[test]
+    fn outages_always_pair_with_recoveries() {
+        let (sites, nodes, gpus) = targets();
+        let plan = ChaosPlan {
+            seed: 7,
+            site_outages_per_hour: 6.0,
+            node_flaps_per_hour: 6.0,
+            ..Default::default()
+        };
+        let mut eng = plan.generate(&sites, &nodes, &gpus);
+        let faults = eng.due(f64::INFINITY);
+        let outages = faults.iter().filter(|f| matches!(f, Fault::SiteOutage { .. })).count();
+        let recoveries =
+            faults.iter().filter(|f| matches!(f, Fault::SiteRecovery { .. })).count();
+        assert_eq!(outages, recoveries);
+        let downs = faults.iter().filter(|f| matches!(f, Fault::NodeDown { .. })).count();
+        let ups = faults.iter().filter(|f| matches!(f, Fault::NodeUp { .. })).count();
+        assert_eq!(downs, ups);
+        assert!(outages + downs > 0, "rates high enough to sample something");
+    }
+
+    #[test]
+    fn trace_is_stable_text() {
+        let mut eng = ChaosEngine::new();
+        eng.inject(1.5, Fault::WireTimeouts { site: "s".into(), count: 2 });
+        eng.due(2.0);
+        assert_eq!(eng.trace(), "     1.500 CHAOS wire-timeouts s x2\n");
+    }
+}

@@ -1,10 +1,13 @@
 //! Discrete-event simulation substrate (DESIGN.md S7): virtual clock, event
-//! engine, and the synthetic workload trace generator that stands in for the
-//! platform's production user trace.
+//! engine, the synthetic workload trace generator that stands in for the
+//! platform's production user trace, and the chaos fault-injection engine
+//! that schedules deterministic failure scenarios against it.
 
+pub mod chaos;
 pub mod clock;
 pub mod engine;
 pub mod trace;
 
+pub use chaos::{ChaosEngine, ChaosPlan, Fault};
 pub use clock::{Clock, SimClock, Time, WallClock};
 pub use engine::Engine;

@@ -1,0 +1,141 @@
+//! Control-plane integration tests: typed verbs, watch streams, and the
+//! resource projections (split out of the former monolithic
+//! `integration.rs`).
+
+mod common;
+
+use aiinfn::api::{
+    ApiObject, BatchJobResource, EventType, ResourceKind, Selector, SessionResource,
+};
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::util::json::Json;
+
+/// The acceptance path for the API redesign: a session is created through
+/// the typed API and its pod's `Added → Modified(Running)` lifecycle is
+/// observed purely from the watch stream — no store polling.
+#[test]
+fn watch_observes_session_pod_lifecycle_without_polling() {
+    let mut api = common::api();
+    let token = api.login("user011").unwrap();
+    let rv0 = api.last_rv();
+    let created = api
+        .create(
+            &token,
+            &ApiObject::Session(SessionResource::request("user011", "tensorflow-mig-1g")),
+        )
+        .unwrap();
+    let pod_name = created.as_session().unwrap().pod_name.clone();
+    api.run_for(120.0, 10.0);
+
+    let events: Vec<_> = api
+        .watch(&token, ResourceKind::Pod, rv0)
+        .unwrap()
+        .into_iter()
+        .filter(|e| e.name == pod_name)
+        .collect();
+    assert!(events.len() >= 2, "expected Added + Modified events: {events:?}");
+    // resourceVersions strictly increase along the stream
+    for w in events.windows(2) {
+        assert!(w[1].resource_version > w[0].resource_version);
+    }
+    let phases: Vec<(EventType, String)> = events
+        .iter()
+        .map(|e| {
+            let phase = e
+                .object
+                .as_ref()
+                .and_then(|o| o.at(&["status", "phase"]))
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string();
+            (e.event, phase)
+        })
+        .collect();
+    assert_eq!(phases[0], (EventType::Added, "Pending".to_string()), "{phases:?}");
+    assert!(
+        phases.iter().any(|(t, ph)| *t == EventType::Modified && ph == "Running"),
+        "must observe the Running transition: {phases:?}"
+    );
+    // the Session resource agrees with the stream
+    let s = api.get(&token, ResourceKind::Session, created.name()).unwrap();
+    assert_eq!(s.as_session().unwrap().phase, "Running");
+}
+
+/// End-to-end batch flow through the verbs, with workload deltas observed
+/// from the watch stream.
+#[test]
+fn api_batch_flow_with_workload_watch() {
+    let mut api = common::api();
+    let token = api.login("user030").unwrap();
+    let rv0 = api.last_rv();
+    let wl = api
+        .create(
+            &token,
+            &ApiObject::BatchJob(BatchJobResource::request(
+                "user030",
+                "project10",
+                ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+                120.0,
+                aiinfn::queue::kueue::PriorityClass::Batch,
+                false,
+            )),
+        )
+        .unwrap()
+        .name()
+        .to_string();
+    api.run_for(600.0, 10.0);
+    let states: Vec<String> = api
+        .watch(&token, ResourceKind::Workload, rv0)
+        .unwrap()
+        .into_iter()
+        .filter(|e| e.name == wl)
+        .filter_map(|e| {
+            e.object
+                .as_ref()
+                .and_then(|o| o.at(&["status", "state"]))
+                .and_then(Json::as_str)
+                .map(String::from)
+        })
+        .collect();
+    assert_eq!(states.first().map(String::as_str), Some("Queued"), "{states:?}");
+    assert!(states.iter().any(|s| s == "Admitted"), "{states:?}");
+    assert_eq!(states.last().map(String::as_str), Some("Finished"), "{states:?}");
+    // the pod is findable by label selector and succeeded
+    let pods = api
+        .list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap())
+        .unwrap();
+    assert_eq!(pods.len(), 1);
+    assert_eq!(pods[0].as_pod().unwrap().phase, "Succeeded");
+    // the pod view carries typed conditions
+    let conds = &pods[0].as_pod().unwrap().conditions;
+    assert!(conds.iter().any(|c| c.ctype == "PodScheduled" && c.status), "{conds:?}");
+    // the BatchJob status reports its restart policy and zero retries
+    let job = api.get(&token, ResourceKind::BatchJob, &wl).unwrap();
+    let job = job.as_batch_job().unwrap();
+    assert_eq!(job.retries, 0);
+    assert!(job.restart_policy.starts_with("OnFailure"), "{}", job.restart_policy);
+}
+
+/// Site resources expose circuit-breaker health and a `Healthy` condition.
+#[test]
+fn site_resources_report_health_conditions() {
+    let mut api = common::api();
+    let token = api.login("user001").unwrap();
+    let sites = api.list(&token, ResourceKind::Site, &Selector::all()).unwrap();
+    assert_eq!(sites.len(), 4);
+    for s in &sites {
+        let site = s.as_site().unwrap();
+        assert_eq!(site.health, "Healthy", "{}", site.site);
+        let cond = site
+            .conditions
+            .iter()
+            .find(|c| c.ctype == "Healthy")
+            .unwrap_or_else(|| panic!("no Healthy condition on {}", site.site));
+        assert!(cond.status, "{}", site.site);
+    }
+    // health is also reachable as a field selector
+    let healthy = api
+        .list(&token, ResourceKind::Site, &Selector::fields("status.health=Healthy").unwrap())
+        .unwrap();
+    assert_eq!(healthy.len(), 4);
+}

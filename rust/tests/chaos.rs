@@ -1,0 +1,299 @@
+//! Chaos + resilience scenario suite: deterministic golden traces,
+//! randomized invariant sweeps, restart-budget semantics, and the
+//! end-to-end self-healing acceptance scenario (SLURM-site blackout healed
+//! through HTCondor capacity).
+
+mod common;
+
+use aiinfn::api::ResourceKind;
+use aiinfn::cluster::resources::{ResourceVec, GPU, MEMORY};
+use aiinfn::offload::HealthStatus;
+use aiinfn::platform::RestartPolicy;
+use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::sim::chaos::{ChaosEngine, ChaosPlan, Fault};
+use aiinfn::sim::clock::hours;
+use aiinfn::util::json::Json;
+
+// ------------------------------------------------------------ golden trace
+
+/// Run one full chaos scenario and render every transition the platform
+/// recorded — chaos log, cluster events, Kueue workload transitions, site
+/// health transitions — as one text blob.
+fn chaos_trace(seed: u64) -> String {
+    let mut p = common::platform();
+    let plan = ChaosPlan {
+        seed,
+        horizon: 1200.0,
+        site_outages_per_hour: 2.0,
+        wire_faults_per_hour: 4.0,
+        remote_job_failures_per_hour: 2.0,
+        node_flaps_per_hour: 1.0,
+        ..Default::default()
+    };
+    p.install_chaos(&plan);
+    let _wls = common::submit_cpu_batch(&mut p, 20, 16_000, 400.0, true);
+    p.run_for(3600.0, 15.0);
+
+    let mut out = String::new();
+    out.push_str(&p.chaos().unwrap().trace());
+    {
+        let st = p.cluster();
+        for ev in st.events() {
+            out.push_str(&format!("{:10.3} {:?} {} {}\n", ev.at, ev.kind, ev.object, ev.message));
+        }
+    }
+    for t in p.workload_transitions_since(0) {
+        out.push_str(&format!("{:10.3} WORKLOAD {} {:?}\n", t.at, t.workload, t.state));
+    }
+    for t in p.health().transitions_since(0) {
+        out.push_str(&format!(
+            "{:10.3} HEALTH {} {} {}\n",
+            t.at,
+            t.site,
+            t.status.as_str(),
+            t.reason
+        ));
+    }
+    out
+}
+
+/// Same seed ⇒ byte-identical event trace; different seed ⇒ different
+/// trace. This is the determinism contract the whole scenario suite (and
+/// CI's two-seed / two-thread-count matrix) rests on.
+#[test]
+fn golden_trace_same_seed_is_byte_identical() {
+    let seed = common::test_seed();
+    let a = chaos_trace(seed);
+    let b = chaos_trace(seed);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same seed must reproduce the transition log byte-for-byte");
+    let c = chaos_trace(seed.wrapping_add(1));
+    assert_ne!(a, c, "different chaos seeds must produce different traces");
+}
+
+// ------------------------------------------------------ randomized sweeps
+
+/// Across 100 random chaos schedules: no pod is lost (every submitted
+/// workload ends Finished — succeeded or failed-with-exhausted-retries),
+/// completion accounting balances exactly, Kueue quota drains to zero, and
+/// watch resourceVersions stay strictly monotonic.
+#[test]
+fn random_chaos_schedules_preserve_invariants() {
+    let base = common::test_seed();
+    for i in 0..100u64 {
+        let seed = base.wrapping_mul(1000).wrapping_add(i);
+        let mut api = common::api();
+        let plan = ChaosPlan {
+            seed,
+            horizon: 1800.0,
+            site_outages_per_hour: 1.0,
+            outage_duration: (120.0, 400.0),
+            wire_faults_per_hour: 3.0,
+            remote_job_failures_per_hour: 2.0,
+            node_flaps_per_hour: 0.5,
+            node_down_duration: (60.0, 240.0),
+            gpu_degrades_per_hour: 0.5,
+            gpu_degrade_duration: (120.0, 600.0),
+            ..Default::default()
+        };
+        api.platform_mut().install_chaos(&plan);
+        let n = 8usize;
+        let wls: Vec<String> = (0..n)
+            .map(|j| {
+                api.platform_mut()
+                    .submit_batch(
+                        &format!("user{:03}", j % 78),
+                        "project07",
+                        ResourceVec::cpu_millis(8000).with(MEMORY, 8 << 30),
+                        300.0,
+                        PriorityClass::Batch,
+                        j % 2 == 0,
+                    )
+                    .unwrap()
+            })
+            .collect();
+        api.run_for(hours(3.0), 30.0);
+
+        // (a) no pod lost: every workload reaches Finished
+        for w in &wls {
+            assert_eq!(
+                api.platform().workload_state(w),
+                Some(WorkloadState::Finished),
+                "seed {seed}: workload {w} stuck: {:?}",
+                api.platform().metrics()
+            );
+        }
+        // (b) completion accounting balances exactly
+        let m = api.platform().metrics();
+        assert_eq!(
+            m.local_completions + m.remote_completions + m.terminal_failures,
+            n as u64,
+            "seed {seed}: {m:?}"
+        );
+        // (c) Kueue quota fully drained
+        let (used, _) = api.platform().quota_utilization();
+        assert!(used.is_empty(), "seed {seed}: leaked quota {used}");
+        // (d) watch resourceVersions strictly monotonic per kind
+        let token = api.login("user000").unwrap();
+        for kind in ResourceKind::all() {
+            let evs = api.watch(&token, kind, 0).unwrap();
+            for w in evs.windows(2) {
+                assert!(
+                    w[1].resource_version > w[0].resource_version,
+                    "seed {seed}: rv regression in {kind:?} stream"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- restart budgets
+
+/// RestartPolicy semantics: `Never` fails terminally on the first remote
+/// failure; `OnFailure {{ max_retries: 1 }}` retries exactly once. In both
+/// cases the workload still reaches Finished — nothing gets stuck.
+#[test]
+fn restart_budget_governs_terminal_failure() {
+    let mut p = common::platform();
+    // persistent killers on every site: any pod that shows up remotely is
+    // failed on its next status sync
+    let mut chaos = ChaosEngine::new();
+    for site in ["INFN-T1", "ReCaS-Bari", "CINECA-Leonardo", "Podman-Edge"] {
+        chaos.inject(50.0, Fault::RemoteJobFailures { site: site.into(), count: 5 });
+    }
+    p.set_chaos(chaos);
+    // fill local capacity with long non-offloadable fillers so the victims
+    // must offload (local allocatable ≈ 440 cores; 28 × 16 = 448)
+    let fillers = common::submit_cpu_batch(&mut p, 28, 16_000, 3000.0, false);
+    let never = p
+        .submit_batch_with_policy(
+            "user070",
+            "project09",
+            ResourceVec::cpu_millis(16_000).with(MEMORY, 16 << 30),
+            600.0,
+            PriorityClass::Batch,
+            true,
+            RestartPolicy::Never,
+        )
+        .unwrap();
+    let once = p
+        .submit_batch_with_policy(
+            "user071",
+            "project09",
+            ResourceVec::cpu_millis(16_000).with(MEMORY, 16 << 30),
+            600.0,
+            PriorityClass::Batch,
+            true,
+            RestartPolicy::OnFailure { max_retries: 1 },
+        )
+        .unwrap();
+    p.run_for(hours(3.0), 10.0);
+
+    assert_eq!(p.workload_state(&never), Some(WorkloadState::Finished));
+    assert_eq!(p.workload_state(&once), Some(WorkloadState::Finished));
+    let m = p.metrics();
+    assert_eq!(m.terminal_failures, 2, "{m:?}");
+    assert_eq!(m.remote_retries, 1, "budget of 1 consumed exactly once: {m:?}");
+    // the victims' pods failed: 1 (never) + 2 (once, retried) = 3
+    assert_eq!(p.pod_phase_counts().get("failed"), Some(&3), "{:?}", p.pod_phase_counts());
+    // one pending filler could not be placed while the cluster was full —
+    // the failed placement was recorded, not discarded
+    assert!(m.failed_placements >= 1, "{m:?}");
+    // fillers themselves all drain eventually
+    let done = fillers
+        .iter()
+        .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
+        .count();
+    assert_eq!(done, 28);
+}
+
+// ------------------------------------------------- acceptance: self-heal
+
+/// The acceptance scenario: a SLURM-site (CINECA Leonardo) blackout
+/// mid-run. The circuit breaker opens, affected workloads are requeued and
+/// rescheduled — at least one onto an HTCondor site — the Site resource
+/// shows a `Degraded → Healthy` transition over the watch stream, and the
+/// run completes with zero terminally-failed pods.
+#[test]
+fn slurm_outage_heals_through_htcondor_end_to_end() {
+    let mut api = common::api();
+    let token = api.login("user001").unwrap();
+    let rv0 = api.last_rv();
+
+    let mut chaos = ChaosEngine::new();
+    chaos.inject(300.0, Fault::SiteOutage { site: "CINECA-Leonardo".into() });
+    chaos.inject(1600.0, Fault::SiteRecovery { site: "CINECA-Leonardo".into() });
+    api.platform_mut().set_chaos(chaos);
+
+    // nine 4-GPU jobs: three fit the local whole-GPU node (13 GPUs), the
+    // federation takes the rest — two on INFN-T1 (HTCondor, 2×4 GPUs) and
+    // four on CINECA Leonardo (SLURM, 4 nodes × 4 GPUs)
+    let wls: Vec<String> = (0..9)
+        .map(|i| {
+            api.platform_mut()
+                .submit_batch(
+                    &format!("user{:03}", i),
+                    "project03",
+                    ResourceVec::cpu_millis(8000).with(MEMORY, 16 << 30).with(GPU, 4),
+                    600.0,
+                    PriorityClass::Batch,
+                    true,
+                )
+                .unwrap()
+        })
+        .collect();
+    api.run_for(2400.0, 10.0);
+
+    // every workload healed; zero terminal failures
+    for w in &wls {
+        assert_eq!(api.platform().workload_state(w), Some(WorkloadState::Finished), "{w}");
+    }
+    let m = api.platform().metrics();
+    assert_eq!(m.terminal_failures, 0, "{m:?}");
+    assert!(m.breaker_trips >= 1, "the Leonardo breaker must open: {m:?}");
+    assert!(m.failure_requeues >= 1, "outage victims must requeue: {m:?}");
+    assert_eq!(
+        api.platform().pod_phase_counts().get("failed"),
+        None,
+        "zero terminally-failed pods: {:?}",
+        api.platform().pod_phase_counts()
+    );
+
+    // at least one requeued workload was rescheduled onto an HTCondor site
+    let rerouted = {
+        let st = api.platform().cluster();
+        st.pods().any(|p| {
+            p.spec.name.ends_with("-r2")
+                && p.status.phase == aiinfn::cluster::pod::PodPhase::Succeeded
+                && matches!(
+                    p.status.node.as_deref(),
+                    Some("vk-infn-t1") | Some("vk-recas-bari")
+                )
+        })
+    };
+    assert!(rerouted, "a rescheduled incarnation must succeed on an HTCondor site");
+
+    // the Site watch stream shows Degraded → (Probing →) Healthy without
+    // any polling of the resource
+    let health_seq: Vec<String> = api
+        .watch(&token, ResourceKind::Site, rv0)
+        .unwrap()
+        .into_iter()
+        .filter(|e| e.name == "CINECA-Leonardo")
+        .filter_map(|e| {
+            e.object
+                .as_ref()
+                .and_then(|o| o.at(&["status", "health"]))
+                .and_then(Json::as_str)
+                .map(String::from)
+        })
+        .collect();
+    let degraded = health_seq.iter().position(|s| s == "Degraded");
+    let healthy = health_seq.iter().rposition(|s| s == "Healthy");
+    assert!(
+        matches!((degraded, healthy), (Some(d), Some(h)) if d < h),
+        "watch must observe Degraded before Healthy: {health_seq:?}"
+    );
+    // and the breaker is closed at the end
+    assert_eq!(api.platform().site_health("CINECA-Leonardo"), HealthStatus::Healthy);
+}

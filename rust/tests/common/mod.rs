@@ -1,0 +1,58 @@
+//! Shared fixtures for the integration test binaries
+//! (`api_watch`, `offload`, `scheduling`, `chaos`).
+
+use aiinfn::api::ApiServer;
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::queue::kueue::PriorityClass;
+
+/// The paper's bundled platform config.
+#[allow(dead_code)]
+pub fn config() -> PlatformConfig {
+    PlatformConfig::load(&default_config_path()).unwrap()
+}
+
+/// A bootstrapped platform (4 physical servers + 4 federation sites).
+#[allow(dead_code)]
+pub fn platform() -> Platform {
+    Platform::bootstrap(config()).unwrap()
+}
+
+/// A bootstrapped platform wrapped in the control-plane API server.
+#[allow(dead_code)]
+pub fn api() -> ApiServer {
+    ApiServer::bootstrap(config()).unwrap()
+}
+
+/// Submit `n` CPU batch jobs (`cpu_millis` each, 32 GiB) from rotating
+/// users; returns the workload names.
+#[allow(dead_code)]
+pub fn submit_cpu_batch(
+    p: &mut Platform,
+    n: usize,
+    cpu_millis: i64,
+    duration: f64,
+    offloadable: bool,
+) -> Vec<String> {
+    (0..n)
+        .map(|i| {
+            p.submit_batch(
+                &format!("user{:03}", i % 78),
+                "project05",
+                ResourceVec::cpu_millis(cpu_millis).with(MEMORY, 32 << 30),
+                duration,
+                PriorityClass::Batch,
+                offloadable,
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+/// Base seed for the randomized suites. CI runs the whole test suite under
+/// two fixed `AIINFN_TEST_SEED` values (and two `--test-threads` settings)
+/// to catch seed-dependent flakiness and cross-test nondeterminism.
+#[allow(dead_code)]
+pub fn test_seed() -> u64 {
+    std::env::var("AIINFN_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}

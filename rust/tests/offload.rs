@@ -1,0 +1,78 @@
+//! Federation / offloading integration tests (split out of the former
+//! monolithic `integration.rs`): InterLink wire traffic at campaign scale,
+//! plus transient wire-fault tolerance below the breaker threshold.
+
+mod common;
+
+use aiinfn::hub::profiles::default_catalogue;
+use aiinfn::offload::HealthStatus;
+use aiinfn::queue::kueue::WorkloadState;
+use aiinfn::sim::chaos::{ChaosEngine, Fault};
+use aiinfn::sim::clock::hours;
+
+#[test]
+fn submit_cpu_heavy_campaign_drains_via_federation() {
+    let mut p = common::platform();
+    let wls = common::submit_cpu_batch(&mut p, 80, 24_000, 900.0, true);
+    p.run_for(hours(8.0), 20.0);
+    let finished = wls
+        .iter()
+        .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
+        .count();
+    assert_eq!(finished, 80);
+    assert!(p.metrics().remote_completions > 0, "{:?}", p.metrics());
+    // InterLink wire must have been exercised
+    let rt = p.interlink_round_trips();
+    assert!(rt > 100, "expected many InterLink round-trips, got {rt}");
+    // interactive demand arriving *after* the storm still gets placed fast
+    let profile = default_catalogue().into_iter().find(|x| x.name == "tensorflow-mig-1g").unwrap();
+    p.spawn_session("user077", &profile).unwrap();
+    p.run_for(120.0, 5.0);
+    let lat = p.metrics().interactive_spawn_latencies.last().copied().unwrap();
+    assert!(lat < 60.0, "spawn latency {lat}");
+}
+
+/// A short burst of wire timeouts (below the breaker threshold) must not
+/// quarantine the site: the affected workloads requeue and the campaign
+/// still drains with the site Healthy.
+#[test]
+fn transient_wire_faults_tolerated_without_quarantine() {
+    let mut p = common::platform();
+    let mut chaos = ChaosEngine::new();
+    // two timeouts: below the 3-consecutive-failure threshold, and the next
+    // successful sync resets the consecutive count
+    chaos.inject(40.0, Fault::WireTimeouts { site: "INFN-T1".into(), count: 2 });
+    p.set_chaos(chaos);
+    let wls = common::submit_cpu_batch(&mut p, 40, 16_000, 300.0, true);
+    p.run_for(hours(2.0), 10.0);
+    let finished = wls
+        .iter()
+        .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
+        .count();
+    assert_eq!(finished, 40, "{:?}", p.metrics());
+    assert_eq!(p.metrics().breaker_trips, 0, "{:?}", p.metrics());
+    assert_eq!(p.site_health("INFN-T1"), HealthStatus::Healthy);
+}
+
+/// Dropped InterLink responses leave orphan remote jobs but never lose the
+/// workload: the create is retried (wire drop → requeue) and every job
+/// finishes.
+#[test]
+fn dropped_responses_requeue_instead_of_failing() {
+    let mut p = common::platform();
+    let mut chaos = ChaosEngine::new();
+    // active from the very first tick, so the first InterLink creates to
+    // INFN-T1 lose their responses
+    chaos.inject(5.0, Fault::WireDrops { site: "INFN-T1".into(), count: 2 });
+    p.set_chaos(chaos);
+    let wls = common::submit_cpu_batch(&mut p, 40, 16_000, 300.0, true);
+    p.run_for(hours(2.0), 10.0);
+    let finished = wls
+        .iter()
+        .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
+        .count();
+    assert_eq!(finished, 40, "{:?}", p.metrics());
+    assert!(p.metrics().failure_requeues >= 1, "{:?}", p.metrics());
+    assert_eq!(p.metrics().terminal_failures, 0, "{:?}", p.metrics());
+    assert_eq!(p.pod_phase_counts().get("failed"), None);
+}

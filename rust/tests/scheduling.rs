@@ -1,15 +1,16 @@
-//! Cross-module integration tests: full platform scenarios plus
-//! property-based invariant checks (DESIGN.md S6) spanning subsystems.
+//! Scheduling / queueing scenarios and cross-module property tests (split
+//! out of the former monolithic `integration.rs`).
+
+mod common;
 
 use std::collections::HashSet;
 
 use aiinfn::baseline::StaticVmFarm;
 use aiinfn::cluster::pod::{Payload, PodPhase, PodSpec};
-use aiinfn::cluster::resources::{ResourceVec, CPU, MEMORY};
+use aiinfn::cluster::resources::{ResourceVec, CPU};
 use aiinfn::cluster::scheduler::Scheduler;
 use aiinfn::cluster::store::ClusterStore;
 use aiinfn::hub::profiles::default_catalogue;
-use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
 use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
 use aiinfn::sim::clock::hours;
 use aiinfn::sim::trace::{generate, ArrivalKind, GpuDemand, TraceConfig};
@@ -18,17 +19,12 @@ use aiinfn::util::prop::{forall, gens};
 use aiinfn::util::rng::Rng;
 use aiinfn::workflow::{parse_workflow, Dag};
 
-fn platform() -> Platform {
-    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
-    Platform::bootstrap(cfg).unwrap()
-}
-
 // ---------------------------------------------------------------- scenarios
 
 #[test]
 fn full_day_campaign_is_deterministic() {
     let run = || {
-        let mut p = platform();
+        let mut p = common::platform();
         let trace = generate(&TraceConfig { seed: 123, ..Default::default() }, hours(24.0));
         let catalogue = default_catalogue();
         let mut ti = 0;
@@ -42,7 +38,8 @@ fn full_day_campaign_is_deterministic() {
                         let _ = p.spawn_session(&a.user, &catalogue[1]);
                     }
                     ArrivalKind::Batch => {
-                        let _ = p.submit_ml_training(&a.user, &a.project, a.duration * 5e12, a.gpu, true);
+                        let _ =
+                            p.submit_ml_training(&a.user, &a.project, a.duration * 5e12, a.gpu, true);
                     }
                 }
             }
@@ -63,7 +60,7 @@ fn full_day_campaign_is_deterministic() {
 
 #[test]
 fn capacity_is_conserved_through_a_churny_campaign() {
-    let mut p = platform();
+    let mut p = common::platform();
     let trace = generate(&TraceConfig { seed: 9, ..Default::default() }, hours(12.0));
     for a in &trace {
         // accelerator jobs only: CPU-only payloads at this FLOP count run
@@ -89,7 +86,7 @@ fn capacity_is_conserved_through_a_churny_campaign() {
 
 #[test]
 fn hub_token_flows_through_object_store_mount() {
-    let mut p = platform();
+    let mut p = common::platform();
     let profile = default_catalogue().into_iter().find(|x| x.name == "cpu-small").unwrap();
     let sid = p.spawn_session("user042", &profile).unwrap();
     p.run_for(60.0, 10.0);
@@ -106,7 +103,7 @@ fn hub_token_flows_through_object_store_mount() {
 
 #[test]
 fn evicted_batch_job_finishes_after_interactive_leaves() {
-    let mut p = platform();
+    let mut p = common::platform();
     // fill all 35 MIG slices with long batch jobs
     let mut wls = Vec::new();
     for i in 0..35 {
@@ -145,6 +142,16 @@ fn vm_baseline_loses_on_the_same_trace() {
     let vm = farm.replay(&trace);
     assert!(vm.refused > 0);
     assert!(vm.efficiency() < 0.6);
+}
+
+#[test]
+fn trace_gpu_demand_distribution_matches_config() {
+    let cfg = TraceConfig::default();
+    let tr = generate(&cfg, hours(14.0 * 24.0));
+    let inter: Vec<_> = tr.iter().filter(|a| a.kind == ArrivalKind::Interactive).collect();
+    let gpu_frac =
+        inter.iter().filter(|a| a.gpu != GpuDemand::None).count() as f64 / inter.len() as f64;
+    assert!((gpu_frac - cfg.interactive_gpu_frac).abs() < 0.08, "{gpu_frac}");
 }
 
 // ---------------------------------------------------------------- properties
@@ -249,7 +256,7 @@ fn prop_dag_topo_order_respects_dependencies() {
             let mut rules = Vec::new();
             for d in 0..*depth {
                 let input = if d == 0 {
-                    format!("\"stage0/{{s}}.in\"")
+                    "\"stage0/{s}.in\"".to_string()
                 } else {
                     format!("\"stage{d}/{{s}}.dat\"")
                 };
@@ -345,114 +352,6 @@ fn prop_kueue_quota_conserved_under_random_churn() {
     );
 }
 
-// ------------------------------------------------------------- control plane
-
-/// The acceptance path for the API redesign: a session is created through
-/// the typed API and its pod's `Added → Modified(Running)` lifecycle is
-/// observed purely from the watch stream — no store polling.
-#[test]
-fn watch_observes_session_pod_lifecycle_without_polling() {
-    use aiinfn::api::{ApiObject, ApiServer, EventType, ResourceKind, SessionResource};
-    use aiinfn::util::json::Json;
-
-    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
-    let mut api = ApiServer::bootstrap(cfg).unwrap();
-    let token = api.login("user011").unwrap();
-    let rv0 = api.last_rv();
-    let created = api
-        .create(
-            &token,
-            &ApiObject::Session(SessionResource::request("user011", "tensorflow-mig-1g")),
-        )
-        .unwrap();
-    let pod_name = created.as_session().unwrap().pod_name.clone();
-    api.run_for(120.0, 10.0);
-
-    let events: Vec<_> = api
-        .watch(&token, ResourceKind::Pod, rv0)
-        .unwrap()
-        .into_iter()
-        .filter(|e| e.name == pod_name)
-        .collect();
-    assert!(events.len() >= 2, "expected Added + Modified events: {events:?}");
-    // resourceVersions strictly increase along the stream
-    for w in events.windows(2) {
-        assert!(w[1].resource_version > w[0].resource_version);
-    }
-    let phases: Vec<(EventType, String)> = events
-        .iter()
-        .map(|e| {
-            let phase = e
-                .object
-                .as_ref()
-                .and_then(|o| o.at(&["status", "phase"]))
-                .and_then(Json::as_str)
-                .unwrap_or("?")
-                .to_string();
-            (e.event, phase)
-        })
-        .collect();
-    assert_eq!(phases[0], (EventType::Added, "Pending".to_string()), "{phases:?}");
-    assert!(
-        phases.iter().any(|(t, ph)| *t == EventType::Modified && ph == "Running"),
-        "must observe the Running transition: {phases:?}"
-    );
-    // the Session resource agrees with the stream
-    let s = api.get(&token, ResourceKind::Session, created.name()).unwrap();
-    assert_eq!(s.as_session().unwrap().phase, "Running");
-}
-
-/// End-to-end batch flow through the verbs, with workload deltas observed
-/// from the watch stream.
-#[test]
-fn api_batch_flow_with_workload_watch() {
-    use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector};
-    use aiinfn::util::json::Json;
-
-    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
-    let mut api = ApiServer::bootstrap(cfg).unwrap();
-    let token = api.login("user030").unwrap();
-    let rv0 = api.last_rv();
-    let wl = api
-        .create(
-            &token,
-            &ApiObject::BatchJob(BatchJobResource::request(
-                "user030",
-                "project10",
-                ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
-                120.0,
-                aiinfn::queue::kueue::PriorityClass::Batch,
-                false,
-            )),
-        )
-        .unwrap()
-        .name()
-        .to_string();
-    api.run_for(600.0, 10.0);
-    let states: Vec<String> = api
-        .watch(&token, ResourceKind::Workload, rv0)
-        .unwrap()
-        .into_iter()
-        .filter(|e| e.name == wl)
-        .filter_map(|e| {
-            e.object
-                .as_ref()
-                .and_then(|o| o.at(&["status", "state"]))
-                .and_then(Json::as_str)
-                .map(String::from)
-        })
-        .collect();
-    assert_eq!(states.first().map(String::as_str), Some("Queued"), "{states:?}");
-    assert!(states.iter().any(|s| s == "Admitted"), "{states:?}");
-    assert_eq!(states.last().map(String::as_str), Some("Finished"), "{states:?}");
-    // the pod is findable by label selector and succeeded
-    let pods = api
-        .list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap())
-        .unwrap();
-    assert_eq!(pods.len(), 1);
-    assert_eq!(pods[0].as_pod().unwrap().phase, "Succeeded");
-}
-
 // ---------------------------------------------------------------- PJRT e2e
 
 #[test]
@@ -473,49 +372,4 @@ fn pjrt_training_through_runtime_when_artifacts_exist() {
     let tokens: Vec<i32> = manifest.load_corpus().unwrap()[..entry.batch * entry.seq].to_vec();
     let logits = inf_trained.logits(&mut eng, &tokens).unwrap();
     assert!(logits.iter().all(|v| v.is_finite()));
-}
-
-#[test]
-fn submit_cpu_heavy_campaign_drains_via_federation() {
-    let mut p = platform();
-    let mut wls = Vec::new();
-    for i in 0..80 {
-        wls.push(
-            p.submit_batch(
-                &format!("user{:03}", i % 78),
-                "project09",
-                ResourceVec::cpu_millis(24_000).with(MEMORY, 32 << 30),
-                900.0,
-                PriorityClass::Batch,
-                true,
-            )
-            .unwrap(),
-        );
-    }
-    p.run_for(hours(8.0), 20.0);
-    let finished = wls
-        .iter()
-        .filter(|w| p.workload_state(w) == Some(WorkloadState::Finished))
-        .count();
-    assert_eq!(finished, 80);
-    assert!(p.metrics().remote_completions > 0, "{:?}", p.metrics());
-    // InterLink wire must have been exercised
-    let rt = p.interlink_round_trips();
-    assert!(rt > 100, "expected many InterLink round-trips, got {rt}");
-    // interactive demand arriving *after* the storm still gets placed fast
-    let profile = default_catalogue().into_iter().find(|x| x.name == "tensorflow-mig-1g").unwrap();
-    p.spawn_session("user077", &profile).unwrap();
-    p.run_for(120.0, 5.0);
-    let lat = p.metrics().interactive_spawn_latencies.last().copied().unwrap();
-    assert!(lat < 60.0, "spawn latency {lat}");
-}
-
-#[test]
-fn trace_gpu_demand_distribution_matches_config() {
-    let cfg = TraceConfig::default();
-    let tr = generate(&cfg, hours(14.0 * 24.0));
-    let inter: Vec<_> = tr.iter().filter(|a| a.kind == ArrivalKind::Interactive).collect();
-    let gpu_frac =
-        inter.iter().filter(|a| a.gpu != GpuDemand::None).count() as f64 / inter.len() as f64;
-    assert!((gpu_frac - cfg.interactive_gpu_frac).abs() < 0.08, "{gpu_frac}");
 }
