@@ -104,9 +104,16 @@ fn main() -> anyhow::Result<()> {
         api.platform().metrics().interactive_spawn_latencies.first()
     );
 
-    // 5. The session is still running; stop it (a `delete`) and show
-    //    accounting.
-    api.delete(&alice, ResourceKind::Session, &sid)?;
+    // 5. The session is still running; stop it (a `delete` — the returned
+    //    object is the final state, deletionTimestamp set) and show
+    //    accounting. Teardown is reconciled by the GC controller, so one
+    //    tick runs before the report.
+    let last = api.delete(&alice, ResourceKind::Session, &sid)?;
+    println!(
+        "deleted {sid} (deletionTimestamp {:?})",
+        last.metadata().deletion_timestamp
+    );
+    api.tick();
     let report = api.platform().usage_report();
     print!("{}", report.render("quickstart usage"));
     Ok(())

@@ -1,0 +1,110 @@
+//! API-verb throughput microbenchmark: how many control-plane write/read
+//! operations per second the apply/reconcile front door sustains —
+//! `create`, `apply` (update leg), `patch` (strategic merge), `get`,
+//! `list` with a selector, and `watch` catch-up reads.
+//!
+//! Emits the standard `BENCH\t…` rows plus a machine-readable
+//! `BENCH_api.json` with median ops/sec per verb, so CI and
+//! EXPERIMENTS.md tables can track regressions on the API hot path.
+
+use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector};
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::{default_config_path, PlatformConfig};
+use aiinfn::queue::kueue::PriorityClass;
+use aiinfn::util::bench::{black_box, BenchGroup};
+use aiinfn::util::json::Json;
+
+fn request(user: &str) -> ApiObject {
+    ApiObject::BatchJob(BatchJobResource::request(
+        user,
+        "project00",
+        ResourceVec::cpu_millis(2000).with(MEMORY, 4 << 30),
+        600.0,
+        PriorityClass::Batch,
+        false,
+    ))
+}
+
+fn main() {
+    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let mut api = ApiServer::bootstrap(cfg).unwrap();
+    let token = api.login("user001").unwrap();
+
+    // seed a populated control plane: 100 jobs, some already realized as
+    // pods, so get/list measure against realistic object counts
+    let mut names = Vec::new();
+    for _ in 0..100 {
+        names.push(api.create(&token, &request("user001")).unwrap().name().to_string());
+    }
+    api.run_for(300.0, 30.0);
+
+    let mut g = BenchGroup::new("api_verbs");
+
+    let target = names[0].clone();
+    let get_ops = {
+        let r = g.bench("get_batch_job", || {
+            black_box(api.get(&token, ResourceKind::BatchJob, &target).unwrap());
+        });
+        r.per_sec()
+    };
+
+    let selector = Selector::labels("app=batch").unwrap();
+    let list_ops = {
+        let r = g.bench("list_pods_label_selector", || {
+            black_box(api.list(&token, ResourceKind::Pod, &selector).unwrap());
+        });
+        r.per_sec()
+    };
+
+    let watch_from = api.last_rv().saturating_sub(200);
+    let watch_ops = {
+        let r = g.bench("watch_catchup_200", || {
+            black_box(api.watch(&token, ResourceKind::Pod, watch_from).unwrap());
+        });
+        r.per_sec()
+    };
+
+    let create_ops = {
+        let r = g.bench("create_batch_job", || {
+            black_box(api.create(&token, &request("user001")).unwrap());
+        });
+        r.per_sec()
+    };
+
+    // apply's update leg: flip a mutable spec field unconditionally
+    let mut desired = api
+        .get(&token, ResourceKind::BatchJob, &target)
+        .unwrap()
+        .as_batch_job()
+        .unwrap()
+        .clone();
+    desired.metadata.resource_version = 0;
+    let apply_ops = {
+        let r = g.bench("apply_update", || {
+            desired.offloadable = !desired.offloadable;
+            black_box(api.apply(&token, &ApiObject::BatchJob(desired.clone())).unwrap());
+        });
+        r.per_sec()
+    };
+
+    let patch_on = Json::parse(r#"{"spec":{"offloadable":true}}"#).unwrap();
+    let patch_ops = {
+        let r = g.bench("patch_strategic_merge", || {
+            black_box(
+                api.patch(&token, ResourceKind::BatchJob, &target, &patch_on).unwrap(),
+            );
+        });
+        r.per_sec()
+    };
+
+    let out = Json::obj(vec![
+        ("get_ops_per_sec", Json::num(get_ops)),
+        ("list_ops_per_sec", Json::num(list_ops)),
+        ("watch_ops_per_sec", Json::num(watch_ops)),
+        ("create_ops_per_sec", Json::num(create_ops)),
+        ("apply_ops_per_sec", Json::num(apply_ops)),
+        ("patch_ops_per_sec", Json::num(patch_ops)),
+    ]);
+    std::fs::write("BENCH_api.json", out.to_pretty()).expect("write BENCH_api.json");
+    println!("wrote BENCH_api.json");
+}

@@ -1,0 +1,356 @@
+//! The admission chain: ordered mutating (defaulting) and validating
+//! admitters that run on **every** write verb before the object reaches the
+//! platform — the Kubernetes admission-webhook idiom, in process.
+//!
+//! The standard chain is, in order:
+//!
+//! 1. [`Defaulter`] — fills omitted spec fields from [`PlatformConfig`]:
+//!    batch restart budgets (`OnFailure(max=queues.max_remote_retries)`),
+//!    the local queue name, the priority class, namespaces, and the
+//!    canonical `app` label.
+//! 2. [`Validator`] — structural rejection: empty users/projects, empty or
+//!    negative resource requests, non-positive durations, unknown priority
+//!    classes, malformed restart policies, unknown queues.
+//! 3. [`ImmutableFields`] — on update-style verbs, fields that identify the
+//!    object or its already-reserved quota (user, project, requests,
+//!    duration, priority, queue) must not change; mutable spec is limited
+//!    to `offloadable`, `restartPolicy`, labels and finalizers.
+//!
+//! A rejection surfaces as [`ApiError::Invalid`] with the admitter's name,
+//! so callers can tell an admission denial from a parse error.
+
+use crate::api::resources::{parse_priority, ApiObject};
+use crate::api::ApiError;
+use crate::platform::config::PlatformConfig;
+use crate::platform::facade::RestartPolicy;
+
+/// Which write verb is being admitted. Defaulting and validation run on
+/// every spec-writing verb (an update with an omitted defaultable field is
+/// filled in, exactly like a create); immutability checks additionally
+/// apply when prior state exists; status writes skip spec admission
+/// entirely (the spec is not touched).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteVerb {
+    Create,
+    Update,
+    Patch,
+    Apply,
+    StatusUpdate,
+}
+
+/// What the admitters see alongside the object under admission.
+pub struct AdmissionCtx<'a> {
+    pub verb: WriteVerb,
+    pub config: &'a PlatformConfig,
+    /// The currently stored object, present on update-style writes.
+    pub old: Option<&'a ApiObject>,
+}
+
+/// One link in the chain. `admit` may mutate the object (defaulting) and
+/// rejects the write by returning an error string.
+pub trait Admitter {
+    fn name(&self) -> &'static str;
+    fn admit(&self, ctx: &AdmissionCtx<'_>, obj: &mut ApiObject) -> Result<(), String>;
+}
+
+/// The ordered chain. Every write verb runs the whole chain; the first
+/// rejection wins and is surfaced as [`ApiError::Invalid`].
+pub struct AdmissionChain {
+    admitters: Vec<Box<dyn Admitter>>,
+}
+
+impl AdmissionChain {
+    /// The platform's standard chain: defaulting → validation → immutability.
+    pub fn standard() -> AdmissionChain {
+        AdmissionChain {
+            admitters: vec![
+                Box::new(Defaulter),
+                Box::new(Validator),
+                Box::new(ImmutableFields),
+            ],
+        }
+    }
+
+    /// Append a custom admitter (runs after the standard links).
+    pub fn push(&mut self, admitter: Box<dyn Admitter>) {
+        self.admitters.push(admitter);
+    }
+
+    pub fn run(&self, ctx: &AdmissionCtx<'_>, obj: &mut ApiObject) -> Result<(), ApiError> {
+        for a in &self.admitters {
+            a.admit(ctx, obj).map_err(|why| {
+                ApiError::Invalid(format!("admission denied by {}: {why}", a.name()))
+            })?;
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- defaulting
+
+/// Mutating admitter: fill omitted fields from the platform config.
+pub struct Defaulter;
+
+impl Admitter for Defaulter {
+    fn name(&self) -> &'static str {
+        "defaulting"
+    }
+
+    fn admit(&self, ctx: &AdmissionCtx<'_>, obj: &mut ApiObject) -> Result<(), String> {
+        if ctx.verb == WriteVerb::StatusUpdate {
+            return Ok(());
+        }
+        match obj {
+            ApiObject::Session(s) => {
+                if s.metadata.namespace.is_empty() || s.metadata.namespace == "default" {
+                    s.metadata.namespace = "hub".to_string();
+                }
+            }
+            ApiObject::BatchJob(j) => {
+                if j.metadata.namespace.is_empty() || j.metadata.namespace == "default" {
+                    j.metadata.namespace = "batch".to_string();
+                }
+                if j.priority.is_empty() {
+                    j.priority = "batch".to_string();
+                }
+                if j.queue.is_empty() {
+                    j.queue = ctx.config.batch_queue.clone();
+                }
+                if j.restart_policy.is_empty() {
+                    j.restart_policy =
+                        RestartPolicy::OnFailure { max_retries: ctx.config.max_remote_retries }
+                            .render();
+                }
+                j.metadata
+                    .labels
+                    .entry("app".to_string())
+                    .or_insert_with(|| "batch".to_string());
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- validation
+
+/// Validating admitter: structurally reject bad specs.
+pub struct Validator;
+
+impl Admitter for Validator {
+    fn name(&self) -> &'static str {
+        "validation"
+    }
+
+    fn admit(&self, ctx: &AdmissionCtx<'_>, obj: &mut ApiObject) -> Result<(), String> {
+        if ctx.verb == WriteVerb::StatusUpdate {
+            return Ok(());
+        }
+        match obj {
+            ApiObject::Session(s) => {
+                if s.user.is_empty() {
+                    return Err("spec.user is empty".into());
+                }
+                if s.profile.is_empty() {
+                    return Err("spec.profile is empty".into());
+                }
+            }
+            ApiObject::BatchJob(j) => {
+                if j.user.is_empty() {
+                    return Err("spec.user is empty".into());
+                }
+                if j.project.is_empty() {
+                    return Err("spec.project is empty".into());
+                }
+                if j.requests.is_empty() {
+                    return Err("spec.requests asks for no resources".into());
+                }
+                for (k, v) in j.requests.iter() {
+                    if v < 0 {
+                        return Err(format!("spec.requests[{k}] is negative ({v})"));
+                    }
+                }
+                if !(j.duration > 0.0) {
+                    return Err(format!("spec.duration must be positive (got {})", j.duration));
+                }
+                parse_priority(&j.priority).map_err(|e| e.to_string())?;
+                if RestartPolicy::parse(&j.restart_policy).is_none() {
+                    return Err(format!(
+                        "spec.restartPolicy {:?} is not \"Never\" or \"OnFailure(max=N)\"",
+                        j.restart_policy
+                    ));
+                }
+                if j.queue != ctx.config.batch_queue {
+                    return Err(format!(
+                        "spec.queue {:?} is not the batch local queue {:?}",
+                        j.queue, ctx.config.batch_queue
+                    ));
+                }
+            }
+            other => {
+                return Err(format!(
+                    "kind {} is read-only (server-projected)",
+                    other.kind().as_str()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- immutability
+
+/// Validating admitter for update-style verbs: identity and quota-bearing
+/// spec fields are immutable once the object exists.
+pub struct ImmutableFields;
+
+impl Admitter for ImmutableFields {
+    fn name(&self) -> &'static str {
+        "immutable-fields"
+    }
+
+    fn admit(&self, ctx: &AdmissionCtx<'_>, obj: &mut ApiObject) -> Result<(), String> {
+        let Some(old) = ctx.old else { return Ok(()) };
+        if ctx.verb == WriteVerb::StatusUpdate {
+            return Ok(());
+        }
+        match (obj, old) {
+            (ApiObject::Session(new), ApiObject::Session(old)) => {
+                if new.user != old.user {
+                    return Err(format!(
+                        "spec.user is immutable ({} -> {})",
+                        old.user, new.user
+                    ));
+                }
+                if new.profile != old.profile {
+                    return Err(format!(
+                        "spec.profile is immutable ({} -> {})",
+                        old.profile, new.profile
+                    ));
+                }
+            }
+            (ApiObject::BatchJob(new), ApiObject::BatchJob(old)) => {
+                if new.user != old.user {
+                    return Err("spec.user is immutable".into());
+                }
+                if new.project != old.project {
+                    return Err("spec.project is immutable".into());
+                }
+                if new.requests != old.requests {
+                    return Err("spec.requests is immutable (quota already reserved)".into());
+                }
+                if new.duration != old.duration {
+                    return Err("spec.duration is immutable".into());
+                }
+                if new.priority != old.priority {
+                    return Err("spec.priority is immutable".into());
+                }
+                if new.queue != old.queue {
+                    return Err("spec.queue is immutable".into());
+                }
+            }
+            (new, old) => {
+                return Err(format!(
+                    "kind changed under update: {} -> {}",
+                    old.kind().as_str(),
+                    new.kind().as_str()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::resources::BatchJobResource;
+    use crate::cluster::resources::ResourceVec;
+    use crate::platform::config::default_config_path;
+    use crate::queue::kueue::PriorityClass;
+
+    fn config() -> PlatformConfig {
+        PlatformConfig::load(&default_config_path()).unwrap()
+    }
+
+    fn job() -> ApiObject {
+        ApiObject::BatchJob(BatchJobResource::request(
+            "alice",
+            "project01",
+            ResourceVec::cpu_millis(4000),
+            100.0,
+            PriorityClass::Batch,
+            false,
+        ))
+    }
+
+    #[test]
+    fn defaulting_fills_queue_and_restart_budget_from_config() {
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let mut obj = job();
+        chain
+            .run(&AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None }, &mut obj)
+            .unwrap();
+        let j = obj.as_batch_job().unwrap();
+        assert_eq!(j.queue, cfg.batch_queue);
+        assert_eq!(
+            j.restart_policy,
+            format!("OnFailure(max={})", cfg.max_remote_retries)
+        );
+        assert_eq!(j.metadata.labels.get("app").map(String::as_str), Some("batch"));
+    }
+
+    #[test]
+    fn validation_rejects_empty_requests_bad_duration_bad_policy() {
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let ctx = AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None };
+
+        let mut bad = job();
+        if let ApiObject::BatchJob(j) = &mut bad {
+            j.requests = ResourceVec::new();
+        }
+        let err = chain.run(&ctx, &mut bad).unwrap_err();
+        assert!(matches!(&err, ApiError::Invalid(m) if m.contains("validation")), "{err}");
+
+        let mut bad = job();
+        if let ApiObject::BatchJob(j) = &mut bad {
+            j.duration = 0.0;
+        }
+        assert!(chain.run(&ctx, &mut bad).is_err());
+
+        let mut bad = job();
+        if let ApiObject::BatchJob(j) = &mut bad {
+            j.restart_policy = "Sometimes".into();
+        }
+        assert!(chain.run(&ctx, &mut bad).is_err());
+    }
+
+    #[test]
+    fn immutability_guards_update_but_allows_offloadable_flip() {
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let mut old = job();
+        chain
+            .run(&AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None }, &mut old)
+            .unwrap();
+        let ctx = AdmissionCtx { verb: WriteVerb::Update, config: &cfg, old: Some(&old) };
+
+        let mut ok = old.clone();
+        if let ApiObject::BatchJob(j) = &mut ok {
+            j.offloadable = true;
+        }
+        chain.run(&ctx, &mut ok).unwrap();
+
+        let mut bad = old.clone();
+        if let ApiObject::BatchJob(j) = &mut bad {
+            j.requests = ResourceVec::cpu_millis(9999);
+        }
+        let err = chain.run(&ctx, &mut bad).unwrap_err();
+        assert!(
+            matches!(&err, ApiError::Invalid(m) if m.contains("immutable")),
+            "{err}"
+        );
+    }
+}

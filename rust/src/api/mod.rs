@@ -6,13 +6,42 @@
 //! resource*, authenticated by a bearer token from the hub's
 //! [`AuthService`](crate::hub::auth::AuthService):
 //!
-//! | verb                           | semantics                                             |
-//! |--------------------------------|-------------------------------------------------------|
-//! | `create(token, obj)`           | Session / BatchJob: admit + provision; others refused |
-//! | `get(token, kind, name)`       | one object, current state                             |
-//! | `list(token, kind, selector)`  | all objects, filtered by label/field selectors        |
-//! | `delete(token, kind, name)`    | Session: stop; BatchJob: cancel (owner-checked)       |
-//! | `watch(token, kind, since_rv)` | `Added`/`Modified`/`Deleted` deltas after `since_rv`  |
+//! | verb                              | semantics                                              |
+//! |-----------------------------------|--------------------------------------------------------|
+//! | `create(token, obj)`              | Session / BatchJob: admit + provision; others refused  |
+//! | `get(token, kind, name)`          | one object, current state                              |
+//! | `list(token, kind, selector)`     | all objects, filtered by label/field selectors         |
+//! | `update(token, obj)`              | replace the spec (admission + immutable-field checks)  |
+//! | `patch(token, kind, name, json)`  | strategic merge on `spec` / labels / finalizers        |
+//! | `apply(token, obj)`               | create-or-update upsert (the `kubectl apply` idiom)    |
+//! | `update_status(token, obj)`       | status subresource: conditions only, never the spec    |
+//! | `delete(token, kind, name)`       | returns the final object; finalizers ⇒ terminating;    |
+//! |                                   | Workload/Session deletion cascades via ownerReferences |
+//! | `watch(token, kind, since_rv)`    | `Added`/`Modified`/`Deleted` deltas after `since_rv`   |
+//!
+//! ## Declarative writes
+//!
+//! The write path is *desired-state*, not imperative:
+//!
+//! * **Optimistic concurrency** — every object carries
+//!   `metadata.resourceVersion`; an update/patch/apply/delete presenting a
+//!   stale non-zero version fails with [`ApiError::Conflict`]. Reads
+//!   return the version to echo back.
+//! * **Admission chain** ([`admission`]) — ordered mutating + validating
+//!   admitters run on every write: defaulting (restart budgets and queue
+//!   names from `PlatformConfig`), structural validation (negative
+//!   resource requests, bad priorities/policies), and immutable-field
+//!   checks on update-style verbs.
+//! * **Spec vs. status isolation** — `update`/`patch` never write status;
+//!   `update_status` writes only conditions; the two cannot clobber each
+//!   other even through concurrent read-modify-write cycles.
+//! * **Deletion lifecycle** — `metadata.finalizers` defer deletion: the
+//!   object enters a terminating state (`deletionTimestamp` set) until a
+//!   reconciler clears the finalizers through `update`/`patch`. Once
+//!   clear, the API tombstones the object and the garbage-collector
+//!   reconciler ([`crate::platform::reconcile::gc`]) cascades over
+//!   `metadata.ownerReferences`: deleting a Workload removes its Pods,
+//!   deleting a Session removes its pod and volume claims.
 //!
 //! ## Resource model
 //!
@@ -80,15 +109,17 @@
 //! let pods = api.list(&token, ResourceKind::Pod, &Selector::all())?.len();
 //! ```
 
+pub mod admission;
 pub mod resources;
 pub mod server;
 pub mod watch;
 
+pub use admission::{AdmissionChain, AdmissionCtx, Admitter, WriteVerb};
 pub use resources::{
-    ApiObject, BatchJobResource, Condition, Metadata, NodeView, PodView, ResourceKind,
-    SessionResource, SiteView, WorkloadView,
+    ApiObject, BatchJobResource, Condition, Metadata, NodeView, OwnerReference, PodView,
+    ResourceKind, SessionResource, SiteView, WorkloadView,
 };
-pub use server::{ApiServer, Selector};
+pub use server::{ApiServer, Selector, SelectorOp};
 pub use watch::{EventType, WatchEvent, WatchLog};
 
 /// Typed API failure modes (the control plane's HTTP-ish status codes).

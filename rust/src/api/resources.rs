@@ -18,7 +18,7 @@ use crate::util::json::Json;
 pub const API_VERSION: &str = "aiinfn/v1";
 
 /// The resource kinds the control plane serves.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum ResourceKind {
     Session,
     BatchJob,
@@ -65,14 +65,66 @@ impl ResourceKind {
     }
 }
 
-/// Object metadata: identity, grouping, and the version stamp the watch
-/// machinery orders by.
+/// A reference from a dependent object to the object that owns it (the
+/// Kubernetes `metadata.ownerReferences` idiom). The garbage collector
+/// cascades deletion: when the owner is deleted, dependents carrying a
+/// reference to it are removed by the GC reconciler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OwnerReference {
+    pub kind: ResourceKind,
+    pub name: String,
+    /// True when the owner is the managing controller of the dependent.
+    pub controller: bool,
+}
+
+impl OwnerReference {
+    pub fn controller(kind: ResourceKind, name: impl Into<String>) -> OwnerReference {
+        OwnerReference { kind, name: name.into(), controller: true }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.as_str())),
+            ("name", Json::str(self.name.as_str())),
+            ("controller", Json::Bool(self.controller)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<OwnerReference, ApiError> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .and_then(ResourceKind::parse)
+            .ok_or_else(|| ApiError::Invalid("ownerReference has no valid kind".into()))?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::Invalid("ownerReference has no name".into()))?
+            .to_string();
+        Ok(OwnerReference {
+            kind,
+            name,
+            controller: j.get("controller").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// Object metadata: identity, grouping, the version stamp the watch
+/// machinery orders by, plus the deletion-lifecycle fields the garbage
+/// collector acts on (ownerReferences, finalizers, deletionTimestamp).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Metadata {
     pub name: String,
     pub namespace: String,
     pub labels: BTreeMap<String, String>,
     pub resource_version: u64,
+    /// Objects this one is a dependent of; deleted when any owner goes.
+    pub owner_references: Vec<OwnerReference>,
+    /// Deletion blocks until every finalizer has been removed.
+    pub finalizers: Vec<String>,
+    /// Set when a delete was requested but finalizers are still pending:
+    /// the object is *terminating* until its reconciler clears them.
+    pub deletion_timestamp: Option<f64>,
 }
 
 impl Metadata {
@@ -80,8 +132,14 @@ impl Metadata {
         Metadata { name: name.into(), namespace: namespace.into(), ..Default::default() }
     }
 
+    /// Is this object in the terminating state (delete requested, finalizers
+    /// pending)?
+    pub fn terminating(&self) -> bool {
+        self.deletion_timestamp.is_some()
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(self.name.as_str())),
             ("namespace", Json::str(self.namespace.as_str())),
             (
@@ -91,7 +149,23 @@ impl Metadata {
                 ),
             ),
             ("resourceVersion", Json::num(self.resource_version as f64)),
-        ])
+        ];
+        if !self.owner_references.is_empty() {
+            fields.push((
+                "ownerReferences",
+                Json::Arr(self.owner_references.iter().map(OwnerReference::to_json).collect()),
+            ));
+        }
+        if !self.finalizers.is_empty() {
+            fields.push((
+                "finalizers",
+                Json::Arr(self.finalizers.iter().map(|f| Json::str(f.as_str())).collect()),
+            ));
+        }
+        if let Some(t) = self.deletion_timestamp {
+            fields.push(("deletionTimestamp", Json::num(t)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Metadata, ApiError> {
@@ -111,7 +185,43 @@ impl Metadata {
             }
         }
         let resource_version = j.get("resourceVersion").and_then(Json::as_u64).unwrap_or(0);
-        Ok(Metadata { name, namespace, labels, resource_version })
+        // a present-but-malformed list must be an error, not an empty list:
+        // silently reading `finalizers: "x"` as [] would complete a
+        // finalizer-blocked deletion the client never asked for
+        let owner_references = match j.get("ownerReferences") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| {
+                    ApiError::Invalid("metadata.ownerReferences must be an array".into())
+                })?
+                .iter()
+                .map(OwnerReference::from_json)
+                .collect::<Result<_, _>>()?,
+        };
+        let finalizers = match j.get("finalizers") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| ApiError::Invalid("metadata.finalizers must be an array".into()))?
+                .iter()
+                .map(|f| {
+                    f.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| ApiError::Invalid("finalizer is not a string".into()))
+                })
+                .collect::<Result<_, _>>()?,
+        };
+        let deletion_timestamp = j.get("deletionTimestamp").and_then(Json::as_f64);
+        Ok(Metadata {
+            name,
+            namespace,
+            labels,
+            resource_version,
+            owner_references,
+            finalizers,
+            deletion_timestamp,
+        })
     }
 }
 
@@ -290,6 +400,8 @@ pub struct SessionResource {
     pub phase: String,
     pub bucket_mount: Option<String>,
     pub started_at: f64,
+    /// Status conditions (settable through the `status` subresource).
+    pub conditions: Vec<Condition>,
 }
 
 impl SessionResource {
@@ -321,6 +433,7 @@ impl SessionResource {
                 if let Some(m) = &self.bucket_mount {
                     f.push(("bucketMount", Json::str(m.as_str())));
                 }
+                f.push(("conditions", conditions_to_json(&self.conditions)));
                 f
             }),
         )
@@ -337,6 +450,7 @@ impl SessionResource {
             phase: opt_str(status, "phase").unwrap_or_default(),
             bucket_mount: opt_str(status, "bucketMount"),
             started_at: opt_num(status, "startedAt").unwrap_or(0.0),
+            conditions: conditions_from_json(status.get("conditions"))?,
         })
     }
 }
@@ -354,13 +468,20 @@ pub struct BatchJobResource {
     pub duration: f64,
     pub priority: String,
     pub offloadable: bool,
+    /// Local queue the workload is submitted to. Empty on a request:
+    /// the admission chain defaults it from `PlatformConfig`.
+    pub queue: String,
+    /// Restart policy, e.g. `"OnFailure(max=4)"` / `"Never"`. Empty on a
+    /// request: the admission chain defaults the budget from
+    /// `PlatformConfig` (`queues.max_remote_retries`).
+    pub restart_policy: String,
     /// Status (server-filled).
     pub state: String,
     pub live_pod: Option<String>,
     /// Failure retries consumed against the restart budget.
     pub retries: u32,
-    /// The effective restart policy, e.g. `"OnFailure(max=4)"` / `"Never"`.
-    pub restart_policy: String,
+    /// Status conditions (settable through the `status` subresource).
+    pub conditions: Vec<Condition>,
 }
 
 impl BatchJobResource {
@@ -389,23 +510,30 @@ impl BatchJobResource {
         envelope(
             ResourceKind::BatchJob,
             &self.metadata,
-            Json::obj(vec![
-                ("user", Json::str(self.user.as_str())),
-                ("project", Json::str(self.project.as_str())),
-                ("requests", resources_to_json(&self.requests)),
-                ("duration", Json::num(self.duration)),
-                ("priority", Json::str(self.priority.as_str())),
-                ("offloadable", Json::Bool(self.offloadable)),
-            ]),
+            Json::obj({
+                let mut f = vec![
+                    ("user", Json::str(self.user.as_str())),
+                    ("project", Json::str(self.project.as_str())),
+                    ("requests", resources_to_json(&self.requests)),
+                    ("duration", Json::num(self.duration)),
+                    ("priority", Json::str(self.priority.as_str())),
+                    ("offloadable", Json::Bool(self.offloadable)),
+                ];
+                if !self.queue.is_empty() {
+                    f.push(("queue", Json::str(self.queue.as_str())));
+                }
+                if !self.restart_policy.is_empty() {
+                    f.push(("restartPolicy", Json::str(self.restart_policy.as_str())));
+                }
+                f
+            }),
             Json::obj({
                 let mut f = vec![("state", Json::str(self.state.as_str()))];
                 if let Some(p) = &self.live_pod {
                     f.push(("livePod", Json::str(p.as_str())));
                 }
                 f.push(("retries", Json::num(self.retries as f64)));
-                if !self.restart_policy.is_empty() {
-                    f.push(("restartPolicy", Json::str(self.restart_policy.as_str())));
-                }
+                f.push(("conditions", conditions_to_json(&self.conditions)));
                 f
             }),
         )
@@ -425,10 +553,12 @@ impl BatchJobResource {
             duration: opt_num(spec, "duration").unwrap_or(0.0),
             priority: opt_str(spec, "priority").unwrap_or_else(|| "batch".to_string()),
             offloadable: spec.get("offloadable").and_then(Json::as_bool).unwrap_or(false),
+            queue: opt_str(spec, "queue").unwrap_or_default(),
+            restart_policy: opt_str(spec, "restartPolicy").unwrap_or_default(),
             state: opt_str(status, "state").unwrap_or_default(),
             live_pod: opt_str(status, "livePod"),
             retries: opt_num(status, "retries").unwrap_or(0.0) as u32,
-            restart_policy: opt_str(status, "restartPolicy").unwrap_or_default(),
+            conditions: conditions_from_json(status.get("conditions"))?,
         })
     }
 }
@@ -454,6 +584,16 @@ pub struct PodView {
 
 impl PodView {
     pub fn from_pod(pod: &Pod, resource_version: u64) -> PodView {
+        // ownership is declared on the dependent: a session pod is owned by
+        // its Session, a batch pod by its Workload — the GC reconciler
+        // cascades owner deletion onto these references.
+        let mut owner_references = Vec::new();
+        if let Some(sid) = pod.spec.labels.get("aiinfn/session") {
+            owner_references.push(OwnerReference::controller(ResourceKind::Session, sid.clone()));
+        }
+        if let Some(wl) = pod.spec.labels.get("aiinfn/workload") {
+            owner_references.push(OwnerReference::controller(ResourceKind::Workload, wl.clone()));
+        }
         let scheduled = pod.status.node.is_some();
         let running = pod.status.phase == PodPhase::Running;
         let conditions = vec![
@@ -481,6 +621,8 @@ impl PodView {
                 namespace: pod.spec.namespace.clone(),
                 labels: pod.spec.labels.clone(),
                 resource_version,
+                owner_references,
+                ..Default::default()
             },
             requests: pod.spec.requests.clone(),
             user: pod.spec.user.clone(),
@@ -571,6 +713,7 @@ impl NodeView {
                 namespace: "cluster".to_string(),
                 labels: node.labels.clone(),
                 resource_version,
+                ..Default::default()
             },
             capacity: node.capacity.clone(),
             allocatable: node.allocatable.clone(),
@@ -640,6 +783,7 @@ impl WorkloadView {
                 namespace: w.queue.clone(),
                 labels: BTreeMap::new(),
                 resource_version,
+                ..Default::default()
             },
             queue: w.queue.clone(),
             priority: priority_str(w.priority).to_string(),
@@ -790,6 +934,17 @@ impl ApiObject {
         }
     }
 
+    pub fn metadata_mut(&mut self) -> &mut Metadata {
+        match self {
+            ApiObject::Session(x) => &mut x.metadata,
+            ApiObject::BatchJob(x) => &mut x.metadata,
+            ApiObject::Pod(x) => &mut x.metadata,
+            ApiObject::Node(x) => &mut x.metadata,
+            ApiObject::Workload(x) => &mut x.metadata,
+            ApiObject::Site(x) => &mut x.metadata,
+        }
+    }
+
     pub fn name(&self) -> &str {
         &self.metadata().name
     }
@@ -889,7 +1044,12 @@ mod tests {
     fn json_roundtrip_every_kind() {
         let objects = vec![
             ApiObject::Session(SessionResource {
-                metadata: meta("session-alice-0001", "hub", 7),
+                metadata: {
+                    let mut m = meta("session-alice-0001", "hub", 7);
+                    m.finalizers = vec!["aiinfn.io/archive-home".into()];
+                    m.deletion_timestamp = Some(99.5);
+                    m
+                },
                 user: "alice".into(),
                 profile: "tensorflow-mig-1g".into(),
                 pod_name: "jupyter-session-alice-0001".into(),
@@ -897,19 +1057,27 @@ mod tests {
                 phase: "Running".into(),
                 bucket_mount: Some("/home/alice/bucket".into()),
                 started_at: 12.5,
+                conditions: vec![Condition::new("Ready", true, "Running", "up", 13.0)],
             }),
             ApiObject::BatchJob(BatchJobResource {
-                metadata: meta("wl-job-000001", "batch", 9),
+                metadata: {
+                    let mut m = meta("wl-job-000001", "batch", 9);
+                    m.owner_references =
+                        vec![OwnerReference::controller(ResourceKind::Session, "session-x")];
+                    m
+                },
                 user: "bob".into(),
                 project: "project03".into(),
                 requests: rv_sample(),
                 duration: 600.0,
                 priority: "batch-high".into(),
                 offloadable: true,
+                queue: "batch".into(),
+                restart_policy: "OnFailure(max=4)".into(),
                 state: "Admitted".into(),
                 live_pod: Some("job-000001-r1".into()),
                 retries: 2,
-                restart_policy: "OnFailure(max=4)".into(),
+                conditions: Vec::new(),
             }),
             ApiObject::Pod(PodView {
                 metadata: meta("job-000001-r1", "batch", 11),

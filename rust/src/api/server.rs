@@ -1,18 +1,40 @@
 //! The API server: uniform verbs over typed resources, bearer-token auth,
-//! and the pump that feeds store/kueue transitions into the watch log.
+//! optimistic concurrency, the admission chain, the deletion lifecycle
+//! (finalizers + ownerReferences garbage collection), and the pump that
+//! feeds store/kueue/health transitions into the watch log.
 //!
 //! [`ApiServer`] *owns* the [`Platform`]. Consumers authenticate with
-//! [`login`](ApiServer::login) (the hub IAM flow), then use
-//! `create`/`get`/`list`/`delete`/`watch`. Subsystems the control plane does
-//! not model (TSDB dashboards, the NFS filesystem, the user registry) stay
-//! reachable through [`platform`](ApiServer::platform) /
-//! [`platform_mut`](ApiServer::platform_mut).
+//! [`login`](ApiServer::login) (the hub IAM flow), then use the read verbs
+//! (`get`/`list`/`watch`) and the declarative write path:
+//!
+//! * `create` — admit + provision a new Session / BatchJob.
+//! * `update` — replace the spec; stale `metadata.resourceVersion` ⇒
+//!   [`ApiError::Conflict`]; immutable fields enforced by admission.
+//! * `patch` — strategic merge on `spec` (and `metadata.labels` /
+//!   `metadata.finalizers`), then the update path.
+//! * `apply` — create-or-update upsert (the `kubectl apply` idiom).
+//! * `update_status` — the status subresource: writes conditions only,
+//!   never the spec, so spec and status writers cannot clobber each other.
+//! * `delete` — returns the **final object**; with pending finalizers the
+//!   object enters a terminating state (`deletionTimestamp` set) until its
+//!   reconciler clears them; otherwise the API-level tombstone is
+//!   immediate and the platform teardown converges through the GC
+//!   reconciler, which cascades over `metadata.ownerReferences`.
+//!
+//! Every write runs the ordered admission chain
+//! ([`crate::api::admission`]): defaulting from [`PlatformConfig`], then
+//! validation, then immutable-field checks.
+//!
+//! Subsystems the control plane does not model (TSDB dashboards, the NFS
+//! filesystem, the user registry) stay reachable through
+//! [`platform`](ApiServer::platform) / [`platform_mut`](ApiServer::platform_mut).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
+use crate::api::admission::{AdmissionChain, AdmissionCtx, WriteVerb};
 use crate::api::resources::{
-    parse_priority, phase_str, workload_state_str, ApiObject, BatchJobResource, Condition,
-    Metadata, NodeView, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
+    parse_priority, phase_str, priority_str, workload_state_str, ApiObject, BatchJobResource,
+    Condition, Metadata, NodeView, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
 };
 use crate::api::watch::{EventType, WatchEvent, WatchLog};
 use crate::api::ApiError;
@@ -24,17 +46,44 @@ use crate::hub::spawner::{Session, SpawnError};
 use crate::offload::health::HealthStatus;
 use crate::offload::vk::VirtualKubelet;
 use crate::platform::config::PlatformConfig;
-use crate::platform::facade::{BatchJob, Platform, RestartPolicy};
+use crate::platform::facade::{BatchJob, BatchSubmission, Platform, RestartPolicy};
 use crate::queue::kueue::WorkloadState;
 use crate::sim::clock::Time;
 use crate::util::json::Json;
 
-/// Label + field selectors for `list` (the `kubectl -l app=batch
-/// --field-selector status.phase=Running` idiom).
+// ---------------------------------------------------------------- selectors
+
+/// One selector requirement on a key (label) or a dotted path (field).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectorOp {
+    /// `key=value` / `key==value`
+    Eq(String),
+    /// `key!=value` — matches when the key is absent or different
+    Ne(String),
+    /// `key in (a,b,c)`
+    In(Vec<String>),
+    /// `key notin (a,b,c)` — matches when absent or not a member
+    NotIn(Vec<String>),
+}
+
+impl SelectorOp {
+    fn matches_str(&self, got: Option<&str>) -> bool {
+        match self {
+            SelectorOp::Eq(want) => got == Some(want.as_str()),
+            SelectorOp::Ne(want) => got != Some(want.as_str()),
+            SelectorOp::In(set) => got.map(|g| set.iter().any(|w| w == g)).unwrap_or(false),
+            SelectorOp::NotIn(set) => !got.map(|g| set.iter().any(|w| w == g)).unwrap_or(false),
+        }
+    }
+}
+
+/// Label + field selectors for `list` (the `kubectl -l 'app in (batch,ml)'
+/// --field-selector status.phase!=Running` idiom). Supported operators:
+/// `=`, `==`, `!=`, `in (…)`, `notin (…)`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Selector {
-    labels: Vec<(String, String)>,
-    fields: Vec<(String, String)>,
+    labels: Vec<(String, SelectorOp)>,
+    fields: Vec<(String, SelectorOp)>,
 }
 
 impl Selector {
@@ -43,7 +92,8 @@ impl Selector {
         Selector::default()
     }
 
-    /// Parse a comma-separated label selector, e.g. `"app=batch,tier=gpu"`.
+    /// Parse a comma-separated label selector, e.g.
+    /// `"app=batch,tier!=gpu,site in (t1,bari)"`.
     pub fn labels(expr: &str) -> Result<Selector, ApiError> {
         Selector::parse(expr, "")
     }
@@ -55,29 +105,19 @@ impl Selector {
 
     /// Parse both expressions (either may be empty).
     pub fn parse(label_expr: &str, field_expr: &str) -> Result<Selector, ApiError> {
-        fn split(expr: &str, what: &str) -> Result<Vec<(String, String)>, ApiError> {
-            let mut out = Vec::new();
-            for term in expr.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-                let (k, v) = term.split_once('=').ok_or_else(|| {
-                    ApiError::Invalid(format!("{what} selector term {term:?} is not key=value"))
-                })?;
-                if k.trim().is_empty() {
-                    return Err(ApiError::Invalid(format!("{what} selector has empty key")));
-                }
-                out.push((k.trim().to_string(), v.trim().to_string()));
-            }
-            Ok(out)
-        }
-        Ok(Selector { labels: split(label_expr, "label")?, fields: split(field_expr, "field")? })
+        Ok(Selector {
+            labels: parse_requirements(label_expr, "label")?,
+            fields: parse_requirements(field_expr, "field")?,
+        })
     }
 
     pub fn with_label(mut self, k: &str, v: &str) -> Selector {
-        self.labels.push((k.to_string(), v.to_string()));
+        self.labels.push((k.to_string(), SelectorOp::Eq(v.to_string())));
         self
     }
 
     pub fn with_field(mut self, path: &str, v: &str) -> Selector {
-        self.fields.push((path.to_string(), v.to_string()));
+        self.fields.push((path.to_string(), SelectorOp::Eq(v.to_string())));
         self
     }
 
@@ -87,23 +127,22 @@ impl Selector {
 
     /// Match against a serialized object.
     pub fn matches(&self, obj: &Json) -> bool {
-        for (k, v) in &self.labels {
+        for (k, op) in &self.labels {
             let got = obj.at(&["metadata", "labels"]).and_then(|l| l.get(k)).and_then(Json::as_str);
-            if got != Some(v.as_str()) {
+            if !op.matches_str(got) {
                 return false;
             }
         }
-        for (path, want) in &self.fields {
+        for (path, op) in &self.fields {
             let parts: Vec<&str> = path.split('.').collect();
             let got = obj.at(&parts);
-            let matches = match got {
-                Some(Json::Str(s)) => s == want,
-                Some(Json::Num(n)) => want.parse::<f64>().map(|w| w == *n).unwrap_or(false),
-                Some(Json::Bool(b)) => want.parse::<bool>().map(|w| w == *b).unwrap_or(false),
-                Some(Json::Null) => want == "null",
-                _ => false,
+            let matched = match op {
+                SelectorOp::Eq(want) => field_eq(got, want),
+                SelectorOp::Ne(want) => !field_eq(got, want),
+                SelectorOp::In(set) => set.iter().any(|w| field_eq(got, w)),
+                SelectorOp::NotIn(set) => !set.iter().any(|w| field_eq(got, w)),
             };
-            if !matches {
+            if !matched {
                 return false;
             }
         }
@@ -111,10 +150,130 @@ impl Selector {
     }
 }
 
+/// Compare a JSON field against a selector literal.
+fn field_eq(got: Option<&Json>, want: &str) -> bool {
+    match got {
+        Some(Json::Str(s)) => s == want,
+        Some(Json::Num(n)) => want.parse::<f64>().map(|w| w == *n).unwrap_or(false),
+        Some(Json::Bool(b)) => want.parse::<bool>().map(|w| w == *b).unwrap_or(false),
+        Some(Json::Null) => want == "null",
+        _ => false,
+    }
+}
+
+/// Split a selector expression on top-level commas (commas inside the
+/// parentheses of a set literal do not separate terms).
+fn split_terms(expr: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in expr.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&expr[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&expr[start..]);
+    out
+}
+
+fn parse_requirements(expr: &str, what: &str) -> Result<Vec<(String, SelectorOp)>, ApiError> {
+    let mut out = Vec::new();
+    for term in split_terms(expr).into_iter().map(str::trim).filter(|t| !t.is_empty()) {
+        let (key, op) = parse_term(term, what)?;
+        if key.is_empty() {
+            return Err(ApiError::Invalid(format!("{what} selector has empty key")));
+        }
+        out.push((key, op));
+    }
+    Ok(out)
+}
+
+fn parse_term(term: &str, what: &str) -> Result<(String, SelectorOp), ApiError> {
+    // set-based first: `key notin (a,b)` / `key in (a,b)`
+    if let Some(pos) = term.find(" notin ") {
+        let key = term[..pos].trim().to_string();
+        let set = parse_set(&term[pos + " notin ".len()..], what, term)?;
+        return Ok((key, SelectorOp::NotIn(set)));
+    }
+    if let Some(pos) = term.find(" in ") {
+        let key = term[..pos].trim().to_string();
+        let set = parse_set(&term[pos + " in ".len()..], what, term)?;
+        return Ok((key, SelectorOp::In(set)));
+    }
+    if let Some((k, v)) = term.split_once("!=") {
+        return Ok((k.trim().to_string(), SelectorOp::Ne(v.trim().to_string())));
+    }
+    if let Some((k, v)) = term.split_once("==") {
+        return Ok((k.trim().to_string(), SelectorOp::Eq(v.trim().to_string())));
+    }
+    if let Some((k, v)) = term.split_once('=') {
+        return Ok((k.trim().to_string(), SelectorOp::Eq(v.trim().to_string())));
+    }
+    Err(ApiError::Invalid(format!(
+        "{what} selector term {term:?} is not key=value, key!=value, or a set expression"
+    )))
+}
+
+fn parse_set(raw: &str, what: &str, term: &str) -> Result<Vec<String>, ApiError> {
+    let raw = raw.trim();
+    let inner = raw
+        .strip_prefix('(')
+        .and_then(|r| r.strip_suffix(')'))
+        .ok_or_else(|| {
+            ApiError::Invalid(format!(
+                "{what} selector term {term:?}: set must be parenthesized, e.g. `key in (a,b)`"
+            ))
+        })?;
+    let values: Vec<String> = inner
+        .split(',')
+        .map(str::trim)
+        .filter(|v| !v.is_empty())
+        .map(str::to_string)
+        .collect();
+    if values.is_empty() {
+        return Err(ApiError::Invalid(format!(
+            "{what} selector term {term:?}: set is empty"
+        )));
+    }
+    Ok(values)
+}
+
+// ----------------------------------------------------------- object overlay
+
+/// Per-object control-plane state the platform does not model: the
+/// object's current resourceVersion (optimistic concurrency), finalizers,
+/// the deletion timestamp, the API-level tombstone, status-subresource
+/// conditions, and overlay labels for server-projected kinds.
+#[derive(Debug, Clone, Default)]
+struct ObjectState {
+    /// resourceVersion of the newest watch event for this object; writes
+    /// carrying a different non-zero version fail with `Conflict`.
+    rv: u64,
+    finalizers: Vec<String>,
+    deletion_timestamp: Option<Time>,
+    /// Deleted at the API level (even if the GC reconciler has not torn
+    /// the platform state down yet): hidden from get/list and the pump.
+    deleted: bool,
+    /// Conditions written through the status subresource.
+    conditions: Vec<Condition>,
+    /// Label overlay for kinds whose labels are server-projected.
+    labels: BTreeMap<String, String>,
+}
+
 /// The control-plane front door. See [`crate::api`] for the verb table.
 pub struct ApiServer {
     platform: Platform,
     log: WatchLog,
+    admission: AdmissionChain,
+    /// Per-object overlay state, keyed kind → name (nested so read-path
+    /// lookups borrow the name instead of allocating a key tuple).
+    objects: HashMap<ResourceKind, HashMap<String, ObjectState>>,
     /// High-water marks into the store event list / kueue transition log /
     /// site-health transition log.
     store_seen: usize,
@@ -129,6 +288,8 @@ impl ApiServer {
         let mut api = ApiServer {
             platform,
             log: WatchLog::default(),
+            admission: AdmissionChain::standard(),
+            objects: HashMap::new(),
             store_seen: 0,
             kueue_seen: 0,
             health_seen: 0,
@@ -203,12 +364,103 @@ impl ApiServer {
             .ok_or_else(|| ApiError::Forbidden("invalid or expired bearer token".into()))
     }
 
+    // --------------------------------------------------- overlay plumbing
+
+    fn obj_state(&self, kind: ResourceKind, name: &str) -> Option<&ObjectState> {
+        self.objects.get(&kind).and_then(|m| m.get(name))
+    }
+
+    fn obj_state_mut(&mut self, kind: ResourceKind, name: &str) -> &mut ObjectState {
+        self.objects.entry(kind).or_default().entry(name.to_string()).or_default()
+    }
+
+    fn is_deleted(&self, kind: ResourceKind, name: &str) -> bool {
+        self.obj_state(kind, name).map(|s| s.deleted).unwrap_or(false)
+    }
+
+    /// The object's current resourceVersion (falls back to the newest log
+    /// version for objects that have never been evented individually).
+    fn rv_of(&self, kind: ResourceKind, name: &str) -> u64 {
+        self.obj_state(kind, name)
+            .map(|s| s.rv)
+            .filter(|rv| *rv > 0)
+            .unwrap_or_else(|| self.log.last_rv())
+    }
+
+    /// Optimistic concurrency: a write carrying a non-zero
+    /// `metadata.resourceVersion` must match the object's current version.
+    fn check_rv(&self, kind: ResourceKind, name: &str, given: u64) -> Result<(), ApiError> {
+        if given == 0 {
+            return Ok(()); // unconditional write
+        }
+        let current = self.rv_of(kind, name);
+        if given != current {
+            return Err(ApiError::Conflict(format!(
+                "stale resourceVersion for {}/{name}: got {given}, current {current}",
+                kind.as_str()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Append a watch event and advance the object's tracked version.
+    fn append_event(
+        &mut self,
+        kind: ResourceKind,
+        event: EventType,
+        name: &str,
+        at: Time,
+        object: Option<Json>,
+    ) -> u64 {
+        let rv = self.log.append(kind, event, name, at, object);
+        self.obj_state_mut(kind, name).rv = rv;
+        rv
+    }
+
+    /// Merge overlay state (finalizers, deletionTimestamp, conditions,
+    /// label overlay) into a freshly built view.
+    fn apply_overlay(
+        &self,
+        kind: ResourceKind,
+        meta: &mut Metadata,
+        conditions: Option<&mut Vec<Condition>>,
+    ) {
+        if let Some(st) = self.obj_state(kind, &meta.name) {
+            for (k, v) in &st.labels {
+                meta.labels.insert(k.clone(), v.clone());
+            }
+            meta.finalizers = st.finalizers.clone();
+            meta.deletion_timestamp = st.deletion_timestamp;
+            if let Some(c) = conditions {
+                if !st.conditions.is_empty() {
+                    *c = st.conditions.clone();
+                }
+            }
+        }
+    }
+
     // -------------------------------------------------------------- verbs
 
     /// Create a writable resource (Session or BatchJob) owned by the caller.
     pub fn create(&mut self, token: &str, obj: &ApiObject) -> Result<ApiObject, ApiError> {
+        self.create_with_verb(token, obj, WriteVerb::Create)
+    }
+
+    fn create_with_verb(
+        &mut self,
+        token: &str,
+        obj: &ApiObject,
+        verb: WriteVerb,
+    ) -> Result<ApiObject, ApiError> {
         let caller = self.authenticate(token)?;
-        match obj {
+        // the admission chain defaults omitted spec fields, validates the
+        // result, and refuses read-only kinds
+        let mut admitted = obj.clone();
+        {
+            let ctx = AdmissionCtx { verb, config: &self.platform.config, old: None };
+            self.admission.run(&ctx, &mut admitted)?;
+        }
+        match &admitted {
             ApiObject::Session(req) => {
                 if req.user != caller {
                     return Err(ApiError::Forbidden(format!(
@@ -226,20 +478,21 @@ impl ApiServer {
                     .platform
                     .spawn_session(&caller, &profile)
                     .map_err(map_spawn_error)?;
+                {
+                    let state = self.obj_state_mut(ResourceKind::Session, &sid);
+                    state.finalizers = req.metadata.finalizers.clone();
+                    state.labels = req.metadata.labels.clone();
+                }
                 self.pump();
                 let session = self.platform.session(&sid).cloned().ok_or_else(|| {
                     ApiError::Invalid(format!("session {sid} vanished after spawn"))
                 })?;
                 let rv = self.log.next_rv();
-                let view = self.session_view(&session, rv);
+                let mut view = self.session_view(&session, rv);
                 let now = self.platform.now();
-                self.log.append(
-                    ResourceKind::Session,
-                    EventType::Added,
-                    &sid,
-                    now,
-                    Some(view.to_json()),
-                );
+                let json = view.to_json();
+                self.append_event(ResourceKind::Session, EventType::Added, &sid, now, Some(json));
+                view.metadata.resource_version = rv;
                 Ok(ApiObject::Session(view))
             }
             ApiObject::BatchJob(req) => {
@@ -250,20 +503,26 @@ impl ApiServer {
                     )));
                 }
                 let priority = parse_priority(&req.priority)?;
-                if req.requests.is_empty() {
-                    return Err(ApiError::Invalid("batch job requests no resources".into()));
-                }
+                let restart_policy = RestartPolicy::parse(&req.restart_policy)
+                    .ok_or_else(|| {
+                        ApiError::Invalid(format!("bad restartPolicy {:?}", req.restart_policy))
+                    })?;
                 let wl = self
                     .platform
-                    .submit_batch(
-                        &req.user,
-                        &req.project,
-                        req.requests.clone(),
-                        req.duration,
+                    .submit_batch_job(BatchSubmission {
+                        user: req.user.clone(),
+                        project: req.project.clone(),
+                        requests: req.requests.clone(),
+                        duration: req.duration,
                         priority,
-                        req.offloadable,
-                    )
+                        offloadable: req.offloadable,
+                        restart_policy,
+                        queue: req.queue.clone(),
+                        labels: req.metadata.labels.clone(),
+                    })
                     .map_err(|e| ApiError::Invalid(e.to_string()))?;
+                self.obj_state_mut(ResourceKind::BatchJob, &wl).finalizers =
+                    req.metadata.finalizers.clone();
                 self.pump();
                 self.emit_batch_job(&wl, EventType::Added);
                 self.get_batch_job(&wl)
@@ -273,6 +532,393 @@ impl ApiServer {
                 other.kind().as_str()
             ))),
         }
+    }
+
+    /// Replace a writable object's spec (declarative update). Enforces
+    /// ownership, optimistic concurrency (`Conflict` on a stale
+    /// `metadata.resourceVersion`), and the admission chain (immutable
+    /// fields). Returns the stored object.
+    pub fn update(&mut self, token: &str, obj: &ApiObject) -> Result<ApiObject, ApiError> {
+        self.write_spec(token, obj.clone(), WriteVerb::Update)
+    }
+
+    /// Create-or-update upsert: `create` when the object has no name yet
+    /// (names are server-generated), otherwise `update` semantics. The
+    /// `kubectl apply` idiom. Applying a *named* object that no longer
+    /// exists is `NotFound` — re-creating under a fresh name would make
+    /// repeated applies diverge instead of converge.
+    pub fn apply(&mut self, token: &str, obj: &ApiObject) -> Result<ApiObject, ApiError> {
+        let kind = obj.kind();
+        if !matches!(kind, ResourceKind::Session | ResourceKind::BatchJob) {
+            return Err(ApiError::Invalid(format!(
+                "kind {} is read-only (server-projected)",
+                kind.as_str()
+            )));
+        }
+        let name = obj.name();
+        if name.is_empty() {
+            return self.create_with_verb(token, obj, WriteVerb::Apply);
+        }
+        let exists = !self.is_deleted(kind, name)
+            && match kind {
+                ResourceKind::Session => self.platform.session(name).is_some(),
+                ResourceKind::BatchJob => self.platform.batch_jobs.contains_key(name),
+                _ => false,
+            };
+        if !exists {
+            return Err(ApiError::NotFound(format!("{}/{name}", kind.as_str())));
+        }
+        self.write_spec(token, obj.clone(), WriteVerb::Apply)
+    }
+
+    /// Strategic-merge patch on `spec` (plus `metadata.labels`, merged, and
+    /// `metadata.finalizers`, replaced). `null` deletes a key. A
+    /// `metadata.resourceVersion` in the patch is an optimistic-concurrency
+    /// precondition; omitting it patches unconditionally.
+    pub fn patch(
+        &mut self,
+        token: &str,
+        kind: ResourceKind,
+        name: &str,
+        patch: &Json,
+    ) -> Result<ApiObject, ApiError> {
+        self.authenticate(token)?;
+        if !matches!(kind, ResourceKind::Session | ResourceKind::BatchJob) {
+            return Err(ApiError::Invalid(format!(
+                "kind {} is read-only (server-projected)",
+                kind.as_str()
+            )));
+        }
+        if self.is_deleted(kind, name) {
+            return Err(ApiError::NotFound(format!("{}/{name}", kind.as_str())));
+        }
+        let base = self.view_of(kind, name, self.rv_of(kind, name))?;
+        let merged = merge_for_patch(&base.to_json(), patch);
+        let mut new_obj = ApiObject::from_json(&merged)?;
+        let given_rv = patch
+            .at(&["metadata", "resourceVersion"])
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        new_obj.metadata_mut().resource_version = given_rv;
+        self.write_spec(token, new_obj, WriteVerb::Patch)
+    }
+
+    /// The status subresource: replace the object's conditions without
+    /// touching the spec (and conversely, spec writes never touch
+    /// conditions) — concurrent spec/status writers cannot clobber each
+    /// other.
+    pub fn update_status(&mut self, token: &str, obj: &ApiObject) -> Result<ApiObject, ApiError> {
+        let caller = self.authenticate(token)?;
+        let kind = obj.kind();
+        let name = obj.name().to_string();
+        let conditions = match obj {
+            ApiObject::Session(s) => s.conditions.clone(),
+            ApiObject::BatchJob(j) => j.conditions.clone(),
+            other => {
+                return Err(ApiError::Invalid(format!(
+                    "kind {} has no writable status subresource",
+                    other.kind().as_str()
+                )))
+            }
+        };
+        if self.is_deleted(kind, &name) {
+            return Err(ApiError::NotFound(format!("{}/{name}", kind.as_str())));
+        }
+        let old = self.view_of(kind, &name, self.rv_of(kind, &name))?;
+        self.check_owner(&old, &caller)?;
+        self.check_rv(kind, &name, obj.metadata().resource_version)?;
+        self.obj_state_mut(kind, &name).conditions = conditions;
+        self.emit_writable_modified(kind, &name)
+    }
+
+    /// Shared update-style write path: ownership, concurrency, admission,
+    /// then spec application and a `Modified` watch event.
+    fn write_spec(
+        &mut self,
+        token: &str,
+        obj: ApiObject,
+        verb: WriteVerb,
+    ) -> Result<ApiObject, ApiError> {
+        let caller = self.authenticate(token)?;
+        let kind = obj.kind();
+        let name = obj.name().to_string();
+        if !matches!(kind, ResourceKind::Session | ResourceKind::BatchJob) {
+            return Err(ApiError::Invalid(format!(
+                "kind {} is read-only (server-projected)",
+                kind.as_str()
+            )));
+        }
+        if self.is_deleted(kind, &name) {
+            return Err(ApiError::NotFound(format!("{}/{name}", kind.as_str())));
+        }
+        let old = self.view_of(kind, &name, self.rv_of(kind, &name))?;
+        self.check_owner(&old, &caller)?;
+        self.check_rv(kind, &name, obj.metadata().resource_version)?;
+        let mut admitted = obj;
+        {
+            let ctx = AdmissionCtx { verb, config: &self.platform.config, old: Some(&old) };
+            self.admission.run(&ctx, &mut admitted)?;
+        }
+        match &admitted {
+            ApiObject::Session(s) => {
+                // spec is immutable (admission); metadata is the mutable
+                // surface — labels overlay + finalizers
+                let state = self.obj_state_mut(kind, &name);
+                state.labels = s.metadata.labels.clone();
+                state.finalizers = s.metadata.finalizers.clone();
+            }
+            ApiObject::BatchJob(j) => {
+                let policy = RestartPolicy::parse(&j.restart_policy).ok_or_else(|| {
+                    ApiError::Invalid(format!("bad restartPolicy {:?}", j.restart_policy))
+                })?;
+                self.platform
+                    .update_batch_spec(&name, j.offloadable, policy, &j.metadata.labels)
+                    .map_err(|e| ApiError::Invalid(e.to_string()))?;
+                self.obj_state_mut(kind, &name).finalizers = j.metadata.finalizers.clone();
+            }
+            _ => unreachable!("writable kinds only"),
+        }
+        // a terminating object whose finalizers just cleared completes its
+        // deletion now
+        let finish = {
+            let st = self.obj_state(kind, &name);
+            st.map(|s| s.deletion_timestamp.is_some() && s.finalizers.is_empty()).unwrap_or(false)
+        };
+        if finish {
+            return self.finish_delete(kind, &name);
+        }
+        self.emit_writable_modified(kind, &name)
+    }
+
+    /// Fetch one object.
+    pub fn get(&self, token: &str, kind: ResourceKind, name: &str) -> Result<ApiObject, ApiError> {
+        self.authenticate(token)?;
+        if self.is_deleted(kind, name) {
+            return Err(ApiError::NotFound(format!("{}/{name}", kind.as_str())));
+        }
+        self.view_of(kind, name, self.rv_of(kind, name))
+    }
+
+    /// List all objects of a kind, filtered by label/field selectors.
+    pub fn list(
+        &self,
+        token: &str,
+        kind: ResourceKind,
+        selector: &Selector,
+    ) -> Result<Vec<ApiObject>, ApiError> {
+        self.authenticate(token)?;
+        let mut out: Vec<ApiObject> = Vec::new();
+        match kind {
+            ResourceKind::Session => {
+                for s in self.platform.sessions() {
+                    if self.is_deleted(kind, &s.id) {
+                        continue;
+                    }
+                    let rv = self.rv_of(kind, &s.id);
+                    out.push(ApiObject::Session(self.session_view(s, rv)));
+                }
+            }
+            ResourceKind::BatchJob => {
+                let mut jobs: Vec<&BatchJob> = self.platform.batch_jobs.values().collect();
+                jobs.sort_by(|a, b| a.workload.cmp(&b.workload));
+                for j in jobs {
+                    if self.is_deleted(kind, &j.workload) {
+                        continue;
+                    }
+                    let rv = self.rv_of(kind, &j.workload);
+                    out.push(ApiObject::BatchJob(self.batch_job_view(j, rv)));
+                }
+            }
+            ResourceKind::Pod => {
+                let st = self.platform.cluster();
+                let mut pods: Vec<_> = st.pods().collect();
+                pods.sort_by(|a, b| a.spec.name.cmp(&b.spec.name));
+                for p in pods {
+                    if self.is_deleted(kind, &p.spec.name) {
+                        continue;
+                    }
+                    let rv = self.rv_of(kind, &p.spec.name);
+                    out.push(ApiObject::Pod(PodView::from_pod(p, rv)));
+                }
+            }
+            ResourceKind::Node => {
+                let st = self.platform.cluster();
+                for n in st.nodes() {
+                    let free = st.free_on(&n.name).cloned().unwrap_or_default();
+                    let rv = self.rv_of(kind, &n.name);
+                    out.push(ApiObject::Node(NodeView::from_node(n, free, rv)));
+                }
+            }
+            ResourceKind::Workload => {
+                let mut wls: Vec<_> = self.platform.kueue.workloads().collect();
+                wls.sort_by(|a, b| a.name.cmp(&b.name));
+                for w in wls {
+                    if self.is_deleted(kind, &w.name) {
+                        continue;
+                    }
+                    let rv = self.rv_of(kind, &w.name);
+                    out.push(ApiObject::Workload(WorkloadView::from_workload(w, rv)));
+                }
+            }
+            ResourceKind::Site => {
+                for vk in &self.platform.vks {
+                    let rv = self.rv_of(kind, &vk.site);
+                    out.push(ApiObject::Site(self.site_view(vk, rv)));
+                }
+            }
+        }
+        if selector.is_empty() {
+            return Ok(out);
+        }
+        Ok(out.into_iter().filter(|o| selector.matches(&o.to_json())).collect())
+    }
+
+    /// Delete an object owned by the caller, returning the **final
+    /// object**. With pending finalizers the object only enters the
+    /// terminating state (`metadata.deletionTimestamp` set, `Modified`
+    /// event) until its reconciler clears them; otherwise the API-level
+    /// deletion is immediate (`Deleted` event, object gone from get/list)
+    /// and the platform teardown converges through the GC reconciler:
+    /// deleting a `Workload` cascades to its owned Pods, deleting a
+    /// `Session` cascades to its pod and volume claims.
+    pub fn delete(
+        &mut self,
+        token: &str,
+        kind: ResourceKind,
+        name: &str,
+    ) -> Result<ApiObject, ApiError> {
+        let caller = self.authenticate(token)?;
+        if self.is_deleted(kind, name) {
+            return Err(ApiError::NotFound(format!("{}/{name}", kind.as_str())));
+        }
+        match kind {
+            ResourceKind::Session | ResourceKind::BatchJob => {
+                let old = self.view_of(kind, name, self.rv_of(kind, name))?;
+                self.check_owner(&old, &caller)?;
+                self.delete_writable(kind, name)
+            }
+            ResourceKind::Workload => {
+                // only batch workloads are deletable; interactive ones die
+                // with their Session
+                if self.platform.kueue.workload(name).is_none() {
+                    return Err(ApiError::NotFound(format!("Workload/{name}")));
+                }
+                let owner = self
+                    .platform
+                    .batch_jobs
+                    .get(name)
+                    .map(|j| j.template.user.clone())
+                    .ok_or_else(|| {
+                        ApiError::Invalid(format!(
+                            "workload {name} is not a batch workload; delete its Session instead"
+                        ))
+                    })?;
+                if owner != caller {
+                    return Err(ApiError::Forbidden(format!(
+                        "workload {name} belongs to {owner}"
+                    )));
+                }
+                self.delete_writable(kind, name)
+            }
+            other => Err(ApiError::Invalid(format!(
+                "kind {} cannot be deleted through the API",
+                other.as_str()
+            ))),
+        }
+    }
+
+    /// Ownership check for writable kinds.
+    fn check_owner(&self, obj: &ApiObject, caller: &str) -> Result<(), ApiError> {
+        let owner = match obj {
+            ApiObject::Session(s) => &s.user,
+            ApiObject::BatchJob(j) => &j.user,
+            _ => return Ok(()),
+        };
+        if owner != caller {
+            return Err(ApiError::Forbidden(format!(
+                "{}/{} belongs to {owner}",
+                obj.kind().as_str(),
+                obj.name()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Finalizer-aware deletion for an owner-checked object.
+    fn delete_writable(&mut self, kind: ResourceKind, name: &str) -> Result<ApiObject, ApiError> {
+        let now = self.platform.now();
+        let pending = self
+            .obj_state(kind, name)
+            .map(|s| !s.finalizers.is_empty())
+            .unwrap_or(false);
+        if pending {
+            {
+                let state = self.obj_state_mut(kind, name);
+                if state.deletion_timestamp.is_none() {
+                    state.deletion_timestamp = Some(now);
+                }
+            }
+            return self.emit_writable_modified(kind, name);
+        }
+        self.finish_delete(kind, name)
+    }
+
+    /// Complete a deletion: tombstone the object at the API level, emit the
+    /// `Deleted` event with the final snapshot, and hand the cascade to the
+    /// GC reconciler.
+    fn finish_delete(&mut self, kind: ResourceKind, name: &str) -> Result<ApiObject, ApiError> {
+        let now = self.platform.now();
+        let rv = self.log.next_rv();
+        let mut view = self.view_of(kind, name, rv)?;
+        {
+            let state = self.obj_state_mut(kind, name);
+            if state.deletion_timestamp.is_none() {
+                state.deletion_timestamp = Some(now);
+            }
+            state.deleted = true;
+        }
+        view.metadata_mut().deletion_timestamp =
+            self.obj_state(kind, name).and_then(|s| s.deletion_timestamp);
+        let json = view.to_json();
+        self.append_event(kind, EventType::Deleted, name, now, Some(json));
+        // deleting a Workload also deletes the BatchJob object of the same
+        // name: tombstone it and give BatchJob watchers their Deleted event
+        // (the GC reconciler removes the platform-side record next tick)
+        if kind == ResourceKind::Workload
+            && self.platform.batch_jobs.contains_key(name)
+            && !self.is_deleted(ResourceKind::BatchJob, name)
+        {
+            let job_json = self
+                .platform
+                .batch_jobs
+                .get(name)
+                .map(|j| self.batch_job_view(j, self.log.next_rv()).to_json());
+            {
+                let state = self.obj_state_mut(ResourceKind::BatchJob, name);
+                if state.deletion_timestamp.is_none() {
+                    state.deletion_timestamp = Some(now);
+                }
+                state.deleted = true;
+            }
+            self.append_event(ResourceKind::BatchJob, EventType::Deleted, name, now, job_json);
+        }
+        self.platform.enqueue_deletion(kind, name);
+        Ok(view)
+    }
+
+    /// Emit a `Modified` event for a writable object and return the fresh
+    /// view (stamped with the event's resourceVersion).
+    fn emit_writable_modified(
+        &mut self,
+        kind: ResourceKind,
+        name: &str,
+    ) -> Result<ApiObject, ApiError> {
+        let rv = self.log.next_rv();
+        let view = self.view_of(kind, name, rv)?;
+        let now = self.platform.now();
+        let json = view.to_json();
+        self.append_event(kind, EventType::Modified, name, now, Some(json));
+        Ok(view)
     }
 
     /// Convenience create: an ML training job priced by the cost model, in
@@ -295,166 +941,6 @@ impl ApiServer {
         self.get_batch_job(&wl)
     }
 
-    /// Fetch one object.
-    pub fn get(&self, token: &str, kind: ResourceKind, name: &str) -> Result<ApiObject, ApiError> {
-        self.authenticate(token)?;
-        let rv = self.log.last_rv();
-        match kind {
-            ResourceKind::Session => self
-                .platform
-                .session(name)
-                .map(|s| ApiObject::Session(self.session_view(s, rv)))
-                .ok_or_else(|| ApiError::NotFound(format!("Session/{name}"))),
-            ResourceKind::BatchJob => self.get_batch_job(name),
-            ResourceKind::Pod => {
-                let st = self.platform.cluster();
-                st.pod(name)
-                    .map(|p| ApiObject::Pod(PodView::from_pod(p, rv)))
-                    .ok_or_else(|| ApiError::NotFound(format!("Pod/{name}")))
-            }
-            ResourceKind::Node => {
-                let st = self.platform.cluster();
-                st.node(name)
-                    .map(|n| {
-                        let free = st.free_on(name).cloned().unwrap_or_default();
-                        ApiObject::Node(NodeView::from_node(n, free, rv))
-                    })
-                    .ok_or_else(|| ApiError::NotFound(format!("Node/{name}")))
-            }
-            ResourceKind::Workload => self
-                .platform
-                .kueue
-                .workload(name)
-                .map(|w| ApiObject::Workload(WorkloadView::from_workload(w, rv)))
-                .ok_or_else(|| ApiError::NotFound(format!("Workload/{name}"))),
-            ResourceKind::Site => self
-                .platform
-                .vks
-                .iter()
-                .find(|vk| vk.site == name || vk.node_name == name)
-                .map(|vk| ApiObject::Site(self.site_view(vk, rv)))
-                .ok_or_else(|| ApiError::NotFound(format!("Site/{name}"))),
-        }
-    }
-
-    /// List all objects of a kind, filtered by label/field selectors.
-    pub fn list(
-        &self,
-        token: &str,
-        kind: ResourceKind,
-        selector: &Selector,
-    ) -> Result<Vec<ApiObject>, ApiError> {
-        self.authenticate(token)?;
-        let rv = self.log.last_rv();
-        let mut out: Vec<ApiObject> = Vec::new();
-        match kind {
-            ResourceKind::Session => {
-                for s in self.platform.sessions() {
-                    out.push(ApiObject::Session(self.session_view(s, rv)));
-                }
-            }
-            ResourceKind::BatchJob => {
-                let mut jobs: Vec<&BatchJob> = self.platform.batch_jobs.values().collect();
-                jobs.sort_by(|a, b| a.workload.cmp(&b.workload));
-                for j in jobs {
-                    out.push(ApiObject::BatchJob(self.batch_job_view(j, rv)));
-                }
-            }
-            ResourceKind::Pod => {
-                let st = self.platform.cluster();
-                let mut pods: Vec<_> = st.pods().collect();
-                pods.sort_by(|a, b| a.spec.name.cmp(&b.spec.name));
-                for p in pods {
-                    out.push(ApiObject::Pod(PodView::from_pod(p, rv)));
-                }
-            }
-            ResourceKind::Node => {
-                let st = self.platform.cluster();
-                for n in st.nodes() {
-                    let free = st.free_on(&n.name).cloned().unwrap_or_default();
-                    out.push(ApiObject::Node(NodeView::from_node(n, free, rv)));
-                }
-            }
-            ResourceKind::Workload => {
-                let mut wls: Vec<_> = self.platform.kueue.workloads().collect();
-                wls.sort_by(|a, b| a.name.cmp(&b.name));
-                for w in wls {
-                    out.push(ApiObject::Workload(WorkloadView::from_workload(w, rv)));
-                }
-            }
-            ResourceKind::Site => {
-                for vk in &self.platform.vks {
-                    out.push(ApiObject::Site(self.site_view(vk, rv)));
-                }
-            }
-        }
-        if selector.is_empty() {
-            return Ok(out);
-        }
-        Ok(out.into_iter().filter(|o| selector.matches(&o.to_json())).collect())
-    }
-
-    /// Delete a writable resource owned by the caller: stop a session or
-    /// cancel a batch job.
-    pub fn delete(&mut self, token: &str, kind: ResourceKind, name: &str) -> Result<(), ApiError> {
-        let caller = self.authenticate(token)?;
-        match kind {
-            ResourceKind::Session => {
-                let session = self
-                    .platform
-                    .session(name)
-                    .cloned()
-                    .ok_or_else(|| ApiError::NotFound(format!("Session/{name}")))?;
-                if session.user != caller {
-                    return Err(ApiError::Forbidden(format!(
-                        "session {name} belongs to {}",
-                        session.user
-                    )));
-                }
-                let mut view = self.session_view(&session, 0);
-                self.platform
-                    .stop_session(name, "deleted via API")
-                    .map_err(|e| ApiError::Invalid(e.to_string()))?;
-                self.pump();
-                // stamp the snapshot with the rv the Deleted event receives
-                // (pump() above consumed versions in between)
-                view.metadata.resource_version = self.log.next_rv();
-                let now = self.platform.now();
-                self.log.append(
-                    ResourceKind::Session,
-                    EventType::Deleted,
-                    name,
-                    now,
-                    Some(view.to_json()),
-                );
-                Ok(())
-            }
-            ResourceKind::BatchJob => {
-                let owner = self
-                    .platform
-                    .batch_jobs
-                    .get(name)
-                    .map(|j| j.template.user.clone())
-                    .ok_or_else(|| ApiError::NotFound(format!("BatchJob/{name}")))?;
-                if owner != caller {
-                    return Err(ApiError::Forbidden(format!(
-                        "batch job {name} belongs to {owner}"
-                    )));
-                }
-                self.platform
-                    .cancel_batch(name, "deleted via API")
-                    .map_err(|e| ApiError::Invalid(e.to_string()))?;
-                self.pump();
-                self.emit_batch_job_tombstone(name);
-                Ok(())
-            }
-            other => Err(ApiError::Invalid(format!(
-                "kind {} cannot be deleted through the API",
-                other.as_str()
-            ))),
-        }
-    }
-
     /// The watch stream: events of `kind` after `since_rv`, in version order.
     pub fn watch(
         &self,
@@ -468,13 +954,16 @@ impl ApiServer {
 
     // ----------------------------------------------------------- the pump
 
-    /// Translate new cluster-store events and Kueue transitions into watch
-    /// entries. Deltas only — nothing is re-scanned.
+    /// Translate new cluster-store events, Kueue transitions and site
+    /// health transitions into watch entries. Deltas only — nothing is
+    /// re-scanned. Events for API-tombstoned objects are suppressed.
     fn pump(&mut self) {
+        let store = self.platform.store.clone();
         {
-            let st = self.platform.store.borrow();
+            let st = store.borrow();
             let events = st.events();
-            for ev in &events[self.store_seen..] {
+            let seen = self.store_seen;
+            for ev in &events[seen..] {
                 let (kind, etype, phase_override) = match ev.kind {
                     EventKind::PodCreated => {
                         (ResourceKind::Pod, EventType::Added, Some(PodPhase::Pending))
@@ -497,6 +986,7 @@ impl ApiServer {
                     EventKind::PodUnschedulable => {
                         (ResourceKind::Pod, EventType::Modified, Some(PodPhase::Pending))
                     }
+                    EventKind::PodDeleted => (ResourceKind::Pod, EventType::Deleted, None),
                     EventKind::NodeAdded => (ResourceKind::Node, EventType::Added, None),
                     EventKind::NodeRemoved => (ResourceKind::Node, EventType::Deleted, None),
                     EventKind::NodeModified | EventKind::MigRepartitioned => {
@@ -518,33 +1008,45 @@ impl ApiServer {
                         NodeView::from_node(n, free, rv).to_json()
                     }),
                 };
-                self.log.append(kind, etype, &ev.object, ev.at, object);
+                self.append_event(kind, etype, &ev.object, ev.at, object);
 
                 // a session pod's transitions are also the Session's:
                 // surface them as Modified events on the Session kind
                 // (Added/Deleted come from the create/delete verbs).
-                if kind == ResourceKind::Pod && ev.kind != EventKind::PodCreated {
+                if kind == ResourceKind::Pod
+                    && !matches!(ev.kind, EventKind::PodCreated | EventKind::PodDeleted)
+                {
                     let sid = st
                         .pod(&ev.object)
                         .and_then(|p| p.spec.labels.get("aiinfn/session"))
                         .cloned();
                     if let Some(sid) = sid {
-                        let session =
-                            self.platform.spawner.sessions().iter().find(|s| s.id == sid);
-                        if let Some(session) = session {
+                        if !self.is_deleted(ResourceKind::Session, &sid) {
                             let rv2 = self.log.next_rv();
-                            let mut v = self.session_view(session, rv2);
-                            if let Some(ph) = phase_override {
-                                v.phase = phase_str(ph).to_string();
+                            let obj = {
+                                let session = self
+                                    .platform
+                                    .spawner
+                                    .sessions()
+                                    .iter()
+                                    .find(|s| s.id == sid);
+                                session.map(|s| {
+                                    let mut v = self.session_view(s, rv2);
+                                    if let Some(ph) = phase_override {
+                                        v.phase = phase_str(ph).to_string();
+                                    }
+                                    v.to_json()
+                                })
+                            };
+                            if let Some(obj) = obj {
+                                self.append_event(
+                                    ResourceKind::Session,
+                                    EventType::Modified,
+                                    &sid,
+                                    ev.at,
+                                    Some(obj),
+                                );
                             }
-                            let obj = v.to_json();
-                            self.log.append(
-                                ResourceKind::Session,
-                                EventType::Modified,
-                                &sid,
-                                ev.at,
-                                Some(obj),
-                            );
                         }
                     }
                 }
@@ -556,6 +1058,9 @@ impl ApiServer {
             self.platform.kueue.transitions_since(self.kueue_seen).cloned().collect();
         self.kueue_seen = self.platform.kueue.transition_cursor();
         for t in fresh {
+            if self.is_deleted(ResourceKind::Workload, &t.workload) {
+                continue;
+            }
             let rv = self.log.next_rv();
             let object = self.platform.kueue.workload(&t.workload).map(|w| {
                 let mut v = WorkloadView::from_workload(w, rv);
@@ -566,18 +1071,24 @@ impl ApiServer {
                 WorkloadState::Queued => EventType::Added,
                 _ => EventType::Modified,
             };
-            self.log.append(ResourceKind::Workload, etype, &t.workload, t.at, object);
+            self.append_event(ResourceKind::Workload, etype, &t.workload, t.at, object);
 
             // a batch job's workload transitions are also the BatchJob's:
             // mirror them as Modified events (Added comes from the create
             // verb, the Deleted tombstone from delete).
-            if !matches!(t.state, WorkloadState::Queued) {
-                if let Some(job) = self.platform.batch_jobs.get(&t.workload) {
+            if !matches!(t.state, WorkloadState::Queued)
+                && !self.is_deleted(ResourceKind::BatchJob, &t.workload)
+            {
+                let obj = {
                     let rv2 = self.log.next_rv();
-                    let mut v = self.batch_job_view(job, rv2);
-                    v.state = workload_state_str(&t.state).to_string();
-                    let obj = v.to_json();
-                    self.log.append(
+                    self.platform.batch_jobs.get(&t.workload).map(|job| {
+                        let mut v = self.batch_job_view(job, rv2);
+                        v.state = workload_state_str(&t.state).to_string();
+                        v.to_json()
+                    })
+                };
+                if let Some(obj) = obj {
+                    self.append_event(
                         ResourceKind::BatchJob,
                         EventType::Modified,
                         &t.workload,
@@ -616,11 +1127,56 @@ impl ApiServer {
                     )];
                     view.to_json()
                 });
-            self.log.append(ResourceKind::Site, EventType::Modified, &t.site, t.at, object);
+            self.append_event(ResourceKind::Site, EventType::Modified, &t.site, t.at, object);
         }
     }
 
     // ---------------------------------------------------------- projections
+
+    /// One object's current view, stamped with `rv`.
+    fn view_of(&self, kind: ResourceKind, name: &str, rv: u64) -> Result<ApiObject, ApiError> {
+        match kind {
+            ResourceKind::Session => self
+                .platform
+                .session(name)
+                .map(|s| ApiObject::Session(self.session_view(s, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("Session/{name}"))),
+            ResourceKind::BatchJob => self
+                .platform
+                .batch_jobs
+                .get(name)
+                .map(|j| ApiObject::BatchJob(self.batch_job_view(j, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("BatchJob/{name}"))),
+            ResourceKind::Pod => {
+                let st = self.platform.cluster();
+                st.pod(name)
+                    .map(|p| ApiObject::Pod(PodView::from_pod(p, rv)))
+                    .ok_or_else(|| ApiError::NotFound(format!("Pod/{name}")))
+            }
+            ResourceKind::Node => {
+                let st = self.platform.cluster();
+                st.node(name)
+                    .map(|n| {
+                        let free = st.free_on(name).cloned().unwrap_or_default();
+                        ApiObject::Node(NodeView::from_node(n, free, rv))
+                    })
+                    .ok_or_else(|| ApiError::NotFound(format!("Node/{name}")))
+            }
+            ResourceKind::Workload => self
+                .platform
+                .kueue
+                .workload(name)
+                .map(|w| ApiObject::Workload(WorkloadView::from_workload(w, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("Workload/{name}"))),
+            ResourceKind::Site => self
+                .platform
+                .vks
+                .iter()
+                .find(|vk| vk.site == name || vk.node_name == name)
+                .map(|vk| ApiObject::Site(self.site_view(vk, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("Site/{name}"))),
+        }
+    }
 
     fn session_view(&self, s: &Session, rv: u64) -> SessionResource {
         let phase = self
@@ -633,12 +1189,13 @@ impl ApiServer {
         let mut labels = BTreeMap::new();
         labels.insert("app".to_string(), "jupyterlab".to_string());
         labels.insert("aiinfn/user".to_string(), s.user.clone());
-        SessionResource {
+        let mut res = SessionResource {
             metadata: Metadata {
                 name: s.id.clone(),
                 namespace: "hub".to_string(),
                 labels,
                 resource_version: rv,
+                ..Default::default()
             },
             user: s.user.clone(),
             profile: s.profile.clone(),
@@ -647,31 +1204,39 @@ impl ApiServer {
             phase,
             bucket_mount: s.mount.as_ref().map(|m| m.mount_point.clone()),
             started_at: s.started_at,
-        }
+            conditions: Vec::new(),
+        };
+        let SessionResource { metadata, conditions, .. } = &mut res;
+        self.apply_overlay(ResourceKind::Session, metadata, Some(conditions));
+        res
     }
 
     fn batch_job_view(&self, job: &BatchJob, rv: u64) -> BatchJobResource {
-        let (state, priority) = self
+        let (state, priority, queue) = self
             .platform
             .kueue
             .workload(&job.workload)
             .map(|w| {
                 (
                     workload_state_str(&w.state).to_string(),
-                    crate::api::resources::priority_str(w.priority).to_string(),
+                    priority_str(w.priority).to_string(),
+                    w.queue.clone(),
                 )
             })
-            .unwrap_or_else(|| ("Unknown".to_string(), "batch".to_string()));
-        let restart_policy = match job.restart_policy {
-            RestartPolicy::Never => "Never".to_string(),
-            RestartPolicy::OnFailure { max_retries } => format!("OnFailure(max={max_retries})"),
-        };
-        BatchJobResource {
+            .unwrap_or_else(|| {
+                (
+                    "Unknown".to_string(),
+                    "batch".to_string(),
+                    self.platform.config.batch_queue.clone(),
+                )
+            });
+        let mut res = BatchJobResource {
             metadata: Metadata {
                 name: job.workload.clone(),
                 namespace: job.template.namespace.clone(),
                 labels: job.template.labels.clone(),
                 resource_version: rv,
+                ..Default::default()
             },
             user: job.template.user.clone(),
             project: job.template.project.clone(),
@@ -679,11 +1244,16 @@ impl ApiServer {
             duration: job.duration,
             priority,
             offloadable: job.offloadable,
+            queue,
+            restart_policy: job.restart_policy.render(),
             state,
             live_pod: job.live_pod.clone(),
             retries: job.retries,
-            restart_policy,
-        }
+            conditions: Vec::new(),
+        };
+        let BatchJobResource { metadata, conditions, .. } = &mut res;
+        self.apply_overlay(ResourceKind::BatchJob, metadata, Some(conditions));
+        res
     }
 
     fn site_view(&self, vk: &VirtualKubelet, rv: u64) -> SiteView {
@@ -702,6 +1272,7 @@ impl ApiServer {
                 namespace: "federation".to_string(),
                 labels: BTreeMap::new(),
                 resource_version: rv,
+                ..Default::default()
             },
             site: vk.site.clone(),
             node_name: vk.node_name.clone(),
@@ -716,7 +1287,7 @@ impl ApiServer {
     }
 
     fn get_batch_job(&self, name: &str) -> Result<ApiObject, ApiError> {
-        let rv = self.log.last_rv();
+        let rv = self.rv_of(ResourceKind::BatchJob, name);
         self.platform
             .batch_jobs
             .get(name)
@@ -729,12 +1300,66 @@ impl ApiServer {
         let object =
             self.platform.batch_jobs.get(workload).map(|j| self.batch_job_view(j, rv).to_json());
         let now = self.platform.now();
-        self.log.append(ResourceKind::BatchJob, etype, workload, now, object);
+        self.append_event(ResourceKind::BatchJob, etype, workload, now, object);
     }
+}
 
-    fn emit_batch_job_tombstone(&mut self, workload: &str) {
-        let now = self.platform.now();
-        self.log.append(ResourceKind::BatchJob, EventType::Deleted, workload, now, None);
+/// Merge a strategic-merge patch into a serialized object: `spec` is
+/// deep-merged (`null` deletes a key), `metadata.labels` is merged,
+/// `metadata.finalizers` is replaced. Everything else — status, identity
+/// metadata, kind — is taken from the base object.
+fn merge_for_patch(base: &Json, patch: &Json) -> Json {
+    let mut out = base.clone();
+    if let Some(spec) = patch.get("spec") {
+        let merged = strategic_merge(base.get("spec").unwrap_or(&Json::Null), spec);
+        out = set_field(out, "spec", merged);
+    }
+    if let Some(meta_patch) = patch.get("metadata") {
+        let mut meta = base.get("metadata").cloned().unwrap_or(Json::Obj(Vec::new()));
+        if let Some(labels) = meta_patch.get("labels") {
+            let merged = strategic_merge(meta.get("labels").unwrap_or(&Json::Null), labels);
+            meta = set_field(meta, "labels", merged);
+        }
+        if let Some(finalizers) = meta_patch.get("finalizers") {
+            meta = set_field(meta, "finalizers", finalizers.clone());
+        }
+        out = set_field(out, "metadata", meta);
+    }
+    out
+}
+
+/// Object-aware deep merge: objects merge key-by-key (`null` deletes),
+/// everything else is replaced by the patch value.
+fn strategic_merge(base: &Json, patch: &Json) -> Json {
+    match (base, patch) {
+        (Json::Obj(b), Json::Obj(p)) => {
+            let mut out: Vec<(String, Json)> = b.clone();
+            for (k, v) in p {
+                if matches!(v, Json::Null) {
+                    out.retain(|(bk, _)| bk != k);
+                } else if let Some(slot) = out.iter_mut().find(|(bk, _)| bk == k) {
+                    slot.1 = strategic_merge(&slot.1, v);
+                } else {
+                    out.push((k.clone(), v.clone()));
+                }
+            }
+            Json::Obj(out)
+        }
+        (_, p) => p.clone(),
+    }
+}
+
+fn set_field(obj: Json, key: &str, val: Json) -> Json {
+    match obj {
+        Json::Obj(mut o) => {
+            if let Some(slot) = o.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = val;
+            } else {
+                o.push((key.to_string(), val));
+            }
+            Json::Obj(o)
+        }
+        _ => Json::Obj(vec![(key.to_string(), val)]),
     }
 }
 
@@ -781,6 +1406,12 @@ mod tests {
         ));
         let req = ApiObject::Session(SessionResource::request("user001", "cpu-small"));
         assert!(matches!(a.create(forged, &req), Err(ApiError::Forbidden(_))));
+        assert!(matches!(a.update(forged, &req), Err(ApiError::Forbidden(_))));
+        assert!(matches!(a.apply(forged, &req), Err(ApiError::Forbidden(_))));
+        assert!(matches!(
+            a.patch(forged, ResourceKind::Session, "nope", &Json::Obj(Vec::new())),
+            Err(ApiError::Forbidden(_))
+        ));
         assert!(matches!(
             a.delete(forged, ResourceKind::Session, "nope"),
             Err(ApiError::Forbidden(_))
@@ -820,11 +1451,17 @@ mod tests {
             a.delete(&other, ResourceKind::Session, &sid),
             Err(ApiError::Forbidden(_))
         ));
-        a.delete(&token, ResourceKind::Session, &sid).unwrap();
+        // delete returns the final object (deletionTimestamp set), the API
+        // object is gone immediately, and the GC reconciler tears the
+        // platform state down on the next tick
+        let last = a.delete(&token, ResourceKind::Session, &sid).unwrap();
+        assert!(last.metadata().deletion_timestamp.is_some());
         assert!(matches!(
             a.get(&token, ResourceKind::Session, &sid),
             Err(ApiError::NotFound(_))
         ));
+        a.tick();
+        assert!(a.platform().session(&sid).is_none(), "GC stops the session");
     }
 
     #[test]
@@ -841,6 +1478,10 @@ mod tests {
         ));
         let created = a.create(&token, &req).unwrap();
         let name = created.name().to_string();
+        // admission defaulted queue + restart budget from config
+        let job = created.as_batch_job().unwrap();
+        assert_eq!(job.queue, a.platform().config.batch_queue);
+        assert!(job.restart_policy.starts_with("OnFailure"), "{}", job.restart_policy);
         a.run_for(60.0, 10.0);
         let got = a.get(&token, ResourceKind::BatchJob, &name).unwrap();
         assert_eq!(got.as_batch_job().unwrap().state, "Admitted");
@@ -849,17 +1490,26 @@ mod tests {
             .list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap())
             .unwrap();
         assert_eq!(pods.len(), 1);
+        // the pod carries an ownerReference to its Workload
+        let owners = &pods[0].as_pod().unwrap().metadata.owner_references;
+        assert!(
+            owners.iter().any(|o| o.kind == ResourceKind::Workload && o.name == name),
+            "{owners:?}"
+        );
         // field selector on phase
         let running = a
             .list(&token, ResourceKind::Pod, &Selector::fields("status.phase=Running").unwrap())
             .unwrap();
         assert_eq!(running.len(), 1);
-        a.delete(&token, ResourceKind::BatchJob, &name).unwrap();
+        let last = a.delete(&token, ResourceKind::BatchJob, &name).unwrap();
+        assert!(last.metadata().deletion_timestamp.is_some());
         assert!(matches!(
             a.get(&token, ResourceKind::BatchJob, &name),
             Err(ApiError::NotFound(_))
         ));
-        // the workload view records it as finished
+        // the GC reconciler cancels the job on the next tick; the workload
+        // view then records it as finished
+        a.tick();
         let wl = a.get(&token, ResourceKind::Workload, &name).unwrap();
         assert_eq!(wl.as_workload().unwrap().state, "Finished");
     }
@@ -950,5 +1600,73 @@ mod tests {
         assert!(Selector::labels("appbatch").is_err());
         assert!(Selector::fields("=x").is_err());
         assert!(Selector::parse("", "").unwrap().is_empty());
+        // set-based and inequality operators parse…
+        assert!(Selector::labels("app in (batch,ml),tier!=gpu").is_ok());
+        assert!(Selector::labels("site notin (t1,bari)").is_ok());
+        // …and malformed expressions do not
+        assert!(Selector::labels("app in (batch").is_err(), "unbalanced set");
+        assert!(Selector::labels("app in batch,x=y").is_err(), "set without parens");
+        assert!(Selector::labels("app in ()").is_err(), "empty set");
+        assert!(Selector::labels(" in (a,b)").is_err(), "empty key");
+        assert!(Selector::labels("!=x").is_err(), "empty key on !=");
+    }
+
+    #[test]
+    fn selector_set_and_inequality_semantics() {
+        let mut a = api();
+        let token = a.login("user002").unwrap();
+        for (user, project) in [("user002", "project02"), ("user002", "project03")] {
+            let req = ApiObject::BatchJob(BatchJobResource::request(
+                user,
+                project,
+                ResourceVec::cpu_millis(1000),
+                50.0,
+                PriorityClass::Batch,
+                false,
+            ));
+            a.create(&token, &req).unwrap();
+        }
+        let all = a.list(&token, ResourceKind::BatchJob, &Selector::all()).unwrap();
+        assert_eq!(all.len(), 2);
+        let p2 = a
+            .list(
+                &token,
+                ResourceKind::BatchJob,
+                &Selector::fields("spec.project in (project02,projectXX)").unwrap(),
+            )
+            .unwrap();
+        assert_eq!(p2.len(), 1);
+        let not_p2 = a
+            .list(
+                &token,
+                ResourceKind::BatchJob,
+                &Selector::fields("spec.project!=project02").unwrap(),
+            )
+            .unwrap();
+        assert_eq!(not_p2.len(), 1);
+        let none = a
+            .list(
+                &token,
+                ResourceKind::BatchJob,
+                &Selector::fields("spec.project notin (project02,project03)").unwrap(),
+            )
+            .unwrap();
+        assert!(none.is_empty());
+        // label != matches objects missing the key entirely (K8s semantics)
+        let missing = a
+            .list(&token, ResourceKind::BatchJob, &Selector::labels("ghost!=value").unwrap())
+            .unwrap();
+        assert_eq!(missing.len(), 2);
+    }
+
+    #[test]
+    fn strategic_merge_deletes_on_null_and_merges_nested() {
+        let base = Json::parse(r#"{"a":{"x":1,"y":2},"b":"keep"}"#).unwrap();
+        let patch = Json::parse(r#"{"a":{"x":9,"y":null,"z":3}}"#).unwrap();
+        let merged = strategic_merge(&base, &patch);
+        assert_eq!(merged.at(&["a", "x"]).and_then(Json::as_i64), Some(9));
+        assert!(merged.at(&["a", "y"]).is_none());
+        assert_eq!(merged.at(&["a", "z"]).and_then(Json::as_i64), Some(3));
+        assert_eq!(merged.get("b").and_then(Json::as_str), Some("keep"));
     }
 }

@@ -31,8 +31,12 @@ pub enum EventKind {
     PodFailed,
     PodEvicted,
     /// A pending pod could not be placed this pass (reason in the message);
-    /// recorded once per (pod, reason) by the facade, not every tick.
+    /// recorded once per (pod, reason) by the placement controller, not
+    /// every tick.
     PodUnschedulable,
+    /// The pod object was removed from the store entirely (garbage
+    /// collection cascade) — distinct from a terminal phase transition.
+    PodDeleted,
     NodeAdded,
     NodeRemoved,
     /// Node state changed in place: cordoned/uncordoned, allocatable
@@ -280,6 +284,28 @@ impl ClusterStore {
         Ok(())
     }
 
+    /// Remove a pod object entirely (the ownerReferences GC cascade).
+    /// Releases reserved capacity if the pod was live, drops it from the
+    /// pending queue, and records a `PodDeleted` event.
+    pub fn delete_pod(&mut self, pod_name: &str, at: Time, msg: &str) -> anyhow::Result<()> {
+        self.bump();
+        let pod = self
+            .pods
+            .get(pod_name)
+            .ok_or_else(|| anyhow::anyhow!("no pod {pod_name}"))?;
+        if matches!(pod.status.phase, PodPhase::Scheduled | PodPhase::Running) {
+            if let Some(node) = pod.status.node.clone() {
+                if let Some(free) = self.free.get_mut(&node) {
+                    free.add(&pod.spec.requests);
+                }
+            }
+        }
+        self.pods.remove(pod_name);
+        self.pending.retain(|n| n != pod_name);
+        self.record(at, EventKind::PodDeleted, pod_name, msg);
+        Ok(())
+    }
+
     /// Remove terminal pods older than `before` (GC).
     pub fn gc_finished(&mut self, before: Time) -> usize {
         let victims: Vec<String> = self
@@ -406,6 +432,23 @@ mod tests {
         let (used, total) = s.utilization(true);
         assert_eq!(used.get(CPU), 3000);
         assert_eq!(total.get(CPU), 6000);
+    }
+
+    #[test]
+    fn delete_pod_releases_capacity_and_removes_record() {
+        let mut s = store_with_node();
+        s.create_pod(pod("p1", 2000, 1), 1.0);
+        s.bind("p1", "n1", 2.0).unwrap();
+        s.delete_pod("p1", 3.0, "garbage collected").unwrap();
+        assert!(s.pod("p1").is_none());
+        assert_eq!(s.free_on("n1").unwrap().get(CPU), 6000);
+        assert_eq!(s.free_on("n1").unwrap().get(GPU), 1);
+        assert_eq!(s.events().last().unwrap().kind, EventKind::PodDeleted);
+        assert!(s.delete_pod("p1", 4.0, "again").is_err(), "double delete errors");
+        // deleting a pending pod drops it from the scheduling queue
+        s.create_pod(pod("p2", 1000, 0), 5.0);
+        s.delete_pod("p2", 6.0, "garbage collected").unwrap();
+        assert!(s.pending_pods().is_empty());
     }
 
     #[test]

@@ -33,12 +33,30 @@
 //! External consumers do not poke platform internals: all reads and writes
 //! flow through [`api::ApiServer`] — a Kubernetes-apiserver-like front door
 //! with typed resources (`Session`, `BatchJob`, `Pod`, `Node`, `Workload`,
-//! `Site`), uniform verbs (`create` / `get` / `list` with label and field
-//! selectors / `delete`), bearer-token authentication via the hub's
+//! `Site`), declarative verbs (`create` / `update` / `patch` / `apply` /
+//! `update_status` / `delete`, plus `get` / `list` with `=`/`!=`/`in`/
+//! `notin` selectors), bearer-token authentication via the hub's
 //! [`hub::auth::AuthService`], and `watch` streams serving
 //! `Added`/`Modified`/`Deleted` deltas ordered by a monotonic
-//! `resourceVersion`. See the [`api`] module docs for the verb table, the
-//! resource model, and a before/after migration snippet. [`Platform`]
+//! `resourceVersion`. Writes enforce optimistic concurrency (stale
+//! `resourceVersion` ⇒ `Conflict`) and run the ordered admission chain
+//! ([`api::admission`]: defaulting from config, validation, immutable
+//! fields). Deletion follows the Kubernetes lifecycle: finalizers hold an
+//! object *terminating* until cleared, and the garbage collector cascades
+//! over `metadata.ownerReferences`. See the [`api`] module docs for the
+//! verb table and the resource model.
+//!
+//! ## The reconciler runtime
+//!
+//! [`Platform::tick`](platform::facade::Platform::tick) is a thin
+//! dispatcher over [`platform::reconcile`]: an informer-style runtime that
+//! routes keys derived from the watch deltas (cluster-store events, Kueue
+//! transitions, API deletion intents) to
+//! per-concern controllers — garbage collection, queue admission,
+//! placement + launch, offload status sync, site health / circuit
+//! breaking, job retry/finish, idle-session culling, and monitoring
+//! scrapes — each implementing
+//! [`Reconciler`](platform::reconcile::Reconciler). [`Platform`]
 //! (`platform::facade::Platform`) keeps its subsystem state crate-private;
 //! the few remaining public fields are leaf services (registry, NFS, TSDB,
 //! config) with no control-plane semantics.

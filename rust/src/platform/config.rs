@@ -31,6 +31,11 @@ pub struct PlatformConfig {
     /// Default restart budget for batch jobs whose pods fail remotely
     /// (`RestartPolicy::OnFailure { max_retries }`).
     pub max_remote_retries: u32,
+    /// LocalQueue names: the admission chain defaults `spec.queue` on
+    /// BatchJob writes from `batch_queue`; the hub spawner submits
+    /// interactive workloads to `hub_queue`.
+    pub batch_queue: String,
+    pub hub_queue: String,
     pub idle_timeout: f64,
     pub token_ttl: f64,
     pub users: usize,
@@ -104,6 +109,16 @@ impl PlatformConfig {
                 .at(&["queues", "max_remote_retries"])
                 .and_then(Json::as_i64)
                 .unwrap_or(4) as u32,
+            batch_queue: j
+                .at(&["queues", "batch_queue"])
+                .and_then(Json::as_str)
+                .unwrap_or("batch")
+                .to_string(),
+            hub_queue: j
+                .at(&["queues", "hub_queue"])
+                .and_then(Json::as_str)
+                .unwrap_or("hub")
+                .to_string(),
             idle_timeout: j.at(&["hub", "idle_timeout_hours"]).and_then(Json::as_f64).unwrap_or(2.0) * 3600.0,
             token_ttl: j.at(&["hub", "token_ttl_hours"]).and_then(Json::as_f64).unwrap_or(12.0) * 3600.0,
             users: j.at(&["hub", "users"]).and_then(Json::as_i64).unwrap_or(78) as usize,

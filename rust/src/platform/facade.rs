@@ -1,43 +1,44 @@
 //! The platform facade: wires every subsystem into the running AI_INFN
 //! coordinator and drives it on the discrete-event engine.
 //!
-//! One `tick()` is the controller reconciliation loop a Kubernetes cluster
-//! runs continuously: Kueue admission (with interactive-first preemption),
-//! pod creation for admitted workloads, the scheduling pass, kubelet
-//! launches, Virtual-Kubelet forwarding + status sync for offloaded pods,
-//! idle-session culling, and monitoring scrapes. `run_for()` interleaves
-//! ticks with the event engine so multi-day campaigns run in milliseconds
-//! while remaining event-accurate.
+//! One `tick()` applies due chaos faults ([`crate::sim::chaos`]) and then
+//! delegates to the **informer-driven reconciler runtime**
+//! ([`crate::platform::reconcile`]): per-concern controllers (garbage
+//! collection, Kueue admission, placement + launch, Virtual-Kubelet status
+//! sync, site health/circuit breaking, job retry/finish, idle-session
+//! culling, monitoring scrapes) each converge keys derived from the watch
+//! deltas — the store event log, the Kueue transition log, and the API
+//! server's deletion intents — instead of one monolithic full-state pass. `run_for()` interleaves ticks with the
+//! event engine so multi-day campaigns run in milliseconds while remaining
+//! event-accurate.
 //!
-//! The tick also hosts the **self-healing offload controller**: chaos
-//! faults due at the tick boundary are applied ([`crate::sim::chaos`]),
-//! wire outcomes feed the per-site circuit breaker
-//! ([`crate::offload::health`]), quarantined sites are cordoned and their
-//! workloads requeued through Kueue (fresh pod incarnation on a healthy
-//! site once readmitted), and remotely-failed workloads retry under their
-//! [`RestartPolicy`] budget instead of failing terminally.
+//! The facade itself keeps only bootstrap + wiring, the platform *verbs*
+//! (spawn/stop sessions, submit/cancel batch jobs), shared primitive
+//! actions the controllers call (`requeue_failed_remote`,
+//! `quarantine_site`, `cancel_remote`), fault application, and read
+//! accessors.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
 
+use crate::api::resources::ResourceKind;
 use crate::cluster::kubelet::{default_oracle, Kubelet};
 use crate::cluster::pod::{Payload, PodPhase, PodSpec};
 use crate::cluster::resources::{ResourceVec, MEMORY};
-use crate::cluster::scheduler::{Scheduler, Unschedulable};
+use crate::cluster::scheduler::Scheduler;
 use crate::cluster::store::{ClusterStore, EventKind};
 use crate::gpu::dcgm::DcgmSimulator;
 use crate::hub::auth::AuthService;
 use crate::hub::profiles::Profile;
 use crate::hub::spawner::{SpawnCtx, SpawnError, Spawner};
 use crate::hub::users::Registry;
-use crate::monitoring::exporters;
 use crate::monitoring::tsdb::Tsdb;
 use crate::offload::health::{HealthStatus, HealthTracker};
 use crate::offload::sites::paper_federation;
 use crate::offload::vk::VirtualKubelet;
-use crate::offload::RemoteState;
 use crate::platform::config::PlatformConfig;
+use crate::platform::reconcile::Runtime;
 use crate::queue::kueue::{ClusterQueue, Kueue, LocalQueue, PriorityClass, WorkloadState};
 use crate::sim::chaos::{ChaosEngine, ChaosPlan, Fault};
 use crate::sim::clock::{SimClock, Time};
@@ -57,6 +58,44 @@ pub enum RestartPolicy {
     Never,
     /// Requeue through Kueue with backoff, at most `max_retries` times.
     OnFailure { max_retries: u32 },
+}
+
+impl RestartPolicy {
+    /// The API wire form: `"Never"` / `"OnFailure(max=N)"`.
+    pub fn render(&self) -> String {
+        match self {
+            RestartPolicy::Never => "Never".to_string(),
+            RestartPolicy::OnFailure { max_retries } => format!("OnFailure(max={max_retries})"),
+        }
+    }
+
+    /// Inverse of [`render`](Self::render); `None` on malformed input.
+    pub fn parse(s: &str) -> Option<RestartPolicy> {
+        if s == "Never" {
+            return Some(RestartPolicy::Never);
+        }
+        let inner = s.strip_prefix("OnFailure(max=")?.strip_suffix(')')?;
+        inner.parse().ok().map(|max_retries| RestartPolicy::OnFailure { max_retries })
+    }
+}
+
+/// A fully specified batch-job submission (what the API server's admission
+/// chain produces). The convenience wrappers `submit_batch` /
+/// `submit_batch_with_policy` fill the queue and labels with defaults.
+#[derive(Debug, Clone)]
+pub struct BatchSubmission {
+    pub user: String,
+    pub project: String,
+    pub requests: ResourceVec,
+    pub duration: Time,
+    pub priority: PriorityClass,
+    pub offloadable: bool,
+    pub restart_policy: RestartPolicy,
+    /// Kueue LocalQueue to submit to.
+    pub queue: String,
+    /// Extra labels stamped on the pod template (merged over the
+    /// defaults; `aiinfn/workload` is always set to the workload name).
+    pub labels: BTreeMap<String, String>,
 }
 
 /// A batch job registered with the platform (pre- or post-admission).
@@ -127,20 +166,22 @@ pub struct Platform {
     pub(crate) batch_jobs: HashMap<String, BatchJob>,
     /// node-name → index into `vks`, built at bootstrap (O(1) VK lookup on
     /// the tick/cancel hot paths instead of a linear scan).
-    vk_index: HashMap<String, usize>,
-    scrape_interval: Time,
-    /// Last monitoring scrape; `None` until the first scrape fires.
-    last_scrape: Option<Time>,
+    pub(crate) vk_index: HashMap<String, usize>,
     /// Per-site health + circuit breaker (crate-visible: the API server
     /// projects it onto `Site` resources and pumps its transitions).
     pub(crate) health: HealthTracker,
     /// Installed fault schedule, if any; drained at each tick boundary.
     pub(crate) chaos: Option<ChaosEngine>,
-    /// Last-reported unschedulable reason per pod (event-log dedup).
-    unschedulable_seen: HashMap<String, String>,
     /// Accelerator units removed by GPU-degradation faults, keyed by
     /// (node, resource) — recovery restores exactly what was taken.
     degraded: HashMap<(String, String), i64>,
+    /// The reconciler runtime the tick dispatches to. `Option` only so the
+    /// tick can temporarily take it while handing `&mut self` to the
+    /// controllers; it is always `Some` between ticks.
+    runtime: Option<Runtime>,
+    /// Deletion intents recorded by the API server's delete verb, drained
+    /// into `Key::Deletion` work for the GC reconciler.
+    pub(crate) deletions: VecDeque<(ResourceKind, String)>,
 }
 
 impl Platform {
@@ -209,15 +250,21 @@ impl Platform {
             can_borrow: true,
             can_lend: true,
         });
-        kueue.add_local_queue(LocalQueue { name: "hub".into(), cluster_queue: "interactive-cq".into() });
-        kueue.add_local_queue(LocalQueue { name: "batch".into(), cluster_queue: "batch-cq".into() });
+        kueue.add_local_queue(LocalQueue {
+            name: config.hub_queue.clone(),
+            cluster_queue: "interactive-cq".into(),
+        });
+        kueue.add_local_queue(LocalQueue {
+            name: config.batch_queue.clone(),
+            cluster_queue: "batch-cq".into(),
+        });
 
         // registry: the paper's 78 users / 20 projects
         let mut registry = Registry::new();
         registry.seed_paper_population();
 
         // hub
-        let mut spawner = Spawner::new("hub");
+        let mut spawner = Spawner::new(&config.hub_queue);
         spawner.idle_timeout = config.idle_timeout;
         spawner.token_ttl = config.token_ttl;
 
@@ -243,16 +290,15 @@ impl Platform {
             tsdb: Tsdb::new(config.retention),
             dcgm: DcgmSimulator::new(42),
             metrics: PlatformMetrics::default(),
-            scrape_interval: config.scrape_interval,
-            last_scrape: None,
             config,
             ids: IdGen::new(),
             batch_jobs: HashMap::new(),
             vk_index,
             health,
             chaos: None,
-            unschedulable_seen: HashMap::new(),
             degraded: HashMap::new(),
+            runtime: Some(Runtime::standard()),
+            deletions: VecDeque::new(),
         })
     }
 
@@ -323,20 +369,40 @@ impl Platform {
         offloadable: bool,
         restart_policy: RestartPolicy,
     ) -> anyhow::Result<String> {
+        let queue = self.config.batch_queue.clone();
+        self.submit_batch_job(BatchSubmission {
+            user: user.to_string(),
+            project: project.to_string(),
+            requests,
+            duration,
+            priority,
+            offloadable,
+            restart_policy,
+            queue,
+            labels: BTreeMap::new(),
+        })
+    }
+
+    /// Submit a fully specified [`BatchSubmission`] (the API write path:
+    /// the admission chain has already defaulted and validated it).
+    pub fn submit_batch_job(&mut self, s: BatchSubmission) -> anyhow::Result<String> {
         let at = self.engine.now();
         let name = self.ids.next("job");
         let wl = format!("wl-{name}");
-        self.kueue.submit(&wl, "batch", priority, requests.clone(), at)?;
-        let mut template = PodSpec::new(
-            name.clone(),
-            requests,
-            Payload::Sleep { duration },
-        )
+        self.kueue.submit(&wl, &s.queue, s.priority, s.requests.clone(), at)?;
+        let mut template = PodSpec::new(name.clone(), s.requests, Payload::Sleep {
+            duration: s.duration,
+        })
         .with_label("app", "batch")
-        .with_priority(priority.value())
-        .with_owner(user, project)
+        .with_priority(s.priority.value())
+        .with_owner(&s.user, &s.project)
         .in_namespace("batch");
-        if offloadable {
+        for (k, v) in &s.labels {
+            template = template.with_label(k, v);
+        }
+        // the owner link the GC reconciler cascades Workload deletion over
+        template = template.with_label("aiinfn/workload", &wl);
+        if s.offloadable {
             template = template.with_toleration("virtual-node.interlink/no-schedule");
         }
         self.batch_jobs.insert(
@@ -346,13 +412,49 @@ impl Platform {
                 template,
                 incarnation: 0,
                 live_pod: None,
-                offloadable,
-                duration,
-                restart_policy,
+                offloadable: s.offloadable,
+                duration: s.duration,
+                restart_policy: s.restart_policy,
                 retries: 0,
             },
         );
         Ok(wl)
+    }
+
+    /// Apply mutable BatchJob spec fields (the API update verb):
+    /// offloadability (reflected as the virtual-node toleration on future
+    /// incarnations), the restart policy, and the template labels.
+    pub(crate) fn update_batch_spec(
+        &mut self,
+        workload: &str,
+        offloadable: bool,
+        restart_policy: RestartPolicy,
+        labels: &BTreeMap<String, String>,
+    ) -> anyhow::Result<()> {
+        let job = self
+            .batch_jobs
+            .get_mut(workload)
+            .ok_or_else(|| anyhow::anyhow!("unknown batch job {workload}"))?;
+        job.restart_policy = restart_policy;
+        const TOLERATION: &str = "virtual-node.interlink/no-schedule";
+        if offloadable != job.offloadable {
+            job.offloadable = offloadable;
+            if offloadable {
+                if !job.template.tolerations.iter().any(|t| t == TOLERATION) {
+                    job.template.tolerations.push(TOLERATION.to_string());
+                }
+            } else {
+                job.template.tolerations.retain(|t| t != TOLERATION);
+            }
+        }
+        // replace the label set (so a merge-deleted key actually goes
+        // away); the GC owner-link label is identity and always survives
+        let keep_workload = job.template.labels.get("aiinfn/workload").cloned();
+        job.template.labels = labels.clone();
+        if let Some(wlname) = keep_workload {
+            job.template.labels.insert("aiinfn/workload".to_string(), wlname);
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------- chaos
@@ -446,12 +548,14 @@ impl Platform {
 
     // ------------------------------------------------------------ tick
 
-    /// One reconciliation pass at the current sim time.
+    /// One reconciliation pass at the current sim time: apply due chaos
+    /// faults, then delegate to the reconciler runtime's dispatcher — the
+    /// per-controller logic lives under [`crate::platform::reconcile`].
     pub fn tick(&mut self) {
         let now = self.engine.now();
         self.auth.set_now(now);
 
-        // 0. chaos: apply scheduled faults that are now due
+        // chaos: apply scheduled faults that are now due
         let due: Vec<Fault> = match self.chaos.as_mut() {
             Some(c) => c.due(now),
             None => Vec::new(),
@@ -460,319 +564,21 @@ impl Platform {
             self.apply_fault(f, now);
         }
 
-        // 1. Kueue admission. Preemption may also have happened outside the
-        // tick (the spawner runs an admit pass synchronously at spawn time),
-        // so reconcile generically: any batch job whose workload is no
-        // longer Admitted must not have a live pod.
-        let result = self.kueue.admit_pass(now);
-        let mut to_evict: Vec<(String, String)> = self
-            .batch_jobs
-            .values()
-            .filter_map(|j| {
-                let pod = j.live_pod.clone()?;
-                let admitted = self
-                    .kueue
-                    .workload(&j.workload)
-                    .map(|w| w.state == WorkloadState::Admitted)
-                    .unwrap_or(false);
-                if admitted {
-                    None
-                } else {
-                    Some((j.workload.clone(), pod))
-                }
-            })
-            .collect();
-        to_evict.sort(); // HashMap iteration order is not deterministic
-        for (wl, pod) in to_evict {
-            let live = {
-                let st = self.store.borrow();
-                st.pod(&pod)
-                    .map(|p| matches!(p.status.phase, PodPhase::Pending | PodPhase::Scheduled | PodPhase::Running))
-                    .unwrap_or(false)
-            };
-            if live {
-                self.metrics.evictions += 1;
-                // offloaded pods are cancelled remotely too
-                self.cancel_remote(&pod, now);
-                let mut st = self.store.borrow_mut();
-                let phase = st.pod(&pod).map(|p| p.status.phase);
-                match phase {
-                    Some(PodPhase::Scheduled) | Some(PodPhase::Running) => {
-                        st.evict_pod(&pod, now, false, "kueue preemption").ok();
-                    }
-                    Some(PodPhase::Pending) => {
-                        st.cancel_pending(&pod, now, "kueue preemption").ok();
-                    }
-                    _ => {}
-                }
-            }
-            if let Some(j) = self.batch_jobs.get_mut(&wl) {
-                j.live_pod = None;
-            }
-        }
-        // 2. pods for newly admitted batch workloads
-        for wl_name in &result.admitted {
-            // interactive workloads already created their pod in spawn()
-            let Some(job) = self.batch_jobs.get_mut(wl_name) else { continue };
-            job.incarnation += 1;
-            let mut spec = job.template.clone();
-            spec.name = format!("{}-r{}", job.template.name, job.incarnation);
-            job.live_pod = Some(spec.name.clone());
-            let wl = self.kueue.workload(wl_name);
-            if let Some(w) = wl {
-                self.metrics.batch_wait_times.push(w.admitted_at.unwrap_or(now) - w.created_at);
-            }
-            self.store.borrow_mut().create_pod(spec, now);
-        }
-
-        // 3. scheduling pass; failed placements are recorded (deduped per
-        // pod+reason) in the metrics and the cluster event log
-        let (placed, failed) = {
-            let mut st = self.store.borrow_mut();
-            self.scheduler.schedule_pending(&mut st, now)
-        };
-        for (pod, why) in &failed {
-            let reason = match why {
-                Unschedulable::NoFeasibleNode => "NoFeasibleNode",
-                Unschedulable::InsufficientCapacity => "InsufficientCapacity",
-            };
-            if self.unschedulable_seen.get(pod.as_str()).map(String::as_str) != Some(reason) {
-                self.unschedulable_seen.insert(pod.clone(), reason.to_string());
-                self.metrics.failed_placements += 1;
-                self.store.borrow_mut().record(
-                    now,
-                    EventKind::PodUnschedulable,
-                    pod,
-                    &format!("unschedulable: {reason}"),
-                );
-            }
-        }
-        for pod in &placed {
-            self.unschedulable_seen.remove(pod);
-        }
-
-        // 4. launch placed pods: local kubelet or VK forward (gated on the
-        // site's circuit breaker)
-        for pod_name in placed {
-            let (node, spec, is_session) = {
-                let st = self.store.borrow();
-                let p = st.pod(&pod_name).unwrap();
-                (
-                    p.status.node.clone().unwrap_or_default(),
-                    p.spec.clone(),
-                    matches!(p.spec.payload, Payload::Session { .. }),
-                )
-            };
-            if is_session {
-                // spawn-latency metric: creation → scheduled
-                let st = self.store.borrow();
-                if let Some(lat) = st.pod(&pod_name).and_then(|p| p.status.schedule_latency()) {
-                    drop(st);
-                    self.metrics.interactive_spawn_latencies.push(lat);
-                }
-            }
-            let is_virtual = self
-                .store
-                .borrow()
-                .node(&node)
-                .map(|n| n.virtual_node)
-                .unwrap_or(false);
-            if is_virtual {
-                let Some(vi) = self.vk_index.get(&node).copied() else { continue };
-                let site = self.vks[vi].site.clone();
-                if !self.health.allows(&site) {
-                    // placement raced the breaker opening: bounce the
-                    // workload back through Kueue instead of launching
-                    self.requeue_failed_remote(&pod_name, now, "site quarantined");
-                    continue;
-                }
-                let duration = match &spec.payload {
-                    Payload::Sleep { duration } => *duration,
-                    Payload::Session { idle_after } => *idle_after,
-                    Payload::MlJob { steps, .. } => *steps as f64 * 0.5,
-                    Payload::Burn { flops } => flops / 1e12,
-                };
-                if self.vks[vi].create_pod(&spec, duration, now).is_ok() {
-                    self.metrics.offloaded_pods += 1;
-                } else {
-                    // wire failure feeds the breaker via take_wire_stats;
-                    // the workload requeues for a healthy placement
-                    self.requeue_failed_remote(&pod_name, now, "interlink create failed");
-                }
-            } else {
-                self.kubelet.launch(&mut self.engine, &pod_name);
-            }
-        }
-
-        // 5. VK status sync → pod phases
-        let mut updates = Vec::new();
-        for vk in &mut self.vks {
-            for u in vk.sync(now) {
-                updates.push(u);
-            }
-        }
-        for u in updates {
-            let mut st = self.store.borrow_mut();
-            match u.state {
-                RemoteState::Running => {
-                    st.mark_running(&u.pod, now).ok();
-                }
-                RemoteState::Completed => {
-                    let live = st
-                        .pod(&u.pod)
-                        .map(|p| !p.status.phase.is_terminal())
-                        .unwrap_or(false);
-                    if live {
-                        if st.pod(&u.pod).map(|p| p.status.phase == PodPhase::Scheduled).unwrap_or(false) {
-                            st.mark_running(&u.pod, now).ok();
-                        }
-                        st.finish_pod(&u.pod, PodPhase::Succeeded, now, "remote completed").ok();
-                        self.metrics.remote_completions += 1;
-                    }
-                }
-                RemoteState::Failed => {
-                    let live = st
-                        .pod(&u.pod)
-                        .map(|p| !p.status.phase.is_terminal())
-                        .unwrap_or(false);
-                    if live {
-                        st.finish_pod(&u.pod, PodPhase::Failed, now, "remote failed").ok();
-                    }
-                }
-                _ => {}
-            }
-        }
-
-        // 5b. site health: feed wire outcomes into the circuit breaker,
-        // quarantine sites whose breaker just opened, probe half-open ones
-        for i in 0..self.vks.len() {
-            let site = self.vks[i].site.clone();
-            let (ok, fail) = self.vks[i].take_wire_stats();
-            if ok > 0 {
-                self.health.record_success(&site, now);
-            }
-            for _ in 0..fail {
-                if self.health.record_failure(&site, now) {
-                    self.quarantine_site(i, now);
-                }
-            }
-            if self.health.due_probe(&site, now) {
-                let up = self.vks[i].probe(now);
-                let _ = self.vks[i].take_wire_stats(); // probe outcome recorded below
-                if up {
-                    self.health.record_success(&site, now);
-                    let node = self.vks[i].node_name.clone();
-                    self.store.borrow_mut().set_node_ready(
-                        &node,
-                        true,
-                        now,
-                        "site healthy: circuit breaker closed",
-                    );
-                } else if self.health.record_failure(&site, now) {
-                    // re-opened with an escalated cooldown; the virtual
-                    // node is already cordoned, but the trip still counts
-                    self.metrics.breaker_trips += 1;
-                }
-            }
-        }
-
-        // 6. finished pods → the retry/reschedule controller: succeeded
-        // workloads finish; failed ones retry under their RestartPolicy
-        // budget before failing terminally
-        let mut finished: Vec<(String, Option<String>)> = self
-            .batch_jobs
-            .values()
-            .filter_map(|j| {
-                let pod = j.live_pod.as_ref()?;
-                let st = self.store.borrow();
-                let p = st.pod(pod)?;
-                if p.status.phase == PodPhase::Succeeded || p.status.phase == PodPhase::Failed {
-                    Some((j.workload.clone(), j.live_pod.clone()))
-                } else {
-                    None
-                }
-            })
-            .collect();
-        finished.sort(); // HashMap iteration order is not deterministic
-        for (wl, pod) in finished {
-            let pod_failed = pod
-                .as_ref()
-                .map(|p| {
-                    self.store
-                        .borrow()
-                        .pod(p)
-                        .map(|pp| pp.status.phase == PodPhase::Failed)
-                        .unwrap_or(false)
-                })
-                .unwrap_or(false);
-            if pod_failed {
-                let allowed = match self.batch_jobs.get(&wl).map(|j| j.restart_policy) {
-                    Some(RestartPolicy::OnFailure { max_retries }) => {
-                        self.batch_jobs[&wl].retries < max_retries
-                    }
-                    _ => false,
-                };
-                if allowed {
-                    if let Some(j) = self.batch_jobs.get_mut(&wl) {
-                        j.retries += 1;
-                        j.live_pod = None;
-                    }
-                    self.metrics.remote_retries += 1;
-                    self.kueue.requeue(&wl, now).ok();
-                    continue;
-                }
-                self.metrics.terminal_failures += 1;
-            }
-            // local-vs-remote completion accounting (successes only;
-            // remote successes were counted at the sync transition)
-            if let Some(pod) = &pod {
-                let st = self.store.borrow();
-                let succeeded = st
-                    .pod(pod)
-                    .map(|p| p.status.phase == PodPhase::Succeeded)
-                    .unwrap_or(false);
-                let remote = st
-                    .pod(pod)
-                    .and_then(|p| p.status.node.clone())
-                    .and_then(|n| st.node(&n).map(|nd| nd.virtual_node))
-                    .unwrap_or(false);
-                if succeeded && !remote {
-                    self.metrics.local_completions += 1;
-                }
-            }
-            self.kueue.finish(&wl, now).ok();
-            if let Some(j) = self.batch_jobs.get_mut(&wl) {
-                j.live_pod = None;
-            }
-        }
-
-        // 7. idle culling
-        {
-            let mut st = self.store.borrow_mut();
-            let mut ctx = SpawnCtx {
-                registry: &mut self.registry,
-                auth: &mut self.auth,
-                nfs: &mut self.nfs,
-                objects: &mut self.objects,
-                kueue: &mut self.kueue,
-                cluster: &mut st,
-            };
-            self.spawner.cull_idle(&mut ctx, now);
-        }
-
-        // 8. monitoring scrape
-        if self.last_scrape.map_or(true, |t| now - t >= self.scrape_interval) {
-            self.last_scrape = Some(now);
-            let st = self.store.borrow();
-            exporters::scrape_nodes(&mut self.tsdb, &st, now);
-            exporters::scrape_gpus(&mut self.tsdb, &st, &mut self.dcgm, now);
-            exporters::scrape_pods(&mut self.tsdb, &st, now);
-            drop(st);
-            exporters::scrape_storage(&mut self.tsdb, &self.nfs, &self.objects, now);
-        }
+        // dispatch the informer-driven controllers (GC, queue admission,
+        // placement, offload sync, site health, job lifecycle, sessions,
+        // monitoring) over the watch deltas accumulated since last tick
+        let mut runtime = self.runtime.take().expect("reconciler runtime installed");
+        runtime.dispatch(self, now);
+        self.runtime = Some(runtime);
     }
 
-    fn cancel_remote(&mut self, pod: &str, now: Time) {
+    /// Record an API-level deletion intent; the GC reconciler cascades it
+    /// onto dependents (via their `ownerReferences`) on the next dispatch.
+    pub(crate) fn enqueue_deletion(&mut self, kind: ResourceKind, name: &str) {
+        self.deletions.push_back((kind, name.to_string()));
+    }
+
+    pub(crate) fn cancel_remote(&mut self, pod: &str, now: Time) {
         let node = self.store.borrow().pod(pod).and_then(|p| p.status.node.clone());
         if let Some(node) = node {
             if let Some(vk) = self.vk_index.get(&node).map(|&i| &mut self.vks[i]) {
@@ -933,7 +739,7 @@ impl Platform {
     /// Open-breaker response: cordon the site's virtual node and requeue
     /// every workload it was running through Kueue — each comes back as a
     /// fresh pod incarnation on a healthy placement once readmitted.
-    fn quarantine_site(&mut self, vk_idx: usize, now: Time) {
+    pub(crate) fn quarantine_site(&mut self, vk_idx: usize, now: Time) {
         self.metrics.breaker_trips += 1;
         let node = self.vks[vk_idx].node_name.clone();
         self.store.borrow_mut().set_node_ready(
@@ -955,7 +761,7 @@ impl Platform {
     /// restart budget — the failure is the infrastructure's fault. Pods
     /// already terminal (e.g. completed just before the outage) are left
     /// alone so their workload finishes normally.
-    fn requeue_failed_remote(&mut self, pod: &str, now: Time, reason: &str) {
+    pub(crate) fn requeue_failed_remote(&mut self, pod: &str, now: Time, reason: &str) {
         let was_live = {
             let mut st = self.store.borrow_mut();
             let phase = st.pod(pod).map(|p| p.status.phase);
@@ -984,7 +790,7 @@ impl Platform {
     }
 
     /// The workload a live pod realizes, if it belongs to a batch job.
-    fn workload_of(&self, pod: &str) -> Option<String> {
+    pub(crate) fn workload_of(&self, pod: &str) -> Option<String> {
         self.batch_jobs
             .values()
             .find(|j| j.live_pod.as_deref() == Some(pod))

@@ -1,9 +1,13 @@
 //! Platform assembly (DESIGN.md S29): typed configuration from the paper's
-//! §2 inventory, and the facade that wires cluster, queues, hub, storage,
-//! offloading and monitoring into the running coordinator.
+//! §2 inventory, the facade that wires cluster, queues, hub, storage,
+//! offloading and monitoring into the running coordinator, and the
+//! informer-driven reconciler runtime ([`reconcile`]) that the facade's
+//! tick dispatches to.
 
 pub mod config;
 pub mod facade;
+pub mod reconcile;
 
 pub use config::{default_config_path, PlatformConfig};
-pub use facade::{Platform, PlatformMetrics, RestartPolicy};
+pub use facade::{BatchSubmission, Platform, PlatformMetrics, RestartPolicy};
+pub use reconcile::{Ctx, Key, Reconciler, Requeue, Runtime};

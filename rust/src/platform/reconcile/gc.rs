@@ -1,0 +1,88 @@
+//! The garbage collector: cascades API-level deletions onto dependents via
+//! `metadata.ownerReferences`.
+//!
+//! The API server's `delete` verb never tears platform state down itself —
+//! it records a *deletion intent* ([`Platform::enqueue_deletion`]) once the
+//! object's finalizers are clear, and this controller converges it on the
+//! next dispatch:
+//!
+//! * `Workload` — every pod labelled `aiinfn/workload=<name>` (the pods
+//!   carry the matching `ownerReference`) is cancelled remotely if
+//!   offloaded and removed from the cluster store; the Kueue workload is
+//!   finished and the batch-job record dropped.
+//! * `Session` — the session is stopped (which finishes its interactive
+//!   workload and releases the rclone bucket-mount claim), and its pod is
+//!   removed from the store.
+//! * `BatchJob` — the job is cancelled through the platform verb (live pod
+//!   killed locally or remotely, workload finished).
+
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+use crate::api::resources::ResourceKind;
+
+pub struct GcController;
+
+impl Reconciler for GcController {
+    fn name(&self) -> &'static str {
+        "garbage-collector"
+    }
+
+    fn interested(&self, key: &Key) -> bool {
+        matches!(key, Key::Deletion(_, _))
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        let Key::Deletion(kind, name) = key else { return Ok(Requeue::Done) };
+        let p = &mut *ctx.platform;
+        let now = ctx.now;
+        match kind {
+            ResourceKind::Workload => {
+                let mut pods: Vec<String> = p
+                    .store
+                    .borrow()
+                    .pods()
+                    .filter(|pod| {
+                        pod.spec.labels.get("aiinfn/workload").map(String::as_str)
+                            == Some(name.as_str())
+                    })
+                    .map(|pod| pod.spec.name.clone())
+                    .collect();
+                pods.sort(); // HashMap iteration order is not deterministic
+                for pod in pods {
+                    p.cancel_remote(&pod, now);
+                    p.store
+                        .borrow_mut()
+                        .delete_pod(
+                            &pod,
+                            now,
+                            &format!("garbage collected: owner Workload/{name} deleted"),
+                        )
+                        .ok();
+                }
+                p.kueue.finish(name, now).ok();
+                p.batch_jobs.remove(name);
+            }
+            ResourceKind::Session => {
+                let pod = p.session(name).map(|s| s.pod_name.clone());
+                // stop_session finishes the interactive workload and drops
+                // the session's rclone bucket-mount claim with it
+                p.stop_session(name, "garbage collected: Session deleted").ok();
+                if let Some(pod) = pod {
+                    p.cancel_remote(&pod, now);
+                    p.store
+                        .borrow_mut()
+                        .delete_pod(
+                            &pod,
+                            now,
+                            &format!("garbage collected: owner Session/{name} deleted"),
+                        )
+                        .ok();
+                }
+            }
+            ResourceKind::BatchJob => {
+                p.cancel_batch(name, "garbage collected: BatchJob deleted").ok();
+            }
+            _ => {}
+        }
+        Ok(Requeue::Done)
+    }
+}

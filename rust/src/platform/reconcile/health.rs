@@ -1,0 +1,100 @@
+//! The site-health controller: feeds InterLink wire outcomes into the
+//! per-site circuit breaker, quarantines sites whose breaker opens
+//! (cordon + requeue their workloads), and probes half-open breakers so
+//! recovered sites are uncordoned.
+//!
+//! Wire-stat draining runs on the per-tick resync **and** on pod-event
+//! keys: a just-launched remote pod whose InterLink create failed must
+//! feed the breaker in the same tick it happened, exactly as the
+//! monolithic tick's launch → health ordering did (draining is idempotent
+//! — the counters empty on first read). Probing runs only on the resync,
+//! so a half-open site gets at most one probe per tick, as before.
+
+use crate::platform::facade::Platform;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+use crate::sim::clock::Time;
+
+pub struct HealthController {
+    /// Store version as of the last drain — a burst of coalesced pod keys
+    /// with no intervening store change drains the (empty) counters once.
+    store_rv_seen: u64,
+}
+
+impl HealthController {
+    pub fn new() -> HealthController {
+        HealthController { store_rv_seen: 0 }
+    }
+}
+
+impl Reconciler for HealthController {
+    fn name(&self) -> &'static str {
+        "site-health"
+    }
+
+    fn interested(&self, key: &Key) -> bool {
+        matches!(key, Key::Pod(_)) // pod churn correlates with wire traffic
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        match key {
+            Key::Sync => {
+                drain_wire_stats(ctx.platform, ctx.now);
+                probe_half_open(ctx.platform, ctx.now);
+                self.store_rv_seen = ctx.platform.store.borrow().resource_version();
+                Ok(Requeue::After(0.0))
+            }
+            Key::Pod(_) => {
+                let rv = ctx.platform.store.borrow().resource_version();
+                if rv != self.store_rv_seen {
+                    drain_wire_stats(ctx.platform, ctx.now);
+                    self.store_rv_seen = ctx.platform.store.borrow().resource_version();
+                }
+                Ok(Requeue::Done)
+            }
+            _ => Ok(Requeue::Done),
+        }
+    }
+}
+
+/// Feed accumulated wire outcomes into each site's breaker; an opening
+/// breaker quarantines the site (cordon + requeue its workloads).
+fn drain_wire_stats(p: &mut Platform, now: Time) {
+    for i in 0..p.vks.len() {
+        let site = p.vks[i].site.clone();
+        let (ok, fail) = p.vks[i].take_wire_stats();
+        if ok > 0 {
+            p.health.record_success(&site, now);
+        }
+        for _ in 0..fail {
+            if p.health.record_failure(&site, now) {
+                p.quarantine_site(i, now);
+            }
+        }
+    }
+}
+
+/// Probe sites whose breaker cooldown elapsed (at most once per tick):
+/// success closes the breaker and uncordons the virtual node.
+fn probe_half_open(p: &mut Platform, now: Time) {
+    for i in 0..p.vks.len() {
+        let site = p.vks[i].site.clone();
+        if p.health.due_probe(&site, now) {
+            let up = p.vks[i].probe(now);
+            let _ = p.vks[i].take_wire_stats(); // probe outcome recorded below
+            if up {
+                p.health.record_success(&site, now);
+                let node = p.vks[i].node_name.clone();
+                p.store.borrow_mut().set_node_ready(
+                    &node,
+                    true,
+                    now,
+                    "site healthy: circuit breaker closed",
+                );
+            } else if p.health.record_failure(&site, now) {
+                // re-opened with an escalated cooldown; the virtual
+                // node is already cordoned, but the trip still counts
+                p.metrics.breaker_trips += 1;
+            }
+        }
+    }
+}

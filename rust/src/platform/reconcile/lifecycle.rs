@@ -1,0 +1,73 @@
+//! The job-lifecycle controller: the retry/reschedule loop, keyed purely
+//! by terminal pod events (`PodSucceeded` / `PodFailed`) — no full-state
+//! rescans. A succeeded pod finishes its workload (with local-vs-remote
+//! completion accounting); a failed pod retries under the workload's
+//! [`RestartPolicy`](crate::platform::RestartPolicy) budget before failing
+//! terminally.
+
+use crate::cluster::pod::PodPhase;
+use crate::platform::facade::RestartPolicy;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+
+pub struct JobLifecycleController;
+
+impl Reconciler for JobLifecycleController {
+    fn name(&self) -> &'static str {
+        "job-lifecycle"
+    }
+
+    fn interested(&self, key: &Key) -> bool {
+        matches!(key, Key::Pod(_))
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        let Key::Pod(pod) = key else { return Ok(Requeue::Done) };
+        let p = &mut *ctx.platform;
+        let now = ctx.now;
+        let phase = p.store.borrow().pod(pod).map(|x| x.status.phase);
+        let failed = match phase {
+            Some(PodPhase::Failed) => true,
+            Some(PodPhase::Succeeded) => false,
+            _ => return Ok(Requeue::Done),
+        };
+        // only pods currently realizing a batch workload matter here;
+        // stale incarnations and session pods have no live-pod link
+        let Some(wl) = p.workload_of(pod) else { return Ok(Requeue::Done) };
+        if failed {
+            let allowed = match p.batch_jobs.get(&wl).map(|j| j.restart_policy) {
+                Some(RestartPolicy::OnFailure { max_retries }) => {
+                    p.batch_jobs[&wl].retries < max_retries
+                }
+                _ => false,
+            };
+            if allowed {
+                if let Some(j) = p.batch_jobs.get_mut(&wl) {
+                    j.retries += 1;
+                    j.live_pod = None;
+                }
+                p.metrics.remote_retries += 1;
+                p.kueue.requeue(&wl, now).ok();
+                return Ok(Requeue::Done);
+            }
+            p.metrics.terminal_failures += 1;
+        } else {
+            // local-vs-remote completion accounting (successes only;
+            // remote successes were counted at the sync transition)
+            let remote = {
+                let st = p.store.borrow();
+                st.pod(pod)
+                    .and_then(|x| x.status.node.clone())
+                    .and_then(|n| st.node(&n).map(|nd| nd.virtual_node))
+                    .unwrap_or(false)
+            };
+            if !remote {
+                p.metrics.local_completions += 1;
+            }
+        }
+        p.kueue.finish(&wl, now).ok();
+        if let Some(j) = p.batch_jobs.get_mut(&wl) {
+            j.live_pod = None;
+        }
+        Ok(Requeue::Done)
+    }
+}

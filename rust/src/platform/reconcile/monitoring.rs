@@ -1,0 +1,46 @@
+//! The monitoring controller: periodic Prometheus-like scrapes of nodes,
+//! GPUs (DCGM), pods and storage into the TSDB, at the config's
+//! `scrape_interval`.
+
+use crate::monitoring::exporters;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+use crate::sim::clock::Time;
+
+pub struct MonitoringController {
+    /// Last scrape; `None` until the first scrape fires.
+    last_scrape: Option<Time>,
+}
+
+impl MonitoringController {
+    pub fn new() -> MonitoringController {
+        MonitoringController { last_scrape: None }
+    }
+}
+
+impl Reconciler for MonitoringController {
+    fn name(&self) -> &'static str {
+        "monitoring"
+    }
+
+    fn interested(&self, _key: &Key) -> bool {
+        false // purely timer-driven
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        if *key != Key::Sync {
+            return Ok(Requeue::Done);
+        }
+        let p = &mut *ctx.platform;
+        let now = ctx.now;
+        if self.last_scrape.map_or(true, |t| now - t >= p.config.scrape_interval) {
+            self.last_scrape = Some(now);
+            let st = p.store.borrow();
+            exporters::scrape_nodes(&mut p.tsdb, &st, now);
+            exporters::scrape_gpus(&mut p.tsdb, &st, &mut p.dcgm, now);
+            exporters::scrape_pods(&mut p.tsdb, &st, now);
+            drop(st);
+            exporters::scrape_storage(&mut p.tsdb, &p.nfs, &p.objects, now);
+        }
+        Ok(Requeue::After(0.0))
+    }
+}

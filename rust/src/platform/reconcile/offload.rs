@@ -1,0 +1,71 @@
+//! The offload-sync controller: polls every Virtual Kubelet for remote pod
+//! status (the InterLink status round-trip) and folds the updates into the
+//! cluster store — `Running`, `Completed` (counted as a remote
+//! completion), `Failed`. Purely time-based: the remote sites only answer
+//! when asked, so this resyncs every tick.
+
+use crate::cluster::pod::PodPhase;
+use crate::offload::RemoteState;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+
+pub struct OffloadController;
+
+impl Reconciler for OffloadController {
+    fn name(&self) -> &'static str {
+        "offload-sync"
+    }
+
+    fn interested(&self, _key: &Key) -> bool {
+        false // time-based poll; no delta source to subscribe to
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        if *key != Key::Sync {
+            return Ok(Requeue::Done);
+        }
+        let p = &mut *ctx.platform;
+        let now = ctx.now;
+        let mut updates = Vec::new();
+        for vk in &mut p.vks {
+            for u in vk.sync(now) {
+                updates.push(u);
+            }
+        }
+        for u in updates {
+            let mut st = p.store.borrow_mut();
+            match u.state {
+                RemoteState::Running => {
+                    st.mark_running(&u.pod, now).ok();
+                }
+                RemoteState::Completed => {
+                    let live = st
+                        .pod(&u.pod)
+                        .map(|pod| !pod.status.phase.is_terminal())
+                        .unwrap_or(false);
+                    if live {
+                        if st
+                            .pod(&u.pod)
+                            .map(|pod| pod.status.phase == PodPhase::Scheduled)
+                            .unwrap_or(false)
+                        {
+                            st.mark_running(&u.pod, now).ok();
+                        }
+                        st.finish_pod(&u.pod, PodPhase::Succeeded, now, "remote completed").ok();
+                        p.metrics.remote_completions += 1;
+                    }
+                }
+                RemoteState::Failed => {
+                    let live = st
+                        .pod(&u.pod)
+                        .map(|pod| !pod.status.phase.is_terminal())
+                        .unwrap_or(false);
+                    if live {
+                        st.finish_pod(&u.pod, PodPhase::Failed, now, "remote failed").ok();
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(Requeue::After(0.0))
+    }
+}

@@ -1,0 +1,113 @@
+//! The queue-admission controller: Kueue admission passes plus the
+//! workload-keyed reconcile that realizes (or tears down) batch pods.
+//!
+//! * `Sync` (every tick — eviction backoffs expire with time): one Kueue
+//!   admission pass. Its transitions land in the workload log and come
+//!   back as keys in the same dispatch.
+//! * `Workload(name)` (from the Kueue transition log, which also captures
+//!   admissions/preemptions run synchronously outside the tick by the hub
+//!   spawner): converge the pod to the admission state — an `Admitted`
+//!   workload with no live pod gets a fresh pod incarnation; a no longer
+//!   admitted workload must not keep a live pod (preemption eviction).
+
+use crate::cluster::pod::PodPhase;
+use crate::platform::facade::Platform;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+use crate::queue::kueue::WorkloadState;
+use crate::sim::clock::Time;
+
+pub struct QueueController;
+
+impl Reconciler for QueueController {
+    fn name(&self) -> &'static str {
+        "queue-admission"
+    }
+
+    fn interested(&self, key: &Key) -> bool {
+        matches!(key, Key::Workload(_))
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        let p = &mut *ctx.platform;
+        let now = ctx.now;
+        match key {
+            Key::Sync => {
+                p.kueue.admit_pass(now);
+                Ok(Requeue::After(0.0))
+            }
+            Key::Workload(name) => {
+                let admitted = p
+                    .kueue
+                    .workload(name)
+                    .map(|w| w.state == WorkloadState::Admitted)
+                    .unwrap_or(false);
+                if admitted {
+                    realize_admitted(p, name, now);
+                } else {
+                    evict_unadmitted(p, name, now);
+                }
+                Ok(Requeue::Done)
+            }
+            _ => Ok(Requeue::Done),
+        }
+    }
+}
+
+/// An admitted batch workload with no live pod gets a fresh incarnation.
+/// (Interactive workloads created their pod at spawn time; they have no
+/// batch-job record and are skipped.)
+fn realize_admitted(p: &mut Platform, wl_name: &str, now: Time) {
+    let spec = {
+        let Some(job) = p.batch_jobs.get_mut(wl_name) else { return };
+        if job.live_pod.is_some() {
+            return;
+        }
+        job.incarnation += 1;
+        let mut spec = job.template.clone();
+        spec.name = format!("{}-r{}", job.template.name, job.incarnation);
+        job.live_pod = Some(spec.name.clone());
+        spec
+    };
+    if let Some(w) = p.kueue.workload(wl_name) {
+        p.metrics.batch_wait_times.push(w.admitted_at.unwrap_or(now) - w.created_at);
+    }
+    p.store.borrow_mut().create_pod(spec, now);
+}
+
+/// A workload that is no longer admitted (preempted, requeued, finished,
+/// deleted) must not keep a live pod. Offloaded pods are cancelled on the
+/// remote site too.
+fn evict_unadmitted(p: &mut Platform, wl_name: &str, now: Time) {
+    let Some(pod) = p.batch_jobs.get(wl_name).and_then(|j| j.live_pod.clone()) else {
+        return;
+    };
+    let live = {
+        let st = p.store.borrow();
+        st.pod(&pod)
+            .map(|x| {
+                matches!(
+                    x.status.phase,
+                    PodPhase::Pending | PodPhase::Scheduled | PodPhase::Running
+                )
+            })
+            .unwrap_or(false)
+    };
+    if live {
+        p.metrics.evictions += 1;
+        p.cancel_remote(&pod, now);
+        let mut st = p.store.borrow_mut();
+        let phase = st.pod(&pod).map(|x| x.status.phase);
+        match phase {
+            Some(PodPhase::Scheduled) | Some(PodPhase::Running) => {
+                st.evict_pod(&pod, now, false, "kueue preemption").ok();
+            }
+            Some(PodPhase::Pending) => {
+                st.cancel_pending(&pod, now, "kueue preemption").ok();
+            }
+            _ => {}
+        }
+    }
+    if let Some(j) = p.batch_jobs.get_mut(wl_name) {
+        j.live_pod = None;
+    }
+}

@@ -1,0 +1,143 @@
+//! The placement controller: the scheduling pass plus pod launch — local
+//! kubelet start or Virtual-Kubelet forward, gated on the target site's
+//! circuit breaker.
+//!
+//! Keyed by pod events (creations make pods schedulable, terminal events
+//! free capacity) and resynced every tick; the pass itself walks the
+//! store's pending queue in FIFO order, so splitting it across keys
+//! preserves the monolithic tick's placement order exactly.
+
+use std::collections::HashMap;
+
+use crate::cluster::pod::Payload;
+use crate::cluster::scheduler::Unschedulable;
+use crate::cluster::store::EventKind;
+use crate::platform::facade::Platform;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+use crate::sim::clock::Time;
+
+pub struct PlacementController {
+    /// Last-reported unschedulable reason per pod (event-log dedup).
+    unschedulable_seen: HashMap<String, String>,
+    /// Store version as of the last pass: a batch of coalesced keys with no
+    /// intervening store change runs the (whole-queue) pass only once.
+    store_rv_seen: u64,
+}
+
+impl PlacementController {
+    pub fn new() -> PlacementController {
+        PlacementController { unschedulable_seen: HashMap::new(), store_rv_seen: 0 }
+    }
+
+    /// One scheduling pass: bind every pending pod that fits, record the
+    /// failures (deduped per pod+reason), launch what was placed.
+    fn pass(&mut self, p: &mut Platform, now: Time) {
+        let (placed, failed) = {
+            let mut st = p.store.borrow_mut();
+            p.scheduler.schedule_pending(&mut st, now)
+        };
+        for (pod, why) in &failed {
+            let reason = match why {
+                Unschedulable::NoFeasibleNode => "NoFeasibleNode",
+                Unschedulable::InsufficientCapacity => "InsufficientCapacity",
+            };
+            if self.unschedulable_seen.get(pod.as_str()).map(String::as_str) != Some(reason) {
+                self.unschedulable_seen.insert(pod.clone(), reason.to_string());
+                p.metrics.failed_placements += 1;
+                p.store.borrow_mut().record(
+                    now,
+                    EventKind::PodUnschedulable,
+                    pod,
+                    &format!("unschedulable: {reason}"),
+                );
+            }
+        }
+        for pod in &placed {
+            self.unschedulable_seen.remove(pod);
+        }
+
+        // launch placed pods: local kubelet or VK forward (gated on the
+        // site's circuit breaker)
+        for pod_name in placed {
+            let (node, spec, is_session) = {
+                let st = p.store.borrow();
+                let pod = st.pod(&pod_name).unwrap();
+                (
+                    pod.status.node.clone().unwrap_or_default(),
+                    pod.spec.clone(),
+                    matches!(pod.spec.payload, Payload::Session { .. }),
+                )
+            };
+            if is_session {
+                // spawn-latency metric: creation → scheduled
+                let st = p.store.borrow();
+                if let Some(lat) = st.pod(&pod_name).and_then(|x| x.status.schedule_latency()) {
+                    drop(st);
+                    p.metrics.interactive_spawn_latencies.push(lat);
+                }
+            }
+            let is_virtual =
+                p.store.borrow().node(&node).map(|n| n.virtual_node).unwrap_or(false);
+            if is_virtual {
+                let Some(vi) = p.vk_index.get(&node).copied() else { continue };
+                let site = p.vks[vi].site.clone();
+                if !p.health.allows(&site) {
+                    // placement raced the breaker opening: bounce the
+                    // workload back through Kueue instead of launching
+                    p.requeue_failed_remote(&pod_name, now, "site quarantined");
+                    continue;
+                }
+                let duration = match &spec.payload {
+                    Payload::Sleep { duration } => *duration,
+                    Payload::Session { idle_after } => *idle_after,
+                    Payload::MlJob { steps, .. } => *steps as f64 * 0.5,
+                    Payload::Burn { flops } => flops / 1e12,
+                };
+                if p.vks[vi].create_pod(&spec, duration, now).is_ok() {
+                    p.metrics.offloaded_pods += 1;
+                } else {
+                    // wire failure feeds the breaker via take_wire_stats;
+                    // the workload requeues for a healthy placement
+                    p.requeue_failed_remote(&pod_name, now, "interlink create failed");
+                }
+            } else {
+                p.kubelet.launch(&mut p.engine, &pod_name);
+            }
+        }
+    }
+}
+
+impl Reconciler for PlacementController {
+    fn name(&self) -> &'static str {
+        "placement"
+    }
+
+    fn interested(&self, key: &Key) -> bool {
+        matches!(key, Key::Pod(_) | Key::Node(_))
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        match key {
+            Key::Sync => {
+                self.pass(ctx.platform, ctx.now);
+                self.store_rv_seen = ctx.platform.store.borrow().resource_version();
+                Ok(Requeue::After(0.0))
+            }
+            Key::Pod(_) | Key::Node(_) => {
+                // re-run the pass only while something is pending AND the
+                // store actually changed since the last pass (keys
+                // coalesce: the first one schedules the whole queue)
+                let (pending, rv) = {
+                    let st = ctx.platform.store.borrow();
+                    (!st.pending_pods().is_empty(), st.resource_version())
+                };
+                if pending && rv != self.store_rv_seen {
+                    self.pass(ctx.platform, ctx.now);
+                    self.store_rv_seen = ctx.platform.store.borrow().resource_version();
+                }
+                Ok(Requeue::Done)
+            }
+            _ => Ok(Requeue::Done),
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! The session-lifecycle controller: the idle culler (paper: sessions are
+//! reclaimed to keep accelerators available). Time-based — activity
+//! timeouts expire between dispatches — so it resyncs every tick.
+//! Explicit session deletion is handled by the garbage collector
+//! ([`super::gc`]); this loop only reclaims forgotten ones.
+
+use crate::hub::spawner::SpawnCtx;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+
+pub struct SessionController;
+
+impl Reconciler for SessionController {
+    fn name(&self) -> &'static str {
+        "session-lifecycle"
+    }
+
+    fn interested(&self, _key: &Key) -> bool {
+        false // idle timeouts are time-based, not delta-driven
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        if *key != Key::Sync {
+            return Ok(Requeue::Done);
+        }
+        let p = &mut *ctx.platform;
+        let mut st = p.store.borrow_mut();
+        let mut sctx = SpawnCtx {
+            registry: &mut p.registry,
+            auth: &mut p.auth,
+            nfs: &mut p.nfs,
+            objects: &mut p.objects,
+            kueue: &mut p.kueue,
+            cluster: &mut st,
+        };
+        p.spawner.cull_idle(&mut sctx, ctx.now);
+        Ok(Requeue::After(0.0))
+    }
+}

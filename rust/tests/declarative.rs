@@ -1,0 +1,317 @@
+//! Declarative write-path integration tests: optimistic concurrency,
+//! admission, apply/patch, the status subresource, finalizers, and the
+//! ownerReferences garbage-collection cascade.
+
+mod common;
+
+use aiinfn::api::{
+    ApiError, ApiObject, BatchJobResource, Condition, EventType, ResourceKind, Selector,
+    SessionResource,
+};
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::queue::kueue::PriorityClass;
+use aiinfn::util::json::Json;
+
+fn job_request(user: &str, project: &str, duration: f64) -> ApiObject {
+    ApiObject::BatchJob(BatchJobResource::request(
+        user,
+        project,
+        ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+        duration,
+        PriorityClass::Batch,
+        false,
+    ))
+}
+
+/// A write carrying a stale `metadata.resourceVersion` fails with
+/// `Conflict`; re-reading and echoing the fresh version succeeds, and the
+/// mutable spec fields (offloadable, restartPolicy) actually move.
+#[test]
+fn stale_resource_version_update_conflicts() {
+    let mut api = common::api();
+    let token = api.login("user020").unwrap();
+    let created = api.create(&token, &job_request("user020", "project04", 300.0)).unwrap();
+    let name = created.name().to_string();
+    let stale_rv = created.metadata().resource_version;
+    assert!(stale_rv > 0);
+
+    // admission + scheduling bump the object's version…
+    api.run_for(60.0, 10.0);
+    let mut with_stale = created.as_batch_job().unwrap().clone();
+    with_stale.offloadable = true;
+    assert!(
+        matches!(
+            api.update(&token, &ApiObject::BatchJob(with_stale)),
+            Err(ApiError::Conflict(_))
+        ),
+        "stale resourceVersion must conflict"
+    );
+
+    // …so a fresh read-modify-write is required
+    let fresh = api.get(&token, ResourceKind::BatchJob, &name).unwrap();
+    let mut job = fresh.as_batch_job().unwrap().clone();
+    job.offloadable = true;
+    job.restart_policy = "Never".to_string();
+    let updated = api.update(&token, &ApiObject::BatchJob(job)).unwrap();
+    let updated = updated.as_batch_job().unwrap();
+    assert!(updated.offloadable);
+    assert_eq!(updated.restart_policy, "Never");
+    // …and an unconditional write (resourceVersion = 0) is allowed
+    let mut job = updated.clone();
+    job.metadata.resource_version = 0;
+    job.offloadable = false;
+    let back = api.update(&token, &ApiObject::BatchJob(job)).unwrap();
+    assert!(!back.as_batch_job().unwrap().offloadable);
+}
+
+/// Admission rejections surface as typed `Invalid` errors naming the
+/// admitter, both on create (validation) and update (immutable fields).
+#[test]
+fn admission_rejection_surfaces_as_invalid() {
+    let mut api = common::api();
+    let token = api.login("user021").unwrap();
+
+    // empty resource requests: rejected by the validating admitter
+    let empty = ApiObject::BatchJob(BatchJobResource::request(
+        "user021",
+        "project04",
+        ResourceVec::new(),
+        100.0,
+        PriorityClass::Batch,
+        false,
+    ));
+    match api.create(&token, &empty) {
+        Err(ApiError::Invalid(msg)) => assert!(msg.contains("admission denied"), "{msg}"),
+        other => panic!("expected Invalid, got {other:?}"),
+    }
+
+    // non-positive duration
+    let zero = job_request("user021", "project04", 0.0);
+    assert!(matches!(api.create(&token, &zero), Err(ApiError::Invalid(_))));
+
+    // immutable-field change on update
+    let created = api.create(&token, &job_request("user021", "project04", 200.0)).unwrap();
+    let mut mutated = created.as_batch_job().unwrap().clone();
+    mutated.duration = 999.0;
+    match api.update(&token, &ApiObject::BatchJob(mutated)) {
+        Err(ApiError::Invalid(msg)) => assert!(msg.contains("immutable"), "{msg}"),
+        other => panic!("expected Invalid(immutable), got {other:?}"),
+    }
+}
+
+/// Deleting a Workload cascades to its owned Pods through the GC
+/// reconciler: the pods carry `ownerReferences` to the Workload, the
+/// delete verb returns the final object, and one tick later the pods are
+/// gone (with `Deleted` watch events) and the quota is released.
+#[test]
+fn workload_delete_cascades_to_owned_pods() {
+    let mut api = common::api();
+    let token = api.login("user022").unwrap();
+    let created = api.create(&token, &job_request("user022", "project05", 600.0)).unwrap();
+    let wl = created.name().to_string();
+    api.run_for(60.0, 10.0);
+
+    let pods = api
+        .list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap())
+        .unwrap();
+    assert_eq!(pods.len(), 1, "the admitted job realizes one pod");
+    let pod_name = pods[0].name().to_string();
+    let owners = &pods[0].as_pod().unwrap().metadata.owner_references;
+    assert!(
+        owners.iter().any(|o| o.kind == ResourceKind::Workload && o.name == wl),
+        "pod must reference its owning Workload: {owners:?}"
+    );
+
+    let rv0 = api.last_rv();
+    let last = api.delete(&token, ResourceKind::Workload, &wl).unwrap();
+    assert!(last.metadata().deletion_timestamp.is_some());
+    assert!(matches!(
+        api.get(&token, ResourceKind::Workload, &wl),
+        Err(ApiError::NotFound(_))
+    ));
+
+    // the GC reconciler converges the cascade on the next tick
+    api.tick();
+    assert!(matches!(
+        api.get(&token, ResourceKind::Pod, &pod_name),
+        Err(ApiError::NotFound(_))
+    ));
+    assert!(api
+        .list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap())
+        .unwrap()
+        .is_empty());
+    let deleted_events: Vec<_> = api
+        .watch(&token, ResourceKind::Pod, rv0)
+        .unwrap()
+        .into_iter()
+        .filter(|e| e.name == pod_name && e.event == EventType::Deleted)
+        .collect();
+    assert_eq!(deleted_events.len(), 1, "one Deleted watch event for the GC'd pod");
+    // quota fully released
+    let (used, _) = api.platform().quota_utilization();
+    assert!(used.is_empty(), "leaked quota {used}");
+    assert_eq!(api.platform().metrics().terminal_failures, 0);
+}
+
+/// An object with pending finalizers enters the terminating state on
+/// delete (`deletionTimestamp` set, still readable) and is only removed —
+/// cascading through the GC — once a write clears the finalizers.
+#[test]
+fn finalizers_defer_deletion_until_cleared() {
+    let mut api = common::api();
+    let token = api.login("user023").unwrap();
+    let created = api.create(&token, &job_request("user023", "project06", 400.0)).unwrap();
+    let name = created.name().to_string();
+
+    // attach a finalizer via strategic-merge patch
+    let patch = Json::parse(r#"{"metadata":{"finalizers":["example.com/archive"]}}"#).unwrap();
+    let patched = api.patch(&token, ResourceKind::BatchJob, &name, &patch).unwrap();
+    assert_eq!(
+        patched.metadata().finalizers,
+        vec!["example.com/archive".to_string()]
+    );
+
+    // delete: terminating, not gone
+    let terminating = api.delete(&token, ResourceKind::BatchJob, &name).unwrap();
+    assert!(terminating.metadata().deletion_timestamp.is_some());
+    let still = api.get(&token, ResourceKind::BatchJob, &name).unwrap();
+    assert!(still.metadata().terminating());
+    api.tick();
+    assert!(
+        api.get(&token, ResourceKind::BatchJob, &name).is_ok(),
+        "finalizer-blocked object survives ticks"
+    );
+
+    // a malformed (non-array) finalizers value is rejected, not read as []
+    // — that would silently complete the deletion
+    let bad = Json::parse(r#"{"metadata":{"finalizers":"example.com/archive"}}"#).unwrap();
+    assert!(matches!(
+        api.patch(&token, ResourceKind::BatchJob, &name, &bad),
+        Err(ApiError::Invalid(_))
+    ));
+
+    // clearing the finalizers completes the deletion
+    let clear = Json::parse(r#"{"metadata":{"finalizers":[]}}"#).unwrap();
+    let last = api.patch(&token, ResourceKind::BatchJob, &name, &clear).unwrap();
+    assert!(last.metadata().deletion_timestamp.is_some());
+    assert!(matches!(
+        api.get(&token, ResourceKind::BatchJob, &name),
+        Err(ApiError::NotFound(_))
+    ));
+    api.tick();
+    let wl = api.get(&token, ResourceKind::Workload, &name).unwrap();
+    assert_eq!(wl.as_workload().unwrap().state, "Finished", "GC cancelled the job");
+}
+
+/// `apply` is a create-or-update upsert, and the update leg is observable
+/// on the watch stream as a `Modified` delta carrying the new spec.
+#[test]
+fn apply_upsert_roundtrips_through_watch() {
+    let mut api = common::api();
+    let token = api.login("user024").unwrap();
+    let rv0 = api.last_rv();
+
+    // first apply: create
+    let created = api.apply(&token, &job_request("user024", "project07", 500.0)).unwrap();
+    let name = created.name().to_string();
+    assert!(!created.as_batch_job().unwrap().offloadable);
+
+    // second apply: update (carrying the fresh resourceVersion)
+    let mut desired = created.as_batch_job().unwrap().clone();
+    desired.offloadable = true;
+    let applied = api.apply(&token, &ApiObject::BatchJob(desired)).unwrap();
+    assert!(applied.as_batch_job().unwrap().offloadable);
+
+    let events = api.watch(&token, ResourceKind::BatchJob, rv0).unwrap();
+    let mine: Vec<_> = events.into_iter().filter(|e| e.name == name).collect();
+    assert_eq!(mine.first().map(|e| e.event), Some(EventType::Added), "{mine:?}");
+    let modified_offloadable = mine.iter().any(|e| {
+        e.event == EventType::Modified
+            && e.object
+                .as_ref()
+                .and_then(|o| o.at(&["spec", "offloadable"]))
+                .and_then(Json::as_bool)
+                == Some(true)
+    });
+    assert!(modified_offloadable, "apply must surface as a Modified delta: {mine:?}");
+}
+
+/// The status subresource writes conditions without touching the spec,
+/// and spec updates preserve status-written conditions — the two write
+/// paths cannot clobber each other. Stale versions conflict here too.
+#[test]
+fn status_subresource_is_isolated_from_spec() {
+    let mut api = common::api();
+    let token = api.login("user025").unwrap();
+    let created = api.create(&token, &job_request("user025", "project08", 300.0)).unwrap();
+    let name = created.name().to_string();
+
+    // status write: a condition, plus a sneaky spec change that must NOT land
+    let mut status_obj = created.as_batch_job().unwrap().clone();
+    status_obj.offloadable = true; // ignored by the status subresource
+    status_obj.conditions =
+        vec![Condition::new("Archived", true, "Test", "set via status subresource", 1.0)];
+    let after = api.update_status(&token, &ApiObject::BatchJob(status_obj)).unwrap();
+    let after = after.as_batch_job().unwrap();
+    assert!(!after.offloadable, "status write must not touch the spec");
+    assert!(after.conditions.iter().any(|c| c.ctype == "Archived"));
+
+    // spec write: preserves the status-written condition
+    let mut spec_obj = after.clone();
+    spec_obj.offloadable = true;
+    spec_obj.conditions = Vec::new(); // ignored by the spec path
+    let after2 = api.update(&token, &ApiObject::BatchJob(spec_obj)).unwrap();
+    let after2 = after2.as_batch_job().unwrap();
+    assert!(after2.offloadable);
+    assert!(
+        after2.conditions.iter().any(|c| c.ctype == "Archived"),
+        "spec write must not clobber status conditions"
+    );
+
+    // stale status write conflicts
+    let mut stale = created.as_batch_job().unwrap().clone();
+    stale.conditions = vec![Condition::new("Stale", true, "Old", "stale rv", 2.0)];
+    assert!(matches!(
+        api.update_status(&token, &ApiObject::BatchJob(stale)),
+        Err(ApiError::Conflict(_))
+    ));
+}
+
+/// Deleting a Session cascades to its pod (removed from the store by the
+/// GC reconciler) and its volume-claim-like attachments (the rclone
+/// bucket mount dies with the session).
+#[test]
+fn session_delete_cascades_to_pod_and_claims() {
+    let mut api = common::api();
+    let token = api.login("user026").unwrap();
+    let created = api
+        .create(
+            &token,
+            &ApiObject::Session(SessionResource::request("user026", "cpu-small")),
+        )
+        .unwrap();
+    let sid = created.name().to_string();
+    api.run_for(60.0, 10.0);
+    let session = api.get(&token, ResourceKind::Session, &sid).unwrap();
+    let pod_name = session.as_session().unwrap().pod_name.clone();
+    let pod = api.get(&token, ResourceKind::Pod, &pod_name).unwrap();
+    assert!(
+        pod.metadata()
+            .owner_references
+            .iter()
+            .any(|o| o.kind == ResourceKind::Session && o.name == sid),
+        "session pod must reference its owning Session"
+    );
+
+    let last = api.delete(&token, ResourceKind::Session, &sid).unwrap();
+    assert!(last.metadata().deletion_timestamp.is_some());
+    api.tick();
+    assert!(api.platform().session(&sid).is_none(), "session torn down");
+    assert!(
+        matches!(api.get(&token, ResourceKind::Pod, &pod_name), Err(ApiError::NotFound(_))),
+        "session pod garbage-collected"
+    );
+    // interactive quota released with the workload
+    let (used, _) = api.platform().quota_utilization();
+    assert!(used.is_empty(), "leaked quota {used}");
+}
