@@ -1,11 +1,18 @@
 //! API-verb throughput microbenchmark: how many control-plane write/read
 //! operations per second the apply/reconcile front door sustains —
 //! `create`, `apply` (update leg), `patch` (strategic merge), `get`,
-//! `list` with a selector, and `watch` catch-up reads.
+//! `list` with a selector, and `watch` catch-up reads — plus the
+//! 5 000-object scale regime with an **in-run before/after harness**: the
+//! indexed list/watch read path measured against the pre-index baseline
+//! (serialize-every-object selector filtering, scan-every-kind watch
+//! catch-up) in the same process, so the speedup is apples-to-apples.
 //!
 //! Emits the standard `BENCH\t…` rows plus a machine-readable
-//! `BENCH_api.json` with median ops/sec per verb, so CI and
+//! `BENCH_api.json` with median ops/sec per verb and the 5k-scale
+//! `*_5k` / `*_baseline_*` / `*_speedup_5k` fields, so CI and
 //! EXPERIMENTS.md tables can track regressions on the API hot path.
+
+mod scale_reads;
 
 use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector};
 use aiinfn::cluster::resources::{ResourceVec, MEMORY};
@@ -97,6 +104,15 @@ fn main() {
         r.per_sec()
     };
 
+    // ----------------------------------------------------- the 5k regime
+    // Grow the control plane to ~5 000 API objects of the listed kind
+    // (plus their Workload shadows), with a 1% "hot" labeled subset — the
+    // selective-query shape the inverted index exists for — and measure
+    // the indexed read paths against their in-run baselines (shared
+    // harness with control_plane_scale).
+    scale_reads::populate(&mut api, &token, "user001", 5_000, 50);
+    let reads = scale_reads::bench_reads(&mut g, &api, &token);
+
     let out = Json::obj(vec![
         ("get_ops_per_sec", Json::num(get_ops)),
         ("list_ops_per_sec", Json::num(list_ops)),
@@ -104,6 +120,13 @@ fn main() {
         ("create_ops_per_sec", Json::num(create_ops)),
         ("apply_ops_per_sec", Json::num(apply_ops)),
         ("patch_ops_per_sec", Json::num(patch_ops)),
+        ("api_objects_at_scale", Json::num(reads.objects as f64)),
+        ("list_ops_per_sec_5k", Json::num(reads.list_indexed)),
+        ("list_baseline_ops_per_sec_5k", Json::num(reads.list_baseline)),
+        ("list_speedup_5k", Json::num(reads.list_speedup())),
+        ("watch_ops_per_sec_5k", Json::num(reads.watch_indexed)),
+        ("watch_baseline_ops_per_sec_5k", Json::num(reads.watch_baseline)),
+        ("watch_speedup_5k", Json::num(reads.watch_speedup())),
     ]);
     std::fs::write("BENCH_api.json", out.to_pretty()).expect("write BENCH_api.json");
     println!("wrote BENCH_api.json");

@@ -1,0 +1,201 @@
+//! Control-plane scale benchmark: the 1 000-node / 10 000-pod / 5 000-API-
+//! object regime the National-Research-Platform-style multi-tenant
+//! deployments live in. Exercises the three pruned hot paths of the
+//! perf refactor and measures each against its pre-change baseline **in
+//! the same run**:
+//!
+//! * **schedule** — a full 10k-pod drain through the free-capacity-indexed
+//!   scheduler over 1k nodes, plus the steady-state 100-pods-per-tick
+//!   churn cycle;
+//! * **list** — label-selector and field-selector lists at 5k objects via
+//!   the inverted-label/typed-evaluator path vs. the brute-force
+//!   serialize-every-object filter (the former code path, still available
+//!   as `Selector::matches` on JSON);
+//! * **watch** — catch-up reads from the per-kind sharded log vs. the
+//!   scan-every-kind baseline.
+//!
+//! Emits `BENCH_scale.json` (ops/sec + speedups + ring-log occupancy as
+//! bounded-memory evidence) alongside the `BENCH\t…` rows. CI uploads the
+//! file and diffs it against the committed previous run.
+
+mod scale_reads;
+
+use std::time::Instant;
+
+use aiinfn::api::{ApiObject, ApiServer, ResourceKind, Selector};
+use aiinfn::cluster::node::Node;
+use aiinfn::cluster::pod::{Payload, PodSpec};
+use aiinfn::cluster::resources::{ResourceVec, GPU, MEMORY};
+use aiinfn::cluster::scheduler::Scheduler;
+use aiinfn::cluster::store::ClusterStore;
+use aiinfn::gpu::{GpuDevice, GpuModel};
+use aiinfn::platform::{default_config_path, PlatformConfig};
+use aiinfn::util::bench::{black_box, BenchGroup};
+use aiinfn::util::json::Json;
+
+const NODES: usize = 1_000;
+const PODS: usize = 10_000;
+const API_OBJECTS: usize = 5_000;
+
+/// 1 000 nodes: three quarters CPU-only, one quarter with 4 T4s each.
+fn big_store() -> ClusterStore {
+    let mut s = ClusterStore::new();
+    s.set_event_capacity(65_536);
+    for i in 0..NODES {
+        let gpus = if i % 4 == 0 {
+            (0..4).map(|g| GpuDevice::whole(format!("n{i}-g{g}"), GpuModel::TeslaT4)).collect()
+        } else {
+            Vec::new()
+        };
+        s.add_node(Node::physical(format!("node-{i:04}"), 64, 256 << 30, 4 << 40, gpus), 0.0);
+    }
+    s
+}
+
+fn cpu_pod(name: String) -> PodSpec {
+    PodSpec::new(
+        name,
+        ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+        Payload::Sleep { duration: 60.0 },
+    )
+}
+
+fn gpu_pod(name: String) -> PodSpec {
+    PodSpec::new(
+        name,
+        ResourceVec::cpu_millis(2000).with(MEMORY, 8 << 30).with(GPU, 1),
+        Payload::Sleep { duration: 60.0 },
+    )
+}
+
+fn main() {
+    let mut g = BenchGroup::new("control_plane_scale");
+
+    // ------------------------------------------------ scheduler at scale
+    let mut store = big_store();
+    let sched = Scheduler::default();
+    for i in 0..PODS {
+        let spec = if i % 10 == 0 {
+            gpu_pod(format!("pod-{i:05}"))
+        } else {
+            cpu_pod(format!("pod-{i:05}"))
+        };
+        store.create_pod(spec, 0.0);
+    }
+    let t = Instant::now();
+    let (placed, failed) = sched.schedule_pending(&mut store, 1.0);
+    let drain_secs = t.elapsed().as_secs_f64();
+    assert!(failed.is_empty(), "the 10k drain must fit 1k nodes: {failed:?}");
+    assert_eq!(placed.len(), PODS);
+    let drain_pods_per_sec = PODS as f64 / drain_secs;
+    g.record_value("drain_10k_pods_per_sec", drain_pods_per_sec, "pods/s");
+    store.check_free_index();
+
+    // steady-state churn: 100 new pods per "tick" against a warm cluster,
+    // then removed so the cycle is repeatable
+    let mut serial = 0usize;
+    let tick_sched = {
+        let r = g.bench_elements("tick_schedule_100", 100, || {
+            let names: Vec<String> = (0..100)
+                .map(|_| {
+                    serial += 1;
+                    let name = format!("churn-{serial:07}");
+                    store.create_pod(cpu_pod(name.clone()), 2.0);
+                    name
+                })
+                .collect();
+            let (placed, _failed) = sched.schedule_pending(&mut store, 2.0);
+            black_box(placed.len());
+            for n in &names {
+                store.delete_pod(n, 2.0, "bench churn").unwrap();
+            }
+        });
+        r.per_sec()
+    };
+
+    // ------------------------------------------------- API plane at scale
+    // 1 000-server inventory (CPU-only for bootstrap speed), 5 000 batch
+    // jobs with a 1% hot-labeled subset.
+    let mut cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let template = cfg.servers[0].clone();
+    cfg.servers = (0..NODES)
+        .map(|i| {
+            let mut s = template.clone();
+            s.name = format!("srv-{i:04}");
+            s.cpu_cores = 64;
+            s.memory_gb = 256;
+            s.nvme_tb = 4;
+            s.gpus = Vec::new();
+            s
+        })
+        .collect();
+    cfg.federation_enabled = false;
+    let mut api = ApiServer::bootstrap(cfg).unwrap();
+    let token = api.login("user001").unwrap();
+
+    // hot-label list (1% selectivity) + watch catch-up, indexed vs the
+    // in-run baselines — shared harness with the api_verbs bench
+    scale_reads::populate(&mut api, &token, "user001", API_OBJECTS, API_OBJECTS / 100);
+    let reads = scale_reads::bench_reads(&mut g, &api, &token);
+
+    // list: field selector over 1k nodes — typed evaluator vs to_json
+    let virt = Selector::fields("spec.virtual=false").unwrap();
+    let list_field = {
+        let r = g.bench("list_1k_nodes_field_typed", || {
+            black_box(api.list(&token, ResourceKind::Node, &virt).unwrap());
+        });
+        r.per_sec()
+    };
+    let list_field_baseline = {
+        let r = g.bench("list_1k_nodes_field_bruteforce", || {
+            let all = api.list(&token, ResourceKind::Node, &Selector::all()).unwrap();
+            let matched: Vec<ApiObject> =
+                all.into_iter().filter(|o| virt.matches(&o.to_json())).collect();
+            black_box(matched);
+        });
+        r.per_sec()
+    };
+
+    // reconcile ticks at scale: first ticks admit + place the 5k jobs,
+    // then the steady state measures per-tick control-plane overhead
+    for _ in 0..5 {
+        api.tick();
+    }
+    let tick = {
+        let r = g.bench("api_tick_steady_5k", || {
+            api.tick();
+        });
+        r.per_sec()
+    };
+
+    // ring-log occupancy after everything above: bounded by the window
+    let window = api.platform().config.compaction_window;
+    let event_ring = api.platform().cluster().events().len();
+    assert!(event_ring <= window, "event ring exceeded the compaction window");
+
+    let out = Json::obj(vec![
+        ("nodes", Json::num(NODES as f64)),
+        ("pods_drained", Json::num(PODS as f64)),
+        ("api_objects", Json::num(reads.objects as f64)),
+        ("drain_pods_per_sec", Json::num(drain_pods_per_sec)),
+        ("tick_schedule_pods_per_sec", Json::num(tick_sched)),
+        ("list_label_ops_per_sec", Json::num(reads.list_indexed)),
+        ("list_label_baseline_ops_per_sec", Json::num(reads.list_baseline)),
+        ("list_label_speedup", Json::num(reads.list_speedup())),
+        ("list_field_ops_per_sec", Json::num(list_field)),
+        ("list_field_baseline_ops_per_sec", Json::num(list_field_baseline)),
+        (
+            "list_field_speedup",
+            Json::num(list_field / list_field_baseline.max(f64::MIN_POSITIVE)),
+        ),
+        ("watch_ops_per_sec", Json::num(reads.watch_indexed)),
+        ("watch_baseline_ops_per_sec", Json::num(reads.watch_baseline)),
+        ("watch_speedup", Json::num(reads.watch_speedup())),
+        ("api_ticks_per_sec", Json::num(tick)),
+        ("compaction_window", Json::num(window as f64)),
+        ("event_ring_len", Json::num(event_ring as f64)),
+        ("watch_log_len", Json::num(api.watch_log_len() as f64)),
+    ]);
+    std::fs::write("BENCH_scale.json", out.to_pretty()).expect("write BENCH_scale.json");
+    println!("wrote BENCH_scale.json");
+}

@@ -1,0 +1,122 @@
+//! Shared 5k-object read harness for `api_verbs` and
+//! `control_plane_scale`: grow the control plane to N batch jobs with a
+//! hot-labeled subset, then measure the indexed list/watch read paths
+//! against their pre-change baselines **in the same run** (brute-force
+//! serialize-and-filter list, scan-every-kind watch catch-up), asserting
+//! the fast and slow paths agree before the numbers are reported. One
+//! implementation, two bench binaries — the selector shape and baseline
+//! fairness cannot drift apart between `BENCH_api.json` and
+//! `BENCH_scale.json`.
+
+use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector};
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::queue::kueue::PriorityClass;
+use aiinfn::util::bench::{black_box, BenchGroup};
+
+/// Ops/sec for the four measured read paths at scale.
+pub struct ReadNumbers {
+    /// Objects of the listed kind present during measurement.
+    pub objects: usize,
+    pub list_indexed: f64,
+    pub list_baseline: f64,
+    pub watch_indexed: f64,
+    pub watch_baseline: f64,
+}
+
+impl ReadNumbers {
+    pub fn list_speedup(&self) -> f64 {
+        self.list_indexed / self.list_baseline.max(f64::MIN_POSITIVE)
+    }
+
+    pub fn watch_speedup(&self) -> f64 {
+        self.watch_indexed / self.watch_baseline.max(f64::MIN_POSITIVE)
+    }
+}
+
+fn job_request(user: &str, labels: &[(&str, &str)]) -> ApiObject {
+    let mut obj = ApiObject::BatchJob(BatchJobResource::request(
+        user,
+        "project00",
+        ResourceVec::cpu_millis(2000).with(MEMORY, 4 << 30),
+        600.0,
+        PriorityClass::Batch,
+        false,
+    ));
+    for (k, v) in labels {
+        obj.metadata_mut().labels.insert(k.to_string(), v.to_string());
+    }
+    obj
+}
+
+/// Grow the plane to at least `total` BatchJobs, then add `hot_count`
+/// jobs labeled `bench/hot=yes` unconditionally (earlier benches may
+/// already have grown the plane past `total` plain jobs). Returns the
+/// resulting object count.
+pub fn populate(api: &mut ApiServer, token: &str, user: &str, total: usize, hot_count: usize) -> usize {
+    let existing = api.list(token, ResourceKind::BatchJob, &Selector::all()).unwrap().len();
+    for _ in existing..total.saturating_sub(hot_count) {
+        api.create(token, &job_request(user, &[])).unwrap();
+    }
+    for _ in 0..hot_count {
+        api.create(token, &job_request(user, &[("bench/hot", "yes")])).unwrap();
+    }
+    api.list(token, ResourceKind::BatchJob, &Selector::all()).unwrap().len()
+}
+
+/// Measure hot-label list and watch catch-up, indexed vs. the pre-index
+/// baselines, asserting both paths agree. Bench row names are stable
+/// across the two callers; the group name distinguishes them.
+pub fn bench_reads(g: &mut BenchGroup, api: &ApiServer, token: &str) -> ReadNumbers {
+    let hot = Selector::labels("bench/hot=yes").unwrap();
+
+    let list_indexed = g
+        .bench("list_5k_label_indexed", || {
+            black_box(api.list(token, ResourceKind::BatchJob, &hot).unwrap());
+        })
+        .per_sec();
+    // pre-index baseline, same run: build every view, serialize it, and
+    // evaluate the selector on the JSON — exactly the former read path
+    let list_baseline = g
+        .bench("list_5k_label_bruteforce", || {
+            let all = api.list(token, ResourceKind::BatchJob, &Selector::all()).unwrap();
+            let matched: Vec<ApiObject> =
+                all.into_iter().filter(|o| hot.matches(&o.to_json())).collect();
+            black_box(matched);
+        })
+        .per_sec();
+
+    let watch_from = api.last_rv().saturating_sub(200);
+    let watch_indexed = g
+        .bench("watch_5k_catchup_indexed", || {
+            black_box(api.watch(token, ResourceKind::BatchJob, watch_from).unwrap());
+        })
+        .per_sec();
+    let watch_baseline = g
+        .bench("watch_5k_catchup_scan", || {
+            black_box(api.watch_scan_baseline(ResourceKind::BatchJob, watch_from));
+        })
+        .per_sec();
+
+    // the fast and slow paths must agree before their numbers mean anything
+    let a = api.list(token, ResourceKind::BatchJob, &hot).unwrap();
+    let b: Vec<ApiObject> = api
+        .list(token, ResourceKind::BatchJob, &Selector::all())
+        .unwrap()
+        .into_iter()
+        .filter(|o| hot.matches(&o.to_json()))
+        .collect();
+    assert_eq!(a, b, "indexed list must equal brute force");
+    assert_eq!(
+        api.watch(token, ResourceKind::BatchJob, watch_from).unwrap(),
+        api.watch_scan_baseline(ResourceKind::BatchJob, watch_from),
+        "sharded watch must equal the scan baseline"
+    );
+
+    ReadNumbers {
+        objects: api.list(token, ResourceKind::BatchJob, &Selector::all()).unwrap().len(),
+        list_indexed,
+        list_baseline,
+        watch_indexed,
+        watch_baseline,
+    }
+}

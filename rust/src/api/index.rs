@@ -1,0 +1,491 @@
+//! Read-path indexes for the API server: inverted label maps, a typed
+//! selector evaluator, and an rv-keyed serialized-view cache.
+//!
+//! The pre-index `list` serialized *every* object of a kind to
+//! [`Json`] just to evaluate the selector — O(objects × serialization)
+//! per call. This module keeps three structures per kind, maintained from
+//! the same watch events the server already appends:
+//!
+//! * **`labels_of`** — each object's labels as of its latest event, the
+//!   authoritative metadata for selector evaluation without building the
+//!   view;
+//! * **`by_label`** — the inverted `label key → value → names` map; an
+//!   equality or set-membership label requirement prunes the candidate
+//!   set to exactly the matching names before any view is built
+//!   (absence-matching operators `!=` / `notin` cannot prune — they match
+//!   objects missing the key entirely);
+//! * **`views`** — a per-object serialized snapshot keyed by the object's
+//!   `resourceVersion`, filled lazily the first time a field selector
+//!   needs the JSON form (a path the typed evaluator does not model), so
+//!   an unchanged object is serialized once, not once per `list` call.
+//!
+//! Field selectors on the modeled paths (`status.phase`, `spec.virtual`,
+//! `spec.project`, …) evaluate directly against the typed view via
+//! [`typed_field`]; only unknown paths fall back to the cached JSON.
+//! Objects the index has never seen (no event yet) are never skipped —
+//! they are evaluated in full, so the index is strictly an accelerator,
+//! never a correctness dependency. The randomized invariant sweep holds
+//! `list`-via-index equal to the brute-force serialize-and-filter result.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::api::resources::{ApiObject, ResourceKind, API_VERSION};
+use crate::api::server::{field_eq, Selector, SelectorOp};
+use crate::api::watch::EventType;
+use crate::util::json::Json;
+
+/// A typed field value produced by [`typed_field`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum FieldVal<'a> {
+    S(&'a str),
+    N(f64),
+    B(bool),
+}
+
+/// Compare a typed field against a selector literal — the typed mirror of
+/// [`field_eq`] (same string/number/bool coercions; an absent field never
+/// equals anything).
+fn field_val_eq(got: Option<FieldVal<'_>>, want: &str) -> bool {
+    match got {
+        Some(FieldVal::S(s)) => s == want,
+        Some(FieldVal::N(n)) => want.parse::<f64>().map(|w| w == n).unwrap_or(false),
+        Some(FieldVal::B(b)) => want.parse::<bool>().map(|w| w == b).unwrap_or(false),
+        None => false,
+    }
+}
+
+fn op_matches_val(op: &SelectorOp, got: Option<FieldVal<'_>>) -> bool {
+    match op {
+        SelectorOp::Eq(w) => field_val_eq(got, w),
+        SelectorOp::Ne(w) => !field_val_eq(got, w),
+        SelectorOp::In(set) => set.iter().any(|w| field_val_eq(got, w)),
+        SelectorOp::NotIn(set) => !set.iter().any(|w| field_val_eq(got, w)),
+    }
+}
+
+fn op_matches_json(op: &SelectorOp, got: Option<&Json>) -> bool {
+    match op {
+        SelectorOp::Eq(w) => field_eq(got, w),
+        SelectorOp::Ne(w) => !field_eq(got, w),
+        SelectorOp::In(set) => set.iter().any(|w| field_eq(got, w)),
+        SelectorOp::NotIn(set) => !set.iter().any(|w| field_eq(got, w)),
+    }
+}
+
+/// Resolve a dotted field path against the typed view, mirroring each
+/// kind's `to_json` shape exactly (including keys omitted when empty).
+/// Outer `None` = the path is not modeled (caller falls back to JSON);
+/// inner `None` = modeled and absent on this object.
+pub(crate) fn typed_field<'a>(obj: &'a ApiObject, path: &str) -> Option<Option<FieldVal<'a>>> {
+    match path {
+        "kind" => return Some(Some(FieldVal::S(obj.kind().as_str()))),
+        "apiVersion" => return Some(Some(FieldVal::S(API_VERSION))),
+        "metadata.name" => return Some(Some(FieldVal::S(obj.name()))),
+        "metadata.namespace" => return Some(Some(FieldVal::S(&obj.metadata().namespace))),
+        "metadata.resourceVersion" => {
+            return Some(Some(FieldVal::N(obj.metadata().resource_version as f64)))
+        }
+        "metadata.deletionTimestamp" => {
+            return Some(obj.metadata().deletion_timestamp.map(FieldVal::N))
+        }
+        _ => {}
+    }
+    Some(match obj {
+        ApiObject::Session(s) => match path {
+            "spec.user" => Some(FieldVal::S(&s.user)),
+            "spec.profile" => Some(FieldVal::S(&s.profile)),
+            "status.podName" => Some(FieldVal::S(&s.pod_name)),
+            "status.workloadName" => Some(FieldVal::S(&s.workload_name)),
+            "status.phase" => Some(FieldVal::S(&s.phase)),
+            "status.startedAt" => Some(FieldVal::N(s.started_at)),
+            "status.bucketMount" => s.bucket_mount.as_deref().map(FieldVal::S),
+            _ => return None,
+        },
+        ApiObject::BatchJob(j) => match path {
+            "spec.user" => Some(FieldVal::S(&j.user)),
+            "spec.project" => Some(FieldVal::S(&j.project)),
+            "spec.duration" => Some(FieldVal::N(j.duration)),
+            "spec.priority" => Some(FieldVal::S(&j.priority)),
+            "spec.offloadable" => Some(FieldVal::B(j.offloadable)),
+            // to_json omits empty queue/restartPolicy: absent, not ""
+            "spec.queue" => (!j.queue.is_empty()).then(|| FieldVal::S(j.queue.as_str())),
+            "spec.restartPolicy" => {
+                (!j.restart_policy.is_empty()).then(|| FieldVal::S(j.restart_policy.as_str()))
+            }
+            "status.state" => Some(FieldVal::S(&j.state)),
+            "status.livePod" => j.live_pod.as_deref().map(FieldVal::S),
+            "status.retries" => Some(FieldVal::N(j.retries as f64)),
+            _ => return None,
+        },
+        ApiObject::Pod(p) => match path {
+            "spec.user" => Some(FieldVal::S(&p.user)),
+            "spec.project" => Some(FieldVal::S(&p.project)),
+            "status.phase" => Some(FieldVal::S(&p.phase)),
+            "status.node" => p.node.as_deref().map(FieldVal::S),
+            "status.createdAt" => Some(FieldVal::N(p.created_at)),
+            "status.startedAt" => p.started_at.map(FieldVal::N),
+            "status.finishedAt" => p.finished_at.map(FieldVal::N),
+            "status.evictions" => Some(FieldVal::N(p.evictions as f64)),
+            "status.message" => Some(FieldVal::S(&p.message)),
+            _ => return None,
+        },
+        ApiObject::Node(n) => match path {
+            "spec.virtual" => Some(FieldVal::B(n.virtual_node)),
+            "status.ready" => Some(FieldVal::B(n.ready)),
+            _ => return None,
+        },
+        ApiObject::Workload(w) => match path {
+            "spec.queue" => Some(FieldVal::S(&w.queue)),
+            "spec.priority" => Some(FieldVal::S(&w.priority)),
+            "status.state" => Some(FieldVal::S(&w.state)),
+            "status.createdAt" => Some(FieldVal::N(w.created_at)),
+            "status.admittedAt" => w.admitted_at.map(FieldVal::N),
+            "status.evictions" => Some(FieldVal::N(w.evictions as f64)),
+            _ => return None,
+        },
+        ApiObject::Site(s) => match path {
+            "spec.site" => Some(FieldVal::S(&s.site)),
+            "spec.nodeName" => Some(FieldVal::S(&s.node_name)),
+            "spec.wanLatency" => Some(FieldVal::N(s.wan_latency)),
+            "status.trackedPods" => Some(FieldVal::N(s.tracked_pods as f64)),
+            "status.roundTrips" => Some(FieldVal::N(s.round_trips as f64)),
+            "status.completions" => Some(FieldVal::N(s.completions as f64)),
+            "status.health" => Some(FieldVal::S(&s.health)),
+            _ => return None,
+        },
+    })
+}
+
+/// Labels as serialized into an event snapshot.
+fn labels_from_snapshot(json: &Json) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    if let Some(obj) = json.at(&["metadata", "labels"]).and_then(Json::as_obj) {
+        for (k, v) in obj {
+            if let Some(s) = v.as_str() {
+                out.insert(k.clone(), s.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// One kind's index state.
+#[derive(Debug, Default)]
+struct KindIndex {
+    /// name → labels as of the object's latest event.
+    labels_of: HashMap<String, BTreeMap<String, String>>,
+    /// label key → value → names carrying it (the inverted index).
+    by_label: HashMap<String, HashMap<String, BTreeSet<String>>>,
+    /// name → (resourceVersion, serialized view); lazily filled, hit only
+    /// while the object's rv is unchanged.
+    views: RefCell<HashMap<String, (u64, Json)>>,
+}
+
+impl KindIndex {
+    fn unlink(&mut self, name: &str, labels: &BTreeMap<String, String>) {
+        for (k, v) in labels {
+            let mut drop_key = false;
+            if let Some(values) = self.by_label.get_mut(k) {
+                let mut drop_value = false;
+                if let Some(names) = values.get_mut(v) {
+                    names.remove(name);
+                    drop_value = names.is_empty();
+                }
+                if drop_value {
+                    values.remove(v);
+                }
+                drop_key = values.is_empty();
+            }
+            if drop_key {
+                self.by_label.remove(k);
+            }
+        }
+    }
+
+    fn link(&mut self, name: &str, labels: BTreeMap<String, String>) {
+        for (k, v) in &labels {
+            self.by_label
+                .entry(k.clone())
+                .or_default()
+                .entry(v.clone())
+                .or_default()
+                .insert(name.to_string());
+        }
+        self.labels_of.insert(name.to_string(), labels);
+    }
+}
+
+/// The per-kind read-path indexes, maintained from watch-event appends.
+#[derive(Debug, Default)]
+pub(crate) struct ApiIndex {
+    kinds: HashMap<ResourceKind, KindIndex>,
+}
+
+impl ApiIndex {
+    /// Fold one watch event into the index (called on every append).
+    pub(crate) fn observe(
+        &mut self,
+        kind: ResourceKind,
+        event: EventType,
+        name: &str,
+        object: Option<&Json>,
+    ) {
+        let ki = self.kinds.entry(kind).or_default();
+        match event {
+            EventType::Deleted => {
+                if let Some(old) = ki.labels_of.remove(name) {
+                    ki.unlink(name, &old);
+                }
+                ki.views.borrow_mut().remove(name);
+            }
+            EventType::Added | EventType::Modified => {
+                if let Some(json) = object {
+                    let new = labels_from_snapshot(json);
+                    if ki.labels_of.get(name) != Some(&new) {
+                        if let Some(old) = ki.labels_of.remove(name) {
+                            ki.unlink(name, &old);
+                        }
+                        ki.link(name, new);
+                    }
+                } else {
+                    // eventful but snapshot-less (object already gone):
+                    // make sure the object is at least known to the index
+                    ki.labels_of.entry(name.to_string()).or_default();
+                }
+                // the serialized-view cache refills lazily: the new event's
+                // rv simply outdates the cached key
+            }
+        }
+    }
+
+    /// Register an object that exists at bootstrap without an event of its
+    /// own (federation sites), so the index knows its (empty) labels.
+    pub(crate) fn seed(&mut self, kind: ResourceKind, name: &str) {
+        self.kinds
+            .entry(kind)
+            .or_default()
+            .labels_of
+            .entry(name.to_string())
+            .or_default();
+    }
+
+    /// Has this object been indexed (evented or seeded)? Unindexed objects
+    /// must never be pruned by [`candidates`](Self::candidates).
+    pub(crate) fn is_indexed(&self, kind: ResourceKind, name: &str) -> bool {
+        self.kinds.get(&kind).map(|ki| ki.labels_of.contains_key(name)).unwrap_or(false)
+    }
+
+    /// The candidate name set for the selector's `=`/`in` label
+    /// requirements (intersected), or `None` when no requirement can
+    /// prune. A returned set is exact for indexed objects — names outside
+    /// it cannot match — but says nothing about unindexed objects.
+    pub(crate) fn candidates(
+        &self,
+        kind: ResourceKind,
+        selector: &Selector,
+    ) -> Option<BTreeSet<&str>> {
+        let ki = self.kinds.get(&kind);
+        let mut acc: Option<BTreeSet<&str>> = None;
+        for (key, op) in selector.label_reqs() {
+            let set: BTreeSet<&str> = match op {
+                SelectorOp::Eq(v) => ki
+                    .and_then(|ki| ki.by_label.get(key))
+                    .and_then(|values| values.get(v))
+                    .map(|names| names.iter().map(String::as_str).collect())
+                    .unwrap_or_default(),
+                SelectorOp::In(vals) => {
+                    let mut s = BTreeSet::new();
+                    if let Some(values) = ki.and_then(|ki| ki.by_label.get(key)) {
+                        for v in vals {
+                            if let Some(names) = values.get(v) {
+                                s.extend(names.iter().map(String::as_str));
+                            }
+                        }
+                    }
+                    s
+                }
+                // absence-matching operators match objects without the key
+                SelectorOp::Ne(_) | SelectorOp::NotIn(_) => continue,
+            };
+            acc = Some(match acc {
+                None => set,
+                Some(prev) => prev.intersection(&set).copied().collect(),
+            });
+        }
+        acc
+    }
+
+    /// Evaluate the full selector against a built view: labels from the
+    /// view's metadata, fields through [`typed_field`], unknown paths
+    /// through the rv-keyed serialized-view cache.
+    pub(crate) fn matches(&self, selector: &Selector, obj: &ApiObject) -> bool {
+        for (key, op) in selector.label_reqs() {
+            let got = obj.metadata().labels.get(key).map(String::as_str);
+            if !op.matches_str(got) {
+                return false;
+            }
+        }
+        for (path, op) in selector.field_reqs() {
+            let ok = match typed_field(obj, path) {
+                Some(val) => op_matches_val(op, val),
+                None => self.with_cached_json(obj, |json| {
+                    let parts: Vec<&str> = path.split('.').collect();
+                    op_matches_json(op, json.at(&parts))
+                }),
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Is `resourceVersion` a sound cache key for this kind — i.e. does
+    /// every observable change to the serialized view come with an rv
+    /// bump? Node views embed `status.free`, which moves on every pod
+    /// bind/release *without* a Node event, so they must be serialized
+    /// fresh. Every other kind's mutable state flows through watch
+    /// events (store transitions, Kueue/health rings, write verbs).
+    fn rv_keyed(kind: ResourceKind) -> bool {
+        !matches!(kind, ResourceKind::Node)
+    }
+
+    /// Run `f` over the object's serialized view, reusing the cached JSON
+    /// while the object's resourceVersion is unchanged (kinds whose views
+    /// can drift without an rv bump are never cached).
+    fn with_cached_json<R>(&self, obj: &ApiObject, f: impl FnOnce(&Json) -> R) -> R {
+        let kind = obj.kind();
+        let name = obj.name();
+        let rv = obj.metadata().resource_version;
+        if !Self::rv_keyed(kind) {
+            return f(&obj.to_json());
+        }
+        let Some(ki) = self.kinds.get(&kind) else {
+            return f(&obj.to_json());
+        };
+        let mut cache = ki.views.borrow_mut();
+        match cache.get(name) {
+            Some((cached_rv, json)) if *cached_rv == rv => f(json),
+            _ => {
+                let json = obj.to_json();
+                let r = f(&json);
+                cache.insert(name.to_string(), (rv, json));
+                r
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::resources::{BatchJobResource, Metadata, NodeView};
+
+    fn job(name: &str, labels: &[(&str, &str)]) -> ApiObject {
+        let mut j = BatchJobResource {
+            metadata: Metadata::named(name, "batch"),
+            user: "user001".into(),
+            project: "p1".into(),
+            state: "Queued".into(),
+            priority: "batch".into(),
+            ..Default::default()
+        };
+        for (k, v) in labels {
+            j.metadata.labels.insert(k.to_string(), v.to_string());
+        }
+        j.metadata.resource_version = 7;
+        ApiObject::BatchJob(j)
+    }
+
+    #[test]
+    fn inverted_index_prunes_and_tracks_label_changes() {
+        let mut idx = ApiIndex::default();
+        let a = job("a", &[("app", "batch")]);
+        let b = job("b", &[("app", "ml")]);
+        idx.observe(ResourceKind::BatchJob, EventType::Added, "a", Some(&a.to_json()));
+        idx.observe(ResourceKind::BatchJob, EventType::Added, "b", Some(&b.to_json()));
+        let sel = Selector::labels("app=batch").unwrap();
+        let c = idx.candidates(ResourceKind::BatchJob, &sel).unwrap();
+        assert_eq!(c.into_iter().collect::<Vec<_>>(), vec!["a"]);
+        // label change on a Modified event moves the name across buckets
+        let a2 = job("a", &[("app", "ml")]);
+        idx.observe(ResourceKind::BatchJob, EventType::Modified, "a", Some(&a2.to_json()));
+        assert!(idx.candidates(ResourceKind::BatchJob, &sel).unwrap().is_empty());
+        let ml = idx
+            .candidates(ResourceKind::BatchJob, &Selector::labels("app in (ml,x)").unwrap())
+            .unwrap();
+        assert_eq!(ml.len(), 2);
+        // deletion unlinks
+        idx.observe(ResourceKind::BatchJob, EventType::Deleted, "b", None);
+        assert!(!idx.is_indexed(ResourceKind::BatchJob, "b"));
+        // absence-matching ops never prune
+        assert!(idx
+            .candidates(ResourceKind::BatchJob, &Selector::labels("app!=ml").unwrap())
+            .is_none());
+    }
+
+    #[test]
+    fn typed_evaluator_agrees_with_json_evaluator() {
+        let idx = ApiIndex::default();
+        let obj = job("wl-1", &[("app", "batch")]);
+        let json = obj.to_json();
+        for expr in [
+            "spec.user=user001",
+            "spec.user!=user002",
+            "spec.project in (p1,p2)",
+            "status.state=Queued",
+            "spec.offloadable=false",
+            "status.livePod!=x",
+            "metadata.name=wl-1",
+            "spec.queue!=anything", // omitted-when-empty key: absent
+            "status.retries=0",
+            "spec.requests.cpu!=1", // unmodeled path → JSON fallback
+        ] {
+            let sel = Selector::fields(expr).unwrap();
+            assert_eq!(
+                idx.matches(&sel, &obj),
+                sel.matches(&json),
+                "typed and JSON evaluation disagree on {expr:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn node_views_are_never_served_from_stale_cache() {
+        // Node free capacity changes without Node events (pod binds), so
+        // an rv-keyed cache would serve stale JSON for unmodeled field
+        // paths like status.free.cpu — Nodes must bypass the cache.
+        let mut idx = ApiIndex::default();
+        let mk = |cpu: i64| {
+            let mut m = Metadata::named("n1", "cluster");
+            m.resource_version = 5; // same rv both times — no Node event
+            ApiObject::Node(NodeView {
+                metadata: m,
+                free: crate::cluster::resources::ResourceVec::cpu_millis(cpu),
+                ..Default::default()
+            })
+        };
+        let before = mk(6000);
+        idx.observe(ResourceKind::Node, EventType::Added, "n1", Some(&before.to_json()));
+        let sel = Selector::fields("status.free.cpu=6000").unwrap();
+        assert!(idx.matches(&sel, &before));
+        let after = mk(4000); // a pod bound; rv unchanged
+        assert!(!idx.matches(&sel, &after), "must reflect the live view, not a cached one");
+        assert!(idx.matches(&Selector::fields("status.free.cpu=4000").unwrap(), &after));
+    }
+
+    #[test]
+    fn typed_field_mirrors_node_shape() {
+        let node = ApiObject::Node(NodeView {
+            metadata: Metadata::named("n1", "cluster"),
+            virtual_node: true,
+            ready: false,
+            ..Default::default()
+        });
+        let sel = Selector::fields("spec.virtual=true,status.ready=false").unwrap();
+        let idx = ApiIndex::default();
+        assert!(idx.matches(&sel, &node));
+        assert!(sel.matches(&node.to_json()));
+    }
+}

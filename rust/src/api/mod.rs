@@ -66,8 +66,15 @@
 //! ## Watch streams
 //!
 //! [`ApiServer`] maintains a monotonically-versioned event log
-//! ([`WatchLog`]), fed by the cluster store's event records and the Kueue
-//! transition log — *deltas*, not store re-scans. Pod and Node events come
+//! ([`WatchLog`]) sharded per kind (catch-up reads binary-search one
+//! kind's stream instead of filtering every event), fed by the cluster
+//! store's event ring and the Kueue transition ring through absolute
+//! cursors — *deltas*, not store re-scans. Each stream retains at most
+//! `control_plane.compaction_window` events; a watcher that falls behind
+//! gets [`ApiError::Compacted`] ("410 Gone") and must re-`list`, then
+//! watch from `last_rv()`. The same appends maintain the crate-internal
+//! read indexes (`api::index`): inverted label maps and a typed selector
+//! evaluator let `list` filter without serializing objects to JSON. Pod and Node events come
 //! straight from the store; Workload events from the Kueue transitions;
 //! Session and BatchJob streams mirror their pod/workload transitions as
 //! `Modified` events, with `Added`/`Deleted` emitted by the create/delete
@@ -110,6 +117,7 @@
 //! ```
 
 pub mod admission;
+pub(crate) mod index;
 pub mod resources;
 pub mod server;
 pub mod watch;
@@ -138,4 +146,9 @@ pub enum ApiError {
     /// 400/422 — malformed resource, unknown kind/field, unsupported verb.
     #[error("invalid: {0}")]
     Invalid(String),
+    /// 410 — the requested `resourceVersion` predates the watch log's
+    /// retained window (the kind's stream was compacted past it). The
+    /// client must re-list current state and watch from `last_rv()`.
+    #[error("gone: {0}")]
+    Compacted(String),
 }

@@ -32,6 +32,7 @@
 use std::collections::{BTreeMap, HashMap};
 
 use crate::api::admission::{AdmissionChain, AdmissionCtx, WriteVerb};
+use crate::api::index::ApiIndex;
 use crate::api::resources::{
     parse_priority, phase_str, priority_str, workload_state_str, ApiObject, BatchJobResource,
     Condition, Metadata, NodeView, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
@@ -67,7 +68,7 @@ pub enum SelectorOp {
 }
 
 impl SelectorOp {
-    fn matches_str(&self, got: Option<&str>) -> bool {
+    pub(crate) fn matches_str(&self, got: Option<&str>) -> bool {
         match self {
             SelectorOp::Eq(want) => got == Some(want.as_str()),
             SelectorOp::Ne(want) => got != Some(want.as_str()),
@@ -125,7 +126,21 @@ impl Selector {
         self.labels.is_empty() && self.fields.is_empty()
     }
 
-    /// Match against a serialized object.
+    /// The parsed label requirements (for the typed evaluator in
+    /// [`crate::api::index`]).
+    pub(crate) fn label_reqs(&self) -> &[(String, SelectorOp)] {
+        &self.labels
+    }
+
+    /// The parsed field requirements.
+    pub(crate) fn field_reqs(&self) -> &[(String, SelectorOp)] {
+        &self.fields
+    }
+
+    /// Match against a serialized object. This is the brute-force
+    /// evaluator (`list` uses the typed index path; this form remains for
+    /// external callers, the scale-bench baseline, and the invariant-sweep
+    /// consistency check).
     pub fn matches(&self, obj: &Json) -> bool {
         for (k, op) in &self.labels {
             let got = obj.at(&["metadata", "labels"]).and_then(|l| l.get(k)).and_then(Json::as_str);
@@ -151,7 +166,7 @@ impl Selector {
 }
 
 /// Compare a JSON field against a selector literal.
-fn field_eq(got: Option<&Json>, want: &str) -> bool {
+pub(crate) fn field_eq(got: Option<&Json>, want: &str) -> bool {
     match got {
         Some(Json::Str(s)) => s == want,
         Some(Json::Num(n)) => want.parse::<f64>().map(|w| w == *n).unwrap_or(false),
@@ -271,11 +286,15 @@ pub struct ApiServer {
     platform: Platform,
     log: WatchLog,
     admission: AdmissionChain,
+    /// Per-kind read-path indexes (inverted label maps + typed selector
+    /// evaluation + the rv-keyed serialized-view cache), folded from the
+    /// same appends that feed the watch log.
+    index: ApiIndex,
     /// Per-object overlay state, keyed kind → name (nested so read-path
     /// lookups borrow the name instead of allocating a key tuple).
     objects: HashMap<ResourceKind, HashMap<String, ObjectState>>,
-    /// High-water marks into the store event list / kueue transition log /
-    /// site-health transition log.
+    /// Cursors into the store event ring / kueue transition ring /
+    /// site-health transition ring.
     store_seen: usize,
     kueue_seen: usize,
     health_seen: usize,
@@ -285,15 +304,22 @@ impl ApiServer {
     /// Wrap an already-bootstrapped platform. Node registrations recorded
     /// during bootstrap are pumped into the watch log immediately.
     pub fn new(platform: Platform) -> ApiServer {
+        let capacity = platform.config.compaction_window;
         let mut api = ApiServer {
             platform,
-            log: WatchLog::default(),
+            log: WatchLog::new(capacity),
             admission: AdmissionChain::standard(),
+            index: ApiIndex::default(),
             objects: HashMap::new(),
             store_seen: 0,
             kueue_seen: 0,
             health_seen: 0,
         };
+        // sites never emit a creation event of their own: seed the label
+        // index so they are first-class citizens of the pruned list path
+        for vk in &api.platform.vks {
+            api.index.seed(ResourceKind::Site, &vk.site);
+        }
         api.pump();
         api
     }
@@ -403,7 +429,8 @@ impl ApiServer {
         Ok(())
     }
 
-    /// Append a watch event and advance the object's tracked version.
+    /// Append a watch event, fold it into the read-path index, and advance
+    /// the object's tracked version.
     fn append_event(
         &mut self,
         kind: ResourceKind,
@@ -412,6 +439,7 @@ impl ApiServer {
         at: Time,
         object: Option<Json>,
     ) -> u64 {
+        self.index.observe(kind, event, name, object.as_ref());
         let rv = self.log.append(kind, event, name, at, object);
         self.obj_state_mut(kind, name).rv = rv;
         rv
@@ -460,7 +488,10 @@ impl ApiServer {
             let ctx = AdmissionCtx { verb, config: &self.platform.config, old: None };
             self.admission.run(&ctx, &mut admitted)?;
         }
-        match &admitted {
+        // `admitted` is owned from here on: spec fields and metadata move
+        // into the platform submission / overlay state instead of being
+        // cloned a second time
+        match admitted {
             ApiObject::Session(req) => {
                 if req.user != caller {
                     return Err(ApiError::Forbidden(format!(
@@ -480,8 +511,8 @@ impl ApiServer {
                     .map_err(map_spawn_error)?;
                 {
                     let state = self.obj_state_mut(ResourceKind::Session, &sid);
-                    state.finalizers = req.metadata.finalizers.clone();
-                    state.labels = req.metadata.labels.clone();
+                    state.finalizers = req.metadata.finalizers;
+                    state.labels = req.metadata.labels;
                 }
                 self.pump();
                 let session = self.platform.session(&sid).cloned().ok_or_else(|| {
@@ -510,19 +541,19 @@ impl ApiServer {
                 let wl = self
                     .platform
                     .submit_batch_job(BatchSubmission {
-                        user: req.user.clone(),
-                        project: req.project.clone(),
-                        requests: req.requests.clone(),
+                        user: req.user,
+                        project: req.project,
+                        requests: req.requests,
                         duration: req.duration,
                         priority,
                         offloadable: req.offloadable,
                         restart_policy,
-                        queue: req.queue.clone(),
-                        labels: req.metadata.labels.clone(),
+                        queue: req.queue,
+                        labels: req.metadata.labels,
                     })
                     .map_err(|e| ApiError::Invalid(e.to_string()))?;
                 self.obj_state_mut(ResourceKind::BatchJob, &wl).finalizers =
-                    req.metadata.finalizers.clone();
+                    req.metadata.finalizers;
                 self.pump();
                 self.emit_batch_job(&wl, EventType::Added);
                 self.get_batch_job(&wl)
@@ -659,13 +690,15 @@ impl ApiServer {
             let ctx = AdmissionCtx { verb, config: &self.platform.config, old: Some(&old) };
             self.admission.run(&ctx, &mut admitted)?;
         }
-        match &admitted {
+        // `admitted` is owned: metadata moves into the overlay instead of
+        // being cloned again
+        match admitted {
             ApiObject::Session(s) => {
                 // spec is immutable (admission); metadata is the mutable
                 // surface — labels overlay + finalizers
                 let state = self.obj_state_mut(kind, &name);
-                state.labels = s.metadata.labels.clone();
-                state.finalizers = s.metadata.finalizers.clone();
+                state.labels = s.metadata.labels;
+                state.finalizers = s.metadata.finalizers;
             }
             ApiObject::BatchJob(j) => {
                 let policy = RestartPolicy::parse(&j.restart_policy).ok_or_else(|| {
@@ -674,7 +707,7 @@ impl ApiServer {
                 self.platform
                     .update_batch_spec(&name, j.offloadable, policy, &j.metadata.labels)
                     .map_err(|e| ApiError::Invalid(e.to_string()))?;
-                self.obj_state_mut(kind, &name).finalizers = j.metadata.finalizers.clone();
+                self.obj_state_mut(kind, &name).finalizers = j.metadata.finalizers;
             }
             _ => unreachable!("writable kinds only"),
         }
@@ -700,6 +733,13 @@ impl ApiServer {
     }
 
     /// List all objects of a kind, filtered by label/field selectors.
+    ///
+    /// Selector evaluation is index-accelerated: `=`/`in` label
+    /// requirements prune the candidate set through the inverted label
+    /// index *before* any view is built, and the surviving candidates are
+    /// evaluated on typed metadata — no `to_json()` serialization pass.
+    /// Objects the index has never seen are always evaluated in full, so
+    /// the index can only skip work, never change the result.
     pub fn list(
         &self,
         token: &str,
@@ -707,11 +747,20 @@ impl ApiServer {
         selector: &Selector,
     ) -> Result<Vec<ApiObject>, ApiError> {
         self.authenticate(token)?;
+        let candidates = self.index.candidates(kind, selector);
+        // an indexed object outside the candidate set cannot match —
+        // skip it before paying for view construction
+        let pruned = |name: &str| -> bool {
+            match &candidates {
+                Some(c) => self.index.is_indexed(kind, name) && !c.contains(name),
+                None => false,
+            }
+        };
         let mut out: Vec<ApiObject> = Vec::new();
         match kind {
             ResourceKind::Session => {
                 for s in self.platform.sessions() {
-                    if self.is_deleted(kind, &s.id) {
+                    if pruned(&s.id) || self.is_deleted(kind, &s.id) {
                         continue;
                     }
                     let rv = self.rv_of(kind, &s.id);
@@ -719,7 +768,10 @@ impl ApiServer {
                 }
             }
             ResourceKind::BatchJob => {
-                let mut jobs: Vec<&BatchJob> = self.platform.batch_jobs.values().collect();
+                // prune before the name sort so a selective selector pays
+                // O(k log k), not O(n log n), on the collected refs
+                let mut jobs: Vec<&BatchJob> =
+                    self.platform.batch_jobs.values().filter(|j| !pruned(&j.workload)).collect();
                 jobs.sort_by(|a, b| a.workload.cmp(&b.workload));
                 for j in jobs {
                     if self.is_deleted(kind, &j.workload) {
@@ -731,7 +783,7 @@ impl ApiServer {
             }
             ResourceKind::Pod => {
                 let st = self.platform.cluster();
-                let mut pods: Vec<_> = st.pods().collect();
+                let mut pods: Vec<_> = st.pods().filter(|p| !pruned(&p.spec.name)).collect();
                 pods.sort_by(|a, b| a.spec.name.cmp(&b.spec.name));
                 for p in pods {
                     if self.is_deleted(kind, &p.spec.name) {
@@ -744,13 +796,17 @@ impl ApiServer {
             ResourceKind::Node => {
                 let st = self.platform.cluster();
                 for n in st.nodes() {
+                    if pruned(&n.name) {
+                        continue;
+                    }
                     let free = st.free_on(&n.name).cloned().unwrap_or_default();
                     let rv = self.rv_of(kind, &n.name);
                     out.push(ApiObject::Node(NodeView::from_node(n, free, rv)));
                 }
             }
             ResourceKind::Workload => {
-                let mut wls: Vec<_> = self.platform.kueue.workloads().collect();
+                let mut wls: Vec<_> =
+                    self.platform.kueue.workloads().filter(|w| !pruned(&w.name)).collect();
                 wls.sort_by(|a, b| a.name.cmp(&b.name));
                 for w in wls {
                     if self.is_deleted(kind, &w.name) {
@@ -762,6 +818,9 @@ impl ApiServer {
             }
             ResourceKind::Site => {
                 for vk in &self.platform.vks {
+                    if pruned(&vk.site) {
+                        continue;
+                    }
                     let rv = self.rv_of(kind, &vk.site);
                     out.push(ApiObject::Site(self.site_view(vk, rv)));
                 }
@@ -770,7 +829,7 @@ impl ApiServer {
         if selector.is_empty() {
             return Ok(out);
         }
-        Ok(out.into_iter().filter(|o| selector.matches(&o.to_json())).collect())
+        Ok(out.into_iter().filter(|o| self.index.matches(selector, o)).collect())
     }
 
     /// Delete an object owned by the caller, returning the **final
@@ -941,7 +1000,12 @@ impl ApiServer {
         self.get_batch_job(&wl)
     }
 
-    /// The watch stream: events of `kind` after `since_rv`, in version order.
+    /// The watch stream: events of `kind` after `since_rv`, in version
+    /// order. A catch-up is a binary search into the kind's own stream —
+    /// O(log n + answer) — not a filter over every kind's events. When
+    /// `since_rv` predates the kind's retained window the call fails with
+    /// [`ApiError::Compacted`]: re-`list` and watch from
+    /// [`last_rv`](Self::last_rv).
     pub fn watch(
         &self,
         token: &str,
@@ -952,18 +1016,52 @@ impl ApiServer {
         self.log.since(kind, since_rv)
     }
 
+    /// Baseline comparator for the scale benches: the pre-sharding watch
+    /// read path (a linear filter over every retained event of every
+    /// kind). Same answer as [`watch`](Self::watch); kept only so the
+    /// before/after numbers in `BENCH_api.json` / `BENCH_scale.json` come
+    /// from the same run.
+    #[doc(hidden)]
+    pub fn watch_scan_baseline(&self, kind: ResourceKind, since_rv: u64) -> Vec<WatchEvent> {
+        self.log.since_scan_all(kind, since_rv)
+    }
+
+    /// Events currently retained in the watch log (memory-bound evidence
+    /// for the compaction soak).
+    #[doc(hidden)]
+    pub fn watch_log_len(&self) -> usize {
+        self.log.len()
+    }
+
     // ----------------------------------------------------------- the pump
 
     /// Translate new cluster-store events, Kueue transitions and site
     /// health transitions into watch entries. Deltas only — nothing is
-    /// re-scanned. Events for API-tombstoned objects are suppressed.
+    /// re-scanned: every source is a bounded ring log and the pump keeps
+    /// an absolute cursor into each. A pump that somehow fell behind a
+    /// ring's retained window (a [`Compacted`](crate::util::ring::Compacted)
+    /// read — with the per-tick cadence this means one tick produced more
+    /// than `control_plane.compaction_window` entries) invalidates every
+    /// watch stream (all watchers get [`ApiError::Compacted`] and must
+    /// re-list; silently skipping the gap would desync them forever) and
+    /// resumes from the window edge. Events for API-tombstoned objects
+    /// are suppressed.
     fn pump(&mut self) {
         let store = self.platform.store.clone();
         {
             let st = store.borrow();
             let events = st.events();
+            if let Err(c) = events.since(self.store_seen) {
+                // deltas were lost before reaching the watch log: the
+                // streams cannot claim continuity, so every watcher is
+                // invalidated (Compacted ⇒ re-list) instead of silently
+                // missing the gap
+                log::warn!("api pump fell behind the store event ring: {c}");
+                self.log.invalidate_all();
+                self.store_seen = c.oldest;
+            }
             let seen = self.store_seen;
-            for ev in &events[seen..] {
+            for ev in events.since_lossy(seen) {
                 let (kind, etype, phase_override) = match ev.kind {
                     EventKind::PodCreated => {
                         (ResourceKind::Pod, EventType::Added, Some(PodPhase::Pending))
@@ -1051,9 +1149,14 @@ impl ApiServer {
                     }
                 }
             }
-            self.store_seen = events.len();
+            self.store_seen = events.cursor();
         }
 
+        if let Err(c) = self.platform.kueue.transitions_since_checked(self.kueue_seen) {
+            log::warn!("api pump fell behind the kueue transition ring: {c}");
+            self.log.invalidate_all();
+            self.kueue_seen = c.oldest;
+        }
         let fresh: Vec<crate::queue::kueue::WorkloadTransition> =
             self.platform.kueue.transitions_since(self.kueue_seen).cloned().collect();
         self.kueue_seen = self.platform.kueue.transition_cursor();
@@ -1102,6 +1205,11 @@ impl ApiServer {
         // site health transitions → Modified events on the Site kind, so
         // watchers observe outage → quarantine → probe → recovery without
         // polling the resource.
+        if let Err(c) = self.platform.health.transitions_since_checked(self.health_seen) {
+            log::warn!("api pump fell behind the health transition ring: {c}");
+            self.log.invalidate_all();
+            self.health_seen = c.oldest;
+        }
         let fresh: Vec<crate::offload::health::HealthTransition> =
             self.platform.health.transitions_since(self.health_seen).cloned().collect();
         self.health_seen = self.platform.health.transition_cursor();

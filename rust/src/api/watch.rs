@@ -1,18 +1,25 @@
-//! The watch machinery: a monotonically-versioned event log.
+//! The watch machinery: a monotonically-versioned event log, sharded per
+//! resource kind.
 //!
 //! Every object mutation the control plane observes — cluster-store pod and
 //! node records, Kueue workload transitions, session create/delete — is
-//! appended here with a strictly increasing `resourceVersion`.
-//! `watch(kind, since_rv)` then serves *deltas*: everything after `since_rv`
-//! for that kind, in order. Controllers and dashboards consume transitions
-//! instead of re-scanning the store each tick — the pattern that lets a
-//! Kubernetes control plane fan out to thousands of clients.
+//! appended here with a strictly increasing `resourceVersion` (global
+//! across kinds). `watch(kind, since_rv)` then serves *deltas*: everything
+//! after `since_rv` for that kind, in order. Controllers and dashboards
+//! consume transitions instead of re-scanning the store each tick — the
+//! pattern that lets a Kubernetes control plane fan out to thousands of
+//! clients.
 //!
-//! The log is bounded: once `capacity` is exceeded the oldest events are
-//! pruned and a watch from a pruned version fails (the client must re-list
-//! and restart from `last_rv()`, exactly like a Kubernetes "410 Gone").
+//! Events are stored in one stream **per kind**, so a catch-up read is a
+//! binary search plus a suffix copy of that kind's stream — O(log n + k) —
+//! instead of a filter over every event of every kind. Each stream is
+//! bounded: past `capacity` events the oldest are pruned, and a watch from
+//! a pruned version fails with [`ApiError::Compacted`] (the client must
+//! re-list and restart from `last_rv()`, exactly like a Kubernetes
+//! "410 Gone"). Pruning is tracked per kind, so a watcher of a quiet kind
+//! is never invalidated by churn on a noisy one.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::api::resources::ResourceKind;
 use crate::api::ApiError;
@@ -53,11 +60,21 @@ pub struct WatchEvent {
     pub object: Option<Json>,
 }
 
+/// One kind's bounded event stream (ordered by resourceVersion).
+#[derive(Debug, Default)]
+struct KindStream {
+    events: VecDeque<WatchEvent>,
+    /// resourceVersion of the newest *pruned* event of this kind
+    /// (0 = nothing pruned yet). Watches from at or before this fail.
+    pruned_through: u64,
+}
+
 /// The bounded, monotonically-versioned event log.
 #[derive(Debug)]
 pub struct WatchLog {
-    events: VecDeque<WatchEvent>,
+    streams: HashMap<ResourceKind, KindStream>,
     next_rv: u64,
+    /// Retained events *per kind*.
     capacity: usize,
 }
 
@@ -68,8 +85,9 @@ impl Default for WatchLog {
 }
 
 impl WatchLog {
+    /// `capacity` is the retained window per kind.
     pub fn new(capacity: usize) -> WatchLog {
-        WatchLog { events: VecDeque::new(), next_rv: 1, capacity: capacity.max(1) }
+        WatchLog { streams: HashMap::new(), next_rv: 1, capacity: capacity.max(1) }
     }
 
     /// Append an event; returns its assigned resourceVersion.
@@ -83,7 +101,8 @@ impl WatchLog {
     ) -> u64 {
         let rv = self.next_rv;
         self.next_rv += 1;
-        self.events.push_back(WatchEvent {
+        let stream = self.streams.entry(kind).or_default();
+        stream.events.push_back(WatchEvent {
             resource_version: rv,
             kind,
             event,
@@ -91,8 +110,10 @@ impl WatchLog {
             at,
             object,
         });
-        while self.events.len() > self.capacity {
-            self.events.pop_front();
+        while stream.events.len() > self.capacity {
+            if let Some(ev) = stream.events.pop_front() {
+                stream.pruned_through = ev.resource_version;
+            }
         }
         rv
     }
@@ -108,36 +129,86 @@ impl WatchLog {
         self.next_rv
     }
 
-    /// Oldest resourceVersion still retained (watches from before this fail).
+    /// Oldest resourceVersion still retained across every kind (watches
+    /// from before their kind's window fail).
     pub fn oldest_retained(&self) -> u64 {
-        self.events.front().map(|e| e.resource_version).unwrap_or(self.next_rv)
+        self.streams
+            .values()
+            .filter_map(|s| s.events.front().map(|e| e.resource_version))
+            .min()
+            .unwrap_or(self.next_rv)
     }
 
     /// Events of `kind` with `resource_version > since_rv`, in order.
-    /// Errors when `since_rv` predates the retained window.
+    /// Errors with [`ApiError::Compacted`] when events of this kind newer
+    /// than `since_rv` have already been pruned — the watcher fell behind
+    /// the retained window and must re-list, then watch from `last_rv()`.
     pub fn since(&self, kind: ResourceKind, since_rv: u64) -> Result<Vec<WatchEvent>, ApiError> {
-        if since_rv + 1 < self.oldest_retained() {
-            return Err(ApiError::Invalid(format!(
-                "resourceVersion {since_rv} too old: log retains {}..={} — re-list and watch \
-                 from last_rv",
-                self.oldest_retained(),
+        let Some(stream) = self.streams.get(&kind) else {
+            return Ok(Vec::new());
+        };
+        if since_rv < stream.pruned_through {
+            return Err(ApiError::Compacted(format!(
+                "resourceVersion {since_rv} too old for {}: events through {} were compacted \
+                 — re-list and watch from last_rv ({})",
+                kind.as_str(),
+                stream.pruned_through,
                 self.last_rv()
             )));
         }
-        Ok(self
-            .events
-            .iter()
-            .filter(|e| e.kind == kind && e.resource_version > since_rv)
-            .cloned()
-            .collect())
+        // the stream is rv-ordered: binary-search the suffix start
+        let start = stream.events.partition_point(|e| e.resource_version <= since_rv);
+        Ok(stream.events.iter().skip(start).cloned().collect())
     }
 
+    /// Invalidate every watch cursor issued so far. Called when the pump
+    /// itself lost source deltas (a store/transition ring compacted past
+    /// the pump's cursor): the streams can no longer claim continuity, so
+    /// retained events are dropped and each kind's prune mark advances
+    /// past every issued version — every existing watcher gets
+    /// [`ApiError::Compacted`] on its next read and must re-list.
+    pub(crate) fn invalidate_all(&mut self) {
+        let through = self.next_rv;
+        self.next_rv += 1; // burn one rv so `last_rv()` is a clean restart point
+        for kind in ResourceKind::all() {
+            let stream = self.streams.entry(kind).or_default();
+            stream.events.clear();
+            stream.pruned_through = through;
+        }
+    }
+
+    /// Baseline comparator for the scale benches: the pre-sharding read
+    /// path — a linear filter over *every* retained event of *every* kind.
+    /// Semantically identical to [`since`](Self::since) (minus the
+    /// compaction check); kept only so before/after numbers come from the
+    /// same run.
+    #[doc(hidden)]
+    pub fn since_scan_all(&self, kind: ResourceKind, since_rv: u64) -> Vec<WatchEvent> {
+        let mut out = Vec::new();
+        for (k, stream) in &self.streams {
+            if *k == kind {
+                for e in &stream.events {
+                    if e.resource_version > since_rv {
+                        out.push(e.clone());
+                    }
+                }
+            } else {
+                // the old path still visited (and discarded) these
+                for e in &stream.events {
+                    std::hint::black_box(e.resource_version);
+                }
+            }
+        }
+        out
+    }
+
+    /// Total events retained across every kind.
     pub fn len(&self) -> usize {
-        self.events.len()
+        self.streams.values().map(|s| s.events.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
+        self.streams.values().all(|s| s.events.is_empty())
     }
 }
 
@@ -173,6 +244,8 @@ mod tests {
         assert_eq!(after.len(), 1);
         assert_eq!(after[0].event, EventType::Modified);
         assert!(log.since(ResourceKind::Workload, 0).unwrap().is_empty());
+        // the sharded read and the brute-force scan agree
+        assert_eq!(log.since_scan_all(ResourceKind::Pod, 0), pods);
     }
 
     #[test]
@@ -183,9 +256,40 @@ mod tests {
         }
         assert_eq!(log.len(), 4);
         assert_eq!(log.oldest_retained(), 7);
-        assert!(matches!(log.since(ResourceKind::Pod, 2), Err(ApiError::Invalid(_))));
+        assert!(matches!(log.since(ResourceKind::Pod, 2), Err(ApiError::Compacted(_))));
         // watching from exactly the edge works
         assert_eq!(log.since(ResourceKind::Pod, 6).unwrap().len(), 4);
         assert_eq!(log.since(ResourceKind::Pod, log.last_rv()).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn invalidate_all_forces_every_watcher_to_relist() {
+        let mut log = WatchLog::new(100);
+        log.append(ResourceKind::Pod, EventType::Added, "p1", 0.0, None);
+        let caught_up = log.last_rv();
+        log.invalidate_all();
+        // even a fully caught-up watcher must relist…
+        assert!(matches!(log.since(ResourceKind::Pod, caught_up), Err(ApiError::Compacted(_))));
+        // …including watchers of kinds that never had an event
+        assert!(matches!(log.since(ResourceKind::Site, 0), Err(ApiError::Compacted(_))));
+        // restarting from the new last_rv works and versions keep rising
+        let resume = log.last_rv();
+        assert!(log.since(ResourceKind::Pod, resume).unwrap().is_empty());
+        let rv = log.append(ResourceKind::Pod, EventType::Added, "p2", 1.0, None);
+        assert!(rv > resume);
+        assert_eq!(log.since(ResourceKind::Pod, resume).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn pruning_is_per_kind() {
+        let mut log = WatchLog::new(4);
+        let rv0 = log.append(ResourceKind::Node, EventType::Added, "n1", 0.0, None);
+        for i in 0..50 {
+            log.append(ResourceKind::Pod, EventType::Modified, &format!("p{i}"), i as f64, None);
+        }
+        // pod churn compacted the Pod stream…
+        assert!(matches!(log.since(ResourceKind::Pod, rv0), Err(ApiError::Compacted(_))));
+        // …but the quiet Node watcher is unaffected
+        assert_eq!(log.since(ResourceKind::Node, 0).unwrap().len(), 1);
     }
 }

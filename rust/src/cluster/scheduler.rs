@@ -82,46 +82,70 @@ impl Scheduler {
         self.select_node_filtered(store, spec, None)
     }
 
+    /// Do the node-level filters (readiness, taints, selector, the
+    /// physical/virtual restriction) admit this node for `spec`?
+    fn node_admits(node: &crate::cluster::node::Node, spec: &PodSpec, virtual_only: Option<bool>) -> bool {
+        if let Some(want_virtual) = virtual_only {
+            if node.virtual_node != want_virtual {
+                return false;
+            }
+        }
+        if !node.ready {
+            return false;
+        }
+        // taints: every node taint must be tolerated
+        if !node.taints.iter().all(|t| spec.tolerations.iter().any(|k| *k == t.key)) {
+            return false;
+        }
+        // node selector
+        spec.node_selector
+            .iter()
+            .all(|(k, v)| node.labels.get(k).map(|x| x == v).unwrap_or(false))
+    }
+
     /// `virtual_only`: Some(false) = physical nodes only; Some(true) =
     /// virtual nodes only; None = all nodes.
+    ///
+    /// Candidate pruning: instead of walking every node, the store's
+    /// free-capacity index yields only nodes that can currently fit the
+    /// request's most selective resource; candidates are then evaluated in
+    /// name order so the winner is identical to the former full scan (the
+    /// golden-trace determinism contract).
     fn select_node_filtered(
         &self,
         store: &ClusterStore,
         spec: &PodSpec,
         virtual_only: Option<bool>,
     ) -> Decision {
-        let mut any_feasible = false;
         let mut best: Option<(f64, &str)> = None;
         let wants_device = Self::wants_device(spec);
 
-        for node in store.nodes() {
-            if let Some(want_virtual) = virtual_only {
-                if node.virtual_node != want_virtual {
-                    continue;
+        // feasibility pruning via the free-capacity index (empty requests
+        // fit everywhere — fall back to the full node list, already sorted)
+        let candidates: Vec<&str> = match spec
+            .requests
+            .iter()
+            .min_by_key(|(k, _)| store.free_index_size(k))
+        {
+            Some((res, qty)) => {
+                let mut v: Vec<&str> = store.nodes_with_free_at_least(res, qty).collect();
+                if v.len() == store.node_count() {
+                    // nothing pruned: walk the name-ordered node map
+                    // directly instead of paying a sort
+                    store.nodes().map(|n| n.name.as_str()).collect()
+                } else {
+                    v.sort_unstable();
+                    v
                 }
             }
-            if !node.ready {
-                continue;
-            }
-            // taints: every node taint must be tolerated
-            if !node.taints.iter().all(|t| spec.tolerations.iter().any(|k| *k == t.key)) {
-                continue;
-            }
-            // node selector
-            if !spec
-                .node_selector
-                .iter()
-                .all(|(k, v)| node.labels.get(k).map(|x| x == v).unwrap_or(false))
-            {
-                continue;
-            }
-            // static feasibility: the request must fit the node's allocatable
-            // even when empty (otherwise it's NoFeasibleNode, not capacity)
-            if !spec.requests.fits_in(&node.allocatable) {
-                continue;
-            }
-            any_feasible = true;
+            None => store.nodes().map(|n| n.name.as_str()).collect(),
+        };
 
+        for name in candidates {
+            let Some(node) = store.node(name) else { continue };
+            if !Self::node_admits(node, spec, virtual_only) {
+                continue;
+            }
             let Some(free) = store.free_on(&node.name) else { continue };
             if !spec.requests.fits_in(free) {
                 continue;
@@ -151,8 +175,22 @@ impl Scheduler {
 
         match best {
             Some((_, name)) => Ok(name.to_string()),
-            None if any_feasible => Err(Unschedulable::InsufficientCapacity),
-            None => Err(Unschedulable::NoFeasibleNode),
+            None => {
+                // nothing placeable right now — classify the failure: a
+                // node that statically fits the request (allocatable, with
+                // the same filters) means capacity, not infeasibility.
+                // Early-exits on the first hit, so the rare failure path
+                // stays cheap.
+                let any_feasible = store.nodes().any(|node| {
+                    Self::node_admits(node, spec, virtual_only)
+                        && spec.requests.fits_in(&node.allocatable)
+                });
+                if any_feasible {
+                    Err(Unschedulable::InsufficientCapacity)
+                } else {
+                    Err(Unschedulable::NoFeasibleNode)
+                }
+            }
         }
     }
 
@@ -163,34 +201,37 @@ impl Scheduler {
         store: &mut ClusterStore,
         at: crate::sim::clock::Time,
     ) -> (Vec<String>, Vec<(String, Unschedulable)>) {
-        // snapshot & order: priority desc, then FIFO
-        let mut pending: Vec<(i32, usize, String)> = store
-            .pending_pods()
-            .iter()
-            .enumerate()
-            .filter_map(|(i, name)| store.pod(name).map(|p| (p.spec.priority, i, name.clone())))
-            .collect();
-        pending.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        // the store keeps the pending queue in scheduling order (priority
+        // desc, FIFO within a class) — detach it for the pass instead of
+        // snapshotting + re-sorting + cloning every name per tick
+        let pending = store.take_pending();
 
         let mut placed = Vec::new();
         let mut failed = Vec::new();
-        for (_, _, name) in pending {
+        let mut unplaced = Vec::new();
+        for entry in pending {
             // decision under the immutable borrow; binding afterwards —
             // avoids cloning the PodSpec per decision (§Perf: -15% on the
             // placement hot loop, see EXPERIMENTS.md)
-            let decision = match store.pod(&name) {
+            let decision = match store.pod(&entry.name) {
                 Some(pod) => self.select_node(store, &pod.spec),
-                None => continue,
+                None => continue, // deleted while queued: drop the entry
             };
             match decision {
                 Ok(node) => {
-                    if store.bind(&name, &node, at).is_ok() {
-                        placed.push(name);
+                    if store.bind(&entry.name, &node, at).is_ok() {
+                        placed.push(entry.name);
+                    } else {
+                        unplaced.push(entry);
                     }
                 }
-                Err(e) => failed.push((name, e)),
+                Err(e) => {
+                    failed.push((entry.name.clone(), e));
+                    unplaced.push(entry);
+                }
             }
         }
+        store.restore_pending(unplaced);
         (placed, failed)
     }
 }

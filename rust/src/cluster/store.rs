@@ -5,13 +5,29 @@
 //! (the discrete-event engine is single-threaded), so no locking is needed
 //! on the hot path — one of the reasons the scheduler sustains the §Perf
 //! placement-rate target on one core.
+//!
+//! Three structures keep the read/schedule hot paths off full scans:
+//!
+//! * the **event log** is a bounded [`RingLog`] with absolute cursors —
+//!   consumers (the API server's watch pump, the reconciler runtime) read
+//!   only the suffix since their cursor and get a typed
+//!   [`Compacted`](crate::util::ring::Compacted) error if they fell
+//!   behind the retained window;
+//! * the **pending queue** is kept in scheduling order (priority desc,
+//!   FIFO within a class) at insert time, so the scheduler never rebuilds
+//!   or clones the priority order per tick;
+//! * the **free-capacity index** maps each resource to a sorted
+//!   `(free amount, node)` set, updated incrementally on bind/release, so
+//!   node selection iterates only nodes that can currently fit a request
+//!   instead of every node in the cluster.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::cluster::node::Node;
 use crate::cluster::pod::{Pod, PodPhase, PodSpec, PodStatus};
 use crate::cluster::resources::ResourceVec;
 use crate::sim::clock::Time;
+use crate::util::ring::RingLog;
 
 /// Cluster event record (kubectl-events-like; feeds monitoring/accounting).
 #[derive(Debug, Clone)]
@@ -45,6 +61,14 @@ pub enum EventKind {
     MigRepartitioned,
 }
 
+/// One pending-queue entry. The queue is kept sorted (priority desc, FIFO
+/// within a class) so scheduling passes read it in order without sorting.
+#[derive(Debug, Clone)]
+pub(crate) struct PendingPod {
+    pub(crate) priority: i32,
+    pub(crate) name: String,
+}
+
 /// The store.
 #[derive(Debug, Default)]
 pub struct ClusterStore {
@@ -52,10 +76,42 @@ pub struct ClusterStore {
     /// Free = allocatable − sum(requests of pods assigned & not terminal).
     free: HashMap<String, ResourceVec>,
     pods: HashMap<String, Pod>,
-    /// Pending queue in FIFO order of creation (scheduler scans this).
-    pending: Vec<String>,
-    events: Vec<ClusterEvent>,
+    /// Pending queue in scheduling order: priority desc, then FIFO.
+    pending: Vec<PendingPod>,
+    /// Bounded event log (ring with absolute cursors).
+    events: RingLog<ClusterEvent>,
     resource_version: u64,
+    /// resource → sorted (free amount, node) pairs with amount > 0; the
+    /// scheduler's feasibility pruning. Maintained incrementally wherever
+    /// `free` changes.
+    free_index: HashMap<String, BTreeSet<(i64, String)>>,
+}
+
+/// Apply a free-vector change to the inverted capacity index: for every
+/// resource whose amount changed, drop the stale `(amount, node)` entry
+/// and insert the new one (zero amounts are not indexed).
+fn index_update(
+    idx: &mut HashMap<String, BTreeSet<(i64, String)>>,
+    node: &str,
+    old: &ResourceVec,
+    new: &ResourceVec,
+) {
+    for (k, v) in old.iter() {
+        let nv = new.get(k);
+        if nv != v {
+            if let Some(set) = idx.get_mut(k) {
+                set.remove(&(v, node.to_string()));
+            }
+            if nv > 0 {
+                idx.entry(k.to_string()).or_default().insert((nv, node.to_string()));
+            }
+        }
+    }
+    for (k, v) in new.iter() {
+        if old.get(k) == 0 {
+            idx.entry(k.to_string()).or_default().insert((v, node.to_string()));
+        }
+    }
 }
 
 impl ClusterStore {
@@ -76,6 +132,8 @@ impl ClusterStore {
 
     pub fn add_node(&mut self, node: Node, at: Time) {
         self.bump();
+        let old = self.free.get(&node.name).cloned().unwrap_or_default();
+        index_update(&mut self.free_index, &node.name, &old, &node.allocatable);
         self.free.insert(node.name.clone(), node.allocatable.clone());
         self.record(at, EventKind::NodeAdded, &node.name.clone(), "node registered");
         self.nodes.insert(node.name.clone(), node);
@@ -83,7 +141,9 @@ impl ClusterStore {
 
     pub fn remove_node(&mut self, name: &str, at: Time) -> Option<Node> {
         self.bump();
-        self.free.remove(name);
+        if let Some(old) = self.free.remove(name) {
+            index_update(&mut self.free_index, name, &old, &ResourceVec::new());
+        }
         let n = self.nodes.remove(name);
         if n.is_some() {
             self.record(at, EventKind::NodeRemoved, name, "node removed");
@@ -135,6 +195,25 @@ impl ClusterStore {
         self.free.get(node)
     }
 
+    /// Names of nodes with at least `qty` free units of `resource`
+    /// (ascending free amount; the scheduler sorts candidates by name).
+    pub fn nodes_with_free_at_least(
+        &self,
+        resource: &str,
+        qty: i64,
+    ) -> impl Iterator<Item = &str> {
+        self.free_index
+            .get(resource)
+            .into_iter()
+            .flat_map(move |set| set.range((qty, String::new())..).map(|(_, n)| n.as_str()))
+    }
+
+    /// How many nodes currently have any free capacity of `resource`
+    /// (index selectivity hint for the scheduler).
+    pub fn free_index_size(&self, resource: &str) -> usize {
+        self.free_index.get(resource).map(|s| s.len()).unwrap_or(0)
+    }
+
     /// Recompute a node's free vector after its allocatable changed
     /// (MIG repartition): free = new allocatable − requests of live pods.
     pub fn recompute_free(&mut self, node_name: &str) {
@@ -147,10 +226,20 @@ impl ClusterStore {
                 free = free.checked_sub(&p.spec.requests).unwrap_or_else(ResourceVec::new);
             }
         }
+        let old = self.free.get(node_name).cloned().unwrap_or_default();
+        index_update(&mut self.free_index, node_name, &old, &free);
         self.free.insert(node_name.to_string(), free);
     }
 
     // -------------------------------------------------------------- pods
+
+    /// Insert into the pending queue in scheduling order: after every
+    /// entry of equal-or-higher priority (priority desc, FIFO within a
+    /// class — requeued pods go to the back of their class).
+    fn enqueue_pending(&mut self, priority: i32, name: String) {
+        let pos = self.pending.partition_point(|e| e.priority >= priority);
+        self.pending.insert(pos, PendingPod { priority, name });
+    }
 
     /// Create a pod in Pending and enqueue it for scheduling.
     pub fn create_pod(&mut self, spec: PodSpec, at: Time) -> String {
@@ -161,8 +250,9 @@ impl ClusterStore {
             "duplicate pod name {name}"
         );
         self.record(at, EventKind::PodCreated, &name, "created");
+        let priority = spec.priority;
         self.pods.insert(name.clone(), Pod { spec, status: PodStatus::new(at) });
-        self.pending.push(name.clone());
+        self.enqueue_pending(priority, name.clone());
         name
     }
 
@@ -174,8 +264,38 @@ impl ClusterStore {
         self.pods.values()
     }
 
-    pub fn pending_pods(&self) -> &[String] {
-        &self.pending
+    /// Pending pod names in scheduling order (priority desc, FIFO within a
+    /// class).
+    pub fn pending_pods(&self) -> impl Iterator<Item = &str> {
+        self.pending.iter().map(|e| e.name.as_str())
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Detach the pending queue for a scheduling pass (the scheduler walks
+    /// it while binding against `&mut self`, without cloning every name).
+    /// Unplaced entries must be handed back via [`restore_pending`].
+    pub(crate) fn take_pending(&mut self) -> Vec<PendingPod> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Hand back the unplaced suffix of a detached pending queue. Entries
+    /// are already in scheduling order and *predate* anything enqueued
+    /// while the queue was detached, so they merge in **before** any
+    /// equal-priority newcomer (FIFO within a class is preserved).
+    pub(crate) fn restore_pending(&mut self, entries: Vec<PendingPod>) {
+        if self.pending.is_empty() {
+            self.pending = entries;
+            return;
+        }
+        let newcomers = std::mem::replace(&mut self.pending, entries);
+        for e in newcomers {
+            // enqueue_pending places after every >=-priority entry —
+            // i.e. behind the restored (older) members of its class
+            self.enqueue_pending(e.priority, e.name);
+        }
     }
 
     /// Bind a pending pod to a node (scheduler decision). Reserves capacity.
@@ -193,11 +313,12 @@ impl ClusterStore {
         let rem = free
             .checked_sub(&pod.spec.requests)
             .ok_or_else(|| anyhow::anyhow!("insufficient free capacity on {node_name}"))?;
+        index_update(&mut self.free_index, node_name, free, &rem);
         *free = rem;
         pod.status.phase = PodPhase::Scheduled;
         pod.status.node = Some(node_name.to_string());
         pod.status.scheduled_at = Some(at);
-        self.pending.retain(|n| n != pod_name);
+        self.pending.retain(|e| e.name != pod_name);
         self.record(at, EventKind::PodScheduled, pod_name, node_name);
         Ok(())
     }
@@ -233,7 +354,8 @@ impl ClusterStore {
             pod.status.scheduled_at = None;
             pod.status.started_at = None;
             pod.status.evictions += 1;
-            self.pending.push(pod_name.to_string());
+            let priority = pod.spec.priority;
+            self.enqueue_pending(priority, pod_name.to_string());
         }
         Ok(())
     }
@@ -250,7 +372,7 @@ impl ClusterStore {
         pod.status.phase = PodPhase::Evicted;
         pod.status.finished_at = Some(at);
         pod.status.message = msg.to_string();
-        self.pending.retain(|n| n != pod_name);
+        self.pending.retain(|e| e.name != pod_name);
         self.record(at, EventKind::PodEvicted, pod_name, msg);
         Ok(())
     }
@@ -268,7 +390,9 @@ impl ClusterStore {
         );
         if let Some(node) = pod.status.node.clone() {
             if let Some(free) = self.free.get_mut(&node) {
+                let old = free.clone();
                 free.add(&pod.spec.requests);
+                index_update(&mut self.free_index, &node, &old, free);
             }
         }
         pod.status.phase = phase;
@@ -296,12 +420,14 @@ impl ClusterStore {
         if matches!(pod.status.phase, PodPhase::Scheduled | PodPhase::Running) {
             if let Some(node) = pod.status.node.clone() {
                 if let Some(free) = self.free.get_mut(&node) {
+                    let old = free.clone();
                     free.add(&pod.spec.requests);
+                    index_update(&mut self.free_index, &node, &old, free);
                 }
             }
         }
         self.pods.remove(pod_name);
-        self.pending.retain(|n| n != pod_name);
+        self.pending.retain(|e| e.name != pod_name);
         self.record(at, EventKind::PodDeleted, pod_name, msg);
         Ok(())
     }
@@ -329,8 +455,43 @@ impl ClusterStore {
         self.events.push(ClusterEvent { at, kind, object: object.to_string(), message: message.to_string() });
     }
 
-    pub fn events(&self) -> &[ClusterEvent] {
+    /// The bounded event log. Iterate it directly (`for ev in st.events()`)
+    /// for the retained window, or read deltas with
+    /// [`RingLog::since`] / [`ClusterStore::event_cursor`].
+    pub fn events(&self) -> &RingLog<ClusterEvent> {
         &self.events
+    }
+
+    /// One past the newest event (the cursor a caught-up consumer stores).
+    pub fn event_cursor(&self) -> usize {
+        self.events.cursor()
+    }
+
+    /// Reconfigure the event log's retained window (the
+    /// `control_plane.compaction_window` config knob).
+    pub fn set_event_capacity(&mut self, capacity: usize) {
+        self.events.set_capacity(capacity);
+    }
+
+    /// Debug/test hook: assert the free-capacity index exactly mirrors the
+    /// free map. Returns the number of indexed (resource, node) entries.
+    pub fn check_free_index(&self) -> usize {
+        let mut count = 0;
+        for (node, free) in &self.free {
+            for (k, v) in free.iter() {
+                assert!(
+                    self.free_index
+                        .get(k)
+                        .map(|s| s.contains(&(v, node.clone())))
+                        .unwrap_or(false),
+                    "free index missing ({k}, {v}, {node})"
+                );
+                count += 1;
+            }
+        }
+        let indexed: usize = self.free_index.values().map(|s| s.len()).sum();
+        assert_eq!(indexed, count, "free index has stale entries");
+        count
     }
 
     /// Aggregate resource usage: (used, allocatable) summed over nodes
@@ -374,6 +535,10 @@ mod tests {
         PodSpec::new(name, req, Payload::Sleep { duration: 5.0 })
     }
 
+    fn pending_names(s: &ClusterStore) -> Vec<String> {
+        s.pending_pods().map(str::to_string).collect()
+    }
+
     #[test]
     fn bind_reserves_and_finish_releases() {
         let mut s = store_with_node();
@@ -381,11 +546,13 @@ mod tests {
         s.bind("p1", "n1", 2.0).unwrap();
         assert_eq!(s.free_on("n1").unwrap().get(CPU), 4000);
         assert_eq!(s.free_on("n1").unwrap().get(GPU), 0);
+        s.check_free_index();
         s.mark_running("p1", 2.1).unwrap();
         s.finish_pod("p1", PodPhase::Succeeded, 7.0, "done").unwrap();
         assert_eq!(s.free_on("n1").unwrap().get(CPU), 6000);
         assert_eq!(s.free_on("n1").unwrap().get(GPU), 1);
         assert_eq!(s.pod("p1").unwrap().status.phase, PodPhase::Succeeded);
+        s.check_free_index();
     }
 
     #[test]
@@ -397,7 +564,7 @@ mod tests {
         let err = s.bind("p2", "n1", 2.0).unwrap_err();
         assert!(err.to_string().contains("insufficient"));
         // p2 still pending
-        assert_eq!(s.pending_pods(), &["p2".to_string()]);
+        assert_eq!(pending_names(&s), vec!["p2".to_string()]);
     }
 
     #[test]
@@ -411,7 +578,8 @@ mod tests {
         assert_eq!(p.status.phase, PodPhase::Pending);
         assert_eq!(p.status.evictions, 1);
         assert_eq!(s.free_on("n1").unwrap().get(CPU), 6000);
-        assert!(s.pending_pods().contains(&"p1".to_string()));
+        assert!(s.pending_pods().any(|n| n == "p1"));
+        s.check_free_index();
     }
 
     #[test]
@@ -448,7 +616,8 @@ mod tests {
         // deleting a pending pod drops it from the scheduling queue
         s.create_pod(pod("p2", 1000, 0), 5.0);
         s.delete_pod("p2", 6.0, "garbage collected").unwrap();
-        assert!(s.pending_pods().is_empty());
+        assert_eq!(s.pending_count(), 0);
+        s.check_free_index();
     }
 
     #[test]
@@ -493,5 +662,49 @@ mod tests {
         let f = s.free_on("n1").unwrap();
         assert_eq!(f.get("nvidia.com/mig-1g.5gb"), 7);
         assert_eq!(f.get(CPU), 5000); // 6000 allocatable − 1000 reserved
+        s.check_free_index();
+    }
+
+    #[test]
+    fn pending_queue_keeps_priority_then_fifo_order() {
+        let mut s = store_with_node();
+        s.create_pod(pod("a-low", 100, 0).with_priority(0), 0.0);
+        s.create_pod(pod("b-high", 100, 0).with_priority(100), 1.0);
+        s.create_pod(pod("c-low", 100, 0).with_priority(0), 2.0);
+        s.create_pod(pod("d-high", 100, 0).with_priority(100), 3.0);
+        assert_eq!(pending_names(&s), vec!["b-high", "d-high", "a-low", "c-low"]);
+        // an evicted requeue goes to the back of its priority class
+        s.bind("b-high", "n1", 4.0).unwrap();
+        s.evict_pod("b-high", 5.0, true, "requeue").unwrap();
+        assert_eq!(pending_names(&s), vec!["d-high", "b-high", "a-low", "c-low"]);
+    }
+
+    #[test]
+    fn free_index_prunes_candidates() {
+        let mut s = store_with_node();
+        let hits: Vec<&str> = s.nodes_with_free_at_least(GPU, 1).collect();
+        assert_eq!(hits, vec!["n1"]);
+        assert!(s.nodes_with_free_at_least(GPU, 2).next().is_none());
+        assert!(s.nodes_with_free_at_least("xilinx.com/fpga-u250", 1).next().is_none());
+        s.create_pod(pod("p1", 1000, 1), 0.0);
+        s.bind("p1", "n1", 0.0).unwrap();
+        assert!(s.nodes_with_free_at_least(GPU, 1).next().is_none(), "GPU taken");
+        assert_eq!(s.free_index_size(GPU), 0);
+        s.finish_pod("p1", PodPhase::Succeeded, 1.0, "ok").unwrap();
+        assert_eq!(s.nodes_with_free_at_least(GPU, 1).count(), 1);
+    }
+
+    #[test]
+    fn event_log_compacts_within_capacity() {
+        let mut s = store_with_node();
+        s.set_event_capacity(8);
+        for i in 0..40 {
+            s.record(i as f64, EventKind::NodeModified, "n1", "flap");
+        }
+        assert_eq!(s.events().len(), 8);
+        assert!(s.event_cursor() >= 40);
+        assert!(s.events().since(0).is_err(), "stale cursor is Compacted");
+        let tail: Vec<_> = s.events().since(s.event_cursor() - 2).unwrap().collect();
+        assert_eq!(tail.len(), 2);
     }
 }

@@ -46,6 +46,30 @@
 //! over `metadata.ownerReferences`. See the [`api`] module docs for the
 //! verb table and the resource model.
 //!
+//! ## The fast-path read/schedule layer
+//!
+//! The hot paths never rescan or reserialize full state:
+//!
+//! * `api::index` (crate-internal) keeps per-kind inverted label maps, a
+//!   typed field-selector evaluator, and an rv-keyed serialized-view
+//!   cache, all folded from the same appends that feed the watch log —
+//!   `list` filtering runs on typed metadata with no per-object
+//!   `to_json()` pass, and `=`/`in` label requirements prune candidates
+//!   before any view is built.
+//! * The watch log ([`api::WatchLog`]) is sharded per kind: a catch-up
+//!   read is a binary search + suffix copy, and falling behind a kind's
+//!   retained window is a typed [`api::ApiError::Compacted`]
+//!   ("410 Gone") — re-`list`, then watch from `last_rv()`.
+//! * Every delta source — the cluster-store event log, the Kueue and
+//!   site-health transition logs — is a bounded [`util::ring::RingLog`]
+//!   with absolute cursors; the API pump and the reconciler runtime read
+//!   only the suffix since their cursor, and the retained window is the
+//!   `control_plane.compaction_window` config knob.
+//! * The scheduler selects nodes through a per-resource sorted
+//!   free-capacity index maintained incrementally on bind/release, and
+//!   the pending queue is kept in (priority, FIFO) order at insert time —
+//!   no per-tick rebuild, identical placements to the full scan.
+//!
 //! ## The reconciler runtime
 //!
 //! [`Platform::tick`](platform::facade::Platform::tick) is a thin

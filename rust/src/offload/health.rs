@@ -19,6 +19,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::sim::clock::Time;
+use crate::util::ring::{Compacted, RingLog};
 
 /// Externally visible site condition (projected onto the `Site` resource).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,10 +80,6 @@ impl SiteHealth {
     }
 }
 
-/// Retained health transitions (older entries pruned; cursor consumers
-/// tolerate gaps like a Kubernetes watch restart).
-const MAX_TRANSITIONS: usize = 100_000;
-
 /// The per-site health tracker + circuit breaker.
 #[derive(Debug)]
 pub struct HealthTracker {
@@ -93,8 +90,8 @@ pub struct HealthTracker {
     pub window: Time,
     /// Open→half-open cooldown; doubles per consecutive trip (capped 8×).
     pub cooldown_base: Time,
-    transitions: VecDeque<HealthTransition>,
-    transitions_base: usize,
+    /// Bounded transition log (ring with absolute cursors).
+    transitions: RingLog<HealthTransition>,
 }
 
 impl Default for HealthTracker {
@@ -110,8 +107,9 @@ impl HealthTracker {
             failure_threshold: 3,
             window: 600.0,
             cooldown_base: 120.0,
-            transitions: VecDeque::new(),
-            transitions_base: 0,
+            // the shared ring default; Platform::bootstrap wires the
+            // `control_plane.compaction_window` knob over it
+            transitions: RingLog::default(),
         }
     }
 
@@ -121,16 +119,12 @@ impl HealthTracker {
     }
 
     fn log(&mut self, at: Time, site: &str, status: HealthStatus, reason: &str) {
-        self.transitions.push_back(HealthTransition {
+        self.transitions.push(HealthTransition {
             at,
             site: site.to_string(),
             status,
             reason: reason.to_string(),
         });
-        while self.transitions.len() > MAX_TRANSITIONS {
-            self.transitions.pop_front();
-            self.transitions_base += 1;
-        }
     }
 
     /// Record a successful wire call. Resets the consecutive-failure count;
@@ -259,12 +253,34 @@ impl HealthTracker {
 
     /// Absolute cursor just past the newest transition.
     pub fn transition_cursor(&self) -> usize {
-        self.transitions_base + self.transitions.len()
+        self.transitions.cursor()
     }
 
     /// Transitions recorded at or after `cursor` (watch-stream feed).
+    /// Entries pruned before `cursor` are silently skipped; cursor-tracking
+    /// pumps use [`transitions_since_checked`](Self::transitions_since_checked).
     pub fn transitions_since(&self, cursor: usize) -> impl Iterator<Item = &HealthTransition> {
-        self.transitions.iter().skip(cursor.saturating_sub(self.transitions_base))
+        self.transitions.since_lossy(cursor)
+    }
+
+    /// Checked delta read: a cursor behind the retained window is a typed
+    /// [`Compacted`] error (the consumer must re-list current state).
+    pub fn transitions_since_checked(
+        &self,
+        cursor: usize,
+    ) -> Result<impl Iterator<Item = &HealthTransition>, Compacted> {
+        self.transitions.since(cursor)
+    }
+
+    /// Reconfigure the transition log's retained window (the
+    /// `control_plane.compaction_window` config knob).
+    pub fn set_transition_capacity(&mut self, capacity: usize) {
+        self.transitions.set_capacity(capacity);
+    }
+
+    /// Number of transitions currently retained (≤ the configured window).
+    pub fn transition_log_len(&self) -> usize {
+        self.transitions.len()
     }
 
     /// The site's most recent transition, if any (Condition timestamps).

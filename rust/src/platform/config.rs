@@ -44,6 +44,13 @@ pub struct PlatformConfig {
     pub federation_scale: usize,
     pub scrape_interval: f64,
     pub retention: f64,
+    /// Retained entries per control-plane ring log (store events, Kueue
+    /// and site-health transitions, and each watch-stream kind). Bounds
+    /// control-plane memory under unbounded churn: consumers track
+    /// cursors and a reader that falls behind this window gets a typed
+    /// `Compacted` error and must re-list (Kubernetes "410 Gone").
+    /// Config key: `control_plane.compaction_window`.
+    pub compaction_window: usize,
 }
 
 impl PlatformConfig {
@@ -133,6 +140,11 @@ impl PlatformConfig {
                 .and_then(Json::as_f64)
                 .unwrap_or(30.0),
             retention: j.at(&["monitoring", "retention_hours"]).and_then(Json::as_f64).unwrap_or(336.0) * 3600.0,
+            compaction_window: j
+                .at(&["control_plane", "compaction_window"])
+                .and_then(Json::as_i64)
+                .map(|w| (w.max(1)) as usize)
+                .unwrap_or(crate::util::ring::DEFAULT_RING_CAPACITY),
         })
     }
 

@@ -275,6 +275,13 @@ impl Platform {
         for vk in &vks {
             health.register(&vk.site);
         }
+
+        // bounded control-plane memory: every ring log retains at most
+        // `control_plane.compaction_window` entries (cursored consumers
+        // get a typed Compacted error if they ever fall behind)
+        store.borrow_mut().set_event_capacity(config.compaction_window);
+        kueue.set_transition_capacity(config.compaction_window);
+        health.set_transition_capacity(config.compaction_window);
         Ok(Platform {
             engine,
             store,
@@ -510,6 +517,17 @@ impl Platform {
         cursor: usize,
     ) -> Vec<crate::queue::kueue::WorkloadTransition> {
         self.kueue.transitions_since(cursor).cloned().collect()
+    }
+
+    /// Workload transitions currently retained in the Kueue ring
+    /// (memory-bound evidence for the compaction soak).
+    pub fn kueue_transition_log_len(&self) -> usize {
+        self.kueue.transition_log_len()
+    }
+
+    /// Health transitions currently retained in the site-health ring.
+    pub fn health_transition_log_len(&self) -> usize {
+        self.health.transition_log_len()
     }
 
     /// Convenience: an ML training job priced by the cost model (sim mode).

@@ -202,12 +202,26 @@ impl Runtime {
 
     /// Translate new entries from every delta source into keys and route
     /// them to interested controllers (deduplicated per queue).
+    ///
+    /// The delta sources are bounded ring logs: the pump reads only the
+    /// suffix past its absolute cursor. Falling behind a ring's retained
+    /// window (a typed [`Compacted`](crate::util::ring::Compacted) read —
+    /// only possible if one tick produced more entries than
+    /// `control_plane.compaction_window`) forces the informer "relist"
+    /// analogue: every controller is handed a `Sync` key so full-state
+    /// resync loops reconverge without the lost deltas.
     fn pump(&mut self, p: &mut Platform) {
         let mut keys: Vec<Key> = Vec::new();
+        let mut fell_behind = false;
         {
             let st = p.store.borrow();
             let events = st.events();
-            for ev in &events[self.store_cursor..] {
+            if let Err(c) = events.since(self.store_cursor) {
+                log::warn!("reconciler pump fell behind the store event ring: {c}");
+                self.store_cursor = c.oldest;
+                fell_behind = true;
+            }
+            for ev in events.since_lossy(self.store_cursor) {
                 let key = match ev.kind {
                     EventKind::NodeAdded
                     | EventKind::NodeRemoved
@@ -217,12 +231,27 @@ impl Runtime {
                 };
                 keys.push(key);
             }
-            self.store_cursor = events.len();
+            self.store_cursor = events.cursor();
+        }
+        if let Err(c) = p.kueue.transitions_since_checked(self.kueue_cursor) {
+            log::warn!("reconciler pump fell behind the kueue transition ring: {c}");
+            self.kueue_cursor = c.oldest;
+            fell_behind = true;
         }
         for t in p.kueue.transitions_since(self.kueue_cursor) {
             keys.push(Key::Workload(t.workload.clone()));
         }
         self.kueue_cursor = p.kueue.transition_cursor();
+        if fell_behind {
+            // relist: hand every controller a Sync directly (bypassing
+            // `interested`, which most controllers answer only for object
+            // keys) so full-state passes reconverge without the lost deltas
+            for i in 0..self.controllers.len() {
+                if self.queued[i].insert(Key::Sync) {
+                    self.queues[i].push_back(Key::Sync);
+                }
+            }
+        }
         while let Some((kind, name)) = p.deletions.pop_front() {
             keys.push(Key::Deletion(kind, name));
         }

@@ -129,7 +129,7 @@ impl Reconciler for PlacementController {
                 // coalesce: the first one schedules the whole queue)
                 let (pending, rv) = {
                     let st = ctx.platform.store.borrow();
-                    (!st.pending_pods().is_empty(), st.resource_version())
+                    (st.pending_count() > 0, st.resource_version())
                 };
                 if pending && rv != self.store_rv_seen {
                     self.pass(ctx.platform, ctx.now);

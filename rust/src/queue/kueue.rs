@@ -18,6 +18,7 @@ use std::collections::HashMap;
 
 use crate::cluster::resources::ResourceVec;
 use crate::sim::clock::Time;
+use crate::util::ring::{Compacted, RingLog};
 
 /// Priority classes used on the platform.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -101,25 +102,33 @@ pub struct WorkloadTransition {
     pub state: WorkloadState,
 }
 
-/// Retained workload transitions (older entries are pruned; consumers use
-/// the cursor API and tolerate gaps like a Kubernetes watch restart).
-const MAX_TRANSITIONS: usize = 100_000;
-
 /// The Kueue controller state.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Kueue {
     cluster_queues: HashMap<String, ClusterQueue>,
     local_queues: HashMap<String, LocalQueue>,
     workloads: HashMap<String, Workload>,
     /// FIFO arrival order for fair scanning.
     order: Vec<String>,
-    /// Bounded log of workload state changes (ring: oldest pruned).
-    transitions: std::collections::VecDeque<WorkloadTransition>,
-    /// How many transitions have been pruned off the front (absolute
-    /// cursor of `transitions[0]`).
-    transitions_base: usize,
+    /// Bounded log of workload state changes (ring with absolute cursors).
+    transitions: RingLog<WorkloadTransition>,
     /// Requeue backoff base (doubles per eviction).
     pub backoff_base: Time,
+}
+
+impl Default for Kueue {
+    fn default() -> Self {
+        Kueue {
+            cluster_queues: HashMap::new(),
+            local_queues: HashMap::new(),
+            workloads: HashMap::new(),
+            order: Vec::new(),
+            // the shared ring default; Platform::bootstrap wires the
+            // `control_plane.compaction_window` knob over it
+            transitions: RingLog::default(),
+            backoff_base: 0.0,
+        }
+    }
 }
 
 /// Outcome of an admission pass.
@@ -164,29 +173,47 @@ impl Kueue {
     /// Absolute cursor just past the newest transition; pass a previously
     /// returned cursor to [`transitions_since`](Self::transitions_since).
     pub fn transition_cursor(&self) -> usize {
-        self.transitions_base + self.transitions.len()
+        self.transitions.cursor()
     }
 
     /// Transitions recorded at or after `cursor` (watch-stream feed).
-    /// Entries pruned before `cursor` are silently gone — consumers that
-    /// fall more than `MAX_TRANSITIONS` behind must re-list.
+    /// Entries pruned before `cursor` are silently skipped — for
+    /// renderers that tolerate partial history. Cursor-tracking pumps use
+    /// [`transitions_since_checked`](Self::transitions_since_checked).
     pub fn transitions_since(
         &self,
         cursor: usize,
     ) -> impl Iterator<Item = &WorkloadTransition> {
-        self.transitions.iter().skip(cursor.saturating_sub(self.transitions_base))
+        self.transitions.since_lossy(cursor)
+    }
+
+    /// Like [`transitions_since`](Self::transitions_since) but a cursor
+    /// behind the retained window is a typed [`Compacted`] error — the
+    /// consumer missed transitions and must re-list (Kubernetes 410 Gone).
+    pub fn transitions_since_checked(
+        &self,
+        cursor: usize,
+    ) -> Result<impl Iterator<Item = &WorkloadTransition>, Compacted> {
+        self.transitions.since(cursor)
+    }
+
+    /// Reconfigure the transition log's retained window (the
+    /// `control_plane.compaction_window` config knob).
+    pub fn set_transition_capacity(&mut self, capacity: usize) {
+        self.transitions.set_capacity(capacity);
+    }
+
+    /// Number of transitions currently retained (≤ the configured window).
+    pub fn transition_log_len(&self) -> usize {
+        self.transitions.len()
     }
 
     fn log_transition(&mut self, at: Time, workload: &str, state: WorkloadState) {
-        self.transitions.push_back(WorkloadTransition {
+        self.transitions.push(WorkloadTransition {
             at,
             workload: workload.to_string(),
             state,
         });
-        while self.transitions.len() > MAX_TRANSITIONS {
-            self.transitions.pop_front();
-            self.transitions_base += 1;
-        }
     }
 
     /// Submit a workload to a LocalQueue.

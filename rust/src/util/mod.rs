@@ -7,8 +7,11 @@ pub mod bench;
 pub mod json;
 pub mod logging;
 pub mod prop;
+pub mod ring;
 pub mod rng;
 pub mod stats;
+
+pub use ring::{Compacted, RingLog};
 
 /// Format a byte count with binary prefixes ("12.0 GiB").
 pub fn fmt_bytes(n: u64) -> String {

@@ -1,0 +1,198 @@
+//! A bounded, compacting append log with absolute cursors — the shared
+//! primitive behind the cluster-store event log, the Kueue workload
+//! transition log, and the site-health transition log.
+//!
+//! Entries are addressed by an *absolute* index that never changes as the
+//! front of the log is pruned: `cursor()` is one past the newest entry,
+//! `oldest()` the oldest still retained. Consumers remember the cursor
+//! they read up to and ask for the suffix with [`since`](RingLog::since);
+//! a consumer that falls behind the retained window gets a typed
+//! [`Compacted`] error — the Kubernetes "410 Gone" idiom — and must
+//! re-list from current state before resuming from `cursor()`.
+//!
+//! The lossy variant [`since_lossy`](RingLog::since_lossy) silently skips
+//! the gap, for read-only renderers (traces, dashboards) where a partial
+//! history is acceptable.
+
+use std::collections::VecDeque;
+
+/// Typed "410 Gone": the requested cursor predates the retained window.
+/// The consumer must re-list current state and resume from `next`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[error("log compacted: cursor {cursor} predates retained window [{oldest}, {next}); re-list and resume from {next}")]
+pub struct Compacted {
+    /// The cursor the consumer presented.
+    pub cursor: usize,
+    /// Oldest absolute index still retained.
+    pub oldest: usize,
+    /// One past the newest entry (where a fresh consumer resumes).
+    pub next: usize,
+}
+
+/// Default retained-window size when no capacity is configured (the
+/// platform wires `PlatformConfig::compaction_window` over this).
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// The bounded log. Appends are O(1); once `capacity` entries are retained
+/// every append prunes the oldest entry (compaction).
+#[derive(Debug, Clone)]
+pub struct RingLog<T> {
+    entries: VecDeque<T>,
+    /// Absolute index of `entries[0]`.
+    base: usize,
+    capacity: usize,
+}
+
+impl<T> Default for RingLog<T> {
+    fn default() -> Self {
+        RingLog::new(DEFAULT_RING_CAPACITY)
+    }
+}
+
+impl<T> RingLog<T> {
+    pub fn new(capacity: usize) -> RingLog<T> {
+        RingLog { entries: VecDeque::new(), base: 0, capacity: capacity.max(1) }
+    }
+
+    /// Append an entry, pruning the front past `capacity`. Returns the
+    /// entry's absolute index.
+    pub fn push(&mut self, entry: T) -> usize {
+        let at = self.base + self.entries.len();
+        self.entries.push_back(entry);
+        while self.entries.len() > self.capacity {
+            self.entries.pop_front();
+            self.base += 1;
+        }
+        at
+    }
+
+    /// One past the newest entry — what a caught-up consumer stores.
+    pub fn cursor(&self) -> usize {
+        self.base + self.entries.len()
+    }
+
+    /// Oldest absolute index still retained (== `cursor()` when empty).
+    pub fn oldest(&self) -> usize {
+        self.base
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Reconfigure the retained window; prunes immediately if shrinking.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity.max(1);
+        while self.entries.len() > self.capacity {
+            self.entries.pop_front();
+            self.base += 1;
+        }
+    }
+
+    /// Number of entries currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn last(&self) -> Option<&T> {
+        self.entries.back()
+    }
+
+    /// Retained entries, oldest first.
+    pub fn iter(&self) -> impl DoubleEndedIterator<Item = &T> {
+        self.entries.iter()
+    }
+
+    /// The suffix starting at absolute `cursor`. Errors with [`Compacted`]
+    /// when entries at or after `cursor` have already been pruned — the
+    /// consumer missed data and must re-list.
+    pub fn since(&self, cursor: usize) -> Result<impl Iterator<Item = &T>, Compacted> {
+        if cursor < self.base {
+            return Err(Compacted { cursor, oldest: self.base, next: self.cursor() });
+        }
+        Ok(self.entries.iter().skip(cursor - self.base))
+    }
+
+    /// The suffix starting at absolute `cursor`, silently skipping any
+    /// compacted gap (read-only renderers that tolerate partial history).
+    pub fn since_lossy(&self, cursor: usize) -> impl Iterator<Item = &T> {
+        self.entries.iter().skip(cursor.saturating_sub(self.base))
+    }
+}
+
+impl<'a, T> IntoIterator for &'a RingLog<T> {
+    type Item = &'a T;
+    type IntoIter = std::collections::vec_deque::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursors_are_absolute_across_compaction() {
+        let mut log = RingLog::new(4);
+        for i in 0..10 {
+            assert_eq!(log.push(i), i);
+        }
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.oldest(), 6);
+        assert_eq!(log.cursor(), 10);
+        let tail: Vec<i32> = log.since(8).unwrap().copied().collect();
+        assert_eq!(tail, vec![8, 9]);
+        // exactly the window edge still works
+        assert_eq!(log.since(6).unwrap().count(), 4);
+        // behind the window is a typed Compacted error
+        let err = log.since(5).unwrap_err();
+        assert_eq!(err, Compacted { cursor: 5, oldest: 6, next: 10 });
+        // the lossy reader skips the gap
+        assert_eq!(log.since_lossy(0).count(), 4);
+    }
+
+    #[test]
+    fn chunked_reads_see_every_entry_exactly_once_across_compaction() {
+        // A consumer that keeps up never duplicates or drops entries even
+        // while the ring wraps many times between reads.
+        let mut log = RingLog::new(8);
+        let mut cursor = 0usize;
+        let mut seen: Vec<u32> = Vec::new();
+        let mut next = 0u32;
+        for round in 0..50 {
+            // push 1..=7 entries (less than capacity, so a prompt reader
+            // never falls behind), then drain the suffix
+            for _ in 0..(round % 7) + 1 {
+                log.push(next);
+                next += 1;
+            }
+            let chunk: Vec<u32> = log.since(cursor).unwrap().copied().collect();
+            cursor = log.cursor();
+            seen.extend(chunk);
+        }
+        let want: Vec<u32> = (0..next).collect();
+        assert_eq!(seen, want, "no duplicates, no drops, in order");
+    }
+
+    #[test]
+    fn set_capacity_prunes_and_empty_log_is_consistent() {
+        let mut log: RingLog<u8> = RingLog::new(100);
+        assert!(log.is_empty());
+        assert_eq!(log.oldest(), log.cursor());
+        assert!(log.since(0).unwrap().next().is_none());
+        for i in 0..50 {
+            log.push(i);
+        }
+        log.set_capacity(10);
+        assert_eq!(log.len(), 10);
+        assert_eq!(log.oldest(), 40);
+        assert!(log.since(39).is_err());
+        assert_eq!(log.last(), Some(&49));
+    }
+}

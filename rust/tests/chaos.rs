@@ -5,7 +5,7 @@
 
 mod common;
 
-use aiinfn::api::ResourceKind;
+use aiinfn::api::{ResourceKind, Selector};
 use aiinfn::cluster::resources::{ResourceVec, GPU, MEMORY};
 use aiinfn::offload::HealthStatus;
 use aiinfn::platform::RestartPolicy;
@@ -141,6 +141,34 @@ fn random_chaos_schedules_preserve_invariants() {
                 assert!(
                     w[1].resource_version > w[0].resource_version,
                     "seed {seed}: rv regression in {kind:?} stream"
+                );
+            }
+        }
+        // (e) index consistency: the index-accelerated list equals the
+        // brute-force serialize-and-filter result for every kind, across
+        // label-Eq, label-absence, and field selectors
+        for kind in ResourceKind::all() {
+            for sel in [
+                Selector::labels("app=batch").unwrap(),
+                Selector::labels("ghost!=value").unwrap(),
+                Selector::fields("status.phase=Running").unwrap(),
+                Selector::parse("app in (batch,ml)", "spec.user!=user000").unwrap(),
+                // unmodeled field path → the JSON-fallback/view-cache leg
+                // (status.free moves without Node events, so this also
+                // guards against stale cached serializations)
+                Selector::fields("status.free.cpu!=0").unwrap(),
+            ] {
+                let indexed = api.list(&token, kind, &sel).unwrap();
+                let brute: Vec<_> = api
+                    .list(&token, kind, &Selector::all())
+                    .unwrap()
+                    .into_iter()
+                    .filter(|o| sel.matches(&o.to_json()))
+                    .collect();
+                assert_eq!(
+                    indexed, brute,
+                    "seed {seed}: index-filtered list diverges from brute force \
+                     for {kind:?} / {sel:?}"
                 );
             }
         }

@@ -1,0 +1,148 @@
+//! Log-compaction suite: ring-log memory bounds under a long chaos soak,
+//! the "410 Gone" relist contract for watchers that fall behind, and
+//! cursor-pump equivalence across compaction boundaries (a tightly
+//! compacted control plane converges to the same outcome as an unbounded
+//! one, because every consumer reads deltas through absolute cursors).
+
+mod common;
+
+use aiinfn::api::{ApiError, ApiServer, ResourceKind, Selector};
+use aiinfn::platform::Platform;
+use aiinfn::queue::kueue::WorkloadState;
+use aiinfn::sim::chaos::ChaosPlan;
+
+/// A platform with a deliberately tiny compaction window, so rings wrap
+/// many times within a normal test run.
+fn api_with_window(window: usize) -> ApiServer {
+    let mut cfg = common::config();
+    cfg.compaction_window = window;
+    ApiServer::new(Platform::bootstrap(cfg).unwrap())
+}
+
+/// A watcher that falls behind the retained window gets the typed
+/// `Compacted` error (410 Gone) and recovers by re-listing and resuming
+/// from `last_rv()` — the Kubernetes relist contract.
+#[test]
+fn stale_watcher_gets_compacted_and_relists() {
+    let mut api = api_with_window(64);
+    let token = api.login("user001").unwrap();
+    let rv0 = api.last_rv();
+
+    // enough pod churn to wrap the 64-event Pod stream several times
+    common::submit_cpu_batch(api.platform_mut(), 40, 4_000, 60.0, false);
+    api.run_for(3600.0, 15.0);
+
+    let err = api.watch(&token, ResourceKind::Pod, rv0).unwrap_err();
+    assert!(
+        matches!(err, ApiError::Compacted(_)),
+        "a watcher behind the window must see 410 Gone, got {err:?}"
+    );
+
+    // relist: the list verb serves current state regardless of the log…
+    let pods = api.list(&token, ResourceKind::Pod, &Selector::all()).unwrap();
+    assert!(!pods.is_empty(), "relist must return current state");
+    // …and watching from last_rv resumes cleanly
+    let resume = api.last_rv();
+    assert!(api.watch(&token, ResourceKind::Pod, resume).unwrap().is_empty());
+    api.run_for(60.0, 15.0);
+    for ev in api.watch(&token, ResourceKind::Pod, resume).unwrap() {
+        assert!(ev.resource_version > resume);
+    }
+}
+
+/// The 10k-tick chaos soak: every control-plane log — store events, Kueue
+/// and health transitions, each watch stream — stays within the configured
+/// ring capacity while the platform keeps converging. The absolute
+/// cursors prove compaction actually happened (entries ever >> retained).
+#[test]
+fn chaos_soak_10k_ticks_stays_within_ring_capacity() {
+    let window = 64usize;
+    let mut api = api_with_window(window);
+    let plan = ChaosPlan {
+        seed: common::test_seed(),
+        horizon: 150_000.0,
+        site_outages_per_hour: 0.5,
+        wire_faults_per_hour: 2.0,
+        remote_job_failures_per_hour: 1.0,
+        node_flaps_per_hour: 4.0,
+        gpu_degrades_per_hour: 1.0,
+        ..Default::default()
+    };
+    api.platform_mut().install_chaos(&plan);
+    let wls = common::submit_cpu_batch(api.platform_mut(), 12, 8_000, 400.0, true);
+
+    // 10 000 ticks of 15 s ≈ 41 simulated hours under continuous faults
+    api.run_for(150_000.0, 15.0);
+
+    let p = api.platform();
+    {
+        let st = p.cluster();
+        assert!(
+            st.events().len() <= window,
+            "store event ring exceeded its window: {} > {window}",
+            st.events().len()
+        );
+        assert!(
+            st.event_cursor() > 10 * window,
+            "the soak must actually wrap the event ring (cursor {})",
+            st.event_cursor()
+        );
+    }
+    assert!(p.kueue_transition_log_len() <= window, "kueue ring exceeded its window");
+    assert!(p.health_transition_log_len() <= window, "health ring exceeded its window");
+    // the watch log holds at most `window` events per kind
+    assert!(
+        api.watch_log_len() <= window * ResourceKind::all().len(),
+        "watch log exceeded its per-kind windows: {}",
+        api.watch_log_len()
+    );
+
+    // compaction must not have cost correctness: everything converged
+    for w in &wls {
+        assert_eq!(
+            api.platform().workload_state(w),
+            Some(WorkloadState::Finished),
+            "workload {w} stuck under a compacted control plane"
+        );
+    }
+}
+
+/// Cursor pumps across compaction boundaries lose nothing: the identical
+/// scenario run with a tiny window and an effectively unbounded one ends
+/// in the same place — same workload outcomes, same completion
+/// accounting, same pod phase census.
+#[test]
+fn tiny_window_run_matches_unbounded_run() {
+    let outcome = |window: usize| {
+        let mut api = api_with_window(window);
+        let plan = ChaosPlan {
+            seed: common::test_seed(),
+            horizon: 3_600.0,
+            site_outages_per_hour: 1.0,
+            wire_faults_per_hour: 3.0,
+            remote_job_failures_per_hour: 2.0,
+            node_flaps_per_hour: 1.0,
+            ..Default::default()
+        };
+        api.platform_mut().install_chaos(&plan);
+        let wls = common::submit_cpu_batch(api.platform_mut(), 16, 8_000, 300.0, true);
+        api.run_for(7_200.0, 15.0);
+        let p = api.platform();
+        let states: Vec<_> = wls.iter().map(|w| p.workload_state(w)).collect();
+        let m = p.metrics();
+        (
+            states,
+            m.local_completions,
+            m.remote_completions,
+            m.terminal_failures,
+            m.evictions,
+            p.pod_phase_counts(),
+        )
+    };
+    let tiny = outcome(96);
+    let unbounded = outcome(1_000_000);
+    assert_eq!(
+        tiny, unbounded,
+        "a compacted control plane must converge exactly like an unbounded one"
+    );
+}

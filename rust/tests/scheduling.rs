@@ -194,6 +194,10 @@ fn prop_scheduler_never_overcommits() {
             }
             let sched = Scheduler::default();
             sched.schedule_pending(&mut store, 0.0);
+            // invariant: the incrementally-maintained free-capacity index
+            // (the scheduler's candidate pruning) exactly mirrors the free
+            // map after an arbitrary bind history
+            store.check_free_index();
             // invariant: free >= 0 for every resource on every node, and
             // sum of scheduled requests <= allocatable
             for node in store.nodes().collect::<Vec<_>>() {
