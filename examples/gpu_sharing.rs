@@ -1,0 +1,130 @@
+//! GPU sharing end to end: reproduce the paper's headline claim — one
+//! physical A100 "serves up to seven users simultaneously" — **from a cold
+//! cluster**, with no admin in the loop.
+//!
+//! The cluster boots with three *whole* (unpartitioned) A100s and no MIG
+//! layout configured. Twenty-one users each submit a single-slice
+//! (`nvidia.com/mig-1g.5gb`) job. Nothing can run: the devices advertise
+//! whole GPUs and the queues hold no slice quota. The demand-driven GPU
+//! partition reconciler notices the queued slice demand, repartitions each
+//! idle A100 into the 7×1g.5gb max-sharing layout through the guarded
+//! store path, rebalances the Kueue quotas — and all 21 users run
+//! concurrently, seven per physical GPU.
+//!
+//! Run with: `cargo run --release --example gpu_sharing`
+
+use std::collections::BTreeMap;
+
+use aiinfn::api::{ApiObject, ApiServer, BatchJobResource, ResourceKind, Selector};
+use aiinfn::cluster::pod::PodPhase;
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::PlatformConfig;
+use aiinfn::queue::kueue::PriorityClass;
+
+/// Two GPU servers, three A100s total, **no** `mig` section: every A100
+/// starts whole.
+const COLD_CONFIG: &str = r#"{
+  "name": "ai-infn-cold-a100s",
+  "servers": [
+    {"name": "gpu-a", "year": 2023, "cpu_cores": 128, "memory_gb": 1024, "nvme_tb": 12,
+     "gpus": ["A100", "A100"]},
+    {"name": "gpu-b", "year": 2023, "cpu_cores": 128, "memory_gb": 1024, "nvme_tb": 12,
+     "gpus": ["A100"]}
+  ],
+  "federation": {"enabled": false},
+  "gpu": {"repartition_cooldown": 60}
+}"#;
+
+fn main() -> anyhow::Result<()> {
+    aiinfn::util::logging::init();
+
+    let cfg = PlatformConfig::parse(COLD_CONFIG)?;
+    let mut api = ApiServer::bootstrap(cfg)?;
+    let operator = api.login("user001")?;
+    let rv0 = api.last_rv();
+
+    // the cold state: every device advertises one whole GPU, zero slices
+    let devices = api.list(&operator, ResourceKind::GpuDevice, &Selector::all())?;
+    println!("cold cluster: {} A100s, all whole:", devices.len());
+    for d in &devices {
+        let g = d.as_gpu_device().unwrap();
+        println!(
+            "  {:<12} on {:<6} model {:<9} instances {:?} (max users {})",
+            g.metadata.name, g.node, g.model, g.instances, g.max_users
+        );
+    }
+    let a100s = devices.len();
+
+    // 21 users each ask for one 1g.5gb slice — demand nothing currently
+    // advertises
+    let users: Vec<String> = (0..7 * a100s).map(|i| format!("user{:03}", i + 1)).collect();
+    for user in &users {
+        let token = api.login(user)?;
+        api.create(
+            &token,
+            &ApiObject::BatchJob(BatchJobResource::request(
+                user,
+                "project01",
+                ResourceVec::cpu_millis(2000)
+                    .with(MEMORY, 8 << 30)
+                    .with("nvidia.com/mig-1g.5gb", 1),
+                3600.0,
+                PriorityClass::Batch,
+                false,
+            )),
+        )?;
+    }
+    println!("\nsubmitted {} single-slice jobs from {} distinct users", users.len(), users.len());
+
+    // let the control loops converge: partition reconciler → quota
+    // rebalance → Kueue admission → scheduler placement → kubelet launch
+    api.run_for(600.0, 10.0);
+
+    // every device now runs the max-sharing 7×1g.5gb layout…
+    let devices = api.list(&operator, ResourceKind::GpuDevice, &Selector::all())?;
+    println!("\nafter the reconciler:");
+    for d in &devices {
+        let g = d.as_gpu_device().unwrap();
+        println!(
+            "  {:<12} on {:<6} instances {:?} (max users {})",
+            g.metadata.name, g.node, g.instances, g.max_users
+        );
+        assert_eq!(g.max_users, 7, "each A100 must be partitioned 7-way");
+        assert!(g.instances.iter().all(|i| i == "1g.5gb"));
+    }
+    let repartitions = api.platform().metrics().repartitions;
+    assert_eq!(repartitions as usize, a100s, "one repartition per device");
+
+    // …and all 21 users run concurrently, seven per physical GPU
+    let mut per_node: BTreeMap<String, usize> = BTreeMap::new();
+    {
+        let st = api.platform().cluster();
+        for pod in st.pods() {
+            if pod.status.phase == PodPhase::Running
+                && pod.spec.requests.get("nvidia.com/mig-1g.5gb") > 0
+            {
+                *per_node.entry(pod.status.node.clone().unwrap_or_default()).or_insert(0) += 1;
+            }
+        }
+    }
+    let running: usize = per_node.values().sum();
+    println!("\nconcurrent single-slice users: {running} across {} nodes", per_node.len());
+    for (node, n) in &per_node {
+        println!("  {node}: {n} users");
+    }
+    assert_eq!(running, 7 * a100s, "every user must be running");
+    assert_eq!(per_node.get("gpu-a"), Some(&14), "two A100s → 14 users");
+    assert_eq!(per_node.get("gpu-b"), Some(&7), "one A100 → 7 users");
+
+    // the whole story is observable on the GpuDevice watch stream
+    let repart_events = api
+        .watch(&operator, ResourceKind::GpuDevice, rv0)?
+        .into_iter()
+        .filter(|e| e.event == aiinfn::api::EventType::Modified)
+        .count();
+    println!("\nGpuDevice Modified watch events since boot: {repart_events}");
+    assert!(repart_events >= a100s);
+
+    println!("\nthe paper's claim, demand-driven: 7 users per A100, {a100s} A100s, no admin.");
+    Ok(())
+}

@@ -198,4 +198,97 @@ fn main() {
     ]);
     std::fs::write("BENCH_scale.json", out.to_pretty()).expect("write BENCH_scale.json");
     println!("wrote BENCH_scale.json");
+
+    // ---------------------------------------------- mixed MIG-demand regime
+    // Demand-driven repartitioning at fleet scale: 8 dual-A100 servers boot
+    // **cold** (every device whole), then 8 whole-GPU users and 56
+    // single-slice users arrive at once. The partition reconciler must
+    // leave the whole-GPU devices alone and flip the idle half of the
+    // fleet to 7×1g.5gb; we measure the ticks + wall time to the
+    // all-64-users-running fixed point and the steady-state tick cost with
+    // the gpu controller active.
+    let mut cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let template = cfg.servers[0].clone();
+    cfg.servers = (0..8)
+        .map(|i| {
+            let mut s = template.clone();
+            s.name = format!("mig-{i:02}");
+            s.cpu_cores = 128;
+            s.memory_gb = 512;
+            s.nvme_tb = 4;
+            s.gpus = vec![GpuModel::A100_40GB; 2];
+            s
+        })
+        .collect();
+    cfg.a100_layout.clear(); // cold: no MIG layout configured
+    cfg.federation_enabled = false;
+    cfg.repartition_cooldown = 30.0;
+    let mut api = ApiServer::bootstrap(cfg).unwrap();
+    {
+        let p = api.platform_mut();
+        for i in 0..8 {
+            p.submit_batch(
+                &format!("user{:03}", i),
+                "project01",
+                ResourceVec::cpu_millis(2000).with(MEMORY, 8 << 30).with(GPU, 1),
+                1e6,
+                aiinfn::queue::kueue::PriorityClass::Batch,
+                false,
+            )
+            .unwrap();
+        }
+        for i in 0..56 {
+            p.submit_batch(
+                &format!("user{:03}", (8 + i) % 78),
+                "project01",
+                ResourceVec::cpu_millis(1000)
+                    .with(MEMORY, 4 << 30)
+                    .with("nvidia.com/mig-1g.5gb", 1),
+                1e6,
+                aiinfn::queue::kueue::PriorityClass::Batch,
+                false,
+            )
+            .unwrap();
+        }
+    }
+    let running = |api: &ApiServer| {
+        let st = api.platform().cluster();
+        st.pods()
+            .filter(|p| p.status.phase == aiinfn::cluster::pod::PodPhase::Running)
+            .count()
+    };
+    let t = Instant::now();
+    let mut converge_ticks = 0usize;
+    while converge_ticks < 500 && running(&api) < 64 {
+        api.run_for(10.0, 10.0); // one 10 s control tick
+        converge_ticks += 1;
+    }
+    let converge_secs = t.elapsed().as_secs_f64();
+    let users = running(&api);
+    assert_eq!(users, 64, "MIG-demand regime must converge to 64 running users");
+    let repartitions = api.platform().metrics().repartitions;
+    assert_eq!(repartitions, 8, "exactly the idle half of the fleet flips");
+    g.record_value("gpu_converge_ticks", converge_ticks as f64, "ticks");
+    g.record_value("gpu_converge_secs", converge_secs, "s");
+
+    // steady state: demand satisfied, gpu controller still scanning
+    let gpu_tick = {
+        let r = g.bench("gpu_regime_tick_steady", || {
+            api.tick();
+        });
+        r.per_sec()
+    };
+
+    let out = Json::obj(vec![
+        ("a100_devices", Json::num(16.0)),
+        ("whole_gpu_users", Json::num(8.0)),
+        ("mig_slice_users", Json::num(56.0)),
+        ("users_running", Json::num(users as f64)),
+        ("repartitions", Json::num(repartitions as f64)),
+        ("converge_ticks", Json::num(converge_ticks as f64)),
+        ("converge_secs", Json::num(converge_secs)),
+        ("steady_ticks_per_sec", Json::num(gpu_tick)),
+    ]);
+    std::fs::write("BENCH_gpu.json", out.to_pretty()).expect("write BENCH_gpu.json");
+    println!("wrote BENCH_gpu.json");
 }

@@ -18,8 +18,7 @@ use aiinfn::util::bench::BenchGroup;
 /// How many 1-slice-equivalent user pods fit a node with one A100 in the
 /// given layout, by actually scheduling pods.
 fn users_served(layout: &MigLayout) -> usize {
-    let mut gpu = GpuDevice::whole("g0", GpuModel::A100_40GB);
-    gpu.repartition(layout.clone()).unwrap();
+    let gpu = GpuDevice::partitioned("g0", GpuModel::A100_40GB, layout.clone()).unwrap();
     let mut store = ClusterStore::new();
     store.add_node(Node::physical("n", 64, 512 << 30, 1 << 40, vec![gpu]), 0.0);
     let sched = Scheduler::default();

@@ -154,6 +154,16 @@ pub(crate) fn typed_field<'a>(obj: &'a ApiObject, path: &str) -> Option<Option<F
             "status.health" => Some(FieldVal::S(&s.health)),
             _ => return None,
         },
+        ApiObject::GpuDevice(g) => match path {
+            "spec.node" => Some(FieldVal::S(&g.node)),
+            "spec.model" => Some(FieldVal::S(&g.model)),
+            "spec.migCapable" => Some(FieldVal::B(g.mig_capable)),
+            "status.maxUsers" => Some(FieldVal::N(g.max_users as f64)),
+            "status.freeComputeSlices" => Some(FieldVal::N(g.free_compute_slices as f64)),
+            "status.freeMemorySlices" => Some(FieldVal::N(g.free_memory_slices as f64)),
+            // status.instances is an array: unmodeled → JSON fallback
+            _ => return None,
+        },
     })
 }
 

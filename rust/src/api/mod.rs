@@ -45,7 +45,7 @@
 //!
 //! ## Resource model
 //!
-//! Six kinds ([`ResourceKind`]), each a typed struct carrying [`Metadata`]
+//! Seven kinds ([`ResourceKind`]), each a typed struct carrying [`Metadata`]
 //! (name, namespace, labels, resourceVersion) and serializing to/from the
 //! in-house [`Json`](crate::util::json::Json) in the familiar
 //! `{apiVersion, kind, metadata, spec, status}` shape:
@@ -58,6 +58,9 @@
 //! * [`WorkloadView`] — Kueue admission state (read-only)
 //! * [`SiteView`] — a federation site behind InterLink (read-only; status
 //!   carries circuit-breaker health)
+//! * [`GpuDeviceView`] — one physical accelerator with its live MIG
+//!   partition state (read-only; label-indexed by hosting node and model;
+//!   `Modified` events fire on every demand-driven repartition)
 //!
 //! Pods and Sites additionally expose typed [`Condition`]s
 //! (`PodScheduled`/`Ready`, `Healthy`) so watchers can follow transitions
@@ -124,8 +127,8 @@ pub mod watch;
 
 pub use admission::{AdmissionChain, AdmissionCtx, Admitter, WriteVerb};
 pub use resources::{
-    ApiObject, BatchJobResource, Condition, Metadata, NodeView, OwnerReference, PodView,
-    ResourceKind, SessionResource, SiteView, WorkloadView,
+    ApiObject, BatchJobResource, Condition, GpuDeviceView, Metadata, NodeView, OwnerReference,
+    PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
 };
 pub use server::{ApiServer, Selector, SelectorOp};
 pub use watch::{EventType, WatchEvent, WatchLog};

@@ -26,6 +26,7 @@ pub enum ResourceKind {
     Node,
     Workload,
     Site,
+    GpuDevice,
 }
 
 impl ResourceKind {
@@ -37,6 +38,7 @@ impl ResourceKind {
             ResourceKind::Node => "Node",
             ResourceKind::Workload => "Workload",
             ResourceKind::Site => "Site",
+            ResourceKind::GpuDevice => "GpuDevice",
         }
     }
 
@@ -48,12 +50,13 @@ impl ResourceKind {
             "Node" => ResourceKind::Node,
             "Workload" => ResourceKind::Workload,
             "Site" => ResourceKind::Site,
+            "GpuDevice" => ResourceKind::GpuDevice,
             _ => return None,
         })
     }
 
     /// Every kind, for enumeration in tests and tooling.
-    pub fn all() -> [ResourceKind; 6] {
+    pub fn all() -> [ResourceKind; 7] {
         [
             ResourceKind::Session,
             ResourceKind::BatchJob,
@@ -61,6 +64,7 @@ impl ResourceKind {
             ResourceKind::Node,
             ResourceKind::Workload,
             ResourceKind::Site,
+            ResourceKind::GpuDevice,
         ]
     }
 }
@@ -898,6 +902,69 @@ impl SiteView {
     }
 }
 
+// ----------------------------------------------------------- GpuDeviceView
+
+/// Read-only projection of one physical accelerator and its current MIG
+/// partition state — what the demand-driven partition reconciler manages.
+/// Label-indexed by hosting node and model (`aiinfn/node`, `aiinfn/model`),
+/// so `kubectl get gpudevices -l aiinfn/node=cnaf-ai03` is one pruned list.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GpuDeviceView {
+    pub metadata: Metadata,
+    /// Spec: where the device is installed and what it is.
+    pub node: String,
+    pub model: String,
+    pub mig_capable: bool,
+    /// Status: the live layout (profile labels, empty = MIG off), the
+    /// user-parallelism it provides, and the slice headroom the layout
+    /// leaves unallocated on the silicon.
+    pub instances: Vec<String>,
+    pub max_users: u64,
+    pub free_compute_slices: u64,
+    pub free_memory_slices: u64,
+}
+
+impl GpuDeviceView {
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::GpuDevice,
+            &self.metadata,
+            Json::obj(vec![
+                ("node", Json::str(self.node.as_str())),
+                ("model", Json::str(self.model.as_str())),
+                ("migCapable", Json::Bool(self.mig_capable)),
+            ]),
+            Json::obj(vec![
+                (
+                    "instances",
+                    Json::Arr(self.instances.iter().map(|i| Json::str(i.as_str())).collect()),
+                ),
+                ("maxUsers", Json::num(self.max_users as f64)),
+                ("freeComputeSlices", Json::num(self.free_compute_slices as f64)),
+                ("freeMemorySlices", Json::num(self.free_memory_slices as f64)),
+            ]),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<GpuDeviceView, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::GpuDevice)?;
+        let instances = match status.get("instances").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(a) => a.iter().filter_map(Json::as_str).map(str::to_string).collect(),
+        };
+        Ok(GpuDeviceView {
+            metadata,
+            node: opt_str(spec, "node").unwrap_or_default(),
+            model: opt_str(spec, "model").unwrap_or_default(),
+            mig_capable: spec.get("migCapable").and_then(Json::as_bool).unwrap_or(false),
+            instances,
+            max_users: opt_num(status, "maxUsers").unwrap_or(0.0) as u64,
+            free_compute_slices: opt_num(status, "freeComputeSlices").unwrap_or(0.0) as u64,
+            free_memory_slices: opt_num(status, "freeMemorySlices").unwrap_or(0.0) as u64,
+        })
+    }
+}
+
 // --------------------------------------------------------------- ApiObject
 
 /// A typed object of any kind — what the uniform verbs accept and return.
@@ -909,6 +976,7 @@ pub enum ApiObject {
     Node(NodeView),
     Workload(WorkloadView),
     Site(SiteView),
+    GpuDevice(GpuDeviceView),
 }
 
 impl ApiObject {
@@ -920,6 +988,7 @@ impl ApiObject {
             ApiObject::Node(_) => ResourceKind::Node,
             ApiObject::Workload(_) => ResourceKind::Workload,
             ApiObject::Site(_) => ResourceKind::Site,
+            ApiObject::GpuDevice(_) => ResourceKind::GpuDevice,
         }
     }
 
@@ -931,6 +1000,7 @@ impl ApiObject {
             ApiObject::Node(x) => &x.metadata,
             ApiObject::Workload(x) => &x.metadata,
             ApiObject::Site(x) => &x.metadata,
+            ApiObject::GpuDevice(x) => &x.metadata,
         }
     }
 
@@ -942,6 +1012,7 @@ impl ApiObject {
             ApiObject::Node(x) => &mut x.metadata,
             ApiObject::Workload(x) => &mut x.metadata,
             ApiObject::Site(x) => &mut x.metadata,
+            ApiObject::GpuDevice(x) => &mut x.metadata,
         }
     }
 
@@ -957,6 +1028,7 @@ impl ApiObject {
             ApiObject::Node(x) => x.to_json(),
             ApiObject::Workload(x) => x.to_json(),
             ApiObject::Site(x) => x.to_json(),
+            ApiObject::GpuDevice(x) => x.to_json(),
         }
     }
 
@@ -975,6 +1047,7 @@ impl ApiObject {
             ResourceKind::Node => ApiObject::Node(NodeView::from_json(j)?),
             ResourceKind::Workload => ApiObject::Workload(WorkloadView::from_json(j)?),
             ResourceKind::Site => ApiObject::Site(SiteView::from_json(j)?),
+            ResourceKind::GpuDevice => ApiObject::GpuDevice(GpuDeviceView::from_json(j)?),
         })
     }
 
@@ -1017,6 +1090,13 @@ impl ApiObject {
     pub fn as_site(&self) -> Option<&SiteView> {
         match self {
             ApiObject::Site(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_gpu_device(&self) -> Option<&GpuDeviceView> {
+        match self {
+            ApiObject::GpuDevice(g) => Some(g),
             _ => None,
         }
     }
@@ -1131,6 +1211,16 @@ mod tests {
                     "failure threshold crossed",
                     77.5,
                 )],
+            }),
+            ApiObject::GpuDevice(GpuDeviceView {
+                metadata: meta("cnaf-ai03-gpu1", "cluster", 21),
+                node: "cnaf-ai03".into(),
+                model: "A100-40GB".into(),
+                mig_capable: true,
+                instances: vec!["3g.20gb".into(), "3g.20gb".into()],
+                max_users: 2,
+                free_compute_slices: 1,
+                free_memory_slices: 0,
             }),
         ];
         for obj in objects {

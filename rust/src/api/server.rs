@@ -35,7 +35,8 @@ use crate::api::admission::{AdmissionChain, AdmissionCtx, WriteVerb};
 use crate::api::index::ApiIndex;
 use crate::api::resources::{
     parse_priority, phase_str, priority_str, workload_state_str, ApiObject, BatchJobResource,
-    Condition, Metadata, NodeView, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
+    Condition, GpuDeviceView, Metadata, NodeView, PodView, ResourceKind, SessionResource,
+    SiteView, WorkloadView,
 };
 use crate::api::watch::{EventType, WatchEvent, WatchLog};
 use crate::api::ApiError;
@@ -321,6 +322,20 @@ impl ApiServer {
             api.index.seed(ResourceKind::Site, &vk.site);
         }
         api.pump();
+        // accelerators exist at bootstrap without store events of their
+        // own: emit an Added snapshot per device so GpuDevice watchers and
+        // the label index (aiinfn/node, aiinfn/model) have a baseline
+        let ids: Vec<String> =
+            api.platform.cluster().gpu_devices().map(|(_, d)| d.id.clone()).collect();
+        let at = api.platform.now();
+        for id in ids {
+            let rv = api.log.next_rv();
+            let json = {
+                let st = api.platform.cluster();
+                st.find_gpu(&id).map(|(n, d)| api.gpu_device_view(n, d, rv).to_json())
+            };
+            api.append_event(ResourceKind::GpuDevice, EventType::Added, &id, at, json);
+        }
         api
     }
 
@@ -825,6 +840,16 @@ impl ApiServer {
                     out.push(ApiObject::Site(self.site_view(vk, rv)));
                 }
             }
+            ResourceKind::GpuDevice => {
+                let st = self.platform.cluster();
+                for (n, d) in st.gpu_devices() {
+                    if pruned(&d.id) {
+                        continue;
+                    }
+                    let rv = self.rv_of(kind, &d.id);
+                    out.push(ApiObject::GpuDevice(self.gpu_device_view(n, d, rv)));
+                }
+            }
         }
         if selector.is_empty() {
             return Ok(out);
@@ -1087,8 +1112,11 @@ impl ApiServer {
                     EventKind::PodDeleted => (ResourceKind::Pod, EventType::Deleted, None),
                     EventKind::NodeAdded => (ResourceKind::Node, EventType::Added, None),
                     EventKind::NodeRemoved => (ResourceKind::Node, EventType::Deleted, None),
-                    EventKind::NodeModified | EventKind::MigRepartitioned => {
-                        (ResourceKind::Node, EventType::Modified, None)
+                    EventKind::NodeModified => (ResourceKind::Node, EventType::Modified, None),
+                    // the event's object is the *device* id; the node also
+                    // gets its own NodeModified from the repartition path
+                    EventKind::MigRepartitioned => {
+                        (ResourceKind::GpuDevice, EventType::Modified, None)
                     }
                 };
                 let rv = self.log.next_rv();
@@ -1101,6 +1129,9 @@ impl ApiServer {
                         }
                         v.to_json()
                     }),
+                    ResourceKind::GpuDevice => st
+                        .find_gpu(&ev.object)
+                        .map(|(n, d)| self.gpu_device_view(n, d, rv).to_json()),
                     _ => st.node(&ev.object).map(|n| {
                         let free = st.free_on(&n.name).cloned().unwrap_or_default();
                         NodeView::from_node(n, free, rv).to_json()
@@ -1283,6 +1314,42 @@ impl ApiServer {
                 .find(|vk| vk.site == name || vk.node_name == name)
                 .map(|vk| ApiObject::Site(self.site_view(vk, rv)))
                 .ok_or_else(|| ApiError::NotFound(format!("Site/{name}"))),
+            ResourceKind::GpuDevice => {
+                let st = self.platform.cluster();
+                st.find_gpu(name)
+                    .map(|(n, d)| ApiObject::GpuDevice(self.gpu_device_view(n, d, rv)))
+                    .ok_or_else(|| ApiError::NotFound(format!("GpuDevice/{name}")))
+            }
+        }
+    }
+
+    fn gpu_device_view(
+        &self,
+        node: &crate::cluster::node::Node,
+        dev: &crate::gpu::GpuDevice,
+        rv: u64,
+    ) -> GpuDeviceView {
+        let mig_capable = dev.model.mig_compute_slices() > 0;
+        let mut labels = BTreeMap::new();
+        labels.insert("aiinfn/node".to_string(), node.name.clone());
+        labels.insert("aiinfn/model".to_string(), dev.model.name().to_string());
+        labels.insert("nvidia.com/mig.capable".to_string(), mig_capable.to_string());
+        let (free_c, free_m) = dev.layout.free_slices();
+        GpuDeviceView {
+            metadata: Metadata {
+                name: dev.id.clone(),
+                namespace: "cluster".to_string(),
+                labels,
+                resource_version: rv,
+                ..Default::default()
+            },
+            node: node.name.clone(),
+            model: dev.model.name().to_string(),
+            mig_capable,
+            instances: dev.layout.instances.iter().map(|p| p.label()).collect(),
+            max_users: dev.layout.max_users() as u64,
+            free_compute_slices: free_c as u64,
+            free_memory_slices: free_m as u64,
         }
     }
 

@@ -116,6 +116,10 @@ pub struct PodStatus {
     pub message: String,
     /// How many times this pod has been evicted and requeued.
     pub evictions: u32,
+    /// Whether this pod has already been counted (once) in the persistent
+    /// accounting ledger — run-hours may accrue across several eviction
+    /// intervals, but the pod itself is tallied on its first accrual.
+    pub accounted: bool,
 }
 
 impl PodStatus {
@@ -129,6 +133,7 @@ impl PodStatus {
             finished_at: None,
             message: String::new(),
             evictions: 0,
+            accounted: false,
         }
     }
 

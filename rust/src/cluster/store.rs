@@ -26,6 +26,9 @@ use std::collections::{BTreeMap, BTreeSet, HashMap};
 use crate::cluster::node::Node;
 use crate::cluster::pod::{Pod, PodPhase, PodSpec, PodStatus};
 use crate::cluster::resources::ResourceVec;
+use crate::gpu::mig::MigLayout;
+use crate::gpu::GpuDevice;
+use crate::monitoring::accounting::UsageLedger;
 use crate::sim::clock::Time;
 use crate::util::ring::RingLog;
 
@@ -85,6 +88,9 @@ pub struct ClusterStore {
     /// scheduler's feasibility pruning. Maintained incrementally wherever
     /// `free` changes.
     free_index: HashMap<String, BTreeSet<(i64, String)>>,
+    /// Persistent per-principal usage, accrued at every terminal-phase
+    /// transition — the accounting source of truth that survives pod GC.
+    ledger: UsageLedger,
 }
 
 /// Apply a free-vector change to the inverted capacity index: for every
@@ -212,6 +218,83 @@ impl ClusterStore {
     /// (index selectivity hint for the scheduler).
     pub fn free_index_size(&self, resource: &str) -> usize {
         self.free_index.get(resource).map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Every installed accelerator with its hosting node, in (node, slot)
+    /// order — deterministic because the node map is sorted by name.
+    pub fn gpu_devices(&self) -> impl Iterator<Item = (&Node, &GpuDevice)> {
+        self.nodes.values().flat_map(|n| n.gpus.iter().map(move |g| (n, g)))
+    }
+
+    /// Find a device by id across all nodes.
+    pub fn find_gpu(&self, device_id: &str) -> Option<(&Node, &GpuDevice)> {
+        self.gpu_devices().find(|(_, g)| g.id == device_id)
+    }
+
+    /// Safely apply a new MIG `layout` to device `device_id` on
+    /// `node_name` — the only repartition path on a device installed in a
+    /// node. Refuses while any of the capacity the device would stop
+    /// advertising is still bound by live pods, then swaps the layout,
+    /// re-derives the node's extended resources, recomputes free capacity
+    /// (maintaining the per-resource free index), and records a
+    /// `MigRepartitioned` event for the device plus a `NodeModified` event
+    /// for the node. Returns the `(removed, added)` extended-resource
+    /// advertisements so callers can rebalance queue quotas.
+    pub fn repartition_gpu(
+        &mut self,
+        node_name: &str,
+        device_id: &str,
+        layout: MigLayout,
+        at: Time,
+    ) -> anyhow::Result<(ResourceVec, ResourceVec)> {
+        let node = self
+            .nodes
+            .get(node_name)
+            .ok_or_else(|| anyhow::anyhow!("no node {node_name}"))?;
+        let idx = node
+            .gpus
+            .iter()
+            .position(|g| g.id == device_id)
+            .ok_or_else(|| anyhow::anyhow!("no device {device_id} on node {node_name}"))?;
+        let model = node.gpus[idx].model;
+        anyhow::ensure!(!model.is_fpga(), "device {device_id} is an FPGA, not repartitionable");
+        let validated = MigLayout::new(model, layout.instances)
+            .map_err(|e| anyhow::anyhow!("invalid layout for {device_id}: {e}"))?;
+        let old_adv = node.gpus[idx].extended_resources();
+        let new_adv = validated.extended_resources();
+        // the bound-slices guard: for every resource whose advertisement
+        // shrinks, the removed amount must be sitting free on the node —
+        // otherwise live pods hold slices of the old layout and swapping
+        // it would leak their reserved capacity
+        let free = self.free.get(node_name).cloned().unwrap_or_default();
+        for (k, v) in old_adv.iter() {
+            let shrink = v - new_adv.get(k);
+            if shrink > 0 && free.get(k) < shrink {
+                anyhow::bail!(
+                    "repartition refused: {k} on {device_id} still bound \
+                     (free {} < removed {shrink})",
+                    free.get(k)
+                );
+            }
+        }
+        let label = if validated.enabled() {
+            validated.instances.iter().map(|p| p.label()).collect::<Vec<_>>().join("+")
+        } else {
+            "whole".to_string()
+        };
+        self.bump();
+        let node = self.nodes.get_mut(node_name).unwrap();
+        node.gpus[idx].repartition(validated).expect("layout pre-validated");
+        node.refresh_extended_resources();
+        self.recompute_free(node_name);
+        self.record(
+            at,
+            EventKind::NodeModified,
+            node_name,
+            &format!("mig repartitioned: {device_id} -> {label}"),
+        );
+        self.record(at, EventKind::MigRepartitioned, device_id, &format!("{node_name}: {label}"));
+        Ok((old_adv, new_adv))
     }
 
     /// Recompute a node's free vector after its allocatable changed
@@ -395,6 +478,22 @@ impl ClusterStore {
                 index_update(&mut self.free_index, &node, &old, free);
             }
         }
+        // accrue the run interval into the persistent accounting ledger at
+        // the terminal transition — the record survives GC of the pod
+        // object, and a zero-hour (same-tick) interval still counts the pod
+        if let Some(start) = pod.status.started_at {
+            let hours = ((at - start).max(0.0)) / 3600.0;
+            let node = pod.status.node.as_deref().and_then(|n| self.nodes.get(n));
+            self.ledger.accrue(
+                &pod.spec.user,
+                &pod.spec.project,
+                &pod.spec.requests,
+                node,
+                hours,
+                !pod.status.accounted,
+            );
+            pod.status.accounted = true;
+        }
         pod.status.phase = phase;
         pod.status.finished_at = Some(at);
         pod.status.message = msg.to_string();
@@ -425,6 +524,20 @@ impl ClusterStore {
                     index_update(&mut self.free_index, &node, &old, free);
                 }
             }
+            // a live pod deleted by the GC cascade still ran: accrue its
+            // interval before the object disappears
+            if let Some(start) = pod.status.started_at {
+                let hours = ((at - start).max(0.0)) / 3600.0;
+                let node = pod.status.node.as_deref().and_then(|n| self.nodes.get(n));
+                self.ledger.accrue(
+                    &pod.spec.user,
+                    &pod.spec.project,
+                    &pod.spec.requests,
+                    node,
+                    hours,
+                    !pod.status.accounted,
+                );
+            }
         }
         self.pods.remove(pod_name);
         self.pending.retain(|e| e.name != pod_name);
@@ -447,6 +560,14 @@ impl ClusterStore {
             self.pods.remove(v);
         }
         victims.len()
+    }
+
+    // ------------------------------------------------------------ ledger
+
+    /// The persistent accounting ledger: usage accrued at terminal-phase
+    /// transitions (finish/evict/delete-while-live), surviving pod GC.
+    pub fn usage_ledger(&self) -> &UsageLedger {
+        &self.ledger
     }
 
     // ------------------------------------------------------------ events
@@ -692,6 +813,66 @@ mod tests {
         assert_eq!(s.free_index_size(GPU), 0);
         s.finish_pod("p1", PodPhase::Succeeded, 1.0, "ok").unwrap();
         assert_eq!(s.nodes_with_free_at_least(GPU, 1).count(), 1);
+    }
+
+    #[test]
+    fn repartition_refused_while_slices_bound() {
+        let mut s = ClusterStore::new();
+        let gpu = GpuDevice::partitioned(
+            "g0",
+            GpuModel::A100_40GB,
+            crate::gpu::MigLayout::max_sharing(GpuModel::A100_40GB).unwrap(),
+        )
+        .unwrap();
+        s.add_node(Node::physical("n1", 32, 128 << 30, 1 << 40, vec![gpu]), 0.0);
+        let req = ResourceVec::cpu_millis(500).with("nvidia.com/mig-1g.5gb", 1);
+        s.create_pod(
+            PodSpec::new("p1", req, Payload::Sleep { duration: 100.0 }),
+            0.0,
+        );
+        s.bind("p1", "n1", 0.0).unwrap();
+        // a slice is bound: collapsing back to a whole GPU must fail
+        let whole = crate::gpu::MigLayout::new(GpuModel::A100_40GB, vec![]).unwrap();
+        let err = s.repartition_gpu("n1", "g0", whole.clone(), 1.0).unwrap_err();
+        assert!(err.to_string().contains("still bound"), "{err}");
+        // the node still advertises the old layout, untouched
+        assert_eq!(s.node("n1").unwrap().allocatable.get("nvidia.com/mig-1g.5gb"), 7);
+        // release the slice: the same repartition now succeeds
+        s.finish_pod("p1", PodPhase::Succeeded, 2.0, "done").unwrap();
+        let (removed, added) = s.repartition_gpu("n1", "g0", whole, 3.0).unwrap();
+        assert_eq!(removed.get("nvidia.com/mig-1g.5gb"), 7);
+        assert_eq!(added.get(GPU), 1);
+        let n = s.node("n1").unwrap();
+        assert_eq!(n.allocatable.get("nvidia.com/mig-1g.5gb"), 0);
+        assert_eq!(n.allocatable.get(GPU), 1);
+        assert_eq!(s.free_on("n1").unwrap().get(GPU), 1);
+        assert_eq!(s.events().last().unwrap().kind, EventKind::MigRepartitioned);
+        s.check_free_index();
+    }
+
+    #[test]
+    fn repartition_rejects_unknown_targets_and_bad_layouts() {
+        let mut s = ClusterStore::new();
+        s.add_node(
+            Node::physical("n1", 8, 32 << 30, 1 << 40, vec![
+                GpuDevice::whole("g0", GpuModel::A100_40GB),
+                GpuDevice::whole("f0", GpuModel::AlveoU250),
+            ]),
+            0.0,
+        );
+        let seven = crate::gpu::MigLayout::max_sharing(GpuModel::A100_40GB).unwrap();
+        assert!(s.repartition_gpu("ghost", "g0", seven.clone(), 0.0).is_err());
+        assert!(s.repartition_gpu("n1", "ghost", seven.clone(), 0.0).is_err());
+        assert!(s.repartition_gpu("n1", "f0", seven.clone(), 0.0).is_err(), "FPGA refused");
+        // A30 profiles on an A100 are invalid geometry
+        let bad = crate::gpu::MigLayout {
+            model: GpuModel::A100_40GB,
+            instances: vec![crate::gpu::MigProfile::new(1, 6)],
+        };
+        assert!(s.repartition_gpu("n1", "g0", bad, 0.0).is_err());
+        // and the valid one goes through, flipping whole → 7×1g
+        s.repartition_gpu("n1", "g0", seven, 0.0).unwrap();
+        assert_eq!(s.node("n1").unwrap().allocatable.get("nvidia.com/mig-1g.5gb"), 7);
     }
 
     #[test]

@@ -23,8 +23,26 @@ impl GpuDevice {
         GpuDevice { id: id.into(), model, layout: MigLayout::new(model, vec![]).unwrap() }
     }
 
-    /// Apply a new MIG layout (admin repartition). Fails on invalid geometry.
-    pub fn repartition(&mut self, layout: MigLayout) -> Result<(), mig::MigError> {
+    /// Construct a device already carrying a validated MIG layout (fixtures
+    /// and benchmarks building standalone devices — a device *installed in
+    /// a node* is repartitioned through the guarded
+    /// [`ClusterStore::repartition_gpu`](crate::cluster::store::ClusterStore::repartition_gpu)
+    /// path, which refuses while slices are bound).
+    pub fn partitioned(
+        id: impl Into<String>,
+        model: GpuModel,
+        layout: MigLayout,
+    ) -> Result<Self, mig::MigError> {
+        let mut d = GpuDevice::whole(id, model);
+        d.repartition(layout)?;
+        Ok(d)
+    }
+
+    /// Apply a new MIG layout. Fails on invalid geometry. Crate-private on
+    /// purpose: swapping the layout of a device that is installed in a node
+    /// without releasing its bound slices leaks reserved capacity, so all
+    /// external callers go through `ClusterStore::repartition_gpu`.
+    pub(crate) fn repartition(&mut self, layout: MigLayout) -> Result<(), mig::MigError> {
         let validated = MigLayout::new(self.model, layout.instances)?;
         self.layout = validated;
         Ok(())

@@ -143,7 +143,14 @@ impl Spawner {
         let requests = profile.requests();
         let wl_name = format!("wl-{id}");
         ctx.kueue
-            .submit(&wl_name, &self.hub_queue, PriorityClass::Interactive, requests.clone(), at)
+            .submit_for_user(
+                &wl_name,
+                &self.hub_queue,
+                user,
+                PriorityClass::Interactive,
+                requests.clone(),
+                at,
+            )
             .map_err(SpawnError::Other)?;
         let result = ctx.kueue.admit_pass(at);
         let admitted = ctx

@@ -33,7 +33,7 @@
 //! External consumers do not poke platform internals: all reads and writes
 //! flow through [`api::ApiServer`] — a Kubernetes-apiserver-like front door
 //! with typed resources (`Session`, `BatchJob`, `Pod`, `Node`, `Workload`,
-//! `Site`), declarative verbs (`create` / `update` / `patch` / `apply` /
+//! `Site`, `GpuDevice`), declarative verbs (`create` / `update` / `patch` / `apply` /
 //! `update_status` / `delete`, plus `get` / `list` with `=`/`!=`/`in`/
 //! `notin` selectors), bearer-token authentication via the hub's
 //! [`hub::auth::AuthService`], and `watch` streams serving
@@ -78,12 +78,31 @@
 //! transitions, API deletion intents) to
 //! per-concern controllers — garbage collection, queue admission,
 //! placement + launch, offload status sync, site health / circuit
-//! breaking, job retry/finish, idle-session culling, and monitoring
-//! scrapes — each implementing
+//! breaking, job retry/finish, idle-session culling, monitoring
+//! scrapes, and demand-driven GPU repartitioning — each implementing
 //! [`Reconciler`](platform::reconcile::Reconciler). [`Platform`]
 //! (`platform::facade::Platform`) keeps its subsystem state crate-private;
 //! the few remaining public fields are leaf services (registry, NFS, TSDB,
 //! config) with no control-plane semantics.
+//!
+//! ## Demand-driven GPU sharing
+//!
+//! The MIG layer is a closed loop, not a static admin input. The
+//! `gpu-partition` reconciler ([`platform::reconcile::gpu`]) scans queued
+//! accelerator demand every tick, scores every valid layout per idle
+//! device ([`gpu::mig::enumerate_layouts`] plus MIG-off), and applies
+//! strict improvements through the guarded
+//! [`ClusterStore::repartition_gpu`](cluster::store::ClusterStore::repartition_gpu)
+//! path — which refuses while slices are bound — with hysteresis and the
+//! `gpu.repartition_cooldown` config knob; Kueue quotas are rebalanced by
+//! the advertisement delta. Usage accrues into the store's persistent
+//! accounting ledger at terminal pod transitions (per-device MIG
+//! denominators, GC-proof — [`monitoring::accounting`]), is decayed by
+//! [`monitoring::fairshare`] (`fairshare.half_life`), and tiebreaks Kueue
+//! admission within a priority band. Partition state is served as the
+//! read-only `GpuDevice` API kind (list/watch, label-indexed), with a
+//! `Modified` event per repartition. `examples/gpu_sharing.rs` reproduces
+//! the paper's 7-users-per-A100 claim from a cold whole-GPU cluster.
 //!
 //! ## Chaos + resilience
 //!

@@ -1,13 +1,27 @@
-//! Resource accounting: per-user / per-project GPU-hours and CPU-hours,
-//! computed from pod lifecycle intervals — the data behind the paper's
-//! "personalized user dashboards" feasibility study and the admin capacity
-//! planning story.
+//! Resource accounting: per-user / per-project GPU-hours and CPU-hours —
+//! the data behind the paper's "personalized user dashboards" feasibility
+//! study and the admin capacity-planning story.
+//!
+//! Usage is **ledger-based**: every pod accrues its run interval into the
+//! cluster store's persistent [`UsageLedger`] at the terminal-phase
+//! transition (finish, eviction, deletion of a live pod), so pods removed
+//! later by the GC cascade keep their history. [`account`] merges the
+//! ledger with the live accrual of currently-running pods.
+//!
+//! MIG slice-hours are normalized to fractions of a full GPU using the
+//! slice capacity of the **device actually hosting the pod** (7 on an
+//! A100, 4 on an A30); when the hosting device cannot be resolved the
+//! denominator falls back to the model whose profile table lists the
+//! requested profile.
 
 use std::collections::BTreeMap;
 
+use crate::cluster::node::Node;
 use crate::cluster::pod::PodPhase;
-use crate::cluster::resources::{CPU, GPU};
+use crate::cluster::resources::{ResourceVec, CPU, GPU};
 use crate::cluster::store::ClusterStore;
+use crate::gpu::mig::{profile_table, slice_capacity, MigProfile};
+use crate::gpu::GpuModel;
 use crate::sim::clock::Time;
 
 /// Accumulated usage for one principal.
@@ -15,7 +29,8 @@ use crate::sim::clock::Time;
 pub struct Usage {
     pub cpu_core_hours: f64,
     pub gpu_hours: f64,
-    /// MIG-slice hours normalized to fractions of a full GPU (1g = 1/7).
+    /// MIG-slice hours normalized to fractions of a full GPU
+    /// (1g = 1/7 on an A100, 1/4 on an A30).
     pub mig_gpu_equiv_hours: f64,
     pub pods: u64,
 }
@@ -26,6 +41,93 @@ impl Usage {
     }
 }
 
+/// The model whose datasheet profile table lists `profile` (A100 and A30
+/// profile sets are disjoint, so the profile name identifies the model).
+fn model_for_profile(profile: &MigProfile) -> Option<GpuModel> {
+    [GpuModel::A100_40GB, GpuModel::A30]
+        .into_iter()
+        .find(|m| profile_table(*m).iter().any(|(p, _)| p == profile))
+}
+
+/// GPU-equivalents per hour for the MIG slices in `requests`: each slice
+/// counts `compute_slices / slice_capacity(model)` of a full GPU, with the
+/// model taken from the hosting device's layout when a node is known, else
+/// from the profile table.
+pub fn mig_gpu_equivalents(requests: &ResourceVec, node: Option<&Node>) -> f64 {
+    let mut total = 0.0;
+    for (k, v) in requests.iter() {
+        let Some(rest) = k.strip_prefix("nvidia.com/mig-") else { continue };
+        let Some(profile) = MigProfile::parse(rest) else { continue };
+        let hosting_model = node
+            .and_then(|n| {
+                n.gpus.iter().find(|g| g.layout.instances.contains(&profile)).map(|g| g.model)
+            })
+            .or_else(|| model_for_profile(&profile));
+        let denom = hosting_model.map(|m| slice_capacity(m).0).filter(|c| *c > 0).unwrap_or(7);
+        total += v as f64 * profile.compute_slices as f64 / denom as f64;
+    }
+    total
+}
+
+/// Per-principal usage maps (one entry each for the user and the project).
+type UsageMap = BTreeMap<String, Usage>;
+
+fn accrue_into(
+    map: &mut UsageMap,
+    key: &str,
+    cores: f64,
+    gpus: f64,
+    mig_equiv: f64,
+    hours: f64,
+    count_pod: bool,
+) {
+    let u = map.entry(key.to_string()).or_default();
+    u.cpu_core_hours += cores * hours;
+    u.gpu_hours += gpus * hours;
+    u.mig_gpu_equiv_hours += mig_equiv * hours;
+    if count_pod {
+        u.pods += 1;
+    }
+}
+
+/// The persistent accounting ledger owned by the cluster store: usage
+/// accrued at every terminal-phase transition, surviving pod GC. A pod is
+/// counted in `pods` exactly once (its first accrual), even when a
+/// same-tick pod contributes zero hours.
+#[derive(Debug, Clone, Default)]
+pub struct UsageLedger {
+    by_user: UsageMap,
+    by_project: UsageMap,
+}
+
+impl UsageLedger {
+    /// Accrue one run interval. `count_pod` is true on the pod's first
+    /// accrual only. A zero-hour interval still counts the pod.
+    pub fn accrue(
+        &mut self,
+        user: &str,
+        project: &str,
+        requests: &ResourceVec,
+        node: Option<&Node>,
+        hours: f64,
+        count_pod: bool,
+    ) {
+        let cores = requests.get(CPU) as f64 / 1000.0;
+        let gpus = requests.get(GPU) as f64;
+        let mig_equiv = mig_gpu_equivalents(requests, node);
+        accrue_into(&mut self.by_user, user, cores, gpus, mig_equiv, hours, count_pod);
+        accrue_into(&mut self.by_project, project, cores, gpus, mig_equiv, hours, count_pod);
+    }
+
+    pub fn by_user(&self) -> &BTreeMap<String, Usage> {
+        &self.by_user
+    }
+
+    pub fn by_project(&self) -> &BTreeMap<String, Usage> {
+        &self.by_project
+    }
+}
+
 /// The accounting report.
 #[derive(Debug, Default)]
 pub struct Report {
@@ -33,38 +135,33 @@ pub struct Report {
     pub by_project: BTreeMap<String, Usage>,
 }
 
-/// Compute usage from every pod that has run (or is running) up to `now`.
+/// Compute usage up to `now`: the store's persistent ledger (every interval
+/// that already reached a terminal transition, including pods the GC has
+/// since removed) plus live accrual for currently-running pods.
 pub fn account(store: &ClusterStore, now: Time) -> Report {
-    let mut report = Report::default();
+    let ledger = store.usage_ledger();
+    let mut report =
+        Report { by_user: ledger.by_user().clone(), by_project: ledger.by_project().clone() };
     for pod in store.pods() {
-        let Some(start) = pod.status.started_at else { continue };
-        let end = match pod.status.phase {
-            PodPhase::Running => now,
-            _ => pod.status.finished_at.unwrap_or(now),
-        };
-        let hours = ((end - start).max(0.0)) / 3600.0;
-        if hours == 0.0 {
+        // terminal pods are already in the ledger; pending/scheduled pods
+        // have not started
+        if pod.status.phase != PodPhase::Running {
             continue;
         }
+        let Some(start) = pod.status.started_at else { continue };
+        let hours = ((now - start).max(0.0)) / 3600.0;
         let cores = pod.spec.requests.get(CPU) as f64 / 1000.0;
         let gpus = pod.spec.requests.get(GPU) as f64;
-        let mut mig_equiv = 0.0;
-        for (k, v) in pod.spec.requests.iter() {
-            if let Some(rest) = k.strip_prefix("nvidia.com/mig-") {
-                if let Some(profile) = crate::gpu::MigProfile::parse(rest) {
-                    mig_equiv += v as f64 * profile.compute_slices as f64 / 7.0;
-                }
-            }
-        }
+        let node = pod.status.node.as_deref().and_then(|n| store.node(n));
+        let mig_equiv = mig_gpu_equivalents(&pod.spec.requests, node);
+        // a pod that was evicted mid-run was already counted at its first
+        // ledger accrual — only its current interval's hours are new
+        let count_pod = !pod.status.accounted;
         for (map, key) in [
-            (&mut report.by_user, pod.spec.user.clone()),
-            (&mut report.by_project, pod.spec.project.clone()),
+            (&mut report.by_user, pod.spec.user.as_str()),
+            (&mut report.by_project, pod.spec.project.as_str()),
         ] {
-            let u = map.entry(key).or_default();
-            u.cpu_core_hours += cores * hours;
-            u.gpu_hours += gpus * hours;
-            u.mig_gpu_equiv_hours += mig_equiv * hours;
-            u.pods += 1;
+            accrue_into(map, key, cores, gpus, mig_equiv, hours, count_pod);
         }
     }
     report
@@ -103,50 +200,118 @@ mod tests {
 
     fn store() -> ClusterStore {
         let mut s = ClusterStore::new();
-        let mut gpu = GpuDevice::whole("g0", GpuModel::A100_40GB);
-        gpu.repartition(MigLayout::max_sharing(GpuModel::A100_40GB).unwrap()).unwrap();
-        s.add_node(Node::physical("n1", 64, 256 << 30, 1 << 40, vec![gpu, GpuDevice::whole("g1", GpuModel::TeslaT4)]), 0.0);
+        let gpu = GpuDevice::partitioned(
+            "g0",
+            GpuModel::A100_40GB,
+            MigLayout::max_sharing(GpuModel::A100_40GB).unwrap(),
+        )
+        .unwrap();
+        let a30 = GpuDevice::partitioned(
+            "g1",
+            GpuModel::A30,
+            MigLayout::max_sharing(GpuModel::A30).unwrap(),
+        )
+        .unwrap();
+        s.add_node(
+            Node::physical(
+                "n1",
+                64,
+                256 << 30,
+                1 << 40,
+                vec![gpu, a30, GpuDevice::whole("g2", GpuModel::TeslaT4)],
+            ),
+            0.0,
+        );
         s
+    }
+
+    fn run_pod(s: &mut ClusterStore, name: &str, req: ResourceVec, user: &str, from: f64, to: f64) {
+        s.create_pod(
+            PodSpec::new(name, req, Payload::Sleep { duration: to - from })
+                .with_owner(user, "proj"),
+            from,
+        );
+        s.bind(name, "n1", from).unwrap();
+        s.mark_running(name, from).unwrap();
+        s.finish_pod(name, PodPhase::Succeeded, to, "done").unwrap();
     }
 
     #[test]
     fn accounts_cpu_and_whole_gpu_hours() {
         let mut s = store();
         let req = ResourceVec::cpu_millis(2000).with(GPU, 1);
-        s.create_pod(
-            PodSpec::new("p", req, Payload::Sleep { duration: 7200.0 }).with_owner("alice", "lhcb"),
-            0.0,
-        );
-        s.bind("p", "n1", 0.0).unwrap();
-        s.mark_running("p", 0.0).unwrap();
-        s.finish_pod("p", PodPhase::Succeeded, 7200.0, "done").unwrap();
+        run_pod(&mut s, "p", req, "alice", 0.0, 7200.0);
         let r = account(&s, 10_000.0);
         let u = &r.by_user["alice"];
         assert!((u.cpu_core_hours - 4.0).abs() < 1e-9);
         assert!((u.gpu_hours - 2.0).abs() < 1e-9);
-        assert_eq!(r.by_project["lhcb"].pods, 1);
+        assert_eq!(r.by_project["proj"].pods, 1);
     }
 
     #[test]
-    fn mig_slices_count_fractionally() {
+    fn mig_denominator_matches_hosting_device() {
         let mut s = store();
-        let req = ResourceVec::cpu_millis(1000).with("nvidia.com/mig-3g.20gb", 1);
-        // note: node advertises 1g slices; bind directly is fine for the test
+        // one hour on an A100 1g slice = 1/7 GPU-hour
+        let a100 = ResourceVec::cpu_millis(1000).with("nvidia.com/mig-1g.5gb", 1);
+        run_pod(&mut s, "pa100", a100, "bob", 0.0, 3600.0);
+        // one hour on an A30 1g slice = 1/4 GPU-hour (was 1/7 — the
+        // hardcoded-7 bug under-billed A30 slice-hours by ~43%)
+        let a30 = ResourceVec::cpu_millis(1000).with("nvidia.com/mig-1g.6gb", 1);
+        run_pod(&mut s, "pa30", a30, "carol", 0.0, 3600.0);
+        let r = account(&s, 3600.0);
+        assert!((r.by_user["bob"].mig_gpu_equiv_hours - 1.0 / 7.0).abs() < 1e-9);
+        assert!((r.by_user["carol"].mig_gpu_equiv_hours - 1.0 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profile_table_fallback_without_node() {
+        // unresolvable host: the profile name alone identifies the model
+        let a30 = ResourceVec::new().with("nvidia.com/mig-2g.12gb", 1);
+        assert!((mig_gpu_equivalents(&a30, None) - 2.0 / 4.0).abs() < 1e-9);
+        let a100 = ResourceVec::new().with("nvidia.com/mig-3g.20gb", 2);
+        assert!((mig_gpu_equivalents(&a100, None) - 2.0 * 3.0 / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gc_preserves_usage_in_ledger() {
+        let mut s = store();
+        run_pod(&mut s, "p", ResourceVec::cpu_millis(1000), "dave", 0.0, 3600.0);
+        assert_eq!(s.gc_finished(7200.0), 1);
+        assert!(s.pod("p").is_none(), "pod object gone");
+        let r = account(&s, 7200.0);
+        assert!((r.by_user["dave"].cpu_core_hours - 1.0).abs() < 1e-9);
+        assert_eq!(r.by_user["dave"].pods, 1);
+    }
+
+    #[test]
+    fn same_tick_pod_still_counted() {
+        let mut s = store();
+        // started and finished at the same instant: zero hours, one pod
+        run_pod(&mut s, "p", ResourceVec::cpu_millis(1000), "erin", 5.0, 5.0);
+        let r = account(&s, 5.0);
+        let u = &r.by_user["erin"];
+        assert_eq!(u.pods, 1, "zero-hour pods must still be counted");
+        assert!(u.cpu_core_hours.abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicted_and_rerun_pod_counted_once() {
+        let mut s = store();
         s.create_pod(
-            PodSpec::new("p", ResourceVec::cpu_millis(1000), Payload::Sleep { duration: 3600.0 })
-                .with_owner("bob", "cms"),
+            PodSpec::new("p", ResourceVec::cpu_millis(1000), Payload::Sleep { duration: 1e9 })
+                .with_owner("fred", "proj"),
             0.0,
         );
         s.bind("p", "n1", 0.0).unwrap();
         s.mark_running("p", 0.0).unwrap();
-        s.finish_pod("p", PodPhase::Succeeded, 3600.0, "x").unwrap();
-        // synthesize a mig pod via spec check only
-        let mut r = Report::default();
-        let u = r.by_user.entry("bob".into()).or_default();
-        let profile = crate::gpu::MigProfile::parse("3g.20gb").unwrap();
-        u.mig_gpu_equiv_hours += profile.compute_slices as f64 / 7.0;
-        assert!((u.total_gpu_hours() - 3.0 / 7.0).abs() < 1e-9);
-        let _ = req;
+        s.evict_pod("p", 1800.0, true, "preempted").unwrap();
+        s.bind("p", "n1", 3600.0).unwrap();
+        s.mark_running("p", 3600.0).unwrap();
+        s.finish_pod("p", PodPhase::Succeeded, 5400.0, "done").unwrap();
+        let r = account(&s, 9000.0);
+        let u = &r.by_user["fred"];
+        assert_eq!(u.pods, 1, "two run intervals, one pod");
+        assert!((u.cpu_core_hours - 1.0).abs() < 1e-9, "0.5h + 0.5h across intervals");
     }
 
     #[test]
@@ -161,14 +326,19 @@ mod tests {
         s.mark_running("p", 0.0).unwrap();
         let r = account(&s, 1800.0);
         assert!((r.by_user["carol"].cpu_core_hours - 0.5).abs() < 1e-9);
+        assert_eq!(r.by_user["carol"].pods, 1);
     }
 
     #[test]
     fn render_contains_top_user() {
         let mut s = store();
         s.create_pod(
-            PodSpec::new("p", ResourceVec::cpu_millis(1000).with(GPU, 1), Payload::Sleep { duration: 100.0 })
-                .with_owner("dave", "atlas"),
+            PodSpec::new(
+                "p",
+                ResourceVec::cpu_millis(1000).with(GPU, 1),
+                Payload::Sleep { duration: 100.0 },
+            )
+            .with_owner("dave", "atlas"),
             0.0,
         );
         s.bind("p", "n1", 0.0).unwrap();

@@ -1,0 +1,122 @@
+//! Decayed per-user GPU usage for fair-share admission ordering.
+//!
+//! The tracker keeps one exponentially-decayed GPU-hour counter per user
+//! (half-life = the `fairshare.half_life` config knob, in seconds): recent
+//! consumption weighs heavily, history fades. It is sourced from the
+//! cluster store's persistent accounting ledger — the platform observes
+//! each user's cumulative GPU-hours (whole-GPU plus MIG-slice
+//! equivalents) every tick and charges the delta — and its snapshot feeds
+//! Kueue admission as a tiebreak **within** a priority band: among equal
+//! priorities, the user who has consumed the least accelerator time
+//! recently goes first. Priorities still dominate (interactive always
+//! preempts batch); fair-share only reorders peers.
+//!
+//! Deliberate scope: in-flight consumption is charged when a run interval
+//! reaches a terminal transition (finish/evict/delete), not continuously —
+//! reading the ledger keeps the per-tick refresh O(users) instead of
+//! O(pods), and a long runner's usage lands in full the moment it ends.
+
+use std::collections::HashMap;
+
+use crate::sim::clock::Time;
+
+/// One user's decayed usage state.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    /// Decayed GPU-hours as of `last`.
+    usage: f64,
+    /// Time of the last decay fold.
+    last: Time,
+}
+
+/// The decayed per-user usage tracker.
+#[derive(Debug, Default)]
+pub struct FairShare {
+    /// Half-life in seconds; non-positive disables decay entirely.
+    half_life: f64,
+    entries: HashMap<String, Entry>,
+    /// Last cumulative ledger total observed per user (so repeated
+    /// observations charge only the delta).
+    observed: HashMap<String, f64>,
+}
+
+impl FairShare {
+    pub fn new(half_life: f64) -> FairShare {
+        FairShare { half_life, entries: HashMap::new(), observed: HashMap::new() }
+    }
+
+    fn decay_factor(&self, dt: Time) -> f64 {
+        if self.half_life <= 0.0 || dt <= 0.0 {
+            1.0
+        } else {
+            0.5f64.powf(dt / self.half_life)
+        }
+    }
+
+    /// Charge `gpu_hours` of fresh consumption to `user` at `now`.
+    pub fn charge(&mut self, user: &str, gpu_hours: f64, now: Time) {
+        if gpu_hours <= 0.0 {
+            return;
+        }
+        let decayed = self.usage(user, now);
+        self.entries.insert(user.to_string(), Entry { usage: decayed + gpu_hours, last: now });
+    }
+
+    /// Observe a user's *cumulative* GPU-hour total from the accounting
+    /// ledger; charges only the growth since the previous observation.
+    pub fn observe_total(&mut self, user: &str, total_gpu_hours: f64, now: Time) {
+        let seen = self.observed.get(user).copied().unwrap_or(0.0);
+        let delta = total_gpu_hours - seen;
+        if delta > 0.0 {
+            self.observed.insert(user.to_string(), total_gpu_hours);
+            self.charge(user, delta, now);
+        }
+    }
+
+    /// The user's decayed usage as of `now` (0 for unknown users).
+    pub fn usage(&self, user: &str, now: Time) -> f64 {
+        self.entries
+            .get(user)
+            .map(|e| e.usage * self.decay_factor(now - e.last))
+            .unwrap_or(0.0)
+    }
+
+    /// Snapshot of every tracked user's decayed usage at `now` — what the
+    /// platform hands Kueue before an admission pass.
+    pub fn snapshot(&self, now: Time) -> HashMap<String, f64> {
+        self.entries
+            .iter()
+            .map(|(u, e)| (u.clone(), e.usage * self.decay_factor(now - e.last)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate_and_decay() {
+        let mut f = FairShare::new(3600.0);
+        f.charge("alice", 2.0, 0.0);
+        assert!((f.usage("alice", 0.0) - 2.0).abs() < 1e-9);
+        // one half-life later: half remains
+        assert!((f.usage("alice", 3600.0) - 1.0).abs() < 1e-9);
+        // charging folds the decay in before adding
+        f.charge("alice", 1.0, 3600.0);
+        assert!((f.usage("alice", 3600.0) - 2.0).abs() < 1e-9);
+        assert_eq!(f.usage("nobody", 99.0), 0.0);
+    }
+
+    #[test]
+    fn observe_total_charges_only_deltas() {
+        let mut f = FairShare::new(0.0); // decay disabled
+        f.observe_total("bob", 3.0, 10.0);
+        f.observe_total("bob", 3.0, 20.0); // no growth → no charge
+        assert!((f.usage("bob", 20.0) - 3.0).abs() < 1e-9);
+        f.observe_total("bob", 5.0, 30.0);
+        assert!((f.usage("bob", 30.0) - 5.0).abs() < 1e-9);
+        let snap = f.snapshot(30.0);
+        assert!((snap["bob"] - 5.0).abs() < 1e-9);
+    }
+}

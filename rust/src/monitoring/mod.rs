@@ -1,11 +1,15 @@
 //! Monitoring & accounting (DESIGN.md S18–S20): Prometheus-like TSDB,
 //! the exporters the paper deploys (kube-eagle, DCGM, custom storage),
-//! per-user/project accounting, and Grafana-like ASCII dashboards.
+//! per-user/project accounting (ledger-based, GC-proof), the decayed
+//! fair-share usage tracker feeding Kueue admission ordering, and
+//! Grafana-like ASCII dashboards.
 
 pub mod accounting;
 pub mod dashboard;
 pub mod exporters;
+pub mod fairshare;
 pub mod tsdb;
 
-pub use accounting::{account, Report, Usage};
+pub use accounting::{account, Report, Usage, UsageLedger};
+pub use fairshare::FairShare;
 pub use tsdb::{SeriesKey, Tsdb};

@@ -51,6 +51,14 @@ pub struct PlatformConfig {
     /// `Compacted` error and must re-list (Kubernetes "410 Gone").
     /// Config key: `control_plane.compaction_window`.
     pub compaction_window: usize,
+    /// Minimum seconds between two repartitions of the same GPU device —
+    /// the partition reconciler's hysteresis knob. Config key:
+    /// `gpu.repartition_cooldown`.
+    pub repartition_cooldown: f64,
+    /// Half-life (seconds) of the decayed per-user GPU-usage counter that
+    /// tiebreaks Kueue admission within a priority band. Non-positive
+    /// disables decay. Config key: `fairshare.half_life`.
+    pub fairshare_half_life: f64,
 }
 
 impl PlatformConfig {
@@ -145,6 +153,14 @@ impl PlatformConfig {
                 .and_then(Json::as_i64)
                 .map(|w| (w.max(1)) as usize)
                 .unwrap_or(crate::util::ring::DEFAULT_RING_CAPACITY),
+            repartition_cooldown: j
+                .at(&["gpu", "repartition_cooldown"])
+                .and_then(Json::as_f64)
+                .unwrap_or(300.0),
+            fairshare_half_life: j
+                .at(&["fairshare", "half_life"])
+                .and_then(Json::as_f64)
+                .unwrap_or(86_400.0),
         })
     }
 
@@ -237,6 +253,27 @@ mod tests {
         assert_eq!(s2.allocatable.get("xilinx.com/fpga-u50"), 2);
         let s1 = nodes.iter().find(|n| n.name == "cnaf-ai01").unwrap();
         assert_eq!(s1.allocatable.get("nvidia.com/gpu"), 13);
+    }
+
+    #[test]
+    fn gpu_and_fairshare_knobs_parse_with_defaults() {
+        let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+        assert_eq!(cfg.repartition_cooldown, 300.0);
+        assert_eq!(cfg.fairshare_half_life, 86_400.0);
+        // both sections are optional
+        let minimal = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(minimal.repartition_cooldown, 300.0);
+        assert_eq!(minimal.fairshare_half_life, 86_400.0);
+        let tuned = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}],
+                "gpu":{"repartition_cooldown":60},"fairshare":{"half_life":7200}}"#,
+        )
+        .unwrap();
+        assert_eq!(tuned.repartition_cooldown, 60.0);
+        assert_eq!(tuned.fairshare_half_life, 7200.0);
     }
 
     #[test]

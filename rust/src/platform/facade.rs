@@ -6,7 +6,8 @@
 //! ([`crate::platform::reconcile`]): per-concern controllers (garbage
 //! collection, Kueue admission, placement + launch, Virtual-Kubelet status
 //! sync, site health/circuit breaking, job retry/finish, idle-session
-//! culling, monitoring scrapes) each converge keys derived from the watch
+//! culling, monitoring scrapes, demand-driven GPU repartitioning) each
+//! converge keys derived from the watch
 //! deltas — the store event log, the Kueue transition log, and the API
 //! server's deletion intents — instead of one monolithic full-state pass. `run_for()` interleaves ticks with the
 //! event engine so multi-day campaigns run in milliseconds while remaining
@@ -33,6 +34,7 @@ use crate::hub::auth::AuthService;
 use crate::hub::profiles::Profile;
 use crate::hub::spawner::{SpawnCtx, SpawnError, Spawner};
 use crate::hub::users::Registry;
+use crate::monitoring::fairshare::FairShare;
 use crate::monitoring::tsdb::Tsdb;
 use crate::offload::health::{HealthStatus, HealthTracker};
 use crate::offload::sites::paper_federation;
@@ -137,6 +139,8 @@ pub struct PlatformMetrics {
     pub breaker_trips: u64,
     /// Workloads that exhausted their restart budget and failed terminally.
     pub terminal_failures: u64,
+    /// MIG layouts applied by the demand-driven partition reconciler.
+    pub repartitions: u64,
 }
 
 /// The assembled platform.
@@ -175,6 +179,9 @@ pub struct Platform {
     /// Accelerator units removed by GPU-degradation faults, keyed by
     /// (node, resource) — recovery restores exactly what was taken.
     degraded: HashMap<(String, String), i64>,
+    /// Decayed per-user GPU usage (fed from the store's accounting ledger;
+    /// its snapshot tiebreaks Kueue admission within priority bands).
+    fairshare: FairShare,
     /// The reconciler runtime the tick dispatches to. `Option` only so the
     /// tick can temporarily take it while handing `&mut self` to the
     /// controllers; it is always `Some` between ticks.
@@ -282,6 +289,7 @@ impl Platform {
         store.borrow_mut().set_event_capacity(config.compaction_window);
         kueue.set_transition_capacity(config.compaction_window);
         health.set_transition_capacity(config.compaction_window);
+        let config_fairshare_half_life = config.fairshare_half_life;
         Ok(Platform {
             engine,
             store,
@@ -304,6 +312,7 @@ impl Platform {
             health,
             chaos: None,
             degraded: HashMap::new(),
+            fairshare: FairShare::new(config_fairshare_half_life),
             runtime: Some(Runtime::standard()),
             deletions: VecDeque::new(),
         })
@@ -396,7 +405,7 @@ impl Platform {
         let at = self.engine.now();
         let name = self.ids.next("job");
         let wl = format!("wl-{name}");
-        self.kueue.submit(&wl, &s.queue, s.priority, s.requests.clone(), at)?;
+        self.kueue.submit_for_user(&wl, &s.queue, &s.user, s.priority, s.requests.clone(), at)?;
         let mut template = PodSpec::new(name.clone(), s.requests, Payload::Sleep {
             duration: s.duration,
         })
@@ -462,6 +471,95 @@ impl Platform {
             job.template.labels.insert("aiinfn/workload".to_string(), wlname);
         }
         Ok(())
+    }
+
+    // ------------------------------------------------- gpu repartitioning
+
+    /// Apply a new MIG layout to one device through the guarded store path
+    /// and rebalance the cluster-queue quotas by the advertisement delta
+    /// (split between the interactive and batch queues with the same
+    /// `interactive_share` the bootstrap used). Refused while the device's
+    /// capacity is bound or while the node carries chaos-degraded
+    /// accelerator units (a repartition would resurrect them).
+    pub(crate) fn repartition_device(
+        &mut self,
+        node: &str,
+        device_id: &str,
+        layout: crate::gpu::MigLayout,
+    ) -> anyhow::Result<()> {
+        let now = self.engine.now();
+        anyhow::ensure!(
+            !self.degraded.keys().any(|(n, _)| n == node),
+            "node {node} has degraded accelerators; repartition deferred"
+        );
+        let (removed, added) =
+            self.store.borrow_mut().repartition_gpu(node, device_id, layout, now)?;
+        // quota follows capacity: split each delta with the bootstrap share
+        let share = self.config.interactive_share;
+        let split = |delta: &ResourceVec| {
+            let mut interactive = ResourceVec::new();
+            let mut batch = ResourceVec::new();
+            for (k, v) in delta.iter() {
+                let i = (v as f64 * share).round() as i64;
+                interactive.set(k, i.clamp(0, v));
+                batch.set(k, v - i.clamp(0, v));
+            }
+            (interactive, batch)
+        };
+        let (int_add, batch_add) = split(&added);
+        // removals mirror the addition split, but a queue whose nominal
+        // cannot cover its share overflows the shortfall to its peer —
+        // per-delta rounding must not strand nominal quota above the
+        // advertised capacity (admitting workloads that can never place)
+        let int_nom =
+            self.kueue.cluster_queue("interactive-cq").map(|c| c.nominal.clone()).unwrap_or_default();
+        let batch_nom =
+            self.kueue.cluster_queue("batch-cq").map(|c| c.nominal.clone()).unwrap_or_default();
+        let mut int_rem = ResourceVec::new();
+        let mut batch_rem = ResourceVec::new();
+        for (k, v) in removed.iter() {
+            let want_int = ((v as f64 * share).round() as i64).clamp(0, v);
+            let take_int = want_int.min(int_nom.get(k));
+            let take_batch = (v - take_int).min(batch_nom.get(k));
+            let leftover = v - take_int - take_batch;
+            int_rem.set(k, (take_int + leftover).min(int_nom.get(k)));
+            batch_rem.set(k, take_batch);
+        }
+        self.kueue.adjust_nominal("interactive-cq", &int_add, &int_rem).ok();
+        self.kueue.adjust_nominal("batch-cq", &batch_add, &batch_rem).ok();
+        self.metrics.repartitions += 1;
+        Ok(())
+    }
+
+    /// Accelerator units currently removed from a node's allocatable by
+    /// chaos GPU-degradation faults (0 when healthy).
+    pub fn degraded_units(&self, node: &str, resource: &str) -> i64 {
+        self.degraded.get(&(node.to_string(), resource.to_string())).copied().unwrap_or(0)
+    }
+
+    // --------------------------------------------------------- fair share
+
+    /// Fold the accounting ledger's cumulative per-user GPU-hours into the
+    /// decayed fair-share tracker and install the snapshot in Kueue —
+    /// called by the queue controller before each admission pass.
+    pub(crate) fn refresh_fair_share(&mut self, now: Time) {
+        let totals: Vec<(String, f64)> = {
+            let st = self.store.borrow();
+            st.usage_ledger()
+                .by_user()
+                .iter()
+                .map(|(u, usage)| (u.clone(), usage.total_gpu_hours()))
+                .collect()
+        };
+        for (user, total) in totals {
+            self.fairshare.observe_total(&user, total, now);
+        }
+        self.kueue.set_fair_share(self.fairshare.snapshot(now));
+    }
+
+    /// A user's decayed fair-share GPU usage as of now (dashboards/tests).
+    pub fn fair_share_usage(&self, user: &str) -> f64 {
+        self.fairshare.usage(user, self.engine.now())
     }
 
     // ------------------------------------------------------------- chaos

@@ -1,0 +1,245 @@
+//! The GPU partition controller: demand-driven MIG repartitioning.
+//!
+//! The paper's headline sharing claim ("one A100 serves up to seven
+//! users") needs more than slice geometry — something must *react* when
+//! queued demand and the advertised partition disagree. Every tick this
+//! controller:
+//!
+//! 1. sums the accelerator demand that cannot currently run — queued (or
+//!    backoff-expired-evicted) Kueue workloads plus pending pods — over
+//!    every `nvidia.com/…` resource;
+//! 2. subtracts the supply already free on ready physical nodes;
+//! 3. for each **idle** MIG-capable device (its full advertisement is
+//!    sitting free, so the store's bound-slices guard will accept a swap)
+//!    whose `gpu.repartition_cooldown` has expired, scores every valid
+//!    layout — [`enumerate_layouts`] plus MIG-off — by how many
+//!    compute-slice-weighted units of the *unmet* demand it would unlock,
+//!    and
+//! 4. applies the best layout through the guarded
+//!    [`Platform::repartition_device`] path when it is a **strict**
+//!    improvement over the current one (the hysteresis that keeps an
+//!    already-right partition alone), updating the running supply so one
+//!    pass converges across devices.
+//!
+//! Repartitions surface as `MigRepartitioned` store events → `GpuDevice`
+//! `Modified` watch events, plus a `NodeModified` that wakes the placement
+//! pass; quota rebalancing (so Kueue can actually admit the unlocked
+//! demand) happens inside `repartition_device`. The whole loop is
+//! deterministic: nodes iterate in name order, devices in slot order,
+//! candidate layouts in `enumerate_layouts`' sorted order with
+//! first-strict-max selection.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cluster::pod::PodPhase;
+use crate::cluster::resources::{ResourceVec, GPU};
+use crate::gpu::mig::{enumerate_layouts, slice_capacity, MigLayout, MigProfile};
+use crate::gpu::GpuModel;
+use crate::platform::facade::Platform;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+use crate::queue::kueue::WorkloadState;
+use crate::sim::clock::Time;
+
+/// Demand/supply weight of one unit of an accelerator resource, in compute
+/// slices: a `mig-3g.20gb` counts 3, a whole GPU counts the model's full
+/// slice capacity (so unlocking one 7-slice user and seven 1-slice users
+/// score the same).
+fn slice_weight(resource: &str, model: GpuModel) -> i64 {
+    if resource == GPU {
+        return i64::from(model.mig_compute_slices().max(1));
+    }
+    resource
+        .strip_prefix("nvidia.com/mig-")
+        .and_then(MigProfile::parse)
+        .map(|p| i64::from(p.compute_slices))
+        .unwrap_or(1)
+}
+
+/// How much of `demand` an advertisement unlocks, compute-slice weighted.
+fn unlock_score(adv: &ResourceVec, demand: &BTreeMap<String, i64>, model: GpuModel) -> i64 {
+    adv.iter()
+        .map(|(k, v)| v.min(demand.get(k).copied().unwrap_or(0)) * slice_weight(k, model))
+        .sum()
+}
+
+/// One repartitionable device, snapshotted under the store borrow.
+struct DeviceState {
+    node: String,
+    id: String,
+    model: GpuModel,
+    /// Current extended-resource advertisement.
+    adv: ResourceVec,
+    /// Every advertised unit is free — the guard would accept a swap.
+    idle: bool,
+}
+
+pub struct GpuPartitionController {
+    /// Per-device time of the last applied repartition (hysteresis).
+    last_repartition: HashMap<String, Time>,
+}
+
+impl GpuPartitionController {
+    pub fn new() -> GpuPartitionController {
+        GpuPartitionController { last_repartition: HashMap::new() }
+    }
+
+    /// Accelerator demand that cannot run right now: queued /
+    /// backoff-expired workloads plus pending pods, per resource.
+    fn pending_demand(p: &Platform, now: Time) -> BTreeMap<String, i64> {
+        let mut demand: BTreeMap<String, i64> = BTreeMap::new();
+        for w in p.kueue.workloads() {
+            let waiting = match &w.state {
+                WorkloadState::Queued => true,
+                WorkloadState::EvictedPendingRequeue { until } => *until <= now,
+                _ => false,
+            };
+            if !waiting {
+                continue;
+            }
+            for (k, v) in w.requests.iter() {
+                if k.starts_with("nvidia.com/") {
+                    *demand.entry(k.to_string()).or_insert(0) += v;
+                }
+            }
+        }
+        let st = p.store.borrow();
+        for pod in st.pods() {
+            if pod.status.phase != PodPhase::Pending {
+                continue;
+            }
+            for (k, v) in pod.spec.requests.iter() {
+                if k.starts_with("nvidia.com/") {
+                    *demand.entry(k.to_string()).or_insert(0) += v;
+                }
+            }
+        }
+        demand
+    }
+
+    /// One partition pass. `raw_demand` is non-empty.
+    fn pass(&mut self, p: &mut Platform, now: Time, raw_demand: BTreeMap<String, i64>) {
+        // snapshot supply (free accelerator units on ready physical nodes)
+        // and the repartitionable devices, in deterministic order
+        let mut supply: BTreeMap<String, i64> = BTreeMap::new();
+        let devices: Vec<DeviceState> = {
+            let st = p.store.borrow();
+            let mut devices = Vec::new();
+            for node in st.nodes() {
+                if node.virtual_node || !node.ready {
+                    continue;
+                }
+                let free = st.free_on(&node.name).cloned().unwrap_or_default();
+                for (k, v) in free.iter() {
+                    if k.starts_with("nvidia.com/") && v > 0 {
+                        *supply.entry(k.to_string()).or_insert(0) += v;
+                    }
+                }
+                for dev in &node.gpus {
+                    if dev.model.is_fpga() || slice_capacity(dev.model).0 == 0 {
+                        continue;
+                    }
+                    let adv = dev.extended_resources();
+                    let idle = adv.iter().all(|(k, v)| free.get(k) >= v);
+                    devices.push(DeviceState {
+                        node: node.name.clone(),
+                        id: dev.id.clone(),
+                        model: dev.model,
+                        adv,
+                        idle,
+                    });
+                }
+            }
+            devices
+        };
+
+        let cooldown = p.config.repartition_cooldown;
+        for dev in devices {
+            if !dev.idle {
+                continue;
+            }
+            if let Some(last) = self.last_repartition.get(&dev.id) {
+                if now - last < cooldown {
+                    continue;
+                }
+            }
+            // demand this device alone must answer: total pending demand
+            // minus the supply every *other* free unit provides
+            let mut excl = supply.clone();
+            for (k, v) in dev.adv.iter() {
+                if let Some(s) = excl.get_mut(k) {
+                    *s = (*s - v).max(0);
+                }
+            }
+            let mut local: BTreeMap<String, i64> = BTreeMap::new();
+            for (k, v) in &raw_demand {
+                let unmet = v - excl.get(k).copied().unwrap_or(0);
+                if unmet > 0 {
+                    local.insert(k.clone(), unmet);
+                }
+            }
+            let current_score = unlock_score(&dev.adv, &local, dev.model);
+            let mut candidates = vec![MigLayout::new(dev.model, vec![]).expect("MIG-off valid")];
+            candidates.extend(enumerate_layouts(dev.model));
+            let mut best: Option<(i64, MigLayout, ResourceVec)> = None;
+            for cand in candidates {
+                let adv = cand.extended_resources();
+                let score = unlock_score(&adv, &local, dev.model);
+                // strict > : first max wins, and staying put wins ties —
+                // the hysteresis that stops layout flapping
+                if score > current_score && best.as_ref().map(|(s, _, _)| score > *s).unwrap_or(true)
+                {
+                    best = Some((score, cand, adv));
+                }
+            }
+            let Some((_, layout, new_adv)) = best else { continue };
+            match p.repartition_device(&dev.node, &dev.id, layout) {
+                Ok(()) => {
+                    self.last_repartition.insert(dev.id.clone(), now);
+                    // update running supply: the device's old advertisement
+                    // is gone, the new one is fully free
+                    for (k, v) in dev.adv.iter() {
+                        if let Some(s) = supply.get_mut(k) {
+                            *s = (*s - v).max(0);
+                        }
+                    }
+                    for (k, v) in new_adv.iter() {
+                        *supply.entry(k.to_string()).or_insert(0) += v;
+                    }
+                }
+                Err(e) => {
+                    // raced a binding or a degradation fault; converge on a
+                    // later tick
+                    log::debug!("repartition {} on {} skipped: {e}", dev.id, dev.node);
+                }
+            }
+        }
+    }
+}
+
+impl Default for GpuPartitionController {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Reconciler for GpuPartitionController {
+    fn name(&self) -> &'static str {
+        "gpu-partition"
+    }
+
+    fn interested(&self, _key: &Key) -> bool {
+        false // purely periodic: demand is re-read every tick
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        if *key != Key::Sync {
+            return Ok(Requeue::Done);
+        }
+        let now = ctx.now;
+        let demand = Self::pending_demand(ctx.platform, now);
+        if !demand.is_empty() {
+            self.pass(ctx.platform, now, demand);
+        }
+        Ok(Requeue::After(0.0))
+    }
+}

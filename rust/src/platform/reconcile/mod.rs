@@ -40,8 +40,10 @@
 //! | job lifecycle | [`lifecycle`] | terminal pod events (retry/finish) |
 //! | session lifecycle | [`session`] | periodic idle culling |
 //! | monitoring | [`monitoring`] | scrape timer |
+//! | gpu partition | [`gpu`] | periodic queued-accelerator-demand scan |
 
 pub mod gc;
+pub mod gpu;
 pub mod health;
 pub mod lifecycle;
 pub mod monitoring;
@@ -133,6 +135,7 @@ impl Runtime {
             Box::new(lifecycle::JobLifecycleController),
             Box::new(session::SessionController),
             Box::new(monitoring::MonitoringController::new()),
+            Box::new(gpu::GpuPartitionController::new()),
         ];
         let n = controllers.len();
         let mut rt = Runtime {

@@ -1,7 +1,8 @@
 //! The queue-admission controller: Kueue admission passes plus the
 //! workload-keyed reconcile that realizes (or tears down) batch pods.
 //!
-//! * `Sync` (every tick — eviction backoffs expire with time): one Kueue
+//! * `Sync` (every tick — eviction backoffs expire with time): refresh the
+//!   fair-share usage snapshot from the accounting ledger, then one Kueue
 //!   admission pass. Its transitions land in the workload log and come
 //!   back as keys in the same dispatch.
 //! * `Workload(name)` (from the Kueue transition log, which also captures
@@ -32,6 +33,9 @@ impl Reconciler for QueueController {
         let now = ctx.now;
         match key {
             Key::Sync => {
+                // usage-based fair-share: lowest recent GPU consumption
+                // goes first within a priority band
+                p.refresh_fair_share(now);
                 p.kueue.admit_pass(now);
                 Ok(Requeue::After(0.0))
             }

@@ -63,6 +63,9 @@ pub struct Workload {
     /// Which ClusterQueue's quota the admission drew from (for borrowing
     /// accounting: may differ from the owning queue).
     pub charged_to: Option<String>,
+    /// Owning user — the fair-share tiebreak key (empty when unattributed:
+    /// such workloads share one zero-usage bucket and keep plain FIFO).
+    pub user: String,
 }
 
 /// Nominal quota holder.
@@ -114,6 +117,9 @@ pub struct Kueue {
     transitions: RingLog<WorkloadTransition>,
     /// Requeue backoff base (doubles per eviction).
     pub backoff_base: Time,
+    /// Decayed per-user GPU usage snapshot (set by the platform before
+    /// each admission pass); the fair-share tiebreak within priority bands.
+    fair_share: HashMap<String, f64>,
 }
 
 impl Default for Kueue {
@@ -127,6 +133,7 @@ impl Default for Kueue {
             // `control_plane.compaction_window` knob over it
             transitions: RingLog::default(),
             backoff_base: 0.0,
+            fair_share: HashMap::new(),
         }
     }
 }
@@ -216,11 +223,25 @@ impl Kueue {
         });
     }
 
-    /// Submit a workload to a LocalQueue.
+    /// Submit a workload to a LocalQueue (unattributed: no fair-share user).
     pub fn submit(
         &mut self,
         name: impl Into<String>,
         queue: &str,
+        priority: PriorityClass,
+        requests: ResourceVec,
+        at: Time,
+    ) -> anyhow::Result<String> {
+        self.submit_for_user(name, queue, "", priority, requests, at)
+    }
+
+    /// Submit a workload attributed to `user` — the key the fair-share
+    /// tiebreak orders by within a priority band.
+    pub fn submit_for_user(
+        &mut self,
+        name: impl Into<String>,
+        queue: &str,
+        user: &str,
         priority: PriorityClass,
         requests: ResourceVec,
         at: Time,
@@ -240,11 +261,40 @@ impl Kueue {
                 admitted_at: None,
                 evictions: 0,
                 charged_to: None,
+                user: user.to_string(),
             },
         );
         self.order.push(name.clone());
         self.log_transition(at, &name, WorkloadState::Queued);
         Ok(name)
+    }
+
+    /// Install the decayed per-user usage snapshot consulted by the next
+    /// admission pass (users absent from the map count as zero usage).
+    pub fn set_fair_share(&mut self, usage: HashMap<String, f64>) {
+        self.fair_share = usage;
+    }
+
+    /// Rebalance a ClusterQueue's nominal quota after a MIG repartition:
+    /// `add` the newly advertised extended resources, `remove` the old
+    /// advertisement (clamped at zero — rounding of the share split means
+    /// removals may not match what was originally granted).
+    pub fn adjust_nominal(
+        &mut self,
+        queue: &str,
+        add: &ResourceVec,
+        remove: &ResourceVec,
+    ) -> anyhow::Result<()> {
+        let cq = self
+            .cluster_queues
+            .get_mut(queue)
+            .ok_or_else(|| anyhow::anyhow!("unknown cluster queue {queue}"))?;
+        cq.nominal.add(add);
+        for (k, v) in remove.iter() {
+            let cur = cq.nominal.get(k);
+            cq.nominal.set(k, (cur - v).max(0));
+        }
+        Ok(())
     }
 
     /// Cohort-wide free quota available to `cq` (own free + lendable free of
@@ -359,15 +409,18 @@ impl Kueue {
         }
     }
 
-    /// One admission pass: admit every queued workload whose quota fits
-    /// (priority order, then FIFO). If a high-priority workload does not fit,
-    /// evict admitted lower-priority workloads (smallest sufficient set,
-    /// newest first) — the paper's interactive-over-batch policy.
+    /// One admission pass: admit every queued workload whose quota fits —
+    /// priority order, then the fair-share tiebreak (lowest decayed GPU
+    /// usage first, from the snapshot installed via
+    /// [`set_fair_share`](Self::set_fair_share)), then FIFO. If a
+    /// high-priority workload does not fit, evict admitted lower-priority
+    /// workloads (smallest sufficient set, newest first) — the paper's
+    /// interactive-over-batch policy.
     pub fn admit_pass(&mut self, at: Time) -> AdmissionResult {
         let mut result = AdmissionResult::default();
 
         // candidates: Queued or requeue-expired evicted
-        let mut candidates: Vec<(i32, usize, String)> = Vec::new();
+        let mut candidates: Vec<(i32, f64, usize, String)> = Vec::new();
         for (idx, name) in self.order.iter().enumerate() {
             let w = &self.workloads[name];
             let ready = match &w.state {
@@ -376,12 +429,17 @@ impl Kueue {
                 _ => false,
             };
             if ready {
-                candidates.push((w.priority.value(), idx, name.clone()));
+                let usage = self.fair_share.get(&w.user).copied().unwrap_or(0.0);
+                candidates.push((w.priority.value(), usage, idx, name.clone()));
             }
         }
-        candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        candidates.sort_by(|a, b| {
+            b.0.cmp(&a.0)
+                .then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.2.cmp(&b.2))
+        });
 
-        for (_, _, name) in candidates {
+        for (_, _, _, name) in candidates {
             let (queue, priority, req) = {
                 let w = &self.workloads[&name];
                 (w.queue.clone(), w.priority, w.requests.clone())
@@ -708,6 +766,48 @@ mod tests {
         }
         // requeueing a non-admitted workload is an error
         assert!(k.requeue("w1", 60.0).is_err());
+    }
+
+    #[test]
+    fn fair_share_breaks_ties_within_priority_band() {
+        let mut k = kueue();
+        // one GPU of quota headroom at a time: admission order matters
+        k.submit_for_user("heavy", "batch", "alice", PriorityClass::Batch, rv(1000, 6), 0.0)
+            .unwrap();
+        k.submit_for_user("light", "batch", "bob", PriorityClass::Batch, rv(1000, 6), 1.0)
+            .unwrap();
+        // alice has burned GPU-hours recently, bob has not: bob goes first
+        // despite arriving later
+        let mut usage = std::collections::HashMap::new();
+        usage.insert("alice".to_string(), 12.0);
+        usage.insert("bob".to_string(), 0.5);
+        k.set_fair_share(usage);
+        let r = k.admit_pass(2.0);
+        assert_eq!(r.admitted, vec!["light".to_string()]);
+        // priority still dominates usage: an interactive session from the
+        // heaviest user beats every batch peer
+        k.submit_for_user("sess", "hub", "alice", PriorityClass::Interactive, rv(1000, 1), 3.0)
+            .unwrap();
+        let r2 = k.admit_pass(3.0);
+        assert!(r2.admitted.contains(&"sess".to_string()));
+        // unattributed workloads (empty user) keep plain FIFO among
+        // themselves
+        let mut k2 = kueue();
+        k2.submit("w1", "batch", PriorityClass::Batch, rv(1000, 0), 0.0).unwrap();
+        k2.submit("w2", "batch", PriorityClass::Batch, rv(1000, 0), 1.0).unwrap();
+        assert_eq!(k2.admit_pass(2.0).admitted, vec!["w1".to_string(), "w2".to_string()]);
+    }
+
+    #[test]
+    fn adjust_nominal_adds_removes_and_clamps() {
+        let mut k = kueue();
+        let add = ResourceVec::new().with("nvidia.com/mig-1g.5gb", 7);
+        let remove = ResourceVec::new().with(GPU, 3); // more than nominal: clamps
+        k.adjust_nominal("batch-cq", &add, &remove).unwrap();
+        let cq = k.cluster_queue("batch-cq").unwrap();
+        assert_eq!(cq.nominal.get("nvidia.com/mig-1g.5gb"), 7);
+        assert_eq!(cq.nominal.get(GPU), 0);
+        assert!(k.adjust_nominal("ghost", &add, &remove).is_err());
     }
 
     #[test]

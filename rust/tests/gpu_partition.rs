@@ -1,0 +1,349 @@
+//! GPU partition-loop suite: the demand-driven MIG repartition reconciler
+//! (cold whole-GPU cluster → 7 users per A100 with no admin), the
+//! repartition-while-bound guard, usage-ledger accounting across the GC
+//! cascade, A30 vs A100 slice-hour parity, fair-share plumbing, and the
+//! chaos-sweep invariant that node extended resources always equal the sum
+//! of the device layouts.
+
+mod common;
+
+use aiinfn::api::{ApiObject, BatchJobResource, ResourceKind, Selector};
+use aiinfn::cluster::node::Node;
+use aiinfn::cluster::pod::{Payload, PodPhase, PodSpec};
+use aiinfn::cluster::resources::{ResourceVec, GPU, MEMORY};
+use aiinfn::cluster::store::ClusterStore;
+use aiinfn::gpu::{GpuDevice, GpuModel, MigLayout};
+use aiinfn::monitoring::account;
+use aiinfn::platform::PlatformConfig;
+use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::sim::chaos::ChaosPlan;
+
+/// One server, one cold (whole) A100, federation off, fast cooldown.
+const COLD_A100: &str = r#"{
+  "name": "cold-a100",
+  "servers": [
+    {"name": "gpu-a", "year": 2023, "cpu_cores": 64, "memory_gb": 512, "nvme_tb": 4,
+     "gpus": ["A100"]}
+  ],
+  "federation": {"enabled": false},
+  "gpu": {"repartition_cooldown": 60}
+}"#;
+
+/// Acceptance: starting from a whole (unpartitioned) A100, queued
+/// single-slice demand alone drives the reconciler to the 7×1g.5gb layout
+/// and seven users run concurrently — the paper's sharing claim end to
+/// end, with zero admin input.
+#[test]
+fn reconciler_unlocks_seven_users_per_a100_from_cold() {
+    let cfg = PlatformConfig::parse(COLD_A100).unwrap();
+    let mut api = aiinfn::api::ApiServer::bootstrap(cfg).unwrap();
+    let token = api.login("user001").unwrap();
+    let rv0 = api.last_rv();
+
+    // cold: the device advertises one whole GPU
+    let cold = api.list(&token, ResourceKind::GpuDevice, &Selector::all()).unwrap();
+    assert_eq!(cold.len(), 1);
+    assert!(cold[0].as_gpu_device().unwrap().instances.is_empty(), "MIG off at boot");
+
+    for i in 0..7 {
+        let user = format!("user{:03}", i + 1);
+        let t = api.login(&user).unwrap();
+        api.create(
+            &t,
+            &ApiObject::BatchJob(BatchJobResource::request(
+                &user,
+                "project01",
+                ResourceVec::cpu_millis(2000)
+                    .with(MEMORY, 8 << 30)
+                    .with("nvidia.com/mig-1g.5gb", 1),
+                3600.0,
+                PriorityClass::Batch,
+                false,
+            )),
+        )
+        .unwrap();
+    }
+    api.run_for(300.0, 10.0);
+
+    // the reconciler repartitioned the device to max sharing…
+    let hot = api.list(&token, ResourceKind::GpuDevice, &Selector::all()).unwrap();
+    let dev = hot[0].as_gpu_device().unwrap();
+    assert_eq!(dev.max_users, 7, "{dev:?}");
+    assert!(dev.instances.iter().all(|i| i == "1g.5gb"));
+    assert_eq!(api.platform().metrics().repartitions, 1);
+    // …the swap is visible on the GpuDevice watch stream…
+    let modified = api
+        .watch(&token, ResourceKind::GpuDevice, rv0)
+        .unwrap()
+        .iter()
+        .filter(|e| e.event == aiinfn::api::EventType::Modified)
+        .count();
+    assert!(modified >= 1, "repartition must emit a GpuDevice Modified event");
+    // …and all seven users run concurrently on the one physical GPU
+    let running = {
+        let st = api.platform().cluster();
+        st.pods()
+            .filter(|p| {
+                p.status.phase == PodPhase::Running
+                    && p.spec.requests.get("nvidia.com/mig-1g.5gb") > 0
+            })
+            .count()
+    };
+    assert_eq!(running, 7, "seven simultaneous single-slice users per A100");
+    // label-indexed list by hosting node finds it too
+    let by_node = api
+        .list(&token, ResourceKind::GpuDevice, &Selector::labels("aiinfn/node=gpu-a").unwrap())
+        .unwrap();
+    assert_eq!(by_node.len(), 1);
+}
+
+/// The guard: a layout swap that would remove capacity still bound by live
+/// pods is refused; the same swap succeeds once the slices are free.
+#[test]
+fn repartition_while_busy_is_rejected() {
+    let mut s = ClusterStore::new();
+    let dev = GpuDevice::partitioned(
+        "g0",
+        GpuModel::A100_40GB,
+        MigLayout::max_sharing(GpuModel::A100_40GB).unwrap(),
+    )
+    .unwrap();
+    s.add_node(Node::physical("n1", 32, 128 << 30, 1 << 40, vec![dev]), 0.0);
+    s.create_pod(
+        PodSpec::new(
+            "user-pod",
+            ResourceVec::cpu_millis(500).with("nvidia.com/mig-1g.5gb", 1),
+            Payload::Sleep { duration: 50.0 },
+        ),
+        0.0,
+    );
+    s.bind("user-pod", "n1", 0.0).unwrap();
+    let whole = MigLayout::new(GpuModel::A100_40GB, vec![]).unwrap();
+    let err = s.repartition_gpu("n1", "g0", whole.clone(), 1.0).unwrap_err();
+    assert!(err.to_string().contains("still bound"), "{err}");
+    assert_eq!(
+        s.node("n1").unwrap().allocatable.get("nvidia.com/mig-1g.5gb"),
+        7,
+        "refused swap must leave the advertisement untouched"
+    );
+    // once the slice is released, the identical swap goes through
+    s.finish_pod("user-pod", PodPhase::Succeeded, 2.0, "done").unwrap();
+    s.repartition_gpu("n1", "g0", whole, 3.0).unwrap();
+    assert_eq!(s.node("n1").unwrap().allocatable.get(GPU), 1);
+    s.check_free_index();
+}
+
+/// A30 slice-hours divide by 4, A100 slice-hours by 7 — the hardcoded-7
+/// denominator under-billed A30 usage by ~43%.
+#[test]
+fn a30_vs_a100_accounting_parity() {
+    let mut s = ClusterStore::new();
+    let a100 = GpuDevice::partitioned(
+        "a100-0",
+        GpuModel::A100_40GB,
+        MigLayout::max_sharing(GpuModel::A100_40GB).unwrap(),
+    )
+    .unwrap();
+    let a30 = GpuDevice::partitioned(
+        "a30-0",
+        GpuModel::A30,
+        MigLayout::max_sharing(GpuModel::A30).unwrap(),
+    )
+    .unwrap();
+    s.add_node(Node::physical("n1", 64, 256 << 30, 1 << 40, vec![a100, a30]), 0.0);
+    for (name, user, res) in [
+        ("p-a100", "alice", "nvidia.com/mig-1g.5gb"),
+        ("p-a30", "bob", "nvidia.com/mig-1g.6gb"),
+    ] {
+        s.create_pod(
+            PodSpec::new(name, ResourceVec::cpu_millis(1000).with(res, 1), Payload::Sleep {
+                duration: 3600.0,
+            })
+            .with_owner(user, "proj"),
+            0.0,
+        );
+        s.bind(name, "n1", 0.0).unwrap();
+        s.mark_running(name, 0.0).unwrap();
+        s.finish_pod(name, PodPhase::Succeeded, 3600.0, "done").unwrap();
+    }
+    let r = account(&s, 3600.0);
+    let a100_hours = r.by_user["alice"].mig_gpu_equiv_hours;
+    let a30_hours = r.by_user["bob"].mig_gpu_equiv_hours;
+    assert!((a100_hours - 1.0 / 7.0).abs() < 1e-9, "{a100_hours}");
+    assert!((a30_hours - 1.0 / 4.0).abs() < 1e-9, "{a30_hours}");
+    // parity: one slice-hour on each fills the same fraction of its device
+    assert!(a30_hours > a100_hours, "an A30 slice is a larger GPU fraction");
+}
+
+/// Usage survives the PR-3 GC cascade: after a Workload deletion removes
+/// the job's pods from the store, the accounting report is unchanged —
+/// the ledger accrued at the terminal transition, not at report time.
+#[test]
+fn gc_cascade_preserves_accounting() {
+    let mut api = common::api();
+    let token = api.login("user004").unwrap();
+    let created = api
+        .create(
+            &token,
+            &ApiObject::BatchJob(BatchJobResource::request(
+                "user004",
+                "project02",
+                ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+                600.0,
+                PriorityClass::Batch,
+                false,
+            )),
+        )
+        .unwrap();
+    let wl = created.name().to_string();
+    api.run_for(1200.0, 10.0);
+    assert_eq!(api.platform().workload_state(&wl), Some(WorkloadState::Finished));
+    let before = api.platform().usage_report();
+    let before_user = before.by_user["user004"];
+    assert!(before_user.cpu_core_hours > 0.5, "{before_user:?}");
+    assert_eq!(before_user.pods, 1);
+
+    // delete the workload: the GC reconciler removes its pods entirely
+    api.delete(&token, ResourceKind::Workload, &wl).unwrap();
+    api.tick();
+    let orphan_pods = {
+        let st = api.platform().cluster();
+        st.pods()
+            .filter(|p| p.spec.labels.get("aiinfn/workload").map(String::as_str) == Some(&*wl))
+            .count()
+    };
+    assert_eq!(orphan_pods, 0, "GC must have removed the job's pods");
+
+    let after = api.platform().usage_report();
+    assert_eq!(after.by_user["user004"], before_user, "usage must survive pod GC");
+}
+
+/// The fair-share tracker fills from the accounting ledger as jobs finish.
+#[test]
+fn fair_share_usage_accrues_from_completed_gpu_jobs() {
+    let mut p = common::platform();
+    let wl = p
+        .submit_batch(
+            "user009",
+            "project01",
+            ResourceVec::cpu_millis(1000).with("nvidia.com/mig-1g.5gb", 2),
+            1800.0,
+            PriorityClass::Batch,
+            false,
+        )
+        .unwrap();
+    p.run_for(3600.0, 10.0);
+    assert_eq!(p.workload_state(&wl), Some(WorkloadState::Finished));
+    let used = p.fair_share_usage("user009");
+    assert!(used > 0.05, "2 slices × 0.5h ≈ 0.14 GPU-h of decayed usage, got {used}");
+    assert_eq!(p.fair_share_usage("user010"), 0.0, "idle users carry no usage");
+}
+
+/// Chaos sweep invariant: at every tick of a faulty run with live
+/// repartitioning in both directions (whole→MIG for slice demand,
+/// MIG→whole for whole-GPU demand), every physical node's accelerator
+/// advertisement equals the sum of its device layouts, modulo the units
+/// chaos has currently degraded.
+#[test]
+fn chaos_sweep_extended_resources_match_device_layouts() {
+    let seed = common::test_seed();
+    let mut p = common::platform();
+    let plan = ChaosPlan {
+        seed,
+        horizon: 3600.0,
+        site_outages_per_hour: 0.5,
+        wire_faults_per_hour: 1.0,
+        remote_job_failures_per_hour: 0.5,
+        node_flaps_per_hour: 0.3,
+        node_down_duration: (60.0, 240.0),
+        gpu_degrades_per_hour: 1.0,
+        gpu_degrade_duration: (120.0, 600.0),
+        ..Default::default()
+    };
+    p.install_chaos(&plan);
+
+    let check_invariant = |p: &aiinfn::platform::Platform| {
+        let st = p.cluster();
+        for node in st.nodes() {
+            if node.virtual_node {
+                continue;
+            }
+            let mut expected = ResourceVec::new();
+            for dev in &node.gpus {
+                expected.add(&dev.extended_resources());
+            }
+            let mut keys: Vec<String> = expected.iter().map(|(k, _)| k.to_string()).collect();
+            keys.extend(
+                node.allocatable
+                    .iter()
+                    .filter(|(k, _)| k.starts_with("nvidia.com/") || k.starts_with("xilinx.com/"))
+                    .map(|(k, _)| k.to_string()),
+            );
+            keys.sort();
+            keys.dedup();
+            for k in keys {
+                let advertised = node.allocatable.get(&k) + p.degraded_units(&node.name, &k);
+                assert_eq!(
+                    advertised,
+                    expected.get(&k),
+                    "node {} resource {k}: allocatable+degraded != sum of device layouts",
+                    node.name
+                );
+            }
+        }
+    };
+
+    // phase 1: whole-GPU demand beyond the whole-GPU fleet (14 T4/RTX)
+    // pulls idle A100s out of their MIG layouts
+    let mut wls = Vec::new();
+    for i in 0..16 {
+        wls.push(
+            p.submit_batch(
+                &format!("user{:03}", i),
+                "project06",
+                ResourceVec::cpu_millis(2000).with(MEMORY, 8 << 30).with(GPU, 1),
+                1800.0,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap(),
+        );
+    }
+    let t1 = p.now() + 1800.0;
+    while p.step_for(t1, 15.0) {
+        check_invariant(&p);
+    }
+
+    // phase 2: a slice-demand wave pulls capacity back into MIG layouts
+    for i in 0..40 {
+        wls.push(
+            p.submit_batch(
+                &format!("user{:03}", 20 + i),
+                "project06",
+                ResourceVec::cpu_millis(1000)
+                    .with(MEMORY, 4 << 30)
+                    .with("nvidia.com/mig-1g.5gb", 1),
+                300.0,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap(),
+        );
+    }
+    let t2 = p.now() + 7200.0;
+    while p.step_for(t2, 15.0) {
+        check_invariant(&p);
+    }
+
+    assert!(p.metrics().repartitions >= 2, "{:?}", p.metrics());
+    for w in &wls {
+        assert_eq!(
+            p.workload_state(w),
+            Some(WorkloadState::Finished),
+            "workload {w} lost under chaos: {:?}",
+            p.metrics()
+        );
+    }
+    // free index stayed exact through every repartition + fault
+    p.cluster().check_free_index();
+}
