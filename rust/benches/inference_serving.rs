@@ -1,0 +1,153 @@
+//! Inference-serving benchmark at the 1 000-node regime: eight
+//! `InferenceServer`s (six CPU-sized, two MIG-slice-sized on shared
+//! A100s) under seeded diurnal + burst traffic, driven through the full
+//! reconciler stack — admission via the zero-nominal serving cohort queue,
+//! scheduling, demand-driven MIG repartitioning, the
+//! least-outstanding-requests balancer, and the latency-aware autoscaler.
+//!
+//! Measures the *simulated* serving quality (latency p50/p95/p99 and
+//! sustained QPS over the horizon, straight from the balancer's
+//! histograms) and the *wall-clock* control-plane cost of running it
+//! (ticks/sec at 1k nodes with serving live, arrivals pumped per wall
+//! second). Emits `BENCH_serving.json`; CI uploads it and diffs against
+//! the committed `bench-baselines/BENCH_serving.json` (informational).
+
+use std::time::Instant;
+
+use aiinfn::gpu::GpuModel;
+use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::serve::ServingSpec;
+use aiinfn::sim::traffic::{TrafficPattern, TrafficPlan};
+use aiinfn::util::bench::BenchGroup;
+use aiinfn::util::json::Json;
+use aiinfn::util::stats::Histogram;
+
+const NODES: usize = 1_000;
+const GPU_NODES: usize = 8;
+const SERVERS: usize = 8;
+const TICK: f64 = 15.0;
+
+fn spec(name: &str, mig: bool) -> ServingSpec {
+    let mut requests = ResourceVec::cpu_millis(2000).with(MEMORY, 4 << 30);
+    if mig {
+        requests = requests.with("nvidia.com/mig-1g.5gb", 1);
+    }
+    ServingSpec {
+        name: name.to_string(),
+        user: "user001".to_string(),
+        project: "project01".to_string(),
+        model: if mig { "deepmet-gpu".to_string() } else { "deepmet".to_string() },
+        requests,
+        min_replicas: 0,
+        max_replicas: 6,
+        latency_slo: 0.5,
+        max_batch: 8,
+        batch_window: 0.02,
+        service_time: 0.08, // 100 req/s per saturated replica
+        queue_depth: 256,
+        queue: "serving".to_string(),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("AIINFN_BENCH_FAST").is_ok();
+    let horizon: f64 = if fast { 1_800.0 } else { 7_200.0 };
+
+    // 1 000-node inventory: 992 CPU servers plus 8 dual-A100 servers the
+    // MIG-sized serving replicas land on.
+    let mut cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let template = cfg.servers[0].clone();
+    cfg.servers = (0..NODES)
+        .map(|i| {
+            let mut s = template.clone();
+            s.name = format!("srv-{i:04}");
+            s.cpu_cores = 64;
+            s.memory_gb = 256;
+            s.nvme_tb = 4;
+            s.gpus =
+                if i < GPU_NODES { vec![GpuModel::A100_40GB; 2] } else { Vec::new() };
+            s
+        })
+        .collect();
+    cfg.federation_enabled = false;
+    let mut p = Platform::bootstrap(cfg).unwrap();
+
+    // Eight servers under diurnal baselines with seeded Poisson bursts.
+    let baselines: Vec<TrafficPattern> = (0..SERVERS)
+        .map(|i| TrafficPattern {
+            diurnal_amplitude: 0.4,
+            peak_at: 43_200.0,
+            ..TrafficPattern::flat(&format!("serve-{i}"), 15.0 + 5.0 * i as f64)
+        })
+        .collect();
+    let plan = TrafficPlan { seed: 42, horizon, bursts_per_hour: 1.0, ..Default::default() };
+    p.set_traffic(plan.generate(baselines));
+    for i in 0..SERVERS {
+        p.create_inference_server(spec(&format!("serve-{i}"), i >= SERVERS - 2)).unwrap();
+    }
+
+    // Drive the whole horizon through the reconciler stack, timed.
+    let ticks = (horizon / TICK).round() as u64;
+    let t = Instant::now();
+    p.run_for(horizon, TICK);
+    let wall = t.elapsed().as_secs_f64();
+
+    // Aggregate the balancer's latency histograms across the fleet.
+    let mut latency = Histogram::latency();
+    let mut total = 0u64;
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    let mut in_flight = 0u64;
+    for name in p.inference_server_names() {
+        let s = p.serving_state(&name).unwrap();
+        latency.merge(&s.latency);
+        total += s.total_requests;
+        completed += s.completed_requests;
+        failed += s.failed_requests;
+        in_flight += s.queued();
+    }
+    assert_eq!(total, completed + failed + in_flight, "request accounting must balance");
+    assert!(completed > 0, "the fleet must serve requests");
+
+    let p50 = latency.percentile_checked(50.0).unwrap_or(0.0);
+    let p95 = latency.percentile_checked(95.0).unwrap_or(0.0);
+    let p99 = latency.percentile_checked(99.0).unwrap_or(0.0);
+    let sustained_qps = completed as f64 / horizon;
+    let ticks_per_sec = ticks as f64 / wall;
+    let wall_req_per_sec = completed as f64 / wall;
+    let m = p.metrics();
+
+    let mut g = BenchGroup::new("inference_serving");
+    g.record_value("latency_p50_seconds", p50, "s");
+    g.record_value("latency_p95_seconds", p95, "s");
+    g.record_value("latency_p99_seconds", p99, "s");
+    g.record_value("sustained_qps_sim", sustained_qps, "req/s");
+    g.record_value("ticks_per_sec_1k_nodes", ticks_per_sec, "ticks/s");
+    g.record_value("requests_per_wall_sec", wall_req_per_sec, "req/s");
+
+    let out = Json::obj(vec![
+        ("nodes", Json::num(NODES as f64)),
+        ("servers", Json::num(SERVERS as f64)),
+        ("horizon_seconds", Json::num(horizon)),
+        ("tick_seconds", Json::num(TICK)),
+        ("total_requests", Json::num(total as f64)),
+        ("completed_requests", Json::num(completed as f64)),
+        ("failed_requests", Json::num(failed as f64)),
+        ("latency_p50_seconds", Json::num(p50)),
+        ("latency_p95_seconds", Json::num(p95)),
+        ("latency_p99_seconds", Json::num(p99)),
+        ("sustained_qps_sim", Json::num(sustained_qps)),
+        ("ticks_per_sec_1k_nodes", Json::num(ticks_per_sec)),
+        ("requests_per_wall_sec", Json::num(wall_req_per_sec)),
+        ("scale_events", Json::num(m.serving_scale_events as f64)),
+        ("cold_starts", Json::num(m.serving_cold_starts as f64)),
+    ]);
+    std::fs::write("BENCH_serving.json", out.to_pretty()).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
+    println!(
+        "serving: {completed} completed / {failed} failed of {total} \
+         (p50 {p50:.3}s p95 {p95:.3}s p99 {p99:.3}s, {sustained_qps:.1} req/s sustained, \
+         {ticks_per_sec:.1} ticks/s at {NODES} nodes)"
+    );
+}

@@ -126,6 +126,30 @@ impl Admitter for Defaulter {
                     .entry("app".to_string())
                     .or_insert_with(|| "batch".to_string());
             }
+            ApiObject::InferenceServer(s) => {
+                if s.metadata.namespace.is_empty() || s.metadata.namespace == "default" {
+                    s.metadata.namespace = "serving".to_string();
+                }
+                if s.queue.is_empty() {
+                    s.queue = ctx.config.serving_queue.clone();
+                }
+                if s.max_batch == 0 {
+                    s.max_batch = ctx.config.serving_default_max_batch;
+                }
+                if s.batch_window == 0.0 {
+                    s.batch_window = ctx.config.serving_default_batch_window;
+                }
+                if s.queue_depth == 0 {
+                    s.queue_depth = ctx.config.serving_default_queue_depth;
+                }
+                if s.service_time == 0.0 {
+                    s.service_time = ctx.config.serving_default_service_time;
+                }
+                s.metadata
+                    .labels
+                    .entry("app".to_string())
+                    .or_insert_with(|| "inference".to_string());
+            }
             _ => {}
         }
         Ok(())
@@ -184,6 +208,63 @@ impl Admitter for Validator {
                     return Err(format!(
                         "spec.queue {:?} is not the batch local queue {:?}",
                         j.queue, ctx.config.batch_queue
+                    ));
+                }
+            }
+            ApiObject::InferenceServer(s) => {
+                if s.user.is_empty() {
+                    return Err("spec.user is empty".into());
+                }
+                if s.project.is_empty() {
+                    return Err("spec.project is empty".into());
+                }
+                if s.requests.is_empty() {
+                    return Err("spec.requests asks for no resources".into());
+                }
+                for (k, v) in s.requests.iter() {
+                    if v < 0 {
+                        return Err(format!("spec.requests[{k}] is negative ({v})"));
+                    }
+                }
+                if !(s.latency_slo > 0.0) {
+                    return Err(format!(
+                        "spec.latencySlo must be positive seconds (got {})",
+                        s.latency_slo
+                    ));
+                }
+                if s.max_replicas == 0 {
+                    return Err("spec.maxReplicas must be at least 1".into());
+                }
+                if s.min_replicas > s.max_replicas {
+                    return Err(format!(
+                        "spec.minReplicas ({}) exceeds spec.maxReplicas ({})",
+                        s.min_replicas, s.max_replicas
+                    ));
+                }
+                if s.max_batch == 0 {
+                    return Err("spec.maxBatch must be at least 1".into());
+                }
+                if !(s.batch_window >= 0.0)
+                    || s.batch_window > ctx.config.serving_max_batch_window
+                {
+                    return Err(format!(
+                        "spec.batchWindow must be in [0, {}] seconds (got {})",
+                        ctx.config.serving_max_batch_window, s.batch_window
+                    ));
+                }
+                if !(s.service_time > 0.0) {
+                    return Err(format!(
+                        "spec.serviceTime must be positive seconds (got {})",
+                        s.service_time
+                    ));
+                }
+                if s.queue_depth == 0 {
+                    return Err("spec.queueDepth must be at least 1".into());
+                }
+                if s.queue != ctx.config.serving_queue {
+                    return Err(format!(
+                        "spec.queue {:?} is not the serving local queue {:?}",
+                        s.queue, ctx.config.serving_queue
                     ));
                 }
             }
@@ -249,6 +330,28 @@ impl Admitter for ImmutableFields {
                     return Err("spec.queue is immutable".into());
                 }
             }
+            (ApiObject::InferenceServer(new), ApiObject::InferenceServer(old)) => {
+                // scaling/SLO/batching knobs are the mutable surface; the
+                // identity and per-replica quota shape are not
+                if new.user != old.user {
+                    return Err("spec.user is immutable".into());
+                }
+                if new.project != old.project {
+                    return Err("spec.project is immutable".into());
+                }
+                if new.model != old.model {
+                    return Err("spec.model is immutable".into());
+                }
+                if new.requests != old.requests {
+                    return Err("spec.requests is immutable (replica shape)".into());
+                }
+                if new.service_time != old.service_time {
+                    return Err("spec.serviceTime is immutable (model property)".into());
+                }
+                if new.queue != old.queue {
+                    return Err("spec.queue is immutable".into());
+                }
+            }
             (new, old) => {
                 return Err(format!(
                     "kind changed under update: {} -> {}",
@@ -264,7 +367,7 @@ impl Admitter for ImmutableFields {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::resources::BatchJobResource;
+    use crate::api::resources::{BatchJobResource, InferenceServerResource};
     use crate::cluster::resources::ResourceVec;
     use crate::platform::config::default_config_path;
     use crate::queue::kueue::PriorityClass;
@@ -325,6 +428,120 @@ mod tests {
             j.restart_policy = "Sometimes".into();
         }
         assert!(chain.run(&ctx, &mut bad).is_err());
+    }
+
+    fn server() -> ApiObject {
+        ApiObject::InferenceServer(InferenceServerResource::request(
+            "cms-tracker",
+            "alice",
+            "project01",
+            "deepmet",
+            ResourceVec::cpu_millis(2000).with("nvidia.com/mig-1g.5gb", 1),
+            0,
+            4,
+            0.25,
+        ))
+    }
+
+    #[test]
+    fn serving_defaulting_fills_queue_and_batching_knobs() {
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let mut obj = server();
+        chain
+            .run(&AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None }, &mut obj)
+            .unwrap();
+        let s = obj.as_inference_server().unwrap();
+        assert_eq!(s.queue, cfg.serving_queue);
+        assert_eq!(s.max_batch, cfg.serving_default_max_batch);
+        assert_eq!(s.batch_window, cfg.serving_default_batch_window);
+        assert_eq!(s.queue_depth, cfg.serving_default_queue_depth);
+        assert_eq!(s.service_time, cfg.serving_default_service_time);
+        assert_eq!(s.metadata.namespace, "serving");
+        assert_eq!(s.metadata.labels.get("app").map(String::as_str), Some("inference"));
+    }
+
+    #[test]
+    fn serving_validation_rejects_bad_slo_bounds_and_batch_window() {
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let ctx = AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None };
+
+        let reject = |mutate: &dyn Fn(&mut InferenceServerResource), needle: &str| {
+            let mut obj = server();
+            if let ApiObject::InferenceServer(s) = &mut obj {
+                mutate(s);
+            }
+            let err = chain.run(&ctx, &mut obj).unwrap_err();
+            assert!(
+                matches!(&err, ApiError::Invalid(m) if m.contains(needle)),
+                "expected {needle:?} in {err}"
+            );
+        };
+        reject(&|s| s.latency_slo = 0.0, "latencySlo");
+        reject(&|s| s.latency_slo = -1.0, "latencySlo");
+        reject(
+            &|s| {
+                s.min_replicas = 5;
+                s.max_replicas = 2;
+            },
+            "minReplicas",
+        );
+        reject(&|s| s.max_replicas = 0, "maxReplicas");
+        reject(&|s| s.batch_window = cfg.serving_max_batch_window + 1.0, "batchWindow");
+        reject(&|s| s.requests = ResourceVec::new(), "requests");
+        reject(&|s| s.user = String::new(), "user");
+        reject(&|s| s.queue = "batch".into(), "serving local queue");
+
+        // the happy path still passes
+        let mut ok = server();
+        chain.run(&ctx, &mut ok).unwrap();
+    }
+
+    #[test]
+    fn serving_immutability_allows_scaling_knobs_but_not_identity() {
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let mut old = server();
+        chain
+            .run(&AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None }, &mut old)
+            .unwrap();
+        let ctx = AdmissionCtx { verb: WriteVerb::Update, config: &cfg, old: Some(&old) };
+
+        let mut ok = old.clone();
+        if let ApiObject::InferenceServer(s) = &mut ok {
+            s.min_replicas = 1;
+            s.max_replicas = 8;
+            s.latency_slo = 0.5;
+            s.max_batch = 16;
+        }
+        chain.run(&ctx, &mut ok).unwrap();
+
+        for (mutate, field) in [
+            (
+                Box::new(|s: &mut InferenceServerResource| s.model = "other".into())
+                    as Box<dyn Fn(&mut InferenceServerResource)>,
+                "model",
+            ),
+            (Box::new(|s: &mut InferenceServerResource| s.user = "bob".into()), "user"),
+            (
+                Box::new(|s: &mut InferenceServerResource| {
+                    s.requests = ResourceVec::cpu_millis(9000)
+                }),
+                "requests",
+            ),
+            (Box::new(|s: &mut InferenceServerResource| s.service_time = 0.2), "serviceTime"),
+        ] {
+            let mut bad = old.clone();
+            if let ApiObject::InferenceServer(s) = &mut bad {
+                mutate(s);
+            }
+            let err = chain.run(&ctx, &mut bad).unwrap_err();
+            assert!(
+                matches!(&err, ApiError::Invalid(m) if m.contains("immutable")),
+                "{field}: {err}"
+            );
+        }
     }
 
     #[test]

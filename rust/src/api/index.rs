@@ -164,6 +164,22 @@ pub(crate) fn typed_field<'a>(obj: &'a ApiObject, path: &str) -> Option<Option<F
             // status.instances is an array: unmodeled → JSON fallback
             _ => return None,
         },
+        ApiObject::InferenceServer(s) => match path {
+            "spec.user" => Some(FieldVal::S(&s.user)),
+            "spec.project" => Some(FieldVal::S(&s.project)),
+            "spec.model" => Some(FieldVal::S(&s.model)),
+            "spec.minReplicas" => Some(FieldVal::N(s.min_replicas as f64)),
+            "spec.maxReplicas" => Some(FieldVal::N(s.max_replicas as f64)),
+            "spec.latencySlo" => Some(FieldVal::N(s.latency_slo)),
+            // to_json omits an empty queue: absent, not ""
+            "spec.queue" => (!s.queue.is_empty()).then(|| FieldVal::S(s.queue.as_str())),
+            "status.state" => Some(FieldVal::S(&s.state)),
+            "status.replicas" => Some(FieldVal::N(s.replicas as f64)),
+            "status.readyReplicas" => Some(FieldVal::N(s.ready_replicas as f64)),
+            "status.failedRequests" => Some(FieldVal::N(s.failed_requests as f64)),
+            "status.p95Latency" => Some(FieldVal::N(s.p95_latency)),
+            _ => return None,
+        },
     })
 }
 
@@ -354,11 +370,13 @@ impl ApiIndex {
     /// Is `resourceVersion` a sound cache key for this kind — i.e. does
     /// every observable change to the serialized view come with an rv
     /// bump? Node views embed `status.free`, which moves on every pod
-    /// bind/release *without* a Node event, so they must be serialized
-    /// fresh. Every other kind's mutable state flows through watch
-    /// events (store transitions, Kueue/health rings, write verbs).
+    /// bind/release *without* a Node event, and InferenceServer status
+    /// (request counters, p95, replica counts) advances every serving
+    /// window without one, so both must be serialized fresh. Every other
+    /// kind's mutable state flows through watch events (store transitions,
+    /// Kueue/health rings, write verbs).
     fn rv_keyed(kind: ResourceKind) -> bool {
-        !matches!(kind, ResourceKind::Node)
+        !matches!(kind, ResourceKind::Node | ResourceKind::InferenceServer)
     }
 
     /// Run `f` over the object's serialized view, reusing the cached JSON

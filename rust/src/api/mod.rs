@@ -8,7 +8,7 @@
 //!
 //! | verb                              | semantics                                              |
 //! |-----------------------------------|--------------------------------------------------------|
-//! | `create(token, obj)`              | Session / BatchJob: admit + provision; others refused  |
+//! | `create(token, obj)`              | Session / BatchJob / InferenceServer: admit + provision |
 //! | `get(token, kind, name)`          | one object, current state                              |
 //! | `list(token, kind, selector)`     | all objects, filtered by label/field selectors         |
 //! | `update(token, obj)`              | replace the spec (admission + immutable-field checks)  |
@@ -45,7 +45,7 @@
 //!
 //! ## Resource model
 //!
-//! Seven kinds ([`ResourceKind`]), each a typed struct carrying [`Metadata`]
+//! Eight kinds ([`ResourceKind`]), each a typed struct carrying [`Metadata`]
 //! (name, namespace, labels, resourceVersion) and serializing to/from the
 //! in-house [`Json`](crate::util::json::Json) in the familiar
 //! `{apiVersion, kind, metadata, spec, status}` shape:
@@ -61,6 +61,10 @@
 //! * [`GpuDeviceView`] — one physical accelerator with its live MIG
 //!   partition state (read-only; label-indexed by hosting node and model;
 //!   `Modified` events fire on every demand-driven repartition)
+//! * [`InferenceServerResource`] — a latency-SLO-bound model-serving fleet
+//!   (writable; spec declares MIG-slice-sized replicas, autoscale bounds,
+//!   and batching knobs; status carries replica counts, request
+//!   accounting, and the last observed p95 — see [`crate::serve`])
 //!
 //! Pods and Sites additionally expose typed [`Condition`]s
 //! (`PodScheduled`/`Ready`, `Healthy`) so watchers can follow transitions
@@ -127,8 +131,8 @@ pub mod watch;
 
 pub use admission::{AdmissionChain, AdmissionCtx, Admitter, WriteVerb};
 pub use resources::{
-    ApiObject, BatchJobResource, Condition, GpuDeviceView, Metadata, NodeView, OwnerReference,
-    PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
+    ApiObject, BatchJobResource, Condition, GpuDeviceView, InferenceServerResource, Metadata,
+    NodeView, OwnerReference, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
 };
 pub use server::{ApiServer, Selector, SelectorOp};
 pub use watch::{EventType, WatchEvent, WatchLog};

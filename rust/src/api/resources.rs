@@ -22,6 +22,7 @@ pub const API_VERSION: &str = "aiinfn/v1";
 pub enum ResourceKind {
     Session,
     BatchJob,
+    InferenceServer,
     Pod,
     Node,
     Workload,
@@ -34,6 +35,7 @@ impl ResourceKind {
         match self {
             ResourceKind::Session => "Session",
             ResourceKind::BatchJob => "BatchJob",
+            ResourceKind::InferenceServer => "InferenceServer",
             ResourceKind::Pod => "Pod",
             ResourceKind::Node => "Node",
             ResourceKind::Workload => "Workload",
@@ -46,6 +48,7 @@ impl ResourceKind {
         Some(match s {
             "Session" => ResourceKind::Session,
             "BatchJob" => ResourceKind::BatchJob,
+            "InferenceServer" => ResourceKind::InferenceServer,
             "Pod" => ResourceKind::Pod,
             "Node" => ResourceKind::Node,
             "Workload" => ResourceKind::Workload,
@@ -56,10 +59,11 @@ impl ResourceKind {
     }
 
     /// Every kind, for enumeration in tests and tooling.
-    pub fn all() -> [ResourceKind; 7] {
+    pub fn all() -> [ResourceKind; 8] {
         [
             ResourceKind::Session,
             ResourceKind::BatchJob,
+            ResourceKind::InferenceServer,
             ResourceKind::Pod,
             ResourceKind::Node,
             ResourceKind::Workload,
@@ -567,6 +571,152 @@ impl BatchJobResource {
     }
 }
 
+// --------------------------------------------------------- InferenceServer
+
+/// An always-on model-serving deployment (writable kind): N replicas of an
+/// inference server behind a least-outstanding-requests balancer, sized in
+/// MIG-slice units and autoscaled between `min_replicas` and
+/// `max_replicas` against a p95 latency SLO. `metadata.name` is the
+/// serving endpoint name.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct InferenceServerResource {
+    pub metadata: Metadata,
+    /// Spec: ownership (fair-share accounting rides the user).
+    pub user: String,
+    pub project: String,
+    /// Served model identifier (informational; selects nothing).
+    pub model: String,
+    /// Per-replica resource request (MIG-slice-sized).
+    pub requests: ResourceVec,
+    /// Autoscale bounds. `min_replicas` may be 0 (scale-to-zero).
+    pub min_replicas: u32,
+    pub max_replicas: u32,
+    /// p95 latency objective in seconds; the autoscaler holds p95 under
+    /// this and uses it as the per-request deadline budget.
+    pub latency_slo: f64,
+    /// Max requests coalesced into one GPU batch (throughput knob).
+    pub max_batch: u32,
+    /// Seconds a replica waits to fill a batch before dispatching a
+    /// partial one (latency knob opposing `max_batch`).
+    pub batch_window: f64,
+    /// Seconds one batch occupies the replica (so a saturated replica
+    /// sustains `max_batch / service_time` requests/second).
+    pub service_time: f64,
+    /// Bounded per-replica queue; arrivals beyond it are shed and counted.
+    pub queue_depth: u32,
+    /// Local queue for replica workloads. Empty on a request: the
+    /// admission chain defaults it from `PlatformConfig`.
+    pub queue: String,
+    /// Status (server-filled).
+    pub replicas: u32,
+    pub ready_replicas: u32,
+    /// `Idle` / `Scaling` / `Serving`.
+    pub state: String,
+    pub total_requests: u64,
+    pub completed_requests: u64,
+    /// Requests shed (queue full) or lost to replica failure — counted,
+    /// never silently dropped.
+    pub failed_requests: u64,
+    /// Last observed p95 latency (seconds; 0 until the first window).
+    pub p95_latency: f64,
+    /// Status conditions (settable through the `status` subresource).
+    pub conditions: Vec<Condition>,
+}
+
+impl InferenceServerResource {
+    /// A creation request: spec only, server fills the rest. Batch/queue
+    /// knobs start at 0 and are defaulted by the admission chain.
+    pub fn request(
+        name: &str,
+        user: &str,
+        project: &str,
+        model: &str,
+        requests: ResourceVec,
+        min_replicas: u32,
+        max_replicas: u32,
+        latency_slo: f64,
+    ) -> InferenceServerResource {
+        InferenceServerResource {
+            metadata: Metadata::named(name, "serving"),
+            user: user.to_string(),
+            project: project.to_string(),
+            model: model.to_string(),
+            requests,
+            min_replicas,
+            max_replicas,
+            latency_slo,
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::InferenceServer,
+            &self.metadata,
+            Json::obj({
+                let mut f = vec![
+                    ("user", Json::str(self.user.as_str())),
+                    ("project", Json::str(self.project.as_str())),
+                    ("model", Json::str(self.model.as_str())),
+                    ("requests", resources_to_json(&self.requests)),
+                    ("minReplicas", Json::num(self.min_replicas as f64)),
+                    ("maxReplicas", Json::num(self.max_replicas as f64)),
+                    ("latencySlo", Json::num(self.latency_slo)),
+                    ("maxBatch", Json::num(self.max_batch as f64)),
+                    ("batchWindow", Json::num(self.batch_window)),
+                    ("serviceTime", Json::num(self.service_time)),
+                    ("queueDepth", Json::num(self.queue_depth as f64)),
+                ];
+                if !self.queue.is_empty() {
+                    f.push(("queue", Json::str(self.queue.as_str())));
+                }
+                f
+            }),
+            Json::obj(vec![
+                ("replicas", Json::num(self.replicas as f64)),
+                ("readyReplicas", Json::num(self.ready_replicas as f64)),
+                ("state", Json::str(self.state.as_str())),
+                ("totalRequests", Json::num(self.total_requests as f64)),
+                ("completedRequests", Json::num(self.completed_requests as f64)),
+                ("failedRequests", Json::num(self.failed_requests as f64)),
+                ("p95Latency", Json::num(self.p95_latency)),
+                ("conditions", conditions_to_json(&self.conditions)),
+            ]),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<InferenceServerResource, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::InferenceServer)?;
+        Ok(InferenceServerResource {
+            metadata,
+            user: opt_str(spec, "user").unwrap_or_default(),
+            project: opt_str(spec, "project").unwrap_or_default(),
+            model: opt_str(spec, "model").unwrap_or_default(),
+            requests: spec
+                .get("requests")
+                .map(resources_from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            min_replicas: opt_num(spec, "minReplicas").unwrap_or(0.0) as u32,
+            max_replicas: opt_num(spec, "maxReplicas").unwrap_or(0.0) as u32,
+            latency_slo: opt_num(spec, "latencySlo").unwrap_or(0.0),
+            max_batch: opt_num(spec, "maxBatch").unwrap_or(0.0) as u32,
+            batch_window: opt_num(spec, "batchWindow").unwrap_or(0.0),
+            service_time: opt_num(spec, "serviceTime").unwrap_or(0.0),
+            queue_depth: opt_num(spec, "queueDepth").unwrap_or(0.0) as u32,
+            queue: opt_str(spec, "queue").unwrap_or_default(),
+            replicas: opt_num(status, "replicas").unwrap_or(0.0) as u32,
+            ready_replicas: opt_num(status, "readyReplicas").unwrap_or(0.0) as u32,
+            state: opt_str(status, "state").unwrap_or_default(),
+            total_requests: opt_num(status, "totalRequests").unwrap_or(0.0) as u64,
+            completed_requests: opt_num(status, "completedRequests").unwrap_or(0.0) as u64,
+            failed_requests: opt_num(status, "failedRequests").unwrap_or(0.0) as u64,
+            p95_latency: opt_num(status, "p95Latency").unwrap_or(0.0),
+            conditions: conditions_from_json(status.get("conditions"))?,
+        })
+    }
+}
+
 // ---------------------------------------------------------------- PodView
 
 /// Read-only projection of a pod.
@@ -972,6 +1122,7 @@ impl GpuDeviceView {
 pub enum ApiObject {
     Session(SessionResource),
     BatchJob(BatchJobResource),
+    InferenceServer(InferenceServerResource),
     Pod(PodView),
     Node(NodeView),
     Workload(WorkloadView),
@@ -984,6 +1135,7 @@ impl ApiObject {
         match self {
             ApiObject::Session(_) => ResourceKind::Session,
             ApiObject::BatchJob(_) => ResourceKind::BatchJob,
+            ApiObject::InferenceServer(_) => ResourceKind::InferenceServer,
             ApiObject::Pod(_) => ResourceKind::Pod,
             ApiObject::Node(_) => ResourceKind::Node,
             ApiObject::Workload(_) => ResourceKind::Workload,
@@ -996,6 +1148,7 @@ impl ApiObject {
         match self {
             ApiObject::Session(x) => &x.metadata,
             ApiObject::BatchJob(x) => &x.metadata,
+            ApiObject::InferenceServer(x) => &x.metadata,
             ApiObject::Pod(x) => &x.metadata,
             ApiObject::Node(x) => &x.metadata,
             ApiObject::Workload(x) => &x.metadata,
@@ -1008,6 +1161,7 @@ impl ApiObject {
         match self {
             ApiObject::Session(x) => &mut x.metadata,
             ApiObject::BatchJob(x) => &mut x.metadata,
+            ApiObject::InferenceServer(x) => &mut x.metadata,
             ApiObject::Pod(x) => &mut x.metadata,
             ApiObject::Node(x) => &mut x.metadata,
             ApiObject::Workload(x) => &mut x.metadata,
@@ -1024,6 +1178,7 @@ impl ApiObject {
         match self {
             ApiObject::Session(x) => x.to_json(),
             ApiObject::BatchJob(x) => x.to_json(),
+            ApiObject::InferenceServer(x) => x.to_json(),
             ApiObject::Pod(x) => x.to_json(),
             ApiObject::Node(x) => x.to_json(),
             ApiObject::Workload(x) => x.to_json(),
@@ -1043,6 +1198,9 @@ impl ApiObject {
         Ok(match kind {
             ResourceKind::Session => ApiObject::Session(SessionResource::from_json(j)?),
             ResourceKind::BatchJob => ApiObject::BatchJob(BatchJobResource::from_json(j)?),
+            ResourceKind::InferenceServer => {
+                ApiObject::InferenceServer(InferenceServerResource::from_json(j)?)
+            }
             ResourceKind::Pod => ApiObject::Pod(PodView::from_json(j)?),
             ResourceKind::Node => ApiObject::Node(NodeView::from_json(j)?),
             ResourceKind::Workload => ApiObject::Workload(WorkloadView::from_json(j)?),
@@ -1062,6 +1220,13 @@ impl ApiObject {
     pub fn as_batch_job(&self) -> Option<&BatchJobResource> {
         match self {
             ApiObject::BatchJob(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_inference_server(&self) -> Option<&InferenceServerResource> {
+        match self {
+            ApiObject::InferenceServer(s) => Some(s),
             _ => None,
         }
     }
@@ -1158,6 +1323,29 @@ mod tests {
                 live_pod: Some("job-000001-r1".into()),
                 retries: 2,
                 conditions: Vec::new(),
+            }),
+            ApiObject::InferenceServer(InferenceServerResource {
+                metadata: meta("cms-tracker", "serving", 15),
+                user: "carol".into(),
+                project: "project07".into(),
+                model: "deepmet-v2".into(),
+                requests: rv_sample(),
+                min_replicas: 0,
+                max_replicas: 8,
+                latency_slo: 0.25,
+                max_batch: 16,
+                batch_window: 0.01,
+                service_time: 0.05,
+                queue_depth: 64,
+                queue: "serving".into(),
+                replicas: 3,
+                ready_replicas: 2,
+                state: "Serving".into(),
+                total_requests: 120_000,
+                completed_requests: 119_000,
+                failed_requests: 12,
+                p95_latency: 0.19,
+                conditions: vec![Condition::new("SloMet", true, "P95UnderSlo", "", 55.0)],
             }),
             ApiObject::Pod(PodView {
                 metadata: meta("job-000001-r1", "batch", 11),

@@ -7,7 +7,8 @@
 //! [`login`](ApiServer::login) (the hub IAM flow), then use the read verbs
 //! (`get`/`list`/`watch`) and the declarative write path:
 //!
-//! * `create` — admit + provision a new Session / BatchJob.
+//! * `create` — admit + provision a new Session / BatchJob /
+//!   InferenceServer.
 //! * `update` — replace the spec; stale `metadata.resourceVersion` ⇒
 //!   [`ApiError::Conflict`]; immutable fields enforced by admission.
 //! * `patch` — strategic merge on `spec` (and `metadata.labels` /
@@ -35,8 +36,8 @@ use crate::api::admission::{AdmissionChain, AdmissionCtx, WriteVerb};
 use crate::api::index::ApiIndex;
 use crate::api::resources::{
     parse_priority, phase_str, priority_str, workload_state_str, ApiObject, BatchJobResource,
-    Condition, GpuDeviceView, Metadata, NodeView, PodView, ResourceKind, SessionResource,
-    SiteView, WorkloadView,
+    Condition, GpuDeviceView, InferenceServerResource, Metadata, NodeView, PodView, ResourceKind,
+    SessionResource, SiteView, WorkloadView,
 };
 use crate::api::watch::{EventType, WatchEvent, WatchLog};
 use crate::api::ApiError;
@@ -50,6 +51,7 @@ use crate::offload::vk::VirtualKubelet;
 use crate::platform::config::PlatformConfig;
 use crate::platform::facade::{BatchJob, BatchSubmission, Platform, RestartPolicy};
 use crate::queue::kueue::WorkloadState;
+use crate::serve::{ServerState, ServingSpec};
 use crate::sim::clock::Time;
 use crate::util::json::Json;
 
@@ -484,7 +486,8 @@ impl ApiServer {
 
     // -------------------------------------------------------------- verbs
 
-    /// Create a writable resource (Session or BatchJob) owned by the caller.
+    /// Create a writable resource (Session, BatchJob, or InferenceServer)
+    /// owned by the caller.
     pub fn create(&mut self, token: &str, obj: &ApiObject) -> Result<ApiObject, ApiError> {
         self.create_with_verb(token, obj, WriteVerb::Create)
     }
@@ -573,6 +576,63 @@ impl ApiServer {
                 self.emit_batch_job(&wl, EventType::Added);
                 self.get_batch_job(&wl)
             }
+            ApiObject::InferenceServer(req) => {
+                if req.user != caller {
+                    return Err(ApiError::Forbidden(format!(
+                        "token user {caller} cannot create an inference server for {}",
+                        req.user
+                    )));
+                }
+                // client-named (unlike Sessions/BatchJobs): the name is the
+                // serving endpoint identity
+                let name = req.metadata.name.clone();
+                if name.is_empty() {
+                    return Err(ApiError::Invalid(
+                        "inference server requires metadata.name".to_string(),
+                    ));
+                }
+                self.platform
+                    .create_inference_server(ServingSpec {
+                        name: name.clone(),
+                        user: req.user,
+                        project: req.project,
+                        model: req.model,
+                        requests: req.requests,
+                        min_replicas: req.min_replicas,
+                        max_replicas: req.max_replicas,
+                        latency_slo: req.latency_slo,
+                        max_batch: req.max_batch,
+                        batch_window: req.batch_window,
+                        service_time: req.service_time,
+                        queue_depth: req.queue_depth,
+                        queue: req.queue,
+                    })
+                    .map_err(|e| ApiError::Conflict(e.to_string()))?;
+                {
+                    let state = self.obj_state_mut(ResourceKind::InferenceServer, &name);
+                    state.finalizers = req.metadata.finalizers;
+                    state.labels = req.metadata.labels;
+                }
+                self.pump();
+                let rv = self.log.next_rv();
+                let view = self
+                    .platform
+                    .serving_state(&name)
+                    .map(|s| self.inference_server_view(s, rv))
+                    .ok_or_else(|| {
+                        ApiError::Invalid(format!("inference server {name} vanished after create"))
+                    })?;
+                let now = self.platform.now();
+                let json = view.to_json();
+                self.append_event(
+                    ResourceKind::InferenceServer,
+                    EventType::Added,
+                    &name,
+                    now,
+                    Some(json),
+                );
+                Ok(ApiObject::InferenceServer(view))
+            }
             other => Err(ApiError::Invalid(format!(
                 "kind {} is read-only (server-projected)",
                 other.kind().as_str()
@@ -595,7 +655,10 @@ impl ApiServer {
     /// repeated applies diverge instead of converge.
     pub fn apply(&mut self, token: &str, obj: &ApiObject) -> Result<ApiObject, ApiError> {
         let kind = obj.kind();
-        if !matches!(kind, ResourceKind::Session | ResourceKind::BatchJob) {
+        if !matches!(
+            kind,
+            ResourceKind::Session | ResourceKind::BatchJob | ResourceKind::InferenceServer
+        ) {
             return Err(ApiError::Invalid(format!(
                 "kind {} is read-only (server-projected)",
                 kind.as_str()
@@ -609,6 +672,7 @@ impl ApiServer {
             && match kind {
                 ResourceKind::Session => self.platform.session(name).is_some(),
                 ResourceKind::BatchJob => self.platform.batch_jobs.contains_key(name),
+                ResourceKind::InferenceServer => self.platform.serving_state(name).is_some(),
                 _ => false,
             };
         if !exists {
@@ -629,7 +693,10 @@ impl ApiServer {
         patch: &Json,
     ) -> Result<ApiObject, ApiError> {
         self.authenticate(token)?;
-        if !matches!(kind, ResourceKind::Session | ResourceKind::BatchJob) {
+        if !matches!(
+            kind,
+            ResourceKind::Session | ResourceKind::BatchJob | ResourceKind::InferenceServer
+        ) {
             return Err(ApiError::Invalid(format!(
                 "kind {} is read-only (server-projected)",
                 kind.as_str()
@@ -660,6 +727,7 @@ impl ApiServer {
         let conditions = match obj {
             ApiObject::Session(s) => s.conditions.clone(),
             ApiObject::BatchJob(j) => j.conditions.clone(),
+            ApiObject::InferenceServer(s) => s.conditions.clone(),
             other => {
                 return Err(ApiError::Invalid(format!(
                     "kind {} has no writable status subresource",
@@ -688,7 +756,10 @@ impl ApiServer {
         let caller = self.authenticate(token)?;
         let kind = obj.kind();
         let name = obj.name().to_string();
-        if !matches!(kind, ResourceKind::Session | ResourceKind::BatchJob) {
+        if !matches!(
+            kind,
+            ResourceKind::Session | ResourceKind::BatchJob | ResourceKind::InferenceServer
+        ) {
             return Err(ApiError::Invalid(format!(
                 "kind {} is read-only (server-projected)",
                 kind.as_str()
@@ -723,6 +794,25 @@ impl ApiServer {
                     .update_batch_spec(&name, j.offloadable, policy, &j.metadata.labels)
                     .map_err(|e| ApiError::Invalid(e.to_string()))?;
                 self.obj_state_mut(kind, &name).finalizers = j.metadata.finalizers;
+            }
+            ApiObject::InferenceServer(s) => {
+                // identity fields (user/project/model/requests/serviceTime/
+                // queue) are immutable (admission); the scaling, SLO, and
+                // batching knobs apply live
+                self.platform
+                    .update_inference_server(
+                        &name,
+                        s.min_replicas,
+                        s.max_replicas,
+                        s.latency_slo,
+                        s.max_batch,
+                        s.batch_window,
+                        s.queue_depth,
+                    )
+                    .map_err(|e| ApiError::Invalid(e.to_string()))?;
+                let state = self.obj_state_mut(kind, &name);
+                state.labels = s.metadata.labels;
+                state.finalizers = s.metadata.finalizers;
             }
             _ => unreachable!("writable kinds only"),
         }
@@ -850,6 +940,17 @@ impl ApiServer {
                     out.push(ApiObject::GpuDevice(self.gpu_device_view(n, d, rv)));
                 }
             }
+            ResourceKind::InferenceServer => {
+                // already name-sorted: the serving map is a BTreeMap
+                for name in self.platform.inference_server_names() {
+                    if pruned(&name) || self.is_deleted(kind, &name) {
+                        continue;
+                    }
+                    let Some(s) = self.platform.serving_state(&name) else { continue };
+                    let rv = self.rv_of(kind, &name);
+                    out.push(ApiObject::InferenceServer(self.inference_server_view(s, rv)));
+                }
+            }
         }
         if selector.is_empty() {
             return Ok(out);
@@ -876,7 +977,7 @@ impl ApiServer {
             return Err(ApiError::NotFound(format!("{}/{name}", kind.as_str())));
         }
         match kind {
-            ResourceKind::Session | ResourceKind::BatchJob => {
+            ResourceKind::Session | ResourceKind::BatchJob | ResourceKind::InferenceServer => {
                 let old = self.view_of(kind, name, self.rv_of(kind, name))?;
                 self.check_owner(&old, &caller)?;
                 self.delete_writable(kind, name)
@@ -916,6 +1017,7 @@ impl ApiServer {
         let owner = match obj {
             ApiObject::Session(s) => &s.user,
             ApiObject::BatchJob(j) => &j.user,
+            ApiObject::InferenceServer(s) => &s.user,
             _ => return Ok(()),
         };
         if owner != caller {
@@ -1320,6 +1422,11 @@ impl ApiServer {
                     .map(|(n, d)| ApiObject::GpuDevice(self.gpu_device_view(n, d, rv)))
                     .ok_or_else(|| ApiError::NotFound(format!("GpuDevice/{name}")))
             }
+            ResourceKind::InferenceServer => self
+                .platform
+                .serving_state(name)
+                .map(|s| ApiObject::InferenceServer(self.inference_server_view(s, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("InferenceServer/{name}"))),
         }
     }
 
@@ -1428,6 +1535,45 @@ impl ApiServer {
         };
         let BatchJobResource { metadata, conditions, .. } = &mut res;
         self.apply_overlay(ResourceKind::BatchJob, metadata, Some(conditions));
+        res
+    }
+
+    fn inference_server_view(&self, s: &ServerState, rv: u64) -> InferenceServerResource {
+        let mut labels = BTreeMap::new();
+        labels.insert("app".to_string(), "inference".to_string());
+        labels.insert("aiinfn/user".to_string(), s.spec.user.clone());
+        labels.insert("aiinfn/model".to_string(), s.spec.model.clone());
+        let mut res = InferenceServerResource {
+            metadata: Metadata {
+                name: s.spec.name.clone(),
+                namespace: "serving".to_string(),
+                labels,
+                resource_version: rv,
+                ..Default::default()
+            },
+            user: s.spec.user.clone(),
+            project: s.spec.project.clone(),
+            model: s.spec.model.clone(),
+            requests: s.spec.requests.clone(),
+            min_replicas: s.spec.min_replicas,
+            max_replicas: s.spec.max_replicas,
+            latency_slo: s.spec.latency_slo,
+            max_batch: s.spec.max_batch,
+            batch_window: s.spec.batch_window,
+            service_time: s.spec.service_time,
+            queue_depth: s.spec.queue_depth,
+            queue: s.spec.queue.clone(),
+            replicas: s.replicas.len() as u32,
+            ready_replicas: s.ready_count(),
+            state: s.state_str().to_string(),
+            total_requests: s.total_requests,
+            completed_requests: s.completed_requests,
+            failed_requests: s.failed_requests,
+            p95_latency: s.last_p95,
+            conditions: Vec::new(),
+        };
+        let InferenceServerResource { metadata, conditions, .. } = &mut res;
+        self.apply_overlay(ResourceKind::InferenceServer, metadata, Some(conditions));
         res
     }
 

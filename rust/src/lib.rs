@@ -33,7 +33,7 @@
 //! External consumers do not poke platform internals: all reads and writes
 //! flow through [`api::ApiServer`] — a Kubernetes-apiserver-like front door
 //! with typed resources (`Session`, `BatchJob`, `Pod`, `Node`, `Workload`,
-//! `Site`, `GpuDevice`), declarative verbs (`create` / `update` / `patch` / `apply` /
+//! `Site`, `GpuDevice`, `InferenceServer`), declarative verbs (`create` / `update` / `patch` / `apply` /
 //! `update_status` / `delete`, plus `get` / `list` with `=`/`!=`/`in`/
 //! `notin` selectors), bearer-token authentication via the hub's
 //! [`hub::auth::AuthService`], and `watch` streams serving
@@ -104,6 +104,31 @@
 //! `Modified` event per repartition. `examples/gpu_sharing.rs` reproduces
 //! the paper's 7-users-per-A100 claim from a cold whole-GPU cluster.
 //!
+//! ## Inference serving
+//!
+//! The [`serve`] subsystem turns the shared-MIG platform into a serving
+//! substrate. An `InferenceServer` (the eighth API kind) declares a model,
+//! a MIG-slice-sized per-replica request, autoscale bounds (`min` may be
+//! 0 — scale-to-zero), a p95 latency SLO, and batching knobs; the serving
+//! reconciler ([`platform::reconcile::serve`]) realizes replicas as pods
+//! through the same admission → Kueue (a zero-nominal `serving-cq`
+//! borrowing idle cohort quota) → scheduler path every other workload
+//! takes, so serving demand drives MIG repartitioning like any queued
+//! slice demand. Requests come from a seeded open-loop generator
+//! ([`sim::traffic`]: diurnal baselines + Poisson bursts) drained at tick
+//! boundaries exactly like chaos faults — golden-trace determinism holds
+//! with serving live. A deterministic least-outstanding-requests balancer
+//! ([`serve::balancer`]) water-fills arrivals over ready replicas with
+//! bounded per-replica queues (overflow is shed and *counted*, never
+//! silently dropped) and models batch-fill latency; the autoscaler
+//! ([`serve::autoscaler`]) reads p95/queue-depth/arrival-rate signals
+//! back from the TSDB — it sees what a dashboard sees — and walks the
+//! fleet within `[min, max]` under the `serving.*` config knobs
+//! (scale interval, idle grace, cold-start penalty, target utilization).
+//! `examples/inference_serving.rs` runs a diurnal day on 3×A100 colocated
+//! with batch; `benches/inference_serving.rs` measures p50/p95/p99 and
+//! sustained QPS at the 1k-node regime (`BENCH_serving.json`).
+//!
 //! ## Chaos + resilience
 //!
 //! Failure is the normal case for a federation spanning WLCG sites and an
@@ -144,6 +169,7 @@ pub mod offload;
 pub mod platform;
 pub mod queue;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod storage;
 pub mod util;

@@ -59,6 +59,42 @@ pub struct PlatformConfig {
     /// tiebreaks Kueue admission within a priority band. Non-positive
     /// disables decay. Config key: `fairshare.half_life`.
     pub fairshare_half_life: f64,
+    /// LocalQueue serving replica workloads are submitted to (the
+    /// admission chain defaults `spec.queue` on InferenceServer writes
+    /// from this). Config key: `serving.queue`.
+    pub serving_queue: String,
+    /// Seconds between autoscaler evaluations per server. Config key:
+    /// `serving.scale_interval_seconds`.
+    pub serving_scale_interval: f64,
+    /// Seconds of zero traffic and zero queued work before a server is
+    /// collapsed to `minReplicas` (zero if allowed). Config key:
+    /// `serving.idle_grace_seconds`.
+    pub serving_idle_grace: f64,
+    /// Model-load time added after the replica pod reaches Running before
+    /// it serves traffic (the scale-from-zero penalty). Config key:
+    /// `serving.cold_start_seconds`.
+    pub serving_cold_start: f64,
+    /// Fraction of saturated batch throughput the autoscaler sizes for.
+    /// Config key: `serving.target_utilization`.
+    pub serving_target_utilization: f64,
+    /// Admission defaults for unset InferenceServer batching knobs.
+    /// Config keys: `serving.default_max_batch`,
+    /// `serving.default_batch_window_seconds`,
+    /// `serving.default_queue_depth`, `serving.default_service_time`.
+    pub serving_default_max_batch: u32,
+    pub serving_default_batch_window: f64,
+    pub serving_default_queue_depth: u32,
+    pub serving_default_service_time: f64,
+    /// Upper bound the validator enforces on `spec.batchWindow` (a flush
+    /// window beyond this starves latency for throughput). Config key:
+    /// `serving.max_batch_window_seconds`.
+    pub serving_max_batch_window: f64,
+    /// Seed for `Platform::install_traffic`'s burst sampling. Config key:
+    /// `traffic.seed`.
+    pub traffic_seed: u64,
+    /// Expected Poisson bursts per hour per pattern sampled by
+    /// `install_traffic`. Config key: `traffic.bursts_per_hour`.
+    pub traffic_bursts_per_hour: f64,
 }
 
 impl PlatformConfig {
@@ -161,6 +197,52 @@ impl PlatformConfig {
                 .at(&["fairshare", "half_life"])
                 .and_then(Json::as_f64)
                 .unwrap_or(86_400.0),
+            serving_queue: j
+                .at(&["serving", "queue"])
+                .and_then(Json::as_str)
+                .unwrap_or("serving")
+                .to_string(),
+            serving_scale_interval: j
+                .at(&["serving", "scale_interval_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(30.0),
+            serving_idle_grace: j
+                .at(&["serving", "idle_grace_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(300.0),
+            serving_cold_start: j
+                .at(&["serving", "cold_start_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(45.0),
+            serving_target_utilization: j
+                .at(&["serving", "target_utilization"])
+                .and_then(Json::as_f64)
+                .unwrap_or(0.7),
+            serving_default_max_batch: j
+                .at(&["serving", "default_max_batch"])
+                .and_then(Json::as_i64)
+                .unwrap_or(8) as u32,
+            serving_default_batch_window: j
+                .at(&["serving", "default_batch_window_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(0.02),
+            serving_default_queue_depth: j
+                .at(&["serving", "default_queue_depth"])
+                .and_then(Json::as_i64)
+                .unwrap_or(128) as u32,
+            serving_default_service_time: j
+                .at(&["serving", "default_service_time"])
+                .and_then(Json::as_f64)
+                .unwrap_or(0.05),
+            serving_max_batch_window: j
+                .at(&["serving", "max_batch_window_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0),
+            traffic_seed: j.at(&["traffic", "seed"]).and_then(Json::as_i64).unwrap_or(42) as u64,
+            traffic_bursts_per_hour: j
+                .at(&["traffic", "bursts_per_hour"])
+                .and_then(Json::as_f64)
+                .unwrap_or(0.25),
         })
     }
 

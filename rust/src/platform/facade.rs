@@ -42,8 +42,10 @@ use crate::offload::vk::VirtualKubelet;
 use crate::platform::config::PlatformConfig;
 use crate::platform::reconcile::Runtime;
 use crate::queue::kueue::{ClusterQueue, Kueue, LocalQueue, PriorityClass, WorkloadState};
+use crate::serve::ServerState;
 use crate::sim::chaos::{ChaosEngine, ChaosPlan, Fault};
 use crate::sim::clock::{SimClock, Time};
+use crate::sim::traffic::TrafficEngine;
 use crate::sim::engine::Engine;
 use crate::storage::nfs::NfsServer;
 use crate::storage::object::ObjectStore;
@@ -141,6 +143,17 @@ pub struct PlatformMetrics {
     pub terminal_failures: u64,
     /// MIG layouts applied by the demand-driven partition reconciler.
     pub repartitions: u64,
+    /// Inference requests offered to the serving subsystem.
+    pub serving_requests: u64,
+    /// Inference requests completed by serving replicas.
+    pub serving_completions: u64,
+    /// Inference requests shed (bounded queues full) or lost to replica
+    /// failure — counted and surfaced, never silently dropped.
+    pub serving_failures: u64,
+    /// Autoscaler decisions that changed a server's desired replica count.
+    pub serving_scale_events: u64,
+    /// Replica cold starts completed (pod Running + model load).
+    pub serving_cold_starts: u64,
 }
 
 /// The assembled platform.
@@ -176,6 +189,17 @@ pub struct Platform {
     pub(crate) health: HealthTracker,
     /// Installed fault schedule, if any; drained at each tick boundary.
     pub(crate) chaos: Option<ChaosEngine>,
+    /// Installed inference traffic generator, if any; drained at each tick
+    /// boundary exactly like chaos (same seed + cadence ⇒ same arrivals).
+    pub(crate) traffic: Option<TrafficEngine>,
+    /// End of the last drained traffic window.
+    pub(crate) traffic_drained_to: Time,
+    /// Arrivals drained this tick, `(window, per-server counts)` — consumed
+    /// by the serving controller's Sync pass.
+    pub(crate) serving_arrivals: Option<((Time, Time), Vec<(String, u64)>)>,
+    /// Serving state per `InferenceServer`, keyed by name (sorted:
+    /// deterministic reconcile order).
+    pub(crate) serving: BTreeMap<String, ServerState>,
     /// Accelerator units removed by GPU-degradation faults, keyed by
     /// (node, resource) — recovery restores exactly what was taken.
     degraded: HashMap<(String, String), i64>,
@@ -265,6 +289,22 @@ impl Platform {
             name: config.batch_queue.clone(),
             cluster_queue: "batch-cq".into(),
         });
+        // serving: a zero-nominal ClusterQueue in the same cohort — replica
+        // workloads admit purely by borrowing idle interactive/batch quota,
+        // so always-on endpoints share the MIG slices instead of owning a
+        // static carve-out (and fair-share/preemption apply unchanged).
+        kueue.add_cluster_queue(ClusterQueue {
+            name: "serving-cq".into(),
+            cohort: Some("ai-infn".into()),
+            nominal: ResourceVec::new(),
+            used: ResourceVec::new(),
+            can_borrow: true,
+            can_lend: true,
+        });
+        kueue.add_local_queue(LocalQueue {
+            name: config.serving_queue.clone(),
+            cluster_queue: "serving-cq".into(),
+        });
 
         // registry: the paper's 78 users / 20 projects
         let mut registry = Registry::new();
@@ -311,6 +351,10 @@ impl Platform {
             vk_index,
             health,
             chaos: None,
+            traffic: None,
+            traffic_drained_to: 0.0,
+            serving_arrivals: None,
+            serving: BTreeMap::new(),
             degraded: HashMap::new(),
             fairshare: FairShare::new(config_fairshare_half_life),
             runtime: Some(Runtime::standard()),
@@ -678,6 +722,17 @@ impl Platform {
         };
         for f in due {
             self.apply_fault(f, now);
+        }
+
+        // traffic: drain inference arrivals for the window since the last
+        // tick; the serving controller consumes them during this dispatch
+        if let Some(t) = self.traffic.as_mut() {
+            let from = self.traffic_drained_to;
+            if now > from {
+                let arrivals = t.drain(from, now);
+                self.serving_arrivals = Some(((from, now), arrivals));
+                self.traffic_drained_to = now;
+            }
         }
 
         // dispatch the informer-driven controllers (GC, queue admission,

@@ -7,6 +7,7 @@
 pub mod config;
 pub mod facade;
 pub mod reconcile;
+pub mod serving;
 
 pub use config::{default_config_path, PlatformConfig};
 pub use facade::{BatchSubmission, Platform, PlatformMetrics, RestartPolicy};

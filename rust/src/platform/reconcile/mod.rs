@@ -41,6 +41,7 @@
 //! | session lifecycle | [`session`] | periodic idle culling |
 //! | monitoring | [`monitoring`] | scrape timer |
 //! | gpu partition | [`gpu`] | periodic queued-accelerator-demand scan |
+//! | serving | [`serve`] | drained traffic arrivals + autoscale timer + `InferenceServer` deletions |
 
 pub mod gc;
 pub mod gpu;
@@ -50,6 +51,7 @@ pub mod monitoring;
 pub mod offload;
 pub mod queueing;
 pub mod scheduling;
+pub mod serve;
 pub mod session;
 
 use std::collections::{HashSet, VecDeque};
@@ -136,6 +138,7 @@ impl Runtime {
             Box::new(session::SessionController),
             Box::new(monitoring::MonitoringController::new()),
             Box::new(gpu::GpuPartitionController::new()),
+            Box::new(serve::ServeController::new()),
         ];
         let n = controllers.len();
         let mut rt = Runtime {

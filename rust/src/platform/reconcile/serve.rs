@@ -1,0 +1,77 @@
+//! The serving controller: drives every `InferenceServer`'s request plane
+//! and autoscale loop once per tick.
+//!
+//! A `Sync`-driven loop (like monitoring): each dispatch it takes the
+//! traffic arrivals the facade drained at the tick boundary and steps
+//! every registered server through [`Platform::step_serving`] — replica
+//! convergence against Kueue/store truth, the balancer window, TSDB
+//! ingestion, and the scale-interval autoscale evaluation. Servers step in
+//! name order over a sorted map, and the arrival counts come from the
+//! seeded open-loop generator, so a fixed seed and tick cadence reproduce
+//! the identical serving transition log (golden-trace determinism).
+//!
+//! The controller also subscribes to `Deletion(InferenceServer, name)`
+//! intents from the API server's delete verb and tears the fleet down
+//! through [`Platform::delete_inference_server`].
+
+use crate::api::resources::ResourceKind;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+use crate::sim::clock::Time;
+
+pub struct ServeController {
+    /// End of the last stepped window (balancer time advances even when no
+    /// traffic engine is installed — queues still drain).
+    stepped_to: Option<Time>,
+}
+
+impl ServeController {
+    pub fn new() -> Self {
+        ServeController { stepped_to: None }
+    }
+}
+
+impl Default for ServeController {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Reconciler for ServeController {
+    fn name(&self) -> &'static str {
+        "serving"
+    }
+
+    fn interested(&self, key: &Key) -> bool {
+        matches!(key, Key::Deletion(ResourceKind::InferenceServer, _))
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        let p = &mut *ctx.platform;
+        let now = ctx.now;
+        match key {
+            Key::Deletion(ResourceKind::InferenceServer, name) => {
+                p.delete_inference_server(name).ok();
+                Ok(Requeue::Done)
+            }
+            Key::Sync => {
+                let (window, arrivals) = match p.serving_arrivals.take() {
+                    Some((w, a)) => (w, a),
+                    None => ((self.stepped_to.unwrap_or(now), now), Vec::new()),
+                };
+                let (from, to) = window;
+                self.stepped_to = Some(to);
+                let names = p.inference_server_names();
+                for name in names {
+                    let n = arrivals
+                        .iter()
+                        .find(|(s, _)| s == &name)
+                        .map(|(_, n)| *n)
+                        .unwrap_or(0);
+                    p.step_serving(&name, n, from, to);
+                }
+                Ok(Requeue::After(0.0))
+            }
+            _ => Ok(Requeue::Done),
+        }
+    }
+}

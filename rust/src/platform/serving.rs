@@ -1,0 +1,445 @@
+//! Platform-side serving operations: the verbs and per-tick plumbing that
+//! realize [`InferenceServer`]s as replica pods on the shared cluster.
+//!
+//! Split out of the facade: everything here is `impl Platform`, called by
+//! the API server's verbs (create/update/delete) and by the serving
+//! reconciler ([`crate::platform::reconcile::serve`]) once per tick. The
+//! flow per server:
+//!
+//! 1. **converge replicas** — walk the fleet against Kueue + store truth:
+//!    admitted workloads get pod incarnations, pods that reached Running
+//!    finish their model-load cold start and become Ready, dead/preempted
+//!    pods requeue through Kueue (outstanding requests counted as failed,
+//!    never silently dropped);
+//! 2. **balancer window** — [`crate::serve::balancer::step_window`] with
+//!    this tick's drained traffic arrivals;
+//! 3. **TSDB ingest** — p95 / queue depth / arrival rate / replica counts
+//!    under `serving_*` series keyed by `server=<name>`;
+//! 4. **autoscale** — at `serving.scale_interval_seconds` cadence, read
+//!    the signals *back from the TSDB* (the loop sees what a dashboard
+//!    sees) and converge the fleet toward the policy's desired count.
+//!
+//! Replica workloads go through `kueue.submit_for_user` on the `serving`
+//! LocalQueue (a zero-nominal ClusterQueue borrowing cohort headroom), so
+//! admission, fair share, preemption, MIG-slice scheduling, and the
+//! demand-driven repartitioner all apply to serving exactly as they do to
+//! sessions and batch.
+//!
+//! [`InferenceServer`]: crate::api::resources::InferenceServerResource
+
+use crate::cluster::pod::{Payload, PodPhase, PodSpec};
+use crate::monitoring::tsdb::SeriesKey;
+use crate::platform::facade::Platform;
+use crate::queue::kueue::{PriorityClass, WorkloadState};
+use crate::serve::{
+    balancer, desired_replicas, Replica, ReplicaPhase, ScalePolicy, ScaleSignals, ServerState,
+    ServingSpec,
+};
+use crate::sim::clock::Time;
+use crate::sim::traffic::{TrafficEngine, TrafficPattern, TrafficPlan};
+
+/// Serving replicas run until explicitly retired: the payload outlives any
+/// realistic campaign horizon.
+const REPLICA_RUN_FOREVER: Time = 1e9;
+
+impl Platform {
+    // ------------------------------------------------------------ verbs
+
+    /// Register an inference server and submit its initial replica fleet
+    /// (one warm replica even when `minReplicas == 0`, so the endpoint
+    /// does not begin life with a cold-start penalty).
+    pub fn create_inference_server(&mut self, spec: ServingSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.serving.contains_key(&spec.name),
+            "inference server {} already exists",
+            spec.name
+        );
+        let now = self.engine.now();
+        let mut s = ServerState::new(spec, now);
+        s.desired = s.spec.min_replicas.max(1).min(s.spec.max_replicas);
+        s.next_scale_at = now + self.config.serving_scale_interval;
+        s.push_log(
+            now,
+            format!(
+                "created model={} min={} max={} slo={:.3}s desired={}",
+                s.spec.model, s.spec.min_replicas, s.spec.max_replicas, s.spec.latency_slo, s.desired
+            ),
+        );
+        self.reconcile_serving_fleet(&mut s, now);
+        self.serving.insert(s.spec.name.clone(), s);
+        Ok(())
+    }
+
+    /// Replace the mutable scaling/batching knobs (what the API server's
+    /// update verb applies after admission; identity fields are immutable).
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_inference_server(
+        &mut self,
+        name: &str,
+        min_replicas: u32,
+        max_replicas: u32,
+        latency_slo: f64,
+        max_batch: u32,
+        batch_window: f64,
+        queue_depth: u32,
+    ) -> anyhow::Result<()> {
+        let now = self.engine.now();
+        let mut s = self
+            .serving
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("no inference server {name}"))?;
+        s.spec.min_replicas = min_replicas;
+        s.spec.max_replicas = max_replicas;
+        s.spec.latency_slo = latency_slo;
+        s.spec.max_batch = max_batch;
+        s.spec.batch_window = batch_window;
+        s.spec.queue_depth = queue_depth;
+        s.desired = s.desired.clamp(min_replicas.min(max_replicas), max_replicas);
+        s.push_log(
+            now,
+            format!("spec-updated min={min_replicas} max={max_replicas} slo={latency_slo:.3}s"),
+        );
+        self.reconcile_serving_fleet(&mut s, now);
+        self.serving.insert(name.to_string(), s);
+        Ok(())
+    }
+
+    /// Tear an inference server down: retire every replica (pods finished,
+    /// workloads released), count still-queued requests as failed — they
+    /// will never complete and must not vanish silently — and drop the
+    /// traffic pattern so the generator stops producing arrivals for it.
+    pub fn delete_inference_server(&mut self, name: &str) -> anyhow::Result<()> {
+        let now = self.engine.now();
+        let mut s = self
+            .serving
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("no inference server {name}"))?;
+        let indices: Vec<u32> = s.replicas.keys().copied().collect();
+        for idx in indices {
+            self.retire_replica(&mut s, idx, now, "server deleted");
+        }
+        // retire_replica parks outstanding work in the backlog; on delete
+        // that work is terminally failed, and surfaced as such.
+        let orphaned = s.backlog;
+        if orphaned > 0 {
+            s.failed_requests += orphaned;
+            self.metrics.serving_failures += orphaned;
+        }
+        if let Some(t) = self.traffic.as_mut() {
+            t.remove(now, name);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------- per-tick op
+
+    /// One serving step for `name`: converge replicas, run the balancer
+    /// window, ingest metrics, autoscale on cadence. Called by the serving
+    /// reconciler with this tick's drained arrivals.
+    pub(crate) fn step_serving(&mut self, name: &str, arrivals: u64, from: Time, to: Time) {
+        let Some(mut s) = self.serving.remove(name) else { return };
+        let now = to;
+        self.converge_replicas(&mut s, now);
+
+        let report = balancer::step_window(&mut s, arrivals, from, to);
+        self.metrics.serving_requests += report.arrivals;
+        self.metrics.serving_completions += report.served;
+        self.metrics.serving_failures += report.shed;
+
+        let dt = (to - from).max(1e-9);
+        let key = |metric: &str| SeriesKey::new(metric, &[("server", name)]);
+        self.tsdb.ingest(key("serving_arrival_rate"), now, arrivals as f64 / dt);
+        self.tsdb.ingest(key("serving_queue_depth"), now, report.queue_depth as f64);
+        self.tsdb.ingest(key("serving_ready_replicas"), now, s.ready_count() as f64);
+        self.tsdb.ingest(key("serving_replicas"), now, s.replicas.len() as f64);
+        self.tsdb.ingest(key("serving_completed_total"), now, s.completed_requests as f64);
+        self.tsdb.ingest(key("serving_failed_total"), now, s.failed_requests as f64);
+        if let Some(p95) = report.p95 {
+            // sparse series: only windows that completed requests report a
+            // latency — the autoscaler's checked reads handle the gaps
+            self.tsdb.ingest(key("serving_p95_seconds"), now, p95);
+        }
+
+        if now >= s.next_scale_at {
+            self.autoscale_server(&mut s, now);
+            s.next_scale_at = now + self.config.serving_scale_interval;
+        }
+        self.reconcile_serving_fleet(&mut s, now);
+        self.serving.insert(name.to_string(), s);
+    }
+
+    /// Walk the fleet against Kueue/store truth (phase transitions,
+    /// failures, preemptions).
+    fn converge_replicas(&mut self, s: &mut ServerState, now: Time) {
+        let cold_start = self.config.serving_cold_start;
+        let mut logs: Vec<(Time, String)> = Vec::new();
+        let mut lost_requests = 0u64;
+        for r in s.replicas.values_mut() {
+            let wl_state = self.kueue.workload(&r.workload).map(|w| w.state.clone());
+            match r.phase {
+                ReplicaPhase::Queued => {
+                    if wl_state == Some(WorkloadState::Admitted) {
+                        r.incarnation += 1;
+                        r.pod = format!("{}-r{}-i{}", s.spec.name, r.index, r.incarnation);
+                        let spec = PodSpec::new(
+                            r.pod.clone(),
+                            s.spec.requests.clone(),
+                            Payload::Sleep { duration: REPLICA_RUN_FOREVER },
+                        )
+                        .with_label("app", "inference")
+                        .with_label("aiinfn/inferenceserver", &s.spec.name)
+                        .with_label("aiinfn/workload", &r.workload)
+                        .with_owner(&s.spec.user, &s.spec.project)
+                        .with_priority(PriorityClass::Interactive.value())
+                        .in_namespace("serving");
+                        self.store.borrow_mut().create_pod(spec, now);
+                        r.phase = ReplicaPhase::Starting;
+                        r.ready_at = None;
+                        logs.push((now, format!("replica r{} pod {} created", r.index, r.pod)));
+                    }
+                }
+                ReplicaPhase::Starting | ReplicaPhase::Ready => {
+                    let pod = self
+                        .store
+                        .borrow()
+                        .pod(&r.pod)
+                        .map(|p| (p.status.phase, p.status.started_at));
+                    let live = matches!(
+                        pod,
+                        Some((PodPhase::Pending | PodPhase::Scheduled | PodPhase::Running, _))
+                    );
+                    if !live {
+                        // pod died (node failure, kubelet failure): count
+                        // its queued requests as failed and requeue the
+                        // workload for a fresh incarnation
+                        lost_requests += r.outstanding;
+                        if r.outstanding > 0 {
+                            logs.push((
+                                now,
+                                format!("replica r{} lost {} queued requests", r.index, r.outstanding),
+                            ));
+                        }
+                        r.outstanding = 0;
+                        r.cap_carry = 0.0;
+                        r.ready_at = None;
+                        if wl_state == Some(WorkloadState::Admitted) {
+                            self.kueue.requeue(&r.workload, now).ok();
+                        }
+                        r.phase = ReplicaPhase::Queued;
+                        logs.push((now, format!("replica r{} pod {} gone; requeued", r.index, r.pod)));
+                    } else if wl_state != Some(WorkloadState::Admitted) {
+                        // preempted by Kueue while the pod was live: tear
+                        // the pod down ourselves (the batch queueing
+                        // controller only handles batch workloads)
+                        lost_requests += r.outstanding;
+                        r.outstanding = 0;
+                        r.cap_carry = 0.0;
+                        r.ready_at = None;
+                        let mut st = self.store.borrow_mut();
+                        match pod.map(|(ph, _)| ph) {
+                            Some(PodPhase::Pending) => {
+                                st.cancel_pending(&r.pod, now, "kueue preemption (serving)").ok();
+                            }
+                            _ => {
+                                st.evict_pod(&r.pod, now, false, "kueue preemption (serving)").ok();
+                            }
+                        }
+                        drop(st);
+                        self.metrics.evictions += 1;
+                        r.phase = ReplicaPhase::Queued;
+                        logs.push((now, format!("replica r{} preempted; requeued", r.index)));
+                    } else if let Some((PodPhase::Running, Some(started))) = pod {
+                        if r.phase == ReplicaPhase::Starting {
+                            let ready_at = started + cold_start;
+                            r.ready_at = Some(ready_at);
+                            if now >= ready_at {
+                                r.phase = ReplicaPhase::Ready;
+                                self.metrics.serving_cold_starts += 1;
+                                logs.push((
+                                    now,
+                                    format!(
+                                        "replica r{} ready (cold start {:.0}s)",
+                                        r.index, cold_start
+                                    ),
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if lost_requests > 0 {
+            s.failed_requests += lost_requests;
+            self.metrics.serving_failures += lost_requests;
+        }
+        for (at, line) in logs {
+            s.push_log(at, line);
+        }
+    }
+
+    /// Autoscale from TSDB-observed signals (on the scale-interval cadence).
+    fn autoscale_server(&mut self, s: &mut ServerState, now: Time) {
+        let interval = self.config.serving_scale_interval;
+        let key = |metric: &str| SeriesKey::new(metric, &[("server", s.spec.name.as_str())]);
+        let sig = ScaleSignals {
+            p95: self.tsdb.max_over(&key("serving_p95_seconds"), now - interval, now),
+            queue_depth: self.tsdb.instant(&key("serving_queue_depth"), now).unwrap_or(0.0),
+            arrival_rate: self
+                .tsdb
+                .avg_over(&key("serving_arrival_rate"), now - interval, now)
+                .unwrap_or(0.0),
+            current: s.replicas.len() as u32,
+            idle_for: (now - s.last_active).max(0.0),
+        };
+        let policy = ScalePolicy {
+            target_utilization: self.config.serving_target_utilization,
+            idle_grace: self.config.serving_idle_grace,
+            scale_interval: interval,
+        };
+        let desired = desired_replicas(&s.spec, &policy, &sig);
+        if desired != s.desired {
+            s.push_log(
+                now,
+                format!(
+                    "scale {} -> {} p95={} queue={:.0} rate={:.1}rps",
+                    s.desired,
+                    desired,
+                    sig.p95.map(|p| format!("{p:.3}s")).unwrap_or_else(|| "-".into()),
+                    sig.queue_depth,
+                    sig.arrival_rate,
+                ),
+            );
+            s.desired = desired;
+            self.metrics.serving_scale_events += 1;
+        }
+    }
+
+    /// Converge the replica fleet toward `desired`: submit new workloads
+    /// or retire surplus replicas (cheapest first: Queued, then Starting,
+    /// then Ready — highest index within each class).
+    fn reconcile_serving_fleet(&mut self, s: &mut ServerState, now: Time) {
+        while (s.replicas.len() as u32) < s.desired {
+            let idx = s.next_index;
+            s.next_index += 1;
+            let wl = format!("wl-{}-r{}", s.spec.name, idx);
+            if let Err(e) = self.kueue.submit_for_user(
+                &wl,
+                &s.spec.queue,
+                &s.spec.user,
+                PriorityClass::Interactive,
+                s.spec.requests.clone(),
+                now,
+            ) {
+                s.push_log(now, format!("replica r{idx} submit failed: {e}"));
+                return;
+            }
+            s.replicas.insert(
+                idx,
+                Replica {
+                    index: idx,
+                    workload: wl,
+                    pod: String::new(),
+                    phase: ReplicaPhase::Queued,
+                    incarnation: 0,
+                    ready_at: None,
+                    outstanding: 0,
+                    cap_carry: 0.0,
+                },
+            );
+            s.push_log(now, format!("replica r{idx} submitted"));
+        }
+        while (s.replicas.len() as u32) > s.desired {
+            let victim = s
+                .replicas
+                .values()
+                .max_by_key(|r| {
+                    let class = match r.phase {
+                        ReplicaPhase::Queued => 2,
+                        ReplicaPhase::Starting => 1,
+                        ReplicaPhase::Ready => 0,
+                    };
+                    (class, r.index)
+                })
+                .map(|r| r.index)
+                .expect("non-empty fleet");
+            self.retire_replica(s, victim, now, "scaled down");
+        }
+    }
+
+    /// Retire one replica: park its queued requests in the balancer
+    /// backlog (surviving replicas drain them next window), finish the pod
+    /// and the Kueue workload, drop the record.
+    fn retire_replica(&mut self, s: &mut ServerState, idx: u32, now: Time, why: &str) {
+        let Some(r) = s.replicas.remove(&idx) else { return };
+        if r.outstanding > 0 {
+            if s.backlog == 0 && s.backlog_since.is_none() {
+                s.backlog_since = Some(now);
+            }
+            s.backlog += r.outstanding;
+        }
+        if !r.pod.is_empty() {
+            let phase = self.store.borrow().pod(&r.pod).map(|p| p.status.phase);
+            let mut st = self.store.borrow_mut();
+            match phase {
+                Some(PodPhase::Pending) => {
+                    st.cancel_pending(&r.pod, now, why).ok();
+                }
+                Some(PodPhase::Scheduled) | Some(PodPhase::Running) => {
+                    st.finish_pod(&r.pod, PodPhase::Succeeded, now, why).ok();
+                }
+                _ => {}
+            }
+        }
+        self.kueue.finish(&r.workload, now).ok();
+        s.push_log(now, format!("replica r{} retired ({why})", r.index));
+    }
+
+    // ---------------------------------------------------------- traffic
+
+    /// Install a pre-built traffic engine; arrivals are drained at every
+    /// tick boundary (the serving analogue of [`Platform::set_chaos`]).
+    pub fn set_traffic(&mut self, engine: TrafficEngine) {
+        self.traffic_drained_to = self.engine.now();
+        self.traffic = Some(engine);
+    }
+
+    /// Generate and install a traffic schedule from the config's
+    /// `traffic.*` knobs over the given baseline patterns.
+    pub fn install_traffic(&mut self, baselines: Vec<TrafficPattern>, horizon: Time) {
+        let plan = TrafficPlan {
+            seed: self.config.traffic_seed,
+            horizon,
+            bursts_per_hour: self.config.traffic_bursts_per_hour,
+            ..Default::default()
+        };
+        let engine = plan.generate(baselines);
+        self.set_traffic(engine);
+    }
+
+    /// The installed traffic engine (its log is part of the golden trace).
+    pub fn traffic(&self) -> Option<&TrafficEngine> {
+        self.traffic.as_ref()
+    }
+
+    // -------------------------------------------------------- accessors
+
+    /// Registered inference servers, in name order.
+    pub fn inference_server_names(&self) -> Vec<String> {
+        self.serving.keys().cloned().collect()
+    }
+
+    /// Read-only serving state for one server.
+    pub fn serving_state(&self, name: &str) -> Option<&ServerState> {
+        self.serving.get(name)
+    }
+
+    /// Every server's transition log, concatenated in name order (the
+    /// serving contribution to golden traces).
+    pub fn serving_trace(&self) -> String {
+        let mut out = String::new();
+        for s in self.serving.values() {
+            out.push_str(&s.trace());
+        }
+        out
+    }
+}

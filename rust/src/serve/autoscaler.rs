@@ -1,0 +1,194 @@
+//! Latency-aware replica autoscaling: a deterministic policy from TSDB
+//! signals to a desired replica count.
+//!
+//! Signals come from the monitoring TSDB, not from the balancer directly —
+//! the autoscaler sees exactly what a dashboard sees (p95 over the scale
+//! interval, instantaneous queue depth, mean arrival rate), so the loop
+//! stays honest about observability lag. The policy:
+//!
+//! * **rate sizing** — enough replicas to run at `target_utilization` of
+//!   saturated batch throughput against the observed arrival rate;
+//! * **queue drain** — enough extra capacity to drain the standing queue
+//!   within the SLO budget (this is what reacts to a burst before p95
+//!   climbs, and what triggers scale-from-zero: a cold backlog shows up as
+//!   queue depth);
+//! * **SLO breach** — observed p95 above the SLO forces at least one step
+//!   up from the current count even if rate math says otherwise;
+//! * **scale-to-zero** — no arrivals and no queued work for `idle_grace`
+//!   seconds collapses the fleet to `min_replicas` (zero if allowed);
+//! * **hysteresis** — downscales are deferred while p95 sits above half
+//!   the SLO, so a fleet that is barely keeping up isn't shrunk.
+//!
+//! The result is clamped to `[min_replicas, max_replicas]` — and because
+//! any nonzero rate sizes to ≥ 1, replicas never drop below the floor
+//! while traffic is flowing.
+
+use crate::sim::clock::Time;
+
+use super::ServingSpec;
+
+/// Platform-level autoscaling knobs (`serving.*` config section).
+#[derive(Debug, Clone, Copy)]
+pub struct ScalePolicy {
+    /// Fraction of saturated throughput to size for (headroom above it
+    /// absorbs arrival noise without queueing).
+    pub target_utilization: f64,
+    /// Seconds of no-traffic-no-queue before collapsing to `min_replicas`.
+    pub idle_grace: Time,
+    /// Seconds between autoscale evaluations.
+    pub scale_interval: Time,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        ScalePolicy { target_utilization: 0.7, idle_grace: 300.0, scale_interval: 30.0 }
+    }
+}
+
+/// Observed signals for one evaluation (read from the TSDB).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScaleSignals {
+    /// Worst window p95 over the last scale interval, if any window
+    /// completed requests ([`None`] ⇒ no latency data — sparse series).
+    pub p95: Option<f64>,
+    /// Standing queue (replica queues + balancer backlog).
+    pub queue_depth: f64,
+    /// Mean arrivals/second over the last scale interval.
+    pub arrival_rate: f64,
+    /// Current replica count (all phases).
+    pub current: u32,
+    /// Seconds since the server last saw arrivals or queued work.
+    pub idle_for: Time,
+}
+
+/// The policy function: desired replica count for one server.
+pub fn desired_replicas(spec: &ServingSpec, policy: &ScalePolicy, sig: &ScaleSignals) -> u32 {
+    let mu = spec.service_rate(); // per-replica req/s at saturation
+    let util = policy.target_utilization.clamp(0.05, 1.0);
+
+    // Capacity to carry the offered rate at target utilization...
+    let mut capacity = sig.arrival_rate / (mu * util);
+    // ...plus capacity to drain the standing queue within the SLO budget
+    // (never tighter than one batch service time).
+    let slo_budget = spec.latency_slo.max(spec.service_time);
+    capacity += sig.queue_depth / (mu * slo_budget);
+    let mut need = capacity.ceil() as u32;
+
+    // A breached SLO forces a step up even when rate math disagrees.
+    if sig.p95.map(|p| p > spec.latency_slo).unwrap_or(false) {
+        need = need.max(sig.current.saturating_add(1));
+    }
+
+    let idle = sig.arrival_rate <= 0.0 && sig.queue_depth <= 0.0;
+    if idle {
+        if sig.idle_for >= policy.idle_grace {
+            // Scale to the floor (zero if the spec allows it).
+            return spec.min_replicas.min(spec.max_replicas);
+        }
+        // Inside the grace window: keep one replica warm (if any exist) so
+        // a brief lull doesn't pay the cold-start penalty.
+        need = need.max(sig.current.min(1));
+    }
+
+    // Hysteresis: don't shrink a fleet that is barely inside the SLO.
+    if need < sig.current && sig.p95.map(|p| p > 0.5 * spec.latency_slo).unwrap_or(false) {
+        need = sig.current;
+    }
+
+    need.clamp(spec.min_replicas, spec.max_replicas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::spec;
+    use super::*;
+
+    // spec("m"): max_batch 8, service_time 0.08 ⇒ mu = 100 req/s; slo 0.5;
+    // min 0, max 4.
+
+    fn pol() -> ScalePolicy {
+        ScalePolicy::default()
+    }
+
+    #[test]
+    fn sizes_to_rate_over_target_utilization() {
+        let s = spec("m");
+        let sig = ScaleSignals { arrival_rate: 140.0, current: 1, ..Default::default() };
+        // 140 / (100 * 0.7) = 2.0 ⇒ 2 replicas.
+        assert_eq!(desired_replicas(&s, &pol(), &sig), 2);
+    }
+
+    #[test]
+    fn queue_pressure_adds_capacity() {
+        let s = spec("m");
+        // 300 queued, budget 0.5 s at 100/s ⇒ 6 replicas worth of drain,
+        // clamped to max 4. This is the scale-from-zero path: a cold
+        // backlog is pure queue depth with zero measured rate.
+        let sig = ScaleSignals { queue_depth: 300.0, current: 0, ..Default::default() };
+        assert_eq!(desired_replicas(&s, &pol(), &sig), 4);
+    }
+
+    #[test]
+    fn slo_breach_forces_step_up() {
+        let s = spec("m");
+        let sig = ScaleSignals {
+            p95: Some(0.9),
+            arrival_rate: 30.0, // rate math alone says 1
+            current: 2,
+            ..Default::default()
+        };
+        assert_eq!(desired_replicas(&s, &pol(), &sig), 3);
+    }
+
+    #[test]
+    fn scale_to_zero_after_idle_grace_only() {
+        let s = spec("m");
+        // Idle but inside the grace window: one replica stays warm.
+        let early = ScaleSignals { current: 2, idle_for: 120.0, ..Default::default() };
+        assert_eq!(desired_replicas(&s, &pol(), &early), 1);
+        // Grace expired: collapse to the floor (zero here; min wins else).
+        let late = ScaleSignals { current: 2, idle_for: 600.0, ..Default::default() };
+        assert_eq!(desired_replicas(&s, &pol(), &late), 0);
+        let mut floored = spec("m");
+        floored.min_replicas = 1;
+        assert_eq!(desired_replicas(&floored, &pol(), &early), 1);
+        assert_eq!(desired_replicas(&floored, &pol(), &late), 1);
+        // A server that never had replicas isn't spun up by idleness.
+        let never = ScaleSignals { current: 0, idle_for: 120.0, ..Default::default() };
+        assert_eq!(desired_replicas(&s, &pol(), &never), 0);
+    }
+
+    #[test]
+    fn never_below_floor_while_traffic_flows() {
+        let s = spec("m");
+        for rate in [0.1, 1.0, 50.0, 500.0] {
+            let sig = ScaleSignals { arrival_rate: rate, current: 0, ..Default::default() };
+            let d = desired_replicas(&s, &pol(), &sig);
+            assert!(d >= 1, "rate={rate} desired={d}");
+            assert!(d <= s.max_replicas);
+        }
+    }
+
+    #[test]
+    fn hysteresis_defers_shrink_near_slo() {
+        let s = spec("m");
+        // Rate says 1 replica, but p95 is at 0.6×SLO: hold at current.
+        let sig = ScaleSignals {
+            p95: Some(0.3),
+            arrival_rate: 30.0,
+            current: 3,
+            ..Default::default()
+        };
+        assert_eq!(desired_replicas(&s, &pol(), &sig), 3);
+        // Comfortably inside SLO ⇒ the shrink goes through.
+        let calm = ScaleSignals { p95: Some(0.1), arrival_rate: 30.0, current: 3, ..Default::default() };
+        assert_eq!(desired_replicas(&s, &pol(), &calm), 1);
+    }
+
+    #[test]
+    fn clamped_to_max() {
+        let s = spec("m");
+        let sig = ScaleSignals { arrival_rate: 10_000.0, current: 4, ..Default::default() };
+        assert_eq!(desired_replicas(&s, &pol(), &sig), 4);
+    }
+}

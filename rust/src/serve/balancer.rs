@@ -1,0 +1,309 @@
+//! Least-outstanding-requests load balancing with bounded queues and
+//! request batching, in aggregate (fluid) form.
+//!
+//! Once per reconciliation tick the controller hands the balancer the
+//! window's arrival count. [`step_window`] then:
+//!
+//! 1. **water-fills** arrivals (plus any cold-start backlog) over the
+//!    ready replicas, least-outstanding first — the continuous limit of
+//!    per-request least-outstanding-requests routing;
+//! 2. **serves** each replica's queue against its batch capacity for the
+//!    window (`max_batch / service_time` requests/second, with fractional
+//!    capacity carried between windows so short ticks don't starve);
+//! 3. **bounds** each queue at `queue_depth`, counting overflow as *shed* —
+//!    requests are never silently dropped, they land in
+//!    `failed_requests`;
+//! 4. **recovers latency** analytically: queue wait at head/tail of the
+//!    window, batch fill wait (the batch-size-vs-latency knob: a larger
+//!    `batch_window` trades latency for throughput), the service time
+//!    itself, and — for requests that sat in the zero-replica backlog —
+//!    the cold-start wait, recorded into the cumulative and per-window
+//!    histograms via `Histogram::record_n`.
+//!
+//! Everything is integer/float arithmetic over sorted maps: no RNG, no
+//! hash iteration — the same inputs always produce the same report, which
+//! golden-trace tests rely on.
+
+use crate::sim::clock::Time;
+
+use super::{ReplicaPhase, ServerState};
+
+/// What one balancer window did (feeds TSDB ingestion and metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WindowReport {
+    pub arrivals: u64,
+    pub served: u64,
+    /// Requests dropped because every bounded queue (or the zero-replica
+    /// backlog) was full. Counted into `failed_requests`, never silent.
+    pub shed: u64,
+    /// p95 over this window's completions (`None` when nothing finished).
+    pub p95: Option<f64>,
+    /// Queued work left at window end (replica queues + backlog).
+    pub queue_depth: u64,
+}
+
+/// Advance one server's request plane across the window `[from, to)` with
+/// `arrivals` new requests. Mutates queues, counters, and histograms;
+/// returns the window report.
+pub fn step_window(s: &mut ServerState, arrivals: u64, from: Time, to: Time) -> WindowReport {
+    let dt = (to - from).max(0.0);
+    s.total_requests += arrivals;
+    s.window.reset();
+
+    let mu = s.spec.service_rate(); // per-replica requests/second
+    let ready: Vec<u32> = s
+        .replicas
+        .values()
+        .filter(|r| r.phase == ReplicaPhase::Ready)
+        .map(|r| r.index)
+        .collect();
+
+    let mut report = WindowReport { arrivals, ..Default::default() };
+
+    if ready.is_empty() {
+        // Nothing can serve: buffer into the bounded backlog (scale-from-
+        // zero holds requests for the cold-start duration), shed overflow.
+        if arrivals > 0 && s.backlog_since.is_none() {
+            s.backlog_since = Some(from);
+        }
+        s.backlog += arrivals;
+        let cap = s.spec.queue_depth as u64 * s.spec.max_replicas.max(1) as u64;
+        if s.backlog > cap {
+            let shed = s.backlog - cap;
+            s.backlog = cap;
+            s.failed_requests += shed;
+            report.shed = shed;
+            s.push_log(to, format!("shed {shed} backlog-full cap={cap}"));
+        }
+        if arrivals > 0 || s.backlog > 0 {
+            s.last_active = to;
+        }
+        report.queue_depth = s.queued();
+        return report;
+    }
+
+    // Requests that waited in the backlog carry the cold-start penalty on
+    // top of normal queueing when they finally reach a replica.
+    let backlog = s.backlog;
+    let backlog_wait = match s.backlog_since {
+        Some(since) if backlog > 0 => (from - since).max(0.0),
+        _ => 0.0,
+    };
+    s.backlog = 0;
+    s.backlog_since = None;
+
+    // Water-fill `pool` over ready replicas, least-outstanding first: raise
+    // the common queue level until the pool is exhausted.
+    let pool = backlog + arrivals;
+    let mut levels: Vec<(u64, u32)> =
+        ready.iter().map(|i| (s.replicas[i].outstanding, *i)).collect();
+    levels.sort(); // (outstanding asc, index asc) — deterministic
+    let mut assigned: Vec<u64> = vec![0; levels.len()];
+    let mut remaining = pool;
+    let mut k = 0;
+    while remaining > 0 {
+        // Raise replicas [0..=k] up to the next level (or spread the rest).
+        let lift_to = if k + 1 < levels.len() { levels[k + 1].0 } else { u64::MAX };
+        let here = levels[k].0;
+        let span = (k + 1) as u64;
+        let room = (lift_to - here).saturating_mul(span).min(remaining);
+        let per = room / span;
+        let extra = room % span;
+        for (j, a) in assigned.iter_mut().take(k + 1).enumerate() {
+            *a += per + if (j as u64) < extra { 1 } else { 0 };
+        }
+        remaining -= room;
+        if k + 1 < levels.len() {
+            k += 1;
+        }
+    }
+
+    // Serve each replica against its batch capacity, bound the queue, and
+    // recover latency for this window's completions.
+    let per_replica_rate = if dt > 0.0 { pool as f64 / dt / ready.len() as f64 } else { 0.0 };
+    let fill_wait = if per_replica_rate > 0.0 {
+        // Expected wait for a batch to fill at the offered rate, capped by
+        // the flush window: the batching latency knob.
+        s.spec.batch_window.min((s.spec.max_batch.saturating_sub(1)) as f64 / (2.0 * per_replica_rate))
+    } else {
+        0.0
+    };
+    let base_latency = s.spec.service_time + fill_wait;
+
+    let mut shed_total = 0u64;
+    for (slot, (_, idx)) in levels.iter().enumerate() {
+        let r = s.replicas.get_mut(idx).expect("ready replica exists");
+        let q_before = r.outstanding + assigned[slot];
+        let cap = r.cap_carry + dt * mu;
+        let served = q_before.min(cap.floor() as u64);
+        // Carry at most one batch of unused capacity into the next window.
+        r.cap_carry = (cap - served as f64).min(s.spec.max_batch as f64);
+        let mut q_after = q_before - served;
+        if q_after > s.spec.queue_depth as u64 {
+            let shed = q_after - s.spec.queue_depth as u64;
+            q_after = s.spec.queue_depth as u64;
+            shed_total += shed;
+        }
+        r.outstanding = q_after;
+
+        if served > 0 {
+            // Head-of-window completions waited behind the pre-existing
+            // queue; tail completions behind what remains. Split evenly.
+            let wait_head = r.outstanding_wait(q_before.saturating_sub(served), mu);
+            let wait_tail = r.outstanding_wait(q_after, mu);
+            let head = served / 2;
+            let tail = served - head;
+            s.window.record_n(base_latency + wait_head + backlog_wait, head);
+            s.window.record_n(base_latency + wait_tail, tail);
+        }
+        report.served += served;
+    }
+    s.latency.merge(&s.window);
+    s.completed_requests += report.served;
+    if shed_total > 0 {
+        s.failed_requests += shed_total;
+        report.shed = shed_total;
+        s.push_log(to, format!("shed {shed_total} queue-full depth={}", s.spec.queue_depth));
+    }
+    if arrivals > 0 || s.queued() > 0 {
+        s.last_active = to;
+    }
+    report.p95 = s.window.percentile_checked(95.0);
+    if let Some(p) = report.p95 {
+        s.last_p95 = p;
+    }
+    report.queue_depth = s.queued();
+    report
+}
+
+impl super::Replica {
+    /// Expected queueing delay for a request behind `depth` others on a
+    /// replica draining at `mu` requests/second.
+    fn outstanding_wait(&self, depth: u64, mu: f64) -> f64 {
+        if mu > 0.0 { depth as f64 / mu } else { 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::spec;
+    use super::super::{Replica, ReplicaPhase, ServerState};
+    use super::*;
+
+    fn ready_replica(index: u32) -> Replica {
+        Replica {
+            index,
+            workload: format!("wl-m-r{index}"),
+            pod: format!("m-r{index}-i0"),
+            phase: ReplicaPhase::Ready,
+            incarnation: 0,
+            ready_at: Some(0.0),
+            outstanding: 0,
+            cap_carry: 0.0,
+        }
+    }
+
+    fn server(n_ready: u32) -> ServerState {
+        let mut s = ServerState::new(spec("m"), 0.0);
+        for i in 0..n_ready {
+            s.replicas.insert(i, ready_replica(i));
+        }
+        s.desired = n_ready;
+        s
+    }
+
+    #[test]
+    fn underload_serves_everything_within_slo() {
+        // 2 replicas at 100 req/s each, offered 50 req/s.
+        let mut s = server(2);
+        let mut served = 0;
+        for w in 0..30 {
+            let r = step_window(&mut s, 500, w as f64 * 10.0, (w + 1) as f64 * 10.0);
+            served += r.served;
+            assert_eq!(r.shed, 0);
+        }
+        assert_eq!(s.total_requests, 15_000);
+        assert_eq!(served + s.queued(), 15_000);
+        assert!(s.last_p95 <= s.spec.latency_slo, "p95={}", s.last_p95);
+        // accounting invariant: nothing silently dropped
+        assert_eq!(s.completed_requests + s.failed_requests + s.queued(), s.total_requests);
+    }
+
+    #[test]
+    fn overload_sheds_and_counts() {
+        // 1 replica at 100 req/s offered 1000 req/s: queues bound at
+        // queue_depth, the rest is counted as failed.
+        let mut s = server(1);
+        for w in 0..10 {
+            step_window(&mut s, 10_000, w as f64 * 10.0, (w + 1) as f64 * 10.0);
+        }
+        assert!(s.failed_requests > 0);
+        assert!(s.replicas[&0].outstanding <= s.spec.queue_depth as u64);
+        assert_eq!(s.completed_requests + s.failed_requests + s.queued(), s.total_requests);
+        assert!(s.trace().contains("shed"));
+    }
+
+    #[test]
+    fn least_outstanding_evens_out_queues() {
+        let mut s = server(3);
+        s.replicas.get_mut(&0).unwrap().outstanding = 90;
+        // 60 arrivals with dt=0 (no service): all go to the emptier two.
+        step_window(&mut s, 60, 0.0, 0.0);
+        assert_eq!(s.replicas[&0].outstanding, 90);
+        assert_eq!(s.replicas[&1].outstanding, 30);
+        assert_eq!(s.replicas[&2].outstanding, 30);
+    }
+
+    #[test]
+    fn zero_replicas_buffers_then_sheds_at_bound() {
+        let mut s = server(0);
+        s.spec.max_replicas = 2;
+        s.spec.queue_depth = 100;
+        let r = step_window(&mut s, 150, 0.0, 10.0);
+        assert_eq!(r.shed, 0);
+        assert_eq!(s.backlog, 150);
+        assert_eq!(s.backlog_since, Some(0.0));
+        let r = step_window(&mut s, 150, 10.0, 20.0);
+        assert_eq!(r.shed, 100); // bound = 100 * 2
+        assert_eq!(s.backlog, 200);
+        assert_eq!(s.completed_requests + s.failed_requests + s.queued(), s.total_requests);
+    }
+
+    #[test]
+    fn backlog_drains_with_cold_start_penalty_when_replica_appears() {
+        let mut s = server(0);
+        step_window(&mut s, 100, 0.0, 10.0); // buffered at t=0
+        s.replicas.insert(0, ready_replica(0));
+        let r = step_window(&mut s, 0, 60.0, 70.0);
+        assert!(r.served > 0);
+        assert_eq!(s.backlog, 0);
+        // Head-of-line requests waited ≥ 60s in the backlog.
+        assert!(s.window.percentile(95.0) >= 10.0, "p95={}", s.window.percentile(95.0));
+    }
+
+    #[test]
+    fn batching_window_trades_latency() {
+        // Same offered load, bigger batch window ⇒ higher recovered latency
+        // (requests wait for batches to fill).
+        let run = |batch_window: f64| {
+            let mut s = server(2);
+            s.spec.batch_window = batch_window;
+            for w in 0..20 {
+                step_window(&mut s, 100, w as f64 * 10.0, (w + 1) as f64 * 10.0);
+            }
+            s.latency.mean()
+        };
+        assert!(run(0.5) > run(0.0));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = server(2);
+        let mut b = server(2);
+        for w in 0..50 {
+            let (f, t) = (w as f64 * 10.0, (w + 1) as f64 * 10.0);
+            assert_eq!(step_window(&mut a, 777, f, t), step_window(&mut b, 777, f, t));
+        }
+        assert_eq!(a.trace(), b.trace());
+    }
+}

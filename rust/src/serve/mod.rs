@@ -1,0 +1,250 @@
+//! Inference serving: always-on model endpoints on shared MIG GPUs.
+//!
+//! The serving subsystem realizes each [`InferenceServer`] resource
+//! (`crate::api::resources::InferenceServerResource`) as a fleet of
+//! replica pods admitted through the same admission → Kueue → scheduler
+//! path every other workload class uses, fronted by a
+//! least-outstanding-requests load balancer ([`balancer`]) with bounded
+//! per-replica queues and request batching, and autoscaled by a
+//! latency/queue-depth policy ([`autoscaler`]) that reads its signals from
+//! the monitoring TSDB — the SuperSONIC design point: serving shares the
+//! accelerators with interactive and batch work instead of owning them.
+//!
+//! The request plane is *aggregate and deterministic*: the open-loop
+//! traffic generator ([`crate::sim::traffic`]) yields arrival counts per
+//! reconciliation tick, the balancer water-fills them over ready replicas
+//! and serves them against fluid batch capacity, and latencies are
+//! recovered analytically (queue wait + batch fill wait + service time)
+//! into log-bucketed histograms. No RNG is consumed downstream of the
+//! generator, so golden-trace determinism survives serving at
+//! millions-of-requests scale.
+//!
+//! Module map:
+//! * [`balancer`] — per-tick request distribution, bounded queues,
+//!   batching, latency recovery, shed accounting (no request is silently
+//!   dropped: overflow and replica loss are counted as failed);
+//! * [`autoscaler`] — desired-replica policy: rate-based sizing with a
+//!   target utilization, queue-drain pressure against the SLO budget,
+//!   reactive scale-up on p95 breach, scale-to-zero after an idle grace.
+//!
+//! The controller driving these against the platform lives in
+//! [`crate::platform::reconcile::serve`]; replica pod/workload plumbing in
+//! `crate::platform::serving`.
+
+pub mod autoscaler;
+pub mod balancer;
+
+use std::collections::BTreeMap;
+
+use crate::cluster::resources::ResourceVec;
+use crate::sim::clock::Time;
+use crate::util::stats::Histogram;
+
+pub use autoscaler::{desired_replicas, ScalePolicy, ScaleSignals};
+pub use balancer::{step_window, WindowReport};
+
+/// The serving-side mirror of an `InferenceServer` spec (post-admission:
+/// every knob defaulted and validated).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingSpec {
+    pub name: String,
+    pub user: String,
+    pub project: String,
+    pub model: String,
+    /// Per-replica resource request (MIG-slice-sized).
+    pub requests: ResourceVec,
+    pub min_replicas: u32,
+    pub max_replicas: u32,
+    /// p95 latency objective (seconds).
+    pub latency_slo: f64,
+    /// Max requests coalesced into one GPU batch.
+    pub max_batch: u32,
+    /// Seconds a replica waits to fill a partial batch.
+    pub batch_window: f64,
+    /// Seconds one batch occupies a replica.
+    pub service_time: f64,
+    /// Bounded per-replica queue length.
+    pub queue_depth: u32,
+    /// Kueue LocalQueue replica workloads are submitted to.
+    pub queue: String,
+}
+
+impl ServingSpec {
+    /// Saturated per-replica throughput (requests/second).
+    pub fn service_rate(&self) -> f64 {
+        self.max_batch as f64 / self.service_time.max(1e-9)
+    }
+}
+
+/// Replica lifecycle phase, as the serving controller tracks it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaPhase {
+    /// Workload submitted to Kueue, awaiting (re)admission.
+    Queued,
+    /// Pod created; container starting and/or model loading (cold start).
+    Starting,
+    /// Serving traffic.
+    Ready,
+}
+
+/// One serving replica: a Kueue workload realizing a pod.
+#[derive(Debug, Clone)]
+pub struct Replica {
+    pub index: u32,
+    pub workload: String,
+    pub pod: String,
+    pub phase: ReplicaPhase,
+    /// Pod incarnation (a replacement pod after preemption gets a new one).
+    pub incarnation: u32,
+    /// When the replica finishes its model-load cold start (set when the
+    /// pod reaches Running).
+    pub ready_at: Option<Time>,
+    /// Requests currently queued on this replica.
+    pub outstanding: u64,
+    /// Fractional batch capacity carried between windows (fluid service).
+    pub cap_carry: f64,
+}
+
+/// Live state of one inference server: spec, replica fleet, balancer
+/// queues, latency histograms, counters, and the append-only transition
+/// log golden traces diff.
+#[derive(Debug)]
+pub struct ServerState {
+    pub spec: ServingSpec,
+    pub replicas: BTreeMap<u32, Replica>,
+    pub next_index: u32,
+    /// Autoscaler target (replicas converge toward this).
+    pub desired: u32,
+    /// Requests buffered at the balancer while no replica is ready
+    /// (scale-from-zero, all-replica loss). Bounded; overflow is shed.
+    pub backlog: u64,
+    /// When the oldest backlogged request arrived (cold-start latency).
+    pub backlog_since: Option<Time>,
+    /// Cumulative request latency.
+    pub latency: Histogram,
+    /// Current-window latency (reset each tick after the p95 is scraped).
+    pub window: Histogram,
+    pub total_requests: u64,
+    pub completed_requests: u64,
+    /// Shed (queue full) + lost to replica failure. Never silent.
+    pub failed_requests: u64,
+    /// Last p95 scraped from a non-empty window (status surface).
+    pub last_p95: f64,
+    /// Last time the server saw arrivals or held queued work.
+    pub last_active: Time,
+    /// Next autoscale evaluation time.
+    pub next_scale_at: Time,
+    /// Transition log: `(time, line)` — replica lifecycle, scale
+    /// decisions, shed windows. Rendered by `trace()`.
+    pub log: Vec<(Time, String)>,
+}
+
+impl ServerState {
+    pub fn new(spec: ServingSpec, now: Time) -> ServerState {
+        ServerState {
+            spec,
+            replicas: BTreeMap::new(),
+            next_index: 0,
+            desired: 0,
+            backlog: 0,
+            backlog_since: None,
+            latency: Histogram::latency(),
+            window: Histogram::latency(),
+            total_requests: 0,
+            completed_requests: 0,
+            failed_requests: 0,
+            last_p95: 0.0,
+            last_active: now,
+            next_scale_at: now,
+            log: Vec::new(),
+        }
+    }
+
+    /// Replicas currently serving traffic.
+    pub fn ready_count(&self) -> u32 {
+        self.replicas.values().filter(|r| r.phase == ReplicaPhase::Ready).count() as u32
+    }
+
+    /// Total queued work (replica queues + balancer backlog).
+    pub fn queued(&self) -> u64 {
+        self.backlog + self.replicas.values().map(|r| r.outstanding).sum::<u64>()
+    }
+
+    /// Status string for the API projection.
+    pub fn state_str(&self) -> &'static str {
+        let ready = self.ready_count();
+        if self.desired == 0 && self.replicas.is_empty() {
+            "Idle"
+        } else if ready == self.desired && ready == self.replicas.len() as u32 {
+            "Serving"
+        } else {
+            "Scaling"
+        }
+    }
+
+    pub fn push_log(&mut self, at: Time, line: String) {
+        self.log.push((at, line));
+    }
+
+    /// The transition log rendered one line per event (golden traces).
+    pub fn trace(&self) -> String {
+        let mut s = String::new();
+        for (at, line) in &self.log {
+            s.push_str(&format!("{:10.3} SERVING {} {}\n", at, self.spec.name, line));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn spec(name: &str) -> ServingSpec {
+        ServingSpec {
+            name: name.into(),
+            user: "user001".into(),
+            project: "project01".into(),
+            model: "deepmet".into(),
+            requests: ResourceVec::cpu_millis(2000).with("nvidia.com/mig-1g.5gb", 1),
+            min_replicas: 0,
+            max_replicas: 4,
+            latency_slo: 0.5,
+            max_batch: 8,
+            batch_window: 0.02,
+            service_time: 0.08,
+            queue_depth: 100,
+            queue: "serving".into(),
+        }
+    }
+
+    #[test]
+    fn state_strings_follow_fleet() {
+        let mut s = ServerState::new(spec("m"), 0.0);
+        assert_eq!(s.state_str(), "Idle");
+        s.desired = 1;
+        s.replicas.insert(
+            0,
+            Replica {
+                index: 0,
+                workload: "wl-m-r0".into(),
+                pod: "m-r0-i0".into(),
+                phase: ReplicaPhase::Starting,
+                incarnation: 0,
+                ready_at: None,
+                outstanding: 0,
+                cap_carry: 0.0,
+            },
+        );
+        assert_eq!(s.state_str(), "Scaling");
+        s.replicas.get_mut(&0).unwrap().phase = ReplicaPhase::Ready;
+        assert_eq!(s.state_str(), "Serving");
+    }
+
+    #[test]
+    fn trace_lines_are_stable() {
+        let mut s = ServerState::new(spec("m"), 0.0);
+        s.push_log(12.5, "scale 0 -> 2 reason=burst".into());
+        assert_eq!(s.trace(), "    12.500 SERVING m scale 0 -> 2 reason=burst\n");
+    }
+}

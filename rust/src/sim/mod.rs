@@ -7,7 +7,9 @@ pub mod chaos;
 pub mod clock;
 pub mod engine;
 pub mod trace;
+pub mod traffic;
 
 pub use chaos::{ChaosEngine, ChaosPlan, Fault};
 pub use clock::{Clock, SimClock, Time, WallClock};
 pub use engine::Engine;
+pub use traffic::{Burst, TrafficEngine, TrafficPattern, TrafficPlan};

@@ -1,0 +1,308 @@
+//! Open-loop synthetic inference traffic: deterministic, seeded request
+//! arrival schedules for the serving subsystem.
+//!
+//! A [`TrafficEngine`] holds one [`TrafficPattern`] per `InferenceServer`:
+//! a diurnal sinusoidal baseline (millions of users waking and sleeping)
+//! plus a pre-sampled schedule of Poisson bursts (a conference demo, a
+//! reprocessing campaign hammering a model). The platform facade drains
+//! arrivals at every reconciliation tick — exactly like
+//! [`ChaosEngine`](crate::sim::chaos::ChaosEngine) drains faults — so the
+//! same seed and the same tick cadence yield the byte-identical arrival
+//! sequence, which is what keeps golden-trace testing possible with
+//! serving enabled.
+//!
+//! The generator is *open-loop*: arrivals never depend on what the serving
+//! stack does with them. Overload shows up as queue growth and shed
+//! requests downstream, not as back-pressure on the generator — the regime
+//! SuperSONIC-style serving systems are sized against.
+
+use std::collections::BTreeMap;
+
+use crate::sim::clock::Time;
+use crate::util::rng::Rng;
+
+/// A transient surge of extra request rate on top of the baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Burst {
+    pub at: Time,
+    pub duration: Time,
+    /// Added requests/second while the burst is active.
+    pub add_rps: f64,
+}
+
+/// One server's arrival-rate model.
+#[derive(Debug, Clone)]
+pub struct TrafficPattern {
+    /// Target `InferenceServer` name.
+    pub server: String,
+    /// Mean baseline requests/second (diurnal midline).
+    pub base_rps: f64,
+    /// Fraction of the baseline swung by the diurnal cycle, in `[0, 1]`:
+    /// rate peaks at `base*(1+a)` and troughs at `base*(1-a)`.
+    pub diurnal_amplitude: f64,
+    /// Seconds after midnight at which the diurnal peak lands.
+    pub peak_at: Time,
+    /// Active window `[start, stop)`; the rate is zero outside it (lets
+    /// scenarios model a campaign ending, and scale-to-zero afterwards).
+    pub active: (Time, Time),
+    /// Pre-sampled burst schedule (sorted by `at` once generated).
+    pub bursts: Vec<Burst>,
+}
+
+impl TrafficPattern {
+    /// A flat always-on pattern with no diurnal swing and no bursts.
+    pub fn flat(server: &str, rps: f64) -> Self {
+        TrafficPattern {
+            server: server.to_string(),
+            base_rps: rps,
+            diurnal_amplitude: 0.0,
+            peak_at: 0.0,
+            active: (0.0, f64::INFINITY),
+            bursts: Vec::new(),
+        }
+    }
+
+    /// Instantaneous arrival rate at `t` (requests/second).
+    pub fn rate_at(&self, t: Time) -> f64 {
+        if t < self.active.0 || t >= self.active.1 {
+            return 0.0;
+        }
+        let day = std::f64::consts::TAU / 86_400.0;
+        let diurnal = 1.0 + self.diurnal_amplitude * ((t - self.peak_at) * day).cos();
+        let mut rate = self.base_rps * diurnal.max(0.0);
+        for b in &self.bursts {
+            if t >= b.at && t < b.at + b.duration {
+                rate += b.add_rps;
+            }
+        }
+        rate
+    }
+}
+
+/// The arrival scheduler: per-server patterns drained window by window.
+///
+/// Arrival counts are Poisson draws against the rate integrated over the
+/// drained window (midpoint rule), from one seeded RNG consumed in server
+/// name order — deterministic for a fixed seed and tick cadence.
+#[derive(Debug)]
+pub struct TrafficEngine {
+    seed: u64,
+    rng: Rng,
+    patterns: BTreeMap<String, TrafficPattern>,
+    /// Cumulative arrivals per server.
+    totals: BTreeMap<String, u64>,
+    /// Sparse event log: pattern registrations and burst activations.
+    log: Vec<(Time, String)>,
+}
+
+impl TrafficEngine {
+    pub fn new(seed: u64) -> Self {
+        TrafficEngine {
+            seed,
+            rng: Rng::new(seed),
+            patterns: BTreeMap::new(),
+            totals: BTreeMap::new(),
+            log: Vec::new(),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Register (or replace) a server's pattern, effective `at`.
+    pub fn add(&mut self, at: Time, mut pattern: TrafficPattern) {
+        pattern.bursts.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+        self.log.push((
+            at,
+            format!(
+                "pattern {} base={:.1}rps amp={:.2} bursts={}",
+                pattern.server,
+                pattern.base_rps,
+                pattern.diurnal_amplitude,
+                pattern.bursts.len()
+            ),
+        ));
+        self.patterns.insert(pattern.server.clone(), pattern);
+    }
+
+    /// Drop a server's pattern (its `InferenceServer` was deleted).
+    pub fn remove(&mut self, at: Time, server: &str) {
+        if self.patterns.remove(server).is_some() {
+            self.log.push((at, format!("pattern-removed {server}")));
+        }
+    }
+
+    pub fn pattern(&self, server: &str) -> Option<&TrafficPattern> {
+        self.patterns.get(server)
+    }
+
+    /// Instantaneous rate for one server (0 if unregistered).
+    pub fn rate_at(&self, server: &str, t: Time) -> f64 {
+        self.patterns.get(server).map(|p| p.rate_at(t)).unwrap_or(0.0)
+    }
+
+    /// Drain the window `[from, to)`: one `(server, arrivals)` pair per
+    /// registered pattern, in server name order. Burst activations crossing
+    /// into the window land in the event log.
+    pub fn drain(&mut self, from: Time, to: Time) -> Vec<(String, u64)> {
+        let dt = (to - from).max(0.0);
+        let mut out = Vec::with_capacity(self.patterns.len());
+        for (name, p) in &self.patterns {
+            for b in &p.bursts {
+                if b.at >= from && b.at < to {
+                    self.log.push((
+                        b.at,
+                        format!("burst {} +{:.1}rps for {:.0}s", name, b.add_rps, b.duration),
+                    ));
+                }
+            }
+            let lambda = p.rate_at(from + dt / 2.0) * dt;
+            let n = self.rng.poisson(lambda);
+            *self.totals.entry(name.clone()).or_insert(0) += n;
+            out.push((name.clone(), n));
+        }
+        out
+    }
+
+    /// Cumulative arrivals generated for `server`.
+    pub fn total_arrivals(&self, server: &str) -> u64 {
+        self.totals.get(server).copied().unwrap_or(0)
+    }
+
+    /// The sparse event log rendered one line per event (golden traces).
+    pub fn trace(&self) -> String {
+        let mut s = String::new();
+        for (at, line) in &self.log {
+            s.push_str(&format!("{at:10.3} TRAFFIC {line}\n"));
+        }
+        s
+    }
+}
+
+/// A randomized scenario family for burst schedules: expected bursts per
+/// hour with uniform duration and amplitude ranges, sampled from one RNG
+/// seeded by `seed` — same (plan, servers) pair, same schedule.
+#[derive(Debug, Clone)]
+pub struct TrafficPlan {
+    pub seed: u64,
+    /// Bursts are sampled in `[0, horizon)`.
+    pub horizon: Time,
+    pub bursts_per_hour: f64,
+    pub burst_duration: (Time, Time),
+    /// Added rate as a multiple of the pattern's baseline.
+    pub burst_scale: (f64, f64),
+}
+
+impl Default for TrafficPlan {
+    fn default() -> Self {
+        TrafficPlan {
+            seed: 42,
+            horizon: 86_400.0,
+            bursts_per_hour: 0.25,
+            burst_duration: (120.0, 900.0),
+            burst_scale: (1.0, 4.0),
+        }
+    }
+}
+
+impl TrafficPlan {
+    /// Sample a burst schedule onto each baseline pattern and return the
+    /// populated engine (registered at t=0).
+    pub fn generate(&self, baselines: Vec<TrafficPattern>) -> TrafficEngine {
+        let mut rng = Rng::new(self.seed);
+        let mut eng = TrafficEngine::new(self.seed);
+        let hours = self.horizon / 3600.0;
+        for mut p in baselines {
+            for _ in 0..rng.poisson(self.bursts_per_hour * hours) {
+                let at = rng.range_f64(0.0, self.horizon);
+                let duration = rng.range_f64(self.burst_duration.0, self.burst_duration.1);
+                let scale = rng.range_f64(self.burst_scale.0, self.burst_scale.1);
+                p.bursts.push(Burst { at, duration, add_rps: p.base_rps * scale });
+            }
+            eng.add(0.0, p);
+        }
+        eng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diurnal(server: &str) -> TrafficPattern {
+        TrafficPattern {
+            server: server.to_string(),
+            base_rps: 100.0,
+            diurnal_amplitude: 0.5,
+            peak_at: 43_200.0,
+            active: (0.0, f64::INFINITY),
+            bursts: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn same_seed_same_arrivals() {
+        let plan = TrafficPlan { seed: 9, bursts_per_hour: 1.0, ..Default::default() };
+        let mut a = plan.generate(vec![diurnal("cms-trk"), diurnal("atlas-ft")]);
+        let mut b = plan.generate(vec![diurnal("cms-trk"), diurnal("atlas-ft")]);
+        for w in 0..200 {
+            let (f, t) = (w as f64 * 10.0, (w + 1) as f64 * 10.0);
+            assert_eq!(a.drain(f, t), b.drain(f, t));
+        }
+        assert_eq!(a.trace(), b.trace());
+        assert!(a.total_arrivals("cms-trk") > 0);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a =
+            TrafficPlan { seed: 1, ..Default::default() }.generate(vec![diurnal("m")]);
+        let mut b =
+            TrafficPlan { seed: 2, ..Default::default() }.generate(vec![diurnal("m")]);
+        let draws_a: Vec<_> = (0..50).map(|w| a.drain(w as f64, w as f64 + 1.0)).collect();
+        let draws_b: Vec<_> = (0..50).map(|w| b.drain(w as f64, w as f64 + 1.0)).collect();
+        assert_ne!(draws_a, draws_b);
+    }
+
+    #[test]
+    fn diurnal_peaks_and_troughs() {
+        let p = diurnal("m");
+        let peak = p.rate_at(43_200.0);
+        let trough = p.rate_at(0.0);
+        assert!((peak - 150.0).abs() < 1e-9, "peak={peak}");
+        assert!((trough - 50.0).abs() < 1e-9, "trough={trough}");
+    }
+
+    #[test]
+    fn bursts_add_and_expire() {
+        let mut p = TrafficPattern::flat("m", 10.0);
+        p.bursts.push(Burst { at: 100.0, duration: 50.0, add_rps: 90.0 });
+        assert_eq!(p.rate_at(99.0), 10.0);
+        assert_eq!(p.rate_at(100.0), 100.0);
+        assert_eq!(p.rate_at(149.9), 100.0);
+        assert_eq!(p.rate_at(150.0), 10.0);
+    }
+
+    #[test]
+    fn inactive_window_is_silent() {
+        let mut p = TrafficPattern::flat("m", 1000.0);
+        p.active = (100.0, 200.0);
+        let mut eng = TrafficEngine::new(7);
+        eng.add(0.0, p);
+        assert_eq!(eng.drain(0.0, 50.0), vec![("m".to_string(), 0)]);
+        let (_, n) = eng.drain(120.0, 130.0)[0].clone();
+        assert!(n > 0, "active window should produce arrivals");
+        assert_eq!(eng.drain(250.0, 260.0), vec![("m".to_string(), 0)]);
+    }
+
+    #[test]
+    fn removal_stops_arrivals_and_logs() {
+        let mut eng = TrafficEngine::new(5);
+        eng.add(0.0, TrafficPattern::flat("m", 50.0));
+        eng.drain(0.0, 10.0);
+        eng.remove(10.0, "m");
+        assert!(eng.drain(10.0, 20.0).is_empty());
+        assert!(eng.trace().contains("pattern-removed m"));
+    }
+}

@@ -34,6 +34,13 @@ impl OnlineStats {
         if self.n == 0 { f64::NAN } else { self.mean }
     }
 
+    /// Mean as an `Option`: `None` on an empty window instead of NaN, so
+    /// callers comparing against thresholds can't be silently defeated by
+    /// NaN's always-false ordering.
+    pub fn mean_checked(&self) -> Option<f64> {
+        if self.n == 0 { None } else { Some(self.mean) }
+    }
+
     pub fn variance(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
@@ -112,12 +119,30 @@ impl Histogram {
     }
 
     pub fn record(&mut self, x: f64) {
-        self.total += 1;
-        self.sum += x;
-        match self.index(x) {
-            Some(i) => self.counts[i] += 1,
-            None => self.underflow += 1,
+        self.record_n(x, 1);
+    }
+
+    /// Record `n` samples of value `x` at once (aggregate/fluid request
+    /// models record whole batches per tick).
+    pub fn record_n(&mut self, x: f64, n: u64) {
+        if n == 0 {
+            return;
         }
+        self.total += n;
+        self.sum += x * n as f64;
+        match self.index(x) {
+            Some(i) => self.counts[i] += n,
+            None => self.underflow += n,
+        }
+    }
+
+    /// Zero every bucket, keeping the shape (windowed collectors reuse the
+    /// allocation between scrape intervals).
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.underflow = 0;
+        self.total = 0;
+        self.sum = 0.0;
     }
 
     pub fn count(&self) -> u64 {
@@ -128,7 +153,18 @@ impl Histogram {
         if self.total == 0 { f64::NAN } else { self.sum / self.total as f64 }
     }
 
+    /// Percentile in `[0, 100]` as an `Option`: `None` on an empty
+    /// histogram. Control loops (the serving autoscaler polls sparse TSDB
+    /// windows early in a campaign) must use this form — the NaN returned
+    /// by [`percentile`](Self::percentile) compares false against any SLO
+    /// threshold and silently disables the comparison.
+    pub fn percentile_checked(&self, p: f64) -> Option<f64> {
+        if self.total == 0 { None } else { Some(self.percentile(p)) }
+    }
+
     /// Percentile in `[0, 100]`; returns the bucket's geometric midpoint.
+    /// Empty histogram ⇒ NaN; a single sample answers every percentile
+    /// (its own bucket midpoint).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.total == 0 {
             return f64::NAN;
@@ -217,13 +253,20 @@ pub fn fmt_si(x: f64, unit: &str) -> String {
 }
 
 /// Exact percentile over a scratch vector (for small benchmark sample sets).
+/// Empty slice ⇒ NaN; a single sample answers every percentile.
 pub fn exact_percentile(xs: &mut [f64], p: f64) -> f64 {
+    exact_percentile_checked(xs, p).unwrap_or(f64::NAN)
+}
+
+/// Exact percentile as an `Option`: `None` on an empty slice. Prefer this
+/// in control loops where NaN would silently fail threshold comparisons.
+pub fn exact_percentile_checked(xs: &mut [f64], p: f64) -> Option<f64> {
     if xs.is_empty() {
-        return f64::NAN;
+        return None;
     }
     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (p / 100.0 * (xs.len() - 1) as f64).round() as usize;
-    xs[rank.min(xs.len() - 1)]
+    Some(xs[rank.min(xs.len() - 1)])
 }
 
 #[cfg(test)]
@@ -295,5 +338,60 @@ mod tests {
         let mut xs = vec![5.0, 1.0, 3.0];
         assert_eq!(exact_percentile(&mut xs, 50.0), 3.0);
         assert_eq!(exact_percentile(&mut xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn empty_windows_are_explicit_not_nan_poisoned() {
+        // An autoscaler comparing `p95 > slo` against NaN gets `false` and
+        // silently never scales; the checked forms make emptiness a type.
+        let h = Histogram::latency();
+        assert!(h.percentile(95.0).is_nan());
+        assert_eq!(h.percentile_checked(95.0), None);
+        assert!(h.mean().is_nan());
+        assert_eq!(h.summary().count, 0);
+
+        let s = OnlineStats::new();
+        assert!(s.mean().is_nan());
+        assert_eq!(s.mean_checked(), None);
+
+        let mut xs: Vec<f64> = vec![];
+        assert!(exact_percentile(&mut xs, 50.0).is_nan());
+        assert_eq!(exact_percentile_checked(&mut xs, 50.0), None);
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record_and_reset_empties() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        a.record_n(0.1, 500);
+        a.record_n(0.4, 500);
+        for _ in 0..500 {
+            b.record(0.1);
+            b.record(0.4);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.percentile(50.0), b.percentile(50.0));
+        assert_eq!(a.percentile(99.0), b.percentile(99.0));
+        a.reset();
+        assert_eq!(a.count(), 0);
+        assert_eq!(a.percentile_checked(95.0), None);
+    }
+
+    #[test]
+    fn single_sample_answers_every_percentile() {
+        let mut h = Histogram::latency();
+        h.record(0.25);
+        for p in [0.0, 1.0, 50.0, 95.0, 99.9, 100.0] {
+            let v = h.percentile_checked(p).unwrap();
+            assert!((v - 0.25).abs() / 0.25 < 0.05, "p{p} = {v}");
+        }
+        let mut xs = vec![0.25];
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(exact_percentile_checked(&mut xs, p), Some(0.25));
+        }
+        let mut s = OnlineStats::new();
+        s.push(0.25);
+        assert_eq!(s.mean_checked(), Some(0.25));
+        assert_eq!(s.variance(), 0.0);
     }
 }

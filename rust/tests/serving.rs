@@ -1,0 +1,387 @@
+//! Inference-serving integration suite: golden-trace determinism with the
+//! open-loop traffic generator enabled, the scale-to-zero → cold-start →
+//! burst-recovery lifecycle, randomized replica-bound / request-accounting
+//! invariant sweeps, API verb round-trips for the `InferenceServer` kind,
+//! and serving under chaos (site outages + GPU degradation) with the
+//! no-silent-drops contract.
+
+mod common;
+
+use aiinfn::api::{ApiError, ApiObject, Condition, InferenceServerResource, ResourceKind, Selector};
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::monitoring::tsdb::SeriesKey;
+use aiinfn::platform::Platform;
+use aiinfn::serve::ServingSpec;
+use aiinfn::sim::chaos::ChaosPlan;
+use aiinfn::sim::clock::Time;
+use aiinfn::sim::traffic::{Burst, TrafficEngine, TrafficPattern, TrafficPlan};
+
+/// A CPU-only serving spec: replicas always schedulable, so the latency
+/// and autoscale assertions are isolated from GPU partition dynamics.
+fn cpu_spec(name: &str, min_replicas: u32, max_replicas: u32) -> ServingSpec {
+    ServingSpec {
+        name: name.to_string(),
+        user: "user001".to_string(),
+        project: "project01".to_string(),
+        model: "deepmet".to_string(),
+        requests: ResourceVec::cpu_millis(2000).with(MEMORY, 4 << 30),
+        min_replicas,
+        max_replicas,
+        latency_slo: 0.5,
+        max_batch: 8,
+        batch_window: 0.02,
+        service_time: 0.08, // mu = 100 req/s per replica
+        queue_depth: 256,
+        queue: "serving".to_string(),
+    }
+}
+
+/// A MIG-slice-sized spec (the paper's serving shape): exercises the
+/// demand-driven repartition path on the shared A100s.
+fn mig_spec(name: &str, min_replicas: u32, max_replicas: u32) -> ServingSpec {
+    ServingSpec {
+        requests: ResourceVec::cpu_millis(2000)
+            .with(MEMORY, 4 << 30)
+            .with("nvidia.com/mig-1g.5gb", 1),
+        ..cpu_spec(name, min_replicas, max_replicas)
+    }
+}
+
+/// `total == completed + failed + queued`: every arrival is either served,
+/// counted as failed (shed / lost to a replica death), or still in flight.
+/// Nothing is ever silently dropped.
+fn assert_accounting(p: &Platform, name: &str) {
+    let s = p.serving_state(name).unwrap();
+    assert_eq!(
+        s.total_requests,
+        s.completed_requests + s.failed_requests + s.queued(),
+        "request accounting must balance for {name}"
+    );
+}
+
+// ------------------------------------------------------------ golden trace
+
+/// One serving scenario rendered as a text blob: traffic-engine log,
+/// per-server serving transition log, cluster events, Kueue transitions.
+fn serving_trace(seed: u64) -> String {
+    let mut p = common::platform();
+    let mut engine = TrafficEngine::new(seed);
+    engine.add(0.0, TrafficPattern::flat("srv-a", 30.0));
+    engine.add(
+        0.0,
+        TrafficPattern {
+            bursts: vec![Burst { at: 600.0, duration: 300.0, add_rps: 80.0 }],
+            ..TrafficPattern::flat("srv-b", 10.0)
+        },
+    );
+    p.set_traffic(engine);
+    p.create_inference_server(cpu_spec("srv-a", 1, 4)).unwrap();
+    p.create_inference_server(cpu_spec("srv-b", 0, 3)).unwrap();
+    p.run_for(1800.0, 15.0);
+
+    let mut out = String::new();
+    out.push_str(&p.traffic().unwrap().trace());
+    out.push_str(&p.serving_trace());
+    {
+        let st = p.cluster();
+        for ev in st.events() {
+            out.push_str(&format!("{:10.3} {:?} {} {}\n", ev.at, ev.kind, ev.object, ev.message));
+        }
+    }
+    for t in p.workload_transitions_since(0) {
+        out.push_str(&format!("{:10.3} WORKLOAD {} {:?}\n", t.at, t.workload, t.state));
+    }
+    out
+}
+
+/// Same seed ⇒ byte-identical trace with the serving subsystem and traffic
+/// generator live; different seed ⇒ different arrivals, different trace.
+#[test]
+fn serving_golden_trace_same_seed_is_byte_identical() {
+    let seed = common::test_seed();
+    let a = serving_trace(seed);
+    let b = serving_trace(seed);
+    assert!(!a.is_empty());
+    assert!(a.contains("SERVING"), "trace must include serving transitions");
+    assert_eq!(a, b, "same traffic seed must reproduce the serving trace byte-for-byte");
+    let c = serving_trace(seed.wrapping_add(1));
+    assert_ne!(a, c, "different traffic seeds must produce different traces");
+}
+
+// ------------------------------------- scale-to-zero → cold start → burst
+
+/// The full autoscale lifecycle on one server with `min_replicas = 0`:
+/// a burst is served within SLO, a long idle gap scales the fleet to
+/// zero, a second burst cold-starts replicas (arrivals buffer in the
+/// backlog, the cold-start penalty is paid and counted), and p95
+/// recovers to under the SLO while the burst is still running.
+#[test]
+fn scale_to_zero_cold_start_and_burst_recovery() {
+    let mut p = common::platform();
+    let mut engine = TrafficEngine::new(common::test_seed());
+    engine.add(
+        0.0,
+        TrafficPattern {
+            bursts: vec![
+                Burst { at: 0.0, duration: 2400.0, add_rps: 40.0 },
+                Burst { at: 6000.0, duration: 2400.0, add_rps: 60.0 },
+            ],
+            ..TrafficPattern::flat("deepmet-serve", 0.0)
+        },
+    );
+    p.set_traffic(engine);
+    p.create_inference_server(cpu_spec("deepmet-serve", 0, 4)).unwrap();
+
+    // burst A: the fleet serves within SLO
+    p.run_for(2400.0, 15.0);
+    {
+        let s = p.serving_state("deepmet-serve").unwrap();
+        assert!(s.completed_requests > 0, "burst A must be served");
+        assert!(s.ready_count() >= 1);
+        assert!(
+            s.last_p95 <= s.spec.latency_slo,
+            "p95 {:.3}s must sit under the {:.3}s SLO at steady state",
+            s.last_p95,
+            s.spec.latency_slo
+        );
+    }
+    assert_accounting(&p, "deepmet-serve");
+
+    // idle gap: past the idle grace the autoscaler walks the fleet to zero
+    p.run_for(3100.0, 15.0); // now at t = 5500
+    {
+        let s = p.serving_state("deepmet-serve").unwrap();
+        assert_eq!(s.replicas.len(), 0, "idle server must scale to zero");
+        assert_eq!(s.state_str(), "Idle");
+        assert_eq!(s.queued(), 0);
+    }
+    let cold_starts_before = p.metrics().serving_cold_starts;
+
+    // burst B into a cold fleet: backlog buffers, replicas cold-start,
+    // the autoscaler scales out, and p95 recovers under SLO before the
+    // burst ends
+    p.run_for(2800.0, 15.0); // now at t = 8300, burst B ends at 8400
+    {
+        let s = p.serving_state("deepmet-serve").unwrap();
+        assert!(s.ready_count() >= 1, "burst B must cold-start replicas");
+        assert!(
+            p.metrics().serving_cold_starts > cold_starts_before,
+            "recovering from zero must pay (and count) a cold start"
+        );
+        assert!(
+            s.last_p95 <= s.spec.latency_slo,
+            "p95 {:.3}s must recover under the {:.3}s SLO during burst B",
+            s.last_p95,
+            s.spec.latency_slo
+        );
+        assert!(s.replicas.len() as u32 <= s.spec.max_replicas);
+    }
+    assert_accounting(&p, "deepmet-serve");
+    assert!(p.metrics().serving_scale_events > 0, "the autoscaler must have acted");
+
+    // the autoscale signals are dashboard-visible: the p95 series exists
+    let key = SeriesKey::new("serving_p95_seconds", &[("server", "deepmet-serve")]);
+    assert!(
+        p.tsdb.max_over(&key, 6000.0, 8300.0).is_some(),
+        "serving p95 must be ingested into the TSDB"
+    );
+}
+
+// ------------------------------------------------- randomized invariants
+
+/// Across randomized traffic plans (MIG-slice-sized replicas, diurnal +
+/// Poisson bursts): the fleet never leaves `[min, max]` while traffic is
+/// nonzero, and request accounting balances at every sampled boundary.
+#[test]
+fn replica_bounds_and_accounting_hold_under_random_traffic() {
+    let base = common::test_seed();
+    for i in 0..8u64 {
+        let seed = base.wrapping_mul(100).wrapping_add(i);
+        let mut p = common::platform();
+        let plan = TrafficPlan {
+            seed,
+            horizon: 7200.0,
+            bursts_per_hour: 2.0,
+            ..Default::default()
+        };
+        let baseline = TrafficPattern {
+            diurnal_amplitude: 0.5,
+            ..TrafficPattern::flat("mig-serve", 20.0)
+        };
+        let engine = plan.generate(vec![baseline]);
+        p.set_traffic(engine);
+        let spec = mig_spec("mig-serve", 1, 3);
+        let (min, max) = (spec.min_replicas, spec.max_replicas);
+        p.create_inference_server(spec).unwrap();
+
+        let mut t: Time = 0.0;
+        while t < 7200.0 {
+            p.run_for(120.0, 15.0);
+            t += 120.0;
+            let s = p.serving_state("mig-serve").unwrap();
+            let n = s.replicas.len() as u32;
+            assert!(
+                (min..=max).contains(&n),
+                "seed {seed} t={t}: fleet size {n} outside [{min}, {max}]"
+            );
+            assert_accounting(&p, "mig-serve");
+        }
+        let s = p.serving_state("mig-serve").unwrap();
+        assert!(s.total_requests > 0, "seed {seed}: the generator must produce arrivals");
+    }
+}
+
+/// MIG-slice-sized replicas actually reach Ready on the shared A100s —
+/// queued serving demand drives the demand-driven repartition path and the
+/// slices materialize.
+#[test]
+fn mig_replicas_schedule_through_the_repartition_path() {
+    let mut p = common::platform();
+    let mut engine = TrafficEngine::new(common::test_seed());
+    engine.add(0.0, TrafficPattern::flat("mig-serve", 30.0));
+    p.set_traffic(engine);
+    p.create_inference_server(mig_spec("mig-serve", 1, 3)).unwrap();
+    p.run_for(1200.0, 15.0);
+    let s = p.serving_state("mig-serve").unwrap();
+    assert!(
+        s.ready_count() >= 1,
+        "MIG-sized serving replicas must become Ready (repartition path): state={} log:\n{}",
+        s.state_str(),
+        s.trace()
+    );
+    assert!(s.completed_requests > 0);
+    assert_accounting(&p, "mig-serve");
+}
+
+// ----------------------------------------------------------- API verbs
+
+#[test]
+fn inference_server_api_verbs_roundtrip() {
+    let mut api = common::api();
+    let token = api.login("user010").unwrap();
+
+    // create (client-named) — admission defaults the batching knobs
+    let req = InferenceServerResource::request(
+        "cms-tracker",
+        "user010",
+        "project03",
+        "deepmet",
+        ResourceVec::cpu_millis(2000).with(MEMORY, 4 << 30),
+        0,
+        3,
+        0.5,
+    );
+    let created = api.create(&token, &ApiObject::InferenceServer(req.clone())).unwrap();
+    let view = created.as_inference_server().unwrap();
+    assert_eq!(view.queue, "serving", "admission must default the serving queue");
+    assert!(view.max_batch >= 1 && view.service_time > 0.0, "knobs must be defaulted");
+
+    // duplicate create conflicts
+    assert!(matches!(
+        api.create(&token, &ApiObject::InferenceServer(req.clone())),
+        Err(ApiError::Conflict(_))
+    ));
+
+    // another user cannot create in user010's name
+    let other = api.login("user011").unwrap();
+    assert!(matches!(
+        api.create(&other, &ApiObject::InferenceServer(req)),
+        Err(ApiError::Forbidden(_))
+    ));
+
+    // get + label-selector list
+    api.run_for(120.0, 15.0);
+    let got = api.get(&token, ResourceKind::InferenceServer, "cms-tracker").unwrap();
+    let got = got.as_inference_server().unwrap();
+    assert!(got.replicas >= 1, "create provisions at least one replica");
+    let listed = api
+        .list(&token, ResourceKind::InferenceServer, &Selector::labels("app=inference").unwrap())
+        .unwrap();
+    assert_eq!(listed.len(), 1);
+
+    // update: scaling knobs move, identity is immutable
+    let mut upd = got.clone();
+    upd.max_replicas = 2;
+    upd.latency_slo = 0.8;
+    let updated = api.update(&token, &ApiObject::InferenceServer(upd)).unwrap();
+    let updated = updated.as_inference_server().unwrap();
+    assert_eq!(updated.max_replicas, 2);
+    assert!((updated.latency_slo - 0.8).abs() < 1e-9);
+    let mut bad = updated.clone();
+    bad.model = "other-model".to_string();
+    assert!(matches!(
+        api.update(&token, &ApiObject::InferenceServer(bad)),
+        Err(ApiError::Invalid(_))
+    ));
+
+    // status subresource: conditions only
+    let mut st = updated.clone();
+    st.conditions = vec![Condition::new("Degraded", true, "ManualFlag", "ops note", 0.0)];
+    let after = api.update_status(&token, &ApiObject::InferenceServer(st)).unwrap();
+    assert_eq!(after.as_inference_server().unwrap().conditions.len(), 1);
+
+    // delete: only the owner may; the fleet tears down on the next tick
+    assert!(matches!(
+        api.delete(&other, ResourceKind::InferenceServer, "cms-tracker"),
+        Err(ApiError::Forbidden(_))
+    ));
+    api.delete(&token, ResourceKind::InferenceServer, "cms-tracker").unwrap();
+    assert!(matches!(
+        api.get(&token, ResourceKind::InferenceServer, "cms-tracker"),
+        Err(ApiError::NotFound(_))
+    ));
+    api.run_for(60.0, 15.0);
+    assert!(api.platform().serving_state("cms-tracker").is_none());
+    assert!(api.platform().inference_server_names().is_empty());
+}
+
+// ------------------------------------------------------- serving + chaos
+
+/// Serving through randomized chaos (site outages, node flaps, GPU
+/// degradation): replicas die and reincarnate, but no request is ever
+/// silently dropped — every arrival is completed, counted failed, or
+/// still queued — and the fleet stays within its bounds.
+#[test]
+fn serving_under_chaos_counts_every_request() {
+    let base = common::test_seed();
+    for i in 0..6u64 {
+        let seed = base.wrapping_mul(77).wrapping_add(i);
+        let mut p = common::platform();
+        let plan = ChaosPlan {
+            seed,
+            horizon: 5400.0,
+            site_outages_per_hour: 1.0,
+            node_flaps_per_hour: 1.0,
+            node_down_duration: (60.0, 240.0),
+            gpu_degrades_per_hour: 1.0,
+            gpu_degrade_duration: (120.0, 600.0),
+            ..Default::default()
+        };
+        p.install_chaos(&plan);
+        let traffic = TrafficPlan {
+            seed: seed.wrapping_add(1),
+            horizon: 5400.0,
+            bursts_per_hour: 1.0,
+            ..Default::default()
+        };
+        p.set_traffic(traffic.generate(vec![TrafficPattern::flat("chaos-serve", 25.0)]));
+        let spec = cpu_spec("chaos-serve", 1, 4);
+        let (min, max) = (spec.min_replicas, spec.max_replicas);
+        p.create_inference_server(spec).unwrap();
+        p.run_for(5400.0, 15.0);
+
+        let s = p.serving_state("chaos-serve").unwrap();
+        assert!(s.total_requests > 0, "seed {seed}: arrivals expected");
+        assert!(s.completed_requests > 0, "seed {seed}: the fleet must serve through chaos");
+        assert_accounting(&p, "chaos-serve");
+        let n = s.replicas.len() as u32;
+        assert!(
+            (min..=max).contains(&n),
+            "seed {seed}: fleet size {n} outside [{min}, {max}] after chaos"
+        );
+        // the facade-level counters agree with the per-server ledger
+        let m = p.metrics();
+        assert_eq!(m.serving_requests, s.total_requests, "seed {seed}");
+        assert_eq!(m.serving_completions, s.completed_requests, "seed {seed}");
+    }
+}
