@@ -58,6 +58,34 @@ impl ResourceKind {
         })
     }
 
+    /// Compact tag for the durability codec (deletion-queue checkpoints).
+    pub fn tag(self) -> u8 {
+        match self {
+            ResourceKind::Session => 0,
+            ResourceKind::BatchJob => 1,
+            ResourceKind::InferenceServer => 2,
+            ResourceKind::Pod => 3,
+            ResourceKind::Node => 4,
+            ResourceKind::Workload => 5,
+            ResourceKind::Site => 6,
+            ResourceKind::GpuDevice => 7,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<ResourceKind> {
+        Some(match t {
+            0 => ResourceKind::Session,
+            1 => ResourceKind::BatchJob,
+            2 => ResourceKind::InferenceServer,
+            3 => ResourceKind::Pod,
+            4 => ResourceKind::Node,
+            5 => ResourceKind::Workload,
+            6 => ResourceKind::Site,
+            7 => ResourceKind::GpuDevice,
+            _ => return None,
+        })
+    }
+
     /// Every kind, for enumeration in tests and tooling.
     pub fn all() -> [ResourceKind; 8] {
         [
@@ -70,6 +98,22 @@ impl ResourceKind {
             ResourceKind::Site,
             ResourceKind::GpuDevice,
         ]
+    }
+}
+
+impl crate::util::codec::Enc for ResourceKind {
+    fn enc(&self, b: &mut Vec<u8>) {
+        crate::util::codec::Enc::enc(&self.tag(), b);
+    }
+}
+
+impl crate::util::codec::Dec for ResourceKind {
+    fn dec(
+        r: &mut crate::util::codec::Reader,
+    ) -> Result<Self, crate::util::codec::CodecError> {
+        let t = <u8 as crate::util::codec::Dec>::dec(r)?;
+        ResourceKind::from_tag(t)
+            .ok_or_else(|| crate::util::codec::CodecError(format!("bad ResourceKind tag {t}")))
     }
 }
 

@@ -301,6 +301,10 @@ pub struct ApiServer {
     store_seen: usize,
     kueue_seen: usize,
     health_seen: usize,
+    /// `Platform::coordinator_restarts` as of the last tick; when it
+    /// advances (a `CoordinatorCrash` fault restored from WAL + snapshot)
+    /// every derived read-path structure here is rebuilt, not trusted.
+    restarts_seen: u64,
 }
 
 impl ApiServer {
@@ -317,6 +321,7 @@ impl ApiServer {
             store_seen: 0,
             kueue_seen: 0,
             health_seen: 0,
+            restarts_seen: 0,
         };
         // sites never emit a creation event of their own: seed the label
         // index so they are first-class citizens of the pruned list path
@@ -376,6 +381,7 @@ impl ApiServer {
     /// One reconciliation tick, then pump new transitions into the log.
     pub fn tick(&mut self) {
         self.platform.tick();
+        self.check_restart();
         self.pump();
     }
 
@@ -384,7 +390,111 @@ impl ApiServer {
     pub fn run_for(&mut self, duration: Time, tick_period: Time) {
         let t_end = self.platform.now() + duration;
         while self.platform.step_for(t_end, tick_period) {
+            self.check_restart();
             self.pump();
+        }
+    }
+
+    /// Detect a coordinator crash-restore since the last tick and rebuild
+    /// the API server's derived state.
+    fn check_restart(&mut self) {
+        let restarts = self.platform.coordinator_restarts();
+        if restarts != self.restarts_seen {
+            self.restarts_seen = restarts;
+            self.rebuild_after_restore();
+        }
+    }
+
+    /// A restarted coordinator means a restarted API server: nothing
+    /// derived survives on trust. Watch streams are invalidated (every
+    /// watcher gets `Compacted` and must re-list — a real apiserver
+    /// restart breaks watch continuity the same way), the inverted label
+    /// index and rv-keyed view cache are rebuilt from the restored objects,
+    /// and the ring cursors are clamped into the restored rings' retained
+    /// windows. The per-object overlay (finalizers, tombstones,
+    /// conditions) is API-level state with no platform source of truth, so
+    /// it carries over — it was never derived.
+    fn rebuild_after_restore(&mut self) {
+        self.log.invalidate_all();
+        self.index = ApiIndex::default();
+        for vk in &self.platform.vks {
+            self.index.seed(ResourceKind::Site, &vk.site);
+        }
+        // clamp cursors to the restored rings' write positions (replay
+        // reproduces the rings byte-identically, so normally these are
+        // no-ops — but a rebuilt control plane gets range-checked, not
+        // trusted; a cursor that predates the retained window is recovered
+        // by pump's existing Compacted path)
+        {
+            let st = self.platform.store.borrow();
+            let (base, len, _cap) = st.events().bounds();
+            self.store_seen = self.store_seen.min(base + len);
+        }
+        self.kueue_seen = self.kueue_seen.min(self.platform.kueue.transition_cursor());
+        self.health_seen = self.health_seen.min(self.platform.health.transition_cursor());
+        // warm the label index + view cache back up from the restored
+        // objects (observe only — no synthetic watch events)
+        let mut observed: Vec<(ResourceKind, String, Json)> = Vec::new();
+        {
+            let st = self.platform.cluster();
+            for n in st.nodes() {
+                let free = st.free_on(&n.name).cloned().unwrap_or_default();
+                let rv = self.rv_of(ResourceKind::Node, &n.name);
+                observed.push((
+                    ResourceKind::Node,
+                    n.name.clone(),
+                    NodeView::from_node(n, free, rv).to_json(),
+                ));
+            }
+            for p in st.pods() {
+                let rv = self.rv_of(ResourceKind::Pod, &p.spec.name);
+                observed.push((
+                    ResourceKind::Pod,
+                    p.spec.name.clone(),
+                    PodView::from_pod(p, rv).to_json(),
+                ));
+            }
+            for (n, d) in st.gpu_devices() {
+                let rv = self.rv_of(ResourceKind::GpuDevice, &d.id);
+                observed.push((
+                    ResourceKind::GpuDevice,
+                    d.id.clone(),
+                    self.gpu_device_view(n, d, rv).to_json(),
+                ));
+            }
+        }
+        for w in self.platform.kueue.workloads() {
+            let rv = self.rv_of(ResourceKind::Workload, &w.name);
+            observed.push((
+                ResourceKind::Workload,
+                w.name.clone(),
+                WorkloadView::from_workload(w, rv).to_json(),
+            ));
+        }
+        for s in self.platform.sessions() {
+            let rv = self.rv_of(ResourceKind::Session, &s.id);
+            observed.push((ResourceKind::Session, s.id.clone(), self.session_view(s, rv).to_json()));
+        }
+        for j in self.platform.batch_jobs.values() {
+            let rv = self.rv_of(ResourceKind::BatchJob, &j.workload);
+            observed.push((
+                ResourceKind::BatchJob,
+                j.workload.clone(),
+                self.batch_job_view(j, rv).to_json(),
+            ));
+        }
+        for name in self.platform.inference_server_names() {
+            if let Some(s) = self.platform.serving_state(&name) {
+                let rv = self.rv_of(ResourceKind::InferenceServer, &name);
+                observed.push((
+                    ResourceKind::InferenceServer,
+                    name.clone(),
+                    self.inference_server_view(s, rv).to_json(),
+                ));
+            }
+        }
+        for (kind, name, json) in observed {
+            self.index.observe(kind, EventType::Added, &name, Some(&json));
         }
     }
 
@@ -1188,7 +1298,7 @@ impl ApiServer {
                 self.store_seen = c.oldest;
             }
             let seen = self.store_seen;
-            for ev in events.since_lossy(seen) {
+            for ev in events.since_clamped(seen) {
                 let (kind, etype, phase_override) = match ev.kind {
                     EventKind::PodCreated => {
                         (ResourceKind::Pod, EventType::Added, Some(PodPhase::Pending))
@@ -1831,6 +1941,65 @@ mod tests {
         // the GC reconciler cancels the job on the next tick; the workload
         // view then records it as finished
         a.tick();
+        let wl = a.get(&token, ResourceKind::Workload, &name).unwrap();
+        assert_eq!(wl.as_workload().unwrap().state, "Finished");
+    }
+
+    #[test]
+    fn coordinator_crash_rebuilds_read_path_and_invalidates_watchers() {
+        let mut cfg = PlatformConfig::load(&default_config_path()).unwrap();
+        cfg.durability_enabled = true;
+        let mut a = ApiServer::new(Platform::bootstrap(cfg).unwrap());
+        let token = a.login("user006").unwrap();
+        let req = ApiObject::BatchJob(BatchJobResource::request(
+            "user006",
+            "project01",
+            ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+            300.0,
+            PriorityClass::Batch,
+            false,
+        ));
+        let name = a.create(&token, &req).unwrap().name().to_string();
+        a.run_for(60.0, 10.0);
+        let rv = a.last_rv();
+        let nodes_before =
+            a.list(&token, ResourceKind::Node, &Selector::all()).unwrap().len();
+        let by_label =
+            a.list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap()).unwrap();
+        assert_eq!(by_label.len(), 1);
+
+        a.platform.crash_and_restore();
+        a.tick();
+        assert_eq!(a.platform.coordinator_restarts(), 1);
+
+        // a restarted apiserver cannot claim watch continuity: every
+        // watcher is invalidated and must re-list
+        assert!(matches!(
+            a.watch(&token, ResourceKind::Pod, rv),
+            Err(ApiError::Compacted(_))
+        ));
+
+        // the read path is rebuilt, not stale: plain lists, the inverted
+        // label index, and field selectors all answer from the restored
+        // world
+        assert_eq!(
+            a.list(&token, ResourceKind::Node, &Selector::all()).unwrap().len(),
+            nodes_before
+        );
+        let by_label =
+            a.list(&token, ResourceKind::Pod, &Selector::labels("app=batch").unwrap()).unwrap();
+        assert_eq!(by_label.len(), 1);
+        let virtuals = a
+            .list(&token, ResourceKind::Node, &Selector::fields("spec.virtual=true").unwrap())
+            .unwrap();
+        assert_eq!(virtuals.len(), 4);
+        assert_eq!(
+            a.get(&token, ResourceKind::BatchJob, &name).unwrap().as_batch_job().unwrap().state,
+            "Admitted"
+        );
+
+        // and the platform keeps converging after the restore
+        a.run_for(600.0, 10.0);
         let wl = a.get(&token, ResourceKind::Workload, &name).unwrap();
         assert_eq!(wl.as_workload().unwrap().state, "Finished");
     }

@@ -8,6 +8,7 @@ pub mod pod;
 pub mod resources;
 pub mod scheduler;
 pub mod store;
+pub mod wal;
 
 pub use node::Node;
 pub use pod::{Pod, PodPhase, PodSpec};

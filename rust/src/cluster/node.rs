@@ -4,6 +4,7 @@ use std::collections::BTreeMap;
 
 use crate::cluster::resources::{ResourceVec, CPU, MEMORY, STORAGE};
 use crate::gpu::GpuDevice;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 
 /// Kubernetes-style taint effect (only NoSchedule is needed here).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -105,6 +106,49 @@ impl Node {
 
     pub fn has_label(&self, k: &str, v: &str) -> bool {
         self.labels.get(k).map(|x| x == v).unwrap_or(false)
+    }
+}
+
+// --------------------------------------------------------------- durability
+
+impl Enc for Taint {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.key.enc(b);
+        self.value.enc(b);
+    }
+}
+
+impl Dec for Taint {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(Taint { key: Dec::dec(r)?, value: Dec::dec(r)? })
+    }
+}
+
+impl Enc for Node {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.labels.enc(b);
+        self.taints.enc(b);
+        self.capacity.enc(b);
+        self.allocatable.enc(b);
+        self.gpus.enc(b);
+        self.virtual_node.enc(b);
+        self.ready.enc(b);
+    }
+}
+
+impl Dec for Node {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(Node {
+            name: Dec::dec(r)?,
+            labels: Dec::dec(r)?,
+            taints: Dec::dec(r)?,
+            capacity: Dec::dec(r)?,
+            allocatable: Dec::dec(r)?,
+            gpus: Dec::dec(r)?,
+            virtual_node: Dec::dec(r)?,
+            ready: Dec::dec(r)?,
+        })
     }
 }
 

@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 
 use crate::cluster::resources::ResourceVec;
 use crate::sim::clock::Time;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 
 /// What the pod actually does once it runs.
 #[derive(Debug, Clone)]
@@ -148,6 +149,147 @@ impl PodStatus {
 pub struct Pod {
     pub spec: PodSpec,
     pub status: PodStatus,
+}
+
+// --------------------------------------------------------------- durability
+
+impl Enc for Payload {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            Payload::Sleep { duration } => {
+                b.push(0);
+                duration.enc(b);
+            }
+            Payload::Session { idle_after } => {
+                b.push(1);
+                idle_after.enc(b);
+            }
+            Payload::MlJob { artifact, steps } => {
+                b.push(2);
+                artifact.enc(b);
+                steps.enc(b);
+            }
+            Payload::Burn { flops } => {
+                b.push(3);
+                flops.enc(b);
+            }
+        }
+    }
+}
+
+impl Dec for Payload {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => Payload::Sleep { duration: Dec::dec(r)? },
+            1 => Payload::Session { idle_after: Dec::dec(r)? },
+            2 => Payload::MlJob { artifact: Dec::dec(r)?, steps: Dec::dec(r)? },
+            3 => Payload::Burn { flops: Dec::dec(r)? },
+            t => return Err(CodecError(format!("bad payload tag {t}"))),
+        })
+    }
+}
+
+impl Enc for PodPhase {
+    fn enc(&self, b: &mut Vec<u8>) {
+        let tag: u8 = match self {
+            PodPhase::Pending => 0,
+            PodPhase::Scheduled => 1,
+            PodPhase::Running => 2,
+            PodPhase::Succeeded => 3,
+            PodPhase::Failed => 4,
+            PodPhase::Evicted => 5,
+        };
+        b.push(tag);
+    }
+}
+
+impl Dec for PodPhase {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => PodPhase::Pending,
+            1 => PodPhase::Scheduled,
+            2 => PodPhase::Running,
+            3 => PodPhase::Succeeded,
+            4 => PodPhase::Failed,
+            5 => PodPhase::Evicted,
+            t => return Err(CodecError(format!("bad pod phase tag {t}"))),
+        })
+    }
+}
+
+impl Enc for PodSpec {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.namespace.enc(b);
+        self.labels.enc(b);
+        self.requests.enc(b);
+        self.node_selector.enc(b);
+        self.tolerations.enc(b);
+        self.priority.enc(b);
+        self.payload.enc(b);
+        self.user.enc(b);
+        self.project.enc(b);
+    }
+}
+
+impl Dec for PodSpec {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(PodSpec {
+            name: Dec::dec(r)?,
+            namespace: Dec::dec(r)?,
+            labels: Dec::dec(r)?,
+            requests: Dec::dec(r)?,
+            node_selector: Dec::dec(r)?,
+            tolerations: Dec::dec(r)?,
+            priority: Dec::dec(r)?,
+            payload: Dec::dec(r)?,
+            user: Dec::dec(r)?,
+            project: Dec::dec(r)?,
+        })
+    }
+}
+
+impl Enc for PodStatus {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.phase.enc(b);
+        self.node.enc(b);
+        self.created_at.enc(b);
+        self.scheduled_at.enc(b);
+        self.started_at.enc(b);
+        self.finished_at.enc(b);
+        self.message.enc(b);
+        self.evictions.enc(b);
+        self.accounted.enc(b);
+    }
+}
+
+impl Dec for PodStatus {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(PodStatus {
+            phase: Dec::dec(r)?,
+            node: Dec::dec(r)?,
+            created_at: Dec::dec(r)?,
+            scheduled_at: Dec::dec(r)?,
+            started_at: Dec::dec(r)?,
+            finished_at: Dec::dec(r)?,
+            message: Dec::dec(r)?,
+            evictions: Dec::dec(r)?,
+            accounted: Dec::dec(r)?,
+        })
+    }
+}
+
+impl Enc for Pod {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.spec.enc(b);
+        self.status.enc(b);
+    }
+}
+
+impl Dec for Pod {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(Pod { spec: Dec::dec(r)?, status: Dec::dec(r)? })
+    }
 }
 
 #[cfg(test)]

@@ -9,6 +9,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
+
 /// Canonical resource names.
 pub const CPU: &str = "cpu"; // millicores
 pub const MEMORY: &str = "memory"; // bytes
@@ -124,6 +126,26 @@ impl ResourceVec {
             r.set(k, v * n);
         }
         r
+    }
+}
+
+impl Enc for ResourceVec {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.0.enc(b);
+    }
+}
+
+impl Dec for ResourceVec {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let m: BTreeMap<String, i64> = Dec::dec(r)?;
+        // re-establish the type's invariants (non-negative, zeros pruned)
+        // instead of trusting the wire
+        for (k, v) in &m {
+            if *v <= 0 {
+                return Err(CodecError(format!("resource {k} has non-positive quantity {v}")));
+            }
+        }
+        Ok(ResourceVec(m))
     }
 }
 

@@ -1,0 +1,662 @@
+//! Write-ahead log for the control plane (DESIGN: crash tolerance).
+//!
+//! Every state-mutating transition of the [`ClusterStore`] and the Kueue
+//! controller appends one framed [`WalRecord`] here *before* executing, so
+//! a coordinator crash can be recovered by replaying the log tail over the
+//! last snapshot. The log models durable storage in the simulation: the
+//! buffer survives the simulated coordinator kill (the in-memory stand-in
+//! for an fsync'd file), while everything else about the coordinator is
+//! rebuilt from snapshot + replay.
+//!
+//! Frame format, per record:
+//!
+//! ```text
+//! [len: u32 LE] [crc: u32 LE] [payload: len bytes]
+//! ```
+//!
+//! `crc` is [`checksum`] over the payload. [`Wal::replay`] walks frames
+//! from the start and stops at the first short, torn, or corrupt frame —
+//! exactly the durable prefix an fsync'd file would guarantee — returning
+//! the decoded records plus a warning describing the discarded tail, if
+//! any.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::cluster::node::Node;
+use crate::cluster::pod::{PodPhase, PodSpec};
+use crate::cluster::resources::ResourceVec;
+use crate::cluster::store::EventKind;
+use crate::gpu::mig::MigLayout;
+use crate::queue::kueue::{ClusterQueue, LocalQueue, PriorityClass};
+use crate::sim::clock::Time;
+use crate::util::codec::{checksum, CodecError, Dec, Enc, Reader};
+
+/// Shared handle: the store and the queue controller each hold one, the
+/// platform holds the third for control-state checkpoints and snapshots.
+pub type WalHandle = Rc<RefCell<Wal>>;
+
+/// One logged [`ClusterStore`](crate::cluster::store::ClusterStore)
+/// mutation. Each variant mirrors a public mutator's arguments; replay
+/// re-invokes the mutator with them (ignoring its `Result` — failed calls
+/// were logged too and fail identically on replay, reproducing even the
+/// resource-version bumps of rejected transitions).
+#[derive(Debug, Clone)]
+pub enum StoreOp {
+    AddNode { node: Node, at: Time },
+    RemoveNode { name: String, at: Time },
+    SetNodeReady { name: String, ready: bool, at: Time, msg: String },
+    RepartitionGpu { node: String, device: String, layout: MigLayout, at: Time },
+    DegradeResource { node: String, resource: String, count: i64, at: Time },
+    RecoverResource { node: String, resource: String, give: i64, at: Time },
+    CreatePod { spec: PodSpec, at: Time },
+    Bind { pod: String, node: String, at: Time },
+    MarkRunning { pod: String, at: Time },
+    FinishPod { pod: String, phase: PodPhase, at: Time, msg: String },
+    EvictPod { pod: String, at: Time, requeue: bool, msg: String },
+    CancelPending { pod: String, at: Time, msg: String },
+    DeletePod { pod: String, at: Time, msg: String },
+    GcFinished { before: Time },
+    Record { at: Time, kind: EventKind, object: String, msg: String },
+    SetEventCapacity { capacity: usize },
+}
+
+/// One logged Kueue mutation (same replay contract as [`StoreOp`]).
+#[derive(Debug, Clone)]
+pub enum KueueOp {
+    AddClusterQueue { cq: ClusterQueue },
+    AddLocalQueue { lq: LocalQueue },
+    SubmitForUser {
+        name: String,
+        queue: String,
+        user: String,
+        priority: PriorityClass,
+        requests: ResourceVec,
+        at: Time,
+    },
+    SetFairShare { usage: std::collections::HashMap<String, f64> },
+    AdjustNominal { queue: String, add: ResourceVec, remove: ResourceVec },
+    AdmitPass { at: Time },
+    Requeue { name: String, at: Time },
+    Finish { name: String, at: Time },
+    SetTransitionCapacity { capacity: usize },
+}
+
+/// A log entry: a store op, a queue op, or an opaque control-plane
+/// checkpoint blob (facade-local state the platform serializes itself).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    Store(StoreOp),
+    Kueue(KueueOp),
+    Control(Vec<u8>),
+}
+
+// ------------------------------------------------------------------ codecs
+
+impl PartialEq for StoreOp {
+    fn eq(&self, other: &Self) -> bool {
+        self.to_bytes() == other.to_bytes()
+    }
+}
+
+impl Enc for StoreOp {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            StoreOp::AddNode { node, at } => {
+                b.push(0);
+                node.enc(b);
+                at.enc(b);
+            }
+            StoreOp::RemoveNode { name, at } => {
+                b.push(1);
+                name.enc(b);
+                at.enc(b);
+            }
+            StoreOp::SetNodeReady { name, ready, at, msg } => {
+                b.push(2);
+                name.enc(b);
+                ready.enc(b);
+                at.enc(b);
+                msg.enc(b);
+            }
+            StoreOp::RepartitionGpu { node, device, layout, at } => {
+                b.push(3);
+                node.enc(b);
+                device.enc(b);
+                layout.enc(b);
+                at.enc(b);
+            }
+            StoreOp::DegradeResource { node, resource, count, at } => {
+                b.push(4);
+                node.enc(b);
+                resource.enc(b);
+                count.enc(b);
+                at.enc(b);
+            }
+            StoreOp::RecoverResource { node, resource, give, at } => {
+                b.push(5);
+                node.enc(b);
+                resource.enc(b);
+                give.enc(b);
+                at.enc(b);
+            }
+            StoreOp::CreatePod { spec, at } => {
+                b.push(6);
+                spec.enc(b);
+                at.enc(b);
+            }
+            StoreOp::Bind { pod, node, at } => {
+                b.push(7);
+                pod.enc(b);
+                node.enc(b);
+                at.enc(b);
+            }
+            StoreOp::MarkRunning { pod, at } => {
+                b.push(8);
+                pod.enc(b);
+                at.enc(b);
+            }
+            StoreOp::FinishPod { pod, phase, at, msg } => {
+                b.push(9);
+                pod.enc(b);
+                phase.enc(b);
+                at.enc(b);
+                msg.enc(b);
+            }
+            StoreOp::EvictPod { pod, at, requeue, msg } => {
+                b.push(10);
+                pod.enc(b);
+                at.enc(b);
+                requeue.enc(b);
+                msg.enc(b);
+            }
+            StoreOp::CancelPending { pod, at, msg } => {
+                b.push(11);
+                pod.enc(b);
+                at.enc(b);
+                msg.enc(b);
+            }
+            StoreOp::DeletePod { pod, at, msg } => {
+                b.push(12);
+                pod.enc(b);
+                at.enc(b);
+                msg.enc(b);
+            }
+            StoreOp::GcFinished { before } => {
+                b.push(13);
+                before.enc(b);
+            }
+            StoreOp::Record { at, kind, object, msg } => {
+                b.push(14);
+                at.enc(b);
+                kind.enc(b);
+                object.enc(b);
+                msg.enc(b);
+            }
+            StoreOp::SetEventCapacity { capacity } => {
+                b.push(15);
+                capacity.enc(b);
+            }
+        }
+    }
+}
+
+impl Dec for StoreOp {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => StoreOp::AddNode { node: Dec::dec(r)?, at: Dec::dec(r)? },
+            1 => StoreOp::RemoveNode { name: Dec::dec(r)?, at: Dec::dec(r)? },
+            2 => StoreOp::SetNodeReady {
+                name: Dec::dec(r)?,
+                ready: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+                msg: Dec::dec(r)?,
+            },
+            3 => StoreOp::RepartitionGpu {
+                node: Dec::dec(r)?,
+                device: Dec::dec(r)?,
+                layout: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+            },
+            4 => StoreOp::DegradeResource {
+                node: Dec::dec(r)?,
+                resource: Dec::dec(r)?,
+                count: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+            },
+            5 => StoreOp::RecoverResource {
+                node: Dec::dec(r)?,
+                resource: Dec::dec(r)?,
+                give: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+            },
+            6 => StoreOp::CreatePod { spec: Dec::dec(r)?, at: Dec::dec(r)? },
+            7 => StoreOp::Bind { pod: Dec::dec(r)?, node: Dec::dec(r)?, at: Dec::dec(r)? },
+            8 => StoreOp::MarkRunning { pod: Dec::dec(r)?, at: Dec::dec(r)? },
+            9 => StoreOp::FinishPod {
+                pod: Dec::dec(r)?,
+                phase: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+                msg: Dec::dec(r)?,
+            },
+            10 => StoreOp::EvictPod {
+                pod: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+                requeue: Dec::dec(r)?,
+                msg: Dec::dec(r)?,
+            },
+            11 => StoreOp::CancelPending {
+                pod: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+                msg: Dec::dec(r)?,
+            },
+            12 => StoreOp::DeletePod {
+                pod: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+                msg: Dec::dec(r)?,
+            },
+            13 => StoreOp::GcFinished { before: Dec::dec(r)? },
+            14 => StoreOp::Record {
+                at: Dec::dec(r)?,
+                kind: Dec::dec(r)?,
+                object: Dec::dec(r)?,
+                msg: Dec::dec(r)?,
+            },
+            15 => StoreOp::SetEventCapacity { capacity: Dec::dec(r)? },
+            t => return Err(CodecError(format!("bad store op tag {t}"))),
+        })
+    }
+}
+
+impl PartialEq for KueueOp {
+    fn eq(&self, other: &Self) -> bool {
+        self.to_bytes() == other.to_bytes()
+    }
+}
+
+impl Enc for KueueOp {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            KueueOp::AddClusterQueue { cq } => {
+                b.push(0);
+                cq.enc(b);
+            }
+            KueueOp::AddLocalQueue { lq } => {
+                b.push(1);
+                lq.enc(b);
+            }
+            KueueOp::SubmitForUser { name, queue, user, priority, requests, at } => {
+                b.push(2);
+                name.enc(b);
+                queue.enc(b);
+                user.enc(b);
+                priority.enc(b);
+                requests.enc(b);
+                at.enc(b);
+            }
+            KueueOp::SetFairShare { usage } => {
+                b.push(3);
+                usage.enc(b);
+            }
+            KueueOp::AdjustNominal { queue, add, remove } => {
+                b.push(4);
+                queue.enc(b);
+                add.enc(b);
+                remove.enc(b);
+            }
+            KueueOp::AdmitPass { at } => {
+                b.push(5);
+                at.enc(b);
+            }
+            KueueOp::Requeue { name, at } => {
+                b.push(6);
+                name.enc(b);
+                at.enc(b);
+            }
+            KueueOp::Finish { name, at } => {
+                b.push(7);
+                name.enc(b);
+                at.enc(b);
+            }
+            KueueOp::SetTransitionCapacity { capacity } => {
+                b.push(8);
+                capacity.enc(b);
+            }
+        }
+    }
+}
+
+impl Dec for KueueOp {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => KueueOp::AddClusterQueue { cq: Dec::dec(r)? },
+            1 => KueueOp::AddLocalQueue { lq: Dec::dec(r)? },
+            2 => KueueOp::SubmitForUser {
+                name: Dec::dec(r)?,
+                queue: Dec::dec(r)?,
+                user: Dec::dec(r)?,
+                priority: Dec::dec(r)?,
+                requests: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+            },
+            3 => KueueOp::SetFairShare { usage: Dec::dec(r)? },
+            4 => KueueOp::AdjustNominal {
+                queue: Dec::dec(r)?,
+                add: Dec::dec(r)?,
+                remove: Dec::dec(r)?,
+            },
+            5 => KueueOp::AdmitPass { at: Dec::dec(r)? },
+            6 => KueueOp::Requeue { name: Dec::dec(r)?, at: Dec::dec(r)? },
+            7 => KueueOp::Finish { name: Dec::dec(r)?, at: Dec::dec(r)? },
+            8 => KueueOp::SetTransitionCapacity { capacity: Dec::dec(r)? },
+            t => return Err(CodecError(format!("bad kueue op tag {t}"))),
+        })
+    }
+}
+
+impl Enc for WalRecord {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            WalRecord::Store(op) => {
+                b.push(0);
+                op.enc(b);
+            }
+            WalRecord::Kueue(op) => {
+                b.push(1);
+                op.enc(b);
+            }
+            WalRecord::Control(bytes) => {
+                b.push(2);
+                crate::util::codec::enc_bytes(bytes, b);
+            }
+        }
+    }
+}
+
+impl Dec for WalRecord {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => WalRecord::Store(Dec::dec(r)?),
+            1 => WalRecord::Kueue(Dec::dec(r)?),
+            2 => WalRecord::Control(crate::util::codec::dec_bytes(r)?),
+            t => return Err(CodecError(format!("bad wal record tag {t}"))),
+        })
+    }
+}
+
+// --------------------------------------------------------------------- wal
+
+/// The write-ahead log: an append-only byte buffer of checksummed frames.
+#[derive(Debug, Default)]
+pub struct Wal {
+    buf: Vec<u8>,
+    /// Records appended since the buffer was last cleared (stat surface).
+    appended: u64,
+}
+
+impl Wal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fresh shared handle for wiring into the store and queue controller.
+    pub fn shared() -> WalHandle {
+        Rc::new(RefCell::new(Wal::new()))
+    }
+
+    /// Frame and append one record.
+    pub fn append(&mut self, rec: &WalRecord) {
+        let payload = rec.to_bytes();
+        (payload.len() as u32).enc(&mut self.buf);
+        checksum(&payload).enc(&mut self.buf);
+        self.buf.extend_from_slice(&payload);
+        self.appended += 1;
+    }
+
+    /// Decode every intact frame from the start of the log. Stops at the
+    /// first short header, truncated payload, checksum mismatch, or
+    /// undecodable payload — the torn tail a crash mid-append leaves —
+    /// and reports it as a warning instead of an error: everything before
+    /// the tear is the durable prefix.
+    pub fn replay(&self) -> (Vec<WalRecord>, Option<String>) {
+        let mut out = Vec::new();
+        let mut r = Reader::new(&self.buf);
+        while !r.is_empty() {
+            let offset = self.buf.len() - r.remaining();
+            let header = (u32::dec(&mut r), u32::dec(&mut r));
+            let (len, crc) = match header {
+                (Ok(len), Ok(crc)) => (len, crc),
+                _ => {
+                    return (out, Some(format!("torn frame header at byte {offset}")));
+                }
+            };
+            let payload = match r.take(len as usize) {
+                Ok(p) => p,
+                Err(_) => {
+                    return (
+                        out,
+                        Some(format!("torn payload at byte {offset} (wanted {len} bytes)")),
+                    );
+                }
+            };
+            if checksum(payload) != crc {
+                return (out, Some(format!("checksum mismatch at byte {offset}")));
+            }
+            match WalRecord::from_bytes(payload) {
+                Ok(rec) => out.push(rec),
+                Err(e) => {
+                    return (out, Some(format!("undecodable record at byte {offset}: {e}")));
+                }
+            }
+        }
+        (out, None)
+    }
+
+    /// Drop every record (after the state it covers was snapshotted).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.appended = 0;
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Records appended since the last [`clear`](Self::clear).
+    pub fn appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Test hook: keep only the first `keep` bytes — a torn write.
+    pub fn truncate_bytes(&mut self, keep: usize) {
+        self.buf.truncate(keep);
+    }
+
+    /// Test hook: flip one byte — simulated media corruption.
+    pub fn corrupt_byte(&mut self, at: usize) {
+        if let Some(b) = self.buf.get_mut(at) {
+            *b ^= 0xff;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pod::Payload;
+
+    fn sample_ops() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Store(StoreOp::CreatePod {
+                spec: PodSpec::new(
+                    "p1",
+                    ResourceVec::cpu_millis(500),
+                    Payload::Sleep { duration: 5.0 },
+                ),
+                at: 1.0,
+            }),
+            WalRecord::Store(StoreOp::Bind { pod: "p1".into(), node: "n1".into(), at: 2.0 }),
+            WalRecord::Kueue(KueueOp::AdmitPass { at: 3.0 }),
+            WalRecord::Control(vec![1, 2, 3, 4]),
+        ]
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let mut w = Wal::new();
+        for rec in sample_ops() {
+            w.append(&rec);
+        }
+        assert_eq!(w.appended(), 4);
+        let (recs, warn) = w.replay();
+        assert!(warn.is_none(), "{warn:?}");
+        assert_eq!(recs, sample_ops());
+        w.clear();
+        assert!(w.is_empty());
+        assert_eq!(w.replay().0.len(), 0);
+    }
+
+    #[test]
+    fn torn_tail_keeps_durable_prefix() {
+        let mut w = Wal::new();
+        for rec in sample_ops() {
+            w.append(&rec);
+        }
+        // cut into the last frame's payload: 3 intact records survive
+        w.truncate_bytes(w.len_bytes() - 2);
+        let (recs, warn) = w.replay();
+        assert_eq!(recs.len(), 3);
+        assert!(warn.unwrap().contains("torn"));
+        // cut into a frame header
+        w.truncate_bytes(3);
+        let (recs, warn) = w.replay();
+        assert!(recs.is_empty());
+        assert!(warn.unwrap().contains("torn frame header"));
+    }
+
+    #[test]
+    fn corrupt_byte_stops_replay_at_bad_frame() {
+        let mut w = Wal::new();
+        for rec in sample_ops() {
+            w.append(&rec);
+        }
+        // flip a byte in the middle of the second frame's payload
+        let first_frame_len = {
+            let mut probe = Wal::new();
+            probe.append(&sample_ops()[0]);
+            probe.len_bytes()
+        };
+        w.corrupt_byte(first_frame_len + 10);
+        let (recs, warn) = w.replay();
+        assert_eq!(recs.len(), 1, "only the frame before the corruption survives");
+        assert!(warn.unwrap().contains("checksum mismatch"));
+    }
+
+    #[test]
+    fn store_op_codec_covers_every_variant() {
+        use crate::cluster::node::Node;
+        use crate::gpu::{GpuModel, MigLayout};
+        let ops = vec![
+            StoreOp::AddNode {
+                node: Node::physical("n1", 8, 32 << 30, 1 << 40, vec![]),
+                at: 0.0,
+            },
+            StoreOp::RemoveNode { name: "n1".into(), at: 1.0 },
+            StoreOp::SetNodeReady { name: "n1".into(), ready: false, at: 2.0, msg: "c".into() },
+            StoreOp::RepartitionGpu {
+                node: "n1".into(),
+                device: "g0".into(),
+                layout: MigLayout::max_sharing(GpuModel::A100_40GB).unwrap(),
+                at: 3.0,
+            },
+            StoreOp::DegradeResource {
+                node: "n1".into(),
+                resource: "nvidia.com/gpu".into(),
+                count: 1,
+                at: 4.0,
+            },
+            StoreOp::RecoverResource {
+                node: "n1".into(),
+                resource: "nvidia.com/gpu".into(),
+                give: 1,
+                at: 5.0,
+            },
+            StoreOp::CreatePod {
+                spec: PodSpec::new("p", ResourceVec::cpu_millis(1), Payload::Burn { flops: 1.0 }),
+                at: 6.0,
+            },
+            StoreOp::Bind { pod: "p".into(), node: "n1".into(), at: 7.0 },
+            StoreOp::MarkRunning { pod: "p".into(), at: 8.0 },
+            StoreOp::FinishPod {
+                pod: "p".into(),
+                phase: PodPhase::Succeeded,
+                at: 9.0,
+                msg: "ok".into(),
+            },
+            StoreOp::EvictPod { pod: "p".into(), at: 10.0, requeue: true, msg: "e".into() },
+            StoreOp::CancelPending { pod: "p".into(), at: 11.0, msg: "c".into() },
+            StoreOp::DeletePod { pod: "p".into(), at: 12.0, msg: "d".into() },
+            StoreOp::GcFinished { before: 13.0 },
+            StoreOp::Record {
+                at: 14.0,
+                kind: EventKind::PodUnschedulable,
+                object: "p".into(),
+                msg: "no fit".into(),
+            },
+            StoreOp::SetEventCapacity { capacity: 64 },
+        ];
+        for op in ops {
+            let bytes = op.to_bytes();
+            let back = StoreOp::from_bytes(&bytes).unwrap();
+            assert_eq!(back, op);
+        }
+    }
+
+    #[test]
+    fn kueue_op_codec_covers_every_variant() {
+        let mut usage = std::collections::HashMap::new();
+        usage.insert("alice".to_string(), 1.5);
+        let ops = vec![
+            KueueOp::AddClusterQueue {
+                cq: ClusterQueue {
+                    name: "cq".into(),
+                    cohort: Some("co".into()),
+                    nominal: ResourceVec::cpu_millis(1000),
+                    used: ResourceVec::new(),
+                    can_borrow: true,
+                    can_lend: false,
+                },
+            },
+            KueueOp::AddLocalQueue {
+                lq: LocalQueue { name: "lq".into(), cluster_queue: "cq".into() },
+            },
+            KueueOp::SubmitForUser {
+                name: "w".into(),
+                queue: "lq".into(),
+                user: "alice".into(),
+                priority: PriorityClass::Interactive,
+                requests: ResourceVec::cpu_millis(500),
+                at: 1.0,
+            },
+            KueueOp::SetFairShare { usage },
+            KueueOp::AdjustNominal {
+                queue: "cq".into(),
+                add: ResourceVec::cpu_millis(1),
+                remove: ResourceVec::new(),
+            },
+            KueueOp::AdmitPass { at: 2.0 },
+            KueueOp::Requeue { name: "w".into(), at: 3.0 },
+            KueueOp::Finish { name: "w".into(), at: 4.0 },
+            KueueOp::SetTransitionCapacity { capacity: 128 },
+        ];
+        for op in ops {
+            let bytes = op.to_bytes();
+            let back = KueueOp::from_bytes(&bytes).unwrap();
+            assert_eq!(back, op);
+        }
+    }
+}

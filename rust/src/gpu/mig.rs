@@ -184,6 +184,43 @@ impl MigLayout {
     }
 }
 
+impl crate::util::codec::Enc for MigProfile {
+    fn enc(&self, b: &mut Vec<u8>) {
+        b.push(self.compute_slices);
+        crate::util::codec::Enc::enc(&self.mem_gb, b);
+    }
+}
+
+impl crate::util::codec::Dec for MigProfile {
+    fn dec(
+        r: &mut crate::util::codec::Reader<'_>,
+    ) -> Result<Self, crate::util::codec::CodecError> {
+        Ok(MigProfile {
+            compute_slices: crate::util::codec::Dec::dec(r)?,
+            mem_gb: crate::util::codec::Dec::dec(r)?,
+        })
+    }
+}
+
+impl crate::util::codec::Enc for MigLayout {
+    fn enc(&self, b: &mut Vec<u8>) {
+        crate::util::codec::Enc::enc(&self.model, b);
+        crate::util::codec::Enc::enc(&self.instances, b);
+    }
+}
+
+impl crate::util::codec::Dec for MigLayout {
+    fn dec(
+        r: &mut crate::util::codec::Reader<'_>,
+    ) -> Result<Self, crate::util::codec::CodecError> {
+        let model: GpuModel = crate::util::codec::Dec::dec(r)?;
+        let instances: Vec<MigProfile> = crate::util::codec::Dec::dec(r)?;
+        // revalidate the geometry instead of trusting the wire
+        MigLayout::new(model, instances)
+            .map_err(|e| crate::util::codec::CodecError(format!("invalid mig layout: {e}")))
+    }
+}
+
 /// Enumerate all valid multisets of profiles for a model (small search space:
 /// used by the MIG-sharing benchmark to sweep every layout).
 pub fn enumerate_layouts(model: GpuModel) -> Vec<MigLayout> {

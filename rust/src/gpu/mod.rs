@@ -63,6 +63,31 @@ impl GpuDevice {
     }
 }
 
+impl crate::util::codec::Enc for GpuDevice {
+    fn enc(&self, b: &mut Vec<u8>) {
+        crate::util::codec::Enc::enc(&self.id, b);
+        crate::util::codec::Enc::enc(&self.model, b);
+        crate::util::codec::Enc::enc(&self.layout, b);
+    }
+}
+
+impl crate::util::codec::Dec for GpuDevice {
+    fn dec(
+        r: &mut crate::util::codec::Reader<'_>,
+    ) -> Result<Self, crate::util::codec::CodecError> {
+        let id: String = crate::util::codec::Dec::dec(r)?;
+        let model: GpuModel = crate::util::codec::Dec::dec(r)?;
+        let layout: MigLayout = crate::util::codec::Dec::dec(r)?;
+        if layout.model != model {
+            return Err(crate::util::codec::CodecError(format!(
+                "device {id} model {model:?} does not match layout model {:?}",
+                layout.model
+            )));
+        }
+        Ok(GpuDevice { id, model, layout })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -106,6 +106,38 @@ impl GpuModel {
     }
 }
 
+impl crate::util::codec::Enc for GpuModel {
+    fn enc(&self, b: &mut Vec<u8>) {
+        let tag: u8 = match self {
+            GpuModel::TeslaT4 => 0,
+            GpuModel::Rtx5000 => 1,
+            GpuModel::A100_40GB => 2,
+            GpuModel::A30 => 3,
+            GpuModel::AlveoU50 => 4,
+            GpuModel::AlveoU250 => 5,
+            GpuModel::AlveoU55C => 6,
+        };
+        b.push(tag);
+    }
+}
+
+impl crate::util::codec::Dec for GpuModel {
+    fn dec(
+        r: &mut crate::util::codec::Reader<'_>,
+    ) -> Result<Self, crate::util::codec::CodecError> {
+        Ok(match crate::util::codec::Dec::dec(r).map(|t: u8| t)? {
+            0 => GpuModel::TeslaT4,
+            1 => GpuModel::Rtx5000,
+            2 => GpuModel::A100_40GB,
+            3 => GpuModel::A30,
+            4 => GpuModel::AlveoU50,
+            5 => GpuModel::AlveoU250,
+            6 => GpuModel::AlveoU55C,
+            t => return Err(crate::util::codec::CodecError(format!("bad gpu model tag {t}"))),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -17,6 +17,7 @@ use crate::sim::clock::Time;
 use crate::storage::nfs::NfsServer;
 use crate::storage::object::ObjectStore;
 use crate::storage::rclone::RcloneMount;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 
 /// Default per-user home quota (50 GiB) and project share quota (500 GiB).
 pub const HOME_QUOTA: u64 = 50 << 30;
@@ -248,6 +249,64 @@ impl Spawner {
     }
 }
 
+// --- durability codecs ------------------------------------------------
+//
+// Sessions and the id counter are facade-local control state: a restored
+// coordinator must keep culling/stopping live sessions and must not mint
+// colliding `session-*` ids.
+
+impl Enc for Session {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.id.enc(b);
+        self.user.enc(b);
+        self.profile.enc(b);
+        self.pod_name.enc(b);
+        self.workload_name.enc(b);
+        self.token.enc(b);
+        self.mount.enc(b);
+        self.started_at.enc(b);
+        self.last_activity.enc(b);
+    }
+}
+
+impl Dec for Session {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(Session {
+            id: String::dec(r)?,
+            user: String::dec(r)?,
+            profile: String::dec(r)?,
+            pod_name: String::dec(r)?,
+            workload_name: String::dec(r)?,
+            token: String::dec(r)?,
+            mount: Option::dec(r)?,
+            started_at: Time::dec(r)?,
+            last_activity: Time::dec(r)?,
+        })
+    }
+}
+
+impl Enc for Spawner {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.hub_queue.enc(b);
+        self.token_ttl.enc(b);
+        self.idle_timeout.enc(b);
+        self.next_id.enc(b);
+        self.sessions.enc(b);
+    }
+}
+
+impl Dec for Spawner {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(Spawner {
+            hub_queue: String::dec(r)?,
+            token_ttl: Time::dec(r)?,
+            idle_timeout: Time::dec(r)?,
+            next_id: u64::dec(r)?,
+            sessions: Vec::dec(r)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,5 +462,30 @@ mod tests {
         // quota released
         let (used, _) = w.kueue.quota_utilization();
         assert!(used.is_empty());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_keeps_sessions_and_id_counter() {
+        let mut w = world();
+        let profile = default_catalogue().into_iter().find(|p| p.name == "cpu-small").unwrap();
+        let s = {
+            let (mut c, spawner) = split!(&mut w);
+            spawner.spawn(&mut c, "alice", &profile, 10.0).unwrap()
+        };
+        let bytes = w.spawner.to_bytes();
+        let back = Spawner::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes);
+        let restored = back.active_session_for("alice").unwrap();
+        assert_eq!(restored.id, s.id);
+        assert_eq!(restored.pod_name, s.pod_name);
+        assert!(restored.mount.is_some());
+        // the id counter survived: a double-spawn is still rejected, and the
+        // counter continues past the restored value
+        w.spawner = back;
+        let (mut c, spawner) = split!(&mut w);
+        assert!(matches!(
+            spawner.spawn(&mut c, "alice", &profile, 11.0),
+            Err(SpawnError::AlreadyActive(_))
+        ));
     }
 }

@@ -154,6 +154,24 @@
 //! breaker opens, workloads reroute to HTCondor sites, probes close the
 //! breaker, zero terminal failures.
 //!
+//! ## Crash tolerance
+//!
+//! With the `durability.enabled` config knob, the coordinator is itself a
+//! chaos target ([`sim::chaos::Fault::CoordinatorCrash`]): every
+//! state-mutating store/Kueue transition is appended to a CRC-framed
+//! write-ahead log ([`cluster::wal`]) before it applies, the full platform
+//! state is snapshotted every `durability.snapshot_interval_seconds` with
+//! the compact [`util::codec`] byte codec (truncating the log), and
+//! control state (sessions, job registry, health, ledgers, reconciler
+//! cursors) is checkpointed every tick. A crash restores snapshot + log
+//! tail — reproducing the event rings byte-identically, absolute cursors
+//! included — then rebuilds all derived structures (free-capacity
+//! indexes, API label indexes and view caches, watch shards) instead of
+//! trusting them; watchers observe the restart as a `Compacted` re-list.
+//! The acceptance criterion, held by `rust/tests/chaos.rs`: a run killed
+//! and restored mid-campaign converges to a byte-identical transition log
+//! versus an uninterrupted run of the same seed.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for measured results.
 //!

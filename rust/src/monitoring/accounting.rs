@@ -128,6 +128,49 @@ impl UsageLedger {
     }
 }
 
+// --------------------------------------------------------------- durability
+
+impl crate::util::codec::Enc for Usage {
+    fn enc(&self, b: &mut Vec<u8>) {
+        use crate::util::codec::Enc;
+        self.cpu_core_hours.enc(b);
+        self.gpu_hours.enc(b);
+        self.mig_gpu_equiv_hours.enc(b);
+        self.pods.enc(b);
+    }
+}
+
+impl crate::util::codec::Dec for Usage {
+    fn dec(
+        r: &mut crate::util::codec::Reader<'_>,
+    ) -> Result<Self, crate::util::codec::CodecError> {
+        use crate::util::codec::Dec;
+        Ok(Usage {
+            cpu_core_hours: Dec::dec(r)?,
+            gpu_hours: Dec::dec(r)?,
+            mig_gpu_equiv_hours: Dec::dec(r)?,
+            pods: Dec::dec(r)?,
+        })
+    }
+}
+
+impl crate::util::codec::Enc for UsageLedger {
+    fn enc(&self, b: &mut Vec<u8>) {
+        use crate::util::codec::Enc;
+        self.by_user.enc(b);
+        self.by_project.enc(b);
+    }
+}
+
+impl crate::util::codec::Dec for UsageLedger {
+    fn dec(
+        r: &mut crate::util::codec::Reader<'_>,
+    ) -> Result<Self, crate::util::codec::CodecError> {
+        use crate::util::codec::Dec;
+        Ok(UsageLedger { by_user: Dec::dec(r)?, by_project: Dec::dec(r)? })
+    }
+}
+
 /// The accounting report.
 #[derive(Debug, Default)]
 pub struct Report {

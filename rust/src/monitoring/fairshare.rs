@@ -19,6 +19,7 @@
 use std::collections::HashMap;
 
 use crate::sim::clock::Time;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 
 /// One user's decayed usage state.
 #[derive(Debug, Clone, Copy)]
@@ -91,6 +92,43 @@ impl FairShare {
     }
 }
 
+// --- durability codecs ------------------------------------------------
+//
+// The decayed counters and the `observed` ledger watermarks must both
+// survive a coordinator crash: losing `observed` would re-charge every
+// user's full cumulative GPU-hours on the first post-restart observation.
+
+impl Enc for Entry {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.usage.enc(b);
+        self.last.enc(b);
+    }
+}
+
+impl Dec for Entry {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(Entry { usage: f64::dec(r)?, last: Time::dec(r)? })
+    }
+}
+
+impl Enc for FairShare {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.half_life.enc(b);
+        self.entries.enc(b);
+        self.observed.enc(b);
+    }
+}
+
+impl Dec for FairShare {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(FairShare {
+            half_life: f64::dec(r)?,
+            entries: HashMap::dec(r)?,
+            observed: HashMap::dec(r)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +156,20 @@ mod tests {
         assert!((f.usage("bob", 30.0) - 5.0).abs() < 1e-9);
         let snap = f.snapshot(30.0);
         assert!((snap["bob"] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_keeps_observed_watermarks() {
+        let mut f = FairShare::new(3600.0);
+        f.charge("alice", 2.0, 0.0);
+        f.observe_total("bob", 3.0, 10.0);
+        let bytes = f.to_bytes();
+        let back = FairShare::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes);
+        assert!((back.usage("alice", 0.0) - 2.0).abs() < 1e-9);
+        // watermark survived: re-observing the same total charges nothing
+        let mut back = back;
+        back.observe_total("bob", 3.0, 20.0);
+        assert!((back.usage("bob", 20.0) - f.usage("bob", 20.0)).abs() < 1e-9);
     }
 }

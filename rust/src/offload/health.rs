@@ -19,6 +19,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::sim::clock::Time;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 use crate::util::ring::{Compacted, RingLog};
 
 /// Externally visible site condition (projected onto the `Site` resource).
@@ -260,7 +261,7 @@ impl HealthTracker {
     /// Entries pruned before `cursor` are silently skipped; cursor-tracking
     /// pumps use [`transitions_since_checked`](Self::transitions_since_checked).
     pub fn transitions_since(&self, cursor: usize) -> impl Iterator<Item = &HealthTransition> {
-        self.transitions.since_lossy(cursor)
+        self.transitions.since_clamped(cursor)
     }
 
     /// Checked delta read: a cursor behind the retained window is a typed
@@ -286,6 +287,121 @@ impl HealthTracker {
     /// The site's most recent transition, if any (Condition timestamps).
     pub fn last_transition(&self, site: &str) -> Option<&HealthTransition> {
         self.transitions.iter().rev().find(|t| t.site == site)
+    }
+}
+
+// --- durability codecs ------------------------------------------------
+//
+// Breaker state is coordinator-local control state: losing it across a
+// crash would route new work to quarantined sites (or keep recovered ones
+// dark until the window refills). The transition ring serializes with its
+// absolute base so watch cursors survive the restart.
+
+impl Enc for HealthStatus {
+    fn enc(&self, b: &mut Vec<u8>) {
+        let tag: u8 = match self {
+            HealthStatus::Healthy => 0,
+            HealthStatus::Degraded => 1,
+            HealthStatus::Probing => 2,
+        };
+        tag.enc(b);
+    }
+}
+
+impl Dec for HealthStatus {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => HealthStatus::Healthy,
+            1 => HealthStatus::Degraded,
+            2 => HealthStatus::Probing,
+            t => return Err(CodecError(format!("bad HealthStatus tag {t}"))),
+        })
+    }
+}
+
+impl Enc for HealthTransition {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.at.enc(b);
+        self.site.enc(b);
+        self.status.enc(b);
+        self.reason.enc(b);
+    }
+}
+
+impl Dec for HealthTransition {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(HealthTransition {
+            at: Time::dec(r)?,
+            site: String::dec(r)?,
+            status: HealthStatus::dec(r)?,
+            reason: String::dec(r)?,
+        })
+    }
+}
+
+impl Enc for Breaker {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            Breaker::Closed => 0u8.enc(b),
+            Breaker::Open { until } => {
+                1u8.enc(b);
+                until.enc(b);
+            }
+            Breaker::HalfOpen => 2u8.enc(b),
+        }
+    }
+}
+
+impl Dec for Breaker {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => Breaker::Closed,
+            1 => Breaker::Open { until: Time::dec(r)? },
+            2 => Breaker::HalfOpen,
+            t => return Err(CodecError(format!("bad Breaker tag {t}"))),
+        })
+    }
+}
+
+impl Enc for SiteHealth {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.breaker.enc(b);
+        self.consecutive_failures.enc(b);
+        self.window.enc(b);
+        self.trips.enc(b);
+    }
+}
+
+impl Dec for SiteHealth {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(SiteHealth {
+            breaker: Breaker::dec(r)?,
+            consecutive_failures: u32::dec(r)?,
+            window: VecDeque::dec(r)?,
+            trips: u32::dec(r)?,
+        })
+    }
+}
+
+impl Enc for HealthTracker {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.sites.enc(b);
+        self.failure_threshold.enc(b);
+        self.window.enc(b);
+        self.cooldown_base.enc(b);
+        self.transitions.enc(b);
+    }
+}
+
+impl Dec for HealthTracker {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(HealthTracker {
+            sites: HashMap::dec(r)?,
+            failure_threshold: u32::dec(r)?,
+            window: Time::dec(r)?,
+            cooldown_base: Time::dec(r)?,
+            transitions: RingLog::dec(r)?,
+        })
     }
 }
 
@@ -386,5 +502,33 @@ mod tests {
         let c1 = h.transition_cursor();
         assert!(h.transitions_since(c1).next().is_none());
         assert_eq!(h.last_transition("a").unwrap().status, HealthStatus::Healthy);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_breaker_state() {
+        let mut h = HealthTracker::new();
+        h.register("t1");
+        for t in 0..3 {
+            h.record_failure("leo", t as f64);
+        }
+        h.due_probe("leo", 130.0);
+        h.record_success("cnaf", 5.0);
+        let bytes = h.to_bytes();
+        let back = HealthTracker::from_bytes(&bytes).unwrap();
+        // byte-identical re-encode, and behavior matches the original
+        assert_eq!(back.to_bytes(), bytes);
+        assert_eq!(back.status("leo"), HealthStatus::Probing);
+        assert_eq!(back.status("cnaf"), HealthStatus::Healthy);
+        assert_eq!(back.status("t1"), HealthStatus::Healthy);
+        assert!(!back.allows("leo"));
+        assert_eq!(back.transition_cursor(), h.transition_cursor());
+        assert_eq!(
+            back.last_transition("leo").unwrap().status,
+            HealthStatus::Probing
+        );
+        // the escalated-cooldown counter survived: a failed probe re-opens
+        let mut back = back;
+        assert!(back.record_failure("leo", 131.0));
+        assert_eq!(back.status("leo"), HealthStatus::Degraded);
     }
 }

@@ -95,6 +95,13 @@ pub struct PlatformConfig {
     /// Expected Poisson bursts per hour per pattern sampled by
     /// `install_traffic`. Config key: `traffic.bursts_per_hour`.
     pub traffic_bursts_per_hour: f64,
+    /// Crash-tolerant control plane: WAL every store/Kueue mutation and
+    /// snapshot periodically, so a `CoordinatorCrash` chaos fault restores
+    /// instead of being ignored. Config key: `durability.enabled`.
+    pub durability_enabled: bool,
+    /// Seconds between snapshots (WAL truncates at each). Config key:
+    /// `durability.snapshot_interval_seconds`.
+    pub durability_snapshot_interval: f64,
 }
 
 impl PlatformConfig {
@@ -243,6 +250,14 @@ impl PlatformConfig {
                 .at(&["traffic", "bursts_per_hour"])
                 .and_then(Json::as_f64)
                 .unwrap_or(0.25),
+            durability_enabled: j
+                .at(&["durability", "enabled"])
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            durability_snapshot_interval: j
+                .at(&["durability", "snapshot_interval_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(900.0),
         })
     }
 
@@ -356,6 +371,24 @@ mod tests {
         .unwrap();
         assert_eq!(tuned.repartition_cooldown, 60.0);
         assert_eq!(tuned.fairshare_half_life, 7200.0);
+    }
+
+    #[test]
+    fn durability_knobs_parse_with_defaults() {
+        // off by default: the memory-only control plane stays the baseline
+        let minimal = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}]}"#,
+        )
+        .unwrap();
+        assert!(!minimal.durability_enabled);
+        assert_eq!(minimal.durability_snapshot_interval, 900.0);
+        let tuned = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}],
+                "durability":{"enabled":true,"snapshot_interval_seconds":120}}"#,
+        )
+        .unwrap();
+        assert!(tuned.durability_enabled);
+        assert_eq!(tuned.durability_snapshot_interval, 120.0);
     }
 
     #[test]

@@ -28,7 +28,8 @@ use crate::cluster::kubelet::{default_oracle, Kubelet};
 use crate::cluster::pod::{Payload, PodPhase, PodSpec};
 use crate::cluster::resources::{ResourceVec, MEMORY};
 use crate::cluster::scheduler::Scheduler;
-use crate::cluster::store::{ClusterStore, EventKind};
+use crate::cluster::store::ClusterStore;
+use crate::cluster::wal::{Wal, WalHandle, WalRecord};
 use crate::gpu::dcgm::DcgmSimulator;
 use crate::hub::auth::AuthService;
 use crate::hub::profiles::Profile;
@@ -49,6 +50,7 @@ use crate::sim::traffic::TrafficEngine;
 use crate::sim::engine::Engine;
 use crate::storage::nfs::NfsServer;
 use crate::storage::object::ObjectStore;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 use crate::util::IdGen;
 
 /// What the reschedule controller does when a workload's pod *fails*
@@ -117,6 +119,70 @@ pub(crate) struct BatchJob {
     pub(crate) restart_policy: RestartPolicy,
     /// failure retries consumed against the restart budget
     pub(crate) retries: u32,
+}
+
+impl Enc for RestartPolicy {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            RestartPolicy::Never => 0u8.enc(b),
+            RestartPolicy::OnFailure { max_retries } => {
+                1u8.enc(b);
+                max_retries.enc(b);
+            }
+        }
+    }
+}
+
+impl Dec for RestartPolicy {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => RestartPolicy::Never,
+            1 => RestartPolicy::OnFailure { max_retries: u32::dec(r)? },
+            t => return Err(CodecError(format!("bad RestartPolicy tag {t}"))),
+        })
+    }
+}
+
+impl Enc for BatchJob {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.workload.enc(b);
+        self.template.enc(b);
+        self.incarnation.enc(b);
+        self.live_pod.enc(b);
+        self.offloadable.enc(b);
+        self.duration.enc(b);
+        self.restart_policy.enc(b);
+        self.retries.enc(b);
+    }
+}
+
+impl Dec for BatchJob {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(BatchJob {
+            workload: String::dec(r)?,
+            template: PodSpec::dec(r)?,
+            incarnation: u32::dec(r)?,
+            live_pod: Option::dec(r)?,
+            offloadable: bool::dec(r)?,
+            duration: Time::dec(r)?,
+            restart_policy: RestartPolicy::dec(r)?,
+            retries: u32::dec(r)?,
+        })
+    }
+}
+
+/// The durable half of the crash-tolerant control plane: a write-ahead log
+/// every state-mutating `ClusterStore`/Kueue transition appends to, plus the
+/// last full snapshot it is replayed on top of. Control-plane odds and ends
+/// with no per-op log (batch-job registry, sessions, site health, fair
+/// share, reconciler cursors) ride along as whole-state `Control`
+/// checkpoint records.
+struct Durability {
+    wal: WalHandle,
+    /// Last full snapshot: store + kueue + control state, compact codec.
+    snapshot: Vec<u8>,
+    snapshot_interval: Time,
+    last_snapshot: Time,
 }
 
 /// Spawn-latency and eviction counters (E3's metrics), plus the resilience
@@ -213,6 +279,12 @@ pub struct Platform {
     /// Deletion intents recorded by the API server's delete verb, drained
     /// into `Key::Deletion` work for the GC reconciler.
     pub(crate) deletions: VecDeque<(ResourceKind, String)>,
+    /// WAL + periodic-snapshot persistence (`durability.enabled`), `None`
+    /// when the control plane runs memory-only.
+    durability: Option<Durability>,
+    /// Times the coordinator has crash-restarted; the API server watches
+    /// this advance to invalidate its caches and rebuild its indexes.
+    pub(crate) coordinator_restarts: u64,
 }
 
 impl Platform {
@@ -330,7 +402,7 @@ impl Platform {
         kueue.set_transition_capacity(config.compaction_window);
         health.set_transition_capacity(config.compaction_window);
         let config_fairshare_half_life = config.fairshare_half_life;
-        Ok(Platform {
+        let mut p = Platform {
             engine,
             store,
             kueue,
@@ -359,11 +431,191 @@ impl Platform {
             fairshare: FairShare::new(config_fairshare_half_life),
             runtime: Some(Runtime::standard()),
             deletions: VecDeque::new(),
-        })
+            durability: None,
+            coordinator_restarts: 0,
+        };
+        if p.config.durability_enabled {
+            p.enable_durability();
+        }
+        Ok(p)
     }
 
     pub fn now(&self) -> Time {
         self.engine.now()
+    }
+
+    // ---------------------------------------------------------- durability
+
+    /// Turn on WAL + snapshot persistence: attach a shared write-ahead log
+    /// to the store and Kueue and seed the initial snapshot, so a crash at
+    /// any later point has a base to restore from. No-op if already on.
+    pub fn enable_durability(&mut self) {
+        if self.durability.is_some() {
+            return;
+        }
+        let wal = Wal::shared();
+        self.store.borrow_mut().attach_wal(wal.clone());
+        self.kueue.attach_wal(wal.clone());
+        self.durability = Some(Durability {
+            wal,
+            snapshot: Vec::new(),
+            snapshot_interval: self.config.durability_snapshot_interval,
+            last_snapshot: self.engine.now(),
+        });
+        let seed = self.snapshot_bytes();
+        if let Some(d) = self.durability.as_mut() {
+            d.snapshot = seed;
+        }
+    }
+
+    /// Whether WAL + snapshot persistence is on.
+    pub fn durability_enabled(&self) -> bool {
+        self.durability.is_some()
+    }
+
+    /// Times the coordinator has crash-restarted.
+    pub fn coordinator_restarts(&self) -> u64 {
+        self.coordinator_restarts
+    }
+
+    /// Bytes currently buffered in the write-ahead log (0 without
+    /// durability; resets at each snapshot).
+    pub fn wal_len_bytes(&self) -> usize {
+        self.durability.as_ref().map(|d| d.wal.borrow().len_bytes()).unwrap_or(0)
+    }
+
+    /// The shared write-ahead log handle, for tests that need to simulate
+    /// torn writes or media corruption against a live platform.
+    pub fn wal_handle(&self) -> Option<WalHandle> {
+        self.durability.as_ref().map(|d| d.wal.clone())
+    }
+
+    /// The control-plane state with no per-operation WAL stream, encoded as
+    /// one checkpoint blob: batch-job registry, sessions, site health,
+    /// degradation ledger, fair share, the id counter, pending deletion
+    /// intents, and the reconciler runtime's dispatch cursors.
+    fn control_state_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        self.batch_jobs.enc(&mut b);
+        self.spawner.enc(&mut b);
+        self.health.enc(&mut b);
+        self.degraded.enc(&mut b);
+        self.fairshare.enc(&mut b);
+        self.ids.counter().enc(&mut b);
+        self.deletions.enc(&mut b);
+        self.runtime.as_ref().map(|r| r.save_state()).unwrap_or_default().enc(&mut b);
+        b
+    }
+
+    /// Inverse of [`control_state_bytes`](Self::control_state_bytes): same
+    /// field order. Empty input (durability enabled before any checkpoint)
+    /// leaves the freshly booted defaults in place.
+    fn apply_control_state(&mut self, bytes: &[u8]) -> Result<(), CodecError> {
+        if bytes.is_empty() {
+            return Ok(());
+        }
+        let mut r = Reader::new(bytes);
+        let batch_jobs: HashMap<String, BatchJob> = HashMap::dec(&mut r)?;
+        let spawner = Spawner::dec(&mut r)?;
+        let health = HealthTracker::dec(&mut r)?;
+        let degraded: HashMap<(String, String), i64> = HashMap::dec(&mut r)?;
+        let fairshare = FairShare::dec(&mut r)?;
+        let counter = u64::dec(&mut r)?;
+        let deletions: VecDeque<(ResourceKind, String)> = VecDeque::dec(&mut r)?;
+        let runtime_bytes = Vec::<u8>::dec(&mut r)?;
+        self.batch_jobs = batch_jobs;
+        self.spawner = spawner;
+        self.health = health;
+        self.degraded = degraded;
+        self.fairshare = fairshare;
+        self.ids.set_counter(counter);
+        self.deletions = deletions;
+        let mut runtime = Runtime::standard();
+        if !runtime_bytes.is_empty() {
+            runtime.load_state(&runtime_bytes)?;
+        }
+        self.runtime = Some(runtime);
+        Ok(())
+    }
+
+    /// One full snapshot: store, Kueue, control state. The WAL replays on
+    /// top of exactly this byte string at restore.
+    fn snapshot_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        self.store.borrow().enc(&mut b);
+        self.kueue.enc(&mut b);
+        self.control_state_bytes().enc(&mut b);
+        b
+    }
+
+    /// Append a control-state checkpoint record to the WAL (no-op without
+    /// durability). Called after every tick and after every public
+    /// control-plane verb, so the unlogged state is never staler than the
+    /// last completed mutation.
+    pub(crate) fn checkpoint_control(&self) {
+        let Some(d) = self.durability.as_ref() else { return };
+        d.wal.borrow_mut().append(&WalRecord::Control(self.control_state_bytes()));
+    }
+
+    /// Cut a fresh snapshot and truncate the WAL — the snapshot now covers
+    /// everything the log held.
+    fn take_snapshot(&mut self, now: Time) {
+        if self.durability.is_none() {
+            return;
+        }
+        let bytes = self.snapshot_bytes();
+        let d = self.durability.as_mut().expect("durability enabled");
+        d.snapshot = bytes;
+        d.last_snapshot = now;
+        d.wal.borrow_mut().clear();
+    }
+
+    /// Kill and restart the coordinator: throw away the live store, Kueue,
+    /// and control state and rebuild them from the last snapshot plus the
+    /// WAL tail, exactly as a restarted process would. Everything derived —
+    /// label indexes, free-capacity indexes, ring bases, reconciler
+    /// dispatch cursors — is reconstructed, not trusted. No-op (beyond a
+    /// warning) without durability.
+    pub fn crash_and_restore(&mut self) {
+        if self.durability.is_none() {
+            log::warn!("coordinator crash ignored: durability disabled");
+            return;
+        }
+        match self.restore_from_durable() {
+            Ok(()) => self.coordinator_restarts += 1,
+            Err(e) => log::error!("coordinator restore failed: {}", e.0),
+        }
+    }
+
+    fn restore_from_durable(&mut self) -> Result<(), CodecError> {
+        let (snapshot, wal) = {
+            let d = self.durability.as_ref().expect("durability enabled");
+            (d.snapshot.clone(), d.wal.clone())
+        };
+        let (records, warn) = wal.borrow().replay();
+        if let Some(w) = warn {
+            log::warn!("wal tail discarded at restore: {w}");
+        }
+        let mut r = Reader::new(&snapshot);
+        // decode with no wal attached: replaying through the public
+        // mutators below must not re-log the operations being replayed
+        let mut store = ClusterStore::dec(&mut r)?;
+        let mut kueue = Kueue::dec(&mut r)?;
+        let mut control = Vec::<u8>::dec(&mut r)?;
+        for rec in records {
+            match rec {
+                WalRecord::Store(op) => store.apply_op(op),
+                WalRecord::Kueue(op) => kueue.apply_op(op),
+                WalRecord::Control(bytes) => control = bytes,
+            }
+        }
+        store.attach_wal(wal.clone());
+        kueue.attach_wal(wal);
+        // in place: the kubelet (and every engine closure) holds an Rc to
+        // this same RefCell, so the restored store must land inside it
+        *self.store.borrow_mut() = store;
+        self.kueue = kueue;
+        self.apply_control_state(&control)
     }
 
     // ------------------------------------------------------------ frontend
@@ -383,7 +635,10 @@ impl Platform {
             cluster: &mut store,
         };
         let s = self.spawner.spawn(&mut ctx, user, profile, at)?;
-        Ok(s.id)
+        let id = s.id;
+        drop(store);
+        self.checkpoint_control();
+        Ok(id)
     }
 
     /// Stop a session by id.
@@ -398,7 +653,12 @@ impl Platform {
             kueue: &mut self.kueue,
             cluster: &mut store,
         };
-        self.spawner.stop(&mut ctx, session_id, at, reason)
+        let r = self.spawner.stop(&mut ctx, session_id, at, reason);
+        drop(store);
+        if r.is_ok() {
+            self.checkpoint_control();
+        }
+        r
     }
 
     /// Submit a batch job. `offloadable` jobs may run on federation sites.
@@ -478,6 +738,7 @@ impl Platform {
                 retries: 0,
             },
         );
+        self.checkpoint_control();
         Ok(wl)
     }
 
@@ -514,6 +775,7 @@ impl Platform {
         if let Some(wlname) = keep_workload {
             job.template.labels.insert("aiinfn/workload".to_string(), wlname);
         }
+        self.checkpoint_control();
         Ok(())
     }
 
@@ -643,6 +905,12 @@ impl Platform {
         self.chaos.as_ref()
     }
 
+    /// Mutable access to the installed chaos engine, so scenarios can
+    /// splice extra faults into a generated schedule.
+    pub fn chaos_mut(&mut self) -> Option<&mut ChaosEngine> {
+        self.chaos.as_mut()
+    }
+
     /// Per-site health tracker (read-only).
     pub fn health(&self) -> &HealthTracker {
         &self.health
@@ -715,13 +983,21 @@ impl Platform {
         let now = self.engine.now();
         self.auth.set_now(now);
 
-        // chaos: apply scheduled faults that are now due
+        // chaos: apply scheduled faults that are now due. Each non-crash
+        // fault is followed by a control checkpoint so a CoordinatorCrash
+        // later in the same batch restores the fault's control-side
+        // bookkeeping (e.g. the degradation ledger) consistently with the
+        // WAL-logged store mutation it already made.
         let due: Vec<Fault> = match self.chaos.as_mut() {
             Some(c) => c.due(now),
             None => Vec::new(),
         };
         for f in due {
+            let crash = matches!(f, Fault::CoordinatorCrash);
             self.apply_fault(f, now);
+            if !crash {
+                self.checkpoint_control();
+            }
         }
 
         // traffic: drain inference arrivals for the window since the last
@@ -741,6 +1017,19 @@ impl Platform {
         let mut runtime = self.runtime.take().expect("reconciler runtime installed");
         runtime.dispatch(self, now);
         self.runtime = Some(runtime);
+
+        // durability cadence: snapshot when the interval elapsed, otherwise
+        // checkpoint the control state the dispatch just mutated
+        let snapshot_due = self
+            .durability
+            .as_ref()
+            .map(|d| now - d.last_snapshot >= d.snapshot_interval)
+            .unwrap_or(false);
+        if snapshot_due {
+            self.take_snapshot(now);
+        } else {
+            self.checkpoint_control();
+        }
     }
 
     /// Record an API-level deletion intent; the GC reconciler cascades it
@@ -803,6 +1092,7 @@ impl Platform {
             Fault::GpuRecover { node, resource, count } => {
                 self.recover_gpu(&node, &resource, count, now)
             }
+            Fault::CoordinatorCrash => self.crash_and_restore(),
         }
     }
 
@@ -842,36 +1132,9 @@ impl Platform {
     }
 
     fn degrade_gpu(&mut self, node: &str, resource: &str, count: i64, now: Time) {
-        let taken = {
-            let mut st = self.store.borrow_mut();
-            // clamp to the node's *free* units: degrading capacity a
-            // running pod holds would drive recompute_free negative and
-            // (via its empty-vector fallback) zero out the node's CPU and
-            // memory too
-            let free_units = st.free_on(node).map(|f| f.get(resource)).unwrap_or(0);
-            let taken = match st.node_mut(node) {
-                None => 0,
-                Some(n) => {
-                    let avail = n.allocatable.get(resource).min(free_units);
-                    let take = count.min(avail).max(0);
-                    if take > 0 {
-                        let alloc = n.allocatable.get(resource);
-                        n.allocatable.set(resource, alloc - take);
-                    }
-                    take
-                }
-            };
-            if taken > 0 {
-                st.recompute_free(node);
-                st.record(
-                    now,
-                    EventKind::NodeModified,
-                    node,
-                    &format!("gpu degraded: -{taken} {resource}"),
-                );
-            }
-            taken
-        };
+        // the allocatable mutation lives in the store (WAL-logged); only
+        // the owed-units ledger the recovery fault consults stays here
+        let taken = self.store.borrow_mut().degrade_resource(node, resource, count, now);
         if taken > 0 {
             *self.degraded.entry((node.to_string(), resource.to_string())).or_insert(0) += taken;
         }
@@ -891,18 +1154,7 @@ impl Platform {
         if give == 0 {
             return;
         }
-        let mut st = self.store.borrow_mut();
-        if let Some(n) = st.node_mut(node) {
-            let cur = n.allocatable.get(resource);
-            n.allocatable.set(resource, cur + give);
-        }
-        st.recompute_free(node);
-        st.record(
-            now,
-            EventKind::NodeModified,
-            node,
-            &format!("gpu recovered: +{give} {resource}"),
-        );
+        self.store.borrow_mut().recover_resource(node, resource, give, now);
     }
 
     // --------------------------------------------------- the self-healer
@@ -1050,6 +1302,7 @@ impl Platform {
         }
         self.kueue.finish(workload, now)?;
         self.batch_jobs.remove(workload);
+        self.checkpoint_control();
         Ok(())
     }
 
@@ -1365,5 +1618,49 @@ mod tests {
             before,
             "recovery restores exactly what degradation took"
         );
+    }
+
+    #[test]
+    fn crash_and_restore_preserves_control_plane() {
+        let mut cfg = PlatformConfig::load(&default_config_path()).unwrap();
+        cfg.durability_enabled = true;
+        let mut p = Platform::bootstrap(cfg).unwrap();
+        assert!(p.durability_enabled());
+        let wl = p
+            .submit_batch(
+                "user003",
+                "project03",
+                ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+                200.0,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap();
+        p.run_for(100.0, 10.0);
+        let nodes_before = p.node_count();
+        let rv_before = p.cluster().resource_version();
+        assert!(p.wal_len_bytes() > 0, "mutations must have hit the WAL");
+        p.crash_and_restore();
+        assert_eq!(p.coordinator_restarts(), 1);
+        assert_eq!(p.node_count(), nodes_before);
+        assert_eq!(
+            p.cluster().resource_version(),
+            rv_before,
+            "snapshot + replay reproduces every rv bump"
+        );
+        // the restored control plane keeps driving the workload to completion
+        p.run_for(600.0, 10.0);
+        assert_eq!(p.workload_state(&wl), Some(WorkloadState::Finished));
+    }
+
+    #[test]
+    fn crash_without_durability_is_a_warning_not_a_wipe() {
+        let mut p = platform();
+        let mut chaos = ChaosEngine::new();
+        chaos.inject(50.0, Fault::CoordinatorCrash);
+        p.set_chaos(chaos);
+        p.run_for(100.0, 10.0);
+        assert_eq!(p.coordinator_restarts(), 0);
+        assert_eq!(p.node_count(), 8, "state untouched when durability is off");
     }
 }

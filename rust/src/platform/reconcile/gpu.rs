@@ -231,6 +231,18 @@ impl Reconciler for GpuPartitionController {
         false // purely periodic: demand is re-read every tick
     }
 
+    fn save_state(&self) -> Vec<u8> {
+        use crate::util::codec::Enc;
+        self.last_repartition.to_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) {
+        use crate::util::codec::Dec;
+        if let Ok(m) = HashMap::from_bytes(bytes) {
+            self.last_repartition = m;
+        }
+    }
+
     fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
         if *key != Key::Sync {
             return Ok(Requeue::Done);

@@ -35,6 +35,18 @@ impl Reconciler for HealthController {
         matches!(key, Key::Pod(_)) // pod churn correlates with wire traffic
     }
 
+    fn save_state(&self) -> Vec<u8> {
+        use crate::util::codec::Enc;
+        self.store_rv_seen.to_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) {
+        use crate::util::codec::Dec;
+        if let Ok(rv) = u64::from_bytes(bytes) {
+            self.store_rv_seen = rv;
+        }
+    }
+
     fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
         match key {
             Key::Sync => {

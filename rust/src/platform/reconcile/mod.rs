@@ -60,6 +60,7 @@ use crate::api::resources::ResourceKind;
 use crate::cluster::store::EventKind;
 use crate::platform::facade::Platform;
 use crate::sim::clock::Time;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 
 /// One unit of reconcile work. (Site-health transitions are consumed
 /// directly by the health controller's resync — wire stats and probe
@@ -104,6 +105,15 @@ pub trait Reconciler {
     /// Converge the state named by `key`. Errors are logged and retried
     /// with a delay; they never abort the dispatch.
     fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue>;
+
+    /// Controller-private state for a durability checkpoint (dedup maps,
+    /// last-run timestamps). Stateless controllers keep the default.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state captured by [`save_state`](Reconciler::save_state).
+    fn load_state(&mut self, _bytes: &[u8]) {}
 }
 
 /// Cause→effect chains (admit → create pod → schedule → launch) settle in
@@ -227,7 +237,7 @@ impl Runtime {
                 self.store_cursor = c.oldest;
                 fell_behind = true;
             }
-            for ev in events.since_lossy(self.store_cursor) {
+            for ev in events.since_clamped(self.store_cursor) {
                 let key = match ev.kind {
                     EventKind::NodeAdded
                     | EventKind::NodeRemoved
@@ -270,5 +280,90 @@ impl Runtime {
                 }
             }
         }
+    }
+
+    /// Serialize dispatcher state for a durability checkpoint: delta
+    /// cursors, the pending work queues, the time-based requeues, and each
+    /// controller's private state. The `queued` membership shadow is
+    /// derived and rebuilt on load.
+    pub fn save_state(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        self.store_cursor.enc(&mut b);
+        self.kueue_cursor.enc(&mut b);
+        self.queues.enc(&mut b);
+        self.requeues.enc(&mut b);
+        let states: Vec<Vec<u8>> = self.controllers.iter().map(|c| c.save_state()).collect();
+        states.enc(&mut b);
+        b
+    }
+
+    /// Restore dispatcher state captured by [`save_state`](Self::save_state)
+    /// into a freshly built runtime with the same controller set.
+    pub fn load_state(&mut self, bytes: &[u8]) -> Result<(), CodecError> {
+        let mut r = Reader::new(bytes);
+        let store_cursor = usize::dec(&mut r)?;
+        let kueue_cursor = usize::dec(&mut r)?;
+        let queues: Vec<VecDeque<Key>> = Vec::dec(&mut r)?;
+        let requeues: Vec<Vec<(Time, Key)>> = Vec::dec(&mut r)?;
+        let states: Vec<Vec<u8>> = Vec::dec(&mut r)?;
+        if !r.is_empty() {
+            return Err(CodecError("trailing bytes in runtime checkpoint".into()));
+        }
+        let n = self.controllers.len();
+        if queues.len() != n || requeues.len() != n || states.len() != n {
+            return Err(CodecError(format!(
+                "runtime checkpoint controller count mismatch (have {n}, checkpoint {})",
+                queues.len()
+            )));
+        }
+        self.store_cursor = store_cursor;
+        self.kueue_cursor = kueue_cursor;
+        self.queued = queues.iter().map(|q| q.iter().cloned().collect()).collect();
+        self.queues = queues;
+        self.requeues = requeues;
+        for (c, s) in self.controllers.iter_mut().zip(&states) {
+            c.load_state(s);
+        }
+        Ok(())
+    }
+}
+
+// --- durability codecs ------------------------------------------------
+
+impl Enc for Key {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            Key::Sync => 0u8.enc(b),
+            Key::Pod(n) => {
+                1u8.enc(b);
+                n.enc(b);
+            }
+            Key::Workload(n) => {
+                2u8.enc(b);
+                n.enc(b);
+            }
+            Key::Node(n) => {
+                3u8.enc(b);
+                n.enc(b);
+            }
+            Key::Deletion(kind, n) => {
+                4u8.enc(b);
+                kind.enc(b);
+                n.enc(b);
+            }
+        }
+    }
+}
+
+impl Dec for Key {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => Key::Sync,
+            1 => Key::Pod(String::dec(r)?),
+            2 => Key::Workload(String::dec(r)?),
+            3 => Key::Node(String::dec(r)?),
+            4 => Key::Deletion(ResourceKind::dec(r)?, String::dec(r)?),
+            t => return Err(CodecError(format!("bad Key tag {t}"))),
+        })
     }
 }

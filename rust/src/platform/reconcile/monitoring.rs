@@ -26,6 +26,18 @@ impl Reconciler for MonitoringController {
         false // purely timer-driven
     }
 
+    fn save_state(&self) -> Vec<u8> {
+        use crate::util::codec::Enc;
+        self.last_scrape.to_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) {
+        use crate::util::codec::Dec;
+        if let Ok(t) = Option::<Time>::from_bytes(bytes) {
+            self.last_scrape = t;
+        }
+    }
+
     fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
         if *key != Key::Sync {
             return Ok(Requeue::Done);

@@ -116,6 +116,23 @@ impl Reconciler for PlacementController {
         matches!(key, Key::Pod(_) | Key::Node(_))
     }
 
+    fn save_state(&self) -> Vec<u8> {
+        use crate::util::codec::Enc;
+        let mut b = Vec::new();
+        self.unschedulable_seen.enc(&mut b);
+        self.store_rv_seen.enc(&mut b);
+        b
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) {
+        use crate::util::codec::{Dec, Reader};
+        let mut r = Reader::new(bytes);
+        if let (Ok(seen), Ok(rv)) = (HashMap::dec(&mut r), u64::dec(&mut r)) {
+            self.unschedulable_seen = seen;
+            self.store_rv_seen = rv;
+        }
+    }
+
     fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
         match key {
             Key::Sync => {

@@ -45,6 +45,18 @@ impl Reconciler for ServeController {
         matches!(key, Key::Deletion(ResourceKind::InferenceServer, _))
     }
 
+    fn save_state(&self) -> Vec<u8> {
+        use crate::util::codec::Enc;
+        self.stepped_to.to_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) {
+        use crate::util::codec::Dec;
+        if let Ok(t) = Option::<Time>::from_bytes(bytes) {
+            self.stepped_to = t;
+        }
+    }
+
     fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
         let p = &mut *ctx.platform;
         let now = ctx.now;

@@ -17,7 +17,9 @@
 use std::collections::HashMap;
 
 use crate::cluster::resources::ResourceVec;
+use crate::cluster::wal::{KueueOp, WalHandle, WalRecord};
 use crate::sim::clock::Time;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 use crate::util::ring::{Compacted, RingLog};
 
 /// Priority classes used on the platform.
@@ -120,6 +122,10 @@ pub struct Kueue {
     /// Decayed per-user GPU usage snapshot (set by the platform before
     /// each admission pass); the fair-share tiebreak within priority bands.
     fair_share: HashMap<String, f64>,
+    /// Write-ahead log sink. When attached, every public mutator appends
+    /// its op at method entry for crash replay (same contract as
+    /// [`ClusterStore`](crate::cluster::store::ClusterStore)).
+    wal: Option<WalHandle>,
 }
 
 impl Default for Kueue {
@@ -134,6 +140,7 @@ impl Default for Kueue {
             transitions: RingLog::default(),
             backoff_base: 0.0,
             fair_share: HashMap::new(),
+            wal: None,
         }
     }
 }
@@ -151,11 +158,60 @@ impl Kueue {
         Kueue { backoff_base: 30.0, ..Default::default() }
     }
 
+    // --------------------------------------------------------------- wal
+
+    /// Attach the write-ahead log: every public mutation from here on is
+    /// appended (at method entry) for crash replay.
+    pub fn attach_wal(&mut self, wal: WalHandle) {
+        self.wal = Some(wal);
+    }
+
+    /// Detach the log (replay and snapshot restore run unlogged).
+    pub fn detach_wal(&mut self) {
+        self.wal = None;
+    }
+
+    fn log_op(&mut self, op: impl FnOnce() -> KueueOp) {
+        if let Some(wal) = &self.wal {
+            wal.borrow_mut().append(&WalRecord::Kueue(op()));
+        }
+    }
+
+    /// Re-execute one logged op during replay (results dropped — failed
+    /// calls were logged too and fail identically). Must run with the wal
+    /// detached, or replay would append duplicate records.
+    pub fn apply_op(&mut self, op: KueueOp) {
+        debug_assert!(self.wal.is_none(), "replaying with a wal attached double-logs");
+        match op {
+            KueueOp::AddClusterQueue { cq } => self.add_cluster_queue(cq),
+            KueueOp::AddLocalQueue { lq } => self.add_local_queue(lq),
+            KueueOp::SubmitForUser { name, queue, user, priority, requests, at } => {
+                let _ = self.submit_for_user(name, &queue, &user, priority, requests, at);
+            }
+            KueueOp::SetFairShare { usage } => self.set_fair_share(usage),
+            KueueOp::AdjustNominal { queue, add, remove } => {
+                let _ = self.adjust_nominal(&queue, &add, &remove);
+            }
+            KueueOp::AdmitPass { at } => {
+                self.admit_pass(at);
+            }
+            KueueOp::Requeue { name, at } => {
+                let _ = self.requeue(&name, at);
+            }
+            KueueOp::Finish { name, at } => {
+                let _ = self.finish(&name, at);
+            }
+            KueueOp::SetTransitionCapacity { capacity } => self.set_transition_capacity(capacity),
+        }
+    }
+
     pub fn add_cluster_queue(&mut self, cq: ClusterQueue) {
+        self.log_op(|| KueueOp::AddClusterQueue { cq: cq.clone() });
         self.cluster_queues.insert(cq.name.clone(), cq);
     }
 
     pub fn add_local_queue(&mut self, lq: LocalQueue) {
+        self.log_op(|| KueueOp::AddLocalQueue { lq: lq.clone() });
         assert!(
             self.cluster_queues.contains_key(&lq.cluster_queue),
             "local queue {} references unknown cluster queue {}",
@@ -191,7 +247,7 @@ impl Kueue {
         &self,
         cursor: usize,
     ) -> impl Iterator<Item = &WorkloadTransition> {
-        self.transitions.since_lossy(cursor)
+        self.transitions.since_clamped(cursor)
     }
 
     /// Like [`transitions_since`](Self::transitions_since) but a cursor
@@ -207,6 +263,7 @@ impl Kueue {
     /// Reconfigure the transition log's retained window (the
     /// `control_plane.compaction_window` config knob).
     pub fn set_transition_capacity(&mut self, capacity: usize) {
+        self.log_op(|| KueueOp::SetTransitionCapacity { capacity });
         self.transitions.set_capacity(capacity);
     }
 
@@ -247,6 +304,14 @@ impl Kueue {
         at: Time,
     ) -> anyhow::Result<String> {
         let name = name.into();
+        self.log_op(|| KueueOp::SubmitForUser {
+            name: name.clone(),
+            queue: queue.to_string(),
+            user: user.to_string(),
+            priority,
+            requests: requests.clone(),
+            at,
+        });
         anyhow::ensure!(self.local_queues.contains_key(queue), "unknown local queue {queue}");
         anyhow::ensure!(!self.workloads.contains_key(&name), "duplicate workload {name}");
         self.workloads.insert(
@@ -272,6 +337,7 @@ impl Kueue {
     /// Install the decayed per-user usage snapshot consulted by the next
     /// admission pass (users absent from the map count as zero usage).
     pub fn set_fair_share(&mut self, usage: HashMap<String, f64>) {
+        self.log_op(|| KueueOp::SetFairShare { usage: usage.clone() });
         self.fair_share = usage;
     }
 
@@ -285,6 +351,11 @@ impl Kueue {
         add: &ResourceVec,
         remove: &ResourceVec,
     ) -> anyhow::Result<()> {
+        self.log_op(|| KueueOp::AdjustNominal {
+            queue: queue.to_string(),
+            add: add.clone(),
+            remove: remove.clone(),
+        });
         let cq = self
             .cluster_queues
             .get_mut(queue)
@@ -337,12 +408,16 @@ impl Kueue {
         }
         if !remaining.is_empty() {
             if let Some(cohort) = cohort {
-                let peers: Vec<String> = self
+                // sorted, not HashMap order: which peer lends first decides
+                // the per-queue `used` split, and replay must reproduce it
+                // byte-identically
+                let mut peers: Vec<String> = self
                     .cluster_queues
                     .values()
                     .filter(|p| p.name != cq_name && p.cohort.as_deref() == Some(&cohort) && p.can_lend)
                     .map(|p| p.name.clone())
                     .collect();
+                peers.sort();
                 for peer_name in peers {
                     if remaining.is_empty() {
                         break;
@@ -382,12 +457,14 @@ impl Kueue {
         if !remaining.is_empty() {
             let cohort = self.cluster_queues[cq_name].cohort.clone();
             if let Some(cohort) = cohort {
-                let peers: Vec<String> = self
+                // sorted for the same replay-determinism reason as `charge`
+                let mut peers: Vec<String> = self
                     .cluster_queues
                     .values()
                     .filter(|p| p.name != cq_name && p.cohort.as_deref() == Some(&cohort))
                     .map(|p| p.name.clone())
                     .collect();
+                peers.sort();
                 for peer in peers {
                     if remaining.is_empty() {
                         break;
@@ -417,6 +494,7 @@ impl Kueue {
     /// workloads (smallest sufficient set, newest first) — the paper's
     /// interactive-over-batch policy.
     pub fn admit_pass(&mut self, at: Time) -> AdmissionResult {
+        self.log_op(|| KueueOp::AdmitPass { at });
         let mut result = AdmissionResult::default();
 
         // candidates: Queued or requeue-expired evicted
@@ -535,6 +613,7 @@ impl Kueue {
     /// the queue and, once its backoff expires, is readmitted and realized
     /// as a fresh pod incarnation (typically on a different, healthy site).
     pub fn requeue(&mut self, name: &str, at: Time) -> anyhow::Result<()> {
+        self.log_op(|| KueueOp::Requeue { name: name.to_string(), at });
         let state = self
             .workloads
             .get(name)
@@ -551,6 +630,7 @@ impl Kueue {
 
     /// Mark a workload finished and release its quota.
     pub fn finish(&mut self, name: &str, at: Time) -> anyhow::Result<()> {
+        self.log_op(|| KueueOp::Finish { name: name.to_string(), at });
         let (state, cq, req) = {
             let w = self
                 .workloads
@@ -586,6 +666,168 @@ impl Kueue {
             nominal.add(&cq.nominal);
         }
         (used, nominal)
+    }
+}
+
+// --------------------------------------------------------------- durability
+
+impl Enc for PriorityClass {
+    fn enc(&self, b: &mut Vec<u8>) {
+        let tag: u8 = match self {
+            PriorityClass::Batch => 0,
+            PriorityClass::BatchHigh => 1,
+            PriorityClass::Interactive => 2,
+        };
+        b.push(tag);
+    }
+}
+
+impl Dec for PriorityClass {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => PriorityClass::Batch,
+            1 => PriorityClass::BatchHigh,
+            2 => PriorityClass::Interactive,
+            t => return Err(CodecError(format!("bad priority class tag {t}"))),
+        })
+    }
+}
+
+impl Enc for WorkloadState {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            WorkloadState::Queued => b.push(0),
+            WorkloadState::Admitted => b.push(1),
+            WorkloadState::EvictedPendingRequeue { until } => {
+                b.push(2);
+                until.enc(b);
+            }
+            WorkloadState::Finished => b.push(3),
+        }
+    }
+}
+
+impl Dec for WorkloadState {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => WorkloadState::Queued,
+            1 => WorkloadState::Admitted,
+            2 => WorkloadState::EvictedPendingRequeue { until: Dec::dec(r)? },
+            3 => WorkloadState::Finished,
+            t => return Err(CodecError(format!("bad workload state tag {t}"))),
+        })
+    }
+}
+
+impl Enc for Workload {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.queue.enc(b);
+        self.priority.enc(b);
+        self.requests.enc(b);
+        self.state.enc(b);
+        self.created_at.enc(b);
+        self.admitted_at.enc(b);
+        self.evictions.enc(b);
+        self.charged_to.enc(b);
+        self.user.enc(b);
+    }
+}
+
+impl Dec for Workload {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(Workload {
+            name: Dec::dec(r)?,
+            queue: Dec::dec(r)?,
+            priority: Dec::dec(r)?,
+            requests: Dec::dec(r)?,
+            state: Dec::dec(r)?,
+            created_at: Dec::dec(r)?,
+            admitted_at: Dec::dec(r)?,
+            evictions: Dec::dec(r)?,
+            charged_to: Dec::dec(r)?,
+            user: Dec::dec(r)?,
+        })
+    }
+}
+
+impl Enc for ClusterQueue {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.cohort.enc(b);
+        self.nominal.enc(b);
+        self.used.enc(b);
+        self.can_borrow.enc(b);
+        self.can_lend.enc(b);
+    }
+}
+
+impl Dec for ClusterQueue {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(ClusterQueue {
+            name: Dec::dec(r)?,
+            cohort: Dec::dec(r)?,
+            nominal: Dec::dec(r)?,
+            used: Dec::dec(r)?,
+            can_borrow: Dec::dec(r)?,
+            can_lend: Dec::dec(r)?,
+        })
+    }
+}
+
+impl Enc for LocalQueue {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.cluster_queue.enc(b);
+    }
+}
+
+impl Dec for LocalQueue {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(LocalQueue { name: Dec::dec(r)?, cluster_queue: Dec::dec(r)? })
+    }
+}
+
+impl Enc for WorkloadTransition {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.at.enc(b);
+        self.workload.enc(b);
+        self.state.enc(b);
+    }
+}
+
+impl Dec for WorkloadTransition {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(WorkloadTransition { at: Dec::dec(r)?, workload: Dec::dec(r)?, state: Dec::dec(r)? })
+    }
+}
+
+/// Kueue snapshots encode the whole controller state — unlike the store
+/// there is no derived structure to rebuild; the maps *are* the state.
+impl Enc for Kueue {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.cluster_queues.enc(b);
+        self.local_queues.enc(b);
+        self.workloads.enc(b);
+        self.order.enc(b);
+        self.transitions.enc(b);
+        self.backoff_base.enc(b);
+        self.fair_share.enc(b);
+    }
+}
+
+impl Dec for Kueue {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(Kueue {
+            cluster_queues: Dec::dec(r)?,
+            local_queues: Dec::dec(r)?,
+            workloads: Dec::dec(r)?,
+            order: Dec::dec(r)?,
+            transitions: Dec::dec(r)?,
+            backoff_base: Dec::dec(r)?,
+            fair_share: Dec::dec(r)?,
+            wal: None,
+        })
     }
 }
 
@@ -816,5 +1058,81 @@ mod tests {
         k.submit("w", "batch", PriorityClass::Batch, rv(1, 0), 0.0).unwrap();
         assert!(k.submit("w", "batch", PriorityClass::Batch, rv(1, 0), 0.0).is_err());
         assert!(k.submit("x", "nope", PriorityClass::Batch, rv(1, 0), 0.0).is_err());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_byte_identical() {
+        let mut k = kueue();
+        for i in 0..6 {
+            k.submit(format!("b{i}"), "batch", PriorityClass::Batch, rv(1000, 1), 0.0).unwrap();
+        }
+        k.admit_pass(0.0);
+        k.submit("sess", "hub", PriorityClass::Interactive, rv(2000, 4), 10.0).unwrap();
+        k.admit_pass(10.0);
+        k.finish("b0", 20.0).ok();
+        let bytes = k.to_bytes();
+        let restored = Kueue::from_bytes(&bytes).unwrap();
+        assert_eq!(restored.to_bytes(), bytes, "re-encode is byte-identical");
+        assert_eq!(restored.transition_cursor(), k.transition_cursor());
+        let (used, nominal) = restored.quota_utilization();
+        let (used0, nominal0) = k.quota_utilization();
+        assert_eq!(used, used0);
+        assert_eq!(nominal, nominal0);
+    }
+
+    #[test]
+    fn wal_replay_reproduces_kueue_state() {
+        use crate::cluster::wal::{Wal, WalRecord};
+        let wal = Wal::shared();
+        // attach before building the queue topology so the log covers
+        // everything a fresh controller needs to reach the same state
+        let mut k = Kueue::new();
+        k.attach_wal(wal.clone());
+        k.add_cluster_queue(ClusterQueue {
+            name: "interactive-cq".into(),
+            cohort: Some("ai-infn".into()),
+            nominal: rv(16_000, 4),
+            used: ResourceVec::new(),
+            can_borrow: false,
+            can_lend: true,
+        });
+        k.add_cluster_queue(ClusterQueue {
+            name: "batch-cq".into(),
+            cohort: Some("ai-infn".into()),
+            nominal: rv(8_000, 2),
+            used: ResourceVec::new(),
+            can_borrow: true,
+            can_lend: false,
+        });
+        k.add_local_queue(LocalQueue { name: "hub".into(), cluster_queue: "interactive-cq".into() });
+        k.add_local_queue(LocalQueue { name: "batch".into(), cluster_queue: "batch-cq".into() });
+        // preemption + borrowing: the per-queue `used` split exercises the
+        // sorted-peer charge/uncharge order replay depends on
+        for i in 0..6 {
+            k.submit(format!("b{i}"), "batch", PriorityClass::Batch, rv(1000, 1), 0.0).unwrap();
+        }
+        k.admit_pass(0.0);
+        k.submit("sess", "hub", PriorityClass::Interactive, rv(2000, 4), 10.0).unwrap();
+        let mut usage = std::collections::HashMap::new();
+        usage.insert("alice".to_string(), 3.0);
+        k.set_fair_share(usage);
+        k.admit_pass(10.0);
+        assert!(k.submit("b0", "batch", PriorityClass::Batch, rv(1, 0), 11.0).is_err());
+        k.requeue("sess", 12.0).unwrap();
+        k.finish("b1", 13.0).ok();
+        k.set_transition_capacity(512);
+
+        let (records, warn) = wal.borrow().replay();
+        assert!(warn.is_none(), "{warn:?}");
+        // replay onto a fresh controller with the same construction state
+        let mut replayed = Kueue::new();
+        for rec in records {
+            match rec {
+                WalRecord::Kueue(op) => replayed.apply_op(op),
+                other => panic!("kueue-only log, got {other:?}"),
+            }
+        }
+        k.detach_wal();
+        assert_eq!(replayed.to_bytes(), k.to_bytes(), "replayed state byte-identical");
     }
 }

@@ -134,10 +134,23 @@ pub fn step_window(s: &mut ServerState, arrivals: u64, from: Time, to: Time) -> 
     for (slot, (_, idx)) in levels.iter().enumerate() {
         let r = s.replicas.get_mut(idx).expect("ready replica exists");
         let q_before = r.outstanding + assigned[slot];
-        let cap = r.cap_carry + dt * mu;
-        let served = q_before.min(cap.floor() as u64);
-        // Carry at most one batch of unused capacity into the next window.
-        r.cap_carry = (cap - served as f64).min(s.spec.max_batch as f64);
+        // `max(0.0)` also launders a NaN `dt * mu` (0 × ∞) into "no
+        // capacity this window" — f64::max returns the non-NaN operand —
+        // instead of letting it leak through the carry as a fabricated
+        // batch.
+        let cap = (r.cap_carry + dt * mu).max(0.0);
+        // An unbounded rate serves the whole queue; a finite `cap`
+        // saturates the u64 cast, so `served` never exceeds `q_before`
+        // either way and served + shed + queued conserves requests exactly.
+        let served =
+            if cap.is_finite() { q_before.min(cap.floor() as u64) } else { q_before };
+        // Carry at most one batch of unused capacity into the next window —
+        // never a negative or non-finite amount.
+        r.cap_carry = if cap.is_finite() {
+            (cap - served as f64).clamp(0.0, s.spec.max_batch as f64)
+        } else {
+            s.spec.max_batch as f64
+        };
         let mut q_after = q_before - served;
         if q_after > s.spec.queue_depth as u64 {
             let shed = q_after - s.spec.queue_depth as u64;
@@ -294,6 +307,53 @@ mod tests {
             s.latency.mean()
         };
         assert!(run(0.5) > run(0.0));
+    }
+
+    #[test]
+    fn cap_carry_accumulates_fractionally_and_clamps_at_one_batch() {
+        // mu = max_batch / service_time = 8 / 16 = 0.5 req/s: every value
+        // in play (0.5, 1.0, the window bounds) is binary-exact, so the
+        // pinned pattern is arithmetic, not luck.
+        let mut s = server(1);
+        s.spec.service_time = 16.0;
+        // Seed 10 queued requests through a zero-width window: dt == 0
+        // grants no capacity, nothing is served, the queue just fills.
+        let r = step_window(&mut s, 10, 0.0, 0.0);
+        assert_eq!((r.served, r.queue_depth), (0, 10));
+        // 1 s windows grant 0.5 requests each: the fractional carry
+        // crosses 1.0 every other window, so service alternates 0, 1, …
+        let served: Vec<u64> =
+            (0..6).map(|w| step_window(&mut s, 0, w as f64, (w + 1) as f64).served).collect();
+        assert_eq!(served, vec![0, 1, 0, 1, 0, 1]);
+        // An idle stretch banks at most one batch of capacity …
+        for w in 0..50 {
+            step_window(&mut s, 0, 100.0 + w as f64, 101.0 + w as f64);
+        }
+        assert_eq!(s.replicas[&0].outstanding, 0);
+        assert_eq!(s.replicas[&0].cap_carry, s.spec.max_batch as f64);
+        // … so a burst into a zero-width window serves exactly one batch
+        // from the banked carry and leaves no residual capacity behind.
+        let r = step_window(&mut s, 20, 200.0, 200.0);
+        assert_eq!(r.served, 8);
+        assert_eq!(s.replicas[&0].cap_carry, 0.0);
+        assert_eq!(s.replicas[&0].outstanding, 12);
+        let r = step_window(&mut s, 0, 200.0, 200.0);
+        assert_eq!(r.served, 0);
+        // nothing fabricated, nothing lost
+        assert_eq!(s.completed_requests + s.failed_requests + s.queued(), s.total_requests);
+    }
+
+    #[test]
+    fn non_finite_capacity_serves_the_queue_and_resets_the_carry() {
+        // A poisoned (infinite) carry must not wedge the accounting: the
+        // queue drains, the carry comes back finite, and the conservation
+        // invariant holds.
+        let mut s = server(1);
+        s.replicas.get_mut(&0).unwrap().cap_carry = f64::INFINITY;
+        let r = step_window(&mut s, 5, 0.0, 0.0);
+        assert_eq!(r.served, 5);
+        assert_eq!(s.replicas[&0].cap_carry, s.spec.max_batch as f64);
+        assert_eq!(s.completed_requests + s.failed_requests + s.queued(), s.total_requests);
     }
 
     #[test]

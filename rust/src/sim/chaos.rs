@@ -42,6 +42,10 @@ pub enum Fault {
     GpuDegrade { node: String, resource: String, count: i64 },
     /// The degraded accelerator units come back.
     GpuRecover { node: String, resource: String, count: i64 },
+    /// The coordinator process dies and restarts: control-plane state is
+    /// rebuilt from the last snapshot plus the WAL tail. A no-op (with a
+    /// warning) unless durability is enabled.
+    CoordinatorCrash,
 }
 
 impl Fault {
@@ -63,6 +67,7 @@ impl Fault {
             Fault::GpuRecover { node, resource, count } => {
                 format!("gpu-recover {node} +{count} {resource}")
             }
+            Fault::CoordinatorCrash => "coordinator-crash".to_string(),
         }
     }
 }
@@ -147,6 +152,8 @@ pub struct ChaosPlan {
     pub node_down_duration: (Time, Time),
     pub gpu_degrades_per_hour: f64,
     pub gpu_degrade_duration: (Time, Time),
+    /// Coordinator kill/restart events (needs `durability.enabled`).
+    pub coordinator_crashes_per_hour: f64,
 }
 
 impl Default for ChaosPlan {
@@ -163,6 +170,7 @@ impl Default for ChaosPlan {
             node_down_duration: (120.0, 600.0),
             gpu_degrades_per_hour: 0.25,
             gpu_degrade_duration: (300.0, 1200.0),
+            coordinator_crashes_per_hour: 0.0,
         }
     }
 }
@@ -233,6 +241,12 @@ impl ChaosPlan {
                     },
                 );
             }
+        }
+        // drawn last so enabling crashes leaves every seeded schedule above
+        // byte-identical to the crash-free plan with the same seed
+        for _ in 0..rng.poisson(self.coordinator_crashes_per_hour * hours) {
+            let at = rng.range_f64(0.0, self.horizon);
+            eng.inject(at, Fault::CoordinatorCrash);
         }
         eng
     }

@@ -9,6 +9,7 @@
 
 use crate::hub::auth::TokenValidator;
 use crate::storage::object::{ObjError, ObjectStore};
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 
 /// Mount error.
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -98,6 +99,31 @@ impl RcloneMount {
             .into_iter()
             .map(|m| format!("{}/{}", self.mount_point, m.key))
             .collect())
+    }
+}
+
+// --- durability codecs ------------------------------------------------
+//
+// Mounts ride inside checkpointed sessions; the (private) token must be
+// carried so per-op re-validation keeps working after a restore.
+
+impl Enc for RcloneMount {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.bucket.enc(b);
+        self.mount_point.enc(b);
+        self.user.enc(b);
+        self.token.enc(b);
+    }
+}
+
+impl Dec for RcloneMount {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(RcloneMount {
+            bucket: String::dec(r)?,
+            mount_point: String::dec(r)?,
+            user: String::dec(r)?,
+            token: String::dec(r)?,
+        })
     }
 }
 

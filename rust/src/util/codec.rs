@@ -1,0 +1,453 @@
+//! Compact direct-to-buffer binary codec for durability (WAL records and
+//! snapshots).
+//!
+//! The in-house [`Json`](crate::util::json::Json) tree builder is the
+//! platform's known serialization bottleneck — fine for API views, wrong
+//! for a log appended on *every* state transition. This module follows the
+//! nanoserde idiom instead: each type writes itself straight into a byte
+//! buffer ([`Enc`]) and reads itself back from a cursor ([`Dec`]), no
+//! intermediate tree, no field names on the wire.
+//!
+//! Wire format conventions:
+//!
+//! * integers are little-endian fixed width (`u64` for lengths/counts);
+//! * `String`/`Vec<u8>` are length-prefixed;
+//! * `Option<T>` is a presence byte then the payload;
+//! * maps are length-prefixed `(key, value)` sequences, written in sorted
+//!   key order so the same logical state always encodes to the same bytes
+//!   (snapshot byte-equality is testable);
+//! * there is no schema negotiation — WAL and snapshot blobs live and die
+//!   inside one process generation, so a format change is just code.
+//!
+//! Framing (record length + checksum) lives in
+//! [`crate::cluster::wal`]; this module is only the payload codec.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
+use std::fmt;
+use std::hash::Hash;
+
+/// Decode failure: truncated input or a malformed tag.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecError(pub String);
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "codec error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// A cursor over an encoded buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError(format!(
+                "truncated: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+/// Serialize into a byte buffer (append-only, no intermediate tree).
+pub trait Enc {
+    fn enc(&self, b: &mut Vec<u8>);
+
+    /// Convenience: encode into a fresh buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        self.enc(&mut b);
+        b
+    }
+}
+
+/// Deserialize from a [`Reader`].
+pub trait Dec: Sized {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError>;
+
+    /// Convenience: decode a whole buffer, requiring full consumption.
+    fn from_bytes(buf: &[u8]) -> Result<Self, CodecError> {
+        let mut r = Reader::new(buf);
+        let v = Self::dec(&mut r)?;
+        if !r.is_empty() {
+            return Err(CodecError(format!("{} trailing bytes", r.remaining())));
+        }
+        Ok(v)
+    }
+}
+
+macro_rules! int_codec {
+    ($($t:ty),*) => {$(
+        impl Enc for $t {
+            fn enc(&self, b: &mut Vec<u8>) {
+                b.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+        impl Dec for $t {
+            fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+                let s = r.take(std::mem::size_of::<$t>())?;
+                Ok(<$t>::from_le_bytes(s.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+
+int_codec!(u8, u16, u32, u64, i32, i64);
+
+impl Enc for usize {
+    fn enc(&self, b: &mut Vec<u8>) {
+        (*self as u64).enc(b);
+    }
+}
+
+impl Dec for usize {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(u64::dec(r)? as usize)
+    }
+}
+
+impl Enc for f64 {
+    fn enc(&self, b: &mut Vec<u8>) {
+        b.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+}
+
+impl Dec for f64 {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(f64::from_bits(u64::dec(r)?))
+    }
+}
+
+impl Enc for bool {
+    fn enc(&self, b: &mut Vec<u8>) {
+        b.push(*self as u8);
+    }
+}
+
+impl Dec for bool {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        match u8::dec(r)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            n => Err(CodecError(format!("bad bool byte {n}"))),
+        }
+    }
+}
+
+impl Enc for String {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.len().enc(b);
+        b.extend_from_slice(self.as_bytes());
+    }
+}
+
+impl Dec for String {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let n = usize::dec(r)?;
+        let s = r.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| CodecError("invalid utf-8".into()))
+    }
+}
+
+impl Enc for &str {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.len().enc(b);
+        b.extend_from_slice(self.as_bytes());
+    }
+}
+
+impl<T: Enc> Enc for Option<T> {
+    fn enc(&self, b: &mut Vec<u8>) {
+        match self {
+            None => b.push(0),
+            Some(v) => {
+                b.push(1);
+                v.enc(b);
+            }
+        }
+    }
+}
+
+impl<T: Dec> Dec for Option<T> {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        match u8::dec(r)? {
+            0 => Ok(None),
+            1 => Ok(Some(T::dec(r)?)),
+            n => Err(CodecError(format!("bad option byte {n}"))),
+        }
+    }
+}
+
+impl<T: Enc> Enc for Vec<T> {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.len().enc(b);
+        for v in self {
+            v.enc(b);
+        }
+    }
+}
+
+impl<T: Dec> Dec for Vec<T> {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let n = usize::dec(r)?;
+        let mut out = Vec::new();
+        for _ in 0..n {
+            out.push(T::dec(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Enc> Enc for VecDeque<T> {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.len().enc(b);
+        for v in self {
+            v.enc(b);
+        }
+    }
+}
+
+impl<T: Dec> Dec for VecDeque<T> {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let n = usize::dec(r)?;
+        let mut out = VecDeque::new();
+        for _ in 0..n {
+            out.push_back(T::dec(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<A: Enc, B: Enc> Enc for (A, B) {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.0.enc(b);
+        self.1.enc(b);
+    }
+}
+
+impl<A: Dec, B: Dec> Dec for (A, B) {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok((A::dec(r)?, B::dec(r)?))
+    }
+}
+
+impl<K: Enc, V: Enc> Enc for BTreeMap<K, V> {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.len().enc(b);
+        for (k, v) in self {
+            k.enc(b);
+            v.enc(b);
+        }
+    }
+}
+
+impl<K: Dec + Ord, V: Dec> Dec for BTreeMap<K, V> {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let n = usize::dec(r)?;
+        let mut out = BTreeMap::new();
+        for _ in 0..n {
+            let k = K::dec(r)?;
+            let v = V::dec(r)?;
+            out.insert(k, v);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Enc> Enc for BTreeSet<T> {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.len().enc(b);
+        for v in self {
+            v.enc(b);
+        }
+    }
+}
+
+impl<T: Dec + Ord> Dec for BTreeSet<T> {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let n = usize::dec(r)?;
+        let mut out = BTreeSet::new();
+        for _ in 0..n {
+            out.insert(T::dec(r)?);
+        }
+        Ok(out)
+    }
+}
+
+// HashMaps encode in sorted key order so identical logical state yields
+// identical bytes regardless of hasher seed.
+impl<K: Enc + Ord + Hash, V: Enc> Enc for HashMap<K, V> {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.len().enc(b);
+        let mut keys: Vec<&K> = self.keys().collect();
+        keys.sort();
+        for k in keys {
+            k.enc(b);
+            self[k].enc(b);
+        }
+    }
+}
+
+impl<K: Dec + Eq + Hash, V: Dec> Dec for HashMap<K, V> {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let n = usize::dec(r)?;
+        let mut out = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let k = K::dec(r)?;
+            let v = V::dec(r)?;
+            out.insert(k, v);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Enc + Ord + Hash> Enc for HashSet<T> {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.len().enc(b);
+        let mut vals: Vec<&T> = self.iter().collect();
+        vals.sort();
+        for v in vals {
+            v.enc(b);
+        }
+    }
+}
+
+impl<T: Dec + Eq + Hash> Dec for HashSet<T> {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let n = usize::dec(r)?;
+        let mut out = HashSet::with_capacity(n);
+        for _ in 0..n {
+            out.insert(T::dec(r)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Length-prefixed raw byte blob (distinct from `Vec<u8>`'s per-element
+/// encoding only in intent; same wire shape, kept for clarity at call
+/// sites that nest one encoded payload inside another).
+pub fn enc_bytes(bytes: &[u8], b: &mut Vec<u8>) {
+    bytes.len().enc(b);
+    b.extend_from_slice(bytes);
+}
+
+pub fn dec_bytes(r: &mut Reader<'_>) -> Result<Vec<u8>, CodecError> {
+    let n = usize::dec(r)?;
+    Ok(r.take(n)?.to_vec())
+}
+
+/// FNV-1a 64-bit, truncated to 32 bits — the WAL record checksum. Not
+/// cryptographic; it only needs to catch torn writes.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &byte in bytes {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h ^ (h >> 32)) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Enc + Dec + PartialEq + std::fmt::Debug>(v: T) {
+        let b = v.to_bytes();
+        assert_eq!(T::from_bytes(&b).unwrap(), v);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(u64::MAX);
+        roundtrip(-42i64);
+        roundtrip(1.5f64);
+        roundtrip(f64::MIN);
+        roundtrip(true);
+        roundtrip("héllo".to_string());
+        roundtrip(String::new());
+        roundtrip(Some(7u32));
+        roundtrip(Option::<u32>::None);
+        roundtrip(vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("k".to_string(), 3i64);
+        roundtrip(m);
+        let mut h = HashMap::new();
+        h.insert("x".to_string(), 1u64);
+        h.insert("y".to_string(), 2u64);
+        roundtrip(h);
+        let mut d = VecDeque::new();
+        d.push_back((1.0f64, true));
+        roundtrip(d);
+        let mut s = HashSet::new();
+        s.insert("a".to_string());
+        roundtrip(s);
+    }
+
+    #[test]
+    fn hashmap_encoding_is_order_independent() {
+        // same entries inserted in different orders ⇒ identical bytes
+        let mut a = HashMap::new();
+        let mut b = HashMap::new();
+        for i in 0..32u64 {
+            a.insert(format!("k{i}"), i);
+        }
+        for i in (0..32u64).rev() {
+            b.insert(format!("k{i}"), i);
+        }
+        assert_eq!(a.to_bytes(), b.to_bytes());
+    }
+
+    #[test]
+    fn truncated_input_is_an_error_not_a_panic() {
+        let b = "hello".to_string().to_bytes();
+        for cut in 0..b.len() {
+            assert!(String::from_bytes(&b[..cut]).is_err());
+        }
+        assert!(u64::from_bytes(&[1, 2, 3]).is_err());
+        assert!(bool::from_bytes(&[9]).is_err());
+        assert!(Option::<u8>::from_bytes(&[7]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut b = 5u64.to_bytes();
+        b.push(0);
+        assert!(u64::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn checksum_detects_flips() {
+        let data = b"the quick brown fox";
+        let c = checksum(data);
+        let mut other = data.to_vec();
+        other[3] ^= 1;
+        assert_ne!(c, checksum(&other));
+        assert_eq!(c, checksum(data));
+    }
+}

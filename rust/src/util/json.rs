@@ -448,7 +448,11 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // Untrusted API payloads can place arbitrary bytes here (a stray
+        // multi-byte lead inside a number token); that is a parse error,
+        // never a coordinator panic.
+        let text = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -482,6 +486,24 @@ mod tests {
         let j = Json::parse(r#"{"a":[1,2,{"b":null}],"c":{"d":false}}"#).unwrap();
         assert_eq!(j.at(&["c", "d"]), Some(&Json::Bool(false)));
         assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn malformed_numbers_are_parse_errors_not_panics() {
+        // Regression: the number scanner used to unwrap its way from the
+        // scanned bytes to f64, so a pathological number token in an
+        // untrusted API payload (a patch body) could panic the coordinator
+        // instead of surfacing a 400-class error.
+        for bad in ["-", "-.", "1e", "1e+", "-e5", "{\"replicas\": 1e+}", "[3, -]"] {
+            let r = Json::parse(bad);
+            assert!(r.is_err(), "{bad:?} must be rejected, got {r:?}");
+        }
+        // numbers butted against multi-byte text are trailing garbage, not
+        // a mid-char slice panic
+        assert!(Json::parse("1é").is_err());
+        // and the error is positioned, so API clients get a usable message
+        let e = Json::parse("{\"x\": 1e+}").unwrap_err();
+        assert!(e.to_string().contains("byte"), "{e}");
     }
 
     #[test]

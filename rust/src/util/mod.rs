@@ -4,6 +4,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod codec;
 pub mod json;
 pub mod logging;
 pub mod prop;
@@ -43,6 +44,17 @@ impl IdGen {
     pub fn next(&self, prefix: &str) -> String {
         let n = self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         format!("{prefix}-{n:06}")
+    }
+
+    /// Snapshot the counter for a durability checkpoint.
+    pub fn counter(&self) -> u64 {
+        self.next.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Restore the counter after a crash — names minted after the restore
+    /// must not collide with names minted before it.
+    pub fn set_counter(&self, n: u64) {
+        self.next.store(n, std::sync::atomic::Ordering::Relaxed)
     }
 }
 

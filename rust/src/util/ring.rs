@@ -10,11 +10,15 @@
 //! [`Compacted`] error — the Kubernetes "410 Gone" idiom — and must
 //! re-list from current state before resuming from `cursor()`.
 //!
-//! The lossy variant [`since_lossy`](RingLog::since_lossy) silently skips
-//! the gap, for read-only renderers (traces, dashboards) where a partial
-//! history is acceptable.
+//! The explicitly-lossy variant [`since_clamped`](RingLog::since_clamped)
+//! resumes from the oldest retained entry, for read-only renderers
+//! (traces, dashboards) where a partial history is acceptable. Cursored
+//! consumers must never use it to *advance* a cursor: an under-base cursor
+//! is data loss, and only [`since`](RingLog::since) surfaces it.
 
 use std::collections::VecDeque;
+
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
 
 /// Typed "410 Gone": the requested cursor predates the retained window.
 /// The consumer must re-list current state and resume from `next`.
@@ -117,10 +121,51 @@ impl<T> RingLog<T> {
         Ok(self.entries.iter().skip(cursor - self.base))
     }
 
-    /// The suffix starting at absolute `cursor`, silently skipping any
-    /// compacted gap (read-only renderers that tolerate partial history).
-    pub fn since_lossy(&self, cursor: usize) -> impl Iterator<Item = &T> {
+    /// The suffix starting at absolute `cursor`, resuming from the oldest
+    /// retained entry when `cursor` predates the window.
+    ///
+    /// This used to be called `since_lossy` and was the *default* read at
+    /// every pump call site — which silently resumed from the oldest entry
+    /// on an under-base cursor, swallowing exactly the deltas a
+    /// [`Compacted`] relist exists to recover. The uniform contract now:
+    /// cursored consumers call [`since`](Self::since) (typed error on
+    /// loss) and may fall back to `since_clamped` only *after* handling
+    /// `Compacted` (clamping their cursor to `oldest` and scheduling a
+    /// relist); renderers that prefer partial history over failure opt in
+    /// by name.
+    pub fn since_clamped(&self, cursor: usize) -> impl Iterator<Item = &T> {
         self.entries.iter().skip(cursor.saturating_sub(self.base))
+    }
+
+    /// Same-position check used by restore tests: (base, len, capacity).
+    pub fn bounds(&self) -> (usize, usize, usize) {
+        (self.base, self.entries.len(), self.capacity)
+    }
+}
+
+// Ring logs serialize as (base, capacity, entries): snapshots must restore
+// the *absolute* cursor space, not just the retained entries, so consumer
+// cursors (reconciler pump, API pump) stay valid across a crash.
+impl<T: Enc> Enc for RingLog<T> {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.base.enc(b);
+        self.capacity.enc(b);
+        self.entries.enc(b);
+    }
+}
+
+impl<T: Dec> Dec for RingLog<T> {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        let base = usize::dec(r)?;
+        let capacity = usize::dec(r)?;
+        let entries = VecDeque::<T>::dec(r)?;
+        if capacity == 0 || entries.len() > capacity {
+            return Err(CodecError(format!(
+                "ring log shape invalid: {} entries, capacity {capacity}",
+                entries.len()
+            )));
+        }
+        Ok(RingLog { entries, base, capacity })
     }
 }
 
@@ -153,8 +198,10 @@ mod tests {
         // behind the window is a typed Compacted error
         let err = log.since(5).unwrap_err();
         assert_eq!(err, Compacted { cursor: 5, oldest: 6, next: 10 });
-        // the lossy reader skips the gap
-        assert_eq!(log.since_lossy(0).count(), 4);
+        // the explicitly-clamped reader resumes from the oldest entry
+        assert_eq!(log.since_clamped(0).count(), 4);
+        // clamped agrees with `since` whenever the cursor is in range
+        assert_eq!(log.since_clamped(8).count(), log.since(8).unwrap().count());
     }
 
     #[test]
@@ -194,5 +241,26 @@ mod tests {
         assert_eq!(log.oldest(), 40);
         assert!(log.since(39).is_err());
         assert_eq!(log.last(), Some(&49));
+    }
+
+    #[test]
+    fn codec_roundtrip_preserves_absolute_cursors() {
+        let mut log: RingLog<u64> = RingLog::new(4);
+        for i in 0..11u64 {
+            log.push(i);
+        }
+        let bytes = log.to_bytes();
+        let back = RingLog::<u64>::from_bytes(&bytes).unwrap();
+        assert_eq!(back.bounds(), log.bounds());
+        assert_eq!(back.cursor(), log.cursor());
+        assert_eq!(back.oldest(), log.oldest());
+        let a: Vec<u64> = back.iter().copied().collect();
+        let b: Vec<u64> = log.iter().copied().collect();
+        assert_eq!(a, b);
+        // a decoded ring keeps compacting at the same capacity
+        let mut back = back;
+        back.push(99);
+        assert_eq!(back.len(), 4);
+        assert_eq!(back.oldest(), 8);
     }
 }

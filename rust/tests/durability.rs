@@ -1,0 +1,166 @@
+//! Crash-tolerance suite: WAL + snapshot restore edge cases (torn tail
+//! records, corrupted frames, empty-log snapshots, snapshot compaction
+//! right after a restore) and a seeded crash-at-random-tick sweep
+//! asserting no workload is lost and accounting balances exactly.
+
+mod common;
+
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::Platform;
+use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::sim::clock::hours;
+
+/// A bootstrapped platform with durability on and the given snapshot
+/// cadence.
+fn durable_platform(snapshot_interval: f64) -> Platform {
+    let mut cfg = common::config();
+    cfg.durability_enabled = true;
+    cfg.durability_snapshot_interval = snapshot_interval;
+    Platform::bootstrap(cfg).unwrap()
+}
+
+fn submit_one(p: &mut Platform, user: &str, duration: f64) -> String {
+    p.submit_batch(
+        user,
+        "project04",
+        ResourceVec::cpu_millis(4000).with(MEMORY, 8 << 30),
+        duration,
+        PriorityClass::Batch,
+        false,
+    )
+    .unwrap()
+}
+
+/// Bootstrap seeds the snapshot *after* the initial inventory is built, so
+/// an immediate crash restores from a snapshot with an empty WAL — and the
+/// restored platform is byte-equivalent (same resourceVersion, same
+/// inventory) and still runs work to completion.
+#[test]
+fn restore_from_seed_snapshot_with_empty_log() {
+    let mut p = durable_platform(900.0);
+    assert_eq!(p.wal_len_bytes(), 0, "bootstrap must leave an empty log");
+    let rv = p.cluster().resource_version();
+    p.crash_and_restore();
+    assert_eq!(p.coordinator_restarts(), 1);
+    assert_eq!(p.node_count(), 8);
+    assert_eq!(p.cluster().resource_version(), rv);
+    p.cluster().check_free_index();
+    let wl = submit_one(&mut p, "user011", 120.0);
+    p.run_for(600.0, 10.0);
+    assert_eq!(p.workload_state(&wl), Some(WorkloadState::Finished));
+}
+
+/// A crash mid-append leaves a torn tail frame. Replay discards exactly
+/// the torn record, the restore still succeeds, the derived free-capacity
+/// index matches a brute-force recomputation, and the in-flight workload
+/// still drains to Finished.
+#[test]
+fn torn_wal_tail_is_discarded_and_restore_still_succeeds() {
+    let mut p = durable_platform(10_000.0); // no snapshot during the run
+    let wl = submit_one(&mut p, "user012", 400.0);
+    p.run_for(120.0, 10.0);
+    let h = p.wal_handle().unwrap();
+    let len = h.borrow().len_bytes();
+    assert!(len > 8, "the run must have logged something");
+    // tear the last frame mid-record, as a kill mid-write would
+    h.borrow_mut().truncate_bytes(len - 3);
+    p.crash_and_restore();
+    assert_eq!(p.coordinator_restarts(), 1);
+    assert_eq!(p.node_count(), 8);
+    p.cluster().check_free_index();
+    p.run_for(hours(1.0), 10.0);
+    assert_eq!(p.workload_state(&wl), Some(WorkloadState::Finished));
+}
+
+/// A flipped byte inside a frame fails that frame's CRC: replay stops at
+/// the bad frame (reporting it), keeps every record before it, and the
+/// restore continues from the shortened log.
+#[test]
+fn corrupt_wal_byte_stops_replay_at_the_bad_frame() {
+    let mut p = durable_platform(10_000.0);
+    let wl = submit_one(&mut p, "user013", 400.0);
+    p.run_for(120.0, 10.0);
+    let h = p.wal_handle().unwrap();
+    let appended = h.borrow().appended();
+    let len = h.borrow().len_bytes();
+    h.borrow_mut().corrupt_byte(len - 20);
+    let (records, warn) = h.borrow().replay();
+    assert!(warn.is_some(), "corruption must be reported, not ignored");
+    assert!((records.len() as u64) < appended, "the bad frame must be dropped");
+    p.crash_and_restore();
+    assert_eq!(p.coordinator_restarts(), 1);
+    p.cluster().check_free_index();
+    p.run_for(hours(1.0), 10.0);
+    assert_eq!(p.workload_state(&wl), Some(WorkloadState::Finished));
+}
+
+/// Restore replays the WAL but deliberately does not clear it (a second
+/// crash before the next snapshot must replay the same tail). The next
+/// snapshot interval then compacts the replayed log into a fresh snapshot,
+/// and a second crash restores from *that* — the
+/// restore → compact → crash → restore cycle is stable.
+#[test]
+fn restore_then_immediate_compaction_then_second_crash() {
+    let mut p = durable_platform(60.0);
+    let wl = submit_one(&mut p, "user014", 400.0);
+    p.run_for(90.0, 10.0);
+    p.crash_and_restore();
+    assert_eq!(p.coordinator_restarts(), 1);
+    assert!(p.wal_len_bytes() > 0, "restore must keep the log for a repeat crash");
+    // the 60 s snapshot cadence elapses right after the restore,
+    // compacting the replayed log into a fresh snapshot
+    p.run_for(120.0, 10.0);
+    p.crash_and_restore();
+    assert_eq!(p.coordinator_restarts(), 2);
+    p.cluster().check_free_index();
+    p.run_for(hours(1.0), 10.0);
+    assert_eq!(p.workload_state(&wl), Some(WorkloadState::Finished));
+}
+
+/// Crash at a seed-derived point of the campaign, restore, and run to the
+/// end: every submitted workload still reaches Finished, completion
+/// accounting balances exactly, quota drains to zero, and the rebuilt
+/// free-capacity index mirrors the free map.
+#[test]
+fn seeded_crash_sweep_loses_no_work_and_balances_accounting() {
+    let base = common::test_seed();
+    for i in 0..8u64 {
+        let mut p = durable_platform(120.0);
+        let n = 6usize;
+        let wls: Vec<String> = (0..n)
+            .map(|j| {
+                p.submit_batch(
+                    &format!("user{:03}", (i as usize * 7 + j) % 78),
+                    "project04",
+                    ResourceVec::cpu_millis(8000).with(MEMORY, 8 << 30),
+                    300.0,
+                    PriorityClass::Batch,
+                    j % 2 == 0,
+                )
+                .unwrap()
+            })
+            .collect();
+        let crash_at =
+            40.0 + (base.wrapping_mul(2_654_435_761).wrapping_add(i * 97) % 900) as f64;
+        p.run_for(crash_at, 15.0);
+        p.crash_and_restore();
+        assert_eq!(p.coordinator_restarts(), 1, "run {i}");
+        p.run_for(hours(2.0), 15.0);
+        for w in &wls {
+            assert_eq!(
+                p.workload_state(w),
+                Some(WorkloadState::Finished),
+                "run {i}, crash at {crash_at}: workload {w} lost"
+            );
+        }
+        let m = p.metrics();
+        assert_eq!(
+            m.local_completions + m.remote_completions + m.terminal_failures,
+            n as u64,
+            "run {i}, crash at {crash_at}: {m:?}"
+        );
+        let (used, _) = p.quota_utilization();
+        assert!(used.is_empty(), "run {i}, crash at {crash_at}: leaked quota {used}");
+        p.cluster().check_free_index();
+    }
+}
