@@ -6,13 +6,26 @@
 //! runs it through the platform controller, and compares makespan against
 //! the sequential baseline and the critical-path bound. Also measures DAG
 //! resolution throughput.
+//!
+//! The second half drives the *federated workflow engine* end to end: a
+//! `WorkflowRun` whose training shards are pinned at three federation
+//! sites, realized entirely by the workflow reconciler (gang admission,
+//! data-locality placement, InterLink offload with stage-in/stage-out).
+//! Emits `BENCH_workflow.json` (makespan, bytes moved, gang-admission
+//! latency); CI uploads it and diffs against the committed
+//! `bench-baselines/BENCH_workflow.json` (informational).
 
 use std::collections::{HashMap, HashSet};
 
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::workflow::{RunPhase, StageSpec, LOCAL_SITE};
 use aiinfn::platform::{default_config_path, Platform, PlatformConfig};
 use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
 use aiinfn::util::bench::BenchGroup;
+use aiinfn::util::json::Json;
 use aiinfn::workflow::{parse_workflow, Dag};
+
+const GB: u64 = 1 << 30;
 
 fn workflow_json(samples: usize) -> (String, Vec<String>) {
     let names: Vec<String> = (0..samples).map(|i| format!("s{i}")).collect();
@@ -109,5 +122,139 @@ fn main() {
     g.bench_elements("dag-build-32-samples", 32 * 3 + 1, || {
         aiinfn::util::bench::black_box(Dag::build(&spec, &existing).unwrap());
     });
+
+    federated_engine_bench(&mut g);
     println!("\nE5 workflow checks PASSED");
+}
+
+fn stage(
+    name: &str,
+    cpu_millis: i64,
+    pods: u32,
+    duration: f64,
+    inputs: &[&str],
+    outputs: &[(&str, u64)],
+    offloadable: bool,
+) -> StageSpec {
+    StageSpec {
+        name: name.to_string(),
+        requests: ResourceVec::cpu_millis(cpu_millis).with(MEMORY, 4 << 30),
+        pods,
+        duration,
+        inputs: inputs.iter().map(|s| s.to_string()).collect(),
+        outputs: outputs.iter().map(|(n, s)| (n.to_string(), *s)).collect(),
+        offloadable,
+    }
+}
+
+/// The full engine across three federated sites: training shards pinned at
+/// INFN-T1 / ReCaS-Bari / CINECA-Leonardo pull their stages remote, the
+/// shared calibration set stages in at each site, models stage back out,
+/// and merge/publish run locally on the staged-back outputs.
+fn federated_engine_bench(g: &mut BenchGroup) {
+    let fast = std::env::var("AIINFN_BENCH_FAST").is_ok();
+    let scale = if fast { 1.0 } else { 4.0 };
+    let sites = ["INFN-T1", "ReCaS-Bari", "CINECA-Leonardo"];
+
+    let cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let mut p = Platform::bootstrap(cfg).unwrap();
+    p.create_dataset("bench-calib", "user001", 2 * GB, vec![LOCAL_SITE.into()]).unwrap();
+    let mut stages = vec![stage(
+        "prep",
+        4000,
+        2,
+        120.0 * scale,
+        &["bench-calib"],
+        &[("bench-clean", GB)],
+        false,
+    )];
+    let mut models: Vec<String> = Vec::new();
+    for (i, site) in sites.iter().enumerate() {
+        let shard = format!("bench-shard-{i}");
+        p.create_dataset(&shard, "user001", 80 * GB, vec![site.to_string()]).unwrap();
+        let model = format!("bench-model-{i}");
+        stages.push(stage(
+            &format!("train-{i}"),
+            8000,
+            2,
+            600.0 * scale,
+            &[&shard, "bench-calib"],
+            &[(&model, 4 * GB)],
+            true,
+        ));
+        models.push(model);
+    }
+    let merge_inputs: Vec<&str> =
+        models.iter().map(String::as_str).chain(std::iter::once("bench-clean")).collect();
+    stages.push(stage(
+        "merge",
+        4000,
+        1,
+        180.0 * scale,
+        &merge_inputs,
+        &[("bench-merged", 2 * GB)],
+        true,
+    ));
+    stages.push(stage(
+        "publish",
+        2000,
+        1,
+        60.0 * scale,
+        &["bench-merged"],
+        &[("bench-bundle", GB / 4)],
+        false,
+    ));
+    let n_stages = stages.len();
+    p.create_workflow_run(
+        "bench-fed",
+        "user001",
+        "project01",
+        PriorityClass::Batch,
+        "workflow",
+        stages,
+    )
+    .unwrap();
+
+    const TICK: f64 = 15.0;
+    let horizon = 24.0 * 3600.0;
+    let t0 = p.now();
+    while p.workflow_run("bench-fed").unwrap().phase != RunPhase::Succeeded {
+        assert!(p.now() - t0 < horizon, "federated workflow stalled");
+        p.run_for(TICK, TICK);
+    }
+    let makespan = p.now() - t0;
+
+    let run = p.workflow_run("bench-fed").unwrap();
+    let m = p.metrics();
+    assert_eq!(m.workflow_stages_completed, n_stages as u64);
+    assert!(m.workflow_offloaded_stages >= sites.len() as u64, "every train must offload");
+    assert!(m.workflow_bytes_staged > 0);
+    assert!(m.workflow_gangs_bound >= n_stages as u64);
+    let gang_latency = m.workflow_gang_wait_total / m.workflow_gangs_bound as f64;
+    let bytes_moved = run.bytes_staged;
+
+    g.record_value("federated-makespan", makespan, "s");
+    g.record_value("federated-bytes-moved-gb", bytes_moved as f64 / GB as f64, "GB");
+    g.record_value("federated-gang-admission-latency", gang_latency, "s");
+
+    let out = Json::obj(vec![
+        ("stages", Json::num(n_stages as f64)),
+        ("federated_sites", Json::num(sites.len() as f64)),
+        ("tick_seconds", Json::num(TICK)),
+        ("makespan_seconds", Json::num(makespan)),
+        ("bytes_moved", Json::num(bytes_moved as f64)),
+        ("bytes_moved_gb", Json::num(bytes_moved as f64 / GB as f64)),
+        ("offloaded_stages", Json::num(m.workflow_offloaded_stages as f64)),
+        ("gangs_bound", Json::num(m.workflow_gangs_bound as f64)),
+        ("gang_admission_latency_seconds", Json::num(gang_latency)),
+        ("stage_retries", Json::num(m.workflow_stage_retries as f64)),
+    ]);
+    std::fs::write("BENCH_workflow.json", out.to_pretty()).expect("write BENCH_workflow.json");
+    println!("wrote BENCH_workflow.json");
+    println!(
+        "federated engine: {n_stages} stages over {} sites in {makespan:.0}s \
+         ({:.1} GB moved, gang latency {gang_latency:.1}s)",
+        sites.len(),
+        bytes_moved as f64 / GB as f64
+    );
 }

@@ -150,6 +150,35 @@ impl Admitter for Defaulter {
                     .entry("app".to_string())
                     .or_insert_with(|| "inference".to_string());
             }
+            ApiObject::WorkflowRun(w) => {
+                if w.metadata.namespace.is_empty() || w.metadata.namespace == "default" {
+                    w.metadata.namespace = "workflow".to_string();
+                }
+                if w.priority.is_empty() {
+                    w.priority = "batch".to_string();
+                }
+                if w.queue.is_empty() {
+                    w.queue = ctx.config.workflow_queue.clone();
+                }
+                for stage in &mut w.stages {
+                    if stage.pods == 0 {
+                        stage.pods = 1;
+                    }
+                }
+                w.metadata
+                    .labels
+                    .entry("app".to_string())
+                    .or_insert_with(|| "workflow".to_string());
+            }
+            ApiObject::Dataset(d) => {
+                if d.metadata.namespace.is_empty() || d.metadata.namespace == "default" {
+                    d.metadata.namespace = "data".to_string();
+                }
+                d.metadata
+                    .labels
+                    .entry("app".to_string())
+                    .or_insert_with(|| "dataset".to_string());
+            }
             _ => {}
         }
         Ok(())
@@ -268,6 +297,89 @@ impl Admitter for Validator {
                     ));
                 }
             }
+            ApiObject::WorkflowRun(w) => {
+                if w.user.is_empty() {
+                    return Err("spec.user is empty".into());
+                }
+                if w.project.is_empty() {
+                    return Err("spec.project is empty".into());
+                }
+                if w.stages.is_empty() {
+                    return Err("spec.stages is empty".into());
+                }
+                let mut names = std::collections::HashSet::new();
+                for stage in &w.stages {
+                    if stage.name.is_empty() {
+                        return Err("spec.stages[].name is empty".into());
+                    }
+                    if !names.insert(stage.name.as_str()) {
+                        return Err(format!("duplicate stage name {:?}", stage.name));
+                    }
+                    if stage.pods == 0 {
+                        return Err(format!("stage {:?}: pods must be at least 1", stage.name));
+                    }
+                    if stage.requests.is_empty() {
+                        return Err(format!(
+                            "stage {:?}: requests asks for no resources",
+                            stage.name
+                        ));
+                    }
+                    for (k, v) in stage.requests.iter() {
+                        if v < 0 {
+                            return Err(format!(
+                                "stage {:?}: requests[{k}] is negative ({v})",
+                                stage.name
+                            ));
+                        }
+                    }
+                    if !(stage.duration > 0.0) {
+                        return Err(format!(
+                            "stage {:?}: duration must be positive (got {})",
+                            stage.name, stage.duration
+                        ));
+                    }
+                }
+                parse_priority(&w.priority).map_err(|e| e.to_string())?;
+                if w.queue != ctx.config.workflow_queue {
+                    return Err(format!(
+                        "spec.queue {:?} is not the workflow local queue {:?}",
+                        w.queue, ctx.config.workflow_queue
+                    ));
+                }
+                // the graph must be a DAG with a unique producer per
+                // dataset; inputs nothing produces are external Datasets
+                // (existence is the reconciler's concern, not admission's)
+                let external: std::collections::HashSet<String> =
+                    w.stages.iter().flat_map(|s| s.inputs.iter().cloned()).collect();
+                let jobs: Vec<crate::workflow::dag::JobNode> = w
+                    .stages
+                    .iter()
+                    .map(|s| crate::workflow::dag::JobNode {
+                        id: s.name.clone(),
+                        rule: s.name.clone(),
+                        inputs: s.inputs.clone(),
+                        outputs: s.outputs.iter().map(|(n, _)| n.clone()).collect(),
+                        resources: s.requests.clone(),
+                        duration: s.duration,
+                        wildcards: Default::default(),
+                    })
+                    .collect();
+                crate::workflow::dag::Dag::from_jobs(jobs, &external)
+                    .map_err(|e| format!("spec.stages is not a valid DAG: {e}"))?;
+            }
+            ApiObject::Dataset(d) => {
+                if d.user.is_empty() {
+                    return Err("spec.user is empty".into());
+                }
+                if d.size_bytes == 0 {
+                    return Err("spec.sizeBytes must be positive".into());
+                }
+                if d.sites.is_empty() {
+                    return Err(
+                        "spec.sites is empty (use \"local\" for coordinator storage)".into()
+                    );
+                }
+            }
             other => {
                 return Err(format!(
                     "kind {} is read-only (server-projected)",
@@ -350,6 +462,36 @@ impl Admitter for ImmutableFields {
                 }
                 if new.queue != old.queue {
                     return Err("spec.queue is immutable".into());
+                }
+            }
+            (ApiObject::WorkflowRun(new), ApiObject::WorkflowRun(old)) => {
+                // the DAG is the identity of the run: stages, priority and
+                // queue are frozen once stage workloads may exist
+                if new.user != old.user {
+                    return Err("spec.user is immutable".into());
+                }
+                if new.project != old.project {
+                    return Err("spec.project is immutable".into());
+                }
+                if new.stages != old.stages {
+                    return Err("spec.stages is immutable (stages may be in flight)".into());
+                }
+                if new.priority != old.priority {
+                    return Err("spec.priority is immutable".into());
+                }
+                if new.queue != old.queue {
+                    return Err("spec.queue is immutable".into());
+                }
+            }
+            (ApiObject::Dataset(new), ApiObject::Dataset(old)) => {
+                if new.user != old.user {
+                    return Err("spec.user is immutable".into());
+                }
+                if new.size_bytes != old.size_bytes {
+                    return Err("spec.sizeBytes is immutable (transfer costs already priced)".into());
+                }
+                if new.sites != old.sites {
+                    return Err("spec.sites is immutable (placement already scored)".into());
                 }
             }
             (new, old) => {
@@ -542,6 +684,118 @@ mod tests {
                 "{field}: {err}"
             );
         }
+    }
+
+    fn workflow_run() -> ApiObject {
+        use crate::api::resources::{StageTemplate, WorkflowRunResource};
+        ApiObject::WorkflowRun(WorkflowRunResource::request(
+            "analysis",
+            "alice",
+            "project01",
+            vec![
+                StageTemplate {
+                    name: "pre".into(),
+                    requests: ResourceVec::cpu_millis(2000),
+                    pods: 0, // defaulted to 1
+                    duration: 60.0,
+                    inputs: vec!["raw".into()],
+                    outputs: vec![("clean".into(), 1_000_000)],
+                    offloadable: true,
+                },
+                StageTemplate {
+                    name: "train".into(),
+                    requests: ResourceVec::cpu_millis(4000),
+                    pods: 2,
+                    duration: 300.0,
+                    inputs: vec!["clean".into()],
+                    outputs: vec![("model".into(), 1_000)],
+                    offloadable: false,
+                },
+            ],
+        ))
+    }
+
+    #[test]
+    fn workflow_defaulting_fills_queue_priority_and_gang_size() {
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let mut obj = workflow_run();
+        chain
+            .run(&AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None }, &mut obj)
+            .unwrap();
+        let w = obj.as_workflow_run().unwrap();
+        assert_eq!(w.queue, cfg.workflow_queue);
+        assert_eq!(w.priority, "batch");
+        assert_eq!(w.metadata.namespace, "workflow");
+        assert_eq!(w.stages[0].pods, 1);
+        assert_eq!(w.metadata.labels.get("app").map(String::as_str), Some("workflow"));
+    }
+
+    #[test]
+    fn workflow_validation_rejects_cycles_duplicates_and_bad_stages() {
+        use crate::api::resources::WorkflowRunResource;
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let ctx = AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None };
+
+        let reject = |mutate: &dyn Fn(&mut WorkflowRunResource), needle: &str| {
+            let mut obj = workflow_run();
+            if let ApiObject::WorkflowRun(w) = &mut obj {
+                mutate(w);
+            }
+            let err = chain.run(&ctx, &mut obj).unwrap_err();
+            assert!(
+                matches!(&err, ApiError::Invalid(m) if m.contains(needle)),
+                "expected {needle:?} in {err}"
+            );
+        };
+        reject(&|w| w.stages.clear(), "stages is empty");
+        reject(&|w| w.stages[1].name = "pre".into(), "duplicate stage name");
+        reject(&|w| w.stages[0].requests = ResourceVec::new(), "requests");
+        reject(&|w| w.stages[0].duration = 0.0, "duration");
+        reject(&|w| w.user = String::new(), "user");
+        // cycle: pre consumes what train produces
+        reject(
+            &|w| w.stages[0].inputs = vec!["model".into()],
+            "not a valid DAG",
+        );
+        // ambiguous: both stages produce the same dataset
+        reject(
+            &|w| w.stages[1].outputs = vec![("clean".into(), 1)],
+            "not a valid DAG",
+        );
+
+        let mut ok = workflow_run();
+        chain.run(&ctx, &mut ok).unwrap();
+    }
+
+    #[test]
+    fn dataset_admission_defaults_and_validates() {
+        use crate::api::resources::DatasetResource;
+        let cfg = config();
+        let chain = AdmissionChain::standard();
+        let ctx = AdmissionCtx { verb: WriteVerb::Create, config: &cfg, old: None };
+
+        let mut ok = ApiObject::Dataset(DatasetResource::request(
+            "raw",
+            "alice",
+            1_000_000,
+            vec!["INFN-T1".into()],
+        ));
+        chain.run(&ctx, &mut ok).unwrap();
+        assert_eq!(ok.metadata().namespace, "data");
+
+        let mut bad = ApiObject::Dataset(DatasetResource::request("raw", "alice", 0, vec![]));
+        let err = chain.run(&ctx, &mut bad).unwrap_err();
+        assert!(matches!(&err, ApiError::Invalid(m) if m.contains("sizeBytes")), "{err}");
+
+        // immutability: size and sites are frozen
+        let ctx_up = AdmissionCtx { verb: WriteVerb::Update, config: &cfg, old: Some(&ok) };
+        let mut changed = ok.clone();
+        if let ApiObject::Dataset(d) = &mut changed {
+            d.size_bytes = 2_000_000;
+        }
+        assert!(chain.run(&ctx_up, &mut changed).is_err());
     }
 
     #[test]

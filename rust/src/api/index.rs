@@ -180,6 +180,25 @@ pub(crate) fn typed_field<'a>(obj: &'a ApiObject, path: &str) -> Option<Option<F
             "status.p95Latency" => Some(FieldVal::N(s.p95_latency)),
             _ => return None,
         },
+        ApiObject::WorkflowRun(w) => match path {
+            "spec.user" => Some(FieldVal::S(&w.user)),
+            "spec.project" => Some(FieldVal::S(&w.project)),
+            // to_json omits empty priority/queue: absent, not ""
+            "spec.priority" => (!w.priority.is_empty()).then(|| FieldVal::S(w.priority.as_str())),
+            "spec.queue" => (!w.queue.is_empty()).then(|| FieldVal::S(w.queue.as_str())),
+            "status.phase" => Some(FieldVal::S(&w.phase)),
+            "status.stagesCompleted" => Some(FieldVal::N(w.stages_completed as f64)),
+            "status.bytesStaged" => Some(FieldVal::N(w.bytes_staged as f64)),
+            // spec.stages / status.stageStatus are arrays: JSON fallback
+            _ => return None,
+        },
+        ApiObject::Dataset(d) => match path {
+            "spec.user" => Some(FieldVal::S(&d.user)),
+            "spec.sizeBytes" => Some(FieldVal::N(d.size_bytes as f64)),
+            "status.phase" => Some(FieldVal::S(&d.phase)),
+            // spec.sites / status.locations are arrays: JSON fallback
+            _ => return None,
+        },
     })
 }
 
@@ -372,11 +391,20 @@ impl ApiIndex {
     /// bump? Node views embed `status.free`, which moves on every pod
     /// bind/release *without* a Node event, and InferenceServer status
     /// (request counters, p95, replica counts) advances every serving
-    /// window without one, so both must be serialized fresh. Every other
-    /// kind's mutable state flows through watch events (store transitions,
-    /// Kueue/health rings, write verbs).
+    /// window without one, so both must be serialized fresh. WorkflowRun
+    /// and Dataset status advances as the workflow reconciler walks the
+    /// DAG (stage phases, bytes staged, replica locations) without a write
+    /// verb, so they are serialized fresh too. Every other kind's mutable
+    /// state flows through watch events (store transitions, Kueue/health
+    /// rings, write verbs).
     fn rv_keyed(kind: ResourceKind) -> bool {
-        !matches!(kind, ResourceKind::Node | ResourceKind::InferenceServer)
+        !matches!(
+            kind,
+            ResourceKind::Node
+                | ResourceKind::InferenceServer
+                | ResourceKind::WorkflowRun
+                | ResourceKind::Dataset
+        )
     }
 
     /// Run `f` over the object's serialized view, reusing the cached JSON

@@ -45,7 +45,7 @@
 //!
 //! ## Resource model
 //!
-//! Eight kinds ([`ResourceKind`]), each a typed struct carrying [`Metadata`]
+//! Ten kinds ([`ResourceKind`]), each a typed struct carrying [`Metadata`]
 //! (name, namespace, labels, resourceVersion) and serializing to/from the
 //! in-house [`Json`](crate::util::json::Json) in the familiar
 //! `{apiVersion, kind, metadata, spec, status}` shape:
@@ -65,6 +65,13 @@
 //!   (writable; spec declares MIG-slice-sized replicas, autoscale bounds,
 //!   and batching knobs; status carries replica counts, request
 //!   accounting, and the last observed p95 — see [`crate::serve`])
+//! * [`WorkflowRunResource`] — a DAG of gang-scheduled stages placed across
+//!   the federation by data locality (writable; spec declares stages wired
+//!   by dataset names; status carries per-stage phase/site/retries — see
+//!   [`crate::platform::workflow`])
+//! * [`DatasetResource`] — named data with size and site placement, the
+//!   transfer-cost input to workflow placement (writable; status tracks
+//!   every site holding a replica)
 //!
 //! Pods and Sites additionally expose typed [`Condition`]s
 //! (`PodScheduled`/`Ready`, `Healthy`) so watchers can follow transitions
@@ -131,8 +138,9 @@ pub mod watch;
 
 pub use admission::{AdmissionChain, AdmissionCtx, Admitter, WriteVerb};
 pub use resources::{
-    ApiObject, BatchJobResource, Condition, GpuDeviceView, InferenceServerResource, Metadata,
-    NodeView, OwnerReference, PodView, ResourceKind, SessionResource, SiteView, WorkloadView,
+    ApiObject, BatchJobResource, Condition, DatasetResource, GpuDeviceView,
+    InferenceServerResource, Metadata, NodeView, OwnerReference, PodView, ResourceKind,
+    SessionResource, SiteView, StageStatusView, StageTemplate, WorkloadView, WorkflowRunResource,
 };
 pub use server::{ApiServer, Selector, SelectorOp};
 pub use watch::{EventType, WatchEvent, WatchLog};

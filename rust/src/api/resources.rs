@@ -28,6 +28,8 @@ pub enum ResourceKind {
     Workload,
     Site,
     GpuDevice,
+    WorkflowRun,
+    Dataset,
 }
 
 impl ResourceKind {
@@ -41,6 +43,8 @@ impl ResourceKind {
             ResourceKind::Workload => "Workload",
             ResourceKind::Site => "Site",
             ResourceKind::GpuDevice => "GpuDevice",
+            ResourceKind::WorkflowRun => "WorkflowRun",
+            ResourceKind::Dataset => "Dataset",
         }
     }
 
@@ -54,6 +58,8 @@ impl ResourceKind {
             "Workload" => ResourceKind::Workload,
             "Site" => ResourceKind::Site,
             "GpuDevice" => ResourceKind::GpuDevice,
+            "WorkflowRun" => ResourceKind::WorkflowRun,
+            "Dataset" => ResourceKind::Dataset,
             _ => return None,
         })
     }
@@ -69,6 +75,8 @@ impl ResourceKind {
             ResourceKind::Workload => 5,
             ResourceKind::Site => 6,
             ResourceKind::GpuDevice => 7,
+            ResourceKind::WorkflowRun => 8,
+            ResourceKind::Dataset => 9,
         }
     }
 
@@ -82,12 +90,14 @@ impl ResourceKind {
             5 => ResourceKind::Workload,
             6 => ResourceKind::Site,
             7 => ResourceKind::GpuDevice,
+            8 => ResourceKind::WorkflowRun,
+            9 => ResourceKind::Dataset,
             _ => return None,
         })
     }
 
     /// Every kind, for enumeration in tests and tooling.
-    pub fn all() -> [ResourceKind; 8] {
+    pub fn all() -> [ResourceKind; 10] {
         [
             ResourceKind::Session,
             ResourceKind::BatchJob,
@@ -97,6 +107,8 @@ impl ResourceKind {
             ResourceKind::Workload,
             ResourceKind::Site,
             ResourceKind::GpuDevice,
+            ResourceKind::WorkflowRun,
+            ResourceKind::Dataset,
         ]
     }
 }
@@ -1159,6 +1171,296 @@ impl GpuDeviceView {
     }
 }
 
+// ------------------------------------------------------------- WorkflowRun
+
+/// One stage of a workflow DAG: a pod template plus the dataset edges that
+/// wire it into the graph. Dependencies are implicit — a stage consuming a
+/// dataset another stage produces runs after its producer; inputs matched
+/// by no producer must exist as `Dataset` objects before the stage starts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageTemplate {
+    pub name: String,
+    /// Per-pod resource request.
+    pub requests: ResourceVec,
+    /// Gang size: every pod of the stage admits all-or-nothing.
+    pub pods: u32,
+    /// Execution seconds per pod (sim payload duration).
+    pub duration: f64,
+    /// Dataset names consumed (staged in before execution).
+    pub inputs: Vec<String>,
+    /// Datasets produced: `(name, size in bytes)` registered at the
+    /// execution site when the stage succeeds.
+    pub outputs: Vec<(String, u64)>,
+    /// Whether placement may choose an InterLink-offloaded site.
+    pub offloadable: bool,
+}
+
+impl StageTemplate {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("requests", resources_to_json(&self.requests)),
+            ("pods", Json::num(self.pods as f64)),
+            ("duration", Json::num(self.duration)),
+            (
+                "inputs",
+                Json::Arr(self.inputs.iter().map(|i| Json::str(i.as_str())).collect()),
+            ),
+            (
+                "outputs",
+                Json::Arr(
+                    self.outputs
+                        .iter()
+                        .map(|(n, sz)| {
+                            Json::obj(vec![
+                                ("name", Json::str(n.as_str())),
+                                ("sizeBytes", Json::num(*sz as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("offloadable", Json::Bool(self.offloadable)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<StageTemplate, ApiError> {
+        let inputs = match j.get("inputs").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(a) => a.iter().filter_map(Json::as_str).map(str::to_string).collect(),
+        };
+        let outputs = match j.get("outputs").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(a) => a
+                .iter()
+                .map(|o| {
+                    let name = opt_str(o, "name")
+                        .ok_or_else(|| ApiError::Invalid("stage output has no name".into()))?;
+                    let size = opt_num(o, "sizeBytes").unwrap_or(0.0) as u64;
+                    Ok((name, size))
+                })
+                .collect::<Result<Vec<_>, ApiError>>()?,
+        };
+        Ok(StageTemplate {
+            name: opt_str(j, "name").unwrap_or_default(),
+            requests: j.get("requests").map(resources_from_json).transpose()?.unwrap_or_default(),
+            pods: opt_num(j, "pods").unwrap_or(0.0) as u32,
+            duration: opt_num(j, "duration").unwrap_or(0.0),
+            inputs,
+            outputs,
+            offloadable: j.get("offloadable").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// Per-stage status projection surfaced on the `WorkflowRun` object.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageStatusView {
+    pub name: String,
+    /// `Waiting` / `Admitting` / `Running` / `Succeeded` / `Failed`.
+    pub phase: String,
+    /// Execution site (`local` or a federated site name).
+    pub site: String,
+    pub retries: u32,
+}
+
+impl StageStatusView {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("phase", Json::str(self.phase.as_str())),
+            ("site", Json::str(self.site.as_str())),
+            ("retries", Json::num(self.retries as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<StageStatusView, ApiError> {
+        Ok(StageStatusView {
+            name: opt_str(j, "name").unwrap_or_default(),
+            phase: opt_str(j, "phase").unwrap_or_default(),
+            site: opt_str(j, "site").unwrap_or_default(),
+            retries: opt_num(j, "retries").unwrap_or(0.0) as u32,
+        })
+    }
+}
+
+/// A submitted workflow: a DAG of gang-scheduled stages placed across the
+/// federation by data locality (writable kind). `metadata.name` prefixes
+/// every stage workload and pod the reconciler realizes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkflowRunResource {
+    pub metadata: Metadata,
+    /// Spec: ownership (fair-share accounting rides the user).
+    pub user: String,
+    pub project: String,
+    /// Priority class for every stage workload. Empty on a request: the
+    /// admission chain defaults it to `batch`.
+    pub priority: String,
+    /// Local queue for stage workloads. Empty on a request: the admission
+    /// chain defaults it from `PlatformConfig`.
+    pub queue: String,
+    /// The DAG, as stages wired by dataset names.
+    pub stages: Vec<StageTemplate>,
+    /// Status (server-filled).
+    /// `Pending` / `Running` / `Succeeded` / `Failed`.
+    pub phase: String,
+    pub stage_status: Vec<StageStatusView>,
+    pub stages_completed: u32,
+    /// Bytes moved between sites for stage-in/stage-out so far.
+    pub bytes_staged: u64,
+    /// Status conditions (settable through the `status` subresource).
+    pub conditions: Vec<Condition>,
+}
+
+impl WorkflowRunResource {
+    /// A creation request: spec only, server fills the rest.
+    pub fn request(
+        name: &str,
+        user: &str,
+        project: &str,
+        stages: Vec<StageTemplate>,
+    ) -> WorkflowRunResource {
+        WorkflowRunResource {
+            metadata: Metadata::named(name, "workflow"),
+            user: user.to_string(),
+            project: project.to_string(),
+            stages,
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::WorkflowRun,
+            &self.metadata,
+            Json::obj({
+                let mut f = vec![
+                    ("user", Json::str(self.user.as_str())),
+                    ("project", Json::str(self.project.as_str())),
+                ];
+                if !self.priority.is_empty() {
+                    f.push(("priority", Json::str(self.priority.as_str())));
+                }
+                if !self.queue.is_empty() {
+                    f.push(("queue", Json::str(self.queue.as_str())));
+                }
+                f.push(("stages", Json::Arr(self.stages.iter().map(StageTemplate::to_json).collect())));
+                f
+            }),
+            Json::obj(vec![
+                ("phase", Json::str(self.phase.as_str())),
+                (
+                    "stageStatus",
+                    Json::Arr(self.stage_status.iter().map(StageStatusView::to_json).collect()),
+                ),
+                ("stagesCompleted", Json::num(self.stages_completed as f64)),
+                ("bytesStaged", Json::num(self.bytes_staged as f64)),
+                ("conditions", conditions_to_json(&self.conditions)),
+            ]),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkflowRunResource, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::WorkflowRun)?;
+        let stages = match spec.get("stages").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(a) => a.iter().map(StageTemplate::from_json).collect::<Result<Vec<_>, _>>()?,
+        };
+        let stage_status = match status.get("stageStatus").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(a) => a.iter().map(StageStatusView::from_json).collect::<Result<Vec<_>, _>>()?,
+        };
+        Ok(WorkflowRunResource {
+            metadata,
+            user: opt_str(spec, "user").unwrap_or_default(),
+            project: opt_str(spec, "project").unwrap_or_default(),
+            priority: opt_str(spec, "priority").unwrap_or_default(),
+            queue: opt_str(spec, "queue").unwrap_or_default(),
+            stages,
+            phase: opt_str(status, "phase").unwrap_or_default(),
+            stage_status,
+            stages_completed: opt_num(status, "stagesCompleted").unwrap_or(0.0) as u32,
+            bytes_staged: opt_num(status, "bytesStaged").unwrap_or(0.0) as u64,
+            conditions: conditions_from_json(status.get("conditions"))?,
+        })
+    }
+}
+
+// ----------------------------------------------------------------- Dataset
+
+/// Named data with size and site placement (writable kind) — the
+/// transfer-cost input to workflow placement. Sites listed in the spec pin
+/// initial replicas; the status tracks every site holding one (stage
+/// outputs register their execution site here).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DatasetResource {
+    pub metadata: Metadata,
+    /// Spec.
+    pub user: String,
+    pub size_bytes: u64,
+    /// Sites holding the data at creation (`local` = the coordinator's
+    /// own storage; otherwise a federated site name).
+    pub sites: Vec<String>,
+    /// Status (server-filled): every site with a replica, and the phase
+    /// (`Ready` / `Bound`).
+    pub locations: Vec<String>,
+    pub phase: String,
+    /// Status conditions (settable through the `status` subresource).
+    pub conditions: Vec<Condition>,
+}
+
+impl DatasetResource {
+    /// A creation request: spec only, server fills the rest.
+    pub fn request(name: &str, user: &str, size_bytes: u64, sites: Vec<String>) -> DatasetResource {
+        DatasetResource {
+            metadata: Metadata::named(name, "data"),
+            user: user.to_string(),
+            size_bytes,
+            sites,
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        envelope(
+            ResourceKind::Dataset,
+            &self.metadata,
+            Json::obj(vec![
+                ("user", Json::str(self.user.as_str())),
+                ("sizeBytes", Json::num(self.size_bytes as f64)),
+                ("sites", Json::Arr(self.sites.iter().map(|s| Json::str(s.as_str())).collect())),
+            ]),
+            Json::obj(vec![
+                (
+                    "locations",
+                    Json::Arr(self.locations.iter().map(|s| Json::str(s.as_str())).collect()),
+                ),
+                ("phase", Json::str(self.phase.as_str())),
+                ("conditions", conditions_to_json(&self.conditions)),
+            ]),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<DatasetResource, ApiError> {
+        let (metadata, spec, status) = check_kind(j, ResourceKind::Dataset)?;
+        let strings = |j: Option<&Json>| -> Vec<String> {
+            match j.and_then(Json::as_arr) {
+                None => Vec::new(),
+                Some(a) => a.iter().filter_map(Json::as_str).map(str::to_string).collect(),
+            }
+        };
+        Ok(DatasetResource {
+            metadata,
+            user: opt_str(spec, "user").unwrap_or_default(),
+            size_bytes: opt_num(spec, "sizeBytes").unwrap_or(0.0) as u64,
+            sites: strings(spec.get("sites")),
+            locations: strings(status.get("locations")),
+            phase: opt_str(status, "phase").unwrap_or_default(),
+            conditions: conditions_from_json(status.get("conditions"))?,
+        })
+    }
+}
+
 // --------------------------------------------------------------- ApiObject
 
 /// A typed object of any kind — what the uniform verbs accept and return.
@@ -1172,6 +1474,8 @@ pub enum ApiObject {
     Workload(WorkloadView),
     Site(SiteView),
     GpuDevice(GpuDeviceView),
+    WorkflowRun(WorkflowRunResource),
+    Dataset(DatasetResource),
 }
 
 impl ApiObject {
@@ -1185,6 +1489,8 @@ impl ApiObject {
             ApiObject::Workload(_) => ResourceKind::Workload,
             ApiObject::Site(_) => ResourceKind::Site,
             ApiObject::GpuDevice(_) => ResourceKind::GpuDevice,
+            ApiObject::WorkflowRun(_) => ResourceKind::WorkflowRun,
+            ApiObject::Dataset(_) => ResourceKind::Dataset,
         }
     }
 
@@ -1198,6 +1504,8 @@ impl ApiObject {
             ApiObject::Workload(x) => &x.metadata,
             ApiObject::Site(x) => &x.metadata,
             ApiObject::GpuDevice(x) => &x.metadata,
+            ApiObject::WorkflowRun(x) => &x.metadata,
+            ApiObject::Dataset(x) => &x.metadata,
         }
     }
 
@@ -1211,6 +1519,8 @@ impl ApiObject {
             ApiObject::Workload(x) => &mut x.metadata,
             ApiObject::Site(x) => &mut x.metadata,
             ApiObject::GpuDevice(x) => &mut x.metadata,
+            ApiObject::WorkflowRun(x) => &mut x.metadata,
+            ApiObject::Dataset(x) => &mut x.metadata,
         }
     }
 
@@ -1228,6 +1538,8 @@ impl ApiObject {
             ApiObject::Workload(x) => x.to_json(),
             ApiObject::Site(x) => x.to_json(),
             ApiObject::GpuDevice(x) => x.to_json(),
+            ApiObject::WorkflowRun(x) => x.to_json(),
+            ApiObject::Dataset(x) => x.to_json(),
         }
     }
 
@@ -1250,6 +1562,10 @@ impl ApiObject {
             ResourceKind::Workload => ApiObject::Workload(WorkloadView::from_json(j)?),
             ResourceKind::Site => ApiObject::Site(SiteView::from_json(j)?),
             ResourceKind::GpuDevice => ApiObject::GpuDevice(GpuDeviceView::from_json(j)?),
+            ResourceKind::WorkflowRun => {
+                ApiObject::WorkflowRun(WorkflowRunResource::from_json(j)?)
+            }
+            ResourceKind::Dataset => ApiObject::Dataset(DatasetResource::from_json(j)?),
         })
     }
 
@@ -1306,6 +1622,20 @@ impl ApiObject {
     pub fn as_gpu_device(&self) -> Option<&GpuDeviceView> {
         match self {
             ApiObject::GpuDevice(g) => Some(g),
+            _ => None,
+        }
+    }
+
+    pub fn as_workflow_run(&self) -> Option<&WorkflowRunResource> {
+        match self {
+            ApiObject::WorkflowRun(w) => Some(w),
+            _ => None,
+        }
+    }
+
+    pub fn as_dataset(&self) -> Option<&DatasetResource> {
+        match self {
+            ApiObject::Dataset(d) => Some(d),
             _ => None,
         }
     }
@@ -1453,6 +1783,60 @@ mod tests {
                 max_users: 2,
                 free_compute_slices: 1,
                 free_memory_slices: 0,
+            }),
+            ApiObject::WorkflowRun(WorkflowRunResource {
+                metadata: meta("analysis-v1", "workflow", 31),
+                user: "carol".into(),
+                project: "cms-met".into(),
+                priority: "batch".into(),
+                queue: "workflow".into(),
+                stages: vec![
+                    StageTemplate {
+                        name: "preprocess".into(),
+                        requests: rv_sample(),
+                        pods: 1,
+                        duration: 120.0,
+                        inputs: vec!["raw-events".into()],
+                        outputs: vec![("features".into(), 5_000_000_000)],
+                        offloadable: true,
+                    },
+                    StageTemplate {
+                        name: "train".into(),
+                        requests: rv_sample(),
+                        pods: 4,
+                        duration: 600.0,
+                        inputs: vec!["features".into()],
+                        outputs: vec![("model".into(), 100_000_000)],
+                        offloadable: false,
+                    },
+                ],
+                phase: "Running".into(),
+                stage_status: vec![
+                    StageStatusView {
+                        name: "preprocess".into(),
+                        phase: "Succeeded".into(),
+                        site: "INFN-T1".into(),
+                        retries: 1,
+                    },
+                    StageStatusView {
+                        name: "train".into(),
+                        phase: "Running".into(),
+                        site: "local".into(),
+                        retries: 0,
+                    },
+                ],
+                stages_completed: 1,
+                bytes_staged: 5_000_000_000,
+                conditions: vec![Condition::new("Progressing", true, "StageRunning", "", 42.0)],
+            }),
+            ApiObject::Dataset(DatasetResource {
+                metadata: meta("raw-events", "data", 7),
+                user: "carol".into(),
+                size_bytes: 20_000_000_000,
+                sites: vec!["INFN-T1".into()],
+                locations: vec!["INFN-T1".into(), "local".into()],
+                phase: "Ready".into(),
+                conditions: vec![Condition::new("Replicated", true, "StageOut", "", 50.0)],
             }),
         ];
         for obj in objects {

@@ -36,8 +36,9 @@ use crate::api::admission::{AdmissionChain, AdmissionCtx, WriteVerb};
 use crate::api::index::ApiIndex;
 use crate::api::resources::{
     parse_priority, phase_str, priority_str, workload_state_str, ApiObject, BatchJobResource,
-    Condition, GpuDeviceView, InferenceServerResource, Metadata, NodeView, PodView, ResourceKind,
-    SessionResource, SiteView, WorkloadView,
+    Condition, DatasetResource, GpuDeviceView, InferenceServerResource, Metadata, NodeView,
+    PodView, ResourceKind, SessionResource, SiteView, StageStatusView, WorkflowRunResource,
+    WorkloadView,
 };
 use crate::api::watch::{EventType, WatchEvent, WatchLog};
 use crate::api::ApiError;
@@ -50,6 +51,7 @@ use crate::offload::health::HealthStatus;
 use crate::offload::vk::VirtualKubelet;
 use crate::platform::config::PlatformConfig;
 use crate::platform::facade::{BatchJob, BatchSubmission, Platform, RestartPolicy};
+use crate::platform::workflow::{DatasetState, StageSpec, WorkflowRunState};
 use crate::queue::kueue::WorkloadState;
 use crate::serve::{ServerState, ServingSpec};
 use crate::sim::clock::Time;
@@ -493,6 +495,26 @@ impl ApiServer {
                 ));
             }
         }
+        for name in self.platform.workflow_run_names() {
+            if let Some(w) = self.platform.workflow_run(&name) {
+                let rv = self.rv_of(ResourceKind::WorkflowRun, &name);
+                observed.push((
+                    ResourceKind::WorkflowRun,
+                    name.clone(),
+                    self.workflow_run_view(w, rv).to_json(),
+                ));
+            }
+        }
+        for name in self.platform.dataset_names() {
+            if let Some(d) = self.platform.dataset(&name) {
+                let rv = self.rv_of(ResourceKind::Dataset, &name);
+                observed.push((
+                    ResourceKind::Dataset,
+                    name.clone(),
+                    self.dataset_view(d, rv).to_json(),
+                ));
+            }
+        }
         for (kind, name, json) in observed {
             self.index.observe(kind, EventType::Added, &name, Some(&json));
         }
@@ -743,6 +765,97 @@ impl ApiServer {
                 );
                 Ok(ApiObject::InferenceServer(view))
             }
+            ApiObject::WorkflowRun(req) => {
+                if req.user != caller {
+                    return Err(ApiError::Forbidden(format!(
+                        "token user {caller} cannot create a workflow run for {}",
+                        req.user
+                    )));
+                }
+                // client-named like InferenceServers: the name keys the
+                // run's gangs, pods, and staging bucket
+                let name = req.metadata.name.clone();
+                if name.is_empty() {
+                    return Err(ApiError::Invalid(
+                        "workflow run requires metadata.name".to_string(),
+                    ));
+                }
+                let priority = parse_priority(&req.priority)?;
+                let stages: Vec<StageSpec> = req
+                    .stages
+                    .into_iter()
+                    .map(|s| StageSpec {
+                        name: s.name,
+                        requests: s.requests,
+                        pods: s.pods,
+                        duration: s.duration,
+                        inputs: s.inputs,
+                        outputs: s.outputs,
+                        offloadable: s.offloadable,
+                    })
+                    .collect();
+                self.platform
+                    .create_workflow_run(
+                        &name,
+                        &req.user,
+                        &req.project,
+                        priority,
+                        &req.queue,
+                        stages,
+                    )
+                    .map_err(|e| ApiError::Conflict(e.to_string()))?;
+                {
+                    let state = self.obj_state_mut(ResourceKind::WorkflowRun, &name);
+                    state.finalizers = req.metadata.finalizers;
+                    state.labels = req.metadata.labels;
+                }
+                self.pump();
+                let rv = self.log.next_rv();
+                let view = self
+                    .platform
+                    .workflow_run(&name)
+                    .map(|w| self.workflow_run_view(w, rv))
+                    .ok_or_else(|| {
+                        ApiError::Invalid(format!("workflow run {name} vanished after create"))
+                    })?;
+                let now = self.platform.now();
+                let json = view.to_json();
+                self.append_event(ResourceKind::WorkflowRun, EventType::Added, &name, now, Some(json));
+                Ok(ApiObject::WorkflowRun(view))
+            }
+            ApiObject::Dataset(req) => {
+                if req.user != caller {
+                    return Err(ApiError::Forbidden(format!(
+                        "token user {caller} cannot register a dataset for {}",
+                        req.user
+                    )));
+                }
+                let name = req.metadata.name.clone();
+                if name.is_empty() {
+                    return Err(ApiError::Invalid("dataset requires metadata.name".to_string()));
+                }
+                self.platform
+                    .create_dataset(&name, &req.user, req.size_bytes, req.sites)
+                    .map_err(|e| ApiError::Conflict(e.to_string()))?;
+                {
+                    let state = self.obj_state_mut(ResourceKind::Dataset, &name);
+                    state.finalizers = req.metadata.finalizers;
+                    state.labels = req.metadata.labels;
+                }
+                self.pump();
+                let rv = self.log.next_rv();
+                let view = self
+                    .platform
+                    .dataset(&name)
+                    .map(|d| self.dataset_view(d, rv))
+                    .ok_or_else(|| {
+                        ApiError::Invalid(format!("dataset {name} vanished after create"))
+                    })?;
+                let now = self.platform.now();
+                let json = view.to_json();
+                self.append_event(ResourceKind::Dataset, EventType::Added, &name, now, Some(json));
+                Ok(ApiObject::Dataset(view))
+            }
             other => Err(ApiError::Invalid(format!(
                 "kind {} is read-only (server-projected)",
                 other.kind().as_str()
@@ -767,7 +880,11 @@ impl ApiServer {
         let kind = obj.kind();
         if !matches!(
             kind,
-            ResourceKind::Session | ResourceKind::BatchJob | ResourceKind::InferenceServer
+            ResourceKind::Session
+                | ResourceKind::BatchJob
+                | ResourceKind::InferenceServer
+                | ResourceKind::WorkflowRun
+                | ResourceKind::Dataset
         ) {
             return Err(ApiError::Invalid(format!(
                 "kind {} is read-only (server-projected)",
@@ -783,6 +900,8 @@ impl ApiServer {
                 ResourceKind::Session => self.platform.session(name).is_some(),
                 ResourceKind::BatchJob => self.platform.batch_jobs.contains_key(name),
                 ResourceKind::InferenceServer => self.platform.serving_state(name).is_some(),
+                ResourceKind::WorkflowRun => self.platform.workflow_run(name).is_some(),
+                ResourceKind::Dataset => self.platform.dataset(name).is_some(),
                 _ => false,
             };
         if !exists {
@@ -805,7 +924,11 @@ impl ApiServer {
         self.authenticate(token)?;
         if !matches!(
             kind,
-            ResourceKind::Session | ResourceKind::BatchJob | ResourceKind::InferenceServer
+            ResourceKind::Session
+                | ResourceKind::BatchJob
+                | ResourceKind::InferenceServer
+                | ResourceKind::WorkflowRun
+                | ResourceKind::Dataset
         ) {
             return Err(ApiError::Invalid(format!(
                 "kind {} is read-only (server-projected)",
@@ -838,6 +961,8 @@ impl ApiServer {
             ApiObject::Session(s) => s.conditions.clone(),
             ApiObject::BatchJob(j) => j.conditions.clone(),
             ApiObject::InferenceServer(s) => s.conditions.clone(),
+            ApiObject::WorkflowRun(w) => w.conditions.clone(),
+            ApiObject::Dataset(d) => d.conditions.clone(),
             other => {
                 return Err(ApiError::Invalid(format!(
                     "kind {} has no writable status subresource",
@@ -868,7 +993,11 @@ impl ApiServer {
         let name = obj.name().to_string();
         if !matches!(
             kind,
-            ResourceKind::Session | ResourceKind::BatchJob | ResourceKind::InferenceServer
+            ResourceKind::Session
+                | ResourceKind::BatchJob
+                | ResourceKind::InferenceServer
+                | ResourceKind::WorkflowRun
+                | ResourceKind::Dataset
         ) {
             return Err(ApiError::Invalid(format!(
                 "kind {} is read-only (server-projected)",
@@ -923,6 +1052,19 @@ impl ApiServer {
                 let state = self.obj_state_mut(kind, &name);
                 state.labels = s.metadata.labels;
                 state.finalizers = s.metadata.finalizers;
+            }
+            ApiObject::WorkflowRun(w) => {
+                // the stage DAG is immutable (admission); metadata is the
+                // mutable surface — labels overlay + finalizers
+                let state = self.obj_state_mut(kind, &name);
+                state.labels = w.metadata.labels;
+                state.finalizers = w.metadata.finalizers;
+            }
+            ApiObject::Dataset(d) => {
+                // size/sites are immutable (admission); metadata only
+                let state = self.obj_state_mut(kind, &name);
+                state.labels = d.metadata.labels;
+                state.finalizers = d.metadata.finalizers;
             }
             _ => unreachable!("writable kinds only"),
         }
@@ -1061,6 +1203,27 @@ impl ApiServer {
                     out.push(ApiObject::InferenceServer(self.inference_server_view(s, rv)));
                 }
             }
+            ResourceKind::WorkflowRun => {
+                // already name-sorted: the workflow map is a BTreeMap
+                for name in self.platform.workflow_run_names() {
+                    if pruned(&name) || self.is_deleted(kind, &name) {
+                        continue;
+                    }
+                    let Some(w) = self.platform.workflow_run(&name) else { continue };
+                    let rv = self.rv_of(kind, &name);
+                    out.push(ApiObject::WorkflowRun(self.workflow_run_view(w, rv)));
+                }
+            }
+            ResourceKind::Dataset => {
+                for name in self.platform.dataset_names() {
+                    if pruned(&name) || self.is_deleted(kind, &name) {
+                        continue;
+                    }
+                    let Some(d) = self.platform.dataset(&name) else { continue };
+                    let rv = self.rv_of(kind, &name);
+                    out.push(ApiObject::Dataset(self.dataset_view(d, rv)));
+                }
+            }
         }
         if selector.is_empty() {
             return Ok(out);
@@ -1087,7 +1250,11 @@ impl ApiServer {
             return Err(ApiError::NotFound(format!("{}/{name}", kind.as_str())));
         }
         match kind {
-            ResourceKind::Session | ResourceKind::BatchJob | ResourceKind::InferenceServer => {
+            ResourceKind::Session
+            | ResourceKind::BatchJob
+            | ResourceKind::InferenceServer
+            | ResourceKind::WorkflowRun
+            | ResourceKind::Dataset => {
                 let old = self.view_of(kind, name, self.rv_of(kind, name))?;
                 self.check_owner(&old, &caller)?;
                 self.delete_writable(kind, name)
@@ -1128,6 +1295,8 @@ impl ApiServer {
             ApiObject::Session(s) => &s.user,
             ApiObject::BatchJob(j) => &j.user,
             ApiObject::InferenceServer(s) => &s.user,
+            ApiObject::WorkflowRun(w) => &w.user,
+            ApiObject::Dataset(d) => &d.user,
             _ => return Ok(()),
         };
         if owner != caller {
@@ -1537,6 +1706,16 @@ impl ApiServer {
                 .serving_state(name)
                 .map(|s| ApiObject::InferenceServer(self.inference_server_view(s, rv)))
                 .ok_or_else(|| ApiError::NotFound(format!("InferenceServer/{name}"))),
+            ResourceKind::WorkflowRun => self
+                .platform
+                .workflow_run(name)
+                .map(|w| ApiObject::WorkflowRun(self.workflow_run_view(w, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("WorkflowRun/{name}"))),
+            ResourceKind::Dataset => self
+                .platform
+                .dataset(name)
+                .map(|d| ApiObject::Dataset(self.dataset_view(d, rv)))
+                .ok_or_else(|| ApiError::NotFound(format!("Dataset/{name}"))),
         }
     }
 
@@ -1684,6 +1863,82 @@ impl ApiServer {
         };
         let InferenceServerResource { metadata, conditions, .. } = &mut res;
         self.apply_overlay(ResourceKind::InferenceServer, metadata, Some(conditions));
+        res
+    }
+
+    fn workflow_run_view(&self, w: &WorkflowRunState, rv: u64) -> WorkflowRunResource {
+        let mut labels = BTreeMap::new();
+        labels.insert("app".to_string(), "workflow".to_string());
+        labels.insert("aiinfn/user".to_string(), w.user.clone());
+        let stages = w
+            .stages
+            .iter()
+            .map(|s| crate::api::resources::StageTemplate {
+                name: s.name.clone(),
+                requests: s.requests.clone(),
+                pods: s.pods,
+                duration: s.duration,
+                inputs: s.inputs.clone(),
+                outputs: s.outputs.clone(),
+                offloadable: s.offloadable,
+            })
+            .collect();
+        let stage_status = w
+            .stages
+            .iter()
+            .zip(&w.stage_states)
+            .map(|(s, st)| StageStatusView {
+                name: s.name.clone(),
+                phase: st.phase.as_str().to_string(),
+                site: st.site.clone(),
+                retries: st.retries,
+            })
+            .collect();
+        let mut res = WorkflowRunResource {
+            metadata: Metadata {
+                name: w.name.clone(),
+                namespace: "workflow".to_string(),
+                labels,
+                resource_version: rv,
+                ..Default::default()
+            },
+            user: w.user.clone(),
+            project: w.project.clone(),
+            priority: priority_str(w.priority).to_string(),
+            queue: w.queue.clone(),
+            stages,
+            phase: w.phase.as_str().to_string(),
+            stage_status,
+            stages_completed: w.stages_completed(),
+            bytes_staged: w.bytes_staged,
+            conditions: Vec::new(),
+        };
+        let WorkflowRunResource { metadata, conditions, .. } = &mut res;
+        self.apply_overlay(ResourceKind::WorkflowRun, metadata, Some(conditions));
+        res
+    }
+
+    fn dataset_view(&self, d: &DatasetState, rv: u64) -> DatasetResource {
+        let mut labels = BTreeMap::new();
+        labels.insert("app".to_string(), "dataset".to_string());
+        labels.insert("aiinfn/user".to_string(), d.user.clone());
+        let mut res = DatasetResource {
+            metadata: Metadata {
+                name: d.name.clone(),
+                namespace: "data".to_string(),
+                labels,
+                resource_version: rv,
+                ..Default::default()
+            },
+            user: d.user.clone(),
+            size_bytes: d.size_bytes,
+            sites: d.sites.clone(),
+            locations: d.locations.clone(),
+            phase: if d.locations.is_empty() { "Pending" } else { "Ready" }.to_string(),
+            conditions: Vec::new(),
+        };
+        let DatasetResource { metadata, conditions, .. } = &mut res;
+        self.apply_overlay(ResourceKind::Dataset, metadata, Some(conditions));
         res
     }
 

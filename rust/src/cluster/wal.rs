@@ -80,6 +80,14 @@ pub enum KueueOp {
     Requeue { name: String, at: Time },
     Finish { name: String, at: Time },
     SetTransitionCapacity { capacity: usize },
+    SubmitGang {
+        name: String,
+        queue: String,
+        user: String,
+        priority: PriorityClass,
+        members: Vec<(String, ResourceVec)>,
+        at: Time,
+    },
 }
 
 /// A log entry: a store op, a queue op, or an opaque control-plane
@@ -322,6 +330,15 @@ impl Enc for KueueOp {
                 b.push(8);
                 capacity.enc(b);
             }
+            KueueOp::SubmitGang { name, queue, user, priority, members, at } => {
+                b.push(9);
+                name.enc(b);
+                queue.enc(b);
+                user.enc(b);
+                priority.enc(b);
+                members.enc(b);
+                at.enc(b);
+            }
         }
     }
 }
@@ -349,6 +366,14 @@ impl Dec for KueueOp {
             6 => KueueOp::Requeue { name: Dec::dec(r)?, at: Dec::dec(r)? },
             7 => KueueOp::Finish { name: Dec::dec(r)?, at: Dec::dec(r)? },
             8 => KueueOp::SetTransitionCapacity { capacity: Dec::dec(r)? },
+            9 => KueueOp::SubmitGang {
+                name: Dec::dec(r)?,
+                queue: Dec::dec(r)?,
+                user: Dec::dec(r)?,
+                priority: Dec::dec(r)?,
+                members: Dec::dec(r)?,
+                at: Dec::dec(r)?,
+            },
             t => return Err(CodecError(format!("bad kueue op tag {t}"))),
         })
     }
@@ -652,6 +677,17 @@ mod tests {
             KueueOp::Requeue { name: "w".into(), at: 3.0 },
             KueueOp::Finish { name: "w".into(), at: 4.0 },
             KueueOp::SetTransitionCapacity { capacity: 128 },
+            KueueOp::SubmitGang {
+                name: "g".into(),
+                queue: "lq".into(),
+                user: "alice".into(),
+                priority: PriorityClass::Batch,
+                members: vec![
+                    ("g-0".into(), ResourceVec::cpu_millis(250)),
+                    ("g-1".into(), ResourceVec::cpu_millis(250)),
+                ],
+                at: 5.0,
+            },
         ];
         for op in ops {
             let bytes = op.to_bytes();

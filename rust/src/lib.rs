@@ -129,6 +129,35 @@
 //! with batch; `benches/inference_serving.rs` measures p50/p95/p99 and
 //! sustained QPS at the 1k-node regime (`BENCH_serving.json`).
 //!
+//! ## Federated workflows
+//!
+//! The [`platform::workflow`] engine federates the Snakemake-like DAG
+//! layer ([`workflow`]) across sites. Two writable API kinds: a `Dataset`
+//! names data with a size and the sites holding replicas (the
+//! transfer-cost input), and a `WorkflowRun` declares stages — pod
+//! templates wired into a DAG by the dataset names they consume and
+//! produce. The workflow reconciler
+//! ([`platform::reconcile::workflow`]) walks `Dag::ready` each tick and
+//! realizes every ready stage as a *gang*: Kueue admits all of a stage's
+//! pods or none ([`queue::kueue`] reserves members in order, releases
+//! partial reservations after `workflow.gang_reserve_timeout_seconds`,
+//! and staggers co-stalled gangs with ranked exponential backoff, so two
+//! gangs whose combined demand exceeds quota converge instead of
+//! deadlocking). Placement scores `local` plus every healthy federation
+//! site by missing-replica transfer time
+//! (`workflow.inter_site_bandwidth_bytes_per_sec`) plus estimated queue
+//! wait (`workflow.queue_wait_penalty_seconds`) plus
+//! WAN latency; when a remote site wins, the stage runs through InterLink
+//! with stage-in/stage-out manifests through the object store and the
+//! outputs registered as new `Dataset` replicas. Failed incarnations
+//! retry under `workflow.max_stage_retries` without re-running completed
+//! stages, and the whole engine is WAL/checkpoint-durable: a coordinator
+//! kill mid-DAG converges to a byte-identical workflow trace
+//! (`rust/tests/durability.rs`). `examples/federated_workflow.rs` runs a
+//! six-stage two-site analysis; `benches/workflow_dag.rs` measures
+//! makespan, bytes staged, and gang-admission latency
+//! (`BENCH_workflow.json`).
+//!
 //! ## Chaos + resilience
 //!
 //! Failure is the normal case for a federation spanning WLCG sites and an

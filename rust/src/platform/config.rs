@@ -102,6 +102,27 @@ pub struct PlatformConfig {
     /// Seconds between snapshots (WAL truncates at each). Config key:
     /// `durability.snapshot_interval_seconds`.
     pub durability_snapshot_interval: f64,
+    /// LocalQueue workflow stage gangs are submitted to (the admission
+    /// chain defaults `spec.queue` on WorkflowRun writes from this).
+    /// Config key: `workflow.queue`.
+    pub workflow_queue: String,
+    /// Effective inter-site bandwidth for dataset staging, in bytes per
+    /// second — the denominator of the transfer-cost term in workflow
+    /// placement. Config key: `workflow.inter_site_bandwidth_bytes_per_sec`.
+    pub workflow_bandwidth: f64,
+    /// Seconds of estimated queue wait charged to a site whose free
+    /// capacity cannot hold a stage right now (the congestion term
+    /// transfer cost competes against). Config key:
+    /// `workflow.queue_wait_penalty_seconds`.
+    pub workflow_queue_wait_penalty: f64,
+    /// Seconds a partial gang reservation may sit without growing before
+    /// Kueue's deadlock breaker releases it. Config key:
+    /// `workflow.gang_reserve_timeout_seconds`.
+    pub workflow_gang_reserve_timeout: f64,
+    /// Retry budget per stage: chaos-failed stages re-enter the DAG with a
+    /// fresh pod incarnation up to this many times. Config key:
+    /// `workflow.max_stage_retries`.
+    pub workflow_max_stage_retries: u32,
 }
 
 impl PlatformConfig {
@@ -258,6 +279,27 @@ impl PlatformConfig {
                 .at(&["durability", "snapshot_interval_seconds"])
                 .and_then(Json::as_f64)
                 .unwrap_or(900.0),
+            workflow_queue: j
+                .at(&["workflow", "queue"])
+                .and_then(Json::as_str)
+                .unwrap_or("workflow")
+                .to_string(),
+            workflow_bandwidth: j
+                .at(&["workflow", "inter_site_bandwidth_bytes_per_sec"])
+                .and_then(Json::as_f64)
+                .unwrap_or(1.25e9),
+            workflow_queue_wait_penalty: j
+                .at(&["workflow", "queue_wait_penalty_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(600.0),
+            workflow_gang_reserve_timeout: j
+                .at(&["workflow", "gang_reserve_timeout_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(60.0),
+            workflow_max_stage_retries: j
+                .at(&["workflow", "max_stage_retries"])
+                .and_then(Json::as_i64)
+                .unwrap_or(3) as u32,
         })
     }
 
@@ -389,6 +431,31 @@ mod tests {
         .unwrap();
         assert!(tuned.durability_enabled);
         assert_eq!(tuned.durability_snapshot_interval, 120.0);
+    }
+
+    #[test]
+    fn workflow_knobs_parse_with_defaults() {
+        let minimal = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(minimal.workflow_queue, "workflow");
+        assert_eq!(minimal.workflow_bandwidth, 1.25e9);
+        assert_eq!(minimal.workflow_queue_wait_penalty, 600.0);
+        assert_eq!(minimal.workflow_gang_reserve_timeout, 60.0);
+        assert_eq!(minimal.workflow_max_stage_retries, 3);
+        let tuned = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}],
+                "workflow":{"queue":"wf","inter_site_bandwidth_bytes_per_sec":1e8,
+                            "queue_wait_penalty_seconds":120,
+                            "gang_reserve_timeout_seconds":30,"max_stage_retries":1}}"#,
+        )
+        .unwrap();
+        assert_eq!(tuned.workflow_queue, "wf");
+        assert_eq!(tuned.workflow_bandwidth, 1e8);
+        assert_eq!(tuned.workflow_queue_wait_penalty, 120.0);
+        assert_eq!(tuned.workflow_gang_reserve_timeout, 30.0);
+        assert_eq!(tuned.workflow_max_stage_retries, 1);
     }
 
     #[test]

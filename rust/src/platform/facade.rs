@@ -42,6 +42,7 @@ use crate::offload::sites::paper_federation;
 use crate::offload::vk::VirtualKubelet;
 use crate::platform::config::PlatformConfig;
 use crate::platform::reconcile::Runtime;
+use crate::platform::workflow::{DatasetState, WorkflowRunState};
 use crate::queue::kueue::{ClusterQueue, Kueue, LocalQueue, PriorityClass, WorkloadState};
 use crate::serve::ServerState;
 use crate::sim::chaos::{ChaosEngine, ChaosPlan, Fault};
@@ -220,6 +221,19 @@ pub struct PlatformMetrics {
     pub serving_scale_events: u64,
     /// Replica cold starts completed (pod Running + model load).
     pub serving_cold_starts: u64,
+    /// Workflow stages that reached `Succeeded`.
+    pub workflow_stages_completed: u64,
+    /// Workflow stage incarnations lost to pod failure and rescheduled.
+    pub workflow_stage_retries: u64,
+    /// Workflow stages placed on a federation site via InterLink.
+    pub workflow_offloaded_stages: u64,
+    /// Bytes moved through the object store for workflow stage-in/out.
+    pub workflow_bytes_staged: u64,
+    /// Workflow gangs that completed all-or-nothing admission.
+    pub workflow_gangs_bound: u64,
+    /// Total seconds workflow gangs spent between submit and bind
+    /// (gang-admission latency numerator; divide by `workflow_gangs_bound`).
+    pub workflow_gang_wait_total: f64,
 }
 
 /// The assembled platform.
@@ -266,6 +280,12 @@ pub struct Platform {
     /// Serving state per `InferenceServer`, keyed by name (sorted:
     /// deterministic reconcile order).
     pub(crate) serving: BTreeMap<String, ServerState>,
+    /// Workflow-run state per `WorkflowRun`, keyed by name (sorted:
+    /// deterministic reconcile order).
+    pub(crate) workflows: BTreeMap<String, WorkflowRunState>,
+    /// Registered `Dataset`s keyed by name; stages consult and extend
+    /// their replica locations.
+    pub(crate) datasets: BTreeMap<String, DatasetState>,
     /// Accelerator units removed by GPU-degradation faults, keyed by
     /// (node, resource) — recovery restores exactly what was taken.
     degraded: HashMap<(String, String), i64>,
@@ -377,6 +397,23 @@ impl Platform {
             name: config.serving_queue.clone(),
             cluster_queue: "serving-cq".into(),
         });
+        // workflows: like serving, a zero-nominal borrowing queue in the
+        // cohort — gang reservations draw on whatever batch/interactive
+        // quota is idle, and the gang timeout keeps partial reservations
+        // from deadlocking against each other.
+        kueue.add_cluster_queue(ClusterQueue {
+            name: "workflow-cq".into(),
+            cohort: Some("ai-infn".into()),
+            nominal: ResourceVec::new(),
+            used: ResourceVec::new(),
+            can_borrow: true,
+            can_lend: true,
+        });
+        kueue.add_local_queue(LocalQueue {
+            name: config.workflow_queue.clone(),
+            cluster_queue: "workflow-cq".into(),
+        });
+        kueue.gang_reserve_timeout = config.workflow_gang_reserve_timeout;
 
         // registry: the paper's 78 users / 20 projects
         let mut registry = Registry::new();
@@ -427,6 +464,8 @@ impl Platform {
             traffic_drained_to: 0.0,
             serving_arrivals: None,
             serving: BTreeMap::new(),
+            workflows: BTreeMap::new(),
+            datasets: BTreeMap::new(),
             degraded: HashMap::new(),
             fairshare: FairShare::new(config_fairshare_half_life),
             runtime: Some(Runtime::standard()),
@@ -504,6 +543,8 @@ impl Platform {
         self.ids.counter().enc(&mut b);
         self.deletions.enc(&mut b);
         self.runtime.as_ref().map(|r| r.save_state()).unwrap_or_default().enc(&mut b);
+        self.workflows.enc(&mut b);
+        self.datasets.enc(&mut b);
         b
     }
 
@@ -523,6 +564,8 @@ impl Platform {
         let counter = u64::dec(&mut r)?;
         let deletions: VecDeque<(ResourceKind, String)> = VecDeque::dec(&mut r)?;
         let runtime_bytes = Vec::<u8>::dec(&mut r)?;
+        let workflows: BTreeMap<String, WorkflowRunState> = BTreeMap::dec(&mut r)?;
+        let datasets: BTreeMap<String, DatasetState> = BTreeMap::dec(&mut r)?;
         self.batch_jobs = batch_jobs;
         self.spawner = spawner;
         self.health = health;
@@ -530,6 +573,8 @@ impl Platform {
         self.fairshare = fairshare;
         self.ids.set_counter(counter);
         self.deletions = deletions;
+        self.workflows = workflows;
+        self.datasets = datasets;
         let mut runtime = Runtime::standard();
         if !runtime_bytes.is_empty() {
             runtime.load_state(&runtime_bytes)?;

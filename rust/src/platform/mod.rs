@@ -8,6 +8,7 @@ pub mod config;
 pub mod facade;
 pub mod reconcile;
 pub mod serving;
+pub mod workflow;
 
 pub use config::{default_config_path, PlatformConfig};
 pub use facade::{BatchSubmission, Platform, PlatformMetrics, RestartPolicy};

@@ -42,6 +42,7 @@
 //! | monitoring | [`monitoring`] | scrape timer |
 //! | gpu partition | [`gpu`] | periodic queued-accelerator-demand scan |
 //! | serving | [`serve`] | drained traffic arrivals + autoscale timer + `InferenceServer` deletions |
+//! | workflow | [`workflow`] | per-tick DAG walk + `WorkflowRun`/`Dataset` deletions |
 
 pub mod gc;
 pub mod gpu;
@@ -53,6 +54,7 @@ pub mod queueing;
 pub mod scheduling;
 pub mod serve;
 pub mod session;
+pub mod workflow;
 
 use std::collections::{HashSet, VecDeque};
 
@@ -149,6 +151,7 @@ impl Runtime {
             Box::new(monitoring::MonitoringController::new()),
             Box::new(gpu::GpuPartitionController::new()),
             Box::new(serve::ServeController::new()),
+            Box::new(workflow::WorkflowController::new()),
         ];
         let n = controllers.len();
         let mut rt = Runtime {

@@ -1,0 +1,66 @@
+//! The workflow controller: walks every `WorkflowRun`'s stage DAG once
+//! per tick.
+//!
+//! A `Sync`-driven loop like serving: each dispatch steps every run
+//! through [`Platform::step_workflows`] — in-flight stages are polled
+//! against Kueue gang state and pod truth (bound gangs launch their pod
+//! incarnations, finished pods complete or fail the stage), then
+//! `Dag::ready` over the registered-dataset set submits whatever became
+//! runnable as new gangs. Runs step in name order over a sorted map, so a
+//! fixed seed and tick cadence reproduce the identical workflow
+//! transition log (golden-trace determinism).
+//!
+//! The controller also subscribes to `Deletion(WorkflowRun | Dataset,
+//! name)` intents from the API server's delete verb.
+//!
+//! [`Platform::step_workflows`]: crate::platform::facade::Platform
+
+use crate::api::resources::ResourceKind;
+use crate::platform::reconcile::{Ctx, Key, Reconciler, Requeue};
+
+pub struct WorkflowController;
+
+impl WorkflowController {
+    pub fn new() -> Self {
+        WorkflowController
+    }
+}
+
+impl Default for WorkflowController {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Reconciler for WorkflowController {
+    fn name(&self) -> &'static str {
+        "workflow"
+    }
+
+    fn interested(&self, key: &Key) -> bool {
+        matches!(
+            key,
+            Key::Deletion(ResourceKind::WorkflowRun, _) | Key::Deletion(ResourceKind::Dataset, _)
+        )
+    }
+
+    fn reconcile(&mut self, ctx: &mut Ctx<'_>, key: &Key) -> anyhow::Result<Requeue> {
+        let p = &mut *ctx.platform;
+        let now = ctx.now;
+        match key {
+            Key::Deletion(ResourceKind::WorkflowRun, name) => {
+                p.delete_workflow_run(name).ok();
+                Ok(Requeue::Done)
+            }
+            Key::Deletion(ResourceKind::Dataset, name) => {
+                p.delete_dataset(name).ok();
+                Ok(Requeue::Done)
+            }
+            Key::Sync => {
+                p.step_workflows(now);
+                Ok(Requeue::After(0.0))
+            }
+            _ => Ok(Requeue::Done),
+        }
+    }
+}

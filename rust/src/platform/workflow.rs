@@ -1,0 +1,972 @@
+//! Platform-side federated workflow operations: the verbs and per-tick
+//! plumbing that realize [`WorkflowRun`]s as gang-scheduled stages placed
+//! across the local cluster and the InterLink federation.
+//!
+//! Split out of the facade like [`crate::platform::serving`]: everything
+//! here is `impl Platform`, called by the API server's verbs
+//! (create/delete) and by the workflow reconciler
+//! ([`crate::platform::reconcile::workflow`]) once per tick. The flow per
+//! run:
+//!
+//! 1. **poll in-flight stages** — a gang that Kueue bound gets its pod
+//!    incarnations (stage-in first: inputs not replicated at the chosen
+//!    site move through the object store and stretch the pod runtime by
+//!    `bytes / workflow.inter_site_bandwidth_bytes_per_sec`); pods that
+//!    all reached `Succeeded` finish their gang members, register outputs
+//!    as [`Dataset`]s at the execution site, and stage offloaded outputs
+//!    back; any pod that died (chaos node kill, eviction) fails the whole
+//!    stage, which retries as a *fresh incarnation* under
+//!    `workflow.max_stage_retries` — completed independent stages are
+//!    never re-run.
+//! 2. **submit ready stages** — [`Dag::ready`] over the stage graph with
+//!    `available` = registered datasets and `done` = succeeded stages;
+//!    each ready stage is placed by
+//!    [`place_stage`](Platform::place_stage) (transfer cost + estimated
+//!    queue wait) and submitted as an all-or-nothing gang through
+//!    [`Kueue::submit_gang`](crate::queue::kueue::Kueue::submit_gang).
+//!
+//! Placement scores `local` plus every healthy federation site:
+//! `score = missing_input_bytes / bandwidth + queue_wait + wan_latency`,
+//! where `queue_wait` is `0` when the gang's total request fits the
+//! candidate's free capacity and `workflow.queue_wait_penalty_seconds`
+//! otherwise. A remote winner runs its pods pinned to the site's virtual
+//! node (hostname selector + InterLink toleration), so the existing
+//! placement controller forwards them through the Virtual Kubelet.
+//!
+//! [`WorkflowRun`]: crate::api::resources::WorkflowRunResource
+//! [`Dataset`]: crate::api::resources::DatasetResource
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::cluster::pod::{Payload, PodPhase, PodSpec};
+use crate::cluster::resources::ResourceVec;
+use crate::platform::facade::Platform;
+use crate::queue::kueue::{GangState, PriorityClass};
+use crate::sim::clock::Time;
+use crate::util::codec::{CodecError, Dec, Enc, Reader};
+use crate::workflow::dag::{Dag, JobNode};
+
+/// The pseudo-site naming the coordinator's own cluster in dataset
+/// locations and stage placements.
+pub const LOCAL_SITE: &str = "local";
+
+// ------------------------------------------------------------------ state
+
+/// One stage of a workflow run: a gang of identical pods plus its data
+/// dependencies (the platform-side mirror of the API's `StageTemplate`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    pub name: String,
+    /// Per-pod resource request; the gang reserves `pods ×` this.
+    pub requests: ResourceVec,
+    /// Gang size: all-or-nothing admission over this many workloads.
+    pub pods: u32,
+    /// Active run seconds per pod (stage-in time is added on top).
+    pub duration: f64,
+    /// Dataset names consumed (dependency edges of the DAG).
+    pub inputs: Vec<String>,
+    /// `(dataset name, size in bytes)` registered when the stage succeeds.
+    pub outputs: Vec<(String, u64)>,
+    /// May this stage run on a federation site via InterLink?
+    pub offloadable: bool,
+}
+
+/// Stage lifecycle within a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StagePhase {
+    /// Dependencies unsatisfied, or satisfied but not yet submitted.
+    Waiting,
+    /// Gang submitted; waiting for Kueue's all-or-nothing admission.
+    Admitting,
+    /// Gang bound; pod incarnations live on the chosen site.
+    Running,
+    Succeeded,
+    Failed,
+}
+
+impl StagePhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StagePhase::Waiting => "Waiting",
+            StagePhase::Admitting => "Admitting",
+            StagePhase::Running => "Running",
+            StagePhase::Succeeded => "Succeeded",
+            StagePhase::Failed => "Failed",
+        }
+    }
+}
+
+/// Mutable per-stage bookkeeping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageState {
+    pub phase: StagePhase,
+    /// Execution site chosen by placement (`"local"` or a federation
+    /// site); empty until placed.
+    pub site: String,
+    /// Failed incarnations so far (bounded by `workflow.max_stage_retries`).
+    pub retries: u32,
+    /// Incarnation counter: names fresh gangs/pods after a retry.
+    pub incarnation: u32,
+    /// Current gang name (empty before the first submission).
+    pub gang: String,
+    /// Pod names of the current incarnation.
+    pub pods: Vec<String>,
+}
+
+impl Default for StageState {
+    fn default() -> Self {
+        StageState {
+            phase: StagePhase::Waiting,
+            site: String::new(),
+            retries: 0,
+            incarnation: 0,
+            gang: String::new(),
+            pods: Vec::new(),
+        }
+    }
+}
+
+/// Run lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPhase {
+    /// Created; no stage submitted yet.
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+}
+
+impl RunPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunPhase::Pending => "Pending",
+            RunPhase::Running => "Running",
+            RunPhase::Succeeded => "Succeeded",
+            RunPhase::Failed => "Failed",
+        }
+    }
+}
+
+/// One submitted workflow run: the immutable stage DAG plus per-stage
+/// progress. The transition log is part of the golden trace (and of the
+/// durability byte-identity check), so it is persisted with the state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowRunState {
+    pub name: String,
+    pub user: String,
+    pub project: String,
+    pub priority: PriorityClass,
+    pub queue: String,
+    pub stages: Vec<StageSpec>,
+    pub stage_states: Vec<StageState>,
+    pub phase: RunPhase,
+    /// Bytes moved through the object store for this run (stage-in +
+    /// stage-out).
+    pub bytes_staged: u64,
+    pub created_at: Time,
+    log: Vec<(Time, String)>,
+}
+
+impl WorkflowRunState {
+    pub fn stages_completed(&self) -> u32 {
+        self.stage_states.iter().filter(|s| s.phase == StagePhase::Succeeded).count() as u32
+    }
+
+    fn push_log(&mut self, at: Time, line: String) {
+        self.log.push((at, line));
+    }
+
+    /// The run's transition log, rendered one line per entry.
+    pub fn trace(&self) -> String {
+        let mut out = String::new();
+        for (at, line) in &self.log {
+            out.push_str(&format!("[{:>10.1}] wf/{}: {}\n", at, self.name, line));
+        }
+        out
+    }
+}
+
+/// One registered dataset: named bytes with site placement. `sites` is
+/// the declared home placement (spec); `locations` is where replicas
+/// currently exist (status) — it grows as stages cache inputs and
+/// register outputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetState {
+    pub name: String,
+    pub user: String,
+    pub size_bytes: u64,
+    pub sites: Vec<String>,
+    pub locations: Vec<String>,
+}
+
+// ------------------------------------------------------------------ verbs
+
+/// Where a stage should run, per the transfer-cost + queue-wait score.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct StagePlacement {
+    /// `LOCAL_SITE` or a federation site name.
+    pub site: String,
+    /// The site's virtual-node name (empty for local).
+    pub node: String,
+    pub score: f64,
+}
+
+impl Platform {
+    /// Register a dataset. Fails on a duplicate name; `sites` seeds the
+    /// replica locations (use [`LOCAL_SITE`] for coordinator storage).
+    pub fn create_dataset(
+        &mut self,
+        name: &str,
+        user: &str,
+        size_bytes: u64,
+        sites: Vec<String>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.datasets.contains_key(name), "dataset {name} already exists");
+        anyhow::ensure!(size_bytes > 0, "dataset {name} must have a non-zero size");
+        anyhow::ensure!(!sites.is_empty(), "dataset {name} needs at least one site");
+        self.datasets.insert(
+            name.to_string(),
+            DatasetState {
+                name: name.to_string(),
+                user: user.to_string(),
+                size_bytes,
+                sites: sites.clone(),
+                locations: sites,
+            },
+        );
+        self.checkpoint_control();
+        Ok(())
+    }
+
+    /// Drop a dataset record (replicas at remote sites are forgotten with
+    /// it; in-flight stages that already staged it are unaffected).
+    pub fn delete_dataset(&mut self, name: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(self.datasets.remove(name).is_some(), "no dataset {name}");
+        self.checkpoint_control();
+        Ok(())
+    }
+
+    /// Register a workflow run. The stage graph was already validated as a
+    /// DAG by admission; here every *external* input (one no stage
+    /// produces) must name a registered dataset, so the run can actually
+    /// start.
+    pub fn create_workflow_run(
+        &mut self,
+        name: &str,
+        user: &str,
+        project: &str,
+        priority: PriorityClass,
+        queue: &str,
+        stages: Vec<StageSpec>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.workflows.contains_key(name), "workflow run {name} already exists");
+        anyhow::ensure!(!stages.is_empty(), "workflow run {name} has no stages");
+        let produced: HashSet<&str> =
+            stages.iter().flat_map(|s| s.outputs.iter().map(|(n, _)| n.as_str())).collect();
+        for s in &stages {
+            for input in &s.inputs {
+                if !produced.contains(input.as_str()) {
+                    anyhow::ensure!(
+                        self.datasets.contains_key(input),
+                        "workflow run {name}: input dataset {input} is not registered"
+                    );
+                }
+            }
+        }
+        let now = self.engine.now();
+        // the run's stage-in/stage-out manifests live in a bucket of its
+        // own — the storage half of the InterLink data plane
+        self.objects.create_bucket(&format!("wf-{name}"), user).ok();
+        let n = stages.len();
+        let mut run = WorkflowRunState {
+            name: name.to_string(),
+            user: user.to_string(),
+            project: project.to_string(),
+            priority,
+            queue: queue.to_string(),
+            stages,
+            stage_states: vec![StageState::default(); n],
+            phase: RunPhase::Pending,
+            bytes_staged: 0,
+            created_at: now,
+            log: Vec::new(),
+        };
+        run.push_log(now, format!("created stages={n} queue={queue}"));
+        self.workflows.insert(name.to_string(), run);
+        self.checkpoint_control();
+        Ok(())
+    }
+
+    /// Tear a workflow run down: cancel in-flight stages (pods finished or
+    /// cancelled, gang quota released) and drop the record.
+    pub fn delete_workflow_run(&mut self, name: &str) -> anyhow::Result<()> {
+        let now = self.engine.now();
+        let mut run = self
+            .workflows
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("no workflow run {name}"))?;
+        for idx in 0..run.stages.len() {
+            self.teardown_stage(&mut run, idx, now, "run deleted");
+        }
+        self.checkpoint_control();
+        Ok(())
+    }
+
+    // -------------------------------------------------------- per-tick op
+
+    /// One workflow pass: step every run in name order (deterministic
+    /// reconcile order over the sorted map). Called by the workflow
+    /// reconciler each tick.
+    pub(crate) fn step_workflows(&mut self, now: Time) {
+        let names: Vec<String> = self.workflows.keys().cloned().collect();
+        for name in names {
+            self.step_workflow(&name, now);
+        }
+    }
+
+    fn step_workflow(&mut self, name: &str, now: Time) {
+        let Some(mut run) = self.workflows.remove(name) else { return };
+        if matches!(run.phase, RunPhase::Succeeded | RunPhase::Failed) {
+            self.workflows.insert(name.to_string(), run);
+            return;
+        }
+        // 1. poll in-flight stages against Kueue/store truth
+        for idx in 0..run.stages.len() {
+            if matches!(run.phase, RunPhase::Failed) {
+                break;
+            }
+            match run.stage_states[idx].phase {
+                StagePhase::Admitting => self.poll_admitting(&mut run, idx, now),
+                StagePhase::Running => self.poll_running(&mut run, idx, now),
+                _ => {}
+            }
+        }
+        // 2. submit whatever Dag::ready says can start now. `available`
+        // is the registered-dataset set: outputs of succeeded stages were
+        // registered in step 1, so dependents light up in DAG order, and a
+        // failed-and-retrying stage reappears here because its inputs are
+        // still available while it is not `done`.
+        if !matches!(run.phase, RunPhase::Succeeded | RunPhase::Failed) {
+            let external: HashSet<String> =
+                run.stages.iter().flat_map(|s| s.inputs.iter().cloned()).collect();
+            let jobs: Vec<JobNode> = run
+                .stages
+                .iter()
+                .map(|s| JobNode {
+                    id: s.name.clone(),
+                    rule: s.name.clone(),
+                    inputs: s.inputs.clone(),
+                    outputs: s.outputs.iter().map(|(n, _)| n.clone()).collect(),
+                    resources: s.requests.clone(),
+                    duration: s.duration,
+                    wildcards: BTreeMap::new(),
+                })
+                .collect();
+            if let Ok(dag) = Dag::from_jobs(jobs, &external) {
+                let available: HashSet<String> = self
+                    .datasets
+                    .iter()
+                    .filter(|(_, d)| !d.locations.is_empty())
+                    .map(|(n, _)| n.clone())
+                    .collect();
+                let done: HashSet<usize> = run
+                    .stage_states
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.phase == StagePhase::Succeeded)
+                    .map(|(i, _)| i)
+                    .collect();
+                for idx in dag.ready(&available, &done) {
+                    if run.stage_states[idx].phase == StagePhase::Waiting {
+                        self.submit_stage(&mut run, idx, now);
+                    }
+                }
+            }
+        }
+        self.workflows.insert(name.to_string(), run);
+    }
+
+    /// Score `local` plus every healthy federation site for a stage:
+    /// transfer cost of the inputs missing at the candidate, plus a queue
+    /// wait penalty when the gang's total request does not fit the
+    /// candidate's free capacity, plus the WAN latency for remote sites
+    /// (which also breaks exact ties in favor of local).
+    pub(crate) fn place_stage(&self, stage: &StageSpec) -> StagePlacement {
+        let bw = self.config.workflow_bandwidth.max(1.0);
+        let penalty = self.config.workflow_queue_wait_penalty;
+        let total = stage.requests.scaled(stage.pods as i64);
+        let missing_at = |site: &str| -> u64 {
+            stage
+                .inputs
+                .iter()
+                .filter_map(|i| self.datasets.get(i))
+                .filter(|d| !d.locations.iter().any(|l| l == site))
+                .map(|d| d.size_bytes)
+                .sum()
+        };
+        let st = self.store.borrow();
+        let mut local_free = ResourceVec::new();
+        for n in st.nodes().filter(|n| !n.virtual_node) {
+            if let Some(f) = st.free_on(&n.name) {
+                local_free.add(f);
+            }
+        }
+        let local_missing = missing_at(LOCAL_SITE);
+        let local_wait = if total.fits_in(&local_free) { 0.0 } else { penalty };
+        let mut best = StagePlacement {
+            site: LOCAL_SITE.to_string(),
+            node: String::new(),
+            score: local_missing as f64 / bw + local_wait,
+        };
+        if stage.offloadable {
+            for vk in &self.vks {
+                if !self.health.allows(&vk.site) {
+                    continue;
+                }
+                let free = st.free_on(&vk.node_name).cloned().unwrap_or_default();
+                let wait = if total.fits_in(&free) { 0.0 } else { penalty };
+                let score = missing_at(&vk.site) as f64 / bw + wait + vk.wan_latency;
+                if score < best.score {
+                    best = StagePlacement {
+                        site: vk.site.clone(),
+                        node: vk.node_name.clone(),
+                        score,
+                    };
+                }
+            }
+        }
+        best
+    }
+
+    /// Place a ready stage and submit its gang to Kueue.
+    fn submit_stage(&mut self, run: &mut WorkflowRunState, idx: usize, now: Time) {
+        let stage = run.stages[idx].clone();
+        let placement = self.place_stage(&stage);
+        let incarnation = run.stage_states[idx].incarnation + 1;
+        let gang = format!("{}-{}-i{incarnation}", run.name, stage.name);
+        let members: Vec<(String, ResourceVec)> =
+            (0..stage.pods).map(|k| (format!("{gang}-p{k}"), stage.requests.clone())).collect();
+        match self.kueue.submit_gang(&gang, &run.queue, &run.user, run.priority, members, now) {
+            Ok(()) => {
+                {
+                    let st = &mut run.stage_states[idx];
+                    st.incarnation = incarnation;
+                    st.site = placement.site.clone();
+                    st.gang = gang.clone();
+                    st.pods.clear();
+                    st.phase = StagePhase::Admitting;
+                }
+                if matches!(run.phase, RunPhase::Pending) {
+                    run.phase = RunPhase::Running;
+                }
+                run.push_log(
+                    now,
+                    format!(
+                        "stage {} gang {gang} submitted pods={} site={} score={:.1}s",
+                        stage.name, stage.pods, placement.site, placement.score
+                    ),
+                );
+            }
+            Err(e) => {
+                run.push_log(now, format!("stage {} submit failed: {e}", stage.name));
+            }
+        }
+    }
+
+    /// A stage whose gang Kueue just bound gets its pod incarnations:
+    /// stage-in first, then one pod per gang member, pinned to the chosen
+    /// site's virtual node when remote.
+    fn poll_admitting(&mut self, run: &mut WorkflowRunState, idx: usize, now: Time) {
+        let gang = run.stage_states[idx].gang.clone();
+        let (state, created_at, members) = match self.kueue.gang(&gang) {
+            Some(g) => (g.state.clone(), g.created_at, g.members.clone()),
+            None => return,
+        };
+        if state != GangState::Bound {
+            return;
+        }
+        self.metrics.workflow_gangs_bound += 1;
+        self.metrics.workflow_gang_wait_total += now - created_at;
+        let stage = run.stages[idx].clone();
+        let site = run.stage_states[idx].site.clone();
+        let staged = self.stage_in(run, idx, &site, now);
+        let stage_in_secs = staged as f64 / self.config.workflow_bandwidth.max(1.0);
+        let remote = site != LOCAL_SITE;
+        let node = if remote {
+            self.vks.iter().find(|v| v.site == site).map(|v| v.node_name.clone()).unwrap_or_default()
+        } else {
+            String::new()
+        };
+        let mut pods = Vec::with_capacity(members.len());
+        for wl in &members {
+            let mut spec = PodSpec::new(
+                wl.clone(),
+                stage.requests.clone(),
+                Payload::Sleep { duration: stage.duration + stage_in_secs },
+            )
+            .with_label("app", "workflow")
+            .with_label("aiinfn/workflowrun", &run.name)
+            .with_label("aiinfn/stage", &stage.name)
+            .with_label("aiinfn/workload", wl)
+            .with_owner(&run.user, &run.project)
+            .with_priority(run.priority.value())
+            .in_namespace("workflow");
+            if remote {
+                spec = spec
+                    .with_selector("kubernetes.io/hostname", &node)
+                    .with_toleration("virtual-node.interlink/no-schedule");
+            }
+            self.store.borrow_mut().create_pod(spec, now);
+            pods.push(wl.clone());
+        }
+        if remote {
+            self.metrics.workflow_offloaded_stages += 1;
+        }
+        run.stage_states[idx].pods = pods;
+        run.stage_states[idx].phase = StagePhase::Running;
+        run.push_log(
+            now,
+            format!(
+                "stage {} running site={site} pods={} staged_in={staged}B",
+                stage.name,
+                members.len()
+            ),
+        );
+    }
+
+    /// Pull the stage's inputs that are not yet replicated at the
+    /// execution site through the object store; returns the bytes moved.
+    fn stage_in(&mut self, run: &mut WorkflowRunState, idx: usize, site: &str, now: Time) -> u64 {
+        let stage_name = run.stages[idx].name.clone();
+        let inputs = run.stages[idx].inputs.clone();
+        let bucket = format!("wf-{}", run.name);
+        let mut staged = 0u64;
+        for input in inputs {
+            let Some(d) = self.datasets.get_mut(&input) else { continue };
+            if d.locations.iter().any(|l| l == site) {
+                continue;
+            }
+            staged += d.size_bytes;
+            d.locations.push(site.to_string());
+            let manifest =
+                format!("{{\"dataset\":\"{input}\",\"bytes\":{},\"to\":\"{site}\"}}", d.size_bytes);
+            self.objects
+                .put(&bucket, &run.user, &format!("stage-in/{stage_name}/{input}"), manifest.as_bytes())
+                .ok();
+        }
+        if staged > 0 {
+            // data leaves the store toward the compute site
+            self.objects.account_transfer(0, staged);
+            run.bytes_staged += staged;
+            self.metrics.workflow_bytes_staged += staged;
+            run.push_log(now, format!("stage {stage_name} staged in {staged}B to {site}"));
+        }
+        staged
+    }
+
+    /// Walk a running stage's pods: all `Succeeded` completes the stage,
+    /// any dead pod (chaos eviction, node kill, remote failure) fails the
+    /// whole gang and schedules a fresh incarnation under the retry budget.
+    fn poll_running(&mut self, run: &mut WorkflowRunState, idx: usize, now: Time) {
+        let pods = run.stage_states[idx].pods.clone();
+        let mut all_done = !pods.is_empty();
+        let mut failed = false;
+        {
+            let st = self.store.borrow();
+            for p in &pods {
+                match st.pod(p).map(|x| x.status.phase) {
+                    Some(PodPhase::Succeeded) => {}
+                    Some(PodPhase::Failed) | Some(PodPhase::Evicted) | None => failed = true,
+                    _ => all_done = false,
+                }
+            }
+        }
+        if failed {
+            self.fail_stage(run, idx, now);
+        } else if all_done {
+            self.complete_stage(run, idx, now);
+        }
+    }
+
+    /// Finish a succeeded stage: release the gang's quota, register its
+    /// outputs as datasets at the execution site, and stage offloaded
+    /// outputs back through the object store.
+    fn complete_stage(&mut self, run: &mut WorkflowRunState, idx: usize, now: Time) {
+        let gang = run.stage_states[idx].gang.clone();
+        let members = self.kueue.gang(&gang).map(|g| g.members.clone()).unwrap_or_default();
+        for m in &members {
+            self.kueue.finish(m, now).ok();
+        }
+        let stage = run.stages[idx].clone();
+        let site = run.stage_states[idx].site.clone();
+        for (out, size) in &stage.outputs {
+            let d = self.datasets.entry(out.clone()).or_insert_with(|| DatasetState {
+                name: out.clone(),
+                user: run.user.clone(),
+                size_bytes: *size,
+                sites: vec![site.clone()],
+                locations: Vec::new(),
+            });
+            if !d.locations.iter().any(|l| l == &site) {
+                d.locations.push(site.clone());
+            }
+        }
+        if site != LOCAL_SITE {
+            // stage-out: ship outputs back so downstream local stages and
+            // the user see them without paying the transfer again
+            let bucket = format!("wf-{}", run.name);
+            let mut shipped = 0u64;
+            for (out, size) in &stage.outputs {
+                shipped += size;
+                if let Some(d) = self.datasets.get_mut(out) {
+                    if !d.locations.iter().any(|l| l == LOCAL_SITE) {
+                        d.locations.push(LOCAL_SITE.to_string());
+                    }
+                }
+                let manifest = format!("{{\"dataset\":\"{out}\",\"bytes\":{size},\"from\":\"{site}\"}}");
+                self.objects
+                    .put(&bucket, &run.user, &format!("stage-out/{}/{out}", stage.name), manifest.as_bytes())
+                    .ok();
+            }
+            if shipped > 0 {
+                // data arrives back into the store from the remote site
+                self.objects.account_transfer(shipped, 0);
+                run.bytes_staged += shipped;
+                self.metrics.workflow_bytes_staged += shipped;
+            }
+        }
+        run.stage_states[idx].phase = StagePhase::Succeeded;
+        self.metrics.workflow_stages_completed += 1;
+        run.push_log(now, format!("stage {} succeeded site={site}", stage.name));
+        if run.stage_states.iter().all(|s| s.phase == StagePhase::Succeeded) {
+            run.phase = RunPhase::Succeeded;
+            run.push_log(now, format!("run succeeded stages={}", run.stages.len()));
+        }
+    }
+
+    /// A pod of the stage died: cancel the survivors, release the gang,
+    /// and either schedule a fresh incarnation (back to `Waiting` — the
+    /// next pass resubmits it, completed independent stages untouched) or
+    /// fail the run once the retry budget is spent.
+    fn fail_stage(&mut self, run: &mut WorkflowRunState, idx: usize, now: Time) {
+        self.cancel_stage_pods(run, idx, now, "stage failed");
+        let gang = run.stage_states[idx].gang.clone();
+        let members = self.kueue.gang(&gang).map(|g| g.members.clone()).unwrap_or_default();
+        for m in &members {
+            self.kueue.finish(m, now).ok();
+        }
+        let stage_name = run.stages[idx].name.clone();
+        let exhausted = {
+            let st = &mut run.stage_states[idx];
+            st.pods.clear();
+            st.retries += 1;
+            st.retries > self.config.workflow_max_stage_retries
+        };
+        if exhausted {
+            let retries = run.stage_states[idx].retries - 1;
+            run.stage_states[idx].phase = StagePhase::Failed;
+            run.phase = RunPhase::Failed;
+            self.metrics.terminal_failures += 1;
+            run.push_log(now, format!("stage {stage_name} failed terminally after {retries} retries"));
+            for j in 0..run.stages.len() {
+                if j != idx {
+                    self.teardown_stage(run, j, now, "run failed");
+                }
+            }
+        } else {
+            let retry = run.stage_states[idx].retries;
+            run.stage_states[idx].phase = StagePhase::Waiting;
+            run.stage_states[idx].site.clear();
+            self.metrics.workflow_stage_retries += 1;
+            run.push_log(now, format!("stage {stage_name} failed; retry {retry} scheduled"));
+        }
+    }
+
+    /// Cancel/finish every live pod of a stage's current incarnation
+    /// (remote incarnations are also deleted at their Virtual Kubelet).
+    fn cancel_stage_pods(&mut self, run: &mut WorkflowRunState, idx: usize, now: Time, why: &str) {
+        let pods = run.stage_states[idx].pods.clone();
+        for p in &pods {
+            let (phase, node) = {
+                let st = self.store.borrow();
+                match st.pod(p) {
+                    Some(x) => (Some(x.status.phase), x.status.node.clone()),
+                    None => (None, None),
+                }
+            };
+            match phase {
+                Some(PodPhase::Pending) => {
+                    self.store.borrow_mut().cancel_pending(p, now, why).ok();
+                }
+                Some(PodPhase::Scheduled) | Some(PodPhase::Running) => {
+                    self.store.borrow_mut().evict_pod(p, now, false, why).ok();
+                    if let Some(n) = node {
+                        if let Some(vi) = self.vk_index.get(&n).copied() {
+                            self.vks[vi].delete_pod(p, now).ok();
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Abort an in-flight stage without consuming its retry budget (run
+    /// deletion / terminal run failure).
+    fn teardown_stage(&mut self, run: &mut WorkflowRunState, idx: usize, now: Time, why: &str) {
+        if !matches!(run.stage_states[idx].phase, StagePhase::Admitting | StagePhase::Running) {
+            return;
+        }
+        self.cancel_stage_pods(run, idx, now, why);
+        let gang = run.stage_states[idx].gang.clone();
+        let members = self.kueue.gang(&gang).map(|g| g.members.clone()).unwrap_or_default();
+        for m in &members {
+            self.kueue.finish(m, now).ok();
+        }
+        run.stage_states[idx].pods.clear();
+        run.stage_states[idx].phase = StagePhase::Failed;
+        run.push_log(now, format!("stage {} aborted ({why})", run.stages[idx].name));
+    }
+
+    // --------------------------------------------------------- accessors
+
+    /// Registered workflow runs, in name order.
+    pub fn workflow_run_names(&self) -> Vec<String> {
+        self.workflows.keys().cloned().collect()
+    }
+
+    /// Read-only state for one workflow run.
+    pub fn workflow_run(&self, name: &str) -> Option<&WorkflowRunState> {
+        self.workflows.get(name)
+    }
+
+    /// Registered datasets, in name order.
+    pub fn dataset_names(&self) -> Vec<String> {
+        self.datasets.keys().cloned().collect()
+    }
+
+    /// Read-only state for one dataset.
+    pub fn dataset(&self, name: &str) -> Option<&DatasetState> {
+        self.datasets.get(name)
+    }
+
+    /// Every run's transition log, concatenated in name order (the
+    /// workflow contribution to golden traces).
+    pub fn workflow_trace(&self) -> String {
+        let mut out = String::new();
+        for run in self.workflows.values() {
+            out.push_str(&run.trace());
+        }
+        out
+    }
+}
+
+// --------------------------------------------------------------- codecs
+
+impl Enc for StageSpec {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.requests.enc(b);
+        self.pods.enc(b);
+        self.duration.enc(b);
+        self.inputs.enc(b);
+        self.outputs.enc(b);
+        self.offloadable.enc(b);
+    }
+}
+
+impl Dec for StageSpec {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(StageSpec {
+            name: Dec::dec(r)?,
+            requests: Dec::dec(r)?,
+            pods: Dec::dec(r)?,
+            duration: Dec::dec(r)?,
+            inputs: Dec::dec(r)?,
+            outputs: Dec::dec(r)?,
+            offloadable: Dec::dec(r)?,
+        })
+    }
+}
+
+impl Enc for StagePhase {
+    fn enc(&self, b: &mut Vec<u8>) {
+        let tag: u8 = match self {
+            StagePhase::Waiting => 0,
+            StagePhase::Admitting => 1,
+            StagePhase::Running => 2,
+            StagePhase::Succeeded => 3,
+            StagePhase::Failed => 4,
+        };
+        tag.enc(b);
+    }
+}
+
+impl Dec for StagePhase {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => StagePhase::Waiting,
+            1 => StagePhase::Admitting,
+            2 => StagePhase::Running,
+            3 => StagePhase::Succeeded,
+            4 => StagePhase::Failed,
+            t => return Err(CodecError(format!("bad StagePhase tag {t}"))),
+        })
+    }
+}
+
+impl Enc for StageState {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.phase.enc(b);
+        self.site.enc(b);
+        self.retries.enc(b);
+        self.incarnation.enc(b);
+        self.gang.enc(b);
+        self.pods.enc(b);
+    }
+}
+
+impl Dec for StageState {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(StageState {
+            phase: Dec::dec(r)?,
+            site: Dec::dec(r)?,
+            retries: Dec::dec(r)?,
+            incarnation: Dec::dec(r)?,
+            gang: Dec::dec(r)?,
+            pods: Dec::dec(r)?,
+        })
+    }
+}
+
+impl Enc for RunPhase {
+    fn enc(&self, b: &mut Vec<u8>) {
+        let tag: u8 = match self {
+            RunPhase::Pending => 0,
+            RunPhase::Running => 1,
+            RunPhase::Succeeded => 2,
+            RunPhase::Failed => 3,
+        };
+        tag.enc(b);
+    }
+}
+
+impl Dec for RunPhase {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => RunPhase::Pending,
+            1 => RunPhase::Running,
+            2 => RunPhase::Succeeded,
+            3 => RunPhase::Failed,
+            t => return Err(CodecError(format!("bad RunPhase tag {t}"))),
+        })
+    }
+}
+
+impl Enc for WorkflowRunState {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.user.enc(b);
+        self.project.enc(b);
+        self.priority.enc(b);
+        self.queue.enc(b);
+        self.stages.enc(b);
+        self.stage_states.enc(b);
+        self.phase.enc(b);
+        self.bytes_staged.enc(b);
+        self.created_at.enc(b);
+        self.log.enc(b);
+    }
+}
+
+impl Dec for WorkflowRunState {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(WorkflowRunState {
+            name: Dec::dec(r)?,
+            user: Dec::dec(r)?,
+            project: Dec::dec(r)?,
+            priority: Dec::dec(r)?,
+            queue: Dec::dec(r)?,
+            stages: Dec::dec(r)?,
+            stage_states: Dec::dec(r)?,
+            phase: Dec::dec(r)?,
+            bytes_staged: Dec::dec(r)?,
+            created_at: Dec::dec(r)?,
+            log: Dec::dec(r)?,
+        })
+    }
+}
+
+impl Enc for DatasetState {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.user.enc(b);
+        self.size_bytes.enc(b);
+        self.sites.enc(b);
+        self.locations.enc(b);
+    }
+}
+
+impl Dec for DatasetState {
+    fn dec(r: &mut Reader) -> Result<Self, CodecError> {
+        Ok(DatasetState {
+            name: Dec::dec(r)?,
+            user: Dec::dec(r)?,
+            size_bytes: Dec::dec(r)?,
+            sites: Dec::dec(r)?,
+            locations: Dec::dec(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workflow_state_codec_roundtrip() {
+        let run = WorkflowRunState {
+            name: "wf-1".into(),
+            user: "alice".into(),
+            project: "cms".into(),
+            priority: PriorityClass::Batch,
+            queue: "workflow".into(),
+            stages: vec![StageSpec {
+                name: "train".into(),
+                requests: ResourceVec::cpu_millis(2000),
+                pods: 4,
+                duration: 120.0,
+                inputs: vec!["raw".into()],
+                outputs: vec![("model".into(), 5_000_000)],
+                offloadable: true,
+            }],
+            stage_states: vec![StageState {
+                phase: StagePhase::Running,
+                site: "INFN-T1".into(),
+                retries: 1,
+                incarnation: 2,
+                gang: "wf-1-train-i2".into(),
+                pods: vec!["wf-1-train-i2-p0".into()],
+            }],
+            phase: RunPhase::Running,
+            bytes_staged: 123,
+            created_at: 7.5,
+            log: vec![(7.5, "created stages=1 queue=workflow".into())],
+        };
+        let mut b = Vec::new();
+        run.enc(&mut b);
+        let got = WorkflowRunState::dec(&mut Reader::new(&b)).unwrap();
+        assert_eq!(got, run);
+
+        let d = DatasetState {
+            name: "raw".into(),
+            user: "alice".into(),
+            size_bytes: 1 << 30,
+            sites: vec!["INFN-T1".into()],
+            locations: vec!["INFN-T1".into(), LOCAL_SITE.into()],
+        };
+        let mut b = Vec::new();
+        d.enc(&mut b);
+        assert_eq!(DatasetState::dec(&mut Reader::new(&b)).unwrap(), d);
+    }
+}

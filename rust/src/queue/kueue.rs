@@ -97,6 +97,42 @@ pub struct LocalQueue {
     pub cluster_queue: String,
 }
 
+/// Admission state of a gang (all-or-nothing group of workloads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GangState {
+    /// Reserving quota member by member; nothing is schedulable yet.
+    Pending,
+    /// Every member reserved — all flipped to `Admitted` atomically.
+    Bound,
+    /// Every member finished (stage completed or cancelled).
+    Finished,
+}
+
+/// An all-or-nothing admission group: the members of a multi-pod workflow
+/// stage admit together or not at all. Reservation is incremental (a gang
+/// may hold quota for a subset of its members across passes) with a
+/// deadlock breaker: a gang whose partial reservation stops growing for
+/// `gang_reserve_timeout` releases everything and re-tries after an
+/// exponential, rank-staggered backoff — so two half-admitted gangs cannot
+/// starve each other indefinitely.
+#[derive(Debug, Clone)]
+pub struct Gang {
+    pub name: String,
+    /// Member workload names, in submit order (also the reserve order).
+    pub members: Vec<String>,
+    pub priority: PriorityClass,
+    pub created_at: Time,
+    pub state: GangState,
+    /// Members currently holding reserved quota (still `Queued`).
+    pub reserved: Vec<String>,
+    /// Stall-release rounds so far (drives the exponential backoff).
+    pub attempts: u32,
+    /// No reserve attempts before this time.
+    pub backoff_until: Time,
+    /// Last time the reservation grew (stall detection clock).
+    pub last_progress: Time,
+}
+
 /// One workload state change, appended to the controller's transition log.
 /// The API server's watch stream consumes these as deltas instead of
 /// re-scanning every workload per tick.
@@ -122,6 +158,15 @@ pub struct Kueue {
     /// Decayed per-user GPU usage snapshot (set by the platform before
     /// each admission pass); the fair-share tiebreak within priority bands.
     fair_share: HashMap<String, f64>,
+    /// All-or-nothing admission groups, keyed by gang name.
+    gangs: HashMap<String, Gang>,
+    /// Gang arrival order (deterministic service order within a band).
+    gang_order: Vec<String>,
+    /// Member workload → owning gang (members skip individual admission).
+    gang_of: HashMap<String, String>,
+    /// Seconds a partial gang reservation may sit without growing before
+    /// the deadlock breaker releases it (`workflow.gang_reserve_timeout`).
+    pub gang_reserve_timeout: Time,
     /// Write-ahead log sink. When attached, every public mutator appends
     /// its op at method entry for crash replay (same contract as
     /// [`ClusterStore`](crate::cluster::store::ClusterStore)).
@@ -140,6 +185,10 @@ impl Default for Kueue {
             transitions: RingLog::default(),
             backoff_base: 0.0,
             fair_share: HashMap::new(),
+            gangs: HashMap::new(),
+            gang_order: Vec::new(),
+            gang_of: HashMap::new(),
+            gang_reserve_timeout: 60.0,
             wal: None,
         }
     }
@@ -202,6 +251,9 @@ impl Kueue {
                 let _ = self.finish(&name, at);
             }
             KueueOp::SetTransitionCapacity { capacity } => self.set_transition_capacity(capacity),
+            KueueOp::SubmitGang { name, queue, user, priority, members, at } => {
+                let _ = self.submit_gang(&name, &queue, &user, priority, members, at);
+            }
         }
     }
 
@@ -332,6 +384,85 @@ impl Kueue {
         self.order.push(name.clone());
         self.log_transition(at, &name, WorkloadState::Queued);
         Ok(name)
+    }
+
+    /// Submit a gang: `members` are `(workload name, per-member request)`
+    /// pairs admitted all-or-nothing. Members are ordinary workloads (the
+    /// transition log, views, and `finish` see them individually) but they
+    /// skip per-workload admission: quota is reserved member by member
+    /// across admission passes and every member flips to `Admitted` in the
+    /// same pass once the whole gang fits.
+    pub fn submit_gang(
+        &mut self,
+        name: &str,
+        queue: &str,
+        user: &str,
+        priority: PriorityClass,
+        members: Vec<(String, ResourceVec)>,
+        at: Time,
+    ) -> anyhow::Result<()> {
+        self.log_op(|| KueueOp::SubmitGang {
+            name: name.to_string(),
+            queue: queue.to_string(),
+            user: user.to_string(),
+            priority,
+            members: members.clone(),
+            at,
+        });
+        anyhow::ensure!(self.local_queues.contains_key(queue), "unknown local queue {queue}");
+        anyhow::ensure!(!members.is_empty(), "gang {name} has no members");
+        anyhow::ensure!(!self.gangs.contains_key(name), "duplicate gang {name}");
+        for (m, _) in &members {
+            anyhow::ensure!(!self.workloads.contains_key(m), "duplicate workload {m}");
+        }
+        let mut member_names = Vec::with_capacity(members.len());
+        for (m, req) in members {
+            self.workloads.insert(
+                m.clone(),
+                Workload {
+                    name: m.clone(),
+                    queue: queue.to_string(),
+                    priority,
+                    requests: req,
+                    state: WorkloadState::Queued,
+                    created_at: at,
+                    admitted_at: None,
+                    evictions: 0,
+                    charged_to: None,
+                    user: user.to_string(),
+                },
+            );
+            self.order.push(m.clone());
+            self.log_transition(at, &m, WorkloadState::Queued);
+            self.gang_of.insert(m.clone(), name.to_string());
+            member_names.push(m);
+        }
+        self.gangs.insert(
+            name.to_string(),
+            Gang {
+                name: name.to_string(),
+                members: member_names,
+                priority,
+                created_at: at,
+                state: GangState::Pending,
+                reserved: Vec::new(),
+                attempts: 0,
+                backoff_until: 0.0,
+                last_progress: at,
+            },
+        );
+        self.gang_order.push(name.to_string());
+        Ok(())
+    }
+
+    /// A gang by name (tests/views).
+    pub fn gang(&self, name: &str) -> Option<&Gang> {
+        self.gangs.get(name)
+    }
+
+    /// The gang a workload belongs to, if any.
+    pub fn gang_of(&self, workload: &str) -> Option<&str> {
+        self.gang_of.get(workload).map(String::as_str)
     }
 
     /// Install the decayed per-user usage snapshot consulted by the next
@@ -500,6 +631,11 @@ impl Kueue {
         // candidates: Queued or requeue-expired evicted
         let mut candidates: Vec<(i32, f64, usize, String)> = Vec::new();
         for (idx, name) in self.order.iter().enumerate() {
+            // gang members never admit individually — the gang pass below
+            // reserves and binds them as a unit
+            if self.gang_of.contains_key(name) {
+                continue;
+            }
             let w = &self.workloads[name];
             let ready = match &w.state {
                 WorkloadState::Queued => true,
@@ -541,7 +677,11 @@ impl Kueue {
                 .workloads
                 .values()
                 .filter(|v| {
-                    v.state == WorkloadState::Admitted && v.priority.value() < priority.value()
+                    v.state == WorkloadState::Admitted
+                        && v.priority.value() < priority.value()
+                        // evicting one gang member would break the gang's
+                        // all-or-nothing contract; gangs are not victims
+                        && !self.gang_of.contains_key(&v.name)
                 })
                 .map(|v| v.name.clone())
                 .collect();
@@ -583,7 +723,112 @@ impl Kueue {
             // preemption-then-retry behaviour; the evicted work requeues).
             let _ = evicted_now;
         }
+        self.gang_pass(at, &mut result);
         result
+    }
+
+    /// Gang reserve → bind, run after the individual candidates. Service
+    /// order is deterministic (priority desc, arrival asc, name asc).
+    /// Each pending gang extends its reservation member by member; a gang
+    /// whose every member holds quota binds — all members `Admitted` in
+    /// this pass. Stalled partial reservations (no growth for
+    /// `gang_reserve_timeout`) are fully released and the gang backs off
+    /// exponentially, staggered by stall rank, so two half-admitted gangs
+    /// release, desynchronize, and converge instead of starving each other.
+    fn gang_pass(&mut self, at: Time, result: &mut AdmissionResult) {
+        if self.gangs.is_empty() {
+            return;
+        }
+        let mut pending: Vec<String> = self
+            .gang_order
+            .iter()
+            .filter(|g| self.gangs[g.as_str()].state == GangState::Pending)
+            .cloned()
+            .collect();
+        pending.sort_by(|a, b| {
+            let (ga, gb) = (&self.gangs[a], &self.gangs[b]);
+            gb.priority
+                .value()
+                .cmp(&ga.priority.value())
+                .then(ga.created_at.partial_cmp(&gb.created_at).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.cmp(b))
+        });
+        for name in &pending {
+            if self.gangs[name].backoff_until > at {
+                continue;
+            }
+            let members = self.gangs[name].members.clone();
+            let mut progressed = false;
+            for m in &members {
+                if self.gangs[name].reserved.contains(m) {
+                    continue;
+                }
+                let (queue, req) = {
+                    let w = &self.workloads[m];
+                    (w.queue.clone(), w.requests.clone())
+                };
+                let cq_name = self.local_queues[&queue].cluster_queue.clone();
+                let avail = self.available_for(&self.cluster_queues[&cq_name]);
+                if !req.fits_in(&avail) {
+                    // members reserve strictly in order: a hole in the
+                    // middle stops the gang (no point grabbing the tail)
+                    break;
+                }
+                self.charge(&cq_name, &req);
+                self.workloads.get_mut(m).unwrap().charged_to = Some(cq_name);
+                self.gangs.get_mut(name).unwrap().reserved.push(m.clone());
+                progressed = true;
+            }
+            let fully_reserved = {
+                let g = self.gangs.get_mut(name).unwrap();
+                if progressed {
+                    g.last_progress = at;
+                }
+                g.reserved.len() == g.members.len()
+            };
+            if fully_reserved {
+                self.gangs.get_mut(name).unwrap().state = GangState::Bound;
+                for m in members {
+                    let w = self.workloads.get_mut(&m).unwrap();
+                    w.state = WorkloadState::Admitted;
+                    w.admitted_at = Some(at);
+                    self.log_transition(at, &m, WorkloadState::Admitted);
+                    result.admitted.push(m);
+                }
+            }
+        }
+        // deadlock breaker: release stalled partial reservations
+        let stalled: Vec<String> = pending
+            .iter()
+            .filter(|g| {
+                let gang = &self.gangs[g.as_str()];
+                gang.state == GangState::Pending
+                    && !gang.reserved.is_empty()
+                    && gang.backoff_until <= at
+                    && at - gang.last_progress >= self.gang_reserve_timeout
+            })
+            .cloned()
+            .collect();
+        let base = self.backoff_base.max(1.0);
+        for (rank, name) in stalled.iter().enumerate() {
+            let reserved = self.gangs[name].reserved.clone();
+            for m in &reserved {
+                let (cq, req) = {
+                    let w = &self.workloads[m];
+                    (w.charged_to.clone(), w.requests.clone())
+                };
+                if let Some(cq) = cq {
+                    self.uncharge(&cq, &req);
+                }
+                self.workloads.get_mut(m).unwrap().charged_to = None;
+            }
+            let g = self.gangs.get_mut(name).unwrap();
+            g.reserved.clear();
+            g.attempts += 1;
+            let delay = base * (1 << (g.attempts - 1).min(6)) as f64 * (rank as f64 + 1.0);
+            g.backoff_until = at + delay;
+            g.last_progress = at + delay;
+        }
     }
 
     /// Release an admitted workload's quota and put it back in the queue
@@ -624,6 +869,10 @@ impl Kueue {
             state == WorkloadState::Admitted,
             "workload {name} not admitted (state {state:?})"
         );
+        anyhow::ensure!(
+            !self.gang_of.contains_key(name),
+            "workload {name} is a gang member; finish the whole gang instead"
+        );
         self.evict_to_backoff(name, at);
         Ok(())
     }
@@ -641,13 +890,29 @@ impl Kueue {
         if state == WorkloadState::Finished {
             return Ok(()); // idempotent: no duplicate transition logged
         }
-        if state == WorkloadState::Admitted {
-            self.uncharge(&cq.unwrap(), &req);
+        // any held charge is released — covers admitted workloads and gang
+        // members whose quota was reserved but never bound (stage cancel)
+        if let Some(cq) = cq {
+            self.uncharge(&cq, &req);
         }
         let w = self.workloads.get_mut(name).unwrap();
         w.state = WorkloadState::Finished;
         w.charged_to = None;
         self.log_transition(at, name, WorkloadState::Finished);
+        // gang bookkeeping: drop the member's reservation entry; the gang
+        // is finished once its last member is
+        if let Some(gang) = self.gang_of.get(name).cloned() {
+            let all_done = {
+                let g = self.gangs.get_mut(&gang).expect("gang exists for member");
+                g.reserved.retain(|m| m != name);
+                g.members.iter().all(|m| {
+                    self.workloads.get(m).map(|w| w.state == WorkloadState::Finished).unwrap_or(true)
+                })
+            };
+            if all_done {
+                self.gangs.get_mut(&gang).unwrap().state = GangState::Finished;
+            }
+        }
         Ok(())
     }
 
@@ -802,6 +1067,57 @@ impl Dec for WorkloadTransition {
     }
 }
 
+impl Enc for GangState {
+    fn enc(&self, b: &mut Vec<u8>) {
+        b.push(match self {
+            GangState::Pending => 0,
+            GangState::Bound => 1,
+            GangState::Finished => 2,
+        });
+    }
+}
+
+impl Dec for GangState {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(match u8::dec(r)? {
+            0 => GangState::Pending,
+            1 => GangState::Bound,
+            2 => GangState::Finished,
+            t => return Err(CodecError(format!("bad gang state tag {t}"))),
+        })
+    }
+}
+
+impl Enc for Gang {
+    fn enc(&self, b: &mut Vec<u8>) {
+        self.name.enc(b);
+        self.members.enc(b);
+        self.priority.enc(b);
+        self.created_at.enc(b);
+        self.state.enc(b);
+        self.reserved.enc(b);
+        self.attempts.enc(b);
+        self.backoff_until.enc(b);
+        self.last_progress.enc(b);
+    }
+}
+
+impl Dec for Gang {
+    fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
+        Ok(Gang {
+            name: Dec::dec(r)?,
+            members: Dec::dec(r)?,
+            priority: Dec::dec(r)?,
+            created_at: Dec::dec(r)?,
+            state: Dec::dec(r)?,
+            reserved: Dec::dec(r)?,
+            attempts: Dec::dec(r)?,
+            backoff_until: Dec::dec(r)?,
+            last_progress: Dec::dec(r)?,
+        })
+    }
+}
+
 /// Kueue snapshots encode the whole controller state — unlike the store
 /// there is no derived structure to rebuild; the maps *are* the state.
 impl Enc for Kueue {
@@ -813,6 +1129,10 @@ impl Enc for Kueue {
         self.transitions.enc(b);
         self.backoff_base.enc(b);
         self.fair_share.enc(b);
+        self.gangs.enc(b);
+        self.gang_order.enc(b);
+        self.gang_of.enc(b);
+        self.gang_reserve_timeout.enc(b);
     }
 }
 
@@ -826,6 +1146,10 @@ impl Dec for Kueue {
             transitions: Dec::dec(r)?,
             backoff_base: Dec::dec(r)?,
             fair_share: Dec::dec(r)?,
+            gangs: Dec::dec(r)?,
+            gang_order: Dec::dec(r)?,
+            gang_of: Dec::dec(r)?,
+            gang_reserve_timeout: Dec::dec(r)?,
             wal: None,
         })
     }
@@ -1058,6 +1382,164 @@ mod tests {
         k.submit("w", "batch", PriorityClass::Batch, rv(1, 0), 0.0).unwrap();
         assert!(k.submit("w", "batch", PriorityClass::Batch, rv(1, 0), 0.0).is_err());
         assert!(k.submit("x", "nope", PriorityClass::Batch, rv(1, 0), 0.0).is_err());
+    }
+
+    fn gang_members(prefix: &str, n: usize, gpus: i64) -> Vec<(String, ResourceVec)> {
+        (0..n).map(|i| (format!("{prefix}-p{i}"), rv(1000, gpus))).collect()
+    }
+
+    #[test]
+    fn gang_binds_all_or_nothing() {
+        let mut k = kueue();
+        // cohort GPU capacity = 2 (batch) + 4 (interactive) = 6
+        k.submit_gang("g1", "batch", "alice", PriorityClass::Batch, gang_members("g1", 3, 2), 0.0)
+            .unwrap();
+        let r = k.admit_pass(0.0);
+        assert_eq!(r.admitted.len(), 3, "{r:?}");
+        assert_eq!(k.gang("g1").unwrap().state, GangState::Bound);
+        // a gang that cannot fully fit reserves nothing schedulable: every
+        // member stays Queued even though capacity would cover a subset
+        k.submit_gang("g2", "batch", "bob", PriorityClass::Batch, gang_members("g2", 4, 2), 1.0)
+            .unwrap();
+        let r2 = k.admit_pass(1.0);
+        assert!(r2.admitted.is_empty(), "{r2:?}");
+        for i in 0..4 {
+            assert_eq!(k.workload(&format!("g2-p{i}")).unwrap().state, WorkloadState::Queued);
+        }
+    }
+
+    #[test]
+    fn gang_finish_releases_all_quota() {
+        let mut k = kueue();
+        k.submit_gang("g1", "batch", "alice", PriorityClass::Batch, gang_members("g1", 3, 2), 0.0)
+            .unwrap();
+        k.admit_pass(0.0);
+        let (used, _) = k.quota_utilization();
+        assert_eq!(used.get(GPU), 6);
+        for i in 0..3 {
+            k.finish(&format!("g1-p{i}"), 10.0).unwrap();
+        }
+        assert_eq!(k.gang("g1").unwrap().state, GangState::Finished);
+        let (used, _) = k.quota_utilization();
+        assert!(used.is_empty(), "{used}");
+    }
+
+    #[test]
+    fn gang_members_are_never_preemption_victims() {
+        let mut k = kueue();
+        k.submit_gang("g1", "batch", "alice", PriorityClass::Batch, gang_members("g1", 3, 2), 0.0)
+            .unwrap();
+        k.admit_pass(0.0);
+        // an interactive arrival that would need gang quota cannot evict it
+        k.submit("sess", "hub", PriorityClass::Interactive, rv(2000, 2), 5.0).unwrap();
+        let r = k.admit_pass(5.0);
+        assert!(r.preempted.is_empty(), "gang members must not be evicted: {r:?}");
+        assert!(!r.admitted.contains(&"sess".to_string()));
+    }
+
+    #[test]
+    fn two_stalled_gangs_release_desynchronize_and_converge() {
+        let mut k = Kueue::new();
+        k.gang_reserve_timeout = 60.0;
+        k.add_cluster_queue(ClusterQueue {
+            name: "wf-cq".into(),
+            cohort: None,
+            nominal: rv(64_000, 8),
+            used: ResourceVec::new(),
+            can_borrow: false,
+            can_lend: false,
+        });
+        k.add_local_queue(LocalQueue { name: "wf".into(), cluster_queue: "wf-cq".into() });
+        // a regular workload occupies 2 GPUs so neither gang fully fits
+        k.submit("filler", "wf", PriorityClass::Batch, rv(1000, 2), 0.0).unwrap();
+        k.admit_pass(0.0);
+        // gang A: 2×4 GPUs (needs 8, 6 free) — reserves one member
+        // gang B: 2×2 GPUs (needs 4, 2 free after A) — reserves one member
+        k.submit_gang("ga", "wf", "alice", PriorityClass::Batch, gang_members("ga", 2, 4), 1.0)
+            .unwrap();
+        k.submit_gang("gb", "wf", "bob", PriorityClass::Batch, gang_members("gb", 2, 2), 2.0)
+            .unwrap();
+        let r = k.admit_pass(2.0);
+        assert!(r.admitted.is_empty());
+        assert_eq!(k.gang("ga").unwrap().reserved.len(), 1, "half-admitted");
+        assert_eq!(k.gang("gb").unwrap().reserved.len(), 1, "half-admitted");
+        let (used, _) = k.quota_utilization();
+        assert_eq!(used.get(GPU), 2 + 4 + 2);
+        // stall timeout: both release their partial reservations, with
+        // rank-staggered backoff (ga retries at +30, gb at +60)
+        let r2 = k.admit_pass(62.0);
+        assert!(r2.admitted.is_empty());
+        assert!(k.gang("ga").unwrap().reserved.is_empty());
+        assert!(k.gang("gb").unwrap().reserved.is_empty());
+        let (used, _) = k.quota_utilization();
+        assert_eq!(used.get(GPU), 2, "only the filler holds quota");
+        assert!(k.gang("gb").unwrap().backoff_until > k.gang("ga").unwrap().backoff_until);
+        // the filler finishes; ga's backoff expires first and it binds
+        k.finish("filler", 70.0).unwrap();
+        let r3 = k.admit_pass(93.0);
+        assert_eq!(r3.admitted.len(), 2, "{r3:?}");
+        assert_eq!(k.gang("ga").unwrap().state, GangState::Bound);
+        // ga completes; gb converges on a later pass
+        k.finish("ga-p0", 100.0).unwrap();
+        k.finish("ga-p1", 100.0).unwrap();
+        let r4 = k.admit_pass(130.0);
+        assert_eq!(r4.admitted.len(), 2, "{r4:?}");
+        assert_eq!(k.gang("gb").unwrap().state, GangState::Bound);
+        for w in ["ga-p0", "ga-p1", "gb-p0", "gb-p1", "filler"] {
+            let s = &k.workload(w).unwrap().state;
+            assert!(
+                matches!(s, WorkloadState::Admitted | WorkloadState::Finished),
+                "no workload lost: {w} is {s:?}"
+            );
+        }
+        k.finish("gb-p0", 140.0).unwrap();
+        k.finish("gb-p1", 140.0).unwrap();
+        let (used, _) = k.quota_utilization();
+        assert!(used.is_empty(), "quotas drain: {used}");
+    }
+
+    #[test]
+    fn gang_state_survives_snapshot_and_wal_replay() {
+        use crate::cluster::wal::{Wal, WalRecord};
+        let wal = Wal::shared();
+        let mut k = Kueue::new();
+        k.gang_reserve_timeout = 45.0;
+        k.attach_wal(wal.clone());
+        k.add_cluster_queue(ClusterQueue {
+            name: "wf-cq".into(),
+            cohort: None,
+            nominal: rv(64_000, 4),
+            used: ResourceVec::new(),
+            can_borrow: false,
+            can_lend: false,
+        });
+        k.add_local_queue(LocalQueue { name: "wf".into(), cluster_queue: "wf-cq".into() });
+        k.submit_gang("g1", "wf", "alice", PriorityClass::Batch, gang_members("g1", 2, 2), 0.0)
+            .unwrap();
+        k.admit_pass(0.0); // binds
+        k.submit_gang("g2", "wf", "bob", PriorityClass::BatchHigh, gang_members("g2", 2, 2), 1.0)
+            .unwrap();
+        k.admit_pass(1.0); // g2 partial-reserves
+        k.finish("g1-p0", 5.0).unwrap();
+        // snapshot round-trip is byte-identical with gang state present
+        let bytes = k.to_bytes();
+        let restored = Kueue::from_bytes(&bytes).unwrap();
+        assert_eq!(restored.to_bytes(), bytes);
+        assert_eq!(restored.gang("g1").unwrap().state, GangState::Bound);
+        assert_eq!(restored.gang("g2").unwrap().reserved, k.gang("g2").unwrap().reserved);
+        // wal replay reproduces the same bytes on a fresh controller
+        let (records, warn) = wal.borrow().replay();
+        assert!(warn.is_none(), "{warn:?}");
+        let mut replayed = Kueue::new();
+        replayed.gang_reserve_timeout = 45.0;
+        for rec in records {
+            match rec {
+                WalRecord::Kueue(op) => replayed.apply_op(op),
+                other => panic!("kueue-only log, got {other:?}"),
+            }
+        }
+        k.detach_wal();
+        assert_eq!(replayed.to_bytes(), k.to_bytes());
     }
 
     #[test]

@@ -144,6 +144,15 @@ impl ObjectStore {
     pub fn total_bytes(&self) -> u64 {
         self.buckets.keys().map(|b| self.bucket_size(b)).sum()
     }
+
+    /// Account a bulk transfer that is modeled but not materialized as
+    /// objects (workflow stage-in/stage-out ships dataset replicas between
+    /// sites; only their manifests are stored). Keeps `bytes_in`/`bytes_out`
+    /// honest about the data plane without holding gigabytes of payload.
+    pub fn account_transfer(&mut self, ingress: u64, egress: u64) {
+        self.bytes_in += ingress;
+        self.bytes_out += egress;
+    }
 }
 
 #[cfg(test)]

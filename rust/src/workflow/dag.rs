@@ -131,6 +131,42 @@ impl Dag {
         Ok(dag)
     }
 
+    /// Build a DAG from pre-instantiated jobs (no rule/wildcard expansion):
+    /// the workflow engine's entry point, where every stage of a
+    /// `WorkflowRun` is already a concrete [`JobNode`] wired by dataset
+    /// names. Inputs in `existing` need no producer (they are `Dataset`
+    /// objects); every other input must be produced by exactly one job.
+    pub fn from_jobs(jobs: Vec<JobNode>, existing: &HashSet<String>) -> Result<Dag, DagError> {
+        let mut dag = Dag { jobs, producers: HashMap::new(), deps: Vec::new() };
+        for (idx, job) in dag.jobs.iter().enumerate() {
+            for o in &job.outputs {
+                if let Some(&prev) = dag.producers.get(o) {
+                    return Err(DagError::Ambiguous {
+                        file: o.clone(),
+                        a: dag.jobs[prev].rule.clone(),
+                        b: job.rule.clone(),
+                    });
+                }
+                dag.producers.insert(o.clone(), idx);
+            }
+        }
+        for j in 0..dag.jobs.len() {
+            let mut ds = Vec::new();
+            for input in dag.jobs[j].inputs.clone() {
+                if let Some(&p) = dag.producers.get(&input) {
+                    if p != j && !ds.contains(&p) {
+                        ds.push(p);
+                    }
+                } else if !existing.contains(&input) {
+                    return Err(DagError::NoProducer(input));
+                }
+            }
+            dag.deps.push(ds);
+        }
+        dag.check_acyclic()?;
+        Ok(dag)
+    }
+
     fn check_acyclic(&self) -> Result<(), DagError> {
         // Kahn's algorithm
         let n = self.jobs.len();
@@ -297,6 +333,54 @@ mod tests {
         // chain: 60 + 600 + 30 + 10 = 700 (both branches equal)
         assert!((dag.critical_path() - 700.0).abs() < 1e-9);
         assert!((dag.total_work() - (2.0 * 690.0 + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_jobs_wires_deps_and_rejects_bad_graphs() {
+        let stage = |id: &str, inputs: &[&str], outputs: &[&str]| JobNode {
+            id: id.into(),
+            rule: id.into(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            resources: ResourceVec::cpu_millis(1000),
+            duration: 10.0,
+            wildcards: BTreeMap::new(),
+        };
+        let existing: HashSet<String> = ["raw".to_string()].into_iter().collect();
+        let dag = Dag::from_jobs(
+            vec![
+                stage("pre", &["raw"], &["clean"]),
+                stage("train", &["clean"], &["model"]),
+            ],
+            &existing,
+        )
+        .unwrap();
+        assert_eq!(dag.deps[1], vec![0]);
+        assert_eq!(dag.ready(&existing, &HashSet::new()), vec![0]);
+
+        let err = Dag::from_jobs(vec![stage("pre", &["missing"], &["clean"])], &existing)
+            .unwrap_err();
+        assert!(matches!(err, DagError::NoProducer(f) if f == "missing"));
+
+        let err = Dag::from_jobs(
+            vec![
+                stage("a", &["y"], &["x"]),
+                stage("b", &["x"], &["y"]),
+            ],
+            &HashSet::new(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, DagError::Cycle(_)));
+
+        let err = Dag::from_jobs(
+            vec![
+                stage("a", &["raw"], &["out"]),
+                stage("b", &["raw"], &["out"]),
+            ],
+            &existing,
+        )
+        .unwrap_err();
+        assert!(matches!(err, DagError::Ambiguous { .. }));
     }
 
     #[test]

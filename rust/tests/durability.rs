@@ -6,6 +6,7 @@
 mod common;
 
 use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::workflow::{RunPhase, StageSpec, LOCAL_SITE};
 use aiinfn::platform::Platform;
 use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
 use aiinfn::sim::clock::hours;
@@ -115,6 +116,86 @@ fn restore_then_immediate_compaction_then_second_crash() {
     p.cluster().check_free_index();
     p.run_for(hours(1.0), 10.0);
     assert_eq!(p.workload_state(&wl), Some(WorkloadState::Finished));
+}
+
+/// Kill the coordinator mid-DAG — some stages done, a gang in flight, an
+/// offloaded stage running at a federation site — and let the restored
+/// coordinator finish the run. Workflow state (including per-run logs) is
+/// checkpointed into control records every tick and gang admission passes
+/// are WAL-replayed, so the interrupted run must converge to a workflow
+/// trace byte-identical to an uninterrupted twin.
+#[test]
+fn mid_dag_coordinator_kill_converges_byte_identically() {
+    const GB: u64 = 1 << 30;
+    let stage = |name: &str,
+                 cpu_millis: i64,
+                 pods: u32,
+                 duration: f64,
+                 inputs: &[&str],
+                 outputs: &[(&str, u64)],
+                 offloadable: bool| StageSpec {
+        name: name.to_string(),
+        requests: ResourceVec::cpu_millis(cpu_millis).with(MEMORY, 4 << 30),
+        pods,
+        duration,
+        inputs: inputs.iter().map(|s| s.to_string()).collect(),
+        outputs: outputs.iter().map(|(n, s)| (n.to_string(), *s)).collect(),
+        offloadable,
+    };
+    let build = || {
+        let mut p = durable_platform(120.0);
+        p.create_dataset("dur-calib", "user041", GB, vec![LOCAL_SITE.into()]).unwrap();
+        p.create_dataset("dur-raw", "user041", 150 * GB, vec!["INFN-T1".into()]).unwrap();
+        p.create_workflow_run(
+            "wf-durable",
+            "user041",
+            "project04",
+            PriorityClass::Batch,
+            "workflow",
+            vec![
+                stage("prep", 4000, 2, 120.0, &["dur-calib"], &[("dur-clean", 2 * GB)], false),
+                stage("train", 8000, 3, 360.0, &["dur-raw"], &[("dur-model", GB)], true),
+                stage(
+                    "merge",
+                    4000,
+                    1,
+                    120.0,
+                    &["dur-clean", "dur-model"],
+                    &[("dur-merged", GB)],
+                    true,
+                ),
+                stage("publish", 2000, 1, 60.0, &["dur-merged"], &[("dur-bundle", GB / 4)], false),
+            ],
+        )
+        .unwrap();
+        p
+    };
+
+    // twin A: uninterrupted
+    let mut a = build();
+    a.run_for(3600.0, 15.0);
+    assert_eq!(a.workflow_run("wf-durable").unwrap().phase, RunPhase::Succeeded);
+
+    // twin B: killed at a tick boundary mid-DAG (prep done, train running
+    // remotely), restored, then run for the remaining horizon
+    let mut b = build();
+    b.run_for(405.0, 15.0);
+    b.crash_and_restore();
+    assert_eq!(b.coordinator_restarts(), 1);
+    b.run_for(3195.0, 15.0);
+
+    let run_b = b.workflow_run("wf-durable").unwrap();
+    assert_eq!(run_b.phase, RunPhase::Succeeded, "restored run log:\n{}", run_b.trace());
+    assert_eq!(
+        a.workflow_trace(),
+        b.workflow_trace(),
+        "the interrupted run must converge to the uninterrupted trace byte-for-byte"
+    );
+    assert_eq!(a.metrics().workflow_bytes_staged, b.metrics().workflow_bytes_staged);
+    assert_eq!(a.metrics().workflow_stages_completed, b.metrics().workflow_stages_completed);
+    let (used, _) = b.quota_utilization();
+    assert!(used.is_empty(), "leaked quota {used}");
+    b.cluster().check_free_index();
 }
 
 /// Crash at a seed-derived point of the campaign, restore, and run to the

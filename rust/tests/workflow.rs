@@ -1,0 +1,501 @@
+//! Federated-workflow integration suite: the end-to-end DAG walked by the
+//! reconciler alone (gang-scheduled multi-pod stages, InterLink offload
+//! with stage-in/stage-out through the object store), stage retry after a
+//! chaos-injected remote failure, gang-admission deadlock freedom under
+//! quota pressure (8-seed sweep), transfer-cost placement decisions, API
+//! verb round-trips for `WorkflowRun`/`Dataset`, and golden-trace
+//! determinism with the workflow engine live.
+
+mod common;
+
+use aiinfn::api::{
+    ApiError, ApiObject, Condition, DatasetResource, ResourceKind, Selector, StageTemplate,
+    WorkflowRunResource,
+};
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::workflow::{RunPhase, StagePhase, StageSpec, LOCAL_SITE};
+use aiinfn::queue::kueue::PriorityClass;
+use aiinfn::sim::chaos::{ChaosEngine, Fault};
+use aiinfn::sim::clock::hours;
+
+const GB: u64 = 1 << 30;
+
+fn stage(
+    name: &str,
+    cpu_millis: i64,
+    pods: u32,
+    duration: f64,
+    inputs: &[&str],
+    outputs: &[(&str, u64)],
+    offloadable: bool,
+) -> StageSpec {
+    StageSpec {
+        name: name.to_string(),
+        requests: ResourceVec::cpu_millis(cpu_millis).with(MEMORY, 4 << 30),
+        pods,
+        duration,
+        inputs: inputs.iter().map(|s| s.to_string()).collect(),
+        outputs: outputs.iter().map(|(n, s)| (n.to_string(), *s)).collect(),
+        offloadable,
+    }
+}
+
+fn stage_template(
+    name: &str,
+    cpu_millis: i64,
+    pods: u32,
+    duration: f64,
+    inputs: &[&str],
+    outputs: &[(&str, u64)],
+    offloadable: bool,
+) -> StageTemplate {
+    StageTemplate {
+        name: name.to_string(),
+        requests: ResourceVec::cpu_millis(cpu_millis).with(MEMORY, 4 << 30),
+        pods,
+        duration,
+        inputs: inputs.iter().map(|s| s.to_string()).collect(),
+        outputs: outputs.iter().map(|(n, s)| (n.to_string(), *s)).collect(),
+        offloadable,
+    }
+}
+
+// --------------------------------------------------------------- end-to-end
+
+/// The tentpole scenario, driven through the API server and the workflow
+/// reconciler only: six stages over datasets pinned at two sites. The
+/// training stage is a 4-pod gang whose 200 GB input lives only at
+/// INFN-T1, so placement offloads it (stage-in pulls the 1 GB calibration
+/// set to the site, stage-out ships the model back); everything downstream
+/// runs locally because its inputs are already home.
+#[test]
+fn six_stage_two_site_dag_completes_via_reconciler() {
+    let mut api = common::api();
+    let token = api.login("user010").unwrap();
+
+    for (name, size, site) in
+        [("calib", GB, LOCAL_SITE), ("raw-t1", 200 * GB, "INFN-T1")]
+    {
+        let d = DatasetResource::request(name, "user010", size, vec![site.to_string()]);
+        api.create(&token, &ApiObject::Dataset(d)).unwrap();
+    }
+
+    let stages = vec![
+        stage_template("prep", 4000, 2, 120.0, &["calib"], &[("prep-out", 2 * GB)], false),
+        stage_template("train", 8000, 4, 300.0, &["raw-t1", "calib"], &[("model-a", GB)], true),
+        stage_template(
+            "merge",
+            4000,
+            1,
+            120.0,
+            &["prep-out", "model-a"],
+            &[("merged", GB)],
+            true,
+        ),
+        stage_template("eval-a", 2000, 1, 60.0, &["merged"], &[("report-a", GB / 8)], true),
+        stage_template("eval-b", 2000, 1, 60.0, &["merged"], &[("report-b", GB / 8)], true),
+        stage_template(
+            "publish",
+            1000,
+            1,
+            60.0,
+            &["report-a", "report-b"],
+            &[("bundle", GB / 4)],
+            false,
+        ),
+    ];
+    let req = WorkflowRunResource::request("lhcb-train", "user010", "project03", stages);
+    let created = api.create(&token, &ApiObject::WorkflowRun(req)).unwrap();
+    let view = created.as_workflow_run().unwrap();
+    assert_eq!(view.queue, "workflow", "admission must default the workflow queue");
+    assert_eq!(view.priority, "batch", "admission must default the priority");
+    assert_eq!(view.phase, "Pending");
+
+    // reconciler only from here: no direct platform verbs
+    api.run_for(3600.0, 15.0);
+
+    let got = api.get(&token, ResourceKind::WorkflowRun, "lhcb-train").unwrap();
+    let got = got.as_workflow_run().unwrap();
+    assert_eq!(got.phase, "Succeeded", "stages: {:?}", got.stage_status);
+    assert_eq!(got.stages_completed, 6);
+    let by_name = |n: &str| got.stage_status.iter().find(|s| s.name == n).unwrap();
+    assert_eq!(by_name("train").site, "INFN-T1", "the T1-pinned input must pull training remote");
+    assert_eq!(by_name("prep").site, LOCAL_SITE);
+    assert_eq!(by_name("merge").site, LOCAL_SITE, "staged-back model must keep merge local");
+    for s in &got.stage_status {
+        assert_eq!(s.phase, "Succeeded", "stage {}: {:?}", s.name, s);
+        assert_eq!(s.retries, 0, "stage {}", s.name);
+    }
+    // stage-in (calib → T1) + stage-out (model-a → local) moved real bytes
+    assert!(
+        got.bytes_staged >= 2 * GB,
+        "stage-in + stage-out must be accounted: {}",
+        got.bytes_staged
+    );
+
+    let p = api.platform();
+    let m = p.metrics();
+    assert_eq!(m.workflow_stages_completed, 6);
+    assert!(m.workflow_offloaded_stages >= 1, "training must run through InterLink");
+    assert_eq!(m.workflow_gangs_bound, 6, "one gang per stage, no retries");
+    assert!(m.workflow_gang_wait_total >= 0.0);
+    assert_eq!(m.workflow_bytes_staged, got.bytes_staged);
+
+    // outputs registered as datasets at their execution sites; the
+    // offloaded model was staged back to local storage
+    let model = api.get(&token, ResourceKind::Dataset, "model-a").unwrap();
+    let model = model.as_dataset().unwrap();
+    assert!(model.locations.iter().any(|l| l == "INFN-T1"), "{:?}", model.locations);
+    assert!(model.locations.iter().any(|l| l == LOCAL_SITE), "{:?}", model.locations);
+    let listed = api
+        .list(&token, ResourceKind::Dataset, &Selector::labels("app=dataset").unwrap())
+        .unwrap();
+    assert!(listed.len() >= 8, "inputs + registered stage outputs: {}", listed.len());
+
+    // everything drained: no leaked gang quota, all pods terminal
+    let (used, _) = p.quota_utilization();
+    assert!(used.is_empty(), "leaked quota {used}");
+    let phases = p.pod_phase_counts();
+    assert_eq!(phases.get("succeeded"), Some(&10), "{phases:?}");
+}
+
+// ------------------------------------------------------------- stage retry
+
+/// A chaos-killed remote stage retries as a fresh pod incarnation without
+/// re-running completed independent stages: the side branch finishes
+/// before the remote failure lands, keeps its result, and the run still
+/// converges with exactly one retry on the books.
+#[test]
+fn failed_stage_retries_without_rerunning_completed_stages() {
+    let mut p = common::platform();
+    let mut chaos = ChaosEngine::new();
+    // kill the first remote job that shows up on INFN-T1
+    chaos.inject(1.0, Fault::RemoteJobFailures { site: "INFN-T1".into(), count: 1 });
+    p.set_chaos(chaos);
+
+    p.create_dataset("bulk", "user020", 400 * GB, vec!["INFN-T1".into()]).unwrap();
+    let stages = vec![
+        // pinned-remote input → placement picks INFN-T1 deterministically
+        stage("remote-train", 8000, 2, 240.0, &["bulk"], &[("model", GB)], true),
+        // independent local branch, done long before the remote failure
+        stage("side", 2000, 1, 60.0, &[], &[("side-out", GB / 8)], false),
+        stage("final", 2000, 1, 60.0, &["model", "side-out"], &[("result", GB / 8)], false),
+    ];
+    p.create_workflow_run("wf-retry", "user020", "project04", PriorityClass::Batch, "workflow", stages)
+        .unwrap();
+    p.run_for(3600.0, 15.0);
+
+    let run = p.workflow_run("wf-retry").unwrap();
+    assert_eq!(run.phase, RunPhase::Succeeded, "log:\n{}", run.trace());
+    let idx = |n: &str| run.stages.iter().position(|s| s.name == n).unwrap();
+    let train = &run.stage_states[idx("remote-train")];
+    assert_eq!(train.phase, StagePhase::Succeeded);
+    assert_eq!(train.retries, 1, "exactly one chaos kill, one retry: {}", run.trace());
+    assert_eq!(train.incarnation, 2, "the retry must be a fresh incarnation");
+    assert_eq!(train.site, "INFN-T1", "the data hasn't moved, so neither has placement");
+    let side = &run.stage_states[idx("side")];
+    assert_eq!(side.phase, StagePhase::Succeeded);
+    assert_eq!(side.retries, 0);
+    assert_eq!(side.incarnation, 1, "completed independent stages must not re-run");
+
+    let m = p.metrics();
+    assert_eq!(m.workflow_stage_retries, 1);
+    assert_eq!(m.workflow_stages_completed, 3, "each stage counted once");
+    assert_eq!(m.terminal_failures, 0);
+    let (used, _) = p.quota_utilization();
+    assert!(used.is_empty(), "failed incarnation must release its gang quota: {used}");
+}
+
+// --------------------------------------------------- gang deadlock freedom
+
+/// Two gangs whose combined reservations exceed the quota left by a wall
+/// of batch fillers: both reserve partially, stall, release through the
+/// gang timeout, back off staggered, and converge once the fillers drain —
+/// one runs, then the other. No workload is lost and quota drains to zero,
+/// across 8 derived seeds.
+#[test]
+fn competing_gangs_converge_without_deadlock() {
+    let base = common::test_seed();
+    for i in 0..8u64 {
+        let seed = base.wrapping_mul(131).wrapping_add(i);
+        let mut p = common::platform();
+        // fillers soak ~960 cores of the ~1080-core cohort quota for long
+        // enough that both gangs hit the reserve timeout repeatedly
+        let filler_duration = 700.0 + (seed % 5) as f64 * 60.0;
+        common::submit_cpu_batch(&mut p, 60, 16_000, filler_duration, true);
+        p.run_for(30.0, 15.0);
+
+        let dur_a = 200.0 + (seed % 4) as f64 * 50.0;
+        let dur_b = 200.0 + (seed % 3) as f64 * 50.0;
+        // each gang alone fits the 448-core local cluster; together they
+        // need 832 cores — far beyond both the leftover quota (~120) and
+        // the hardware
+        p.create_workflow_run(
+            "gang-a",
+            "user030",
+            "project05",
+            PriorityClass::Batch,
+            "workflow",
+            vec![stage("burst", 16_000, 26, dur_a, &[], &[("a-out", GB)], false)],
+        )
+        .unwrap();
+        p.create_workflow_run(
+            "gang-b",
+            "user031",
+            "project05",
+            PriorityClass::Batch,
+            "workflow",
+            vec![stage("burst", 8_000, 52, dur_b, &[], &[("b-out", GB)], false)],
+        )
+        .unwrap();
+        p.run_for(hours(2.5), 15.0);
+
+        for name in ["gang-a", "gang-b"] {
+            let run = p.workflow_run(name).unwrap();
+            assert_eq!(
+                run.phase,
+                RunPhase::Succeeded,
+                "seed {seed}: {name} must converge; log:\n{}",
+                run.trace()
+            );
+        }
+        let m = p.metrics();
+        assert_eq!(m.workflow_gangs_bound, 2, "seed {seed}");
+        assert!(
+            m.workflow_gang_wait_total >= p.config.workflow_gang_reserve_timeout,
+            "seed {seed}: the gangs must actually have waited through the \
+             reserve timeout (waited {:.0}s total)",
+            m.workflow_gang_wait_total
+        );
+        assert_eq!(m.terminal_failures, 0, "seed {seed}");
+        let (used, _) = p.quota_utilization();
+        assert!(used.is_empty(), "seed {seed}: leaked quota {used}");
+        p.cluster().check_free_index();
+    }
+}
+
+// -------------------------------------------------- transfer-cost placement
+
+/// A small local dataset keeps an offloadable stage local: the transfer
+/// cost of moving it anywhere is positive while the local score is zero.
+#[test]
+fn small_local_dataset_keeps_stage_local() {
+    let mut p = common::platform();
+    p.create_dataset("small", "user001", GB, vec![LOCAL_SITE.into()]).unwrap();
+    p.create_workflow_run(
+        "wf-local",
+        "user001",
+        "project01",
+        PriorityClass::Batch,
+        "workflow",
+        vec![stage("crunch", 4000, 1, 120.0, &["small"], &[("out", GB)], true)],
+    )
+    .unwrap();
+    p.run_for(900.0, 15.0);
+
+    let run = p.workflow_run("wf-local").unwrap();
+    assert_eq!(run.phase, RunPhase::Succeeded, "{}", run.trace());
+    assert_eq!(run.stage_states[0].site, LOCAL_SITE);
+    assert_eq!(run.bytes_staged, 0, "a local stage moves nothing");
+    assert_eq!(p.metrics().workflow_offloaded_stages, 0);
+}
+
+/// With the local cluster saturated by non-offloadable fillers, the queue
+/// wait penalty dominates the (small) transfer cost and the stage offloads
+/// to the nearest healthy site, staging its input in and its output back.
+#[test]
+fn queue_wait_pressure_offloads_stage_despite_transfer_cost() {
+    let mut p = common::platform();
+    // 28 × 16 cores = 448: every local core spoken for, for a long time
+    common::submit_cpu_batch(&mut p, 28, 16_000, 3000.0, false);
+    p.run_for(60.0, 15.0);
+
+    p.create_dataset("near", "user002", GB, vec![LOCAL_SITE.into()]).unwrap();
+    p.create_workflow_run(
+        "wf-off",
+        "user002",
+        "project01",
+        PriorityClass::Batch,
+        "workflow",
+        vec![stage("crunch", 4000, 1, 120.0, &["near"], &[("out", GB)], true)],
+    )
+    .unwrap();
+    p.run_for(1800.0, 15.0);
+
+    let run = p.workflow_run("wf-off").unwrap();
+    assert_eq!(run.phase, RunPhase::Succeeded, "{}", run.trace());
+    assert_eq!(
+        run.stage_states[0].site, "INFN-T1",
+        "queue wait (600 s penalty) must beat the 0.8 s transfer to the nearest site"
+    );
+    // 1 GB staged in to the site, 1 GB of output staged back
+    assert_eq!(run.bytes_staged, 2 * GB);
+    assert_eq!(p.metrics().workflow_offloaded_stages, 1);
+}
+
+// ------------------------------------------------------------ golden trace
+
+/// One federated-workflow scenario rendered as a text blob: per-run
+/// transition logs, cluster events, Kueue workload transitions. Stage
+/// durations and dataset sizes derive from the seed so distinct seeds
+/// produce genuinely different schedules.
+fn workflow_golden_trace(seed: u64) -> String {
+    let mut p = common::platform();
+    let hot = (50 + seed % 97) * GB;
+    let d = 100.0 + (seed % 7) as f64 * 20.0;
+    p.create_dataset("hot", "user005", hot, vec!["INFN-T1".into()]).unwrap();
+    p.create_dataset("cold", "user005", GB, vec![LOCAL_SITE.into()]).unwrap();
+    p.create_workflow_run(
+        "wf-golden",
+        "user005",
+        "project02",
+        PriorityClass::Batch,
+        "workflow",
+        vec![
+            stage("prep", 4000, 2, d, &["cold"], &[("clean", 2 * GB)], false),
+            stage("train", 8000, 3, 2.0 * d, &["hot"], &[("model", GB)], true),
+            stage("merge", 4000, 1, d, &["clean", "model"], &[("merged", GB)], true),
+            stage("publish", 2000, 1, d / 2.0, &["merged"], &[("bundle", GB / 4)], false),
+        ],
+    )
+    .unwrap();
+    common::submit_cpu_batch(&mut p, 2 + (seed % 5) as usize, 8000, 300.0, true);
+    p.run_for(3600.0, 15.0);
+
+    let mut out = String::new();
+    out.push_str(&p.workflow_trace());
+    {
+        let st = p.cluster();
+        for ev in st.events() {
+            out.push_str(&format!("{:10.3} {:?} {} {}\n", ev.at, ev.kind, ev.object, ev.message));
+        }
+    }
+    for t in p.workload_transitions_since(0) {
+        out.push_str(&format!("{:10.3} WORKLOAD {} {:?}\n", t.at, t.workload, t.state));
+    }
+    out
+}
+
+/// Same seed ⇒ byte-identical trace with the workflow engine live;
+/// different seed ⇒ different DAG timings, different trace.
+#[test]
+fn workflow_golden_trace_same_seed_is_byte_identical() {
+    let seed = common::test_seed();
+    let a = workflow_golden_trace(seed);
+    let b = workflow_golden_trace(seed);
+    assert!(a.contains("wf/wf-golden"), "trace must include workflow transitions");
+    assert!(a.contains("gang"), "trace must include gang submissions");
+    assert_eq!(a, b, "same seed must reproduce the workflow trace byte-for-byte");
+    let c = workflow_golden_trace(seed.wrapping_add(1));
+    assert_ne!(a, c, "different seeds must produce different traces");
+}
+
+// --------------------------------------------------------------- API verbs
+
+#[test]
+fn workflow_api_verbs_roundtrip() {
+    let mut api = common::api();
+    let token = api.login("user012").unwrap();
+
+    // datasets first: the run's external input must exist
+    let ds = DatasetResource::request("api-raw", "user012", 10 * GB, vec!["ReCaS-Bari".into()]);
+    let created = api.create(&token, &ApiObject::Dataset(ds.clone())).unwrap();
+    let view = created.as_dataset().unwrap();
+    assert_eq!(view.phase, "Ready");
+    assert_eq!(view.locations, vec!["ReCaS-Bari".to_string()]);
+    assert!(matches!(
+        api.create(&token, &ApiObject::Dataset(ds.clone())),
+        Err(ApiError::Conflict(_))
+    ));
+
+    let req = WorkflowRunResource::request(
+        "api-wf",
+        "user012",
+        "project06",
+        vec![stage_template("only", 2000, 1, 60.0, &["api-raw"], &[("api-out", GB)], true)],
+    );
+    let other = api.login("user013").unwrap();
+    assert!(matches!(
+        api.create(&other, &ApiObject::WorkflowRun(req.clone())),
+        Err(ApiError::Forbidden(_))
+    ));
+    let created = api.create(&token, &ApiObject::WorkflowRun(req.clone())).unwrap();
+    assert_eq!(created.as_workflow_run().unwrap().queue, "workflow");
+    assert!(matches!(
+        api.create(&token, &ApiObject::WorkflowRun(req)),
+        Err(ApiError::Conflict(_))
+    ));
+
+    // a run whose external input is not a registered dataset is rejected
+    let orphan = WorkflowRunResource::request(
+        "api-orphan",
+        "user012",
+        "project06",
+        vec![stage_template("only", 2000, 1, 60.0, &["no-such-data"], &[], false)],
+    );
+    assert!(api.create(&token, &ApiObject::WorkflowRun(orphan)).is_err());
+
+    // a cyclic stage graph is rejected by admission
+    let cyclic = WorkflowRunResource::request(
+        "api-cycle",
+        "user012",
+        "project06",
+        vec![
+            stage_template("a", 2000, 1, 60.0, &["x"], &[("y", GB)], false),
+            stage_template("b", 2000, 1, 60.0, &["y"], &[("x", GB)], false),
+        ],
+    );
+    assert!(matches!(
+        api.create(&token, &ApiObject::WorkflowRun(cyclic)),
+        Err(ApiError::Invalid(_))
+    ));
+
+    // the spec is immutable once submitted; labels still move
+    let got = api.get(&token, ResourceKind::WorkflowRun, "api-wf").unwrap();
+    let mut bad = got.as_workflow_run().unwrap().clone();
+    bad.stages[0].duration = 999.0;
+    assert!(matches!(
+        api.update(&token, &ApiObject::WorkflowRun(bad)),
+        Err(ApiError::Invalid(_))
+    ));
+    let mut relabel = got.as_workflow_run().unwrap().clone();
+    relabel.metadata.labels.insert("team".into(), "flav".into());
+    let updated = api.update(&token, &ApiObject::WorkflowRun(relabel)).unwrap();
+    assert_eq!(
+        updated.as_workflow_run().unwrap().metadata.labels.get("team"),
+        Some(&"flav".to_string())
+    );
+
+    // status subresource: conditions only
+    let mut st = updated.as_workflow_run().unwrap().clone();
+    st.conditions = vec![Condition::new("Paused", true, "ManualFlag", "ops note", 0.0)];
+    let after = api.update_status(&token, &ApiObject::WorkflowRun(st)).unwrap();
+    assert_eq!(after.as_workflow_run().unwrap().conditions.len(), 1);
+
+    // label-selector list sees the run
+    let listed = api
+        .list(&token, ResourceKind::WorkflowRun, &Selector::labels("app=workflow").unwrap())
+        .unwrap();
+    assert_eq!(listed.len(), 1);
+
+    // run it to completion, then delete: only the owner may
+    api.run_for(900.0, 15.0);
+    let done = api.get(&token, ResourceKind::WorkflowRun, "api-wf").unwrap();
+    assert_eq!(done.as_workflow_run().unwrap().phase, "Succeeded");
+    assert!(matches!(
+        api.delete(&other, ResourceKind::WorkflowRun, "api-wf"),
+        Err(ApiError::Forbidden(_))
+    ));
+    api.delete(&token, ResourceKind::WorkflowRun, "api-wf").unwrap();
+    api.run_for(60.0, 15.0);
+    assert!(matches!(
+        api.get(&token, ResourceKind::WorkflowRun, "api-wf"),
+        Err(ApiError::NotFound(_))
+    ));
+    assert!(api.platform().workflow_run("api-wf").is_none());
+
+    // deleting a dataset drops the record on the next tick
+    api.delete(&token, ResourceKind::Dataset, "api-raw").unwrap();
+    api.run_for(60.0, 15.0);
+    assert!(api.platform().dataset("api-raw").is_none());
+}
