@@ -303,9 +303,10 @@ pub struct ApiServer {
     store_seen: usize,
     kueue_seen: usize,
     health_seen: usize,
-    /// `Platform::coordinator_restarts` as of the last tick; when it
-    /// advances (a `CoordinatorCrash` fault restored from WAL + snapshot)
-    /// every derived read-path structure here is rebuilt, not trusted.
+    /// `Platform::coordinator_restarts` plus `Platform::failovers` as of
+    /// the last tick; when the sum advances (a `CoordinatorCrash` restore
+    /// or a standby promotion rebuilt the control plane) every derived
+    /// read-path structure here is rebuilt, not trusted.
     restarts_seen: u64,
 }
 
@@ -397,10 +398,10 @@ impl ApiServer {
         }
     }
 
-    /// Detect a coordinator crash-restore since the last tick and rebuild
-    /// the API server's derived state.
+    /// Detect a coordinator crash-restore or leader failover since the
+    /// last tick and rebuild the API server's derived state.
     fn check_restart(&mut self) {
-        let restarts = self.platform.coordinator_restarts();
+        let restarts = self.platform.coordinator_restarts() + self.platform.failovers();
         if restarts != self.restarts_seen {
             self.restarts_seen = restarts;
             self.rebuild_after_restore();

@@ -5,6 +5,7 @@
 pub mod kubelet;
 pub mod node;
 pub mod pod;
+pub mod replication;
 pub mod resources;
 pub mod scheduler;
 pub mod store;

@@ -1,0 +1,327 @@
+//! Hot-standby replication for the coordinator control plane.
+//!
+//! The leader ships WAL frames (see [`crate::cluster::wal`]) to a
+//! [`Replica`] over a simulated channel. The replica verifies each
+//! frame's CRC, enforces monotonic writer epochs (fencing deposed
+//! leaders), and re-frames accepted payloads into its own local log so
+//! promotion can replay them with the exact machinery `crash_and_restore`
+//! uses. Periodic snapshot transfer bounds catch-up: installing a
+//! snapshot clears the replica log and advances the ship cursor, so the
+//! replica only ever holds `snapshot + tail`.
+//!
+//! Leader election is lease-based and deterministic: the live leader
+//! renews its [`Lease`] at tick boundaries; when the platform observes
+//! the lease expired (leader killed or isolated by chaos), the standby
+//! promotes under a bumped epoch. Epoch fencing then rejects any write
+//! the deposed leader attempts after resurrection — both at the shipping
+//! channel (`min_epoch` here) and at the store/Kueue mutation guards.
+
+use std::fmt;
+
+use crate::cluster::wal::{Frame, Wal, WalReplay};
+use crate::sim::clock::Time;
+
+/// Why the standby refused a shipped frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShipError {
+    /// The frame's carried CRC does not match its contents: corruption
+    /// in flight (or on the leader's disk). The channel must stop — the
+    /// frame cannot be trusted and skipping it would leave a gap.
+    Corrupt { index: u64 },
+    /// The frame's writer epoch predates the fence: a deposed leader is
+    /// still writing. The write is dropped and counted, never applied.
+    Fenced { frame_epoch: u64, min_epoch: u64 },
+    /// The frame is not the next one expected. Shipping is strictly
+    /// sequential; a gap means the channel and replica desynchronized.
+    Gap { expected: u64, got: u64 },
+}
+
+impl fmt::Display for ShipError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShipError::Corrupt { index } => write!(f, "frame {index}: CRC mismatch on ingest"),
+            ShipError::Fenced { frame_epoch, min_epoch } => {
+                write!(f, "frame epoch {frame_epoch} fenced (min epoch {min_epoch})")
+            }
+            ShipError::Gap { expected, got } => {
+                write!(f, "shipping gap: expected frame {expected}, got {got}")
+            }
+        }
+    }
+}
+
+/// Ingest/shipping counters, surfaced through `PlatformMetrics`.
+#[derive(Debug, Default, Clone)]
+pub struct ReplicationStats {
+    /// Frames accepted into the replica log since creation.
+    pub frames_ingested: u64,
+    /// Snapshot transfers installed (each clears the replica log).
+    pub snapshots_installed: u64,
+    /// Stale-epoch frames rejected by the channel fence.
+    pub fenced_frames: u64,
+    /// Frames rejected for CRC mismatch.
+    pub corrupt_frames: u64,
+}
+
+/// The hot standby: latest transferred snapshot plus the shipped log
+/// tail since that snapshot. Promotion decodes the snapshot and replays
+/// the tail — the same restore path as local crash recovery.
+#[derive(Debug)]
+pub struct Replica {
+    snapshot: Vec<u8>,
+    snapshot_at: Time,
+    /// Shipped frames re-framed locally, preserving each original
+    /// writer epoch, so promotion reuses `Wal::replay_report`.
+    log: Wal,
+    /// Next absolute leader-log frame index this replica expects.
+    next_frame: u64,
+    /// Frames below this epoch are from deposed leaders — fenced.
+    min_epoch: u64,
+    pub stats: ReplicationStats,
+}
+
+impl Replica {
+    /// Seed a standby from the leader's current snapshot bytes and ship
+    /// cursor position.
+    pub fn new(snapshot: Vec<u8>, snapshot_at: Time, min_epoch: u64, next_frame: u64) -> Self {
+        Replica {
+            snapshot,
+            snapshot_at,
+            log: Wal::new(),
+            next_frame,
+            min_epoch,
+            stats: ReplicationStats::default(),
+        }
+    }
+
+    /// Accept one shipped frame. Order of checks matters: CRC first
+    /// (nothing in a corrupt frame can be trusted), then the epoch
+    /// fence, then sequencing.
+    pub fn ingest(&mut self, f: &Frame) -> Result<(), ShipError> {
+        if !f.verify() {
+            self.stats.corrupt_frames += 1;
+            return Err(ShipError::Corrupt { index: f.index });
+        }
+        if f.epoch < self.min_epoch {
+            self.stats.fenced_frames += 1;
+            return Err(ShipError::Fenced { frame_epoch: f.epoch, min_epoch: self.min_epoch });
+        }
+        if f.index != self.next_frame {
+            return Err(ShipError::Gap { expected: self.next_frame, got: f.index });
+        }
+        self.log.append_frame(f.epoch, &f.payload);
+        self.next_frame = f.index + 1;
+        self.stats.frames_ingested += 1;
+        Ok(())
+    }
+
+    /// Install a fresh snapshot transfer: replaces the held snapshot,
+    /// drops the now-compacted log tail, and advances the ship cursor to
+    /// the leader's post-compaction base frame.
+    pub fn install_snapshot(&mut self, bytes: Vec<u8>, at: Time, next_frame: u64) {
+        self.snapshot = bytes;
+        self.snapshot_at = at;
+        self.log.clear();
+        self.next_frame = next_frame;
+        self.stats.snapshots_installed += 1;
+    }
+
+    /// Raise the channel fence (promotion bumps this to the new epoch).
+    pub fn set_min_epoch(&mut self, epoch: u64) {
+        self.min_epoch = epoch;
+    }
+
+    pub fn min_epoch(&self) -> u64 {
+        self.min_epoch
+    }
+
+    /// Next absolute leader-log frame index expected on the channel.
+    pub fn next_frame(&self) -> u64 {
+        self.next_frame
+    }
+
+    /// Snapshot bytes as last transferred.
+    pub fn snapshot(&self) -> &[u8] {
+        &self.snapshot
+    }
+
+    pub fn snapshot_at(&self) -> Time {
+        self.snapshot_at
+    }
+
+    /// Frames held in the local log since the last snapshot install —
+    /// exactly what promotion will replay.
+    pub fn frames_since_snapshot(&self) -> u64 {
+        self.log.next_frame() - self.log.base_frame()
+    }
+
+    /// Decode the shipped tail for promotion replay. Damage surfaces as
+    /// a typed truncation, never a panic — promotion aborts cleanly.
+    pub fn replay(&self) -> WalReplay {
+        self.log.replay_report()
+    }
+
+    /// Bytes held in the replica's local log (the shipped tail).
+    pub fn log_len_bytes(&self) -> usize {
+        self.log.len_bytes()
+    }
+
+    /// Test hook: flip one byte of the replica's local log to model
+    /// standby-side storage corruption.
+    pub fn corrupt_log_byte(&mut self, at: usize) {
+        self.log.corrupt_byte(at);
+    }
+
+    /// Test hook: cut the held snapshot short to model a damaged
+    /// transfer (truncation always fails decode deterministically; a
+    /// flipped byte might decode to plausible garbage).
+    pub fn truncate_snapshot(&mut self, len: usize) {
+        self.snapshot.truncate(len);
+    }
+}
+
+/// The leader lease. Renewal is deterministic — the live, un-isolated
+/// leader renews at every tick boundary; expiry is the standby's signal
+/// to promote.
+#[derive(Debug, Clone)]
+pub struct Lease {
+    /// Epoch of the current holder (informational; fencing uses the
+    /// store/channel guards, not the lease).
+    pub holder_epoch: u64,
+    pub duration: Time,
+    pub expires_at: Time,
+}
+
+impl Lease {
+    pub fn new(holder_epoch: u64, duration: Time, now: Time) -> Self {
+        Lease { holder_epoch, duration, expires_at: now + duration }
+    }
+
+    pub fn renew(&mut self, now: Time) {
+        self.expires_at = now + self.duration;
+    }
+
+    pub fn expired(&self, now: Time) -> bool {
+        now >= self.expires_at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::wal::{StoreOp, WalRecord};
+
+    fn sample_frames(epoch: u64, n: usize) -> (Wal, Vec<Frame>) {
+        let mut w = Wal::new();
+        w.set_epoch(epoch);
+        for i in 0..n {
+            w.append(&WalRecord::Control(format!("op-{i}").into_bytes()));
+        }
+        let frames = w.frames(0, w.next_frame()).unwrap();
+        (w, frames)
+    }
+
+    #[test]
+    fn ingest_applies_in_order_and_replays() {
+        let (_, frames) = sample_frames(1, 3);
+        let mut r = Replica::new(Vec::new(), 0.0, 1, 0);
+        for f in &frames {
+            r.ingest(f).unwrap();
+        }
+        assert_eq!(r.stats.frames_ingested, 3);
+        assert_eq!(r.next_frame(), 3);
+        assert_eq!(r.frames_since_snapshot(), 3);
+        let rep = r.replay();
+        assert!(rep.truncation.is_none());
+        assert_eq!(rep.records.len(), 3);
+        assert!(rep.records.iter().all(|(e, _)| *e == 1));
+    }
+
+    #[test]
+    fn stale_epoch_frames_are_fenced_not_applied() {
+        let (_, frames) = sample_frames(1, 2);
+        let mut r = Replica::new(Vec::new(), 0.0, 2, 0);
+        for f in &frames {
+            assert!(matches!(
+                r.ingest(f),
+                Err(ShipError::Fenced { frame_epoch: 1, min_epoch: 2 })
+            ));
+        }
+        assert_eq!(r.stats.fenced_frames, 2);
+        assert_eq!(r.frames_since_snapshot(), 0, "fenced frames never enter the log");
+        // the cursor does not advance either: a fenced write is dropped,
+        // not acknowledged
+        assert_eq!(r.next_frame(), 0);
+    }
+
+    #[test]
+    fn corrupt_frame_is_rejected_before_any_other_check() {
+        let (_, frames) = sample_frames(1, 1);
+        let mut bad = frames[0].clone();
+        bad.payload[0] ^= 0xFF;
+        let mut r = Replica::new(Vec::new(), 0.0, 1, 0);
+        assert_eq!(r.ingest(&bad), Err(ShipError::Corrupt { index: 0 }));
+        assert_eq!(r.stats.corrupt_frames, 1);
+        assert_eq!(r.frames_since_snapshot(), 0);
+    }
+
+    #[test]
+    fn out_of_order_frame_is_a_gap_error() {
+        let (_, frames) = sample_frames(1, 2);
+        let mut r = Replica::new(Vec::new(), 0.0, 1, 0);
+        assert_eq!(
+            r.ingest(&frames[1]),
+            Err(ShipError::Gap { expected: 0, got: 1 })
+        );
+        r.ingest(&frames[0]).unwrap();
+        r.ingest(&frames[1]).unwrap();
+        assert_eq!(r.next_frame(), 2);
+    }
+
+    #[test]
+    fn snapshot_install_clears_tail_and_advances_cursor() {
+        let (_, frames) = sample_frames(1, 3);
+        let mut r = Replica::new(vec![1, 2, 3], 0.0, 1, 0);
+        for f in &frames {
+            r.ingest(f).unwrap();
+        }
+        r.install_snapshot(vec![9, 9], 120.0, 3);
+        assert_eq!(r.snapshot(), &[9, 9]);
+        assert_eq!(r.snapshot_at(), 120.0);
+        assert_eq!(r.frames_since_snapshot(), 0);
+        assert_eq!(r.next_frame(), 3);
+        assert_eq!(r.stats.snapshots_installed, 1);
+        // shipping resumes seamlessly from the post-compaction cursor
+        let mut w = Wal::new();
+        w.set_epoch(1);
+        for _ in 0..4 {
+            w.append(&WalRecord::Store(StoreOp::GcFinished { before: 0.0 }));
+        }
+        let tail = w.frames(3, 4).unwrap();
+        r.ingest(&tail[0]).unwrap();
+        assert_eq!(r.frames_since_snapshot(), 1);
+    }
+
+    #[test]
+    fn corrupted_replica_log_surfaces_typed_truncation() {
+        let (_, frames) = sample_frames(1, 3);
+        let mut r = Replica::new(Vec::new(), 0.0, 1, 0);
+        for f in &frames {
+            r.ingest(f).unwrap();
+        }
+        r.corrupt_log_byte(20);
+        let rep = r.replay();
+        assert!(rep.truncation.is_some(), "damage must be reported, not ignored");
+        assert!(rep.records.len() < 3);
+    }
+
+    #[test]
+    fn lease_renewal_and_expiry_are_deterministic() {
+        let mut l = Lease::new(1, 30.0, 100.0);
+        assert!(!l.expired(129.9));
+        assert!(l.expired(130.0), "expiry boundary is inclusive");
+        l.renew(125.0);
+        assert!(!l.expired(130.0));
+        assert!(l.expired(155.0));
+    }
+}

@@ -98,6 +98,15 @@ pub struct ClusterStore {
     /// recovered by replay. Not part of snapshots — the platform
     /// re-attaches after a restore.
     wal: Option<WalHandle>,
+    /// Epoch (leader term) of the writer driving this store. Like the
+    /// wal handle, not snapshot state — the platform re-sets it after a
+    /// restore or promotion.
+    writer_epoch: u64,
+    /// Mutations from writer epochs below this are fenced (dropped and
+    /// counted): the split-brain guard raised at promotion.
+    fenced_below: u64,
+    /// Stale-epoch mutations rejected at the guard.
+    fenced_writes: u64,
 }
 
 /// Apply a free-vector change to the inverted capacity index: for every
@@ -139,6 +148,41 @@ impl ClusterStore {
 
     pub fn resource_version(&self) -> u64 {
         self.resource_version
+    }
+
+    // ----------------------------------------------------------- fencing
+
+    /// Set the epoch (leader term) of the writer driving this store.
+    /// Promotion bumps it; resurrecting a deposed leader rolls it back.
+    pub fn set_writer_epoch(&mut self, epoch: u64) {
+        self.writer_epoch = epoch;
+    }
+
+    pub fn writer_epoch(&self) -> u64 {
+        self.writer_epoch
+    }
+
+    /// Raise the split-brain fence: mutations from writer epochs below
+    /// `epoch` are dropped at method entry (and counted) from here on.
+    pub fn set_fence(&mut self, epoch: u64) {
+        self.fenced_below = epoch;
+    }
+
+    /// Stale-epoch mutations rejected since the store was created.
+    pub fn fenced_writes(&self) -> u64 {
+        self.fenced_writes
+    }
+
+    /// The mutation-entry guard: true (and counted) when the writer's
+    /// epoch predates the fence — the mutation must not execute, and
+    /// must not be logged.
+    fn fenced(&mut self) -> bool {
+        if self.writer_epoch < self.fenced_below {
+            self.fenced_writes += 1;
+            true
+        } else {
+            false
+        }
     }
 
     // --------------------------------------------------------------- wal
@@ -222,6 +266,9 @@ impl ClusterStore {
     // ------------------------------------------------------------- nodes
 
     pub fn add_node(&mut self, node: Node, at: Time) {
+        if self.fenced() {
+            return;
+        }
         self.log_op(|| StoreOp::AddNode { node: node.clone(), at });
         self.bump();
         let old = self.free.get(&node.name).cloned().unwrap_or_default();
@@ -232,6 +279,9 @@ impl ClusterStore {
     }
 
     pub fn remove_node(&mut self, name: &str, at: Time) -> Option<Node> {
+        if self.fenced() {
+            return None;
+        }
         self.log_op(|| StoreOp::RemoveNode { name: name.to_string(), at });
         self.bump();
         if let Some(old) = self.free.remove(name) {
@@ -257,6 +307,9 @@ impl ClusterStore {
     /// event when the state actually changes; returns false for unknown
     /// nodes.
     pub fn set_node_ready(&mut self, name: &str, ready: bool, at: Time, msg: &str) -> bool {
+        if self.fenced() {
+            return false;
+        }
         self.log_op(|| StoreOp::SetNodeReady {
             name: name.to_string(),
             ready,
@@ -340,6 +393,9 @@ impl ClusterStore {
         layout: MigLayout,
         at: Time,
     ) -> anyhow::Result<(ResourceVec, ResourceVec)> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| StoreOp::RepartitionGpu {
             node: node_name.to_string(),
             device: device_id.to_string(),
@@ -419,6 +475,9 @@ impl ClusterStore {
     /// and (via its empty-vector fallback) zero out the node's CPU and
     /// memory too. Returns the units actually removed.
     pub fn degrade_resource(&mut self, node: &str, resource: &str, count: i64, at: Time) -> i64 {
+        if self.fenced() {
+            return 0;
+        }
         self.log_op(|| StoreOp::DegradeResource {
             node: node.to_string(),
             resource: resource.to_string(),
@@ -456,6 +515,9 @@ impl ClusterStore {
     /// owns the owed-units bookkeeping (the platform's degraded map) and
     /// passes an already-clamped amount.
     pub fn recover_resource(&mut self, node: &str, resource: &str, give: i64, at: Time) {
+        if self.fenced() {
+            return;
+        }
         self.log_op(|| StoreOp::RecoverResource {
             node: node.to_string(),
             resource: resource.to_string(),
@@ -488,6 +550,9 @@ impl ClusterStore {
 
     /// Create a pod in Pending and enqueue it for scheduling.
     pub fn create_pod(&mut self, spec: PodSpec, at: Time) -> String {
+        if self.fenced() {
+            return spec.name;
+        }
         self.log_op(|| StoreOp::CreatePod { spec: spec.clone(), at });
         self.bump();
         let name = spec.name.clone();
@@ -546,6 +611,9 @@ impl ClusterStore {
 
     /// Bind a pending pod to a node (scheduler decision). Reserves capacity.
     pub fn bind(&mut self, pod_name: &str, node_name: &str, at: Time) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| StoreOp::Bind {
             pod: pod_name.to_string(),
             node: node_name.to_string(),
@@ -576,6 +644,9 @@ impl ClusterStore {
 
     /// Transition Scheduled → Running.
     pub fn mark_running(&mut self, pod_name: &str, at: Time) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| StoreOp::MarkRunning { pod: pod_name.to_string(), at });
         self.bump();
         let pod = self
@@ -591,6 +662,9 @@ impl ClusterStore {
 
     /// Terminal transition; releases node capacity.
     pub fn finish_pod(&mut self, pod_name: &str, phase: PodPhase, at: Time, msg: &str) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| StoreOp::FinishPod {
             pod: pod_name.to_string(),
             phase,
@@ -604,6 +678,9 @@ impl ClusterStore {
     /// Evict a running/scheduled pod (releases capacity, back to Pending if
     /// requeue=true, else marked Evicted permanently).
     pub fn evict_pod(&mut self, pod_name: &str, at: Time, requeue: bool, msg: &str) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| StoreOp::EvictPod {
             pod: pod_name.to_string(),
             at,
@@ -627,6 +704,9 @@ impl ClusterStore {
     /// Cancel a pod that is still Pending (holds no capacity): removes it
     /// from the scheduling queue and marks it Evicted.
     pub fn cancel_pending(&mut self, pod_name: &str, at: Time, msg: &str) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| StoreOp::CancelPending {
             pod: pod_name.to_string(),
             at,
@@ -697,6 +777,9 @@ impl ClusterStore {
     /// Releases reserved capacity if the pod was live, drops it from the
     /// pending queue, and records a `PodDeleted` event.
     pub fn delete_pod(&mut self, pod_name: &str, at: Time, msg: &str) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| StoreOp::DeletePod {
             pod: pod_name.to_string(),
             at,
@@ -738,6 +821,9 @@ impl ClusterStore {
 
     /// Remove terminal pods older than `before` (GC).
     pub fn gc_finished(&mut self, before: Time) -> usize {
+        if self.fenced() {
+            return 0;
+        }
         self.log_op(|| StoreOp::GcFinished { before });
         let victims: Vec<String> = self
             .pods
@@ -770,6 +856,9 @@ impl ClusterStore {
     /// use the private [`push_event`](Self::push_event) instead: their
     /// events are reproduced by replaying the op that emitted them.
     pub fn record(&mut self, at: Time, kind: EventKind, object: &str, message: &str) {
+        if self.fenced() {
+            return;
+        }
         self.log_op(|| StoreOp::Record {
             at,
             kind,
@@ -798,6 +887,9 @@ impl ClusterStore {
     /// Reconfigure the event log's retained window (the
     /// `control_plane.compaction_window` config knob).
     pub fn set_event_capacity(&mut self, capacity: usize) {
+        if self.fenced() {
+            return;
+        }
         self.log_op(|| StoreOp::SetEventCapacity { capacity });
         self.events.set_capacity(capacity);
     }
@@ -945,6 +1037,9 @@ impl Dec for ClusterStore {
             free: HashMap::new(),
             free_index: HashMap::new(),
             wal: None,
+            writer_epoch: 0,
+            fenced_below: 0,
+            fenced_writes: 0,
         };
         let names: Vec<String> = s.nodes.keys().cloned().collect();
         for n in &names {
@@ -1227,6 +1322,35 @@ mod tests {
         );
         assert_eq!(restored.events().len(), s.events().len());
         assert_eq!(restored.event_cursor(), s.event_cursor());
+    }
+
+    #[test]
+    fn fence_rejects_stale_epoch_writes_without_logging() {
+        use crate::cluster::wal::Wal;
+        let wal = Wal::shared();
+        let mut s = store_with_node();
+        s.attach_wal(wal.clone());
+        s.set_writer_epoch(1);
+        s.create_pod(pod("p1", 1000, 0), 1.0);
+        let rv = s.resource_version();
+        let logged = wal.borrow().appended();
+        // the fence goes up (promotion happened elsewhere); this writer
+        // is now deposed
+        s.set_fence(2);
+        assert!(s.bind("p1", "n1", 2.0).is_err());
+        s.create_pod(pod("p2", 1000, 0), 2.0);
+        assert!(!s.set_node_ready("n1", false, 2.0, "cordon"));
+        s.record(2.0, EventKind::PodUnschedulable, "p1", "x");
+        assert_eq!(s.gc_finished(100.0), 0);
+        // nothing changed, nothing was logged, every rejection counted
+        assert_eq!(s.resource_version(), rv, "fenced writes must not touch state");
+        assert!(s.pod("p2").is_none());
+        assert_eq!(wal.borrow().appended(), logged, "fenced writes must not reach the wal");
+        assert_eq!(s.fenced_writes(), 5);
+        // restoring the epoch (a legitimate new leader) lifts the fence
+        s.set_writer_epoch(2);
+        s.bind("p1", "n1", 3.0).unwrap();
+        assert_eq!(s.fenced_writes(), 5);
     }
 
     #[test]

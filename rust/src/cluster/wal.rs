@@ -11,14 +11,23 @@
 //! Frame format, per record:
 //!
 //! ```text
-//! [len: u32 LE] [crc: u32 LE] [payload: len bytes]
+//! [len: u32 LE] [crc: u32 LE] [epoch: u64 LE] [payload: len bytes]
 //! ```
 //!
-//! `crc` is [`checksum`] over the payload. [`Wal::replay`] walks frames
-//! from the start and stops at the first short, torn, or corrupt frame —
-//! exactly the durable prefix an fsync'd file would guarantee — returning
-//! the decoded records plus a warning describing the discarded tail, if
-//! any.
+//! `epoch` is the writer's leader term (see
+//! [`cluster::replication`](crate::cluster::replication)): a hot standby
+//! consuming shipped frames rejects any frame whose epoch predates the
+//! current term, so a deposed leader's tail cannot corrupt the replica.
+//! `crc` is [`checksum`] over the epoch bytes followed by the payload.
+//! [`Wal::replay`] walks frames from the start and stops at the first
+//! short, torn, or corrupt frame — exactly the durable prefix an fsync'd
+//! file would guarantee — returning the decoded records plus a typed
+//! [`WalTruncation`] describing the discarded tail, if any.
+//!
+//! Frames also carry an *absolute* index that survives
+//! [`clear`](Wal::clear) (snapshot compaction): the shipping channel keeps
+//! a cursor of absolute indexes, so a snapshot on the leader cannot make
+//! the standby silently skip or re-apply frames.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -411,12 +420,76 @@ impl Dec for WalRecord {
 
 // --------------------------------------------------------------------- wal
 
+/// One framed record as seen by the shipping channel: its absolute index
+/// in the log's lifetime (survives compaction), the writer epoch stamped
+/// in the frame header, and the raw payload. The CRC travels with the
+/// frame and is re-verified by the standby on ingest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub index: u64,
+    pub epoch: u64,
+    /// Header checksum as read from the log — carried as data, so the
+    /// standby detects in-flight corruption by recomputing and comparing.
+    pub crc: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Recompute the checksum (over epoch bytes ++ payload) and compare
+    /// against the carried header value.
+    pub fn verify(&self) -> bool {
+        frame_crc(self.epoch, &self.payload) == self.crc
+    }
+}
+
+fn frame_crc(epoch: u64, payload: &[u8]) -> u32 {
+    let mut b = Vec::with_capacity(8 + payload.len());
+    epoch.enc(&mut b);
+    b.extend_from_slice(payload);
+    checksum(&b)
+}
+
+/// Typed outcome of a replay: decoded records with their writer epochs,
+/// plus a typed description of any discarded tail.
+#[derive(Debug, Clone)]
+pub struct WalReplay {
+    pub records: Vec<(u64, WalRecord)>,
+    pub truncation: Option<WalTruncation>,
+}
+
+/// A replay that stopped early: where, why, and how much survived. The
+/// operator-visible form of a torn or corrupt tail — restore and
+/// promotion count it as `wal_replay_truncated` and surface a typed
+/// Condition instead of a silent warning string.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalTruncation {
+    /// Byte offset of the first frame that failed to decode.
+    pub at_byte: usize,
+    /// Intact frames recovered before the damage.
+    pub frames_kept: u64,
+    /// What failed: torn header, torn payload, checksum, or codec error.
+    pub detail: String,
+}
+
+impl std::fmt::Display for WalTruncation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({} intact frames kept)", self.detail, self.frames_kept)
+    }
+}
+
 /// The write-ahead log: an append-only byte buffer of checksummed frames.
 #[derive(Debug, Default)]
 pub struct Wal {
     buf: Vec<u8>,
     /// Records appended since the buffer was last cleared (stat surface).
     appended: u64,
+    /// Writer epoch (leader term) stamped into every appended frame.
+    epoch: u64,
+    /// Byte offset of each frame currently in the buffer (ship index).
+    offsets: Vec<usize>,
+    /// Absolute (lifetime) index of `offsets[0]`: [`clear`](Self::clear)
+    /// advances it, so ship cursors survive snapshot compaction.
+    base_frame: u64,
 }
 
 impl Wal {
@@ -429,56 +502,130 @@ impl Wal {
         Rc::new(RefCell::new(Wal::new()))
     }
 
-    /// Frame and append one record.
+    /// Frame and append one record under the current writer epoch.
     pub fn append(&mut self, rec: &WalRecord) {
         let payload = rec.to_bytes();
+        self.append_frame(self.epoch, &payload);
+    }
+
+    /// Append a pre-encoded payload under an explicit writer epoch — the
+    /// standby's ingest path re-frames shipped frames through this,
+    /// preserving the original writer's epoch instead of stamping its own.
+    pub fn append_frame(&mut self, epoch: u64, payload: &[u8]) {
+        self.offsets.push(self.buf.len());
         (payload.len() as u32).enc(&mut self.buf);
-        checksum(&payload).enc(&mut self.buf);
-        self.buf.extend_from_slice(&payload);
+        frame_crc(epoch, payload).enc(&mut self.buf);
+        epoch.enc(&mut self.buf);
+        self.buf.extend_from_slice(payload);
         self.appended += 1;
+    }
+
+    /// Set the writer epoch stamped into subsequent frames (bumped on
+    /// promotion; a deposed leader keeps its stale epoch and is fenced).
+    pub fn set_epoch(&mut self, epoch: u64) {
+        self.epoch = epoch;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Absolute index of the next frame to be appended (lifetime counter;
+    /// survives [`clear`](Self::clear)).
+    pub fn next_frame(&self) -> u64 {
+        self.base_frame + self.offsets.len() as u64
+    }
+
+    /// Absolute index of the oldest frame still in the buffer.
+    pub fn base_frame(&self) -> u64 {
+        self.base_frame
+    }
+
+    /// Decode the frames with absolute index in `[from, to)` for log
+    /// shipping. Indexes outside the retained buffer are clamped (frames
+    /// below `base_frame` were compacted into a snapshot the standby gets
+    /// separately). Damaged framing is a typed error, never a silent
+    /// skip — a gap would desynchronize the standby.
+    pub fn frames(&self, from: u64, to: u64) -> Result<Vec<Frame>, CodecError> {
+        let lo = from.max(self.base_frame);
+        let hi = to.min(self.next_frame());
+        let mut out = Vec::new();
+        for abs in lo..hi {
+            let off = self.offsets[(abs - self.base_frame) as usize];
+            let tail = self
+                .buf
+                .get(off..)
+                .ok_or_else(|| CodecError(format!("frame {abs}: offset {off} out of bounds")))?;
+            let mut r = Reader::new(tail);
+            let len = u32::dec(&mut r)?;
+            let crc = u32::dec(&mut r)?;
+            let epoch = u64::dec(&mut r)?;
+            let payload = r.take(len as usize)?;
+            if frame_crc(epoch, payload) != crc {
+                return Err(CodecError(format!("frame {abs}: CRC mismatch at ship time")));
+            }
+            out.push(Frame { index: abs, epoch, crc, payload: payload.to_vec() });
+        }
+        Ok(out)
     }
 
     /// Decode every intact frame from the start of the log. Stops at the
     /// first short header, truncated payload, checksum mismatch, or
     /// undecodable payload — the torn tail a crash mid-append leaves —
-    /// and reports it as a warning instead of an error: everything before
-    /// the tear is the durable prefix.
-    pub fn replay(&self) -> (Vec<WalRecord>, Option<String>) {
-        let mut out = Vec::new();
+    /// reporting it as a typed [`WalTruncation`]: everything before the
+    /// tear is the durable prefix.
+    pub fn replay_report(&self) -> WalReplay {
+        let mut records: Vec<(u64, WalRecord)> = Vec::new();
         let mut r = Reader::new(&self.buf);
+        macro_rules! truncated {
+            ($at:expr, $($detail:tt)*) => {
+                return WalReplay {
+                    truncation: Some(WalTruncation {
+                        at_byte: $at,
+                        frames_kept: records.len() as u64,
+                        detail: format!($($detail)*),
+                    }),
+                    records,
+                }
+            };
+        }
         while !r.is_empty() {
             let offset = self.buf.len() - r.remaining();
-            let header = (u32::dec(&mut r), u32::dec(&mut r));
-            let (len, crc) = match header {
-                (Ok(len), Ok(crc)) => (len, crc),
-                _ => {
-                    return (out, Some(format!("torn frame header at byte {offset}")));
-                }
+            let header = (u32::dec(&mut r), u32::dec(&mut r), u64::dec(&mut r));
+            let (len, crc, epoch) = match header {
+                (Ok(len), Ok(crc), Ok(epoch)) => (len, crc, epoch),
+                _ => truncated!(offset, "torn frame header at byte {offset}"),
             };
             let payload = match r.take(len as usize) {
                 Ok(p) => p,
-                Err(_) => {
-                    return (
-                        out,
-                        Some(format!("torn payload at byte {offset} (wanted {len} bytes)")),
-                    );
-                }
+                Err(_) => truncated!(offset, "torn payload at byte {offset} (wanted {len} bytes)"),
             };
-            if checksum(payload) != crc {
-                return (out, Some(format!("checksum mismatch at byte {offset}")));
+            if frame_crc(epoch, payload) != crc {
+                truncated!(offset, "checksum mismatch at byte {offset}");
             }
             match WalRecord::from_bytes(payload) {
-                Ok(rec) => out.push(rec),
-                Err(e) => {
-                    return (out, Some(format!("undecodable record at byte {offset}: {e}")));
-                }
+                Ok(rec) => records.push((epoch, rec)),
+                Err(e) => truncated!(offset, "undecodable record at byte {offset}: {e}"),
             }
         }
-        (out, None)
+        WalReplay { records, truncation: None }
+    }
+
+    /// Back-compat surface over [`replay_report`](Self::replay_report):
+    /// records without epochs, truncation flattened to a warning string.
+    pub fn replay(&self) -> (Vec<WalRecord>, Option<String>) {
+        let rep = self.replay_report();
+        (
+            rep.records.into_iter().map(|(_, rec)| rec).collect(),
+            rep.truncation.map(|t| t.detail),
+        )
     }
 
     /// Drop every record (after the state it covers was snapshotted).
+    /// Advances `base_frame` so absolute ship cursors stay meaningful.
     pub fn clear(&mut self) {
+        self.base_frame += self.offsets.len() as u64;
+        self.offsets.clear();
         self.buf.clear();
         self.appended = 0;
     }
@@ -497,8 +644,11 @@ impl Wal {
     }
 
     /// Test hook: keep only the first `keep` bytes — a torn write.
+    /// Frames starting at or past the cut vanish from the ship index too
+    /// (a torn write never produced them on the durable device).
     pub fn truncate_bytes(&mut self, keep: usize) {
         self.buf.truncate(keep);
+        self.offsets.retain(|&o| o < keep);
     }
 
     /// Test hook: flip one byte — simulated media corruption.
@@ -579,6 +729,93 @@ mod tests {
         let (recs, warn) = w.replay();
         assert_eq!(recs.len(), 1, "only the frame before the corruption survives");
         assert!(warn.unwrap().contains("checksum mismatch"));
+    }
+
+    #[test]
+    fn frames_carry_epochs_and_absolute_indexes_across_compaction() {
+        let mut w = Wal::new();
+        w.set_epoch(3);
+        let ops = sample_ops();
+        w.append(&ops[0]);
+        w.append(&ops[1]);
+        assert_eq!((w.base_frame(), w.next_frame()), (0, 2));
+        let frames = w.frames(0, w.next_frame()).unwrap();
+        assert_eq!(frames.len(), 2);
+        assert!(frames.iter().all(|f| f.epoch == 3));
+        assert_eq!(frames[1].index, 1);
+        assert_eq!(frames[1].payload, ops[1].to_bytes());
+        // replay surfaces the epochs too
+        let rep = w.replay_report();
+        assert!(rep.truncation.is_none());
+        assert_eq!(rep.records[0].0, 3);
+        // compaction advances the absolute base; old cursors clamp
+        w.clear();
+        w.set_epoch(4);
+        w.append(&ops[2]);
+        assert_eq!((w.base_frame(), w.next_frame()), (2, 3));
+        let tail = w.frames(0, w.next_frame()).unwrap();
+        assert_eq!(tail.len(), 1, "compacted frames are not re-shipped");
+        assert_eq!((tail[0].index, tail[0].epoch), (2, 4));
+        // an explicit-epoch re-frame (standby ingest) preserves the
+        // original writer's epoch
+        w.append_frame(3, &ops[3].to_bytes());
+        let f = w.frames(3, 4).unwrap().remove(0);
+        assert_eq!(f.epoch, 3);
+        assert_eq!(f.crc, frame_crc(3, &ops[3].to_bytes()));
+        assert!(f.verify());
+    }
+
+    #[test]
+    fn replay_report_truncation_is_typed() {
+        let mut w = Wal::new();
+        for rec in sample_ops() {
+            w.append(&rec);
+        }
+        let len = w.len_bytes();
+        w.truncate_bytes(len - 2);
+        let rep = w.replay_report();
+        let t = rep.truncation.expect("torn tail must be reported");
+        assert_eq!(t.frames_kept, 3);
+        assert_eq!(rep.records.len(), 3);
+        assert!(t.detail.contains("torn"), "{t}");
+        assert!(t.at_byte < len);
+    }
+
+    /// Fuzz-style sweep: flipping any single byte of the log must never
+    /// panic replay — every outcome is a clean prefix plus a typed
+    /// truncation (or, if the flip lands in a payload that still decodes,
+    /// a checksum rejection). The durability-critical decode surface has
+    /// no unwrap that hostile bytes can reach.
+    #[test]
+    fn single_byte_corruption_never_panics_replay() {
+        let pristine = {
+            let mut w = Wal::new();
+            w.set_epoch(2);
+            for rec in sample_ops() {
+                w.append(&rec);
+            }
+            w
+        };
+        let total = pristine.len_bytes();
+        let intact = pristine.replay_report().records.len();
+        for at in 0..total {
+            let mut w = Wal::new();
+            w.set_epoch(2);
+            for rec in sample_ops() {
+                w.append(&rec);
+            }
+            w.corrupt_byte(at);
+            let rep = w.replay_report();
+            assert!(
+                rep.records.len() <= intact,
+                "byte {at}: corruption must never add records"
+            );
+            if rep.records.len() < intact {
+                assert!(rep.truncation.is_some(), "byte {at}: lost records need a report");
+            }
+            // shipping the damaged range errors instead of panicking
+            let _ = w.frames(0, w.next_frame());
+        }
     }
 
     #[test]

@@ -201,10 +201,47 @@
 //! and restored mid-campaign converges to a byte-identical transition log
 //! versus an uninterrupted run of the same seed.
 //!
+//! ## Coordinator high availability
+//!
+//! Crash tolerance restores the *same* coordinator; the replication layer
+//! ([`cluster::replication`]) keeps a hot standby so a killed or
+//! partitioned coordinator is *replaced* instead. The leader ships every
+//! WAL frame — now carrying a writer-epoch header alongside the CRC — to
+//! a [`Replica`](cluster::replication::Replica) that verifies CRCs,
+//! enforces the epoch fence, and re-frames the tail into its own log;
+//! periodic snapshot transfers (piggybacked on WAL compaction) bound
+//! catch-up to `snapshot + tail`. Election is lease-based and
+//! deterministic: the live leader renews its
+//! [`Lease`](cluster::replication::Lease) at tick boundaries, and when
+//! chaos kills ([`sim::chaos::Fault::LeaderKill`]) or isolates
+//! ([`sim::chaos::Fault::LeaderIsolate`]) the leader, lease expiry
+//! triggers promotion — the standby replays its shipped tail through the
+//! same restore path `crash_and_restore` uses, under a bumped epoch.
+//! Every store/Kueue mutation checks the writer epoch against a fence, so
+//! a deposed leader that resurrects finds all of its writes rejected and
+//! counted (`fenced_writes`), at both the shipping channel and the state
+//! guards. Acknowledged work survives: with `replication.max_ship_lag_frames`
+//! = 0 the promoted standby converges to a byte-identical trace versus an
+//! uninterrupted twin (`rust/tests/replication.rs`); a nonzero holdback
+//! bounds the measured loss (`unshipped_frames_lost`) by exactly that
+//! many frames. Knobs: `replication.enabled`, `replication.lease_seconds`,
+//! `replication.max_ship_lag_frames`.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for measured results.
 //!
 //! [`Platform`]: platform::facade::Platform
+
+// The clippy CI job is blocking (`-D warnings`). These allowances are the
+// curated remainder: style lints where the simulation codebase's idiom is
+// deliberate (big config/spec structs, explicit match arms over derived
+// traits), not lints that can hide bugs. Threshold-style knobs live in
+// .clippy.toml.
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::large_enum_variant)]
+#![allow(clippy::result_large_err)]
+#![allow(clippy::new_without_default)]
 
 pub mod api;
 pub mod baseline;

@@ -102,6 +102,20 @@ pub struct PlatformConfig {
     /// Seconds between snapshots (WAL truncates at each). Config key:
     /// `durability.snapshot_interval_seconds`.
     pub durability_snapshot_interval: f64,
+    /// Coordinator high availability: ship WAL frames to a hot standby,
+    /// hold a leader lease, and fail over (with epoch fencing) when the
+    /// lease expires. Implies durability. Config key:
+    /// `replication.enabled`.
+    pub replication_enabled: bool,
+    /// Leader lease duration in seconds; the live leader renews every
+    /// tick, and the standby promotes once the lease has been expired.
+    /// Config key: `replication.lease_seconds`.
+    pub replication_lease_seconds: f64,
+    /// Shipping holdback in frames: the channel never ships the newest N
+    /// frames (models async replication lag), so a leader kill can lose
+    /// at most this many unshipped mutations. Config key:
+    /// `replication.max_ship_lag_frames`.
+    pub replication_max_ship_lag: u64,
     /// LocalQueue workflow stage gangs are submitted to (the admission
     /// chain defaults `spec.queue` on WorkflowRun writes from this).
     /// Config key: `workflow.queue`.
@@ -279,6 +293,19 @@ impl PlatformConfig {
                 .at(&["durability", "snapshot_interval_seconds"])
                 .and_then(Json::as_f64)
                 .unwrap_or(900.0),
+            replication_enabled: j
+                .at(&["replication", "enabled"])
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            replication_lease_seconds: j
+                .at(&["replication", "lease_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(30.0),
+            replication_max_ship_lag: j
+                .at(&["replication", "max_ship_lag_frames"])
+                .and_then(Json::as_i64)
+                .map(|v| v.max(0) as u64)
+                .unwrap_or(0),
             workflow_queue: j
                 .at(&["workflow", "queue"])
                 .and_then(Json::as_str)
@@ -431,6 +458,26 @@ mod tests {
         .unwrap();
         assert!(tuned.durability_enabled);
         assert_eq!(tuned.durability_snapshot_interval, 120.0);
+    }
+
+    #[test]
+    fn replication_knobs_parse_with_defaults() {
+        // off by default: single-coordinator durability stays the baseline
+        let minimal = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}]}"#,
+        )
+        .unwrap();
+        assert!(!minimal.replication_enabled);
+        assert_eq!(minimal.replication_lease_seconds, 30.0);
+        assert_eq!(minimal.replication_max_ship_lag, 0);
+        let tuned = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}],
+                "replication":{"enabled":true,"lease_seconds":10,"max_ship_lag_frames":4}}"#,
+        )
+        .unwrap();
+        assert!(tuned.replication_enabled);
+        assert_eq!(tuned.replication_lease_seconds, 10.0);
+        assert_eq!(tuned.replication_max_ship_lag, 4);
     }
 
     #[test]

@@ -23,13 +23,14 @@ use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
 
-use crate::api::resources::ResourceKind;
+use crate::api::resources::{Condition, ResourceKind};
 use crate::cluster::kubelet::{default_oracle, Kubelet};
 use crate::cluster::pod::{Payload, PodPhase, PodSpec};
+use crate::cluster::replication::{Lease, Replica, ReplicationStats};
 use crate::cluster::resources::{ResourceVec, MEMORY};
 use crate::cluster::scheduler::Scheduler;
 use crate::cluster::store::ClusterStore;
-use crate::cluster::wal::{Wal, WalHandle, WalRecord};
+use crate::cluster::wal::{Wal, WalHandle, WalRecord, WalTruncation};
 use crate::gpu::dcgm::DcgmSimulator;
 use crate::hub::auth::AuthService;
 use crate::hub::profiles::Profile;
@@ -186,6 +187,52 @@ struct Durability {
     last_snapshot: Time,
 }
 
+/// Hot-standby replication riding on top of [`Durability`]: the standby
+/// [`Replica`], the leader's ship cursor into the shared WAL, the leader
+/// [`Lease`], and the liveness flags chaos toggles. See
+/// [`crate::cluster::replication`] for the channel semantics.
+struct Replication {
+    replica: Replica,
+    /// Next absolute WAL frame index to ship to the standby.
+    ship_cursor: u64,
+    /// Newest frames held back at each pump — the simulated channel's
+    /// bounded lag (`replication.max_ship_lag_frames`).
+    max_ship_lag: u64,
+    lease: Lease,
+    /// False between a `Fault::LeaderKill` and the standby's promotion.
+    leader_alive: bool,
+    /// True while a `Fault::LeaderIsolate` partition severs lease renewal,
+    /// frame shipping, and snapshot transfer (split-brain window).
+    leader_isolated: bool,
+    /// Epoch of the most recently deposed leader (split-brain test hooks).
+    deposed_epoch: u64,
+}
+
+/// Operator-visible outcome of the most recent restore or promotion —
+/// the typed surface over what used to be a silent log-line when the WAL
+/// tail was torn or corrupt.
+#[derive(Debug, Clone)]
+pub struct RestoreReport {
+    pub at: Time,
+    /// `"restore"` (local crash recovery) or `"promotion"` (failover).
+    pub kind: &'static str,
+    /// WAL records replayed on top of the snapshot.
+    pub frames_replayed: u64,
+    /// The discarded tail, when replay stopped early.
+    pub truncation: Option<WalTruncation>,
+}
+
+impl RestoreReport {
+    /// Project onto an API condition: `WalIntact` is false when a tail
+    /// was discarded, with the typed truncation as the message.
+    pub fn condition(&self) -> Condition {
+        match &self.truncation {
+            None => Condition::new("WalIntact", true, self.kind, "wal replayed fully", self.at),
+            Some(t) => Condition::new("WalIntact", false, self.kind, &t.to_string(), self.at),
+        }
+    }
+}
+
 /// Spawn-latency and eviction counters (E3's metrics), plus the resilience
 /// controller's counters.
 #[derive(Debug, Default, Clone)]
@@ -234,6 +281,31 @@ pub struct PlatformMetrics {
     /// Total seconds workflow gangs spent between submit and bind
     /// (gang-admission latency numerator; divide by `workflow_gangs_bound`).
     pub workflow_gang_wait_total: f64,
+    /// Standby promotions completed (leader failovers).
+    pub failovers: u64,
+    /// Promotions aborted cleanly on malformed replica state; the dead
+    /// window continues and the promotion retries next tick.
+    pub failed_promotions: u64,
+    /// WAL frames shipped leader → standby.
+    pub frames_shipped: u64,
+    /// Frames lost at failover because they never shipped (bounded by
+    /// `replication.max_ship_lag_frames`; unbounded under isolation).
+    pub unshipped_frames_lost: u64,
+    /// Ticks skipped while the leader was dead awaiting lease expiry.
+    pub leader_dead_ticks: u64,
+    /// WAL records replayed from shipped tails, summed over promotions.
+    pub promotion_frames_replayed: u64,
+    /// Replica frames held since the last snapshot transfer at each
+    /// promotion, summed — equals `promotion_frames_replayed` when no
+    /// shipped frame was lost or damaged.
+    pub promotion_frames_shipped: u64,
+    /// Restores/promotions that discarded a torn or corrupt WAL tail
+    /// (each also surfaces a typed `WalIntact=false` condition).
+    pub wal_replay_truncated: u64,
+    /// Stale-epoch writes rejected by store/Kueue fences that restores
+    /// have since replaced; the running total is
+    /// [`Platform::fenced_writes`] (this plus the live guard counters).
+    pub fenced_writes: u64,
 }
 
 /// The assembled platform.
@@ -302,9 +374,15 @@ pub struct Platform {
     /// WAL + periodic-snapshot persistence (`durability.enabled`), `None`
     /// when the control plane runs memory-only.
     durability: Option<Durability>,
+    /// Hot-standby replication (`replication.enabled`), layered on
+    /// durability: log shipping, leader lease, epoch fencing, failover.
+    replication: Option<Replication>,
     /// Times the coordinator has crash-restarted; the API server watches
-    /// this advance to invalidate its caches and rebuild its indexes.
+    /// this advance (plus failovers) to invalidate its caches and rebuild
+    /// its indexes.
     pub(crate) coordinator_restarts: u64,
+    /// Typed outcome of the most recent restore or promotion.
+    last_restore: Option<RestoreReport>,
 }
 
 impl Platform {
@@ -471,10 +549,15 @@ impl Platform {
             runtime: Some(Runtime::standard()),
             deletions: VecDeque::new(),
             durability: None,
+            replication: None,
             coordinator_restarts: 0,
+            last_restore: None,
         };
         if p.config.durability_enabled {
             p.enable_durability();
+        }
+        if p.config.replication_enabled {
+            p.enable_replication();
         }
         Ok(p)
     }
@@ -603,7 +686,9 @@ impl Platform {
     }
 
     /// Cut a fresh snapshot and truncate the WAL — the snapshot now covers
-    /// everything the log held.
+    /// everything the log held. With replication on, the same bytes are
+    /// transferred to the standby (unless the leader is isolated), which
+    /// drops its shipped tail and re-anchors at the post-compaction base.
     fn take_snapshot(&mut self, now: Time) {
         if self.durability.is_none() {
             return;
@@ -613,6 +698,14 @@ impl Platform {
         d.snapshot = bytes;
         d.last_snapshot = now;
         d.wal.borrow_mut().clear();
+        let base = d.wal.borrow().base_frame();
+        let snapshot = d.snapshot.clone();
+        if let Some(rep) = self.replication.as_mut() {
+            if !rep.leader_isolated {
+                rep.replica.install_snapshot(snapshot, now, base);
+                rep.ship_cursor = base;
+            }
+        }
     }
 
     /// Kill and restart the coordinator: throw away the live store, Kueue,
@@ -637,13 +730,39 @@ impl Platform {
             let d = self.durability.as_ref().expect("durability enabled");
             (d.snapshot.clone(), d.wal.clone())
         };
-        let (records, warn) = wal.borrow().replay();
-        if let Some(w) = warn {
-            log::warn!("wal tail discarded at restore: {w}");
+        let rep = wal.borrow().replay_report();
+        if let Some(t) = &rep.truncation {
+            log::warn!("wal tail discarded at restore: {t}");
+            self.metrics.wal_replay_truncated += 1;
         }
-        let mut r = Reader::new(&snapshot);
-        // decode with no wal attached: replaying through the public
-        // mutators below must not re-log the operations being replayed
+        let truncation = rep.truncation.clone();
+        let replayed = rep.records.len() as u64;
+        let records: Vec<WalRecord> = rep.records.into_iter().map(|(_, r)| r).collect();
+        self.restore_state(&snapshot, records, wal)?;
+        self.last_restore = Some(RestoreReport {
+            at: self.engine.now(),
+            kind: "restore",
+            frames_replayed: replayed,
+            truncation,
+        });
+        Ok(())
+    }
+
+    /// The shared restore core: decode a snapshot, replay a WAL tail on
+    /// top of it, and swap the rebuilt state in. Used both by local crash
+    /// recovery (the leader's own snapshot + log) and by standby
+    /// promotion (the transferred snapshot + shipped tail). Decoding
+    /// happens before any live state is touched, so a malformed snapshot
+    /// aborts cleanly with the platform unchanged.
+    fn restore_state(
+        &mut self,
+        snapshot: &[u8],
+        records: Vec<WalRecord>,
+        wal: WalHandle,
+    ) -> Result<(), CodecError> {
+        let mut r = Reader::new(snapshot);
+        // decode with no wal attached: replaying through apply_op below
+        // must not re-log the operations being replayed
         let mut store = ClusterStore::dec(&mut r)?;
         let mut kueue = Kueue::dec(&mut r)?;
         let mut control = Vec::<u8>::dec(&mut r)?;
@@ -654,6 +773,17 @@ impl Platform {
                 WalRecord::Control(bytes) => control = bytes,
             }
         }
+        // the fence guards are not snapshot-encoded: re-stamp the writer
+        // identity from the log's current epoch, and fold the live fence
+        // counters (about to be discarded with the old state) into the
+        // running metric first
+        self.metrics.fenced_writes +=
+            self.store.borrow().fenced_writes() + self.kueue.fenced_writes();
+        let epoch = wal.borrow().epoch();
+        store.set_writer_epoch(epoch);
+        store.set_fence(epoch);
+        kueue.set_writer_epoch(epoch);
+        kueue.set_fence(epoch);
         store.attach_wal(wal.clone());
         kueue.attach_wal(wal);
         // in place: the kubelet (and every engine closure) holds an Rc to
@@ -661,6 +791,251 @@ impl Platform {
         *self.store.borrow_mut() = store;
         self.kueue = kueue;
         self.apply_control_state(&control)
+    }
+
+    // --------------------------------------------------------- replication
+
+    /// Turn on hot-standby replication, layered on durability (enabled
+    /// here if it is not already). Stamps writer epoch 1 on the log and
+    /// both mutation guards, then compacts before seeding the standby:
+    /// frames appended before this point carry epoch 0, which the channel
+    /// fence would (correctly) refuse to ship. No-op if already on.
+    pub fn enable_replication(&mut self) {
+        if self.replication.is_some() {
+            return;
+        }
+        self.enable_durability();
+        let now = self.engine.now();
+        if let Some(d) = self.durability.as_ref() {
+            d.wal.borrow_mut().set_epoch(1);
+        }
+        self.store.borrow_mut().set_writer_epoch(1);
+        self.store.borrow_mut().set_fence(1);
+        self.kueue.set_writer_epoch(1);
+        self.kueue.set_fence(1);
+        self.take_snapshot(now);
+        let d = self.durability.as_ref().expect("durability enabled");
+        let base = d.wal.borrow().base_frame();
+        self.replication = Some(Replication {
+            replica: Replica::new(d.snapshot.clone(), now, 1, base),
+            ship_cursor: base,
+            max_ship_lag: self.config.replication_max_ship_lag,
+            lease: Lease::new(1, self.config.replication_lease_seconds, now),
+            leader_alive: true,
+            leader_isolated: false,
+            deposed_epoch: 0,
+        });
+    }
+
+    /// Whether hot-standby replication is on.
+    pub fn replication_enabled(&self) -> bool {
+        self.replication.is_some()
+    }
+
+    /// Standby promotions completed (leader failovers).
+    pub fn failovers(&self) -> u64 {
+        self.metrics.failovers
+    }
+
+    /// Shipping-channel counters (`None` without replication).
+    pub fn replication_stats(&self) -> Option<ReplicationStats> {
+        self.replication.as_ref().map(|r| r.replica.stats.clone())
+    }
+
+    /// The current writer epoch carried on every WAL frame (0 without
+    /// replication — epochs only advance once elections exist).
+    pub fn current_epoch(&self) -> u64 {
+        self.durability.as_ref().map(|d| d.wal.borrow().epoch()).unwrap_or(0)
+    }
+
+    /// Total stale-epoch writes rejected by the store and Kueue fences:
+    /// the live guard counters plus totals folded into the metrics when
+    /// past restores replaced those guards.
+    pub fn fenced_writes(&self) -> u64 {
+        self.metrics.fenced_writes
+            + self.store.borrow().fenced_writes()
+            + self.kueue.fenced_writes()
+    }
+
+    /// Whether the lease-holding leader is currently alive. True without
+    /// replication: the sole coordinator is trivially the leader.
+    pub fn leader_alive(&self) -> bool {
+        self.replication.as_ref().map(|r| r.leader_alive).unwrap_or(true)
+    }
+
+    /// Frames appended to the leader log but not yet accepted by the
+    /// standby (the acknowledged-work exposure if the leader dies now).
+    pub fn ship_lag(&self) -> u64 {
+        let (Some(r), Some(d)) = (self.replication.as_ref(), self.durability.as_ref()) else {
+            return 0;
+        };
+        d.wal.borrow().next_frame().saturating_sub(r.replica.next_frame())
+    }
+
+    /// Typed outcome of the most recent restore or promotion, also
+    /// surfaced as a `WalIntact` condition via
+    /// [`RestoreReport::condition`].
+    pub fn last_restore(&self) -> Option<&RestoreReport> {
+        self.last_restore.as_ref()
+    }
+
+    /// Drain the shipping channel: read every leader-log frame past the
+    /// configured holdback (`replication.max_ship_lag_frames`) and ingest
+    /// it into the standby. Isolation severs the channel entirely; a
+    /// rejected frame stops the pump at that point (nothing after it may
+    /// ship past a gap).
+    fn pump_shipping(&mut self) {
+        let Platform { replication, durability, metrics, .. } = self;
+        let (Some(rep), Some(d)) = (replication.as_mut(), durability.as_ref()) else {
+            return;
+        };
+        if rep.leader_isolated {
+            return;
+        }
+        let wal = d.wal.borrow();
+        let target = wal.next_frame().saturating_sub(rep.max_ship_lag);
+        if target <= rep.ship_cursor {
+            return;
+        }
+        let frames = match wal.frames(rep.ship_cursor, target) {
+            Ok(fs) => fs,
+            Err(e) => {
+                log::warn!("leader wal unreadable at ship: {}", e.0);
+                return;
+            }
+        };
+        for f in &frames {
+            match rep.replica.ingest(f) {
+                Ok(()) => {
+                    rep.ship_cursor = f.index + 1;
+                    metrics.frames_shipped += 1;
+                }
+                Err(err) => {
+                    log::warn!("frame {} rejected by standby: {err}", f.index);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Fail over to the hot standby. Rebuilds the full control plane from
+    /// the transferred snapshot plus the shipped WAL tail — the same
+    /// restore core as local crash recovery — under a freshly bumped
+    /// epoch, then re-arms the lease and seeds a replacement standby via
+    /// snapshot transfer. A malformed transferred snapshot aborts the
+    /// promotion cleanly (counted, retried next tick); a damaged shipped
+    /// tail is truncated at the last intact frame and counted as
+    /// `wal_replay_truncated`.
+    fn promote(&mut self, now: Time) -> Result<(), CodecError> {
+        // Last-gasp drain: the dead leader's log is durable storage and
+        // stays readable, so ship whatever the holdback allows before
+        // reading the replica — post-kill loss is then bounded by
+        // `max_ship_lag`. Isolation severs the channel instead; that
+        // unshipped tail is genuinely lost, and measured below.
+        self.pump_shipping();
+        let (snapshot, rep, shipped, unshipped, deposed) = {
+            let r = self.replication.as_ref().expect("replication enabled");
+            let d = self.durability.as_ref().expect("durability enabled");
+            let wal = d.wal.borrow();
+            (
+                r.replica.snapshot().to_vec(),
+                r.replica.replay(),
+                r.replica.frames_since_snapshot(),
+                wal.next_frame().saturating_sub(r.replica.next_frame()),
+                wal.epoch(),
+            )
+        };
+        if let Some(t) = &rep.truncation {
+            log::warn!("shipped wal tail discarded at promotion: {t}");
+            self.metrics.wal_replay_truncated += 1;
+        }
+        let truncation = rep.truncation.clone();
+        let replayed = rep.records.len() as u64;
+        let records: Vec<WalRecord> = rep.records.into_iter().map(|(_, r)| r).collect();
+        let wal = self.durability.as_ref().expect("durability enabled").wal.clone();
+        let new_epoch = deposed + 1;
+        wal.borrow_mut().set_epoch(new_epoch);
+        if let Err(e) = self.restore_state(&snapshot, records, wal.clone()) {
+            // clean abort: no live state was touched; un-bump the epoch
+            // so the next attempt fences from the same baseline
+            wal.borrow_mut().set_epoch(deposed);
+            return Err(e);
+        }
+        {
+            let r = self.replication.as_mut().expect("replication enabled");
+            r.leader_alive = true;
+            r.leader_isolated = false;
+            r.deposed_epoch = deposed;
+            r.lease = Lease::new(new_epoch, self.config.replication_lease_seconds, now);
+            r.replica.set_min_epoch(new_epoch);
+        }
+        self.metrics.failovers += 1;
+        self.metrics.unshipped_frames_lost += unshipped;
+        self.metrics.promotion_frames_replayed += replayed;
+        self.metrics.promotion_frames_shipped += shipped;
+        self.last_restore = Some(RestoreReport {
+            at: now,
+            kind: "promotion",
+            frames_replayed: replayed,
+            truncation,
+        });
+        // fresh snapshot transfer compacts the inherited log and seeds
+        // the replacement standby
+        self.take_snapshot(now);
+        Ok(())
+    }
+
+    /// Test hook modeling a resurrected deposed leader: roll the writer
+    /// identity (store, Kueue, log) back to the pre-failover epoch while
+    /// every fence stays up. Writes attempted now are stale-epoch writes
+    /// and must all be rejected. No-op before any failover.
+    pub fn resurrect_deposed_leader(&mut self) {
+        let Some(deposed) = self.replication.as_ref().map(|r| r.deposed_epoch) else {
+            return;
+        };
+        if deposed == 0 {
+            return;
+        }
+        self.store.borrow_mut().set_writer_epoch(deposed);
+        self.kueue.set_writer_epoch(deposed);
+        if let Some(d) = self.durability.as_ref() {
+            d.wal.borrow_mut().set_epoch(deposed);
+        }
+    }
+
+    /// Undo [`resurrect_deposed_leader`](Self::resurrect_deposed_leader):
+    /// restore the current lease holder's epoch so legitimate writes flow
+    /// again.
+    pub fn refence_writer(&mut self) {
+        let Some(epoch) = self.replication.as_ref().map(|r| r.lease.holder_epoch) else {
+            return;
+        };
+        self.store.borrow_mut().set_writer_epoch(epoch);
+        self.kueue.set_writer_epoch(epoch);
+        if let Some(d) = self.durability.as_ref() {
+            d.wal.borrow_mut().set_epoch(epoch);
+        }
+    }
+
+    /// Test hook: damage the standby's transferred snapshot in place (the
+    /// next promotion attempt must abort cleanly).
+    pub fn truncate_replica_snapshot(&mut self, len: usize) {
+        if let Some(r) = self.replication.as_mut() {
+            r.replica.truncate_snapshot(len);
+        }
+    }
+
+    /// Bytes held in the standby's shipped log (0 without replication).
+    pub fn replica_log_len(&self) -> usize {
+        self.replication.as_ref().map(|r| r.replica.log_len_bytes()).unwrap_or(0)
+    }
+
+    /// Test hook: damage the standby's shipped log in place (the next
+    /// promotion truncates at the last intact frame).
+    pub fn corrupt_replica_log(&mut self, at: usize) {
+        if let Some(r) = self.replication.as_mut() {
+            r.replica.corrupt_log_byte(at);
+        }
     }
 
     // ------------------------------------------------------------ frontend
@@ -1038,11 +1413,43 @@ impl Platform {
             None => Vec::new(),
         };
         for f in due {
-            let crash = matches!(f, Fault::CoordinatorCrash);
+            let crash = matches!(f, Fault::CoordinatorCrash | Fault::LeaderKill);
             self.apply_fault(f, now);
             if !crash {
                 self.checkpoint_control();
             }
+        }
+
+        // leader lease: the live, un-isolated leader renews at every tick
+        // boundary; an expired lease with the leader dead or isolated is
+        // the standby's signal to promote
+        let (renew, promote_due) = match self.replication.as_ref() {
+            Some(r) => {
+                let gone = !r.leader_alive || r.leader_isolated;
+                (!gone, gone && r.lease.expired(now))
+            }
+            None => (false, false),
+        };
+        if renew {
+            if let Some(r) = self.replication.as_mut() {
+                r.lease.renew(now);
+            }
+        }
+        if promote_due {
+            if let Err(e) = self.promote(now) {
+                self.metrics.failed_promotions += 1;
+                log::error!("standby promotion failed: {}", e.0);
+            }
+        }
+
+        // dead window: with the leader gone and the lease not yet expired
+        // the control plane takes no actions — no traffic drain, no
+        // dispatch, no checkpoints — but the shipping channel keeps
+        // draining the durable log the world's closures still append to
+        if self.replication.as_ref().map(|r| !r.leader_alive).unwrap_or(false) {
+            self.metrics.leader_dead_ticks += 1;
+            self.pump_shipping();
+            return;
         }
 
         // traffic: drain inference arrivals for the window since the last
@@ -1075,6 +1482,9 @@ impl Platform {
         } else {
             self.checkpoint_control();
         }
+
+        // replicate this tick's log tail to the hot standby
+        self.pump_shipping();
     }
 
     /// Record an API-level deletion intent; the GC reconciler cascades it
@@ -1138,6 +1548,16 @@ impl Platform {
                 self.recover_gpu(&node, &resource, count, now)
             }
             Fault::CoordinatorCrash => self.crash_and_restore(),
+            Fault::LeaderKill => match self.replication.as_mut() {
+                Some(r) => r.leader_alive = false,
+                // without a standby the kill degrades to the local
+                // kill-and-restart recovery path
+                None => self.crash_and_restore(),
+            },
+            Fault::LeaderIsolate => match self.replication.as_mut() {
+                Some(r) => r.leader_isolated = true,
+                None => log::warn!("leader isolation ignored: replication disabled"),
+            },
         }
     }
 

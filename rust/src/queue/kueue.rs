@@ -171,6 +171,14 @@ pub struct Kueue {
     /// its op at method entry for crash replay (same contract as
     /// [`ClusterStore`](crate::cluster::store::ClusterStore)).
     wal: Option<WalHandle>,
+    /// Epoch (leader term) of the writer driving this controller — like
+    /// the wal handle, runtime wiring, not snapshot state.
+    writer_epoch: u64,
+    /// Mutations from writer epochs below this are fenced (split-brain
+    /// guard, raised at promotion).
+    fenced_below: u64,
+    /// Stale-epoch mutations rejected at the guard.
+    fenced_writes: u64,
 }
 
 impl Default for Kueue {
@@ -190,6 +198,9 @@ impl Default for Kueue {
             gang_of: HashMap::new(),
             gang_reserve_timeout: 60.0,
             wal: None,
+            writer_epoch: 0,
+            fenced_below: 0,
+            fenced_writes: 0,
         }
     }
 }
@@ -205,6 +216,39 @@ pub struct AdmissionResult {
 impl Kueue {
     pub fn new() -> Self {
         Kueue { backoff_base: 30.0, ..Default::default() }
+    }
+
+    // ----------------------------------------------------------- fencing
+
+    /// Set the epoch (leader term) of the writer driving this controller.
+    pub fn set_writer_epoch(&mut self, epoch: u64) {
+        self.writer_epoch = epoch;
+    }
+
+    pub fn writer_epoch(&self) -> u64 {
+        self.writer_epoch
+    }
+
+    /// Raise the split-brain fence: mutations from writer epochs below
+    /// `epoch` are dropped at method entry (and counted) from here on.
+    pub fn set_fence(&mut self, epoch: u64) {
+        self.fenced_below = epoch;
+    }
+
+    /// Stale-epoch mutations rejected since this controller was created.
+    pub fn fenced_writes(&self) -> u64 {
+        self.fenced_writes
+    }
+
+    /// The mutation-entry guard (same contract as the store's): true and
+    /// counted when the writer is deposed — drop the write, skip the log.
+    fn fenced(&mut self) -> bool {
+        if self.writer_epoch < self.fenced_below {
+            self.fenced_writes += 1;
+            true
+        } else {
+            false
+        }
     }
 
     // --------------------------------------------------------------- wal
@@ -258,11 +302,17 @@ impl Kueue {
     }
 
     pub fn add_cluster_queue(&mut self, cq: ClusterQueue) {
+        if self.fenced() {
+            return;
+        }
         self.log_op(|| KueueOp::AddClusterQueue { cq: cq.clone() });
         self.cluster_queues.insert(cq.name.clone(), cq);
     }
 
     pub fn add_local_queue(&mut self, lq: LocalQueue) {
+        if self.fenced() {
+            return;
+        }
         self.log_op(|| KueueOp::AddLocalQueue { lq: lq.clone() });
         assert!(
             self.cluster_queues.contains_key(&lq.cluster_queue),
@@ -315,6 +365,9 @@ impl Kueue {
     /// Reconfigure the transition log's retained window (the
     /// `control_plane.compaction_window` config knob).
     pub fn set_transition_capacity(&mut self, capacity: usize) {
+        if self.fenced() {
+            return;
+        }
         self.log_op(|| KueueOp::SetTransitionCapacity { capacity });
         self.transitions.set_capacity(capacity);
     }
@@ -356,6 +409,9 @@ impl Kueue {
         at: Time,
     ) -> anyhow::Result<String> {
         let name = name.into();
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| KueueOp::SubmitForUser {
             name: name.clone(),
             queue: queue.to_string(),
@@ -401,6 +457,9 @@ impl Kueue {
         members: Vec<(String, ResourceVec)>,
         at: Time,
     ) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| KueueOp::SubmitGang {
             name: name.to_string(),
             queue: queue.to_string(),
@@ -468,6 +527,9 @@ impl Kueue {
     /// Install the decayed per-user usage snapshot consulted by the next
     /// admission pass (users absent from the map count as zero usage).
     pub fn set_fair_share(&mut self, usage: HashMap<String, f64>) {
+        if self.fenced() {
+            return;
+        }
         self.log_op(|| KueueOp::SetFairShare { usage: usage.clone() });
         self.fair_share = usage;
     }
@@ -482,6 +544,9 @@ impl Kueue {
         add: &ResourceVec,
         remove: &ResourceVec,
     ) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| KueueOp::AdjustNominal {
             queue: queue.to_string(),
             add: add.clone(),
@@ -625,6 +690,9 @@ impl Kueue {
     /// workloads (smallest sufficient set, newest first) — the paper's
     /// interactive-over-batch policy.
     pub fn admit_pass(&mut self, at: Time) -> AdmissionResult {
+        if self.fenced() {
+            return AdmissionResult::default();
+        }
         self.log_op(|| KueueOp::AdmitPass { at });
         let mut result = AdmissionResult::default();
 
@@ -858,6 +926,9 @@ impl Kueue {
     /// the queue and, once its backoff expires, is readmitted and realized
     /// as a fresh pod incarnation (typically on a different, healthy site).
     pub fn requeue(&mut self, name: &str, at: Time) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| KueueOp::Requeue { name: name.to_string(), at });
         let state = self
             .workloads
@@ -879,6 +950,9 @@ impl Kueue {
 
     /// Mark a workload finished and release its quota.
     pub fn finish(&mut self, name: &str, at: Time) -> anyhow::Result<()> {
+        if self.fenced() {
+            anyhow::bail!("write fenced: writer epoch {} below fence", self.writer_epoch);
+        }
         self.log_op(|| KueueOp::Finish { name: name.to_string(), at });
         let (state, cq, req) = {
             let w = self
@@ -1151,6 +1225,9 @@ impl Dec for Kueue {
             gang_of: Dec::dec(r)?,
             gang_reserve_timeout: Dec::dec(r)?,
             wal: None,
+            writer_epoch: 0,
+            fenced_below: 0,
+            fenced_writes: 0,
         })
     }
 }

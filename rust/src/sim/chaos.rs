@@ -46,6 +46,15 @@ pub enum Fault {
     /// rebuilt from the last snapshot plus the WAL tail. A no-op (with a
     /// warning) unless durability is enabled.
     CoordinatorCrash,
+    /// The lease-holding leader dies and stays dead. With replication
+    /// enabled the hot standby promotes once the lease expires; without
+    /// it the fault degrades to [`Fault::CoordinatorCrash`] semantics.
+    LeaderKill,
+    /// The leader is partitioned from the standby: lease renewals and WAL
+    /// shipping stop while the leader keeps (vainly) mutating state. At
+    /// lease expiry the standby promotes and epoch fencing rejects the
+    /// deposed leader's writes. A warned no-op without replication.
+    LeaderIsolate,
 }
 
 impl Fault {
@@ -68,6 +77,8 @@ impl Fault {
                 format!("gpu-recover {node} +{count} {resource}")
             }
             Fault::CoordinatorCrash => "coordinator-crash".to_string(),
+            Fault::LeaderKill => "leader-kill".to_string(),
+            Fault::LeaderIsolate => "leader-isolate".to_string(),
         }
     }
 }
@@ -154,6 +165,11 @@ pub struct ChaosPlan {
     pub gpu_degrade_duration: (Time, Time),
     /// Coordinator kill/restart events (needs `durability.enabled`).
     pub coordinator_crashes_per_hour: f64,
+    /// Leader kills awaiting standby promotion (needs
+    /// `replication.enabled`).
+    pub leader_kills_per_hour: f64,
+    /// Leader/standby network partitions (needs `replication.enabled`).
+    pub leader_isolations_per_hour: f64,
 }
 
 impl Default for ChaosPlan {
@@ -171,6 +187,8 @@ impl Default for ChaosPlan {
             gpu_degrades_per_hour: 0.25,
             gpu_degrade_duration: (300.0, 1200.0),
             coordinator_crashes_per_hour: 0.0,
+            leader_kills_per_hour: 0.0,
+            leader_isolations_per_hour: 0.0,
         }
     }
 }
@@ -248,6 +266,16 @@ impl ChaosPlan {
             let at = rng.range_f64(0.0, self.horizon);
             eng.inject(at, Fault::CoordinatorCrash);
         }
+        // and leader faults after crashes, for the same reason: turning a
+        // crash campaign into a failover campaign must not reshuffle it
+        for _ in 0..rng.poisson(self.leader_kills_per_hour * hours) {
+            let at = rng.range_f64(0.0, self.horizon);
+            eng.inject(at, Fault::LeaderKill);
+        }
+        for _ in 0..rng.poisson(self.leader_isolations_per_hour * hours) {
+            let at = rng.range_f64(0.0, self.horizon);
+            eng.inject(at, Fault::LeaderIsolate);
+        }
         eng
     }
 }
@@ -323,6 +351,33 @@ mod tests {
         let ups = faults.iter().filter(|f| matches!(f, Fault::NodeUp { .. })).count();
         assert_eq!(downs, ups);
         assert!(outages + downs > 0, "rates high enough to sample something");
+    }
+
+    #[test]
+    fn leader_faults_never_reshuffle_the_base_schedule() {
+        let (sites, nodes, gpus) = targets();
+        let base = ChaosPlan {
+            seed: 5,
+            coordinator_crashes_per_hour: 1.0,
+            ..Default::default()
+        };
+        let extended = ChaosPlan {
+            leader_kills_per_hour: 2.0,
+            leader_isolations_per_hour: 1.0,
+            ..base.clone()
+        };
+        let a = base.generate(&sites, &nodes, &gpus).due(f64::INFINITY);
+        let b = extended.generate(&sites, &nodes, &gpus).due(f64::INFINITY);
+        let killed = b
+            .iter()
+            .filter(|f| matches!(f, Fault::LeaderKill | Fault::LeaderIsolate))
+            .count();
+        assert!(killed > 0, "rates high enough to sample leader faults");
+        let b_base: Vec<Fault> = b
+            .into_iter()
+            .filter(|f| !matches!(f, Fault::LeaderKill | Fault::LeaderIsolate))
+            .collect();
+        assert_eq!(a, b_base, "existing draws must be byte-identical");
     }
 
     #[test]

@@ -312,7 +312,10 @@ impl<K: Enc + Ord + Hash, V: Enc> Enc for HashMap<K, V> {
 impl<K: Dec + Eq + Hash, V: Dec> Dec for HashMap<K, V> {
     fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
         let n = usize::dec(r)?;
-        let mut out = HashMap::with_capacity(n);
+        // cap the pre-allocation by the bytes actually present: a corrupt
+        // length prefix must fail with a typed truncation error below,
+        // not abort the process trying to reserve petabytes
+        let mut out = HashMap::with_capacity(n.min(r.remaining()));
         for _ in 0..n {
             let k = K::dec(r)?;
             let v = V::dec(r)?;
@@ -336,7 +339,8 @@ impl<T: Enc + Ord + Hash> Enc for HashSet<T> {
 impl<T: Dec + Eq + Hash> Dec for HashSet<T> {
     fn dec(r: &mut Reader<'_>) -> Result<Self, CodecError> {
         let n = usize::dec(r)?;
-        let mut out = HashSet::with_capacity(n);
+        // same hostile-length cap as the HashMap decoder above
+        let mut out = HashSet::with_capacity(n.min(r.remaining()));
         for _ in 0..n {
             out.insert(T::dec(r)?);
         }
@@ -375,6 +379,18 @@ mod tests {
     fn roundtrip<T: Enc + Dec + PartialEq + std::fmt::Debug>(v: T) {
         let b = v.to_bytes();
         assert_eq!(T::from_bytes(&b).unwrap(), v);
+    }
+
+    #[test]
+    fn hostile_length_prefix_fails_typed_without_huge_alloc() {
+        // a length prefix far beyond the buffer must surface as a typed
+        // truncation error, not a giant up-front reservation
+        let mut b = Vec::new();
+        (usize::MAX).enc(&mut b);
+        assert!(HashMap::<String, String>::from_bytes(&b).is_err());
+        assert!(HashSet::<u64>::from_bytes(&b).is_err());
+        assert!(BTreeMap::<String, String>::from_bytes(&b).is_err());
+        assert!(Vec::<u64>::from_bytes(&b).is_err());
     }
 
     #[test]

@@ -6,10 +6,13 @@
 mod common;
 
 use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::hub::profiles::default_catalogue;
 use aiinfn::platform::workflow::{RunPhase, StageSpec, LOCAL_SITE};
 use aiinfn::platform::Platform;
 use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::serve::ServingSpec;
 use aiinfn::sim::clock::hours;
+use aiinfn::sim::traffic::{TrafficEngine, TrafficPattern};
 
 /// A bootstrapped platform with durability on and the given snapshot
 /// cadence.
@@ -240,6 +243,119 @@ fn seeded_crash_sweep_loses_no_work_and_balances_accounting() {
             n as u64,
             "run {i}, crash at {crash_at}: {m:?}"
         );
+        let (used, _) = p.quota_utilization();
+        assert!(used.is_empty(), "run {i}, crash at {crash_at}: leaked quota {used}");
+        p.cluster().check_free_index();
+    }
+}
+
+/// The crash sweep again with every moving part of the platform in flight
+/// at the kill: a serving fleet under live traffic, an interactive
+/// session, a workflow DAG mid-execution, and batch jobs — so the restore
+/// path is exercised against workloads of every API kind at once. The
+/// restored coordinator finishes all of it: batch drains, the DAG
+/// succeeds, serving request accounting still balances, and after
+/// teardown quota drains to zero.
+#[test]
+fn seeded_crash_sweep_survives_serving_session_and_workflow_traffic() {
+    const GB: u64 = 1 << 30;
+    let base = common::test_seed();
+    for i in 0..4u64 {
+        let mut p = durable_platform(120.0);
+        // serving: one CPU fleet under flat traffic
+        let mut engine = TrafficEngine::new(base.wrapping_add(i));
+        engine.add(0.0, TrafficPattern::flat("dur-serve", 20.0));
+        p.set_traffic(engine);
+        p.create_inference_server(ServingSpec {
+            name: "dur-serve".to_string(),
+            user: "user001".to_string(),
+            project: "project01".to_string(),
+            model: "deepmet".to_string(),
+            requests: ResourceVec::cpu_millis(2000).with(MEMORY, 4 << 30),
+            min_replicas: 1,
+            max_replicas: 3,
+            latency_slo: 0.5,
+            max_batch: 8,
+            batch_window: 0.02,
+            service_time: 0.08,
+            queue_depth: 256,
+            queue: "serving".to_string(),
+        })
+        .unwrap();
+        // an interactive session
+        let profile =
+            default_catalogue().into_iter().find(|x| x.name == "cpu-small").unwrap();
+        let sid = p.spawn_session("user042", &profile).unwrap();
+        // a two-stage workflow DAG
+        let raw = format!("dur-sweep-raw-{i}");
+        let clean = format!("dur-sweep-clean-{i}");
+        let run = format!("wf-sweep-{i}");
+        p.create_dataset(&raw, "user041", 2 * GB, vec![LOCAL_SITE.into()]).unwrap();
+        p.create_workflow_run(
+            &run,
+            "user041",
+            "project04",
+            PriorityClass::Batch,
+            "workflow",
+            vec![
+                StageSpec {
+                    name: "prep".to_string(),
+                    requests: ResourceVec::cpu_millis(4000).with(MEMORY, 4 << 30),
+                    pods: 1,
+                    duration: 180.0,
+                    inputs: vec![raw.clone()],
+                    outputs: vec![(clean.clone(), GB)],
+                    offloadable: false,
+                },
+                StageSpec {
+                    name: "fit".to_string(),
+                    requests: ResourceVec::cpu_millis(4000).with(MEMORY, 4 << 30),
+                    pods: 2,
+                    duration: 240.0,
+                    inputs: vec![clean.clone()],
+                    outputs: vec![(format!("dur-sweep-out-{i}"), GB / 2)],
+                    offloadable: false,
+                },
+            ],
+        )
+        .unwrap();
+        // and plain batch alongside
+        let wls: Vec<String> =
+            (0..4).map(|j| submit_one(&mut p, &format!("user{:03}", 20 + j), 300.0)).collect();
+
+        let crash_at =
+            60.0 + (base.wrapping_mul(2_654_435_761).wrapping_add(i * 131) % 600) as f64;
+        p.run_for(crash_at, 15.0);
+        p.crash_and_restore();
+        assert_eq!(p.coordinator_restarts(), 1, "run {i}");
+        p.run_for(hours(2.0), 15.0);
+
+        for w in &wls {
+            assert_eq!(
+                p.workload_state(w),
+                Some(WorkloadState::Finished),
+                "run {i}, crash at {crash_at}: batch workload {w} lost"
+            );
+        }
+        let wf = p.workflow_run(&run).unwrap();
+        assert_eq!(
+            wf.phase,
+            RunPhase::Succeeded,
+            "run {i}, crash at {crash_at}: workflow log:\n{}",
+            wf.trace()
+        );
+        let s = p.serving_state("dur-serve").unwrap();
+        assert!(s.total_requests > 0, "run {i}: traffic must have arrived");
+        assert_eq!(
+            s.total_requests,
+            s.completed_requests + s.failed_requests + s.queued(),
+            "run {i}: serving accounting must balance across the crash"
+        );
+        // tear the long-lived workloads down so quota can drain (the
+        // session may already have been idle-culled during the horizon)
+        p.delete_inference_server("dur-serve").unwrap();
+        let _ = p.stop_session(&sid, "sweep teardown");
+        p.run_for(120.0, 15.0);
         let (used, _) = p.quota_utilization();
         assert!(used.is_empty(), "run {i}, crash at {crash_at}: leaked quota {used}");
         p.cluster().check_free_index();

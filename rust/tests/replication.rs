@@ -1,0 +1,353 @@
+//! Coordinator high-availability suite: hot-standby promotion under
+//! leader kills (byte-identical convergence against an uninterrupted
+//! twin), split-brain epoch fencing after a network partition, a seeded
+//! kill sweep asserting zero acknowledged-work loss, bounded loss under a
+//! configured shipping holdback, and clean aborts on damaged replica
+//! state.
+
+mod common;
+
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::Platform;
+use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::sim::chaos::{ChaosPlan, Fault};
+use aiinfn::sim::clock::hours;
+
+/// A bootstrapped platform with hot-standby replication on (which implies
+/// durability) and the given lease / holdback / snapshot-cadence knobs.
+fn replicated_platform(lease: f64, ship_lag: u64, snapshot_interval: f64) -> Platform {
+    let mut cfg = common::config();
+    cfg.replication_enabled = true;
+    cfg.replication_lease_seconds = lease;
+    cfg.replication_max_ship_lag = ship_lag;
+    cfg.durability_snapshot_interval = snapshot_interval;
+    Platform::bootstrap(cfg).unwrap()
+}
+
+/// An empty chaos schedule (all rates zero) so tests can pin individual
+/// leader faults at exact times.
+fn quiet_plan(seed: u64) -> ChaosPlan {
+    ChaosPlan {
+        seed,
+        horizon: 3600.0,
+        site_outages_per_hour: 0.0,
+        wire_faults_per_hour: 0.0,
+        remote_job_failures_per_hour: 0.0,
+        node_flaps_per_hour: 0.0,
+        gpu_degrades_per_hour: 0.0,
+        ..Default::default()
+    }
+}
+
+// ------------------------------------------------- failover convergence
+
+/// One HA campaign under mixed chaos, rendered as the transition blob the
+/// durability suite compares (chaos log excluded: the killed run
+/// legitimately records the extra leader-kill entries).
+fn ha_trace(seed: u64, kill: bool) -> (String, u64) {
+    let mut cfg = common::config();
+    cfg.replication_enabled = true;
+    // shorter than the 15 s tick: a kill drained at a tick boundary finds
+    // the lease already expired and promotes in that same tick, so the
+    // control plane never skips a dispatch
+    cfg.replication_lease_seconds = 10.0;
+    cfg.durability_snapshot_interval = 300.0;
+    let mut p = Platform::bootstrap(cfg).unwrap();
+    let plan = ChaosPlan {
+        seed,
+        horizon: 1200.0,
+        site_outages_per_hour: 2.0,
+        wire_faults_per_hour: 4.0,
+        remote_job_failures_per_hour: 2.0,
+        node_flaps_per_hour: 1.0,
+        // drawn after every other fault family in generate(): enabling
+        // kills leaves the rest of the seeded schedule untouched
+        leader_kills_per_hour: if kill { 6.0 } else { 0.0 },
+        ..Default::default()
+    };
+    p.install_chaos(&plan);
+    if kill {
+        // pin one kill mid-campaign regardless of the Poisson draw
+        p.chaos_mut().unwrap().inject(700.0, Fault::LeaderKill);
+    }
+    let _wls = common::submit_cpu_batch(&mut p, 20, 16_000, 400.0, true);
+    p.run_for(3600.0, 15.0);
+
+    let mut out = String::new();
+    {
+        let st = p.cluster();
+        for ev in st.events() {
+            out.push_str(&format!("{:10.3} {:?} {} {}\n", ev.at, ev.kind, ev.object, ev.message));
+        }
+    }
+    for t in p.workload_transitions_since(0) {
+        out.push_str(&format!("{:10.3} WORKLOAD {} {:?}\n", t.at, t.workload, t.state));
+    }
+    for t in p.health().transitions_since(0) {
+        out.push_str(&format!(
+            "{:10.3} HEALTH {} {} {}\n",
+            t.at,
+            t.site,
+            t.status.as_str(),
+            t.reason
+        ));
+    }
+    (out, p.failovers())
+}
+
+/// The HA acceptance criterion: a campaign whose leader is repeatedly
+/// killed — each kill promoting the hot standby from the transferred
+/// snapshot plus the shipped WAL tail — converges to a transition log
+/// byte-identical to an uninterrupted run of the same seed.
+#[test]
+fn leader_kill_campaign_converges_to_uninterrupted_trace() {
+    let seed = common::test_seed();
+    let (clean, failovers_clean) = ha_trace(seed, false);
+    let (killed, failovers_killed) = ha_trace(seed, true);
+    assert_eq!(failovers_clean, 0);
+    assert!(failovers_killed >= 1, "the pinned kill must promote the standby");
+    assert!(!clean.is_empty());
+    assert_eq!(
+        clean, killed,
+        "a failed-over control plane must converge to the uninterrupted run's \
+         transition log"
+    );
+}
+
+// ------------------------------------------------- split-brain fencing
+
+/// A partitioned leader keeps the lease from renewing; the standby
+/// promotes under a bumped epoch, and when the deposed leader resurfaces
+/// every one of its stale-epoch writes is rejected at the store/Kueue
+/// guards: the store does not move, nothing reaches the WAL, and each
+/// rejection is counted.
+#[test]
+fn split_brain_deposed_leader_writes_are_all_fenced() {
+    let mut p = replicated_platform(30.0, 0, 300.0);
+    p.install_chaos(&quiet_plan(1));
+    let wls = common::submit_cpu_batch(&mut p, 4, 8_000, 300.0, false);
+    p.run_for(120.0, 15.0);
+    assert_eq!(p.current_epoch(), 1);
+    p.chaos_mut().unwrap().inject(130.0, Fault::LeaderIsolate);
+    p.run_for(120.0, 15.0);
+    assert_eq!(p.failovers(), 1, "lease expiry under isolation must promote");
+    assert_eq!(p.current_epoch(), 2);
+
+    // the deposed leader comes back from the partition and keeps writing
+    p.resurrect_deposed_leader();
+    let rv = p.cluster().resource_version();
+    let logged = p.wal_handle().unwrap().borrow().appended();
+    let fenced_before = p.fenced_writes();
+    for j in 0..5 {
+        let r = p.submit_batch(
+            &format!("user{:03}", 60 + j),
+            "project05",
+            ResourceVec::cpu_millis(2000).with(MEMORY, 4 << 30),
+            120.0,
+            PriorityClass::Batch,
+            false,
+        );
+        assert!(r.is_err(), "stale-epoch write {j} must be rejected");
+    }
+    assert_eq!(p.cluster().resource_version(), rv, "the store must not move");
+    assert_eq!(
+        p.wal_handle().unwrap().borrow().appended(),
+        logged,
+        "fenced writes must never reach the log"
+    );
+    assert_eq!(p.fenced_writes(), fenced_before + 5, "every rejection counted");
+
+    // fence restored: the legitimate epoch writes again and the campaign
+    // drains to completion
+    p.refence_writer();
+    let late = p
+        .submit_batch(
+            "user066",
+            "project05",
+            ResourceVec::cpu_millis(2000).with(MEMORY, 4 << 30),
+            120.0,
+            PriorityClass::Batch,
+            false,
+        )
+        .unwrap();
+    p.run_for(hours(1.0), 15.0);
+    for w in wls.iter().chain(std::iter::once(&late)) {
+        assert_eq!(p.workload_state(w), Some(WorkloadState::Finished), "{w}");
+    }
+    p.cluster().check_free_index();
+}
+
+// --------------------------------------------------- seeded kill sweep
+
+/// Kill the leader at a seed-derived point in each of 8 runs (holdback
+/// zero): the standby promotes, no acknowledged mutation is lost (every
+/// shipped frame is replayed, nothing was left unshipped, no tail was
+/// truncated), every workload still finishes, completion accounting
+/// balances, quota drains, and the rebuilt free-capacity index checks.
+#[test]
+fn seeded_leader_kill_sweep_loses_no_acknowledged_mutation() {
+    let base = common::test_seed();
+    for i in 0..8u64 {
+        let mut p = replicated_platform(10.0, 0, 120.0);
+        p.install_chaos(&quiet_plan(base.wrapping_add(i)));
+        let n = 6usize;
+        let wls: Vec<String> = (0..n)
+            .map(|j| {
+                p.submit_batch(
+                    &format!("user{:03}", (i as usize * 7 + j) % 78),
+                    "project04",
+                    ResourceVec::cpu_millis(8000).with(MEMORY, 8 << 30),
+                    300.0,
+                    PriorityClass::Batch,
+                    j % 2 == 0,
+                )
+                .unwrap()
+            })
+            .collect();
+        let kill_at =
+            40.0 + (base.wrapping_mul(2_654_435_761).wrapping_add(i * 97) % 900) as f64;
+        p.chaos_mut().unwrap().inject(kill_at, Fault::LeaderKill);
+        p.run_for(hours(2.0), 15.0);
+        assert_eq!(p.failovers(), 1, "run {i}, kill at {kill_at}");
+        let m = p.metrics();
+        assert_eq!(m.unshipped_frames_lost, 0, "run {i}: acknowledged mutations lost");
+        assert_eq!(
+            m.promotion_frames_shipped, m.promotion_frames_replayed,
+            "run {i}: shipped-frame coverage must equal replayed mutations"
+        );
+        assert_eq!(m.wal_replay_truncated, 0, "run {i}: no tail may be discarded");
+        for w in &wls {
+            assert_eq!(
+                p.workload_state(w),
+                Some(WorkloadState::Finished),
+                "run {i}, kill at {kill_at}: workload {w} lost"
+            );
+        }
+        let m = p.metrics();
+        assert_eq!(
+            m.local_completions + m.remote_completions + m.terminal_failures,
+            n as u64,
+            "run {i}, kill at {kill_at}: {m:?}"
+        );
+        let (used, _) = p.quota_utilization();
+        assert!(used.is_empty(), "run {i}, kill at {kill_at}: leaked quota {used}");
+        p.cluster().check_free_index();
+    }
+}
+
+// ----------------------------------------------- availability window
+
+/// With the lease longer than the tick period the platform rides out a
+/// genuine dead window: ticks are skipped while the lease runs down, the
+/// shipping channel keeps draining the durable log the world still
+/// appends to, and the standby promotes within one lease interval of the
+/// kill. Nothing is lost.
+#[test]
+fn promotion_lands_within_one_lease_interval() {
+    let mut p = replicated_platform(60.0, 0, 300.0);
+    p.install_chaos(&quiet_plan(3));
+    let wls = common::submit_cpu_batch(&mut p, 4, 8_000, 600.0, false);
+    p.run_for(300.0, 15.0);
+    p.chaos_mut().unwrap().inject(310.0, Fault::LeaderKill);
+    assert!(p.leader_alive());
+    // one lease interval plus one tick past the kill: promoted by then
+    p.run_for(90.0, 15.0);
+    assert_eq!(p.failovers(), 1, "standby must promote within one lease interval");
+    assert!(p.leader_alive(), "the promoted standby is the new leader");
+    let dead = p.metrics().leader_dead_ticks;
+    assert!(
+        (1..=4).contains(&dead),
+        "the dead window spans the lease remainder, got {dead} ticks"
+    );
+    assert_eq!(p.metrics().unshipped_frames_lost, 0);
+    p.run_for(hours(2.0), 15.0);
+    for w in &wls {
+        assert_eq!(p.workload_state(w), Some(WorkloadState::Finished), "{w}");
+    }
+    let (used, _) = p.quota_utilization();
+    assert!(used.is_empty(), "leaked quota {used}");
+    p.cluster().check_free_index();
+}
+
+// --------------------------------------------- damaged replica state
+
+/// A damaged shipped tail does not block failover: promotion replays the
+/// intact prefix, counts the truncation, and surfaces a typed
+/// `WalIntact=false` condition on the restore report.
+#[test]
+fn damaged_shipped_tail_truncates_and_surfaces_condition() {
+    // snapshot cadence beyond the horizon: the whole run stays in the
+    // replica's shipped log, so the tail is there to damage
+    let mut p = replicated_platform(10.0, 0, 10_000.0);
+    p.install_chaos(&quiet_plan(4));
+    let wls = common::submit_cpu_batch(&mut p, 4, 8_000, 600.0, false);
+    p.run_for(300.0, 15.0);
+    let len = p.replica_log_len();
+    assert!(len > 40, "the run must have shipped something");
+    // flip a byte inside the newest shipped frame, as standby-side media
+    // corruption would
+    p.corrupt_replica_log(len - 20);
+    p.chaos_mut().unwrap().inject(310.0, Fault::LeaderKill);
+    p.run_for(30.0, 15.0);
+    assert_eq!(p.failovers(), 1, "a damaged tail must not block failover");
+    let m = p.metrics();
+    assert_eq!(m.wal_replay_truncated, 1);
+    assert!(
+        m.promotion_frames_replayed < m.promotion_frames_shipped,
+        "the damaged frame (and anything after it) must be dropped"
+    );
+    let r = p.last_restore().expect("promotion must record a restore report");
+    assert_eq!(r.kind, "promotion");
+    assert!(r.truncation.is_some());
+    let c = r.condition();
+    assert_eq!(c.ctype, "WalIntact");
+    assert!(!c.status, "the condition must report the discarded tail");
+    // the intact prefix still carries the campaign to completion
+    p.run_for(hours(2.0), 15.0);
+    for w in &wls {
+        assert_eq!(p.workload_state(w), Some(WorkloadState::Finished), "{w}");
+    }
+    p.cluster().check_free_index();
+}
+
+/// A transferred snapshot that fails decode aborts the promotion cleanly:
+/// no live state is touched, the epoch is not burned, the failure is
+/// counted, and the attempt retries (and keeps failing) instead of
+/// promoting garbage.
+#[test]
+fn malformed_transferred_snapshot_aborts_promotion_cleanly() {
+    let mut p = replicated_platform(10.0, 0, 300.0);
+    p.install_chaos(&quiet_plan(5));
+    let _wls = common::submit_cpu_batch(&mut p, 2, 8_000, 300.0, false);
+    p.run_for(120.0, 15.0);
+    p.truncate_replica_snapshot(16);
+    p.chaos_mut().unwrap().inject(130.0, Fault::LeaderKill);
+    p.run_for(60.0, 15.0);
+    assert_eq!(p.failovers(), 0, "promotion must not proceed from a snapshot that fails decode");
+    assert!(p.metrics().failed_promotions >= 1, "each clean abort is counted");
+    assert!(!p.leader_alive(), "the dead window persists until a promotion succeeds");
+    assert_eq!(p.current_epoch(), 1, "a failed promotion must not burn an epoch");
+    p.cluster().check_free_index();
+}
+
+// ------------------------------------------------- shipping holdback
+
+/// With a nonzero shipping holdback the newest frames are by construction
+/// unshipped when the leader dies; the promotion measures exactly that
+/// bounded loss and the platform stays invariant-clean.
+#[test]
+fn ship_holdback_bounds_post_kill_loss() {
+    let mut p = replicated_platform(10.0, 4, 300.0);
+    p.install_chaos(&quiet_plan(6));
+    let _wls = common::submit_cpu_batch(&mut p, 6, 8_000, 300.0, false);
+    p.run_for(200.0, 15.0);
+    p.chaos_mut().unwrap().inject(205.0, Fault::LeaderKill);
+    p.run_for(60.0, 15.0);
+    assert_eq!(p.failovers(), 1);
+    let lost = p.metrics().unshipped_frames_lost;
+    assert!(
+        (1..=4).contains(&lost),
+        "loss must be bounded by the 4-frame holdback, got {lost}"
+    );
+    p.cluster().check_free_index();
+}
