@@ -1,22 +1,30 @@
-//! Control-plane scale benchmark: the 1 000-node / 10 000-pod / 5 000-API-
-//! object regime the National-Research-Platform-style multi-tenant
-//! deployments live in. Exercises the three pruned hot paths of the
-//! perf refactor and measures each against its pre-change baseline **in
-//! the same run**:
+//! Control-plane scale benchmark: the 10 000-node / 100 000-pod regime the
+//! sharded multi-coordinator plane targets, plus the 5 000-API-object read
+//! plane and a live federated regime. Three sections feed
+//! `BENCH_scale.json`:
 //!
-//! * **schedule** — a full 10k-pod drain through the free-capacity-indexed
-//!   scheduler over 1k nodes, plus the steady-state 100-pods-per-tick
-//!   churn cycle;
-//! * **list** — label-selector and field-selector lists at 5k objects via
-//!   the inverted-label/typed-evaluator path vs. the brute-force
-//!   serialize-every-object filter (the former code path, still available
-//!   as `Selector::matches` on JSON);
-//! * **watch** — catch-up reads from the per-kind sharded log vs. the
-//!   scan-every-kind baseline.
+//! * **shard sweep** — the full 100k-pod drain and a fixed-total-work
+//!   steady-state churn cycle, run at `shard_count ∈ {1, 2, 4, 8}` over
+//!   per-shard `ClusterStore`s (contiguous zone blocks, the same partition
+//!   the federation's router hands out). Each shard's wall time is
+//!   reported individually; throughput is computed on the *critical path*
+//!   (slowest shard), which is what a lockstep federation tick pays. The
+//!   sweep must show multi-shard beating `shard_count = 1` on the same
+//!   workload — that inequality is asserted, not eyeballed.
+//! * **API plane** — label/field-selector lists at 5k objects and watch
+//!   catch-up, indexed vs. the brute-force baselines, unchanged from the
+//!   perf-refactor bench so the speedup series stays comparable.
+//! * **federated regime** — a live 4-shard [`Federation`]: a burst that
+//!   overflows one shard's quota and exercises the two-phase
+//!   reserve/bind path, per-shard tick cost via `step_timed`, merged
+//!   list/watch ops/sec, and the reservation-ledger conservation counters.
 //!
-//! Emits `BENCH_scale.json` (ops/sec + speedups + ring-log occupancy as
-//! bounded-memory evidence) alongside the `BENCH\t…` rows. CI uploads the
-//! file and diffs it against the committed previous run.
+//! Emits `BENCH_scale.json` (flat numerics at top level for CI's diff,
+//! per-shard vectors nested) alongside the `BENCH\t…` rows, then the
+//! MIG-demand regime writes `BENCH_gpu.json`. `AIINFN_BENCH_FAST=1`
+//! shortens the timed `g.bench()` loops but the sweep always runs the
+//! full 10k/100k regime — it is one drain + a bounded churn cycle per
+//! shard count, and the regime *is* the measurement.
 
 mod scale_reads;
 
@@ -29,25 +37,35 @@ use aiinfn::cluster::resources::{ResourceVec, GPU, MEMORY};
 use aiinfn::cluster::scheduler::Scheduler;
 use aiinfn::cluster::store::ClusterStore;
 use aiinfn::gpu::{GpuDevice, GpuModel};
-use aiinfn::platform::{default_config_path, PlatformConfig};
+use aiinfn::platform::{default_config_path, Federation, PlatformConfig};
+use aiinfn::queue::kueue::PriorityClass;
 use aiinfn::util::bench::{black_box, BenchGroup};
 use aiinfn::util::json::Json;
 
-const NODES: usize = 1_000;
-const PODS: usize = 10_000;
+const API_NODES: usize = 1_000;
 const API_OBJECTS: usize = 5_000;
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 
-/// 1 000 nodes: three quarters CPU-only, one quarter with 4 T4s each.
-fn big_store() -> ClusterStore {
+// The sweep runs full-size even under AIINFN_BENCH_FAST: it is one
+// drain + a bounded churn cycle per shard count (not a timed loop), and
+// the 10k/100k regime is the point of the measurement. The g.bench()
+// timed sections still shrink via BenchConfig's fast mode.
+const SWEEP_NODES: usize = 10_000;
+const SWEEP_PODS: usize = SWEEP_NODES * 10;
+
+/// Build one shard's store: the contiguous block `[lo, hi)` of the global
+/// node inventory, every 4th node carrying 4 T4s (so each block has the
+/// same CPU/GPU mix and the sweep compares like against like).
+fn shard_store(lo: usize, hi: usize) -> ClusterStore {
     let mut s = ClusterStore::new();
     s.set_event_capacity(65_536);
-    for i in 0..NODES {
-        let gpus = if i % 4 == 0 {
+    for i in lo..hi {
+        let gpus = if (i - lo) % 4 == 0 {
             (0..4).map(|g| GpuDevice::whole(format!("n{i}-g{g}"), GpuModel::TeslaT4)).collect()
         } else {
             Vec::new()
         };
-        s.add_node(Node::physical(format!("node-{i:04}"), 64, 256 << 30, 4 << 40, gpus), 0.0);
+        s.add_node(Node::physical(format!("node-{i:05}"), 64, 256 << 30, 4 << 40, gpus), 0.0);
     }
     s
 }
@@ -68,57 +86,113 @@ fn gpu_pod(name: String) -> PodSpec {
     )
 }
 
-fn main() {
-    let mut g = BenchGroup::new("control_plane_scale");
+/// One sweep point: drain + churn at a given shard count.
+struct SweepPoint {
+    shard_count: usize,
+    drain_secs: Vec<f64>,
+    drain_pods_per_sec: f64,
+    churn_secs: Vec<f64>,
+    churn_pods_per_sec: f64,
+}
 
-    // ------------------------------------------------ scheduler at scale
-    let mut store = big_store();
+fn sweep_point(g: &mut BenchGroup, shard_count: usize, nodes: usize, pods: usize) -> SweepPoint {
+    let per_nodes = nodes / shard_count;
+    let per_pods = pods / shard_count;
     let sched = Scheduler::default();
-    for i in 0..PODS {
-        let spec = if i % 10 == 0 {
-            gpu_pod(format!("pod-{i:05}"))
-        } else {
-            cpu_pod(format!("pod-{i:05}"))
-        };
-        store.create_pod(spec, 0.0);
-    }
-    let t = Instant::now();
-    let (placed, failed) = sched.schedule_pending(&mut store, 1.0);
-    let drain_secs = t.elapsed().as_secs_f64();
-    assert!(failed.is_empty(), "the 10k drain must fit 1k nodes: {failed:?}");
-    assert_eq!(placed.len(), PODS);
-    let drain_pods_per_sec = PODS as f64 / drain_secs;
-    g.record_value("drain_10k_pods_per_sec", drain_pods_per_sec, "pods/s");
-    store.check_free_index();
+    let mut stores: Vec<ClusterStore> =
+        (0..shard_count).map(|s| shard_store(s * per_nodes, (s + 1) * per_nodes)).collect();
 
-    // steady-state churn: 100 new pods per "tick" against a warm cluster,
-    // then removed so the cycle is repeatable
+    // full drain: every shard schedules its 10-pods-per-node backlog; the
+    // lockstep tick pays the slowest shard, so the critical path is max.
+    let mut drain_secs = Vec::with_capacity(shard_count);
+    for (s, store) in stores.iter_mut().enumerate() {
+        for j in 0..per_pods {
+            let name = format!("pod-{s}-{j:05}");
+            let spec = if j % 10 == 0 { gpu_pod(name) } else { cpu_pod(name) };
+            store.create_pod(spec, 0.0);
+        }
+        let t = Instant::now();
+        let (placed, failed) = sched.schedule_pending(store, 1.0);
+        drain_secs.push(t.elapsed().as_secs_f64());
+        assert!(
+            failed.is_empty(),
+            "shard {s}/{shard_count}: the drain must fit its block: {failed:?}"
+        );
+        assert_eq!(placed.len(), per_pods);
+        store.check_free_index();
+    }
+    let drain_critical = drain_secs.iter().cloned().fold(0.0_f64, f64::max);
+    let drain_pods_per_sec = pods as f64 / drain_critical;
+    g.record_value(&format!("drain_s{shard_count}_pods_per_sec"), drain_pods_per_sec, "pods/s");
+
+    // steady-state churn: a fixed federation-wide batch of new pods per
+    // tick, split evenly across shards against the warm (drained) stores,
+    // then removed so the cycle repeats identically.
+    let total_churn = 800;
+    let per_churn = total_churn / shard_count;
+    let iters = 10;
+    let mut churn_secs = vec![0.0_f64; shard_count];
     let mut serial = 0usize;
-    let tick_sched = {
-        let r = g.bench_elements("tick_schedule_100", 100, || {
-            let names: Vec<String> = (0..100)
+    for _ in 0..iters {
+        for (s, store) in stores.iter_mut().enumerate() {
+            let t = Instant::now();
+            let names: Vec<String> = (0..per_churn)
                 .map(|_| {
                     serial += 1;
-                    let name = format!("churn-{serial:07}");
+                    let name = format!("churn-{s}-{serial:07}");
                     store.create_pod(cpu_pod(name.clone()), 2.0);
                     name
                 })
                 .collect();
-            let (placed, _failed) = sched.schedule_pending(&mut store, 2.0);
+            let (placed, _failed) = sched.schedule_pending(store, 2.0);
             black_box(placed.len());
             for n in &names {
                 store.delete_pod(n, 2.0, "bench churn").unwrap();
             }
-        });
-        r.per_sec()
-    };
+            churn_secs[s] += t.elapsed().as_secs_f64();
+        }
+    }
+    for c in &mut churn_secs {
+        *c /= iters as f64;
+    }
+    let churn_critical = churn_secs.iter().cloned().fold(0.0_f64, f64::max);
+    let churn_pods_per_sec = total_churn as f64 / churn_critical;
+    g.record_value(&format!("churn_s{shard_count}_pods_per_sec"), churn_pods_per_sec, "pods/s");
+
+    SweepPoint { shard_count, drain_secs, drain_pods_per_sec, churn_secs, churn_pods_per_sec }
+}
+
+fn main() {
+    let mut g = BenchGroup::new("control_plane_scale");
+
+    // ------------------------------------------- sharded scheduler sweep
+    let (nodes, pods) = (SWEEP_NODES, SWEEP_PODS);
+    let sweep: Vec<SweepPoint> =
+        SHARD_COUNTS.iter().map(|&s| sweep_point(&mut g, s, nodes, pods)).collect();
+    let single = &sweep[0];
+    let best_drain =
+        sweep[1..].iter().map(|p| p.drain_pods_per_sec).fold(0.0_f64, f64::max);
+    let best_churn =
+        sweep[1..].iter().map(|p| p.churn_pods_per_sec).fold(0.0_f64, f64::max);
+    assert!(
+        best_drain > single.drain_pods_per_sec,
+        "multi-shard drain throughput must beat shard_count=1 \
+         ({best_drain:.0} vs {:.0} pods/s)",
+        single.drain_pods_per_sec
+    );
+    assert!(
+        best_churn > single.churn_pods_per_sec,
+        "multi-shard churn throughput must beat shard_count=1 \
+         ({best_churn:.0} vs {:.0} pods/s)",
+        single.churn_pods_per_sec
+    );
 
     // ------------------------------------------------- API plane at scale
     // 1 000-server inventory (CPU-only for bootstrap speed), 5 000 batch
     // jobs with a 1% hot-labeled subset.
     let mut cfg = PlatformConfig::load(&default_config_path()).unwrap();
     let template = cfg.servers[0].clone();
-    cfg.servers = (0..NODES)
+    cfg.servers = (0..API_NODES)
         .map(|i| {
             let mut s = template.clone();
             s.name = format!("srv-{i:04}");
@@ -172,13 +246,140 @@ fn main() {
     let window = api.platform().config.compaction_window;
     let event_ring = api.platform().cluster().events().len();
     assert!(event_ring <= window, "event ring exceeded the compaction window");
+    let watch_log_len = api.watch_log_len();
 
-    let out = Json::obj(vec![
-        ("nodes", Json::num(NODES as f64)),
-        ("pods_drained", Json::num(PODS as f64)),
+    // --------------------------------------------- live federated regime
+    // A 4-shard federation over 64 identical servers. One user's burst
+    // overflows its home shard's quota, so a slice of the submissions
+    // must travel the two-phase reserve/bind path; then the steady state
+    // measures per-shard tick cost and the merged read plane.
+    let fed_shards = 4usize;
+    let mut cfg = PlatformConfig::load(&default_config_path()).unwrap();
+    let template = cfg.servers[0].clone();
+    cfg.servers = (0..64)
+        .map(|i| {
+            let mut s = template.clone();
+            s.name = format!("fsrv-{i:02}");
+            s.cpu_cores = 64;
+            s.memory_gb = 256;
+            s.nvme_tb = 4;
+            s.gpus = Vec::new();
+            s
+        })
+        .collect();
+    cfg.federation_enabled = false;
+    cfg.shard_count = fed_shards;
+    let mut fed = Federation::bootstrap(cfg).unwrap();
+    let heavy = (0..78)
+        .map(|u| format!("user{u:03}"))
+        .find(|u| fed.home_shard(u) == 1)
+        .expect("some user routes to shard 1");
+    // one shard's quota is 16 servers × 62 allocatable cores = 992; every
+    // 16-core job past the 62nd must go cross-shard
+    let burst = 120;
+    for _ in 0..burst {
+        fed.submit_batch(
+            &heavy,
+            "project05",
+            ResourceVec::cpu_millis(16_000).with(MEMORY, 32 << 30),
+            7200.0,
+            PriorityClass::Batch,
+            false,
+        )
+        .unwrap();
+    }
+    // warm up: reserve/bind settles, pods place, reconcilers reach steady
+    // state with the cluster loaded
+    for _ in 0..6 {
+        fed.step(15.0);
+    }
+    assert!(
+        fed.metrics().cross_shard_submissions > 0,
+        "the burst must overflow its home shard into the two-phase path"
+    );
+    assert!(fed.ledger().balanced(), "reservation ledger must stay conserved");
+
+    let iters = 20;
+    let mut fed_tick_secs = vec![0.0_f64; fed_shards];
+    let t = Instant::now();
+    let cursor_mid = fed.cursor_now();
+    for _ in 0..iters {
+        for (s, secs) in fed.step_timed(15.0).into_iter().enumerate() {
+            fed_tick_secs[s] += secs;
+        }
+    }
+    let fed_ticks_per_sec = iters as f64 / t.elapsed().as_secs_f64();
+    for s in &mut fed_tick_secs {
+        *s /= iters as f64;
+    }
+    g.record_value("fed_ticks_per_sec", fed_ticks_per_sec, "ticks/s");
+
+    let tokens = fed.login(&heavy).unwrap();
+    let fed_list = {
+        let r = g.bench("fed_list_merged_pods", || {
+            black_box(fed.list_merged(&tokens, ResourceKind::Pod, &Selector::all()).unwrap());
+        });
+        r.per_sec()
+    };
+    let fed_watch = {
+        let r = g.bench("fed_watch_merged_catchup", || {
+            black_box(fed.watch_merged(&tokens, ResourceKind::Pod, &cursor_mid).unwrap());
+        });
+        r.per_sec()
+    };
+    let ledger = fed.ledger().stats();
+    let fm = fed.metrics().clone();
+
+    let sweep_json = Json::Arr(
+        sweep
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("shard_count", Json::num(p.shard_count as f64)),
+                    (
+                        "drain_secs_per_shard",
+                        Json::Arr(p.drain_secs.iter().map(|&s| Json::num(s)).collect()),
+                    ),
+                    ("drain_pods_per_sec", Json::num(p.drain_pods_per_sec)),
+                    (
+                        "drain_speedup",
+                        Json::num(p.drain_pods_per_sec / single.drain_pods_per_sec),
+                    ),
+                    (
+                        "churn_secs_per_shard",
+                        Json::Arr(p.churn_secs.iter().map(|&s| Json::num(s)).collect()),
+                    ),
+                    ("churn_pods_per_sec", Json::num(p.churn_pods_per_sec)),
+                    (
+                        "churn_speedup",
+                        Json::num(p.churn_pods_per_sec / single.churn_pods_per_sec),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+
+    let mut pairs = vec![
+        ("nodes", Json::num(nodes as f64)),
+        ("pods_drained", Json::num(pods as f64)),
         ("api_objects", Json::num(reads.objects as f64)),
-        ("drain_pods_per_sec", Json::num(drain_pods_per_sec)),
-        ("tick_schedule_pods_per_sec", Json::num(tick_sched)),
+        // shard_count=1 point keeps the pre-sharding key names so the
+        // series stays diffable across the refactor
+        ("drain_pods_per_sec", Json::num(single.drain_pods_per_sec)),
+        ("tick_schedule_pods_per_sec", Json::num(single.churn_pods_per_sec)),
+    ];
+    let mut flat_keys: Vec<(String, f64)> = Vec::new();
+    for p in &sweep {
+        flat_keys.push((format!("drain_s{}_pods_per_sec", p.shard_count), p.drain_pods_per_sec));
+        flat_keys.push((format!("churn_s{}_pods_per_sec", p.shard_count), p.churn_pods_per_sec));
+    }
+    flat_keys.push(("drain_best_speedup".into(), best_drain / single.drain_pods_per_sec));
+    flat_keys.push(("churn_best_speedup".into(), best_churn / single.churn_pods_per_sec));
+    for (k, v) in &flat_keys {
+        pairs.push((k.as_str(), Json::num(*v)));
+    }
+    pairs.extend(vec![
+        ("shard_sweep", sweep_json),
         ("list_label_ops_per_sec", Json::num(reads.list_indexed)),
         ("list_label_baseline_ops_per_sec", Json::num(reads.list_baseline)),
         ("list_label_speedup", Json::num(reads.list_speedup())),
@@ -194,8 +395,25 @@ fn main() {
         ("api_ticks_per_sec", Json::num(tick)),
         ("compaction_window", Json::num(window as f64)),
         ("event_ring_len", Json::num(event_ring as f64)),
-        ("watch_log_len", Json::num(api.watch_log_len() as f64)),
+        ("watch_log_len", Json::num(watch_log_len as f64)),
+        ("fed_shards", Json::num(fed_shards as f64)),
+        ("fed_ticks_per_sec", Json::num(fed_ticks_per_sec)),
+        (
+            "fed_tick_secs_per_shard",
+            Json::Arr(fed_tick_secs.iter().map(|&s| Json::num(s)).collect()),
+        ),
+        ("fed_list_merged_ops_per_sec", Json::num(fed_list)),
+        ("fed_watch_merged_ops_per_sec", Json::num(fed_watch)),
+        ("fed_local_submissions", Json::num(fm.local_submissions as f64)),
+        ("fed_cross_shard_submissions", Json::num(fm.cross_shard_submissions as f64)),
+        ("fed_cross_shard_binds", Json::num(fm.cross_shard_binds as f64)),
+        ("fed_fallback_binds", Json::num(fm.fallback_binds as f64)),
+        ("fed_ledger_created", Json::num(ledger.created as f64)),
+        ("fed_ledger_bound", Json::num(ledger.bound as f64)),
+        ("fed_ledger_released", Json::num(ledger.released as f64)),
+        ("fed_ledger_expired", Json::num(ledger.expired as f64)),
     ]);
+    let out = Json::obj(pairs);
     std::fs::write("BENCH_scale.json", out.to_pretty()).expect("write BENCH_scale.json");
     println!("wrote BENCH_scale.json");
 
@@ -232,7 +450,7 @@ fn main() {
                 "project01",
                 ResourceVec::cpu_millis(2000).with(MEMORY, 8 << 30).with(GPU, 1),
                 1e6,
-                aiinfn::queue::kueue::PriorityClass::Batch,
+                PriorityClass::Batch,
                 false,
             )
             .unwrap();
@@ -245,7 +463,7 @@ fn main() {
                     .with(MEMORY, 4 << 30)
                     .with("nvidia.com/mig-1g.5gb", 1),
                 1e6,
-                aiinfn::queue::kueue::PriorityClass::Batch,
+                PriorityClass::Batch,
                 false,
             )
             .unwrap();

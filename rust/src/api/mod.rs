@@ -106,6 +106,36 @@
 //! }
 //! ```
 //!
+//! ## Sharded routing and the merged-watch contract
+//!
+//! Under a multi-shard control plane
+//! ([`Federation`](crate::platform::federation::Federation)) this API is
+//! the per-shard surface; the federation is a *router* over it, not a
+//! second API:
+//!
+//! * **Shard routing** — every write lands on exactly one shard (the
+//!   user's home, `fnv1a(user) % shard_count`), which applies it through
+//!   the verbs above with its own admission chain, watch log, and
+//!   resourceVersion sequence. Names are unique per shard, not globally;
+//!   merged reads therefore return `(shard, object)` pairs.
+//! * **Composite resourceVersion** — per-shard rv sequences advance
+//!   independently, so a federated cursor is a *vector* of them:
+//!   [`FederatedCursor`] holds one rv per shard and wires as
+//!   `fv1:rv0.rv1...`. `watch_merged` fans `watch(token, kind, rv_i)`
+//!   out to every shard, merges ordered by `(event time, shard, rv)`
+//!   into [`ShardEvent`]s, and returns the advanced cursor.
+//! * **Compaction survives per shard** — if any shard compacted past its
+//!   cursor slot, the merged stream surfaces that shard's
+//!   [`ApiError::Compacted`] unchanged; the client re-lists via
+//!   `list_merged` (which returns a fresh post-list cursor) and resumes
+//!   — the single-coordinator 410-Gone contract, per shard slot. A
+//!   shard crash-restoring mid-stream keeps its rv sequence (restored
+//!   from WAL), so the cursor stays valid across restarts.
+//!
+//! Cursor width equals the federation's `sharding.shard_count`; a cursor
+//! minted at a different width is rejected as `Invalid` rather than
+//! misapplied.
+//!
 //! ## Migrating off raw field access
 //!
 //! Before (field-poking, pre-API):
@@ -143,7 +173,7 @@ pub use resources::{
     SessionResource, SiteView, StageStatusView, StageTemplate, WorkloadView, WorkflowRunResource,
 };
 pub use server::{ApiServer, Selector, SelectorOp};
-pub use watch::{EventType, WatchEvent, WatchLog};
+pub use watch::{EventType, FederatedCursor, ShardEvent, WatchEvent, WatchLog};
 
 /// Typed API failure modes (the control plane's HTTP-ish status codes).
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]

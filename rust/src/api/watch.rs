@@ -212,6 +212,64 @@ impl WatchLog {
     }
 }
 
+// ----------------------------------------------------- federated watch merge
+
+/// Composite resumption point for a watch merged across coordinator
+/// shards: one per-shard resourceVersion per shard, in shard order.
+///
+/// Per-shard rvs are **not comparable across shards** (each shard numbers
+/// its own log), so a merged stream cannot be resumed from a single
+/// scalar. The cursor carries the whole vector, wire-encoded as
+/// `fv1:<rv0>.<rv1>...` — opaque to clients, exactly like a Kubernetes
+/// resourceVersion. Per-shard `Compacted` (a shard pruned past the
+/// cursor's rv, e.g. after a shard-local restart) surfaces as `Compacted`
+/// on the merged stream: the client re-lists through the federated list
+/// fan-out and restarts from the fresh cursor it returns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FederatedCursor {
+    /// `per_shard[i]` = last resourceVersion consumed from shard `i`.
+    pub per_shard: Vec<u64>,
+}
+
+impl FederatedCursor {
+    /// The from-the-beginning cursor for an `n`-shard federation.
+    pub fn zero(n: usize) -> FederatedCursor {
+        FederatedCursor { per_shard: vec![0; n] }
+    }
+
+    /// Wire encoding: `fv1:<rv0>.<rv1>...`.
+    pub fn encode(&self) -> String {
+        let parts: Vec<String> = self.per_shard.iter().map(|rv| rv.to_string()).collect();
+        format!("fv1:{}", parts.join("."))
+    }
+
+    pub fn decode(s: &str) -> Result<FederatedCursor, ApiError> {
+        let body = s
+            .strip_prefix("fv1:")
+            .ok_or_else(|| ApiError::Invalid(format!("not a federated cursor: {s:?}")))?;
+        let per_shard = body
+            .split('.')
+            .map(|p| {
+                p.parse::<u64>()
+                    .map_err(|_| ApiError::Invalid(format!("bad shard rv {p:?} in cursor {s:?}")))
+            })
+            .collect::<Result<Vec<u64>, ApiError>>()?;
+        if per_shard.is_empty() {
+            return Err(ApiError::Invalid(format!("empty federated cursor {s:?}")));
+        }
+        Ok(FederatedCursor { per_shard })
+    }
+}
+
+/// A watch event tagged with the shard it came from — needed to advance
+/// the right slot of the [`FederatedCursor`], and because object names are
+/// only unique *within* a shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardEvent {
+    pub shard: usize,
+    pub event: WatchEvent,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,5 +349,24 @@ mod tests {
         assert!(matches!(log.since(ResourceKind::Pod, rv0), Err(ApiError::Compacted(_))));
         // …but the quiet Node watcher is unaffected
         assert_eq!(log.since(ResourceKind::Node, 0).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn federated_cursor_round_trips() {
+        let c = FederatedCursor { per_shard: vec![0, 17, 98_765, u64::MAX] };
+        assert_eq!(c.encode(), format!("fv1:0.17.98765.{}", u64::MAX));
+        assert_eq!(FederatedCursor::decode(&c.encode()).unwrap(), c);
+        let z = FederatedCursor::zero(3);
+        assert_eq!(z.encode(), "fv1:0.0.0");
+        assert_eq!(FederatedCursor::decode("fv1:0.0.0").unwrap(), z);
+    }
+
+    #[test]
+    fn federated_cursor_rejects_malformed_input() {
+        assert!(FederatedCursor::decode("fv2:1.2").is_err());
+        assert!(FederatedCursor::decode("1.2.3").is_err());
+        assert!(FederatedCursor::decode("fv1:").is_err());
+        assert!(FederatedCursor::decode("fv1:1.x.3").is_err());
+        assert!(FederatedCursor::decode("fv1:1..3").is_err());
     }
 }

@@ -8,6 +8,7 @@ pub mod pod;
 pub mod replication;
 pub mod resources;
 pub mod scheduler;
+pub mod shard;
 pub mod store;
 pub mod wal;
 
@@ -15,4 +16,5 @@ pub use node::Node;
 pub use pod::{Pod, PodPhase, PodSpec};
 pub use resources::ResourceVec;
 pub use scheduler::Scheduler;
+pub use shard::{LedgerStats, RebalancePhase, RebalancePlan, Reservation, ReservationLedger, ShardRouter};
 pub use store::ClusterStore;

@@ -1,0 +1,330 @@
+//! Shard-layer primitives for the multi-coordinator control plane: the
+//! zone → shard router, the two-phase (reserve/bind) cross-shard capacity
+//! ledger, and the typed rebalance plan the federation's rebalance
+//! reconciler executes.
+//!
+//! A *shard* is a full coordinator (its own [`crate::cluster::store::ClusterStore`],
+//! WAL, ring logs, free-capacity indexes, Kueue and reconciler runtime) —
+//! see [`crate::platform::federation`] for the layer that composes shards.
+//! This module holds only the shard-agnostic data structures, so they can
+//! be unit-tested without bootstrapping a platform.
+//!
+//! ## The two-phase protocol
+//!
+//! Cross-shard scheduling never mutates a remote shard directly. Phase 1
+//! (**reserve**) claims capacity against the target shard's advertised
+//! headroom *minus every outstanding reservation* in the ledger, so
+//! concurrent reservations can never oversubscribe a shard (no
+//! double-bind). Phase 2 (**bind**) consumes the reservation exactly once
+//! by submitting through the shard's normal admission path. A reservation
+//! that is never bound — the requester crashed, the target shard was lost —
+//! is released by its deadline ([`ReservationLedger::expire`]), so no
+//! capacity leaks and no pair of shards can deadlock waiting on each
+//! other's claims. The conservation law tests assert:
+//!
+//! ```text
+//! created == bound + released + expired + active
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::cluster::resources::ResourceVec;
+use crate::sim::clock::Time;
+
+/// FNV-1a — stable across platforms/runs, so routing is deterministic and
+/// reproducible in golden traces (no `DefaultHasher` seed dependence).
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Maps ownership keys (zones — node names or `aiinfn/zone` label values —
+/// and users) onto shard indexes. Explicit assignments (made at bootstrap
+/// and updated by rebalancing) win; unknown keys fall back to a stable
+/// hash, so routing is total and deterministic.
+#[derive(Debug, Clone)]
+pub struct ShardRouter {
+    shard_count: usize,
+    assignments: BTreeMap<String, usize>,
+}
+
+impl ShardRouter {
+    pub fn new(shard_count: usize) -> ShardRouter {
+        ShardRouter { shard_count: shard_count.max(1), assignments: BTreeMap::new() }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shard_count
+    }
+
+    /// Pin `zone` to `shard` (bootstrap ownership, or a completed
+    /// rebalance flipping the owner).
+    pub fn assign(&mut self, zone: &str, shard: usize) {
+        self.assignments.insert(zone.to_string(), shard % self.shard_count);
+    }
+
+    /// The shard owning `zone`: its pinned assignment, else the hash
+    /// fallback.
+    pub fn route(&self, zone: &str) -> usize {
+        match self.assignments.get(zone) {
+            Some(&s) => s,
+            None => (fnv1a(zone) % self.shard_count as u64) as usize,
+        }
+    }
+
+    /// The home shard for a user's submissions (pure hash: users are not
+    /// pinned, so adding shards re-spreads them deterministically).
+    pub fn route_user(&self, user: &str) -> usize {
+        (fnv1a(user) % self.shard_count as u64) as usize
+    }
+
+    /// Zones explicitly assigned to `shard`, in sorted order.
+    pub fn zones_of(&self, shard: usize) -> Vec<&str> {
+        self.assignments
+            .iter()
+            .filter(|(_, &s)| s == shard)
+            .map(|(z, _)| z.as_str())
+            .collect()
+    }
+}
+
+/// One outstanding phase-1 capacity claim against a shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reservation {
+    pub id: u64,
+    /// Target shard whose headroom is claimed.
+    pub shard: usize,
+    pub requests: ResourceVec,
+    pub created: Time,
+    /// Deadline after which the claim is released unbound.
+    pub expires: Time,
+}
+
+/// Conservation counters over the ledger's lifetime.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LedgerStats {
+    /// Phase-1 claims granted.
+    pub created: u64,
+    /// Claims consumed by a phase-2 bind (each exactly once).
+    pub bound: u64,
+    /// Claims explicitly released by the requester.
+    pub released: u64,
+    /// Claims released by their deadline (requester never bound).
+    pub expired: u64,
+    /// Phase-1 attempts rejected for insufficient headroom.
+    pub rejected: u64,
+}
+
+/// The federation-wide reservation ledger (phase-1 state of the two-phase
+/// protocol). Single-writer by construction — the federation layer owns
+/// it — so admission control is a plain headroom comparison, not a
+/// consensus problem.
+#[derive(Debug, Default)]
+pub struct ReservationLedger {
+    next_id: u64,
+    active: BTreeMap<u64, Reservation>,
+    stats: LedgerStats,
+}
+
+impl ReservationLedger {
+    pub fn new() -> ReservationLedger {
+        ReservationLedger::default()
+    }
+
+    /// Sum of active claims against `shard` — the part of its advertised
+    /// headroom already spoken for.
+    pub fn outstanding(&self, shard: usize) -> ResourceVec {
+        let mut v = ResourceVec::new();
+        for r in self.active.values() {
+            if r.shard == shard {
+                v.add(&r.requests);
+            }
+        }
+        v
+    }
+
+    /// Phase 1: claim `requests` against `headroom` (the shard's free
+    /// capacity/quota as advertised *now*). Fails — without side effects
+    /// beyond the rejection counter — if the claim plus everything already
+    /// outstanding would oversubscribe the shard.
+    pub fn reserve(
+        &mut self,
+        shard: usize,
+        requests: &ResourceVec,
+        headroom: &ResourceVec,
+        now: Time,
+        ttl: Time,
+    ) -> Option<u64> {
+        let mut claimed = self.outstanding(shard);
+        claimed.add(requests);
+        if !claimed.fits_in(headroom) {
+            self.stats.rejected += 1;
+            return None;
+        }
+        self.next_id += 1;
+        let id = self.next_id;
+        self.active.insert(
+            id,
+            Reservation {
+                id,
+                shard,
+                requests: requests.clone(),
+                created: now,
+                expires: now + ttl.max(0.0),
+            },
+        );
+        self.stats.created += 1;
+        Some(id)
+    }
+
+    /// Phase 2: consume the reservation. Returns `None` if it was already
+    /// bound, released, or expired — the caller must treat that as "claim
+    /// lost, do not submit", which is what makes double-binding impossible.
+    pub fn bind(&mut self, id: u64) -> Option<Reservation> {
+        let r = self.active.remove(&id)?;
+        self.stats.bound += 1;
+        Some(r)
+    }
+
+    /// Give a claim back without binding it.
+    pub fn release(&mut self, id: u64) -> Option<Reservation> {
+        let r = self.active.remove(&id)?;
+        self.stats.released += 1;
+        Some(r)
+    }
+
+    /// Release every claim whose deadline has passed, in id order.
+    pub fn expire(&mut self, now: Time) -> Vec<Reservation> {
+        let dead: Vec<u64> =
+            self.active.values().filter(|r| r.expires <= now).map(|r| r.id).collect();
+        let mut out = Vec::with_capacity(dead.len());
+        for id in dead {
+            if let Some(r) = self.active.remove(&id) {
+                self.stats.expired += 1;
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn stats(&self) -> LedgerStats {
+        self.stats
+    }
+
+    /// The conservation law: every claim ever created is accounted for
+    /// exactly once. Violations mean a leak or a double-bind.
+    pub fn balanced(&self) -> bool {
+        self.stats.created
+            == self.stats.bound
+                + self.stats.released
+                + self.stats.expired
+                + self.active.len() as u64
+    }
+}
+
+/// A requested zone migration: move every node of `zone` from shard
+/// `from` to shard `to`. Executed as a reconciler by the federation —
+/// cordon, drain, snapshot-ship, re-register — see
+/// [`crate::platform::federation`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalancePlan {
+    pub zone: String,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Where an in-flight rebalance is in its state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalancePhase {
+    /// Nodes cordoned on the source shard; waiting for live pods to drain.
+    Draining,
+    /// Drained: nodes snapshot-shipped and re-registered on the target.
+    Done,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_is_deterministic_and_total() {
+        let mut r = ShardRouter::new(4);
+        r.assign("zone-a", 1);
+        r.assign("zone-b", 3);
+        assert_eq!(r.route("zone-a"), 1);
+        assert_eq!(r.route("zone-b"), 3);
+        // unknown zones fall back to a stable hash inside range
+        let z = r.route("never-assigned");
+        assert!(z < 4);
+        assert_eq!(z, r.route("never-assigned"));
+        assert_eq!(r.route_user("user001"), r.route_user("user001"));
+        assert!(r.route_user("user001") < 4);
+        // reassignment flips the owner (rebalance)
+        r.assign("zone-a", 2);
+        assert_eq!(r.route("zone-a"), 2);
+        assert_eq!(r.zones_of(2), vec!["zone-a"]);
+    }
+
+    #[test]
+    fn single_shard_router_routes_everything_to_zero() {
+        let r = ShardRouter::new(1);
+        assert_eq!(r.route("anything"), 0);
+        assert_eq!(r.route_user("user077"), 0);
+    }
+
+    #[test]
+    fn reserve_respects_headroom_minus_outstanding() {
+        let mut l = ReservationLedger::new();
+        let headroom = ResourceVec::cpu_millis(10_000);
+        let req = ResourceVec::cpu_millis(4_000);
+        let a = l.reserve(0, &req, &headroom, 0.0, 60.0).expect("first fits");
+        let _b = l.reserve(0, &req, &headroom, 0.0, 60.0).expect("second fits");
+        // 8000 outstanding: a third 4000 claim would oversubscribe
+        assert!(l.reserve(0, &req, &headroom, 0.0, 60.0).is_none());
+        assert_eq!(l.stats().rejected, 1);
+        // but another shard's headroom is independent
+        assert!(l.reserve(1, &req, &headroom, 0.0, 60.0).is_some());
+        // releasing frees the claim for a retry
+        l.release(a).unwrap();
+        assert!(l.reserve(0, &req, &headroom, 1.0, 60.0).is_some());
+        assert!(l.balanced());
+    }
+
+    #[test]
+    fn bind_consumes_exactly_once() {
+        let mut l = ReservationLedger::new();
+        let id = l
+            .reserve(2, &ResourceVec::cpu_millis(1000), &ResourceVec::cpu_millis(2000), 0.0, 30.0)
+            .unwrap();
+        assert!(l.bind(id).is_some());
+        assert!(l.bind(id).is_none(), "double bind must be refused");
+        assert!(l.release(id).is_none());
+        assert_eq!(l.stats().bound, 1);
+        assert!(l.balanced());
+    }
+
+    #[test]
+    fn expiry_releases_unbound_claims_by_deadline() {
+        let mut l = ReservationLedger::new();
+        let h = ResourceVec::cpu_millis(10_000);
+        let id1 = l.reserve(0, &ResourceVec::cpu_millis(1000), &h, 0.0, 10.0).unwrap();
+        let id2 = l.reserve(0, &ResourceVec::cpu_millis(1000), &h, 0.0, 100.0).unwrap();
+        assert!(l.expire(5.0).is_empty());
+        let dead = l.expire(10.0);
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].id, id1);
+        assert!(l.bind(id1).is_none(), "expired claim must not bind");
+        assert!(l.bind(id2).is_some(), "live claim still binds");
+        assert!(l.outstanding(0).is_empty());
+        assert_eq!(l.stats().expired, 1);
+        assert!(l.balanced());
+    }
+}

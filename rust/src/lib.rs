@@ -227,6 +227,34 @@
 //! many frames. Knobs: `replication.enabled`, `replication.lease_seconds`,
 //! `replication.max_ship_lag_frames`.
 //!
+//! ## Sharded multi-coordinator control plane
+//!
+//! With `sharding.shard_count > 1` the single coordinator is carved into
+//! per-site shards behind a federation layer
+//! ([`platform::federation::Federation`], primitives in
+//! [`cluster::shard`]). Each shard is a full [`api::ApiServer`] owning
+//! its slice of the inventory — store, Kueue quotas, WAL + snapshot
+//! cycle, ring logs, free-capacity indexes, reconcilers — ticked in
+//! lockstep. Writes route to the user's home shard
+//! (`fnv1a(user) % shard_count` via [`cluster::shard::ShardRouter`]);
+//! a submission overflowing its home's headroom travels the two-phase
+//! reserve/bind path through the
+//! [`ReservationLedger`](cluster::shard::ReservationLedger), whose
+//! conservation law (`created == bound + released + expired + active`)
+//! rules out double-binds and leaked claims; timed-out reservations
+//! release automatically and exhausted attempts fall back to the home
+//! queue. Reads merge: `list_merged` fans out and sorts, `watch_merged`
+//! interleaves every shard's stream under a composite cursor
+//! ([`api::FederatedCursor`], one resourceVersion per shard) with the
+//! same 410-Gone relist contract on per-shard compaction. Shard
+//! rebalancing is itself a reconciler (cordon → drain → codec-ship →
+//! requota → router flip), and chaos draws optional shard targets for
+//! `CoordinatorCrash`/`LeaderKill` *after* the base schedule so golden
+//! traces never reshuffle. `shard_count = 1` delegates verbatim —
+//! byte-identical traces, pinned by `rust/tests/sharding.rs`. Knobs:
+//! `sharding.shard_count`, `sharding.reserve_ttl_seconds`,
+//! `sharding.max_reserve_attempts`.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for measured results.
 //!

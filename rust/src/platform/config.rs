@@ -137,6 +137,19 @@ pub struct PlatformConfig {
     /// fresh pod incarnation up to this many times. Config key:
     /// `workflow.max_stage_retries`.
     pub workflow_max_stage_retries: u32,
+    /// Coordinator shards the federation layer boots
+    /// ([`crate::platform::federation::Federation`]). `1` (the default)
+    /// is the single-coordinator plane, bit-for-bit. Config key:
+    /// `sharding.shard_count`.
+    pub shard_count: usize,
+    /// Seconds a phase-1 cross-shard reservation may sit unbound before
+    /// the ledger releases it (the two-phase protocol's deadlock/leak
+    /// breaker). Config key: `sharding.reserve_ttl_seconds`.
+    pub shard_reserve_ttl: f64,
+    /// Failed reserve passes before a cross-shard submission falls back
+    /// to its home shard's queue. Config key:
+    /// `sharding.max_reserve_attempts`.
+    pub shard_max_reserve_attempts: u32,
 }
 
 impl PlatformConfig {
@@ -327,6 +340,19 @@ impl PlatformConfig {
                 .at(&["workflow", "max_stage_retries"])
                 .and_then(Json::as_i64)
                 .unwrap_or(3) as u32,
+            shard_count: j
+                .at(&["sharding", "shard_count"])
+                .and_then(Json::as_i64)
+                .unwrap_or(1)
+                .max(1) as usize,
+            shard_reserve_ttl: j
+                .at(&["sharding", "reserve_ttl_seconds"])
+                .and_then(Json::as_f64)
+                .unwrap_or(120.0),
+            shard_max_reserve_attempts: j
+                .at(&["sharding", "max_reserve_attempts"])
+                .and_then(Json::as_i64)
+                .unwrap_or(3) as u32,
         })
     }
 
@@ -503,6 +529,33 @@ mod tests {
         assert_eq!(tuned.workflow_queue_wait_penalty, 120.0);
         assert_eq!(tuned.workflow_gang_reserve_timeout, 30.0);
         assert_eq!(tuned.workflow_max_stage_retries, 1);
+    }
+
+    #[test]
+    fn sharding_knobs_parse_with_defaults() {
+        let minimal = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(minimal.shard_count, 1, "single-coordinator plane by default");
+        assert_eq!(minimal.shard_reserve_ttl, 120.0);
+        assert_eq!(minimal.shard_max_reserve_attempts, 3);
+        let tuned = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}],
+                "sharding":{"shard_count":4,"reserve_ttl_seconds":45,
+                            "max_reserve_attempts":5}}"#,
+        )
+        .unwrap();
+        assert_eq!(tuned.shard_count, 4);
+        assert_eq!(tuned.shard_reserve_ttl, 45.0);
+        assert_eq!(tuned.shard_max_reserve_attempts, 5);
+        // zero/negative counts clamp to the single-coordinator plane
+        let clamped = PlatformConfig::parse(
+            r#"{"servers":[{"name":"x","cpu_cores":8,"memory_gb":32,"nvme_tb":1}],
+                "sharding":{"shard_count":0}}"#,
+        )
+        .unwrap();
+        assert_eq!(clamped.shard_count, 1);
     }
 
     #[test]

@@ -1413,7 +1413,7 @@ impl Platform {
             None => Vec::new(),
         };
         for f in due {
-            let crash = matches!(f, Fault::CoordinatorCrash | Fault::LeaderKill);
+            let crash = matches!(f, Fault::CoordinatorCrash { .. } | Fault::LeaderKill { .. });
             self.apply_fault(f, now);
             if !crash {
                 self.checkpoint_control();
@@ -1510,7 +1510,7 @@ impl Platform {
         self.vks.iter_mut().find(|v| v.site == site)
     }
 
-    fn apply_fault(&mut self, fault: Fault, now: Time) {
+    pub(crate) fn apply_fault(&mut self, fault: Fault, now: Time) {
         match fault {
             Fault::SiteOutage { site } => {
                 if let Some(vk) = self.vk_by_site(&site) {
@@ -1547,8 +1547,8 @@ impl Platform {
             Fault::GpuRecover { node, resource, count } => {
                 self.recover_gpu(&node, &resource, count, now)
             }
-            Fault::CoordinatorCrash => self.crash_and_restore(),
-            Fault::LeaderKill => match self.replication.as_mut() {
+            Fault::CoordinatorCrash { .. } => self.crash_and_restore(),
+            Fault::LeaderKill { .. } => match self.replication.as_mut() {
                 Some(r) => r.leader_alive = false,
                 // without a standby the kill degrades to the local
                 // kill-and-restart recovery path
@@ -2122,7 +2122,7 @@ mod tests {
     fn crash_without_durability_is_a_warning_not_a_wipe() {
         let mut p = platform();
         let mut chaos = ChaosEngine::new();
-        chaos.inject(50.0, Fault::CoordinatorCrash);
+        chaos.inject(50.0, Fault::CoordinatorCrash { shard: None });
         p.set_chaos(chaos);
         p.run_for(100.0, 10.0);
         assert_eq!(p.coordinator_restarts(), 0);

@@ -1,0 +1,903 @@
+//! # The federation layer: composing coordinator shards into one plane
+//!
+//! The single-coordinator control plane ([`Platform`] behind one
+//! [`ApiServer`]) tops out near the 1k-node regime: every store mutation,
+//! free-index update and reconciler pass funnels through one state owner.
+//! [`Federation`] carves that plane into **coordinator shards keyed by
+//! site/zone**: each shard is a *complete* coordinator — its own
+//! [`ClusterStore`](crate::cluster::store::ClusterStore), WAL + ring logs,
+//! free-capacity indexes, Kueue quota tree, reconciler runtime, and (when
+//! enabled) snapshot/restore and epoch-fenced replication — wrapped in its
+//! own [`ApiServer`]. The federation itself holds *no resource state*:
+//! only the router, the reservation ledger, and the job directory.
+//!
+//! ## Routing
+//!
+//! * **Writes** land on the owning shard: submissions route by user hash,
+//!   zones by the [`ShardRouter`]'s pinned assignments (updated by
+//!   rebalancing).
+//! * **Reads** fan out: [`Federation::list_merged`] merges per-shard
+//!   lists; [`Federation::watch_merged`] merges per-shard watch streams
+//!   ordered by event time, resuming from a composite
+//!   [`FederatedCursor`] (vector of per-shard resourceVersions — encoded
+//!   `fv1:<rv0>.<rv1>...`). A shard that compacted past its cursor slot
+//!   surfaces [`ApiError::Compacted`] on the merged stream, and the
+//!   client re-lists exactly as against a single coordinator.
+//!
+//! ## Two-phase cross-shard scheduling
+//!
+//! A submission that does not fit its home shard's headroom goes through
+//! reserve/bind (see [`crate::cluster::shard`]): phase 1 claims capacity
+//! in the federation's [`ReservationLedger`] against the target shard's
+//! advertised headroom (quota minus used minus queued demand, minus every
+//! outstanding claim); phase 2 — the *next* federation step — consumes
+//! the claim exactly once by submitting through the target shard's normal
+//! admission path. Claims never bound are released by deadline, so
+//! capacity cannot leak and shards cannot deadlock on each other's
+//! claims. After `sharding.max_reserve_attempts` failed passes the job
+//! falls back to its home queue and waits there like any queued workload
+//! (nothing is ever lost).
+//!
+//! ## Rebalancing is a reconciler
+//!
+//! [`Federation::request_rebalance`] cordons the zone's nodes on the
+//! source shard; each federation step observes the drain; once no live
+//! pod remains the nodes are snapshot-shipped through the same codec the
+//! WAL/replication path uses ([`Enc`]/[`Dec`]) into the target shard's
+//! store (both sides WAL-logged), quota nominals move with them, and the
+//! router flips the zone's owner.
+//!
+//! ## Determinism and parity
+//!
+//! With `sharding.shard_count = 1` the federation is a pass-through: one
+//! shard bootstrapped from the verbatim config, every submission local,
+//! ticks delegated wholesale — byte-identical golden traces to the
+//! pre-sharding plane. Shard-targeted chaos
+//! ([`Fault::CoordinatorCrash`]/[`Fault::LeaderKill`] with `shard:
+//! Some(_)`) is drained at the federation tick boundary and routed to the
+//! victim shard while the others keep ticking.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::api::server::{ApiServer, Selector};
+use crate::api::watch::{FederatedCursor, ShardEvent};
+use crate::api::{ApiError, ApiObject, ResourceKind};
+use crate::cluster::node::Node;
+use crate::cluster::pod::PodPhase;
+use crate::cluster::resources::ResourceVec;
+use crate::cluster::shard::{RebalancePlan, ReservationLedger, ShardRouter};
+use crate::platform::config::PlatformConfig;
+use crate::platform::facade::Platform;
+use crate::queue::kueue::{PriorityClass, WorkloadState};
+use crate::sim::chaos::{ChaosEngine, ChaosPlan, Fault};
+use crate::sim::clock::Time;
+use crate::util::codec::{Dec, Enc, Reader};
+
+/// Per-key saturating `a - b` (never negative, never collapses the whole
+/// vector the way `checked_sub` does).
+fn saturating_sub(a: &ResourceVec, b: &ResourceVec) -> ResourceVec {
+    let mut out = a.clone();
+    for (k, v) in b.iter() {
+        let cur = out.get(k);
+        out.set(k, (cur - v).max(0));
+    }
+    out
+}
+
+/// The arguments of a federated batch submission, kept so a cross-shard
+/// bind can replay them against whichever shard granted the reservation.
+#[derive(Debug, Clone)]
+struct JobRequest {
+    user: String,
+    project: String,
+    requests: ResourceVec,
+    duration: Time,
+    priority: PriorityClass,
+    offloadable: bool,
+}
+
+/// Where a federated job is in the submit → reserve → bind lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FederatedJobPhase {
+    /// Waiting for a phase-1 reservation (queued at the federation).
+    PendingReserve,
+    /// Phase-1 claim held; bound on the next federation step.
+    Reserved { shard: usize, reservation: u64 },
+    /// Bound into a shard's Kueue — terminal for the federation; the
+    /// shard's admission/scheduling owns it from here.
+    Bound { shard: usize, workload: String },
+}
+
+#[derive(Debug, Clone)]
+struct FederatedJob {
+    request: JobRequest,
+    home: usize,
+    phase: FederatedJobPhase,
+    /// Failed reserve passes so far (drives the home-queue fallback).
+    attempts: u32,
+}
+
+/// An in-flight zone rebalance (the reconciler's per-item state).
+#[derive(Debug, Clone)]
+struct RebalanceState {
+    plan: RebalancePlan,
+    /// The cordoned node names being drained, sorted.
+    nodes: Vec<String>,
+}
+
+/// Federation-level counters (shard-local metrics live on each shard's
+/// [`Platform`]).
+#[derive(Debug, Default, Clone)]
+pub struct FederationMetrics {
+    /// Submissions bound directly to their home shard.
+    pub local_submissions: u64,
+    /// Submissions that entered the two-phase cross-shard path.
+    pub cross_shard_submissions: u64,
+    /// Phase-2 binds consummated on a reserved shard.
+    pub cross_shard_binds: u64,
+    /// Jobs that exhausted reserve attempts and fell back to the home
+    /// shard's queue.
+    pub fallback_binds: u64,
+    /// Nodes moved by completed rebalances.
+    pub rebalanced_nodes: u64,
+    /// Rebalance plans fully executed.
+    pub rebalances_completed: u64,
+    /// Shard-targeted coordinator crash/kill faults applied.
+    pub shard_crashes: u64,
+}
+
+/// N coordinator shards behind one front door. See the module docs.
+pub struct Federation {
+    shards: Vec<ApiServer>,
+    router: ShardRouter,
+    ledger: ReservationLedger,
+    /// Directory of every federated submission, keyed by its `fed-NNNNNN`
+    /// name (sorted ⇒ deterministic bind order).
+    jobs: BTreeMap<String, FederatedJob>,
+    /// Names awaiting a phase-1 reservation, in arrival order.
+    queue: VecDeque<String>,
+    rebalances: VecDeque<RebalanceState>,
+    /// Federation-level schedule of shard-targeted coordinator faults.
+    chaos: Option<ChaosEngine>,
+    reserve_ttl: Time,
+    max_reserve_attempts: u32,
+    seq: u64,
+    metrics: FederationMetrics,
+}
+
+impl Federation {
+    /// Boot `config.shard_count` coordinator shards. With one shard the
+    /// config is used verbatim (parity with the single-coordinator
+    /// plane); with more, physical servers are dealt round-robin across
+    /// shards and the InterLink federation bridge (virtual sites) stays a
+    /// shard-0 concern.
+    pub fn bootstrap(config: PlatformConfig) -> anyhow::Result<Federation> {
+        let shard_count = config.shard_count.max(1);
+        let reserve_ttl = config.shard_reserve_ttl;
+        let max_reserve_attempts = config.shard_max_reserve_attempts;
+        let mut router = ShardRouter::new(shard_count);
+        let mut shards = Vec::with_capacity(shard_count);
+        if shard_count == 1 {
+            for s in &config.servers {
+                router.assign(&s.name, 0);
+            }
+            shards.push(ApiServer::bootstrap(config)?);
+        } else {
+            anyhow::ensure!(
+                config.servers.len() >= shard_count,
+                "sharding.shard_count {} exceeds the {}-server inventory",
+                shard_count,
+                config.servers.len()
+            );
+            for sid in 0..shard_count {
+                let mut sub = config.clone();
+                sub.servers = config
+                    .servers
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % shard_count == sid)
+                    .map(|(_, s)| s.clone())
+                    .collect();
+                sub.federation_enabled = config.federation_enabled && sid == 0;
+                for s in &sub.servers {
+                    router.assign(&s.name, sid);
+                }
+                shards.push(ApiServer::bootstrap(sub)?);
+            }
+        }
+        Ok(Federation {
+            shards,
+            router,
+            ledger: ReservationLedger::new(),
+            jobs: BTreeMap::new(),
+            queue: VecDeque::new(),
+            rebalances: VecDeque::new(),
+            chaos: None,
+            reserve_ttl,
+            max_reserve_attempts,
+            seq: 0,
+            metrics: FederationMetrics::default(),
+        })
+    }
+
+    // ------------------------------------------------------------- plumbing
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &ApiServer {
+        &self.shards[i]
+    }
+
+    pub fn shard_mut(&mut self, i: usize) -> &mut ApiServer {
+        &mut self.shards[i]
+    }
+
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    pub fn ledger(&self) -> &ReservationLedger {
+        &self.ledger
+    }
+
+    pub fn metrics(&self) -> &FederationMetrics {
+        &self.metrics
+    }
+
+    /// All shards tick in lockstep, so any shard's clock is *the* clock.
+    pub fn now(&self) -> Time {
+        self.shards[0].now()
+    }
+
+    /// Total nodes registered across every shard.
+    pub fn node_count(&self) -> usize {
+        self.shards.iter().map(|s| s.platform().node_count()).sum()
+    }
+
+    /// Summed `(used, total)` utilization across shards.
+    pub fn utilization(&self, physical_only: bool) -> (ResourceVec, ResourceVec) {
+        let mut used = ResourceVec::new();
+        let mut total = ResourceVec::new();
+        for s in &self.shards {
+            let (u, t) = s.platform().utilization(physical_only);
+            used.add(&u);
+            total.add(&t);
+        }
+        (used, total)
+    }
+
+    /// Walk every shard's free-capacity index invariant (panics on
+    /// mismatch, like the store's own checker); returns entries checked.
+    pub fn check_free_indexes(&self) -> usize {
+        self.shards.iter().map(|s| s.platform().cluster().check_free_index()).sum()
+    }
+
+    // ---------------------------------------------------------------- chaos
+
+    /// Install a chaos plan. One shard delegates wholesale (golden-trace
+    /// parity). With more shards, site/node/GPU faults are dealt to each
+    /// shard under a per-shard seed, while coordinator crash/kill faults
+    /// are drawn once at the federation level with shard targets
+    /// ([`ChaosPlan::shard_count`]) and routed at tick boundaries.
+    pub fn install_chaos(&mut self, plan: &ChaosPlan) {
+        if self.shards.len() == 1 {
+            self.shards[0].platform_mut().install_chaos(plan);
+            return;
+        }
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            let mut sp = plan.clone();
+            // decorrelate shard-local draws; splitmix64-style odd constant
+            sp.seed = plan.seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(i as u64 + 1);
+            sp.coordinator_crashes_per_hour = 0.0;
+            sp.leader_kills_per_hour = 0.0;
+            sp.shard_count = 0;
+            s.platform_mut().install_chaos(&sp);
+        }
+        let mut fp = plan.clone();
+        fp.shard_count = self.shards.len();
+        fp.leader_isolations_per_hour = 0.0;
+        // no targets ⇒ only the coordinator crash/kill draws run
+        self.chaos = Some(fp.generate(&[], &[], &[]));
+    }
+
+    /// Schedule one shard-targeted (or untargeted) fault at the
+    /// federation level.
+    pub fn inject_fault(&mut self, at: Time, fault: Fault) {
+        self.chaos.get_or_insert_with(ChaosEngine::new).inject(at, fault);
+    }
+
+    fn apply_shard_fault(&mut self, fault: Fault) {
+        let n = self.shards.len();
+        match fault {
+            Fault::CoordinatorCrash { shard } => {
+                let i = shard.unwrap_or(0) % n;
+                self.metrics.shard_crashes += 1;
+                self.shards[i].platform_mut().crash_and_restore();
+            }
+            Fault::LeaderKill { shard } => {
+                let i = shard.unwrap_or(0) % n;
+                self.metrics.shard_crashes += 1;
+                let now = self.shards[i].now();
+                self.shards[i].platform_mut().apply_fault(Fault::LeaderKill { shard: None }, now);
+            }
+            other => {
+                // untargetable federation-level faults mirror the
+                // single-coordinator path: shard 0 owns them
+                let now = self.shards[0].now();
+                self.shards[0].platform_mut().apply_fault(other, now);
+            }
+        }
+    }
+
+    // ----------------------------------------------------------------- time
+
+    /// Advance every shard in lockstep ticks of `tick_period`, running
+    /// the federation step (faults → binds → reserves → rebalances) at
+    /// each boundary.
+    pub fn run_for(&mut self, duration: Time, tick_period: Time) {
+        let t_end = self.now() + duration;
+        while self.now() < t_end {
+            let next = (self.now() + tick_period).min(t_end);
+            self.step_to(next, tick_period);
+        }
+    }
+
+    /// One lockstep tick.
+    pub fn step(&mut self, tick_period: Time) {
+        let next = self.now() + tick_period;
+        self.step_to(next, tick_period);
+    }
+
+    /// One lockstep tick, returning each shard's wall-clock tick cost in
+    /// seconds (the scale bench's per-shard breakdown).
+    pub fn step_timed(&mut self, tick_period: Time) -> Vec<f64> {
+        let next = self.now() + tick_period;
+        self.drain_federation_faults(next);
+        let mut secs = Vec::with_capacity(self.shards.len());
+        for s in &mut self.shards {
+            let t0 = std::time::Instant::now();
+            let now = s.now();
+            if next > now {
+                s.run_for(next - now, tick_period);
+            }
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        self.step_federation(next);
+        secs
+    }
+
+    fn step_to(&mut self, next: Time, tick_period: Time) {
+        // shard-targeted coordinator faults land before the victim ticks
+        self.drain_federation_faults(next);
+        for s in &mut self.shards {
+            let now = s.now();
+            if next > now {
+                s.run_for(next - now, tick_period);
+            }
+        }
+        self.step_federation(next);
+    }
+
+    fn drain_federation_faults(&mut self, next: Time) {
+        let due: Vec<Fault> = match self.chaos.as_mut() {
+            Some(c) => c.due(next),
+            None => Vec::new(),
+        };
+        for f in due {
+            self.apply_shard_fault(f);
+        }
+    }
+
+    // ---------------------------------------------------------- submissions
+
+    /// Submit a batch job to the federation. Routes to the user's home
+    /// shard when its headroom fits; otherwise enters the two-phase
+    /// cross-shard path. Returns the federated job name (`fed-NNNNNN`).
+    pub fn submit_batch(
+        &mut self,
+        user: &str,
+        project: &str,
+        requests: ResourceVec,
+        duration: Time,
+        priority: PriorityClass,
+        offloadable: bool,
+    ) -> anyhow::Result<String> {
+        let home = self.router.route_user(user);
+        self.seq += 1;
+        let name = format!("fed-{:06}", self.seq);
+        let request = JobRequest {
+            user: user.to_string(),
+            project: project.to_string(),
+            requests,
+            duration,
+            priority,
+            offloadable,
+        };
+        let headroom =
+            saturating_sub(&self.shard_headroom(home), &self.ledger.outstanding(home));
+        let phase = if self.shards.len() == 1 || request.requests.fits_in(&headroom) {
+            let wl = self.shards[home].platform_mut().submit_batch(
+                &request.user,
+                &request.project,
+                request.requests.clone(),
+                request.duration,
+                request.priority,
+                request.offloadable,
+            )?;
+            self.metrics.local_submissions += 1;
+            FederatedJobPhase::Bound { shard: home, workload: wl }
+        } else {
+            self.metrics.cross_shard_submissions += 1;
+            self.queue.push_back(name.clone());
+            FederatedJobPhase::PendingReserve
+        };
+        self.jobs.insert(name.clone(), FederatedJob { request, home, phase, attempts: 0 });
+        Ok(name)
+    }
+
+    /// The federated job's phase (reserve/bind lifecycle view).
+    pub fn job_phase(&self, name: &str) -> Option<FederatedJobPhase> {
+        self.jobs.get(name).map(|j| j.phase.clone())
+    }
+
+    /// The Kueue state behind a federated job. Jobs still in the reserve
+    /// pipeline report `Queued` — indistinguishable, for a client, from
+    /// waiting in a shard's queue.
+    pub fn workload_state(&self, name: &str) -> Option<WorkloadState> {
+        match &self.jobs.get(name)?.phase {
+            FederatedJobPhase::Bound { shard, workload } => {
+                self.shards[*shard].platform().workload_state(workload)
+            }
+            _ => Some(WorkloadState::Queued),
+        }
+    }
+
+    /// The user's home shard under current routing.
+    pub fn home_shard(&self, user: &str) -> usize {
+        self.router.route_user(user)
+    }
+
+    /// A shard's advertised headroom: total quota nominal minus admitted
+    /// usage minus *queued* demand (submissions waiting on this shard),
+    /// per resource key. Queued demand must count, or every pre-tick
+    /// submission would see untouched quota and pile onto one shard.
+    fn shard_headroom(&self, shard: usize) -> ResourceVec {
+        let p = self.shards[shard].platform();
+        let (used, nominal) = p.quota_utilization();
+        let mut queued = ResourceVec::new();
+        for w in p.kueue.workloads() {
+            if matches!(
+                w.state,
+                WorkloadState::Queued | WorkloadState::EvictedPendingRequeue { .. }
+            ) {
+                queued.add(&w.requests);
+            }
+        }
+        saturating_sub(&saturating_sub(&nominal, &used), &queued)
+    }
+
+    // ------------------------------------------------------ federation step
+
+    /// The federation's own reconciliation pass, run after the shards
+    /// tick: expire stale claims, bind reserved jobs (phase 2), reserve
+    /// for queued jobs (phase 1), and advance rebalances. Order matters:
+    /// binds run before new reserves so every claim lives through at
+    /// least one full step and is either consumed or expired — never
+    /// silently overwritten.
+    fn step_federation(&mut self, now: Time) {
+        // 0) timeout-release: expired claims go back to the reserve queue
+        let expired = self.ledger.expire(now);
+        for r in expired {
+            let holder = self.jobs.iter().find_map(|(n, j)| match j.phase {
+                FederatedJobPhase::Reserved { reservation, .. } if reservation == r.id => {
+                    Some(n.clone())
+                }
+                _ => None,
+            });
+            if let Some(name) = holder {
+                let j = self.jobs.get_mut(&name).expect("job directory entry");
+                j.phase = FederatedJobPhase::PendingReserve;
+                j.attempts += 1;
+                self.queue.push_back(name);
+            }
+        }
+
+        // 1) phase 2: bind claims granted on an earlier step
+        let to_bind: Vec<(String, usize, u64)> = self
+            .jobs
+            .iter()
+            .filter_map(|(n, j)| match j.phase {
+                FederatedJobPhase::Reserved { shard, reservation } => {
+                    Some((n.clone(), shard, reservation))
+                }
+                _ => None,
+            })
+            .collect();
+        for (name, shard, reservation) in to_bind {
+            if self.ledger.bind(reservation).is_none() {
+                // claim lost (expired above): the job is already requeued
+                continue;
+            }
+            let r = self.jobs[&name].request.clone();
+            let outcome = self.shards[shard].platform_mut().submit_batch(
+                &r.user,
+                &r.project,
+                r.requests,
+                r.duration,
+                r.priority,
+                r.offloadable,
+            );
+            let j = self.jobs.get_mut(&name).expect("job directory entry");
+            match outcome {
+                Ok(workload) => {
+                    j.phase = FederatedJobPhase::Bound { shard, workload };
+                    self.metrics.cross_shard_binds += 1;
+                }
+                Err(e) => {
+                    log::warn!("cross-shard bind of {name} on shard {shard} failed: {e}");
+                    j.phase = FederatedJobPhase::PendingReserve;
+                    j.attempts += 1;
+                    self.queue.push_back(name);
+                }
+            }
+        }
+
+        // 2) phase 1: reserve for queued jobs, home shard first
+        let n = self.shards.len();
+        let mut requeue = Vec::new();
+        while let Some(name) = self.queue.pop_front() {
+            let (request, home, attempts) = match self.jobs.get(&name) {
+                Some(j) if j.phase == FederatedJobPhase::PendingReserve => {
+                    (j.request.clone(), j.home, j.attempts)
+                }
+                _ => continue, // already bound/reserved via another path
+            };
+            let mut reserved = false;
+            for off in 0..n {
+                let shard = (home + off) % n;
+                let headroom = self.shard_headroom(shard);
+                if let Some(id) =
+                    self.ledger.reserve(shard, &request.requests, &headroom, now, self.reserve_ttl)
+                {
+                    self.jobs.get_mut(&name).expect("job directory entry").phase =
+                        FederatedJobPhase::Reserved { shard, reservation: id };
+                    reserved = true;
+                    break;
+                }
+            }
+            if reserved {
+                continue;
+            }
+            if attempts >= self.max_reserve_attempts {
+                // no shard has headroom: park in the home queue and let
+                // Kueue's admission own the wait — the job is never lost
+                let r = request.clone();
+                match self.shards[home].platform_mut().submit_batch(
+                    &r.user,
+                    &r.project,
+                    r.requests,
+                    r.duration,
+                    r.priority,
+                    r.offloadable,
+                ) {
+                    Ok(workload) => {
+                        self.jobs.get_mut(&name).expect("job directory entry").phase =
+                            FederatedJobPhase::Bound { shard: home, workload };
+                        self.metrics.fallback_binds += 1;
+                    }
+                    Err(e) => {
+                        log::warn!("home fallback bind of {name} failed: {e}");
+                        requeue.push(name);
+                    }
+                }
+            } else {
+                self.jobs.get_mut(&name).expect("job directory entry").attempts += 1;
+                requeue.push(name);
+            }
+        }
+        self.queue.extend(requeue);
+
+        // 3) the rebalance reconciler
+        self.step_rebalances(now);
+    }
+
+    // ------------------------------------------------------------ rebalance
+
+    /// Start moving zone `zone` (a node name, or an `aiinfn/zone` label
+    /// value) to shard `to`. Cordons its nodes now; the federation step
+    /// drains and ships them (see module docs).
+    pub fn request_rebalance(&mut self, zone: &str, to: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(to < self.shards.len(), "no shard {to}");
+        let from = self.router.route(zone);
+        anyhow::ensure!(from != to, "zone {zone} already on shard {to}");
+        let nodes = self.zone_nodes(from, zone);
+        anyhow::ensure!(!nodes.is_empty(), "zone {zone} has no physical nodes on shard {from}");
+        let now = self.shards[from].now();
+        {
+            let p = self.shards[from].platform_mut();
+            let mut store = p.store.borrow_mut();
+            for n in &nodes {
+                store.set_node_ready(n, false, now, "rebalance: cordoned for shard move");
+            }
+        }
+        self.rebalances.push_back(RebalanceState {
+            plan: RebalancePlan { zone: zone.to_string(), from, to },
+            nodes,
+        });
+        Ok(())
+    }
+
+    /// In-flight rebalances (zones still draining).
+    pub fn rebalances_pending(&self) -> usize {
+        self.rebalances.len()
+    }
+
+    fn zone_nodes(&self, shard: usize, zone: &str) -> Vec<String> {
+        let p = self.shards[shard].platform();
+        let store = p.cluster();
+        let mut out: Vec<String> = store
+            .nodes()
+            .filter(|n| {
+                !n.virtual_node
+                    && (n.name == zone
+                        || n.labels.get("aiinfn/zone").map(|z| z == zone).unwrap_or(false))
+            })
+            .map(|n| n.name.clone())
+            .collect();
+        out.sort();
+        out
+    }
+
+    fn step_rebalances(&mut self, now: Time) {
+        let mut i = 0;
+        while i < self.rebalances.len() {
+            let drained = {
+                let rb = &self.rebalances[i];
+                let p = self.shards[rb.plan.from].platform();
+                let store = p.cluster();
+                !store.pods().any(|pod| {
+                    matches!(pod.status.phase, PodPhase::Scheduled | PodPhase::Running)
+                        && pod
+                            .status
+                            .node
+                            .as_deref()
+                            .map(|n| rb.nodes.iter().any(|x| x == n))
+                            .unwrap_or(false)
+                })
+            };
+            if drained {
+                let rb = self.rebalances.remove(i).expect("indexed rebalance");
+                self.transfer_zone(rb, now);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Ship each drained node through the WAL codec into the target
+    /// shard, move its quota share, and flip the router.
+    fn transfer_zone(&mut self, rb: RebalanceState, now: Time) {
+        for name in &rb.nodes {
+            let node =
+                self.shards[rb.plan.from].platform_mut().store.borrow_mut().remove_node(name, now);
+            let Some(node) = node else { continue };
+            // same byte format the WAL and snapshot-shipping paths use
+            let mut bytes = Vec::new();
+            node.enc(&mut bytes);
+            let mut rdr = Reader::new(&bytes);
+            let mut shipped = Node::dec(&mut rdr).expect("node codec round-trip");
+            shipped.ready = true; // uncordon on arrival
+            let alloc = shipped.allocatable.clone();
+            self.adjust_quota(rb.plan.from, &alloc, false);
+            {
+                let p = self.shards[rb.plan.to].platform_mut();
+                let at = p.now();
+                p.store.borrow_mut().add_node(shipped, at);
+            }
+            self.adjust_quota(rb.plan.to, &alloc, true);
+            self.metrics.rebalanced_nodes += 1;
+        }
+        self.router.assign(&rb.plan.zone, rb.plan.to);
+        self.metrics.rebalances_completed += 1;
+    }
+
+    /// Move a node's allocatable in/out of a shard's quota nominals,
+    /// split between interactive and batch exactly as bootstrap splits
+    /// local capacity.
+    fn adjust_quota(&mut self, shard: usize, alloc: &ResourceVec, add: bool) {
+        let share = self.shards[shard].platform().config.interactive_share;
+        let mut interactive = ResourceVec::new();
+        let mut batch = ResourceVec::new();
+        for (k, v) in alloc.iter() {
+            let i = (v as f64 * share).round() as i64;
+            interactive.set(k, i);
+            batch.set(k, v - i);
+        }
+        let zero = ResourceVec::new();
+        let p = self.shards[shard].platform_mut();
+        let (i_add, i_rm, b_add, b_rm) = if add {
+            (&interactive, &zero, &batch, &zero)
+        } else {
+            (&zero, &interactive, &zero, &batch)
+        };
+        if let Err(e) = p.kueue.adjust_nominal("interactive-cq", i_add, i_rm) {
+            log::warn!("rebalance quota adjust (interactive-cq, shard {shard}): {e}");
+        }
+        if let Err(e) = p.kueue.adjust_nominal("batch-cq", b_add, b_rm) {
+            log::warn!("rebalance quota adjust (batch-cq, shard {shard}): {e}");
+        }
+    }
+
+    // --------------------------------------------------------- merged reads
+
+    /// One bearer token per shard (same identity everywhere); index `i`
+    /// authenticates against shard `i`.
+    pub fn login(&mut self, user: &str) -> Result<Vec<String>, ApiError> {
+        self.shards.iter_mut().map(|s| s.login(user)).collect()
+    }
+
+    /// Fan a `list` out to every shard and merge. Objects are returned
+    /// `(shard, object)` — names are only unique within a shard — sorted
+    /// by `(name, shard)`. The returned cursor resumes a merged watch
+    /// from the exact post-list state of every shard.
+    pub fn list_merged(
+        &self,
+        tokens: &[String],
+        kind: ResourceKind,
+        selector: &Selector,
+    ) -> Result<(Vec<(usize, ApiObject)>, FederatedCursor), ApiError> {
+        self.check_tokens(tokens)?;
+        let mut out = Vec::new();
+        for (i, s) in self.shards.iter().enumerate() {
+            for obj in s.list(&tokens[i], kind, selector)? {
+                out.push((i, obj));
+            }
+        }
+        out.sort_by(|(sa, a), (sb, b)| a.name().cmp(b.name()).then(sa.cmp(sb)));
+        Ok((out, self.cursor_now()))
+    }
+
+    /// Merge every shard's watch stream for `kind` after `cursor`,
+    /// ordered by `(event time, shard, per-shard rv)`, and return the
+    /// advanced cursor. A shard that compacted past its cursor slot
+    /// surfaces [`ApiError::Compacted`] for the whole merged stream — the
+    /// client re-lists via [`Federation::list_merged`] (which hands back
+    /// a fresh cursor), the same contract a single coordinator's watch
+    /// has.
+    pub fn watch_merged(
+        &self,
+        tokens: &[String],
+        kind: ResourceKind,
+        cursor: &FederatedCursor,
+    ) -> Result<(Vec<ShardEvent>, FederatedCursor), ApiError> {
+        self.check_tokens(tokens)?;
+        if cursor.per_shard.len() != self.shards.len() {
+            return Err(ApiError::Invalid(format!(
+                "cursor spans {} shards, federation has {}",
+                cursor.per_shard.len(),
+                self.shards.len()
+            )));
+        }
+        let mut merged: Vec<ShardEvent> = Vec::new();
+        let mut next = cursor.clone();
+        for (i, s) in self.shards.iter().enumerate() {
+            for event in s.watch(&tokens[i], kind, cursor.per_shard[i])? {
+                next.per_shard[i] = next.per_shard[i].max(event.resource_version);
+                merged.push(ShardEvent { shard: i, event });
+            }
+        }
+        merged.sort_by(|a, b| {
+            a.event
+                .at
+                .partial_cmp(&b.event.at)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.shard.cmp(&b.shard))
+                .then(a.event.resource_version.cmp(&b.event.resource_version))
+        });
+        Ok((merged, next))
+    }
+
+    /// The composite cursor at every shard's current head.
+    pub fn cursor_now(&self) -> FederatedCursor {
+        FederatedCursor { per_shard: self.shards.iter().map(|s| s.last_rv()).collect() }
+    }
+
+    fn check_tokens(&self, tokens: &[String]) -> Result<(), ApiError> {
+        if tokens.len() != self.shards.len() {
+            return Err(ApiError::Invalid(format!(
+                "{} tokens for {} shards (login returns one per shard)",
+                tokens.len(),
+                self.shards.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Consume the federation, returning its shards (tests dissect them).
+    pub fn into_shards(self) -> Vec<ApiServer> {
+        self.shards
+    }
+
+    /// Direct access to a shard's platform (bench/test instrumentation).
+    pub fn platform(&self, i: usize) -> &Platform {
+        self.shards[i].platform()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::config::PlatformConfig;
+
+    fn config(shards: usize) -> PlatformConfig {
+        let servers: Vec<String> = (0..4)
+            .map(|i| format!(r#"{{"name":"node-{i:02}","cpu_cores":16,"memory_gb":64,"nvme_tb":1}}"#))
+            .collect();
+        let raw = format!(
+            r#"{{"servers":[{}],"sharding":{{"shard_count":{shards}}},"federation":{{"enabled":false}}}}"#,
+            servers.join(",")
+        );
+        PlatformConfig::parse(&raw).expect("test config parses")
+    }
+
+    #[test]
+    fn bootstrap_partitions_servers_round_robin() {
+        let fed = Federation::bootstrap(config(2)).unwrap();
+        assert_eq!(fed.shard_count(), 2);
+        // 4 servers dealt 2+2; router pins each to its shard
+        assert_eq!(fed.router().route("node-00"), 0);
+        assert_eq!(fed.router().route("node-01"), 1);
+        assert_eq!(fed.router().route("node-02"), 0);
+        assert_eq!(fed.router().route("node-03"), 1);
+        let per_shard: Vec<usize> =
+            (0..2).map(|i| fed.platform(i).node_count()).collect();
+        assert_eq!(per_shard, vec![2, 2]);
+    }
+
+    #[test]
+    fn single_shard_bootstrap_uses_config_verbatim() {
+        let fed = Federation::bootstrap(config(1)).unwrap();
+        assert_eq!(fed.shard_count(), 1);
+        assert_eq!(fed.platform(0).node_count(), 4);
+        assert_eq!(fed.router().route("node-03"), 0);
+    }
+
+    #[test]
+    fn local_submission_binds_immediately() {
+        let mut fed = Federation::bootstrap(config(2)).unwrap();
+        let name = fed
+            .submit_batch("u1", "proj", ResourceVec::cpu_millis(1000), 50.0, PriorityClass::Batch, false)
+            .unwrap();
+        assert!(matches!(fed.job_phase(&name), Some(FederatedJobPhase::Bound { .. })));
+        assert_eq!(fed.metrics().local_submissions, 1);
+        assert_eq!(fed.workload_state(&name), Some(WorkloadState::Queued));
+    }
+
+    #[test]
+    fn merged_list_spans_every_shard() {
+        let mut fed = Federation::bootstrap(config(4)).unwrap();
+        let tokens = fed.login("u1").unwrap();
+        assert_eq!(tokens.len(), 4);
+        let (nodes, cursor) =
+            fed.list_merged(&tokens, ResourceKind::Node, &Selector::all()).unwrap();
+        assert_eq!(nodes.len(), 4, "one physical node per shard");
+        assert_eq!(cursor.per_shard.len(), 4);
+        // names sorted; every shard contributed
+        let shards: std::collections::BTreeSet<usize> =
+            nodes.iter().map(|(s, _)| *s).collect();
+        assert_eq!(shards.len(), 4);
+    }
+
+    #[test]
+    fn merged_watch_rejects_mismatched_cursor() {
+        let mut fed = Federation::bootstrap(config(2)).unwrap();
+        let tokens = fed.login("u1").unwrap();
+        let bad = FederatedCursor::zero(3);
+        assert!(matches!(
+            fed.watch_merged(&tokens, ResourceKind::Pod, &bad),
+            Err(ApiError::Invalid(_))
+        ));
+    }
+}

@@ -6,10 +6,12 @@
 
 pub mod config;
 pub mod facade;
+pub mod federation;
 pub mod reconcile;
 pub mod serving;
 pub mod workflow;
 
 pub use config::{default_config_path, PlatformConfig};
 pub use facade::{BatchSubmission, Platform, PlatformMetrics, RestartPolicy};
+pub use federation::{Federation, FederatedJobPhase, FederationMetrics};
 pub use reconcile::{Ctx, Key, Reconciler, Requeue, Runtime};

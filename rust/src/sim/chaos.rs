@@ -44,12 +44,15 @@ pub enum Fault {
     GpuRecover { node: String, resource: String, count: i64 },
     /// The coordinator process dies and restarts: control-plane state is
     /// rebuilt from the last snapshot plus the WAL tail. A no-op (with a
-    /// warning) unless durability is enabled.
-    CoordinatorCrash,
+    /// warning) unless durability is enabled. `shard` targets one
+    /// coordinator shard of a federation (`None` = the sole/first
+    /// coordinator — the pre-sharding semantics).
+    CoordinatorCrash { shard: Option<usize> },
     /// The lease-holding leader dies and stays dead. With replication
     /// enabled the hot standby promotes once the lease expires; without
     /// it the fault degrades to [`Fault::CoordinatorCrash`] semantics.
-    LeaderKill,
+    /// `shard` targets one coordinator shard (`None` as above).
+    LeaderKill { shard: Option<usize> },
     /// The leader is partitioned from the standby: lease renewals and WAL
     /// shipping stop while the leader keeps (vainly) mutating state. At
     /// lease expiry the standby promotes and epoch fencing rejects the
@@ -76,8 +79,12 @@ impl Fault {
             Fault::GpuRecover { node, resource, count } => {
                 format!("gpu-recover {node} +{count} {resource}")
             }
-            Fault::CoordinatorCrash => "coordinator-crash".to_string(),
-            Fault::LeaderKill => "leader-kill".to_string(),
+            // `None` keeps the exact pre-sharding strings: golden traces
+            // recorded against the single-coordinator plane still match
+            Fault::CoordinatorCrash { shard: None } => "coordinator-crash".to_string(),
+            Fault::CoordinatorCrash { shard: Some(s) } => format!("coordinator-crash shard-{s}"),
+            Fault::LeaderKill { shard: None } => "leader-kill".to_string(),
+            Fault::LeaderKill { shard: Some(s) } => format!("leader-kill shard-{s}"),
             Fault::LeaderIsolate => "leader-isolate".to_string(),
         }
     }
@@ -170,6 +177,12 @@ pub struct ChaosPlan {
     pub leader_kills_per_hour: f64,
     /// Leader/standby network partitions (needs `replication.enabled`).
     pub leader_isolations_per_hour: f64,
+    /// Coordinator shards in the targeted federation. At `<= 1` (the
+    /// default) crash/kill faults carry `shard: None` and the plan is
+    /// byte-identical to the pre-sharding generator; above 1 each
+    /// crash/kill draws a shard target *after every other draw*, so the
+    /// base schedule never reshuffles.
+    pub shard_count: usize,
 }
 
 impl Default for ChaosPlan {
@@ -189,6 +202,7 @@ impl Default for ChaosPlan {
             coordinator_crashes_per_hour: 0.0,
             leader_kills_per_hour: 0.0,
             leader_isolations_per_hour: 0.0,
+            shard_count: 0,
         }
     }
 }
@@ -264,17 +278,30 @@ impl ChaosPlan {
         // byte-identical to the crash-free plan with the same seed
         for _ in 0..rng.poisson(self.coordinator_crashes_per_hour * hours) {
             let at = rng.range_f64(0.0, self.horizon);
-            eng.inject(at, Fault::CoordinatorCrash);
+            eng.inject(at, Fault::CoordinatorCrash { shard: None });
         }
         // and leader faults after crashes, for the same reason: turning a
         // crash campaign into a failover campaign must not reshuffle it
         for _ in 0..rng.poisson(self.leader_kills_per_hour * hours) {
             let at = rng.range_f64(0.0, self.horizon);
-            eng.inject(at, Fault::LeaderKill);
+            eng.inject(at, Fault::LeaderKill { shard: None });
         }
         for _ in 0..rng.poisson(self.leader_isolations_per_hour * hours) {
             let at = rng.range_f64(0.0, self.horizon);
             eng.inject(at, Fault::LeaderIsolate);
+        }
+        // shard targets are drawn after *everything* else, walking the
+        // already-sorted schedule: plans with shard_count <= 1 draw
+        // nothing here, so every pre-sharding seeded schedule above stays
+        // byte-identical
+        if self.shard_count > 1 {
+            for inj in &mut eng.schedule {
+                if let Fault::CoordinatorCrash { shard } | Fault::LeaderKill { shard } =
+                    &mut inj.fault
+                {
+                    *shard = Some(rng.below(self.shard_count as u64) as usize);
+                }
+            }
         }
         eng
     }
@@ -370,14 +397,58 @@ mod tests {
         let b = extended.generate(&sites, &nodes, &gpus).due(f64::INFINITY);
         let killed = b
             .iter()
-            .filter(|f| matches!(f, Fault::LeaderKill | Fault::LeaderIsolate))
+            .filter(|f| matches!(f, Fault::LeaderKill { .. } | Fault::LeaderIsolate))
             .count();
         assert!(killed > 0, "rates high enough to sample leader faults");
         let b_base: Vec<Fault> = b
             .into_iter()
-            .filter(|f| !matches!(f, Fault::LeaderKill | Fault::LeaderIsolate))
+            .filter(|f| !matches!(f, Fault::LeaderKill { .. } | Fault::LeaderIsolate))
             .collect();
         assert_eq!(a, b_base, "existing draws must be byte-identical");
+    }
+
+    #[test]
+    fn shard_targeting_never_reshuffles_the_base_schedule() {
+        let (sites, nodes, gpus) = targets();
+        let base = ChaosPlan {
+            seed: 5,
+            coordinator_crashes_per_hour: 1.0,
+            leader_kills_per_hour: 1.0,
+            ..Default::default()
+        };
+        let sharded = ChaosPlan { shard_count: 4, ..base.clone() };
+        let a = base.generate(&sites, &nodes, &gpus).due(f64::INFINITY);
+        let b = sharded.generate(&sites, &nodes, &gpus).due(f64::INFINITY);
+        assert_eq!(a.len(), b.len(), "targeting adds no injections");
+        let mut targeted = 0;
+        for (fa, fb) in a.iter().zip(&b) {
+            match (fa, fb) {
+                (Fault::CoordinatorCrash { shard: None }, Fault::CoordinatorCrash { shard })
+                | (Fault::LeaderKill { shard: None }, Fault::LeaderKill { shard }) => {
+                    let s = shard.expect("sharded plan targets every crash/kill");
+                    assert!(s < 4);
+                    targeted += 1;
+                }
+                _ => assert_eq!(fa, fb, "non-coordinator faults must be untouched"),
+            }
+        }
+        assert!(targeted > 0, "rates high enough to sample coordinator faults");
+        // shard_count == 1 is the pre-sharding plan, byte-for-byte
+        let c = ChaosPlan { shard_count: 1, ..base.clone() }
+            .generate(&sites, &nodes, &gpus)
+            .due(f64::INFINITY);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn shard_targeted_faults_render_their_target() {
+        assert_eq!(Fault::CoordinatorCrash { shard: None }.describe(), "coordinator-crash");
+        assert_eq!(
+            Fault::CoordinatorCrash { shard: Some(2) }.describe(),
+            "coordinator-crash shard-2"
+        );
+        assert_eq!(Fault::LeaderKill { shard: None }.describe(), "leader-kill");
+        assert_eq!(Fault::LeaderKill { shard: Some(0) }.describe(), "leader-kill shard-0");
     }
 
     #[test]

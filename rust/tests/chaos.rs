@@ -96,7 +96,7 @@ fn durable_trace(seed: u64, crash: bool) -> (String, u64) {
     p.install_chaos(&plan);
     if crash {
         // pin one kill mid-campaign regardless of the Poisson draw
-        p.chaos_mut().unwrap().inject(700.0, Fault::CoordinatorCrash);
+        p.chaos_mut().unwrap().inject(700.0, Fault::CoordinatorCrash { shard: None });
     }
     let _wls = common::submit_cpu_batch(&mut p, 20, 16_000, 400.0, true);
     p.run_for(3600.0, 15.0);

@@ -361,3 +361,105 @@ fn seeded_crash_sweep_survives_serving_session_and_workflow_traffic() {
         p.cluster().check_free_index();
     }
 }
+
+/// Shard-targeted kill: a 2-shard federation under a durability campaign
+/// where shard 1's coordinator is crash-restored mid-run while shard 0
+/// never stops ticking. Shard 1 loses no work; shard 0's transition log
+/// is byte-identical to a twin federation that was never killed.
+#[test]
+fn shard_kill_mid_campaign_leaves_other_shards_ticking() {
+    use aiinfn::platform::Federation;
+    use aiinfn::sim::chaos::Fault;
+
+    let run = |kill: bool| -> (Federation, Vec<String>) {
+        let mut cfg = common::config();
+        cfg.shard_count = 2;
+        cfg.durability_enabled = true;
+        cfg.durability_snapshot_interval = 120.0;
+        let mut fed = Federation::bootstrap(cfg).unwrap();
+        if kill {
+            fed.inject_fault(700.0, Fault::CoordinatorCrash { shard: Some(1) });
+        }
+        // load on both shards: one user homed on each
+        let on0 = (0..100)
+            .map(|u| format!("user{u:03}"))
+            .find(|u| fed.home_shard(u) == 0)
+            .unwrap();
+        let on1 = (0..100)
+            .map(|u| format!("user{u:03}"))
+            .find(|u| fed.home_shard(u) == 1)
+            .unwrap();
+        let mut jobs = Vec::new();
+        for u in [&on0, &on1] {
+            for _ in 0..4 {
+                jobs.push(
+                    fed.submit_batch(
+                        u,
+                        "project04",
+                        ResourceVec::cpu_millis(8000).with(MEMORY, 8 << 30),
+                        300.0,
+                        PriorityClass::Batch,
+                        false,
+                    )
+                    .unwrap(),
+                );
+            }
+        }
+        fed.run_for(hours(1.0), 15.0);
+        (fed, jobs)
+    };
+
+    let (clean, clean_jobs) = run(false);
+    let (killed, killed_jobs) = run(true);
+
+    assert_eq!(clean.platform(0).coordinator_restarts(), 0);
+    assert_eq!(clean.platform(1).coordinator_restarts(), 0);
+    assert_eq!(killed.platform(0).coordinator_restarts(), 0, "shard 0 never crashed");
+    assert_eq!(killed.platform(1).coordinator_restarts(), 1, "the targeted kill fired");
+    assert_eq!(killed.metrics().shard_crashes, 1);
+
+    // no workload lost in either federation
+    for j in &clean_jobs {
+        assert_eq!(clean.workload_state(j), Some(WorkloadState::Finished), "clean {j}");
+    }
+    for j in &killed_jobs {
+        assert_eq!(killed.workload_state(j), Some(WorkloadState::Finished), "killed {j}");
+    }
+    for fed in [&clean, &killed] {
+        for s in 0..2 {
+            let (used, _) = fed.platform(s).quota_utilization();
+            assert!(used.is_empty(), "shard {s} leaked quota {used}");
+        }
+        assert!(fed.check_free_indexes() > 0);
+    }
+
+    // the untouched shard's transition log is byte-identical across the
+    // kill (store events + workload transitions)
+    let trace = |p: &Platform| -> String {
+        let mut out = String::new();
+        {
+            let st = p.cluster();
+            for ev in st.events() {
+                out.push_str(&format!(
+                    "{:10.3} {:?} {} {}\n",
+                    ev.at, ev.kind, ev.object, ev.message
+                ));
+            }
+        }
+        for t in p.workload_transitions_since(0) {
+            out.push_str(&format!("{:10.3} WORKLOAD {} {:?}\n", t.at, t.workload, t.state));
+        }
+        out
+    };
+    assert_eq!(
+        trace(clean.platform(0)),
+        trace(killed.platform(0)),
+        "shard 0 must not notice shard 1's crash"
+    );
+    // and the killed shard converges to its own uninterrupted twin
+    assert_eq!(
+        trace(clean.platform(1)),
+        trace(killed.platform(1)),
+        "shard 1 must restore to the uninterrupted trace"
+    );
+}

@@ -68,7 +68,7 @@ fn ha_trace(seed: u64, kill: bool) -> (String, u64) {
     p.install_chaos(&plan);
     if kill {
         // pin one kill mid-campaign regardless of the Poisson draw
-        p.chaos_mut().unwrap().inject(700.0, Fault::LeaderKill);
+        p.chaos_mut().unwrap().inject(700.0, Fault::LeaderKill { shard: None });
     }
     let _wls = common::submit_cpu_batch(&mut p, 20, 16_000, 400.0, true);
     p.run_for(3600.0, 15.0);
@@ -206,7 +206,7 @@ fn seeded_leader_kill_sweep_loses_no_acknowledged_mutation() {
             .collect();
         let kill_at =
             40.0 + (base.wrapping_mul(2_654_435_761).wrapping_add(i * 97) % 900) as f64;
-        p.chaos_mut().unwrap().inject(kill_at, Fault::LeaderKill);
+        p.chaos_mut().unwrap().inject(kill_at, Fault::LeaderKill { shard: None });
         p.run_for(hours(2.0), 15.0);
         assert_eq!(p.failovers(), 1, "run {i}, kill at {kill_at}");
         let m = p.metrics();
@@ -248,7 +248,7 @@ fn promotion_lands_within_one_lease_interval() {
     p.install_chaos(&quiet_plan(3));
     let wls = common::submit_cpu_batch(&mut p, 4, 8_000, 600.0, false);
     p.run_for(300.0, 15.0);
-    p.chaos_mut().unwrap().inject(310.0, Fault::LeaderKill);
+    p.chaos_mut().unwrap().inject(310.0, Fault::LeaderKill { shard: None });
     assert!(p.leader_alive());
     // one lease interval plus one tick past the kill: promoted by then
     p.run_for(90.0, 15.0);
@@ -287,7 +287,7 @@ fn damaged_shipped_tail_truncates_and_surfaces_condition() {
     // flip a byte inside the newest shipped frame, as standby-side media
     // corruption would
     p.corrupt_replica_log(len - 20);
-    p.chaos_mut().unwrap().inject(310.0, Fault::LeaderKill);
+    p.chaos_mut().unwrap().inject(310.0, Fault::LeaderKill { shard: None });
     p.run_for(30.0, 15.0);
     assert_eq!(p.failovers(), 1, "a damaged tail must not block failover");
     let m = p.metrics();
@@ -321,7 +321,7 @@ fn malformed_transferred_snapshot_aborts_promotion_cleanly() {
     let _wls = common::submit_cpu_batch(&mut p, 2, 8_000, 300.0, false);
     p.run_for(120.0, 15.0);
     p.truncate_replica_snapshot(16);
-    p.chaos_mut().unwrap().inject(130.0, Fault::LeaderKill);
+    p.chaos_mut().unwrap().inject(130.0, Fault::LeaderKill { shard: None });
     p.run_for(60.0, 15.0);
     assert_eq!(p.failovers(), 0, "promotion must not proceed from a snapshot that fails decode");
     assert!(p.metrics().failed_promotions >= 1, "each clean abort is counted");
@@ -341,7 +341,7 @@ fn ship_holdback_bounds_post_kill_loss() {
     p.install_chaos(&quiet_plan(6));
     let _wls = common::submit_cpu_batch(&mut p, 6, 8_000, 300.0, false);
     p.run_for(200.0, 15.0);
-    p.chaos_mut().unwrap().inject(205.0, Fault::LeaderKill);
+    p.chaos_mut().unwrap().inject(205.0, Fault::LeaderKill { shard: None });
     p.run_for(60.0, 15.0);
     assert_eq!(p.failovers(), 1);
     let lost = p.metrics().unshipped_frames_lost;

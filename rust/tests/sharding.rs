@@ -1,0 +1,446 @@
+//! Sharded-control-plane suite: `shard_count = 1` golden-trace parity
+//! against the single-coordinator plane, the 8-seed cross-shard two-phase
+//! invariant sweep, rebalancing, and the merged-watch contract.
+
+mod common;
+
+use aiinfn::api::{ApiError, FederatedCursor, ResourceKind, Selector};
+use aiinfn::cluster::resources::{ResourceVec, MEMORY};
+use aiinfn::platform::{Federation, FederatedJobPhase, Platform, PlatformConfig};
+use aiinfn::queue::kueue::{PriorityClass, WorkloadState};
+use aiinfn::sim::chaos::ChaosPlan;
+use aiinfn::sim::clock::hours;
+
+/// A small homogeneous inventory (no GPUs, no InterLink federation) that
+/// partitions cleanly across shard counts.
+fn small_config(shards: usize) -> PlatformConfig {
+    let servers: Vec<String> = (0..4)
+        .map(|i| format!(r#"{{"name":"node-{i:02}","cpu_cores":16,"memory_gb":64,"nvme_tb":1}}"#))
+        .collect();
+    let raw = format!(
+        r#"{{"servers":[{}],"sharding":{{"shard_count":{shards}}}}}"#,
+        servers.join(",")
+    );
+    PlatformConfig::parse(&raw).expect("test config parses")
+}
+
+/// Every platform-side transition as one text blob — the same assembly
+/// the chaos suite's golden-trace test uses (chaos log, cluster events,
+/// Kueue workload transitions, site-health transitions).
+fn platform_trace(p: &Platform) -> String {
+    let mut out = String::new();
+    if let Some(c) = p.chaos() {
+        out.push_str(&c.trace());
+    }
+    {
+        let st = p.cluster();
+        for ev in st.events() {
+            out.push_str(&format!("{:10.3} {:?} {} {}\n", ev.at, ev.kind, ev.object, ev.message));
+        }
+    }
+    for t in p.workload_transitions_since(0) {
+        out.push_str(&format!("{:10.3} WORKLOAD {} {:?}\n", t.at, t.workload, t.state));
+    }
+    for t in p.health().transitions_since(0) {
+        out.push_str(&format!(
+            "{:10.3} HEALTH {} {} {}\n",
+            t.at,
+            t.site,
+            t.status.as_str(),
+            t.reason
+        ));
+    }
+    out
+}
+
+fn chaos_plan(seed: u64) -> ChaosPlan {
+    ChaosPlan {
+        seed,
+        horizon: 1200.0,
+        site_outages_per_hour: 2.0,
+        wire_faults_per_hour: 4.0,
+        remote_job_failures_per_hour: 2.0,
+        node_flaps_per_hour: 1.0,
+        ..Default::default()
+    }
+}
+
+// --------------------------------------------------------- parity (1 shard)
+
+/// The pre-refactor single-coordinator run of one chaos campaign.
+fn single_coordinator_trace(seed: u64) -> String {
+    let mut p = Platform::bootstrap(common::config()).unwrap();
+    p.install_chaos(&chaos_plan(seed));
+    let _wls = common::submit_cpu_batch(&mut p, 20, 16_000, 400.0, true);
+    p.run_for(3600.0, 15.0);
+    platform_trace(&p)
+}
+
+/// The same campaign through a 1-shard federation: same config, same
+/// chaos plan, same submissions in the same order, same tick cadence.
+fn one_shard_federation_trace(seed: u64) -> String {
+    let mut cfg = common::config();
+    cfg.shard_count = 1;
+    let mut fed = Federation::bootstrap(cfg).unwrap();
+    fed.install_chaos(&chaos_plan(seed));
+    for i in 0..20usize {
+        fed.submit_batch(
+            &format!("user{:03}", i % 78),
+            "project05",
+            ResourceVec::cpu_millis(16_000).with(MEMORY, 32 << 30),
+            400.0,
+            PriorityClass::Batch,
+            true,
+        )
+        .unwrap();
+    }
+    fed.run_for(3600.0, 15.0);
+    platform_trace(fed.platform(0))
+}
+
+/// The refactor's backstop: with one shard the federation must be a
+/// pass-through, byte-identical to the pre-sharding plane per seed.
+#[test]
+fn one_shard_federation_matches_single_coordinator_traces() {
+    let base = common::test_seed();
+    for seed in [base, base.wrapping_add(1), base.wrapping_mul(31).wrapping_add(5)] {
+        let single = single_coordinator_trace(seed);
+        let federated = one_shard_federation_trace(seed);
+        assert!(!single.is_empty());
+        assert_eq!(
+            single, federated,
+            "seed {seed}: shard_count=1 must converge byte-identical to the \
+             single-coordinator golden trace"
+        );
+    }
+}
+
+// ------------------------------------------------- cross-shard sweep (2φ)
+
+/// 8-seed sweep of the two-phase cross-shard protocol under chaos: no
+/// workload lost, zero double-binds, zero leaked reservations, per-shard
+/// quota drained, submission accounting exact.
+#[test]
+fn cross_shard_two_phase_sweep_preserves_invariants() {
+    let base = common::test_seed();
+    for i in 0..8u64 {
+        let seed = base.wrapping_mul(100).wrapping_add(i);
+        let mut cfg = common::config();
+        cfg.shard_count = 2;
+        let mut fed = Federation::bootstrap(cfg).unwrap();
+        fed.install_chaos(&ChaosPlan {
+            seed,
+            horizon: 1800.0,
+            site_outages_per_hour: 1.0,
+            outage_duration: (120.0, 400.0),
+            wire_faults_per_hour: 3.0,
+            remote_job_failures_per_hour: 2.0,
+            node_flaps_per_hour: 0.5,
+            node_down_duration: (60.0, 240.0),
+            ..Default::default()
+        });
+
+        // one heavy user homed on shard 1 (physical servers only — the
+        // InterLink sites stay a shard-0 concern, so shard 1 has the
+        // smaller quota): the burst (40 × 16 cores ≫ its quota) must
+        // overflow through the reserve/bind path
+        let heavy = (0..100)
+            .map(|u| format!("user{u:03}"))
+            .find(|u| fed.home_shard(u) == 1)
+            .unwrap();
+        let n = 40usize;
+        let jobs: Vec<String> = (0..n)
+            .map(|j| {
+                fed.submit_batch(
+                    &heavy,
+                    "project01",
+                    ResourceVec::cpu_millis(16_000).with(MEMORY, 16 << 30),
+                    300.0,
+                    PriorityClass::Batch,
+                    j % 2 == 0,
+                )
+                .unwrap()
+            })
+            .collect();
+        let m = fed.metrics().clone();
+        assert!(
+            m.cross_shard_submissions > 0,
+            "seed {seed}: the burst must overflow the home shard \
+             (local={}, cross={})",
+            m.local_submissions,
+            m.cross_shard_submissions
+        );
+
+        fed.run_for(hours(4.0), 30.0);
+
+        // (a) no workload lost: every federated job reaches Finished
+        for j in &jobs {
+            assert_eq!(
+                fed.workload_state(j),
+                Some(WorkloadState::Finished),
+                "seed {seed}: job {j} stuck in {:?}",
+                fed.job_phase(j)
+            );
+        }
+        // (b) the ledger's conservation law: zero double-binds (bind
+        // consumes exactly once by construction; the law catches any
+        // claim counted twice) and zero leaked reservations
+        let stats = fed.ledger().stats();
+        assert!(fed.ledger().balanced(), "seed {seed}: {stats:?}");
+        assert_eq!(
+            fed.ledger().active_len(),
+            0,
+            "seed {seed}: reservations must all be consumed or released: {stats:?}"
+        );
+        assert_eq!(
+            stats.created,
+            stats.bound + stats.released + stats.expired,
+            "seed {seed}: {stats:?}"
+        );
+        // (c) every submission accounted for exactly once
+        let m = fed.metrics();
+        assert_eq!(
+            m.local_submissions + m.cross_shard_submissions,
+            n as u64,
+            "seed {seed}: {m:?}"
+        );
+        assert_eq!(
+            m.cross_shard_submissions,
+            m.cross_shard_binds + m.fallback_binds,
+            "seed {seed}: every cross-shard submission binds somewhere: {m:?}"
+        );
+        // (d) per-shard quota fully drained
+        for s in 0..fed.shard_count() {
+            let (used, _) = fed.platform(s).quota_utilization();
+            assert!(used.is_empty(), "seed {seed}: shard {s} leaked quota {used}");
+        }
+        // (e) free-capacity indexes exact on every shard
+        assert!(fed.check_free_indexes() > 0);
+    }
+}
+
+/// The reserve → bind handoff is observable: an overflowing submission
+/// passes through `Reserved` (claim held, not yet bound) and binds on the
+/// next federation step — never twice.
+#[test]
+fn reserve_then_bind_lifecycle_is_observable() {
+    let mut fed = Federation::bootstrap(small_config(2)).unwrap();
+    // find a user homed on shard 0, then fill shard 0's quota
+    let user = (0..100)
+        .map(|i| format!("user{i:03}"))
+        .find(|u| fed.home_shard(u) == 0)
+        .unwrap();
+    // each shard: 2 × 16 cores minus system reserves = 28 cores of
+    // quota; two 14-core fillers exhaust it (queued demand counts
+    // against headroom even before the first tick admits anything)
+    let mut local = Vec::new();
+    for _ in 0..2 {
+        local.push(
+            fed.submit_batch(
+                &user,
+                "p",
+                ResourceVec::cpu_millis(14_000),
+                200.0,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap(),
+        );
+    }
+    let overflow = fed
+        .submit_batch(&user, "p", ResourceVec::cpu_millis(14_000), 200.0, PriorityClass::Batch, false)
+        .unwrap();
+    assert_eq!(
+        fed.job_phase(&overflow),
+        Some(FederatedJobPhase::PendingReserve),
+        "no headroom at home ⇒ the two-phase path"
+    );
+    // first step: phase 1 grants the claim on the sibling shard
+    fed.step(15.0);
+    let reserved = fed.job_phase(&overflow).unwrap();
+    assert!(
+        matches!(reserved, FederatedJobPhase::Reserved { shard: 1, .. }),
+        "claim must land on the sibling shard: {reserved:?}"
+    );
+    assert_eq!(fed.ledger().active_len(), 1);
+    // second step: phase 2 consumes it exactly once
+    fed.step(15.0);
+    assert!(
+        matches!(fed.job_phase(&overflow), Some(FederatedJobPhase::Bound { shard: 1, .. })),
+        "claim must bind where it was reserved"
+    );
+    assert_eq!(fed.ledger().active_len(), 0);
+    assert_eq!(fed.ledger().stats().bound, 1);
+    assert!(fed.ledger().balanced());
+    // and the whole burst still drains
+    fed.run_for(hours(1.0), 15.0);
+    for j in local.iter().chain([&overflow]) {
+        assert_eq!(fed.workload_state(j), Some(WorkloadState::Finished), "{j}");
+    }
+}
+
+// ---------------------------------------------------------------- rebalance
+
+/// Moving a zone between shards: cordon → drain → codec-ship → requota →
+/// router flip, with exact free-capacity indexes on both sides and the
+/// moved capacity usable by new work.
+#[test]
+fn rebalance_ships_zone_and_keeps_free_index_exact() {
+    let mut fed = Federation::bootstrap(small_config(2)).unwrap();
+    assert_eq!(fed.platform(0).node_count(), 2);
+    assert_eq!(fed.platform(1).node_count(), 2);
+    let (_, nominal0_before) = fed.platform(0).quota_utilization();
+
+    // keep the source shard busy so the drain phase is actually exercised
+    let user1 = (0..100)
+        .map(|i| format!("user{i:03}"))
+        .find(|u| fed.home_shard(u) == 1)
+        .unwrap();
+    let busy = fed
+        .submit_batch(&user1, "p", ResourceVec::cpu_millis(8_000), 120.0, PriorityClass::Batch, false)
+        .unwrap();
+    fed.run_for(60.0, 15.0);
+
+    // node-01 bootstrapped onto shard 1 (round-robin); move it to shard 0
+    assert_eq!(fed.router().route("node-01"), 1);
+    fed.request_rebalance("node-01", 0).unwrap();
+    assert_eq!(fed.rebalances_pending(), 1);
+
+    // drain + ship completes once the running pod finishes
+    fed.run_for(hours(1.0), 15.0);
+    assert_eq!(fed.rebalances_pending(), 0, "rebalance must complete");
+    assert_eq!(fed.router().route("node-01"), 0, "router must flip the owner");
+    assert_eq!(fed.platform(0).node_count(), 3);
+    assert_eq!(fed.platform(1).node_count(), 1);
+    assert_eq!(fed.metrics().rebalanced_nodes, 1);
+    assert_eq!(fed.workload_state(&busy), Some(WorkloadState::Finished));
+
+    // free-capacity indexes exact on both shards after the move
+    assert!(fed.check_free_indexes() > 0);
+
+    // quota moved with the node: the target's nominal grew
+    let (_, nominal0_after) = fed.platform(0).quota_utilization();
+    assert!(
+        nominal0_before.fits_in(&nominal0_after)
+            && nominal0_before != nominal0_after,
+        "shard 0 nominal must grow: {nominal0_before} -> {nominal0_after}"
+    );
+
+    // the shipped node is schedulable on its new shard: saturate shard 0
+    // beyond its pre-move capacity and drain
+    let user0 = (0..100)
+        .map(|i| format!("user{i:03}"))
+        .find(|u| fed.home_shard(u) == 0)
+        .unwrap();
+    let jobs: Vec<String> = (0..3)
+        .map(|_| {
+            fed.submit_batch(
+                &user0,
+                "p",
+                ResourceVec::cpu_millis(12_000),
+                100.0,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap()
+        })
+        .collect();
+    fed.run_for(hours(1.0), 15.0);
+    for j in &jobs {
+        assert_eq!(fed.workload_state(j), Some(WorkloadState::Finished), "{j}");
+    }
+}
+
+// ------------------------------------------------------------- merged watch
+
+/// The merged-watch contract: events interleave across shards in time
+/// order, the composite cursor resumes exactly, and per-shard compaction
+/// surfaces as `Compacted` with list-then-resume recovery.
+#[test]
+fn merged_watch_interleaves_resumes_and_survives_compaction() {
+    let mut cfg = small_config(2);
+    cfg.compaction_window = 64; // small ring: churn compacts quickly
+    let mut fed = Federation::bootstrap(cfg).unwrap();
+    let tokens = fed.login("user001").unwrap();
+    let cursor0 = fed.cursor_now();
+    assert_eq!(FederatedCursor::decode(&cursor0.encode()).unwrap(), cursor0);
+
+    // one user homed on each shard, so both streams carry pod churn
+    let on0 = (0..100)
+        .map(|u| format!("user{u:03}"))
+        .find(|u| fed.home_shard(u) == 0)
+        .unwrap();
+    let on1 = (0..100)
+        .map(|u| format!("user{u:03}"))
+        .find(|u| fed.home_shard(u) == 1)
+        .unwrap();
+    for u in [&on0, &on1] {
+        for i in 0..2 {
+            fed.submit_batch(
+                u,
+                "p",
+                ResourceVec::cpu_millis(4_000),
+                60.0 + i as f64,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap();
+        }
+    }
+    fed.run_for(300.0, 15.0);
+
+    let (events, cursor1) = fed.watch_merged(&tokens, ResourceKind::Pod, &cursor0).unwrap();
+    assert!(!events.is_empty(), "pod churn must be observable");
+    let shards_seen: std::collections::BTreeSet<usize> =
+        events.iter().map(|e| e.shard).collect();
+    assert_eq!(shards_seen.len(), 2, "both shards must contribute events");
+    // merged order: non-decreasing event time
+    for w in events.windows(2) {
+        assert!(w[0].event.at <= w[1].event.at, "merged stream must be time-ordered");
+    }
+    // per-shard rv monotonicity within the merged stream
+    for s in 0..2 {
+        let rvs: Vec<u64> = events
+            .iter()
+            .filter(|e| e.shard == s)
+            .map(|e| e.event.resource_version)
+            .collect();
+        for w in rvs.windows(2) {
+            assert!(w[1] > w[0], "shard {s}: rv regression in merged stream");
+        }
+    }
+    // resuming from the advanced cursor yields nothing until new activity
+    let (quiet, cursor2) = fed.watch_merged(&tokens, ResourceKind::Pod, &cursor1).unwrap();
+    assert!(quiet.is_empty(), "nothing happened since the cursor advanced");
+    assert_eq!(cursor1, cursor2);
+
+    // churn far past the ring window, then resume from the stale cursor:
+    // the merged stream must surface the per-shard compaction
+    for _ in 0..40 {
+        for u in [&on0, &on1] {
+            fed.submit_batch(
+                u,
+                "p",
+                ResourceVec::cpu_millis(2_000),
+                30.0,
+                PriorityClass::Batch,
+                false,
+            )
+            .unwrap();
+        }
+    }
+    fed.run_for(hours(1.0), 30.0);
+    assert!(
+        matches!(
+            fed.watch_merged(&tokens, ResourceKind::Pod, &cursor0),
+            Err(ApiError::Compacted(_))
+        ),
+        "a compacted shard stream must surface on the merged watch"
+    );
+    // recovery is the single-coordinator contract, federated: re-list,
+    // then watch from the fresh composite cursor
+    let (pods, fresh) = fed.list_merged(&tokens, ResourceKind::Pod, &Selector::all()).unwrap();
+    assert!(!pods.is_empty());
+    let (after, _) = fed.watch_merged(&tokens, ResourceKind::Pod, &fresh).unwrap();
+    assert!(after.is_empty(), "nothing new since the relist cursor");
+}

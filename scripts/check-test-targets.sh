@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Assert every integration suite under rust/tests/ is declared as a
+# [[test]] target in Cargo.toml.
+#
+# The suites live in a non-standard directory, so Cargo does NOT
+# auto-discover them: a file added to rust/tests/ without a matching
+# [[test]] entry silently never runs in CI. This check turns that silent
+# hole into a red build. rust/tests/common/ is the shared helper module
+# (included via `mod common;`), not a target, so it is exempt.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+missing=0
+for f in rust/tests/*.rs; do
+  name="$(basename "$f" .rs)"
+  if ! grep -Eq "^path = \"rust/tests/${name}\\.rs\"$" Cargo.toml; then
+    echo "MISSING: $f has no [[test]] entry in Cargo.toml" >&2
+    missing=1
+  fi
+done
+
+# And the inverse: every declared [[test]] path must exist on disk, so a
+# renamed suite can't leave a dangling target behind.
+while IFS= read -r path; do
+  if [ ! -f "$path" ]; then
+    echo "DANGLING: Cargo.toml declares $path but the file is gone" >&2
+    missing=1
+  fi
+done < <(grep -Eo '^path = "rust/tests/[^"]+"' Cargo.toml | cut -d'"' -f2)
+
+if [ "$missing" -ne 0 ]; then
+  echo "test-target coverage check FAILED" >&2
+  exit 1
+fi
+echo "test-target coverage check OK: every rust/tests/*.rs is a [[test]] target"
